@@ -1,0 +1,47 @@
+//! Auto-tuning strategies vs the paper's exhaustive grid — the paper's
+//! outlook ("may also enable auto-tuning") quantified: how many model
+//! evaluations does each strategy need to find the grid optimum?
+//!
+//! Run with: `cargo run --release --offline --example autotune`
+
+use alpaka_rs::arch::{compiler, ArchId};
+use alpaka_rs::gemm::{GemmWorkload, Precision};
+use alpaka_rs::sim::Machine;
+use alpaka_rs::tuner::{tune_with, Strategy, TuningSpace};
+use alpaka_rs::util::table::Table;
+
+fn main() {
+    let mut t = Table::new(vec!["arch", "precision", "strategy",
+                                "evals", "found GF/s", "grid GF/s",
+                                "found optimum?"]).numeric();
+    for arch in [ArchId::Knl, ArchId::Power8, ArchId::P100Nvlink] {
+        let comp = compiler::vendor_compiler(arch);
+        for prec in Precision::ALL {
+            let machine = Machine::for_arch(arch);
+            let space = TuningSpace::paper(arch, comp, prec,
+                                           GemmWorkload::TUNING_N);
+            let grid = tune_with(Strategy::Grid, &machine, &space, 0, 1);
+            for strat in [Strategy::Random, Strategy::HillClimb,
+                          Strategy::Anneal] {
+                // budget: half the grid
+                let budget = (space.len() / 2).max(4);
+                let out = tune_with(strat, &machine, &space, budget,
+                                    0xBEEF);
+                let hit = (out.best.gflops - grid.best.gflops).abs()
+                    / grid.best.gflops < 0.01;
+                t.row(vec![
+                    arch.label().to_string(),
+                    prec.dtype().to_string(),
+                    strat.label().to_string(),
+                    out.evals.to_string(),
+                    format!("{:.0}", out.best.gflops),
+                    format!("{:.0}", grid.best.gflops),
+                    if hit { "yes".into() } else { "no".to_string() },
+                ]);
+            }
+        }
+    }
+    println!("{}", t.render());
+    println!("grid = the paper's exhaustive sweep (always optimal, \
+              always full cost).");
+}

@@ -1,0 +1,43 @@
+//! Quickstart: the library in ~60 lines.
+//!
+//! 1. Ask the machine model what the paper's KNL would do at a tuning
+//!    point, 2. run the paper's grid tuning for one combination, 3. print
+//!    the Fig.-5 mapping of the optimum.
+//!
+//! Run with: `cargo run --release --offline --example quickstart`
+
+use alpaka_rs::arch::{ArchId, CompilerId};
+use alpaka_rs::gemm::{GemmWorkload, Precision};
+use alpaka_rs::hierarchy::{map_gemm, mapping};
+use alpaka_rs::sim::{Machine, TuningPoint};
+use alpaka_rs::tuner::{self, TuningSpace};
+
+fn main() {
+    // --- 1. one prediction -------------------------------------------
+    let machine = Machine::for_arch(ArchId::Knl);
+    let point = TuningPoint::cpu(ArchId::Knl, CompilerId::Intel,
+                                 Precision::F64,
+                                 GemmWorkload::TUNING_N, 64, 1);
+    let pred = machine.predict(&point);
+    println!("KNL / Intel / f64 at (T=64, h=1):");
+    println!("  {:.0} GFLOP/s = {:.1}% of peak ({:?}-bound)\n",
+             pred.gflops, 100.0 * pred.relative_peak, pred.bound);
+
+    // --- 2. the paper's multidimensional tuning ----------------------
+    let space = TuningSpace::paper(ArchId::Knl, CompilerId::Intel,
+                                   Precision::F64,
+                                   GemmWorkload::TUNING_N);
+    let results = tuner::sweep::grid_sweep_seq(&machine, &space);
+    let best = results.best().expect("sweep is non-empty");
+    println!("grid tuning over {} points finds (T={}, h={}) at \
+              {:.0} GFLOP/s", space.len(), best.point.t,
+             best.point.hw_threads, best.gflops);
+    println!("paper Table 4 reports (T=64, h=1) at 510 GFLOP/s\n");
+
+    // --- 3. the hierarchy mapping of that optimum (Fig. 5) -----------
+    let backend = mapping::backend_for(ArchId::Knl);
+    let m = map_gemm(backend, GemmWorkload::TUNING_N, best.point.t,
+                     best.point.hw_threads)
+        .expect("optimum is a legal mapping");
+    println!("mapping: {}", m.describe());
+}

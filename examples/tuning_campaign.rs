@@ -1,0 +1,95 @@
+//! The paper's full tuning campaign, §3: every architecture × compiler ×
+//! precision, through the coordinator's scheduler, ending in the
+//! Table-4 / Fig.-8 summaries.
+//!
+//! Run with: `cargo run --release --offline --example tuning_campaign`
+
+use alpaka_rs::arch::{compiler, ArchId};
+use alpaka_rs::coordinator::Scheduler;
+use alpaka_rs::gemm::{GemmWorkload, Precision};
+use alpaka_rs::sim::TuningPoint;
+use alpaka_rs::tuner::{SweepResults, TuningSpace};
+use alpaka_rs::util::table::Table;
+
+fn main() {
+    let workers = std::thread::available_parallelism()
+        .map(|n| n.get()).unwrap_or(4);
+    let sched = Scheduler::new(workers, 64);
+    println!("== tuning campaign: {} workers ==\n", workers);
+
+    let mut table = Table::new(vec![
+        "architecture", "compiler", "precision", "best (T, h)",
+        "GFLOP/s", "% of peak", "top-3 flatness",
+    ]).numeric();
+
+    for arch in ArchId::PAPER {
+        for comp in compiler::valid_compilers(arch) {
+            for prec in Precision::ALL {
+                let space = TuningSpace::paper(arch, comp, prec,
+                                               GemmWorkload::TUNING_N);
+                let results = sched.run_batch(space.points());
+                let mut sweep = SweepResults::default();
+                for r in results {
+                    sweep.push(r.record);
+                }
+                let best = sweep.best().expect("sweep non-empty");
+                let flat = sweep.flatness(3)
+                    .map(|f| format!("{f:.2}"))
+                    .unwrap_or_else(|| "-".into());
+                table.row(vec![
+                    arch.label().to_string(),
+                    comp.label().to_string(),
+                    prec.dtype().to_string(),
+                    format!("({}, {})", best.point.t,
+                            best.point.hw_threads),
+                    format!("{:.0}", best.gflops),
+                    format!("{:.1}", 100.0 * best.relative_peak),
+                    flat,
+                ]);
+            }
+        }
+    }
+    println!("{}", table.render());
+    println!("{}", sched.metrics.summary());
+
+    // The paper's §3 control experiment: tuning at N=7168 must find the
+    // same optima as N=10240 ("We don't see large deviations from our
+    // tuning results for the control case N=7168").
+    println!("\ncontrol case N = {} (paper §2.3):",
+             GemmWorkload::CONTROL_N);
+    let mut agree = 0;
+    let mut total = 0;
+    for arch in ArchId::PAPER {
+        let comp = compiler::vendor_compiler(arch);
+        for prec in Precision::ALL {
+            let s1 = TuningSpace::paper(arch, comp, prec,
+                                        GemmWorkload::TUNING_N);
+            let s2 = TuningSpace::paper(arch, comp, prec,
+                                        GemmWorkload::CONTROL_N);
+            let b1 = best_of(&sched, s1);
+            let b2 = best_of(&sched, s2);
+            total += 1;
+            if b1 == b2 {
+                agree += 1;
+            } else {
+                println!("  {} {} {:?}: N=10240 -> {:?}, N=7168 -> {:?}",
+                         arch.label(), comp.label(), prec, b1, b2);
+            }
+        }
+    }
+    println!("  optima agree for {agree}/{total} vendor-compiler \
+              combinations");
+}
+
+fn best_of(sched: &Scheduler, space: TuningSpace) -> (u64, u64) {
+    let results = sched.run_batch(space.points());
+    let mut sweep = SweepResults::default();
+    for r in results {
+        sweep.push(r.record);
+    }
+    let b = sweep.best().expect("non-empty");
+    (b.point.t, b.point.hw_threads)
+}
+
+#[allow(dead_code)]
+fn unused(_: TuningPoint) {}

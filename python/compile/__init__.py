@@ -1,0 +1,6 @@
+"""Build-time compile package for alpaka-rs.
+
+Layer 2 (JAX model graphs) and Layer 1 (Pallas kernels) live here. This
+package is used ONLY at build time by ``make artifacts``; the rust binary
+consumes the lowered HLO text artifacts and never imports python.
+"""

@@ -1,0 +1,252 @@
+"""AOT compile path: lower every artifact variant to HLO *text* + manifest.
+
+Run as ``python -m compile.aot --out-dir ../artifacts`` from ``python/``
+(that is what ``make artifacts`` does). For every variant this module:
+
+1. builds the L2 graph (which embeds the L1 Pallas kernel, interpret=True),
+2. lowers it via jax.jit(...).lower(...) to stablehlo and converts to an
+   XlaComputation to obtain **HLO text** — the only interchange format the
+   image's xla_extension 0.5.1 accepts (jax>=0.5 serialized protos carry
+   64-bit instruction ids it rejects; the text parser reassigns ids),
+3. executes it once on deterministic splitmix64 inputs (shared bit-exactly
+   with rust — see prng.py) and records an output digest,
+4. appends the variant to ``manifest.json`` so the rust runtime can load,
+   execute and *verify* every artifact without python.
+
+The variant set covers: the pytest/integration correctness grid, the
+native tile-size tuning sweep (paper Fig. 3 transplanted to the host CPU),
+the element-layer ablation, the scaling series (Fig. 6/7 analogue), the
+XLA-dot baseline, and the MLP application graph.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # f64 artifacts need x64
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model, prng  # noqa: E402
+from .kernels.gemm_tiled import GemmSpec, square  # noqa: E402
+
+MANIFEST_VERSION = 2
+_DTYPES = {"f32": jnp.float32, "f64": jnp.float64}
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+# --------------------------------------------------------------------------
+# Variant registry
+# --------------------------------------------------------------------------
+
+
+def gemm_id(spec: GemmSpec, kind: str = "gemm") -> str:
+    sq = spec.m == spec.n == spec.k and spec.t_m == spec.t_n == spec.t_k
+    if kind == "dot":
+        return f"dot_n{spec.n}_{spec.dtype}"
+    if sq:
+        base = f"gemm_n{spec.n}_t{spec.t_n}_e{spec.n_e}_{spec.dtype}"
+    else:
+        base = (f"gemm_m{spec.m}n{spec.n}k{spec.k}"
+                f"_t{spec.t_m}x{spec.t_n}x{spec.t_k}_e{spec.n_e}_{spec.dtype}")
+    if spec.alpha != 1.0 or spec.beta != 1.0:
+        base += f"_a{spec.alpha:g}_b{spec.beta:g}"
+    return base
+
+
+def variants() -> list[dict]:
+    """The full artifact set. Keep lowering time for `make artifacts`
+    around a couple of minutes; correctness breadth lives in pytest which
+    builds kernels on the fly."""
+    out: list[dict] = []
+
+    def add_gemm(spec: GemmSpec, role: str, kind: str = "gemm"):
+        out.append({"kind": kind, "role": role, "spec": spec})
+
+    # native tile-size tuning sweep (Fig. 3 analogue on host CPU);
+    # registered FIRST so the sweep role owns its ids (dedupe below)
+    for t in (4, 8, 16, 32, 64, 128):
+        add_gemm(square(256, t, dtype="f32"), role="tile_sweep")
+    for t in (8, 16, 32, 64):
+        add_gemm(square(256, t, dtype="f64"), role="tile_sweep")
+
+    # correctness grid (rust integration tests verify digests of these)
+    for n, t in [(128, 8), (128, 16), (128, 32), (256, 16), (256, 32)]:
+        for dtype in ("f32", "f64"):
+            add_gemm(square(n, t, dtype=dtype), role="correctness")
+    # alpha/beta generality
+    add_gemm(square(128, 16, dtype="f32", alpha=1.5, beta=0.5),
+             role="correctness")
+    add_gemm(square(128, 16, dtype="f64", alpha=-0.25, beta=2.0),
+             role="correctness")
+    # rectangular + non-square tiles
+    add_gemm(GemmSpec(m=128, n=64, k=256, t_m=32, t_n=16, t_k=64,
+                      dtype="f32"), role="correctness")
+
+    # element-layer ablation (paper Fig. 1 element layer)
+    for e in (2, 4, 8):
+        add_gemm(square(256, 32, n_e=e, dtype="f32"), role="element_sweep")
+
+    # scaling series (Fig. 6/7 analogue)
+    for n in (64, 128, 192, 256, 384, 512):
+        add_gemm(square(n, 32, dtype="f32") if n % 32 == 0 else
+                 square(n, 16, dtype="f32"), role="scaling")
+
+    # baseline: XLA-native dot ("vendor BLAS")
+    for n in (64, 128, 256, 384, 512):
+        add_gemm(square(n, n, dtype="f32"), role="baseline", kind="dot")
+    for n in (128, 256):
+        add_gemm(square(n, n, dtype="f64"), role="baseline", kind="dot")
+
+    # application model
+    out.append({"kind": "mlp", "role": "application",
+                "spec": model.MlpSpec()})
+
+    # dedupe by id, keep first role
+    seen, uniq = set(), []
+    for v in out:
+        vid = (gemm_id(v["spec"], v["kind"]) if v["kind"] != "mlp"
+               else f"mlp_b{v['spec'].batch}_{v['spec'].dtype}")
+        if vid in seen:
+            continue
+        seen.add(vid)
+        v["id"] = vid
+        uniq.append(v)
+    return uniq
+
+
+# --------------------------------------------------------------------------
+# Digest: deterministic inputs -> output statistics the rust side re-checks
+# --------------------------------------------------------------------------
+
+
+def gemm_inputs(vid: str, spec: GemmSpec) -> list[np.ndarray]:
+    return [prng.matrix(prng.seed_for(vid, 0), spec.m, spec.k, spec.dtype),
+            prng.matrix(prng.seed_for(vid, 1), spec.k, spec.n, spec.dtype),
+            prng.matrix(prng.seed_for(vid, 2), spec.m, spec.n, spec.dtype)]
+
+
+def mlp_inputs(vid: str, spec: model.MlpSpec) -> list[np.ndarray]:
+    shapes = [(spec.batch, spec.d_in), (spec.d_in, spec.d_hidden),
+              (spec.d_hidden,), (spec.d_hidden, spec.d_out), (spec.d_out,)]
+    return [prng.matrix(prng.seed_for(vid, i), s[0],
+                        s[1] if len(s) > 1 else 1,
+                        spec.dtype).reshape(s)
+            for i, s in enumerate(shapes)]
+
+
+def digest(out: np.ndarray, n_samples: int = 8) -> dict:
+    flat = np.asarray(out, dtype=np.float64).ravel()
+    idx = np.linspace(0, flat.size - 1, n_samples).astype(int)
+    return {
+        "shape": list(out.shape),
+        "sum": float(flat.sum()),
+        "abs_sum": float(np.abs(flat).sum()),
+        "samples": [[int(i), float(flat[i])] for i in idx],
+    }
+
+
+# --------------------------------------------------------------------------
+# Driver
+# --------------------------------------------------------------------------
+
+
+def build_fn(v: dict):
+    kind, spec = v["kind"], v["spec"]
+    if kind == "gemm":
+        from .kernels import gemm_tiled
+        return (model.gemm_model(spec),
+                gemm_tiled.example_args(spec),
+                gemm_inputs(v["id"], spec))
+    if kind == "dot":
+        from .kernels import gemm_tiled
+        return (model.gemm_baseline(spec),
+                gemm_tiled.example_args(spec),
+                gemm_inputs(v["id"], spec))
+    if kind == "mlp":
+        return (model.mlp_forward(spec),
+                model.mlp_example_args(spec),
+                mlp_inputs(v["id"], spec))
+    raise ValueError(f"unknown kind {kind}")
+
+
+def spec_meta(v: dict) -> dict:
+    spec = v["spec"]
+    if v["kind"] == "mlp":
+        return {"batch": spec.batch, "d_in": spec.d_in,
+                "d_hidden": spec.d_hidden, "d_out": spec.d_out,
+                "t": spec.t, "dtype": spec.dtype}
+    return {"m": spec.m, "n": spec.n, "k": spec.k, "t_m": spec.t_m,
+            "t_n": spec.t_n, "t_k": spec.t_k, "n_e": spec.n_e,
+            "dtype": spec.dtype, "alpha": spec.alpha, "beta": spec.beta,
+            "flops": spec.flops(), "tile_bytes": spec.tile_bytes(),
+            "vmem_bytes": spec.vmem_bytes(), "grid": list(spec.grid())}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated artifact id substrings to build")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    entries = []
+    t_total = time.time()
+    for v in variants():
+        vid = v["id"]
+        if args.only and not any(s in vid for s in args.only.split(",")):
+            continue
+        t0 = time.time()
+        fn, ex_args, inputs = build_fn(v)
+        jitted = jax.jit(fn)
+        lowered = jitted.lower(*ex_args)
+        hlo = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{vid}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(hlo)
+        out = np.asarray(jitted(*[jnp.asarray(x) for x in inputs]))
+        entry = {
+            "id": vid,
+            "kind": v["kind"],
+            "role": v["role"],
+            "file": f"{vid}.hlo.txt",
+            "spec": spec_meta(v),
+            "inputs": [{"seed": prng.seed_for(vid, i), "shape": list(x.shape),
+                        "dtype": v["spec"].dtype}
+                       for i, x in enumerate(inputs)],
+            "digest": digest(out),
+            "hlo_bytes": len(hlo),
+        }
+        entries.append(entry)
+        print(f"  [{time.time() - t0:6.2f}s] {vid}  ({len(hlo)} B hlo)")
+
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "jax_version": jax.__version__,
+        "interchange": "hlo-text",
+        "return_tuple": True,
+        "artifacts": entries,
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(entries)} artifacts in {time.time() - t_total:.1f}s "
+          f"-> {args.out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""Layer 1 — Pallas kernels.
+
+``gemm_tiled`` holds THE single-source tiled GEMM kernel of the
+reproduction (paper sec. 2.1); ``ref`` holds the pure-jnp / numpy oracles
+used by pytest at build time.
+"""

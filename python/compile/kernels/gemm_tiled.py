@@ -1,0 +1,202 @@
+"""Layer 1 — the single-source tiled GEMM Pallas kernel (paper §2.1).
+
+The paper's central claim is that ONE kernel source can be tuned for many
+architectures purely through parameters that live *outside* the kernel:
+tile size ``T``, elements-per-thread ``e`` (the "element layer"), hardware
+threads. This module is the transplant of that claim onto the Pallas
+programming model:
+
+* ``_gemm_kernel`` below is written ONCE and never specialized. Everything
+  an architecture tune would change — C-tile shape ``(t_m, t_n)``,
+  reduction-tile depth ``t_k``, element-layer split ``n_e`` — enters only
+  through ``pl.BlockSpec``/grid parameters and static keyword arguments,
+  i.e. the Alpaka ``OptimalVectorSize`` trait of Listing 1.1 re-expressed
+  as a variant factory (`make_gemm`).
+
+* The hierarchy mapping (paper Fig. 1 / Fig. 5):
+
+  ========================  =====================================
+  Alpaka layer              Pallas realization
+  ========================  =====================================
+  grid of blocks            ``grid = (M/t_m, N/t_n, K/t_k)``
+  block (computes C tile)   one grid cell, C block ``(t_m, t_n)``
+  threads in block          vector lanes of the in-kernel ``dot``
+  element layer             ``n_e`` chunks of the k-reduction,
+                            iterated by a fori_loop (enables the
+                            vector unit to stream, paper Fig. 2)
+  shared/L1 tile residency  VMEM residency of A/B blocks
+  ========================  =====================================
+
+* Accumulation across the ``k`` grid dimension happens in a VMEM scratch
+  accumulator (``acc_ref``), zeroed at ``k == 0`` and flushed as
+  ``alpha * acc + beta * C`` at the last k step — exactly the paper's
+  "thread-local C tile" streaming strategy (Fig. 2): C itself is read and
+  written once.
+
+Kernels here MUST be lowered with ``interpret=True``: the CPU PJRT plugin
+cannot execute Mosaic custom-calls (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# --------------------------------------------------------------------------
+# THE kernel. Single source — do not specialize per architecture. Tuning
+# happens exclusively via the parameters of `make_gemm`.
+# --------------------------------------------------------------------------
+
+
+def _gemm_kernel(a_ref, b_ref, c_ref, o_ref, acc_ref, *, n_k_grid, n_e,
+                 alpha, beta):
+    """C_tile = alpha * sum_k A_tile(k) @ B_tile(k) + beta * C_tile.
+
+    a_ref: (t_m, t_k) block of A      c_ref: (t_m, t_n) block of C (input)
+    b_ref: (t_k, t_n) block of B      o_ref: (t_m, t_n) block of C (output)
+    acc_ref: (t_m, t_n) VMEM scratch accumulator, live across the k grid.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero_acc():
+        acc_ref[...] = jnp.zeros(acc_ref.shape, acc_ref.dtype)
+
+    # Element layer: split the reduction into n_e chunks. For n_e == 1 this
+    # is a single MXU-shaped dot; larger n_e expresses the paper's
+    # "elements per thread" vector streaming without touching the body.
+    t_k = a_ref.shape[1]
+    chunk = t_k // n_e
+
+    def body(i, carry):
+        a = a_ref[:, pl.dslice(i * chunk, chunk)]
+        b = b_ref[pl.dslice(i * chunk, chunk), :]
+        acc_ref[...] += jnp.dot(a, b, preferred_element_type=acc_ref.dtype)
+        return carry
+
+    jax.lax.fori_loop(0, n_e, body, 0)
+
+    @pl.when(k == n_k_grid - 1)
+    def _flush():
+        o_ref[...] = (alpha * acc_ref[...] + beta * c_ref[...]).astype(
+            o_ref.dtype)
+
+
+# --------------------------------------------------------------------------
+# Variant factory — the Alpaka `OptimalVectorSize` analogue.
+# --------------------------------------------------------------------------
+
+_DTYPES = {"f32": jnp.float32, "f64": jnp.float64}
+_SIZEOF = {"f32": 4, "f64": 8}
+
+#: VMEM budget of a TPU core in bytes; tile working sets are checked
+#: against it like the paper checks K(S,T) against cache sizes (Eq. 5).
+VMEM_BYTES = 16 * 1024 * 1024
+
+
+class GemmConfigError(ValueError):
+    """Raised for an invalid (shape, tile, element-layer) combination."""
+
+
+@dataclass(frozen=True)
+class GemmSpec:
+    """A tuning point for the single-source kernel (everything *outside*
+    the kernel body, per the paper's methodology)."""
+
+    m: int
+    n: int
+    k: int
+    t_m: int
+    t_n: int
+    t_k: int
+    n_e: int = 1          # element layer split of the reduction tile
+    dtype: str = "f32"
+    alpha: float = 1.0
+    beta: float = 1.0
+
+    def validate(self) -> None:
+        if self.dtype not in _DTYPES:
+            raise GemmConfigError(f"dtype must be f32|f64, got {self.dtype}")
+        for dim, tile, names in ((self.m, self.t_m, "m/t_m"),
+                                 (self.n, self.t_n, "n/t_n"),
+                                 (self.k, self.t_k, "k/t_k")):
+            if dim <= 0 or tile <= 0:
+                raise GemmConfigError(f"{names}: sizes must be positive")
+            if dim % tile:
+                raise GemmConfigError(
+                    f"{names}: tile {tile} must divide dimension {dim}")
+        if self.n_e <= 0 or self.t_k % self.n_e:
+            raise GemmConfigError(
+                f"element layer n_e={self.n_e} must divide t_k={self.t_k}")
+
+    # -- working-set accounting (paper Eq. 5 generalized to rectangles) ---
+    def tile_bytes(self) -> int:
+        """K(S,T): bytes of the A+B tile pair a block keeps resident."""
+        s = _SIZEOF[self.dtype]
+        return (self.t_m * self.t_k + self.t_k * self.t_n) * s
+
+    def vmem_bytes(self) -> int:
+        """Total VMEM per grid cell: A, B, C-in, C-out, accumulator."""
+        s = _SIZEOF[self.dtype]
+        acc = self.t_m * self.t_n * s  # accumulator is same-width here
+        return self.tile_bytes() + 3 * self.t_m * self.t_n * s + acc - \
+            self.t_m * self.t_n * s  # C-in + C-out + acc = 3 tiles
+
+    def fits_vmem(self) -> bool:
+        return self.vmem_bytes() <= VMEM_BYTES
+
+    def grid(self) -> tuple[int, int, int]:
+        """Paper Eq. 3 — blocks in the grid per dimension."""
+        return (self.m // self.t_m, self.n // self.t_n, self.k // self.t_k)
+
+    def flops(self) -> int:
+        """Paper Eq. 2 generalized: 2*M*N*K multiply-adds + scale/add."""
+        return 2 * self.m * self.n * self.k + 3 * self.m * self.n
+
+
+def square(n: int, t: int, *, n_e: int = 1, dtype: str = "f32",
+           alpha: float = 1.0, beta: float = 1.0) -> GemmSpec:
+    """The paper's configuration: quadratic matrices, square tiles."""
+    return GemmSpec(m=n, n=n, k=n, t_m=t, t_n=t, t_k=t, n_e=n_e,
+                    dtype=dtype, alpha=alpha, beta=beta)
+
+
+def make_gemm(spec: GemmSpec, *, interpret: bool = True):
+    """Build the pallas_call for a tuning point.
+
+    Returns ``f(a, b, c) -> alpha * a @ b + beta * c`` with shapes
+    ``a:(m,k) b:(k,n) c:(m,n)``.
+    """
+    spec.validate()
+    dtype = _DTYPES[spec.dtype]
+    acc_dtype = dtype  # accumulate at operand width (paper does the same)
+    g_m, g_n, g_k = spec.grid()
+
+    kern = functools.partial(_gemm_kernel, n_k_grid=g_k, n_e=spec.n_e,
+                             alpha=spec.alpha, beta=spec.beta)
+    return pl.pallas_call(
+        kern,
+        grid=(g_m, g_n, g_k),
+        in_specs=[
+            pl.BlockSpec((spec.t_m, spec.t_k), lambda m, n, k: (m, k)),
+            pl.BlockSpec((spec.t_k, spec.t_n), lambda m, n, k: (k, n)),
+            pl.BlockSpec((spec.t_m, spec.t_n), lambda m, n, k: (m, n)),
+        ],
+        out_specs=pl.BlockSpec((spec.t_m, spec.t_n), lambda m, n, k: (m, n)),
+        out_shape=jax.ShapeDtypeStruct((spec.m, spec.n), dtype),
+        scratch_shapes=[pltpu.VMEM((spec.t_m, spec.t_n), acc_dtype)],
+        interpret=interpret,
+    )
+
+
+def example_args(spec: GemmSpec):
+    """ShapeDtypeStructs for AOT lowering."""
+    dtype = _DTYPES[spec.dtype]
+    return (jax.ShapeDtypeStruct((spec.m, spec.k), dtype),
+            jax.ShapeDtypeStruct((spec.k, spec.n), dtype),
+            jax.ShapeDtypeStruct((spec.m, spec.n), dtype))

@@ -1,0 +1,95 @@
+"""Layer 2 — JAX compute graphs built on the Layer-1 kernel.
+
+Everything the rust runtime executes is lowered from here (via aot.py):
+
+* ``gemm_model``     — the paper's workload, C = alpha*A*B + beta*C through
+                       the single-source Pallas kernel.
+* ``gemm_baseline``  — the same contraction through XLA's native dot; the
+                       "highly optimized vendor DGEMM" baseline of §2.1.
+* ``mlp_forward``    — a two-layer MLP whose matmuls run through the Pallas
+                       kernel: proves the kernel composes inside a larger
+                       graph (an application, not just a microbenchmark).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import gemm_tiled
+from .kernels.gemm_tiled import GemmSpec
+
+_DTYPES = {"f32": jnp.float32, "f64": jnp.float64}
+
+
+def gemm_model(spec: GemmSpec, *, interpret: bool = True):
+    """The tuned workload: one pallas_call, nothing else in the graph."""
+    return gemm_tiled.make_gemm(spec, interpret=interpret)
+
+
+def gemm_baseline(spec: GemmSpec):
+    """XLA-native dot with identical semantics (vendor-BLAS stand-in)."""
+
+    def f(a, b, c):
+        return (spec.alpha * jnp.dot(a, b, preferred_element_type=a.dtype)
+                + spec.beta * c)
+
+    return f
+
+
+# --------------------------------------------------------------------------
+# Application model: 2-layer tanh MLP over the Pallas GEMM.
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MlpSpec:
+    """Shapes for the MLP application artifact. All dims divisible by t."""
+
+    batch: int = 64
+    d_in: int = 256
+    d_hidden: int = 128
+    d_out: int = 64
+    t: int = 32
+    dtype: str = "f32"
+
+    def gemm_specs(self) -> tuple[GemmSpec, GemmSpec]:
+        g1 = GemmSpec(m=self.batch, n=self.d_hidden, k=self.d_in,
+                      t_m=self.t, t_n=self.t, t_k=self.t,
+                      dtype=self.dtype, alpha=1.0, beta=1.0)
+        g2 = GemmSpec(m=self.batch, n=self.d_out, k=self.d_hidden,
+                      t_m=self.t, t_n=self.t, t_k=self.t,
+                      dtype=self.dtype, alpha=1.0, beta=1.0)
+        return g1, g2
+
+
+def mlp_forward(spec: MlpSpec, *, interpret: bool = True):
+    """Returns f(x, w1, b1, w2, b2) -> logits, matmuls via the L1 kernel.
+
+    The bias enters through the GEMM's beta*C term (broadcast to rows),
+    so the kernel carries the full alpha*A@B + beta*C contract even inside
+    the application graph.
+    """
+    g1, g2 = spec.gemm_specs()
+    k1 = gemm_tiled.make_gemm(g1, interpret=interpret)
+    k2 = gemm_tiled.make_gemm(g2, interpret=interpret)
+    dtype = _DTYPES[spec.dtype]
+
+    def f(x, w1, b1, w2, b2):
+        c1 = jnp.broadcast_to(b1, (spec.batch, spec.d_hidden)).astype(dtype)
+        h = jnp.tanh(k1(x, w1, c1))
+        c2 = jnp.broadcast_to(b2, (spec.batch, spec.d_out)).astype(dtype)
+        return k2(h, w2, c2)
+
+    return f
+
+
+def mlp_example_args(spec: MlpSpec):
+    d = _DTYPES[spec.dtype]
+    return (jax.ShapeDtypeStruct((spec.batch, spec.d_in), d),
+            jax.ShapeDtypeStruct((spec.d_in, spec.d_hidden), d),
+            jax.ShapeDtypeStruct((spec.d_hidden,), d),
+            jax.ShapeDtypeStruct((spec.d_hidden, spec.d_out), d),
+            jax.ShapeDtypeStruct((spec.d_out,), d))

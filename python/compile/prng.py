@@ -1,0 +1,70 @@
+"""Deterministic input generation shared bit-exactly with the rust side.
+
+The rust integration tests re-generate the very same matrices (see
+``rust/src/util/prng.rs``) so artifact outputs can be verified against the
+digests recorded in ``artifacts/manifest.json`` without python on the
+request path.
+
+Stream definition (splitmix64):
+
+    state_{i} = (seed + i * 0x9E3779B97F4A7C15) mod 2^64   for i = 1, 2, ...
+    z = state; z = (z ^ (z >> 30)) * 0xBF58476D1CE4E5B9
+               z = (z ^ (z >> 27)) * 0x94D049BB133111EB
+               z = z ^ (z >> 31)
+    value_i = (z >> 11) * 2^-53 * 2 - 1        # f64 in [-1, 1)
+
+f32 inputs are the f64 value rounded once to f32 — identical in numpy
+(`astype(float32)`) and rust (`as f32`), both IEEE round-to-nearest-even.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+GOLDEN = 0x9E3779B97F4A7C15
+MIX1 = 0xBF58476D1CE4E5B9
+MIX2 = 0x94D049BB133111EB
+MASK = (1 << 64) - 1
+
+
+def splitmix64_scalar(state: int) -> tuple[int, int]:
+    """One step of splitmix64. Returns (new_state, output). Reference/teaching
+    implementation; the vectorized `uniform_stream` is what production uses."""
+    state = (state + GOLDEN) & MASK
+    z = state
+    z = ((z ^ (z >> 30)) * MIX1) & MASK
+    z = ((z ^ (z >> 27)) * MIX2) & MASK
+    z = z ^ (z >> 31)
+    return state, z
+
+
+def uniform_stream(seed: int, count: int) -> np.ndarray:
+    """Vectorized stream of `count` f64 values in [-1, 1)."""
+    with np.errstate(over="ignore"):
+        i = np.arange(1, count + 1, dtype=np.uint64)
+        state = np.uint64(seed & MASK) + i * np.uint64(GOLDEN)
+        z = state
+        z = (z ^ (z >> np.uint64(30))) * np.uint64(MIX1)
+        z = (z ^ (z >> np.uint64(27))) * np.uint64(MIX2)
+        z = z ^ (z >> np.uint64(31))
+    return (z >> np.uint64(11)).astype(np.float64) * 2.0**-53 * 2.0 - 1.0
+
+
+def matrix(seed: int, rows: int, cols: int, dtype: str) -> np.ndarray:
+    """Deterministic (rows, cols) matrix for the given dtype ('f32'|'f64')."""
+    vals = uniform_stream(seed, rows * cols).reshape(rows, cols)
+    if dtype == "f32":
+        return vals.astype(np.float32)
+    if dtype == "f64":
+        return vals
+    raise ValueError(f"unsupported dtype {dtype!r}")
+
+
+def seed_for(artifact_id: str, arg_index: int) -> int:
+    """Stable per-(artifact, argument) seed: FNV-1a over the id, xor arg.
+
+    Mirrored in rust (util::prng::seed_for)."""
+    h = 0xCBF29CE484222325
+    for byte in artifact_id.encode("utf-8"):
+        h = ((h ^ byte) * 0x100000001B3) & MASK
+    return h ^ (0x9E3779B9 * (arg_index + 1) & MASK)

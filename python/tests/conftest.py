@@ -1,0 +1,5 @@
+"""Shared pytest configuration: enable x64 before jax initializes."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,70 @@
+"""L2 model graphs: MLP application + baseline equivalence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+from compile.kernels.gemm_tiled import square
+
+
+def _mlp_args(spec: model.MlpSpec, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    d = jnp.float32 if spec.dtype == "f32" else jnp.float64
+    shapes = [(spec.batch, spec.d_in), (spec.d_in, spec.d_hidden),
+              (spec.d_hidden,), (spec.d_hidden, spec.d_out), (spec.d_out,)]
+    return [jax.random.uniform(k, s, d, -0.5, 0.5)
+            for k, s in zip(ks, shapes)]
+
+
+def test_mlp_matches_ref_f32():
+    spec = model.MlpSpec()
+    args = _mlp_args(spec)
+    out = model.mlp_forward(spec)(*args)
+    want = ref.mlp_ref(*args)
+    assert out.shape == (spec.batch, spec.d_out)
+    np.testing.assert_allclose(out, want, rtol=3e-4, atol=3e-5)
+
+
+def test_mlp_matches_ref_f64():
+    spec = model.MlpSpec(batch=32, d_in=64, d_hidden=32, d_out=32, t=16,
+                         dtype="f64")
+    args = _mlp_args(spec, seed=1)
+    out = model.mlp_forward(spec)(*args)
+    np.testing.assert_allclose(out, ref.mlp_ref(*args), rtol=1e-10)
+
+
+def test_mlp_jits():
+    spec = model.MlpSpec(batch=32, d_in=32, d_hidden=32, d_out=32, t=16)
+    args = _mlp_args(spec, seed=2)
+    eager = model.mlp_forward(spec)(*args)
+    jitted = jax.jit(model.mlp_forward(spec))(*args)
+    np.testing.assert_allclose(eager, jitted, rtol=1e-6)
+
+
+def test_gemm_specs_divisibility():
+    g1, g2 = model.MlpSpec().gemm_specs()
+    g1.validate()
+    g2.validate()
+    assert g1.beta == 1.0  # bias flows through the beta*C term
+
+
+def test_baseline_equals_kernel():
+    spec = square(64, 16, alpha=0.5, beta=1.5)
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    a, b, c = (jax.random.uniform(k, (64, 64), jnp.float32, -1, 1)
+               for k in ks)
+    kern = model.gemm_model(spec)(a, b, c)
+    base = model.gemm_baseline(spec)(a, b, c)
+    np.testing.assert_allclose(kern, base, rtol=3e-4, atol=3e-5)
+
+
+@pytest.mark.parametrize("batch,t", [(16, 16), (64, 32)])
+def test_mlp_batch_variants(batch, t):
+    spec = model.MlpSpec(batch=batch, d_in=64, d_hidden=64, d_out=32, t=t)
+    args = _mlp_args(spec, seed=batch)
+    out = model.mlp_forward(spec)(*args)
+    np.testing.assert_allclose(out, ref.mlp_ref(*args), rtol=3e-4,
+                               atol=3e-5)

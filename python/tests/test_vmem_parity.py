@@ -1,0 +1,33 @@
+"""Cross-layer consistency: the python GemmSpec working-set accounting
+must agree with the rust roofline module (rust/src/sim/roofline.rs keeps
+the same 5*t^2*S formula) and with paper Eq. 5."""
+
+from compile.kernels.gemm_tiled import GemmSpec, VMEM_BYTES, square
+
+
+def test_eq5_tile_bytes():
+    # paper Eq. 5: K(S,T) = 2 T^2 S
+    assert square(1024, 64, dtype="f64").tile_bytes() == 2 * 64 * 64 * 8
+    assert square(1024, 4, dtype="f32").tile_bytes() == 128  # Table 4 GPU
+
+
+def test_vmem_is_five_tiles():
+    # A + B + C-in + C-out + accumulator = 5 tiles (mirrored in
+    # rust roofline::analyse)
+    for t, dtype, s in [(64, "f32", 4), (128, "f64", 8)]:
+        spec = square(1024, t, dtype=dtype)
+        assert spec.vmem_bytes() == 5 * t * t * s
+
+
+def test_vmem_budget_boundary():
+    # largest f32 tile under the 16 MiB budget: 5*t^2*4 <= 16Mi
+    # -> t <= 915; power-of-two boundary at 512
+    assert square(4096, 512, dtype="f32").fits_vmem()
+    assert not square(8192, 1024, dtype="f32").fits_vmem()
+    assert VMEM_BYTES == 16 * 1024 * 1024
+
+
+def test_rectangular_tile_bytes():
+    spec = GemmSpec(m=128, n=64, k=256, t_m=32, t_n=16, t_k=64)
+    # (t_m*t_k + t_k*t_n) * S
+    assert spec.tile_bytes() == (32 * 64 + 64 * 16) * 4

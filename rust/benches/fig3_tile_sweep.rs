@@ -1,0 +1,45 @@
+//! Bench F3 — regenerates paper Fig. 3: GFLOP/s vs tile size T for K80,
+//! P100 (both links) and Haswell, per compiler and precision.
+//!
+//! Expected shape (paper §3): Haswell performance roughly doubles per
+//! T-doubling until caches saturate; T = 4 optimal for the GPUs (T = 2
+//! for K80 double precision).
+
+use std::path::Path;
+
+use alpaka_rs::report::figures;
+
+fn main() {
+    let fig = figures::fig3_tile_sweep();
+    let dir = Path::new("reports");
+    fig.write(dir, "fig3_tile_sweep").expect("write fig3");
+
+    println!("=== Fig. 3: performance vs tile size (N=10240) ===\n");
+    for s in &fig.series {
+        let pts: Vec<String> = s.points.iter()
+            .map(|(t, g)| format!("T={t:<4} {g:>8.0}"))
+            .collect();
+        let best = s.argmax().unwrap();
+        println!("{:<24} {}   <- best T={}", s.name, pts.join(" | "),
+                 best.0);
+    }
+    println!("\npaper checks:");
+    let k80sp = fig.series.iter().find(|s| s.name == "K80 CUDA f32")
+        .unwrap();
+    let k80dp = fig.series.iter().find(|s| s.name == "K80 CUDA f64")
+        .unwrap();
+    let p100 = fig.series.iter()
+        .find(|s| s.name == "P100 (nvlink) CUDA f32").unwrap();
+    println!("  K80 SP optimum  T={} (paper: 4)",
+             k80sp.argmax().unwrap().0);
+    println!("  K80 DP optimum  T={} (paper: 2)",
+             k80dp.argmax().unwrap().0);
+    println!("  P100 SP optimum T={} (paper: 4)",
+             p100.argmax().unwrap().0);
+    let hsw = fig.series.iter().find(|s| s.name == "Haswell Intel f64")
+        .unwrap();
+    let at = |t: f64| hsw.points.iter().find(|p| p.0 == t).unwrap().1;
+    println!("  Haswell DP T=32/T=16 ratio: {:.2} (paper: ~2)",
+             at(32.0) / at(16.0));
+    println!("\nwrote reports/fig3_tile_sweep.csv (+ .gp)");
+}

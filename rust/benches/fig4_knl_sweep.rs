@@ -1,0 +1,41 @@
+//! Bench F4 — regenerates paper Fig. 4: the KNL (T × hardware-threads)
+//! sweep per compiler and precision (the paper's bubble chart, emitted
+//! as per-thread-count curves plus a top-list).
+//!
+//! Expected shape: Intel DP optimum at (T=64, h=1) with ~510 GFLOP/s;
+//! optima depend strongly on precision and compiler.
+
+use std::path::Path;
+
+use alpaka_rs::arch::{ArchId, CompilerId};
+use alpaka_rs::gemm::{GemmWorkload, Precision};
+use alpaka_rs::report::figures;
+use alpaka_rs::sim::{Machine, TuningPoint};
+
+fn main() {
+    let fig = figures::fig4_knl_sweep();
+    fig.write(Path::new("reports"), "fig4_knl_sweep")
+        .expect("write fig4");
+
+    println!("=== Fig. 4: KNL (T, hw threads) sweep (N=10240) ===\n");
+    let machine = Machine::for_arch(ArchId::Knl);
+    for comp in [CompilerId::Intel, CompilerId::Gnu] {
+        for prec in Precision::ALL {
+            let mut rows: Vec<(u64, u64, f64)> = Vec::new();
+            for t in [16u64, 32, 64, 128, 256, 512] {
+                for h in [1u64, 2, 4] {
+                    let p = TuningPoint::cpu(ArchId::Knl, comp, prec,
+                                             GemmWorkload::TUNING_N, t, h);
+                    rows.push((t, h, machine.predict(&p).gflops));
+                }
+            }
+            rows.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
+            println!("{} {}: top points", comp.label(), prec.dtype());
+            for (t, h, g) in rows.iter().take(4) {
+                println!("    T={t:<4} h={h}  {g:>8.0} GFLOP/s");
+            }
+        }
+    }
+    println!("\npaper: Intel DP best = (T=64, 1 thread) at 510 GFLOP/s");
+    println!("wrote reports/fig4_knl_sweep.csv (+ .gp)");
+}

@@ -1,0 +1,43 @@
+//! Bench F6 — regenerates paper Fig. 6: double-precision scaling,
+//! N = 1024..20480 (ΔN = 1024), every architecture at its paper-optimal
+//! parameters, KNL in both MCDRAM modes, GPUs in both memory modes.
+//!
+//! Expected shape (paper §4): P100 best absolute; Power8 beats K80; KNL
+//! drops at every second N from 8192 (Intel, both memory modes); most
+//! curves rise with N.
+
+use std::path::Path;
+
+use alpaka_rs::gemm::Precision;
+use alpaka_rs::report::figures;
+
+fn main() {
+    let fig = figures::fig6_scaling(Precision::F64);
+    fig.write(Path::new("reports"), "fig6_scaling_dp")
+        .expect("write fig6");
+    println!("=== Fig. 6: DP scaling ===\n");
+    for s in &fig.series {
+        let first = s.points.first().unwrap();
+        let last = s.points.last().unwrap();
+        let best = s.argmax().unwrap();
+        println!("{:<32} N={:<5}->{:>6.0}  N={:<5}->{:>6.0}  best \
+                  {:>6.0} @ N={}", s.name, first.0, first.1, last.0,
+                 last.1, best.1, best.0);
+    }
+    let knl = fig.series.iter()
+        .find(|s| s.name.contains("KNL") && s.name.contains("cached"))
+        .unwrap();
+    let at = |n: f64| knl.points.iter().find(|p| p.0 == n).unwrap().1;
+    println!("\nKNL even-N anomaly: N=8192 {:.0} vs N=9216 {:.0} \
+              (paper: 303 vs 527)", at(8192.0), at(9216.0));
+    let p8 = fig.series.iter().find(|s| s.name.contains("Power8"))
+        .unwrap();
+    let k80 = fig.series.iter()
+        .find(|s| s.name.contains("K80") && s.name.contains("device"))
+        .unwrap();
+    println!("Power8 vs K80 at N=10240: {:.0} vs {:.0} (paper: Power8 \
+              wins)",
+             p8.points.iter().find(|p| p.0 == 10240.0).unwrap().1,
+             k80.points.iter().find(|p| p.0 == 10240.0).unwrap().1);
+    println!("wrote reports/fig6_scaling_dp.csv (+ .gp)");
+}

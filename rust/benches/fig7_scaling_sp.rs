@@ -1,0 +1,43 @@
+//! Bench F7 — regenerates paper Fig. 7: single-precision scaling.
+//!
+//! Expected shape (paper §4): Haswell SP peaks at N = 2048 (~665
+//! GFLOP/s — A and B fit the L3) then declines to a ~400 GFLOP/s
+//! plateau; KNL drops every fourth N from 8192; unified memory helps
+//! GPUs at small N.
+
+use std::path::Path;
+
+use alpaka_rs::gemm::Precision;
+use alpaka_rs::report::figures;
+
+fn main() {
+    let fig = figures::fig7_scaling(Precision::F32);
+    fig.write(Path::new("reports"), "fig7_scaling_sp")
+        .expect("write fig7");
+    println!("=== Fig. 7: SP scaling ===\n");
+    for s in &fig.series {
+        let best = s.argmax().unwrap();
+        let last = s.points.last().unwrap();
+        println!("{:<34} best {:>7.0} @ N={:<5}  N={:<5}->{:>7.0}",
+                 s.name, best.1, best.0, last.0, last.1);
+    }
+    let hsw = fig.series.iter()
+        .find(|s| s.name.contains("Haswell Intel")).unwrap();
+    let best = hsw.argmax().unwrap();
+    let at = |n: f64| hsw.points.iter().find(|p| p.0 == n).unwrap().1;
+    println!("\nHaswell SP: peak {:.0} at N={} (paper: 665 at 2048), \
+              plateau {:.0} at N=10240 (paper: ~400)",
+             best.1, best.0, at(10240.0));
+    // unified vs device at small N
+    let uni = fig.series.iter()
+        .find(|s| s.name.contains("P100 (nvlink)")
+              && s.name.contains("unified")).unwrap();
+    let dev = fig.series.iter()
+        .find(|s| s.name.contains("P100 (nvlink)")
+              && s.name.contains("device")).unwrap();
+    let u1 = uni.points.first().unwrap().1;
+    let d1 = dev.points.first().unwrap().1;
+    println!("P100 N=1024: unified {u1:.0} vs device {d1:.0} (paper: \
+              unified wins at small N)");
+    println!("wrote reports/fig7_scaling_sp.csv (+ .gp)");
+}

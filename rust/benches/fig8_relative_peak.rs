@@ -1,0 +1,22 @@
+//! Bench F8 — regenerates paper Fig. 8: best relative-to-peak
+//! percentage per architecture and precision (vendor compilers).
+//!
+//! Expected shape: recent architectures near 50 % (P100 SP 46 %,
+//! Power8 ~48 %); K80 15 % SP / 18 % DP; P100 DP 28 %.
+
+use std::path::Path;
+
+use alpaka_rs::report::figures;
+
+fn main() {
+    let t = figures::fig8_relative_peak();
+    std::fs::create_dir_all("reports").unwrap();
+    std::fs::write(Path::new("reports/fig8_relative_peak.txt"),
+                   t.render()).unwrap();
+    std::fs::write(Path::new("reports/fig8_relative_peak.csv"),
+                   t.to_csv()).unwrap();
+    println!("{}", t.render());
+    println!("paper anchors: K80 15/18 %, P100 46/28 %, \"almost 50 %\" \
+              on Power8; older archs ~20 % (2016 paper) now better.");
+    println!("wrote reports/fig8_relative_peak.{{txt,csv}}");
+}

@@ -1,0 +1,59 @@
+//! Bench N1 — the native counterpart of Fig. 3/6: times the *real*
+//! single-source Pallas kernel (AOT HLO via PJRT) on the host CPU,
+//! tile sweep + scaling + XLA-dot baseline, under the paper's §2
+//! max-of-10 protocol.
+//!
+//! Requires `make artifacts` to have run.
+
+use std::path::Path;
+
+use alpaka_rs::runtime::{executor, Manifest, Runtime};
+use alpaka_rs::util::table::Table;
+
+fn main() {
+    let manifest = match Manifest::load(Path::new("artifacts")) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("skipping native bench: {e:#}");
+            return;
+        }
+    };
+    let runtime = Runtime::new().expect("PJRT cpu client");
+    println!("=== native GEMM bench (PJRT {}) ===\n",
+             runtime.platform());
+
+    let mut t = Table::new(vec!["artifact", "role", "T", "e", "best s",
+                                "GFLOP/s", "stable"]).numeric();
+    let mut roles: Vec<&str> = vec!["tile_sweep", "element_sweep",
+                                    "scaling", "baseline"];
+    roles.dedup();
+    for role in roles {
+        let mut metas = manifest.by_role(role);
+        metas.sort_by_key(|m| (m.precision, m.n, m.t));
+        for meta in metas {
+            let kernel = runtime.load(&manifest, meta)
+                .expect("load artifact");
+            let m = executor::measure_kernel(&kernel, 2, 10)
+                .expect("measure");
+            t.row(vec![
+                meta.id.clone(),
+                role.to_string(),
+                meta.t.map(|v| v.to_string()).unwrap_or_default(),
+                meta.n_e.map(|v| v.to_string()).unwrap_or_default(),
+                format!("{:.5}", m.measurement.best()),
+                m.gflops.map(|g| format!("{g:.3}"))
+                    .unwrap_or_else(|| "-".into()),
+                format!("{}", m.measurement.stable(0.10)),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+    std::fs::create_dir_all("reports").unwrap();
+    std::fs::write("reports/native_gemm_bench.csv", {
+        t.to_csv()
+    }).unwrap();
+    println!("wrote reports/native_gemm_bench.csv");
+    println!("note: interpret-mode Pallas trades speed for portability \
+              on the CPU PJRT plugin; the XLA-dot baseline rows show \
+              the hardware's actual capability (EXPERIMENTS.md §N1).");
+}

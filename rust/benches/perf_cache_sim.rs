@@ -1,0 +1,66 @@
+//! Perf P1 — profiles the L3 hot path: cache-simulator throughput per
+//! tile size, full sweep wall time, and trace-memoisation speedup.
+//! Feeds EXPERIMENTS.md §Perf.
+
+use std::time::Instant;
+
+use alpaka_rs::arch::{ArchId, CompilerId};
+use alpaka_rs::gemm::{GemmWorkload, Precision};
+use alpaka_rs::sim::cache::{CacheConfig, Hierarchy};
+use alpaka_rs::sim::trace::{tile_pass, TraceParams};
+use alpaka_rs::sim::{Machine, TuningPoint};
+use alpaka_rs::util::table::Table;
+
+fn knl_hier() -> Hierarchy {
+    Hierarchy::new(vec![
+        CacheConfig { name: "L1", bytes: 64 * 1024, line_bytes: 64,
+                      assoc: 8 },
+        CacheConfig { name: "L2", bytes: 512 * 1024, line_bytes: 64,
+                      assoc: 16 },
+    ])
+}
+
+fn main() {
+    println!("=== perf: cache simulator ===\n");
+    let mut t = Table::new(vec!["T", "dtype", "accesses", "seconds",
+                                "Maccess/s"]).numeric();
+    for (tile, bytes) in [(16u64, 8u64), (32, 8), (64, 8), (128, 8),
+                          (256, 8), (512, 8), (64, 4), (256, 4)] {
+        let mut h = knl_hier();
+        let params = TraceParams::for_tile(tile, bytes);
+        let t0 = Instant::now();
+        let tr = tile_pass(&mut h, params);
+        let secs = t0.elapsed().as_secs_f64();
+        let total = tr.accesses * params.reps as f64;
+        t.row(vec![tile.to_string(),
+                   if bytes == 8 { "f64" } else { "f32" }.into(),
+                   format!("{:.0}", total),
+                   format!("{secs:.4}"),
+                   format!("{:.1}", total / secs / 1e6)]);
+    }
+    println!("{}", t.render());
+
+    // full sweep wall time (memoised vs cold)
+    let machine = Machine::for_arch(ArchId::Knl);
+    let points: Vec<TuningPoint> = [16u64, 32, 64, 128, 256, 512]
+        .iter()
+        .flat_map(|&tile| [1u64, 2, 4].map(|h| TuningPoint::cpu(
+            ArchId::Knl, CompilerId::Intel, Precision::F64,
+            GemmWorkload::TUNING_N, tile, h)))
+        .collect();
+    let t0 = Instant::now();
+    for p in &points {
+        machine.predict(p);
+    }
+    let cold = t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    for p in &points {
+        machine.predict(p);
+    }
+    let warm = t1.elapsed().as_secs_f64();
+    println!("KNL 18-point sweep: cold {cold:.3}s, memoised {warm:.6}s \
+              ({:.0}x)", cold / warm.max(1e-9));
+    std::fs::create_dir_all("reports").unwrap();
+    std::fs::write("reports/perf_cache_sim.txt",
+                   format!("cold={cold:.4}s warm={warm:.6}s\n")).unwrap();
+}

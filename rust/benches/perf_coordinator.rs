@@ -1,0 +1,51 @@
+//! Perf P2 — profiles the coordinator: job throughput vs worker count
+//! and queue capacity (backpressure cost). Feeds EXPERIMENTS.md §Perf.
+
+use std::time::Instant;
+
+use alpaka_rs::arch::{ArchId, CompilerId};
+use alpaka_rs::coordinator::Scheduler;
+use alpaka_rs::gemm::Precision;
+use alpaka_rs::sim::TuningPoint;
+use alpaka_rs::util::table::Table;
+
+fn batch(n_jobs: usize) -> Vec<TuningPoint> {
+    // N varies so the memo cache doesn't collapse the work entirely
+    (0..n_jobs)
+        .map(|i| {
+            let n = 1024 * (1 + (i % 8) as u64);
+            let t = [16u64, 32, 64][i % 3];
+            TuningPoint::cpu(ArchId::Knl, CompilerId::Intel,
+                             Precision::F64, n, t, 1 + (i % 2) as u64)
+        })
+        .collect()
+}
+
+fn main() {
+    println!("=== perf: coordinator throughput ===\n");
+    let mut t = Table::new(vec!["workers", "queue cap", "jobs",
+                                "seconds", "jobs/s", "peak depth"])
+        .numeric();
+    let jobs = 600;
+    for workers in [1usize, 2, 4, 8] {
+        for cap in [2usize, 64] {
+            let sched = Scheduler::new(workers, cap);
+            // warm the machine park's trace memo so we measure
+            // scheduling, not first-touch simulation
+            sched.run_batch(batch(24));
+            let pts = batch(jobs);
+            let t0 = Instant::now();
+            let results = sched.run_batch(pts);
+            let secs = t0.elapsed().as_secs_f64();
+            assert_eq!(results.len(), jobs);
+            t.row(vec![workers.to_string(), cap.to_string(),
+                       jobs.to_string(), format!("{secs:.4}"),
+                       format!("{:.0}", jobs as f64 / secs),
+                       sched.metrics.max_queue_depth().to_string()]);
+        }
+    }
+    println!("{}", t.render());
+    std::fs::create_dir_all("reports").unwrap();
+    std::fs::write("reports/perf_coordinator.csv", t.to_csv()).unwrap();
+    println!("wrote reports/perf_coordinator.csv");
+}

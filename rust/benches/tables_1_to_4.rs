@@ -1,0 +1,26 @@
+//! Bench T1–T4 — regenerates paper Tables 1–4 (architectures,
+//! compilers, tuned optima with cache-fit marking).
+
+use std::path::Path;
+
+use alpaka_rs::report::tables;
+
+fn main() {
+    std::fs::create_dir_all("reports").unwrap();
+    let all = [
+        ("table1_gpus", tables::table1()),
+        ("table2_cpus", tables::table2()),
+        ("table3_compilers", tables::table3()),
+        ("table4_optima", tables::table4()),
+    ];
+    for (stem, t) in all {
+        std::fs::write(Path::new(&format!("reports/{stem}.txt")),
+                       t.render()).unwrap();
+        std::fs::write(Path::new(&format!("reports/{stem}.csv")),
+                       t.to_csv()).unwrap();
+        println!("{}\n", t.render());
+    }
+    println!("(* = anchor estimated from a figure, not quoted in the \
+              paper's text)");
+    println!("wrote reports/table{{1,2,3,4}}_*.{{txt,csv}}");
+}

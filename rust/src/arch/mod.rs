@@ -1,0 +1,11 @@
+//! Architecture + compiler registries — the facts of paper Tables 1–3.
+//!
+//! Everything in this module is *data from the paper* (or, for the host
+//! CPU, probed at runtime); modelling assumptions live in [`crate::sim`].
+
+pub mod compiler;
+pub mod specs;
+
+pub use compiler::{valid_compilers, CompilerId, CompilerSpec};
+pub use specs::{ArchClass, ArchId, ArchSpec, CacheLevel, CacheScope,
+                CpuSpec, GpuSpec, HostLink, MemKind};

@@ -1,0 +1,562 @@
+//! Architecture specifications — paper Tables 1 (GPUs) and 2 (CPUs).
+//!
+//! Peak performances follow paper Eq. 8, `P(f,o,n) = f · o · n`. Note on
+//! `flops_per_cycle`: the paper's Table 2 *text* lists the marketing
+//! values ("64 (2·AVX,FMA)" for Haswell), but its own peak numbers
+//! (1.61 TFLOP/s SP) are only consistent with half of that (24 cores ×
+//! 32 flops × 2.1 GHz = 1.61 TFLOP/s). We store the Eq.-8-consistent
+//! value in `flops_per_cycle_*` (used everywhere) and keep the paper's
+//! table text in `display_flops_*` so Table 2 renders verbatim.
+
+use crate::gemm::Precision;
+
+/// Identity of every architecture in the study. `Host` is this machine —
+/// the sixth architecture, on which the *real* Pallas kernel runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ArchId {
+    K80,
+    P100Pcie,
+    P100Nvlink,
+    Haswell,
+    Knl,
+    Power8,
+    Host,
+}
+
+impl ArchId {
+    /// The paper's five testbeds (P100 counted once per interconnect).
+    pub const PAPER: [ArchId; 6] = [ArchId::K80, ArchId::P100Pcie,
+                                    ArchId::P100Nvlink, ArchId::Haswell,
+                                    ArchId::Knl, ArchId::Power8];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            ArchId::K80 => "K80",
+            ArchId::P100Pcie => "P100 (pcie)",
+            ArchId::P100Nvlink => "P100 (nvlink)",
+            ArchId::Haswell => "Haswell",
+            ArchId::Knl => "KNL",
+            ArchId::Power8 => "Power8",
+            ArchId::Host => "Host CPU",
+        }
+    }
+
+    pub fn slug(self) -> &'static str {
+        match self {
+            ArchId::K80 => "k80",
+            ArchId::P100Pcie => "p100-pcie",
+            ArchId::P100Nvlink => "p100-nvlink",
+            ArchId::Haswell => "haswell",
+            ArchId::Knl => "knl",
+            ArchId::Power8 => "power8",
+            ArchId::Host => "host",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ArchId> {
+        match s.to_ascii_lowercase().as_str() {
+            "k80" => Some(ArchId::K80),
+            "p100-pcie" | "p100pcie" => Some(ArchId::P100Pcie),
+            "p100-nvlink" | "p100" | "p100nvlink" => Some(ArchId::P100Nvlink),
+            "haswell" => Some(ArchId::Haswell),
+            "knl" => Some(ArchId::Knl),
+            "power8" => Some(ArchId::Power8),
+            "host" => Some(ArchId::Host),
+            _ => None,
+        }
+    }
+
+    pub fn spec(self) -> ArchSpec {
+        spec_for(self)
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArchClass {
+    Gpu,
+    Cpu,
+}
+
+/// GPU↔host interconnect (paper Table 1 distinguishes the two P100s).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HostLink {
+    Pcie,
+    Nvlink,
+}
+
+impl HostLink {
+    /// Host-link bandwidth in GB/s (PCIe 3 x16 ≈ 16, NVLink 1 ≈ 80).
+    pub fn bandwidth_gbs(self) -> f64 {
+        match self {
+            HostLink::Pcie => 16.0,
+            HostLink::Nvlink => 80.0,
+        }
+    }
+}
+
+/// What a cache level is shared by — determines "cache per HW thread"
+/// (paper Table 4 columns).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheScope {
+    PerCore,
+    /// KNL tile: two cores share 1 MB of L2.
+    PerCorePair,
+    PerSocket,
+}
+
+/// One cache level of a CPU.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CacheLevel {
+    pub name: &'static str,
+    pub bytes: u64,
+    pub line_bytes: u64,
+    pub assoc: u32,
+    pub scope: CacheScope,
+    /// Sustainable load bandwidth per core, bytes/cycle (model constant
+    /// for the roofline; typical Intel/IBM figures).
+    pub bytes_per_cycle_per_core: f64,
+}
+
+impl CacheLevel {
+    /// Capacity visible to one HW thread when `threads_per_core` threads
+    /// are active on each core in the sharing scope (Table 4 logic).
+    pub fn bytes_per_thread(&self, cores_in_scope: u64,
+                            threads_per_core: u64) -> u64 {
+        let sharers = match self.scope {
+            CacheScope::PerCore => threads_per_core,
+            CacheScope::PerCorePair => 2 * threads_per_core,
+            CacheScope::PerSocket => cores_in_scope * threads_per_core,
+        };
+        self.bytes / sharers.max(1)
+    }
+}
+
+/// Main-memory technology of a CPU (the KNL distinguishes two).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum MemKind {
+    Ddr { bandwidth_gbs: f64 },
+    /// KNL MCDRAM: ~5x the DDR bandwidth, similar latency (§2.3).
+    Mcdram { bandwidth_gbs: f64, capacity_gb: f64 },
+}
+
+/// CPU architecture description (paper Table 2).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CpuSpec {
+    pub sockets: u64,
+    /// Total cores across all used sockets.
+    pub cores: u64,
+    pub hw_threads_per_core: u64,
+    pub clock_ghz: f64,
+    /// Eq.-8-consistent FLOPs per cycle and core.
+    pub flops_per_cycle_sp: f64,
+    pub flops_per_cycle_dp: f64,
+    /// Paper Table 2 verbatim text for the report engine.
+    pub display_flops_sp: &'static str,
+    pub display_flops_dp: &'static str,
+    pub caches: Vec<CacheLevel>,
+    pub dram: MemKind,
+    /// Present only on KNL.
+    pub mcdram: Option<MemKind>,
+    /// SIMD width in bits (AVX2 = 256, AVX-512 = 512, VSX = 128).
+    pub vector_bits: u64,
+}
+
+impl CpuSpec {
+    /// Eq. 8: P(f, o, n) = f · o · n, in GFLOP/s.
+    pub fn peak_gflops(&self, p: Precision) -> f64 {
+        let o = match p {
+            Precision::F32 => self.flops_per_cycle_sp,
+            Precision::F64 => self.flops_per_cycle_dp,
+        };
+        self.clock_ghz * o * self.cores as f64
+    }
+
+    pub fn vector_lanes(&self, p: Precision) -> u64 {
+        self.vector_bits / (8 * p.size_bytes())
+    }
+
+    pub fn cores_per_socket(&self) -> u64 {
+        self.cores / self.sockets
+    }
+
+    pub fn max_threads(&self) -> u64 {
+        self.cores * self.hw_threads_per_core
+    }
+}
+
+/// GPU architecture description (paper Table 1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuSpec {
+    pub sms: u64,
+    pub cores_sp_per_sm: u64,
+    pub cores_dp_per_sm: u64,
+    pub shared_mem_per_sm: u64,
+    /// 32-bit registers per SM.
+    pub regs_per_sm: u64,
+    pub clock_ghz: f64,
+    /// Paper Table 1 peak values (GFLOP/s). The PCIe P100 peak in the
+    /// paper corresponds to a lower boost clock, so we store rather than
+    /// derive.
+    pub peak_sp_gflops: f64,
+    pub peak_dp_gflops: f64,
+    /// Device memory bandwidth, GB/s.
+    pub mem_bandwidth_gbs: f64,
+    pub link: HostLink,
+    pub max_threads_per_sm: u64,
+    pub max_blocks_per_sm: u64,
+}
+
+impl GpuSpec {
+    pub fn peak_gflops(&self, p: Precision) -> f64 {
+        match p {
+            Precision::F32 => self.peak_sp_gflops,
+            Precision::F64 => self.peak_dp_gflops,
+        }
+    }
+
+    pub fn cores_per_sm(&self, p: Precision) -> u64 {
+        match p {
+            Precision::F32 => self.cores_sp_per_sm,
+            Precision::F64 => self.cores_dp_per_sm,
+        }
+    }
+}
+
+/// Full architecture record.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArchSpec {
+    pub id: ArchId,
+    pub vendor: &'static str,
+    pub name: &'static str,
+    pub release: &'static str,
+    pub class: ArchClass,
+    pub cpu: Option<CpuSpec>,
+    pub gpu: Option<GpuSpec>,
+}
+
+impl ArchSpec {
+    pub fn peak_gflops(&self, p: Precision) -> f64 {
+        match self.class {
+            ArchClass::Cpu => self.cpu.as_ref().unwrap().peak_gflops(p),
+            ArchClass::Gpu => self.gpu.as_ref().unwrap().peak_gflops(p),
+        }
+    }
+
+    pub fn cpu(&self) -> &CpuSpec {
+        self.cpu.as_ref().expect("not a CPU arch")
+    }
+
+    pub fn gpu(&self) -> &GpuSpec {
+        self.gpu.as_ref().expect("not a GPU arch")
+    }
+}
+
+fn kb(x: u64) -> u64 {
+    x * 1024
+}
+
+fn mb(x: u64) -> u64 {
+    x * 1024 * 1024
+}
+
+fn spec_for(id: ArchId) -> ArchSpec {
+    match id {
+        // ----------------------------------------------------- Table 1 --
+        ArchId::K80 => ArchSpec {
+            id,
+            vendor: "Nvidia",
+            name: "Tesla K80 (one GK210 chip)",
+            release: "Q4/2014",
+            class: ArchClass::Gpu,
+            cpu: None,
+            gpu: Some(GpuSpec {
+                sms: 13,
+                cores_sp_per_sm: 192,
+                cores_dp_per_sm: 64,
+                shared_mem_per_sm: kb(112),
+                regs_per_sm: 131_072,
+                clock_ghz: 0.88, // boost clock
+                peak_sp_gflops: 4370.0,
+                peak_dp_gflops: 1460.0,
+                mem_bandwidth_gbs: 240.0,
+                link: HostLink::Pcie,
+                max_threads_per_sm: 2048,
+                max_blocks_per_sm: 16,
+            }),
+        },
+        ArchId::P100Pcie => ArchSpec {
+            id,
+            vendor: "Nvidia",
+            name: "Tesla P100 (PCIe)",
+            release: "Q4/2016",
+            class: ArchClass::Gpu,
+            cpu: None,
+            gpu: Some(GpuSpec {
+                sms: 56,
+                cores_sp_per_sm: 64,
+                cores_dp_per_sm: 32,
+                shared_mem_per_sm: kb(48),
+                regs_per_sm: 131_072, // per paper Table 1 (spans columns)
+                clock_ghz: 1.39,
+                peak_sp_gflops: 9300.0,
+                peak_dp_gflops: 4700.0,
+                mem_bandwidth_gbs: 732.0,
+                link: HostLink::Pcie,
+                max_threads_per_sm: 2048,
+                max_blocks_per_sm: 32,
+            }),
+        },
+        ArchId::P100Nvlink => ArchSpec {
+            id,
+            vendor: "Nvidia",
+            name: "Tesla P100 (NVLink, JURON)",
+            release: "Q4/2016",
+            class: ArchClass::Gpu,
+            cpu: None,
+            gpu: Some(GpuSpec {
+                sms: 56,
+                cores_sp_per_sm: 64,
+                cores_dp_per_sm: 32,
+                shared_mem_per_sm: kb(48),
+                regs_per_sm: 131_072,
+                clock_ghz: 1.48,
+                peak_sp_gflops: 10600.0,
+                peak_dp_gflops: 5300.0,
+                mem_bandwidth_gbs: 732.0,
+                link: HostLink::Nvlink,
+                max_threads_per_sm: 2048,
+                max_blocks_per_sm: 32,
+            }),
+        },
+        // ----------------------------------------------------- Table 2 --
+        ArchId::Haswell => ArchSpec {
+            id,
+            vendor: "Intel",
+            name: "Xeon E5-2680 v3 (Haswell), 2 sockets",
+            release: "Q3/2014",
+            class: ArchClass::Cpu,
+            gpu: None,
+            cpu: Some(CpuSpec {
+                sockets: 2,
+                cores: 24,
+                hw_threads_per_core: 1, // hyperthreading deactivated
+                clock_ghz: 2.1,         // AVX base frequency
+                flops_per_cycle_sp: 32.0,
+                flops_per_cycle_dp: 16.0,
+                display_flops_sp: "64 (2*AVX,FMA)",
+                display_flops_dp: "32 (2*AVX,FMA)",
+                caches: vec![
+                    CacheLevel { name: "L1", bytes: kb(64), line_bytes: 64,
+                                 assoc: 8, scope: CacheScope::PerCore,
+                                 bytes_per_cycle_per_core: 32.0 },
+                    CacheLevel { name: "L2", bytes: kb(256), line_bytes: 64,
+                                 assoc: 8, scope: CacheScope::PerCore,
+                                 bytes_per_cycle_per_core: 16.0 },
+                    CacheLevel { name: "L3", bytes: mb(30), line_bytes: 64,
+                                 assoc: 20, scope: CacheScope::PerSocket,
+                                 bytes_per_cycle_per_core: 8.0 },
+                ],
+                dram: MemKind::Ddr { bandwidth_gbs: 120.0 },
+                mcdram: None,
+                vector_bits: 256,
+            }),
+        },
+        ArchId::Knl => ArchSpec {
+            id,
+            vendor: "Intel",
+            name: "Xeon Phi 7210 (Knights Landing)",
+            release: "Q2/2016",
+            class: ArchClass::Cpu,
+            gpu: None,
+            cpu: Some(CpuSpec {
+                sockets: 1,
+                cores: 64,
+                hw_threads_per_core: 4,
+                clock_ghz: 1.3,
+                flops_per_cycle_sp: 64.0,
+                flops_per_cycle_dp: 32.0,
+                display_flops_sp: "128 (2*AVX-512,FMA)",
+                display_flops_dp: "64 (2*AVX-512,FMA)",
+                caches: vec![
+                    CacheLevel { name: "L1", bytes: kb(64), line_bytes: 64,
+                                 assoc: 8, scope: CacheScope::PerCore,
+                                 bytes_per_cycle_per_core: 128.0 },
+                    CacheLevel { name: "L2", bytes: mb(1), line_bytes: 64,
+                                 assoc: 16, scope: CacheScope::PerCorePair,
+                                 bytes_per_cycle_per_core: 32.0 },
+                ],
+                dram: MemKind::Ddr { bandwidth_gbs: 90.0 },
+                mcdram: Some(MemKind::Mcdram { bandwidth_gbs: 450.0,
+                                               capacity_gb: 16.0 }),
+                vector_bits: 512,
+            }),
+        },
+        ArchId::Power8 => ArchSpec {
+            id,
+            vendor: "IBM",
+            name: "Power8 (JURON), 2 sockets",
+            release: "Q2/2014",
+            class: ArchClass::Cpu,
+            gpu: None,
+            cpu: Some(CpuSpec {
+                sockets: 2,
+                cores: 20,
+                hw_threads_per_core: 8,
+                clock_ghz: 4.02,
+                flops_per_cycle_sp: 16.0,
+                flops_per_cycle_dp: 8.0,
+                display_flops_sp: "16",
+                display_flops_dp: "8",
+                caches: vec![
+                    CacheLevel { name: "L1", bytes: kb(64), line_bytes: 128,
+                                 assoc: 8, scope: CacheScope::PerCore,
+                                 bytes_per_cycle_per_core: 64.0 },
+                    CacheLevel { name: "L2", bytes: kb(512), line_bytes: 128,
+                                 assoc: 8, scope: CacheScope::PerCore,
+                                 bytes_per_cycle_per_core: 16.0 },
+                    CacheLevel { name: "L3", bytes: mb(80), line_bytes: 128,
+                                 assoc: 8, scope: CacheScope::PerSocket,
+                                 bytes_per_cycle_per_core: 16.0 },
+                ],
+                dram: MemKind::Ddr { bandwidth_gbs: 190.0 },
+                mcdram: None,
+                vector_bits: 128, // VSX
+            }),
+        },
+        // ------------------------------------------ the sixth testbed --
+        ArchId::Host => host_spec(),
+    }
+}
+
+/// The machine this binary runs on: the one architecture whose numbers are
+/// *measured*, not simulated. Core count probed at runtime; peak estimated
+/// conservatively (AVX2-class, FMA) — used only for relative-to-peak
+/// context in the native report, never for cross-arch claims.
+pub fn host_spec() -> ArchSpec {
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get() as u64)
+        .unwrap_or(4);
+    ArchSpec {
+        id: ArchId::Host,
+        vendor: "(runtime)",
+        name: "host CPU via PJRT",
+        release: "-",
+        class: ArchClass::Cpu,
+        gpu: None,
+        cpu: Some(CpuSpec {
+            sockets: 1,
+            cores,
+            hw_threads_per_core: 1,
+            clock_ghz: 2.5,
+            flops_per_cycle_sp: 32.0,
+            flops_per_cycle_dp: 16.0,
+            display_flops_sp: "32 (est.)",
+            display_flops_dp: "16 (est.)",
+            caches: vec![
+                CacheLevel { name: "L1", bytes: kb(32), line_bytes: 64,
+                             assoc: 8, scope: CacheScope::PerCore,
+                             bytes_per_cycle_per_core: 32.0 },
+                CacheLevel { name: "L2", bytes: kb(512), line_bytes: 64,
+                             assoc: 8, scope: CacheScope::PerCore,
+                             bytes_per_cycle_per_core: 32.0 },
+                CacheLevel { name: "L3", bytes: mb(32), line_bytes: 64,
+                             assoc: 16, scope: CacheScope::PerSocket,
+                             bytes_per_cycle_per_core: 24.0 },
+            ],
+            dram: MemKind::Ddr { bandwidth_gbs: 50.0 },
+            mcdram: None,
+            vector_bits: 256,
+        }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gpu_peaks_match_table1() {
+        assert_eq!(ArchId::K80.spec().peak_gflops(Precision::F32), 4370.0);
+        assert_eq!(ArchId::K80.spec().peak_gflops(Precision::F64), 1460.0);
+        assert_eq!(ArchId::P100Nvlink.spec().peak_gflops(Precision::F32),
+                   10600.0);
+        assert_eq!(ArchId::P100Pcie.spec().peak_gflops(Precision::F64),
+                   4700.0);
+    }
+
+    #[test]
+    fn cpu_peaks_match_table2_eq8() {
+        // Table 2 values to within rounding (the table rounds to 3 sig).
+        let has = ArchId::Haswell.spec();
+        assert!((has.peak_gflops(Precision::F32) - 1610.0).abs() < 5.0);
+        assert!((has.peak_gflops(Precision::F64) - 810.0).abs() < 5.0);
+        let knl = ArchId::Knl.spec();
+        assert!((knl.peak_gflops(Precision::F32) - 5330.0).abs() < 10.0);
+        assert!((knl.peak_gflops(Precision::F64) - 2660.0).abs() < 10.0);
+        let p8 = ArchId::Power8.spec();
+        assert!((p8.peak_gflops(Precision::F32) - 1290.0).abs() < 5.0);
+        assert!((p8.peak_gflops(Precision::F64) - 640.0).abs() < 5.0);
+    }
+
+    #[test]
+    fn k80_eq8_consistency() {
+        // K80 peak ≈ sms * cores * 2 (FMA) * clock
+        let g = ArchId::K80.spec();
+        let gpu = g.gpu();
+        let sp = gpu.sms as f64 * gpu.cores_sp_per_sm as f64 * 2.0
+            * gpu.clock_ghz;
+        assert!((sp - gpu.peak_sp_gflops).abs() / sp < 0.01);
+    }
+
+    #[test]
+    fn cache_per_thread_table4_rows() {
+        // Haswell, 1 thread: L1 64 KB, L2 256 KB, L3 2.5 MB per thread.
+        let cpu = ArchId::Haswell.spec().cpu().clone();
+        let l3 = cpu.caches[2];
+        assert_eq!(l3.bytes_per_thread(cpu.cores_per_socket(), 1),
+                   30 * 1024 * 1024 / 12);
+        // KNL: L2 1 MB per 2 cores -> 512 KB at h=1, 256 KB at h=2.
+        let knl = ArchId::Knl.spec().cpu().clone();
+        let l2 = knl.caches[1];
+        assert_eq!(l2.bytes_per_thread(knl.cores_per_socket(), 1),
+                   512 * 1024);
+        assert_eq!(l2.bytes_per_thread(knl.cores_per_socket(), 2),
+                   256 * 1024);
+        // Power8 at h=8: L1 8 KB, L2 64 KB, L3 1 MB per thread.
+        let p8 = ArchId::Power8.spec().cpu().clone();
+        assert_eq!(p8.caches[0].bytes_per_thread(10, 8), 8 * 1024);
+        assert_eq!(p8.caches[1].bytes_per_thread(10, 8), 64 * 1024);
+        assert_eq!(p8.caches[2].bytes_per_thread(10, 8), 1024 * 1024);
+    }
+
+    #[test]
+    fn vector_lanes() {
+        let knl = ArchId::Knl.spec().cpu().clone();
+        assert_eq!(knl.vector_lanes(Precision::F32), 16);
+        assert_eq!(knl.vector_lanes(Precision::F64), 8);
+        let p8 = ArchId::Power8.spec().cpu().clone();
+        assert_eq!(p8.vector_lanes(Precision::F64), 2);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for a in ArchId::PAPER {
+            assert_eq!(ArchId::parse(a.slug()), Some(a));
+        }
+        assert_eq!(ArchId::parse("host"), Some(ArchId::Host));
+        assert_eq!(ArchId::parse("vax"), None);
+    }
+
+    #[test]
+    fn host_spec_probes_cores() {
+        let h = host_spec();
+        assert!(h.cpu().cores >= 1);
+        assert_eq!(h.class, ArchClass::Cpu);
+    }
+
+    #[test]
+    fn release_dates_table() {
+        assert_eq!(ArchId::K80.spec().release, "Q4/2014");
+        assert_eq!(ArchId::Knl.spec().release, "Q2/2016");
+    }
+}

@@ -1,0 +1,277 @@
+//! Command-line parsing substrate (clap is not vendored in this image —
+//! built from scratch per DESIGN.md).
+//!
+//! Model: `binary <command> [--opt value]... [--flag]... [positional]...`
+//! with declarative command specs that also generate the help text.
+
+use std::collections::HashMap;
+use std::fmt;
+
+/// Declares one option of a command.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+    pub help: &'static str,
+}
+
+impl OptSpec {
+    pub fn value(name: &'static str, default: Option<&'static str>,
+                 help: &'static str) -> Self {
+        Self { name, takes_value: true, default, help }
+    }
+
+    pub fn flag(name: &'static str, help: &'static str) -> Self {
+        Self { name, takes_value: false, default: None, help }
+    }
+}
+
+/// Declares one subcommand.
+#[derive(Debug, Clone)]
+pub struct CommandSpec {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+/// Parsed arguments of a command invocation.
+#[derive(Debug, Clone, Default)]
+pub struct Parsed {
+    pub command: String,
+    values: HashMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<Option<u64>, CliError> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v.parse().map(Some).map_err(|_| {
+                CliError::BadValue { opt: name.into(), value: v.into() }
+            }),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>, CliError> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v.parse().map(Some).map_err(|_| {
+                CliError::BadValue { opt: name.into(), value: v.into() }
+            }),
+        }
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CliError {
+    UnknownCommand(String),
+    UnknownOption { command: String, opt: String },
+    MissingValue(String),
+    BadValue { opt: String, value: String },
+    NoCommand,
+}
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CliError::UnknownCommand(c) => write!(f, "unknown command {c:?} \
+                (run with `help` for usage)"),
+            CliError::UnknownOption { command, opt } =>
+                write!(f, "unknown option --{opt} for command {command}"),
+            CliError::MissingValue(o) =>
+                write!(f, "option --{o} needs a value"),
+            CliError::BadValue { opt, value } =>
+                write!(f, "option --{opt}: cannot parse {value:?}"),
+            CliError::NoCommand => write!(f, "no command given \
+                (run with `help` for usage)"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
+
+/// The application CLI: a set of commands.
+pub struct Cli {
+    pub binary: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<CommandSpec>,
+}
+
+impl Cli {
+    /// Parse argv (without the binary name).
+    pub fn parse<I, S>(&self, argv: I) -> Result<Parsed, CliError>
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let mut args = argv.into_iter().map(Into::into).peekable();
+        let command = args.next().ok_or(CliError::NoCommand)?;
+        if command == "help" || command == "--help" || command == "-h" {
+            let mut p = Parsed::default();
+            p.command = "help".into();
+            p.positional = args.collect();
+            return Ok(p);
+        }
+        let spec = self
+            .commands
+            .iter()
+            .find(|c| c.name == command)
+            .ok_or_else(|| CliError::UnknownCommand(command.clone()))?;
+        let mut parsed = Parsed { command: command.clone(),
+                                  ..Default::default() };
+        // defaults first
+        for o in &spec.opts {
+            if let Some(d) = o.default {
+                parsed.values.insert(o.name.into(), d.into());
+            }
+        }
+        while let Some(arg) = args.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                // --opt=value form
+                let (name, inline) = match name.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (name, None),
+                };
+                let o = spec
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| CliError::UnknownOption {
+                        command: command.clone(),
+                        opt: name.into(),
+                    })?;
+                if o.takes_value {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => args
+                            .next()
+                            .ok_or_else(|| CliError::MissingValue(
+                                name.into()))?,
+                    };
+                    parsed.values.insert(name.into(), v);
+                } else {
+                    parsed.flags.push(name.into());
+                }
+            } else {
+                parsed.positional.push(arg);
+            }
+        }
+        Ok(parsed)
+    }
+
+    /// Render the help text.
+    pub fn help(&self) -> String {
+        let mut out = format!("{} — {}\n\nCOMMANDS:\n", self.binary,
+                              self.about);
+        for c in &self.commands {
+            out.push_str(&format!("  {:<14} {}\n", c.name, c.about));
+            for o in &c.opts {
+                let kind = if o.takes_value {
+                    match o.default {
+                        Some(d) => format!("<val, default {d}>"),
+                        None => "<val>".into(),
+                    }
+                } else {
+                    "".into()
+                };
+                out.push_str(&format!("      --{:<12} {:<22} {}\n",
+                                      o.name, kind, o.help));
+            }
+        }
+        out.push_str("  help           show this text\n");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli {
+            binary: "alpaka-bench",
+            about: "test cli",
+            commands: vec![
+                CommandSpec {
+                    name: "tune",
+                    about: "run a sweep",
+                    opts: vec![
+                        OptSpec::value("arch", Some("knl"), "architecture"),
+                        OptSpec::value("n", None, "matrix size"),
+                        OptSpec::flag("verbose", "chatty"),
+                    ],
+                },
+                CommandSpec { name: "list", about: "list things",
+                              opts: vec![] },
+            ],
+        }
+    }
+
+    #[test]
+    fn parse_values_flags_positionals() {
+        let p = cli()
+            .parse(["tune", "--arch", "p100-nvlink", "--verbose", "extra"])
+            .unwrap();
+        assert_eq!(p.command, "tune");
+        assert_eq!(p.get("arch"), Some("p100-nvlink"));
+        assert!(p.has_flag("verbose"));
+        assert_eq!(p.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let p = cli().parse(["tune"]).unwrap();
+        assert_eq!(p.get("arch"), Some("knl"));
+        assert_eq!(p.get("n"), None);
+    }
+
+    #[test]
+    fn equals_form() {
+        let p = cli().parse(["tune", "--n=4096"]).unwrap();
+        assert_eq!(p.get_u64("n").unwrap(), Some(4096));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(matches!(cli().parse(["nope"]),
+                         Err(CliError::UnknownCommand(_))));
+        assert!(matches!(cli().parse(["tune", "--bogus", "x"]),
+                         Err(CliError::UnknownOption { .. })));
+        assert!(matches!(cli().parse(["tune", "--n"]),
+                         Err(CliError::MissingValue(_))));
+        assert!(matches!(cli().parse(Vec::<String>::new()),
+                         Err(CliError::NoCommand)));
+        let p = cli().parse(["tune", "--n", "abc"]).unwrap();
+        assert!(matches!(p.get_u64("n"), Err(CliError::BadValue { .. })));
+    }
+
+    #[test]
+    fn help_lists_commands() {
+        let h = cli().help();
+        assert!(h.contains("tune") && h.contains("list"));
+        assert!(h.contains("--arch"));
+        assert!(h.contains("default knl"));
+        let p = cli().parse(["help"]).unwrap();
+        assert_eq!(p.command, "help");
+    }
+
+    #[test]
+    fn get_f64() {
+        let p = cli().parse(["tune", "--n", "1.5"]).unwrap();
+        assert_eq!(p.get_f64("n").unwrap(), Some(1.5));
+    }
+}

@@ -1,0 +1,39 @@
+//! Job and result types for the sweep coordinator.
+
+use crate::sim::TuningPoint;
+use crate::tuner::SweepRecord;
+
+/// One unit of work: evaluate a tuning point on its architecture's
+/// machine model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSpec {
+    pub id: u64,
+    pub point: TuningPoint,
+}
+
+/// Completed job.
+#[derive(Debug, Clone)]
+pub struct JobResult {
+    pub id: u64,
+    pub record: SweepRecord,
+    /// Worker index that executed the job.
+    pub worker: usize,
+    /// Seconds the evaluation took (model time, not simulated time).
+    pub wall: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{ArchId, CompilerId};
+    use crate::gemm::Precision;
+
+    #[test]
+    fn job_spec_identity() {
+        let p = TuningPoint::cpu(ArchId::Knl, CompilerId::Intel,
+                                 Precision::F64, 1024, 64, 1);
+        let a = JobSpec { id: 1, point: p };
+        let b = JobSpec { id: 1, point: p };
+        assert_eq!(a, b);
+    }
+}

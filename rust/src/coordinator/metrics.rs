@@ -1,0 +1,111 @@
+//! Coordinator metrics — atomic counters reported by every component and
+//! printed by the CLI after a campaign.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+/// Campaign counters. All methods are lock-free.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    failed: AtomicU64,
+    /// Sum of per-job wall time in microseconds.
+    busy_us: AtomicU64,
+    /// High-water mark of the job queue.
+    max_queue_depth: AtomicUsize,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn job_submitted(&self) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn job_completed(&self, wall_seconds: f64) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.busy_us.fetch_add((wall_seconds * 1e6) as u64,
+                               Ordering::Relaxed);
+    }
+
+    pub fn job_failed(&self) {
+        self.failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn observe_queue_depth(&self, depth: usize) {
+        self.max_queue_depth.fetch_max(depth, Ordering::Relaxed);
+    }
+
+    pub fn submitted(&self) -> u64 {
+        self.submitted.load(Ordering::Relaxed)
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.completed.load(Ordering::Relaxed)
+    }
+
+    pub fn failed(&self) -> u64 {
+        self.failed.load(Ordering::Relaxed)
+    }
+
+    pub fn busy_seconds(&self) -> f64 {
+        self.busy_us.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    pub fn max_queue_depth(&self) -> usize {
+        self.max_queue_depth.load(Ordering::Relaxed)
+    }
+
+    /// Human summary line.
+    pub fn summary(&self) -> String {
+        format!("jobs: {} submitted, {} completed, {} failed; busy {:.3}s; \
+                 peak queue depth {}",
+                self.submitted(), self.completed(), self.failed(),
+                self.busy_seconds(), self.max_queue_depth())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.job_submitted();
+        m.job_submitted();
+        m.job_completed(0.5);
+        m.job_failed();
+        m.observe_queue_depth(3);
+        m.observe_queue_depth(1);
+        assert_eq!(m.submitted(), 2);
+        assert_eq!(m.completed(), 1);
+        assert_eq!(m.failed(), 1);
+        assert!((m.busy_seconds() - 0.5).abs() < 1e-3);
+        assert_eq!(m.max_queue_depth(), 3);
+        assert!(m.summary().contains("2 submitted"));
+    }
+
+    #[test]
+    fn concurrent_updates() {
+        let m = std::sync::Arc::new(Metrics::new());
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let m = std::sync::Arc::clone(&m);
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        m.job_submitted();
+                        m.job_completed(0.001);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(m.submitted(), 8000);
+        assert_eq!(m.completed(), 8000);
+    }
+}

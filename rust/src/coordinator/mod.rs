@@ -1,0 +1,23 @@
+//! The coordinator — Layer 3's runtime core.
+//!
+//! The tuning campaign is a job-scheduling problem: thousands of model
+//! evaluations (and a handful of native PJRT runs) fanned out over
+//! worker threads, with bounded queues for backpressure, cancellation,
+//! and metrics. tokio is not available in this image; the event loop is
+//! built from `std::sync` primitives (DESIGN.md "Environment deviation").
+//!
+//! * [`queue`] — bounded MPMC queue with blocking push (backpressure)
+//!   and close semantics.
+//! * [`jobs`] — job/result types for sweep evaluation.
+//! * [`scheduler`] — worker pool + dispatch + result collection.
+//! * [`metrics`] — counters every component reports into.
+
+pub mod jobs;
+pub mod metrics;
+pub mod queue;
+pub mod scheduler;
+
+pub use jobs::{JobResult, JobSpec};
+pub use metrics::Metrics;
+pub use queue::BoundedQueue;
+pub use scheduler::Scheduler;

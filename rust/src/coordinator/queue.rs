@@ -1,0 +1,215 @@
+//! Bounded MPMC queue with blocking push — the backpressure primitive.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+    /// high-water mark, for metrics
+    max_depth: usize,
+}
+
+/// A bounded queue: `push` blocks while full (backpressure), `pop`
+/// blocks while empty, `close` wakes everyone. Multi-producer,
+/// multi-consumer.
+pub struct BoundedQueue<T> {
+    inner: Mutex<Inner<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    capacity: usize,
+}
+
+/// Push outcome when the queue is closed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Closed;
+
+impl<T> BoundedQueue<T> {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "capacity must be positive");
+        Self {
+            inner: Mutex::new(Inner { items: VecDeque::new(),
+                                      closed: false, max_depth: 0 }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            capacity,
+        }
+    }
+
+    /// Blocking push; returns Err(Closed) if the queue was closed.
+    pub fn push(&self, item: T) -> Result<(), Closed> {
+        let mut g = self.inner.lock().expect("queue poisoned");
+        loop {
+            if g.closed {
+                return Err(Closed);
+            }
+            if g.items.len() < self.capacity {
+                g.items.push_back(item);
+                let depth = g.items.len();
+                g.max_depth = g.max_depth.max(depth);
+                drop(g);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            g = self.not_full.wait(g).expect("queue poisoned");
+        }
+    }
+
+    /// Blocking pop; returns None when the queue is closed AND drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().expect("queue poisoned");
+        loop {
+            if let Some(item) = g.items.pop_front() {
+                drop(g);
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).expect("queue poisoned");
+        }
+    }
+
+    /// Non-blocking pop.
+    pub fn try_pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().expect("queue poisoned");
+        let item = g.items.pop_front();
+        if item.is_some() {
+            self.not_full.notify_one();
+        }
+        item
+    }
+
+    /// Close: producers get Err, consumers drain then get None.
+    pub fn close(&self) {
+        let mut g = self.inner.lock().expect("queue poisoned");
+        g.closed = true;
+        drop(g);
+        self.not_full.notify_all();
+        self.not_empty.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("queue poisoned").items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn max_depth(&self) -> usize {
+        self.inner.lock().expect("queue poisoned").max_depth
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_order() {
+        let q = BoundedQueue::new(8);
+        for i in 0..5 {
+            q.push(i).unwrap();
+        }
+        for i in 0..5 {
+            assert_eq!(q.pop(), Some(i));
+        }
+    }
+
+    #[test]
+    fn backpressure_blocks_producer() {
+        let q = Arc::new(BoundedQueue::new(2));
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        let q2 = Arc::clone(&q);
+        let producer = std::thread::spawn(move || {
+            q2.push(3).unwrap(); // must block until a pop
+            std::time::Instant::now()
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        let before_pop = std::time::Instant::now();
+        assert_eq!(q.pop(), Some(1));
+        let unblocked_at = producer.join().unwrap();
+        assert!(unblocked_at >= before_pop,
+                "producer must only proceed after the pop");
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let q = BoundedQueue::new(4);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        q.close();
+        assert_eq!(q.push(3), Err(Closed));
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn close_wakes_blocked_consumer() {
+        let q = Arc::new(BoundedQueue::<i32>::new(2));
+        let q2 = Arc::clone(&q);
+        let consumer = std::thread::spawn(move || q2.pop());
+        std::thread::sleep(Duration::from_millis(30));
+        q.close();
+        assert_eq!(consumer.join().unwrap(), None);
+    }
+
+    #[test]
+    fn mpmc_stress_no_loss() {
+        let q = Arc::new(BoundedQueue::new(4));
+        let mut handles = Vec::new();
+        for p in 0..4u64 {
+            let q = Arc::clone(&q);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..250u64 {
+                    q.push(p * 1000 + i).unwrap();
+                }
+            }));
+        }
+        let mut consumers = Vec::new();
+        for _ in 0..3 {
+            let q = Arc::clone(&q);
+            consumers.push(std::thread::spawn(move || {
+                let mut got = Vec::new();
+                while let Some(v) = q.pop() {
+                    got.push(v);
+                }
+                got
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        q.close();
+        let mut all: Vec<u64> = consumers
+            .into_iter()
+            .flat_map(|c| c.join().unwrap())
+            .collect();
+        all.sort_unstable();
+        assert_eq!(all.len(), 1000);
+        all.dedup();
+        assert_eq!(all.len(), 1000, "duplicates observed");
+        assert!(q.max_depth() <= 4);
+    }
+
+    #[test]
+    fn try_pop_nonblocking() {
+        let q = BoundedQueue::new(2);
+        assert_eq!(q.try_pop(), None);
+        q.push(9).unwrap();
+        assert_eq!(q.try_pop(), Some(9));
+    }
+
+    #[test]
+    #[should_panic(expected = "capacity must be positive")]
+    fn zero_capacity_rejected() {
+        BoundedQueue::<i32>::new(0);
+    }
+}

@@ -1,0 +1,204 @@
+//! The scheduler: a worker pool draining a bounded job queue, with
+//! per-architecture machine-model instances, cancellation and metrics.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::arch::ArchId;
+use crate::sim::{Machine, TuningPoint};
+use crate::tuner::SweepRecord;
+
+use super::jobs::{JobResult, JobSpec};
+use super::metrics::Metrics;
+use super::queue::BoundedQueue;
+
+/// Shared machine-model registry: one memoised instance per arch.
+#[derive(Default)]
+pub struct MachinePark {
+    machines: Mutex<HashMap<ArchId, Arc<Machine>>>,
+}
+
+impl MachinePark {
+    pub fn get(&self, arch: ArchId) -> Arc<Machine> {
+        let mut g = self.machines.lock().expect("park poisoned");
+        Arc::clone(g.entry(arch)
+                   .or_insert_with(|| Arc::new(Machine::for_arch(arch))))
+    }
+}
+
+/// The campaign scheduler.
+pub struct Scheduler {
+    queue: Arc<BoundedQueue<(JobSpec, Sender<JobResult>)>>,
+    workers: Vec<JoinHandle<()>>,
+    pub metrics: Arc<Metrics>,
+    cancel: Arc<AtomicBool>,
+    park: Arc<MachinePark>,
+}
+
+impl Scheduler {
+    /// Spawn `workers` workers over a queue of `queue_cap` slots.
+    pub fn new(workers: usize, queue_cap: usize) -> Self {
+        let queue: Arc<BoundedQueue<(JobSpec, Sender<JobResult>)>> =
+            Arc::new(BoundedQueue::new(queue_cap.max(1)));
+        let metrics = Arc::new(Metrics::new());
+        let cancel = Arc::new(AtomicBool::new(false));
+        let park = Arc::new(MachinePark::default());
+        let handles = (0..workers.max(1))
+            .map(|widx| {
+                let queue = Arc::clone(&queue);
+                let metrics = Arc::clone(&metrics);
+                let cancel = Arc::clone(&cancel);
+                let park = Arc::clone(&park);
+                std::thread::Builder::new()
+                    .name(format!("alpaka-sched-{widx}"))
+                    .spawn(move || {
+                        worker_loop(widx, &queue, &metrics, &cancel, &park)
+                    })
+                    .expect("spawn scheduler worker")
+            })
+            .collect();
+        Self { queue, workers: handles, metrics, cancel, park }
+    }
+
+    /// Access the machine park (e.g. to pre-warm trace caches).
+    pub fn park(&self) -> &MachinePark {
+        &self.park
+    }
+
+    /// Request cancellation: queued jobs are drained without evaluation.
+    pub fn cancel(&self) {
+        self.cancel.store(true, Ordering::SeqCst);
+    }
+
+    pub fn cancelled(&self) -> bool {
+        self.cancel.load(Ordering::SeqCst)
+    }
+
+    /// Evaluate a batch of points; blocks until all results are in and
+    /// returns them ordered by submission index. Cancelled jobs are
+    /// omitted.
+    pub fn run_batch(&self, points: Vec<TuningPoint>) -> Vec<JobResult> {
+        let (tx, rx) = channel::<JobResult>();
+        let n = points.len();
+        for (i, point) in points.into_iter().enumerate() {
+            let spec = JobSpec { id: i as u64, point };
+            self.metrics.job_submitted();
+            self.metrics.observe_queue_depth(self.queue.len() + 1);
+            if self.queue.push((spec, tx.clone())).is_err() {
+                break; // shut down
+            }
+        }
+        drop(tx);
+        let mut out: Vec<JobResult> = rx.into_iter().collect();
+        out.sort_by_key(|r| r.id);
+        debug_assert!(out.len() <= n);
+        out
+    }
+}
+
+fn worker_loop(widx: usize,
+               queue: &BoundedQueue<(JobSpec, Sender<JobResult>)>,
+               metrics: &Metrics, cancel: &AtomicBool,
+               park: &MachinePark) {
+    while let Some((spec, tx)) = queue.pop() {
+        if cancel.load(Ordering::SeqCst) {
+            metrics.job_failed(); // cancelled counts as not-completed
+            continue;
+        }
+        let t0 = Instant::now();
+        let machine = park.get(spec.point.arch);
+        let pred = machine.predict(&spec.point);
+        let wall = t0.elapsed().as_secs_f64();
+        metrics.job_completed(wall);
+        let _ = tx.send(JobResult {
+            id: spec.id,
+            record: SweepRecord::new(spec.point, &pred),
+            worker: widx,
+            wall,
+        });
+    }
+}
+
+impl Drop for Scheduler {
+    fn drop(&mut self) {
+        self.queue.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::CompilerId;
+    use crate::gemm::Precision;
+    use crate::tuner::TuningSpace;
+
+    fn points(n: u64) -> Vec<TuningPoint> {
+        TuningSpace::paper(ArchId::Knl, CompilerId::Intel,
+                           Precision::F64, n)
+            .points()
+    }
+
+    #[test]
+    fn batch_results_ordered_and_complete() {
+        let sched = Scheduler::new(4, 4);
+        let pts = points(2048);
+        let n = pts.len();
+        let results = sched.run_batch(pts.clone());
+        assert_eq!(results.len(), n);
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+            assert_eq!(r.record.point, pts[i]);
+            assert!(r.record.gflops > 0.0);
+        }
+        assert_eq!(sched.metrics.completed(), n as u64);
+        assert_eq!(sched.metrics.failed(), 0);
+    }
+
+    #[test]
+    fn small_queue_forces_backpressure_but_loses_nothing() {
+        let sched = Scheduler::new(2, 1);
+        let pts = points(1024);
+        let results = sched.run_batch(pts.clone());
+        assert_eq!(results.len(), pts.len());
+        assert!(sched.metrics.max_queue_depth() <= 2);
+    }
+
+    #[test]
+    fn mixed_arch_batch() {
+        let sched = Scheduler::new(4, 8);
+        let mut pts = points(1024);
+        pts.push(TuningPoint::gpu(ArchId::P100Nvlink, Precision::F32,
+                                  1024, 4));
+        pts.push(TuningPoint::gpu(ArchId::K80, Precision::F64, 1024, 2));
+        let results = sched.run_batch(pts.clone());
+        assert_eq!(results.len(), pts.len());
+    }
+
+    #[test]
+    fn cancellation_stops_evaluation() {
+        let sched = Scheduler::new(1, 2);
+        sched.cancel();
+        let results = sched.run_batch(points(1024));
+        assert!(results.is_empty());
+        assert!(sched.metrics.failed() > 0);
+    }
+
+    #[test]
+    fn scheduler_agrees_with_direct_predict() {
+        let sched = Scheduler::new(3, 4);
+        let pts = points(2048);
+        let results = sched.run_batch(pts.clone());
+        let m = Machine::for_arch(ArchId::Knl);
+        for r in &results {
+            let direct = m.predict(&r.record.point);
+            assert!((direct.gflops - r.record.gflops).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,135 @@
+//! Paper equations 2–7 — the analytic backbone every other module leans
+//! on. Each function cites its equation.
+
+/// Eq. 2 — total floating point operations of the quadratic GEMM:
+/// `O(N) = 3N² + 2N³` (the 3N² covers the α/β scaling and addition).
+pub fn flops(n: u64) -> u128 {
+    let n = n as u128;
+    3 * n * n + 2 * n * n * n
+}
+
+/// Eq. 4 — achieved performance in GFLOP/s from a runtime in seconds.
+pub fn gflops(n: u64, seconds: f64) -> f64 {
+    assert!(seconds > 0.0, "non-positive runtime");
+    flops(n) as f64 / seconds * 1e-9
+}
+
+/// Eq. 5 — cache working set of one tile pair: `K(S,T) = 2T²S` bytes.
+pub fn cache_req_bytes(elem_bytes: u64, t: u64) -> u64 {
+    2 * t * t * elem_bytes
+}
+
+/// Eq. 6 — total memory operations (element loads/stores) of the tiled
+/// algorithm: `M(N,T) = N²(2N/T + 1)`.
+pub fn mem_ops(n: u64, t: u64) -> u128 {
+    assert!(t > 0 && n % t == 0, "T must divide N");
+    let (n, t) = (n as u128, t as u128);
+    n * n * (2 * n / t + 1)
+}
+
+/// Eq. 7 — compute-to-memory-operation ratio:
+/// `R(N,T) = 2NT / (2N + T)`, with `lim_{N→∞} R = T`.
+pub fn compute_mem_ratio(n: u64, t: u64) -> f64 {
+    let (n, t) = (n as f64, t as f64);
+    2.0 * n * t / (2.0 * n + t)
+}
+
+/// Eq. 3 — number of blocks per grid dimension: `B(e,t) = N/(t·e)`.
+pub fn blocks_per_dim(n: u64, threads: u64, elems: u64) -> u64 {
+    assert!(threads * elems > 0 && n % (threads * elems) == 0,
+            "t*e must divide N");
+    n / (threads * elems)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{self, assert_prop};
+
+    #[test]
+    fn eq2_known_values() {
+        assert_eq!(flops(1), 5);
+        assert_eq!(flops(1024), 3 * 1024 * 1024 + 2 * 1024u128.pow(3));
+        // dominant term check at the paper's tuning size
+        let n = 10240u64;
+        let f = flops(n);
+        assert!((f as f64 / (2.0 * (n as f64).powi(3)) - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn eq4_gflops() {
+        // 2e9+ flops in 1s ≈ 2+ GFLOP/s
+        let g = gflops(1000, 1.0);
+        assert!((g - (2e9 + 3e6) / 1e9).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-positive runtime")]
+    fn eq4_rejects_zero_time() {
+        gflops(10, 0.0);
+    }
+
+    #[test]
+    fn eq5_table4_values() {
+        // Table 4 rows: GPU T=4 SP -> 128 B; T=4 DP -> 256 B;
+        // KNL T=64 DP -> 64 KB; Power8 T=512 DP -> 4 MB.
+        assert_eq!(cache_req_bytes(4, 4), 128);
+        assert_eq!(cache_req_bytes(8, 4), 256);
+        assert_eq!(cache_req_bytes(8, 64), 64 * 1024);
+        assert_eq!(cache_req_bytes(8, 512), 4 * 1024 * 1024);
+    }
+
+    #[test]
+    fn eq6_closed_form() {
+        // M(N,T) = 2N³/T + N² in its factored form
+        let (n, t) = (1024u64, 16u64);
+        let m = mem_ops(n, t);
+        let expect = 2 * (n as u128).pow(3) / t as u128 + (n as u128).pow(2);
+        assert_eq!(m, expect);
+    }
+
+    #[test]
+    fn eq7_limit_is_t() {
+        // R(N,T) -> T as N -> inf
+        let r = compute_mem_ratio(1 << 30, 64);
+        assert!((r - 64.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn eq7_equals_flops_over_memops() {
+        // R = O(N)/M(N,T) for the dominant 2N³ term (paper derivation).
+        let (n, t) = (4096u64, 128u64);
+        let r = compute_mem_ratio(n, t);
+        let direct = (2.0 * (n as f64).powi(3))
+            / ((2.0 * (n as f64).powi(3) / t as f64)
+               + (n as f64).powi(2));
+        assert!((r - direct).abs() / direct < 1e-12);
+    }
+
+    #[test]
+    fn eq3_blocks() {
+        assert_eq!(blocks_per_dim(10240, 16, 4), 160);
+        assert_eq!(blocks_per_dim(1024, 1, 256), 4);
+    }
+
+    #[test]
+    fn properties() {
+        propcheck::check(300, |g| {
+            let t = g.pow2_in(2, 512) as u64;
+            let n = t * g.usize_in(1, 64) as u64;
+            // R < min(2N, T): both caps from Eq. 7
+            let r = compute_mem_ratio(n, t);
+            assert_prop(r < (2 * n) as f64 && r < t as f64 + 1e-9,
+                        "R bounded by 2N and T");
+            // R monotone in T for fixed N
+            if t > 2 {
+                assert_prop(compute_mem_ratio(n, t / 2) < r,
+                            "R monotone in T");
+            }
+            // Eq. 6 consistency: flops/mem_ops ≈ R up to the 3N² term
+            let ratio = flops(n) as f64 / mem_ops(n, t) as f64;
+            assert_prop((ratio - r).abs() / r < 0.01 + 3.0 / n as f64,
+                        "O/M ≈ R");
+        });
+    }
+}

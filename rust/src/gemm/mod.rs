@@ -1,0 +1,12 @@
+//! The GEMM workload algebra — paper §2 equations and the tuning-point
+//! vocabulary shared by the simulator, tuner and runtime.
+
+pub mod metrics;
+pub mod tiling;
+pub mod verify;
+pub mod workload;
+
+pub use metrics::{cache_req_bytes, compute_mem_ratio, flops, gflops,
+                  mem_ops};
+pub use tiling::TilingPlan;
+pub use workload::{GemmWorkload, Precision};

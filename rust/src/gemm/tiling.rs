@@ -1,0 +1,108 @@
+//! Tiling plan: how one C tile is produced (paper Fig. 2), independent of
+//! which backend executes it. The cache simulator replays exactly this
+//! plan's access stream; the native runtime executes its Pallas twin.
+
+use super::workload::Precision;
+
+/// The loop structure of one block's work in the tiled GEMM.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TilingPlan {
+    /// Matrix size N (square).
+    pub n: u64,
+    /// Tile size T (square tiles).
+    pub t: u64,
+    pub precision: Precision,
+}
+
+impl TilingPlan {
+    pub fn new(n: u64, t: u64, precision: Precision) -> Self {
+        assert!(t > 0 && n % t == 0, "T={t} must divide N={n}");
+        Self { n, t, precision }
+    }
+
+    /// Tiles per matrix dimension (`N_blocks` in the paper).
+    pub fn tiles_per_dim(&self) -> u64 {
+        self.n / self.t
+    }
+
+    /// Total C tiles == Alpaka blocks in the grid (2-D indexing).
+    pub fn total_blocks(&self) -> u64 {
+        self.tiles_per_dim() * self.tiles_per_dim()
+    }
+
+    /// A/B tile pairs consumed per C tile (the k-loop trip count).
+    pub fn k_steps(&self) -> u64 {
+        self.tiles_per_dim()
+    }
+
+    /// Eq. 5 working set of the A+B tile pair.
+    pub fn tile_pair_bytes(&self) -> u64 {
+        super::metrics::cache_req_bytes(self.precision.size_bytes(), self.t)
+    }
+
+    /// Working set including the thread-local C tile (acc).
+    pub fn working_set_bytes(&self) -> u64 {
+        self.tile_pair_bytes() + self.t * self.t
+            * self.precision.size_bytes()
+    }
+
+    /// Elements per cache line for a given line size.
+    pub fn elems_per_line(&self, line_bytes: u64) -> u64 {
+        (line_bytes / self.precision.size_bytes()).max(1)
+    }
+
+    /// FLOPs to produce one C tile (dominant 2T²N multiply-add term plus
+    /// the α·acc + β·C epilogue).
+    pub fn flops_per_block(&self) -> u128 {
+        let (t, n) = (self.t as u128, self.n as u128);
+        2 * t * t * n + 3 * t * t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::metrics;
+    use crate::util::propcheck::{self, assert_prop};
+
+    #[test]
+    fn block_counts() {
+        let p = TilingPlan::new(10240, 64, Precision::F64);
+        assert_eq!(p.tiles_per_dim(), 160);
+        assert_eq!(p.total_blocks(), 160 * 160);
+        assert_eq!(p.k_steps(), 160);
+    }
+
+    #[test]
+    #[should_panic(expected = "must divide")]
+    fn divisibility_enforced() {
+        TilingPlan::new(100, 16, Precision::F32);
+    }
+
+    #[test]
+    fn per_block_times_blocks_equals_total() {
+        propcheck::check(200, |g| {
+            let t = g.pow2_in(2, 256) as u64;
+            let n = t * g.usize_in(1, 32) as u64;
+            let p = TilingPlan::new(n, t, Precision::F32);
+            let total = p.flops_per_block() * p.total_blocks() as u128;
+            assert_prop(total == metrics::flops(n),
+                        "block flops sum to Eq. 2");
+        });
+    }
+
+    #[test]
+    fn working_set_is_three_tiles() {
+        let p = TilingPlan::new(512, 64, Precision::F64);
+        assert_eq!(p.working_set_bytes(), 3 * 64 * 64 * 8);
+        assert_eq!(p.tile_pair_bytes(), 2 * 64 * 64 * 8);
+    }
+
+    #[test]
+    fn elems_per_line() {
+        let p = TilingPlan::new(512, 64, Precision::F64);
+        assert_eq!(p.elems_per_line(64), 8);
+        let p32 = TilingPlan::new(512, 64, Precision::F32);
+        assert_eq!(p32.elems_per_line(64), 16);
+    }
+}

@@ -1,0 +1,183 @@
+//! Host-side GEMM reference + digest verification.
+//!
+//! `gemm_f64`/`gemm_f32` are straightforward reference implementations
+//! used to cross-check PJRT outputs in integration tests (third oracle,
+//! independent of both jnp and the Pallas kernel). `Digest` mirrors the
+//! statistics `python/compile/aot.py` records in the manifest.
+
+use crate::util::stats::relative_close;
+
+/// alpha * a @ b + beta * c over row-major f64 buffers.
+pub fn gemm_f64(n: usize, a: &[f64], b: &[f64], c: &[f64], alpha: f64,
+                beta: f64) -> Vec<f64> {
+    assert_eq!(a.len(), n * n);
+    assert_eq!(b.len(), n * n);
+    assert_eq!(c.len(), n * n);
+    let mut out = vec![0.0f64; n * n];
+    // ikj loop order: streams b rows, decent cache behaviour for tests.
+    for i in 0..n {
+        for k in 0..n {
+            let aik = a[i * n + k];
+            let (orow, brow) = (&mut out[i * n..(i + 1) * n],
+                                &b[k * n..(k + 1) * n]);
+            for j in 0..n {
+                orow[j] += aik * brow[j];
+            }
+        }
+    }
+    for i in 0..n * n {
+        out[i] = alpha * out[i] + beta * c[i];
+    }
+    out
+}
+
+/// f32 variant with f32 accumulation (matches the kernel's behaviour).
+pub fn gemm_f32(n: usize, a: &[f32], b: &[f32], c: &[f32], alpha: f32,
+                beta: f32) -> Vec<f32> {
+    assert_eq!(a.len(), n * n);
+    let mut out = vec![0.0f32; n * n];
+    for i in 0..n {
+        for k in 0..n {
+            let aik = a[i * n + k];
+            let (orow, brow) = (&mut out[i * n..(i + 1) * n],
+                                &b[k * n..(k + 1) * n]);
+            for j in 0..n {
+                orow[j] += aik * brow[j];
+            }
+        }
+    }
+    for i in 0..n * n {
+        out[i] = alpha * out[i] + beta * c[i];
+    }
+    out
+}
+
+/// Output digest, mirroring `aot.digest` on the python side.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Digest {
+    pub shape: Vec<usize>,
+    pub sum: f64,
+    pub abs_sum: f64,
+    pub samples: Vec<(usize, f64)>,
+}
+
+impl Digest {
+    /// Compute a digest with `n_samples` evenly spaced sample points
+    /// (same rule as `np.linspace(0, len-1, n).astype(int)`).
+    pub fn of(values: &[f64], shape: &[usize], n_samples: usize) -> Self {
+        let len = values.len();
+        assert!(len > 0 && n_samples >= 2);
+        let samples = (0..n_samples)
+            .map(|i| {
+                // linspace(0, len-1, n)[i] truncated toward zero
+                let pos = (i as f64) * ((len - 1) as f64)
+                    / ((n_samples - 1) as f64);
+                let idx = pos as usize;
+                (idx, values[idx])
+            })
+            .collect();
+        Digest {
+            shape: shape.to_vec(),
+            sum: values.iter().sum(),
+            abs_sum: values.iter().map(|v| v.abs()).sum(),
+            samples,
+        }
+    }
+
+    /// Compare against a manifest digest within `rtol` (absolute values
+    /// can legitimately differ in the last bits: XLA reduction order).
+    pub fn matches(&self, other: &Digest, rtol: f64) -> Result<(), String> {
+        if self.shape != other.shape {
+            return Err(format!("shape {:?} != {:?}", self.shape,
+                               other.shape));
+        }
+        // sums compared relative to abs_sum: the signed sum of ±uniform
+        // values is near zero, so its own magnitude is a bad yardstick.
+        let scale = self.abs_sum.max(other.abs_sum).max(1e-30);
+        if (self.sum - other.sum).abs() > rtol * scale {
+            return Err(format!("sum {} != {} (scale {scale})", self.sum,
+                               other.sum));
+        }
+        if !relative_close(self.abs_sum, other.abs_sum, rtol) {
+            return Err(format!("abs_sum {} != {}", self.abs_sum,
+                               other.abs_sum));
+        }
+        for ((i, v), (j, w)) in self.samples.iter().zip(&other.samples) {
+            if i != j {
+                return Err(format!("sample index {i} != {j}"));
+            }
+            if (v - w).abs() > rtol * v.abs().max(w.abs()).max(1.0) {
+                return Err(format!("sample[{i}] {v} != {w}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemm_identity() {
+        // a = I, alpha=1, beta=0 -> out == b
+        let n = 4;
+        let mut a = vec![0.0; n * n];
+        for i in 0..n {
+            a[i * n + i] = 1.0;
+        }
+        let b: Vec<f64> = (0..n * n).map(|i| i as f64).collect();
+        let c = vec![7.0; n * n];
+        let out = gemm_f64(n, &a, &b, &c, 1.0, 0.0);
+        assert_eq!(out, b);
+    }
+
+    #[test]
+    fn gemm_alpha_beta() {
+        let n = 2;
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let b = vec![1.0, 1.0, 1.0, 1.0];
+        let c = vec![10.0, 10.0, 10.0, 10.0];
+        // a@b = [[3,3],[7,7]]; 2*ab - c = [[-4,-4],[4,4]]
+        let out = gemm_f64(n, &a, &b, &c, 2.0, -1.0);
+        assert_eq!(out, vec![-4.0, -4.0, 4.0, 4.0]);
+    }
+
+    #[test]
+    fn f32_matches_f64_loosely() {
+        let n = 8;
+        let a64 = crate::util::prng::matrix_f64(1, n, n);
+        let b64 = crate::util::prng::matrix_f64(2, n, n);
+        let c64 = crate::util::prng::matrix_f64(3, n, n);
+        let a32: Vec<f32> = a64.iter().map(|v| *v as f32).collect();
+        let b32: Vec<f32> = b64.iter().map(|v| *v as f32).collect();
+        let c32: Vec<f32> = c64.iter().map(|v| *v as f32).collect();
+        let o64 = gemm_f64(n, &a64, &b64, &c64, 1.5, 0.5);
+        let o32 = gemm_f32(n, &a32, &b32, &c32, 1.5, 0.5);
+        for (x, y) in o64.iter().zip(&o32) {
+            assert!((x - *y as f64).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn digest_roundtrip() {
+        let vals: Vec<f64> = (0..12).map(|i| i as f64).collect();
+        let d = Digest::of(&vals, &[3, 4], 4);
+        assert_eq!(d.sum, 66.0);
+        assert_eq!(d.samples[0], (0, 0.0));
+        assert_eq!(d.samples[3], (11, 11.0));
+        assert!(d.matches(&d, 1e-12).is_ok());
+    }
+
+    #[test]
+    fn digest_detects_mismatch() {
+        let vals: Vec<f64> = (0..12).map(|i| i as f64).collect();
+        let d = Digest::of(&vals, &[3, 4], 4);
+        let mut other = d.clone();
+        other.sum += 5.0;
+        assert!(d.matches(&other, 1e-6).is_err());
+        let mut shp = d.clone();
+        shp.shape = vec![4, 3];
+        assert!(d.matches(&shp, 1e-6).is_err());
+    }
+}

@@ -1,0 +1,126 @@
+//! Workload definition: the paper's quadratic GEMM `C = α·A·B + β·C`.
+
+use std::fmt;
+
+/// Floating point precision (paper: single / double).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Precision {
+    F32,
+    F64,
+}
+
+impl Precision {
+    /// Size in bytes (`S` in paper Eq. 5).
+    pub fn size_bytes(self) -> u64 {
+        match self {
+            Precision::F32 => 4,
+            Precision::F64 => 8,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Precision::F32 => "single",
+            Precision::F64 => "double",
+        }
+    }
+
+    pub fn dtype(self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::F64 => "f64",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "f32" | "single" | "sp" => Some(Precision::F32),
+            "f64" | "double" | "dp" => Some(Precision::F64),
+            _ => None,
+        }
+    }
+
+    pub const ALL: [Precision; 2] = [Precision::F32, Precision::F64];
+}
+
+impl fmt::Display for Precision {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.dtype())
+    }
+}
+
+/// A quadratic GEMM instance (the paper restricts itself to square
+/// matrices with N rows/cols; rectangular shapes exist only on the
+/// python/artifact side).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GemmWorkload {
+    pub n: u64,
+    pub precision: Precision,
+    pub alpha: f64,
+    pub beta: f64,
+}
+
+impl GemmWorkload {
+    pub fn new(n: u64, precision: Precision) -> Self {
+        Self { n, precision, alpha: 1.0, beta: 1.0 }
+    }
+
+    /// Paper Eq. 2: `O(N) = 3N² + 2N³`.
+    pub fn flops(&self) -> u128 {
+        super::metrics::flops(self.n)
+    }
+
+    /// Bytes of one matrix.
+    pub fn matrix_bytes(&self) -> u64 {
+        self.n * self.n * self.precision.size_bytes()
+    }
+
+    /// Bytes of A+B together — the paper's Haswell L3 argument (§5
+    /// Scaling: N=2048 SP ⇒ A,B use 32 MB and fit one socket's L3).
+    pub fn ab_bytes(&self) -> u64 {
+        2 * self.matrix_bytes()
+    }
+
+    /// The paper's scaling series: N = 1024..=20480, ΔN = 1024.
+    pub fn paper_scaling_series(precision: Precision) -> Vec<GemmWorkload> {
+        (1..=20).map(|k| GemmWorkload::new(1024 * k, precision)).collect()
+    }
+
+    /// The paper's tuning sizes: fixed N=10240 plus control N=7168.
+    pub const TUNING_N: u64 = 10240;
+    pub const CONTROL_N: u64 = 7168;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn precision_sizes() {
+        assert_eq!(Precision::F32.size_bytes(), 4);
+        assert_eq!(Precision::F64.size_bytes(), 8);
+    }
+
+    #[test]
+    fn precision_parse() {
+        assert_eq!(Precision::parse("f32"), Some(Precision::F32));
+        assert_eq!(Precision::parse("double"), Some(Precision::F64));
+        assert_eq!(Precision::parse("dp"), Some(Precision::F64));
+        assert_eq!(Precision::parse("bf16"), None);
+    }
+
+    #[test]
+    fn haswell_l3_argument() {
+        // §5: N=2048 SP -> A,B = 32 MB
+        let w = GemmWorkload::new(2048, Precision::F32);
+        assert_eq!(w.ab_bytes(), 32 * 1024 * 1024);
+    }
+
+    #[test]
+    fn scaling_series_shape() {
+        let s = GemmWorkload::paper_scaling_series(Precision::F64);
+        assert_eq!(s.len(), 20);
+        assert_eq!(s[0].n, 1024);
+        assert_eq!(s[19].n, 20480);
+    }
+}

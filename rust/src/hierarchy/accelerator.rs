@@ -1,0 +1,177 @@
+//! Accelerator backends and their mapping constraints — the paper's §1.2:
+//! CUDA, OpenMP 2 "Blocks" (blocks run in parallel, ONE thread per
+//! block), OpenMP 2 "Threads", sequential, plus our Pallas twin.
+
+use std::fmt;
+
+use super::workdiv::{Dim2, WorkDiv};
+
+/// Backend ("accelerator") kinds. The paper restricts its measurements to
+/// `CudaRt` and `CpuOmp2Blocks` "so that we are able to compare our new
+/// results to our previous work" — the others exist for completeness and
+/// validation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Backend {
+    /// Nvidia CUDA: blocks on SMs, threads are CUDA threads.
+    CudaRt,
+    /// OpenMP 2 over blocks: grid-level parallelism, t = 1 enforced.
+    CpuOmp2Blocks,
+    /// OpenMP 2 over threads inside one block.
+    CpuOmp2Threads,
+    /// Sequential: single block, single thread (t = 1 like Omp2Blocks).
+    CpuSerial,
+    /// Our TPU-shaped twin: Pallas grid cells, lowered interpret=True and
+    /// executed via PJRT on the host (see DESIGN.md §Hardware-Adaptation).
+    PallasTpuInterpret,
+}
+
+/// Why a work division is illegal on a backend.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum BackendError {
+    /// Backend requires exactly one thread per block (paper: "For the
+    /// first one only one thread per block is allowed").
+    SingleThreadOnly { got: u64 },
+    /// CUDA limit on threads per block.
+    TooManyThreads { got: u64, max: u64 },
+    /// Serial backend is a single block.
+    SingleBlockOnly { got: u64 },
+}
+
+impl fmt::Display for BackendError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            BackendError::SingleThreadOnly { got } => write!(
+                f, "backend allows 1 thread/block, got {got}"),
+            BackendError::TooManyThreads { got, max } => write!(
+                f, "{got} threads/block exceeds limit {max}"),
+            BackendError::SingleBlockOnly { got } => write!(
+                f, "serial backend allows 1 block, got {got}"),
+        }
+    }
+}
+
+impl Backend {
+    pub const ALL: [Backend; 5] = [Backend::CudaRt, Backend::CpuOmp2Blocks,
+                                   Backend::CpuOmp2Threads,
+                                   Backend::CpuSerial,
+                                   Backend::PallasTpuInterpret];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Backend::CudaRt => "AccGpuCudaRt",
+            Backend::CpuOmp2Blocks => "AccCpuOmp2Blocks",
+            Backend::CpuOmp2Threads => "AccCpuOmp2Threads",
+            Backend::CpuSerial => "AccCpuSerial",
+            Backend::PallasTpuInterpret => "AccPallasTpu(interpret)",
+        }
+    }
+
+    /// Maximum threads per block the backend supports.
+    pub fn max_threads_per_block(self) -> u64 {
+        match self {
+            Backend::CudaRt => 1024,
+            Backend::CpuOmp2Blocks | Backend::CpuSerial => 1,
+            Backend::CpuOmp2Threads => 4096, // OS threads; soft limit
+            Backend::PallasTpuInterpret => 1, // one program per grid cell
+        }
+    }
+
+    /// Does the backend execute blocks concurrently?
+    pub fn parallel_blocks(self) -> bool {
+        !matches!(self, Backend::CpuSerial | Backend::CpuOmp2Threads)
+    }
+
+    /// Validate a work division against the backend's constraints.
+    pub fn check(self, wd: &WorkDiv) -> Result<(), BackendError> {
+        let t = wd.threads_per_block();
+        match self {
+            Backend::CudaRt => {
+                if t > 1024 {
+                    return Err(BackendError::TooManyThreads {
+                        got: t, max: 1024 });
+                }
+            }
+            Backend::CpuOmp2Blocks | Backend::PallasTpuInterpret => {
+                if t != 1 {
+                    return Err(BackendError::SingleThreadOnly { got: t });
+                }
+            }
+            Backend::CpuOmp2Threads => {
+                if wd.total_blocks() != 1 {
+                    return Err(BackendError::SingleBlockOnly {
+                        got: wd.total_blocks() });
+                }
+            }
+            Backend::CpuSerial => {
+                if t != 1 {
+                    return Err(BackendError::SingleThreadOnly { got: t });
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The canonical GEMM thread shape of the backend (paper: 16x16 for
+    /// GPUs, 1 for OMP2-blocks-likes).
+    pub fn gemm_threads(self) -> Dim2 {
+        match self {
+            Backend::CudaRt => Dim2::square(16),
+            Backend::CpuOmp2Threads => Dim2::square(16),
+            _ => Dim2::square(1),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wd(threads: u64, elems: u64, blocks: u64) -> WorkDiv {
+        WorkDiv::for_square_domain(blocks * threads * elems,
+                                   Dim2::square(threads),
+                                   Dim2::square(elems))
+            .unwrap()
+    }
+
+    #[test]
+    fn omp2blocks_single_thread_rule() {
+        let b = Backend::CpuOmp2Blocks;
+        assert!(b.check(&wd(1, 64, 4)).is_ok());
+        let err = b.check(&wd(2, 32, 4)).unwrap_err();
+        assert!(matches!(err, BackendError::SingleThreadOnly { got: 4 }));
+    }
+
+    #[test]
+    fn cuda_thread_limit() {
+        let b = Backend::CudaRt;
+        assert!(b.check(&wd(16, 4, 10)).is_ok()); // 256 threads
+        assert!(b.check(&wd(32, 1, 2)).is_ok()); // 1024 threads
+        let err = b.check(&wd(64, 1, 1)).unwrap_err(); // 4096
+        assert!(matches!(err, BackendError::TooManyThreads { .. }));
+    }
+
+    #[test]
+    fn serial_is_single_threaded() {
+        assert!(Backend::CpuSerial.check(&wd(1, 8, 8)).is_ok());
+        assert!(Backend::CpuSerial.check(&wd(2, 4, 8)).is_err());
+    }
+
+    #[test]
+    fn omp2threads_single_block() {
+        assert!(Backend::CpuOmp2Threads.check(&wd(16, 4, 1)).is_ok());
+        assert!(Backend::CpuOmp2Threads.check(&wd(16, 4, 2)).is_err());
+    }
+
+    #[test]
+    fn parallel_blocks_flags() {
+        assert!(Backend::CudaRt.parallel_blocks());
+        assert!(Backend::CpuOmp2Blocks.parallel_blocks());
+        assert!(!Backend::CpuSerial.parallel_blocks());
+    }
+
+    #[test]
+    fn labels_match_alpaka_names() {
+        assert_eq!(Backend::CudaRt.label(), "AccGpuCudaRt");
+        assert_eq!(Backend::CpuOmp2Blocks.label(), "AccCpuOmp2Blocks");
+    }
+}

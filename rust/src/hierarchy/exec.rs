@@ -1,0 +1,277 @@
+//! An *executable* redundant-hierarchy backend — the Alpaka programming
+//! model transplanted to rust and actually run.
+//!
+//! The paper's claim is "one kernel source, many backends". The Pallas
+//! kernel demonstrates that for the PJRT path; this module demonstrates
+//! it natively in rust: ONE generic kernel function (generic over the
+//! [`Acc`] trait, like an Alpaka kernel is generic over `TAcc`) executes
+//! unchanged on
+//!
+//! * [`SerialBackend`] — one block after another (AccCpuSerial), and
+//! * [`Omp2BlocksBackend`] — blocks in parallel over a thread pool, one
+//!   thread per block (AccCpuOmp2Blocks),
+//!
+//! with the tile size `T` supplied from *outside* the kernel — the
+//! Listing-1.1 `OptimalVectorSize` trait, in rust.
+//!
+//! This is also the third, structurally independent GEMM implementation
+//! used by the test suite (next to the jnp oracle and the plain-loop
+//! reference in [`crate::gemm::verify`]).
+
+
+
+use super::accelerator::Backend;
+use super::workdiv::Dim2;
+
+/// What a kernel sees of the accelerator — Alpaka's `acc` argument.
+pub trait Acc {
+    /// Index of the current block in the grid (2-D).
+    fn block_idx(&self) -> Dim2;
+    /// Blocks in the grid.
+    fn grid_dim(&self) -> Dim2;
+    /// The backend's identity (for tests / diagnostics).
+    fn backend(&self) -> Backend;
+}
+
+struct AccImpl {
+    block: Dim2,
+    grid: Dim2,
+    backend: Backend,
+}
+
+impl Acc for AccImpl {
+    fn block_idx(&self) -> Dim2 {
+        self.block
+    }
+
+    fn grid_dim(&self) -> Dim2 {
+        self.grid
+    }
+
+    fn backend(&self) -> Backend {
+        self.backend
+    }
+}
+
+/// A backend executes a kernel over a 2-D grid of blocks.
+pub trait HierarchyBackend {
+    fn kind(&self) -> Backend;
+
+    /// Run `kernel(acc)` for every block of the grid. The kernel must be
+    /// safe to run for different blocks concurrently (blocks may not
+    /// synchronize with each other — the Alpaka contract).
+    fn run_grid<F>(&self, grid: Dim2, kernel: F)
+    where
+        F: Fn(&dyn Acc) + Send + Sync;
+}
+
+/// AccCpuSerial: all blocks on the calling thread, in row-major order.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct SerialBackend;
+
+impl HierarchyBackend for SerialBackend {
+    fn kind(&self) -> Backend {
+        Backend::CpuSerial
+    }
+
+    fn run_grid<F>(&self, grid: Dim2, kernel: F)
+    where
+        F: Fn(&dyn Acc) + Send + Sync,
+    {
+        for by in 0..grid.y {
+            for bx in 0..grid.x {
+                kernel(&AccImpl { block: Dim2::new(bx, by), grid,
+                                  backend: Backend::CpuSerial });
+            }
+        }
+    }
+}
+
+/// AccCpuOmp2Blocks: blocks fanned out over scoped OS threads, one
+/// logical thread per block (the paper's CPU backend). Scoped threads
+/// (rather than the long-lived [`ThreadPool`]) let the kernel borrow the
+/// caller's matrices, like an OpenMP parallel-for does.
+pub struct Omp2BlocksBackend {
+    workers: usize,
+}
+
+impl Omp2BlocksBackend {
+    pub fn new(workers: usize) -> Self {
+        Self { workers: workers.max(1) }
+    }
+
+    pub fn host() -> Self {
+        Self::new(std::thread::available_parallelism()
+                  .map(|n| n.get()).unwrap_or(4))
+    }
+}
+
+impl HierarchyBackend for Omp2BlocksBackend {
+    fn kind(&self) -> Backend {
+        Backend::CpuOmp2Blocks
+    }
+
+    fn run_grid<F>(&self, grid: Dim2, kernel: F)
+    where
+        F: Fn(&dyn Acc) + Send + Sync,
+    {
+        let blocks: Vec<Dim2> = (0..grid.y)
+            .flat_map(|by| (0..grid.x).map(move |bx| Dim2::new(bx, by)))
+            .collect();
+        let chunk = blocks.len().div_ceil(self.workers).max(1);
+        let kernel = &kernel;
+        std::thread::scope(|s| {
+            for piece in blocks.chunks(chunk) {
+                s.spawn(move || {
+                    for block in piece {
+                        kernel(&AccImpl {
+                            block: *block,
+                            grid,
+                            backend: Backend::CpuOmp2Blocks,
+                        });
+                    }
+                });
+            }
+        });
+    }
+}
+
+// ---------------------------------------------------------------------
+// THE single-source rust GEMM kernel (paper §2.1, Fig. 2), written once.
+// ---------------------------------------------------------------------
+
+/// Tiled GEMM over the hierarchy: each block computes one T×T tile of C
+/// via the Fig.-2 streaming strategy. `t` enters from outside — the
+/// kernel body never changes across backends or tunings.
+///
+/// Safety/aliasing: each block writes a disjoint C tile; the raw-pointer
+/// write below is the standard disjoint-tile argument (what CUDA and
+/// OpenMP versions of the paper's kernel also rely on).
+pub fn gemm_single_source<B: HierarchyBackend>(
+    backend: &B, n: usize, t: usize, alpha: f64, beta: f64, a: &[f64],
+    b: &[f64], c: &[f64], out: &mut [f64]) {
+    assert!(n % t == 0, "T must divide N (paper's constraint)");
+    assert_eq!(a.len(), n * n);
+    assert_eq!(b.len(), n * n);
+    assert_eq!(c.len(), n * n);
+    assert_eq!(out.len(), n * n);
+    let grid = Dim2::square((n / t) as u64);
+
+    struct SendPtr(*mut f64);
+    unsafe impl Send for SendPtr {}
+    unsafe impl Sync for SendPtr {}
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    let out_ref = &out_ptr;
+
+    backend.run_grid(grid, move |acc| {
+        let Dim2 { x: bx, y: by } = acc.block_idx();
+        let (i0, j0) = (by as usize * t, bx as usize * t);
+        // thread-local C tile (paper: "element local memory")
+        let mut acc_tile = vec![0.0f64; t * t];
+        // k-loop over A/B tile pairs (Fig. 2)
+        for k0 in (0..n).step_by(t) {
+            for i in 0..t {
+                for kk in 0..t {
+                    let aik = a[(i0 + i) * n + k0 + kk];
+                    let brow = &b[(k0 + kk) * n + j0..(k0 + kk) * n + j0
+                                  + t];
+                    let crow = &mut acc_tile[i * t..(i + 1) * t];
+                    // the vectorizable inner loop (Listing 1.2)
+                    for j in 0..t {
+                        crow[j] += aik * brow[j];
+                    }
+                }
+            }
+        }
+        // stream C exactly once
+        for i in 0..t {
+            for j in 0..t {
+                let idx = (i0 + i) * n + j0 + j;
+                // SAFETY: blocks own disjoint (i0, j0) tiles
+                unsafe {
+                    *out_ref.0.add(idx) =
+                        alpha * acc_tile[i * t + j] + beta * c[idx];
+                }
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::verify::gemm_f64;
+    use crate::util::prng;
+
+    fn inputs(n: usize) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+        (prng::matrix_f64(11, n, n), prng::matrix_f64(22, n, n),
+         prng::matrix_f64(33, n, n))
+    }
+
+    #[test]
+    fn serial_matches_reference() {
+        let n = 32;
+        let (a, b, c) = inputs(n);
+        let want = gemm_f64(n, &a, &b, &c, 1.5, -0.5);
+        let mut out = vec![0.0; n * n];
+        gemm_single_source(&SerialBackend, n, 8, 1.5, -0.5, &a, &b, &c,
+                           &mut out);
+        assert_eq!(out, want, "bitwise equal: same loop structure");
+    }
+
+    #[test]
+    fn omp2blocks_matches_serial_bitwise() {
+        // the single-source claim: same kernel, different backend,
+        // identical results
+        let n = 48;
+        let (a, b, c) = inputs(n);
+        let mut serial = vec![0.0; n * n];
+        gemm_single_source(&SerialBackend, n, 16, 2.0, 1.0, &a, &b, &c,
+                           &mut serial);
+        let par = Omp2BlocksBackend::host();
+        let mut parallel = vec![0.0; n * n];
+        gemm_single_source(&par, n, 16, 2.0, 1.0, &a, &b, &c,
+                           &mut parallel);
+        assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn tile_size_is_pure_tuning() {
+        // results invariant under T — the premise of the whole paper
+        let n = 64;
+        let (a, b, c) = inputs(n);
+        let mut reference = vec![0.0; n * n];
+        gemm_single_source(&SerialBackend, n, 64, 1.0, 1.0, &a, &b, &c,
+                           &mut reference);
+        for t in [1, 2, 4, 8, 16, 32] {
+            let mut out = vec![0.0; n * n];
+            gemm_single_source(&SerialBackend, n, t, 1.0, 1.0, &a, &b,
+                               &c, &mut out);
+            for (x, y) in out.iter().zip(&reference) {
+                assert!((x - y).abs() < 1e-9, "T={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn acc_exposes_hierarchy() {
+        let mut seen = Vec::new();
+        let collected = std::sync::Mutex::new(&mut seen);
+        SerialBackend.run_grid(Dim2::new(2, 3), |acc| {
+            assert_eq!(acc.grid_dim(), Dim2::new(2, 3));
+            assert_eq!(acc.backend(), Backend::CpuSerial);
+            collected.lock().unwrap().push(acc.block_idx());
+        });
+        assert_eq!(seen.len(), 6);
+        assert!(seen.contains(&Dim2::new(1, 2)));
+    }
+
+    #[test]
+    #[should_panic(expected = "T must divide N")]
+    fn divisibility_enforced() {
+        let (a, b, c) = inputs(10);
+        let mut out = vec![0.0; 100];
+        gemm_single_source(&SerialBackend, 10, 3, 1.0, 1.0, &a, &b, &c,
+                           &mut out);
+    }
+}

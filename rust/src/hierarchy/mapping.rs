@@ -1,0 +1,165 @@
+//! GEMM → hierarchy mapping per backend — paper Fig. 5.
+//!
+//! The tile size `T` means different things per backend (paper §2.1):
+//! * **GPU (CudaRt)**: a block has 16×16 threads; each thread computes a
+//!   T×T *element* tile, so one block produces a (16T)×(16T) C tile.
+//!   `K(S,T) = 2T²S` is the *per-thread* working set.
+//! * **CPU (CpuOmp2Blocks)**: one thread per block; the block's C tile is
+//!   T×T, entirely in the thread's element layer. `K(S,T)` is the
+//!   per-block (== per-thread) working set checked against caches.
+//! * **PallasTpu**: one program instance per grid cell computes a T×T C
+//!   block; the element layer is the in-kernel reduction split.
+
+use crate::arch::{ArchClass, ArchId};
+
+use super::accelerator::Backend;
+use super::workdiv::{Dim2, WorkDiv, WorkDivError};
+
+/// A concrete mapping of the tiled GEMM onto a backend.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GemmMapping {
+    pub backend: Backend,
+    pub n: u64,
+    pub t: u64,
+    pub workdiv: WorkDiv,
+    /// Side length of the C tile one block produces.
+    pub block_tile: u64,
+    /// Hardware threads per core the OS schedules (CPU backends).
+    pub hw_threads_per_core: u64,
+}
+
+/// Choose the natural backend for an architecture (paper §1.2 restriction:
+/// CUDA for GPUs, OpenMP2-Blocks for CPUs).
+pub fn backend_for(arch: ArchId) -> Backend {
+    match arch.spec().class {
+        ArchClass::Gpu => Backend::CudaRt,
+        ArchClass::Cpu if arch == ArchId::Host => {
+            Backend::PallasTpuInterpret
+        }
+        ArchClass::Cpu => Backend::CpuOmp2Blocks,
+    }
+}
+
+/// Build the Fig.-5 mapping for a (backend, N, T) tuning point.
+pub fn map_gemm(backend: Backend, n: u64, t: u64, hw_threads_per_core: u64)
+                -> Result<GemmMapping, WorkDivError> {
+    let threads = backend.gemm_threads();
+    let (workdiv, block_tile) = match backend {
+        Backend::CudaRt | Backend::CpuOmp2Threads => {
+            // threads 16x16, each thread a TxT element tile
+            let wd = WorkDiv::for_square_domain(n, threads,
+                                                Dim2::square(t))?;
+            (wd, threads.x * t)
+        }
+        Backend::CpuOmp2Blocks | Backend::CpuSerial
+        | Backend::PallasTpuInterpret => {
+            // one thread per block, TxT element tile per block
+            let wd = WorkDiv::for_square_domain(n, Dim2::square(1),
+                                                Dim2::square(t))?;
+            (wd, t)
+        }
+    };
+    backend.check(&workdiv).map_err(|_| WorkDivError::ZeroExtent)?;
+    Ok(GemmMapping { backend, n, t, workdiv, block_tile,
+                     hw_threads_per_core })
+}
+
+impl GemmMapping {
+    /// Total parallel work items at block granularity.
+    pub fn total_blocks(&self) -> u64 {
+        self.workdiv.total_blocks()
+    }
+
+    /// Fig.-5-style textual description for the report engine.
+    pub fn describe(&self) -> String {
+        format!(
+            "{}: grid {} blocks ({} per dim) | {} threads/block | {} \
+             elements/thread | C tile per block {}x{} | {} hw thread(s) \
+             per core",
+            self.backend.label(),
+            self.total_blocks(),
+            self.workdiv.grid_blocks.x,
+            self.workdiv.threads_per_block(),
+            self.workdiv.elems_per_thread(),
+            self.block_tile, self.block_tile,
+            self.hw_threads_per_core)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{self, assert_prop};
+
+    #[test]
+    fn fig5_p100_mapping() {
+        // P100 DP optimum: T=4, 16x16 threads -> block tile 64,
+        // N=10240 -> 160x160 grid.
+        let m = map_gemm(Backend::CudaRt, 10240, 4, 1).unwrap();
+        assert_eq!(m.block_tile, 64);
+        assert_eq!(m.workdiv.grid_blocks, Dim2::square(160));
+        assert_eq!(m.workdiv.threads_per_block(), 256);
+        assert_eq!(m.workdiv.elems_per_thread(), 16);
+    }
+
+    #[test]
+    fn fig5_knl_mapping() {
+        // KNL Intel DP optimum: T=64, OMP2 blocks, h=1.
+        let m = map_gemm(Backend::CpuOmp2Blocks, 10240, 64, 1).unwrap();
+        assert_eq!(m.block_tile, 64);
+        assert_eq!(m.total_blocks(), 160 * 160);
+        assert_eq!(m.workdiv.threads_per_block(), 1);
+        assert_eq!(m.workdiv.elems_per_thread(), 64 * 64);
+    }
+
+    #[test]
+    fn fig5_power8_mapping() {
+        // Power8 XL DP optimum: T=512, h=2.
+        let m = map_gemm(Backend::CpuOmp2Blocks, 10240, 512, 2).unwrap();
+        assert_eq!(m.total_blocks(), 400);
+        assert_eq!(m.hw_threads_per_core, 2);
+    }
+
+    #[test]
+    fn indivisible_rejected() {
+        assert!(map_gemm(Backend::CudaRt, 100, 4, 1).is_err());
+        assert!(map_gemm(Backend::CpuOmp2Blocks, 100, 16, 1).is_err());
+    }
+
+    #[test]
+    fn backend_for_archs() {
+        assert_eq!(backend_for(ArchId::K80), Backend::CudaRt);
+        assert_eq!(backend_for(ArchId::Knl), Backend::CpuOmp2Blocks);
+        assert_eq!(backend_for(ArchId::Host),
+                   Backend::PallasTpuInterpret);
+    }
+
+    #[test]
+    fn describe_mentions_structure() {
+        let m = map_gemm(Backend::CudaRt, 1024, 4, 1).unwrap();
+        let d = m.describe();
+        assert!(d.contains("AccGpuCudaRt"));
+        assert!(d.contains("256 threads/block"));
+        assert!(d.contains("64x64"));
+    }
+
+    #[test]
+    fn coverage_property() {
+        propcheck::check(200, |g| {
+            let backend = *g.choose(&[Backend::CudaRt,
+                                      Backend::CpuOmp2Blocks]);
+            let t = g.pow2_in(1, 64) as u64;
+            let blocks = g.usize_in(1, 32) as u64;
+            let per_block = match backend {
+                Backend::CudaRt => 16 * t,
+                _ => t,
+            };
+            let n = blocks * per_block;
+            let m = map_gemm(backend, n, t, 1).unwrap();
+            // every element of C is produced exactly once
+            assert_prop(
+                m.total_blocks() * m.block_tile * m.block_tile == n * n,
+                "C coverage");
+        });
+    }
+}

@@ -1,0 +1,18 @@
+//! The redundant parallel hierarchy model — paper Fig. 1.
+//!
+//! Alpaka's abstraction: a *grid* of *blocks*, each block a set of
+//! *threads*, each thread iterating over *elements*. Every layer has a
+//! corresponding memory level; the mapping of layers onto hardware is
+//! what a backend ("accelerator") defines, and the mapping parameters are
+//! exactly the paper's tuning knobs.
+
+pub mod accelerator;
+pub mod exec;
+pub mod mapping;
+pub mod workdiv;
+
+pub use accelerator::{Backend, BackendError};
+pub use exec::{gemm_single_source, HierarchyBackend, Omp2BlocksBackend,
+               SerialBackend};
+pub use mapping::{map_gemm, GemmMapping};
+pub use workdiv::{Dim2, WorkDiv};

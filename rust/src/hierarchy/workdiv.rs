@@ -1,0 +1,197 @@
+//! Work division: how many blocks / threads / elements per dimension —
+//! paper Eq. 3, `B(e,t) = N / (t·e)` per grid dimension.
+
+use std::fmt;
+
+/// Two-dimensional extent (the paper uses 2-D indexing for GEMM).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Dim2 {
+    pub x: u64,
+    pub y: u64,
+}
+
+impl Dim2 {
+    pub const fn new(x: u64, y: u64) -> Self {
+        Self { x, y }
+    }
+
+    pub const fn square(v: u64) -> Self {
+        Self { x: v, y: v }
+    }
+
+    pub fn count(self) -> u64 {
+        self.x * self.y
+    }
+}
+
+impl fmt::Display for Dim2 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}x{}", self.x, self.y)
+    }
+}
+
+/// A complete work division for a 2-D index domain of `domain` elements.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkDiv {
+    pub grid_blocks: Dim2,
+    pub block_threads: Dim2,
+    pub thread_elems: Dim2,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WorkDivError {
+    /// blocks*threads*elems != domain in some dimension
+    Coverage { dim: char, produced: u64, domain: u64 },
+    ZeroExtent,
+}
+
+impl fmt::Display for WorkDivError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WorkDivError::Coverage { dim, produced, domain } => write!(
+                f,
+                "work division covers {produced} elements in {dim}, \
+                 domain needs {domain}"),
+            WorkDivError::ZeroExtent => write!(f, "zero extent"),
+        }
+    }
+}
+
+impl WorkDiv {
+    /// Validated construction: the hierarchy must tile the domain exactly
+    /// (the paper's GEMM requires T | N; remainder handling is user code
+    /// in Alpaka and out of scope like in the paper).
+    pub fn new(grid_blocks: Dim2, block_threads: Dim2, thread_elems: Dim2,
+               domain: Dim2) -> Result<Self, WorkDivError> {
+        let wd = Self { grid_blocks, block_threads, thread_elems };
+        wd.validate(domain)?;
+        Ok(wd)
+    }
+
+    pub fn validate(&self, domain: Dim2) -> Result<(), WorkDivError> {
+        for (dim, b, t, e, d) in [
+            ('x', self.grid_blocks.x, self.block_threads.x,
+             self.thread_elems.x, domain.x),
+            ('y', self.grid_blocks.y, self.block_threads.y,
+             self.thread_elems.y, domain.y),
+        ] {
+            if b == 0 || t == 0 || e == 0 {
+                return Err(WorkDivError::ZeroExtent);
+            }
+            let produced = b * t * e;
+            if produced != d {
+                return Err(WorkDivError::Coverage { dim, produced,
+                                                    domain: d });
+            }
+        }
+        Ok(())
+    }
+
+    /// Eq. 3 in each dimension for a square domain: grid blocks from
+    /// threads-per-block and elements-per-thread.
+    pub fn for_square_domain(n: u64, threads: Dim2, elems: Dim2)
+                             -> Result<Self, WorkDivError> {
+        let (tx, ty) = (threads.x * elems.x, threads.y * elems.y);
+        if tx == 0 || ty == 0 {
+            return Err(WorkDivError::ZeroExtent);
+        }
+        if n % tx != 0 || n % ty != 0 {
+            return Err(WorkDivError::Coverage {
+                dim: if n % tx != 0 { 'x' } else { 'y' },
+                produced: if n % tx != 0 { tx } else { ty },
+                domain: n,
+            });
+        }
+        Self::new(Dim2::new(n / tx, n / ty), threads, elems,
+                  Dim2::square(n))
+    }
+
+    pub fn total_blocks(&self) -> u64 {
+        self.grid_blocks.count()
+    }
+
+    pub fn threads_per_block(&self) -> u64 {
+        self.block_threads.count()
+    }
+
+    pub fn elems_per_thread(&self) -> u64 {
+        self.thread_elems.count()
+    }
+
+    /// Elements computed per block (the C tile size of a block).
+    pub fn elems_per_block(&self) -> u64 {
+        self.threads_per_block() * self.elems_per_thread()
+    }
+}
+
+impl fmt::Display for WorkDiv {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "grid {} blocks x {} threads x {} elems",
+               self.grid_blocks, self.block_threads, self.thread_elems)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{self, assert_prop};
+
+    #[test]
+    fn eq3_square() {
+        // paper GPU mapping: N=10240, 16x16 threads, T=4 -> 160 blocks/dim
+        let wd = WorkDiv::for_square_domain(
+            10240, Dim2::square(16), Dim2::square(4)).unwrap();
+        assert_eq!(wd.grid_blocks, Dim2::square(160));
+        assert_eq!(wd.elems_per_block(), 16 * 16 * 16);
+    }
+
+    #[test]
+    fn omp2_constraint_shape() {
+        // OpenMP2 Blocks: one thread per block, tile as elements
+        let wd = WorkDiv::for_square_domain(
+            10240, Dim2::square(1), Dim2::square(64)).unwrap();
+        assert_eq!(wd.grid_blocks, Dim2::square(160));
+        assert_eq!(wd.threads_per_block(), 1);
+    }
+
+    #[test]
+    fn coverage_error() {
+        let err = WorkDiv::for_square_domain(
+            100, Dim2::square(16), Dim2::square(4)).unwrap_err();
+        assert!(matches!(err, WorkDivError::Coverage { .. }));
+        assert!(err.to_string().contains("64"));
+    }
+
+    #[test]
+    fn zero_extent_error() {
+        assert!(matches!(
+            WorkDiv::for_square_domain(64, Dim2::new(0, 1), Dim2::square(1)),
+            Err(WorkDivError::ZeroExtent)));
+    }
+
+    #[test]
+    fn asymmetric_division() {
+        let wd = WorkDiv::new(Dim2::new(4, 2), Dim2::new(8, 16),
+                              Dim2::new(2, 2), Dim2::new(64, 64)).unwrap();
+        assert_eq!(wd.total_blocks(), 8);
+    }
+
+    #[test]
+    fn eq3_property() {
+        propcheck::check(300, |g| {
+            let t = g.pow2_in(1, 32) as u64;
+            let e = g.pow2_in(1, 64) as u64;
+            let blocks = g.usize_in(1, 64) as u64;
+            let n = blocks * t * e;
+            let wd = WorkDiv::for_square_domain(
+                n, Dim2::square(t), Dim2::square(e)).unwrap();
+            // Eq. 3: B(e,t) = N/(t*e)
+            assert_prop(wd.grid_blocks.x == n / (t * e), "Eq. 3");
+            // redundancy invariant: product reconstructs the domain
+            assert_prop(
+                wd.grid_blocks.x * wd.block_threads.x * wd.thread_elems.x
+                    == n,
+                "coverage");
+        });
+    }
+}

@@ -1,0 +1,52 @@
+//! # alpaka-rs — single-source kernel tuning across many-core architectures
+//!
+//! Reproduction of Matthes et al. 2017, *"Tuning and optimization for a
+//! variety of many-core architectures without changing a single line of
+//! implementation code using the Alpaka library"* (DOI
+//! 10.1007/978-3-319-67630-2_36), as the Layer-3 coordinator of a
+//! rust + JAX + Pallas stack.
+//!
+//! The paper tunes ONE C++ GEMM kernel across Nvidia K80/P100, Intel
+//! Haswell/KNL and IBM Power8 purely via parameters outside the kernel
+//! (tile size `T`, hardware threads, elements per thread) and explains the
+//! results from architectural characteristics. This crate rebuilds that
+//! study end to end:
+//!
+//! * [`hierarchy`] — the redundant parallel hierarchy model
+//!   (grid → block → thread → element, paper Fig. 1) and its mapping onto
+//!   accelerator backends (paper Fig. 5).
+//! * [`arch`] — the architecture and compiler registries (paper
+//!   Tables 1–3), peak performance per Eq. 8.
+//! * [`gemm`] — the workload algebra: Eqs. 2–7 (FLOPs, memory operations,
+//!   compute/memory ratio, cache working set) and the measurement
+//!   protocol of §2.
+//! * [`sim`] — the testbed substitute (repro band 0/5: none of the
+//!   paper's hardware exists here): a trace-driven set-associative cache
+//!   simulator, a GPU occupancy model, a memory-system model
+//!   (HBM/MCDRAM/DDR, unified vs device memory) and a roofline-style
+//!   machine model calibrated against the paper's anchor measurements.
+//! * [`tuner`] — the multidimensional parameter sweep of §2.3/§3 plus the
+//!   auto-tuning strategies the paper's outlook calls for.
+//! * [`runtime`] — the PJRT side: loads the AOT-lowered HLO text
+//!   artifacts of the *real* single-source Pallas kernel and executes
+//!   them on the host CPU (the sixth, "native" architecture).
+//! * [`coordinator`] — job scheduling across simulated devices and the
+//!   native runtime: thread-pool workers, bounded queues, metrics.
+//! * [`report`] — regenerates every table and figure of the paper.
+//! * [`cli`], [`util`] — substrates built from scratch for this repo
+//!   (arg parsing, PRNG shared bit-exactly with python, stats, ASCII
+//!   tables, CSV, property testing).
+
+pub mod arch;
+pub mod cli;
+pub mod coordinator;
+pub mod gemm;
+pub mod hierarchy;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod tuner;
+pub mod util;
+
+/// Crate-wide result type (thin wrapper over `anyhow`).
+pub type Result<T> = anyhow::Result<T>;

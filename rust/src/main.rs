@@ -1,0 +1,321 @@
+//! `alpaka-bench` — the leader binary: tuning campaigns on the simulated
+//! testbed, native PJRT runs of the real Pallas kernel, and regeneration
+//! of every paper table/figure.
+
+use std::path::Path;
+
+use alpaka_rs::arch::{compiler, ArchId, CompilerId};
+use alpaka_rs::cli::{Cli, CommandSpec, OptSpec, Parsed};
+use alpaka_rs::coordinator::Scheduler;
+use alpaka_rs::gemm::{GemmWorkload, Precision};
+use alpaka_rs::report;
+use alpaka_rs::runtime::{executor, Manifest, Runtime};
+use alpaka_rs::sim::{Machine, MemMode, TuningPoint};
+use alpaka_rs::tuner::{self, Strategy, TuningSpace};
+use alpaka_rs::util::table::Table;
+use alpaka_rs::Result;
+
+fn cli() -> Cli {
+    Cli {
+        binary: "alpaka-bench",
+        about: "single-source kernel tuning across many-core \
+                architectures (Matthes et al. 2017 reproduction)",
+        commands: vec![
+            CommandSpec {
+                name: "archs",
+                about: "list architectures, compilers and peaks",
+                opts: vec![],
+            },
+            CommandSpec {
+                name: "predict",
+                about: "predict GFLOP/s for one tuning point",
+                opts: vec![
+                    OptSpec::value("arch", Some("knl"), "architecture"),
+                    OptSpec::value("compiler", None,
+                                   "compiler (default: vendor)"),
+                    OptSpec::value("precision", Some("f64"), "f32|f64"),
+                    OptSpec::value("n", Some("10240"), "matrix size"),
+                    OptSpec::value("t", Some("64"), "tile size"),
+                    OptSpec::value("threads", Some("1"),
+                                   "hw threads per core"),
+                    OptSpec::value("memmode", Some("default"),
+                                   "default|flat|ddr|unified"),
+                ],
+            },
+            CommandSpec {
+                name: "tune",
+                about: "run the paper's multidimensional tuning",
+                opts: vec![
+                    OptSpec::value("arch", Some("knl"), "architecture"),
+                    OptSpec::value("compiler", None,
+                                   "compiler (default: vendor)"),
+                    OptSpec::value("precision", Some("f64"), "f32|f64"),
+                    OptSpec::value("n", Some("10240"), "matrix size"),
+                    OptSpec::value("strategy", Some("grid"),
+                                   "grid|random|hillclimb|anneal"),
+                    OptSpec::value("budget", Some("24"),
+                                   "evaluations for auto-tuners"),
+                    OptSpec::value("workers", Some("0"),
+                                   "scheduler workers (0 = cores)"),
+                ],
+            },
+            CommandSpec {
+                name: "repro",
+                about: "regenerate paper tables/figures into --out-dir",
+                opts: vec![
+                    OptSpec::flag("all", "write everything"),
+                    OptSpec::value("out-dir", Some("reports"),
+                                   "output directory"),
+                ],
+            },
+            CommandSpec {
+                name: "native",
+                about: "run the real Pallas-kernel artifacts via PJRT",
+                opts: vec![
+                    OptSpec::value("artifacts-dir", Some("artifacts"),
+                                   "artifact directory"),
+                    OptSpec::value("role", None,
+                                   "filter by role (e.g. tile_sweep)"),
+                    OptSpec::value("id", None, "run one artifact id"),
+                    OptSpec::value("runs", Some("10"),
+                                   "timed runs (paper: 10)"),
+                    OptSpec::flag("verify",
+                                  "digest-verify instead of timing"),
+                ],
+            },
+            CommandSpec {
+                name: "inspect-hlo",
+                about: "show that the abstraction compiles away \
+                        (Listing 1.2 analogue)",
+                opts: vec![
+                    OptSpec::value("artifacts-dir", Some("artifacts"),
+                                   "artifact directory"),
+                    OptSpec::value("id", Some("gemm_n128_t16_e1_f32"),
+                                   "artifact id"),
+                ],
+            },
+            CommandSpec {
+                name: "mappings",
+                about: "print the Fig. 5 hierarchy mappings",
+                opts: vec![],
+            },
+        ],
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cli = cli();
+    let parsed = match cli.parse(argv) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match run(&cli, &parsed) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn parse_combo(p: &Parsed) -> Result<(ArchId, CompilerId, Precision)> {
+    let arch = ArchId::parse(p.get_or("arch", "knl"))
+        .ok_or_else(|| anyhow::anyhow!("unknown arch"))?;
+    let comp = match p.get("compiler") {
+        Some(c) => CompilerId::parse(c)
+            .ok_or_else(|| anyhow::anyhow!("unknown compiler"))?,
+        None => compiler::vendor_compiler(arch),
+    };
+    let prec = Precision::parse(p.get_or("precision", "f64"))
+        .ok_or_else(|| anyhow::anyhow!("unknown precision"))?;
+    Ok((arch, comp, prec))
+}
+
+fn run(cli: &Cli, p: &Parsed) -> Result<()> {
+    match p.command.as_str() {
+        "help" => {
+            println!("{}", cli.help());
+            Ok(())
+        }
+        "archs" => cmd_archs(),
+        "predict" => cmd_predict(p),
+        "tune" => cmd_tune(p),
+        "repro" => cmd_repro(p),
+        "native" => cmd_native(p),
+        "inspect-hlo" => cmd_inspect(p),
+        "mappings" => {
+            println!("{}", report::figures::fig5_mappings());
+            Ok(())
+        }
+        other => anyhow::bail!("unhandled command {other}"),
+    }
+}
+
+fn cmd_archs() -> Result<()> {
+    let mut t = Table::new(vec!["arch", "class", "compilers",
+                                "peak SP GF/s", "peak DP GF/s"])
+        .numeric();
+    for arch in ArchId::PAPER.iter().chain([ArchId::Host].iter()) {
+        let spec = arch.spec();
+        let comps = compiler::valid_compilers(*arch)
+            .iter().map(|c| c.label()).collect::<Vec<_>>().join("/");
+        t.row(vec![
+            arch.label().to_string(),
+            format!("{:?}", spec.class),
+            comps,
+            format!("{:.0}", spec.peak_gflops(Precision::F32)),
+            format!("{:.0}", spec.peak_gflops(Precision::F64)),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_predict(p: &Parsed) -> Result<()> {
+    let (arch, comp, prec) = parse_combo(p)?;
+    let n = p.get_u64("n")?.unwrap_or(GemmWorkload::TUNING_N);
+    let t = p.get_u64("t")?.unwrap_or(64);
+    let h = p.get_u64("threads")?.unwrap_or(1);
+    let mode = MemMode::parse(p.get_or("memmode", "default"))
+        .ok_or_else(|| anyhow::anyhow!("unknown memmode"))?;
+    let machine = Machine::for_arch(arch);
+    let point = TuningPoint { arch, compiler: comp, precision: prec, n,
+                              t, hw_threads: h, memmode: mode,
+                              thread_override: None };
+    let pred = machine.predict(&point);
+    println!("{} {} {} N={n} T={t} h={h} [{}]:", arch.label(),
+             comp.label(), prec.dtype(), mode.label());
+    println!("  {:.1} GFLOP/s ({:.1}% of peak), {:?}-bound, {:.4}s",
+             pred.gflops, 100.0 * pred.relative_peak, pred.bound,
+             pred.seconds);
+    Ok(())
+}
+
+fn cmd_tune(p: &Parsed) -> Result<()> {
+    let (arch, comp, prec) = parse_combo(p)?;
+    let n = p.get_u64("n")?.unwrap_or(GemmWorkload::TUNING_N);
+    let strategy = Strategy::parse(p.get_or("strategy", "grid"))
+        .ok_or_else(|| anyhow::anyhow!("unknown strategy"))?;
+    let budget = p.get_u64("budget")?.unwrap_or(24) as usize;
+    let space = TuningSpace::paper(arch, comp, prec, n);
+    println!("tuning {} {} {} over {} points (strategy: {})",
+             arch.label(), comp.label(), prec.dtype(), space.len(),
+             strategy.label());
+
+    if strategy == Strategy::Grid {
+        // the paper's exhaustive sweep, through the coordinator
+        let workers = p.get_u64("workers")?.unwrap_or(0) as usize;
+        let workers = if workers == 0 {
+            std::thread::available_parallelism().map(|n| n.get())
+                .unwrap_or(4)
+        } else {
+            workers
+        };
+        let sched = Scheduler::new(workers, 64);
+        let results = sched.run_batch(space.points());
+        let mut sweep = tuner::SweepResults::default();
+        for r in results {
+            sweep.push(r.record);
+        }
+        let best = sweep.best()
+            .ok_or_else(|| anyhow::anyhow!("empty sweep"))?;
+        println!("  best: T={} h={} -> {:.1} GFLOP/s ({:.1}% of peak)",
+                 best.point.t, best.point.hw_threads, best.gflops,
+                 100.0 * best.relative_peak);
+        for r in sweep.top_k(5) {
+            println!("    T={:<4} h={} {:>9.1} GF/s  {:?}", r.point.t,
+                     r.point.hw_threads, r.gflops, r.bound);
+        }
+        println!("  {}", sched.metrics.summary());
+    } else {
+        let machine = Machine::for_arch(arch);
+        let out = tuner::tune_with(strategy, &machine, &space, budget,
+                                   0xA1FA);
+        println!("  best: T={} h={} -> {:.1} GFLOP/s after {} evals",
+                 out.best.point.t, out.best.point.hw_threads,
+                 out.best.gflops, out.evals);
+    }
+    Ok(())
+}
+
+fn cmd_repro(p: &Parsed) -> Result<()> {
+    let dir = p.get_or("out-dir", "reports").to_string();
+    let files = report::generate_all(Path::new(&dir))?;
+    println!("wrote {} report files to {dir}/:", files.len());
+    for f in files {
+        println!("  {f}");
+    }
+    Ok(())
+}
+
+fn cmd_native(p: &Parsed) -> Result<()> {
+    let dir = p.get_or("artifacts-dir", "artifacts").to_string();
+    let manifest = Manifest::load(Path::new(&dir))?;
+    let runtime = Runtime::new()?;
+    println!("PJRT platform: {}", runtime.platform());
+    let runs = p.get_u64("runs")?.unwrap_or(10) as usize;
+
+    let metas: Vec<_> = match (p.get("id"), p.get("role")) {
+        (Some(id), _) => vec![manifest.by_id(id)
+            .ok_or_else(|| anyhow::anyhow!("no artifact {id}"))?],
+        (None, Some(role)) => manifest.by_role(role),
+        (None, None) => manifest.artifacts.iter().collect(),
+    };
+    anyhow::ensure!(!metas.is_empty(), "no artifacts selected");
+
+    let verify = p.has_flag("verify");
+    let mut t = Table::new(if verify {
+        vec!["artifact", "status"]
+    } else {
+        vec!["artifact", "best s", "GFLOP/s", "stable(5vs10)"]
+    }).numeric();
+    for meta in metas {
+        let kernel = runtime.load(&manifest, meta)?;
+        if verify {
+            let status = match executor::verify_kernel(&kernel, 1e-3) {
+                Ok(()) => "ok".to_string(),
+                Err(e) => format!("FAIL: {e}"),
+            };
+            t.row(vec![meta.id.clone(), status]);
+        } else {
+            let m = executor::measure_kernel(&kernel, 2, runs)?;
+            t.row(vec![
+                meta.id.clone(),
+                format!("{:.5}", m.measurement.best()),
+                m.gflops.map(|g| format!("{g:.2}"))
+                    .unwrap_or_else(|| "-".into()),
+                format!("{}", m.measurement.stable(0.05)),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_inspect(p: &Parsed) -> Result<()> {
+    let dir = p.get_or("artifacts-dir", "artifacts").to_string();
+    let manifest = Manifest::load(Path::new(&dir))?;
+    let id = p.get_or("id", "gemm_n128_t16_e1_f32");
+    let meta = manifest.by_id(id)
+        .ok_or_else(|| anyhow::anyhow!("no artifact {id}"))?;
+    let hlo = std::fs::read_to_string(manifest.hlo_path(meta))?;
+    let dots = hlo.matches(" dot(").count()
+        + hlo.matches(" dot.").count();
+    let whiles = hlo.matches("while(").count()
+        + hlo.matches(" while").count();
+    let fusions = hlo.matches("fusion").count();
+    println!("artifact {id}: {} bytes of HLO", hlo.len());
+    println!("  dot ops: {dots}  while loops: {whiles}  \
+              fusions: {fusions}");
+    println!("  (the Pallas/Alpaka abstraction is gone — only HLO \
+              remains, cf. paper Listing 1.2)");
+    for line in hlo.lines().filter(|l| l.contains("dot")).take(5) {
+        println!("  | {}", line.trim());
+    }
+    Ok(())
+}

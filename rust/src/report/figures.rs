@@ -1,0 +1,281 @@
+//! Paper figures 3–8 as CSV series (+ gnuplot scripts via csvio).
+
+use crate::arch::{compiler, ArchId, CompilerId};
+use crate::gemm::{GemmWorkload, Precision};
+use crate::hierarchy::{map_gemm, mapping};
+use crate::sim::{calibrate, Machine, MemMode, TuningPoint};
+use crate::util::csvio::{Figure, Series};
+use crate::util::table::Table;
+
+/// Paper-optimal `(T, hw_threads)` for a combination (Table 4, via the
+/// anchor registry).
+pub fn paper_optimal(arch: ArchId, comp: CompilerId, prec: Precision)
+                     -> Option<(u64, u64)> {
+    calibrate::anchor(arch, comp, prec).map(|a| (a.t, a.hw_threads))
+}
+
+fn series_name(arch: ArchId, comp: CompilerId, prec: Precision) -> String {
+    format!("{} {} {}", arch.label(), comp.label(), prec.dtype())
+}
+
+/// Fig. 3 — GFLOP/s vs tile size for K80, both P100s and Haswell, per
+/// compiler and precision, at the tuning size N = 10240.
+pub fn fig3_tile_sweep() -> Figure {
+    let mut fig = Figure::new(
+        "Fig. 3: performance vs tile size T (N=10240)",
+        "tile size T", "GFLOP/s");
+    fig.log2_x = true;
+    let combos: Vec<(ArchId, CompilerId)> = vec![
+        (ArchId::K80, CompilerId::Cuda),
+        (ArchId::P100Nvlink, CompilerId::Cuda),
+        (ArchId::P100Pcie, CompilerId::Cuda),
+        (ArchId::Haswell, CompilerId::Intel),
+        (ArchId::Haswell, CompilerId::Gnu),
+    ];
+    for (arch, comp) in combos {
+        let machine = Machine::for_arch(arch);
+        for prec in Precision::ALL {
+            let mut s = Series::new(series_name(arch, comp, prec));
+            let space = crate::tuner::TuningSpace::paper(
+                arch, comp, prec, GemmWorkload::TUNING_N);
+            let h = paper_optimal(arch, comp, prec)
+                .map(|(_, h)| h).unwrap_or(1);
+            for &t in &space.t_values {
+                let mut p = TuningPoint::cpu(arch, comp, prec,
+                                             GemmWorkload::TUNING_N, t, h);
+                if matches!(comp, CompilerId::Cuda) {
+                    p = TuningPoint::gpu(arch, prec,
+                                         GemmWorkload::TUNING_N, t);
+                }
+                s.push(t as f64, machine.predict(&p).gflops);
+            }
+            fig.add(s);
+        }
+    }
+    fig
+}
+
+/// Fig. 4 — KNL sweep over (T, hardware threads) per compiler and
+/// precision. Encoded as one series per (compiler, precision, h): the
+/// bubble chart flattens to curves per thread count.
+pub fn fig4_knl_sweep() -> Figure {
+    let mut fig = Figure::new(
+        "Fig. 4: KNL performance over (T, hw threads) (N=10240)",
+        "tile size T", "GFLOP/s");
+    fig.log2_x = true;
+    let machine = Machine::for_arch(ArchId::Knl);
+    for comp in [CompilerId::Intel, CompilerId::Gnu] {
+        for prec in Precision::ALL {
+            for h in [1u64, 2, 4] {
+                let mut s = Series::new(format!(
+                    "{} {} h={h}", comp.label(), prec.dtype()));
+                for t in [16u64, 32, 64, 128, 256, 512] {
+                    let p = TuningPoint::cpu(ArchId::Knl, comp, prec,
+                                             GemmWorkload::TUNING_N, t, h);
+                    s.push(t as f64, machine.predict(&p).gflops);
+                }
+                fig.add(s);
+            }
+        }
+    }
+    fig
+}
+
+/// Fig. 5 — hierarchy→hardware mappings at the DP vendor-compiler
+/// optima (textual, like the paper's diagram captions).
+pub fn fig5_mappings() -> String {
+    let mut out = String::from(
+        "Fig. 5: Alpaka mappings at the double-precision optima of the \
+         vendor compilers (Table 4)\n\n");
+    for arch in [ArchId::Power8, ArchId::Knl, ArchId::P100Nvlink] {
+        let comp = compiler::vendor_compiler(arch);
+        let (t, h) = paper_optimal(arch, comp, Precision::F64)
+            .expect("anchor for vendor DP");
+        let backend = mapping::backend_for(arch);
+        let m = map_gemm(backend, GemmWorkload::TUNING_N, t, h)
+            .expect("paper optimum must be a legal mapping");
+        out.push_str(&format!("{} ({}): {}\n", arch.label(),
+                              comp.label(), m.describe()));
+    }
+    out
+}
+
+/// Fig. 6/7 — scaling N = 1024..20480 (ΔN = 1024) for every architecture
+/// at its paper-optimal parameters; KNL additionally in flat mode and
+/// GPUs with unified memory, like the paper's figures.
+pub fn fig6_scaling(prec: Precision) -> Figure {
+    let label = match prec {
+        Precision::F64 => "Fig. 6: scaling, double precision",
+        Precision::F32 => "Fig. 7: scaling, single precision",
+    };
+    let mut fig = Figure::new(label, "matrix size N", "GFLOP/s");
+    for a in calibrate::ANCHORS.iter().filter(|a| a.precision == prec) {
+        let machine = Machine::for_arch(a.arch);
+        let is_gpu = a.compiler == CompilerId::Cuda;
+        let modes: Vec<(MemMode, &str)> = if is_gpu {
+            vec![(MemMode::Default, "device"),
+                 (MemMode::GpuUnified, "unified")]
+        } else if a.arch == ArchId::Knl {
+            vec![(MemMode::Default, "cached"), (MemMode::KnlFlat, "flat")]
+        } else {
+            vec![(MemMode::Default, "")]
+        };
+        for (mode, suffix) in modes {
+            let name = if suffix.is_empty() {
+                series_name(a.arch, a.compiler, prec)
+            } else {
+                format!("{} {}", series_name(a.arch, a.compiler, prec),
+                        suffix)
+            };
+            let mut s = Series::new(name);
+            for w in GemmWorkload::paper_scaling_series(prec) {
+                if !crate::tuner::space::legal_t(a.arch, w.n, a.t) {
+                    continue;
+                }
+                let p = TuningPoint {
+                    arch: a.arch, compiler: a.compiler, precision: prec,
+                    n: w.n, t: a.t, hw_threads: a.hw_threads,
+                    memmode: mode, thread_override: None,
+                };
+                s.push(w.n as f64, machine.predict(&p).gflops);
+            }
+            fig.add(s);
+        }
+    }
+    fig
+}
+
+/// Fig. 7 is Fig. 6 at single precision.
+pub fn fig7_scaling(prec: Precision) -> Figure {
+    fig6_scaling(prec)
+}
+
+/// Fig. 8 — best relative-to-peak percentage per architecture and
+/// precision (vendor compiler), model vs paper.
+pub fn fig8_relative_peak() -> Table {
+    let mut t = Table::new(vec!["architecture", "compiler", "precision",
+                                "paper % of peak", "model % of peak"])
+        .title("Fig. 8: achieved relative peak performance").numeric();
+    for a in calibrate::ANCHORS {
+        if a.compiler != compiler::vendor_compiler(a.arch) {
+            continue;
+        }
+        let machine = Machine::for_arch(a.arch);
+        let space = crate::tuner::TuningSpace::paper(
+            a.arch, a.compiler, a.precision, GemmWorkload::TUNING_N);
+        let res = crate::tuner::sweep::grid_sweep_seq(&machine, &space);
+        let best = res.best().expect("sweep");
+        let peak = a.arch.spec().peak_gflops(a.precision);
+        t.row(vec![
+            a.arch.label().to_string(),
+            a.compiler.label().to_string(),
+            a.precision.label().to_string(),
+            format!("{:.1}", 100.0 * a.gflops / peak),
+            format!("{:.1}", 100.0 * best.gflops / peak),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_series_cover_archs_and_precisions() {
+        let f = fig3_tile_sweep();
+        // 5 combos x 2 precisions
+        assert_eq!(f.series.len(), 10);
+        let names: Vec<&str> =
+            f.series.iter().map(|s| s.name.as_str()).collect();
+        assert!(names.iter().any(|n| n.contains("K80")));
+        assert!(names.iter().any(|n| n.contains("Haswell GNU")));
+        // GPU optimum at T=4 in the K80 f32 series
+        let k80 = f.series.iter()
+            .find(|s| s.name == "K80 CUDA f32").unwrap();
+        assert_eq!(k80.argmax().unwrap().0, 4.0);
+    }
+
+    #[test]
+    fn fig3_haswell_doubling_shape() {
+        // paper: "doubling the tile size often also doubles the
+        // achieved performance" on Haswell (until cache limits)
+        let f = fig3_tile_sweep();
+        let hsw = f.series.iter()
+            .find(|s| s.name == "Haswell Intel f64").unwrap();
+        let at = |t: f64| hsw.points.iter()
+            .find(|p| p.0 == t).unwrap().1;
+        let ratio = at(32.0) / at(16.0);
+        assert!(ratio > 1.5 && ratio < 2.5, "doubling ratio {ratio}");
+    }
+
+    #[test]
+    fn fig4_knl_dp_optimum_emerges() {
+        let f = fig4_knl_sweep();
+        assert_eq!(f.series.len(), 12); // 2 compilers x 2 prec x 3 h
+        let intel_dp_h1 = f.series.iter()
+            .find(|s| s.name == "Intel f64 h=1").unwrap();
+        assert_eq!(intel_dp_h1.argmax().unwrap().0, 64.0);
+        // h=1 beats h=2 at the optimum (the paper's L2-sharing story)
+        let intel_dp_h2 = f.series.iter()
+            .find(|s| s.name == "Intel f64 h=2").unwrap();
+        let best1 = intel_dp_h1.argmax().unwrap().1;
+        let best2 = intel_dp_h2.argmax().unwrap().1;
+        assert!(best1 > best2, "{best1} vs {best2}");
+    }
+
+    #[test]
+    fn fig5_mentions_all_three() {
+        let s = fig5_mappings();
+        assert!(s.contains("Power8") && s.contains("KNL")
+                && s.contains("P100"));
+        assert!(s.contains("AccGpuCudaRt"));
+        assert!(s.contains("AccCpuOmp2Blocks"));
+    }
+
+    #[test]
+    fn fig6_has_knl_drops_and_power8_beats_k80() {
+        let f = fig6_scaling(Precision::F64);
+        let knl = f.series.iter()
+            .find(|s| s.name.contains("KNL") && s.name.contains("cached"))
+            .unwrap();
+        let at = |n: f64| knl.points.iter()
+            .find(|p| p.0 == n).unwrap().1;
+        // even-N drop at 8192 vs clean 9216
+        assert!(at(8192.0) < 0.7 * at(9216.0));
+        // Power8 beats K80 in DP across large N (paper §4)
+        let p8 = f.series.iter()
+            .find(|s| s.name.contains("Power8")).unwrap();
+        let k80 = f.series.iter()
+            .find(|s| s.name.contains("K80")
+                  && s.name.contains("device"))
+            .unwrap();
+        let p8_at = |n: f64| p8.points.iter().find(|p| p.0 == n)
+            .unwrap().1;
+        let k80_at = |n: f64| k80.points.iter().find(|p| p.0 == n)
+            .unwrap().1;
+        assert!(p8_at(10240.0) > k80_at(10240.0));
+    }
+
+    #[test]
+    fn fig7_haswell_sp_peaks_at_2048() {
+        let f = fig7_scaling(Precision::F32);
+        let hsw = f.series.iter()
+            .find(|s| s.name.contains("Haswell Intel")).unwrap();
+        let best_n = hsw.points.iter()
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap().0;
+        assert!(best_n <= 2048.0,
+                "Haswell SP must peak at small N, got {best_n}");
+    }
+
+    #[test]
+    fn fig8_rows_and_k80_values() {
+        let t = fig8_relative_peak();
+        let s = t.to_csv();
+        // vendor-compiler rows only: 6 archs x 2 precisions... K80,
+        // P100x2, Haswell(Intel), KNL(Intel), Power8(XL) = 12 rows
+        assert_eq!(t.n_rows(), 12);
+        assert!(s.contains("15.0") || s.contains("14.9")); // K80 SP
+    }
+}

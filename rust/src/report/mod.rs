@@ -1,0 +1,51 @@
+//! The report engine — regenerates every table and figure of the paper
+//! (experiment index in DESIGN.md §4).
+//!
+//! Tables render as aligned text + CSV; figures as wide CSV + a gnuplot
+//! script. `generate_all` writes the full set under a directory — the
+//! repo's analogue of the paper's Zenodo results bundle [15].
+
+pub mod figures;
+pub mod tables;
+
+use std::path::Path;
+
+use crate::Result;
+
+/// Write every paper artifact into `dir`. Returns the list of files.
+pub fn generate_all(dir: &Path) -> Result<Vec<String>> {
+    std::fs::create_dir_all(dir)?;
+    let files = std::cell::RefCell::new(Vec::new());
+    let write = |name: &str, content: String| -> Result<()> {
+        std::fs::write(dir.join(name), content)?;
+        files.borrow_mut().push(name.to_string());
+        Ok(())
+    };
+
+    write("table1_gpus.txt", tables::table1().render())?;
+    write("table1_gpus.csv", tables::table1().to_csv())?;
+    write("table2_cpus.txt", tables::table2().render())?;
+    write("table2_cpus.csv", tables::table2().to_csv())?;
+    write("table3_compilers.txt", tables::table3().render())?;
+    write("table3_compilers.csv", tables::table3().to_csv())?;
+    let t4 = tables::table4();
+    write("table4_optima.txt", t4.render())?;
+    write("table4_optima.csv", t4.to_csv())?;
+
+    figures::fig3_tile_sweep().write(dir, "fig3_tile_sweep")?;
+    files.borrow_mut().push("fig3_tile_sweep.csv".into());
+    figures::fig4_knl_sweep().write(dir, "fig4_knl_sweep")?;
+    files.borrow_mut().push("fig4_knl_sweep.csv".into());
+    write("fig5_mappings.txt", figures::fig5_mappings())?;
+    figures::fig6_scaling(crate::gemm::Precision::F64)
+        .write(dir, "fig6_scaling_dp")?;
+    files.borrow_mut().push("fig6_scaling_dp.csv".into());
+    figures::fig7_scaling(crate::gemm::Precision::F32)
+        .write(dir, "fig7_scaling_sp")?;
+    files.borrow_mut().push("fig7_scaling_sp.csv".into());
+    let f8 = figures::fig8_relative_peak();
+    write("fig8_relative_peak.txt", f8.render())?;
+    write("fig8_relative_peak.csv", f8.to_csv())?;
+
+    Ok(files.into_inner())
+}

@@ -1,0 +1,188 @@
+//! Paper tables 1–4.
+
+use crate::arch::{compiler, ArchId};
+use crate::gemm::{metrics, Precision};
+use crate::sim::machine::cache_per_thread;
+use crate::sim::{calibrate, Machine};
+use crate::tuner::TuningSpace;
+use crate::util::table::{fmt_bytes, Table};
+
+/// Table 1 — GPU characteristics.
+pub fn table1() -> Table {
+    let mut t = Table::new(vec![
+        "architecture", "interconnect", "SMs", "SP cores/SM",
+        "DP cores/SM", "shared mem/SM", "regs/SM", "clock GHz",
+        "peak SP GF/s", "peak DP GF/s", "release",
+    ]).title("Table 1: GPU architectures").numeric();
+    for arch in [ArchId::K80, ArchId::P100Nvlink, ArchId::P100Pcie] {
+        let s = arch.spec();
+        let g = s.gpu();
+        t.row(vec![
+            arch.label().to_string(),
+            format!("{:?}", g.link).to_lowercase(),
+            g.sms.to_string(),
+            g.cores_sp_per_sm.to_string(),
+            g.cores_dp_per_sm.to_string(),
+            fmt_bytes(g.shared_mem_per_sm),
+            g.regs_per_sm.to_string(),
+            format!("{:.2}", g.clock_ghz),
+            format!("{:.0}", g.peak_sp_gflops),
+            format!("{:.0}", g.peak_dp_gflops),
+            s.release.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Table 2 — CPU characteristics (Eq. 8 peaks).
+pub fn table2() -> Table {
+    let mut t = Table::new(vec![
+        "architecture", "sockets", "cores", "HW threads/core",
+        "clock GHz", "SP flop/cycle (paper)", "DP flop/cycle (paper)",
+        "peak SP GF/s", "peak DP GF/s", "caches", "release",
+    ]).title("Table 2: CPU architectures").numeric();
+    for arch in [ArchId::Haswell, ArchId::Knl, ArchId::Power8] {
+        let s = arch.spec();
+        let c = s.cpu();
+        let caches = c
+            .caches
+            .iter()
+            .map(|l| format!("{} {}", l.name, fmt_bytes(l.bytes)))
+            .collect::<Vec<_>>()
+            .join(", ");
+        t.row(vec![
+            arch.label().to_string(),
+            c.sockets.to_string(),
+            c.cores.to_string(),
+            c.hw_threads_per_core.to_string(),
+            format!("{:.2}", c.clock_ghz),
+            c.display_flops_sp.to_string(),
+            c.display_flops_dp.to_string(),
+            format!("{:.0}", c.peak_gflops(Precision::F32)),
+            format!("{:.0}", c.peak_gflops(Precision::F64)),
+            caches,
+            s.release.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Table 3 — compilers, versions and flags per architecture.
+pub fn table3() -> Table {
+    let mut t = Table::new(vec!["architecture", "compiler", "version",
+                                "flags"])
+        .title("Table 3: compilers");
+    for arch in ArchId::PAPER {
+        for comp in compiler::valid_compilers(arch) {
+            if let Some(s) = compiler::spec(arch, comp) {
+                t.row(vec![arch.label().to_string(),
+                           comp.label().to_string(),
+                           s.version.to_string(), s.flags.to_string()]);
+            }
+        }
+    }
+    t
+}
+
+/// Which cache level first holds `K(S,T)` at `h` threads (Table 4's
+/// marking); None = does not fit any cache.
+pub fn first_fitting_level(arch: ArchId, t_tile: u64, prec: Precision,
+                           h: u64) -> Option<&'static str> {
+    let k = metrics::cache_req_bytes(prec.size_bytes(), t_tile);
+    cache_per_thread(arch, h)
+        .into_iter()
+        .find(|(_, bytes)| k <= *bytes)
+        .map(|(name, _)| name)
+}
+
+/// Table 4 — tuned optima: the paper's measured row next to the model's
+/// emergent optimum from a fresh sweep at N = 10240.
+pub fn table4() -> Table {
+    let mut t = Table::new(vec![
+        "architecture", "compiler", "precision",
+        "paper (T, hw)", "paper GF/s",
+        "model (T, hw)", "model GF/s", "K(S,T) model", "fits in",
+    ]).title("Table 4: tuned optima — paper vs model").numeric();
+    for a in calibrate::ANCHORS {
+        let machine = Machine::for_arch(a.arch);
+        let space = TuningSpace::paper(a.arch, a.compiler, a.precision,
+                                       crate::gemm::GemmWorkload::TUNING_N);
+        let res = crate::tuner::sweep::grid_sweep_seq(&machine, &space);
+        let best = res.best().expect("non-empty sweep");
+        let k = metrics::cache_req_bytes(a.precision.size_bytes(),
+                                         best.point.t);
+        let fits = first_fitting_level(a.arch, best.point.t, a.precision,
+                                       best.point.hw_threads)
+            .unwrap_or("-");
+        t.row(vec![
+            a.arch.label().to_string(),
+            a.compiler.label().to_string(),
+            a.precision.label().to_string(),
+            format!("({}, {})", a.t, a.hw_threads),
+            format!("{:.0}{}", a.gflops,
+                    if a.quoted { "" } else { "*" }),
+            format!("({}, {})", best.point.t, best.point.hw_threads),
+            format!("{:.0}", best.gflops),
+            fmt_bytes(k),
+            fits.to_string(),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_contents() {
+        let t = table1();
+        let s = t.render();
+        assert!(s.contains("K80") && s.contains("P100 (nvlink)"));
+        assert!(s.contains("10600"));
+        assert_eq!(t.n_rows(), 3);
+    }
+
+    #[test]
+    fn table2_eq8_peaks() {
+        let s = table2().render();
+        assert!(s.contains("KNL"));
+        assert!(s.contains("5325") || s.contains("5324"),
+                "KNL SP peak via Eq. 8: {s}");
+        assert!(s.contains("64 (2*AVX,FMA)"), "paper's verbatim text");
+    }
+
+    #[test]
+    fn table3_rows() {
+        let t = table3();
+        // Haswell 2 + KNL 2 + K80 1 + P100x2 1 each + Power8 2 = 9
+        assert_eq!(t.n_rows(), 9);
+        assert!(t.render().contains("-Ofast -xHost"));
+    }
+
+    #[test]
+    fn first_fit_matches_paper_marks() {
+        // KNL Intel DP T=64 h=1: K=64KB fits L1 (64KB per thread)
+        assert_eq!(first_fitting_level(ArchId::Knl, 64, Precision::F64, 1),
+                   Some("L1"));
+        // …but not at h=2 (32KB per thread): first fit is L2
+        assert_eq!(first_fitting_level(ArchId::Knl, 64, Precision::F64, 2),
+                   Some("L2"));
+        // Power8 XL T=512 DP: 4MB fits L3 at h=2 (4MB per thread)
+        assert_eq!(first_fitting_level(ArchId::Power8, 512,
+                                       Precision::F64, 2),
+                   Some("L3"));
+        // GPU: no CPU cache table
+        assert_eq!(first_fitting_level(ArchId::K80, 4, Precision::F32, 1),
+                   None);
+    }
+
+    #[test]
+    fn table4_has_all_anchor_rows() {
+        let t = table4();
+        assert_eq!(t.n_rows(), calibrate::ANCHORS.len());
+        let s = t.render();
+        assert!(s.contains("(64, 1)")); // KNL DP both columns
+        assert!(s.contains("510"));
+    }
+}

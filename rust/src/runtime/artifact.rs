@@ -1,0 +1,249 @@
+//! Artifact manifest: the contract between `aot.py` and the rust runtime.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context};
+
+use crate::gemm::verify::Digest;
+use crate::gemm::Precision;
+use crate::util::json::{self, Value};
+use crate::Result;
+
+/// One input tensor of an artifact: regenerated locally from the seed
+/// via the shared splitmix64 stream.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InputSpec {
+    pub seed: u64,
+    pub shape: Vec<usize>,
+    pub precision: Precision,
+}
+
+impl InputSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Metadata of one lowered artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub id: String,
+    /// "gemm" | "dot" | "mlp"
+    pub kind: String,
+    /// "correctness" | "tile_sweep" | "element_sweep" | "scaling"
+    /// | "baseline" | "application"
+    pub role: String,
+    pub file: String,
+    pub inputs: Vec<InputSpec>,
+    pub digest: Digest,
+    /// Flop count recorded by the python side (gemm/dot kinds).
+    pub flops: Option<u128>,
+    /// Tile size T (gemm kind; square specs only).
+    pub t: Option<u64>,
+    /// Matrix size N (gemm/dot kinds).
+    pub n: Option<u64>,
+    /// Element-layer split.
+    pub n_e: Option<u64>,
+    pub precision: Precision,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: u64,
+    pub interchange: String,
+    pub artifacts: Vec<ArtifactMeta>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from the artifacts directory.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run \
+                                      `make artifacts` first"))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let root = json::parse(text).context("manifest.json")?;
+        let version = root.get("version").and_then(Value::as_u64)
+            .context("manifest: version")?;
+        let interchange = root.get("interchange")
+            .and_then(Value::as_str).unwrap_or("hlo-text").to_string();
+        if interchange != "hlo-text" {
+            bail!("unsupported interchange {interchange:?} (the image's \
+                   xla_extension only round-trips HLO text)");
+        }
+        let mut artifacts = Vec::new();
+        for a in root.get("artifacts").and_then(Value::as_array)
+            .context("manifest: artifacts")?
+        {
+            artifacts.push(parse_artifact(a)?);
+        }
+        Ok(Manifest { version, interchange, artifacts,
+                      dir: dir.to_path_buf() })
+    }
+
+    pub fn by_id(&self, id: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.id == id)
+    }
+
+    pub fn by_role(&self, role: &str) -> Vec<&ArtifactMeta> {
+        self.artifacts.iter().filter(|a| a.role == role).collect()
+    }
+
+    pub fn hlo_path(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.file)
+    }
+}
+
+fn parse_precision(s: &str) -> Result<Precision> {
+    Precision::parse(s).with_context(|| format!("bad dtype {s:?}"))
+}
+
+fn parse_artifact(a: &Value) -> Result<ArtifactMeta> {
+    let id = a.get("id").and_then(Value::as_str)
+        .context("artifact: id")?.to_string();
+    let ctx = |f: &str| format!("artifact {id}: {f}");
+    let kind = a.get("kind").and_then(Value::as_str)
+        .with_context(|| ctx("kind"))?.to_string();
+    let role = a.get("role").and_then(Value::as_str)
+        .with_context(|| ctx("role"))?.to_string();
+    let file = a.get("file").and_then(Value::as_str)
+        .with_context(|| ctx("file"))?.to_string();
+
+    let spec = a.get("spec").with_context(|| ctx("spec"))?;
+    let dtype = spec.get("dtype").and_then(Value::as_str)
+        .with_context(|| ctx("spec.dtype"))?;
+    let precision = parse_precision(dtype)?;
+    let flops = spec.get("flops").and_then(Value::as_u64)
+        .map(|f| f as u128);
+    let square = match (spec.get("m").and_then(Value::as_u64),
+                        spec.get("n").and_then(Value::as_u64),
+                        spec.get("k").and_then(Value::as_u64)) {
+        (Some(m), Some(n), Some(k)) if m == n && n == k => Some(n),
+        (_, Some(n), _) => Some(n), // report N even for rectangles
+        _ => None,
+    };
+    let t = match (spec.get("t_m").and_then(Value::as_u64),
+                   spec.get("t_n").and_then(Value::as_u64)) {
+        (Some(tm), Some(tn)) if tm == tn => Some(tn),
+        _ => None,
+    };
+    let n_e = spec.get("n_e").and_then(Value::as_u64);
+
+    let mut inputs = Vec::new();
+    for inp in a.get("inputs").and_then(Value::as_array)
+        .with_context(|| ctx("inputs"))?
+    {
+        let seed = inp.get("seed").and_then(Value::as_u64)
+            .with_context(|| ctx("input seed"))?;
+        let shape: Vec<usize> = inp.get("shape")
+            .and_then(Value::as_array).with_context(|| ctx("shape"))?
+            .iter().map(|v| v.as_u64().unwrap_or(0) as usize).collect();
+        let idt = inp.get("dtype").and_then(Value::as_str)
+            .with_context(|| ctx("input dtype"))?;
+        inputs.push(InputSpec { seed, shape,
+                                precision: parse_precision(idt)? });
+    }
+
+    let d = a.get("digest").with_context(|| ctx("digest"))?;
+    let digest = Digest {
+        shape: d.get("shape").and_then(Value::as_array)
+            .with_context(|| ctx("digest shape"))?
+            .iter().map(|v| v.as_u64().unwrap_or(0) as usize).collect(),
+        sum: d.get("sum").and_then(Value::as_f64)
+            .with_context(|| ctx("digest sum"))?,
+        abs_sum: d.get("abs_sum").and_then(Value::as_f64)
+            .with_context(|| ctx("digest abs_sum"))?,
+        samples: d.get("samples").and_then(Value::as_array)
+            .with_context(|| ctx("digest samples"))?
+            .iter()
+            .map(|s| {
+                let i = s.idx(0).and_then(Value::as_u64).unwrap_or(0);
+                let v = s.idx(1).and_then(Value::as_f64).unwrap_or(0.0);
+                (i as usize, v)
+            })
+            .collect(),
+    };
+
+    Ok(ArtifactMeta { id, kind, role, file, inputs, digest, flops, t,
+                      n: square, n_e, precision })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 2, "jax_version": "0.8.2", "interchange": "hlo-text",
+      "return_tuple": true,
+      "artifacts": [{
+        "id": "gemm_n128_t16_e1_f32", "kind": "gemm",
+        "role": "correctness", "file": "gemm_n128_t16_e1_f32.hlo.txt",
+        "spec": {"m":128,"n":128,"k":128,"t_m":16,"t_n":16,"t_k":16,
+                 "n_e":1,"dtype":"f32","alpha":1.0,"beta":1.0,
+                 "flops":4243456,"tile_bytes":2048,"vmem_bytes":3072,
+                 "grid":[8,8,8]},
+        "inputs": [
+          {"seed": 9007199254740993, "shape": [128,128], "dtype":"f32"},
+          {"seed": 2, "shape": [128,128], "dtype":"f32"},
+          {"seed": 3, "shape": [128,128], "dtype":"f32"}],
+        "digest": {"shape":[128,128], "sum": -1.5, "abs_sum": 100.25,
+                   "samples": [[0, 0.5], [16383, -0.25]]},
+        "hlo_bytes": 9000
+      }]
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.version, 2);
+        let a = m.by_id("gemm_n128_t16_e1_f32").unwrap();
+        assert_eq!(a.kind, "gemm");
+        assert_eq!(a.t, Some(16));
+        assert_eq!(a.n, Some(128));
+        assert_eq!(a.flops, Some(4243456));
+        assert_eq!(a.precision, Precision::F32);
+        // seed beyond 2^53 preserved exactly
+        assert_eq!(a.inputs[0].seed, 9007199254740993);
+        assert_eq!(a.inputs[0].elements(), 128 * 128);
+        assert_eq!(a.digest.samples[1], (16383, -0.25));
+        assert_eq!(m.hlo_path(a),
+                   Path::new("/tmp/a/gemm_n128_t16_e1_f32.hlo.txt"));
+    }
+
+    #[test]
+    fn role_filter() {
+        let m = Manifest::parse(SAMPLE, Path::new(".")).unwrap();
+        assert_eq!(m.by_role("correctness").len(), 1);
+        assert!(m.by_role("baseline").is_empty());
+    }
+
+    #[test]
+    fn rejects_wrong_interchange() {
+        let bad = SAMPLE.replace("hlo-text", "proto");
+        assert!(Manifest::parse(&bad, Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        assert!(Manifest::parse("{}", Path::new(".")).is_err());
+        assert!(Manifest::parse(r#"{"version":2,"artifacts":[{}]}"#,
+                                Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        // integration-lite: parse the real artifacts/ manifest when the
+        // build has produced one.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.artifacts.len() >= 25);
+            assert!(m.by_role("tile_sweep").len() >= 5);
+        }
+    }
+}

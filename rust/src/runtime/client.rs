@@ -1,0 +1,136 @@
+//! PJRT client wrapper: HLO text → compiled executable → literals.
+//!
+//! Follows the verified wiring of /opt/xla-example/load_hlo.rs: text (not
+//! serialized proto) is the interchange format, outputs arrive as a
+//! 1-tuple because aot.py lowers with `return_tuple=True`.
+
+use anyhow::Context;
+
+use crate::gemm::Precision;
+use crate::util::prng;
+use crate::Result;
+
+use super::artifact::{ArtifactMeta, InputSpec, Manifest};
+
+/// A PJRT CPU client plus compile cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create the CPU client (one per process is plenty).
+    pub fn new() -> Result<Self> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PjRtClient::cpu: {e:?}"))?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one artifact.
+    pub fn load(&self, manifest: &Manifest, meta: &ArtifactMeta)
+                -> Result<LoadedKernel> {
+        let path = manifest.hlo_path(meta);
+        let path_str = path.to_str().context("artifact path not utf-8")?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .map_err(|e| anyhow::anyhow!(
+                "parsing HLO text {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", meta.id))?;
+        Ok(LoadedKernel { exe, meta: meta.clone() })
+    }
+}
+
+/// A compiled artifact ready to execute.
+pub struct LoadedKernel {
+    exe: xla::PjRtLoadedExecutable,
+    pub meta: ArtifactMeta,
+}
+
+impl LoadedKernel {
+    /// Deterministic input literals from the manifest seeds — the same
+    /// matrices `aot.py` digested (bit-exact, see util::prng).
+    pub fn make_inputs(&self) -> Result<Vec<xla::Literal>> {
+        self.meta.inputs.iter().map(make_literal).collect()
+    }
+
+    /// Execute once, returning the flattened f64 output values.
+    pub fn execute_f64(&self, inputs: &[xla::Literal]) -> Result<Vec<f64>> {
+        let result = self.exe.execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow::anyhow!("execute {}: {e:?}",
+                                         self.meta.id))?;
+        let literal = result[0][0].to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple
+        let out = literal.to_tuple1()
+            .map_err(|e| anyhow::anyhow!("to_tuple1: {e:?}"))?;
+        match self.meta.precision {
+            Precision::F32 => {
+                let v: Vec<f32> = out.to_vec()
+                    .map_err(|e| anyhow::anyhow!("to_vec f32: {e:?}"))?;
+                Ok(v.into_iter().map(|x| x as f64).collect())
+            }
+            Precision::F64 => out.to_vec()
+                .map_err(|e| anyhow::anyhow!("to_vec f64: {e:?}")),
+        }
+    }
+
+    /// Execute once without transferring the result back (the timed hot
+    /// path — the paper times the algorithm, not the copy-out).
+    pub fn execute_only(&self, inputs: &[xla::Literal]) -> Result<()> {
+        self.exe.execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow::anyhow!("execute {}: {e:?}",
+                                         self.meta.id))?;
+        Ok(())
+    }
+}
+
+fn make_literal(spec: &InputSpec) -> Result<xla::Literal> {
+    let dims: Vec<i64> = spec.shape.iter().map(|d| *d as i64).collect();
+    let count = spec.elements();
+    let lit = match spec.precision {
+        Precision::F32 => {
+            let vals = prng::matrix_f32(spec.seed, count, 1);
+            xla::Literal::vec1(&vals)
+        }
+        Precision::F64 => {
+            let vals = prng::matrix_f64(spec.seed, count, 1);
+            xla::Literal::vec1(&vals)
+        }
+    };
+    lit.reshape(&dims)
+        .map_err(|e| anyhow::anyhow!("reshape to {dims:?}: {e:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::Precision;
+
+    #[test]
+    fn make_literal_shapes() {
+        let spec = InputSpec { seed: 7, shape: vec![4, 8],
+                               precision: Precision::F32 };
+        let lit = make_literal(&spec).unwrap();
+        let back: Vec<f32> = lit.to_vec().unwrap();
+        assert_eq!(back.len(), 32);
+        // first element matches the canonical stream
+        let want = crate::util::prng::matrix_f32(7, 32, 1);
+        assert_eq!(back, want);
+    }
+
+    #[test]
+    fn make_literal_f64_vector() {
+        let spec = InputSpec { seed: 9, shape: vec![16],
+                               precision: Precision::F64 };
+        let lit = make_literal(&spec).unwrap();
+        let back: Vec<f64> = lit.to_vec().unwrap();
+        assert_eq!(back, crate::util::prng::matrix_f64(9, 16, 1));
+    }
+
+    // Full load/execute round-trips live in rust/tests/ (they need the
+    // artifacts directory and a PJRT client).
+}

@@ -1,0 +1,106 @@
+//! Native measurement + verification of artifacts — the paper's §2
+//! protocol executed for real on the host CPU (the sixth architecture).
+
+use crate::gemm::verify::Digest;
+use crate::gemm::{metrics, verify};
+use crate::util::timer::{self, Measurement};
+use crate::Result;
+
+use super::client::LoadedKernel;
+
+/// Result of a timed native run.
+#[derive(Debug, Clone)]
+pub struct NativeMeasurement {
+    pub artifact_id: String,
+    pub measurement: Measurement,
+    /// Achieved GFLOP/s by Eq. 4 (None when flops are unknown, e.g. MLP).
+    pub gflops: Option<f64>,
+    pub runs: usize,
+}
+
+/// Verify a loaded kernel against its manifest digest, and — for square
+/// GEMM artifacts small enough — against the independent rust oracle.
+pub fn verify_kernel(kernel: &LoadedKernel, rtol: f64) -> Result<()> {
+    let inputs = kernel.make_inputs()?;
+    let out = kernel.execute_f64(&inputs)?;
+    let meta = &kernel.meta;
+    let got = Digest::of(&out, &meta.digest.shape,
+                         meta.digest.samples.len().max(2));
+    got.matches(&meta.digest, rtol)
+        .map_err(|e| anyhow::anyhow!("{}: digest mismatch: {e}", meta.id))?;
+
+    // third oracle: plain-rust GEMM for small square instances
+    if (meta.kind == "gemm" || meta.kind == "dot")
+        && meta.n.map(|n| n <= 256).unwrap_or(false)
+        && meta.inputs.len() == 3
+        && meta.inputs[0].shape[0] == meta.inputs[0].shape[1]
+    {
+        let n = meta.n.unwrap() as usize;
+        let a = crate::util::prng::matrix_f64(meta.inputs[0].seed, n, n);
+        let b = crate::util::prng::matrix_f64(meta.inputs[1].seed, n, n);
+        let c = crate::util::prng::matrix_f64(meta.inputs[2].seed, n, n);
+        // alpha/beta are encoded in the artifact id only for non-default
+        // values; the default 1/1 covers all sweep/scaling artifacts.
+        if !meta.id.contains("_a") {
+            let want = verify::gemm_f64(n, &a, &b, &c, 1.0, 1.0);
+            let tol = match meta.precision {
+                crate::gemm::Precision::F32 => 5e-3,
+                crate::gemm::Precision::F64 => 1e-9,
+            };
+            let max_err = out
+                .iter()
+                .zip(&want)
+                .map(|(x, y)| (x - y).abs() / y.abs().max(1.0))
+                .fold(0.0f64, f64::max);
+            if max_err > tol {
+                anyhow::bail!("{}: oracle mismatch, max rel err {max_err}",
+                              meta.id);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Time a kernel under the paper's protocol: warmup, `runs` recorded
+/// executions, keep the best (§2: "keeping the maximum over ten runs" of
+/// the GFLOP/s, i.e. the minimum time).
+pub fn measure_kernel(kernel: &LoadedKernel, warmup: usize, runs: usize)
+                      -> Result<NativeMeasurement> {
+    let inputs = kernel.make_inputs()?;
+    // fail fast before timing
+    kernel.execute_only(&inputs)?;
+    let measurement = timer::time_runs(warmup, runs, || {
+        kernel.execute_only(&inputs).expect("execute in timed loop");
+    });
+    let gflops = kernel.meta.flops.map(|f| {
+        f as f64 / measurement.best() / 1e9
+    });
+    Ok(NativeMeasurement {
+        artifact_id: kernel.meta.id.clone(),
+        measurement,
+        gflops,
+        runs,
+    })
+}
+
+/// Eq.-4 GFLOP/s for a square-GEMM artifact measurement, recomputed from
+/// N (cross-check against the manifest flops).
+pub fn gflops_from_n(n: u64, seconds: f64) -> f64 {
+    metrics::gflops(n, seconds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gflops_helper_matches_eq4() {
+        let g = gflops_from_n(1024, 0.5);
+        let expect = (2.0 * 1024f64.powi(3) + 3.0 * 1024f64 * 1024.0)
+            / 0.5 / 1e9;
+        assert!((g - expect).abs() < 1e-9);
+    }
+
+    // verify_kernel / measure_kernel are exercised against the real
+    // artifacts in rust/tests/runtime_artifacts.rs.
+}

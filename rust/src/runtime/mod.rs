@@ -1,0 +1,19 @@
+//! The PJRT runtime — Layer 3's bridge to the AOT artifacts.
+//!
+//! `python/compile/aot.py` lowers every variant of the single-source
+//! Pallas GEMM (and the baseline + MLP graphs) to HLO *text* under
+//! `artifacts/`, together with a manifest carrying deterministic input
+//! seeds and output digests. This module loads those artifacts into a
+//! PJRT CPU client, executes them with locally regenerated inputs (no
+//! python anywhere), verifies the digests, and times runs under the
+//! paper's §2 protocol.
+
+pub mod artifact;
+pub mod client;
+pub mod executor;
+pub mod service;
+
+pub use artifact::{ArtifactMeta, InputSpec, Manifest};
+pub use client::{LoadedKernel, Runtime};
+pub use executor::{measure_kernel, verify_kernel, NativeMeasurement};
+pub use service::{GemmService, RunStats};

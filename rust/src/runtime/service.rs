@@ -1,0 +1,200 @@
+//! A minimal GEMM *service* over the PJRT runtime — the serving-shaped
+//! face of the L3 coordinator (cf. the vLLM-router architecture the
+//! charter points at): clients submit artifact executions, a
+//! single-owner event loop batches consecutive requests per artifact,
+//! keeps a compile cache, and streams results back.
+//!
+//! The PJRT client is deliberately owned by ONE thread (it is Rc-based);
+//! concurrency happens in front of it — bounded queue, batching — not
+//! behind it. That mirrors production servers where a device executor is
+//! single-owner and the scheduler coalesces work.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::coordinator::queue::BoundedQueue;
+use crate::Result;
+
+use super::artifact::Manifest;
+use super::client::{LoadedKernel, Runtime};
+
+/// Result of one served execution.
+#[derive(Debug, Clone)]
+pub struct RunStats {
+    pub artifact_id: String,
+    pub seconds: f64,
+    /// Eq.-4 GFLOP/s when the artifact carries a flop count.
+    pub gflops: Option<f64>,
+    /// Size of the batch this request was served in.
+    pub batch_size: usize,
+    /// Queue wait time before execution started.
+    pub queue_seconds: f64,
+}
+
+type Reply = Sender<Result<RunStats>>;
+
+struct Request {
+    artifact_id: String,
+    reply: Reply,
+    enqueued: Instant,
+}
+
+/// Handle to a running service.
+pub struct GemmService {
+    queue: Arc<BoundedQueue<Request>>,
+    worker: Option<JoinHandle<()>>,
+    /// Maximum batch size the loop coalesces (same artifact).
+    pub max_batch: usize,
+}
+
+impl GemmService {
+    /// Start the service over an artifacts directory.
+    pub fn start(artifacts_dir: PathBuf, queue_cap: usize,
+                 max_batch: usize) -> Result<Self> {
+        let manifest = Manifest::load(&artifacts_dir)?;
+        let queue: Arc<BoundedQueue<Request>> =
+            Arc::new(BoundedQueue::new(queue_cap.max(1)));
+        let q2 = Arc::clone(&queue);
+        let max_batch = max_batch.max(1);
+        let worker = std::thread::Builder::new()
+            .name("alpaka-gemm-service".into())
+            .spawn(move || serve_loop(q2, manifest, max_batch))
+            .expect("spawn service thread");
+        Ok(Self { queue, worker: Some(worker), max_batch })
+    }
+
+    /// Submit a request; returns the reply channel immediately
+    /// (backpressure: blocks while the queue is full).
+    pub fn submit(&self, artifact_id: &str)
+                  -> Receiver<Result<RunStats>> {
+        let (tx, rx) = channel();
+        let req = Request { artifact_id: artifact_id.to_string(),
+                            reply: tx, enqueued: Instant::now() };
+        if self.queue.push(req).is_err() {
+            // service shut down: the dropped sender makes recv() fail,
+            // which callers observe as a disconnected service
+        }
+        rx
+    }
+
+    /// Convenience: submit and wait.
+    pub fn call(&self, artifact_id: &str) -> Result<RunStats> {
+        self.submit(artifact_id)
+            .recv()
+            .map_err(|_| anyhow::anyhow!("service disconnected"))?
+    }
+
+    /// Graceful shutdown: drain the queue, then stop.
+    pub fn shutdown(mut self) {
+        self.queue.close();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for GemmService {
+    fn drop(&mut self) {
+        self.queue.close();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn serve_loop(queue: Arc<BoundedQueue<Request>>, manifest: Manifest,
+              max_batch: usize) {
+    let runtime = match Runtime::new() {
+        Ok(rt) => rt,
+        Err(e) => {
+            // fail every request with a clear error
+            while let Some(req) = queue.pop() {
+                let _ = req.reply.send(Err(anyhow::anyhow!(
+                    "PJRT init failed: {e:#}")));
+            }
+            return;
+        }
+    };
+    // compile + input cache, keyed by artifact id
+    let mut cache: HashMap<String, (LoadedKernel, Vec<xla::Literal>)> =
+        HashMap::new();
+
+    while let Some(first) = queue.pop() {
+        // dynamic batching: coalesce queued requests for the SAME
+        // artifact (continuous batching of identical shapes)
+        let mut batch = vec![first];
+        while batch.len() < max_batch {
+            match queue.try_pop() {
+                Some(req) if req.artifact_id == batch[0].artifact_id => {
+                    batch.push(req);
+                }
+                Some(other) => {
+                    // different artifact: serve it next round, FIFO-ish
+                    // (re-queue at the back; bounded queue may be full —
+                    // then serve it as its own batch immediately after)
+                    let id = other.artifact_id.clone();
+                    if queue.push(other).is_err() {
+                        // queue closed mid-flight; drop silently
+                        let _ = id;
+                    }
+                    break;
+                }
+                None => break,
+            }
+        }
+
+        let id = batch[0].artifact_id.clone();
+        let entry = match ensure_loaded(&runtime, &manifest, &mut cache,
+                                        &id) {
+            Ok(()) => cache.get(&id).expect("just inserted"),
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for req in batch {
+                    let _ = req.reply.send(Err(anyhow::anyhow!(
+                        "{id}: {msg}")));
+                }
+                continue;
+            }
+        };
+        let (kernel, inputs) = entry;
+        let batch_size = batch.len();
+        for req in batch {
+            let queue_seconds = req.enqueued.elapsed().as_secs_f64();
+            let t0 = Instant::now();
+            let result = kernel.execute_only(inputs).map(|()| {
+                let seconds = t0.elapsed().as_secs_f64();
+                RunStats {
+                    artifact_id: id.clone(),
+                    seconds,
+                    gflops: kernel.meta.flops
+                        .map(|f| f as f64 / seconds / 1e9),
+                    batch_size,
+                    queue_seconds,
+                }
+            });
+            let _ = req.reply.send(result);
+        }
+    }
+}
+
+fn ensure_loaded(runtime: &Runtime, manifest: &Manifest,
+                 cache: &mut HashMap<String,
+                                     (LoadedKernel, Vec<xla::Literal>)>,
+                 id: &str) -> Result<()> {
+    if cache.contains_key(id) {
+        return Ok(());
+    }
+    let meta = manifest.by_id(id)
+        .ok_or_else(|| anyhow::anyhow!("unknown artifact {id}"))?;
+    let kernel = runtime.load(manifest, meta)?;
+    let inputs = kernel.make_inputs()?;
+    cache.insert(id.to_string(), (kernel, inputs));
+    Ok(())
+}
+
+// Integration tests live in rust/tests/gemm_service.rs (they need the
+// artifacts directory).

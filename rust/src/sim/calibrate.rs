@@ -1,0 +1,195 @@
+//! Calibration anchors — the paper's measured best points.
+//!
+//! The machine model is mechanistic in everything *relative* (tile-size
+//! response, SMT response, N-scaling, crossovers); absolute magnitude is
+//! anchored per (arch, compiler, precision) by scaling the model's raw
+//! output so that it reproduces the paper's measured optimum exactly at
+//! the paper's optimal parameters. This mirrors how the paper itself
+//! argues: mechanisms explain the *shape*, measurements pin the *level*.
+//!
+//! Sources per anchor: Table 4 (optimal parameters), Fig. 8 (relative
+//! peak), Figs. 3/4/6/7 and §4/§5 prose (absolute values). Anchors the
+//! paper states only graphically are marked `estimated` and carry the
+//! Fig.-8 bar reading.
+
+use crate::arch::{ArchId, CompilerId};
+use crate::gemm::Precision;
+
+/// One calibration anchor: the paper's measured optimum.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Anchor {
+    pub arch: ArchId,
+    pub compiler: CompilerId,
+    pub precision: Precision,
+    /// Paper's optimal tile size (Table 4).
+    pub t: u64,
+    /// Paper's optimal hardware threads per core (Table 4; 1 for GPUs).
+    pub hw_threads: u64,
+    /// Measured GFLOP/s at the optimum, N = 10240.
+    pub gflops: f64,
+    /// Quoted directly in the paper text/tables vs read off a figure.
+    pub quoted: bool,
+}
+
+/// The full anchor table.
+pub const ANCHORS: &[Anchor] = &[
+    // --- GPUs (Table 4 + §5: K80 15 % SP / 18 % DP; P100 46 % / 28 %) --
+    Anchor { arch: ArchId::K80, compiler: CompilerId::Cuda,
+             precision: Precision::F32, t: 4, hw_threads: 1,
+             gflops: 655.0, quoted: true },   // 15 % of 4.37 TF
+    Anchor { arch: ArchId::K80, compiler: CompilerId::Cuda,
+             precision: Precision::F64, t: 2, hw_threads: 1,
+             gflops: 263.0, quoted: true },   // 18 % of 1.46 TF
+    Anchor { arch: ArchId::P100Nvlink, compiler: CompilerId::Cuda,
+             precision: Precision::F32, t: 4, hw_threads: 1,
+             gflops: 4876.0, quoted: true },  // 46 % of 10.6 TF
+    Anchor { arch: ArchId::P100Nvlink, compiler: CompilerId::Cuda,
+             precision: Precision::F64, t: 4, hw_threads: 1,
+             gflops: 1484.0, quoted: true },  // 28 % of 5.3 TF
+    Anchor { arch: ArchId::P100Pcie, compiler: CompilerId::Cuda,
+             precision: Precision::F32, t: 4, hw_threads: 1,
+             gflops: 4278.0, quoted: true },  // 46 % of 9.3 TF
+    Anchor { arch: ArchId::P100Pcie, compiler: CompilerId::Cuda,
+             precision: Precision::F64, t: 4, hw_threads: 1,
+             gflops: 1316.0, quoted: true },  // 28 % of 4.7 TF
+    // --- Haswell (Table 4; §4: SP peak 665 at N=2048, plateau 400) ----
+    Anchor { arch: ArchId::Haswell, compiler: CompilerId::Intel,
+             precision: Precision::F32, t: 64, hw_threads: 1,
+             gflops: 400.0, quoted: true },   // large-N plateau
+    Anchor { arch: ArchId::Haswell, compiler: CompilerId::Intel,
+             precision: Precision::F64, t: 128, hw_threads: 1,
+             gflops: 310.0, quoted: false },  // Fig. 6 plateau (est.)
+    Anchor { arch: ArchId::Haswell, compiler: CompilerId::Gnu,
+             precision: Precision::F32, t: 128, hw_threads: 1,
+             gflops: 360.0, quoted: false },  // Fig. 7 (est.)
+    Anchor { arch: ArchId::Haswell, compiler: CompilerId::Gnu,
+             precision: Precision::F64, t: 128, hw_threads: 1,
+             gflops: 280.0, quoted: false },  // Fig. 6 (est.)
+    // --- KNL (Table 4; §3: Intel DP best 510; §4: 527 at N=7168/9216) -
+    Anchor { arch: ArchId::Knl, compiler: CompilerId::Intel,
+             precision: Precision::F64, t: 64, hw_threads: 1,
+             gflops: 510.0, quoted: true },
+    Anchor { arch: ArchId::Knl, compiler: CompilerId::Intel,
+             precision: Precision::F32, t: 64, hw_threads: 2,
+             gflops: 850.0, quoted: false },  // Fig. 4/7 (est., ~16 %)
+    Anchor { arch: ArchId::Knl, compiler: CompilerId::Gnu,
+             precision: Precision::F32, t: 256, hw_threads: 1,
+             gflops: 560.0, quoted: false },  // Fig. 4 (est.)
+    Anchor { arch: ArchId::Knl, compiler: CompilerId::Gnu,
+             precision: Precision::F64, t: 128, hw_threads: 2,
+             gflops: 340.0, quoted: false },  // Fig. 4 (est.)
+    // --- Power8 (Table 4; conclusion: "close to 50 % … on Power8") ----
+    Anchor { arch: ArchId::Power8, compiler: CompilerId::Xl,
+             precision: Precision::F32, t: 512, hw_threads: 2,
+             gflops: 620.0, quoted: false },  // 48 % of 1.29 TF (Fig. 8)
+    Anchor { arch: ArchId::Power8, compiler: CompilerId::Xl,
+             precision: Precision::F64, t: 512, hw_threads: 2,
+             gflops: 309.0, quoted: false },  // 48 % of 0.64 TF (Fig. 8)
+    Anchor { arch: ArchId::Power8, compiler: CompilerId::Gnu,
+             precision: Precision::F32, t: 256, hw_threads: 8,
+             gflops: 500.0, quoted: false },  // Fig. 7 (est.)
+    Anchor { arch: ArchId::Power8, compiler: CompilerId::Gnu,
+             precision: Precision::F64, t: 256, hw_threads: 4,
+             gflops: 250.0, quoted: false },  // Fig. 6 (est.)
+];
+
+/// Look up the anchor for a combination.
+pub fn anchor(arch: ArchId, compiler: CompilerId,
+              precision: Precision) -> Option<&'static Anchor> {
+    ANCHORS.iter().find(|a| {
+        a.arch == arch && a.compiler == compiler
+            && a.precision == precision
+    })
+}
+
+/// GPU effective-reuse coefficient: per-thread data reuse ≈ `c · T`
+/// (register blocking plus intra-block L1/texture sharing). Fitted to the
+/// anchors; P100's larger per-core register file and better caching show
+/// up as a larger `c` (paper §5 attributes the gap to exactly that).
+pub fn gpu_reuse_coeff(arch: ArchId, precision: Precision) -> f64 {
+    match (arch, precision) {
+        (ArchId::K80, Precision::F32) => 2.9,
+        (ArchId::K80, Precision::F64) => 4.4,
+        (_, Precision::F32) => 6.7,  // P100-class
+        (_, Precision::F64) => 4.1,
+    }
+}
+
+/// Cache/register budget per SM (bytes) available for resident threads'
+/// streamed working sets before reuse degrades. K80's small unified
+/// L1+L2 share vs P100's larger, better-managed one (paper §5).
+pub fn gpu_sm_cache_budget(arch: ArchId) -> f64 {
+    match arch {
+        ArchId::K80 => 200.0 * 1024.0,
+        _ => 600.0 * 1024.0,
+    }
+}
+
+/// Default absolute efficiency when no anchor exists (Host runs are
+/// measured, not simulated; this is only a fallback for hypothetical
+/// combinations).
+pub const DEFAULT_KERNEL_EFF: f64 = 0.35;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn anchors_unique() {
+        for (i, a) in ANCHORS.iter().enumerate() {
+            for b in &ANCHORS[i + 1..] {
+                assert!(!(a.arch == b.arch && a.compiler == b.compiler
+                          && a.precision == b.precision),
+                        "duplicate anchor {a:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn anchors_respect_table3_compilers() {
+        use crate::arch::compiler::valid_compilers;
+        for a in ANCHORS {
+            assert!(valid_compilers(a.arch).contains(&a.compiler),
+                    "{a:?} uses a compiler the paper didn't test");
+        }
+    }
+
+    #[test]
+    fn anchor_relative_peaks_match_fig8() {
+        // K80: 15 % SP / 18 % DP; P100 nvlink: 46 % / 28 %.
+        let rel = |arch: ArchId, c, p| {
+            anchor(arch, c, p).unwrap().gflops
+                / arch.spec().peak_gflops(p)
+        };
+        assert!((rel(ArchId::K80, CompilerId::Cuda, Precision::F32)
+                 - 0.15).abs() < 0.01);
+        assert!((rel(ArchId::K80, CompilerId::Cuda, Precision::F64)
+                 - 0.18).abs() < 0.01);
+        assert!((rel(ArchId::P100Nvlink, CompilerId::Cuda, Precision::F32)
+                 - 0.46).abs() < 0.01);
+        assert!((rel(ArchId::P100Nvlink, CompilerId::Cuda, Precision::F64)
+                 - 0.28).abs() < 0.01);
+        // "almost 50 %" on Power8
+        assert!((rel(ArchId::Power8, CompilerId::Xl, Precision::F64)
+                 - 0.48).abs() < 0.01);
+    }
+
+    #[test]
+    fn knl_anchor_is_the_quoted_510() {
+        let a = anchor(ArchId::Knl, CompilerId::Intel,
+                       Precision::F64).unwrap();
+        assert_eq!(a.gflops, 510.0);
+        assert_eq!((a.t, a.hw_threads), (64, 1));
+        assert!(a.quoted);
+    }
+
+    #[test]
+    fn table4_optimal_params_encoded() {
+        let p8 = anchor(ArchId::Power8, CompilerId::Xl,
+                        Precision::F32).unwrap();
+        assert_eq!((p8.t, p8.hw_threads), (512, 2));
+        let k80dp = anchor(ArchId::K80, CompilerId::Cuda,
+                           Precision::F64).unwrap();
+        assert_eq!(k80dp.t, 2);
+    }
+}

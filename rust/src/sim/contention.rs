@@ -1,0 +1,126 @@
+//! The KNL even-N anomaly — paper §4/§5.
+//!
+//! Observation (Fig. 6/7): with the *Intel* compiler, KNL performance
+//! drops sharply at every second N (double precision) and every fourth N
+//! (single precision) starting at N = 8192, in both MCDRAM modes; e.g.
+//! 303 GFLOP/s instead of 527 at N = 8192 (DP, 64 threads). Choosing an
+//! *odd* thread count (91) restores 490 GFLOP/s. GNU binaries are
+//! unaffected.
+//!
+//! The paper's hypothesis: "the KNL has performance issues if many
+//! hardware threads access the very same memory location at the same
+//! time … we suspect Intel's optimized OpenMP implementation to cause
+//! this." We implement that hypothesis directly as a documented,
+//! testable heuristic — at the stated periodicities the B-matrix rows
+//! shared by all threads align so that an even thread count gangs up on
+//! the same lines simultaneously.
+
+use crate::arch::{ArchId, CompilerId};
+use crate::gemm::Precision;
+
+/// Penalty multiplier for the anomaly (1.0 = unaffected).
+///
+/// `total_threads` is the OS-level thread count (cores × hw threads per
+/// core, or the override used in the paper's 91-thread experiment).
+pub fn knl_even_n_penalty(arch: ArchId, compiler: CompilerId,
+                          precision: Precision, n: u64,
+                          total_threads: u64) -> f64 {
+    if arch != ArchId::Knl || compiler != CompilerId::Intel {
+        return 1.0;
+    }
+    if n < 8192 || total_threads < 32 || total_threads % 2 == 1 {
+        return 1.0;
+    }
+    // Severity tracks how power-of-two aligned N is: the paper's N=8192
+    // (2^13) drops to 303 of 527 GFLOP/s while its tuning size N=10240
+    // (a 2048-multiple but not 4096-aligned) still reaches 510 — only
+    // ~3 % below the clean neighbours. DP shows the mild dips at every
+    // second step ("almost every second N"), SP only the severe ones at
+    // every fourth.
+    if n % 4096 == 0 {
+        return 0.575; // 303/527 at the paper's N=8192 DP point
+    }
+    if precision == Precision::F64 && n % 2048 == 0 {
+        return 0.96; // 510 vs 527-ish at N=10240
+    }
+    1.0
+}
+
+/// The paper's verification experiment: N=8192 DP with 91 threads gives
+/// 490 GFLOP/s — only 7 % below the unaffected neighbours. Odd thread
+/// counts dodge the penalty entirely but pay a small imbalance cost.
+pub fn odd_thread_imbalance(total_threads: u64, cores: u64) -> f64 {
+    if total_threads % cores == 0 {
+        1.0
+    } else {
+        // threads don't tile the cores evenly: ~7 % loss (paper's 490 vs
+        // 527 measurement)
+        0.93
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dp_drops_every_second_step_from_8192() {
+        let p = |n| knl_even_n_penalty(ArchId::Knl, CompilerId::Intel,
+                                       Precision::F64, n, 64);
+        assert_eq!(p(7168), 1.0);
+        assert!(p(8192) < 0.6, "severe at 2^13");
+        assert_eq!(p(9216), 1.0);
+        // the tuning size: mild dip only (510 vs ~527 in the paper)
+        assert!(p(10240) > 0.9 && p(10240) < 1.0);
+        assert_eq!(p(11264), 1.0);
+        assert!(p(12288) < 0.6);
+        assert!(p(16384) < 0.6);
+    }
+
+    #[test]
+    fn sp_drops_every_fourth_step() {
+        let p = |n| knl_even_n_penalty(ArchId::Knl, CompilerId::Intel,
+                                       Precision::F32, n, 256);
+        assert!(p(8192) < 0.6);
+        assert_eq!(p(9216), 1.0);
+        assert_eq!(p(10240), 1.0, "SP: only 4096-aligned sizes drop");
+        assert_eq!(p(11264), 1.0);
+        assert!(p(12288) < 0.6);
+        assert!(p(16384) < 0.6);
+    }
+
+    #[test]
+    fn gnu_unaffected() {
+        assert_eq!(knl_even_n_penalty(ArchId::Knl, CompilerId::Gnu,
+                                      Precision::F64, 8192, 64), 1.0);
+    }
+
+    #[test]
+    fn other_archs_unaffected() {
+        assert_eq!(knl_even_n_penalty(ArchId::Haswell, CompilerId::Intel,
+                                      Precision::F64, 8192, 24), 1.0);
+    }
+
+    #[test]
+    fn odd_threads_dodge_penalty() {
+        assert_eq!(knl_even_n_penalty(ArchId::Knl, CompilerId::Intel,
+                                      Precision::F64, 8192, 91), 1.0);
+        // but pay imbalance
+        assert!(odd_thread_imbalance(91, 64) < 1.0);
+        assert_eq!(odd_thread_imbalance(128, 64), 1.0);
+    }
+
+    #[test]
+    fn paper_91_thread_experiment_shape() {
+        // 64 threads at N=8192: 0.575x of clean. 91 threads: 0.93x.
+        // Paper: 303 vs 490 GFLOP/s of a 527 baseline.
+        let clean = 527.0;
+        let with64 = clean * knl_even_n_penalty(
+            ArchId::Knl, CompilerId::Intel, Precision::F64, 8192, 64);
+        let with91 = clean * odd_thread_imbalance(91, 64)
+            * knl_even_n_penalty(ArchId::Knl, CompilerId::Intel,
+                                 Precision::F64, 8192, 91);
+        assert!((with64 - 303.0).abs() < 5.0, "{with64}");
+        assert!((with91 - 490.0).abs() < 5.0, "{with91}");
+    }
+}

@@ -1,0 +1,540 @@
+//! The machine performance model (system S7): composes the cache
+//! simulator, occupancy model, memory system, compiler traits and
+//! calibration anchors into a GFLOP/s prediction for any tuning point.
+//!
+//! Structure (see module docs of [`crate::sim`]): everything *relative*
+//! is mechanistic; the absolute level is anchored by a per-(arch,
+//! compiler, precision) scale factor fixed so the model reproduces the
+//! paper's measured optimum at the paper's optimal parameters.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::arch::{ArchClass, ArchId, ArchSpec, CacheScope, CompilerId};
+use crate::gemm::{metrics, Precision};
+
+use super::cache::{CacheConfig, Hierarchy};
+use super::calibrate;
+use super::contention;
+use super::memsys::{self, MemMode};
+use super::occupancy;
+use super::trace::{self, TileTraffic, TraceParams};
+use super::vector;
+
+/// One point of the paper's multidimensional tuning space (§2.3).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TuningPoint {
+    pub arch: ArchId,
+    pub compiler: CompilerId,
+    pub precision: Precision,
+    /// Matrix size N.
+    pub n: u64,
+    /// Tile size T.
+    pub t: u64,
+    /// Hardware threads per core (CPU; 1 for GPUs).
+    pub hw_threads: u64,
+    pub memmode: MemMode,
+    /// Override the total OS thread count (the paper's 91-thread KNL
+    /// experiment); `None` = cores × hw_threads.
+    pub thread_override: Option<u64>,
+}
+
+impl TuningPoint {
+    pub fn cpu(arch: ArchId, compiler: CompilerId, precision: Precision,
+               n: u64, t: u64, hw_threads: u64) -> Self {
+        Self { arch, compiler, precision, n, t, hw_threads,
+               memmode: MemMode::Default, thread_override: None }
+    }
+
+    pub fn gpu(arch: ArchId, precision: Precision, n: u64, t: u64)
+               -> Self {
+        Self { arch, compiler: CompilerId::Cuda, precision, n, t,
+               hw_threads: 1, memmode: MemMode::Default,
+               thread_override: None }
+    }
+
+    pub fn with_memmode(mut self, m: MemMode) -> Self {
+        self.memmode = m;
+        self
+    }
+
+    pub fn with_thread_override(mut self, total: u64) -> Self {
+        self.thread_override = Some(total);
+        self
+    }
+
+    pub fn total_threads(&self, cores: u64) -> u64 {
+        self.thread_override.unwrap_or(cores * self.hw_threads)
+    }
+}
+
+/// What limited the predicted performance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PredictionBound {
+    Compute,
+    /// A cache level's bandwidth (index 0 = L1).
+    Cache(usize),
+    /// DRAM / MCDRAM / HBM streaming.
+    Memory,
+    /// GPU latency hiding (occupancy).
+    Latency,
+}
+
+/// Model output.
+#[derive(Debug, Clone)]
+pub struct Prediction {
+    pub gflops: f64,
+    pub bound: PredictionBound,
+    /// Seconds for the whole GEMM (excluding host↔device copies, like
+    /// the paper's protocol).
+    pub seconds: f64,
+    /// Fraction of theoretical peak (paper Fig. 8 quantity).
+    pub relative_peak: f64,
+    /// Anchor scale that was applied (1.0 = purely mechanistic).
+    pub anchor_scale: f64,
+}
+
+type TraceKey = (u64, u64, u64); // (t, elem_bytes, hw_threads)
+
+/// Per-architecture model instance with a memoised trace cache.
+pub struct Machine {
+    pub spec: ArchSpec,
+    traces: Mutex<HashMap<TraceKey, TileTraffic>>,
+    anchors: Mutex<HashMap<(CompilerId, Precision), f64>>,
+}
+
+impl Machine {
+    pub fn for_arch(arch: ArchId) -> Self {
+        Self { spec: arch.spec(), traces: Mutex::new(HashMap::new()),
+               anchors: Mutex::new(HashMap::new()) }
+    }
+
+    /// Predict performance at a tuning point (anchored).
+    pub fn predict(&self, point: &TuningPoint) -> Prediction {
+        assert_eq!(point.arch, self.spec.id, "point/machine arch mismatch");
+        let mut raw = self.predict_raw(point);
+        let scale = self.anchor_scale(point.compiler, point.precision);
+        raw.gflops *= scale;
+        raw.seconds /= scale;
+        raw.anchor_scale = scale;
+        raw.relative_peak =
+            raw.gflops / self.spec.peak_gflops(point.precision);
+        raw
+    }
+
+    /// The mechanistic model without anchor scaling (used to compute the
+    /// scale itself, and exposed for ablation benches).
+    pub fn predict_raw(&self, point: &TuningPoint) -> Prediction {
+        match self.spec.class {
+            ArchClass::Cpu => self.cpu_predict(point),
+            ArchClass::Gpu => self.gpu_predict(point),
+        }
+    }
+
+    fn anchor_scale(&self, compiler: CompilerId, precision: Precision)
+                    -> f64 {
+        if let Some(s) = self.anchors.lock().unwrap()
+            .get(&(compiler, precision)) {
+            return *s;
+        }
+        let scale = match calibrate::anchor(self.spec.id, compiler,
+                                            precision) {
+            Some(a) => {
+                let point = match self.spec.class {
+                    ArchClass::Gpu => TuningPoint::gpu(
+                        self.spec.id, precision,
+                        crate::gemm::GemmWorkload::TUNING_N, a.t),
+                    ArchClass::Cpu => TuningPoint::cpu(
+                        self.spec.id, compiler, precision,
+                        crate::gemm::GemmWorkload::TUNING_N, a.t,
+                        a.hw_threads),
+                };
+                let raw = self.predict_raw(&point);
+                a.gflops / raw.gflops.max(1e-9)
+            }
+            None => calibrate::DEFAULT_KERNEL_EFF,
+        };
+        self.anchors.lock().unwrap()
+            .insert((compiler, precision), scale);
+        scale
+    }
+
+    // ------------------------------------------------------------ CPU --
+
+    /// Per-thread cache hierarchy for this thread count (capacities per
+    /// Table 4's "cache per HW thread" logic). 10 % of each level is
+    /// reserved for OS/stack/TLB noise — a tile that *exactly* equals
+    /// the nominal capacity does not enjoy perfect residency in practice
+    /// (matrix rows are strided by N, not packed).
+    fn thread_hierarchy(&self, hw_threads: u64) -> Vec<CacheConfig> {
+        let cpu = self.spec.cpu();
+        cpu.caches
+            .iter()
+            .map(|c| {
+                let per_thread = c
+                    .bytes_per_thread(cpu.cores_per_socket(), hw_threads);
+                let bytes = (per_thread * 9 / 10)
+                    .next_multiple_of(c.line_bytes * c.assoc as u64)
+                    .max(c.line_bytes * c.assoc as u64);
+                CacheConfig { name: c.name, bytes,
+                              line_bytes: c.line_bytes, assoc: c.assoc }
+            })
+            .collect()
+    }
+
+    fn traffic(&self, t: u64, elem_bytes: u64, hw_threads: u64)
+               -> TileTraffic {
+        let key = (t, elem_bytes, hw_threads);
+        if let Some(tr) = self.traces.lock().unwrap().get(&key) {
+            return tr.clone();
+        }
+        let mut hier = Hierarchy::new(self.thread_hierarchy(hw_threads));
+        let tr = trace::tile_pass(&mut hier,
+                                  TraceParams::for_tile(t, elem_bytes));
+        self.traces.lock().unwrap().insert(key, tr.clone());
+        tr
+    }
+
+    fn cpu_predict(&self, p: &TuningPoint) -> Prediction {
+        let cpu = self.spec.cpu();
+        let s = p.precision.size_bytes();
+        let total_threads = p.total_threads(cpu.cores);
+        let clock_hz = cpu.clock_ghz * 1e9;
+
+        // --- work decomposition -------------------------------------
+        let tiles = (p.n / p.t) * (p.n / p.t);
+        let ksteps_per_tile = p.n / p.t;
+        let tiles_per_thread = tiles.div_ceil(total_threads);
+        let busy_per_core = (tiles.div_ceil(cpu.cores))
+            .min(p.hw_threads.max(1));
+        let ksteps_core = tiles_per_thread * busy_per_core
+            * ksteps_per_tile;
+        let flops_per_kstep = 2.0 * (p.t as f64).powi(3);
+
+        // --- compute time (busiest core) ----------------------------
+        let o = match p.precision {
+            Precision::F32 => cpu.flops_per_cycle_sp,
+            Precision::F64 => cpu.flops_per_cycle_dp,
+        };
+        let inst = vector::instruction_efficiency(p.arch, p.compiler,
+                                                  p.precision, p.t);
+        // SMT issue efficiency follows the threads that actually have
+        // work — at small N most SMT slots sit idle.
+        let smt = vector::smt_issue_efficiency(
+            p.arch, busy_per_core.min(p.hw_threads.max(1)));
+        let rate_core = o * inst * smt * clock_hz; // flops/s per core
+        let t_compute = ksteps_core as f64 * flops_per_kstep / rate_core;
+
+        // --- cache-bandwidth time (per level, busiest core) ----------
+        let tr = self.traffic(p.t, s, p.hw_threads);
+        let mut t_cache = vec![0.0f64; cpu.caches.len()];
+        for (i, level) in cpu.caches.iter().enumerate() {
+            let bw = level.bytes_per_cycle_per_core * clock_hz;
+            t_cache[i] = ksteps_core as f64 * tr.level_bytes[i] / bw;
+        }
+
+        // --- matrix-source (DRAM/MCDRAM/LLC-fit) time, global --------
+        let src_per_kstep = tr.mem_bytes.max(tr.compulsory_bytes);
+        let total_src = tiles as f64 * ksteps_per_tile as f64
+            * src_per_kstep;
+        // Tile gathering is strided in the big matrices (row stride N):
+        // each T-element tile row is a separate DRAM burst, so effective
+        // bandwidth is far below streaming (this is what makes the
+        // paper's performance double with T — Eq. 7's R = T in action).
+        const GATHER_EFF: f64 = 0.22;
+        let mut src_bw = memsys::cpu_stream_bandwidth_gbs(p.arch,
+                                                          p.memmode)
+            * GATHER_EFF * 1e9;
+        if let Some(fit_bw) =
+            memsys::llc_matrix_fit_gbs(p.arch, p.n, p.precision) {
+            // whole matrices resident in LLC: no DRAM gather penalty
+            src_bw = src_bw.max(fit_bw * 1e9);
+        }
+        let t_src = total_src / src_bw;
+
+        // --- compose -------------------------------------------------
+        let mut time = t_compute;
+        let mut bound = PredictionBound::Compute;
+        for (i, tc) in t_cache.iter().enumerate() {
+            if *tc > time {
+                time = *tc;
+                bound = PredictionBound::Cache(i);
+            }
+        }
+        if t_src > time {
+            time = t_src;
+            bound = PredictionBound::Memory;
+        }
+        // parallel-region launch overhead (once per run)
+        time += 10e-6 + 0.2e-6 * total_threads as f64;
+
+        // --- quirks ---------------------------------------------------
+        let mut factor = contention::knl_even_n_penalty(
+            p.arch, p.compiler, p.precision, p.n, total_threads);
+        factor *= contention::odd_thread_imbalance(total_threads,
+                                                   cpu.cores);
+        if p.arch == ArchId::Knl && p.memmode == MemMode::KnlFlat {
+            // §3: flat mode ~2 % faster overall
+            factor *= 1.02;
+        }
+        let time = time / factor;
+
+        let flops = metrics::flops(p.n) as f64;
+        let gflops = flops / time / 1e9;
+        Prediction { gflops, bound, seconds: time,
+                     relative_peak: gflops
+                     / self.spec.peak_gflops(p.precision),
+                     anchor_scale: 1.0 }
+    }
+
+    // ------------------------------------------------------------ GPU --
+
+    fn gpu_predict(&self, p: &TuningPoint) -> Prediction {
+        let gpu = self.spec.gpu();
+        let s = p.precision.size_bytes() as f64;
+        let peak = gpu.peak_gflops(p.precision) * 1e9; // flops/s
+        let occ = occupancy::occupancy(gpu, p.t, p.precision);
+
+        // compute rate: peak modulated by instruction mix and latency
+        // hiding (Kepler's warp starvation is the K80 story).
+        let inst = 0.9
+            * (1.0 - (8.0 / (p.t as f64 * 8.0 + 16.0)).min(0.35));
+        let compute_rate = peak * inst * occ.latency_factor;
+
+        // memory rate: effective reuse c·T, degraded when the resident
+        // threads' streamed working set overflows the SM cache budget,
+        // and heavily degraded by register spills (accumulator traffic).
+        let reuse = calibrate::gpu_reuse_coeff(p.arch, p.precision)
+            * p.t as f64;
+        let ws = occ.resident_threads as f64 * 2.0
+            * (p.t * p.t) as f64 * s;
+        let budget = calibrate::gpu_sm_cache_budget(p.arch);
+        let overflow = (ws / budget).max(1.0);
+        let spill_mult = if occ.spills {
+            // spilled accumulator adds ~T element stores per 2T flops
+            1.0 + p.t as f64 / 2.0
+        } else {
+            1.0
+        };
+        let mem_rate = gpu.mem_bandwidth_gbs * 1e9 / s * reuse
+            / overflow / spill_mult;
+
+        let (rate, bound) = if compute_rate <= mem_rate {
+            let b = if occ.latency_factor < 1.0 {
+                PredictionBound::Latency
+            } else {
+                PredictionBound::Compute
+            };
+            (compute_rate, b)
+        } else {
+            (mem_rate, PredictionBound::Memory)
+        };
+
+        // wave quantisation: blocks round up to full SM waves
+        let blocks = (p.n / (16 * p.t)).max(1).pow(2);
+        let per_wave = gpu.sms * occ.blocks_per_sm;
+        let waves = blocks.div_ceil(per_wave);
+        let tail = waves as f64 * per_wave as f64 / blocks as f64;
+
+        let flops = metrics::flops(p.n) as f64;
+        let mut time = flops / rate * tail.max(1.0);
+        time += memsys::gpu_launch_overhead_s(p.memmode);
+
+        let gflops = flops / time / 1e9;
+        Prediction { gflops, bound, seconds: time,
+                     relative_peak: gflops
+                     / self.spec.peak_gflops(p.precision),
+                     anchor_scale: 1.0 }
+    }
+}
+
+/// "Cache per HW thread" rows of Table 4 (exposed for the report engine):
+/// (level name, bytes per thread) for the architecture at `h` threads.
+pub fn cache_per_thread(arch: ArchId, h: u64) -> Vec<(&'static str, u64)> {
+    let spec = arch.spec();
+    match &spec.cpu {
+        Some(cpu) => cpu
+            .caches
+            .iter()
+            .map(|c| {
+                let cores = match c.scope {
+                    CacheScope::PerSocket => cpu.cores_per_socket(),
+                    _ => 1,
+                };
+                (c.name, c.bytes_per_thread(cores, h))
+            })
+            .collect(),
+        None => Vec::new(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn predict(arch: ArchId, compiler: CompilerId, prec: Precision,
+               n: u64, t: u64, h: u64) -> Prediction {
+        let m = Machine::for_arch(arch);
+        let p = match arch.spec().class {
+            ArchClass::Gpu => TuningPoint::gpu(arch, prec, n, t),
+            ArchClass::Cpu => TuningPoint::cpu(arch, compiler, prec, n,
+                                               t, h),
+        };
+        m.predict(&p)
+    }
+
+    #[test]
+    fn anchors_are_reproduced_exactly() {
+        // By construction, the model must return the paper's measured
+        // value at the paper's optimal parameters.
+        for a in calibrate::ANCHORS {
+            let got = predict(a.arch, a.compiler, a.precision, 10240,
+                              a.t, a.hw_threads);
+            assert!((got.gflops - a.gflops).abs() / a.gflops < 1e-6,
+                    "{a:?} -> {got:?}");
+        }
+    }
+
+    #[test]
+    fn knl_dp_optimum_is_h1_t64() {
+        // The cache mechanism must make (T=64, h=1) beat both (T=64,
+        // h=2) (L1 halves, B tile spills) and (T=128, h=1) (spills L1).
+        let best = predict(ArchId::Knl, CompilerId::Intel,
+                           Precision::F64, 10240, 64, 1).gflops;
+        let h2 = predict(ArchId::Knl, CompilerId::Intel, Precision::F64,
+                         10240, 64, 2).gflops;
+        let t128 = predict(ArchId::Knl, CompilerId::Intel,
+                           Precision::F64, 10240, 128, 1).gflops;
+        assert!(best > h2, "h=1 {best} must beat h=2 {h2}");
+        assert!(best > t128, "T=64 {best} must beat T=128 {t128}");
+    }
+
+    #[test]
+    fn gpu_t4_beats_neighbours_p100() {
+        let t2 = predict(ArchId::P100Nvlink, CompilerId::Cuda,
+                         Precision::F32, 10240, 2, 1).gflops;
+        let t4 = predict(ArchId::P100Nvlink, CompilerId::Cuda,
+                         Precision::F32, 10240, 4, 1).gflops;
+        let t8 = predict(ArchId::P100Nvlink, CompilerId::Cuda,
+                         Precision::F32, 10240, 8, 1).gflops;
+        let t16 = predict(ArchId::P100Nvlink, CompilerId::Cuda,
+                          Precision::F32, 10240, 16, 1).gflops;
+        assert!(t4 > t2 && t4 > t8 && t8 > t16,
+                "t2={t2} t4={t4} t8={t8} t16={t16}");
+    }
+
+    #[test]
+    fn power8_beats_k80_dp_runtime() {
+        // §4: "the Power8 runtime is surprisingly faster than the K80".
+        let p8 = predict(ArchId::Power8, CompilerId::Xl, Precision::F64,
+                         10240, 512, 2).gflops;
+        let k80 = predict(ArchId::K80, CompilerId::Cuda, Precision::F64,
+                          10240, 2, 1).gflops;
+        assert!(p8 > k80, "power8 {p8} vs k80 {k80}");
+    }
+
+    #[test]
+    fn knl_even_n_drop_and_91_thread_fix() {
+        let clean = predict(ArchId::Knl, CompilerId::Intel,
+                            Precision::F64, 9216, 64, 1).gflops;
+        let m = Machine::for_arch(ArchId::Knl);
+        let dropped = m.predict(&TuningPoint::cpu(
+            ArchId::Knl, CompilerId::Intel, Precision::F64, 8192, 64,
+            1)).gflops;
+        let fixed = m.predict(&TuningPoint::cpu(
+            ArchId::Knl, CompilerId::Intel, Precision::F64, 8192, 64, 1)
+            .with_thread_override(91)).gflops;
+        assert!(dropped < 0.65 * clean, "drop: {dropped} vs {clean}");
+        assert!(fixed > 0.85 * clean, "91-thread fix: {fixed} vs {clean}");
+    }
+
+    #[test]
+    fn haswell_sp_l3_hump() {
+        // §4/§5: SP peaks at N=2048 (A+B fit L3), larger N plateau lower.
+        let at2048 = predict(ArchId::Haswell, CompilerId::Intel,
+                             Precision::F32, 2048, 64, 1).gflops;
+        let at10240 = predict(ArchId::Haswell, CompilerId::Intel,
+                              Precision::F32, 10240, 64, 1).gflops;
+        assert!(at2048 > at10240,
+                "L3 hump: {at2048} should beat {at10240}");
+    }
+
+    #[test]
+    fn unified_memory_faster_small_n() {
+        let m = Machine::for_arch(ArchId::P100Nvlink);
+        let dev = m.predict(&TuningPoint::gpu(ArchId::P100Nvlink,
+                                              Precision::F32, 1024, 4));
+        let uni = m.predict(&TuningPoint::gpu(ArchId::P100Nvlink,
+                                              Precision::F32, 1024, 4)
+                            .with_memmode(MemMode::GpuUnified));
+        assert!(uni.gflops > dev.gflops);
+        // converges for large N
+        let dev_l = m.predict(&TuningPoint::gpu(ArchId::P100Nvlink,
+                                                Precision::F32, 16384, 4));
+        let uni_l = m.predict(&TuningPoint::gpu(ArchId::P100Nvlink,
+                                                Precision::F32, 16384, 4)
+                              .with_memmode(MemMode::GpuUnified));
+        assert!((uni_l.gflops - dev_l.gflops) / dev_l.gflops < 0.02);
+    }
+
+    #[test]
+    fn knl_flat_two_percent() {
+        let m = Machine::for_arch(ArchId::Knl);
+        let cached = m.predict(&TuningPoint::cpu(
+            ArchId::Knl, CompilerId::Intel, Precision::F64, 10240, 64,
+            1));
+        let flat = m.predict(&TuningPoint::cpu(
+            ArchId::Knl, CompilerId::Intel, Precision::F64, 10240, 64, 1)
+            .with_memmode(MemMode::KnlFlat));
+        let ratio = flat.gflops / cached.gflops;
+        assert!((ratio - 1.02).abs() < 0.005, "flat/cached = {ratio}");
+        // DDR-only "much slower"
+        let ddr = m.predict(&TuningPoint::cpu(
+            ArchId::Knl, CompilerId::Intel, Precision::F64, 10240, 256,
+            1).with_memmode(MemMode::KnlDdrOnly));
+        assert!(ddr.gflops < cached.gflops);
+    }
+
+    #[test]
+    fn small_n_underutilises() {
+        // Power8 XL T=512: N=1024 has only 4 tiles for 40 threads.
+        let tiny = predict(ArchId::Power8, CompilerId::Xl,
+                           Precision::F64, 1024, 512, 2);
+        let small = predict(ArchId::Power8, CompilerId::Xl,
+                            Precision::F64, 2048, 512, 2);
+        let big = predict(ArchId::Power8, CompilerId::Xl,
+                          Precision::F64, 10240, 512, 2);
+        assert!(tiny.gflops < 0.7 * big.gflops,
+                "underutilisation: {} vs {}", tiny.gflops, big.gflops);
+        assert!(small.gflops < 0.9 * big.gflops);
+        assert!(tiny.gflops < small.gflops);
+    }
+
+    #[test]
+    fn scaling_mostly_rises() {
+        // §4: "Most architectures show an increase … for higher N".
+        let lo = predict(ArchId::Knl, CompilerId::Intel, Precision::F64,
+                         1024, 64, 1).gflops;
+        let hi = predict(ArchId::Knl, CompilerId::Intel, Precision::F64,
+                         7168, 64, 1).gflops;
+        assert!(hi > lo);
+    }
+
+    #[test]
+    fn cache_per_thread_matches_table4() {
+        let rows = cache_per_thread(ArchId::Haswell, 1);
+        assert_eq!(rows[0], ("L1", 64 * 1024));
+        assert_eq!(rows[2], ("L3", 30 * 1024 * 1024 / 12));
+        assert!(cache_per_thread(ArchId::K80, 1).is_empty());
+    }
+
+    #[test]
+    fn prediction_is_deterministic_and_memoised() {
+        let m = Machine::for_arch(ArchId::Knl);
+        let p = TuningPoint::cpu(ArchId::Knl, CompilerId::Intel,
+                                 Precision::F64, 4096, 64, 1);
+        let a = m.predict(&p);
+        let b = m.predict(&p);
+        assert_eq!(a.gflops, b.gflops);
+    }
+}

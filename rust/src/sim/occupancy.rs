@@ -1,0 +1,149 @@
+//! GPU occupancy model — the register-pressure / latency-hiding part of
+//! the paper's §5 analysis ("the P100 having more registers per thread
+//! and more shared memory than the K80, thus more blocks can run
+//! concurrently which better hides memory latencies").
+//!
+//! Mapping recap (paper + Fig. 5): a block has 16×16 threads; each thread
+//! keeps a T×T accumulator tile in registers and streams A/B fragments.
+
+use crate::arch::GpuSpec;
+use crate::gemm::Precision;
+
+/// Thread-block shape of the GEMM kernel (fixed by the paper: e = 16²).
+pub const THREADS_PER_BLOCK: u64 = 256;
+
+/// Hardware register-per-thread ceiling (CUDA, both architectures).
+pub const MAX_REGS_PER_THREAD: u64 = 255;
+
+/// Practical register budget before nvcc starts placing the dynamically
+/// indexed element-layer arrays in *local memory* (the paper's kernel
+/// iterates runtime loops over per-thread tiles; beyond this budget the
+/// accumulator spills and every FMA pays a local-memory round trip).
+pub const SPILL_THRESHOLD: u64 = 96;
+
+/// Estimated 32-bit registers per thread for element tile T and element
+/// size S: the T×T accumulator (S/4 words each) plus operand fragments
+/// (2T) plus index-arithmetic overhead (the paper's "unfavorable ratio of
+/// integer to floating point operations" lives in these).
+pub fn regs_per_thread(t: u64, precision: Precision) -> u64 {
+    let words = precision.size_bytes() / 4;
+    t * t * words + 2 * t * words + 24
+}
+
+/// Occupancy outcome for a tuning point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Occupancy {
+    /// Blocks concurrently resident on one SM.
+    pub blocks_per_sm: u64,
+    /// Threads concurrently resident on one SM.
+    pub resident_threads: u64,
+    /// Did the accumulator exceed the register ceiling (spill)?
+    pub spills: bool,
+    /// Latency-hiding factor in (0, 1]: how well the resident threads
+    /// cover the pipeline+memory latency for this core count.
+    pub latency_factor: f64,
+}
+
+/// Cycles of latency each core needs covered by other warps. Kepler's
+/// in-order, dual-issue SMX needs far more warps in flight per core than
+/// Pascal (the factor behind K80's 15–18 % vs P100's 28–46 % of peak).
+pub fn latency_need_cycles(gpu: &GpuSpec) -> f64 {
+    if gpu.sms <= 16 {
+        // Kepler-class (K80)
+        32.0
+    } else {
+        // Pascal-class
+        24.0
+    }
+}
+
+/// Compute occupancy for tile size `t`.
+pub fn occupancy(gpu: &GpuSpec, t: u64, precision: Precision) -> Occupancy {
+    let mut regs = regs_per_thread(t, precision);
+    let spills = regs > SPILL_THRESHOLD;
+    if regs > MAX_REGS_PER_THREAD {
+        regs = MAX_REGS_PER_THREAD;
+    }
+    let by_regs = gpu.regs_per_sm / (regs * THREADS_PER_BLOCK);
+    let by_threads = gpu.max_threads_per_sm / THREADS_PER_BLOCK;
+    let blocks = by_regs.min(by_threads).min(gpu.max_blocks_per_sm).max(
+        if spills { 1 } else { 0 }).max(1);
+    let resident = blocks * THREADS_PER_BLOCK;
+    let need = gpu.cores_per_sm(precision) as f64
+        * latency_need_cycles(gpu);
+    let latency_factor = (resident as f64 / need).min(1.0);
+    Occupancy { blocks_per_sm: blocks, resident_threads: resident, spills,
+                latency_factor }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::ArchId;
+
+    fn p100() -> GpuSpec {
+        ArchId::P100Nvlink.spec().gpu().clone()
+    }
+
+    fn k80() -> GpuSpec {
+        ArchId::K80.spec().gpu().clone()
+    }
+
+    #[test]
+    fn small_tiles_full_occupancy() {
+        let o = occupancy(&p100(), 4, Precision::F32);
+        assert!(!o.spills);
+        assert_eq!(o.resident_threads, 2048); // thread-limited
+        assert_eq!(o.latency_factor, 1.0);
+    }
+
+    #[test]
+    fn register_pressure_reduces_blocks() {
+        let o4 = occupancy(&p100(), 4, Precision::F32);
+        let o8 = occupancy(&p100(), 8, Precision::F32);
+        assert!(o8.resident_threads < o4.resident_threads,
+                "{o8:?} vs {o4:?}");
+    }
+
+    #[test]
+    fn t16_sp_spills() {
+        // 16² + 32 + 24 = 312 > 255
+        assert!(regs_per_thread(16, Precision::F32) > MAX_REGS_PER_THREAD);
+        let o = occupancy(&p100(), 16, Precision::F32);
+        assert!(o.spills);
+    }
+
+    #[test]
+    fn dp_doubles_register_words() {
+        assert_eq!(regs_per_thread(4, Precision::F64),
+                   2 * (16 + 8) + 24);
+        assert!(regs_per_thread(8, Precision::F64)
+                > regs_per_thread(8, Precision::F32));
+    }
+
+    #[test]
+    fn k80_needs_more_warps_sp() {
+        // K80: 192 SP cores * 32 cycles = 6144 needed, 2048 resident
+        let o = occupancy(&k80(), 4, Precision::F32);
+        assert!(o.latency_factor < 0.5, "{o:?}");
+        // P100 SP covers its latency at full occupancy
+        let p = occupancy(&p100(), 4, Precision::F32);
+        assert_eq!(p.latency_factor, 1.0);
+    }
+
+    #[test]
+    fn k80_dp_hides_latency_better_than_sp() {
+        // paper: K80 DP relative peak (18%) > SP (15%) — fewer DP cores
+        // need fewer warps in flight.
+        let sp = occupancy(&k80(), 4, Precision::F32);
+        let dp = occupancy(&k80(), 4, Precision::F64);
+        assert!(dp.latency_factor > sp.latency_factor);
+    }
+
+    #[test]
+    fn at_least_one_block() {
+        let o = occupancy(&k80(), 32, Precision::F64); // huge tile, spills
+        assert!(o.blocks_per_sm >= 1);
+        assert!(o.spills);
+    }
+}

@@ -1,0 +1,166 @@
+//! TPU roofline / VMEM analysis of the L1 Pallas kernel — the
+//! DESIGN.md §Hardware-Adaptation quantified.
+//!
+//! interpret=True on the CPU plugin yields numpy-speed wallclock, which
+//! is *not* a TPU proxy; following the charter, real-TPU performance is
+//! estimated structurally: VMEM footprint per grid cell, MXU utilization
+//! of the `(t_m × t_k) @ (t_k × t_n)` contraction, and the arithmetic
+//! intensity against the HBM roofline. These numbers appear in
+//! EXPERIMENTS.md §Perf-L1 and are checked for internal consistency in
+//! tests.
+
+use crate::gemm::Precision;
+
+/// A generic TPU-core model (v4-like orders of magnitude; the analysis
+/// only needs ratios, mirroring how the paper translates A100/V100
+/// numbers into efficiency ratios).
+#[derive(Debug, Clone, Copy)]
+pub struct TpuCore {
+    /// MXU systolic array dimension (128x128).
+    pub mxu_dim: u64,
+    /// Peak MACs/cycle of the MXU at bf16 (mxu_dim^2).
+    pub clock_ghz: f64,
+    /// VMEM capacity in bytes.
+    pub vmem_bytes: u64,
+    /// HBM bandwidth GB/s.
+    pub hbm_gbs: f64,
+}
+
+impl Default for TpuCore {
+    fn default() -> Self {
+        Self { mxu_dim: 128, clock_ghz: 0.94,
+               vmem_bytes: 16 * 1024 * 1024, hbm_gbs: 1200.0 }
+    }
+}
+
+/// Structural analysis of one kernel variant.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelAnalysis {
+    /// Bytes of VMEM a grid cell keeps resident (A, B, C-in, C-out
+    /// blocks + accumulator scratch).
+    pub vmem_bytes: u64,
+    /// Fraction of VMEM used.
+    pub vmem_fraction: f64,
+    /// MXU utilization of the tile contraction: how much of the
+    /// 128x128 array the (t_m, t_k, t_n) matmul fills.
+    pub mxu_utilization: f64,
+    /// FLOPs per HBM byte moved (arithmetic intensity, paper Eq. 7's
+    /// R(N,T) converted to bytes).
+    pub arithmetic_intensity: f64,
+    /// Compute-bound on the roofline? (intensity above the ridge)
+    pub compute_bound: bool,
+    /// Estimated fraction of peak the variant sustains on the roofline.
+    pub roofline_fraction: f64,
+}
+
+/// Analyse a square-tile GEMM variant `(n, t, precision)` on a TPU core.
+pub fn analyse(core: &TpuCore, n: u64, t: u64, precision: Precision)
+               -> KernelAnalysis {
+    let s = precision.size_bytes();
+    // A (t x t) + B (t x t) + C-in + C-out + acc scratch
+    let vmem = 5 * t * t * s;
+    let vmem_fraction = vmem as f64 / core.vmem_bytes as f64;
+
+    // MXU fill: each dimension of the tile covers min(t, 128)/128 of
+    // the systolic array; utilization is the product over the two
+    // spatial dims (the k dim streams).
+    let fill = (t.min(core.mxu_dim) as f64 / core.mxu_dim as f64).powi(2);
+    // tiles smaller than the array waste the remainder; tiles larger
+    // than the array pipeline perfectly
+    let mxu_utilization = if t >= core.mxu_dim { 1.0 } else { fill };
+
+    // per k-step a grid cell moves 2 t^2 S bytes from HBM and computes
+    // 2 t^3 flops -> intensity = t / S flops/byte (Eq. 7 in bytes)
+    let intensity = t as f64 / s as f64;
+    let _ = n; // intensity is N-free in the limit (paper: lim R = T)
+
+    // roofline: peak flops/s vs intensity * bandwidth
+    let peak = (core.mxu_dim * core.mxu_dim) as f64 * 2.0
+        * core.clock_ghz * 1e9 * mxu_utilization;
+    let mem_rate = intensity * core.hbm_gbs * 1e9;
+    let achievable = peak.min(mem_rate);
+    let ridge = peak / (core.hbm_gbs * 1e9);
+    KernelAnalysis {
+        vmem_bytes: vmem,
+        vmem_fraction,
+        mxu_utilization,
+        arithmetic_intensity: intensity,
+        compute_bound: intensity >= ridge,
+        roofline_fraction: achievable / ((core.mxu_dim * core.mxu_dim)
+                                         as f64 * 2.0 * core.clock_ghz
+                                         * 1e9),
+    }
+}
+
+/// The largest square tile that fits VMEM for a precision — the TPU
+/// analogue of Table 4's "first cache level that can hold a tile".
+pub fn max_vmem_tile(core: &TpuCore, precision: Precision) -> u64 {
+    let s = precision.size_bytes();
+    let mut t = 1u64;
+    while 5 * (2 * t) * (2 * t) * s <= core.vmem_bytes {
+        t *= 2;
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vmem_accounting_matches_python_side() {
+        // python GemmSpec.vmem_bytes: tile_bytes + 3*t*t*s =
+        // (2 + 3) t^2 s = 5 t^2 s — keep in sync
+        let a = analyse(&TpuCore::default(), 1024, 128, Precision::F32);
+        assert_eq!(a.vmem_bytes, 5 * 128 * 128 * 4);
+        assert!(a.vmem_fraction < 0.02);
+    }
+
+    #[test]
+    fn mxu_fill_scales_with_tile() {
+        let core = TpuCore::default();
+        let t64 = analyse(&core, 1024, 64, Precision::F32);
+        let t128 = analyse(&core, 1024, 128, Precision::F32);
+        let t256 = analyse(&core, 1024, 256, Precision::F32);
+        assert!((t64.mxu_utilization - 0.25).abs() < 1e-12);
+        assert_eq!(t128.mxu_utilization, 1.0);
+        assert_eq!(t256.mxu_utilization, 1.0, "larger tiles pipeline");
+    }
+
+    #[test]
+    fn ridge_point_behaviour() {
+        let core = TpuCore::default();
+        // t=8 f32: the MXU is so underfilled that even intensity 2 is
+        // "compute"-bound — wasted systolic cells, terrible fraction
+        let small = analyse(&core, 1024, 8, Precision::F32);
+        assert!(small.roofline_fraction < 0.01);
+        // t=128 f64: full MXU but intensity 16 < ridge (~25.6) —
+        // memory-bound (the TPU echo of the paper's K80 DP story)
+        let dp = analyse(&core, 1024, 128, Precision::F64);
+        assert!(!dp.compute_bound);
+        assert!(dp.roofline_fraction < 0.99);
+        // t=128 f32: intensity 32 — compute-bound at full MXU
+        let big = analyse(&core, 1024, 128, Precision::F32);
+        assert!(big.compute_bound);
+        assert!(big.roofline_fraction > 0.99);
+        assert!(small.roofline_fraction < big.roofline_fraction);
+    }
+
+    #[test]
+    fn max_tile_fits_vmem() {
+        let core = TpuCore::default();
+        let t32 = max_vmem_tile(&core, Precision::F32);
+        let t64 = max_vmem_tile(&core, Precision::F64);
+        assert!(5 * t32 * t32 * 4 <= core.vmem_bytes);
+        assert!(t64 <= t32, "f64 tiles are smaller");
+        // both must be big enough to fill the MXU
+        assert!(t32 >= core.mxu_dim);
+    }
+
+    #[test]
+    fn intensity_equals_eq7_limit_over_bytes() {
+        // lim_{N->inf} R(N,T) = T elements/element-op -> T/S per byte
+        let a = analyse(&TpuCore::default(), 1 << 20, 64, Precision::F64);
+        assert!((a.arithmetic_intensity - 8.0).abs() < 1e-12);
+    }
+}

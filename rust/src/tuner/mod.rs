@@ -1,0 +1,22 @@
+//! The multidimensional parameter tuner — paper §2.3/§3, plus the
+//! auto-tuning strategies the paper's conclusion anticipates ("The
+//! presence of architecture independent parameters outside the algorithm
+//! implementation itself may also enable auto-tuning in a later step").
+//!
+//! * [`space`] — the legal tuning space per architecture (tile sizes,
+//!   hardware threads, memory modes; powers of two like the paper).
+//! * [`sweep`] — exhaustive grid evaluation (the paper's method), fanned
+//!   out over the thread pool.
+//! * [`strategies`] — auto-tuners that sample the same space with a
+//!   budget: random search, greedy hill climbing, simulated annealing.
+//! * [`results`] — result records, paper-faithful tie-breaking, top-k.
+
+pub mod results;
+pub mod space;
+pub mod strategies;
+pub mod sweep;
+
+pub use results::{SweepRecord, SweepResults};
+pub use space::TuningSpace;
+pub use strategies::{tune_with, Strategy, TuneOutcome};
+pub use sweep::grid_sweep;

@@ -1,0 +1,146 @@
+//! Sweep result records and the paper-faithful selection rules.
+
+use crate::sim::{Prediction, PredictionBound, TuningPoint};
+
+/// One evaluated tuning point.
+#[derive(Debug, Clone)]
+pub struct SweepRecord {
+    pub point: TuningPoint,
+    pub gflops: f64,
+    pub relative_peak: f64,
+    pub bound: PredictionBound,
+}
+
+impl SweepRecord {
+    pub fn new(point: TuningPoint, pred: &Prediction) -> Self {
+        Self { point, gflops: pred.gflops,
+               relative_peak: pred.relative_peak, bound: pred.bound }
+    }
+}
+
+/// A completed sweep.
+#[derive(Debug, Clone, Default)]
+pub struct SweepResults {
+    pub records: Vec<SweepRecord>,
+}
+
+impl SweepResults {
+    pub fn push(&mut self, r: SweepRecord) {
+        self.records.push(r);
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// The tuned optimum. Ties (within 0.5 %) break toward larger T —
+    /// the paper's own heuristic ("larger tile sizes are preferable",
+    /// Eq. 7 discussion) — then toward fewer hardware threads.
+    pub fn best(&self) -> Option<&SweepRecord> {
+        let mut best: Option<&SweepRecord> = None;
+        for r in &self.records {
+            best = Some(match best {
+                None => r,
+                Some(b) => {
+                    if r.gflops > b.gflops * 1.005 {
+                        r
+                    } else if r.gflops >= b.gflops * 0.995 {
+                        // tie: prefer larger T, then lower h
+                        let key_r = (r.point.t,
+                                     std::cmp::Reverse(r.point.hw_threads));
+                        let key_b = (b.point.t,
+                                     std::cmp::Reverse(b.point.hw_threads));
+                        if key_r > key_b { r } else { b }
+                    } else {
+                        b
+                    }
+                }
+            });
+        }
+        best
+    }
+
+    /// Top-k by GFLOP/s (for the Power8 "flat response surface" report).
+    pub fn top_k(&self, k: usize) -> Vec<&SweepRecord> {
+        let mut sorted: Vec<&SweepRecord> = self.records.iter().collect();
+        sorted.sort_by(|a, b| b.gflops.partial_cmp(&a.gflops)
+                       .expect("NaN gflops"));
+        sorted.truncate(k);
+        sorted
+    }
+
+    /// How flat is the response surface: best / k-th best (paper §3:
+    /// Power8 "similar performance results for a variety of parameters").
+    pub fn flatness(&self, k: usize) -> Option<f64> {
+        let top = self.top_k(k);
+        if top.len() < k {
+            return None;
+        }
+        Some(top[k - 1].gflops / top[0].gflops)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{ArchId, CompilerId};
+    use crate::gemm::Precision;
+
+    fn rec(t: u64, h: u64, gflops: f64) -> SweepRecord {
+        SweepRecord {
+            point: TuningPoint::cpu(ArchId::Knl, CompilerId::Intel,
+                                    Precision::F64, 1024, t, h),
+            gflops,
+            relative_peak: 0.0,
+            bound: PredictionBound::Compute,
+        }
+    }
+
+    #[test]
+    fn best_simple() {
+        let mut rs = SweepResults::default();
+        rs.push(rec(16, 1, 100.0));
+        rs.push(rec(32, 1, 300.0));
+        rs.push(rec(64, 1, 200.0));
+        assert_eq!(rs.best().unwrap().point.t, 32);
+    }
+
+    #[test]
+    fn tie_prefers_larger_t_then_lower_h() {
+        let mut rs = SweepResults::default();
+        rs.push(rec(64, 2, 300.0));
+        rs.push(rec(128, 2, 300.5)); // within 0.5%
+        rs.push(rec(128, 1, 300.2));
+        let b = rs.best().unwrap();
+        assert_eq!((b.point.t, b.point.hw_threads), (128, 1));
+    }
+
+    #[test]
+    fn clear_winner_beats_tiebreak() {
+        let mut rs = SweepResults::default();
+        rs.push(rec(512, 1, 200.0));
+        rs.push(rec(16, 4, 300.0));
+        assert_eq!(rs.best().unwrap().point.t, 16);
+    }
+
+    #[test]
+    fn top_k_and_flatness() {
+        let mut rs = SweepResults::default();
+        for (t, g) in [(16, 100.0), (32, 95.0), (64, 90.0), (128, 40.0)] {
+            rs.push(rec(t, 1, g));
+        }
+        let top = rs.top_k(3);
+        assert_eq!(top[0].point.t, 16);
+        assert!((rs.flatness(3).unwrap() - 0.9).abs() < 1e-12);
+        assert!(rs.flatness(10).is_none());
+    }
+
+    #[test]
+    fn empty_best_is_none() {
+        assert!(SweepResults::default().best().is_none());
+    }
+}

@@ -1,0 +1,299 @@
+//! Auto-tuning strategies — the paper's outlook made concrete.
+//!
+//! The paper tunes by exhaustive grid search and notes that "for future
+//! applications this potentially increases the time it takes for tuning
+//! a code, making tuning itself a compute- and memory-intensive task"
+//! and that externalized parameters "may also enable auto-tuning". These
+//! strategies sample the same space under an evaluation budget; the
+//! ablation bench (`benches/ablation_autotune.rs`) measures how many
+//! evaluations each needs to find the grid optimum.
+
+use crate::sim::{Machine, TuningPoint};
+use crate::util::prng::SplitMix64;
+
+use super::results::{SweepRecord, SweepResults};
+use super::space::TuningSpace;
+
+/// Search strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    /// Exhaustive grid (the paper's method; budget ignored).
+    Grid,
+    /// Uniform random sampling without replacement.
+    Random,
+    /// Greedy hill climbing over the (T, h, memmode) lattice with random
+    /// restarts.
+    HillClimb,
+    /// Simulated annealing over the lattice.
+    Anneal,
+}
+
+impl Strategy {
+    pub const ALL: [Strategy; 4] = [Strategy::Grid, Strategy::Random,
+                                    Strategy::HillClimb, Strategy::Anneal];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Strategy::Grid => "grid",
+            Strategy::Random => "random",
+            Strategy::HillClimb => "hillclimb",
+            Strategy::Anneal => "anneal",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Strategy> {
+        match s {
+            "grid" => Some(Strategy::Grid),
+            "random" => Some(Strategy::Random),
+            "hillclimb" | "hill" => Some(Strategy::HillClimb),
+            "anneal" | "sa" => Some(Strategy::Anneal),
+            _ => None,
+        }
+    }
+}
+
+/// Outcome of an auto-tuning run.
+#[derive(Debug, Clone)]
+pub struct TuneOutcome {
+    pub best: SweepRecord,
+    /// Model evaluations spent.
+    pub evals: usize,
+    /// Every evaluated record, in evaluation order.
+    pub history: SweepResults,
+}
+
+/// Run a strategy with an evaluation budget. Deterministic for a given
+/// seed.
+pub fn tune_with(strategy: Strategy, machine: &Machine,
+                 space: &TuningSpace, budget: usize, seed: u64)
+                 -> TuneOutcome {
+    match strategy {
+        Strategy::Grid => grid(machine, space),
+        Strategy::Random => random(machine, space, budget, seed),
+        Strategy::HillClimb => hill_climb(machine, space, budget, seed),
+        Strategy::Anneal => anneal(machine, space, budget, seed),
+    }
+}
+
+fn eval(machine: &Machine, p: TuningPoint) -> SweepRecord {
+    let pred = machine.predict(&p);
+    SweepRecord::new(p, &pred)
+}
+
+fn finish(history: SweepResults, evals: usize) -> TuneOutcome {
+    let best = history.best().expect("at least one eval").clone();
+    TuneOutcome { best, evals, history }
+}
+
+fn grid(machine: &Machine, space: &TuningSpace) -> TuneOutcome {
+    let mut history = SweepResults::default();
+    for p in space.points() {
+        history.push(eval(machine, p));
+    }
+    let evals = history.len();
+    finish(history, evals)
+}
+
+fn random(machine: &Machine, space: &TuningSpace, budget: usize,
+          seed: u64) -> TuneOutcome {
+    let mut rng = SplitMix64::new(seed);
+    let mut points = space.points();
+    // Fisher–Yates shuffle, take the first `budget`
+    for i in (1..points.len()).rev() {
+        let j = rng.next_below(i as u64 + 1) as usize;
+        points.swap(i, j);
+    }
+    points.truncate(budget.max(1).min(points.len()));
+    let mut history = SweepResults::default();
+    for p in points {
+        history.push(eval(machine, p));
+    }
+    let evals = history.len();
+    finish(history, evals)
+}
+
+/// Lattice neighbours: one step in T, h, or memmode.
+fn neighbours(space: &TuningSpace, p: &TuningPoint) -> Vec<TuningPoint> {
+    let mut out = Vec::new();
+    let ti = space.t_values.iter().position(|t| *t == p.t);
+    let hi = space.h_values.iter().position(|h| *h == p.hw_threads);
+    let mi = space.memmodes.iter().position(|m| *m == p.memmode);
+    if let Some(ti) = ti {
+        if ti > 0 {
+            out.push(TuningPoint { t: space.t_values[ti - 1], ..*p });
+        }
+        if ti + 1 < space.t_values.len() {
+            out.push(TuningPoint { t: space.t_values[ti + 1], ..*p });
+        }
+    }
+    if let Some(hi) = hi {
+        if hi > 0 {
+            out.push(TuningPoint { hw_threads: space.h_values[hi - 1],
+                                   ..*p });
+        }
+        if hi + 1 < space.h_values.len() {
+            out.push(TuningPoint { hw_threads: space.h_values[hi + 1],
+                                   ..*p });
+        }
+    }
+    if let Some(mi) = mi {
+        for (j, m) in space.memmodes.iter().enumerate() {
+            if j != mi {
+                out.push(TuningPoint { memmode: *m, ..*p });
+            }
+        }
+    }
+    out
+}
+
+fn random_point(space: &TuningSpace, rng: &mut SplitMix64) -> TuningPoint {
+    let points = space.points();
+    points[rng.next_below(points.len() as u64) as usize]
+}
+
+fn hill_climb(machine: &Machine, space: &TuningSpace, budget: usize,
+              seed: u64) -> TuneOutcome {
+    let mut rng = SplitMix64::new(seed);
+    let mut history = SweepResults::default();
+    let mut evals = 0usize;
+    while evals < budget.max(1) {
+        let mut current = eval(machine, random_point(space, &mut rng));
+        evals += 1;
+        history.push(current.clone());
+        loop {
+            let mut improved = false;
+            for nb in neighbours(space, &current.point) {
+                if evals >= budget {
+                    break;
+                }
+                let r = eval(machine, nb);
+                evals += 1;
+                history.push(r.clone());
+                if r.gflops > current.gflops {
+                    current = r;
+                    improved = true;
+                }
+            }
+            if !improved || evals >= budget {
+                break;
+            }
+        }
+        if evals >= budget {
+            break;
+        }
+    }
+    finish(history, evals)
+}
+
+fn anneal(machine: &Machine, space: &TuningSpace, budget: usize,
+          seed: u64) -> TuneOutcome {
+    let mut rng = SplitMix64::new(seed);
+    let mut history = SweepResults::default();
+    let mut current = eval(machine, random_point(space, &mut rng));
+    history.push(current.clone());
+    let mut evals = 1usize;
+    let budget = budget.max(2);
+    while evals < budget {
+        let frac = evals as f64 / budget as f64;
+        let temp = 0.30 * (1.0 - frac) + 0.01; // relative-gflops scale
+        let nbs = neighbours(space, &current.point);
+        let cand_point = if nbs.is_empty() {
+            random_point(space, &mut rng)
+        } else {
+            nbs[rng.next_below(nbs.len() as u64) as usize]
+        };
+        let cand = eval(machine, cand_point);
+        evals += 1;
+        history.push(cand.clone());
+        let rel = (cand.gflops - current.gflops)
+            / current.gflops.max(1e-9);
+        if rel > 0.0 || rng.next_unit() < (rel / temp).exp() {
+            current = cand;
+        }
+    }
+    finish(history, evals)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{ArchId, CompilerId};
+    use crate::gemm::Precision;
+
+    fn setup() -> (Machine, TuningSpace) {
+        (Machine::for_arch(ArchId::Knl),
+         TuningSpace::paper(ArchId::Knl, CompilerId::Intel,
+                            Precision::F64, 2048))
+    }
+
+    #[test]
+    fn grid_finds_global_optimum() {
+        let (m, s) = setup();
+        let out = tune_with(Strategy::Grid, &m, &s, 0, 1);
+        assert_eq!(out.evals, s.len());
+        // exhaustive: nothing in history beats best
+        for r in &out.history.records {
+            assert!(r.gflops <= out.best.gflops + 1e-9);
+        }
+    }
+
+    #[test]
+    fn random_respects_budget_and_no_repeats() {
+        let (m, s) = setup();
+        let out = tune_with(Strategy::Random, &m, &s, 7, 42);
+        assert_eq!(out.evals, 7);
+        let mut seen = std::collections::HashSet::new();
+        for r in &out.history.records {
+            assert!(seen.insert((r.point.t, r.point.hw_threads)),
+                    "repeat draw");
+        }
+    }
+
+    #[test]
+    fn hillclimb_reaches_grid_optimum_with_budget() {
+        let (m, s) = setup();
+        let grid = tune_with(Strategy::Grid, &m, &s, 0, 1);
+        let hc = tune_with(Strategy::HillClimb, &m, &s, s.len() * 2, 7);
+        // generous budget: must match the global optimum on this smooth
+        // surface
+        assert!((hc.best.gflops - grid.best.gflops).abs()
+                / grid.best.gflops < 0.01,
+                "hc {} vs grid {}", hc.best.gflops, grid.best.gflops);
+    }
+
+    #[test]
+    fn anneal_improves_over_first_sample() {
+        let (m, s) = setup();
+        let out = tune_with(Strategy::Anneal, &m, &s, 30, 123);
+        assert_eq!(out.evals, 30);
+        let first = &out.history.records[0];
+        assert!(out.best.gflops >= first.gflops);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (m, s) = setup();
+        let a = tune_with(Strategy::Anneal, &m, &s, 20, 9);
+        let b = tune_with(Strategy::Anneal, &m, &s, 20, 9);
+        assert_eq!(a.best.point, b.best.point);
+        assert_eq!(a.best.gflops, b.best.gflops);
+    }
+
+    #[test]
+    fn neighbours_stay_in_space() {
+        let (_, s) = setup();
+        for p in s.points() {
+            for nb in neighbours(&s, &p) {
+                assert!(s.t_values.contains(&nb.t));
+                assert!(s.h_values.contains(&nb.hw_threads));
+            }
+        }
+    }
+
+    #[test]
+    fn strategy_parse() {
+        assert_eq!(Strategy::parse("grid"), Some(Strategy::Grid));
+        assert_eq!(Strategy::parse("sa"), Some(Strategy::Anneal));
+        assert_eq!(Strategy::parse("x"), None);
+    }
+}

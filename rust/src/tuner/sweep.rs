@@ -1,0 +1,72 @@
+//! Exhaustive grid sweep — the paper's tuning method, fanned out across
+//! the thread pool.
+
+use std::sync::Arc;
+
+use crate::sim::Machine;
+use crate::util::threadpool::ThreadPool;
+
+use super::results::{SweepRecord, SweepResults};
+use super::space::TuningSpace;
+
+/// Evaluate every point of the space on the machine model. Results are
+/// returned in enumeration order regardless of scheduling (the
+/// order-invariance property is tested below).
+pub fn grid_sweep(machine: &Arc<Machine>, space: &TuningSpace,
+                  pool: &ThreadPool) -> SweepResults {
+    let points = space.points();
+    let m = Arc::clone(machine);
+    let preds = pool.map(points.clone(), move |p| m.predict(&p));
+    let mut out = SweepResults::default();
+    for (point, pred) in points.into_iter().zip(&preds) {
+        out.push(SweepRecord::new(point, pred));
+    }
+    out
+}
+
+/// Sequential sweep (for tests/benches that want no pool interference).
+pub fn grid_sweep_seq(machine: &Machine, space: &TuningSpace)
+                      -> SweepResults {
+    let mut out = SweepResults::default();
+    for point in space.points() {
+        let pred = machine.predict(&point);
+        out.push(SweepRecord::new(point, &pred));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{ArchId, CompilerId};
+    use crate::gemm::Precision;
+
+    #[test]
+    fn parallel_equals_sequential() {
+        let machine = Arc::new(Machine::for_arch(ArchId::Knl));
+        let space = TuningSpace::paper(ArchId::Knl, CompilerId::Intel,
+                                       Precision::F64, 2048);
+        let pool = ThreadPool::new(4);
+        let par = grid_sweep(&machine, &space, &pool);
+        let seq = grid_sweep_seq(&machine, &space);
+        assert_eq!(par.len(), seq.len());
+        for (a, b) in par.records.iter().zip(&seq.records) {
+            assert_eq!(a.point, b.point);
+            assert!((a.gflops - b.gflops).abs() < 1e-9,
+                    "{:?} vs {:?}", a.gflops, b.gflops);
+        }
+    }
+
+    #[test]
+    fn sweep_covers_space() {
+        let machine = Arc::new(Machine::for_arch(ArchId::P100Nvlink));
+        let space = TuningSpace::paper(ArchId::P100Nvlink,
+                                       CompilerId::Cuda,
+                                       Precision::F32, 2048);
+        let pool = ThreadPool::new(2);
+        let res = grid_sweep(&machine, &space, &pool);
+        assert_eq!(res.len(), space.len());
+        // the paper's GPU optimum emerges
+        assert_eq!(res.best().unwrap().point.t, 4);
+    }
+}

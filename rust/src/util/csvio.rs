@@ -1,0 +1,191 @@
+//! CSV + gnuplot series output. Each paper figure is emitted as a CSV of
+//! (x, series…) plus a ready-to-run gnuplot script so the curves can be
+//! eyeballed against the paper's plots.
+
+use std::fs;
+use std::path::Path;
+
+use crate::Result;
+
+/// A named series of (x, y) points — one curve in a paper figure.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new<S: Into<String>>(name: S) -> Self {
+        Self { name: name.into(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.points.push((x, y));
+    }
+
+    /// (x, y) at the maximum y — "best parameter combination".
+    pub fn argmax(&self) -> Option<(f64, f64)> {
+        self.points
+            .iter()
+            .copied()
+            .max_by(|a, b| a.1.partial_cmp(&b.1).expect("NaN in series"))
+    }
+}
+
+/// A figure: shared x-axis domain, many series. Serialized as a wide CSV
+/// (x, one column per series; empty cell where a series lacks the x).
+#[derive(Debug, Clone, Default)]
+pub struct Figure {
+    pub title: String,
+    pub x_label: String,
+    pub y_label: String,
+    pub series: Vec<Series>,
+    /// Use a log2 x-axis in the gnuplot script (tile-size sweeps).
+    pub log2_x: bool,
+}
+
+impl Figure {
+    pub fn new(title: &str, x_label: &str, y_label: &str) -> Self {
+        Self {
+            title: title.into(),
+            x_label: x_label.into(),
+            y_label: y_label.into(),
+            ..Default::default()
+        }
+    }
+
+    pub fn add(&mut self, s: Series) {
+        self.series.push(s);
+    }
+
+    fn xs(&self) -> Vec<f64> {
+        let mut xs: Vec<f64> = self
+            .series
+            .iter()
+            .flat_map(|s| s.points.iter().map(|p| p.0))
+            .collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).expect("NaN x"));
+        xs.dedup();
+        xs
+    }
+
+    pub fn to_csv(&self) -> String {
+        let xs = self.xs();
+        let mut out = String::from("x");
+        for s in &self.series {
+            out.push(',');
+            // series names may contain commas (arch, compiler, prec)
+            if s.name.contains(',') {
+                out.push_str(&format!("\"{}\"", s.name.replace('"', "\"\"")));
+            } else {
+                out.push_str(&s.name);
+            }
+        }
+        out.push('\n');
+        for x in xs {
+            out.push_str(&format!("{x}"));
+            for s in &self.series {
+                out.push(',');
+                if let Some(p) = s.points.iter().find(|p| p.0 == x) {
+                    out.push_str(&format!("{:.4}", p.1));
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn gnuplot_script(&self, csv_name: &str) -> String {
+        let mut s = String::new();
+        s.push_str("set datafile separator ','\n");
+        s.push_str(&format!("set title '{}'\n", self.title));
+        s.push_str(&format!("set xlabel '{}'\n", self.x_label));
+        s.push_str(&format!("set ylabel '{}'\n", self.y_label));
+        s.push_str("set key outside right\nset grid\n");
+        if self.log2_x {
+            s.push_str("set logscale x 2\n");
+        }
+        s.push_str("set term pngcairo size 1200,700\n");
+        s.push_str(&format!("set output '{}.png'\n",
+                            csv_name.trim_end_matches(".csv")));
+        let plots: Vec<String> = self
+            .series
+            .iter()
+            .enumerate()
+            .map(|(i, ser)| {
+                format!("'{csv_name}' using 1:{} with linespoints \
+                         title '{}'", i + 2, ser.name.replace('\'', ""))
+            })
+            .collect();
+        s.push_str(&format!("plot {}\n", plots.join(", \\\n     ")));
+        s
+    }
+
+    /// Write `<stem>.csv` and `<stem>.gp` under `dir`.
+    pub fn write(&self, dir: &Path, stem: &str) -> Result<()> {
+        fs::create_dir_all(dir)?;
+        let csv_name = format!("{stem}.csv");
+        fs::write(dir.join(&csv_name), self.to_csv())?;
+        fs::write(dir.join(format!("{stem}.gp")),
+                  self.gnuplot_script(&csv_name))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_argmax() {
+        let mut s = Series::new("a");
+        s.push(1.0, 10.0);
+        s.push(2.0, 30.0);
+        s.push(3.0, 20.0);
+        assert_eq!(s.argmax(), Some((2.0, 30.0)));
+        assert_eq!(Series::new("e").argmax(), None);
+    }
+
+    #[test]
+    fn figure_csv_merges_x() {
+        let mut f = Figure::new("t", "x", "y");
+        let mut a = Series::new("a");
+        a.push(1.0, 1.0);
+        a.push(2.0, 2.0);
+        let mut b = Series::new("b");
+        b.push(2.0, 4.0);
+        b.push(3.0, 9.0);
+        f.add(a);
+        f.add(b);
+        let csv = f.to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "x,a,b");
+        assert_eq!(lines[1], "1,1.0000,");
+        assert_eq!(lines[2], "2,2.0000,4.0000");
+        assert_eq!(lines[3], "3,,9.0000");
+    }
+
+    #[test]
+    fn gnuplot_script_mentions_all_series() {
+        let mut f = Figure::new("t", "x", "y");
+        f.add(Series::new("s1"));
+        f.add(Series::new("s2"));
+        let gp = f.gnuplot_script("fig.csv");
+        assert!(gp.contains("using 1:2") && gp.contains("using 1:3"));
+        assert!(gp.contains("'s1'") && gp.contains("'s2'"));
+    }
+
+    #[test]
+    fn write_creates_files() {
+        let dir = std::env::temp_dir().join("alpaka_csvio_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut f = Figure::new("t", "x", "y");
+        let mut s = Series::new("s");
+        s.push(0.0, 0.0);
+        f.add(s);
+        f.write(&dir, "fig_test").unwrap();
+        assert!(dir.join("fig_test.csv").exists());
+        assert!(dir.join("fig_test.gp").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,16 @@
+//! From-scratch substrates: deterministic PRNG (bit-compatible with the
+//! python build path), statistics for the paper's measurement protocol,
+//! wallclock timing, a thread pool, a property-testing mini-framework,
+//! ASCII table rendering and CSV output.
+//!
+//! Nothing here depends on the rest of the crate; everything above depends
+//! on this.
+
+pub mod csvio;
+pub mod json;
+pub mod prng;
+pub mod propcheck;
+pub mod stats;
+pub mod table;
+pub mod threadpool;
+pub mod timer;

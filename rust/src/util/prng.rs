@@ -1,0 +1,150 @@
+//! splitmix64 PRNG, bit-compatible with `python/compile/prng.py`.
+//!
+//! The AOT path (python) generates deterministic matrices, runs each
+//! artifact once and records output digests in `artifacts/manifest.json`.
+//! The rust integration tests regenerate the *same* matrices through this
+//! module and verify the PJRT execution against those digests — no python
+//! on the request path. If the two implementations ever diverge by a
+//! single bit, `rust/tests/runtime_artifacts.rs` fails.
+//!
+//! Stream definition (see the python module for the canonical spec):
+//!
+//! ```text
+//! state_i = seed + i * 0x9E3779B97F4A7C15            (wrapping, i >= 1)
+//! z = mix(state_i)                                    (splitmix64 finalizer)
+//! value_i = (z >> 11) * 2^-53 * 2 - 1                 (f64 in [-1, 1))
+//! ```
+
+pub const GOLDEN: u64 = 0x9E37_79B9_7F4A_7C15;
+const MIX1: u64 = 0xBF58_476D_1CE4_E5B9;
+const MIX2: u64 = 0x94D0_49BB_1331_11EB;
+const FNV_OFFSET: u64 = 0xCBF2_9CE4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01B3;
+
+/// splitmix64 generator. `next_u64` matches the reference implementation
+/// (Steele et al.) and the numpy-vectorized python stream exactly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    /// New stream; the first output is `mix(seed + GOLDEN)`.
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(GOLDEN);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(MIX1);
+        z = (z ^ (z >> 27)).wrapping_mul(MIX2);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform f64 in `[-1, 1)` — the matrix-element distribution.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        ((self.next_u64() >> 11) as f64) * (2.0f64).powi(-53) * 2.0 - 1.0
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    #[inline]
+    pub fn next_unit(&mut self) -> f64 {
+        ((self.next_u64() >> 11) as f64) * (2.0f64).powi(-53)
+    }
+
+    /// Uniform integer in `[0, bound)` (Lemire-free simple modulo is fine
+    /// for non-cryptographic sweep shuffling).
+    #[inline]
+    pub fn next_below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        self.next_u64() % bound
+    }
+}
+
+/// Stable per-(artifact, argument) seed — FNV-1a over the artifact id,
+/// xor-folded with the argument index. Mirrors `prng.seed_for` in python.
+pub fn seed_for(artifact_id: &str, arg_index: u64) -> u64 {
+    let mut h = FNV_OFFSET;
+    for b in artifact_id.as_bytes() {
+        h = (h ^ (*b as u64)).wrapping_mul(FNV_PRIME);
+    }
+    h ^ 0x9E37_79B9u64.wrapping_mul(arg_index + 1)
+}
+
+/// Deterministic row-major f64 matrix (the canonical stream).
+pub fn matrix_f64(seed: u64, rows: usize, cols: usize) -> Vec<f64> {
+    let mut rng = SplitMix64::new(seed);
+    (0..rows * cols).map(|_| rng.next_f64()).collect()
+}
+
+/// Deterministic f32 matrix: the f64 stream rounded once to f32
+/// (round-to-nearest-even, same as numpy `astype(float32)`).
+pub fn matrix_f32(seed: u64, rows: usize, cols: usize) -> Vec<f32> {
+    let mut rng = SplitMix64::new(seed);
+    (0..rows * cols).map(|_| rng.next_f64() as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_answer_seed0() {
+        // Pinned in python/tests/test_prng.py — keep in sync.
+        let mut rng = SplitMix64::new(0);
+        assert_eq!(rng.next_u64(), 0xE220_A839_7B1D_CDAF);
+        assert_eq!(rng.next_u64(), 0x6E78_9E6A_A1B9_65F4);
+        assert_eq!(rng.next_u64(), 0x06C4_5D18_8009_454F);
+    }
+
+    #[test]
+    fn f64_range_and_mean() {
+        let mut rng = SplitMix64::new(42);
+        let vals: Vec<f64> = (0..100_000).map(|_| rng.next_f64()).collect();
+        assert!(vals.iter().all(|v| (-1.0..1.0).contains(v)));
+        let mean = vals.iter().sum::<f64>() / vals.len() as f64;
+        assert!(mean.abs() < 0.01, "mean={mean}");
+        let var = vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>()
+            / vals.len() as f64;
+        // uniform on [-1,1): var = 1/3
+        assert!((var - 1.0 / 3.0).abs() < 0.01, "var={var}");
+    }
+
+    #[test]
+    fn prefix_stability() {
+        let long = matrix_f64(7, 10, 100);
+        let short = matrix_f64(7, 2, 5);
+        assert_eq!(&long[..10], &short[..]);
+    }
+
+    #[test]
+    fn f32_is_rounded_f64() {
+        let a = matrix_f32(3, 4, 4);
+        let b = matrix_f64(3, 4, 4);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(*x, *y as f32);
+        }
+    }
+
+    #[test]
+    fn seed_for_stable_and_distinct() {
+        let s0 = seed_for("gemm_n128_t16_e1_f32", 0);
+        let s1 = seed_for("gemm_n128_t16_e1_f32", 1);
+        let other = seed_for("gemm_n128_t16_e1_f64", 0);
+        assert_ne!(s0, s1);
+        assert_ne!(s0, other);
+        assert_eq!(s0, seed_for("gemm_n128_t16_e1_f32", 0));
+    }
+
+    #[test]
+    fn next_below_in_range() {
+        let mut rng = SplitMix64::new(9);
+        for _ in 0..1000 {
+            assert!(rng.next_below(7) < 7);
+        }
+    }
+}

@@ -1,0 +1,171 @@
+//! Minimal property-based testing framework (proptest is not available in
+//! this image — see DESIGN.md "Environment deviation").
+//!
+//! Deterministic by default (fixed seed), with `PROPCHECK_SEED` env
+//! override for exploration. On failure the panic message carries the
+//! exact seed and the full draw trace, so the case replays with
+//! `PROPCHECK_SEED=<seed>` (no shrinking: draws are few and the trace
+//! makes the case readable as-is).
+//!
+//! ```no_run
+//! // (no_run: doctest binaries bypass the crate's rpath to the
+//! // xla_extension libstdc++; the same code runs in unit tests below)
+//! use alpaka_rs::util::propcheck;
+//! propcheck::check(200, |g| {
+//!     let x = g.usize_in(1, 1000);
+//!     let y = g.usize_in(1, 1000);
+//!     propcheck::assert_prop(x * y >= x, "product not smaller");
+//! });
+//! ```
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use super::prng::SplitMix64;
+
+/// Value generator handed to each property iteration.
+pub struct Gen {
+    rng: SplitMix64,
+    /// Log of drawn values, used for failure reports.
+    pub trace: Vec<String>,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Self {
+        Self { rng: SplitMix64::new(seed), trace: Vec::new() }
+    }
+
+    /// usize uniform in `[lo, hi]` (inclusive).
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        let v = lo + self.rng.next_below((hi - lo + 1) as u64) as usize;
+        self.trace.push(format!("usize {v}"));
+        v
+    }
+
+    /// Power of two in `[lo, hi]`; both bounds must be powers of two.
+    pub fn pow2_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo.is_power_of_two() && hi.is_power_of_two() && lo <= hi);
+        let lo_exp = lo.trailing_zeros() as u64;
+        let hi_exp = hi.trailing_zeros() as u64;
+        let exp = lo_exp + self.rng.next_below(hi_exp - lo_exp + 1);
+        let v = 1usize << exp;
+        self.trace.push(format!("pow2 {v}"));
+        v
+    }
+
+    /// f64 uniform in `[lo, hi)`.
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        assert!(lo < hi);
+        let v = lo + self.rng.next_unit() * (hi - lo);
+        self.trace.push(format!("f64 {v}"));
+        v
+    }
+
+    /// One element of a slice.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        assert!(!items.is_empty());
+        let i = self.rng.next_below(items.len() as u64) as usize;
+        self.trace.push(format!("choice #{i}"));
+        &items[i]
+    }
+
+    /// Boolean with probability `p` of true.
+    pub fn bool_with(&mut self, p: f64) -> bool {
+        let v = self.rng.next_unit() < p;
+        self.trace.push(format!("bool {v}"));
+        v
+    }
+}
+
+/// Assert within a property; plain `assert!` works too.
+pub fn assert_prop(cond: bool, msg: &str) {
+    assert!(cond, "property violated: {msg}");
+}
+
+fn base_seed() -> u64 {
+    std::env::var("PROPCHECK_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x00A1_7ACA_0000_0001)
+}
+
+/// Run `prop` for `iters` deterministic cases. Panics (with seed and draw
+/// trace) on the first failing case.
+pub fn check<F: Fn(&mut Gen)>(iters: u64, prop: F) {
+    let seed0 = base_seed();
+    for i in 0..iters {
+        let seed = seed0.wrapping_add(i);
+        let mut g = Gen::new(seed);
+        let result = catch_unwind(AssertUnwindSafe(|| prop(&mut g)));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>()
+                    .map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "propcheck failed at iter {i} (PROPCHECK_SEED={seed}):\n  \
+                 {msg}\n  draws: [{}]",
+                g.trace.join(", ")
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_iters() {
+        check(100, |g| {
+            let x = g.usize_in(0, 10);
+            assert_prop(x <= 10, "bound");
+        });
+    }
+
+    #[test]
+    fn pow2_bounds() {
+        check(100, |g| {
+            let v = g.pow2_in(2, 512);
+            assert_prop(v.is_power_of_two() && (2..=512).contains(&v),
+                        "pow2 in range");
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "propcheck failed")]
+    fn failing_property_reports() {
+        check(50, |g| {
+            let x = g.usize_in(0, 100);
+            assert_prop(x < 90, "x < 90 must eventually fail");
+        });
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut first: Vec<usize> = Vec::new();
+        {
+            let mut g = Gen::new(42);
+            for _ in 0..10 {
+                first.push(g.usize_in(0, 1_000_000));
+            }
+        }
+        let mut g = Gen::new(42);
+        for f in &first {
+            assert_eq!(*f, g.usize_in(0, 1_000_000));
+        }
+    }
+
+    #[test]
+    fn choose_covers_all() {
+        let items = [1, 2, 3, 4];
+        let mut seen = [false; 4];
+        let mut g = Gen::new(7);
+        for _ in 0..200 {
+            seen[*g.choose(&items) as usize - 1] = true;
+        }
+        assert!(seen.iter().all(|s| *s));
+    }
+}

@@ -1,0 +1,195 @@
+//! ASCII table rendering for the report engine (paper tables are emitted
+//! both as aligned text and CSV).
+
+/// Column alignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple text table: header + rows, per-column alignment, markdown or
+/// plain box output.
+#[derive(Debug, Clone)]
+pub struct Table {
+    header: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+    title: Option<String>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
+        let header: Vec<String> = header.into_iter().map(Into::into).collect();
+        let aligns = vec![Align::Left; header.len()];
+        Self { header, aligns, rows: Vec::new(), title: None }
+    }
+
+    pub fn title<S: Into<String>>(mut self, t: S) -> Self {
+        self.title = Some(t.into());
+        self
+    }
+
+    pub fn align(mut self, col: usize, a: Align) -> Self {
+        self.aligns[col] = a;
+        self
+    }
+
+    /// All numeric-ish columns right-aligned (everything but column 0).
+    pub fn numeric(mut self) -> Self {
+        for a in self.aligns.iter_mut().skip(1) {
+            *a = Align::Right;
+        }
+        self
+    }
+
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(cells.len(), self.header.len(),
+                   "row arity != header arity");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> =
+            self.header.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                w[i] = w[i].max(c.chars().count());
+            }
+        }
+        w
+    }
+
+    fn fmt_cell(cell: &str, width: usize, align: Align) -> String {
+        let pad = width - cell.chars().count();
+        match align {
+            Align::Left => format!("{cell}{}", " ".repeat(pad)),
+            Align::Right => format!("{}{cell}", " ".repeat(pad)),
+        }
+    }
+
+    /// Render as an aligned plain-text table.
+    pub fn render(&self) -> String {
+        let w = self.widths();
+        let mut out = String::new();
+        if let Some(t) = &self.title {
+            out.push_str(&format!("== {t} ==\n"));
+        }
+        let line = |cells: &[String], out: &mut String| {
+            let parts: Vec<String> = cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| Self::fmt_cell(c, w[i], self.aligns[i]))
+                .collect();
+            out.push_str(&parts.join(" | "));
+            out.push('\n');
+        };
+        line(&self.header, &mut out);
+        let sep: Vec<String> = w.iter().map(|n| "-".repeat(*n)).collect();
+        out.push_str(&sep.join("-+-"));
+        out.push('\n');
+        for row in &self.rows {
+            line(row, &mut out);
+        }
+        out
+    }
+
+    /// Render as CSV (RFC-4180-ish quoting).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let esc = |c: &str| {
+            if c.contains(',') || c.contains('"') || c.contains('\n') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.to_string()
+            }
+        };
+        out.push_str(
+            &self.header.iter().map(|c| esc(c)).collect::<Vec<_>>()
+                .join(","));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(
+                &row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format a GFLOP/s value the way the paper's figures label them.
+pub fn fmt_gflops(v: f64) -> String {
+    if v >= 1000.0 {
+        format!("{:.2} TFLOP/s", v / 1000.0)
+    } else {
+        format!("{v:.0} GFLOP/s")
+    }
+}
+
+/// Format a byte count (cache sizes in Table 4 style: B/KB/MB).
+pub fn fmt_bytes(b: u64) -> String {
+    if b >= 1024 * 1024 && b % (1024 * 1024) == 0 {
+        format!("{} MB", b / (1024 * 1024))
+    } else if b >= 1024 && b % 1024 == 0 {
+        format!("{} KB", b / 1024)
+    } else {
+        format!("{b} B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_aligns() {
+        let mut t = Table::new(vec!["arch", "gflops"]).numeric();
+        t.row(vec!["knl", "510"]);
+        t.row(vec!["p100-nvlink", "4900"]);
+        let s = t.render();
+        assert!(s.contains("arch        | gflops"));
+        assert!(s.contains("knl         |    510"));
+        assert!(s.contains("p100-nvlink |   4900"));
+    }
+
+    #[test]
+    fn csv_quotes() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.row(vec!["x,y", "say \"hi\""]);
+        assert_eq!(t.to_csv(), "a,b\n\"x,y\",\"say \"\"hi\"\"\"\n");
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.row(vec!["only-one"]);
+    }
+
+    #[test]
+    fn formatting_helpers() {
+        assert_eq!(fmt_gflops(510.0), "510 GFLOP/s");
+        assert_eq!(fmt_gflops(5300.0), "5.30 TFLOP/s");
+        assert_eq!(fmt_bytes(128), "128 B");
+        assert_eq!(fmt_bytes(64 * 1024), "64 KB");
+        assert_eq!(fmt_bytes(4 * 1024 * 1024), "4 MB");
+        assert_eq!(fmt_bytes(1500), "1500 B");
+    }
+
+    #[test]
+    fn title_rendered() {
+        let mut t = Table::new(vec!["x"]).title("Table 4");
+        t.row(vec!["1"]);
+        assert!(t.render().starts_with("== Table 4 =="));
+    }
+}

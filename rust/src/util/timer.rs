@@ -1,0 +1,112 @@
+//! Wallclock timing harness implementing the paper's §2 protocol:
+//! time the algorithm *without* host↔device copies, repeat, keep the best.
+
+use std::time::Instant;
+
+use super::stats;
+
+/// One timed measurement campaign.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    /// Seconds per run, in execution order.
+    pub times: Vec<f64>,
+    /// Warmup runs executed before the recorded ones (excluded).
+    pub warmup: usize,
+}
+
+impl Measurement {
+    /// Best (minimum) time — the paper's reported value.
+    pub fn best(&self) -> f64 {
+        stats::best_time(&self.times)
+    }
+
+    /// Achieved performance in GFLOP/s for a workload of `flops`
+    /// floating point operations (paper Eq. 4).
+    pub fn gflops(&self, flops: u128) -> f64 {
+        flops as f64 / self.best() / 1e9
+    }
+
+    /// §2.3 invariance check: 5-run best equals full best within `rtol`.
+    pub fn stable(&self, rtol: f64) -> bool {
+        stats::five_vs_all_stable(&self.times, rtol)
+    }
+}
+
+/// Run `f` `warmup` times unrecorded, then `runs` times recorded.
+pub fn time_runs<F: FnMut()>(warmup: usize, runs: usize,
+                             mut f: F) -> Measurement {
+    assert!(runs > 0, "need at least one recorded run");
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(runs);
+    for _ in 0..runs {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    Measurement { times, warmup }
+}
+
+/// Scope timer for coarse profiling (used by the §Perf pass).
+pub struct ScopeTimer {
+    label: &'static str,
+    start: Instant,
+    enabled: bool,
+}
+
+impl ScopeTimer {
+    pub fn new(label: &'static str) -> Self {
+        Self { label, start: Instant::now(), enabled: true }
+    }
+
+    pub fn disabled(label: &'static str) -> Self {
+        Self { label, start: Instant::now(), enabled: false }
+    }
+
+    pub fn elapsed(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+impl Drop for ScopeTimer {
+    fn drop(&mut self) {
+        if self.enabled {
+            eprintln!("[timer] {}: {:.6}s", self.label, self.elapsed());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_runs_counts() {
+        let mut calls = 0;
+        let m = time_runs(2, 5, || calls += 1);
+        assert_eq!(calls, 7);
+        assert_eq!(m.times.len(), 5);
+        assert_eq!(m.warmup, 2);
+        assert!(m.best() >= 0.0);
+    }
+
+    #[test]
+    fn gflops_math() {
+        let m = Measurement { times: vec![0.5, 0.25], warmup: 0 };
+        // 1e9 flops in 0.25 s best = 4 GFLOP/s
+        assert!((m.gflops(1_000_000_000) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one recorded run")]
+    fn zero_runs_panics() {
+        time_runs(0, 0, || ());
+    }
+
+    #[test]
+    fn scope_timer_elapsed_nonnegative() {
+        let t = ScopeTimer::disabled("x");
+        assert!(t.elapsed() >= 0.0);
+    }
+}

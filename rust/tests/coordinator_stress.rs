@@ -1,0 +1,107 @@
+//! Integration: coordinator under load — big mixed-architecture
+//! batches, tight queues (backpressure), cancellation mid-campaign.
+
+use std::sync::Arc;
+
+use alpaka_rs::arch::{compiler, ArchId, CompilerId};
+use alpaka_rs::coordinator::{BoundedQueue, Scheduler};
+use alpaka_rs::gemm::Precision;
+use alpaka_rs::sim::TuningPoint;
+
+fn big_batch() -> Vec<TuningPoint> {
+    let mut pts = Vec::new();
+    for arch in ArchId::PAPER {
+        for comp in compiler::valid_compilers(arch) {
+            for prec in Precision::ALL {
+                for n in [1024u64, 2048, 4096] {
+                    for t in [16u64, 32, 64] {
+                        let point = match comp {
+                            CompilerId::Cuda => TuningPoint::gpu(
+                                arch, prec, n, 4),
+                            _ => TuningPoint::cpu(arch, comp, prec, n,
+                                                  t, 1),
+                        };
+                        pts.push(point);
+                    }
+                }
+            }
+        }
+    }
+    pts
+}
+
+#[test]
+fn thousand_job_campaign_completes() {
+    let pts = big_batch();
+    assert!(pts.len() > 150);
+    let sched = Scheduler::new(8, 16);
+    let results = sched.run_batch(pts.clone());
+    assert_eq!(results.len(), pts.len());
+    assert_eq!(sched.metrics.completed(), pts.len() as u64);
+    assert_eq!(sched.metrics.failed(), 0);
+    // results are positive and ordered
+    for (i, r) in results.iter().enumerate() {
+        assert_eq!(r.id, i as u64);
+        assert!(r.record.gflops > 0.0);
+    }
+}
+
+#[test]
+fn tiny_queue_backpressure_correctness() {
+    let pts = big_batch();
+    let sched = Scheduler::new(2, 1);
+    let results = sched.run_batch(pts.clone());
+    assert_eq!(results.len(), pts.len());
+    assert!(sched.metrics.max_queue_depth() <= 3,
+            "queue stayed small: {}", sched.metrics.max_queue_depth());
+}
+
+#[test]
+fn repeated_batches_reuse_machines() {
+    let sched = Scheduler::new(4, 8);
+    let pts: Vec<TuningPoint> = (0..50)
+        .map(|i| TuningPoint::cpu(ArchId::Knl, CompilerId::Intel,
+                                  Precision::F64, 2048,
+                                  [16, 32, 64][i % 3], 1))
+        .collect();
+    let first = sched.run_batch(pts.clone());
+    let t0 = std::time::Instant::now();
+    let second = sched.run_batch(pts);
+    let warm = t0.elapsed().as_secs_f64();
+    assert_eq!(first.len(), second.len());
+    for (a, b) in first.iter().zip(&second) {
+        assert!((a.record.gflops - b.record.gflops).abs() < 1e-12);
+    }
+    assert!(warm < 1.0, "memoised second batch should be fast: {warm}s");
+}
+
+#[test]
+fn cancellation_mid_flight() {
+    let sched = Arc::new(Scheduler::new(1, 1));
+    let sched2 = Arc::clone(&sched);
+    // cancel from another thread shortly after the batch starts
+    let canceller = std::thread::spawn(move || {
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        sched2.cancel();
+    });
+    let results = sched.run_batch(big_batch());
+    canceller.join().unwrap();
+    assert!(sched.cancelled());
+    // some jobs may have completed before the cancel, none after:
+    // completed + failed == submitted
+    let m = &sched.metrics;
+    assert_eq!(m.completed() + m.failed(), m.submitted());
+    assert!(results.len() < big_batch().len());
+}
+
+#[test]
+fn queue_is_generic_and_reusable() {
+    // the coordinator's queue is a general substrate: string payloads
+    let q = BoundedQueue::new(3);
+    q.push("alpha".to_string()).unwrap();
+    q.push("beta".to_string()).unwrap();
+    assert_eq!(q.pop().as_deref(), Some("alpha"));
+    q.close();
+    assert_eq!(q.pop().as_deref(), Some("beta"));
+    assert_eq!(q.pop(), None);
+}

@@ -1,0 +1,84 @@
+//! Integration: the GEMM service — request/reply over the single-owner
+//! PJRT event loop, compile-cache reuse, dynamic batching, shutdown.
+
+use std::path::{Path, PathBuf};
+
+use alpaka_rs::runtime::GemmService;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts/ — run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn call_roundtrip_and_cache_reuse() {
+    let Some(dir) = artifacts_dir() else { return };
+    let svc = GemmService::start(dir, 16, 4).unwrap();
+    let first = svc.call("gemm_n128_t16_e1_f32").unwrap();
+    assert_eq!(first.artifact_id, "gemm_n128_t16_e1_f32");
+    assert!(first.seconds > 0.0);
+    assert!(first.gflops.unwrap() > 0.0);
+    // second call hits the compile cache -> should not be slower by
+    // a compile-sized margin (compile ~100ms, exec ~ms)
+    let second = svc.call("gemm_n128_t16_e1_f32").unwrap();
+    assert!(second.seconds < first.seconds * 10.0);
+    svc.shutdown();
+}
+
+#[test]
+fn unknown_artifact_errors_cleanly() {
+    let Some(dir) = artifacts_dir() else { return };
+    let svc = GemmService::start(dir, 4, 2).unwrap();
+    let err = svc.call("no_such_artifact").unwrap_err();
+    assert!(err.to_string().contains("unknown artifact"));
+    // service still alive afterwards
+    assert!(svc.call("dot_n128_f32").is_ok());
+}
+
+#[test]
+fn pipelined_requests_batch() {
+    let Some(dir) = artifacts_dir() else { return };
+    let svc = GemmService::start(dir, 32, 8) .unwrap();
+    // prime the cache so the batch window isn't dominated by compile
+    svc.call("dot_n128_f32").unwrap();
+    // fire 12 async requests for the same artifact, then collect
+    let receivers: Vec<_> = (0..12)
+        .map(|_| svc.submit("dot_n128_f32"))
+        .collect();
+    let stats: Vec<_> = receivers
+        .into_iter()
+        .map(|rx| rx.recv().unwrap().unwrap())
+        .collect();
+    assert_eq!(stats.len(), 12);
+    // at least one request was served in a coalesced batch
+    let max_batch = stats.iter().map(|s| s.batch_size).max().unwrap();
+    assert!(max_batch >= 2, "batching occurred: max={max_batch}");
+    svc.shutdown();
+}
+
+#[test]
+fn mixed_artifacts_all_served() {
+    let Some(dir) = artifacts_dir() else { return };
+    let svc = GemmService::start(dir, 16, 4).unwrap();
+    let ids = ["dot_n128_f32", "gemm_n128_t16_e1_f32", "dot_n128_f32",
+               "gemm_n128_t8_e1_f32", "dot_n128_f32"];
+    let rxs: Vec<_> = ids.iter().map(|id| svc.submit(id)).collect();
+    for (id, rx) in ids.iter().zip(rxs) {
+        let stats = rx.recv().unwrap().unwrap();
+        assert_eq!(stats.artifact_id, *id);
+    }
+    svc.shutdown();
+}
+
+#[test]
+fn drop_shuts_down_gracefully() {
+    let Some(dir) = artifacts_dir() else { return };
+    let svc = GemmService::start(dir, 4, 2).unwrap();
+    svc.call("dot_n128_f32").unwrap();
+    drop(svc); // must not hang
+}

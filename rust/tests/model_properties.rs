@@ -1,0 +1,131 @@
+//! Property-based integration tests over the machine model: invariants
+//! that must hold for EVERY tuning point, not just the paper's cells.
+
+use alpaka_rs::arch::{compiler, ArchId, CompilerId};
+use alpaka_rs::gemm::Precision;
+use alpaka_rs::sim::{Machine, MemMode, TuningPoint};
+use alpaka_rs::util::propcheck::{self, assert_prop};
+
+fn random_point(g: &mut propcheck::Gen) -> TuningPoint {
+    let arch = *g.choose(&[ArchId::K80, ArchId::P100Nvlink,
+                           ArchId::P100Pcie, ArchId::Haswell,
+                           ArchId::Knl, ArchId::Power8]);
+    let comp = *g.choose(&compiler::valid_compilers(arch));
+    let prec = *g.choose(&[Precision::F32, Precision::F64]);
+    let is_gpu = comp == CompilerId::Cuda;
+    let t = if is_gpu {
+        g.pow2_in(1, 16) as u64
+    } else {
+        g.pow2_in(16, 512) as u64
+    };
+    let h_max = arch.spec().cpu.as_ref()
+        .map(|c| c.hw_threads_per_core as usize).unwrap_or(1);
+    let h = g.pow2_in(1, h_max.next_power_of_two().max(1)) as u64;
+    let k = g.usize_in(1, 20) as u64;
+    let n = 1024 * k;
+    // legality: GPU needs 16t | n; CPU needs t | n
+    let div = if is_gpu { 16 * t } else { t };
+    let n = n.div_ceil(div) * div;
+    TuningPoint {
+        arch, compiler: comp, precision: prec, n, t,
+        hw_threads: h.min(h_max as u64), memmode: MemMode::Default,
+        thread_override: None,
+    }
+}
+
+#[test]
+fn predictions_are_positive_finite_and_below_peak() {
+    propcheck::check(150, |g| {
+        let p = random_point(g);
+        let m = Machine::for_arch(p.arch);
+        let pred = m.predict(&p);
+        assert_prop(pred.gflops.is_finite() && pred.gflops > 0.0,
+                    "positive finite gflops");
+        // relative peak can exceed 1 only through anchor scaling bugs
+        assert_prop(pred.relative_peak < 1.0,
+                    "never above theoretical peak");
+        assert_prop(pred.seconds > 0.0, "positive runtime");
+    });
+}
+
+#[test]
+fn determinism() {
+    propcheck::check(40, |g| {
+        let p = random_point(g);
+        let m = Machine::for_arch(p.arch);
+        let a = m.predict(&p).gflops;
+        let b = m.predict(&p).gflops;
+        assert_prop(a == b, "same point, same prediction");
+        // and across machine instances
+        let m2 = Machine::for_arch(p.arch);
+        let c = m2.predict(&p).gflops;
+        assert_prop((a - c).abs() < 1e-9, "instance-independent");
+    });
+}
+
+#[test]
+fn ddr_only_never_helps_knl() {
+    propcheck::check(60, |g| {
+        let t = g.pow2_in(16, 512) as u64;
+        let k = g.usize_in(1, 20) as u64;
+        let n = (1024 * k).div_ceil(t) * t;
+        let m = Machine::for_arch(ArchId::Knl);
+        let base = TuningPoint::cpu(ArchId::Knl, CompilerId::Intel,
+                                    Precision::F64, n, t, 1);
+        let cached = m.predict(&base).gflops;
+        let ddr = m.predict(&base.with_memmode(MemMode::KnlDdrOnly))
+            .gflops;
+        assert_prop(ddr <= cached * 1.0001, "DDR-only never faster");
+    });
+}
+
+#[test]
+fn unified_memory_never_hurts_gpus() {
+    propcheck::check(60, |g| {
+        let arch = *g.choose(&[ArchId::K80, ArchId::P100Nvlink]);
+        let t = g.pow2_in(1, 8) as u64;
+        let k = g.usize_in(1, 20) as u64;
+        let n = (1024 * k).div_ceil(16 * t) * 16 * t;
+        let prec = *g.choose(&[Precision::F32, Precision::F64]);
+        let m = Machine::for_arch(arch);
+        let dev = m.predict(&TuningPoint::gpu(arch, prec, n, t)).gflops;
+        let uni = m.predict(&TuningPoint::gpu(arch, prec, n, t)
+                            .with_memmode(MemMode::GpuUnified)).gflops;
+        assert_prop(uni >= dev * 0.9999,
+                    "unified >= device (paper §4 observation)");
+    });
+}
+
+#[test]
+fn more_cores_at_same_point_never_slower() {
+    // monotonicity proxy: growing N amortizes overhead — per-gflop
+    // efficiency at 4x the size is never worse than 0.8x
+    propcheck::check(40, |g| {
+        let t = g.pow2_in(16, 128) as u64;
+        let n1 = (1024u64).div_ceil(t) * t * 2;
+        let n2 = n1 * 2;
+        let m = Machine::for_arch(ArchId::Haswell);
+        let g1 = m.predict(&TuningPoint::cpu(
+            ArchId::Haswell, CompilerId::Intel, Precision::F64, n1, t,
+            1)).gflops;
+        let g2 = m.predict(&TuningPoint::cpu(
+            ArchId::Haswell, CompilerId::Intel, Precision::F64, n2, t,
+            1)).gflops;
+        assert_prop(g2 > 0.5 * g1, "no pathological large-N collapse");
+    });
+}
+
+#[test]
+fn anchor_scaling_is_transparent() {
+    // predict() == predict_raw() * anchor_scale for every point
+    propcheck::check(60, |g| {
+        let p = random_point(g);
+        let m = Machine::for_arch(p.arch);
+        let anchored = m.predict(&p);
+        let raw = m.predict_raw(&p);
+        let ratio = anchored.gflops / raw.gflops;
+        assert_prop((ratio - anchored.anchor_scale).abs()
+                    / anchored.anchor_scale < 1e-9,
+                    "gflops scale exactly by the anchor factor");
+    });
+}

@@ -1,0 +1,74 @@
+//! Integration: the report engine writes the complete paper bundle and
+//! the contents carry the right headline numbers.
+
+use std::path::PathBuf;
+
+use alpaka_rs::report;
+
+fn outdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("alpaka_reports_{name}"));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+#[test]
+fn generate_all_writes_every_artifact() {
+    let dir = outdir("all");
+    let files = report::generate_all(&dir).unwrap();
+    for expected in [
+        "table1_gpus.txt", "table2_cpus.txt", "table3_compilers.txt",
+        "table4_optima.txt", "fig5_mappings.txt",
+        "fig8_relative_peak.txt",
+    ] {
+        assert!(files.iter().any(|f| f == expected),
+                "missing {expected} in {files:?}");
+        assert!(dir.join(expected).exists());
+    }
+    for csv in ["fig3_tile_sweep.csv", "fig4_knl_sweep.csv",
+                "fig6_scaling_dp.csv", "fig7_scaling_sp.csv"] {
+        assert!(dir.join(csv).exists(), "missing {csv}");
+        // gnuplot twin
+        assert!(dir.join(csv.replace(".csv", ".gp")).exists());
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn table4_text_carries_knl_headline() {
+    let dir = outdir("t4");
+    report::generate_all(&dir).unwrap();
+    let t4 = std::fs::read_to_string(dir.join("table4_optima.txt"))
+        .unwrap();
+    assert!(t4.contains("KNL"));
+    assert!(t4.contains("510"), "the paper's quoted 510 GFLOP/s:\n{t4}");
+    let fig8 = std::fs::read_to_string(
+        dir.join("fig8_relative_peak.txt")).unwrap();
+    assert!(fig8.contains("46.0") || fig8.contains("45.9"),
+            "P100 SP 46%:\n{fig8}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn fig6_csv_has_twenty_sizes() {
+    let dir = outdir("f6");
+    report::generate_all(&dir).unwrap();
+    let csv = std::fs::read_to_string(dir.join("fig6_scaling_dp.csv"))
+        .unwrap();
+    let lines: Vec<&str> = csv.lines().collect();
+    // header + 20 N values
+    assert_eq!(lines.len(), 21, "{}", lines.len());
+    assert!(lines[1].starts_with("1024,"));
+    assert!(lines[20].starts_with("20480,"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn fig5_describes_paper_mappings() {
+    let s = report::figures::fig5_mappings();
+    // P100 DP optimum: 160x160 grid of blocks, 256 threads, 16 elems
+    assert!(s.contains("25600 blocks"), "{s}");
+    // KNL DP optimum: T=64 -> 160 per dim, 1 thread/block
+    assert!(s.contains("1 threads/block"), "{s}");
+    // Power8 XL: T=512 -> 20 per dim = 400 blocks
+    assert!(s.contains("400 blocks"), "{s}");
+}
