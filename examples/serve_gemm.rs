@@ -1,61 +1,43 @@
-//! Serving example: the GEMM service batching concurrent client
-//! requests over the single-owner PJRT executor — the L3 coordinator in
-//! its router/batcher role.
+//! Serving example, ported to the unified serve layer: concurrent
+//! clients drive simulated-architecture shards AND the native shard
+//! through ONE front queue, with continuous batching, an LRU result
+//! cache and unified metrics — the L3 coordinator in its router/batcher
+//! role.
 //!
 //! Run with: `cargo run --release --offline --example serve_gemm`
-//! (requires `make artifacts`)
+//! (uses `artifacts/` when present, otherwise a synthetic native
+//! catalog served by the host reference GEMM).
 
-use std::path::PathBuf;
+use std::path::Path;
 
-use alpaka_rs::runtime::GemmService;
-use alpaka_rs::util::stats::Summary;
-use alpaka_rs::util::table::Table;
+use alpaka_rs::arch::ArchId;
+use alpaka_rs::serve::{loadgen, Serve, ServeConfig};
 
 fn main() -> alpaka_rs::Result<()> {
-    let svc = GemmService::start(PathBuf::from("artifacts"), 64, 8)?;
-    println!("== GEMM service: 3 clients x 10 requests each ==\n");
+    let (native, artifact_ids) =
+        loadgen::native_config_or_synthetic(Path::new("artifacts"));
+    let serve = Serve::start(ServeConfig {
+        front_cap: 64,
+        shard_cap: 64,
+        max_batch: 8,
+        cache_cap: 128,
+        sim_threads: 2,
+        native: Some(native),
+    })?;
 
-    // warm the compile cache
-    for id in ["dot_n128_f32", "dot_n256_f32", "gemm_n128_t16_e1_f32"] {
-        svc.call(id)?;
-    }
-
-    // three "clients" submitting interleaved workloads
-    let workloads = [
-        ("client-a", "dot_n128_f32"),
-        ("client-b", "dot_n256_f32"),
-        ("client-c", "gemm_n128_t16_e1_f32"),
-    ];
-    let mut rxs = Vec::new();
-    for round in 0..10 {
-        for (client, id) in &workloads {
-            rxs.push((*client, *id, round, svc.submit(id)));
-        }
-    }
-
-    let mut t = Table::new(vec!["client", "artifact", "p50 exec ms",
-                                "p50 queue ms", "max batch"]).numeric();
-    for (client, id) in &workloads {
-        let stats: Vec<_> = rxs.iter()
-            .filter(|(c, i, _, _)| c == client && i == id)
-            .collect();
-        let mut execs = Vec::new();
-        let mut queues = Vec::new();
-        let mut max_batch = 0usize;
-        for (_, _, _, rx) in stats {
-            let s = rx.recv().expect("service alive")?;
-            execs.push(s.seconds * 1e3);
-            queues.push(s.queue_seconds * 1e3);
-            max_batch = max_batch.max(s.batch_size);
-        }
-        t.row(vec![client.to_string(), id.to_string(),
-                   format!("{:.3}", Summary::of(&execs).median),
-                   format!("{:.3}", Summary::of(&queues).median),
-                   max_batch.to_string()]);
-    }
-    println!("{}", t.render());
-    println!("requests were coalesced per artifact (dynamic batching) \
-              while the PJRT executor stayed single-owner.");
-    svc.shutdown();
+    println!("== unified serve layer: 6 clients x 12 requests over \
+              3 shards ==\n");
+    let spec = loadgen::LoadSpec {
+        clients: 6,
+        requests_per_client: 12,
+        items: loadgen::default_mix(&[ArchId::Knl, ArchId::P100Nvlink],
+                                    &artifact_ids, 1024),
+    };
+    let outcome = loadgen::run_closed_loop(&serve, &spec);
+    print!("{}", loadgen::outcome_report(&outcome, &serve));
+    println!("\nrequests were coalesced per work key (max batch {}) \
+              while each backend stayed single-owner.",
+             outcome.max_batch_seen);
+    serve.shutdown();
     Ok(())
 }

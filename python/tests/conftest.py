@@ -1,5 +1,12 @@
 """Shared pytest configuration: enable x64 before jax initializes."""
 
+import os
+import sys
+
+# Make `compile` (python/compile) importable no matter where pytest is
+# invoked from — the repo is not pip-installed.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
 import jax
 
 jax.config.update("jax_enable_x64", True)

@@ -5,10 +5,17 @@ The known-answer vectors here are duplicated in rust
 verification in the rust integration tests breaks. Keep in sync.
 """
 
+import json
+import os
+
 import numpy as np
 import pytest
 
 from compile import prng
+
+_FIXTURE = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "..", "..",
+    "rust", "tests", "fixtures", "prng_parity.json")
 
 
 def test_scalar_matches_vectorized():
@@ -60,6 +67,31 @@ def test_matrix_dtype_and_shape():
     np.testing.assert_array_equal(m32, m64.astype(np.float32))
     with pytest.raises(ValueError):
         prng.matrix(3, 2, 2, "f16")
+
+
+def test_parity_fixture_matches_bit_for_bit():
+    """The shared fixture asserted by rust/tests/prng_parity.rs.
+
+    Values are IEEE-754 bit patterns, so the comparison is exact. If
+    this test fails, the *python* implementation drifted; if the rust
+    twin fails, the rust one did.
+    """
+    with open(_FIXTURE) as f:
+        fixture = json.load(f)
+    artifacts = fixture["artifacts"]
+    assert len(artifacts) >= 3
+    for entry in artifacts:
+        for arg in entry["args"]:
+            seed = prng.seed_for(entry["id"], arg["arg"])
+            assert seed == arg["seed"], (entry["id"], arg["arg"])
+            m64 = prng.matrix(seed, 2, 3, "f64").ravel()
+            np.testing.assert_array_equal(
+                m64.view(np.uint64),
+                np.array(arg["f64_bits"], dtype=np.uint64))
+            m32 = prng.matrix(seed, 2, 3, "f32").ravel()
+            np.testing.assert_array_equal(
+                m32.view(np.uint32),
+                np.array(arg["f32_bits"], dtype=np.uint32))
 
 
 def test_seed_for_is_stable_and_distinct():

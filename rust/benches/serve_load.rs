@@ -1,0 +1,103 @@
+//! Closed-loop load generator over the unified serve layer — the
+//! acceptance bench for the serving plane: ≥ 8 concurrent clients,
+//! ≥ 3 backend shards (two simulated architectures + the native shard),
+//! p50/p95/p99 latency, nonzero result-cache hit rate, and zero
+//! silently dropped requests across shutdown.
+//!
+//! Run with: `cargo bench --bench serve_load` (artifacts optional — the
+//! native shard falls back to the synthetic host-GEMM catalog).
+
+use std::path::Path;
+use std::process::ExitCode;
+
+use alpaka_rs::arch::ArchId;
+use alpaka_rs::serve::{loadgen, Serve, ServeConfig};
+
+const CLIENTS: usize = 12;
+const REQUESTS_PER_CLIENT: usize = 40;
+
+fn main() -> ExitCode {
+    let (native, artifact_ids) =
+        loadgen::native_config_or_synthetic(Path::new("artifacts"));
+    let serve = match Serve::start(ServeConfig {
+        front_cap: 64,
+        shard_cap: 64,
+        max_batch: 8,
+        cache_cap: 256,
+        sim_threads: 2,
+        native: Some(native),
+    }) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("serve start failed: {e:#}");
+            return ExitCode::FAILURE;
+        }
+    };
+
+    let archs = [ArchId::Knl, ArchId::P100Nvlink];
+    let spec = loadgen::LoadSpec {
+        clients: CLIENTS,
+        requests_per_client: REQUESTS_PER_CLIENT,
+        items: loadgen::default_mix(&archs, &artifact_ids, 1024),
+    };
+    println!("serve_load: {CLIENTS} clients x {REQUESTS_PER_CLIENT} \
+              requests, mix of {} items over {} sim shards + native",
+             spec.items.len(), archs.len());
+    let outcome = loadgen::run_closed_loop(&serve, &spec);
+    print!("{}", loadgen::outcome_report(&outcome, &serve));
+    let m = &serve.metrics;
+    println!("p50 {:.3} ms   p95 {:.3} ms   p99 {:.3} ms",
+             1e3 * m.p50(), 1e3 * m.p95(), 1e3 * m.p99());
+
+    // ---- shutdown-drain check: submit a burst, then shut down -------
+    let pending: Vec<_> = (0..16)
+        .map(|i| serve.submit(spec.items[i % spec.items.len()].clone()))
+        .collect();
+    serve.shutdown();
+    let mut drained_ok = 0usize;
+    let mut drained_explicit_err = 0usize;
+    let mut dropped = 0usize;
+    for rx in pending {
+        match rx.recv() {
+            Ok(Ok(_)) => drained_ok += 1,
+            Ok(Err(_)) => drained_explicit_err += 1,
+            Err(_) => dropped += 1, // silent drop: channel died
+        }
+    }
+    println!("shutdown drain: {drained_ok} served, \
+              {drained_explicit_err} explicit errors, {dropped} \
+              silently dropped");
+
+    // ---- acceptance gates ------------------------------------------
+    let mut ok = true;
+    if outcome.per_shard.len() < 3 {
+        eprintln!("FAIL: expected >= 3 shards, saw {:?}",
+                  outcome.per_shard.keys().collect::<Vec<_>>());
+        ok = false;
+    }
+    if outcome.failed != 0 {
+        eprintln!("FAIL: {} requests failed: {:?}", outcome.failed,
+                  outcome.errors);
+        ok = false;
+    }
+    if outcome.ok + outcome.failed != outcome.submitted {
+        eprintln!("FAIL: accounting leak: {} + {} != {}", outcome.ok,
+                  outcome.failed, outcome.submitted);
+        ok = false;
+    }
+    if m.cache_hit_rate() <= 0.0 {
+        eprintln!("FAIL: result cache never hit");
+        ok = false;
+    }
+    if dropped != 0 {
+        eprintln!("FAIL: {dropped} requests silently dropped on \
+                   shutdown");
+        ok = false;
+    }
+    if ok {
+        println!("serve_load: PASS");
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

@@ -6,11 +6,15 @@
 //! and metrics. tokio is not available in this image; the event loop is
 //! built from `std::sync` primitives (DESIGN.md "Environment deviation").
 //!
-//! * [`queue`] — bounded MPMC queue with blocking push (backpressure)
-//!   and close semantics.
+//! * [`queue`] — bounded MPMC queue with blocking push (backpressure),
+//!   close semantics, closed-aware `try_pop` and batch draining
+//!   (`pop_batch`) — the substrate the serve layer is built on.
 //! * [`jobs`] — job/result types for sweep evaluation.
-//! * [`scheduler`] — worker pool + dispatch + result collection.
-//! * [`metrics`] — counters every component reports into.
+//! * [`scheduler`] — compatibility shim over [`crate::serve`] (the one
+//!   worker-loop implementation in the repo); keeps the campaign API
+//!   and the legacy [`Metrics`] view.
+//! * [`metrics`] — the legacy counters; new code reads
+//!   [`crate::serve::ServeMetrics`].
 
 pub mod jobs;
 pub mod metrics;

@@ -37,11 +37,21 @@ impl<T> BoundedQueue<T> {
     }
 
     /// Blocking push; returns Err(Closed) if the queue was closed.
+    /// The item is dropped on failure — callers that must not lose the
+    /// payload (e.g. to send an explicit rejection over a channel it
+    /// contains) use [`BoundedQueue::push_or_return`].
     pub fn push(&self, item: T) -> Result<(), Closed> {
+        self.push_or_return(item).map_err(|_| Closed)
+    }
+
+    /// Blocking push that hands the item back when the queue is closed,
+    /// so the caller can fail it explicitly instead of silently
+    /// dropping it.
+    pub fn push_or_return(&self, item: T) -> Result<(), T> {
         let mut g = self.inner.lock().expect("queue poisoned");
         loop {
             if g.closed {
-                return Err(Closed);
+                return Err(item);
             }
             if g.items.len() < self.capacity {
                 g.items.push_back(item);
@@ -53,6 +63,22 @@ impl<T> BoundedQueue<T> {
             }
             g = self.not_full.wait(g).expect("queue poisoned");
         }
+    }
+
+    /// Non-blocking push: hands the item back immediately when the
+    /// queue is full or closed (no waiting). Routing loops use this to
+    /// avoid head-of-line blocking across independent consumers.
+    pub fn try_push(&self, item: T) -> Result<(), T> {
+        let mut g = self.inner.lock().expect("queue poisoned");
+        if g.closed || g.items.len() >= self.capacity {
+            return Err(item);
+        }
+        g.items.push_back(item);
+        let depth = g.items.len();
+        g.max_depth = g.max_depth.max(depth);
+        drop(g);
+        self.not_empty.notify_one();
+        Ok(())
     }
 
     /// Blocking pop; returns None when the queue is closed AND drained.
@@ -71,14 +97,89 @@ impl<T> BoundedQueue<T> {
         }
     }
 
-    /// Non-blocking pop.
-    pub fn try_pop(&self) -> Option<T> {
+    /// Non-blocking pop that distinguishes "momentarily empty" from
+    /// "closed and drained":
+    ///
+    /// * `Ok(Some(item))` — an item was available (closed or not: a
+    ///   closed queue still drains);
+    /// * `Ok(None)` — empty but open: more items may arrive;
+    /// * `Err(Closed)` — closed AND drained: no item will ever arrive.
+    ///
+    /// Batching loops need the distinction: `Ok(None)` means "serve what
+    /// you have and poll again", `Err(Closed)` means "finish and exit".
+    pub fn try_pop(&self) -> Result<Option<T>, Closed> {
         let mut g = self.inner.lock().expect("queue poisoned");
-        let item = g.items.pop_front();
-        if item.is_some() {
-            self.not_full.notify_one();
+        match g.items.pop_front() {
+            Some(item) => {
+                drop(g);
+                self.not_full.notify_one();
+                Ok(Some(item))
+            }
+            None if g.closed => Err(Closed),
+            None => Ok(None),
         }
-        item
+    }
+
+    /// Blocking batch pop for continuous-batching consumers: waits until
+    /// at least one item is available, then drains up to `max` items in
+    /// one lock acquisition (FIFO order preserved). Returns an empty
+    /// vector only when the queue is closed AND drained.
+    ///
+    /// Wakeup audit: freeing `k` slots must wake up to `k` blocked
+    /// producers. `notify_one` would strand `k - 1` of them if no further
+    /// pops ever happen (a classic lost wakeup with mixed waiters), so
+    /// multi-slot frees use `notify_all` (see `pop_batch_timeout`, the
+    /// single implementation of the drain).
+    pub fn pop_batch(&self, max: usize) -> Vec<T> {
+        loop {
+            match self.pop_batch_timeout(
+                max, std::time::Duration::from_secs(3600))
+            {
+                Ok(items) if items.is_empty() => continue, // spurious
+                Ok(items) => return items,
+                Err(Closed) => return Vec::new(),
+            }
+        }
+    }
+
+    /// The batch-drain implementation ([`BoundedQueue::pop_batch`] is a
+    /// loop over this): waits up to `timeout` for at least one item,
+    /// then drains up to `max` in one lock acquisition. `Ok(items)`
+    /// (empty on timeout), `Err(Closed)` when closed AND drained. Lets
+    /// a consumer with other pending work (e.g. the dispatcher's
+    /// overflow buffers) poll without committing to an indefinite
+    /// block.
+    pub fn pop_batch_timeout(&self, max: usize,
+                             timeout: std::time::Duration)
+                             -> Result<Vec<T>, Closed> {
+        assert!(max > 0, "batch size must be positive");
+        let deadline = std::time::Instant::now() + timeout;
+        let mut g = self.inner.lock().expect("queue poisoned");
+        loop {
+            if !g.items.is_empty() {
+                let k = max.min(g.items.len());
+                let out: Vec<T> = g.items.drain(..k).collect();
+                drop(g);
+                if k > 1 {
+                    self.not_full.notify_all();
+                } else {
+                    self.not_full.notify_one();
+                }
+                return Ok(out);
+            }
+            if g.closed {
+                return Err(Closed);
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Ok(Vec::new());
+            }
+            let (guard, _res) = self
+                .not_empty
+                .wait_timeout(g, deadline - now)
+                .expect("queue poisoned");
+            g = guard;
+        }
     }
 
     /// Close: producers get Err, consumers drain then get None.
@@ -92,6 +193,11 @@ impl<T> BoundedQueue<T> {
 
     pub fn len(&self) -> usize {
         self.inner.lock().expect("queue poisoned").items.len()
+    }
+
+    /// Whether `close` has been called (items may still be draining).
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().expect("queue poisoned").closed
     }
 
     pub fn is_empty(&self) -> bool {
@@ -202,9 +308,136 @@ mod tests {
     #[test]
     fn try_pop_nonblocking() {
         let q = BoundedQueue::new(2);
-        assert_eq!(q.try_pop(), None);
+        assert_eq!(q.try_pop(), Ok(None));
         q.push(9).unwrap();
-        assert_eq!(q.try_pop(), Some(9));
+        assert_eq!(q.try_pop(), Ok(Some(9)));
+    }
+
+    #[test]
+    fn try_pop_distinguishes_closed_from_empty() {
+        let q = BoundedQueue::new(2);
+        assert_eq!(q.try_pop(), Ok(None)); // empty, open
+        q.push(1).unwrap();
+        q.close();
+        assert_eq!(q.try_pop(), Ok(Some(1))); // closed queues still drain
+        assert_eq!(q.try_pop(), Err(Closed)); // closed AND drained
+    }
+
+    #[test]
+    fn pop_batch_fifo_and_bounded() {
+        let q = BoundedQueue::new(8);
+        for i in 0..5 {
+            q.push(i).unwrap();
+        }
+        assert_eq!(q.pop_batch(3), vec![0, 1, 2]);
+        assert_eq!(q.pop_batch(10), vec![3, 4]);
+        q.close();
+        assert_eq!(q.pop_batch(4), Vec::<i32>::new());
+    }
+
+    #[test]
+    fn pop_batch_blocks_until_item() {
+        let q = Arc::new(BoundedQueue::new(4));
+        let q2 = Arc::clone(&q);
+        let consumer = std::thread::spawn(move || q2.pop_batch(4));
+        std::thread::sleep(Duration::from_millis(30));
+        q.push(7).unwrap();
+        let got = consumer.join().unwrap();
+        assert_eq!(got, vec![7]);
+    }
+
+    #[test]
+    fn pop_batch_frees_all_blocked_producers() {
+        // Cap-2 queue, full, THREE blocked producers. One pop_batch(2)
+        // frees two slots; notify_all must wake enough producers that
+        // all three eventually complete without further consumer help
+        // beyond the final drain.
+        let q = Arc::new(BoundedQueue::new(2));
+        q.push(0).unwrap();
+        q.push(1).unwrap();
+        let producers: Vec<_> = (2..5)
+            .map(|i| {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || q.push(i).unwrap())
+            })
+            .collect();
+        std::thread::sleep(Duration::from_millis(30));
+        let first = q.pop_batch(2);
+        assert_eq!(first, vec![0, 1]);
+        // two producers fill the freed slots; the third needs one more
+        // slot, freed by the next pop.
+        std::thread::sleep(Duration::from_millis(30));
+        let mut rest = Vec::new();
+        while rest.len() < 3 {
+            rest.extend(q.pop_batch(2));
+        }
+        for p in producers {
+            p.join().unwrap();
+        }
+        rest.sort_unstable();
+        assert_eq!(rest, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn try_push_full_and_closed_return_item() {
+        let q = BoundedQueue::new(1);
+        assert_eq!(q.try_push(1), Ok(()));
+        assert_eq!(q.try_push(2), Err(2)); // full: no block, item back
+        assert_eq!(q.pop(), Some(1));
+        q.close();
+        assert_eq!(q.try_push(3), Err(3)); // closed: item back
+    }
+
+    #[test]
+    fn pop_batch_timeout_times_out_then_delivers() {
+        let q: BoundedQueue<i32> = BoundedQueue::new(4);
+        let empty = q
+            .pop_batch_timeout(4, Duration::from_millis(10))
+            .unwrap();
+        assert!(empty.is_empty(), "timed out, queue still open");
+        q.push(5).unwrap();
+        assert_eq!(q.pop_batch_timeout(4, Duration::from_millis(10)),
+                   Ok(vec![5]));
+        q.close();
+        assert_eq!(q.pop_batch_timeout(4, Duration::from_millis(10)),
+                   Err(Closed));
+    }
+
+    #[test]
+    fn close_full_queue_with_blocked_producers_and_consumers() {
+        // Satellite stress case: a FULL queue with blocked producers
+        // plus, after drain, blocked consumers — close() must wake every
+        // one of them exactly once into a deterministic outcome:
+        // producers get Err(Closed), consumers drain then get None.
+        let q = Arc::new(BoundedQueue::new(2));
+        q.push(100).unwrap();
+        q.push(101).unwrap();
+        let producers: Vec<_> = (0..4)
+            .map(|i| {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || q.push(i))
+            })
+            .collect();
+        std::thread::sleep(Duration::from_millis(30));
+        q.close();
+        let outcomes: Vec<Result<(), Closed>> =
+            producers.into_iter().map(|p| p.join().unwrap()).collect();
+        assert!(outcomes.iter().all(|o| *o == Err(Closed)),
+                "blocked producers must observe Closed: {outcomes:?}");
+        // the two pre-close items are still drainable, then None —
+        // from concurrent consumers that were blocked on an empty queue
+        let drained: Vec<_> = (0..3)
+            .map(|_| {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || q.pop())
+            })
+            .map(|c| c.join().unwrap())
+            .collect();
+        let got: Vec<i32> = drained.iter().flatten().copied().collect();
+        assert_eq!(drained.iter().filter(|d| d.is_none()).count(), 1);
+        let mut got = got;
+        got.sort_unstable();
+        assert_eq!(got, vec![100, 101]);
     }
 
     #[test]

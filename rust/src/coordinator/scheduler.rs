@@ -1,142 +1,113 @@
-//! The scheduler: a worker pool draining a bounded job queue, with
-//! per-architecture machine-model instances, cancellation and metrics.
+//! The campaign scheduler — since the serve-layer unification a thin
+//! adapter over [`crate::serve`]: tuning points are submitted as
+//! [`WorkItem::Point`]s to the unified front queue, routed by the
+//! dispatcher to one shard per architecture, and evaluated there. The
+//! public API (`new`, `run_batch`, `cancel`, `metrics`, `park`) is
+//! unchanged; the private worker pool, queue and drain logic that used
+//! to live here are gone — there is exactly one worker-loop
+//! implementation in the repo now (`serve::shard_loop`).
+//!
+//! The result cache is deliberately disabled for campaigns: `run_batch`
+//! is a measurement path and must evaluate every submitted point.
 
-use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{channel, Sender};
-use std::sync::{Arc, Mutex};
-use std::thread::JoinHandle;
-use std::time::Instant;
+use std::sync::Arc;
 
-use crate::arch::ArchId;
-use crate::sim::{Machine, TuningPoint};
+use crate::serve::{Output, Serve, ServeConfig, ServeError, WorkItem};
+use crate::sim::TuningPoint;
 use crate::tuner::SweepRecord;
 
-use super::jobs::{JobResult, JobSpec};
+use super::jobs::JobResult;
 use super::metrics::Metrics;
-use super::queue::BoundedQueue;
 
-/// Shared machine-model registry: one memoised instance per arch.
-#[derive(Default)]
-pub struct MachinePark {
-    machines: Mutex<HashMap<ArchId, Arc<Machine>>>,
-}
+pub use crate::serve::MachinePark;
 
-impl MachinePark {
-    pub fn get(&self, arch: ArchId) -> Arc<Machine> {
-        let mut g = self.machines.lock().expect("park poisoned");
-        Arc::clone(g.entry(arch)
-                   .or_insert_with(|| Arc::new(Machine::for_arch(arch))))
-    }
-}
-
-/// The campaign scheduler.
+/// The campaign scheduler (compatibility shim over the serve layer).
 pub struct Scheduler {
-    queue: Arc<BoundedQueue<(JobSpec, Sender<JobResult>)>>,
-    workers: Vec<JoinHandle<()>>,
+    serve: Serve,
+    /// Legacy counter view; fed by this shim so existing callers and
+    /// tests keep their contract. New code should read
+    /// `serve::ServeMetrics` instead.
     pub metrics: Arc<Metrics>,
-    cancel: Arc<AtomicBool>,
-    park: Arc<MachinePark>,
 }
 
 impl Scheduler {
-    /// Spawn `workers` workers over a queue of `queue_cap` slots.
+    /// Spawn a scheduler: `workers` evaluation threads per architecture
+    /// shard over an admission queue of `queue_cap` slots.
     pub fn new(workers: usize, queue_cap: usize) -> Self {
-        let queue: Arc<BoundedQueue<(JobSpec, Sender<JobResult>)>> =
-            Arc::new(BoundedQueue::new(queue_cap.max(1)));
-        let metrics = Arc::new(Metrics::new());
-        let cancel = Arc::new(AtomicBool::new(false));
-        let park = Arc::new(MachinePark::default());
-        let handles = (0..workers.max(1))
-            .map(|widx| {
-                let queue = Arc::clone(&queue);
-                let metrics = Arc::clone(&metrics);
-                let cancel = Arc::clone(&cancel);
-                let park = Arc::clone(&park);
-                std::thread::Builder::new()
-                    .name(format!("alpaka-sched-{widx}"))
-                    .spawn(move || {
-                        worker_loop(widx, &queue, &metrics, &cancel, &park)
-                    })
-                    .expect("spawn scheduler worker")
-            })
-            .collect();
-        Self { queue, workers: handles, metrics, cancel, park }
+        let cfg = ServeConfig {
+            front_cap: queue_cap.max(1),
+            shard_cap: queue_cap.max(1),
+            max_batch: 8,
+            cache_cap: 0, // measurement path: never serve stale results
+            sim_threads: workers.max(1),
+            native: None,
+        };
+        let serve = Serve::start(cfg)
+            .expect("sim-only serve layer cannot fail to start");
+        Self { serve, metrics: Arc::new(Metrics::new()) }
     }
 
     /// Access the machine park (e.g. to pre-warm trace caches).
     pub fn park(&self) -> &MachinePark {
-        &self.park
+        self.serve.park().as_ref()
     }
 
     /// Request cancellation: queued jobs are drained without evaluation.
     pub fn cancel(&self) {
-        self.cancel.store(true, Ordering::SeqCst);
+        self.serve.cancel();
     }
 
     pub fn cancelled(&self) -> bool {
-        self.cancel.load(Ordering::SeqCst)
+        self.serve.cancelled()
     }
 
     /// Evaluate a batch of points; blocks until all results are in and
     /// returns them ordered by submission index. Cancelled jobs are
-    /// omitted.
+    /// omitted (and counted as failed in the legacy metrics, exactly as
+    /// the pre-serve scheduler did).
     pub fn run_batch(&self, points: Vec<TuningPoint>) -> Vec<JobResult> {
-        let (tx, rx) = channel::<JobResult>();
-        let n = points.len();
+        let mut pending = Vec::with_capacity(points.len());
         for (i, point) in points.into_iter().enumerate() {
-            let spec = JobSpec { id: i as u64, point };
             self.metrics.job_submitted();
-            self.metrics.observe_queue_depth(self.queue.len() + 1);
-            if self.queue.push((spec, tx.clone())).is_err() {
-                break; // shut down
+            pending.push((i as u64, self.serve
+                .submit(WorkItem::Point(point))));
+        }
+        // Legacy queue-depth metric: the front queue's own high-water
+        // (+1 for the in-flight item, matching the old per-submit
+        // `len() + 1` observation) — one read instead of one per job.
+        self.metrics.observe_queue_depth(
+            self.serve.front_depth_high_water() + 1);
+        let mut out: Vec<JobResult> = Vec::with_capacity(pending.len());
+        for (id, rx) in pending {
+            let reply = rx.recv().unwrap_or(Err(ServeError::Closed));
+            match reply {
+                Ok(r) => match r.output {
+                    Output::Sim { record, wall } => {
+                        self.metrics.job_completed(wall);
+                        out.push(JobResult { id, record, worker: r.worker,
+                                             wall });
+                    }
+                    _ => self.metrics.job_failed(),
+                },
+                Err(_) => self.metrics.job_failed(),
             }
         }
-        drop(tx);
-        let mut out: Vec<JobResult> = rx.into_iter().collect();
         out.sort_by_key(|r| r.id);
-        debug_assert!(out.len() <= n);
         out
     }
-}
 
-fn worker_loop(widx: usize,
-               queue: &BoundedQueue<(JobSpec, Sender<JobResult>)>,
-               metrics: &Metrics, cancel: &AtomicBool,
-               park: &MachinePark) {
-    while let Some((spec, tx)) = queue.pop() {
-        if cancel.load(Ordering::SeqCst) {
-            metrics.job_failed(); // cancelled counts as not-completed
-            continue;
-        }
-        let t0 = Instant::now();
-        let machine = park.get(spec.point.arch);
-        let pred = machine.predict(&spec.point);
-        let wall = t0.elapsed().as_secs_f64();
-        metrics.job_completed(wall);
-        let _ = tx.send(JobResult {
-            id: spec.id,
-            record: SweepRecord::new(spec.point, &pred),
-            worker: widx,
-            wall,
-        });
-    }
-}
-
-impl Drop for Scheduler {
-    fn drop(&mut self) {
-        self.queue.close();
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
+    /// One-off evaluation through the same path as `run_batch`.
+    pub fn run_one(&self, point: TuningPoint) -> Option<SweepRecord> {
+        self.run_batch(vec![point]).pop().map(|r| r.record)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::arch::CompilerId;
+    use crate::arch::{ArchId, CompilerId};
     use crate::gemm::Precision;
+    use crate::sim::Machine;
     use crate::tuner::TuningSpace;
 
     fn points(n: u64) -> Vec<TuningPoint> {
@@ -200,5 +171,14 @@ mod tests {
             let direct = m.predict(&r.record.point);
             assert!((direct.gflops - r.record.gflops).abs() < 1e-9);
         }
+    }
+
+    #[test]
+    fn run_one_matches_batch() {
+        let sched = Scheduler::new(2, 4);
+        let p = points(1024)[0];
+        let one = sched.run_one(p).unwrap();
+        assert_eq!(one.point, p);
+        assert!(one.gflops > 0.0);
     }
 }

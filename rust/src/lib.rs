@@ -30,12 +30,39 @@
 //! * [`runtime`] — the PJRT side: loads the AOT-lowered HLO text
 //!   artifacts of the *real* single-source Pallas kernel and executes
 //!   them on the host CPU (the sixth, "native" architecture).
-//! * [`coordinator`] — job scheduling across simulated devices and the
-//!   native runtime: thread-pool workers, bounded queues, metrics.
+//! * [`serve`] — the unified serving plane: ONE admission-controlled
+//!   front queue feeding per-backend **shards** (one per simulated
+//!   architecture plus a single-owner shard for the Rc-based PJRT
+//!   client), cross-request **continuous batching** per work key, an
+//!   LRU **result cache**, and unified metrics (throughput, queue-depth
+//!   high-water, p50/p95/p99 latency, cache hit rate). Both entry
+//!   points below are thin shims over it.
+//! * [`coordinator`] — the campaign-facing shim (`Scheduler`) plus the
+//!   bounded-queue substrate the serve layer is built on.
 //! * [`report`] — regenerates every table and figure of the paper.
 //! * [`cli`], [`util`] — substrates built from scratch for this repo
 //!   (arg parsing, PRNG shared bit-exactly with python, stats, ASCII
 //!   tables, CSV, property testing).
+//!
+//! # The backend-shard contract (how to add a backend)
+//!
+//! A serve-layer backend is a [`serve::Backend`]: one method turning a
+//! [`serve::WorkItem`] into a [`serve::Output`]. To add one:
+//!
+//! 1. give `WorkItem` a variant (or reuse one) and map it to a
+//!    [`serve::ShardKey`] in `WorkItem::shard_key` — the key decides
+//!    which shard's queue the dispatcher routes to;
+//! 2. implement `Backend` and register a factory for the key in
+//!    `serve::spawn_shard`; the factory runs ON the shard thread, so
+//!    non-`Send` state (device handles, Rc clients) is fine;
+//! 3. decide the shard's thread count (single-owner devices get 1) and
+//!    whether results are cacheable (`cache_key` equality must imply
+//!    result equivalence).
+//!
+//! Queueing, admission control, batching, caching, cancellation,
+//! shutdown draining and metrics are inherited — a new backend adds
+//! zero worker-loop code, which is the whole point (cf. the paper:
+//! one implementation, many architectures).
 
 pub mod arch;
 pub mod cli;
@@ -44,6 +71,7 @@ pub mod gemm;
 pub mod hierarchy;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod tuner;
 pub mod util;

@@ -95,6 +95,33 @@ fn cli() -> Cli {
                 ],
             },
             CommandSpec {
+                name: "serve",
+                about: "closed-loop load test of the unified serve \
+                        layer (sim shards + native shard)",
+                opts: vec![
+                    OptSpec::value("clients", Some("8"),
+                                   "concurrent closed-loop clients"),
+                    OptSpec::value("requests", Some("64"),
+                                   "requests per client"),
+                    OptSpec::value("archs", Some("knl,p100-nvlink"),
+                                   "comma-separated simulated archs"),
+                    OptSpec::value("artifacts-dir", Some("artifacts"),
+                                   "native-shard artifact directory \
+                                    (falls back to a synthetic catalog)"),
+                    OptSpec::value("n", Some("1024"),
+                                   "matrix size for simulated points"),
+                    OptSpec::value("max-batch", Some("8"),
+                                   "max coalesced batch per shard"),
+                    OptSpec::value("cache", Some("128"),
+                                   "LRU result-cache entries per shard \
+                                    (0 disables)"),
+                    OptSpec::value("queue", Some("64"),
+                                   "front/shard queue capacity"),
+                    OptSpec::value("sim-threads", Some("2"),
+                                   "worker threads per sim shard"),
+                ],
+            },
+            CommandSpec {
                 name: "mappings",
                 about: "print the Fig. 5 hierarchy mappings",
                 opts: vec![],
@@ -147,6 +174,7 @@ fn run(cli: &Cli, p: &Parsed) -> Result<()> {
         "tune" => cmd_tune(p),
         "repro" => cmd_repro(p),
         "native" => cmd_native(p),
+        "serve" => cmd_serve(p),
         "inspect-hlo" => cmd_inspect(p),
         "mappings" => {
             println!("{}", report::figures::fig5_mappings());
@@ -294,6 +322,56 @@ fn cmd_native(p: &Parsed) -> Result<()> {
         }
     }
     println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_serve(p: &Parsed) -> Result<()> {
+    use alpaka_rs::serve::{loadgen, Serve, ServeConfig};
+
+    let mut archs = Vec::new();
+    for tok in p.get_or("archs", "knl,p100-nvlink").split(',') {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            continue;
+        }
+        archs.push(ArchId::parse(tok)
+            .ok_or_else(|| anyhow::anyhow!("unknown arch {tok:?}"))?);
+    }
+    anyhow::ensure!(!archs.is_empty(), "need at least one arch");
+
+    // Native shard: real artifacts when present, synthetic catalog
+    // (host reference GEMM) otherwise — the load test always exercises
+    // all three shard families.
+    let dir = p.get_or("artifacts-dir", "artifacts").to_string();
+    let (native, artifact_ids) =
+        loadgen::native_config_or_synthetic(Path::new(&dir));
+
+    let clients = p.get_u64("clients")?.unwrap_or(8) as usize;
+    let requests = p.get_u64("requests")?.unwrap_or(64) as usize;
+    let n = p.get_u64("n")?.unwrap_or(1024);
+    let queue = p.get_u64("queue")?.unwrap_or(64) as usize;
+    let serve = Serve::start(ServeConfig {
+        front_cap: queue,
+        shard_cap: queue,
+        max_batch: p.get_u64("max-batch")?.unwrap_or(8) as usize,
+        cache_cap: p.get_u64("cache")?.unwrap_or(128) as usize,
+        sim_threads: p.get_u64("sim-threads")?.unwrap_or(2) as usize,
+        native: Some(native),
+    })?;
+
+    let spec = loadgen::LoadSpec {
+        clients,
+        requests_per_client: requests,
+        items: loadgen::default_mix(&archs, &artifact_ids, n),
+    };
+    println!("serve load: {clients} clients x {requests} requests over \
+              {} shard(s) + native, mix of {} items",
+             archs.len(), spec.items.len());
+    let outcome = loadgen::run_closed_loop(&serve, &spec);
+    print!("{}", loadgen::outcome_report(&outcome, &serve));
+    serve.shutdown();
+    anyhow::ensure!(outcome.failed == 0, "{} requests failed",
+                    outcome.failed);
     Ok(())
 }
 

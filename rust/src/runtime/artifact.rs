@@ -45,6 +45,9 @@ pub struct ArtifactMeta {
     /// Element-layer split.
     pub n_e: Option<u64>,
     pub precision: Precision,
+    /// GEMM coefficients (1.0 when the manifest omits them).
+    pub alpha: f64,
+    pub beta: f64,
 }
 
 /// The parsed manifest.
@@ -133,6 +136,8 @@ fn parse_artifact(a: &Value) -> Result<ArtifactMeta> {
         _ => None,
     };
     let n_e = spec.get("n_e").and_then(Value::as_u64);
+    let alpha = spec.get("alpha").and_then(Value::as_f64).unwrap_or(1.0);
+    let beta = spec.get("beta").and_then(Value::as_f64).unwrap_or(1.0);
 
     let mut inputs = Vec::new();
     for inp in a.get("inputs").and_then(Value::as_array)
@@ -170,7 +175,7 @@ fn parse_artifact(a: &Value) -> Result<ArtifactMeta> {
     };
 
     Ok(ArtifactMeta { id, kind, role, file, inputs, digest, flops, t,
-                      n: square, n_e, precision })
+                      n: square, n_e, precision, alpha, beta })
 }
 
 #[cfg(test)]
@@ -207,6 +212,7 @@ mod tests {
         assert_eq!(a.n, Some(128));
         assert_eq!(a.flops, Some(4243456));
         assert_eq!(a.precision, Precision::F32);
+        assert_eq!((a.alpha, a.beta), (1.0, 1.0));
         // seed beyond 2^53 preserved exactly
         assert_eq!(a.inputs[0].seed, 9007199254740993);
         assert_eq!(a.inputs[0].elements(), 128 * 128);

@@ -39,23 +39,21 @@ pub fn verify_kernel(kernel: &LoadedKernel, rtol: f64) -> Result<()> {
         let a = crate::util::prng::matrix_f64(meta.inputs[0].seed, n, n);
         let b = crate::util::prng::matrix_f64(meta.inputs[1].seed, n, n);
         let c = crate::util::prng::matrix_f64(meta.inputs[2].seed, n, n);
-        // alpha/beta are encoded in the artifact id only for non-default
-        // values; the default 1/1 covers all sweep/scaling artifacts.
-        if !meta.id.contains("_a") {
-            let want = verify::gemm_f64(n, &a, &b, &c, 1.0, 1.0);
-            let tol = match meta.precision {
-                crate::gemm::Precision::F32 => 5e-3,
-                crate::gemm::Precision::F64 => 1e-9,
-            };
-            let max_err = out
-                .iter()
-                .zip(&want)
-                .map(|(x, y)| (x - y).abs() / y.abs().max(1.0))
-                .fold(0.0f64, f64::max);
-            if max_err > tol {
-                anyhow::bail!("{}: oracle mismatch, max rel err {max_err}",
-                              meta.id);
-            }
+        // alpha/beta come from the manifest (default 1/1), so the
+        // oracle covers the coefficient variants too.
+        let want = verify::gemm_f64(n, &a, &b, &c, meta.alpha, meta.beta);
+        let tol = match meta.precision {
+            crate::gemm::Precision::F32 => 5e-3,
+            crate::gemm::Precision::F64 => 1e-9,
+        };
+        let max_err = out
+            .iter()
+            .zip(&want)
+            .map(|(x, y)| (x - y).abs() / y.abs().max(1.0))
+            .fold(0.0f64, f64::max);
+        if max_err > tol {
+            anyhow::bail!("{}: oracle mismatch, max rel err {max_err}",
+                          meta.id);
         }
     }
     Ok(())

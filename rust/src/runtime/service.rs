@@ -1,26 +1,27 @@
-//! A minimal GEMM *service* over the PJRT runtime — the serving-shaped
-//! face of the L3 coordinator (cf. the vLLM-router architecture the
-//! charter points at): clients submit artifact executions, a
-//! single-owner event loop batches consecutive requests per artifact,
-//! keeps a compile cache, and streams results back.
+//! The GEMM *service* — since the serve-layer unification a thin
+//! adapter over [`crate::serve`]: artifact executions are submitted as
+//! [`WorkItem::Artifact`]s to the unified front queue and served by the
+//! single-owner native shard (the PJRT client is Rc-based; concurrency
+//! happens in front of it — admission queue, continuous batching — not
+//! behind it). The private event loop, queue and batching code that
+//! used to live here are gone; `serve::shard_loop` is the one worker
+//! loop in the repo.
 //!
-//! The PJRT client is deliberately owned by ONE thread (it is Rc-based);
-//! concurrency happens in front of it — bounded queue, batching — not
-//! behind it. That mirrors production servers where a device executor is
-//! single-owner and the scheduler coalesces work.
+//! Contract fixes over the pre-serve version:
+//!
+//! * `submit` on a shut-down service delivers an **explicit error**
+//!   through the reply channel instead of silently dropping the request
+//!   and letting the caller infer shutdown from a disconnected channel;
+//! * the result cache is disabled here (measurement semantics: every
+//!   request executes). Serving-oriented callers use `serve::Serve`
+//!   directly with a cache capacity.
 
-use std::collections::HashMap;
 use std::path::PathBuf;
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
-use std::thread::JoinHandle;
-use std::time::Instant;
+use std::sync::mpsc::{channel, Receiver};
 
-use crate::coordinator::queue::BoundedQueue;
+use crate::serve::{NativeConfig, NativeEngine, Output, Serve,
+                   ServeConfig, ServeError, ServeReply, WorkItem};
 use crate::Result;
-
-use super::artifact::Manifest;
-use super::client::{LoadedKernel, Runtime};
 
 /// Result of one served execution.
 #[derive(Debug, Clone)]
@@ -33,51 +34,74 @@ pub struct RunStats {
     pub batch_size: usize,
     /// Queue wait time before execution started.
     pub queue_seconds: f64,
-}
-
-type Reply = Sender<Result<RunStats>>;
-
-struct Request {
-    artifact_id: String,
-    reply: Reply,
-    enqueued: Instant,
+    /// Which engine produced the timing: PJRT device execution, or the
+    /// explicit host reference-GEMM fallback. Measurement consumers
+    /// MUST check this — host-fallback numbers are not device numbers.
+    pub engine: NativeEngine,
 }
 
 /// Handle to a running service.
 pub struct GemmService {
-    queue: Arc<BoundedQueue<Request>>,
-    worker: Option<JoinHandle<()>>,
-    /// Maximum batch size the loop coalesces (same artifact).
+    serve: Serve,
+    /// Maximum batch size the shard loop coalesces (same artifact).
     pub max_batch: usize,
 }
 
+fn convert(reply: std::result::Result<ServeReply, ServeError>)
+           -> Result<RunStats> {
+    match reply {
+        Ok(r) => match r.output {
+            Output::Native { artifact_id, seconds, gflops, engine } => {
+                Ok(RunStats {
+                    artifact_id,
+                    seconds,
+                    gflops,
+                    batch_size: r.batch_size,
+                    queue_seconds: r.queue_seconds,
+                    engine,
+                })
+            }
+            other => Err(anyhow::anyhow!(
+                "native request produced non-native output {other:?}")),
+        },
+        Err(ServeError::Closed) => Err(anyhow::anyhow!(
+            "service closed: request rejected")),
+        Err(ServeError::Cancelled) => {
+            Err(anyhow::anyhow!("request cancelled"))
+        }
+        Err(ServeError::Backend(m)) => Err(anyhow::anyhow!("{m}")),
+    }
+}
+
 impl GemmService {
-    /// Start the service over an artifacts directory.
+    /// Start the service over an artifacts directory (the manifest is
+    /// loaded eagerly; a missing `artifacts/` errors here, like always).
     pub fn start(artifacts_dir: PathBuf, queue_cap: usize,
                  max_batch: usize) -> Result<Self> {
-        let manifest = Manifest::load(&artifacts_dir)?;
-        let queue: Arc<BoundedQueue<Request>> =
-            Arc::new(BoundedQueue::new(queue_cap.max(1)));
-        let q2 = Arc::clone(&queue);
         let max_batch = max_batch.max(1);
-        let worker = std::thread::Builder::new()
-            .name("alpaka-gemm-service".into())
-            .spawn(move || serve_loop(q2, manifest, max_batch))
-            .expect("spawn service thread");
-        Ok(Self { queue, worker: Some(worker), max_batch })
+        let cfg = ServeConfig {
+            front_cap: queue_cap.max(1),
+            shard_cap: queue_cap.max(1),
+            max_batch,
+            cache_cap: 0, // measurement semantics: always execute
+            sim_threads: 1,
+            native: Some(NativeConfig::Artifacts(artifacts_dir)),
+        };
+        Ok(Self { serve: Serve::start(cfg)?, max_batch })
     }
 
     /// Submit a request; returns the reply channel immediately
-    /// (backpressure: blocks while the queue is full).
+    /// (backpressure: blocks while the queue is full). After shutdown
+    /// the channel yields an explicit "service closed" error — a
+    /// request is never silently dropped.
     pub fn submit(&self, artifact_id: &str)
                   -> Receiver<Result<RunStats>> {
         let (tx, rx) = channel();
-        let req = Request { artifact_id: artifact_id.to_string(),
-                            reply: tx, enqueued: Instant::now() };
-        if self.queue.push(req).is_err() {
-            // service shut down: the dropped sender makes recv() fail,
-            // which callers observe as a disconnected service
-        }
+        self.serve.submit_with(
+            WorkItem::Artifact(artifact_id.to_string()),
+            Box::new(move |reply| {
+                let _ = tx.send(convert(reply));
+            }));
         rx
     }
 
@@ -88,113 +112,41 @@ impl GemmService {
             .map_err(|_| anyhow::anyhow!("service disconnected"))?
     }
 
+    /// Stop admission without blocking: queued requests still execute;
+    /// new submissions get the explicit closed error.
+    pub fn close(&self) {
+        self.serve.close();
+    }
+
+    /// Unified serve metrics for this service instance.
+    pub fn metrics(&self) -> &crate::serve::ServeMetrics {
+        &self.serve.metrics
+    }
+
     /// Graceful shutdown: drain the queue, then stop.
-    pub fn shutdown(mut self) {
-        self.queue.close();
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
+    pub fn shutdown(self) {
+        self.serve.shutdown();
     }
 }
 
-impl Drop for GemmService {
-    fn drop(&mut self) {
-        self.queue.close();
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
+// Dropping a GemmService drops the inner Serve, whose Drop closes the
+// front queue, drains queued requests and joins every thread.
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn start_without_artifacts_errors() {
+        let err = GemmService::start(
+            PathBuf::from("/nonexistent/alpaka-artifacts"), 4, 2)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("manifest.json"),
+                "got: {err:#}");
     }
 }
 
-fn serve_loop(queue: Arc<BoundedQueue<Request>>, manifest: Manifest,
-              max_batch: usize) {
-    let runtime = match Runtime::new() {
-        Ok(rt) => rt,
-        Err(e) => {
-            // fail every request with a clear error
-            while let Some(req) = queue.pop() {
-                let _ = req.reply.send(Err(anyhow::anyhow!(
-                    "PJRT init failed: {e:#}")));
-            }
-            return;
-        }
-    };
-    // compile + input cache, keyed by artifact id
-    let mut cache: HashMap<String, (LoadedKernel, Vec<xla::Literal>)> =
-        HashMap::new();
-
-    while let Some(first) = queue.pop() {
-        // dynamic batching: coalesce queued requests for the SAME
-        // artifact (continuous batching of identical shapes)
-        let mut batch = vec![first];
-        while batch.len() < max_batch {
-            match queue.try_pop() {
-                Some(req) if req.artifact_id == batch[0].artifact_id => {
-                    batch.push(req);
-                }
-                Some(other) => {
-                    // different artifact: serve it next round, FIFO-ish
-                    // (re-queue at the back; bounded queue may be full —
-                    // then serve it as its own batch immediately after)
-                    let id = other.artifact_id.clone();
-                    if queue.push(other).is_err() {
-                        // queue closed mid-flight; drop silently
-                        let _ = id;
-                    }
-                    break;
-                }
-                None => break,
-            }
-        }
-
-        let id = batch[0].artifact_id.clone();
-        let entry = match ensure_loaded(&runtime, &manifest, &mut cache,
-                                        &id) {
-            Ok(()) => cache.get(&id).expect("just inserted"),
-            Err(e) => {
-                let msg = format!("{e:#}");
-                for req in batch {
-                    let _ = req.reply.send(Err(anyhow::anyhow!(
-                        "{id}: {msg}")));
-                }
-                continue;
-            }
-        };
-        let (kernel, inputs) = entry;
-        let batch_size = batch.len();
-        for req in batch {
-            let queue_seconds = req.enqueued.elapsed().as_secs_f64();
-            let t0 = Instant::now();
-            let result = kernel.execute_only(inputs).map(|()| {
-                let seconds = t0.elapsed().as_secs_f64();
-                RunStats {
-                    artifact_id: id.clone(),
-                    seconds,
-                    gflops: kernel.meta.flops
-                        .map(|f| f as f64 / seconds / 1e9),
-                    batch_size,
-                    queue_seconds,
-                }
-            });
-            let _ = req.reply.send(result);
-        }
-    }
-}
-
-fn ensure_loaded(runtime: &Runtime, manifest: &Manifest,
-                 cache: &mut HashMap<String,
-                                     (LoadedKernel, Vec<xla::Literal>)>,
-                 id: &str) -> Result<()> {
-    if cache.contains_key(id) {
-        return Ok(());
-    }
-    let meta = manifest.by_id(id)
-        .ok_or_else(|| anyhow::anyhow!("unknown artifact {id}"))?;
-    let kernel = runtime.load(manifest, meta)?;
-    let inputs = kernel.make_inputs()?;
-    cache.insert(id.to_string(), (kernel, inputs));
-    Ok(())
-}
-
-// Integration tests live in rust/tests/gemm_service.rs (they need the
-// artifacts directory).
+// Integration tests live in rust/tests/gemm_service.rs (they need an
+// artifacts directory) and rust/tests/serve_layer.rs (which builds a
+// temporary one, so the full submit/batch/shutdown surface is covered
+// even without `make artifacts`).

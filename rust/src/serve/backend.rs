@@ -1,0 +1,573 @@
+//! Serve-layer backends: the single execution abstraction behind every
+//! shard.
+//!
+//! The paper's thesis — one implementation, tuned per backend — applied
+//! to the serving plane: a [`Backend`] turns one [`WorkItem`] into one
+//! [`Output`], and everything else (queueing, batching, caching,
+//! metrics) lives once in the shard loop instead of once per subsystem.
+//!
+//! Two backend families exist today:
+//!
+//! * [`SimBackend`] — machine-model prediction for a simulated
+//!   architecture (one shard per [`ArchId`]);
+//! * [`NativeBackend`] — execution on the host, via PJRT when the real
+//!   `xla_extension` is linked, falling back to the independent host
+//!   reference GEMM when device execution is unavailable (the vendored
+//!   stub build, or a PJRT runtime failure at serve time). The fallback
+//!   is reported explicitly in [`Output::Native`], never silently.
+//!
+//! Adding a third backend family means implementing [`Backend`] and
+//! giving [`WorkItem`] a routing case — no new worker loop, no new
+//! queue, no new metrics (see `lib.rs` crate docs and ROADMAP).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use std::sync::Mutex;
+
+use crate::arch::ArchId;
+use crate::gemm::{metrics as gemm_metrics, verify, Precision};
+use crate::runtime::artifact::Manifest;
+use crate::runtime::client::{LoadedKernel, Runtime};
+use crate::sim::{Machine, TuningPoint};
+use crate::tuner::SweepRecord;
+use crate::util::prng;
+
+/// Shared machine-model registry: one memoised [`Machine`] per
+/// architecture. Lives here because every sim shard draws from it; the
+/// coordinator's `Scheduler` re-exports it for backwards compatibility.
+#[derive(Default)]
+pub struct MachinePark {
+    machines: Mutex<HashMap<ArchId, Arc<Machine>>>,
+}
+
+impl MachinePark {
+    pub fn get(&self, arch: ArchId) -> Arc<Machine> {
+        let mut g = self.machines.lock().expect("park poisoned");
+        Arc::clone(g.entry(arch)
+                   .or_insert_with(|| Arc::new(Machine::for_arch(arch))))
+    }
+}
+
+/// One unit of serveable work.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WorkItem {
+    /// Evaluate a tuning point on its architecture's machine model.
+    Point(TuningPoint),
+    /// Execute a lowered artifact on the native backend.
+    Artifact(String),
+}
+
+impl WorkItem {
+    /// Which shard serves this item.
+    pub fn shard_key(&self) -> ShardKey {
+        match self {
+            WorkItem::Point(p) => ShardKey::Sim(p.arch),
+            WorkItem::Artifact(_) => ShardKey::Native,
+        }
+    }
+
+    /// Canonical key for batching and the result cache. Two items with
+    /// equal keys are interchangeable executions.
+    pub fn cache_key(&self) -> String {
+        match self {
+            WorkItem::Point(p) => format!("point:{p:?}"),
+            WorkItem::Artifact(id) => format!("artifact:{id}"),
+        }
+    }
+}
+
+/// Shard identity: one per simulated architecture plus the single-owner
+/// native shard (the PJRT client is Rc-based — exactly one owner thread).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ShardKey {
+    Sim(ArchId),
+    Native,
+}
+
+impl ShardKey {
+    pub fn label(&self) -> String {
+        match self {
+            ShardKey::Sim(a) => format!("sim:{}", a.slug()),
+            ShardKey::Native => "native".to_string(),
+        }
+    }
+}
+
+/// Which engine actually served a native request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NativeEngine {
+    Pjrt,
+    HostGemm,
+}
+
+/// A completed execution.
+#[derive(Debug, Clone)]
+pub enum Output {
+    /// Machine-model prediction (simulated shards).
+    Sim {
+        record: SweepRecord,
+        /// Model-evaluation wall time in seconds.
+        wall: f64,
+    },
+    /// Native execution (PJRT or host reference GEMM).
+    Native {
+        artifact_id: String,
+        seconds: f64,
+        gflops: Option<f64>,
+        engine: NativeEngine,
+    },
+}
+
+/// The execution abstraction every shard drives. Implementations are
+/// created *inside* the shard thread (the PJRT client is not `Send`),
+/// hence the `Send` factory type below rather than a `Send` bound here.
+pub trait Backend {
+    fn label(&self) -> String;
+    fn run(&mut self, item: &WorkItem) -> Result<Output, String>;
+}
+
+/// Constructor executed on the shard thread.
+pub type BackendFactory =
+    Box<dyn FnOnce() -> Result<Box<dyn Backend>, String> + Send>;
+
+// ---------------------------------------------------------------- sim --
+
+/// Machine-model backend for one simulated architecture.
+pub struct SimBackend {
+    arch: ArchId,
+    machine: Arc<Machine>,
+}
+
+impl SimBackend {
+    pub fn new(arch: ArchId, park: &MachinePark) -> Self {
+        Self { arch, machine: park.get(arch) }
+    }
+}
+
+impl Backend for SimBackend {
+    fn label(&self) -> String {
+        ShardKey::Sim(self.arch).label()
+    }
+
+    fn run(&mut self, item: &WorkItem) -> Result<Output, String> {
+        match item {
+            WorkItem::Point(p) => {
+                if p.arch != self.arch {
+                    return Err(format!(
+                        "routing bug: {} point on {} shard",
+                        p.arch.label(), self.arch.label()));
+                }
+                let t0 = Instant::now();
+                let pred = self.machine.predict(p);
+                Ok(Output::Sim {
+                    record: SweepRecord::new(*p, &pred),
+                    wall: t0.elapsed().as_secs_f64(),
+                })
+            }
+            WorkItem::Artifact(id) => Err(format!(
+                "sim shard {} cannot execute artifact {id}",
+                self.arch.label())),
+        }
+    }
+}
+
+// ------------------------------------------------------------- native --
+
+/// What the native backend knows about one artifact, independent of the
+/// engine that ends up executing it.
+#[derive(Debug, Clone)]
+pub struct NativeSpec {
+    pub id: String,
+    pub n: u64,
+    pub precision: Precision,
+    pub flops: Option<u128>,
+    /// Input seeds (a, b, c). `c` is unused for 2-input dot baselines.
+    pub seeds: Vec<u64>,
+    /// GEMM coefficients (from the manifest; 1.0/1.0 for synthetics).
+    pub alpha: f64,
+    pub beta: f64,
+    /// Whether the host reference GEMM can legally reproduce this
+    /// artifact (square shapes with known seeds).
+    pub host_capable: bool,
+}
+
+/// Largest N the host fallback will multiply (O(N^3) on one thread).
+const HOST_GEMM_MAX_N: u64 = 1024;
+
+enum HostInputs {
+    F32 { a: Vec<f32>, b: Vec<f32>, c: Vec<f32> },
+    F64 { a: Vec<f64>, b: Vec<f64>, c: Vec<f64> },
+}
+
+struct PjrtEngine {
+    runtime: Runtime,
+    manifest: Manifest,
+    kernels: HashMap<String, (LoadedKernel, Vec<xla::Literal>)>,
+}
+
+enum PjrtFailure {
+    /// This artifact cannot be served over PJRT; the engine is fine.
+    Artifact(String),
+    /// Device execution is unavailable; fall back for all requests.
+    Engine(String),
+}
+
+impl PjrtEngine {
+    fn run(&mut self, id: &str) -> Result<f64, PjrtFailure> {
+        if !self.kernels.contains_key(id) {
+            let meta = self.manifest.by_id(id).ok_or_else(|| {
+                PjrtFailure::Artifact(format!("unknown artifact {id}"))
+            })?;
+            let kernel =
+                self.runtime.load(&self.manifest, meta).map_err(|e| {
+                    PjrtFailure::Artifact(format!("load {id}: {e:#}"))
+                })?;
+            let inputs = kernel.make_inputs().map_err(|e| {
+                PjrtFailure::Artifact(format!("inputs {id}: {e:#}"))
+            })?;
+            self.kernels.insert(id.to_string(), (kernel, inputs));
+        }
+        let (kernel, inputs) = self.kernels.get(id).expect("just inserted");
+        let t0 = Instant::now();
+        kernel
+            .execute_only(inputs)
+            .map_err(|e| PjrtFailure::Engine(format!("{e:#}")))?;
+        Ok(t0.elapsed().as_secs_f64())
+    }
+}
+
+/// The native shard's backend: PJRT first, host reference GEMM fallback.
+pub struct NativeBackend {
+    catalog: HashMap<String, NativeSpec>,
+    pjrt: Option<PjrtEngine>,
+    /// Set after the first engine-level PJRT failure; logged once.
+    pjrt_dead: bool,
+    host_inputs: HashMap<String, HostInputs>,
+}
+
+impl NativeBackend {
+    /// Backend over a loaded artifacts manifest. PJRT client creation is
+    /// attempted eagerly; failure leaves only the host fallback (and is
+    /// reported per-request for artifacts the fallback cannot serve).
+    pub fn from_manifest(manifest: Manifest) -> Self {
+        let catalog = manifest
+            .artifacts
+            .iter()
+            .map(|meta| {
+                let n = meta.n.unwrap_or(0);
+                let square_inputs = meta.inputs.len() >= 2
+                    && meta.inputs.iter().all(|i| {
+                        i.shape.len() == 2
+                            && i.shape[0] as u64 == n
+                            && i.shape[1] as u64 == n
+                    });
+                let host_capable = (meta.kind == "gemm"
+                                    || meta.kind == "dot")
+                    && n > 0
+                    && n <= HOST_GEMM_MAX_N
+                    && square_inputs;
+                let spec = NativeSpec {
+                    id: meta.id.clone(),
+                    n,
+                    precision: meta.precision,
+                    flops: meta.flops,
+                    seeds: meta.inputs.iter().map(|i| i.seed).collect(),
+                    alpha: meta.alpha,
+                    beta: meta.beta,
+                    host_capable,
+                };
+                (meta.id.clone(), spec)
+            })
+            .collect();
+        let pjrt = match Runtime::new() {
+            Ok(runtime) => Some(PjrtEngine {
+                runtime,
+                manifest,
+                kernels: HashMap::new(),
+            }),
+            Err(e) => {
+                eprintln!("[serve] PJRT unavailable ({e:#}); native \
+                           shard uses the host reference GEMM");
+                None
+            }
+        };
+        Self { catalog, pjrt, pjrt_dead: false,
+               host_inputs: HashMap::new() }
+    }
+
+    /// Manifest-less backend over synthetic artifact ids (load testing
+    /// without `make artifacts`). Ids must parse — see
+    /// [`parse_artifact_id`].
+    pub fn synthetic(ids: &[String]) -> Result<Self, String> {
+        let mut catalog = HashMap::new();
+        for id in ids {
+            let (n, precision) = parse_artifact_id(id)
+                .ok_or_else(|| format!(
+                    "cannot synthesize artifact id {id:?} (expected \
+                     gemm_n<N>_t<T>_e<E>_<f32|f64> or dot_n<N>_<f32|f64> \
+                     with default alpha/beta)"))?;
+            if n > HOST_GEMM_MAX_N {
+                return Err(format!(
+                    "synthetic artifact {id}: N={n} exceeds host \
+                     fallback limit {HOST_GEMM_MAX_N}"));
+            }
+            // Real dot artifacts have 2 inputs (C is implicitly zero);
+            // gemms have 3. Mirror that so the synthetic catalog
+            // computes the same thing the manifest-backed one would.
+            let n_inputs = if id.starts_with("dot_") { 2 } else { 3 };
+            let spec = NativeSpec {
+                id: id.clone(),
+                n,
+                precision,
+                flops: Some(gemm_metrics::flops(n)),
+                seeds: (0..n_inputs)
+                    .map(|k| prng::seed_for(id, k))
+                    .collect(),
+                alpha: 1.0,
+                beta: 1.0,
+                host_capable: true,
+            };
+            catalog.insert(id.clone(), spec);
+        }
+        Ok(Self { catalog, pjrt: None, pjrt_dead: false,
+                  host_inputs: HashMap::new() })
+    }
+
+    pub fn artifact_ids(&self) -> Vec<String> {
+        let mut ids: Vec<String> = self.catalog.keys().cloned().collect();
+        ids.sort();
+        ids
+    }
+
+    fn host_run(&mut self, spec: &NativeSpec) -> Result<f64, String> {
+        if !spec.host_capable {
+            return Err(format!(
+                "artifact {} needs the PJRT runtime (host fallback only \
+                 reproduces square gemm/dot with known seeds)",
+                spec.id));
+        }
+        let n = spec.n as usize;
+        if !self.host_inputs.contains_key(&spec.id) {
+            let seed = |k: usize| {
+                spec.seeds.get(k).copied()
+                    .unwrap_or_else(|| prng::seed_for(&spec.id, k as u64))
+            };
+            let inputs = match spec.precision {
+                Precision::F32 => HostInputs::F32 {
+                    a: prng::matrix_f32(seed(0), n, n),
+                    b: prng::matrix_f32(seed(1), n, n),
+                    c: if spec.seeds.len() >= 3 {
+                        prng::matrix_f32(seed(2), n, n)
+                    } else {
+                        vec![0.0; n * n]
+                    },
+                },
+                Precision::F64 => HostInputs::F64 {
+                    a: prng::matrix_f64(seed(0), n, n),
+                    b: prng::matrix_f64(seed(1), n, n),
+                    c: if spec.seeds.len() >= 3 {
+                        prng::matrix_f64(seed(2), n, n)
+                    } else {
+                        vec![0.0; n * n]
+                    },
+                },
+            };
+            self.host_inputs.insert(spec.id.clone(), inputs);
+        }
+        // 2-input dot baselines multiply into a zero C (so any beta is
+        // inert); coefficients come from the manifest spec, 1/1 for
+        // synthetics.
+        let inputs = self.host_inputs.get(&spec.id).expect("just inserted");
+        let t0 = Instant::now();
+        match inputs {
+            HostInputs::F32 { a, b, c } => {
+                let out = verify::gemm_f32(n, a, b, c,
+                                           spec.alpha as f32,
+                                           spec.beta as f32);
+                std::hint::black_box(&out);
+            }
+            HostInputs::F64 { a, b, c } => {
+                let out = verify::gemm_f64(n, a, b, c, spec.alpha,
+                                           spec.beta);
+                std::hint::black_box(&out);
+            }
+        }
+        Ok(t0.elapsed().as_secs_f64())
+    }
+}
+
+impl Backend for NativeBackend {
+    fn label(&self) -> String {
+        ShardKey::Native.label()
+    }
+
+    fn run(&mut self, item: &WorkItem) -> Result<Output, String> {
+        let id = match item {
+            WorkItem::Artifact(id) => id,
+            WorkItem::Point(p) => {
+                return Err(format!(
+                    "native shard cannot evaluate simulated point on {}",
+                    p.arch.label()));
+            }
+        };
+        let spec = self
+            .catalog
+            .get(id)
+            .ok_or_else(|| format!("unknown artifact {id}"))?
+            .clone();
+
+        // PJRT first (when linked and not known-dead) …
+        if !self.pjrt_dead {
+            if let Some(engine) = self.pjrt.as_mut() {
+                match engine.run(id) {
+                    Ok(seconds) => {
+                        return Ok(Output::Native {
+                            artifact_id: id.clone(),
+                            seconds,
+                            gflops: spec.flops.map(|f| {
+                                f as f64 / seconds / 1e9
+                            }),
+                            engine: NativeEngine::Pjrt,
+                        });
+                    }
+                    Err(PjrtFailure::Artifact(msg)) => return Err(msg),
+                    Err(PjrtFailure::Engine(msg)) => {
+                        eprintln!("[serve] PJRT execution failed ({msg}); \
+                                   switching native shard to the host \
+                                   reference GEMM");
+                        self.pjrt_dead = true;
+                    }
+                }
+            }
+        }
+
+        // … host reference GEMM otherwise.
+        let seconds = self.host_run(&spec)?;
+        Ok(Output::Native {
+            artifact_id: id.clone(),
+            seconds,
+            gflops: spec.flops.map(|f| f as f64 / seconds / 1e9),
+            engine: NativeEngine::HostGemm,
+        })
+    }
+}
+
+/// Parse a synthetic artifact id of the forms the AOT path emits:
+/// `gemm_n<N>_t<T>_e<E>_<f32|f64>` or `dot_n<N>_<f32|f64>`. Returns
+/// `(n, precision)`, or `None` for anything else — including
+/// alpha/beta-suffixed ids (`…_a1.5_b0.5`), which the host fallback must
+/// not silently misreproduce with default coefficients.
+pub fn parse_artifact_id(id: &str) -> Option<(u64, Precision)> {
+    let toks: Vec<&str> = id.split('_').collect();
+    if toks.len() < 3 || (toks[0] != "gemm" && toks[0] != "dot") {
+        return None;
+    }
+    let n: u64 = toks[1].strip_prefix('n')?.parse().ok()?;
+    let precision = Precision::parse(toks.last()?)?;
+    // middle tokens must be t<digits> / e<digits> only
+    for t in &toks[2..toks.len() - 1] {
+        let bytes = t.as_bytes();
+        if bytes.len() < 2
+            || !(bytes[0] == b't' || bytes[0] == b'e')
+            || !bytes[1..].iter().all(u8::is_ascii_digit)
+        {
+            return None;
+        }
+    }
+    if n == 0 {
+        return None;
+    }
+    Some((n, precision))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::CompilerId;
+
+    #[test]
+    fn work_item_routing_and_keys() {
+        let p = TuningPoint::cpu(ArchId::Knl, CompilerId::Intel,
+                                 Precision::F64, 1024, 64, 1);
+        let w = WorkItem::Point(p);
+        assert_eq!(w.shard_key(), ShardKey::Sim(ArchId::Knl));
+        let a = WorkItem::Artifact("dot_n128_f32".into());
+        assert_eq!(a.shard_key(), ShardKey::Native);
+        assert_ne!(w.cache_key(), a.cache_key());
+        assert_eq!(a.cache_key(),
+                   WorkItem::Artifact("dot_n128_f32".into()).cache_key());
+    }
+
+    #[test]
+    fn id_parser_accepts_canonical_forms() {
+        assert_eq!(parse_artifact_id("gemm_n128_t16_e1_f32"),
+                   Some((128, Precision::F32)));
+        assert_eq!(parse_artifact_id("gemm_n256_t32_e4_f64"),
+                   Some((256, Precision::F64)));
+        assert_eq!(parse_artifact_id("dot_n128_f32"),
+                   Some((128, Precision::F32)));
+    }
+
+    #[test]
+    fn id_parser_rejects_alpha_beta_and_junk() {
+        assert_eq!(parse_artifact_id("gemm_n128_t16_e1_f32_a1.5_b0.5"),
+                   None);
+        assert_eq!(parse_artifact_id("mlp_b32_f32"), None);
+        assert_eq!(parse_artifact_id("gemm_nX_t16_e1_f32"), None);
+        assert_eq!(parse_artifact_id("gemm_n0_t16_e1_f32"), None);
+        assert_eq!(parse_artifact_id(""), None);
+    }
+
+    #[test]
+    fn sim_backend_predicts_and_guards_routing() {
+        let park = MachinePark::default();
+        let mut b = SimBackend::new(ArchId::Knl, &park);
+        let p = TuningPoint::cpu(ArchId::Knl, CompilerId::Intel,
+                                 Precision::F64, 1024, 64, 1);
+        match b.run(&WorkItem::Point(p)).unwrap() {
+            Output::Sim { record, wall } => {
+                assert!(record.gflops > 0.0);
+                assert!(wall >= 0.0);
+            }
+            other => panic!("unexpected output {other:?}"),
+        }
+        // wrong-arch point and artifact both refused
+        let wrong = TuningPoint::gpu(ArchId::K80, Precision::F32, 256, 4);
+        assert!(b.run(&WorkItem::Point(wrong)).is_err());
+        assert!(b.run(&WorkItem::Artifact("dot_n128_f32".into()))
+                 .is_err());
+    }
+
+    #[test]
+    fn synthetic_native_backend_serves_host_gemm() {
+        let ids = vec!["gemm_n64_t16_e1_f32".to_string(),
+                       "dot_n64_f64".to_string()];
+        let mut b = NativeBackend::synthetic(&ids).unwrap();
+        assert_eq!(b.artifact_ids(), {
+            let mut s = ids.clone();
+            s.sort();
+            s
+        });
+        match b.run(&WorkItem::Artifact(ids[0].clone())).unwrap() {
+            Output::Native { artifact_id, seconds, gflops, engine } => {
+                assert_eq!(artifact_id, ids[0]);
+                assert!(seconds > 0.0);
+                assert!(gflops.unwrap() > 0.0);
+                assert_eq!(engine, NativeEngine::HostGemm);
+            }
+            other => panic!("unexpected output {other:?}"),
+        }
+        assert!(b.run(&WorkItem::Artifact("nope".into())).unwrap_err()
+                 .contains("unknown artifact"));
+    }
+
+    #[test]
+    fn synthetic_rejects_unparseable_and_oversized() {
+        assert!(NativeBackend::synthetic(
+            &["mlp_b32_f32".to_string()]).is_err());
+        assert!(NativeBackend::synthetic(
+            &["gemm_n2048_t16_e1_f32".to_string()]).is_err());
+    }
+}

@@ -1,0 +1,111 @@
+//! LRU result cache for the serve layer.
+//!
+//! Keyed by `(backend shard, work item)` — in practice each shard owns
+//! one cache instance, so the key is the canonical work-item string and
+//! the backend dimension is implicit. Values are complete serve outputs
+//! (deterministic for the simulated backends; for the native backend the
+//! cache is only enabled by serving-oriented callers, never by the
+//! measurement-oriented `GemmService` shim, which must re-execute).
+//!
+//! Implementation: `HashMap` plus a monotonically increasing use-tick;
+//! eviction scans for the minimum tick. Caches here are small (hundreds
+//! of entries), so the O(n) eviction is simpler and cheaper than an
+//! intrusive list and trivially correct.
+
+use std::collections::HashMap;
+
+#[derive(Debug)]
+pub struct LruCache<V> {
+    capacity: usize,
+    tick: u64,
+    entries: HashMap<String, (u64, V)>,
+}
+
+impl<V: Clone> LruCache<V> {
+    /// `capacity == 0` means "disabled": every lookup misses, nothing is
+    /// stored.
+    pub fn new(capacity: usize) -> Self {
+        Self { capacity, tick: 0, entries: HashMap::new() }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.capacity > 0
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Look up and refresh recency.
+    pub fn get(&mut self, key: &str) -> Option<V> {
+        self.tick += 1;
+        let tick = self.tick;
+        self.entries.get_mut(key).map(|(t, v)| {
+            *t = tick;
+            v.clone()
+        })
+    }
+
+    /// Insert, evicting the least recently used entry when full.
+    pub fn put(&mut self, key: String, value: V) {
+        if self.capacity == 0 {
+            return;
+        }
+        self.tick += 1;
+        if !self.entries.contains_key(&key)
+            && self.entries.len() >= self.capacity
+        {
+            if let Some(oldest) = self
+                .entries
+                .iter()
+                .min_by_key(|(_, (t, _))| *t)
+                .map(|(k, _)| k.clone())
+            {
+                self.entries.remove(&oldest);
+            }
+        }
+        self.entries.insert(key, (self.tick, value));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_miss_and_eviction_order() {
+        let mut c: LruCache<u32> = LruCache::new(2);
+        assert!(c.get("a").is_none());
+        c.put("a".into(), 1);
+        c.put("b".into(), 2);
+        assert_eq!(c.get("a"), Some(1)); // refresh a → b is now LRU
+        c.put("c".into(), 3); // evicts b
+        assert_eq!(c.get("b"), None);
+        assert_eq!(c.get("a"), Some(1));
+        assert_eq!(c.get("c"), Some(3));
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn reinsert_updates_value_without_eviction() {
+        let mut c: LruCache<u32> = LruCache::new(2);
+        c.put("a".into(), 1);
+        c.put("b".into(), 2);
+        c.put("a".into(), 10); // same key: no eviction
+        assert_eq!(c.get("a"), Some(10));
+        assert_eq!(c.get("b"), Some(2));
+    }
+
+    #[test]
+    fn zero_capacity_disables() {
+        let mut c: LruCache<u32> = LruCache::new(0);
+        assert!(!c.enabled());
+        c.put("a".into(), 1);
+        assert!(c.get("a").is_none());
+        assert!(c.is_empty());
+    }
+}

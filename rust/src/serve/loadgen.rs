@@ -1,0 +1,264 @@
+//! Closed-loop load generator for the serve layer: N concurrent
+//! clients, each issuing its next request only after the previous reply
+//! (the classic closed-loop model — offered load adapts to service
+//! capacity, so the measured latencies are queueing-honest).
+//!
+//! Used by the `serve` CLI subcommand and `rust/benches/serve_load.rs`.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::Path;
+use std::time::Instant;
+
+use crate::arch::{compiler, ArchId, CompilerId};
+use crate::gemm::Precision;
+use crate::runtime::artifact::Manifest;
+use crate::sim::TuningPoint;
+use crate::util::table::Table;
+
+use super::{NativeConfig, NativeEngine, Output, Serve, ServeError,
+            WorkItem};
+
+/// The canonical demo artifact set used when no manifest is available
+/// (CLI `serve`, `serve_load` bench, `serve_gemm` example).
+pub const DEMO_ARTIFACT_IDS: [&str; 3] =
+    ["dot_n128_f32", "dot_n256_f32", "gemm_n128_t16_e1_f32"];
+
+/// Decide how the native shard gets its artifacts: a manifest under
+/// `dir` when one exists and contains small square gemm/dot artifacts
+/// (the mix stays light), otherwise the synthetic host-GEMM catalog
+/// over [`DEMO_ARTIFACT_IDS`] — with a stderr note, so a fallback is
+/// never silent. Returns the config plus the artifact ids to mix.
+pub fn native_config_or_synthetic(dir: &Path)
+                                  -> (NativeConfig, Vec<String>) {
+    match Manifest::load(dir) {
+        Ok(m) => {
+            let ids: Vec<String> = m
+                .artifacts
+                .iter()
+                .filter(|a| a.n.map(|n| n <= 256).unwrap_or(false)
+                        && (a.kind == "gemm" || a.kind == "dot"))
+                .take(4)
+                .map(|a| a.id.clone())
+                .collect();
+            if !ids.is_empty() {
+                return (NativeConfig::Artifacts(dir.to_path_buf()), ids);
+            }
+            eprintln!("note: manifest in {} has no small gemm/dot \
+                       artifacts — native shard uses the synthetic \
+                       host-GEMM catalog", dir.display());
+        }
+        Err(_) => {
+            eprintln!("note: no manifest in {} — native shard uses the \
+                       synthetic host-GEMM catalog", dir.display());
+        }
+    }
+    let ids: Vec<String> =
+        DEMO_ARTIFACT_IDS.iter().map(|s| s.to_string()).collect();
+    (NativeConfig::Synthetic(ids.clone()), ids)
+}
+
+/// Load-generation parameters.
+#[derive(Debug, Clone)]
+pub struct LoadSpec {
+    /// Concurrent closed-loop clients.
+    pub clients: usize,
+    /// Requests issued per client.
+    pub requests_per_client: usize,
+    /// The mixed item set; client `c`'s request `r` is
+    /// `items[(c + r) % items.len()]`, so every client cycles the whole
+    /// mix from a different phase.
+    pub items: Vec<WorkItem>,
+}
+
+/// Aggregated outcome of one load run (latency percentiles, throughput
+/// and cache hit rate live in [`super::ServeMetrics`]).
+#[derive(Debug, Clone, Default)]
+pub struct LoadOutcome {
+    pub submitted: usize,
+    pub ok: usize,
+    pub failed: usize,
+    pub wall_seconds: f64,
+    /// Completed requests per shard label.
+    pub per_shard: BTreeMap<String, usize>,
+    /// Completed native requests per engine ("pjrt" / "host-gemm").
+    pub per_engine: BTreeMap<String, usize>,
+    /// Largest coalesced batch any reply reported.
+    pub max_batch_seen: usize,
+    /// Error strings observed (deduplicated, for diagnostics).
+    pub errors: Vec<String>,
+}
+
+/// Build the standard mixed item set: for every simulated architecture a
+/// small tile sweep (t ∈ {16, 32, 64} on CPUs, t ∈ {2, 4} on GPUs), plus
+/// the given native artifact ids.
+pub fn default_mix(archs: &[ArchId], artifact_ids: &[String], n: u64)
+                   -> Vec<WorkItem> {
+    let mut items = Vec::new();
+    for &arch in archs {
+        let comp = compiler::vendor_compiler(arch);
+        if comp == CompilerId::Cuda {
+            for t in [2u64, 4] {
+                items.push(WorkItem::Point(TuningPoint::gpu(
+                    arch, Precision::F32, n, t)));
+            }
+        } else {
+            for t in [16u64, 32, 64] {
+                items.push(WorkItem::Point(TuningPoint::cpu(
+                    arch, comp, Precision::F64, n, t, 1)));
+            }
+        }
+    }
+    for id in artifact_ids {
+        items.push(WorkItem::Artifact(id.clone()));
+    }
+    items
+}
+
+/// Run the closed loop. Blocks until every client finished. Every
+/// request is accounted for in `ok + failed == submitted` — the serve
+/// layer's explicit-reply contract means nothing can vanish.
+pub fn run_closed_loop(serve: &Serve, spec: &LoadSpec) -> LoadOutcome {
+    assert!(!spec.items.is_empty(), "load mix must not be empty");
+    assert!(spec.clients > 0, "need at least one client");
+    let t0 = Instant::now();
+    let per_client: Vec<LoadOutcome> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..spec.clients)
+            .map(|c| {
+                scope.spawn(move || {
+                    let mut out = LoadOutcome::default();
+                    for r in 0..spec.requests_per_client {
+                        let item = spec.items[(c + r) % spec.items.len()]
+                            .clone();
+                        out.submitted += 1;
+                        match serve.call(item) {
+                            Ok(reply) => {
+                                out.ok += 1;
+                                *out.per_shard
+                                    .entry(reply.shard.clone())
+                                    .or_default() += 1;
+                                if let Output::Native { engine, .. } =
+                                    &reply.output
+                                {
+                                    let name = match engine {
+                                        NativeEngine::Pjrt => "pjrt",
+                                        NativeEngine::HostGemm => {
+                                            "host-gemm"
+                                        }
+                                    };
+                                    *out.per_engine
+                                        .entry(name.to_string())
+                                        .or_default() += 1;
+                                }
+                                out.max_batch_seen = out
+                                    .max_batch_seen
+                                    .max(reply.batch_size);
+                            }
+                            Err(e) => {
+                                out.failed += 1;
+                                let msg = match e {
+                                    ServeError::Backend(m) => m,
+                                    other => other.to_string(),
+                                };
+                                if !out.errors.contains(&msg) {
+                                    out.errors.push(msg);
+                                }
+                            }
+                        }
+                    }
+                    out
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client panicked"))
+            .collect()
+    });
+    let mut total = LoadOutcome { wall_seconds: t0.elapsed().as_secs_f64(),
+                                  ..Default::default() };
+    for c in per_client {
+        total.submitted += c.submitted;
+        total.ok += c.ok;
+        total.failed += c.failed;
+        total.max_batch_seen = total.max_batch_seen.max(c.max_batch_seen);
+        for (k, v) in c.per_shard {
+            *total.per_shard.entry(k).or_default() += v;
+        }
+        for (k, v) in c.per_engine {
+            *total.per_engine.entry(k).or_default() += v;
+        }
+        for e in c.errors {
+            if !total.errors.contains(&e) {
+                total.errors.push(e);
+            }
+        }
+    }
+    total
+}
+
+/// Render the standard load-run report: per-shard tallies, native
+/// engine split, the unified metrics summary and the accounting line.
+/// Shared by the CLI `serve` command, the bench and the example.
+pub fn outcome_report(outcome: &LoadOutcome, serve: &Serve) -> String {
+    let mut t = Table::new(vec!["shard", "served"]).numeric();
+    for (shard, count) in &outcome.per_shard {
+        t.row(vec![shard.clone(), count.to_string()]);
+    }
+    let mut out = t.render();
+    for (engine, count) in &outcome.per_engine {
+        let _ = writeln!(out, "native engine {engine}: {count} requests");
+    }
+    let _ = writeln!(out, "{}", serve.summary());
+    let _ = writeln!(
+        out,
+        "{} submitted = {} ok + {} failed in {:.3}s (max batch {})",
+        outcome.submitted, outcome.ok, outcome.failed,
+        outcome.wall_seconds, outcome.max_batch_seen);
+    if !outcome.errors.is_empty() {
+        let _ = writeln!(out, "errors: {:?}", outcome.errors);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::{NativeConfig, ServeConfig};
+
+    #[test]
+    fn mix_covers_all_shards() {
+        let items = default_mix(
+            &[ArchId::Knl, ArchId::P100Nvlink],
+            &["dot_n64_f32".to_string()], 1024);
+        let shards: std::collections::HashSet<_> =
+            items.iter().map(|i| i.shard_key()).collect();
+        assert_eq!(shards.len(), 3, "2 sim shards + native");
+    }
+
+    #[test]
+    fn closed_loop_accounts_for_every_request() {
+        let cfg = ServeConfig {
+            cache_cap: 32,
+            max_batch: 4,
+            native: Some(NativeConfig::Synthetic(vec![
+                "dot_n32_f32".to_string(),
+            ])),
+            ..Default::default()
+        };
+        let serve = Serve::start(cfg).unwrap();
+        let spec = LoadSpec {
+            clients: 4,
+            requests_per_client: 6,
+            items: default_mix(&[ArchId::Knl],
+                               &["dot_n32_f32".to_string()], 512),
+        };
+        let out = run_closed_loop(&serve, &spec);
+        assert_eq!(out.submitted, 24);
+        assert_eq!(out.ok + out.failed, out.submitted);
+        assert_eq!(out.failed, 0, "errors: {:?}", out.errors);
+        assert!(out.per_shard.contains_key("sim:knl"));
+        assert!(out.per_shard.contains_key("native"));
+        // repeats of the same small mix must hit the result cache
+        assert!(serve.metrics.cache_hits() > 0);
+        serve.shutdown();
+    }
+}

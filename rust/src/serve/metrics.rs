@@ -1,0 +1,299 @@
+//! Unified serve-layer metrics: request counters, cache hit rate,
+//! queue-depth high-water marks, throughput, and end-to-end latency
+//! percentiles from a lock-free log-scale histogram.
+//!
+//! One instance is shared by the front queue, the dispatcher and every
+//! shard — the single pane of glass the ROADMAP's serving goal needs
+//! (the per-subsystem counters of `coordinator::Metrics` remain only as
+//! a compatibility view fed by the Scheduler shim).
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::time::Instant;
+
+/// Number of log-scale latency buckets: bucket `i` holds samples in
+/// `[2^i, 2^(i+1))` microseconds; the last bucket is unbounded.
+const BUCKETS: usize = 40;
+
+/// Lock-free latency histogram, microsecond resolution, power-of-two
+/// buckets. Quantiles are read as the upper edge of the bucket where the
+/// cumulative count crosses the rank — at most a 2x overestimate, which
+/// is the right bias for serving SLOs (never under-report a percentile).
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    counts: [AtomicU64; BUCKETS],
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        // std has no Default for arrays this long; build explicitly.
+        Self { counts: std::array::from_fn(|_| AtomicU64::new(0)) }
+    }
+
+    fn bucket_of(seconds: f64) -> usize {
+        let us = (seconds * 1e6).max(0.0);
+        if us < 1.0 {
+            return 0;
+        }
+        ((us as u64).ilog2() as usize).min(BUCKETS - 1)
+    }
+
+    /// Upper edge of bucket `i` in seconds.
+    fn upper_edge(i: usize) -> f64 {
+        (1u64 << (i as u32 + 1).min(63)) as f64 / 1e6
+    }
+
+    pub fn record(&self, seconds: f64) {
+        self.counts[Self::bucket_of(seconds)]
+            .fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Quantile in seconds (`q` in [0, 1]); 0.0 when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64)
+            .max(1);
+        let mut seen = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            seen += c.load(Ordering::Relaxed);
+            if seen >= rank {
+                return Self::upper_edge(i);
+            }
+        }
+        Self::upper_edge(BUCKETS - 1)
+    }
+}
+
+/// The serve layer's shared metrics. All methods are lock-free.
+#[derive(Debug)]
+pub struct ServeMetrics {
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    failed: AtomicU64,
+    cancelled: AtomicU64,
+    cache_hits: AtomicU64,
+    cache_misses: AtomicU64,
+    /// High-water mark of the front (admission) queue.
+    front_depth_hw: AtomicUsize,
+    /// High-water mark across all shard queues.
+    shard_depth_hw: AtomicUsize,
+    /// Largest coalesced batch observed.
+    max_batch: AtomicUsize,
+    /// End-to-end latency: submit → reply.
+    pub latency: LatencyHistogram,
+    started: Instant,
+}
+
+impl Default for ServeMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ServeMetrics {
+    pub fn new() -> Self {
+        Self {
+            submitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            cancelled: AtomicU64::new(0),
+            cache_hits: AtomicU64::new(0),
+            cache_misses: AtomicU64::new(0),
+            front_depth_hw: AtomicUsize::new(0),
+            shard_depth_hw: AtomicUsize::new(0),
+            max_batch: AtomicUsize::new(0),
+            latency: LatencyHistogram::new(),
+            started: Instant::now(),
+        }
+    }
+
+    pub fn request_submitted(&self) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A request finished successfully; records its end-to-end latency.
+    pub fn request_completed(&self, latency_seconds: f64) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.latency.record(latency_seconds);
+    }
+
+    pub fn request_failed(&self) {
+        self.failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn request_cancelled(&self) {
+        self.cancelled.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn cache_hit(&self, n: u64) {
+        self.cache_hits.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn cache_miss(&self, n: u64) {
+        self.cache_misses.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn observe_front_depth(&self, depth: usize) {
+        self.front_depth_hw.fetch_max(depth, Ordering::Relaxed);
+    }
+
+    pub fn observe_shard_depth(&self, depth: usize) {
+        self.shard_depth_hw.fetch_max(depth, Ordering::Relaxed);
+    }
+
+    pub fn observe_batch(&self, size: usize) {
+        self.max_batch.fetch_max(size, Ordering::Relaxed);
+    }
+
+    pub fn submitted(&self) -> u64 {
+        self.submitted.load(Ordering::Relaxed)
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.completed.load(Ordering::Relaxed)
+    }
+
+    pub fn failed(&self) -> u64 {
+        self.failed.load(Ordering::Relaxed)
+    }
+
+    pub fn cancelled(&self) -> u64 {
+        self.cancelled.load(Ordering::Relaxed)
+    }
+
+    pub fn cache_hits(&self) -> u64 {
+        self.cache_hits.load(Ordering::Relaxed)
+    }
+
+    pub fn cache_misses(&self) -> u64 {
+        self.cache_misses.load(Ordering::Relaxed)
+    }
+
+    /// Hits / (hits + misses); 0.0 before any lookup.
+    pub fn cache_hit_rate(&self) -> f64 {
+        let h = self.cache_hits() as f64;
+        let m = self.cache_misses() as f64;
+        if h + m == 0.0 { 0.0 } else { h / (h + m) }
+    }
+
+    pub fn front_depth_high_water(&self) -> usize {
+        self.front_depth_hw.load(Ordering::Relaxed)
+    }
+
+    pub fn shard_depth_high_water(&self) -> usize {
+        self.shard_depth_hw.load(Ordering::Relaxed)
+    }
+
+    pub fn max_batch_observed(&self) -> usize {
+        self.max_batch.load(Ordering::Relaxed)
+    }
+
+    /// Completed requests per wall-clock second since construction.
+    pub fn throughput(&self) -> f64 {
+        let secs = self.started.elapsed().as_secs_f64().max(1e-9);
+        self.completed() as f64 / secs
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.latency.quantile(0.50)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.latency.quantile(0.95)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.latency.quantile(0.99)
+    }
+
+    /// Human summary line for CLIs and benches.
+    pub fn summary(&self) -> String {
+        format!(
+            "serve: {} submitted, {} ok, {} failed, {} cancelled; \
+             cache {:.0}% ({}H/{}M); depth hw front={} shard={}; \
+             max batch {}; p50={:.3}ms p95={:.3}ms p99={:.3}ms; \
+             {:.1} req/s",
+            self.submitted(), self.completed(), self.failed(),
+            self.cancelled(), 100.0 * self.cache_hit_rate(),
+            self.cache_hits(), self.cache_misses(),
+            self.front_depth_high_water(),
+            self.shard_depth_high_water(), self.max_batch_observed(),
+            1e3 * self.p50(), 1e3 * self.p95(), 1e3 * self.p99(),
+            self.throughput())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_monotone() {
+        let h = LatencyHistogram::new();
+        for us in [1.0, 10.0, 100.0, 1000.0, 10_000.0] {
+            h.record(us / 1e6);
+        }
+        assert_eq!(h.count(), 5);
+        assert!(h.quantile(0.0) <= h.quantile(0.5));
+        assert!(h.quantile(0.5) <= h.quantile(1.0));
+        // p100 bucket must cover the 10ms sample: upper edge >= 10ms
+        assert!(h.quantile(1.0) >= 0.01);
+        // p50 of this set is the 100us sample's bucket: <= 256us edge
+        assert!(h.quantile(0.5) <= 512e-6);
+    }
+
+    #[test]
+    fn histogram_empty_is_zero() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.quantile(0.5), 0.0);
+    }
+
+    #[test]
+    fn histogram_extremes_clamped() {
+        let h = LatencyHistogram::new();
+        h.record(0.0); // sub-microsecond → bucket 0
+        h.record(1e9); // absurdly large → last bucket
+        assert_eq!(h.count(), 2);
+        assert!(h.quantile(1.0) > 0.0);
+    }
+
+    #[test]
+    fn counters_and_rates() {
+        let m = ServeMetrics::new();
+        m.request_submitted();
+        m.request_submitted();
+        m.request_completed(0.001);
+        m.request_failed();
+        m.cache_hit(3);
+        m.cache_miss(1);
+        m.observe_front_depth(5);
+        m.observe_front_depth(2);
+        m.observe_batch(4);
+        assert_eq!(m.submitted(), 2);
+        assert_eq!(m.completed(), 1);
+        assert_eq!(m.failed(), 1);
+        assert!((m.cache_hit_rate() - 0.75).abs() < 1e-12);
+        assert_eq!(m.front_depth_high_water(), 5);
+        assert_eq!(m.max_batch_observed(), 4);
+        assert!(m.throughput() > 0.0);
+        assert!(m.summary().contains("2 submitted"));
+    }
+
+    #[test]
+    fn hit_rate_defined_before_traffic() {
+        let m = ServeMetrics::new();
+        assert_eq!(m.cache_hit_rate(), 0.0);
+    }
+}

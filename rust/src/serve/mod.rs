@@ -1,0 +1,792 @@
+//! The unified serve layer — ONE admission-controlled front queue, ONE
+//! dispatcher, per-backend **shards**, cross-request **batching**, an
+//! LRU **result cache** and unified **metrics**, shared by everything
+//! that executes work in this repo.
+//!
+//! Before this module existed the repo had two disjoint concurrency
+//! stacks: `coordinator::Scheduler` (sweep jobs over simulated
+//! machines) and `runtime::GemmService` (PJRT artifact serving), each
+//! with its own queue, worker loop and counters. The paper's own thesis
+//! — one implementation, tuned per backend — applies to the serving
+//! plane too, so both are now thin shims over this layer.
+//!
+//! # Architecture
+//!
+//! ```text
+//!  clients ──submit──▶ front BoundedQueue (admission control)
+//!                          │ dispatcher thread
+//!            ┌─────────────┼──────────────┬──────────────┐
+//!            ▼             ▼              ▼              ▼
+//!      shard sim:knl  shard sim:p100  shard sim:…   shard native
+//!      (N threads)    (N threads)     (N threads)   (1 thread — the
+//!            │             │              │          PJRT client is
+//!            ▼             ▼              ▼          Rc-based)
+//!       pop_batch → group by work key → LRU cache → Backend::run
+//!                          │
+//!                          └──▶ reply channels + ServeMetrics
+//! ```
+//!
+//! * **Admission**: `submit` blocks while the front queue is full
+//!   (backpressure) and fails *explicitly* with [`ServeError::Closed`]
+//!   after shutdown — a request is never silently dropped.
+//! * **Shards**: created lazily by the dispatcher, one per simulated
+//!   [`ArchId`](crate::arch::ArchId) plus a single-owner native shard.
+//! * **Batching**: shard workers drain up to `max_batch` requests in one
+//!   `pop_batch`, group them by work key, and serve each group with one
+//!   backend execution.
+//! * **Caching**: per-shard LRU keyed by the canonical work-item key;
+//!   disabled (capacity 0) for measurement-oriented callers.
+//! * **Shutdown**: `close` stops admission; queued work is drained,
+//!   executed and replied to before workers exit. `cancel` short-cuts
+//!   execution but still replies ([`ServeError::Cancelled`]).
+
+pub mod backend;
+pub mod cache;
+pub mod loadgen;
+pub mod metrics;
+
+use std::collections::HashMap;
+use std::fmt;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::coordinator::queue::BoundedQueue;
+use crate::runtime::artifact::Manifest;
+
+pub use backend::{Backend, BackendFactory, MachinePark, NativeBackend,
+                  NativeEngine, Output, ShardKey, SimBackend, WorkItem};
+pub use cache::LruCache;
+pub use metrics::ServeMetrics;
+
+/// Why a request did not produce an output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// The serve layer is shut down; the request was rejected at
+    /// admission (explicitly — never a dangling channel).
+    Closed,
+    /// `cancel()` was called before this request executed.
+    Cancelled,
+    /// The backend refused or failed the request.
+    Backend(String),
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::Closed => {
+                write!(f, "serve layer closed: request rejected")
+            }
+            ServeError::Cancelled => write!(f, "request cancelled"),
+            ServeError::Backend(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// A served request's full story.
+#[derive(Debug, Clone)]
+pub struct ServeReply {
+    /// Label of the shard that served it (e.g. `sim:KNL`, `native`).
+    pub shard: String,
+    pub output: Output,
+    /// Size of the coalesced group this request was served in.
+    pub batch_size: usize,
+    /// Wait from submission to the start of execution, seconds.
+    pub queue_seconds: f64,
+    /// Whether the result came from the shard's LRU cache.
+    pub cache_hit: bool,
+    /// Worker index within the shard.
+    pub worker: usize,
+}
+
+pub type ReplyRx = Receiver<Result<ServeReply, ServeError>>;
+
+/// Reply continuation, invoked exactly once per request — by a shard
+/// worker, or by the admission path on rejection. Adapters (the
+/// Scheduler/GemmService shims) use this to translate the reply type
+/// without forwarder threads.
+pub type ReplyFn = Box<dyn FnOnce(Result<ServeReply, ServeError>) + Send>;
+
+struct ServeRequest {
+    item: WorkItem,
+    reply: ReplyFn,
+    enqueued: Instant,
+}
+
+/// Where the native shard gets its artifacts.
+#[derive(Debug, Clone)]
+pub enum NativeConfig {
+    /// Load `manifest.json` from this directory (PJRT path, with host
+    /// reference-GEMM fallback when device execution is unavailable).
+    Artifacts(PathBuf),
+    /// Manifest-less synthetic catalog from parseable artifact ids
+    /// (host reference GEMM only) — for load tests without artifacts.
+    Synthetic(Vec<String>),
+}
+
+/// Serve-layer tuning knobs.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Front (admission) queue capacity.
+    pub front_cap: usize,
+    /// Per-shard queue capacity.
+    pub shard_cap: usize,
+    /// Maximum requests coalesced per `pop_batch`.
+    pub max_batch: usize,
+    /// LRU result-cache entries per shard; 0 disables caching
+    /// (measurement-oriented callers must re-execute every request).
+    pub cache_cap: usize,
+    /// Worker threads per simulated shard (the native shard always has
+    /// exactly one — its PJRT client is single-owner).
+    pub sim_threads: usize,
+    pub native: Option<NativeConfig>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self { front_cap: 64, shard_cap: 64, max_batch: 8, cache_cap: 0,
+               sim_threads: 1, native: None }
+    }
+}
+
+enum NativeSource {
+    Manifest(Manifest),
+    Synthetic(Vec<String>),
+}
+
+struct ShardHandle {
+    queue: Arc<BoundedQueue<ServeRequest>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+/// Handle to a running serve layer.
+pub struct Serve {
+    front: Arc<BoundedQueue<ServeRequest>>,
+    dispatcher: Option<JoinHandle<()>>,
+    pub metrics: Arc<ServeMetrics>,
+    cancel: Arc<AtomicBool>,
+    park: Arc<MachinePark>,
+}
+
+impl Serve {
+    /// Start the layer. The native manifest (when configured) is loaded
+    /// eagerly so configuration errors surface here, not on the first
+    /// artifact request; shard threads spawn lazily on first use.
+    pub fn start(cfg: ServeConfig) -> crate::Result<Serve> {
+        let native_src = match &cfg.native {
+            None => None,
+            Some(NativeConfig::Artifacts(dir)) => {
+                Some(NativeSource::Manifest(Manifest::load(dir)?))
+            }
+            Some(NativeConfig::Synthetic(ids)) => {
+                // validate ids eagerly
+                for id in ids {
+                    if backend::parse_artifact_id(id).is_none() {
+                        anyhow::bail!(
+                            "unsupported synthetic artifact id {id:?}");
+                    }
+                }
+                Some(NativeSource::Synthetic(ids.clone()))
+            }
+        };
+        let front: Arc<BoundedQueue<ServeRequest>> =
+            Arc::new(BoundedQueue::new(cfg.front_cap.max(1)));
+        let metrics = Arc::new(ServeMetrics::new());
+        let cancel = Arc::new(AtomicBool::new(false));
+        let park = Arc::new(MachinePark::default());
+        let dispatcher = {
+            let front = Arc::clone(&front);
+            let metrics = Arc::clone(&metrics);
+            let cancel = Arc::clone(&cancel);
+            let park = Arc::clone(&park);
+            let cfg = cfg.clone();
+            std::thread::Builder::new()
+                .name("serve-dispatch".into())
+                .spawn(move || {
+                    dispatch_loop(front, cfg, native_src, park, metrics,
+                                  cancel)
+                })
+                .expect("spawn serve dispatcher")
+        };
+        Ok(Serve { front, dispatcher: Some(dispatcher), metrics, cancel,
+                   park })
+    }
+
+    /// Submit a work item. Blocks while the front queue is full
+    /// (admission control). The returned channel ALWAYS yields exactly
+    /// one explicit result — after shutdown that result is
+    /// `Err(ServeError::Closed)`, never a dangling disconnect.
+    pub fn submit(&self, item: WorkItem) -> ReplyRx {
+        let (tx, rx) = channel();
+        self.submit_with(item, Box::new(move |r| {
+            let _ = tx.send(r);
+        }));
+        rx
+    }
+
+    /// Submit with a reply continuation instead of a channel. The
+    /// continuation runs exactly once — with `Err(ServeError::Closed)`
+    /// synchronously when admission is already shut down.
+    pub fn submit_with(&self, item: WorkItem, reply: ReplyFn) {
+        self.metrics.request_submitted();
+        // Depth high-water comes from the queue's own max_depth (one
+        // lock inside push), not a separate len() read per request.
+        let req = ServeRequest { item, reply,
+                                 enqueued: Instant::now() };
+        if let Err(req) = self.front.push_or_return(req) {
+            self.metrics.request_failed();
+            (req.reply)(Err(ServeError::Closed));
+        }
+    }
+
+    /// Like [`Serve::submit`] but reports shutdown on the call itself.
+    pub fn try_submit(&self, item: WorkItem)
+                      -> Result<ReplyRx, ServeError> {
+        if self.front.is_closed() {
+            self.metrics.request_submitted();
+            self.metrics.request_failed();
+            return Err(ServeError::Closed);
+        }
+        Ok(self.submit(item))
+    }
+
+    /// Submit and wait.
+    pub fn call(&self, item: WorkItem) -> Result<ServeReply, ServeError> {
+        // recv error cannot happen (every request gets an explicit
+        // reply); map it to Closed defensively rather than panicking.
+        self.submit(item).recv().unwrap_or(Err(ServeError::Closed))
+    }
+
+    /// Request cancellation: queued work is drained and replied to with
+    /// [`ServeError::Cancelled`] instead of executing.
+    pub fn cancel(&self) {
+        self.cancel.store(true, Ordering::SeqCst);
+    }
+
+    pub fn cancelled(&self) -> bool {
+        self.cancel.load(Ordering::SeqCst)
+    }
+
+    /// Stop admission (idempotent). Queued requests still complete;
+    /// subsequent `submit`s get an explicit `Closed` error.
+    pub fn close(&self) {
+        self.front.close();
+    }
+
+    /// Current front-queue depth (for admission metrics).
+    pub fn front_depth(&self) -> usize {
+        self.front.len()
+    }
+
+    /// High-water mark of the front queue since start (tracked inside
+    /// the queue itself — no per-request metric calls on the hot path).
+    pub fn front_depth_high_water(&self) -> usize {
+        self.front.max_depth()
+    }
+
+    /// Unified metrics summary with the queue-depth high-water marks
+    /// folded in (they live in the queues until read).
+    pub fn summary(&self) -> String {
+        self.metrics.observe_front_depth(self.front.max_depth());
+        self.metrics.summary()
+    }
+
+    /// The shared machine-model registry (pre-warm, inspection).
+    pub fn park(&self) -> &Arc<MachinePark> {
+        &self.park
+    }
+
+    /// Graceful shutdown: close admission, drain, join all threads.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        self.front.close();
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+    }
+}
+
+impl Drop for Serve {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+fn dispatch_loop(front: Arc<BoundedQueue<ServeRequest>>, cfg: ServeConfig,
+                 mut native_src: Option<NativeSource>,
+                 park: Arc<MachinePark>, metrics: Arc<ServeMetrics>,
+                 cancel: Arc<AtomicBool>) {
+    use std::collections::VecDeque;
+    use std::time::Duration;
+
+    let mut shards: HashMap<ShardKey, ShardHandle> = HashMap::new();
+    // Per-shard overflow buffers: when one shard's queue is full, its
+    // requests wait HERE instead of blocking the dispatcher — a slow
+    // native shard must not head-of-line-block sim traffic sitting
+    // behind it in the single front queue. Bounded: past the limit the
+    // dispatcher blocks on the saturated shard only (memory stays
+    // bounded; other shards were already routed).
+    let mut overflow: HashMap<ShardKey, VecDeque<ServeRequest>> =
+        HashMap::new();
+    let mut overflow_len = 0usize;
+    let overflow_limit = cfg.front_cap.max(16) * 4;
+    let mut front_open = true;
+
+    while front_open || overflow_len > 0 {
+        // 1. Flush overflows opportunistically (FIFO per shard).
+        for (key, buf) in overflow.iter_mut() {
+            let handle = shards.get(key).expect("overflow implies shard");
+            while let Some(req) = buf.pop_front() {
+                match handle.queue.try_push(req) {
+                    Ok(()) => overflow_len -= 1,
+                    Err(req) => {
+                        buf.push_front(req);
+                        break;
+                    }
+                }
+            }
+        }
+        if !front_open {
+            // Nothing new can arrive: drain remaining overflow with
+            // blocking pushes (shard queues are still open — they close
+            // below, after this loop).
+            for (key, buf) in overflow.iter_mut() {
+                let handle =
+                    shards.get(key).expect("overflow implies shard");
+                for req in buf.drain(..) {
+                    overflow_len -= 1;
+                    if let Err(req) = handle.queue.push_or_return(req) {
+                        metrics.request_failed();
+                        (req.reply)(Err(ServeError::Closed));
+                    }
+                }
+            }
+            break;
+        }
+
+        // 2. Take the next burst from the front queue. With overflow
+        // pending we only poll briefly so stalled shards keep getting
+        // flush attempts; otherwise we block until work or close.
+        let burst = if overflow_len == 0 {
+            let b = front.pop_batch(32);
+            if b.is_empty() {
+                front_open = false;
+                continue;
+            }
+            b
+        } else {
+            match front.pop_batch_timeout(32, Duration::from_millis(1)) {
+                Ok(b) => b, // possibly empty: timeout → retry flush
+                Err(_closed) => {
+                    front_open = false;
+                    continue;
+                }
+            }
+        };
+
+        // 3. Route the burst.
+        for req in burst {
+            let key = req.item.shard_key();
+            if !shards.contains_key(&key) {
+                match spawn_shard(key, &cfg, &mut native_src, &park,
+                                  &metrics, &cancel) {
+                    Ok(handle) => {
+                        shards.insert(key, handle);
+                    }
+                    Err(e) => {
+                        metrics.request_failed();
+                        (req.reply)(Err(ServeError::Backend(
+                            format!("{}: {e}", key.label()))));
+                        continue;
+                    }
+                }
+            }
+            let handle = shards.get(&key).expect("just ensured");
+            let buf = overflow.entry(key).or_default();
+            if buf.is_empty() {
+                match handle.queue.try_push(req) {
+                    Ok(()) => continue,
+                    Err(req) => {
+                        buf.push_back(req);
+                        overflow_len += 1;
+                    }
+                }
+            } else {
+                // keep FIFO: never jump the shard's waiting line
+                buf.push_back(req);
+                overflow_len += 1;
+            }
+            // Memory bound: block on the saturated shard only.
+            while overflow_len >= overflow_limit {
+                let Some(req) = buf.pop_front() else { break };
+                overflow_len -= 1;
+                if let Err(req) = handle.queue.push_or_return(req) {
+                    metrics.request_failed();
+                    (req.reply)(Err(ServeError::Closed));
+                }
+            }
+        }
+    }
+
+    for handle in shards.values() {
+        handle.queue.close();
+    }
+    // Fold the per-queue high-water marks into the shared metrics now
+    // that routing is over (cheaper than per-request observation).
+    metrics.observe_front_depth(front.max_depth());
+    for (_, handle) in shards.drain() {
+        metrics.observe_shard_depth(handle.queue.max_depth());
+        for w in handle.workers {
+            let _ = w.join();
+        }
+    }
+}
+
+fn spawn_shard(key: ShardKey, cfg: &ServeConfig,
+               native_src: &mut Option<NativeSource>,
+               park: &Arc<MachinePark>, metrics: &Arc<ServeMetrics>,
+               cancel: &Arc<AtomicBool>)
+               -> Result<ShardHandle, String> {
+    let queue: Arc<BoundedQueue<ServeRequest>> =
+        Arc::new(BoundedQueue::new(cfg.shard_cap.max(1)));
+    let cache: Arc<Mutex<LruCache<Output>>> =
+        Arc::new(Mutex::new(LruCache::new(cfg.cache_cap)));
+    let threads = match key {
+        ShardKey::Sim(_) => cfg.sim_threads.max(1),
+        ShardKey::Native => 1, // single-owner: the PJRT client is Rc-based
+    };
+    let mut factories: Vec<BackendFactory> = Vec::new();
+    match key {
+        ShardKey::Sim(arch) => {
+            for _ in 0..threads {
+                let park = Arc::clone(park);
+                factories.push(Box::new(move || {
+                    Ok(Box::new(SimBackend::new(arch, &park))
+                       as Box<dyn Backend>)
+                }));
+            }
+        }
+        ShardKey::Native => {
+            let src = native_src.take().ok_or_else(|| {
+                "no native backend configured (start the serve layer \
+                 with ServeConfig::native set)".to_string()
+            })?;
+            factories.push(Box::new(move || {
+                let b = match src {
+                    NativeSource::Manifest(m) => {
+                        NativeBackend::from_manifest(m)
+                    }
+                    NativeSource::Synthetic(ids) => {
+                        NativeBackend::synthetic(&ids)?
+                    }
+                };
+                Ok(Box::new(b) as Box<dyn Backend>)
+            }));
+        }
+    }
+    let workers = factories
+        .into_iter()
+        .enumerate()
+        .map(|(widx, factory)| {
+            let queue = Arc::clone(&queue);
+            let cache = Arc::clone(&cache);
+            let metrics = Arc::clone(metrics);
+            let cancel = Arc::clone(cancel);
+            let label = key.label();
+            let max_batch = cfg.max_batch.max(1);
+            std::thread::Builder::new()
+                .name(format!("serve-{}-{widx}", label.replace(':', "-")))
+                .spawn(move || {
+                    shard_loop(queue, factory, cache, metrics, cancel,
+                               max_batch, widx, label)
+                })
+                .expect("spawn shard worker")
+        })
+        .collect();
+    Ok(ShardHandle { queue, workers })
+}
+
+fn shard_loop(queue: Arc<BoundedQueue<ServeRequest>>,
+              factory: BackendFactory,
+              cache: Arc<Mutex<LruCache<Output>>>,
+              metrics: Arc<ServeMetrics>, cancel: Arc<AtomicBool>,
+              max_batch: usize, worker: usize, label: String) {
+    let mut backend = match factory() {
+        Ok(b) => b,
+        Err(e) => {
+            // Init failed: every request — queued now or later — gets an
+            // explicit error until the queue closes.
+            loop {
+                let batch = queue.pop_batch(max_batch);
+                if batch.is_empty() {
+                    return;
+                }
+                for req in batch {
+                    metrics.request_failed();
+                    (req.reply)(Err(ServeError::Backend(
+                        format!("{label}: backend init failed: {e}"))));
+                }
+            }
+        }
+    };
+    loop {
+        let batch = queue.pop_batch(max_batch);
+        if batch.is_empty() {
+            return; // closed and drained
+        }
+        // Continuous batching: group the drained requests by work key
+        // (first-appearance order) and serve each group with ONE
+        // backend execution.
+        let mut order: Vec<String> = Vec::new();
+        let mut groups: HashMap<String, Vec<ServeRequest>> =
+            HashMap::new();
+        for req in batch {
+            let key = req.item.cache_key();
+            groups.entry(key.clone()).or_insert_with(|| {
+                order.push(key);
+                Vec::new()
+            }).push(req);
+        }
+        for key in order {
+            let group = groups.remove(&key).expect("grouped above");
+            let batch_size = group.len();
+            metrics.observe_batch(batch_size);
+
+            if cancel.load(Ordering::SeqCst) {
+                for req in group {
+                    metrics.request_cancelled();
+                    (req.reply)(Err(ServeError::Cancelled));
+                }
+                continue;
+            }
+
+            let (cached, cache_enabled) = {
+                let mut c = cache.lock().expect("cache poisoned");
+                (c.get(&key), c.enabled())
+            };
+            if let Some(output) = cached {
+                metrics.cache_hit(batch_size as u64);
+                for req in group {
+                    let latency = req.enqueued.elapsed().as_secs_f64();
+                    metrics.request_completed(latency);
+                    (req.reply)(Ok(ServeReply {
+                        shard: label.clone(),
+                        output: output.clone(),
+                        batch_size,
+                        queue_seconds: latency,
+                        cache_hit: true,
+                        worker,
+                    }));
+                }
+                continue;
+            }
+            if cache_enabled {
+                // Serving semantics: equal work keys are interchangeable
+                // — ONE execution answers the whole group and seeds the
+                // cache.
+                metrics.cache_miss(batch_size as u64);
+                let waits: Vec<f64> = group
+                    .iter()
+                    .map(|r| r.enqueued.elapsed().as_secs_f64())
+                    .collect();
+                match backend.run(&group[0].item) {
+                    Ok(output) => {
+                        cache.lock().expect("cache poisoned")
+                            .put(key, output.clone());
+                        for (req, wait) in group.into_iter().zip(waits) {
+                            let latency =
+                                req.enqueued.elapsed().as_secs_f64();
+                            metrics.request_completed(latency);
+                            (req.reply)(Ok(ServeReply {
+                                shard: label.clone(),
+                                output: output.clone(),
+                                batch_size,
+                                queue_seconds: wait,
+                                cache_hit: false,
+                                worker,
+                            }));
+                        }
+                    }
+                    Err(msg) => {
+                        for req in group {
+                            metrics.request_failed();
+                            (req.reply)(Err(ServeError::Backend(
+                                msg.clone())));
+                        }
+                    }
+                }
+            } else {
+                // Measurement semantics (cache disabled — the Scheduler
+                // and GemmService shims): EVERY request executes, so
+                // per-request timings are real observations, never a
+                // duplicated clone. Batching still amortises queue
+                // churn and is reported via batch_size.
+                for req in group {
+                    let wait = req.enqueued.elapsed().as_secs_f64();
+                    match backend.run(&req.item) {
+                        Ok(output) => {
+                            let latency =
+                                req.enqueued.elapsed().as_secs_f64();
+                            metrics.request_completed(latency);
+                            (req.reply)(Ok(ServeReply {
+                                shard: label.clone(),
+                                output,
+                                batch_size,
+                                queue_seconds: wait,
+                                cache_hit: false,
+                                worker,
+                            }));
+                        }
+                        Err(msg) => {
+                            metrics.request_failed();
+                            (req.reply)(Err(ServeError::Backend(msg)));
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{ArchId, CompilerId};
+    use crate::gemm::Precision;
+    use crate::sim::TuningPoint;
+
+    fn knl_point(t: u64) -> WorkItem {
+        WorkItem::Point(TuningPoint::cpu(ArchId::Knl, CompilerId::Intel,
+                                         Precision::F64, 1024, t, 1))
+    }
+
+    #[test]
+    fn sim_call_roundtrip() {
+        let serve = Serve::start(ServeConfig::default()).unwrap();
+        let reply = serve.call(knl_point(64)).unwrap();
+        assert_eq!(reply.shard, "sim:knl");
+        assert!(!reply.cache_hit);
+        match reply.output {
+            Output::Sim { record, .. } => assert!(record.gflops > 0.0),
+            other => panic!("unexpected {other:?}"),
+        }
+        serve.shutdown();
+    }
+
+    #[test]
+    fn cache_hits_on_repeat() {
+        let cfg = ServeConfig { cache_cap: 16, ..Default::default() };
+        let serve = Serve::start(cfg).unwrap();
+        let first = serve.call(knl_point(32)).unwrap();
+        assert!(!first.cache_hit);
+        let second = serve.call(knl_point(32)).unwrap();
+        assert!(second.cache_hit);
+        assert!(serve.metrics.cache_hits() >= 1);
+        assert!(serve.metrics.cache_hit_rate() > 0.0);
+        serve.shutdown();
+    }
+
+    #[test]
+    fn submit_after_close_gets_explicit_error() {
+        let serve = Serve::start(ServeConfig::default()).unwrap();
+        serve.close();
+        let rx = serve.submit(knl_point(16));
+        assert!(matches!(rx.recv().unwrap(), Err(ServeError::Closed)));
+        assert!(matches!(serve.try_submit(knl_point(16)),
+                         Err(ServeError::Closed)));
+        serve.shutdown();
+    }
+
+    #[test]
+    fn cancel_replies_cancelled_not_silence() {
+        let serve = Serve::start(ServeConfig::default()).unwrap();
+        serve.cancel();
+        let rx = serve.submit(knl_point(64));
+        match rx.recv().unwrap() {
+            Err(ServeError::Cancelled) | Ok(_) => {} // race with dispatch
+            other => panic!("unexpected {other:?}"),
+        }
+        assert!(serve.cancelled());
+        serve.shutdown();
+    }
+
+    #[test]
+    fn native_unconfigured_is_explicit_backend_error() {
+        let serve = Serve::start(ServeConfig::default()).unwrap();
+        let err = serve
+            .call(WorkItem::Artifact("dot_n64_f32".into()))
+            .unwrap_err();
+        match err {
+            ServeError::Backend(m) => {
+                assert!(m.contains("no native backend"), "{m}");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        serve.shutdown();
+    }
+
+    #[test]
+    fn synthetic_native_shard_serves() {
+        let cfg = ServeConfig {
+            cache_cap: 8,
+            native: Some(NativeConfig::Synthetic(vec![
+                "dot_n64_f32".to_string(),
+            ])),
+            ..Default::default()
+        };
+        let serve = Serve::start(cfg).unwrap();
+        let r = serve.call(WorkItem::Artifact("dot_n64_f32".into()))
+            .unwrap();
+        assert_eq!(r.shard, "native");
+        match r.output {
+            Output::Native { seconds, engine, .. } => {
+                assert!(seconds > 0.0);
+                assert_eq!(engine, NativeEngine::HostGemm);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        let again = serve.call(WorkItem::Artifact("dot_n64_f32".into()))
+            .unwrap();
+        assert!(again.cache_hit);
+        serve.shutdown();
+    }
+
+    #[test]
+    fn bad_synthetic_ids_rejected_at_start() {
+        let cfg = ServeConfig {
+            native: Some(NativeConfig::Synthetic(vec![
+                "mlp_b32_f32".to_string(),
+            ])),
+            ..Default::default()
+        };
+        assert!(Serve::start(cfg).is_err());
+    }
+
+    #[test]
+    fn shutdown_drains_all_pending_requests() {
+        let serve = Serve::start(ServeConfig {
+            front_cap: 64,
+            ..Default::default()
+        }).unwrap();
+        let rxs: Vec<_> = (0..24)
+            .map(|i| serve.submit(knl_point([16, 32, 64][i % 3])))
+            .collect();
+        serve.shutdown(); // must drain, not drop
+        let mut ok = 0;
+        for rx in rxs {
+            match rx.recv().expect("explicit reply even after shutdown") {
+                Ok(_) => ok += 1,
+                Err(e) => panic!("pre-shutdown request failed: {e}"),
+            }
+        }
+        assert_eq!(ok, 24, "zero silent drops on shutdown");
+    }
+}

@@ -1,0 +1,94 @@
+//! Cross-language PRNG parity: `util::prng::{seed_for, matrix_f32,
+//! matrix_f64}` must byte-match `python/compile/prng.py` — the whole
+//! digest-verification story rests on the two sides generating the SAME
+//! matrices from the same artifact ids.
+//!
+//! The known-answer fixture (`fixtures/prng_parity.json`) was generated
+//! by the python implementation and stores IEEE-754 *bit patterns* (u64
+//! for f64, u32 for f32), so JSON float formatting can never blur the
+//! comparison. `python/tests/test_prng.py::test_parity_fixture` asserts
+//! the same file against the python side; a drift in either
+//! implementation breaks exactly one of the two suites, naming the
+//! culprit.
+
+use std::path::Path;
+
+use alpaka_rs::util::json::{self, Value};
+use alpaka_rs::util::prng;
+
+fn fixture() -> Value {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/fixtures/prng_parity.json");
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("reading {path:?}: {e}"));
+    json::parse(&text).expect("fixture parses")
+}
+
+#[test]
+fn fixture_covers_at_least_three_artifact_ids() {
+    let v = fixture();
+    let artifacts = v.get("artifacts").and_then(Value::as_array)
+        .expect("artifacts array");
+    assert!(artifacts.len() >= 3, "need 3+ ids, got {}",
+            artifacts.len());
+}
+
+#[test]
+fn seed_for_matches_python_bit_for_bit() {
+    let v = fixture();
+    for a in v.get("artifacts").and_then(Value::as_array).unwrap() {
+        let id = a.get("id").and_then(Value::as_str).unwrap();
+        for arg in a.get("args").and_then(Value::as_array).unwrap() {
+            let idx = arg.get("arg").and_then(Value::as_u64).unwrap();
+            let want = arg.get("seed").and_then(Value::as_u64).unwrap();
+            assert_eq!(prng::seed_for(id, idx), want,
+                       "seed_for({id:?}, {idx})");
+        }
+    }
+}
+
+#[test]
+fn matrix_f64_matches_python_bit_for_bit() {
+    let v = fixture();
+    for a in v.get("artifacts").and_then(Value::as_array).unwrap() {
+        let id = a.get("id").and_then(Value::as_str).unwrap();
+        for arg in a.get("args").and_then(Value::as_array).unwrap() {
+            let seed = arg.get("seed").and_then(Value::as_u64).unwrap();
+            let want: Vec<u64> = arg.get("f64_bits")
+                .and_then(Value::as_array).unwrap()
+                .iter().map(|b| b.as_u64().unwrap()).collect();
+            let got: Vec<u64> = prng::matrix_f64(seed, 2, 3)
+                .into_iter().map(f64::to_bits).collect();
+            assert_eq!(got, want, "matrix_f64 for {id}");
+        }
+    }
+}
+
+#[test]
+fn matrix_f32_matches_python_bit_for_bit() {
+    let v = fixture();
+    for a in v.get("artifacts").and_then(Value::as_array).unwrap() {
+        let id = a.get("id").and_then(Value::as_str).unwrap();
+        for arg in a.get("args").and_then(Value::as_array).unwrap() {
+            let seed = arg.get("seed").and_then(Value::as_u64).unwrap();
+            let want: Vec<u32> = arg.get("f32_bits")
+                .and_then(Value::as_array).unwrap()
+                .iter().map(|b| b.as_u64().unwrap() as u32).collect();
+            let got: Vec<u32> = prng::matrix_f32(seed, 2, 3)
+                .into_iter().map(f32::to_bits).collect();
+            assert_eq!(got, want, "matrix_f32 for {id}");
+        }
+    }
+}
+
+#[test]
+fn seeds_survive_u64_json_roundtrip() {
+    // The fixture seeds exceed 2^53; the repo's json parser must keep
+    // them exact (Value::UInt), or digest verification would silently
+    // use corrupted inputs.
+    let v = fixture();
+    let first = v.get("artifacts").and_then(Value::as_array).unwrap()[0]
+        .get("args").and_then(Value::as_array).unwrap()[0]
+        .get("seed").and_then(Value::as_u64).unwrap();
+    assert!(first > (1u64 << 53), "fixture should exercise >2^53 seeds");
+}

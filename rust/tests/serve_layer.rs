@@ -1,0 +1,235 @@
+//! Integration: the unified serve layer — shard routing, continuous
+//! batching, result cache, explicit shutdown/cancel semantics, and the
+//! Scheduler/GemmService compatibility shims on top of it.
+//!
+//! Unlike `gemm_service.rs` (which needs `make artifacts`), these tests
+//! build a tiny temporary artifacts directory, so the native shard's
+//! full submit → batch → execute → reply path runs everywhere: under
+//! the vendored xla stub, PJRT execution reports Unimplemented and the
+//! shard switches to the host reference GEMM — explicitly, visible in
+//! `Output::Native::engine`.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use alpaka_rs::arch::{ArchId, CompilerId};
+use alpaka_rs::coordinator::Scheduler;
+use alpaka_rs::gemm::Precision;
+use alpaka_rs::runtime::GemmService;
+use alpaka_rs::serve::{loadgen, NativeConfig, Output, Serve,
+                       ServeConfig, ServeError, WorkItem};
+use alpaka_rs::sim::TuningPoint;
+
+static DIR_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Write a minimal artifacts directory: a manifest with two small
+/// square artifacts plus dummy HLO text files.
+fn temp_artifacts() -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "alpaka-serve-layer-{}-{}", std::process::id(),
+        DIR_SEQ.fetch_add(1, Ordering::Relaxed)));
+    std::fs::create_dir_all(&dir).unwrap();
+    let artifact = |id: &str, n: u64, dtype: &str| {
+        let flops = 2 * n * n * n + 3 * n * n;
+        format!(r#"{{
+          "id": "{id}", "kind": "gemm", "role": "correctness",
+          "file": "{id}.hlo.txt",
+          "spec": {{"m":{n},"n":{n},"k":{n},"t_m":16,"t_n":16,"t_k":16,
+                   "n_e":1,"dtype":"{dtype}","alpha":1.0,"beta":1.0,
+                   "flops":{flops},"tile_bytes":2048,"vmem_bytes":3072,
+                   "grid":[4,4,4]}},
+          "inputs": [
+            {{"seed": 11, "shape": [{n},{n}], "dtype":"{dtype}"}},
+            {{"seed": 22, "shape": [{n},{n}], "dtype":"{dtype}"}},
+            {{"seed": 33, "shape": [{n},{n}], "dtype":"{dtype}"}}],
+          "digest": {{"shape":[{n},{n}], "sum": 0.0, "abs_sum": 1.0,
+                     "samples": [[0, 0.0], [1, 0.0]]}},
+          "hlo_bytes": 64
+        }}"#)
+    };
+    let manifest = format!(
+        r#"{{"version": 2, "interchange": "hlo-text",
+            "artifacts": [{}, {}]}}"#,
+        artifact("gemm_n64_t16_e1_f32", 64, "f32"),
+        artifact("gemm_n32_t16_e1_f64", 32, "f64"));
+    std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+    for id in ["gemm_n64_t16_e1_f32", "gemm_n32_t16_e1_f64"] {
+        std::fs::write(dir.join(format!("{id}.hlo.txt")),
+                       "HloModule serve_layer_test\n").unwrap();
+    }
+    dir
+}
+
+#[test]
+fn three_shard_families_through_one_front_queue() {
+    let serve = Serve::start(ServeConfig {
+        cache_cap: 64,
+        native: Some(NativeConfig::Synthetic(vec![
+            "dot_n64_f32".to_string(),
+        ])),
+        ..Default::default()
+    }).unwrap();
+    let knl = WorkItem::Point(TuningPoint::cpu(
+        ArchId::Knl, CompilerId::Intel, Precision::F64, 1024, 32, 1));
+    let gpu = WorkItem::Point(TuningPoint::gpu(
+        ArchId::P100Nvlink, Precision::F32, 1024, 4));
+    let native = WorkItem::Artifact("dot_n64_f32".to_string());
+    let shards: Vec<String> = [knl, gpu, native]
+        .into_iter()
+        .map(|item| serve.call(item).unwrap().shard)
+        .collect();
+    assert_eq!(shards, vec!["sim:knl", "sim:p100-nvlink", "native"]);
+    serve.shutdown();
+}
+
+#[test]
+fn repeat_traffic_hits_cache_and_latency_percentiles_fill() {
+    let serve = Serve::start(ServeConfig {
+        cache_cap: 64,
+        native: Some(NativeConfig::Synthetic(vec![
+            "dot_n32_f32".to_string(),
+        ])),
+        ..Default::default()
+    }).unwrap();
+    let spec = loadgen::LoadSpec {
+        clients: 8,
+        requests_per_client: 8,
+        items: loadgen::default_mix(
+            &[ArchId::Knl, ArchId::P100Nvlink],
+            &["dot_n32_f32".to_string()], 512),
+    };
+    let outcome = loadgen::run_closed_loop(&serve, &spec);
+    assert_eq!(outcome.submitted, 64);
+    assert_eq!(outcome.failed, 0, "errors: {:?}", outcome.errors);
+    assert_eq!(outcome.per_shard.len(), 3);
+    let m = &serve.metrics;
+    assert_eq!(m.completed(), 64);
+    assert!(m.cache_hit_rate() > 0.0, "repeats must hit the cache");
+    assert_eq!(m.latency.count(), 64);
+    assert!(m.p50() <= m.p95() && m.p95() <= m.p99());
+    assert!(m.p99() > 0.0);
+    assert!(m.throughput() > 0.0);
+    serve.shutdown();
+}
+
+#[test]
+fn gemm_service_full_path_over_temp_artifacts() {
+    let dir = temp_artifacts();
+    let svc = GemmService::start(dir, 16, 4).unwrap();
+    let first = svc.call("gemm_n64_t16_e1_f32").unwrap();
+    assert_eq!(first.artifact_id, "gemm_n64_t16_e1_f32");
+    assert!(first.seconds > 0.0);
+    assert!(first.gflops.unwrap() > 0.0);
+    // unknown artifact: explicit error, service stays alive
+    let err = svc.call("no_such_artifact").unwrap_err();
+    assert!(err.to_string().contains("unknown artifact"), "{err:#}");
+    assert!(svc.call("gemm_n32_t16_e1_f64").is_ok());
+    svc.shutdown();
+}
+
+#[test]
+fn gemm_service_batches_concurrent_same_artifact_requests() {
+    let dir = temp_artifacts();
+    let svc = GemmService::start(dir, 32, 8).unwrap();
+    // prime the input cache so the batch window isn't dominated by the
+    // first-request setup
+    svc.call("gemm_n64_t16_e1_f32").unwrap();
+    let rxs: Vec<_> = (0..12)
+        .map(|_| svc.submit("gemm_n64_t16_e1_f32"))
+        .collect();
+    let stats: Vec<_> = rxs.into_iter()
+        .map(|rx| rx.recv().unwrap().unwrap())
+        .collect();
+    assert_eq!(stats.len(), 12);
+    let max_batch = stats.iter().map(|s| s.batch_size).max().unwrap();
+    assert!(max_batch >= 2, "batching occurred: max={max_batch}");
+    assert!(svc.metrics().max_batch_observed() >= 2);
+    svc.shutdown();
+}
+
+#[test]
+fn gemm_service_submit_after_close_gets_explicit_error() {
+    let dir = temp_artifacts();
+    let svc = GemmService::start(dir, 4, 2).unwrap();
+    svc.call("gemm_n32_t16_e1_f64").unwrap();
+    svc.close();
+    let rx = svc.submit("gemm_n32_t16_e1_f64");
+    let err = rx.recv()
+        .expect("explicit reply, not a dangling channel")
+        .unwrap_err();
+    assert!(err.to_string().contains("closed"), "{err:#}");
+}
+
+#[test]
+fn gemm_service_drop_drains_pending_requests() {
+    let dir = temp_artifacts();
+    let svc = GemmService::start(dir, 32, 4).unwrap();
+    let rxs: Vec<_> = (0..10)
+        .map(|i| svc.submit(if i % 2 == 0 {
+            "gemm_n64_t16_e1_f32"
+        } else {
+            "gemm_n32_t16_e1_f64"
+        }))
+        .collect();
+    drop(svc); // graceful: close, drain, join
+    for rx in rxs {
+        let stats = rx.recv().expect("reply delivered before teardown")
+            .expect("pre-shutdown request served");
+        assert!(stats.seconds > 0.0);
+    }
+}
+
+#[test]
+fn scheduler_and_direct_serve_agree() {
+    // The Scheduler shim and a hand-rolled serve must produce identical
+    // records — there is only one execution path underneath.
+    let pts: Vec<TuningPoint> = [16u64, 32, 64]
+        .iter()
+        .map(|&t| TuningPoint::cpu(ArchId::Haswell, CompilerId::Gnu,
+                                   Precision::F64, 1024, t, 1))
+        .collect();
+    let sched = Scheduler::new(2, 8);
+    let via_shim = sched.run_batch(pts.clone());
+
+    let serve = Serve::start(ServeConfig::default()).unwrap();
+    for (r, p) in via_shim.iter().zip(&pts) {
+        let direct = serve.call(WorkItem::Point(*p)).unwrap();
+        match direct.output {
+            Output::Sim { record, .. } => {
+                assert_eq!(record.point, *p);
+                assert!((record.gflops - r.record.gflops).abs() < 1e-9);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+    serve.shutdown();
+}
+
+#[test]
+fn cancel_mid_stream_yields_explicit_cancelled_errors() {
+    let serve = Serve::start(ServeConfig {
+        sim_threads: 1,
+        ..Default::default()
+    }).unwrap();
+    let items: Vec<WorkItem> = (0..40)
+        .map(|i| WorkItem::Point(TuningPoint::cpu(
+            ArchId::Knl, CompilerId::Intel, Precision::F64, 2048,
+            [16u64, 32, 64, 128][i % 4], 1 + (i % 4) as u64)))
+        .collect();
+    let rxs: Vec<_> = items.into_iter()
+        .map(|it| serve.submit(it))
+        .collect();
+    serve.cancel();
+    let (mut ok, mut cancelled) = (0, 0);
+    for rx in rxs {
+        match rx.recv().expect("explicit reply") {
+            Ok(_) => ok += 1,
+            Err(ServeError::Cancelled) => cancelled += 1,
+            Err(other) => panic!("unexpected {other:?}"),
+        }
+    }
+    assert_eq!(ok + cancelled, 40, "every request accounted for");
+    assert_eq!(serve.metrics.completed() + serve.metrics.cancelled(),
+               40);
+    serve.shutdown();
+}

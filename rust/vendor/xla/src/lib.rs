@@ -1,0 +1,276 @@
+//! Stub of the `xla-rs` PJRT bindings.
+//!
+//! The real crate links against Google's `xla_extension` shared library,
+//! which is not present in this image. The repo still needs the API
+//! surface to compile — and [`Literal`] to actually work, because input
+//! generation and its unit tests run without any device. So:
+//!
+//! * [`Literal`] is a real host-side tensor container (f32/f64, shape,
+//!   `vec1`/`reshape`/`to_vec` all functional);
+//! * [`HloModuleProto::from_text_file`] reads and minimally validates the
+//!   HLO text (so manifest/artifact plumbing is exercised for real);
+//! * [`PjRtLoadedExecutable::execute`] returns [`Error::Unimplemented`] —
+//!   callers (the serve layer's native shard) detect this and fall back
+//!   to the host reference GEMM, keeping the request path serviceable.
+//!
+//! Swapping this stub for the real bindings is a one-line change in the
+//! root `Cargo.toml`; no call site changes.
+
+use std::fmt;
+use std::rc::Rc;
+
+/// Error type mirroring `xla::Error`'s role (only `Debug` is relied on).
+#[derive(Clone, PartialEq, Eq)]
+pub enum Error {
+    /// Device execution is unavailable in the stub build.
+    Unimplemented(String),
+    /// Malformed input to one of the functional (host-side) paths.
+    Invalid(String),
+    /// Filesystem problems while loading HLO text.
+    Io(String),
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unimplemented(m) => write!(f, "Unimplemented({m})"),
+            Error::Invalid(m) => write!(f, "Invalid({m})"),
+            Error::Io(m) => write!(f, "Io({m})"),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(self, f)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types the repo's artifacts use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    F64,
+}
+
+/// Internal element storage — public only because [`NativeType`]'s
+/// methods mention it; not part of the stable surface.
+#[doc(hidden)]
+#[derive(Debug, Clone)]
+pub enum Storage {
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+}
+
+/// Host-side tensor: the one fully functional piece of the stub.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    storage: Storage,
+    dims: Vec<i64>,
+}
+
+/// Sealed helper so `Literal::vec1` / `to_vec` are generic like xla-rs.
+pub trait NativeType: Sized + Copy {
+    fn wrap(values: &[Self]) -> Storage;
+    fn unwrap(storage: &Storage) -> Result<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn wrap(values: &[Self]) -> Storage {
+        Storage::F32(values.to_vec())
+    }
+    fn unwrap(storage: &Storage) -> Result<Vec<Self>> {
+        match storage {
+            Storage::F32(v) => Ok(v.clone()),
+            Storage::F64(_) => Err(Error::Invalid(
+                "literal holds f64, asked for f32".into())),
+        }
+    }
+}
+
+impl NativeType for f64 {
+    fn wrap(values: &[Self]) -> Storage {
+        Storage::F64(values.to_vec())
+    }
+    fn unwrap(storage: &Storage) -> Result<Vec<Self>> {
+        match storage {
+            Storage::F64(v) => Ok(v.clone()),
+            Storage::F32(_) => Err(Error::Invalid(
+                "literal holds f32, asked for f64".into())),
+        }
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(values: &[T]) -> Literal {
+        Literal { storage: T::wrap(values),
+                  dims: vec![values.len() as i64] }
+    }
+
+    fn element_count(&self) -> usize {
+        match &self.storage {
+            Storage::F32(v) => v.len(),
+            Storage::F64(v) => v.len(),
+        }
+    }
+
+    /// Reshape without moving data (row-major, like XLA).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want < 0 || want as usize != self.element_count() {
+            return Err(Error::Invalid(format!(
+                "cannot reshape {} elements to {dims:?}",
+                self.element_count())));
+        }
+        Ok(Literal { storage: self.storage.clone(),
+                     dims: dims.to_vec() })
+    }
+
+    /// Flattened element access.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.storage)
+    }
+
+    /// Unwrap a 1-tuple result (aot.py lowers with `return_tuple=True`).
+    /// The stub never produces tuples, so this is identity.
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Ok(self)
+    }
+
+    pub fn shape(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed HLO module (text retained; the stub does not interpret it).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    text: String,
+}
+
+impl HloModuleProto {
+    /// Read HLO text from a file, with a cheap sanity check.
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Io(format!("{path}: {e}")))?;
+        if !text.contains("HloModule") {
+            return Err(Error::Invalid(format!(
+                "{path}: not HLO text (no HloModule header)")));
+        }
+        Ok(HloModuleProto { text })
+    }
+
+    pub fn text(&self) -> &str {
+        &self.text
+    }
+}
+
+/// A computation ready to compile.
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    _text: String,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _text: proto.text.clone() }
+    }
+}
+
+/// PJRT client. `Rc`-based like the real binding (not `Send`): one owner
+/// thread, concurrency in front of it.
+#[derive(Clone)]
+pub struct PjRtClient {
+    platform: Rc<String>,
+}
+
+impl PjRtClient {
+    /// CPU client. Succeeds so that load/compile plumbing (manifest,
+    /// HLO parsing, input generation) is exercised even in stub builds.
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { platform: Rc::new("stub-cpu".to_string()) })
+    }
+
+    pub fn platform_name(&self) -> String {
+        (*self.platform).clone()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation)
+                   -> Result<PjRtLoadedExecutable> {
+        Ok(PjRtLoadedExecutable { _client: self.clone() })
+    }
+}
+
+/// Compiled executable handle. Execution itself is unavailable here.
+pub struct PjRtLoadedExecutable {
+    _client: PjRtClient,
+}
+
+/// Device-resident result buffer.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::Unimplemented(
+            "stub xla: no device buffers in this build".into()))
+    }
+}
+
+impl PjRtLoadedExecutable {
+    /// Always `Err(Unimplemented)`: there is no XLA runtime in this
+    /// image. Callers must treat this as "device unavailable".
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self, _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unimplemented(
+            "stub xla: execution unavailable (xla_extension not present \
+             in this image)".into()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = lit.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.shape(), &[2, 2]);
+        let back: Vec<f32> = r.to_vec().unwrap();
+        assert_eq!(back, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn literal_f64_and_type_mismatch() {
+        let lit = Literal::vec1(&[1.0f64, 2.0]);
+        assert!(lit.to_vec::<f64>().is_ok());
+        assert!(lit.to_vec::<f32>().is_err());
+    }
+
+    #[test]
+    fn reshape_count_mismatch_rejected() {
+        let lit = Literal::vec1(&[1.0f32; 6]);
+        assert!(lit.reshape(&[4, 2]).is_err());
+        assert!(lit.reshape(&[3, 2]).is_ok());
+    }
+
+    #[test]
+    fn execute_reports_unimplemented() {
+        let client = PjRtClient::cpu().unwrap();
+        assert_eq!(client.platform_name(), "stub-cpu");
+        let proto = HloModuleProto { text: "HloModule x".into() };
+        let exe = client.compile(&XlaComputation::from_proto(&proto))
+            .unwrap();
+        let args: Vec<Literal> = vec![];
+        assert!(matches!(exe.execute(&args),
+                         Err(Error::Unimplemented(_))));
+    }
+}
