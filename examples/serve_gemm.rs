@@ -23,10 +23,11 @@ fn main() -> alpaka_rs::Result<()> {
         cache_cap: 128,
         sim_threads: 2,
         native: Some(native),
+        ..ServeConfig::default()
     })?;
 
     println!("== unified serve layer: 6 clients x 12 requests over \
-              3 shards ==\n");
+              4 shards ==\n");
     let spec = loadgen::LoadSpec {
         clients: 6,
         requests_per_client: 12,

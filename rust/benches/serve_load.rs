@@ -1,20 +1,53 @@
-//! Closed-loop load generator over the unified serve layer — the
-//! acceptance bench for the serving plane: ≥ 8 concurrent clients,
-//! ≥ 3 backend shards (two simulated architectures + the native shard),
-//! p50/p95/p99 latency, nonzero result-cache hit rate, and zero
-//! silently dropped requests across shutdown.
+//! Closed-loop + overload load generator over the unified serve layer —
+//! the acceptance bench for the serving plane:
+//!
+//! 1. **Closed loop**: ≥ 8 concurrent clients over 4 backend shards
+//!    (two simulated architectures + BOTH named native shards),
+//!    p50/p95/p99 latency, nonzero result-cache hit rate, zero silently
+//!    dropped requests across shutdown.
+//! 2. **Overload**: an open-loop run at ~4× the measured sustainable
+//!    rate, once WITHOUT shedding (the unbounded-queueing baseline) and
+//!    once with `ShedPolicy::ShedExpired` + a per-shard quota — the
+//!    shed run must account every request explicitly, shed a nonzero
+//!    fraction, and keep the p99 of *admitted* requests bounded versus
+//!    the baseline.
+//!
+//! Emits `BENCH_serve.json` (throughput, percentiles, shed rate) for
+//! the CI perf-trajectory artifact.
 //!
 //! Run with: `cargo bench --bench serve_load` (artifacts optional — the
-//! native shard falls back to the synthetic host-GEMM catalog).
+//! native shards fall back to the synthetic host-GEMM catalog).
 
 use std::path::Path;
 use std::process::ExitCode;
+use std::sync::Arc;
+use std::time::Duration;
 
 use alpaka_rs::arch::ArchId;
-use alpaka_rs::serve::{loadgen, Serve, ServeConfig};
+use alpaka_rs::serve::{loadgen, NativeConfig, Serve, ServeConfig,
+                       ShedPolicy};
 
 const CLIENTS: usize = 12;
 const REQUESTS_PER_CLIENT: usize = 40;
+const OVERLOAD_FACTOR: f64 = 4.0;
+const OVERLOAD_TOTAL: usize = 400;
+const QUOTA: usize = 16;
+const DEADLINE: Duration = Duration::from_millis(250);
+
+fn overload_config(native: NativeConfig, shed: ShedPolicy,
+                   quota: Option<usize>) -> ServeConfig {
+    ServeConfig {
+        front_cap: 64,
+        shard_cap: 64,
+        max_batch: 8,
+        cache_cap: 0, // overload must do real work, not cache hits
+        sim_threads: 1,
+        native: Some(native),
+        native_threads: 2,
+        shed,
+        shard_quota: quota,
+    }
+}
 
 fn main() -> ExitCode {
     let (native, artifact_ids) =
@@ -25,7 +58,10 @@ fn main() -> ExitCode {
         max_batch: 8,
         cache_cap: 256,
         sim_threads: 2,
-        native: Some(native),
+        native: Some(native.clone()),
+        native_threads: 2,
+        shed: ShedPolicy::None,
+        shard_quota: None,
     }) {
         Ok(s) => s,
         Err(e) => {
@@ -41,13 +77,18 @@ fn main() -> ExitCode {
         items: loadgen::default_mix(&archs, &artifact_ids, 1024),
     };
     println!("serve_load: {CLIENTS} clients x {REQUESTS_PER_CLIENT} \
-              requests, mix of {} items over {} sim shards + native",
+              requests, mix of {} items over {} sim shards + 2 named \
+              native shards",
              spec.items.len(), archs.len());
     let outcome = loadgen::run_closed_loop(&serve, &spec);
     print!("{}", loadgen::outcome_report(&outcome, &serve));
-    let m = &serve.metrics;
+    // Arc clone: the metrics handle must outlive `serve.shutdown()`
+    // (which consumes the Serve) for the acceptance gates below.
+    let m = Arc::clone(&serve.metrics);
     println!("p50 {:.3} ms   p95 {:.3} ms   p99 {:.3} ms",
              1e3 * m.p50(), 1e3 * m.p95(), 1e3 * m.p99());
+    let closed = (m.throughput(), m.p50(), m.p95(), m.p99(),
+                  m.cache_hit_rate());
 
     // ---- shutdown-drain check: submit a burst, then shut down -------
     let pending: Vec<_> = (0..16)
@@ -68,30 +109,150 @@ fn main() -> ExitCode {
               {drained_explicit_err} explicit errors, {dropped} \
               silently dropped");
 
+    // ---- overload phase ---------------------------------------------
+    // Sustainable rate measured closed-loop on an overload-shaped
+    // config (no cache — overload against cache hits would be fake).
+    let probe_serve =
+        Serve::start(overload_config(native.clone(), ShedPolicy::None,
+                                     None))
+            .expect("probe serve");
+    let sustainable =
+        loadgen::measure_sustainable_rps(&probe_serve, &spec.items, 4, 24);
+    probe_serve.shutdown();
+    let rate = (OVERLOAD_FACTOR * sustainable).max(50.0);
+    println!("\noverload: sustainable ~{sustainable:.0} req/s, offering \
+              {rate:.0} req/s open-loop ({OVERLOAD_TOTAL} requests)");
+
+    // Baseline: same rate, NO shedding — queueing/backpressure only.
+    let base_serve =
+        Serve::start(overload_config(native.clone(), ShedPolicy::None,
+                                     None))
+            .expect("baseline serve");
+    let base_spec = loadgen::OverloadSpec {
+        rate_rps: rate,
+        total: OVERLOAD_TOTAL,
+        items: spec.items.clone(),
+        deadline: None,
+    };
+    let base_out = loadgen::run_open_loop(&base_serve, &base_spec);
+    let base_p99 = base_serve.metrics.p99();
+    println!("baseline (no shed): {} ok / {} submitted in {:.3}s, \
+              p99 {:.1} ms", base_out.ok, base_out.submitted,
+             base_out.wall_seconds, 1e3 * base_p99);
+    base_serve.shutdown();
+
+    // Shed run: quota + deadline shedding at the same offered rate.
+    let shed_serve = Serve::start(overload_config(
+        native.clone(), ShedPolicy::ShedExpired, Some(QUOTA)))
+        .expect("shed serve");
+    let shed_spec = loadgen::OverloadSpec {
+        deadline: Some(DEADLINE),
+        ..base_spec.clone()
+    };
+    let shed_out = loadgen::run_open_loop(&shed_serve, &shed_spec);
+    let shed_p99 = shed_serve.metrics.p99();
+    let shed_metric = shed_serve.metrics.shed();
+    let shed_rate_metric = shed_serve.metrics.shed_rate();
+    println!("shed (quota {QUOTA}, deadline {:?}): {} ok + {} shed / \
+              {} submitted in {:.3}s, p99 {:.1} ms, shed rate {:.0}%",
+             DEADLINE, shed_out.ok, shed_out.shed, shed_out.submitted,
+             shed_out.wall_seconds, 1e3 * shed_p99,
+             100.0 * shed_rate_metric);
+    println!("{}", shed_serve.summary());
+    shed_serve.shutdown();
+
+    // ---- BENCH_serve.json (CI perf-trajectory artifact) -------------
+    let json = format!(
+        "{{\n  \"schema\": 1,\n  \"clients\": {CLIENTS},\n  \
+         \"requests_per_client\": {REQUESTS_PER_CLIENT},\n  \
+         \"throughput_rps\": {:.3},\n  \"p50_ms\": {:.4},\n  \
+         \"p95_ms\": {:.4},\n  \"p99_ms\": {:.4},\n  \
+         \"cache_hit_rate\": {:.4},\n  \"overload\": {{\n    \
+         \"offered_rps\": {:.1},\n    \"sustainable_rps\": {:.1},\n    \
+         \"submitted\": {},\n    \"ok\": {},\n    \"shed\": {},\n    \
+         \"shed_rate\": {:.4},\n    \"p99_ms_shed\": {:.4},\n    \
+         \"p99_ms_baseline\": {:.4}\n  }}\n}}\n",
+        closed.0, 1e3 * closed.1, 1e3 * closed.2, 1e3 * closed.3,
+        closed.4, rate, sustainable, shed_out.submitted, shed_out.ok,
+        shed_out.shed, shed_rate_metric, 1e3 * shed_p99,
+        1e3 * base_p99);
+    match std::fs::write("BENCH_serve.json", &json) {
+        Ok(()) => println!("wrote BENCH_serve.json"),
+        Err(e) => {
+            eprintln!("FAIL: cannot write BENCH_serve.json: {e}");
+            return ExitCode::FAILURE;
+        }
+    }
+
     // ---- acceptance gates ------------------------------------------
     let mut ok = true;
-    if outcome.per_shard.len() < 3 {
-        eprintln!("FAIL: expected >= 3 shards, saw {:?}",
+    if outcome.per_shard.len() < 4 {
+        eprintln!("FAIL: expected >= 4 shards, saw {:?}",
                   outcome.per_shard.keys().collect::<Vec<_>>());
         ok = false;
+    }
+    for shard in ["native:pjrt", "native:threadpool"] {
+        if !outcome.per_shard.contains_key(shard) {
+            eprintln!("FAIL: named native shard {shard} served nothing");
+            ok = false;
+        }
     }
     if outcome.failed != 0 {
         eprintln!("FAIL: {} requests failed: {:?}", outcome.failed,
                   outcome.errors);
         ok = false;
     }
-    if outcome.ok + outcome.failed != outcome.submitted {
-        eprintln!("FAIL: accounting leak: {} + {} != {}", outcome.ok,
-                  outcome.failed, outcome.submitted);
+    if outcome.ok + outcome.shed + outcome.failed != outcome.submitted {
+        eprintln!("FAIL: accounting leak: {} + {} + {} != {}",
+                  outcome.ok, outcome.shed, outcome.failed,
+                  outcome.submitted);
         ok = false;
     }
     if m.cache_hit_rate() <= 0.0 {
         eprintln!("FAIL: result cache never hit");
         ok = false;
     }
+    // Windowed throughput sanity: first-submit→last-completion must
+    // roughly agree with the closed loop's own ok/wall accounting (the
+    // old since-construction measurement deflated as the layer idled).
+    let loop_rate = outcome.ok as f64 / outcome.wall_seconds.max(1e-9);
+    if !(closed.0 > 0.0
+         && closed.0 >= 0.25 * loop_rate
+         && closed.0 <= 4.0 * loop_rate)
+    {
+        eprintln!("FAIL: windowed throughput {:.1} req/s implausible vs \
+                   closed-loop rate {loop_rate:.1} req/s", closed.0);
+        ok = false;
+    }
     if dropped != 0 {
         eprintln!("FAIL: {dropped} requests silently dropped on \
                    shutdown");
+        ok = false;
+    }
+    // overload gates
+    if !base_out.fully_accounted() || base_out.failed != 0 {
+        eprintln!("FAIL: baseline overload accounting: {base_out:?}");
+        ok = false;
+    }
+    if !shed_out.fully_accounted() || shed_out.failed != 0 {
+        eprintln!("FAIL: shed overload accounting: {shed_out:?}");
+        ok = false;
+    }
+    if shed_out.shed == 0 {
+        eprintln!("FAIL: 4x overload shed nothing (quota {QUOTA})");
+        ok = false;
+    }
+    if shed_metric as usize != shed_out.shed {
+        eprintln!("FAIL: shed metric {shed_metric} != observed {}",
+                  shed_out.shed);
+        ok = false;
+    }
+    // The whole point of shedding: admitted-request p99 stays bounded
+    // versus the no-shedding baseline (generous 1.5x margin for CI
+    // noise — under real overload the gap is many-fold).
+    if shed_p99 > 1.5 * base_p99 + 1e-3 {
+        eprintln!("FAIL: shed p99 {:.1} ms not bounded vs baseline \
+                   {:.1} ms", 1e3 * shed_p99, 1e3 * base_p99);
         ok = false;
     }
     if ok {

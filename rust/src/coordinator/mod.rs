@@ -23,5 +23,5 @@ pub mod scheduler;
 
 pub use jobs::{JobResult, JobSpec};
 pub use metrics::Metrics;
-pub use queue::BoundedQueue;
+pub use queue::{BoundedQueue, PushRefusal};
 pub use scheduler::Scheduler;

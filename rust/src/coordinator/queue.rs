@@ -24,6 +24,21 @@ pub struct BoundedQueue<T> {
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Closed;
 
+/// Why a quota-aware push refused the item. Every variant hands the
+/// item back so the caller can fail it explicitly (reply channel,
+/// overflow buffer) instead of losing the payload.
+#[derive(Debug, PartialEq, Eq)]
+pub enum PushRefusal<T> {
+    /// Depth has reached the caller's admission quota — the load-shed
+    /// signal. Carries the depth observed at refusal time.
+    OverQuota(T, usize),
+    /// Depth has reached the queue's own capacity (only reachable when
+    /// the quota exceeds the capacity).
+    Full(T),
+    /// The queue is closed.
+    Closed(T),
+}
+
 impl<T> BoundedQueue<T> {
     pub fn new(capacity: usize) -> Self {
         assert!(capacity > 0, "capacity must be positive");
@@ -68,10 +83,36 @@ impl<T> BoundedQueue<T> {
     /// Non-blocking push: hands the item back immediately when the
     /// queue is full or closed (no waiting). Routing loops use this to
     /// avoid head-of-line blocking across independent consumers.
+    /// (Quota-free wrapper over [`BoundedQueue::try_push_quota`] — one
+    /// non-blocking push implementation.)
     pub fn try_push(&self, item: T) -> Result<(), T> {
+        self.try_push_quota(item, usize::MAX).map_err(|r| match r {
+            PushRefusal::OverQuota(item, _)
+            | PushRefusal::Full(item)
+            | PushRefusal::Closed(item) => item,
+        })
+    }
+
+    /// Quota-aware non-blocking push: refuses the item when the current
+    /// depth has reached `quota` (admission control / load shedding),
+    /// when the queue is at capacity, or when it is closed — in every
+    /// case handing the item back with the reason. `quota` counts items
+    /// *waiting* in this queue; callers tracking extra waiting lines
+    /// (e.g. the dispatcher's overflow buffers) shrink the quota they
+    /// pass accordingly. `usize::MAX` means "no quota" and degenerates
+    /// to [`BoundedQueue::try_push`] semantics with a reason attached.
+    pub fn try_push_quota(&self, item: T, quota: usize)
+                          -> Result<(), PushRefusal<T>> {
         let mut g = self.inner.lock().expect("queue poisoned");
-        if g.closed || g.items.len() >= self.capacity {
-            return Err(item);
+        if g.closed {
+            return Err(PushRefusal::Closed(item));
+        }
+        let depth = g.items.len();
+        if depth >= quota {
+            return Err(PushRefusal::OverQuota(item, depth));
+        }
+        if depth >= self.capacity {
+            return Err(PushRefusal::Full(item));
         }
         g.items.push_back(item);
         let depth = g.items.len();
@@ -386,6 +427,31 @@ mod tests {
         assert_eq!(q.pop(), Some(1));
         q.close();
         assert_eq!(q.try_push(3), Err(3)); // closed: item back
+    }
+
+    #[test]
+    fn try_push_quota_distinguishes_all_refusals() {
+        let q = BoundedQueue::new(2);
+        assert_eq!(q.try_push_quota(1, 1), Ok(()));
+        // depth 1 >= quota 1: over-quota, item handed back with depth
+        assert_eq!(q.try_push_quota(2, 1),
+                   Err(PushRefusal::OverQuota(2, 1)));
+        // quota above capacity: capacity wins
+        assert_eq!(q.try_push_quota(2, 10), Ok(()));
+        assert_eq!(q.try_push_quota(3, 10), Err(PushRefusal::Full(3)));
+        // no-quota sentinel behaves like try_push
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.try_push_quota(4, usize::MAX), Ok(()));
+        q.close();
+        assert_eq!(q.try_push_quota(5, 10), Err(PushRefusal::Closed(5)));
+    }
+
+    #[test]
+    fn try_push_quota_zero_sheds_everything() {
+        let q = BoundedQueue::new(4);
+        assert_eq!(q.try_push_quota(1, 0),
+                   Err(PushRefusal::OverQuota(1, 0)));
+        assert!(q.is_empty());
     }
 
     #[test]

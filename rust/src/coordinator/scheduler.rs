@@ -1,6 +1,6 @@
 //! The campaign scheduler — since the serve-layer unification a thin
 //! adapter over [`crate::serve`]: tuning points are submitted as
-//! [`WorkItem::Point`]s to the unified front queue, routed by the
+//! [`WorkItem::point`]s to the unified front queue, routed by the
 //! dispatcher to one shard per architecture, and evaluated there. The
 //! public API (`new`, `run_batch`, `cancel`, `metrics`, `park`) is
 //! unchanged; the private worker pool, queue and drain logic that used
@@ -41,6 +41,8 @@ impl Scheduler {
             cache_cap: 0, // measurement path: never serve stale results
             sim_threads: workers.max(1),
             native: None,
+            // campaigns never shed: every submitted point must evaluate
+            ..ServeConfig::default()
         };
         let serve = Serve::start(cfg)
             .expect("sim-only serve layer cannot fail to start");
@@ -70,7 +72,7 @@ impl Scheduler {
         for (i, point) in points.into_iter().enumerate() {
             self.metrics.job_submitted();
             pending.push((i as u64, self.serve
-                .submit(WorkItem::Point(point))));
+                .submit(WorkItem::point(point))));
         }
         // Legacy queue-depth metric: the front queue's own high-water
         // (+1 for the in-flight item, matching the old per-submit

@@ -7,17 +7,23 @@
 
 use crate::util::stats::relative_close;
 
-/// alpha * a @ b + beta * c over row-major f64 buffers.
-pub fn gemm_f64(n: usize, a: &[f64], b: &[f64], c: &[f64], alpha: f64,
-                beta: f64) -> Vec<f64> {
+/// Rows `[row0, row1)` of `alpha * a @ b + beta * c` over row-major f64
+/// buffers — the row-block primitive the serve layer's threadpool GEMM
+/// backend fans out over worker threads. Returns `(row1 - row0) * n`
+/// values; `gemm_f64` is the full-matrix case.
+pub fn gemm_f64_rows(n: usize, row0: usize, row1: usize, a: &[f64],
+                     b: &[f64], c: &[f64], alpha: f64, beta: f64)
+                     -> Vec<f64> {
     assert_eq!(a.len(), n * n);
     assert_eq!(b.len(), n * n);
     assert_eq!(c.len(), n * n);
-    let mut out = vec![0.0f64; n * n];
+    assert!(row0 <= row1 && row1 <= n, "row range [{row0},{row1}) of {n}");
+    let rows = row1 - row0;
+    let mut out = vec![0.0f64; rows * n];
     // ikj loop order: streams b rows, decent cache behaviour for tests.
-    for i in 0..n {
+    for i in 0..rows {
         for k in 0..n {
-            let aik = a[i * n + k];
+            let aik = a[(row0 + i) * n + k];
             let (orow, brow) = (&mut out[i * n..(i + 1) * n],
                                 &b[k * n..(k + 1) * n]);
             for j in 0..n {
@@ -25,8 +31,41 @@ pub fn gemm_f64(n: usize, a: &[f64], b: &[f64], c: &[f64], alpha: f64,
             }
         }
     }
-    for i in 0..n * n {
-        out[i] = alpha * out[i] + beta * c[i];
+    for i in 0..rows * n {
+        out[i] = alpha * out[i] + beta * c[row0 * n + i];
+    }
+    out
+}
+
+/// alpha * a @ b + beta * c over row-major f64 buffers.
+pub fn gemm_f64(n: usize, a: &[f64], b: &[f64], c: &[f64], alpha: f64,
+                beta: f64) -> Vec<f64> {
+    gemm_f64_rows(n, 0, n, a, b, c, alpha, beta)
+}
+
+/// f32 variant of [`gemm_f64_rows`] with f32 accumulation (matches the
+/// kernel's behaviour).
+pub fn gemm_f32_rows(n: usize, row0: usize, row1: usize, a: &[f32],
+                     b: &[f32], c: &[f32], alpha: f32, beta: f32)
+                     -> Vec<f32> {
+    assert_eq!(a.len(), n * n);
+    assert_eq!(b.len(), n * n);
+    assert_eq!(c.len(), n * n);
+    assert!(row0 <= row1 && row1 <= n, "row range [{row0},{row1}) of {n}");
+    let rows = row1 - row0;
+    let mut out = vec![0.0f32; rows * n];
+    for i in 0..rows {
+        for k in 0..n {
+            let aik = a[(row0 + i) * n + k];
+            let (orow, brow) = (&mut out[i * n..(i + 1) * n],
+                                &b[k * n..(k + 1) * n]);
+            for j in 0..n {
+                orow[j] += aik * brow[j];
+            }
+        }
+    }
+    for i in 0..rows * n {
+        out[i] = alpha * out[i] + beta * c[row0 * n + i];
     }
     out
 }
@@ -34,22 +73,7 @@ pub fn gemm_f64(n: usize, a: &[f64], b: &[f64], c: &[f64], alpha: f64,
 /// f32 variant with f32 accumulation (matches the kernel's behaviour).
 pub fn gemm_f32(n: usize, a: &[f32], b: &[f32], c: &[f32], alpha: f32,
                 beta: f32) -> Vec<f32> {
-    assert_eq!(a.len(), n * n);
-    let mut out = vec![0.0f32; n * n];
-    for i in 0..n {
-        for k in 0..n {
-            let aik = a[i * n + k];
-            let (orow, brow) = (&mut out[i * n..(i + 1) * n],
-                                &b[k * n..(k + 1) * n]);
-            for j in 0..n {
-                orow[j] += aik * brow[j];
-            }
-        }
-    }
-    for i in 0..n * n {
-        out[i] = alpha * out[i] + beta * c[i];
-    }
-    out
+    gemm_f32_rows(n, 0, n, a, b, c, alpha, beta)
 }
 
 /// Output digest, mirroring `aot.digest` on the python side.
@@ -157,6 +181,37 @@ mod tests {
         for (x, y) in o64.iter().zip(&o32) {
             assert!((x - *y as f64).abs() < 1e-4);
         }
+    }
+
+    #[test]
+    fn row_blocks_tile_the_full_gemm() {
+        // Any row partition must reassemble bit-exactly into the full
+        // product (same per-row accumulation order) — the invariant the
+        // threadpool backend's fan-out relies on.
+        let n = 16;
+        let a = crate::util::prng::matrix_f64(7, n, n);
+        let b = crate::util::prng::matrix_f64(8, n, n);
+        let c = crate::util::prng::matrix_f64(9, n, n);
+        let full = gemm_f64(n, &a, &b, &c, 1.25, -0.5);
+        let mut tiled = Vec::new();
+        for (r0, r1) in [(0, 5), (5, 6), (6, 16)] {
+            tiled.extend(gemm_f64_rows(n, r0, r1, &a, &b, &c, 1.25,
+                                       -0.5));
+        }
+        assert_eq!(tiled, full);
+
+        let a32: Vec<f32> = a.iter().map(|v| *v as f32).collect();
+        let b32: Vec<f32> = b.iter().map(|v| *v as f32).collect();
+        let c32: Vec<f32> = c.iter().map(|v| *v as f32).collect();
+        let full32 = gemm_f32(n, &a32, &b32, &c32, 1.25, -0.5);
+        let mut tiled32 = Vec::new();
+        for (r0, r1) in [(0, 1), (1, 15), (15, 16)] {
+            tiled32.extend(gemm_f32_rows(n, r0, r1, &a32, &b32, &c32,
+                                         1.25, -0.5));
+        }
+        assert_eq!(tiled32, full32);
+        // empty range is legal and empty
+        assert!(gemm_f64_rows(n, 4, 4, &a, &b, &c, 1.0, 0.0).is_empty());
     }
 
     #[test]

@@ -32,11 +32,15 @@
 //!   them on the host CPU (the sixth, "native" architecture).
 //! * [`serve`] — the unified serving plane: ONE admission-controlled
 //!   front queue feeding per-backend **shards** (one per simulated
-//!   architecture plus a single-owner shard for the Rc-based PJRT
-//!   client), cross-request **continuous batching** per work key, an
-//!   LRU **result cache**, and unified metrics (throughput, queue-depth
-//!   high-water, p50/p95/p99 latency, cache hit rate). Both entry
-//!   points below are thin shims over it.
+//!   architecture plus one per **named native engine** — `native:pjrt`
+//!   for the Rc-based PJRT client and `native:threadpool` for the
+//!   row-blocked host GEMM over the worker pool), cross-request
+//!   **continuous batching** per work key, an LRU **result cache**,
+//!   **overload control** (per-shard admission quotas + deadline-aware
+//!   load shedding, all explicit via `ServeError::Overloaded`), and
+//!   unified metrics (throughput over the active window, queue-depth
+//!   high-water, shed rate, p50/p95/p99 latency, cache hit rate). Both
+//!   entry points below are thin shims over it.
 //! * [`coordinator`] — the campaign-facing shim (`Scheduler`) plus the
 //!   bounded-queue substrate the serve layer is built on.
 //! * [`report`] — regenerates every table and figure of the paper.
@@ -49,20 +53,41 @@
 //! A serve-layer backend is a [`serve::Backend`]: one method turning a
 //! [`serve::WorkItem`] into a [`serve::Output`]. To add one:
 //!
-//! 1. give `WorkItem` a variant (or reuse one) and map it to a
-//!    [`serve::ShardKey`] in `WorkItem::shard_key` — the key decides
-//!    which shard's queue the dispatcher routes to;
+//! 1. give [`serve::WorkPayload`] a variant (or reuse one) and map it
+//!    to a [`serve::ShardKey`] in `WorkItem::shard_key` — the key
+//!    decides which shard's queue the dispatcher routes to. Native
+//!    shards are **named** (`ShardKey::Native(NativeEngineId)`, labels
+//!    `native:pjrt` / `native:threadpool`), so one payload family can
+//!    fan out across heterogeneous engines;
 //! 2. implement `Backend` and register a factory for the key in
 //!    `serve::spawn_shard`; the factory runs ON the shard thread, so
 //!    non-`Send` state (device handles, Rc clients) is fine;
-//! 3. decide the shard's thread count (single-owner devices get 1) and
-//!    whether results are cacheable (`cache_key` equality must imply
-//!    result equivalence).
+//! 3. decide the shard's thread count (single-owner devices get 1; a
+//!    backend may also parallelize internally, like the threadpool
+//!    GEMM) and whether results are cacheable (`cache_key` equality
+//!    must imply result equivalence — note the key excludes the
+//!    deadline and the native engine).
 //!
 //! Queueing, admission control, batching, caching, cancellation,
-//! shutdown draining and metrics are inherited — a new backend adds
-//! zero worker-loop code, which is the whole point (cf. the paper:
-//! one implementation, many architectures).
+//! shutdown draining, **overload control** and metrics are inherited —
+//! a new backend adds zero worker-loop code, which is the whole point
+//! (cf. the paper: one implementation, many architectures).
+//!
+//! ## Overload knobs
+//!
+//! `ServeConfig { shed, shard_quota, .. }` + per-item deadlines
+//! (`WorkItem::with_deadline[_in]`):
+//!
+//! * [`serve::ShedPolicy::None`] — pure backpressure (default);
+//! * [`serve::ShedPolicy::RejectOverQuota`] — a shard whose
+//!   outstanding line reached `shard_quota` sheds new arrivals with
+//!   `ServeError::Overloaded { shard, depth, quota }` at routing time;
+//! * [`serve::ShedPolicy::ShedExpired`] — additionally sheds items
+//!   whose deadline already passed when a worker dequeues them.
+//!
+//! Every shed is an explicit reply and counted in
+//! `ServeMetrics::shed`; the zero-silent-drop contract holds under any
+//! overload.
 
 pub mod arch;
 pub mod cli;

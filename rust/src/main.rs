@@ -119,6 +119,24 @@ fn cli() -> Cli {
                                    "front/shard queue capacity"),
                     OptSpec::value("sim-threads", Some("2"),
                                    "worker threads per sim shard"),
+                    OptSpec::value("native-threads", Some("4"),
+                                   "threads in the native:threadpool \
+                                    backend's pool (0 = host-sized)"),
+                    OptSpec::value("shed", Some("none"),
+                                   "shed policy: none|reject|expire"),
+                    OptSpec::value("quota", Some("0"),
+                                   "per-shard admission quota \
+                                    (0 = unlimited)"),
+                    OptSpec::value("deadline-ms", Some("0"),
+                                   "per-request deadline in ms \
+                                    (0 = none; pair with --shed expire)"),
+                    OptSpec::flag("overload",
+                                  "drive an open-loop overload scenario \
+                                   (~4x the measured sustainable rate) \
+                                   instead of the closed loop"),
+                    OptSpec::value("rate", Some("0"),
+                                   "open-loop rate in req/s for \
+                                    --overload (0 = auto: 4x measured)"),
                 ],
             },
             CommandSpec {
@@ -326,7 +344,9 @@ fn cmd_native(p: &Parsed) -> Result<()> {
 }
 
 fn cmd_serve(p: &Parsed) -> Result<()> {
-    use alpaka_rs::serve::{loadgen, Serve, ServeConfig};
+    use std::time::Duration;
+
+    use alpaka_rs::serve::{loadgen, Serve, ServeConfig, ShedPolicy};
 
     let mut archs = Vec::new();
     for tok in p.get_or("archs", "knl,p100-nvlink").split(',') {
@@ -339,9 +359,9 @@ fn cmd_serve(p: &Parsed) -> Result<()> {
     }
     anyhow::ensure!(!archs.is_empty(), "need at least one arch");
 
-    // Native shard: real artifacts when present, synthetic catalog
+    // Native shards: real artifacts when present, synthetic catalog
     // (host reference GEMM) otherwise — the load test always exercises
-    // all three shard families.
+    // every shard family, including both named native shards.
     let dir = p.get_or("artifacts-dir", "artifacts").to_string();
     let (native, artifact_ids) =
         loadgen::native_config_or_synthetic(Path::new(&dir));
@@ -350,22 +370,94 @@ fn cmd_serve(p: &Parsed) -> Result<()> {
     let requests = p.get_u64("requests")?.unwrap_or(64) as usize;
     let n = p.get_u64("n")?.unwrap_or(1024);
     let queue = p.get_u64("queue")?.unwrap_or(64) as usize;
-    let serve = Serve::start(ServeConfig {
+    let shed = ShedPolicy::parse(p.get_or("shed", "none"))
+        .ok_or_else(|| anyhow::anyhow!(
+            "unknown shed policy (none|reject|expire)"))?;
+    let quota = p.get_u64("quota")?.unwrap_or(0) as usize;
+    let deadline_ms = p.get_u64("deadline-ms")?.unwrap_or(0);
+    // A shed policy with nothing to shed on is a silent no-op — refuse
+    // it instead of letting the user believe shedding is active.
+    anyhow::ensure!(
+        shed != ShedPolicy::RejectOverQuota || quota > 0,
+        "--shed reject does nothing without --quota > 0");
+    anyhow::ensure!(
+        shed != ShedPolicy::ShedExpired || quota > 0 || deadline_ms > 0,
+        "--shed expire does nothing without --quota > 0 or \
+         --deadline-ms > 0");
+    // Deadlines are attached per-request by the open-loop driver only;
+    // the closed-loop path would silently ignore the flag.
+    anyhow::ensure!(
+        deadline_ms == 0 || p.has_flag("overload"),
+        "--deadline-ms is only applied by --overload (the closed loop \
+         attaches no per-request deadlines)");
+    let cfg = ServeConfig {
         front_cap: queue,
         shard_cap: queue,
         max_batch: p.get_u64("max-batch")?.unwrap_or(8) as usize,
         cache_cap: p.get_u64("cache")?.unwrap_or(128) as usize,
         sim_threads: p.get_u64("sim-threads")?.unwrap_or(2) as usize,
         native: Some(native),
-    })?;
+        native_threads: p.get_u64("native-threads")?.unwrap_or(4)
+            as usize,
+        shed,
+        shard_quota: if quota == 0 { None } else { Some(quota) },
+    };
+    let serve = Serve::start(cfg.clone())?;
+
+    let items = loadgen::default_mix(&archs, &artifact_ids, n);
+    if p.has_flag("overload") {
+        // Open loop at a fixed rate: first measure the sustainable rate
+        // with a short closed loop on a SEPARATE, shed-free instance —
+        // probing the quota-limited serve would deflate the measured
+        // rate and pollute the overload run's reported metrics.
+        let probe_serve = Serve::start(ServeConfig {
+            shed: ShedPolicy::None,
+            shard_quota: None,
+            ..cfg.clone()
+        })?;
+        let sustainable = loadgen::measure_sustainable_rps(
+            &probe_serve, &items, clients.min(4), 16);
+        probe_serve.shutdown();
+        let rate = match p.get_u64("rate")?.unwrap_or(0) {
+            0 => 4.0 * sustainable,
+            r => r as f64,
+        };
+        println!("overload: sustainable ~{sustainable:.0} req/s, \
+                  offering {rate:.0} req/s open-loop \
+                  (shed={}, quota={quota}, deadline={deadline_ms}ms)",
+                 shed.label());
+        let spec = loadgen::OverloadSpec {
+            rate_rps: rate,
+            total: clients * requests,
+            items,
+            deadline: if deadline_ms == 0 {
+                None
+            } else {
+                Some(Duration::from_millis(deadline_ms))
+            },
+        };
+        let out = loadgen::run_open_loop(&serve, &spec);
+        println!("{} submitted = {} ok + {} shed + {} closed + {} \
+                  failed in {:.3}s", out.submitted, out.ok, out.shed,
+                 out.closed, out.failed, out.wall_seconds);
+        for (shard, count) in &out.per_shard {
+            println!("  {shard}: {count} served");
+        }
+        println!("{}", serve.summary());
+        serve.shutdown();
+        anyhow::ensure!(out.fully_accounted(), "reply accounting leak");
+        anyhow::ensure!(out.failed == 0, "{} requests failed: {:?}",
+                        out.failed, out.errors);
+        return Ok(());
+    }
 
     let spec = loadgen::LoadSpec {
         clients,
         requests_per_client: requests,
-        items: loadgen::default_mix(&archs, &artifact_ids, n),
+        items,
     };
     println!("serve load: {clients} clients x {requests} requests over \
-              {} shard(s) + native, mix of {} items",
+              {} sim shard(s) + 2 native shards, mix of {} items",
              archs.len(), spec.items.len());
     let outcome = loadgen::run_closed_loop(&serve, &spec);
     print!("{}", loadgen::outcome_report(&outcome, &serve));

@@ -1,7 +1,8 @@
 //! The GEMM *service* — since the serve-layer unification a thin
 //! adapter over [`crate::serve`]: artifact executions are submitted as
-//! [`WorkItem::Artifact`]s to the unified front queue and served by the
-//! single-owner native shard (the PJRT client is Rc-based; concurrency
+//! [`WorkItem::artifact`]s to the unified front queue and served by the
+//! single-owner `native:pjrt` shard (the PJRT client is Rc-based;
+//! concurrency
 //! happens in front of it — admission queue, continuous batching — not
 //! behind it). The private event loop, queue and batching code that
 //! used to live here are gone; `serve::shard_loop` is the one worker
@@ -69,6 +70,11 @@ fn convert(reply: std::result::Result<ServeReply, ServeError>)
         Err(ServeError::Cancelled) => {
             Err(anyhow::anyhow!("request cancelled"))
         }
+        Err(e @ ServeError::Overloaded { .. }) => {
+            // the GemmService shim never configures a shed policy, so
+            // this is defensive; keep the full context if it fires
+            Err(anyhow::anyhow!("{e}"))
+        }
         Err(ServeError::Backend(m)) => Err(anyhow::anyhow!("{m}")),
     }
 }
@@ -86,6 +92,8 @@ impl GemmService {
             cache_cap: 0, // measurement semantics: always execute
             sim_threads: 1,
             native: Some(NativeConfig::Artifacts(artifacts_dir)),
+            // measurement paths never shed
+            ..ServeConfig::default()
         };
         Ok(Self { serve: Serve::start(cfg)?, max_batch })
     }
@@ -98,7 +106,7 @@ impl GemmService {
                   -> Receiver<Result<RunStats>> {
         let (tx, rx) = channel();
         self.serve.submit_with(
-            WorkItem::Artifact(artifact_id.to_string()),
+            WorkItem::artifact(artifact_id),
             Box::new(move |reply| {
                 let _ = tx.send(convert(reply));
             }));

@@ -8,7 +8,8 @@
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 use std::path::Path;
-use std::time::Instant;
+use std::sync::mpsc::channel;
+use std::time::{Duration, Instant};
 
 use crate::arch::{compiler, ArchId, CompilerId};
 use crate::gemm::Precision;
@@ -16,8 +17,8 @@ use crate::runtime::artifact::Manifest;
 use crate::sim::TuningPoint;
 use crate::util::table::Table;
 
-use super::{NativeConfig, NativeEngine, Output, Serve, ServeError,
-            WorkItem};
+use super::{NativeConfig, NativeEngine, NativeEngineId, Output, Serve,
+            ServeError, ServeReply, WorkItem};
 
 /// The canonical demo artifact set used when no manifest is available
 /// (CLI `serve`, `serve_load` bench, `serve_gemm` example).
@@ -29,6 +30,9 @@ pub const DEMO_ARTIFACT_IDS: [&str; 3] =
 /// (the mix stays light), otherwise the synthetic host-GEMM catalog
 /// over [`DEMO_ARTIFACT_IDS`] — with a stderr note, so a fallback is
 /// never silent. Returns the config plus the artifact ids to mix.
+/// Selected ids must be **host-capable** (the backends' own predicate):
+/// [`default_mix`] routes every id to the threadpool shard too, which
+/// can only serve what the host reference GEMM reproduces.
 pub fn native_config_or_synthetic(dir: &Path)
                                   -> (NativeConfig, Vec<String>) {
     match Manifest::load(dir) {
@@ -37,7 +41,7 @@ pub fn native_config_or_synthetic(dir: &Path)
                 .artifacts
                 .iter()
                 .filter(|a| a.n.map(|n| n <= 256).unwrap_or(false)
-                        && (a.kind == "gemm" || a.kind == "dot"))
+                        && super::backend::meta_host_capable(a))
                 .take(4)
                 .map(|a| a.id.clone())
                 .collect();
@@ -78,10 +82,15 @@ pub struct LoadOutcome {
     pub submitted: usize,
     pub ok: usize,
     pub failed: usize,
+    /// Requests shed by overload control (`ServeError::Overloaded`) —
+    /// counted separately from `failed` because a shed is the layer
+    /// *working as configured*, not an error.
+    pub shed: usize,
     pub wall_seconds: f64,
     /// Completed requests per shard label.
     pub per_shard: BTreeMap<String, usize>,
-    /// Completed native requests per engine ("pjrt" / "host-gemm").
+    /// Completed native requests per engine ("pjrt" / "host-gemm" /
+    /// "threadpool-gemm").
     pub per_engine: BTreeMap<String, usize>,
     /// Largest coalesced batch any reply reported.
     pub max_batch_seen: usize,
@@ -91,7 +100,9 @@ pub struct LoadOutcome {
 
 /// Build the standard mixed item set: for every simulated architecture a
 /// small tile sweep (t ∈ {16, 32, 64} on CPUs, t ∈ {2, 4} on GPUs), plus
-/// the given native artifact ids.
+/// the given native artifact ids on **both** named native shards
+/// (`native:pjrt` and `native:threadpool`), so a mixed run exercises
+/// real multi-shard native routing.
 pub fn default_mix(archs: &[ArchId], artifact_ids: &[String], n: u64)
                    -> Vec<WorkItem> {
     let mut items = Vec::new();
@@ -99,25 +110,35 @@ pub fn default_mix(archs: &[ArchId], artifact_ids: &[String], n: u64)
         let comp = compiler::vendor_compiler(arch);
         if comp == CompilerId::Cuda {
             for t in [2u64, 4] {
-                items.push(WorkItem::Point(TuningPoint::gpu(
+                items.push(WorkItem::point(TuningPoint::gpu(
                     arch, Precision::F32, n, t)));
             }
         } else {
             for t in [16u64, 32, 64] {
-                items.push(WorkItem::Point(TuningPoint::cpu(
+                items.push(WorkItem::point(TuningPoint::cpu(
                     arch, comp, Precision::F64, n, t, 1)));
             }
         }
     }
     for id in artifact_ids {
-        items.push(WorkItem::Artifact(id.clone()));
+        items.push(WorkItem::artifact(id.clone()));
+        items.push(WorkItem::artifact_on(id.clone(),
+                                         NativeEngineId::Threadpool));
     }
     items
 }
 
+fn engine_name(engine: &NativeEngine) -> &'static str {
+    match engine {
+        NativeEngine::Pjrt => "pjrt",
+        NativeEngine::HostGemm => "host-gemm",
+        NativeEngine::ThreadpoolGemm => "threadpool-gemm",
+    }
+}
+
 /// Run the closed loop. Blocks until every client finished. Every
-/// request is accounted for in `ok + failed == submitted` — the serve
-/// layer's explicit-reply contract means nothing can vanish.
+/// request is accounted for in `ok + shed + failed == submitted` — the
+/// serve layer's explicit-reply contract means nothing can vanish.
 pub fn run_closed_loop(serve: &Serve, spec: &LoadSpec) -> LoadOutcome {
     assert!(!spec.items.is_empty(), "load mix must not be empty");
     assert!(spec.clients > 0, "need at least one client");
@@ -140,19 +161,17 @@ pub fn run_closed_loop(serve: &Serve, spec: &LoadSpec) -> LoadOutcome {
                                 if let Output::Native { engine, .. } =
                                     &reply.output
                                 {
-                                    let name = match engine {
-                                        NativeEngine::Pjrt => "pjrt",
-                                        NativeEngine::HostGemm => {
-                                            "host-gemm"
-                                        }
-                                    };
                                     *out.per_engine
-                                        .entry(name.to_string())
+                                        .entry(engine_name(engine)
+                                               .to_string())
                                         .or_default() += 1;
                                 }
                                 out.max_batch_seen = out
                                     .max_batch_seen
                                     .max(reply.batch_size);
+                            }
+                            Err(ServeError::Overloaded { .. }) => {
+                                out.shed += 1;
                             }
                             Err(e) => {
                                 out.failed += 1;
@@ -179,6 +198,7 @@ pub fn run_closed_loop(serve: &Serve, spec: &LoadSpec) -> LoadOutcome {
         total.submitted += c.submitted;
         total.ok += c.ok;
         total.failed += c.failed;
+        total.shed += c.shed;
         total.max_batch_seen = total.max_batch_seen.max(c.max_batch_seen);
         for (k, v) in c.per_shard {
             *total.per_shard.entry(k).or_default() += v;
@@ -193,6 +213,135 @@ pub fn run_closed_loop(serve: &Serve, spec: &LoadSpec) -> LoadOutcome {
         }
     }
     total
+}
+
+/// Open-loop overload parameters: requests are issued at a fixed rate
+/// regardless of completions (unlike the closed loop, whose offered
+/// load adapts to capacity and therefore can never overload anything).
+#[derive(Debug, Clone)]
+pub struct OverloadSpec {
+    /// Target submission rate, requests/second.
+    pub rate_rps: f64,
+    /// Total requests to issue.
+    pub total: usize,
+    /// The mixed item set, cycled round-robin.
+    pub items: Vec<WorkItem>,
+    /// Optional per-request deadline (relative to its submission) —
+    /// pair with `ShedPolicy::ShedExpired`.
+    pub deadline: Option<Duration>,
+}
+
+/// Outcome of one open-loop run. `submitted` counts what the pacing
+/// thread actually submitted; the categorized replies must add back up
+/// to it (`ok + shed + closed + failed == submitted`) — a reply
+/// callback that is dropped unfired breaks the equation and is caught
+/// by [`OverloadOutcome::fully_accounted`], which is the whole point.
+#[derive(Debug, Clone, Default)]
+pub struct OverloadOutcome {
+    pub submitted: usize,
+    pub ok: usize,
+    /// `ServeError::Overloaded` replies (quota or deadline sheds).
+    pub shed: usize,
+    /// `ServeError::Closed` replies.
+    pub closed: usize,
+    /// Backend / cancelled errors.
+    pub failed: usize,
+    pub wall_seconds: f64,
+    /// Completed requests per shard label.
+    pub per_shard: BTreeMap<String, usize>,
+    /// Error strings observed (deduplicated, for diagnostics).
+    pub errors: Vec<String>,
+}
+
+impl OverloadOutcome {
+    /// Every request got exactly one explicit reply.
+    pub fn fully_accounted(&self) -> bool {
+        self.ok + self.shed + self.closed + self.failed
+            == self.submitted
+    }
+}
+
+/// Measure the sustainable service rate (completed requests per
+/// second) with a short closed-loop probe over `items` — the shared
+/// "how hard can this layer actually go" yardstick the overload
+/// drivers (CLI `serve --overload` and the `serve_load` bench) multiply
+/// to build their offered rate, so the two can never drift apart.
+pub fn measure_sustainable_rps(serve: &Serve, items: &[WorkItem],
+                               clients: usize,
+                               requests_per_client: usize) -> f64 {
+    let probe = run_closed_loop(serve, &LoadSpec {
+        clients,
+        requests_per_client,
+        items: items.to_vec(),
+    });
+    probe.ok as f64 / probe.wall_seconds.max(1e-6)
+}
+
+/// Drive the serve layer open-loop: one pacing thread submits
+/// `spec.total` requests at `spec.rate_rps` (never waiting for
+/// replies), while this thread tallies every reply. Blocks until every
+/// submitted request has replied. Note: if the front queue fills and no
+/// shed policy drains the shards fast enough, `submit` exerts
+/// backpressure and the *achieved* rate drops below the target — that
+/// IS the no-shedding baseline behavior under overload (unbounded
+/// waiting), which `ShedPolicy::RejectOverQuota` exists to avoid.
+pub fn run_open_loop(serve: &Serve, spec: &OverloadSpec)
+                     -> OverloadOutcome {
+    assert!(!spec.items.is_empty(), "load mix must not be empty");
+    assert!(spec.rate_rps > 0.0, "need a positive rate");
+    let t0 = Instant::now();
+    let interval = Duration::from_secs_f64(1.0 / spec.rate_rps);
+    let (tx, rx) = channel::<Result<ServeReply, ServeError>>();
+    let mut out = OverloadOutcome::default();
+    std::thread::scope(|scope| {
+        let tx = tx; // moved into the submitter; clones ride each reply
+        let submitter = scope.spawn(move || {
+            let mut submitted = 0usize;
+            for i in 0..spec.total {
+                let target = t0 + interval.mul_f64(i as f64);
+                let now = Instant::now();
+                if now < target {
+                    std::thread::sleep(target - now);
+                }
+                let mut item =
+                    spec.items[i % spec.items.len()].clone();
+                if let Some(d) = spec.deadline {
+                    item = item.with_deadline_in(d);
+                }
+                let tx = tx.clone();
+                serve.submit_with(item, Box::new(move |r| {
+                    let _ = tx.send(r);
+                }));
+                submitted += 1;
+            }
+            submitted
+        });
+        // Tally on this thread; the iterator ends when the submitter's
+        // tx AND every reply clone have dropped = all replies in. A
+        // reply callback dropped UNFIRED also drops its clone, ending
+        // the loop one reply short — which fully_accounted() flags,
+        // because `submitted` is counted on the submitter side.
+        for reply in rx {
+            match reply {
+                Ok(r) => {
+                    out.ok += 1;
+                    *out.per_shard.entry(r.shard).or_default() += 1;
+                }
+                Err(ServeError::Overloaded { .. }) => out.shed += 1,
+                Err(ServeError::Closed) => out.closed += 1,
+                Err(e) => {
+                    out.failed += 1;
+                    let msg = e.to_string();
+                    if !out.errors.contains(&msg) {
+                        out.errors.push(msg);
+                    }
+                }
+            }
+        }
+        out.submitted = submitter.join().expect("submitter panicked");
+    });
+    out.wall_seconds = t0.elapsed().as_secs_f64();
+    out
 }
 
 /// Render the standard load-run report: per-shard tallies, native
@@ -210,8 +359,9 @@ pub fn outcome_report(outcome: &LoadOutcome, serve: &Serve) -> String {
     let _ = writeln!(out, "{}", serve.summary());
     let _ = writeln!(
         out,
-        "{} submitted = {} ok + {} failed in {:.3}s (max batch {})",
-        outcome.submitted, outcome.ok, outcome.failed,
+        "{} submitted = {} ok + {} shed + {} failed in {:.3}s \
+         (max batch {})",
+        outcome.submitted, outcome.ok, outcome.shed, outcome.failed,
         outcome.wall_seconds, outcome.max_batch_seen);
     if !outcome.errors.is_empty() {
         let _ = writeln!(out, "errors: {:?}", outcome.errors);
@@ -231,7 +381,8 @@ mod tests {
             &["dot_n64_f32".to_string()], 1024);
         let shards: std::collections::HashSet<_> =
             items.iter().map(|i| i.shard_key()).collect();
-        assert_eq!(shards.len(), 3, "2 sim shards + native");
+        assert_eq!(shards.len(), 4,
+                   "2 sim shards + 2 named native shards");
     }
 
     #[test]
@@ -247,18 +398,43 @@ mod tests {
         let serve = Serve::start(cfg).unwrap();
         let spec = LoadSpec {
             clients: 4,
-            requests_per_client: 6,
+            requests_per_client: 8,
             items: default_mix(&[ArchId::Knl],
                                &["dot_n32_f32".to_string()], 512),
         };
         let out = run_closed_loop(&serve, &spec);
-        assert_eq!(out.submitted, 24);
-        assert_eq!(out.ok + out.failed, out.submitted);
+        assert_eq!(out.submitted, 32);
+        assert_eq!(out.ok + out.shed + out.failed, out.submitted);
         assert_eq!(out.failed, 0, "errors: {:?}", out.errors);
+        assert_eq!(out.shed, 0, "no shed policy configured");
         assert!(out.per_shard.contains_key("sim:knl"));
-        assert!(out.per_shard.contains_key("native"));
+        assert!(out.per_shard.contains_key("native:pjrt"));
+        assert!(out.per_shard.contains_key("native:threadpool"));
         // repeats of the same small mix must hit the result cache
         assert!(serve.metrics.cache_hits() > 0);
+        serve.shutdown();
+    }
+
+    #[test]
+    fn open_loop_accounts_for_every_request_under_forced_shed() {
+        // quota 0 on a rejecting policy: every routed request is shed —
+        // a fully deterministic overload outcome.
+        let serve = Serve::start(ServeConfig {
+            shed: crate::serve::ShedPolicy::RejectOverQuota,
+            shard_quota: Some(0),
+            ..Default::default()
+        }).unwrap();
+        let spec = OverloadSpec {
+            rate_rps: 10_000.0,
+            total: 40,
+            items: default_mix(&[ArchId::Knl], &[], 512),
+            deadline: None,
+        };
+        let out = run_open_loop(&serve, &spec);
+        assert_eq!(out.submitted, 40);
+        assert!(out.fully_accounted());
+        assert_eq!(out.shed, 40, "quota 0 sheds everything: {out:?}");
+        assert_eq!(serve.metrics.shed(), 40);
         serve.shutdown();
     }
 }

@@ -83,6 +83,10 @@ pub struct ServeMetrics {
     completed: AtomicU64,
     failed: AtomicU64,
     cancelled: AtomicU64,
+    /// Requests shed by overload control (quota rejection or deadline
+    /// expiry) — always via an explicit `Overloaded` reply, never a
+    /// silent drop.
+    shed: AtomicU64,
     cache_hits: AtomicU64,
     cache_misses: AtomicU64,
     /// High-water mark of the front (admission) queue.
@@ -94,6 +98,13 @@ pub struct ServeMetrics {
     /// End-to-end latency: submit → reply.
     pub latency: LatencyHistogram,
     started: Instant,
+    /// Nanoseconds after `started` of the first submission
+    /// (`u64::MAX` = none yet) and the latest completion (0 = none
+    /// yet). Throughput is measured over this window, so a warm but
+    /// idle layer reports a stable rate instead of one that decays
+    /// with wall-clock time since construction.
+    first_submit_ns: AtomicU64,
+    last_completion_ns: AtomicU64,
 }
 
 impl Default for ServeMetrics {
@@ -109,6 +120,7 @@ impl ServeMetrics {
             completed: AtomicU64::new(0),
             failed: AtomicU64::new(0),
             cancelled: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
             cache_hits: AtomicU64::new(0),
             cache_misses: AtomicU64::new(0),
             front_depth_hw: AtomicUsize::new(0),
@@ -116,21 +128,40 @@ impl ServeMetrics {
             max_batch: AtomicUsize::new(0),
             latency: LatencyHistogram::new(),
             started: Instant::now(),
+            first_submit_ns: AtomicU64::new(u64::MAX),
+            last_completion_ns: AtomicU64::new(0),
         }
+    }
+
+    /// Nanoseconds since construction, saturating (u64 covers ~584
+    /// years of nanos — saturation is purely defensive).
+    fn now_ns(&self) -> u64 {
+        u64::try_from(self.started.elapsed().as_nanos())
+            .unwrap_or(u64::MAX - 1)
     }
 
     pub fn request_submitted(&self) {
         self.submitted.fetch_add(1, Ordering::Relaxed);
+        self.first_submit_ns.fetch_min(self.now_ns(), Ordering::Relaxed);
     }
 
     /// A request finished successfully; records its end-to-end latency.
     pub fn request_completed(&self, latency_seconds: f64) {
         self.completed.fetch_add(1, Ordering::Relaxed);
         self.latency.record(latency_seconds);
+        self.last_completion_ns.fetch_max(self.now_ns(),
+                                          Ordering::Relaxed);
     }
 
     pub fn request_failed(&self) {
         self.failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A request was shed by overload control (explicit `Overloaded`
+    /// reply — quota rejection at admission or deadline expiry at
+    /// dequeue).
+    pub fn request_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn request_cancelled(&self) {
@@ -173,6 +204,16 @@ impl ServeMetrics {
         self.cancelled.load(Ordering::Relaxed)
     }
 
+    pub fn shed(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
+    }
+
+    /// Shed requests / submitted requests; 0.0 before any submission.
+    pub fn shed_rate(&self) -> f64 {
+        let s = self.submitted() as f64;
+        if s == 0.0 { 0.0 } else { self.shed() as f64 / s }
+    }
+
     pub fn cache_hits(&self) -> u64 {
         self.cache_hits.load(Ordering::Relaxed)
     }
@@ -200,10 +241,24 @@ impl ServeMetrics {
         self.max_batch.load(Ordering::Relaxed)
     }
 
-    /// Completed requests per wall-clock second since construction.
+    /// Completed requests per second over the **active window** —
+    /// first submission to latest completion — not since construction,
+    /// so a warm-but-idle layer reports a stable rate instead of one
+    /// decaying with idle wall-clock time. 0.0 before the first
+    /// completion; with exactly one completion the window is that
+    /// request's service time.
     pub fn throughput(&self) -> f64 {
-        let secs = self.started.elapsed().as_secs_f64().max(1e-9);
-        self.completed() as f64 / secs
+        let done = self.completed();
+        if done == 0 {
+            return 0.0;
+        }
+        let first = match self.first_submit_ns.load(Ordering::Relaxed) {
+            u64::MAX => 0, // defensive: completion without a submit
+            ns => ns,
+        };
+        let last = self.last_completion_ns.load(Ordering::Relaxed);
+        let span_ns = last.saturating_sub(first).max(1);
+        done as f64 / (span_ns as f64 / 1e9)
     }
 
     pub fn p50(&self) -> f64 {
@@ -221,11 +276,13 @@ impl ServeMetrics {
     /// Human summary line for CLIs and benches.
     pub fn summary(&self) -> String {
         format!(
-            "serve: {} submitted, {} ok, {} failed, {} cancelled; \
+            "serve: {} submitted, {} ok, {} failed, {} shed, \
+             {} cancelled; \
              cache {:.0}% ({}H/{}M); depth hw front={} shard={}; \
              max batch {}; p50={:.3}ms p95={:.3}ms p99={:.3}ms; \
              {:.1} req/s",
             self.submitted(), self.completed(), self.failed(),
+            self.shed(),
             self.cancelled(), 100.0 * self.cache_hit_rate(),
             self.cache_hits(), self.cache_misses(),
             self.front_depth_high_water(),
@@ -295,5 +352,41 @@ mod tests {
     fn hit_rate_defined_before_traffic() {
         let m = ServeMetrics::new();
         assert_eq!(m.cache_hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn shed_counter_and_rate() {
+        let m = ServeMetrics::new();
+        assert_eq!(m.shed_rate(), 0.0, "defined before traffic");
+        for _ in 0..4 {
+            m.request_submitted();
+        }
+        m.request_shed();
+        m.request_completed(0.001);
+        assert_eq!(m.shed(), 1);
+        assert!((m.shed_rate() - 0.25).abs() < 1e-12);
+        assert!(m.summary().contains("1 shed"), "{}", m.summary());
+    }
+
+    #[test]
+    fn throughput_ignores_idle_warmup_and_does_not_decay() {
+        let m = ServeMetrics::new();
+        assert_eq!(m.throughput(), 0.0, "no completions yet");
+        // Idle warmup before the first request must not deflate the
+        // rate: the window opens at the first submit, not at new().
+        std::thread::sleep(std::time::Duration::from_millis(60));
+        for _ in 0..50 {
+            m.request_submitted();
+            m.request_completed(1e-6);
+        }
+        // 50 requests within far less than the 60ms warmup: the old
+        // since-construction rate would be < ~833 req/s; the windowed
+        // rate is orders of magnitude higher.
+        assert!(m.throughput() > 2_000.0, "{} req/s", m.throughput());
+        // A warm-but-idle layer must report a FROZEN rate, not a
+        // decaying one: the window closes at the last completion.
+        let before = m.throughput();
+        std::thread::sleep(std::time::Duration::from_millis(40));
+        assert_eq!(m.throughput(), before, "idle decay detected");
     }
 }

@@ -14,23 +14,33 @@
 //!
 //! ```text
 //!  clients ──submit──▶ front BoundedQueue (admission control)
-//!                          │ dispatcher thread
+//!                          │ dispatcher thread (+ per-shard quotas)
 //!            ┌─────────────┼──────────────┬──────────────┐
 //!            ▼             ▼              ▼              ▼
-//!      shard sim:knl  shard sim:p100  shard sim:…   shard native
-//!      (N threads)    (N threads)     (N threads)   (1 thread — the
-//!            │             │              │          PJRT client is
-//!            ▼             ▼              ▼          Rc-based)
-//!       pop_batch → group by work key → LRU cache → Backend::run
-//!                          │
+//!      shard sim:knl  shard sim:…   shard native:pjrt  shard
+//!      (N threads)    (N threads)   (1 thread — the    native:threadpool
+//!            │             │         PJRT client is    (1 worker over an
+//!            ▼             ▼         Rc-based)          M-thread pool)
+//!       pop_batch → shed expired → group by work key → LRU cache
+//!                          │                              → Backend::run
 //!                          └──▶ reply channels + ServeMetrics
 //! ```
 //!
 //! * **Admission**: `submit` blocks while the front queue is full
 //!   (backpressure) and fails *explicitly* with [`ServeError::Closed`]
 //!   after shutdown — a request is never silently dropped.
+//! * **Overload control**: with a [`ShedPolicy`] configured, a shard
+//!   whose outstanding line reached `ServeConfig::shard_quota` sheds
+//!   new arrivals with [`ServeError::Overloaded`] at routing time, and
+//!   (policy `ShedExpired`) items whose [`WorkItem`] deadline passed
+//!   are shed at dequeue — overload is never a silent drop NOR an
+//!   unbounded block.
 //! * **Shards**: created lazily by the dispatcher, one per simulated
-//!   [`ArchId`](crate::arch::ArchId) plus a single-owner native shard.
+//!   [`ArchId`](crate::arch::ArchId) plus one per **named** native
+//!   engine ([`NativeEngineId`]): `native:pjrt` (single-owner PJRT,
+//!   host reference-GEMM fallback) and `native:threadpool` (row-blocked
+//!   host GEMM over [`crate::util::threadpool::ThreadPool`],
+//!   oracle-checked per run).
 //! * **Batching**: shard workers drain up to `max_batch` requests in one
 //!   `pop_batch`, group them by work key, and serve each group with one
 //!   backend execution.
@@ -58,7 +68,8 @@ use crate::coordinator::queue::BoundedQueue;
 use crate::runtime::artifact::Manifest;
 
 pub use backend::{Backend, BackendFactory, MachinePark, NativeBackend,
-                  NativeEngine, Output, ShardKey, SimBackend, WorkItem};
+                  NativeEngine, NativeEngineId, Output, ShardKey,
+                  SimBackend, ThreadpoolGemm, WorkItem, WorkPayload};
 pub use cache::LruCache;
 pub use metrics::ServeMetrics;
 
@@ -70,6 +81,20 @@ pub enum ServeError {
     Closed,
     /// `cancel()` was called before this request executed.
     Cancelled,
+    /// Overload control shed this request — the shard's admission
+    /// quota was exceeded, or the item's deadline expired before
+    /// execution started. Always an explicit reply: overload is never
+    /// a silent drop, and (with a shed policy configured) never an
+    /// unbounded block either.
+    Overloaded {
+        /// Label of the shard that was overloaded (e.g. `native:pjrt`).
+        shard: String,
+        /// Outstanding depth observed at the shed decision.
+        depth: usize,
+        /// The configured per-shard quota (0 when shedding was
+        /// triggered by deadline expiry with no quota set).
+        quota: usize,
+    },
     /// The backend refused or failed the request.
     Backend(String),
 }
@@ -81,6 +106,10 @@ impl fmt::Display for ServeError {
                 write!(f, "serve layer closed: request rejected")
             }
             ServeError::Cancelled => write!(f, "request cancelled"),
+            ServeError::Overloaded { shard, depth, quota } => {
+                write!(f, "shard {shard} overloaded (depth {depth}, \
+                           quota {quota}): request shed")
+            }
             ServeError::Backend(m) => write!(f, "{m}"),
         }
     }
@@ -88,10 +117,57 @@ impl fmt::Display for ServeError {
 
 impl std::error::Error for ServeError {}
 
+/// What the serve layer does when a shard is past its admission quota
+/// or a request's deadline has expired. Orthogonal to every other knob:
+/// the default (`None`) is PR-1 behavior — pure backpressure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedPolicy {
+    /// Never shed: requests queue (bounded by queue capacities and the
+    /// dispatcher's overflow buffers) and block producers when full.
+    None,
+    /// Reject with [`ServeError::Overloaded`] at routing time when a
+    /// shard's outstanding depth (its queue + its overflow line) has
+    /// reached `ServeConfig::shard_quota`.
+    RejectOverQuota,
+    /// [`ShedPolicy::RejectOverQuota`] *plus* shed items whose deadline
+    /// has already expired when a shard worker dequeues them (the work
+    /// would be wasted — its result can no longer arrive in time).
+    ShedExpired,
+}
+
+impl ShedPolicy {
+    pub fn rejects_over_quota(&self) -> bool {
+        matches!(self, ShedPolicy::RejectOverQuota
+                     | ShedPolicy::ShedExpired)
+    }
+
+    pub fn sheds_expired(&self) -> bool {
+        matches!(self, ShedPolicy::ShedExpired)
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "none" => Some(ShedPolicy::None),
+            "reject" => Some(ShedPolicy::RejectOverQuota),
+            "expire" => Some(ShedPolicy::ShedExpired),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ShedPolicy::None => "none",
+            ShedPolicy::RejectOverQuota => "reject",
+            ShedPolicy::ShedExpired => "expire",
+        }
+    }
+}
+
 /// A served request's full story.
 #[derive(Debug, Clone)]
 pub struct ServeReply {
-    /// Label of the shard that served it (e.g. `sim:KNL`, `native`).
+    /// Label of the shard that served it (e.g. `sim:knl`,
+    /// `native:pjrt`, `native:threadpool`).
     pub shard: String,
     pub output: Output,
     /// Size of the coalesced group this request was served in.
@@ -141,19 +217,33 @@ pub struct ServeConfig {
     /// LRU result-cache entries per shard; 0 disables caching
     /// (measurement-oriented callers must re-execute every request).
     pub cache_cap: usize,
-    /// Worker threads per simulated shard (the native shard always has
-    /// exactly one — its PJRT client is single-owner).
+    /// Worker threads per simulated shard (each native shard has
+    /// exactly one shard worker — the PJRT client is single-owner, and
+    /// the threadpool shard parallelizes *inside* its backend).
     pub sim_threads: usize,
     pub native: Option<NativeConfig>,
+    /// Threads inside the `native:threadpool` backend's worker pool
+    /// (0 = host-sized).
+    pub native_threads: usize,
+    /// Overload behavior; see [`ShedPolicy`].
+    pub shed: ShedPolicy,
+    /// Per-shard admission quota: a shard with this many outstanding
+    /// requests (its queue plus its overflow line) sheds new arrivals
+    /// when the policy rejects over quota. `None` = unlimited.
+    pub shard_quota: Option<usize>,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
         Self { front_cap: 64, shard_cap: 64, max_batch: 8, cache_cap: 0,
-               sim_threads: 1, native: None }
+               sim_threads: 1, native: None, native_threads: 4,
+               shed: ShedPolicy::None, shard_quota: None }
     }
 }
 
+/// Read-only after start; shared via `Arc` so the two named native
+/// shards draw from one copy instead of cloning the whole manifest
+/// into each factory.
 enum NativeSource {
     Manifest(Manifest),
     Synthetic(Vec<String>),
@@ -164,6 +254,13 @@ struct ShardHandle {
     workers: Vec<JoinHandle<()>>,
 }
 
+/// Live registry of shard queues (label → queue), shared between the
+/// dispatcher (which registers shards as it spawns them) and
+/// [`Serve::summary`]/[`Serve::shard_depths`] — so a *mid-run* summary
+/// sees real per-shard depth high-water marks instead of zeros that
+/// only get folded in at shutdown.
+type ShardRegistry = Mutex<Vec<(String, Arc<BoundedQueue<ServeRequest>>)>>;
+
 /// Handle to a running serve layer.
 pub struct Serve {
     front: Arc<BoundedQueue<ServeRequest>>,
@@ -171,6 +268,7 @@ pub struct Serve {
     pub metrics: Arc<ServeMetrics>,
     cancel: Arc<AtomicBool>,
     park: Arc<MachinePark>,
+    shard_queues: Arc<ShardRegistry>,
 }
 
 impl Serve {
@@ -181,7 +279,8 @@ impl Serve {
         let native_src = match &cfg.native {
             None => None,
             Some(NativeConfig::Artifacts(dir)) => {
-                Some(NativeSource::Manifest(Manifest::load(dir)?))
+                Some(Arc::new(NativeSource::Manifest(
+                    Manifest::load(dir)?)))
             }
             Some(NativeConfig::Synthetic(ids)) => {
                 // validate ids eagerly
@@ -191,7 +290,7 @@ impl Serve {
                             "unsupported synthetic artifact id {id:?}");
                     }
                 }
-                Some(NativeSource::Synthetic(ids.clone()))
+                Some(Arc::new(NativeSource::Synthetic(ids.clone())))
             }
         };
         let front: Arc<BoundedQueue<ServeRequest>> =
@@ -199,22 +298,25 @@ impl Serve {
         let metrics = Arc::new(ServeMetrics::new());
         let cancel = Arc::new(AtomicBool::new(false));
         let park = Arc::new(MachinePark::default());
+        let shard_queues: Arc<ShardRegistry> =
+            Arc::new(Mutex::new(Vec::new()));
         let dispatcher = {
             let front = Arc::clone(&front);
             let metrics = Arc::clone(&metrics);
             let cancel = Arc::clone(&cancel);
             let park = Arc::clone(&park);
+            let registry = Arc::clone(&shard_queues);
             let cfg = cfg.clone();
             std::thread::Builder::new()
                 .name("serve-dispatch".into())
                 .spawn(move || {
                     dispatch_loop(front, cfg, native_src, park, metrics,
-                                  cancel)
+                                  cancel, registry)
                 })
                 .expect("spawn serve dispatcher")
         };
         Ok(Serve { front, dispatcher: Some(dispatcher), metrics, cancel,
-                   park })
+                   park, shard_queues })
     }
 
     /// Submit a work item. Blocks while the front queue is full
@@ -290,10 +392,26 @@ impl Serve {
     }
 
     /// Unified metrics summary with the queue-depth high-water marks
-    /// folded in (they live in the queues until read).
+    /// folded in **at observation time** (they live in the queues until
+    /// read) — a mid-run summary reports real shard depths, not the
+    /// zeros a shutdown-only fold would show.
     pub fn summary(&self) -> String {
         self.metrics.observe_front_depth(self.front.max_depth());
+        for (_, q) in self.shard_queues.lock()
+            .expect("shard registry poisoned").iter()
+        {
+            self.metrics.observe_shard_depth(q.max_depth());
+        }
         self.metrics.summary()
+    }
+
+    /// Live per-shard queue visibility: `(label, current depth,
+    /// high-water depth)` for every shard spawned so far.
+    pub fn shard_depths(&self) -> Vec<(String, usize, usize)> {
+        self.shard_queues.lock().expect("shard registry poisoned")
+            .iter()
+            .map(|(label, q)| (label.clone(), q.len(), q.max_depth()))
+            .collect()
     }
 
     /// The shared machine-model registry (pre-warm, inspection).
@@ -321,11 +439,14 @@ impl Drop for Serve {
 }
 
 fn dispatch_loop(front: Arc<BoundedQueue<ServeRequest>>, cfg: ServeConfig,
-                 mut native_src: Option<NativeSource>,
+                 native_src: Option<Arc<NativeSource>>,
                  park: Arc<MachinePark>, metrics: Arc<ServeMetrics>,
-                 cancel: Arc<AtomicBool>) {
+                 cancel: Arc<AtomicBool>,
+                 registry: Arc<ShardRegistry>) {
     use std::collections::VecDeque;
     use std::time::Duration;
+
+    use crate::coordinator::queue::PushRefusal;
 
     let mut shards: HashMap<ShardKey, ShardHandle> = HashMap::new();
     // Per-shard overflow buffers: when one shard's queue is full, its
@@ -338,6 +459,12 @@ fn dispatch_loop(front: Arc<BoundedQueue<ServeRequest>>, cfg: ServeConfig,
         HashMap::new();
     let mut overflow_len = 0usize;
     let overflow_limit = cfg.front_cap.max(16) * 4;
+    // Effective per-shard admission quota, fixed for this dispatcher's
+    // lifetime (usize::MAX = no shedding).
+    let quota = match cfg.shard_quota {
+        Some(q) if cfg.shed.rejects_over_quota() => q,
+        _ => usize::MAX,
+    };
     let mut front_open = true;
 
     while front_open || overflow_len > 0 {
@@ -396,9 +523,12 @@ fn dispatch_loop(front: Arc<BoundedQueue<ServeRequest>>, cfg: ServeConfig,
         for req in burst {
             let key = req.item.shard_key();
             if !shards.contains_key(&key) {
-                match spawn_shard(key, &cfg, &mut native_src, &park,
+                match spawn_shard(key, &cfg, &native_src, &park,
                                   &metrics, &cancel) {
                     Ok(handle) => {
+                        registry.lock().expect("shard registry poisoned")
+                            .push((key.label(),
+                                   Arc::clone(&handle.queue)));
                         shards.insert(key, handle);
                     }
                     Err(e) => {
@@ -411,15 +541,48 @@ fn dispatch_loop(front: Arc<BoundedQueue<ServeRequest>>, cfg: ServeConfig,
             }
             let handle = shards.get(&key).expect("just ensured");
             let buf = overflow.entry(key).or_default();
+            // Admission quota: the shard's outstanding line is its
+            // queue PLUS its overflow buffer; with a rejecting policy
+            // anything past the quota is shed HERE, explicitly, instead
+            // of growing the line without bound. When the overflow
+            // buffer is empty the queue enforces the quota itself
+            // (try_push_quota); otherwise the combined queue+overflow
+            // depth is checked manually below before joining the line.
             if buf.is_empty() {
-                match handle.queue.try_push(req) {
+                match handle.queue.try_push_quota(req, quota) {
                     Ok(()) => continue,
-                    Err(req) => {
+                    Err(PushRefusal::OverQuota(req, depth)) => {
+                        metrics.request_shed();
+                        (req.reply)(Err(ServeError::Overloaded {
+                            shard: key.label(),
+                            depth,
+                            quota,
+                        }));
+                        continue;
+                    }
+                    Err(PushRefusal::Closed(req)) => {
+                        // shard queues only close during shutdown,
+                        // after this loop — defensive, never silent
+                        metrics.request_failed();
+                        (req.reply)(Err(ServeError::Closed));
+                        continue;
+                    }
+                    Err(PushRefusal::Full(req)) => {
                         buf.push_back(req);
                         overflow_len += 1;
                     }
                 }
             } else {
+                let outstanding = handle.queue.len() + buf.len();
+                if outstanding >= quota {
+                    metrics.request_shed();
+                    (req.reply)(Err(ServeError::Overloaded {
+                        shard: key.label(),
+                        depth: outstanding,
+                        quota,
+                    }));
+                    continue;
+                }
                 // keep FIFO: never jump the shard's waiting line
                 buf.push_back(req);
                 overflow_len += 1;
@@ -451,7 +614,7 @@ fn dispatch_loop(front: Arc<BoundedQueue<ServeRequest>>, cfg: ServeConfig,
 }
 
 fn spawn_shard(key: ShardKey, cfg: &ServeConfig,
-               native_src: &mut Option<NativeSource>,
+               native_src: &Option<Arc<NativeSource>>,
                park: &Arc<MachinePark>, metrics: &Arc<ServeMetrics>,
                cancel: &Arc<AtomicBool>)
                -> Result<ShardHandle, String> {
@@ -461,7 +624,10 @@ fn spawn_shard(key: ShardKey, cfg: &ServeConfig,
         Arc::new(Mutex::new(LruCache::new(cfg.cache_cap)));
     let threads = match key {
         ShardKey::Sim(_) => cfg.sim_threads.max(1),
-        ShardKey::Native => 1, // single-owner: the PJRT client is Rc-based
+        // Single shard worker per native engine: the PJRT client is
+        // Rc-based (single-owner), and the threadpool backend
+        // parallelizes inside itself.
+        ShardKey::Native(_) => 1,
     };
     let mut factories: Vec<BackendFactory> = Vec::new();
     match key {
@@ -474,24 +640,44 @@ fn spawn_shard(key: ShardKey, cfg: &ServeConfig,
                 }));
             }
         }
-        ShardKey::Native => {
-            let src = native_src.take().ok_or_else(|| {
+        ShardKey::Native(engine) => {
+            // Both named native shards draw from the SAME shared
+            // artifact source (Arc — `native:pjrt` and
+            // `native:threadpool` read one copy of the manifest).
+            let src = Arc::clone(native_src.as_ref().ok_or_else(|| {
                 "no native backend configured (start the serve layer \
                  with ServeConfig::native set)".to_string()
-            })?;
+            })?);
+            let native_threads = cfg.native_threads;
             factories.push(Box::new(move || {
-                let b = match src {
-                    NativeSource::Manifest(m) => {
-                        NativeBackend::from_manifest(m)
+                let b: Box<dyn Backend> = match (engine, &*src) {
+                    (NativeEngineId::Pjrt,
+                     NativeSource::Manifest(m)) => {
+                        // the PJRT backend owns its manifest (it keeps
+                        // loading kernels from it) — one clone here
+                        Box::new(NativeBackend::from_manifest(m.clone()))
                     }
-                    NativeSource::Synthetic(ids) => {
-                        NativeBackend::synthetic(&ids)?
+                    (NativeEngineId::Pjrt,
+                     NativeSource::Synthetic(ids)) => {
+                        Box::new(NativeBackend::synthetic(ids)?)
+                    }
+                    (NativeEngineId::Threadpool,
+                     NativeSource::Manifest(m)) => {
+                        Box::new(ThreadpoolGemm::from_manifest(
+                            m, native_threads))
+                    }
+                    (NativeEngineId::Threadpool,
+                     NativeSource::Synthetic(ids)) => {
+                        Box::new(ThreadpoolGemm::synthetic(
+                            ids, native_threads)?)
                     }
                 };
-                Ok(Box::new(b) as Box<dyn Backend>)
+                Ok(b)
             }));
         }
     }
+    let shed = cfg.shed;
+    let quota = cfg.shard_quota.unwrap_or(0);
     let workers = factories
         .into_iter()
         .enumerate()
@@ -506,7 +692,7 @@ fn spawn_shard(key: ShardKey, cfg: &ServeConfig,
                 .name(format!("serve-{}-{widx}", label.replace(':', "-")))
                 .spawn(move || {
                     shard_loop(queue, factory, cache, metrics, cancel,
-                               max_batch, widx, label)
+                               max_batch, widx, label, shed, quota)
                 })
                 .expect("spawn shard worker")
         })
@@ -514,11 +700,13 @@ fn spawn_shard(key: ShardKey, cfg: &ServeConfig,
     Ok(ShardHandle { queue, workers })
 }
 
+#[allow(clippy::too_many_arguments)]
 fn shard_loop(queue: Arc<BoundedQueue<ServeRequest>>,
               factory: BackendFactory,
               cache: Arc<Mutex<LruCache<Output>>>,
               metrics: Arc<ServeMetrics>, cancel: Arc<AtomicBool>,
-              max_batch: usize, worker: usize, label: String) {
+              max_batch: usize, worker: usize, label: String,
+              shed: ShedPolicy, quota: usize) {
     let mut backend = match factory() {
         Ok(b) => b,
         Err(e) => {
@@ -538,9 +726,33 @@ fn shard_loop(queue: Arc<BoundedQueue<ServeRequest>>,
         }
     };
     loop {
-        let batch = queue.pop_batch(max_batch);
+        let mut batch = queue.pop_batch(max_batch);
         if batch.is_empty() {
             return; // closed and drained
+        }
+        // Deadline shedding at dequeue: executing an already-expired
+        // request wastes backend time that live requests behind it
+        // need — shed it with an explicit Overloaded reply instead.
+        if shed.sheds_expired() {
+            let now = Instant::now();
+            let depth = queue.len();
+            let mut live = Vec::with_capacity(batch.len());
+            for req in batch {
+                if req.item.expired(now) {
+                    metrics.request_shed();
+                    (req.reply)(Err(ServeError::Overloaded {
+                        shard: label.clone(),
+                        depth,
+                        quota,
+                    }));
+                } else {
+                    live.push(req);
+                }
+            }
+            batch = live;
+            if batch.is_empty() {
+                continue;
+            }
         }
         // Continuous batching: group the drained requests by work key
         // (first-appearance order) and serve each group with ONE
@@ -572,16 +784,30 @@ fn shard_loop(queue: Arc<BoundedQueue<ServeRequest>>,
                 let mut c = cache.lock().expect("cache poisoned");
                 (c.get(&key), c.enabled())
             };
+            // Pre-serve wait snapshot: `queue_seconds` means "wait from
+            // submission until this shard started serving the item" on
+            // EVERY path — the cache-hit path must not report reply-loop
+            // time (or an earlier group member's slow reply callback) as
+            // queue wait. The measurement path (cache disabled) times
+            // each request immediately before its own execution instead,
+            // so it skips this allocation entirely.
+            let waits: Vec<f64> = if cache_enabled {
+                group.iter()
+                    .map(|r| r.enqueued.elapsed().as_secs_f64())
+                    .collect()
+            } else {
+                Vec::new()
+            };
             if let Some(output) = cached {
                 metrics.cache_hit(batch_size as u64);
-                for req in group {
+                for (req, wait) in group.into_iter().zip(waits) {
                     let latency = req.enqueued.elapsed().as_secs_f64();
                     metrics.request_completed(latency);
                     (req.reply)(Ok(ServeReply {
                         shard: label.clone(),
                         output: output.clone(),
                         batch_size,
-                        queue_seconds: latency,
+                        queue_seconds: wait,
                         cache_hit: true,
                         worker,
                     }));
@@ -593,10 +819,6 @@ fn shard_loop(queue: Arc<BoundedQueue<ServeRequest>>,
                 // — ONE execution answers the whole group and seeds the
                 // cache.
                 metrics.cache_miss(batch_size as u64);
-                let waits: Vec<f64> = group
-                    .iter()
-                    .map(|r| r.enqueued.elapsed().as_secs_f64())
-                    .collect();
                 match backend.run(&group[0].item) {
                     Ok(output) => {
                         cache.lock().expect("cache poisoned")
@@ -664,7 +886,7 @@ mod tests {
     use crate::sim::TuningPoint;
 
     fn knl_point(t: u64) -> WorkItem {
-        WorkItem::Point(TuningPoint::cpu(ArchId::Knl, CompilerId::Intel,
+        WorkItem::point(TuningPoint::cpu(ArchId::Knl, CompilerId::Intel,
                                          Precision::F64, 1024, t, 1))
     }
 
@@ -722,7 +944,7 @@ mod tests {
     fn native_unconfigured_is_explicit_backend_error() {
         let serve = Serve::start(ServeConfig::default()).unwrap();
         let err = serve
-            .call(WorkItem::Artifact("dot_n64_f32".into()))
+            .call(WorkItem::artifact("dot_n64_f32"))
             .unwrap_err();
         match err {
             ServeError::Backend(m) => {
@@ -743,9 +965,9 @@ mod tests {
             ..Default::default()
         };
         let serve = Serve::start(cfg).unwrap();
-        let r = serve.call(WorkItem::Artifact("dot_n64_f32".into()))
+        let r = serve.call(WorkItem::artifact("dot_n64_f32"))
             .unwrap();
-        assert_eq!(r.shard, "native");
+        assert_eq!(r.shard, "native:pjrt");
         match r.output {
             Output::Native { seconds, engine, .. } => {
                 assert!(seconds > 0.0);
@@ -753,9 +975,20 @@ mod tests {
             }
             other => panic!("unexpected {other:?}"),
         }
-        let again = serve.call(WorkItem::Artifact("dot_n64_f32".into()))
+        let again = serve.call(WorkItem::artifact("dot_n64_f32"))
             .unwrap();
         assert!(again.cache_hit);
+        // the same artifact on the NAMED second native shard: computed
+        // by the threadpool GEMM, oracle-checked inside the backend
+        let tp = serve.call(WorkItem::artifact_on(
+            "dot_n64_f32", NativeEngineId::Threadpool)).unwrap();
+        assert_eq!(tp.shard, "native:threadpool");
+        match tp.output {
+            Output::Native { engine, .. } => {
+                assert_eq!(engine, NativeEngine::ThreadpoolGemm);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
         serve.shutdown();
     }
 
@@ -768,6 +1001,158 @@ mod tests {
             ..Default::default()
         };
         assert!(Serve::start(cfg).is_err());
+    }
+
+    #[test]
+    fn quota_rejection_is_explicit_and_counted() {
+        // quota 0 = every request shed: fully deterministic
+        let serve = Serve::start(ServeConfig {
+            shed: ShedPolicy::RejectOverQuota,
+            shard_quota: Some(0),
+            ..Default::default()
+        }).unwrap();
+        let err = serve.call(knl_point(32)).unwrap_err();
+        match err {
+            ServeError::Overloaded { shard, depth, quota } => {
+                assert_eq!(shard, "sim:knl");
+                assert_eq!(depth, 0);
+                assert_eq!(quota, 0);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(serve.metrics.shed(), 1);
+        assert!(serve.metrics.shed_rate() > 0.0);
+        assert!(serve.summary().contains("1 shed"));
+        serve.shutdown();
+    }
+
+    #[test]
+    fn quota_ignored_without_a_rejecting_policy() {
+        let serve = Serve::start(ServeConfig {
+            shed: ShedPolicy::None,
+            shard_quota: Some(0),
+            ..Default::default()
+        }).unwrap();
+        assert!(serve.call(knl_point(32)).is_ok(),
+                "policy None must never shed");
+        assert_eq!(serve.metrics.shed(), 0);
+        serve.shutdown();
+    }
+
+    #[test]
+    fn expired_deadline_is_shed_at_dequeue() {
+        let serve = Serve::start(ServeConfig {
+            shed: ShedPolicy::ShedExpired,
+            ..Default::default()
+        }).unwrap();
+        // deadline = submission instant: expired by dequeue time
+        let item = knl_point(64).with_deadline(Instant::now());
+        match serve.call(item).unwrap_err() {
+            ServeError::Overloaded { shard, quota, .. } => {
+                assert_eq!(shard, "sim:knl");
+                assert_eq!(quota, 0, "no quota configured");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(serve.metrics.shed(), 1);
+        // a live deadline sails through
+        let ok = serve.call(knl_point(64).with_deadline_in(
+            std::time::Duration::from_secs(3600)));
+        assert!(ok.is_ok());
+        serve.shutdown();
+    }
+
+    #[test]
+    fn deadlines_inert_without_expiry_policy() {
+        let serve = Serve::start(ServeConfig::default()).unwrap();
+        let item = knl_point(16).with_deadline(Instant::now());
+        assert!(serve.call(item).is_ok(),
+                "ShedPolicy::None must ignore deadlines");
+        serve.shutdown();
+    }
+
+    #[test]
+    fn live_summary_sees_shard_depths_mid_run() {
+        let serve = Serve::start(ServeConfig::default()).unwrap();
+        for t in [16u64, 32, 64] {
+            serve.call(knl_point(t)).unwrap();
+        }
+        // Mid-run (NOT shutdown): the registry walk must surface the
+        // shard queue's high-water mark; requests flowed through the
+        // queue, so it is at least 1.
+        assert!(serve.metrics.shard_depth_high_water() <= 1,
+                "precondition: nothing folded before summary()");
+        let _ = serve.summary();
+        assert!(serve.metrics.shard_depth_high_water() >= 1,
+                "live summary must fold shard depths");
+        let depths = serve.shard_depths();
+        assert_eq!(depths.len(), 1);
+        assert_eq!(depths[0].0, "sim:knl");
+        assert!(depths[0].2 >= 1, "high-water from live registry");
+        serve.shutdown();
+    }
+
+    #[test]
+    fn cache_hit_queue_seconds_is_pre_serve_wait_not_reply_time() {
+        // Regression for the queue_seconds semantics bug: the cache-hit
+        // path used to report full end-to-end latency (measured at
+        // reply time, AFTER earlier group members' reply callbacks ran)
+        // as the queue wait. Slow reply callbacks of earlier group
+        // members must not inflate later members' queue_seconds.
+        use std::sync::mpsc::channel;
+        let serve = Serve::start(ServeConfig {
+            cache_cap: 16,
+            max_batch: 8,
+            native: Some(NativeConfig::Synthetic(vec![
+                "dot_n64_f32".to_string(),
+                "gemm_n512_t16_e1_f32".to_string(),
+            ])),
+            ..Default::default()
+        }).unwrap();
+        // warm the cache for the small artifact
+        serve.call(WorkItem::artifact("dot_n64_f32")).unwrap();
+        // Occupy the single pjrt shard worker with slow work (n=512
+        // host GEMM, ≫ 20ms); give the worker a moment to dequeue it
+        // ALONE, then queue three hits behind it so they coalesce into
+        // one later batch.
+        let slow = serve.submit(
+            WorkItem::artifact("gemm_n512_t16_e1_f32"));
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let (tx, rx) = channel();
+        for i in 0..3 {
+            let tx = tx.clone();
+            serve.submit_with(
+                WorkItem::artifact("dot_n64_f32"),
+                Box::new(move |r| {
+                    if i == 0 {
+                        // a deliberately slow reply callback
+                        std::thread::sleep(
+                            std::time::Duration::from_millis(80));
+                    }
+                    let _ = tx.send((i, r));
+                }));
+        }
+        drop(tx);
+        let mut replies: Vec<_> = rx.iter().collect();
+        replies.sort_by_key(|(i, _)| *i);
+        assert_eq!(replies.len(), 3);
+        let waits: Vec<f64> = replies
+            .iter()
+            .map(|(_, r)| r.as_ref().unwrap().queue_seconds)
+            .collect();
+        // All three were served from cache in ONE group, so their
+        // pre-serve waits differ only by their sub-millisecond submit
+        // spacing. Member 0's 80ms reply callback must NOT appear in
+        // members 1 and 2's queue wait (the old code measured at reply
+        // time, after that callback).
+        for (i, w) in waits.iter().enumerate().skip(1) {
+            assert!(*w <= waits[0] + 0.060,
+                    "hit member {i} queue_seconds {w}s vs member 0 \
+                     {}s: includes reply time of earlier members",
+                    waits[0]);
+        }
+        let _ = slow.recv().unwrap().unwrap();
+        serve.shutdown();
     }
 
     #[test]

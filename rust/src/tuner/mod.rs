@@ -19,4 +19,4 @@ pub mod sweep;
 pub use results::{SweepRecord, SweepResults};
 pub use space::TuningSpace;
 pub use strategies::{tune_with, Strategy, TuneOutcome};
-pub use sweep::grid_sweep;
+pub use sweep::{grid_sweep, try_grid_sweep};

@@ -9,18 +9,37 @@ use crate::util::threadpool::ThreadPool;
 use super::results::{SweepRecord, SweepResults};
 use super::space::TuningSpace;
 
-/// Evaluate every point of the space on the machine model. Results are
-/// returned in enumeration order regardless of scheduling (the
-/// order-invariance property is tested below).
-pub fn grid_sweep(machine: &Arc<Machine>, space: &TuningSpace,
-                  pool: &ThreadPool) -> SweepResults {
+/// Evaluate every point of the space on the machine model with
+/// per-point fault isolation: a panicking evaluation is reported in the
+/// failure list (`"point …: message"`) instead of killing the whole
+/// fan-out. Successful results keep enumeration order regardless of
+/// scheduling (the order-invariance property is tested below).
+pub fn try_grid_sweep(machine: &Arc<Machine>, space: &TuningSpace,
+                      pool: &ThreadPool)
+                      -> (SweepResults, Vec<String>) {
     let points = space.points();
     let m = Arc::clone(machine);
-    let preds = pool.map(points.clone(), move |p| m.predict(&p));
+    let preds = pool.try_map(points.clone(), move |p| m.predict(&p));
     let mut out = SweepResults::default();
-    for (point, pred) in points.into_iter().zip(&preds) {
-        out.push(SweepRecord::new(point, pred));
+    let mut failures = Vec::new();
+    for (point, pred) in points.into_iter().zip(preds) {
+        match pred {
+            Ok(pred) => out.push(SweepRecord::new(point, &pred)),
+            Err(msg) => failures.push(format!("point {point:?}: {msg}")),
+        }
     }
+    (out, failures)
+}
+
+/// Evaluate every point of the space on the machine model. Infallible
+/// wrapper over [`try_grid_sweep`] — panics (listing the offending
+/// points) if any evaluation failed; campaign paths that must survive
+/// bad points use `try_grid_sweep` directly.
+pub fn grid_sweep(machine: &Arc<Machine>, space: &TuningSpace,
+                  pool: &ThreadPool) -> SweepResults {
+    let (out, failures) = try_grid_sweep(machine, space, pool);
+    assert!(failures.is_empty(),
+            "grid sweep evaluations panicked: {failures:?}");
     out
 }
 
@@ -55,6 +74,17 @@ mod tests {
             assert!((a.gflops - b.gflops).abs() < 1e-9,
                     "{:?} vs {:?}", a.gflops, b.gflops);
         }
+    }
+
+    #[test]
+    fn try_sweep_reports_no_failures_on_healthy_model() {
+        let machine = Arc::new(Machine::for_arch(ArchId::Knl));
+        let space = TuningSpace::paper(ArchId::Knl, CompilerId::Intel,
+                                       Precision::F64, 1024);
+        let pool = ThreadPool::new(3);
+        let (out, failures) = try_grid_sweep(&machine, &space, &pool);
+        assert!(failures.is_empty(), "{failures:?}");
+        assert_eq!(out.len(), space.len());
     }
 
     #[test]

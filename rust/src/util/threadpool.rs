@@ -68,35 +68,84 @@ impl ThreadPool {
             .expect("workers alive");
     }
 
+    /// Map `f` over `items` in parallel, preserving order, with
+    /// **per-item panic isolation**: a panicking job yields
+    /// `Err(panic message)` in its slot instead of killing the caller
+    /// (or the worker), so one bad point cannot take down a whole
+    /// fan-out. Blocks until every slot is filled. This is the tuner's
+    /// fault-tolerant fan-out primitive; [`ThreadPool::map`] is the
+    /// infallible wrapper over it.
+    pub fn try_map<T, R, F>(&self, items: Vec<T>, f: F)
+                            -> Vec<Result<R, String>>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        type Slot<R> = (usize, Result<R, String>);
+        let n = items.len();
+        let f = Arc::new(f);
+        let (tx, rx): (Sender<Slot<R>>, Receiver<Slot<R>>) = channel();
+        for (i, item) in items.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            let tx = tx.clone();
+            let panics = Arc::clone(&self.panics);
+            self.execute(move || {
+                // Catch here so the panic is attributable to item `i`;
+                // the worker-loop catch_unwind then never fires for map
+                // jobs, so the pool-level count is bumped here instead.
+                let r = catch_unwind(AssertUnwindSafe(|| f(item)))
+                    .map_err(|payload| {
+                        panics.fetch_add(1, Ordering::SeqCst);
+                        panic_message(payload.as_ref())
+                    });
+                // Receiver hang-up is fine (caller gave up).
+                let _ = tx.send((i, r));
+            });
+        }
+        drop(tx);
+        let mut slots: Vec<Option<Result<R, String>>> =
+            (0..n).map(|_| None).collect();
+        for (i, r) in rx {
+            slots[i] = Some(r);
+        }
+        slots
+            .into_iter()
+            .map(|s| s.unwrap_or_else(|| {
+                Err("worker exited before replying".to_string())
+            }))
+            .collect()
+    }
+
     /// Map `f` over `items` in parallel, preserving order. Blocks until
-    /// all results arrive. This is the tuner's fan-out primitive.
+    /// all results arrive. Infallible wrapper over
+    /// [`ThreadPool::try_map`]: a panicking job panics the caller too
+    /// (with the job's own message) — fan-outs that must survive bad
+    /// items use `try_map` directly.
     pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
     where
         T: Send + 'static,
         R: Send + 'static,
         F: Fn(T) -> R + Send + Sync + 'static,
     {
-        let n = items.len();
-        let f = Arc::new(f);
-        let (tx, rx): (Sender<(usize, R)>, Receiver<(usize, R)>) = channel();
-        for (i, item) in items.into_iter().enumerate() {
-            let f = Arc::clone(&f);
-            let tx = tx.clone();
-            self.execute(move || {
-                let r = f(item);
-                // Receiver hang-up is fine (caller gave up).
-                let _ = tx.send((i, r));
-            });
-        }
-        drop(tx);
-        let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
-        for (i, r) in rx {
-            slots[i] = Some(r);
-        }
-        slots
+        self.try_map(items, f)
             .into_iter()
-            .map(|s| s.expect("job panicked — result missing"))
+            .map(|r| r.unwrap_or_else(|msg| {
+                panic!("threadpool job panicked: {msg}")
+            }))
             .collect()
+    }
+}
+
+/// Best-effort text of a panic payload (`&str` and `String` payloads —
+/// i.e. everything `panic!` produces — are recovered verbatim).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
     }
 }
 
@@ -183,6 +232,42 @@ mod tests {
         // flush: map forces completion of prior FIFO jobs on 1 worker
         let _ = pool.map(vec![0], |x: i32| x);
         assert_eq!(pool.panic_count(), 2);
+    }
+
+    #[test]
+    fn try_map_isolates_panicking_items() {
+        let pool = ThreadPool::new(3);
+        let out = pool.try_map((0..20).collect(), |x: i32| {
+            if x % 7 == 3 {
+                panic!("bad point {x}");
+            }
+            x * 2
+        });
+        assert_eq!(out.len(), 20);
+        for (i, r) in out.iter().enumerate() {
+            if i % 7 == 3 {
+                let msg = r.as_ref().unwrap_err();
+                assert!(msg.contains(&format!("bad point {i}")), "{msg}");
+            } else {
+                assert_eq!(*r.as_ref().unwrap(), 2 * i as i32);
+            }
+        }
+        // the pool survives and counts the panics
+        assert_eq!(pool.panic_count(), 3); // items 3, 10, 17
+        let after: Vec<i32> = pool.map(vec![1, 2, 3], |x| x + 1);
+        assert_eq!(after, vec![2, 3, 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "threadpool job panicked: boom 4")]
+    fn map_propagates_job_panic_with_message() {
+        let pool = ThreadPool::new(2);
+        let _ = pool.map((0..8).collect(), |x: i32| {
+            if x == 4 {
+                panic!("boom {x}");
+            }
+            x
+        });
     }
 
     #[test]

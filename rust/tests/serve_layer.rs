@@ -16,8 +16,8 @@ use alpaka_rs::arch::{ArchId, CompilerId};
 use alpaka_rs::coordinator::Scheduler;
 use alpaka_rs::gemm::Precision;
 use alpaka_rs::runtime::GemmService;
-use alpaka_rs::serve::{loadgen, NativeConfig, Output, Serve,
-                       ServeConfig, ServeError, WorkItem};
+use alpaka_rs::serve::{loadgen, NativeConfig, NativeEngineId, Output,
+                       Serve, ServeConfig, ServeError, WorkItem};
 use alpaka_rs::sim::TuningPoint;
 
 static DIR_SEQ: AtomicU64 = AtomicU64::new(0);
@@ -61,7 +61,7 @@ fn temp_artifacts() -> PathBuf {
 }
 
 #[test]
-fn three_shard_families_through_one_front_queue() {
+fn four_shard_families_through_one_front_queue() {
     let serve = Serve::start(ServeConfig {
         cache_cap: 64,
         native: Some(NativeConfig::Synthetic(vec![
@@ -69,16 +69,19 @@ fn three_shard_families_through_one_front_queue() {
         ])),
         ..Default::default()
     }).unwrap();
-    let knl = WorkItem::Point(TuningPoint::cpu(
+    let knl = WorkItem::point(TuningPoint::cpu(
         ArchId::Knl, CompilerId::Intel, Precision::F64, 1024, 32, 1));
-    let gpu = WorkItem::Point(TuningPoint::gpu(
+    let gpu = WorkItem::point(TuningPoint::gpu(
         ArchId::P100Nvlink, Precision::F32, 1024, 4));
-    let native = WorkItem::Artifact("dot_n64_f32".to_string());
-    let shards: Vec<String> = [knl, gpu, native]
+    let pjrt = WorkItem::artifact("dot_n64_f32");
+    let threadpool = WorkItem::artifact_on("dot_n64_f32",
+                                           NativeEngineId::Threadpool);
+    let shards: Vec<String> = [knl, gpu, pjrt, threadpool]
         .into_iter()
         .map(|item| serve.call(item).unwrap().shard)
         .collect();
-    assert_eq!(shards, vec!["sim:knl", "sim:p100-nvlink", "native"]);
+    assert_eq!(shards, vec!["sim:knl", "sim:p100-nvlink",
+                            "native:pjrt", "native:threadpool"]);
     serve.shutdown();
 }
 
@@ -101,7 +104,9 @@ fn repeat_traffic_hits_cache_and_latency_percentiles_fill() {
     let outcome = loadgen::run_closed_loop(&serve, &spec);
     assert_eq!(outcome.submitted, 64);
     assert_eq!(outcome.failed, 0, "errors: {:?}", outcome.errors);
-    assert_eq!(outcome.per_shard.len(), 3);
+    assert_eq!(outcome.per_shard.len(), 4,
+               "2 sim + 2 named native shards: {:?}",
+               outcome.per_shard);
     let m = &serve.metrics;
     assert_eq!(m.completed(), 64);
     assert!(m.cache_hit_rate() > 0.0, "repeats must hit the cache");
@@ -193,7 +198,7 @@ fn scheduler_and_direct_serve_agree() {
 
     let serve = Serve::start(ServeConfig::default()).unwrap();
     for (r, p) in via_shim.iter().zip(&pts) {
-        let direct = serve.call(WorkItem::Point(*p)).unwrap();
+        let direct = serve.call(WorkItem::point(*p)).unwrap();
         match direct.output {
             Output::Sim { record, .. } => {
                 assert_eq!(record.point, *p);
@@ -212,7 +217,7 @@ fn cancel_mid_stream_yields_explicit_cancelled_errors() {
         ..Default::default()
     }).unwrap();
     let items: Vec<WorkItem> = (0..40)
-        .map(|i| WorkItem::Point(TuningPoint::cpu(
+        .map(|i| WorkItem::point(TuningPoint::cpu(
             ArchId::Knl, CompilerId::Intel, Precision::F64, 2048,
             [16u64, 32, 64, 128][i % 4], 1 + (i % 4) as u64)))
         .collect();
