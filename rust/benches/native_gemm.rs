@@ -1,20 +1,214 @@
-//! Bench N1 — the native counterpart of Fig. 3/6: times the *real*
-//! single-source Pallas kernel (AOT HLO via PJRT) on the host CPU,
-//! tile sweep + scaling + XLA-dot baseline, under the paper's §2
-//! max-of-10 protocol.
+//! Bench N1 — the native compute bench, two parts:
 //!
-//! Requires `make artifacts` to have run.
+//! 1. **Host kernel** (always runs): naive reference vs the tuned
+//!    packed GEMM kernel across 3+ sizes, plus the measured autotune
+//!    sweep (the paper's Fig. 3 tile sweep on THIS machine), under the
+//!    paper's best-of-k protocol. Emits `BENCH_gemm.json` — the CI
+//!    perf-trajectory artifact for compute — and enforces the
+//!    acceptance gates: tuned >= 2x naive f64 GFLOP/s at N=512, and
+//!    the autotune selection within 10% of its own sweep's best.
+//! 2. **PJRT artifacts** (when `make artifacts` has run): times the
+//!    real single-source Pallas kernel via PJRT, as before.
+//!
+//! Run with: `cargo bench --bench native_gemm`
 
 use std::path::Path;
+use std::process::ExitCode;
+use std::time::Instant;
 
+use alpaka_rs::arch::{compiler, ArchId};
+use alpaka_rs::gemm::kernel::{self, KernelParams};
+use alpaka_rs::gemm::{metrics as gemm_metrics, verify, Precision};
 use alpaka_rs::runtime::{executor, Manifest, Runtime};
+use alpaka_rs::tuner::{measured, TuningSpace};
+use alpaka_rs::util::prng;
 use alpaka_rs::util::table::Table;
+use alpaka_rs::util::threadpool::ThreadPool;
 
-fn main() {
+const REPS: usize = 5;
+const SWEEP_REPS: usize = 3;
+const GATE_N: u64 = 512;
+const GATE_SPEEDUP: f64 = 2.0;
+const GATE_SELF_CONSISTENCY: f64 = 0.9;
+
+struct SizeRow {
+    n: usize,
+    dtype: &'static str,
+    naive_gflops: f64,
+    tuned_gflops: f64,
+}
+
+fn best_of<F: FnMut()>(reps: usize, mut run: F) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..reps.max(1) {
+        let t0 = Instant::now();
+        run();
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best.max(1e-9)
+}
+
+/// Time naive vs tuned for one (size, dtype); the callers supply the
+/// type-specific input builder and the two kernel entry points, so the
+/// measurement protocol lives in exactly one place.
+fn bench_size<T>(n: usize, dtype: &'static str,
+                 gen: impl Fn(u64) -> Vec<T>,
+                 naive: impl Fn(&[T], &[T], &[T]) -> Vec<T>,
+                 tuned: impl Fn(&[T], &[T], &[T]) -> Vec<T>) -> SizeRow {
+    let a = gen(0xBE_01);
+    let b = gen(0xBE_02);
+    let c = gen(0xBE_03);
+    let naive_s = best_of(REPS, || {
+        std::hint::black_box(&naive(&a, &b, &c));
+    });
+    let tuned_s = best_of(REPS, || {
+        std::hint::black_box(&tuned(&a, &b, &c));
+    });
+    SizeRow {
+        n,
+        dtype,
+        naive_gflops: gemm_metrics::gflops(n as u64, naive_s),
+        tuned_gflops: gemm_metrics::gflops(n as u64, tuned_s),
+    }
+}
+
+/// Part 1: the host-kernel bench + measured autotune + BENCH_gemm.json.
+/// Returns false when an acceptance gate failed.
+fn host_kernel_bench() -> bool {
+    println!("=== host GEMM kernel bench (naive vs tuned) ===\n");
+    let mut rows: Vec<SizeRow> = Vec::new();
+    for n in [128usize, 256, 512] {
+        let p = KernelParams::for_n(n);
+        rows.push(bench_size(
+            n, "f64",
+            |s| prng::matrix_f64(s, n, n),
+            |a, b, c| verify::gemm_f64_rows(n, 0, n, a, b, c, 1.5, 0.5),
+            |a, b, c| kernel::gemm_f64_tuned(n, a, b, c, 1.5, 0.5, &p),
+        ));
+    }
+    let p32 = KernelParams::for_n(512);
+    rows.push(bench_size(
+        512, "f32",
+        |s| prng::matrix_f32(s, 512, 512),
+        |a, b, c| verify::gemm_f32_rows(512, 0, 512, a, b, c, 1.5, 0.5),
+        |a, b, c| kernel::gemm_f32_tuned(512, a, b, c, 1.5, 0.5, &p32),
+    ));
+
+    let mut t = Table::new(vec!["N", "dtype", "naive GF/s",
+                                "tuned GF/s", "speedup"]).numeric();
+    for r in &rows {
+        t.row(vec![
+            r.n.to_string(),
+            r.dtype.to_string(),
+            format!("{:.2}", r.naive_gflops),
+            format!("{:.2}", r.tuned_gflops),
+            format!("{:.2}x", r.tuned_gflops / r.naive_gflops),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // Measured autotune sweep at the gate size (sequential pool: the
+    // timings must not contend with each other).
+    println!("measured autotune sweep, N={GATE_N} f64, \
+              best-of-{SWEEP_REPS} per point:");
+    let space = TuningSpace::paper(
+        ArchId::Host, compiler::vendor_compiler(ArchId::Host),
+        Precision::F64, GATE_N);
+    let pool = ThreadPool::new(1);
+    let sweep = measured::measured_sweep(&space, SWEEP_REPS, &pool);
+    let mut st = Table::new(vec!["T", "params", "GF/s"]).numeric();
+    for r in &sweep.records {
+        st.row(vec![
+            r.point.t.to_string(),
+            measured::params_for_point(&r.point).label(),
+            format!("{:.2}", r.gflops),
+        ]);
+    }
+    println!("{}", st.render());
+    let best = sweep.best().expect("non-empty sweep");
+    let best_params = measured::params_for_point(&best.point);
+    let self_consistency =
+        measured::self_consistency(&sweep).expect("non-empty sweep");
+    println!("autotune best: T={} ({}) -> {:.2} GF/s, \
+              self-consistency {:.3}",
+             best.point.t, best_params.label(), best.gflops,
+             self_consistency);
+
+    // ---- BENCH_gemm.json (CI perf-trajectory artifact) --------------
+    let gate_row = rows.iter()
+        .find(|r| r.n as u64 == GATE_N && r.dtype == "f64")
+        .expect("gate size benchmarked");
+    // The gate guards the DEFAULT KernelParams::for_n configuration —
+    // the one the serve layer's native shards actually run — so a
+    // regression there cannot hide behind a still-fast sweep point.
+    let speedup = gate_row.tuned_gflops / gate_row.naive_gflops;
+    let mut sizes_json = String::new();
+    for (i, r) in rows.iter().enumerate() {
+        sizes_json.push_str(&format!(
+            "{}    {{\"n\": {}, \"dtype\": \"{}\", \
+             \"naive_gflops\": {:.4}, \"tuned_gflops\": {:.4}, \
+             \"speedup\": {:.4}}}",
+            if i == 0 { "" } else { ",\n" }, r.n, r.dtype,
+            r.naive_gflops, r.tuned_gflops,
+            r.tuned_gflops / r.naive_gflops));
+    }
+    let mut sweep_json = String::new();
+    for (i, r) in sweep.records.iter().enumerate() {
+        sweep_json.push_str(&format!(
+            "{}      {{\"t\": {}, \"gflops\": {:.4}}}",
+            if i == 0 { "" } else { ",\n" }, r.point.t, r.gflops));
+    }
+    let json = format!(
+        "{{\n  \"schema\": 1,\n  \"reps\": {REPS},\n  \"sizes\": [\n\
+         {sizes_json}\n  ],\n  \"autotune\": {{\n    \"n\": {GATE_N},\n    \
+         \"dtype\": \"f64\",\n    \"reps\": {SWEEP_REPS},\n    \
+         \"sweep\": [\n{sweep_json}\n    ],\n    \"best\": {{\"t\": {}, \
+         \"params\": \"{}\", \"gflops\": {:.4}}},\n    \
+         \"self_consistency\": {:.4}\n  }},\n  \"gate\": {{\n    \
+         \"tuned_over_naive_n{GATE_N}_f64\": {:.4},\n    \
+         \"required_speedup\": {GATE_SPEEDUP},\n    \
+         \"required_self_consistency\": {GATE_SELF_CONSISTENCY}\n  \
+         }}\n}}\n",
+        best.point.t, best_params.label(), best.gflops,
+        self_consistency, speedup);
+    match std::fs::write("BENCH_gemm.json", &json) {
+        Ok(()) => println!("wrote BENCH_gemm.json"),
+        Err(e) => {
+            eprintln!("FAIL: cannot write BENCH_gemm.json: {e}");
+            return false;
+        }
+    }
+
+    // ---- acceptance gates ------------------------------------------
+    let mut ok = true;
+    if speedup < GATE_SPEEDUP {
+        eprintln!("FAIL: tuned kernel (default params) {:.2} GF/s is \
+                   only {speedup:.2}x naive {:.2} GF/s at N={GATE_N} \
+                   f64 (need >= {GATE_SPEEDUP}x)",
+                  gate_row.tuned_gflops, gate_row.naive_gflops);
+        ok = false;
+    }
+    if self_consistency < GATE_SELF_CONSISTENCY {
+        eprintln!("FAIL: autotune selected {:.2} GF/s but its own sweep \
+                   peaked higher (self-consistency {self_consistency:.3} \
+                   < {GATE_SELF_CONSISTENCY})", best.gflops);
+        ok = false;
+    }
+    if ok {
+        println!("host kernel gates: PASS ({speedup:.2}x naive, \
+                  self-consistency {self_consistency:.3})\n");
+    }
+    ok
+}
+
+/// Part 2: the original PJRT artifact bench (tile sweep + scaling +
+/// XLA-dot baseline under the paper's §2 max-of-10 protocol). Skipped
+/// with a note when `make artifacts` has not run.
+fn pjrt_bench() {
     let manifest = match Manifest::load(Path::new("artifacts")) {
         Ok(m) => m,
         Err(e) => {
-            eprintln!("skipping native bench: {e:#}");
+            eprintln!("skipping PJRT artifact bench: {e:#}");
             return;
         }
     };
@@ -56,4 +250,15 @@ fn main() {
     println!("note: interpret-mode Pallas trades speed for portability \
               on the CPU PJRT plugin; the XLA-dot baseline rows show \
               the hardware's actual capability (EXPERIMENTS.md §N1).");
+}
+
+fn main() -> ExitCode {
+    let ok = host_kernel_bench();
+    pjrt_bench();
+    if ok {
+        println!("native_gemm: PASS");
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
 }

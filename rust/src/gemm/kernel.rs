@@ -1,0 +1,634 @@
+//! The tuned host GEMM kernel — cache-blocked, panel-packed, with a
+//! register-blocked microkernel. This is the repo's "fast as the
+//! hardware allows" compute path (ROADMAP), the native twin of the
+//! paper's parameterized single-source kernel: every knob lives in
+//! [`KernelParams`], *outside* the kernel body, exactly like the
+//! paper's `T` / elements-per-thread parameters live outside the Alpaka
+//! kernel. The structure follows the classic packed/blocked GEMM
+//! playbook (Lawson et al., arXiv:1904.05347; Kuzma et al.,
+//! arXiv:2305.18236):
+//!
+//! * loop `nc`-wide column panels of B/C (streaming reuse in L3),
+//! * loop `kc`-deep k-blocks, packing B into `nr`-wide tile-contiguous
+//!   panels (one linear stream for the microkernel),
+//! * loop `mc`-tall row blocks of A, packing A into `mr`-tall panels,
+//! * a fixed-size `mr`×`nr` microkernel over the packed panels whose
+//!   unrolled, iterator-free inner loop rustc/LLVM auto-vectorizes.
+//!
+//! # Numerical contract (load-bearing!)
+//!
+//! For every output element the kernel performs exactly the same IEEE
+//! operation sequence as the plain reference in
+//! [`super::verify::gemm_f64_rows`]: products `a[i][k] * b[k][j]` are
+//! accumulated in ascending `k` order into a single running sum
+//! (register tiles are loaded from and stored back to the output
+//! buffer between k-blocks, which does not change the association),
+//! followed by the identical `alpha * acc + beta * c` epilogue. Rust
+//! never reassociates float math and never contracts `mul`+`add` into
+//! an FMA, and auto-vectorization is per-lane-exact — so the tuned
+//! kernel is **bit-identical** to the reference for any
+//! [`KernelParams`], for f32 and f64 alike. Tests assert this; the
+//! serve layer's digest oracles only need their existing `rtol`
+//! headroom.
+//!
+//! Edge tiles are handled everywhere: `N` does not have to be divisible
+//! by any of the blocking parameters (packed panels are zero-padded to
+//! the register-tile width; padded lanes are never stored).
+
+use super::tiling::TilingPlan;
+use super::workload::Precision;
+
+/// Hard cap on the register-tile height ([`KernelParams::mr`]).
+pub const MAX_MR: usize = 8;
+/// Hard cap on the register-tile width ([`KernelParams::nr`]).
+pub const MAX_NR: usize = 16;
+
+/// The tuned kernel's parameter space — the paper's tuning knobs,
+/// host-CPU edition:
+///
+/// * `mc`/`nc`/`kc` — cache-block sizes (rows of A, columns of B, depth
+///   of the k-loop). The paper's tile size `T` corresponds to the cache
+///   working set `mc·kc + kc·nc + mc·nc` (Eq. 5's `K(S,T)` with all
+///   three blocks equal to `T`); see [`KernelParams::from_plan`].
+/// * `mr`/`nr` — the register-blocked microkernel tile, the paper's
+///   "work per thread / elements per thread" axis: each microkernel
+///   invocation owns an `mr`×`nr` accumulator tile in registers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KernelParams {
+    /// Row-block height of A (and of the fan-out unit in the serve
+    /// layer's threadpool shard).
+    pub mc: usize,
+    /// Column-panel width of B/C.
+    pub nc: usize,
+    /// Depth of one packed k-block.
+    pub kc: usize,
+    /// Microkernel rows (1..=[`MAX_MR`]).
+    pub mr: usize,
+    /// Microkernel columns (1..=[`MAX_NR`]).
+    pub nr: usize,
+}
+
+impl KernelParams {
+    /// Validating constructor. Cache blocks must be positive; the
+    /// register tile must fit the fixed-size microkernel bounds.
+    pub fn new(mc: usize, nc: usize, kc: usize, mr: usize, nr: usize)
+               -> Result<Self, String> {
+        if mc == 0 || nc == 0 || kc == 0 {
+            return Err(format!(
+                "cache blocks must be positive (mc={mc} nc={nc} kc={kc})"));
+        }
+        if mr == 0 || mr > MAX_MR {
+            return Err(format!("mr={mr} outside 1..={MAX_MR}"));
+        }
+        if nr == 0 || nr > MAX_NR {
+            return Err(format!("nr={nr} outside 1..={MAX_NR}"));
+        }
+        Ok(Self { mc, nc, kc, mr, nr })
+    }
+
+    /// Default heuristic for matrix size `n`: a 4×4 register tile with
+    /// k-blocks sized to keep the packed A/B panels L1/L2-resident.
+    pub fn for_n(n: usize) -> Self {
+        let n = n.max(1);
+        Self {
+            mc: n.min(64),
+            nc: n.min(256),
+            kc: n.min(256),
+            mr: 4,
+            nr: 4,
+        }
+    }
+
+    /// Derive kernel blocking from a paper tuning point: the plan's tile
+    /// size `T` becomes all three cache blocks (`mc = nc = kc = T`), so
+    /// the working set is the paper's three-tile `3T²S` (Eq. 5 plus the
+    /// accumulator tile) and the measured sweep over `T` reproduces the
+    /// Fig. 3 response curve on real hardware.
+    pub fn from_plan(plan: &TilingPlan) -> Self {
+        let n = (plan.n as usize).max(1);
+        let t = (plan.t as usize).clamp(1, n);
+        Self { mc: t, nc: t, kc: t, mr: 4, nr: 4 }
+    }
+
+    /// The tuning-point view of this blocking: an edge-tile-aware
+    /// [`TilingPlan`] whose `T` is the k-block depth (the axis
+    /// [`KernelParams::from_plan`] maps from).
+    pub fn to_plan(&self, n: u64, precision: Precision) -> TilingPlan {
+        TilingPlan::new(n, (self.kc as u64).clamp(1, n.max(1)), precision)
+    }
+
+    /// Clamp everything into legal range for matrix size `n` (defensive:
+    /// the struct's fields are public, so the kernel never trusts them
+    /// raw).
+    pub fn sanitized(&self, n: usize) -> Self {
+        let dim = n.max(1);
+        Self {
+            mc: self.mc.clamp(1, dim),
+            nc: self.nc.clamp(1, dim),
+            kc: self.kc.clamp(1, dim),
+            mr: self.mr.clamp(1, MAX_MR),
+            nr: self.nr.clamp(1, MAX_NR),
+        }
+    }
+
+    /// Compact human label, used in serve-layer `kernel` tags and bench
+    /// reports: `mc=..,nc=..,kc=..,mr=..,nr=..`.
+    pub fn label(&self) -> String {
+        format!("mc={},nc={},kc={},mr={},nr={}", self.mc, self.nc,
+                self.kc, self.mr, self.nr)
+    }
+}
+
+impl std::fmt::Display for KernelParams {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.label())
+    }
+}
+
+/// Scalar element of the tuned kernel (f32 / f64). Deliberately tiny:
+/// only what the packed kernel needs, so the generic core stays a
+/// transparent mul-then-add loop the compiler can vectorize.
+pub trait Element:
+    Copy
+    + Send
+    + Sync
+    + 'static
+    + core::ops::Add<Output = Self>
+    + core::ops::Mul<Output = Self>
+{
+    const ZERO: Self;
+
+    /// Run one microtile — the per-type entry point so x86-64 builds
+    /// can route through an AVX2-compiled copy of the microkernel when
+    /// the CPU has it (detected once at runtime). The instruction
+    /// *sequence* per element is identical on every path (mul then
+    /// add, ascending k; wider lanes only), so results stay
+    /// bit-identical across ISAs and feature levels.
+    #[allow(clippy::too_many_arguments)]
+    fn micro(kb: usize, mr: usize, nr: usize, mr_eff: usize,
+             nr_eff: usize, apanel: &[Self], bpanel: &[Self],
+             out: &mut [Self], off: usize, stride: usize);
+}
+
+impl Element for f32 {
+    const ZERO: Self = 0.0;
+
+    fn micro(kb: usize, mr: usize, nr: usize, mr_eff: usize,
+             nr_eff: usize, apanel: &[Self], bpanel: &[Self],
+             out: &mut [Self], off: usize, stride: usize) {
+        #[cfg(target_arch = "x86_64")]
+        if std::arch::is_x86_feature_detected!("avx2") {
+            // SAFETY: avx2 is present (checked on the line above).
+            return unsafe {
+                x86::micro_f32_avx2(kb, mr, nr, mr_eff, nr_eff, apanel,
+                                    bpanel, out, off, stride)
+            };
+        }
+        micro_generic::<f32>(kb, mr, nr, mr_eff, nr_eff, apanel, bpanel,
+                             out, off, stride);
+    }
+}
+
+impl Element for f64 {
+    const ZERO: Self = 0.0;
+
+    fn micro(kb: usize, mr: usize, nr: usize, mr_eff: usize,
+             nr_eff: usize, apanel: &[Self], bpanel: &[Self],
+             out: &mut [Self], off: usize, stride: usize) {
+        #[cfg(target_arch = "x86_64")]
+        if std::arch::is_x86_feature_detected!("avx2") {
+            // SAFETY: avx2 is present (checked on the line above).
+            return unsafe {
+                x86::micro_f64_avx2(kb, mr, nr, mr_eff, nr_eff, apanel,
+                                    bpanel, out, off, stride)
+            };
+        }
+        micro_generic::<f64>(kb, mr, nr, mr_eff, nr_eff, apanel, bpanel,
+                             out, off, stride);
+    }
+}
+
+/// AVX2-compiled copies of the generic microkernel dispatcher. The
+/// bodies are the SAME generic code (inlined here thanks to
+/// `#[inline(always)]` on the microkernels), just codegen'd with
+/// 256-bit vectors — rustc's baseline x86-64 target only has SSE2,
+/// which halves the FP throughput the register tile can reach. FMA is
+/// deliberately NOT enabled: contraction would change the rounding and
+/// break the bit-exactness contract.
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::micro_generic;
+
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn micro_f64_avx2(kb: usize, mr: usize, nr: usize,
+                                 mr_eff: usize, nr_eff: usize,
+                                 apanel: &[f64], bpanel: &[f64],
+                                 out: &mut [f64], off: usize,
+                                 stride: usize) {
+        micro_generic::<f64>(kb, mr, nr, mr_eff, nr_eff, apanel, bpanel,
+                             out, off, stride);
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn micro_f32_avx2(kb: usize, mr: usize, nr: usize,
+                                 mr_eff: usize, nr_eff: usize,
+                                 apanel: &[f32], bpanel: &[f32],
+                                 out: &mut [f32], off: usize,
+                                 stride: usize) {
+        micro_generic::<f32>(kb, mr, nr, mr_eff, nr_eff, apanel, bpanel,
+                             out, off, stride);
+    }
+}
+
+/// Pack the `mb`×`kb` block of A at (`row_base`, `k0`) into `mr`-tall
+/// k-major panels: panel `p` holds rows `[p·mr, (p+1)·mr)` of the
+/// block, laid out as `kb` groups of `mr` consecutive values (one group
+/// per k step). Short panels are zero-padded to `mr`.
+fn pack_a<T: Element>(a: &[T], n: usize, row_base: usize, mb: usize,
+                      k0: usize, kb: usize, mr: usize, buf: &mut Vec<T>) {
+    let panels = mb.div_ceil(mr);
+    buf.clear();
+    buf.resize(panels * kb * mr, T::ZERO);
+    for (pi, ir) in (0..mb).step_by(mr).enumerate() {
+        let dst = &mut buf[pi * kb * mr..(pi + 1) * kb * mr];
+        let rows = (mb - ir).min(mr);
+        for r in 0..rows {
+            let src = &a[(row_base + ir + r) * n + k0
+                         ..(row_base + ir + r) * n + k0 + kb];
+            for k in 0..kb {
+                dst[k * mr + r] = src[k];
+            }
+        }
+    }
+}
+
+/// Pack the `kb`×`nb` block of B at (`k0`, `j0`) into `nr`-wide k-major
+/// panels: panel `p` holds columns `[p·nr, (p+1)·nr)`, laid out as `kb`
+/// groups of `nr` consecutive values. Short panels are zero-padded.
+fn pack_b<T: Element>(b: &[T], n: usize, k0: usize, kb: usize, j0: usize,
+                      nb: usize, nr: usize, buf: &mut Vec<T>) {
+    let panels = nb.div_ceil(nr);
+    buf.clear();
+    buf.resize(panels * kb * nr, T::ZERO);
+    for (pi, jr) in (0..nb).step_by(nr).enumerate() {
+        let dst = &mut buf[pi * kb * nr..(pi + 1) * kb * nr];
+        let cols = (nb - jr).min(nr);
+        for k in 0..kb {
+            let src = &b[(k0 + k) * n + j0 + jr
+                         ..(k0 + k) * n + j0 + jr + cols];
+            for c2 in 0..cols {
+                dst[k * nr + c2] = src[c2];
+            }
+        }
+    }
+}
+
+/// Full MR×NR microkernel over packed panels: loads the accumulator
+/// tile from `out`, runs `kb` rank-1 updates with the inner two loops
+/// fully unrolled (MR/NR are const generics), stores the tile back.
+/// The fixed-size `&[T; _]` rows keep the inner loop iterator-free and
+/// bounds-check-free so LLVM auto-vectorizes the NR dimension.
+#[inline(always)]
+fn micro_full<T: Element, const MR: usize, const NR: usize>(
+    kb: usize, apanel: &[T], bpanel: &[T], out: &mut [T], off: usize,
+    stride: usize) {
+    let mut acc = [[T::ZERO; NR]; MR];
+    for r in 0..MR {
+        for c2 in 0..NR {
+            acc[r][c2] = out[off + r * stride + c2];
+        }
+    }
+    for k in 0..kb {
+        let arow: &[T; MR] =
+            (&apanel[k * MR..(k + 1) * MR]).try_into().unwrap();
+        let brow: &[T; NR] =
+            (&bpanel[k * NR..(k + 1) * NR]).try_into().unwrap();
+        for r in 0..MR {
+            let av = arow[r];
+            for c2 in 0..NR {
+                acc[r][c2] = acc[r][c2] + av * brow[c2];
+            }
+        }
+    }
+    for r in 0..MR {
+        for c2 in 0..NR {
+            out[off + r * stride + c2] = acc[r][c2];
+        }
+    }
+}
+
+/// Edge-tile microkernel: runtime-sized `mr_eff`×`nr_eff` tile (both
+/// below the fixed caps), same ascending-k accumulation order as
+/// [`micro_full`]. Also the correctness fallback for (mr, nr) pairs
+/// with no monomorphized fast path.
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn micro_edge<T: Element>(kb: usize, mr: usize, nr: usize, mr_eff: usize,
+                          nr_eff: usize, apanel: &[T], bpanel: &[T],
+                          out: &mut [T], off: usize, stride: usize) {
+    debug_assert!(mr_eff <= MAX_MR && nr_eff <= MAX_NR);
+    let mut acc = [[T::ZERO; MAX_NR]; MAX_MR];
+    for r in 0..mr_eff {
+        for c2 in 0..nr_eff {
+            acc[r][c2] = out[off + r * stride + c2];
+        }
+    }
+    for k in 0..kb {
+        let arow = &apanel[k * mr..k * mr + mr_eff];
+        let brow = &bpanel[k * nr..k * nr + nr_eff];
+        for r in 0..mr_eff {
+            let av = arow[r];
+            for c2 in 0..nr_eff {
+                acc[r][c2] = acc[r][c2] + av * brow[c2];
+            }
+        }
+    }
+    for r in 0..mr_eff {
+        for c2 in 0..nr_eff {
+            out[off + r * stride + c2] = acc[r][c2];
+        }
+    }
+}
+
+/// Dispatch one microtile to a monomorphized full-tile kernel when the
+/// tile is full and the (mr, nr) pair has a fast path, else to the
+/// runtime-sized edge kernel. `#[inline(always)]` so the AVX2 wrappers
+/// in [`x86`] codegen the whole dispatch (and every microkernel
+/// instantiation) with 256-bit vectors.
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn micro_generic<T: Element>(kb: usize, mr: usize, nr: usize,
+                             mr_eff: usize, nr_eff: usize, apanel: &[T],
+                             bpanel: &[T], out: &mut [T], off: usize,
+                             stride: usize) {
+    macro_rules! full_tile_paths {
+        ($(($m:literal, $n:literal)),+ $(,)?) => {
+            if mr_eff == mr && nr_eff == nr {
+                match (mr, nr) {
+                    $(($m, $n) => {
+                        return micro_full::<T, $m, $n>(
+                            kb, apanel, bpanel, out, off, stride);
+                    })+
+                    _ => {}
+                }
+            }
+        };
+    }
+    full_tile_paths!(
+        (1, 1), (1, 2), (1, 4), (1, 8), (1, 16),
+        (2, 1), (2, 2), (2, 4), (2, 8), (2, 16),
+        (4, 1), (4, 2), (4, 4), (4, 8), (4, 16),
+        (8, 1), (8, 2), (8, 4), (8, 8), (8, 16),
+    );
+    micro_edge(kb, mr, nr, mr_eff, nr_eff, apanel, bpanel, out, off,
+               stride);
+}
+
+/// Generic packed/blocked GEMM core over rows `[row0, row1)`:
+/// `alpha * a @ b + beta * c`, row-major square `n`×`n` inputs, same
+/// signature contract as [`super::verify::gemm_f64_rows`].
+fn gemm_tuned_rows_impl<T: Element>(n: usize, row0: usize, row1: usize,
+                                    a: &[T], b: &[T], c: &[T], alpha: T,
+                                    beta: T, params: &KernelParams)
+                                    -> Vec<T> {
+    assert_eq!(a.len(), n * n);
+    assert_eq!(b.len(), n * n);
+    assert_eq!(c.len(), n * n);
+    assert!(row0 <= row1 && row1 <= n, "row range [{row0},{row1}) of {n}");
+    let rows = row1 - row0;
+    let mut out = vec![T::ZERO; rows * n];
+    let p = params.sanitized(n);
+    let mut apack: Vec<T> = Vec::new();
+    let mut bpack: Vec<T> = Vec::new();
+    for j0 in (0..n).step_by(p.nc) {
+        let nb = (n - j0).min(p.nc);
+        // k-blocks ascend inside the column panel, so every output
+        // element accumulates its products in ascending k order — the
+        // bit-exactness contract in the module docs.
+        for k0 in (0..n).step_by(p.kc) {
+            let kb = (n - k0).min(p.kc);
+            pack_b(b, n, k0, kb, j0, nb, p.nr, &mut bpack);
+            for i0 in (0..rows).step_by(p.mc) {
+                let mb = (rows - i0).min(p.mc);
+                pack_a(a, n, row0 + i0, mb, k0, kb, p.mr, &mut apack);
+                for (pj, jr) in (0..nb).step_by(p.nr).enumerate() {
+                    let nr_eff = (nb - jr).min(p.nr);
+                    let bpanel = &bpack[pj * kb * p.nr
+                                        ..(pj + 1) * kb * p.nr];
+                    for (pi, ir) in (0..mb).step_by(p.mr).enumerate() {
+                        let mr_eff = (mb - ir).min(p.mr);
+                        let apanel = &apack[pi * kb * p.mr
+                                            ..(pi + 1) * kb * p.mr];
+                        let off = (i0 + ir) * n + j0 + jr;
+                        T::micro(kb, p.mr, p.nr, mr_eff, nr_eff, apanel,
+                                 bpanel, &mut out, off, n);
+                    }
+                }
+            }
+        }
+    }
+    // identical epilogue expression to the reference
+    for i in 0..rows * n {
+        out[i] = alpha * out[i] + beta * c[row0 * n + i];
+    }
+    out
+}
+
+/// Rows `[row0, row1)` of the tuned f64 GEMM — the panel-block primitive
+/// the serve layer's threadpool shard fans out in `mc`-aligned chunks.
+pub fn gemm_f64_tuned_rows(n: usize, row0: usize, row1: usize, a: &[f64],
+                           b: &[f64], c: &[f64], alpha: f64, beta: f64,
+                           params: &KernelParams) -> Vec<f64> {
+    gemm_tuned_rows_impl(n, row0, row1, a, b, c, alpha, beta, params)
+}
+
+/// Full-matrix tuned f64 GEMM: `alpha * a @ b + beta * c`.
+pub fn gemm_f64_tuned(n: usize, a: &[f64], b: &[f64], c: &[f64],
+                      alpha: f64, beta: f64, params: &KernelParams)
+                      -> Vec<f64> {
+    gemm_f64_tuned_rows(n, 0, n, a, b, c, alpha, beta, params)
+}
+
+/// Rows `[row0, row1)` of the tuned f32 GEMM (f32 accumulation, like
+/// the reference).
+pub fn gemm_f32_tuned_rows(n: usize, row0: usize, row1: usize, a: &[f32],
+                           b: &[f32], c: &[f32], alpha: f32, beta: f32,
+                           params: &KernelParams) -> Vec<f32> {
+    gemm_tuned_rows_impl(n, row0, row1, a, b, c, alpha, beta, params)
+}
+
+/// Full-matrix tuned f32 GEMM.
+pub fn gemm_f32_tuned(n: usize, a: &[f32], b: &[f32], c: &[f32],
+                      alpha: f32, beta: f32, params: &KernelParams)
+                      -> Vec<f32> {
+    gemm_f32_tuned_rows(n, 0, n, a, b, c, alpha, beta, params)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::verify;
+    use crate::util::propcheck::{self, assert_prop};
+    use crate::util::prng;
+
+    fn inputs_f64(n: usize) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+        (prng::matrix_f64(101, n, n), prng::matrix_f64(202, n, n),
+         prng::matrix_f64(303, n, n))
+    }
+
+    #[test]
+    fn params_validation_and_sanitize() {
+        assert!(KernelParams::new(64, 64, 64, 4, 4).is_ok());
+        assert!(KernelParams::new(0, 64, 64, 4, 4).is_err());
+        assert!(KernelParams::new(64, 64, 64, 0, 4).is_err());
+        assert!(KernelParams::new(64, 64, 64, MAX_MR + 1, 4).is_err());
+        assert!(KernelParams::new(64, 64, 64, 4, MAX_NR + 1).is_err());
+        let wild = KernelParams { mc: 10_000, nc: 0, kc: 7, mr: 99,
+                                  nr: 0 };
+        let s = wild.sanitized(32);
+        assert_eq!((s.mc, s.nc, s.kc, s.mr, s.nr), (32, 1, 7, MAX_MR, 1));
+        assert!(KernelParams::for_n(0).sanitized(0).mc >= 1);
+    }
+
+    #[test]
+    fn plan_roundtrip_maps_t_to_cache_blocks() {
+        let plan = TilingPlan::new(512, 64, Precision::F64);
+        let p = KernelParams::from_plan(&plan);
+        assert_eq!((p.mc, p.nc, p.kc), (64, 64, 64));
+        let back = p.to_plan(512, Precision::F64);
+        assert_eq!(back.t, 64);
+        assert_eq!(back.n, 512);
+        // labels are stable (serve kernel tags depend on them)
+        assert_eq!(p.label(), "mc=64,nc=64,kc=64,mr=4,nr=4");
+    }
+
+    #[test]
+    fn identity_passthrough() {
+        let n = 13; // deliberately not a multiple of anything
+        let mut a = vec![0.0f64; n * n];
+        for i in 0..n {
+            a[i * n + i] = 1.0;
+        }
+        let b: Vec<f64> = (0..n * n).map(|i| i as f64).collect();
+        let c = vec![7.0; n * n];
+        let out = gemm_f64_tuned(n, &a, &b, &c, 1.0, 0.0,
+                                 &KernelParams::for_n(n));
+        assert_eq!(out, b);
+    }
+
+    #[test]
+    fn default_params_bit_exact_vs_reference() {
+        // The module-doc contract: same op sequence per element ⇒
+        // bitwise equality with the naive reference, f64 AND f32.
+        for n in [1usize, 5, 16, 33, 64, 96] {
+            let (a, b, c) = inputs_f64(n);
+            let p = KernelParams::for_n(n);
+            let want = verify::gemm_f64_rows(n, 0, n, &a, &b, &c, 1.25,
+                                             -0.5);
+            let got = gemm_f64_tuned(n, &a, &b, &c, 1.25, -0.5, &p);
+            assert_eq!(got, want, "f64 N={n}");
+            let a32: Vec<f32> = a.iter().map(|v| *v as f32).collect();
+            let b32: Vec<f32> = b.iter().map(|v| *v as f32).collect();
+            let c32: Vec<f32> = c.iter().map(|v| *v as f32).collect();
+            let want32 = verify::gemm_f32_rows(n, 0, n, &a32, &b32, &c32,
+                                               1.25, -0.5);
+            let got32 = gemm_f32_tuned(n, &a32, &b32, &c32, 1.25, -0.5,
+                                       &p);
+            assert_eq!(got32, want32, "f32 N={n}");
+        }
+    }
+
+    #[test]
+    fn row_partition_assembles_to_full() {
+        // The fan-out invariant the threadpool shard relies on: any
+        // mc-aligned (or not) row partition of the tuned kernel
+        // reassembles bitwise into the full product.
+        let n = 37;
+        let (a, b, c) = inputs_f64(n);
+        let p = KernelParams { mc: 8, nc: 16, kc: 10, mr: 4, nr: 4 };
+        let full = gemm_f64_tuned(n, &a, &b, &c, 1.5, 0.25, &p);
+        let mut tiled = Vec::new();
+        for (r0, r1) in [(0, 8), (8, 9), (9, 32), (32, 37)] {
+            tiled.extend(gemm_f64_tuned_rows(n, r0, r1, &a, &b, &c, 1.5,
+                                             0.25, &p));
+        }
+        assert_eq!(tiled, full);
+        assert!(gemm_f64_tuned_rows(n, 4, 4, &a, &b, &c, 1.0, 0.0, &p)
+                    .is_empty());
+    }
+
+    #[test]
+    fn random_params_match_reference_within_digest_rtol() {
+        // The ISSUE's acceptance property: random KernelParams and
+        // non-divisible N (including N smaller than one tile) must
+        // match the plain `_rows` reference within the digest rtol.
+        propcheck::check(40, |g| {
+            let n = g.usize_in(1, 72);
+            let p = KernelParams {
+                mc: g.usize_in(1, 24),
+                nc: g.usize_in(1, 24),
+                kc: g.usize_in(1, 24),
+                mr: *g.choose(&[1, 2, 3, 4, 5, 8]),
+                nr: *g.choose(&[1, 2, 3, 4, 7, 8, 16]),
+            };
+            let alpha = g.f64_in(-2.0, 2.0);
+            let beta = g.f64_in(-2.0, 2.0);
+            let (a, b, c) = (prng::matrix_f64(7, n, n),
+                             prng::matrix_f64(8, n, n),
+                             prng::matrix_f64(9, n, n));
+            let want = verify::gemm_f64_rows(n, 0, n, &a, &b, &c, alpha,
+                                             beta);
+            let got = gemm_f64_tuned(n, &a, &b, &c, alpha, beta, &p);
+            let dw = verify::Digest::of(&want, &[n, n], 2);
+            let dg = verify::Digest::of(&got, &[n, n], 2);
+            assert_prop(dg.matches(&dw, 1e-10).is_ok(),
+                        "tuned digest within f64 rtol");
+            for (x, y) in got.iter().zip(&want) {
+                assert_prop((x - y).abs()
+                                <= 1e-12 * x.abs().max(y.abs()).max(1.0),
+                            "elementwise agreement");
+            }
+        });
+    }
+
+    #[test]
+    fn random_params_match_reference_f32() {
+        propcheck::check(25, |g| {
+            let n = g.usize_in(1, 64);
+            let p = KernelParams {
+                mc: g.usize_in(1, 20),
+                nc: g.usize_in(1, 20),
+                kc: g.usize_in(1, 20),
+                mr: g.usize_in(1, MAX_MR),
+                nr: g.usize_in(1, MAX_NR),
+            };
+            let a = prng::matrix_f32(17, n, n);
+            let b = prng::matrix_f32(18, n, n);
+            let c = prng::matrix_f32(19, n, n);
+            let want = verify::gemm_f32_rows(n, 0, n, &a, &b, &c, 1.5,
+                                             0.5);
+            let got = gemm_f32_tuned(n, &a, &b, &c, 1.5, 0.5, &p);
+            let dw = verify::Digest::of(
+                &want.iter().map(|v| *v as f64).collect::<Vec<_>>(),
+                &[n, n], 2);
+            let dg = verify::Digest::of(
+                &got.iter().map(|v| *v as f64).collect::<Vec<_>>(),
+                &[n, n], 2);
+            assert_prop(dg.matches(&dw, 1e-4).is_ok(),
+                        "tuned digest within f32 rtol");
+        });
+    }
+
+    #[test]
+    fn tiny_n_smaller_than_one_tile() {
+        // N far below every blocking parameter: pure edge-tile path.
+        let n = 3;
+        let (a, b, c) = inputs_f64(n);
+        let p = KernelParams { mc: 64, nc: 256, kc: 256, mr: 8, nr: 16 };
+        let want = verify::gemm_f64_rows(n, 0, n, &a, &b, &c, 2.0, -1.0);
+        let got = gemm_f64_tuned(n, &a, &b, &c, 2.0, -1.0, &p);
+        assert_eq!(got, want);
+    }
+}

@@ -1,11 +1,13 @@
 //! The GEMM workload algebra — paper §2 equations and the tuning-point
 //! vocabulary shared by the simulator, tuner and runtime.
 
+pub mod kernel;
 pub mod metrics;
 pub mod tiling;
 pub mod verify;
 pub mod workload;
 
+pub use kernel::KernelParams;
 pub use metrics::{cache_req_bytes, compute_mem_ratio, flops, gflops,
                   mem_ops};
 pub use tiling::TilingPlan;

@@ -15,14 +15,40 @@ pub struct TilingPlan {
 }
 
 impl TilingPlan {
+    /// Edge-tile-aware constructor: `T` does not have to divide `N`.
+    /// The last tile row/column is a `remainder()`-sized edge tile —
+    /// the tuned host kernel ([`super::kernel`]) handles those
+    /// natively. Paths that replay the exact paper hierarchy (the sim's
+    /// access-stream traces) use [`TilingPlan::new_exact`], which keeps
+    /// the original divisibility panic.
     pub fn new(n: u64, t: u64, precision: Precision) -> Self {
+        assert!(t > 0 && t <= n, "T={t} must be in 1..=N={n}");
+        Self { n, t, precision }
+    }
+
+    /// The original strict constructor: `T` must divide `N` (the
+    /// paper's constraint, and the one the cache-simulator replay
+    /// assumes).
+    pub fn new_exact(n: u64, t: u64, precision: Precision) -> Self {
         assert!(t > 0 && n % t == 0, "T={t} must divide N={n}");
         Self { n, t, precision }
     }
 
-    /// Tiles per matrix dimension (`N_blocks` in the paper).
-    pub fn tiles_per_dim(&self) -> u64 {
+    /// Number of full `T`-sized tiles per matrix dimension.
+    pub fn full_tiles(&self) -> u64 {
         self.n / self.t
+    }
+
+    /// Size of the edge tile per dimension (0 when `T` divides `N`).
+    pub fn remainder(&self) -> u64 {
+        self.n % self.t
+    }
+
+    /// Tiles per matrix dimension (`N_blocks` in the paper), counting a
+    /// partial edge tile as one tile. Equal to `full_tiles()` for exact
+    /// plans.
+    pub fn tiles_per_dim(&self) -> u64 {
+        self.n.div_ceil(self.t)
     }
 
     /// Total C tiles == Alpaka blocks in the grid (2-D indexing).
@@ -75,8 +101,27 @@ mod tests {
 
     #[test]
     #[should_panic(expected = "must divide")]
-    fn divisibility_enforced() {
-        TilingPlan::new(100, 16, Precision::F32);
+    fn divisibility_enforced_by_new_exact() {
+        TilingPlan::new_exact(100, 16, Precision::F32);
+    }
+
+    #[test]
+    fn edge_aware_plan_counts_partial_tiles() {
+        let p = TilingPlan::new(100, 16, Precision::F32);
+        assert_eq!(p.full_tiles(), 6);
+        assert_eq!(p.remainder(), 4);
+        assert_eq!(p.tiles_per_dim(), 7);
+        // exact plans: edge accessors agree with the strict view
+        let e = TilingPlan::new_exact(128, 16, Precision::F32);
+        assert_eq!(e.full_tiles(), 8);
+        assert_eq!(e.remainder(), 0);
+        assert_eq!(e.tiles_per_dim(), 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "1..=N")]
+    fn tile_larger_than_n_rejected() {
+        TilingPlan::new(8, 16, Precision::F64);
     }
 
     #[test]

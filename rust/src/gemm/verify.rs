@@ -1,10 +1,18 @@
 //! Host-side GEMM reference + digest verification.
 //!
-//! `gemm_f64`/`gemm_f32` are straightforward reference implementations
-//! used to cross-check PJRT outputs in integration tests (third oracle,
-//! independent of both jnp and the Pallas kernel). `Digest` mirrors the
-//! statistics `python/compile/aot.py` records in the manifest.
+//! `gemm_f64_rows`/`gemm_f32_rows` are the straightforward plain-loop
+//! reference implementations — the independent oracle used to
+//! cross-check PJRT outputs AND the tuned kernel (third implementation,
+//! independent of jnp, the Pallas kernel and [`super::kernel`]). The
+//! full-matrix entry points `gemm_f64`/`gemm_f32` delegate to the tuned
+//! packed kernel with default [`KernelParams`] (it accumulates each
+//! element in the same ascending-k order, so results are bit-identical
+//! — asserted in `kernel::tests`); callers that explicitly want the
+//! naive loop use the `_rows` functions with the full row range.
+//! `Digest` mirrors the statistics `python/compile/aot.py` records in
+//! the manifest.
 
+use super::kernel::{self, KernelParams};
 use crate::util::stats::relative_close;
 
 /// Rows `[row0, row1)` of `alpha * a @ b + beta * c` over row-major f64
@@ -37,10 +45,13 @@ pub fn gemm_f64_rows(n: usize, row0: usize, row1: usize, a: &[f64],
     out
 }
 
-/// alpha * a @ b + beta * c over row-major f64 buffers.
+/// alpha * a @ b + beta * c over row-major f64 buffers. Served by the
+/// tuned packed kernel (bit-identical to [`gemm_f64_rows`], far
+/// faster); the `_rows` form with the full range is the naive loop.
 pub fn gemm_f64(n: usize, a: &[f64], b: &[f64], c: &[f64], alpha: f64,
                 beta: f64) -> Vec<f64> {
-    gemm_f64_rows(n, 0, n, a, b, c, alpha, beta)
+    kernel::gemm_f64_tuned(n, a, b, c, alpha, beta,
+                           &KernelParams::for_n(n))
 }
 
 /// f32 variant of [`gemm_f64_rows`] with f32 accumulation (matches the
@@ -70,10 +81,12 @@ pub fn gemm_f32_rows(n: usize, row0: usize, row1: usize, a: &[f32],
     out
 }
 
-/// f32 variant with f32 accumulation (matches the kernel's behaviour).
+/// f32 variant with f32 accumulation. Served by the tuned packed
+/// kernel, like [`gemm_f64`].
 pub fn gemm_f32(n: usize, a: &[f32], b: &[f32], c: &[f32], alpha: f32,
                 beta: f32) -> Vec<f32> {
-    gemm_f32_rows(n, 0, n, a, b, c, alpha, beta)
+    kernel::gemm_f32_tuned(n, a, b, c, alpha, beta,
+                           &KernelParams::for_n(n))
 }
 
 /// Output digest, mirroring `aot.digest` on the python side.
@@ -185,9 +198,11 @@ mod tests {
 
     #[test]
     fn row_blocks_tile_the_full_gemm() {
-        // Any row partition must reassemble bit-exactly into the full
-        // product (same per-row accumulation order) — the invariant the
-        // threadpool backend's fan-out relies on.
+        // Any row partition of the NAIVE reference must reassemble
+        // bit-exactly into the full product — which `gemm_f64` now
+        // computes via the tuned packed kernel, so this doubles as the
+        // cross-kernel bit-exactness check (same per-element ascending-k
+        // accumulation order in both implementations).
         let n = 16;
         let a = crate::util::prng::matrix_f64(7, n, n);
         let b = crate::util::prng::matrix_f64(8, n, n);

@@ -212,11 +212,17 @@ mod tests {
     fn serial_matches_reference() {
         let n = 32;
         let (a, b, c) = inputs(n);
-        let want = gemm_f64(n, &a, &b, &c, 1.5, -0.5);
+        // the naive `_rows` reference shares this kernel's per-element
+        // accumulation order; `gemm_f64` (tuned packed kernel) is
+        // bit-identical too — assert against both.
+        let want = crate::gemm::verify::gemm_f64_rows(n, 0, n, &a, &b,
+                                                      &c, 1.5, -0.5);
         let mut out = vec![0.0; n * n];
         gemm_single_source(&SerialBackend, n, 8, 1.5, -0.5, &a, &b, &c,
                            &mut out);
         assert_eq!(out, want, "bitwise equal: same loop structure");
+        assert_eq!(out, gemm_f64(n, &a, &b, &c, 1.5, -0.5),
+                   "tuned kernel preserves the accumulation order");
     }
 
     #[test]

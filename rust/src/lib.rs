@@ -18,15 +18,21 @@
 //! * [`arch`] — the architecture and compiler registries (paper
 //!   Tables 1–3), peak performance per Eq. 8.
 //! * [`gemm`] — the workload algebra: Eqs. 2–7 (FLOPs, memory operations,
-//!   compute/memory ratio, cache working set) and the measurement
-//!   protocol of §2.
+//!   compute/memory ratio, cache working set), the measurement protocol
+//!   of §2, and the **tuned host kernel** (`gemm::kernel`): a
+//!   cache-blocked, panel-packed GEMM with a register-blocked
+//!   microkernel, every knob outside the kernel body (see "The tuned
+//!   kernel's parameter space" below).
 //! * [`sim`] — the testbed substitute (repro band 0/5: none of the
 //!   paper's hardware exists here): a trace-driven set-associative cache
 //!   simulator, a GPU occupancy model, a memory-system model
 //!   (HBM/MCDRAM/DDR, unified vs device memory) and a roofline-style
 //!   machine model calibrated against the paper's anchor measurements.
 //! * [`tuner`] — the multidimensional parameter sweep of §2.3/§3 plus the
-//!   auto-tuning strategies the paper's outlook calls for.
+//!   auto-tuning strategies the paper's outlook calls for — including
+//!   `tuner::measured`, which times the *real* tuned host kernel per
+//!   point instead of asking the machine model
+//!   (`alpaka-bench autotune --measured`).
 //! * [`runtime`] — the PJRT side: loads the AOT-lowered HLO text
 //!   artifacts of the *real* single-source Pallas kernel and executes
 //!   them on the host CPU (the sixth, "native" architecture).
@@ -34,7 +40,7 @@
 //!   front queue feeding per-backend **shards** (one per simulated
 //!   architecture plus one per **named native engine** — `native:pjrt`
 //!   for the Rc-based PJRT client and `native:threadpool` for the
-//!   row-blocked host GEMM over the worker pool), cross-request
+//!   tuned packed host GEMM over the worker pool), cross-request
 //!   **continuous batching** per work key, an LRU **result cache**,
 //!   **overload control** (per-shard admission quotas + deadline-aware
 //!   load shedding, all explicit via `ServeError::Overloaded`), and
@@ -47,6 +53,30 @@
 //! * [`cli`], [`util`] — substrates built from scratch for this repo
 //!   (arg parsing, PRNG shared bit-exactly with python, stats, ASCII
 //!   tables, CSV, property testing).
+//!
+//! # The tuned kernel's parameter space (how it maps to the paper)
+//!
+//! The paper tunes ONE kernel via two architecture-independent knobs:
+//! tile size `T` (cache working set, Eq. 5) and work per thread
+//! (elements per thread / hardware threads). `gemm::KernelParams` is
+//! the host-CPU edition of exactly that split:
+//!
+//! | paper knob            | host kernel knob            |
+//! |-----------------------|-----------------------------|
+//! | tile size `T`         | cache blocks `mc`/`nc`/`kc` (`from_plan` sets all three to `T`, so the working set is the paper's `3T²S`) |
+//! | work per thread       | register tile `mr`×`nr` (each microkernel invocation owns `mr·nr` accumulators — the "elements per thread" axis) |
+//! | hardware threads      | the threadpool shard's worker count (`ServeConfig::native_threads`), fanning out `mc`-aligned row panels |
+//!
+//! Selection is by **measured** GFLOP/s, not model prediction:
+//! `alpaka-bench autotune --measured` sweeps the host tuning space with
+//! the real kernel (the paper's Fig. 3 reproduced on this machine) and
+//! `cargo bench --bench native_gemm` gates tuned-vs-naive speedup and
+//! sweep self-consistency in CI, emitting `BENCH_gemm.json`. The tuned
+//! kernel accumulates each output element in the same ascending-k
+//! order as the naive `_rows` reference, so results are bit-identical
+//! — tuning changes the memory access pattern, never the answer (the
+//! paper's "without changing a single line" claim, numerically
+//! enforced).
 //!
 //! # The backend-shard contract (how to add a backend)
 //!

@@ -60,6 +60,22 @@ fn cli() -> Cli {
                 ],
             },
             CommandSpec {
+                name: "autotune",
+                about: "autotune the packed host GEMM kernel by \
+                        MEASURED GFLOP/s (the paper's Fig. 3 sweep on \
+                        this machine)",
+                opts: vec![
+                    OptSpec::flag("measured",
+                                  "time the real kernel per point \
+                                   (required; model-based sweeps live \
+                                   under `tune`)"),
+                    OptSpec::value("n", Some("512"), "matrix size"),
+                    OptSpec::value("precision", Some("f64"), "f32|f64"),
+                    OptSpec::value("reps", Some("5"),
+                                   "timed runs per point (best-of)"),
+                ],
+            },
+            CommandSpec {
                 name: "repro",
                 about: "regenerate paper tables/figures into --out-dir",
                 opts: vec![
@@ -190,6 +206,7 @@ fn run(cli: &Cli, p: &Parsed) -> Result<()> {
         "archs" => cmd_archs(),
         "predict" => cmd_predict(p),
         "tune" => cmd_tune(p),
+        "autotune" => cmd_autotune(p),
         "repro" => cmd_repro(p),
         "native" => cmd_native(p),
         "serve" => cmd_serve(p),
@@ -286,6 +303,57 @@ fn cmd_tune(p: &Parsed) -> Result<()> {
                  out.best.point.t, out.best.point.hw_threads,
                  out.best.gflops, out.evals);
     }
+    Ok(())
+}
+
+fn cmd_autotune(p: &Parsed) -> Result<()> {
+    use alpaka_rs::tuner::measured;
+    use alpaka_rs::util::threadpool::ThreadPool;
+
+    anyhow::ensure!(
+        p.has_flag("measured"),
+        "autotune times the real kernel: pass --measured (model-based \
+         sweeps live under `tune`)");
+    let n = p.get_u64("n")?.unwrap_or(512);
+    anyhow::ensure!(n >= 1, "need n >= 1");
+    let prec = Precision::parse(p.get_or("precision", "f64"))
+        .ok_or_else(|| anyhow::anyhow!("unknown precision"))?;
+    let reps = p.get_u64("reps")?.unwrap_or(5).max(1) as usize;
+    let space = TuningSpace::paper(ArchId::Host,
+                                   compiler::vendor_compiler(ArchId::Host),
+                                   prec, n);
+    anyhow::ensure!(
+        !space.t_values.is_empty(),
+        "no legal tile sizes for N={n} (pick an N divisible by a power \
+         of two >= 16)");
+    println!("measured autotune: host kernel, {} {}, N={n}, {} points, \
+              best-of-{reps} per point",
+             ArchId::Host.label(), prec.dtype(), space.len());
+    // Single-worker pool: points are timed sequentially, so wall-time
+    // measurements never contend with each other.
+    let pool = ThreadPool::new(1);
+    let (results, failures) = measured::try_measured_sweep(&space, reps,
+                                                           &pool);
+    anyhow::ensure!(failures.is_empty(),
+                    "measured evaluations panicked: {failures:?}");
+    let mut t = Table::new(vec!["T", "kernel params", "GFLOP/s",
+                                "% host peak"]).numeric();
+    for r in &results.records {
+        t.row(vec![
+            r.point.t.to_string(),
+            measured::params_for_point(&r.point).label(),
+            format!("{:.2}", r.gflops),
+            format!("{:.1}", 100.0 * r.relative_peak),
+        ]);
+    }
+    println!("{}", t.render());
+    let best = results.best()
+        .ok_or_else(|| anyhow::anyhow!("empty sweep"))?;
+    let params = measured::params_for_point(&best.point);
+    println!("best: T={} -> {:.2} GFLOP/s  (KernelParams {{{}}}, \
+              self-consistency {:.3})",
+             best.point.t, best.gflops, params.label(),
+             measured::self_consistency(&results).unwrap_or(0.0));
     Ok(())
 }
 

@@ -40,8 +40,12 @@ pub fn verify_kernel(kernel: &LoadedKernel, rtol: f64) -> Result<()> {
         let b = crate::util::prng::matrix_f64(meta.inputs[1].seed, n, n);
         let c = crate::util::prng::matrix_f64(meta.inputs[2].seed, n, n);
         // alpha/beta come from the manifest (default 1/1), so the
-        // oracle covers the coefficient variants too.
-        let want = verify::gemm_f64(n, &a, &b, &c, meta.alpha, meta.beta);
+        // oracle covers the coefficient variants too. Explicitly the
+        // NAIVE `_rows` loop: the verification oracle must stay
+        // independent of the tuned packed kernel that `gemm_f64`
+        // delegates to.
+        let want = verify::gemm_f64_rows(n, 0, n, &a, &b, &c, meta.alpha,
+                                         meta.beta);
         let tol = match meta.precision {
             crate::gemm::Precision::F32 => 5e-3,
             crate::gemm::Precision::F64 => 1e-9,

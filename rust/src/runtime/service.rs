@@ -36,9 +36,12 @@ pub struct RunStats {
     /// Queue wait time before execution started.
     pub queue_seconds: f64,
     /// Which engine produced the timing: PJRT device execution, or the
-    /// explicit host reference-GEMM fallback. Measurement consumers
-    /// MUST check this — host-fallback numbers are not device numbers.
+    /// explicit host-GEMM fallback. Measurement consumers MUST check
+    /// this — host-fallback numbers are not device numbers.
     pub engine: NativeEngine,
+    /// Which kernel produced the timing (`pjrt`, `tuned{..}`, …) — the
+    /// finer-grained companion of `engine`.
+    pub kernel: String,
 }
 
 /// Handle to a running service.
@@ -52,7 +55,8 @@ fn convert(reply: std::result::Result<ServeReply, ServeError>)
            -> Result<RunStats> {
     match reply {
         Ok(r) => match r.output {
-            Output::Native { artifact_id, seconds, gflops, engine } => {
+            Output::Native { artifact_id, seconds, gflops, engine,
+                             kernel } => {
                 Ok(RunStats {
                     artifact_id,
                     seconds,
@@ -60,6 +64,7 @@ fn convert(reply: std::result::Result<ServeReply, ServeError>)
                     batch_size: r.batch_size,
                     queue_seconds: r.queue_seconds,
                     engine,
+                    kernel,
                 })
             }
             other => Err(anyhow::anyhow!(

@@ -12,15 +12,17 @@
 //!   architecture (one shard per [`ArchId`]);
 //! * [`NativeBackend`] — the `native:pjrt` shard: execution on the host
 //!   via PJRT when the real `xla_extension` is linked, falling back to
-//!   the independent host reference GEMM when device execution is
-//!   unavailable (the vendored stub build, or a PJRT runtime failure at
-//!   serve time). The fallback is reported explicitly in
-//!   [`Output::Native`], never silently;
-//! * [`ThreadpoolGemm`] — the `native:threadpool` shard: row-blocked
-//!   host GEMM fanned out over a [`ThreadPool`], every run digest-checked
-//!   against a sequentially-computed reference oracle. Native routing is
-//!   therefore genuinely multi-shard: [`ShardKey::Native`] is a *named*
-//!   key ([`NativeEngineId`]).
+//!   the **tuned packed host GEMM** (`gemm::kernel`) when device
+//!   execution is unavailable (the vendored stub build, or a PJRT
+//!   runtime failure at serve time). The fallback is reported
+//!   explicitly in [`Output::Native`] — engine AND kernel label —
+//!   never silently;
+//! * [`ThreadpoolGemm`] — the `native:threadpool` shard: the tuned
+//!   packed GEMM kernel fanned out over a [`ThreadPool`] in
+//!   `mc`-aligned row-panel blocks, every run digest-checked against a
+//!   sequentially-computed naive-reference oracle (memoized once per
+//!   artifact). Native routing is therefore genuinely multi-shard:
+//!   [`ShardKey::Native`] is a *named* key ([`NativeEngineId`]).
 //!
 //! Adding a fourth backend family means implementing [`Backend`] and
 //! giving [`WorkItem`] a routing case — no new worker loop, no new
@@ -33,6 +35,7 @@ use std::time::{Duration, Instant};
 use std::sync::Mutex;
 
 use crate::arch::ArchId;
+use crate::gemm::kernel::{self, KernelParams};
 use crate::gemm::{metrics as gemm_metrics, verify, Precision};
 use crate::runtime::artifact::{ArtifactMeta, Manifest};
 use crate::runtime::client::{LoadedKernel, Runtime};
@@ -194,12 +197,17 @@ pub enum Output {
         /// Model-evaluation wall time in seconds.
         wall: f64,
     },
-    /// Native execution (PJRT or host reference GEMM).
+    /// Native execution (PJRT or host GEMM).
     Native {
         artifact_id: String,
         seconds: f64,
         gflops: Option<f64>,
         engine: NativeEngine,
+        /// Which kernel produced the numbers: `pjrt` for device
+        /// execution, `tuned{mc=..,nc=..,kc=..,mr=..,nr=..}` for the
+        /// packed host kernel, `naive` for the plain-loop reference —
+        /// so tuning wins (and regressions) are attributable per reply.
+        kernel: String,
     },
 }
 
@@ -473,7 +481,10 @@ impl NativeBackend {
         ids
     }
 
-    fn host_run(&mut self, spec: &NativeSpec) -> Result<f64, String> {
+    /// One host execution of `spec` via the tuned packed kernel.
+    /// Returns `(seconds, kernel label)`.
+    fn host_run(&mut self, spec: &NativeSpec)
+                -> Result<(f64, String), String> {
         if !spec.host_capable {
             return Err(format!(
                 "artifact {} needs the PJRT runtime (host fallback only \
@@ -481,6 +492,7 @@ impl NativeBackend {
                 spec.id));
         }
         let n = spec.n as usize;
+        let params = KernelParams::for_n(n);
         if !self.host_inputs.contains_key(&spec.id) {
             self.host_inputs.insert(spec.id.clone(),
                                     build_host_inputs(spec));
@@ -492,18 +504,20 @@ impl NativeBackend {
         let t0 = Instant::now();
         match inputs {
             HostInputs::F32 { a, b, c } => {
-                let out = verify::gemm_f32(n, a, b, c,
-                                           spec.alpha as f32,
-                                           spec.beta as f32);
+                let out = kernel::gemm_f32_tuned(n, a, b, c,
+                                                 spec.alpha as f32,
+                                                 spec.beta as f32,
+                                                 &params);
                 std::hint::black_box(&out);
             }
             HostInputs::F64 { a, b, c } => {
-                let out = verify::gemm_f64(n, a, b, c, spec.alpha,
-                                           spec.beta);
+                let out = kernel::gemm_f64_tuned(n, a, b, c, spec.alpha,
+                                                 spec.beta, &params);
                 std::hint::black_box(&out);
             }
         }
-        Ok(t0.elapsed().as_secs_f64())
+        Ok((t0.elapsed().as_secs_f64(),
+            format!("tuned{{{}}}", params.label())))
     }
 }
 
@@ -539,6 +553,7 @@ impl Backend for NativeBackend {
                                 f as f64 / seconds / 1e9
                             }),
                             engine: NativeEngine::Pjrt,
+                            kernel: "pjrt".to_string(),
                         });
                     }
                     Err(PjrtFailure::Artifact(msg)) => return Err(msg),
@@ -552,23 +567,26 @@ impl Backend for NativeBackend {
             }
         }
 
-        // … host reference GEMM otherwise.
-        let seconds = self.host_run(&spec)?;
+        // … tuned host GEMM otherwise.
+        let (seconds, kernel) = self.host_run(&spec)?;
         Ok(Output::Native {
             artifact_id: id.clone(),
             seconds,
             gflops: spec.flops.map(|f| f as f64 / seconds / 1e9),
             engine: NativeEngine::HostGemm,
+            kernel,
         })
     }
 }
 
 // --------------------------------------------------------- threadpool --
 
-/// Relative digest tolerance for the runtime oracle check. Chunked
-/// reduction is bit-exact per row block, so only the final sum's
-/// association order differs from the sequential oracle; these bounds
-/// are belt-and-braces.
+/// Relative digest tolerance for the runtime oracle check. The tuned
+/// kernel accumulates each element in the same ascending-k order as the
+/// naive `_rows` oracle (bit-identical on IEEE targets — see
+/// `gemm::kernel` docs), and the chunk-ordered reduction matches the
+/// oracle's association, so these bounds are belt-and-braces headroom,
+/// not a correctness crutch.
 fn digest_rtol(p: Precision) -> f64 {
     match p {
         Precision::F32 => 1e-4,
@@ -577,17 +595,22 @@ fn digest_rtol(p: Precision) -> f64 {
 }
 
 /// Reference digest of one artifact's output, computed **sequentially**
-/// once at input-setup time. `sum` is compared against every parallel
-/// run (scaled by `abs_sum` — the inputs are signed-uniform, so the
-/// signed sum's own magnitude is a bad yardstick).
+/// by the naive `_rows` reference, ONCE per artifact at input-setup
+/// time (memoized — the seeds are deterministic, so it can never
+/// change; `ThreadpoolGemm::oracle_builds` counts the computations so
+/// tests can pin the once-per-artifact invariant). `sum` is compared
+/// against every parallel run (scaled by `abs_sum` — the inputs are
+/// signed-uniform, so the signed sum's own magnitude is a bad
+/// yardstick).
 struct OracleDigest {
     sum: f64,
     abs_sum: f64,
 }
 
-/// The `native:threadpool` shard's backend: row-blocked host GEMM
-/// fanned out over an owned [`ThreadPool`], with every run's output
-/// digest checked against the sequential reference oracle. This is the
+/// The `native:threadpool` shard's backend: the **tuned packed GEMM
+/// kernel** (`gemm::kernel`) fanned out over an owned [`ThreadPool`] in
+/// `mc`-aligned row-panel blocks, with every run's output digest
+/// checked against the sequential naive-reference oracle. This is the
 /// second *named* native shard — it exists so native routing is real
 /// multi-shard traffic, not a single hot spot.
 pub struct ThreadpoolGemm {
@@ -600,6 +623,10 @@ pub struct ThreadpoolGemm {
     // their lifetimes for ~MBs of regenerable data).
     inputs: HashMap<String, Arc<HostInputs>>,
     oracles: HashMap<String, OracleDigest>,
+    /// How many oracle digests were ever computed — exactly one per
+    /// distinct artifact served, never one per request (the O(N³)
+    /// sequential reference must not sit on the request path).
+    oracle_builds: usize,
 }
 
 impl ThreadpoolGemm {
@@ -631,7 +658,7 @@ impl ThreadpoolGemm {
             ThreadPool::new(threads)
         };
         Self { catalog, pool, inputs: HashMap::new(),
-               oracles: HashMap::new() }
+               oracles: HashMap::new(), oracle_builds: 0 }
     }
 
     pub fn threads(&self) -> usize {
@@ -644,13 +671,32 @@ impl ThreadpoolGemm {
         ids
     }
 
-    /// Row partition: every pool thread gets ~2 chunks so a slow chunk
-    /// cannot serialize the tail.
-    fn chunks(&self, n: usize) -> Vec<(usize, usize)> {
+    /// How many sequential oracle digests this backend has computed —
+    /// at most one per distinct artifact, regardless of request count
+    /// (asserted in tests).
+    pub fn oracle_builds(&self) -> usize {
+        self.oracle_builds
+    }
+
+    /// The tuned-kernel blocking used for artifacts of size `n` — ONE
+    /// deterministic mapping, so the fan-out chunking, the oracle's
+    /// chunk-ordered digest and the reply's kernel label always agree.
+    fn params_for(n: usize) -> KernelParams {
+        KernelParams::for_n(n)
+    }
+
+    /// Row partition for the tuned-kernel fan-out: every pool thread
+    /// gets ~2 chunks so a slow chunk cannot serialize the tail. When
+    /// the per-thread share covers at least one `mc` panel, chunks are
+    /// rounded DOWN to whole panels (boundaries on the kernel's natural
+    /// blocking); below that, small chunks win — shrinking `mb` inside
+    /// the kernel is cheap, collapsing the fan-out to one worker is not.
+    fn chunks(&self, n: usize, mc: usize) -> Vec<(usize, usize)> {
         let jobs = (self.pool.size() * 2).clamp(1, n.max(1));
-        let per = (n + jobs - 1) / jobs;
+        let per = n.div_ceil(jobs).max(1);
+        let per = if per >= mc { (per / mc) * mc } else { per };
         (0..n)
-            .step_by(per.max(1))
+            .step_by(per)
             .map(|r0| (r0, (r0 + per).min(n)))
             .collect()
     }
@@ -672,38 +718,43 @@ impl ThreadpoolGemm {
         }
         let inputs = Arc::new(build_host_inputs(spec));
         let n = spec.n as usize;
-        // Sequential oracle, digested with the SAME row chunking the
-        // parallel path uses, so the reductions associate identically.
-        let chunks = self.chunks(n);
+        // Sequential NAIVE oracle (the plain `_rows` reference — the
+        // tuned kernel must never verify itself against itself),
+        // digested with the SAME row chunking the parallel path uses,
+        // so the reductions associate identically.
+        let chunks = self.chunks(n, Self::params_for(n).mc);
         let (sum, abs_sum) = match &*inputs {
             HostInputs::F32 { a, b, c } => {
-                let full = verify::gemm_f32(n, a, b, c,
-                                            spec.alpha as f32,
-                                            spec.beta as f32);
+                let full = verify::gemm_f32_rows(n, 0, n, a, b, c,
+                                                 spec.alpha as f32,
+                                                 spec.beta as f32);
                 digest_chunked(&chunks, n, |lo, hi| {
                     sum_abs_f32(&full[lo..hi])
                 })
             }
             HostInputs::F64 { a, b, c } => {
-                let full = verify::gemm_f64(n, a, b, c, spec.alpha,
-                                            spec.beta);
+                let full = verify::gemm_f64_rows(n, 0, n, a, b, c,
+                                                 spec.alpha, spec.beta);
                 digest_chunked(&chunks, n, |lo, hi| {
                     sum_abs_f64(&full[lo..hi])
                 })
             }
         };
+        self.oracle_builds += 1;
         self.oracles.insert(spec.id.clone(),
                             OracleDigest { sum, abs_sum });
         self.inputs.insert(spec.id.clone(), inputs);
     }
 
-    /// One parallel run: returns (seconds, sum, abs_sum) of the output.
+    /// One parallel run of the tuned kernel over `mc`-aligned row-panel
+    /// blocks: returns (seconds, sum, abs_sum) of the output.
     fn par_run(&self, spec: &NativeSpec)
                -> Result<(f64, f64, f64), String> {
         let n = spec.n as usize;
+        let params = Self::params_for(n);
         let inputs = Arc::clone(self.inputs.get(&spec.id)
                                     .expect("ensure_inputs first"));
-        let chunks = self.chunks(n);
+        let chunks = self.chunks(n, params.mc);
         let t0 = Instant::now();
         let results: Vec<Result<(f64, f64), String>> =
             match &*inputs {
@@ -715,8 +766,8 @@ impl ThreadpoolGemm {
                         let HostInputs::F32 { a, b, c } = &*inp else {
                             unreachable!("precision checked above")
                         };
-                        let rows = verify::gemm_f32_rows(
-                            n, r0, r1, a, b, c, alpha, beta);
+                        let rows = kernel::gemm_f32_tuned_rows(
+                            n, r0, r1, a, b, c, alpha, beta, &params);
                         sum_abs_f32(&rows)
                     })
                 }
@@ -727,8 +778,8 @@ impl ThreadpoolGemm {
                         let HostInputs::F64 { a, b, c } = &*inp else {
                             unreachable!("precision checked above")
                         };
-                        let rows = verify::gemm_f64_rows(
-                            n, r0, r1, a, b, c, alpha, beta);
+                        let rows = kernel::gemm_f64_tuned_rows(
+                            n, r0, r1, a, b, c, alpha, beta, &params);
                         sum_abs_f64(&rows)
                     })
                 }
@@ -824,6 +875,8 @@ impl Backend for ThreadpoolGemm {
             seconds,
             gflops: spec.flops.map(|f| f as f64 / seconds / 1e9),
             engine: NativeEngine::ThreadpoolGemm,
+            kernel: format!("tuned{{{}}}",
+                            Self::params_for(spec.n as usize).label()),
         })
     }
 }
@@ -954,11 +1007,13 @@ mod tests {
             s
         });
         match b.run(&WorkItem::artifact(ids[0].clone())).unwrap() {
-            Output::Native { artifact_id, seconds, gflops, engine } => {
+            Output::Native { artifact_id, seconds, gflops, engine,
+                             kernel } => {
                 assert_eq!(artifact_id, ids[0]);
                 assert!(seconds > 0.0);
                 assert!(gflops.unwrap() > 0.0);
                 assert_eq!(engine, NativeEngine::HostGemm);
+                assert!(kernel.starts_with("tuned{mc="), "{kernel}");
             }
             other => panic!("unexpected output {other:?}"),
         }
@@ -984,11 +1039,12 @@ mod tests {
                 id.clone(), NativeEngineId::Threadpool)).unwrap()
             {
                 Output::Native { artifact_id, seconds, gflops,
-                                 engine } => {
+                                 engine, kernel } => {
                     assert_eq!(&artifact_id, id);
                     assert!(seconds > 0.0);
                     assert!(gflops.unwrap() > 0.0);
                     assert_eq!(engine, NativeEngine::ThreadpoolGemm);
+                    assert!(kernel.starts_with("tuned{"), "{kernel}");
                 }
                 other => panic!("unexpected output {other:?}"),
             }
@@ -1019,12 +1075,76 @@ mod tests {
         let a = prng::matrix_f64(prng::seed_for(&id, 0), n, n);
         let bm = prng::matrix_f64(prng::seed_for(&id, 1), n, n);
         let c = prng::matrix_f64(prng::seed_for(&id, 2), n, n);
-        let full = verify::gemm_f64(n, &a, &bm, &c, 1.0, 1.0);
+        let full = verify::gemm_f64_rows(n, 0, n, &a, &bm, &c, 1.0, 1.0);
         let (seq_sum, seq_abs) = sum_abs_f64(&full);
         let oracle = b.oracles.get(&id).expect("oracle recorded");
         assert!((oracle.sum - seq_sum).abs()
                     <= 1e-9 * seq_abs.max(1.0),
                 "oracle {} vs sequential {}", oracle.sum, seq_sum);
+    }
+
+    #[test]
+    fn oracle_computed_exactly_once_per_artifact() {
+        // The sequential O(N³) oracle must never sit on the request
+        // path: N requests to one artifact → exactly one oracle build.
+        let ids = vec!["gemm_n80_t16_e1_f64".to_string(),
+                       "dot_n48_f32".to_string()];
+        let mut b = ThreadpoolGemm::synthetic(&ids, 2).unwrap();
+        assert_eq!(b.oracle_builds(), 0);
+        for _ in 0..5 {
+            b.run(&WorkItem::artifact_on(
+                ids[0].clone(), NativeEngineId::Threadpool)).unwrap();
+        }
+        assert_eq!(b.oracle_builds(), 1,
+                   "5 requests to one artifact built the oracle once");
+        b.run(&WorkItem::artifact_on(
+            ids[1].clone(), NativeEngineId::Threadpool)).unwrap();
+        for _ in 0..3 {
+            b.run(&WorkItem::artifact_on(
+                ids[1].clone(), NativeEngineId::Threadpool)).unwrap();
+        }
+        assert_eq!(b.oracle_builds(), 2,
+                   "second artifact adds exactly one more build");
+    }
+
+    #[test]
+    fn threadpool_chunks_preserve_fanout_for_small_n() {
+        let b = ThreadpoolGemm::synthetic(
+            &["dot_n64_f32".to_string()], 4).unwrap();
+        // per-thread share (64/8 = 8 rows) is below one mc=64 panel:
+        // chunks must stay small instead of collapsing to one block
+        let chunks = b.chunks(64, 64);
+        assert!(chunks.len() >= 4, "{chunks:?}");
+        assert_eq!(chunks.first().unwrap().0, 0);
+        assert_eq!(chunks.last().unwrap().1, 64);
+        for w in chunks.windows(2) {
+            assert_eq!(w[0].1, w[1].0, "contiguous cover");
+        }
+        // large N: chunk boundaries land on whole mc panels
+        let big = b.chunks(512, 64);
+        assert!(big.len() >= 4, "{big:?}");
+        for (r0, _) in &big {
+            assert_eq!(r0 % 64, 0);
+        }
+        assert_eq!(big.last().unwrap().1, 512);
+    }
+
+    #[test]
+    fn threadpool_serves_non_divisible_n() {
+        // Edge-tile path end to end: N=100 is divisible by neither the
+        // default mc=64 panel height nor the 4x4 register tile width,
+        // and the digest check against the naive oracle must still pass.
+        let id = "gemm_n100_t16_e1_f64".to_string();
+        let mut b = ThreadpoolGemm::synthetic(&[id.clone()], 3).unwrap();
+        let out = b.run(&WorkItem::artifact_on(
+            id.clone(), NativeEngineId::Threadpool)).unwrap();
+        match out {
+            Output::Native { engine, kernel, .. } => {
+                assert_eq!(engine, NativeEngine::ThreadpoolGemm);
+                assert!(kernel.contains("mc=64"), "{kernel}");
+            }
+            other => panic!("unexpected output {other:?}"),
+        }
     }
 
     #[test]

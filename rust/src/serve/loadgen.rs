@@ -92,6 +92,10 @@ pub struct LoadOutcome {
     /// Completed native requests per engine ("pjrt" / "host-gemm" /
     /// "threadpool-gemm").
     pub per_engine: BTreeMap<String, usize>,
+    /// Completed native requests per kernel label ("pjrt" /
+    /// "tuned{mc=..,..}" / "naive") — which kernel actually produced
+    /// each result, so tuning wins are attributable in load reports.
+    pub per_kernel: BTreeMap<String, usize>,
     /// Largest coalesced batch any reply reported.
     pub max_batch_seen: usize,
     /// Error strings observed (deduplicated, for diagnostics).
@@ -158,12 +162,16 @@ pub fn run_closed_loop(serve: &Serve, spec: &LoadSpec) -> LoadOutcome {
                                 *out.per_shard
                                     .entry(reply.shard.clone())
                                     .or_default() += 1;
-                                if let Output::Native { engine, .. } =
+                                if let Output::Native { engine, kernel,
+                                                        .. } =
                                     &reply.output
                                 {
                                     *out.per_engine
                                         .entry(engine_name(engine)
                                                .to_string())
+                                        .or_default() += 1;
+                                    *out.per_kernel
+                                        .entry(kernel.clone())
                                         .or_default() += 1;
                                 }
                                 out.max_batch_seen = out
@@ -205,6 +213,9 @@ pub fn run_closed_loop(serve: &Serve, spec: &LoadSpec) -> LoadOutcome {
         }
         for (k, v) in c.per_engine {
             *total.per_engine.entry(k).or_default() += v;
+        }
+        for (k, v) in c.per_kernel {
+            *total.per_kernel.entry(k).or_default() += v;
         }
         for e in c.errors {
             if !total.errors.contains(&e) {
@@ -344,17 +355,31 @@ pub fn run_open_loop(serve: &Serve, spec: &OverloadSpec)
     out
 }
 
-/// Render the standard load-run report: per-shard tallies, native
-/// engine split, the unified metrics summary and the accounting line.
-/// Shared by the CLI `serve` command, the bench and the example.
+/// Render the standard load-run report: per-shard tallies (with
+/// aggregate GFLOP/s where the shard executed native compute), native
+/// engine and kernel splits, the unified metrics summary and the
+/// accounting line. Shared by the CLI `serve` command, the bench and
+/// the example.
 pub fn outcome_report(outcome: &LoadOutcome, serve: &Serve) -> String {
-    let mut t = Table::new(vec!["shard", "served"]).numeric();
+    let rates: BTreeMap<String, (u64, f64)> = serve.metrics
+        .compute_rates()
+        .into_iter()
+        .map(|(label, runs, gflops)| (label, (runs, gflops)))
+        .collect();
+    let mut t = Table::new(vec!["shard", "served", "GFLOP/s (agg)"])
+        .numeric();
     for (shard, count) in &outcome.per_shard {
-        t.row(vec![shard.clone(), count.to_string()]);
+        let rate = rates.get(shard)
+            .map(|(runs, g)| format!("{g:.1} over {runs} runs"))
+            .unwrap_or_else(|| "-".into());
+        t.row(vec![shard.clone(), count.to_string(), rate]);
     }
     let mut out = t.render();
     for (engine, count) in &outcome.per_engine {
         let _ = writeln!(out, "native engine {engine}: {count} requests");
+    }
+    for (kernel, count) in &outcome.per_kernel {
+        let _ = writeln!(out, "native kernel {kernel}: {count} requests");
     }
     let _ = writeln!(out, "{}", serve.summary());
     let _ = writeln!(
@@ -412,6 +437,16 @@ mod tests {
         assert!(out.per_shard.contains_key("native:threadpool"));
         // repeats of the same small mix must hit the result cache
         assert!(serve.metrics.cache_hits() > 0);
+        // every native reply names the kernel that produced it, and the
+        // executed native shards surface an aggregate GFLOP/s
+        assert!(out.per_kernel.keys().any(|k| k.starts_with("tuned{")),
+                "{:?}", out.per_kernel);
+        let rates = serve.metrics.compute_rates();
+        assert!(rates.iter().any(|(label, runs, gflops)| {
+            label.starts_with("native:") && *runs > 0 && *gflops > 0.0
+        }), "{rates:?}");
+        let report = outcome_report(&out, &serve);
+        assert!(report.contains("native kernel tuned{"), "{report}");
         serve.shutdown();
     }
 

@@ -1,13 +1,19 @@
 //! Unified serve-layer metrics: request counters, cache hit rate,
-//! queue-depth high-water marks, throughput, and end-to-end latency
-//! percentiles from a lock-free log-scale histogram.
+//! queue-depth high-water marks, throughput, per-shard compute rates
+//! (aggregate GFLOP/s), and end-to-end latency percentiles from a
+//! lock-free log-scale histogram.
 //!
 //! One instance is shared by the front queue, the dispatcher and every
 //! shard — the single pane of glass the ROADMAP's serving goal needs
 //! (the per-subsystem counters of `coordinator::Metrics` remain only as
-//! a compatibility view fed by the Scheduler shim).
+//! a compatibility view fed by the Scheduler shim). Everything on the
+//! per-request hot path is lock-free; the per-shard compute aggregation
+//! takes one short mutex per *executed native run* (not per request —
+//! cache hits skip it).
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
 use std::time::Instant;
 
 /// Number of log-scale latency buckets: bucket `i` holds samples in
@@ -76,7 +82,19 @@ impl LatencyHistogram {
     }
 }
 
-/// The serve layer's shared metrics. All methods are lock-free.
+/// Per-shard compute aggregate: executed native runs, their summed
+/// wall time and their summed floating-point work — so the aggregate
+/// GFLOP/s is work-weighted (`flops / seconds`), not an average of
+/// per-run rates.
+#[derive(Debug, Default, Clone, Copy)]
+struct ComputeAgg {
+    runs: u64,
+    seconds: f64,
+    flops: f64,
+}
+
+/// The serve layer's shared metrics. All per-request methods are
+/// lock-free; see the module docs for the one exception.
 #[derive(Debug)]
 pub struct ServeMetrics {
     submitted: AtomicU64,
@@ -97,6 +115,9 @@ pub struct ServeMetrics {
     max_batch: AtomicUsize,
     /// End-to-end latency: submit → reply.
     pub latency: LatencyHistogram,
+    /// Per-shard compute aggregates (executed native runs only — cache
+    /// hits do no compute and are excluded by construction).
+    compute: Mutex<BTreeMap<String, ComputeAgg>>,
     started: Instant,
     /// Nanoseconds after `started` of the first submission
     /// (`u64::MAX` = none yet) and the latest completion (0 = none
@@ -127,6 +148,7 @@ impl ServeMetrics {
             shard_depth_hw: AtomicUsize::new(0),
             max_batch: AtomicUsize::new(0),
             latency: LatencyHistogram::new(),
+            compute: Mutex::new(BTreeMap::new()),
             started: Instant::now(),
             first_submit_ns: AtomicU64::new(u64::MAX),
             last_completion_ns: AtomicU64::new(0),
@@ -186,6 +208,38 @@ impl ServeMetrics {
 
     pub fn observe_batch(&self, size: usize) {
         self.max_batch.fetch_max(size, Ordering::Relaxed);
+    }
+
+    /// A shard executed one native run of `gflops` throughput over
+    /// `seconds` of wall time. Called per *execution*, never per cache
+    /// hit, so the aggregate reflects actual compute.
+    pub fn observe_compute(&self, shard: &str, seconds: f64,
+                           gflops: f64) {
+        if !(seconds > 0.0) || !(gflops >= 0.0) {
+            return; // defensive: never poison the aggregate with NaN
+        }
+        let mut g = self.compute.lock().expect("compute agg poisoned");
+        let e = g.entry(shard.to_string()).or_default();
+        e.runs += 1;
+        e.seconds += seconds;
+        e.flops += gflops * seconds * 1e9;
+    }
+
+    /// Per-shard aggregate compute rates: `(shard label, executed
+    /// runs, work-weighted GFLOP/s)`, sorted by label. Empty until a
+    /// native run with a known flop count completes.
+    pub fn compute_rates(&self) -> Vec<(String, u64, f64)> {
+        self.compute.lock().expect("compute agg poisoned")
+            .iter()
+            .map(|(label, agg)| {
+                let rate = if agg.seconds > 0.0 {
+                    agg.flops / agg.seconds / 1e9
+                } else {
+                    0.0
+                };
+                (label.clone(), agg.runs, rate)
+            })
+            .collect()
     }
 
     pub fn submitted(&self) -> u64 {
@@ -273,9 +327,11 @@ impl ServeMetrics {
         self.latency.quantile(0.99)
     }
 
-    /// Human summary line for CLIs and benches.
+    /// Human summary line for CLIs and benches. Shards that executed
+    /// native compute get an aggregate GFLOP/s tail so tuning wins are
+    /// visible under load.
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "serve: {} submitted, {} ok, {} failed, {} shed, \
              {} cancelled; \
              cache {:.0}% ({}H/{}M); depth hw front={} shard={}; \
@@ -288,7 +344,16 @@ impl ServeMetrics {
             self.front_depth_high_water(),
             self.shard_depth_high_water(), self.max_batch_observed(),
             1e3 * self.p50(), 1e3 * self.p95(), 1e3 * self.p99(),
-            self.throughput())
+            self.throughput());
+        let rates = self.compute_rates();
+        if !rates.is_empty() {
+            s.push_str("; compute");
+            for (label, runs, gflops) in rates {
+                s.push_str(&format!(
+                    " {label}={gflops:.1}GF/s({runs} runs)"));
+            }
+        }
+        s
     }
 }
 
@@ -352,6 +417,32 @@ mod tests {
     fn hit_rate_defined_before_traffic() {
         let m = ServeMetrics::new();
         assert_eq!(m.cache_hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn compute_rates_are_work_weighted_per_shard() {
+        let m = ServeMetrics::new();
+        assert!(m.compute_rates().is_empty());
+        assert!(!m.summary().contains("compute"),
+                "no compute tail before any native run");
+        // shard A: 10 GFLOP in 1s + 30 GFLOP in 1s → 20 GF/s aggregate
+        m.observe_compute("native:threadpool", 1.0, 10.0);
+        m.observe_compute("native:threadpool", 1.0, 30.0);
+        m.observe_compute("native:pjrt", 0.5, 8.0);
+        // junk observations must be ignored, not poison the aggregate
+        m.observe_compute("native:pjrt", 0.0, 1.0);
+        m.observe_compute("native:pjrt", 1.0, f64::NAN);
+        let rates = m.compute_rates();
+        assert_eq!(rates.len(), 2);
+        assert_eq!(rates[0].0, "native:pjrt");
+        assert_eq!(rates[0].1, 1);
+        assert!((rates[0].2 - 8.0).abs() < 1e-9);
+        assert_eq!(rates[1].0, "native:threadpool");
+        assert_eq!(rates[1].1, 2);
+        assert!((rates[1].2 - 20.0).abs() < 1e-9);
+        let s = m.summary();
+        assert!(s.contains("compute") && s.contains("native:threadpool="),
+                "{s}");
     }
 
     #[test]

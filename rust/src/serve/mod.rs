@@ -700,6 +700,15 @@ fn spawn_shard(key: ShardKey, cfg: &ServeConfig,
     Ok(ShardHandle { queue, workers })
 }
 
+/// Fold one *executed* native output into the per-shard compute
+/// aggregate (cache hits never reach this — they do no compute).
+fn observe_native_compute(metrics: &ServeMetrics, shard: &str,
+                          output: &Output) {
+    if let Output::Native { seconds, gflops: Some(g), .. } = output {
+        metrics.observe_compute(shard, *seconds, *g);
+    }
+}
+
 #[allow(clippy::too_many_arguments)]
 fn shard_loop(queue: Arc<BoundedQueue<ServeRequest>>,
               factory: BackendFactory,
@@ -821,6 +830,8 @@ fn shard_loop(queue: Arc<BoundedQueue<ServeRequest>>,
                 metrics.cache_miss(batch_size as u64);
                 match backend.run(&group[0].item) {
                     Ok(output) => {
+                        observe_native_compute(&metrics, &label,
+                                               &output);
                         cache.lock().expect("cache poisoned")
                             .put(key, output.clone());
                         for (req, wait) in group.into_iter().zip(waits) {
@@ -855,6 +866,8 @@ fn shard_loop(queue: Arc<BoundedQueue<ServeRequest>>,
                     let wait = req.enqueued.elapsed().as_secs_f64();
                     match backend.run(&req.item) {
                         Ok(output) => {
+                            observe_native_compute(&metrics, &label,
+                                                   &output);
                             let latency =
                                 req.enqueued.elapsed().as_secs_f64();
                             metrics.request_completed(latency);

@@ -78,6 +78,9 @@ pub enum PredictionBound {
     Memory,
     /// GPU latency hiding (occupancy).
     Latency,
+    /// Not a model prediction at all: the record's GFLOP/s were
+    /// *measured* on real hardware (`tuner::measured`).
+    Measured,
 }
 
 /// Model output.

@@ -6,17 +6,22 @@
 //! * [`space`] — the legal tuning space per architecture (tile sizes,
 //!   hardware threads, memory modes; powers of two like the paper).
 //! * [`sweep`] — exhaustive grid evaluation (the paper's method), fanned
-//!   out over the thread pool.
+//!   out over the thread pool; generic over the evaluation backend.
+//! * [`measured`] — the **measured** backend: times the real tuned host
+//!   GEMM kernel per point on actual hardware instead of asking the
+//!   machine model (`alpaka-bench autotune --measured`).
 //! * [`strategies`] — auto-tuners that sample the same space with a
 //!   budget: random search, greedy hill climbing, simulated annealing.
 //! * [`results`] — result records, paper-faithful tie-breaking, top-k.
 
+pub mod measured;
 pub mod results;
 pub mod space;
 pub mod strategies;
 pub mod sweep;
 
+pub use measured::{measured_sweep, try_measured_sweep};
 pub use results::{SweepRecord, SweepResults};
 pub use space::TuningSpace;
 pub use strategies::{tune_with, Strategy, TuneOutcome};
-pub use sweep::{grid_sweep, try_grid_sweep};
+pub use sweep::{grid_sweep, try_grid_sweep, try_sweep_with};

@@ -1,34 +1,47 @@
 //! Exhaustive grid sweep — the paper's tuning method, fanned out across
-//! the thread pool.
+//! the thread pool. The fan-out plumbing is generic over the evaluation
+//! backend ([`try_sweep_with`]): the machine model ([`try_grid_sweep`])
+//! and the measured host-kernel backend (`tuner::measured`) share one
+//! sweep implementation.
 
 use std::sync::Arc;
 
-use crate::sim::Machine;
+use crate::sim::{Machine, TuningPoint};
 use crate::util::threadpool::ThreadPool;
 
 use super::results::{SweepRecord, SweepResults};
 use super::space::TuningSpace;
 
-/// Evaluate every point of the space on the machine model with
-/// per-point fault isolation: a panicking evaluation is reported in the
-/// failure list (`"point …: message"`) instead of killing the whole
-/// fan-out. Successful results keep enumeration order regardless of
-/// scheduling (the order-invariance property is tested below).
-pub fn try_grid_sweep(machine: &Arc<Machine>, space: &TuningSpace,
-                      pool: &ThreadPool)
-                      -> (SweepResults, Vec<String>) {
-    let points = space.points();
-    let m = Arc::clone(machine);
-    let preds = pool.try_map(points.clone(), move |p| m.predict(&p));
+/// Evaluate every point with the given backend, with per-point fault
+/// isolation: a panicking evaluation is reported in the failure list
+/// (`"point …: message"`) instead of killing the whole fan-out.
+/// Successful results keep enumeration order regardless of scheduling
+/// (the order-invariance property is tested below).
+pub fn try_sweep_with<F>(points: Vec<TuningPoint>, pool: &ThreadPool,
+                         eval: F) -> (SweepResults, Vec<String>)
+where
+    F: Fn(&TuningPoint) -> SweepRecord + Send + Sync + 'static,
+{
+    let records = pool.try_map(points.clone(), move |p| eval(&p));
     let mut out = SweepResults::default();
     let mut failures = Vec::new();
-    for (point, pred) in points.into_iter().zip(preds) {
-        match pred {
-            Ok(pred) => out.push(SweepRecord::new(point, &pred)),
+    for (point, rec) in points.into_iter().zip(records) {
+        match rec {
+            Ok(rec) => out.push(rec),
             Err(msg) => failures.push(format!("point {point:?}: {msg}")),
         }
     }
     (out, failures)
+}
+
+/// Evaluate every point of the space on the machine model (fault
+/// isolation and ordering per [`try_sweep_with`]).
+pub fn try_grid_sweep(machine: &Arc<Machine>, space: &TuningSpace,
+                      pool: &ThreadPool)
+                      -> (SweepResults, Vec<String>) {
+    let m = Arc::clone(machine);
+    try_sweep_with(space.points(), pool,
+                   move |p| SweepRecord::new(*p, &m.predict(p)))
 }
 
 /// Evaluate every point of the space on the machine model. Infallible
