@@ -1,0 +1,86 @@
+//! Online-autotuning example: start a serve layer with `--online-tune`
+//! semantics, drive mixed shapes, and watch the layer LEARN — cold
+//! requests run default kernel params while background exploration
+//! jobs measure the real kernel and commit winners to the tuning
+//! store; warm requests then serve with `…@store` params.
+//!
+//! Run with: `cargo run --release --offline --example autotune_serve`
+
+use std::time::{Duration, Instant};
+
+use alpaka_rs::serve::{loadgen, NativeConfig, NativeEngineId, Serve,
+                       ServeConfig, WorkItem};
+
+fn main() -> alpaka_rs::Result<()> {
+    // Mixed shapes across three tuning buckets (64, 128, 256), served
+    // on BOTH named native shards.
+    let ids: Vec<String> = ["gemm_n64_t16_e1_f64", "dot_n128_f32",
+                            "gemm_n256_t16_e1_f32"]
+        .iter().map(|s| s.to_string()).collect();
+    let store_path = std::env::temp_dir().join(format!(
+        "alpaka_autotune_serve_{}.json", std::process::id()));
+    let _ = std::fs::remove_file(&store_path);
+
+    let serve = Serve::start(ServeConfig {
+        cache_cap: 0, // every request executes: watch the labels change
+        native: Some(NativeConfig::Synthetic(ids.clone())),
+        native_threads: 4,
+        tuning_store: Some(store_path.clone()),
+        online_tune: true,
+        tune_budget: 4,
+        tune_reps: 2,
+        ..ServeConfig::default()
+    })?;
+
+    let mut items = Vec::new();
+    for id in &ids {
+        items.push(WorkItem::artifact(id.clone()));
+        items.push(WorkItem::artifact_on(id.clone(),
+                                         NativeEngineId::Threadpool));
+    }
+
+    println!("== phase 1: cold — defaults serve, exploration starts ==\n");
+    let cold = loadgen::run_closed_loop(&serve, &loadgen::LoadSpec {
+        clients: 4,
+        requests_per_client: 6,
+        items: items.clone(),
+    });
+    for (kernel, count) in &cold.per_kernel {
+        println!("  {kernel}: {count}");
+    }
+
+    // Wait for the background explorations to commit (3 buckets).
+    // Keep offering the mix meanwhile: explorations shed under the
+    // tuner's line bound are retried by whichever later request finds
+    // the bucket still untuned — that IS the retry mechanism.
+    let store = serve.tuning_store().expect("online store");
+    let t0 = Instant::now();
+    while store.lock().unwrap().len() < 3
+        && t0.elapsed() < Duration::from_secs(120)
+    {
+        for item in &items {
+            let _ = serve.call(item.clone());
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    println!("\n{}", store.lock().unwrap().render());
+
+    println!("== phase 2: warm — the same mix serves @store params ==\n");
+    let warm = loadgen::run_closed_loop(&serve, &loadgen::LoadSpec {
+        clients: 4,
+        requests_per_client: 6,
+        items,
+    });
+    print!("{}", loadgen::outcome_report(&warm, &serve));
+    let tuned = warm.per_kernel.iter()
+        .filter(|(k, _)| k.ends_with("@store"))
+        .map(|(_, c)| c)
+        .sum::<usize>();
+    println!("\n{tuned}/{} native executions ran store-tuned params; \
+              the store at {} survives restarts (rerun to see phase 1 \
+              already warm).",
+             warm.per_engine.values().sum::<usize>(),
+             store_path.display());
+    serve.shutdown();
+    Ok(())
+}

@@ -46,6 +46,7 @@ fn overload_config(native: NativeConfig, shed: ShedPolicy,
         native_threads: 2,
         shed,
         shard_quota: quota,
+        ..ServeConfig::default()
     }
 }
 
@@ -62,6 +63,7 @@ fn main() -> ExitCode {
         native_threads: 2,
         shed: ShedPolicy::None,
         shard_quota: None,
+        ..ServeConfig::default()
     }) {
         Ok(s) => s,
         Err(e) => {

@@ -1,0 +1,144 @@
+//! Bench T1 — the tuning-store serving gate:
+//!
+//! 1. Warm `BENCH_tunestore.json` for the gate bucket (N=512 f64) via
+//!    a bounded measured exploration — unless this machine's
+//!    fingerprint already has an entry (the file is a **cross-PR CI
+//!    artifact**: on a same-fingerprint runner the learned state
+//!    carries over; on different hardware the fingerprint check makes
+//!    the store fall back cleanly and re-warm).
+//! 2. Serve N=512 f64 requests through the threadpool shard twice —
+//!    once selecting from the warmed store, once with the built-in
+//!    default params — and compare aggregate GFLOP/s.
+//!
+//! Gate: warmed-store serving achieves ≥ 90% of default-params serving
+//! (the committed winner is never slower than the default *as
+//! measured*, so any real regression here is selection overhead or a
+//! store bug; the 10% margin absorbs CI timing noise).
+//!
+//! Run with: `cargo bench --bench tunestore_gate`
+
+use std::path::Path;
+use std::process::ExitCode;
+
+use alpaka_rs::autotune::{self, TuningStore};
+use alpaka_rs::gemm::Precision;
+use alpaka_rs::serve::{NativeConfig, NativeEngineId, Serve,
+                       ServeConfig, WorkItem};
+
+const STORE_PATH: &str = "BENCH_tunestore.json";
+const GATE_N: u64 = 512;
+const ARTIFACT: &str = "gemm_n512_t16_e1_f64";
+const REQUESTS: usize = 8;
+const EXPLORE_BUDGET: usize = 6;
+const EXPLORE_REPS: usize = 2;
+const GATE_RATIO: f64 = 0.90;
+
+/// Serve `REQUESTS` runs of the gate artifact on the threadpool shard
+/// and return (aggregate GFLOP/s, kernel label of the last reply).
+fn serve_rate(store: Option<&Path>) -> Result<(f64, String), String> {
+    let serve = Serve::start(ServeConfig {
+        cache_cap: 0, // measure real executions, not cache hits
+        native: Some(NativeConfig::Synthetic(vec![ARTIFACT.into()])),
+        native_threads: 4,
+        tuning_store: store.map(|p| p.to_path_buf()),
+        ..Default::default()
+    }).map_err(|e| format!("serve start: {e:#}"))?;
+    let mut kernel = String::new();
+    for _ in 0..REQUESTS {
+        let reply = serve
+            .call(WorkItem::artifact_on(ARTIFACT,
+                                        NativeEngineId::Threadpool))
+            .map_err(|e| e.to_string())?;
+        if let alpaka_rs::serve::Output::Native { kernel: k, .. } =
+            &reply.output
+        {
+            kernel = k.clone();
+        }
+    }
+    let rates = serve.metrics.compute_rates();
+    let rate = rates.iter()
+        .find(|(label, ..)| label == "native:threadpool")
+        .map(|(_, _, gflops)| *gflops)
+        .ok_or("no threadpool compute rate recorded")?;
+    serve.shutdown();
+    Ok((rate, kernel))
+}
+
+fn main() -> ExitCode {
+    println!("=== tuning-store serving gate (N={GATE_N} f64) ===\n");
+
+    // ---- 1. warm the cross-PR store --------------------------------
+    let mut store = TuningStore::open(Path::new(STORE_PATH));
+    println!("store fingerprint: {}", store.fingerprint());
+    let bucket = autotune::bucket_for(GATE_N);
+    if let Some(e) = store.lookup(Precision::F64, bucket) {
+        println!("bucket already warm (cross-PR artifact hit): \
+                  {{{}}} {:.2} GF/s, {} samples",
+                 e.params.label(), e.gflops, e.samples);
+    } else {
+        println!("warming {} n<={bucket} (budget {EXPLORE_BUDGET}, \
+                  best-of-{EXPLORE_REPS})...", Precision::F64.dtype());
+        let out = autotune::explore_bucket(Precision::F64, bucket,
+                                           EXPLORE_BUDGET,
+                                           EXPLORE_REPS);
+        if let Err(e) = store.commit(Precision::F64, bucket, out.params,
+                                     out.gflops,
+                                     EXPLORE_REPS as u64) {
+            eprintln!("FAIL: cannot write {STORE_PATH}: {e:#}");
+            return ExitCode::FAILURE;
+        }
+        println!("committed {{{}}} {:.2} GF/s after {} evals \
+                  (default won: {})",
+                 out.params.label(), out.gflops, out.evals,
+                 out.default_won);
+    }
+    print!("{}", store.render());
+    drop(store);
+
+    // ---- 2. warmed-store vs default-params serving -----------------
+    let (default_rate, default_kernel) = match serve_rate(None) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("FAIL: default-params serving: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let (store_rate, store_kernel) =
+        match serve_rate(Some(Path::new(STORE_PATH))) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("FAIL: warmed-store serving: {e}");
+                return ExitCode::FAILURE;
+            }
+        };
+    println!("\ndefault params: {default_rate:.2} GF/s aggregate \
+              ({default_kernel})");
+    println!("warmed store:   {store_rate:.2} GF/s aggregate \
+              ({store_kernel})");
+
+    // ---- acceptance gates ------------------------------------------
+    let mut ok = true;
+    if !store_kernel.ends_with("@store") {
+        eprintln!("FAIL: warmed-store serving did not select store \
+                   params (kernel {store_kernel})");
+        ok = false;
+    }
+    if default_kernel.ends_with("@store") {
+        eprintln!("FAIL: store-less serving claims store params \
+                   (kernel {default_kernel})");
+        ok = false;
+    }
+    if store_rate < GATE_RATIO * default_rate {
+        eprintln!("FAIL: warmed-store serving {store_rate:.2} GF/s \
+                   fell below {GATE_RATIO}x default {default_rate:.2} \
+                   GF/s — selection overhead or a bad store entry");
+        ok = false;
+    }
+    if ok {
+        println!("tunestore_gate: PASS ({:.2}x default)",
+                 store_rate / default_rate);
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

@@ -1,0 +1,124 @@
+//! Host architecture fingerprint — the key that makes persisted tuning
+//! data portable *safely*: an entry measured on one machine must never
+//! be served on a different one (the paper's whole result is that the
+//! optimal `(T, work-per-thread)` point is architecture-specific).
+//!
+//! The fingerprint derives from observable host properties only —
+//! CPU architecture, core count, detected ISA features — so it is
+//! stable across process restarts on the same machine and (by
+//! construction) different on a machine where the tuned parameters
+//! would not transfer. A [`crate::autotune::TuningStore`] copied
+//! between machines keeps its foreign entries on disk but never serves
+//! them.
+
+use std::fmt;
+
+/// Identity of the machine a tuning entry was measured on.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ArchFingerprint {
+    /// Target architecture (`x86_64`, `aarch64`, …).
+    pub arch: String,
+    /// Available parallelism (threads) at detection time.
+    pub cores: usize,
+    /// Detected ISA feature names, sorted (e.g. `avx2`, `fma`). Empty
+    /// on targets without runtime feature detection.
+    pub isa: Vec<String>,
+}
+
+impl ArchFingerprint {
+    /// Detect the current host. Deterministic for a given machine and
+    /// process environment.
+    pub fn detect() -> Self {
+        let cores = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        Self {
+            arch: std::env::consts::ARCH.to_string(),
+            cores,
+            isa: detect_isa(),
+        }
+    }
+
+    /// Canonical string form, used as the store key:
+    /// `x86_64/c8/avx2+fma` (`-` when no features are detected).
+    pub fn label(&self) -> String {
+        let isa = if self.isa.is_empty() {
+            "-".to_string()
+        } else {
+            self.isa.join("+")
+        };
+        format!("{}/c{}/{}", self.arch, self.cores, isa)
+    }
+}
+
+impl fmt::Display for ArchFingerprint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.label())
+    }
+}
+
+/// Runtime ISA detection for the features the tuned kernel actually
+/// dispatches on (see `gemm::kernel`: the microkernel routes through an
+/// AVX2 copy when present). Kept to features that change generated
+/// code, so fingerprints do not churn on irrelevant details.
+fn detect_isa() -> Vec<String> {
+    #[allow(unused_mut)]
+    let mut isa: Vec<String> = Vec::new();
+    #[cfg(target_arch = "x86_64")]
+    {
+        for (name, present) in [
+            ("avx2", std::arch::is_x86_feature_detected!("avx2")),
+            ("fma", std::arch::is_x86_feature_detected!("fma")),
+            ("avx512f", std::arch::is_x86_feature_detected!("avx512f")),
+        ] {
+            if present {
+                isa.push(name.to_string());
+            }
+        }
+    }
+    isa.sort();
+    isa
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn detect_is_stable_within_a_process() {
+        let a = ArchFingerprint::detect();
+        let b = ArchFingerprint::detect();
+        assert_eq!(a, b);
+        assert_eq!(a.label(), b.label());
+        assert!(a.cores >= 1);
+        assert!(!a.arch.is_empty());
+    }
+
+    #[test]
+    fn label_shape() {
+        let fp = ArchFingerprint {
+            arch: "x86_64".into(),
+            cores: 8,
+            isa: vec!["avx2".into(), "fma".into()],
+        };
+        assert_eq!(fp.label(), "x86_64/c8/avx2+fma");
+        let bare = ArchFingerprint {
+            arch: "riscv64".into(),
+            cores: 2,
+            isa: vec![],
+        };
+        assert_eq!(bare.label(), "riscv64/c2/-");
+    }
+
+    #[test]
+    fn different_machines_differ() {
+        let a = ArchFingerprint {
+            arch: "x86_64".into(), cores: 8,
+            isa: vec!["avx2".into()],
+        };
+        let b = ArchFingerprint { cores: 16, ..a.clone() };
+        let c = ArchFingerprint { isa: vec![], ..a.clone() };
+        assert_ne!(a.label(), b.label());
+        assert_ne!(a.label(), c.label());
+    }
+}

@@ -1,0 +1,83 @@
+//! Online autotuning — tuning as a persistent, *online* service
+//! instead of a manual CLI step.
+//!
+//! The paper's conclusion anticipates exactly this layer: keeping
+//! tuning parameters outside the algorithm "may also enable
+//! auto-tuning in a later step". PR 3 closed the measurement half
+//! (`tuner::measured` — the Fig. 3 sweep timed on real hardware); this
+//! module closes the *serving* half, a new plane of learned
+//! performance state with three layers:
+//!
+//! 1. **Store** ([`TuningStore`]) — a versioned, JSON-on-disk map from
+//!    `(arch fingerprint, dtype, shape bucket)` to the best measured
+//!    [`KernelParams`](crate::gemm::kernel::KernelParams), with atomic
+//!    writes, corrupt-file recovery and schema versioning. The
+//!    fingerprint ([`ArchFingerprint`]) derives from the host (core
+//!    count + detected ISA features), so a store copied between
+//!    machines never misfires — foreign entries are kept but never
+//!    served.
+//! 2. **Online tuner** ([`online::TunerBackend`]) — a background
+//!    `tune:explore` shard registered through the ordinary
+//!    backend-shard contract: when a request arrives for an untuned
+//!    bucket, the dispatcher enqueues a *bounded* exploration job
+//!    (budgeted `tuner::strategies` search over measured GFLOP/s, not
+//!    the full grid) that commits the winner to the store. Production
+//!    traffic is never blocked on tuning — exploration jobs are
+//!    quota-bounded and shed under load like any shard work, and
+//!    requests run with current-best (or default) params meanwhile.
+//! 3. **Selection** — `serve::ThreadpoolGemm` and the PJRT shard's
+//!    host fallback consult the store per request; replies carry a
+//!    `…@store` kernel-label suffix so tuned serving is attributable
+//!    in load reports and `BENCH_serve.json`.
+//!
+//! CLI: `alpaka-bench autotune --measured --store PATH [--warm]`
+//! writes the same store the serve layer reads;
+//! `alpaka-bench serve --tuning-store PATH --online-tune` serves from
+//! and feeds it. CI persists the store as the cross-PR artifact
+//! `BENCH_tunestore.json` (bench `tunestore_gate`).
+
+pub mod fingerprint;
+pub mod online;
+pub mod store;
+
+use std::sync::{Arc, Mutex};
+
+pub use fingerprint::ArchFingerprint;
+pub use online::{explore_bucket, ExploreOutcome, TunerBackend};
+pub use store::{TuneEntry, TuningStore, STORE_SCHEMA};
+
+/// The store handle shared between the dispatcher (tune triggering),
+/// the tuner shard (commits) and the native backends (selection).
+pub type SharedTuningStore = Arc<Mutex<TuningStore>>;
+
+/// Map a square-GEMM size onto its tuning bucket: the next power of
+/// two, clamped to `[16, 1024]` (the host fallback's size range). One
+/// bucket's measured winner serves every nearby shape, so the store
+/// stays small and a cold start tunes O(log N) buckets, not one per
+/// distinct N.
+pub fn bucket_for(n: u64) -> u64 {
+    n.max(1).next_power_of_two().clamp(16, 1024)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_are_pow2_and_clamped() {
+        assert_eq!(bucket_for(1), 16);
+        assert_eq!(bucket_for(16), 16);
+        assert_eq!(bucket_for(17), 32);
+        assert_eq!(bucket_for(100), 128);
+        assert_eq!(bucket_for(512), 512);
+        assert_eq!(bucket_for(513), 1024);
+        assert_eq!(bucket_for(4096), 1024, "clamped to host range");
+    }
+
+    #[test]
+    fn bucket_always_covers_n_within_range() {
+        for n in 1..=1024u64 {
+            assert!(bucket_for(n) >= n.max(16).min(1024));
+        }
+    }
+}

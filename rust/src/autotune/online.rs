@@ -1,0 +1,253 @@
+//! The online tuner — budgeted, measured exploration of the kernel
+//! parameter space for one `(dtype, shape bucket)`, and the serve-layer
+//! backend ([`TunerBackend`]) that runs it on the background
+//! `tune:explore` shard.
+//!
+//! The exploration is deliberately NOT the full grid (the paper's
+//! conclusion warns that exhaustive tuning "increases the time it takes
+//! for tuning a code"): it runs a budgeted [`tuner::strategies`] search
+//! (hill climbing when the budget is below the space size, grid
+//! otherwise) with the *measured* evaluation backend
+//! ([`tuner::MeasuredGemm`] — the real kernel, deterministic PRNG
+//! inputs, best-of-k timing). The default [`KernelParams::for_n`]
+//! configuration is always measured as a baseline candidate, so a
+//! committed store entry can never be slower than what the serve layer
+//! would have run anyway — that invariant backs the
+//! `tunestore_gate` bench.
+
+use std::time::Instant;
+
+use crate::arch::{compiler, ArchId};
+use crate::gemm::kernel::KernelParams;
+use crate::gemm::{metrics as gemm_metrics, Precision};
+use crate::serve::{Backend, Output, WorkItem, WorkPayload};
+use crate::sim::{PredictionBound, TuningPoint};
+use crate::tuner::{self, MeasuredGemm, Strategy, SweepRecord,
+                   TuningSpace};
+
+use super::SharedTuningStore;
+
+/// Result of one bounded exploration.
+#[derive(Debug, Clone)]
+pub struct ExploreOutcome {
+    /// The winning blocking for the bucket.
+    pub params: KernelParams,
+    /// Its measured GFLOP/s at the bucket size.
+    pub gflops: f64,
+    /// Kernel timings spent (search points + the default baseline).
+    pub evals: usize,
+    /// Whether the default `KernelParams::for_n` baseline beat every
+    /// explored point (the winner is then the default itself).
+    pub default_won: bool,
+}
+
+/// Explore the host-kernel tuning space for `(precision, bucket)` under
+/// an evaluation budget, measuring the REAL kernel per candidate
+/// (best-of-`reps`), and return the winner. The default
+/// [`KernelParams::for_n`] blocking is always measured as a baseline
+/// candidate — the returned winner is never slower than it (as
+/// measured here).
+pub fn explore_bucket(precision: Precision, bucket: u64, budget: usize,
+                      reps: usize) -> ExploreOutcome {
+    let n = bucket.max(1) as usize;
+    let reps = reps.max(1);
+    let gemm = MeasuredGemm::new(n, precision);
+    let default = KernelParams::for_n(n);
+    let default_gflops = gemm.gflops(&default, reps);
+
+    let mut space = TuningSpace::paper(
+        ArchId::Host, compiler::vendor_compiler(ArchId::Host),
+        precision, bucket.max(1));
+    // The hardware-thread axis does not change the host kernel's
+    // blocking (that axis lives in the threadpool shard's fan-out):
+    // collapse it so the budget is spent entirely on distinct params.
+    space.h_values = vec![1];
+    if space.t_values.is_empty() {
+        // No legal tile sizes (bucket below the smallest T): the
+        // default baseline is the only candidate.
+        return ExploreOutcome { params: default,
+                                gflops: default_gflops, evals: 1,
+                                default_won: true };
+    }
+
+    let budget = budget.max(1).min(space.len());
+    let strategy = if budget >= space.len() {
+        Strategy::Grid
+    } else {
+        Strategy::HillClimb
+    };
+    let eval = |p: &TuningPoint| {
+        let params = tuner::measured::params_for_point(p);
+        let seconds = gemm.time(&params, reps);
+        SweepRecord {
+            point: *p,
+            gflops: gemm_metrics::gflops(p.n, seconds),
+            relative_peak: 0.0,
+            bound: PredictionBound::Measured,
+        }
+    };
+    let out = tuner::tune_with_eval(strategy, &space, budget,
+                                    0xA1FA ^ bucket, eval);
+    let explored = tuner::measured::params_for_point(&out.best.point);
+    if default_gflops > out.best.gflops {
+        ExploreOutcome { params: default, gflops: default_gflops,
+                         evals: out.evals + 1, default_won: true }
+    } else {
+        ExploreOutcome { params: explored, gflops: out.best.gflops,
+                         evals: out.evals + 1, default_won: false }
+    }
+}
+
+/// The `tune:explore` shard's backend: serves
+/// [`WorkPayload::Explore`] jobs by running [`explore_bucket`] and
+/// committing the winner to the shared [`TuningStore`]
+/// (fingerprint-keyed, atomic save). Registered through the ordinary
+/// backend-shard contract — queueing, shedding and shutdown draining
+/// are inherited, which is what makes "production traffic never blocks
+/// on tuning" a property of the dispatcher, not of this code.
+///
+/// [`TuningStore`]: crate::autotune::TuningStore
+pub struct TunerBackend {
+    store: SharedTuningStore,
+    budget: usize,
+    reps: usize,
+}
+
+impl TunerBackend {
+    pub fn new(store: SharedTuningStore, budget: usize, reps: usize)
+               -> Self {
+        Self { store, budget: budget.max(1), reps: reps.max(1) }
+    }
+}
+
+impl Backend for TunerBackend {
+    fn label(&self) -> String {
+        crate::serve::ShardKey::Tuner.label()
+    }
+
+    fn run(&mut self, item: &WorkItem) -> Result<Output, String> {
+        let (precision, bucket) = match &item.payload {
+            WorkPayload::Explore { dtype, bucket } => (*dtype, *bucket),
+            other => {
+                return Err(format!(
+                    "tuning shard only serves exploration jobs, got \
+                     {other:?}"));
+            }
+        };
+        // Re-check at execution time: the bucket may have been tuned
+        // (by a warm CLI run or a racing commit) while this job sat in
+        // the queue — exploring again would waste shard time.
+        {
+            let g = self.store.lock()
+                .map_err(|_| "tuning store lock poisoned".to_string())?;
+            if let Some(e) = g.lookup(precision, bucket) {
+                return Ok(Output::Tuned {
+                    dtype: precision,
+                    bucket,
+                    params: e.params.label(),
+                    gflops: e.gflops,
+                    evals: 0,
+                    seconds: 0.0,
+                    committed: false,
+                });
+            }
+        }
+        let t0 = Instant::now();
+        let out = explore_bucket(precision, bucket, self.budget,
+                                 self.reps);
+        // Commit under the lock, persist OUTSIDE it: the same mutex
+        // sits on both native shards' per-request kernel selection, so
+        // serving must never wait behind this commit's file write.
+        let snapshot = {
+            let mut g = self.store.lock()
+                .map_err(|_| "tuning store lock poisoned".to_string())?;
+            g.commit_unsaved(precision, bucket, out.params, out.gflops,
+                             self.reps as u64);
+            g.snapshot()
+        };
+        // Persistence failure must NOT fail the job: the in-memory
+        // commit already took effect — serving is flipping to the new
+        // params and later lookups hit the entry, so reporting Err
+        // here would count a tune_failed for a bucket that is in fact
+        // tuned (and a user-submitted warm-up would see a Backend
+        // error for a warm-up that worked). Warn and carry on; the
+        // loss is only of cross-restart persistence.
+        if let Some((path, json)) = snapshot {
+            if let Err(e) =
+                crate::autotune::TuningStore::write_atomic(&path, &json)
+            {
+                eprintln!("[autotune] commit for {} n<={bucket} took \
+                           effect in-memory but could not be persisted \
+                           to {}: {e:#}",
+                          precision.dtype(), path.display());
+            }
+        }
+        Ok(Output::Tuned {
+            dtype: precision,
+            bucket,
+            params: out.params.label(),
+            gflops: out.gflops,
+            evals: out.evals,
+            seconds: t0.elapsed().as_secs_f64(),
+            committed: true,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autotune::TuningStore;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn explore_bucket_returns_legal_params() {
+        let out = explore_bucket(Precision::F64, 32, 2, 1);
+        assert!(out.gflops > 0.0);
+        assert!(out.evals >= 2, "search points + default baseline");
+        let p = out.params;
+        assert!(p.mc >= 1 && p.mc <= 32);
+        assert!(p.kc >= 1 && p.kc <= 32);
+    }
+
+    #[test]
+    fn explore_tiny_bucket_falls_back_to_default() {
+        // bucket 8 < smallest CPU tile 16: no legal T values
+        let out = explore_bucket(Precision::F32, 8, 4, 1);
+        assert!(out.default_won);
+        assert_eq!(out.params, KernelParams::for_n(8));
+    }
+
+    #[test]
+    fn tuner_backend_commits_once_then_reports_existing() {
+        let store = Arc::new(Mutex::new(TuningStore::in_memory()));
+        let mut b = TunerBackend::new(Arc::clone(&store), 2, 1);
+        let item = WorkItem::explore(Precision::F64, 32);
+        match b.run(&item).unwrap() {
+            Output::Tuned { committed, bucket, dtype, .. } => {
+                assert!(committed);
+                assert_eq!(bucket, 32);
+                assert_eq!(dtype, Precision::F64);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert!(store.lock().unwrap()
+                .lookup(Precision::F64, 32).is_some());
+        // second run: store already warm, nothing re-explored
+        match b.run(&item).unwrap() {
+            Output::Tuned { committed, evals, .. } => {
+                assert!(!committed);
+                assert_eq!(evals, 0);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn tuner_backend_refuses_foreign_payloads() {
+        let store = Arc::new(Mutex::new(TuningStore::in_memory()));
+        let mut b = TunerBackend::new(store, 2, 1);
+        let err = b.run(&WorkItem::artifact("dot_n64_f32")).unwrap_err();
+        assert!(err.contains("exploration"), "{err}");
+    }
+}

@@ -1,0 +1,474 @@
+//! The persistent tuning store — learned performance state as a
+//! first-class, versioned artifact.
+//!
+//! A [`TuningStore`] is a JSON file of measured-best [`KernelParams`]
+//! keyed by `(architecture fingerprint, dtype, shape bucket)`. The
+//! serve layer consults it per request (see `serve::ThreadpoolGemm` /
+//! `serve::NativeBackend`), the online tuner commits exploration
+//! winners into it, and CI persists it across PRs
+//! (`BENCH_tunestore.json`).
+//!
+//! Robustness contract (all asserted in tests):
+//!
+//! * **Atomic writes** — temp file + rename, so a crash mid-save can
+//!   never leave a half-written store;
+//! * **Corrupt-file recovery** — an unparseable or truncated file opens
+//!   as an *empty* store (with a stderr note), never a panic;
+//! * **Schema versioning** — a file whose `schema` differs from
+//!   [`STORE_SCHEMA`] is refused wholesale (stale data is worse than no
+//!   data);
+//! * **Fingerprint isolation** — [`TuningStore::lookup`] only returns
+//!   entries measured on a machine with the *current* host fingerprint;
+//!   foreign entries are preserved on disk (so one file can serve a
+//!   fleet) but never served here.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+use crate::gemm::kernel::KernelParams;
+use crate::gemm::Precision;
+use crate::util::json;
+
+use super::fingerprint::ArchFingerprint;
+
+/// Version of the on-disk format. Bump on any incompatible change; a
+/// mismatching file is refused (treated as empty), never reinterpreted.
+pub const STORE_SCHEMA: u64 = 1;
+
+/// One measured-best tuning result.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TuneEntry {
+    /// [`ArchFingerprint::label`] of the machine that measured this.
+    pub fingerprint: String,
+    pub dtype: Precision,
+    /// Shape bucket (see [`crate::autotune::bucket_for`]).
+    pub bucket: u64,
+    /// The winning kernel blocking for this bucket.
+    pub params: KernelParams,
+    /// Measured GFLOP/s of the winner at the bucket size.
+    pub gflops: f64,
+    /// How many measured samples back this entry (accumulated across
+    /// commits for the same key).
+    pub samples: u64,
+}
+
+type Key = (String, String, u64);
+
+fn key_of(fingerprint: &str, dtype: Precision, bucket: u64) -> Key {
+    (fingerprint.to_string(), dtype.dtype().to_string(), bucket)
+}
+
+/// The versioned, fingerprint-keyed, JSON-on-disk tuning store.
+#[derive(Debug)]
+pub struct TuningStore {
+    path: Option<PathBuf>,
+    fingerprint: String,
+    entries: BTreeMap<Key, TuneEntry>,
+}
+
+impl TuningStore {
+    /// Open (or create) a store at `path`. Never fails: a missing file
+    /// is an empty store; a corrupt or schema-mismatched file is
+    /// *recovered to empty* with a stderr note (the old bytes stay on
+    /// disk until the next save). A file that exists but cannot be
+    /// READ (permissions, transient I/O) detaches persistence instead:
+    /// the store runs in-memory so a later save can never clobber
+    /// learned state it never saw.
+    pub fn open(path: &Path) -> Self {
+        let mut store = Self {
+            path: Some(path.to_path_buf()),
+            fingerprint: ArchFingerprint::detect().label(),
+            entries: BTreeMap::new(),
+        };
+        match std::fs::read_to_string(path) {
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                // no file yet: empty store, path kept for the first save
+            }
+            Err(e) => {
+                eprintln!("[autotune] tuning store {}: read failed \
+                           ({e}); running detached (in-memory) so the \
+                           unread file is never overwritten",
+                          path.display());
+                store.path = None;
+            }
+            Ok(text) => match parse_entries(&text) {
+                Ok(entries) => store.entries = entries,
+                Err(LoadRefusal::Corrupt(msg)) => {
+                    // Corrupt bytes carry no recoverable tuning data:
+                    // recovering to empty (and overwriting on the next
+                    // save) is the documented behavior.
+                    eprintln!("[autotune] tuning store {}: {msg}; \
+                               starting empty", path.display());
+                }
+                Err(LoadRefusal::Schema(msg)) => {
+                    // A schema mismatch is VALID data from a different
+                    // binary version — refuse to serve it AND refuse
+                    // to overwrite it: run detached so a later save
+                    // cannot clobber a newer store.
+                    eprintln!("[autotune] tuning store {}: {msg}; \
+                               running detached (in-memory) so the \
+                               incompatible file is never overwritten",
+                              path.display());
+                    store.path = None;
+                }
+            },
+        }
+        store
+    }
+
+    /// A store with no backing file (online tuning without
+    /// persistence, tests).
+    pub fn in_memory() -> Self {
+        Self {
+            path: None,
+            fingerprint: ArchFingerprint::detect().label(),
+            entries: BTreeMap::new(),
+        }
+    }
+
+    /// The backing file, when persistent.
+    pub fn path(&self) -> Option<&Path> {
+        self.path.as_deref()
+    }
+
+    /// The current host's fingerprint label — the only fingerprint
+    /// [`TuningStore::lookup`] serves.
+    pub fn fingerprint(&self) -> &str {
+        &self.fingerprint
+    }
+
+    /// Total entries held, including foreign-fingerprint ones.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Entries in deterministic key order (fingerprint, dtype, bucket).
+    pub fn entries(&self) -> impl Iterator<Item = &TuneEntry> {
+        self.entries.values()
+    }
+
+    /// The best known params for `(dtype, bucket)` **on this machine**.
+    /// Entries measured under a different fingerprint are never
+    /// returned — a store copied between machines falls back to
+    /// defaults instead of misfiring.
+    pub fn lookup(&self, dtype: Precision, bucket: u64)
+                  -> Option<&TuneEntry> {
+        self.entries.get(&key_of(&self.fingerprint, dtype, bucket))
+    }
+
+    /// Commit a measured winner for `(dtype, bucket)` under the current
+    /// host fingerprint and save. Sample counts accumulate across
+    /// commits for the same key.
+    pub fn commit(&mut self, dtype: Precision, bucket: u64,
+                  params: KernelParams, gflops: f64, samples: u64)
+                  -> crate::Result<()> {
+        self.commit_unsaved(dtype, bucket, params, gflops, samples);
+        self.save()
+    }
+
+    /// [`TuningStore::commit`] without the save — for callers holding
+    /// the store behind a lock: commit under the lock, then take a
+    /// [`TuningStore::snapshot`] and write it with
+    /// [`TuningStore::write_atomic`] *outside* the lock, so request
+    /// serving never blocks on the commit's file I/O.
+    pub fn commit_unsaved(&mut self, dtype: Precision, bucket: u64,
+                          params: KernelParams, gflops: f64,
+                          samples: u64) {
+        self.insert_entry(TuneEntry {
+            fingerprint: self.fingerprint.clone(),
+            dtype,
+            bucket,
+            params,
+            gflops,
+            samples,
+        });
+    }
+
+    /// Commit a fully specified entry (any fingerprint — used by tests
+    /// and by store-merging tools). Accumulates `samples` onto an
+    /// existing entry for the same key, then saves atomically.
+    pub fn commit_entry(&mut self, entry: TuneEntry)
+                        -> crate::Result<()> {
+        self.insert_entry(entry);
+        self.save()
+    }
+
+    fn insert_entry(&mut self, mut entry: TuneEntry) {
+        if !entry.gflops.is_finite() || entry.gflops < 0.0 {
+            entry.gflops = 0.0;
+        }
+        let key = key_of(&entry.fingerprint, entry.dtype, entry.bucket);
+        if let Some(prev) = self.entries.get(&key) {
+            entry.samples = entry.samples.saturating_add(prev.samples);
+        }
+        self.entries.insert(key, entry);
+    }
+
+    /// The persistence target plus the serialized bytes of the current
+    /// contents (`None` for in-memory stores). Taken under a lock,
+    /// written outside it — safe as long as writers don't race
+    /// (the serve layer has exactly one committer, the tuner worker;
+    /// concurrent out-of-process writers last-rename-wins a whole
+    /// consistent file either way).
+    pub fn snapshot(&self) -> Option<(PathBuf, String)> {
+        self.path.clone().map(|p| (p, self.serialize()))
+    }
+
+    /// Atomically write a serialized store to `path`: temp file +
+    /// rename, so readers never observe a torn file.
+    pub fn write_atomic(path: &Path, json: &str) -> crate::Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let tmp = path.with_extension("json.tmp");
+        std::fs::write(&tmp, json)?;
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    /// Atomically persist the store (no-op for in-memory stores).
+    pub fn save(&self) -> crate::Result<()> {
+        match self.snapshot() {
+            Some((path, json)) => Self::write_atomic(&path, &json),
+            None => Ok(()),
+        }
+    }
+
+    /// The on-disk JSON form (deterministic: entries in key order).
+    pub fn serialize(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{{\n  \"schema\": {STORE_SCHEMA},");
+        let _ = writeln!(out, "  \"entries\": [");
+        let total = self.entries.len();
+        for (i, e) in self.entries.values().enumerate() {
+            let comma = if i + 1 == total { "" } else { "," };
+            let _ = writeln!(
+                out,
+                "    {{\"fingerprint\": \"{}\", \"dtype\": \"{}\", \
+                 \"bucket\": {}, \"mc\": {}, \"nc\": {}, \"kc\": {}, \
+                 \"mr\": {}, \"nr\": {}, \"gflops\": {:.6}, \
+                 \"samples\": {}}}{comma}",
+                escape(&e.fingerprint), e.dtype.dtype(), e.bucket,
+                e.params.mc, e.params.nc, e.params.kc, e.params.mr,
+                e.params.nr, e.gflops, e.samples);
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Human-readable dump for CLIs and the example.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "tuning store ({}, fingerprint {}): {} entries\n",
+            self.path.as_ref()
+                .map(|p| p.display().to_string())
+                .unwrap_or_else(|| "in-memory".into()),
+            self.fingerprint, self.entries.len());
+        for e in self.entries.values() {
+            let local = if e.fingerprint == self.fingerprint {
+                ""
+            } else {
+                "  [foreign fingerprint — not served here]"
+            };
+            let _ = writeln!(
+                out,
+                "  {} n<={:<5} -> {{{}}} {:.2} GF/s ({} samples){local}",
+                e.dtype.dtype(), e.bucket, e.params.label(), e.gflops,
+                e.samples);
+        }
+        out
+    }
+}
+
+fn escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Why a store file's contents were refused — the two cases get
+/// different recovery: corrupt bytes are recovered-over, a schema
+/// mismatch (valid data from another binary version) detaches
+/// persistence so the file is never overwritten.
+#[derive(Debug, PartialEq)]
+enum LoadRefusal {
+    Corrupt(String),
+    Schema(String),
+}
+
+/// Parse a store file. Errors describe *why* the file was refused;
+/// individually malformed entries are skipped (noted), not fatal.
+fn parse_entries(text: &str)
+                 -> Result<BTreeMap<Key, TuneEntry>, LoadRefusal> {
+    let doc = json::parse(text)
+        .map_err(|e| LoadRefusal::Corrupt(format!("corrupt: {e}")))?;
+    let schema = doc.get("schema").and_then(|v| v.as_u64())
+        .ok_or_else(|| LoadRefusal::Corrupt(
+            "corrupt: no schema field".to_string()))?;
+    if schema != STORE_SCHEMA {
+        return Err(LoadRefusal::Schema(format!(
+            "schema {schema} != supported {STORE_SCHEMA}: refusing \
+             stale data")));
+    }
+    let list = doc.get("entries").and_then(|v| v.as_array())
+        .ok_or_else(|| LoadRefusal::Corrupt(
+            "corrupt: no entries array".to_string()))?;
+    let mut entries = BTreeMap::new();
+    for (i, item) in list.iter().enumerate() {
+        match parse_entry(item) {
+            Some(e) => {
+                entries.insert(key_of(&e.fingerprint, e.dtype, e.bucket),
+                               e);
+            }
+            None => {
+                eprintln!("[autotune] tuning store: skipping malformed \
+                           entry #{i}");
+            }
+        }
+    }
+    Ok(entries)
+}
+
+fn parse_entry(v: &json::Value) -> Option<TuneEntry> {
+    let fingerprint = v.get("fingerprint")?.as_str()?.to_string();
+    let dtype = Precision::parse(v.get("dtype")?.as_str()?)?;
+    let bucket = v.get("bucket")?.as_u64()?;
+    if bucket == 0 {
+        return None;
+    }
+    let field = |name: &str| v.get(name)?.as_u64().map(|u| u as usize);
+    let params = KernelParams::new(field("mc")?, field("nc")?,
+                                   field("kc")?, field("mr")?,
+                                   field("nr")?)
+        .ok()?;
+    let gflops = v.get("gflops")?.as_f64()?;
+    let samples = v.get("samples")?.as_u64()?;
+    Some(TuneEntry { fingerprint, dtype, bucket, params, gflops,
+                     samples })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> KernelParams {
+        KernelParams::new(96, 128, 160, 8, 4).unwrap()
+    }
+
+    #[test]
+    fn in_memory_roundtrip_through_serialize() {
+        let mut s = TuningStore::in_memory();
+        assert!(s.is_empty());
+        s.commit(Precision::F64, 512, params(), 3.25, 2).unwrap();
+        let e = s.lookup(Precision::F64, 512).expect("committed");
+        assert_eq!(e.params, params());
+        assert_eq!(e.samples, 2);
+        // reparse the serialized form: identical params
+        let reparsed = parse_entries(&s.serialize()).unwrap();
+        assert_eq!(reparsed.len(), 1);
+        let e2 = reparsed.values().next().unwrap();
+        assert_eq!(e2.params, params());
+        assert_eq!(e2.bucket, 512);
+        assert!((e2.gflops - 3.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn samples_accumulate_on_recommit() {
+        let mut s = TuningStore::in_memory();
+        s.commit(Precision::F32, 128, params(), 1.0, 2).unwrap();
+        s.commit(Precision::F32, 128, params(), 2.0, 3).unwrap();
+        let e = s.lookup(Precision::F32, 128).unwrap();
+        assert_eq!(e.samples, 5);
+        assert!((e.gflops - 2.0).abs() < 1e-12, "winner replaced");
+    }
+
+    #[test]
+    fn lookup_misses_other_dtype_and_bucket() {
+        let mut s = TuningStore::in_memory();
+        s.commit(Precision::F64, 512, params(), 1.0, 1).unwrap();
+        assert!(s.lookup(Precision::F32, 512).is_none());
+        assert!(s.lookup(Precision::F64, 256).is_none());
+    }
+
+    #[test]
+    fn foreign_fingerprint_never_served() {
+        let mut s = TuningStore::in_memory();
+        s.commit_entry(TuneEntry {
+            fingerprint: "alien/c96/sve2".into(),
+            dtype: Precision::F64,
+            bucket: 512,
+            params: params(),
+            gflops: 99.0,
+            samples: 10,
+        }).unwrap();
+        assert_eq!(s.len(), 1, "foreign entry is kept");
+        assert!(s.lookup(Precision::F64, 512).is_none(),
+                "but never served under this host's fingerprint");
+    }
+
+    #[test]
+    fn schema_mismatch_refused_as_schema_not_corrupt() {
+        let text = r#"{"schema": 999, "entries": []}"#;
+        match parse_entries(text).unwrap_err() {
+            LoadRefusal::Schema(msg) => {
+                assert!(msg.contains("refusing stale data"), "{msg}");
+            }
+            other => panic!("schema mismatch misclassified: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn corrupt_text_is_an_error_not_a_panic() {
+        for bad in ["", "{", "not json at all",
+                    r#"{"entries": []}"#,
+                    r#"{"schema": 1}"#] {
+            assert!(matches!(parse_entries(bad),
+                             Err(LoadRefusal::Corrupt(_))), "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn malformed_entries_skipped_rest_kept() {
+        let text = format!(
+            r#"{{"schema": 1, "entries": [
+                {{"fingerprint": "fp", "dtype": "f64", "bucket": 64,
+                  "mc": 32, "nc": 32, "kc": 32, "mr": 4, "nr": 4,
+                  "gflops": 1.5, "samples": 1}},
+                {{"fingerprint": "fp", "dtype": "f64", "bucket": 0,
+                  "mc": 32, "nc": 32, "kc": 32, "mr": 4, "nr": 4,
+                  "gflops": 1.5, "samples": 1}},
+                {{"dtype": "nonsense"}}
+            ]}}"#);
+        let entries = parse_entries(&text).unwrap();
+        assert_eq!(entries.len(), 1, "only the valid entry survives");
+    }
+
+    #[test]
+    fn nonfinite_gflops_clamped() {
+        let mut s = TuningStore::in_memory();
+        s.commit(Precision::F64, 64, params(), f64::NAN, 1).unwrap();
+        assert_eq!(s.lookup(Precision::F64, 64).unwrap().gflops, 0.0);
+    }
+
+    #[test]
+    fn render_mentions_foreign_entries() {
+        let mut s = TuningStore::in_memory();
+        s.commit(Precision::F64, 64, params(), 1.0, 1).unwrap();
+        s.commit_entry(TuneEntry {
+            fingerprint: "alien/c96/sve2".into(),
+            dtype: Precision::F32,
+            bucket: 128,
+            params: params(),
+            gflops: 2.0,
+            samples: 1,
+        }).unwrap();
+        let r = s.render();
+        assert!(r.contains("2 entries"), "{r}");
+        assert!(r.contains("foreign fingerprint"), "{r}");
+    }
+}

@@ -33,6 +33,10 @@
 //!   `tuner::measured`, which times the *real* tuned host kernel per
 //!   point instead of asking the machine model
 //!   (`alpaka-bench autotune --measured`).
+//! * [`autotune`] — **online autotuning**: the persistent,
+//!   fingerprint-keyed [`autotune::TuningStore`], the background
+//!   `tune:explore` shard, and per-request kernel selection in the
+//!   serve layer (see "The autotuning lifecycle" below).
 //! * [`runtime`] — the PJRT side: loads the AOT-lowered HLO text
 //!   artifacts of the *real* single-source Pallas kernel and executes
 //!   them on the host CPU (the sixth, "native" architecture).
@@ -78,6 +82,49 @@
 //! paper's "without changing a single line" claim, numerically
 //! enforced).
 //!
+//! # The autotuning lifecycle
+//!
+//! Cold start → exploration → store hit → invalidation:
+//!
+//! Tuning is an *online service*, not a CLI step — the store is the
+//! plane of learned performance state every adaptive feature builds
+//! on:
+//!
+//! 1. **Cold start** — a serve layer with `ServeConfig::online_tune`
+//!    answers every request correctly from the first one: untuned
+//!    `(dtype, shape bucket)`s run with the built-in
+//!    `KernelParams::for_n` defaults (digest-checked like always).
+//!    Nothing waits for tuning.
+//! 2. **Exploration** — the dispatcher notices the untuned bucket and
+//!    seeds ONE bounded exploration job on the background
+//!    `tune:explore` shard: a budgeted `tuner::strategies` search
+//!    (hill climbing, NOT the full grid) over measured GFLOP/s of the
+//!    real kernel, with the default blocking always measured as a
+//!    baseline candidate — the committed winner is never slower than
+//!    the default it replaces. Jobs past the tuner's hard line bound
+//!    are shed and counted (`ServeMetrics::tune_shed`), then retried
+//!    by a later request; serving traffic never queues behind tuning.
+//! 3. **Store hit** — the winner is committed to the
+//!    [`autotune::TuningStore`] (atomic temp-file + rename, schema
+//!    versioned, keyed by `(arch fingerprint, dtype, bucket)`).
+//!    From the next request on, both native backends run the stored
+//!    params for that bucket; replies carry a `…@store` kernel-label
+//!    suffix so tuned serving shows up in load reports and
+//!    `BENCH_serve.json`/`BENCH_tunestore.json`.
+//! 4. **Invalidation** — entries are invalidated by *identity*, not
+//!    time: the store only serves entries whose fingerprint (core
+//!    count + detected ISA features) matches the running host, so a
+//!    store copied to different hardware degrades to defaults and
+//!    re-explores; a `schema` bump refuses the whole file; a corrupt
+//!    file recovers to empty. Re-commits for a bucket accumulate
+//!    sample counts and replace the params.
+//!
+//! CLI: `alpaka-bench autotune --measured --store PATH [--warm]`
+//! (write/pre-populate), `alpaka-bench serve --tuning-store PATH
+//! --online-tune` (serve + learn). `cargo bench --bench
+//! tunestore_gate` warms `BENCH_tunestore.json` and gates warmed
+//! serving ≥ default-params serving at N=512 f64.
+//!
 //! # The backend-shard contract (how to add a backend)
 //!
 //! A serve-layer backend is a [`serve::Backend`]: one method turning a
@@ -101,7 +148,20 @@
 //! Queueing, admission control, batching, caching, cancellation,
 //! shutdown draining, **overload control** and metrics are inherited —
 //! a new backend adds zero worker-loop code, which is the whole point
-//! (cf. the paper: one implementation, many architectures).
+//! (cf. the paper: one implementation, many architectures). The
+//! background tuning shard (`ShardKey::Tuner`, label `tune:explore`,
+//! backend `autotune::TunerBackend`) is itself registered through this
+//! contract, with two deliberate specializations: it is the system's
+//! **lowest-priority** work — the dispatcher only ever feeds it with
+//! non-blocking pushes against a hard outstanding-line bound (1), so
+//! an exploration is shed (counted, retried later) rather than ever
+//! delaying a serving request — and its shard cache is always
+//! disabled (a repeated exploration must re-check the store, not
+//! replay a stale reply). Dispatcher-synthesized exploration jobs are
+//! *internal*: they execute and reply like any request but are
+//! excluded from the user-facing request counters (tracked in the
+//! dedicated `ServeMetrics::tune_*` counters instead), so
+//! `submitted == ok + shed + failed` keeps holding for real traffic.
 //!
 //! ## Overload knobs
 //!
@@ -120,6 +180,7 @@
 //! overload.
 
 pub mod arch;
+pub mod autotune;
 pub mod cli;
 pub mod coordinator;
 pub mod gemm;

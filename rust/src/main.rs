@@ -73,6 +73,14 @@ fn cli() -> Cli {
                     OptSpec::value("precision", Some("f64"), "f32|f64"),
                     OptSpec::value("reps", Some("5"),
                                    "timed runs per point (best-of)"),
+                    OptSpec::value("store", None,
+                                   "tuning-store path: commit the \
+                                    winner for serving (same store \
+                                    `serve --tuning-store` reads)"),
+                    OptSpec::flag("warm",
+                                  "with --store: pre-populate the \
+                                   other serving buckets (64..512) \
+                                   with quick budgeted explorations"),
                 ],
             },
             CommandSpec {
@@ -153,6 +161,15 @@ fn cli() -> Cli {
                     OptSpec::value("rate", Some("0"),
                                    "open-loop rate in req/s for \
                                     --overload (0 = auto: 4x measured)"),
+                    OptSpec::value("tuning-store", None,
+                                   "persistent tuning store: native \
+                                    shards serve each request with its \
+                                    bucket's measured-best params"),
+                    OptSpec::flag("online-tune",
+                                  "background-tune untuned buckets \
+                                   while serving (commits to \
+                                   --tuning-store, or an in-memory \
+                                   store)"),
                 ],
             },
             CommandSpec {
@@ -354,6 +371,45 @@ fn cmd_autotune(p: &Parsed) -> Result<()> {
               self-consistency {:.3})",
              best.point.t, best.gflops, params.label(),
              measured::self_consistency(&results).unwrap_or(0.0));
+
+    // Persist the winner for the serve layer: the SAME store
+    // `serve --tuning-store` reads (and --online-tune feeds).
+    if let Some(store_path) = p.get("store") {
+        use alpaka_rs::autotune::{self, TuningStore};
+
+        let mut store = TuningStore::open(Path::new(store_path));
+        let bucket = autotune::bucket_for(n);
+        if bucket == n {
+            store.commit(prec, bucket, params, best.gflops,
+                         reps as u64)?;
+            println!("committed {} n<={bucket} -> {{{}}} into {}",
+                     prec.dtype(), params.label(), store_path);
+        } else {
+            eprintln!("note: N={n} is not a bucket size (bucket \
+                       {bucket}); not committing a sweep measured off \
+                       its bucket — rerun with a power-of-two N or use \
+                       --warm");
+        }
+        if p.has_flag("warm") {
+            for bucket in [64u64, 128, 256, 512] {
+                if store.lookup(prec, bucket).is_some() {
+                    continue;
+                }
+                let out = autotune::explore_bucket(prec, bucket, 4,
+                                                   reps.min(3));
+                store.commit(prec, bucket, out.params, out.gflops,
+                             reps.min(3) as u64)?;
+                println!("warmed {} n<={bucket} -> {{{}}} \
+                          ({:.2} GF/s, {} evals)",
+                         prec.dtype(), out.params.label(), out.gflops,
+                         out.evals);
+            }
+        }
+        print!("{}", store.render());
+    } else {
+        anyhow::ensure!(!p.has_flag("warm"),
+                        "--warm needs --store PATH");
+    }
     Ok(())
 }
 
@@ -469,6 +525,10 @@ fn cmd_serve(p: &Parsed) -> Result<()> {
             as usize,
         shed,
         shard_quota: if quota == 0 { None } else { Some(quota) },
+        tuning_store: p.get("tuning-store")
+            .map(|s| Path::new(s).to_path_buf()),
+        online_tune: p.has_flag("online-tune"),
+        ..ServeConfig::default()
     };
     let serve = Serve::start(cfg.clone())?;
 
@@ -481,6 +541,10 @@ fn cmd_serve(p: &Parsed) -> Result<()> {
         let probe_serve = Serve::start(ServeConfig {
             shed: ShedPolicy::None,
             shard_quota: None,
+            // the probe must not race the real layer for the store
+            // file or double-explore buckets
+            tuning_store: None,
+            online_tune: false,
             ..cfg.clone()
         })?;
         let sustainable = loadgen::measure_sustainable_rps(
@@ -512,6 +576,11 @@ fn cmd_serve(p: &Parsed) -> Result<()> {
             println!("  {shard}: {count} served");
         }
         println!("{}", serve.summary());
+        if let Some(store) = serve.tuning_store() {
+            if let Ok(g) = store.lock() {
+                print!("{}", g.render());
+            }
+        }
         serve.shutdown();
         anyhow::ensure!(out.fully_accounted(), "reply accounting leak");
         anyhow::ensure!(out.failed == 0, "{} requests failed: {:?}",
@@ -529,6 +598,11 @@ fn cmd_serve(p: &Parsed) -> Result<()> {
              archs.len(), spec.items.len());
     let outcome = loadgen::run_closed_loop(&serve, &spec);
     print!("{}", loadgen::outcome_report(&outcome, &serve));
+    if let Some(store) = serve.tuning_store() {
+        if let Ok(g) = store.lock() {
+            print!("{}", g.render());
+        }
+    }
     serve.shutdown();
     anyhow::ensure!(outcome.failed == 0, "{} requests failed",
                     outcome.failed);

@@ -35,6 +35,7 @@ use std::time::{Duration, Instant};
 use std::sync::Mutex;
 
 use crate::arch::ArchId;
+use crate::autotune::{bucket_for, SharedTuningStore};
 use crate::gemm::kernel::{self, KernelParams};
 use crate::gemm::{metrics as gemm_metrics, verify, Precision};
 use crate::runtime::artifact::{ArtifactMeta, Manifest};
@@ -87,6 +88,12 @@ pub enum WorkPayload {
     Point(TuningPoint),
     /// Execute a lowered artifact on the named native shard.
     Artifact { id: String, engine: NativeEngineId },
+    /// Explore kernel params for one `(dtype, shape bucket)` on the
+    /// background `tune:explore` shard and commit the winner to the
+    /// tuning store. Usually synthesized by the dispatcher when
+    /// online tuning is enabled; submitting one explicitly is the
+    /// programmatic warm-up path.
+    Explore { dtype: Precision, bucket: u64 },
 }
 
 /// One unit of serveable work: a payload plus an optional **deadline**.
@@ -123,6 +130,15 @@ impl WorkItem {
         }
     }
 
+    /// A bounded kernel-param exploration for `(dtype, bucket)` on the
+    /// background tuning shard (see [`crate::autotune`]).
+    pub fn explore(dtype: Precision, bucket: u64) -> Self {
+        Self {
+            payload: WorkPayload::Explore { dtype, bucket },
+            deadline: None,
+        }
+    }
+
     /// Absolute deadline (builder style).
     pub fn with_deadline(mut self, at: Instant) -> Self {
         self.deadline = Some(at);
@@ -146,6 +162,7 @@ impl WorkItem {
             WorkPayload::Artifact { engine, .. } => {
                 ShardKey::Native(*engine)
             }
+            WorkPayload::Explore { .. } => ShardKey::Tuner,
         }
     }
 
@@ -157,6 +174,9 @@ impl WorkItem {
         match &self.payload {
             WorkPayload::Point(p) => format!("point:{p:?}"),
             WorkPayload::Artifact { id, .. } => format!("artifact:{id}"),
+            WorkPayload::Explore { dtype, bucket } => {
+                format!("explore:{}:{bucket}", dtype.dtype())
+            }
         }
     }
 }
@@ -168,6 +188,11 @@ impl WorkItem {
 pub enum ShardKey {
     Sim(ArchId),
     Native(NativeEngineId),
+    /// The background online-tuning shard (`tune:explore`): one
+    /// worker, a hard-bounded queue, lowest effective priority — the
+    /// dispatcher only ever feeds it with non-blocking pushes and
+    /// sheds explorations rather than delaying serving traffic.
+    Tuner,
 }
 
 impl ShardKey {
@@ -175,6 +200,7 @@ impl ShardKey {
         match self {
             ShardKey::Sim(a) => format!("sim:{}", a.slug()),
             ShardKey::Native(e) => format!("native:{}", e.slug()),
+            ShardKey::Tuner => "tune:explore".to_string(),
         }
     }
 }
@@ -205,9 +231,27 @@ pub enum Output {
         engine: NativeEngine,
         /// Which kernel produced the numbers: `pjrt` for device
         /// execution, `tuned{mc=..,nc=..,kc=..,mr=..,nr=..}` for the
-        /// packed host kernel, `naive` for the plain-loop reference —
-        /// so tuning wins (and regressions) are attributable per reply.
+        /// packed host kernel (suffixed `@store` when the params came
+        /// from the tuning store rather than the built-in default),
+        /// `naive` for the plain-loop reference — so tuning wins (and
+        /// regressions) are attributable per reply.
         kernel: String,
+    },
+    /// A background exploration served by the `tune:explore` shard.
+    Tuned {
+        dtype: Precision,
+        bucket: u64,
+        /// Label of the winning [`KernelParams`].
+        params: String,
+        /// Measured GFLOP/s of the winner at the bucket size.
+        gflops: f64,
+        /// Kernel timings spent (0 when the bucket was already tuned).
+        evals: usize,
+        /// Exploration wall time in seconds.
+        seconds: f64,
+        /// Whether this run committed a new store entry (`false`: the
+        /// bucket was already tuned by the time the job executed).
+        committed: bool,
     },
 }
 
@@ -260,6 +304,9 @@ impl Backend for SimBackend {
             WorkPayload::Artifact { id, .. } => Err(format!(
                 "sim shard {} cannot execute artifact {id}",
                 self.arch.label())),
+            WorkPayload::Explore { .. } => Err(format!(
+                "sim shard {} cannot run tuning explorations",
+                self.arch.label())),
         }
     }
 }
@@ -285,7 +332,40 @@ pub struct NativeSpec {
 }
 
 /// Largest N the host fallback will multiply (O(N^3) on one thread).
-const HOST_GEMM_MAX_N: u64 = 1024;
+/// Also the upper edge of the online tuner's bucket range — the
+/// dispatcher never seeds an exploration for shapes the host kernels
+/// cannot serve.
+pub(crate) const HOST_GEMM_MAX_N: u64 = 1024;
+
+/// Resolve the kernel blocking for one artifact spec: the tuning
+/// store's measured winner for `(dtype, bucket)` when one exists for
+/// this machine's fingerprint (sanitized to the actual N), the
+/// built-in [`KernelParams::for_n`] default otherwise. Returns the
+/// params plus whether they came from the store — both native
+/// backends share this so selection semantics (and the `@store` label
+/// suffix) cannot drift apart. A poisoned store lock degrades to
+/// defaults: selection must never take down the serving path.
+fn params_for_spec(store: &Option<SharedTuningStore>, spec: &NativeSpec)
+                   -> (KernelParams, bool) {
+    let n = spec.n as usize;
+    if let Some(store) = store {
+        if let Ok(g) = store.lock() {
+            if let Some(e) = g.lookup(spec.precision,
+                                      bucket_for(spec.n)) {
+                return (e.params.sanitized(n), true);
+            }
+        }
+    }
+    (KernelParams::for_n(n), false)
+}
+
+/// The serve-layer kernel label for a blocking choice:
+/// `tuned{mc=..,..}` for defaults, with an `@store` suffix when the
+/// params came from the tuning store.
+fn kernel_label(params: &KernelParams, from_store: bool) -> String {
+    format!("tuned{{{}}}{}", params.label(),
+            if from_store { "@store" } else { "" })
+}
 
 /// Whether the host reference GEMM can legally reproduce a manifest
 /// artifact — the SAME predicate both native backends use, exposed so
@@ -439,6 +519,9 @@ pub struct NativeBackend {
     /// Set after the first engine-level PJRT failure; logged once.
     pjrt_dead: bool,
     host_inputs: HashMap<String, HostInputs>,
+    /// Per-request kernel selection source (tuning store). `None` =
+    /// always the built-in defaults.
+    store: Option<SharedTuningStore>,
 }
 
 impl NativeBackend {
@@ -464,7 +547,7 @@ impl NativeBackend {
             }
         };
         Self { catalog, pjrt, pjrt_dead: false,
-               host_inputs: HashMap::new() }
+               host_inputs: HashMap::new(), store: None }
     }
 
     /// Manifest-less backend over synthetic artifact ids (load testing
@@ -472,7 +555,18 @@ impl NativeBackend {
     /// [`parse_artifact_id`].
     pub fn synthetic(ids: &[String]) -> Result<Self, String> {
         Ok(Self { catalog: synthetic_catalog(ids)?, pjrt: None,
-                  pjrt_dead: false, host_inputs: HashMap::new() })
+                  pjrt_dead: false, host_inputs: HashMap::new(),
+                  store: None })
+    }
+
+    /// Attach a tuning store: the host fallback then runs each
+    /// request with the store's measured-best params for its
+    /// `(dtype, bucket)` (falling back to defaults on a miss), and
+    /// labels such replies `…@store`.
+    pub fn with_store(mut self, store: Option<SharedTuningStore>)
+                      -> Self {
+        self.store = store;
+        self
     }
 
     pub fn artifact_ids(&self) -> Vec<String> {
@@ -492,7 +586,9 @@ impl NativeBackend {
                 spec.id));
         }
         let n = spec.n as usize;
-        let params = KernelParams::for_n(n);
+        // Per-request selection: the store's measured winner for this
+        // (dtype, bucket) when present, defaults otherwise.
+        let (params, from_store) = params_for_spec(&self.store, spec);
         if !self.host_inputs.contains_key(&spec.id) {
             self.host_inputs.insert(spec.id.clone(),
                                     build_host_inputs(spec));
@@ -517,7 +613,7 @@ impl NativeBackend {
             }
         }
         Ok((t0.elapsed().as_secs_f64(),
-            format!("tuned{{{}}}", params.label())))
+            kernel_label(&params, from_store)))
     }
 }
 
@@ -529,10 +625,9 @@ impl Backend for NativeBackend {
     fn run(&mut self, item: &WorkItem) -> Result<Output, String> {
         let id = match &item.payload {
             WorkPayload::Artifact { id, .. } => id,
-            WorkPayload::Point(p) => {
+            other => {
                 return Err(format!(
-                    "native shard cannot evaluate simulated point on {}",
-                    p.arch.label()));
+                    "native shard cannot serve {other:?}"));
             }
         };
         let spec = self
@@ -622,11 +717,21 @@ pub struct ThreadpoolGemm {
     // lives on its own thread; a cross-shard input store would couple
     // their lifetimes for ~MBs of regenerable data).
     inputs: HashMap<String, Arc<HostInputs>>,
-    oracles: HashMap<String, OracleDigest>,
+    /// Oracle digests keyed by `(artifact, mc)`: the digest's chunked
+    /// reduction order depends on the fan-out chunking, which follows
+    /// the kernel's `mc` — when the tuning store commits a different
+    /// blocking for a bucket, the artifact gets ONE more sequential
+    /// oracle build under the new chunking (bounded: params change at
+    /// most once per store commit, not per request).
+    oracles: HashMap<(String, usize), OracleDigest>,
     /// How many oracle digests were ever computed — exactly one per
-    /// distinct artifact served, never one per request (the O(N³)
-    /// sequential reference must not sit on the request path).
+    /// distinct `(artifact, blocking)` served, never one per request
+    /// (the O(N³) sequential reference must not sit on the request
+    /// path).
     oracle_builds: usize,
+    /// Per-request kernel selection source (tuning store). `None` =
+    /// always the built-in defaults.
+    store: Option<SharedTuningStore>,
 }
 
 impl ThreadpoolGemm {
@@ -658,7 +763,17 @@ impl ThreadpoolGemm {
             ThreadPool::new(threads)
         };
         Self { catalog, pool, inputs: HashMap::new(),
-               oracles: HashMap::new(), oracle_builds: 0 }
+               oracles: HashMap::new(), oracle_builds: 0, store: None }
+    }
+
+    /// Attach a tuning store: each request then runs with the store's
+    /// measured-best params for its `(dtype, bucket)` (defaults on a
+    /// miss), labelled `…@store`. The digest oracle follows the
+    /// selected blocking (see the `oracles` field).
+    pub fn with_store(mut self, store: Option<SharedTuningStore>)
+                      -> Self {
+        self.store = store;
+        self
     }
 
     pub fn threads(&self) -> usize {
@@ -672,17 +787,10 @@ impl ThreadpoolGemm {
     }
 
     /// How many sequential oracle digests this backend has computed —
-    /// at most one per distinct artifact, regardless of request count
-    /// (asserted in tests).
+    /// at most one per distinct `(artifact, blocking)`, regardless of
+    /// request count (asserted in tests).
     pub fn oracle_builds(&self) -> usize {
         self.oracle_builds
-    }
-
-    /// The tuned-kernel blocking used for artifacts of size `n` — ONE
-    /// deterministic mapping, so the fan-out chunking, the oracle's
-    /// chunk-ordered digest and the reply's kernel label always agree.
-    fn params_for(n: usize) -> KernelParams {
-        KernelParams::for_n(n)
     }
 
     /// Row partition for the tuned-kernel fan-out: every pool thread
@@ -701,28 +809,41 @@ impl ThreadpoolGemm {
             .collect()
     }
 
-    /// Ensure inputs + the sequential reference digest exist for `spec`.
+    /// Ensure the deterministic input matrices exist for `spec`.
+    fn ensure_inputs(&mut self, spec: &NativeSpec) {
+        if !self.inputs.contains_key(&spec.id) {
+            self.inputs.insert(spec.id.clone(),
+                               Arc::new(build_host_inputs(spec)));
+        }
+    }
+
+    /// Ensure the sequential reference digest exists for `spec` under
+    /// the chunking that `mc` implies.
     ///
     /// Cold-start cost, deliberately accepted: the oracle is a full
     /// **sequential** GEMM (its independence from the pool fan-out is
-    /// the whole point of the check), run ONCE per artifact on the
-    /// shard worker — the same first-touch stall shape as the PJRT
-    /// shard's kernel load/compile. Under `ShedPolicy::ShedExpired`,
+    /// the whole point of the check), run ONCE per `(artifact,
+    /// blocking)` on the shard worker — the same first-touch stall
+    /// shape as the PJRT shard's kernel load/compile, repeated at most
+    /// once more when the tuning store commits a new blocking for the
+    /// artifact's bucket. Under `ShedPolicy::ShedExpired`,
     /// tight-deadline requests queued behind a cold large artifact may
     /// be shed during this warmup; that is the configured overload
-    /// behavior (the shard IS saturated), bounded to one occurrence
-    /// per artifact lifetime.
-    fn ensure_inputs(&mut self, spec: &NativeSpec) {
-        if self.inputs.contains_key(&spec.id) {
+    /// behavior (the shard IS saturated), bounded per artifact
+    /// lifetime.
+    fn ensure_oracle(&mut self, spec: &NativeSpec, mc: usize) {
+        let key = (spec.id.clone(), mc);
+        if self.oracles.contains_key(&key) {
             return;
         }
-        let inputs = Arc::new(build_host_inputs(spec));
+        let inputs = Arc::clone(self.inputs.get(&spec.id)
+                                    .expect("ensure_inputs first"));
         let n = spec.n as usize;
         // Sequential NAIVE oracle (the plain `_rows` reference — the
         // tuned kernel must never verify itself against itself),
         // digested with the SAME row chunking the parallel path uses,
         // so the reductions associate identically.
-        let chunks = self.chunks(n, Self::params_for(n).mc);
+        let chunks = self.chunks(n, mc);
         let (sum, abs_sum) = match &*inputs {
             HostInputs::F32 { a, b, c } => {
                 let full = verify::gemm_f32_rows(n, 0, n, a, b, c,
@@ -741,17 +862,16 @@ impl ThreadpoolGemm {
             }
         };
         self.oracle_builds += 1;
-        self.oracles.insert(spec.id.clone(),
-                            OracleDigest { sum, abs_sum });
-        self.inputs.insert(spec.id.clone(), inputs);
+        self.oracles.insert(key, OracleDigest { sum, abs_sum });
     }
 
-    /// One parallel run of the tuned kernel over `mc`-aligned row-panel
-    /// blocks: returns (seconds, sum, abs_sum) of the output.
-    fn par_run(&self, spec: &NativeSpec)
+    /// One parallel run of the tuned kernel under `params` over
+    /// `mc`-aligned row-panel blocks: returns (seconds, sum, abs_sum)
+    /// of the output.
+    fn par_run(&self, spec: &NativeSpec, params: &KernelParams)
                -> Result<(f64, f64, f64), String> {
         let n = spec.n as usize;
-        let params = Self::params_for(n);
+        let params = *params;
         let inputs = Arc::clone(self.inputs.get(&spec.id)
                                     .expect("ensure_inputs first"));
         let chunks = self.chunks(n, params.mc);
@@ -841,10 +961,9 @@ impl Backend for ThreadpoolGemm {
     fn run(&mut self, item: &WorkItem) -> Result<Output, String> {
         let id = match &item.payload {
             WorkPayload::Artifact { id, .. } => id,
-            WorkPayload::Point(p) => {
+            other => {
                 return Err(format!(
-                    "threadpool shard cannot evaluate simulated point \
-                     on {}", p.arch.label()));
+                    "threadpool shard cannot serve {other:?}"));
             }
         };
         let spec = self
@@ -858,11 +977,17 @@ impl Backend for ThreadpoolGemm {
                  only reproduces square gemm/dot with known seeds)",
                 spec.id));
         }
+        // Per-request selection: store winner for this (dtype, bucket)
+        // when present, defaults otherwise. The oracle digest follows
+        // the selected blocking (chunking depends on mc).
+        let (params, from_store) = params_for_spec(&self.store, &spec);
         self.ensure_inputs(&spec);
-        let (seconds, sum, abs_sum) = self.par_run(&spec)?;
+        self.ensure_oracle(&spec, params.mc);
+        let (seconds, sum, abs_sum) = self.par_run(&spec, &params)?;
         // Runtime oracle check: every served result is digest-verified
         // against the sequential reference computed at setup.
-        let oracle = self.oracles.get(id).expect("ensure_inputs first");
+        let oracle = self.oracles.get(&(id.clone(), params.mc))
+            .expect("ensure_oracle first");
         let scale = oracle.abs_sum.max(abs_sum).max(1.0);
         let rtol = digest_rtol(spec.precision);
         if (sum - oracle.sum).abs() > rtol * scale {
@@ -875,8 +1000,7 @@ impl Backend for ThreadpoolGemm {
             seconds,
             gflops: spec.flops.map(|f| f as f64 / seconds / 1e9),
             engine: NativeEngine::ThreadpoolGemm,
-            kernel: format!("tuned{{{}}}",
-                            Self::params_for(spec.n as usize).label()),
+            kernel: kernel_label(&params, from_store),
         })
     }
 }
@@ -1077,7 +1201,9 @@ mod tests {
         let c = prng::matrix_f64(prng::seed_for(&id, 2), n, n);
         let full = verify::gemm_f64_rows(n, 0, n, &a, &bm, &c, 1.0, 1.0);
         let (seq_sum, seq_abs) = sum_abs_f64(&full);
-        let oracle = b.oracles.get(&id).expect("oracle recorded");
+        // default blocking for n=64 has mc=64 (the oracle map's key)
+        let oracle = b.oracles.get(&(id.clone(), 64))
+            .expect("oracle recorded");
         assert!((oracle.sum - seq_sum).abs()
                     <= 1e-9 * seq_abs.max(1.0),
                 "oracle {} vs sequential {}", oracle.sum, seq_sum);
@@ -1145,6 +1271,93 @@ mod tests {
             }
             other => panic!("unexpected output {other:?}"),
         }
+    }
+
+    #[test]
+    fn store_params_select_and_oracle_follows_the_new_blocking() {
+        use crate::autotune::TuningStore;
+        let id = "gemm_n64_t16_e1_f64".to_string();
+        let store = Arc::new(Mutex::new(TuningStore::in_memory()));
+        let mut b = ThreadpoolGemm::synthetic(&[id.clone()], 3)
+            .unwrap()
+            .with_store(Some(Arc::clone(&store)));
+        // cold store: defaults serve, no @store suffix
+        match b.run(&WorkItem::artifact_on(
+            id.clone(), NativeEngineId::Threadpool)).unwrap()
+        {
+            Output::Native { kernel, .. } => {
+                assert!(kernel.starts_with("tuned{"), "{kernel}");
+                assert!(!kernel.ends_with("@store"), "{kernel}");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(b.oracle_builds(), 1);
+        // commit a DIFFERENT blocking (mc=32): selection must pick it
+        // up on the very next request, rebuild the oracle once under
+        // the new chunking, and the digest check must still pass
+        // (Ok IS the verification).
+        store.lock().unwrap()
+            .commit(Precision::F64, 64,
+                    KernelParams::new(32, 64, 32, 4, 4).unwrap(),
+                    1.0, 1)
+            .unwrap();
+        match b.run(&WorkItem::artifact_on(
+            id.clone(), NativeEngineId::Threadpool)).unwrap()
+        {
+            Output::Native { kernel, .. } => {
+                assert!(kernel.contains("mc=32"), "{kernel}");
+                assert!(kernel.ends_with("@store"), "{kernel}");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(b.oracle_builds(), 2,
+                   "one more oracle for the new blocking");
+        // repeat: no further oracle builds
+        b.run(&WorkItem::artifact_on(
+            id.clone(), NativeEngineId::Threadpool)).unwrap();
+        assert_eq!(b.oracle_builds(), 2);
+    }
+
+    #[test]
+    fn native_backend_host_fallback_consults_store() {
+        use crate::autotune::TuningStore;
+        let id = "gemm_n64_t16_e1_f32".to_string();
+        let store = Arc::new(Mutex::new(TuningStore::in_memory()));
+        store.lock().unwrap()
+            .commit(Precision::F32, 64,
+                    KernelParams::new(16, 16, 16, 2, 2).unwrap(),
+                    1.0, 1)
+            .unwrap();
+        let mut b = NativeBackend::synthetic(&[id.clone()]).unwrap()
+            .with_store(Some(store));
+        match b.run(&WorkItem::artifact(id)).unwrap() {
+            Output::Native { kernel, engine, .. } => {
+                assert_eq!(engine, NativeEngine::HostGemm);
+                assert!(kernel.ends_with("@store"), "{kernel}");
+                assert!(kernel.contains("mc=16"), "{kernel}");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn explore_items_route_to_the_tuner_shard() {
+        let w = WorkItem::explore(Precision::F64, 128);
+        assert_eq!(w.shard_key(), ShardKey::Tuner);
+        assert_eq!(ShardKey::Tuner.label(), "tune:explore");
+        assert_eq!(w.cache_key(), "explore:f64:128");
+        assert_ne!(w.cache_key(),
+                   WorkItem::explore(Precision::F32, 128).cache_key());
+        // compute backends refuse exploration payloads explicitly
+        let park = MachinePark::default();
+        let mut sim = SimBackend::new(ArchId::Knl, &park);
+        assert!(sim.run(&w).is_err());
+        let mut tp = ThreadpoolGemm::synthetic(
+            &["dot_n64_f32".to_string()], 1).unwrap();
+        assert!(tp.run(&w).is_err());
+        let mut nb = NativeBackend::synthetic(
+            &["dot_n64_f32".to_string()]).unwrap();
+        assert!(nb.run(&w).is_err());
     }
 
     #[test]

@@ -93,12 +93,15 @@ pub struct LoadOutcome {
     /// "threadpool-gemm").
     pub per_engine: BTreeMap<String, usize>,
     /// Completed native requests per kernel label ("pjrt" /
-    /// "tuned{mc=..,..}" / "naive") — which kernel actually produced
-    /// each result, so tuning wins are attributable in load reports.
+    /// "tuned{mc=..,..}" / "tuned{..}@store" / "naive") — which kernel
+    /// actually produced each result, so tuning wins are attributable
+    /// in load reports. BTreeMap: iteration (and thus every report
+    /// built from it) is sorted by kernel label, stable across runs.
     pub per_kernel: BTreeMap<String, usize>,
     /// Largest coalesced batch any reply reported.
     pub max_batch_seen: usize,
-    /// Error strings observed (deduplicated, for diagnostics).
+    /// Error strings observed (deduplicated and **sorted** — reply
+    /// arrival order is nondeterministic, reports must not be).
     pub errors: Vec<String>,
 }
 
@@ -223,6 +226,10 @@ pub fn run_closed_loop(serve: &Serve, spec: &LoadSpec) -> LoadOutcome {
             }
         }
     }
+    // Deterministic reports: client-merge order depends on thread
+    // timing, so the deduplicated error list is sorted before anyone
+    // renders it (diffable across runs, like the BTreeMap tallies).
+    total.errors.sort();
     total
 }
 
@@ -352,6 +359,7 @@ pub fn run_open_loop(serve: &Serve, spec: &OverloadSpec)
         out.submitted = submitter.join().expect("submitter panicked");
     });
     out.wall_seconds = t0.elapsed().as_secs_f64();
+    out.errors.sort(); // reply arrival order is nondeterministic
     out
 }
 
@@ -359,7 +367,9 @@ pub fn run_open_loop(serve: &Serve, spec: &OverloadSpec)
 /// aggregate GFLOP/s where the shard executed native compute), native
 /// engine and kernel splits, the unified metrics summary and the
 /// accounting line. Shared by the CLI `serve` command, the bench and
-/// the example.
+/// the example. **Deterministically ordered**: every section iterates
+/// a BTreeMap or a sorted list, so two runs with the same tallies
+/// render byte-identical reports (diffable in CI).
 pub fn outcome_report(outcome: &LoadOutcome, serve: &Serve) -> String {
     let rates: BTreeMap<String, (u64, f64)> = serve.metrics
         .compute_rates()
@@ -447,6 +457,38 @@ mod tests {
         }), "{rates:?}");
         let report = outcome_report(&out, &serve);
         assert!(report.contains("native kernel tuned{"), "{report}");
+        serve.shutdown();
+    }
+
+    #[test]
+    fn report_sections_are_deterministically_ordered() {
+        // The report's inputs are nondeterministically *gathered*
+        // (thread interleavings), but its rendering must be sorted:
+        // per-shard / per-engine / per-kernel tallies by label,
+        // errors lexicographically.
+        let mut out = LoadOutcome::default();
+        for shard in ["sim:knl", "native:threadpool", "native:pjrt"] {
+            out.per_shard.insert(shard.into(), 1);
+        }
+        for kernel in ["tuned{mc=64,nc=64,kc=64,mr=4,nr=4}@store",
+                       "pjrt", "tuned{mc=64,nc=64,kc=64,mr=4,nr=4}"] {
+            out.per_kernel.insert(kernel.into(), 1);
+        }
+        out.errors = vec!["z error".into(), "a error".into()];
+        out.errors.sort();
+        assert_eq!(out.errors, vec!["a error".to_string(),
+                                    "z error".to_string()]);
+        let shards: Vec<_> = out.per_shard.keys().cloned().collect();
+        assert_eq!(shards, vec!["native:pjrt", "native:threadpool",
+                                "sim:knl"]);
+        let kernels: Vec<_> = out.per_kernel.keys().cloned().collect();
+        let mut sorted = kernels.clone();
+        sorted.sort();
+        assert_eq!(kernels, sorted, "per_kernel iterates sorted");
+        let serve = Serve::start(ServeConfig::default()).unwrap();
+        let a = outcome_report(&out, &serve);
+        let b = outcome_report(&out, &serve);
+        assert_eq!(a, b, "same tallies render identically");
         serve.shutdown();
     }
 

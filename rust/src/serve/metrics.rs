@@ -7,9 +7,13 @@
 //! shard — the single pane of glass the ROADMAP's serving goal needs
 //! (the per-subsystem counters of `coordinator::Metrics` remain only as
 //! a compatibility view fed by the Scheduler shim). Everything on the
-//! per-request hot path is lock-free; the per-shard compute aggregation
-//! takes one short mutex per *executed native run* (not per request —
-//! cache hits skip it).
+//! per-request hot path is lock-free, with short-mutex exceptions:
+//! per *executed* run (cache hits skip both), the per-shard compute
+//! aggregation (native runs with a known flop count) and the
+//! service-time EWMA write; and, only when **adaptive quotas** are
+//! active, one EWMA read per routed request in the dispatcher (the
+//! derived-quota observability map is written only when the value
+//! changes).
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -113,11 +117,27 @@ pub struct ServeMetrics {
     shard_depth_hw: AtomicUsize,
     /// Largest coalesced batch observed.
     max_batch: AtomicUsize,
+    /// Background tuning jobs enqueued to the `tune:explore` shard.
+    tune_enqueued: AtomicU64,
+    /// Tuning jobs that completed (store hit or committed exploration).
+    tune_completed: AtomicU64,
+    /// Tuning jobs shed at enqueue (the tuner shard's line was full —
+    /// serving traffic must never wait on tuning, so the job is
+    /// dropped, counted here, and retried by a later request).
+    tune_shed: AtomicU64,
+    /// Tuning jobs that failed or were cancelled.
+    tune_failed: AtomicU64,
     /// End-to-end latency: submit → reply.
     pub latency: LatencyHistogram,
     /// Per-shard compute aggregates (executed native runs only — cache
     /// hits do no compute and are excluded by construction).
     compute: Mutex<BTreeMap<String, ComputeAgg>>,
+    /// Per-shard EWMA of observed *service* time (execution only, not
+    /// queueing) in seconds — the signal adaptive quotas derive from.
+    service_ewma: Mutex<BTreeMap<String, f64>>,
+    /// Per-shard quota most recently derived by the dispatcher's
+    /// adaptive-quota path (observability: surfaced in `summary()`).
+    derived_quota: Mutex<BTreeMap<String, usize>>,
     started: Instant,
     /// Nanoseconds after `started` of the first submission
     /// (`u64::MAX` = none yet) and the latest completion (0 = none
@@ -147,8 +167,14 @@ impl ServeMetrics {
             front_depth_hw: AtomicUsize::new(0),
             shard_depth_hw: AtomicUsize::new(0),
             max_batch: AtomicUsize::new(0),
+            tune_enqueued: AtomicU64::new(0),
+            tune_completed: AtomicU64::new(0),
+            tune_shed: AtomicU64::new(0),
+            tune_failed: AtomicU64::new(0),
             latency: LatencyHistogram::new(),
             compute: Mutex::new(BTreeMap::new()),
+            service_ewma: Mutex::new(BTreeMap::new()),
+            derived_quota: Mutex::new(BTreeMap::new()),
             started: Instant::now(),
             first_submit_ns: AtomicU64::new(u64::MAX),
             last_completion_ns: AtomicU64::new(0),
@@ -225,8 +251,128 @@ impl ServeMetrics {
         e.flops += gflops * seconds * 1e9;
     }
 
+    /// EWMA smoothing factor for per-shard service times. 0.2 follows
+    /// the new observation slowly enough to ride out batching jitter
+    /// but fast enough that a mix shift re-derives quotas within a few
+    /// requests.
+    const SERVICE_EWMA_ALPHA: f64 = 0.2;
+
+    /// A shard executed one request in `seconds` of service time
+    /// (execution only — queue wait excluded). Feeds the per-shard
+    /// EWMA adaptive quotas derive from.
+    pub fn observe_service(&self, shard: &str, seconds: f64) {
+        if !(seconds > 0.0) || !seconds.is_finite() {
+            return; // defensive: never poison the EWMA
+        }
+        let mut g = self.service_ewma.lock()
+            .expect("service ewma poisoned");
+        match g.get_mut(shard) {
+            Some(e) => {
+                *e = Self::SERVICE_EWMA_ALPHA * seconds
+                    + (1.0 - Self::SERVICE_EWMA_ALPHA) * *e;
+            }
+            None => {
+                g.insert(shard.to_string(), seconds);
+            }
+        }
+    }
+
+    /// The shard's current service-time EWMA in seconds, if any
+    /// request has executed there.
+    pub fn service_ewma(&self, shard: &str) -> Option<f64> {
+        self.service_ewma.lock().expect("service ewma poisoned")
+            .get(shard).copied()
+    }
+
+    /// Derive an admission quota for `shard` from its service-rate
+    /// EWMA and a latency budget: the number of requests the shard can
+    /// serve within the budget (`budget / ewma`, at least 1) — i.e.
+    /// service rate × budget. Returns `usize::MAX` (no shedding)
+    /// before any observation exists: an unmeasured shard must not
+    /// shed. Pure computation (one EWMA read) — the caller surfaces
+    /// the value via [`ServeMetrics::record_derived_quota`] only when
+    /// it changes, so the observability map is not re-written on
+    /// every routed request.
+    pub fn derive_quota(&self, shard: &str, budget_seconds: f64)
+                        -> usize {
+        let Some(ewma) = self.service_ewma(shard) else {
+            return usize::MAX;
+        };
+        if !(ewma > 0.0) {
+            return usize::MAX;
+        }
+        let q = (budget_seconds / ewma).floor();
+        if q.is_finite() && q < usize::MAX as f64 {
+            (q as usize).max(1)
+        } else {
+            usize::MAX
+        }
+    }
+
+    /// Surface a derived adaptive quota for `summary()` /
+    /// [`ServeMetrics::derived_quotas`]. `usize::MAX` (no shedding)
+    /// is not worth surfacing and is ignored.
+    pub fn record_derived_quota(&self, shard: &str, quota: usize) {
+        if quota == usize::MAX {
+            return;
+        }
+        self.derived_quota.lock().expect("derived quota poisoned")
+            .insert(shard.to_string(), quota);
+    }
+
+    /// The live adaptive quotas most recently derived per shard,
+    /// sorted by label. Empty unless the adaptive-quota path is active
+    /// and has observed service times.
+    pub fn derived_quotas(&self) -> Vec<(String, usize)> {
+        self.derived_quota.lock().expect("derived quota poisoned")
+            .iter()
+            .map(|(k, v)| (k.clone(), *v))
+            .collect()
+    }
+
+    /// A background tuning job was enqueued to the tuner shard.
+    pub fn tune_job_enqueued(&self) {
+        self.tune_enqueued.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A background tuning job completed (committed or found the
+    /// bucket already tuned).
+    pub fn tune_job_completed(&self) {
+        self.tune_completed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A background tuning job was shed at enqueue: the tuner shard's
+    /// bounded line was full. Serving traffic is unaffected — that is
+    /// the point.
+    pub fn tune_job_shed(&self) {
+        self.tune_shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A background tuning job failed or was cancelled.
+    pub fn tune_job_failed(&self) {
+        self.tune_failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn tune_enqueued(&self) -> u64 {
+        self.tune_enqueued.load(Ordering::Relaxed)
+    }
+
+    pub fn tune_completed(&self) -> u64 {
+        self.tune_completed.load(Ordering::Relaxed)
+    }
+
+    pub fn tune_shed(&self) -> u64 {
+        self.tune_shed.load(Ordering::Relaxed)
+    }
+
+    pub fn tune_failed(&self) -> u64 {
+        self.tune_failed.load(Ordering::Relaxed)
+    }
+
     /// Per-shard aggregate compute rates: `(shard label, executed
-    /// runs, work-weighted GFLOP/s)`, sorted by label. Empty until a
+    /// runs, work-weighted GFLOP/s)`, **sorted by shard label**
+    /// (BTreeMap-backed) — load reports and bench JSON built from this
+    /// are stable across runs and diffable in CI. Empty until a
     /// native run with a known flop count completes.
     pub fn compute_rates(&self) -> Vec<(String, u64, f64)> {
         self.compute.lock().expect("compute agg poisoned")
@@ -353,6 +499,21 @@ impl ServeMetrics {
                     " {label}={gflops:.1}GF/s({runs} runs)"));
             }
         }
+        let quotas = self.derived_quotas();
+        if !quotas.is_empty() {
+            s.push_str("; adaptive quota");
+            for (label, q) in quotas {
+                s.push_str(&format!(" {label}={q}"));
+            }
+        }
+        let (enq, done, tshed, tfail) =
+            (self.tune_enqueued(), self.tune_completed(),
+             self.tune_shed(), self.tune_failed());
+        if enq + done + tshed + tfail > 0 {
+            s.push_str(&format!(
+                "; tuning {enq} jobs ({done} done, {tshed} shed, \
+                 {tfail} failed)"));
+        }
         s
     }
 }
@@ -443,6 +604,65 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("compute") && s.contains("native:threadpool="),
                 "{s}");
+    }
+
+    #[test]
+    fn service_ewma_and_adaptive_quota_math() {
+        let m = ServeMetrics::new();
+        assert_eq!(m.service_ewma("sim:knl"), None);
+        assert_eq!(m.derive_quota("sim:knl", 0.25), usize::MAX,
+                   "no observation -> never shed");
+        assert!(m.derived_quotas().is_empty(),
+                "MAX derivations are not recorded");
+        // first observation seeds the EWMA exactly
+        m.observe_service("sim:knl", 0.010);
+        assert!((m.service_ewma("sim:knl").unwrap() - 0.010).abs()
+                < 1e-12);
+        // EWMA follows slowly: 0.2*0.020 + 0.8*0.010 = 0.012
+        m.observe_service("sim:knl", 0.020);
+        assert!((m.service_ewma("sim:knl").unwrap() - 0.012).abs()
+                < 1e-12);
+        // quota = floor(budget / ewma) = floor(0.25 / 0.012) = 20
+        assert_eq!(m.derive_quota("sim:knl", 0.25), 20);
+        // a budget below one service time still admits one request
+        assert_eq!(m.derive_quota("sim:knl", 1e-9), 1);
+        // derivation is pure — surfacing is a separate, explicit step
+        assert!(m.derived_quotas().is_empty());
+        // junk observations are ignored
+        m.observe_service("sim:knl", f64::NAN);
+        m.observe_service("sim:knl", 0.0);
+        assert!((m.service_ewma("sim:knl").unwrap() - 0.012).abs()
+                < 1e-12);
+        // recorded quotas are surfaced, sorted, in the summary;
+        // usize::MAX (no shedding) is never surfaced
+        m.record_derived_quota("sim:knl", 20);
+        m.record_derived_quota("native:pjrt", 250);
+        m.record_derived_quota("native:threadpool", usize::MAX);
+        let quotas = m.derived_quotas();
+        assert_eq!(quotas.len(), 2);
+        assert_eq!(quotas[0].0, "native:pjrt");
+        assert_eq!(quotas[1].0, "sim:knl");
+        assert!(m.summary().contains("adaptive quota"), "{}",
+                m.summary());
+    }
+
+    #[test]
+    fn tune_counters_and_summary_tail() {
+        let m = ServeMetrics::new();
+        assert!(!m.summary().contains("tuning"),
+                "no tuning tail before any job");
+        m.tune_job_enqueued();
+        m.tune_job_enqueued();
+        m.tune_job_completed();
+        m.tune_job_shed();
+        m.tune_job_failed();
+        assert_eq!(m.tune_enqueued(), 2);
+        assert_eq!(m.tune_completed(), 1);
+        assert_eq!(m.tune_shed(), 1);
+        assert_eq!(m.tune_failed(), 1);
+        let s = m.summary();
+        assert!(s.contains("tuning 2 jobs"), "{s}");
+        assert!(s.contains("1 shed,"), "{s}");
     }
 
     #[test]

@@ -40,7 +40,20 @@
 //!   engine ([`NativeEngineId`]): `native:pjrt` (single-owner PJRT,
 //!   host reference-GEMM fallback) and `native:threadpool` (row-blocked
 //!   host GEMM over [`crate::util::threadpool::ThreadPool`],
-//!   oracle-checked per run).
+//!   oracle-checked per run) — plus, with online tuning enabled, the
+//!   background `tune:explore` shard (see [`crate::autotune`]).
+//! * **Online autotuning**: with `ServeConfig::tuning_store` /
+//!   `online_tune` set, the native backends select each request's
+//!   [`KernelParams`](crate::gemm::kernel::KernelParams) from the
+//!   persistent [`TuningStore`](crate::autotune::TuningStore)
+//!   (replies labelled `…@store`), and the dispatcher seeds bounded
+//!   background explorations for untuned `(dtype, bucket)`s —
+//!   strictly non-blocking (over the tuner's hard line bound the job
+//!   is shed and counted, never queued in front of serving traffic).
+//! * **Adaptive quotas**: with a rejecting [`ShedPolicy`] and
+//!   `shard_quota: None`, each shard's quota is derived live from its
+//!   service-rate EWMA × `ServeConfig::latency_budget` (surfaced in
+//!   [`Serve::summary`]).
 //! * **Batching**: shard workers drain up to `max_batch` requests in one
 //!   `pop_batch`, group them by work key, and serve each group with one
 //!   backend execution.
@@ -55,16 +68,19 @@ pub mod cache;
 pub mod loadgen;
 pub mod metrics;
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::fmt;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
+use crate::autotune::{bucket_for, SharedTuningStore, TunerBackend,
+                      TuningStore};
 use crate::coordinator::queue::BoundedQueue;
+use crate::gemm::Precision;
 use crate::runtime::artifact::Manifest;
 
 pub use backend::{Backend, BackendFactory, MachinePark, NativeBackend,
@@ -192,6 +208,12 @@ struct ServeRequest {
     item: WorkItem,
     reply: ReplyFn,
     enqueued: Instant,
+    /// Dispatcher-synthesized background work (tuning explorations):
+    /// executes and replies like any request, but is excluded from the
+    /// user-facing request metrics (completed/failed/latency) — it was
+    /// never submitted, so counting it would break the
+    /// `submitted == ok + shed + failed` accounting.
+    internal: bool,
 }
 
 /// Where the native shard gets its artifacts.
@@ -229,15 +251,46 @@ pub struct ServeConfig {
     pub shed: ShedPolicy,
     /// Per-shard admission quota: a shard with this many outstanding
     /// requests (its queue plus its overflow line) sheds new arrivals
-    /// when the policy rejects over quota. `None` = unlimited.
+    /// when the policy rejects over quota. `None` +
+    /// [`ShedPolicy::RejectOverQuota`] = **adaptive**: the dispatcher
+    /// derives each shard's quota from an EWMA of its observed service
+    /// rate × [`latency_budget`] (shards without observations never
+    /// shed). `None` under any other policy = unlimited admission —
+    /// in particular `ShedPolicy::ShedExpired` without a quota keeps
+    /// meaning deadline shedding only.
+    ///
+    /// [`latency_budget`]: ServeConfig::latency_budget
     pub shard_quota: Option<usize>,
+    /// Target queueing budget for **adaptive** quotas: a shard's
+    /// derived quota is how many requests it can serve within this
+    /// budget at its observed service rate. Ignored when
+    /// `shard_quota` is explicit or the policy never rejects.
+    pub latency_budget: Duration,
+    /// Path of the persistent [`TuningStore`]. When set, the native
+    /// backends serve each request with the store's measured-best
+    /// [`KernelParams`](crate::gemm::kernel::KernelParams) for its
+    /// `(dtype, shape bucket)` (labelled `…@store` in replies).
+    pub tuning_store: Option<PathBuf>,
+    /// Enable the background `tune:explore` shard: requests for
+    /// untuned buckets seed bounded exploration jobs whose winners are
+    /// committed to the store (an in-memory store when `tuning_store`
+    /// is unset). Serving traffic never blocks on tuning.
+    pub online_tune: bool,
+    /// Evaluation budget per exploration job (candidate blockings
+    /// timed; NOT the full grid).
+    pub tune_budget: usize,
+    /// Best-of-k timing repetitions per explored candidate.
+    pub tune_reps: usize,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
         Self { front_cap: 64, shard_cap: 64, max_batch: 8, cache_cap: 0,
                sim_threads: 1, native: None, native_threads: 4,
-               shed: ShedPolicy::None, shard_quota: None }
+               shed: ShedPolicy::None, shard_quota: None,
+               latency_budget: Duration::from_millis(250),
+               tuning_store: None, online_tune: false, tune_budget: 6,
+               tune_reps: 2 }
     }
 }
 
@@ -269,6 +322,7 @@ pub struct Serve {
     cancel: Arc<AtomicBool>,
     park: Arc<MachinePark>,
     shard_queues: Arc<ShardRegistry>,
+    store: Option<SharedTuningStore>,
 }
 
 impl Serve {
@@ -300,23 +354,37 @@ impl Serve {
         let park = Arc::new(MachinePark::default());
         let shard_queues: Arc<ShardRegistry> =
             Arc::new(Mutex::new(Vec::new()));
+        // Learned performance state: a persistent store when a path is
+        // configured; online tuning without one still works against an
+        // in-memory store (useful for tests and throwaway layers).
+        let store: Option<SharedTuningStore> = match (&cfg.tuning_store,
+                                                      cfg.online_tune) {
+            (Some(path), _) => {
+                Some(Arc::new(Mutex::new(TuningStore::open(path))))
+            }
+            (None, true) => {
+                Some(Arc::new(Mutex::new(TuningStore::in_memory())))
+            }
+            (None, false) => None,
+        };
         let dispatcher = {
             let front = Arc::clone(&front);
             let metrics = Arc::clone(&metrics);
             let cancel = Arc::clone(&cancel);
             let park = Arc::clone(&park);
             let registry = Arc::clone(&shard_queues);
+            let store = store.clone();
             let cfg = cfg.clone();
             std::thread::Builder::new()
                 .name("serve-dispatch".into())
                 .spawn(move || {
-                    dispatch_loop(front, cfg, native_src, park, metrics,
-                                  cancel, registry)
+                    dispatch_loop(front, cfg, native_src, store, park,
+                                  metrics, cancel, registry)
                 })
                 .expect("spawn serve dispatcher")
         };
         Ok(Serve { front, dispatcher: Some(dispatcher), metrics, cancel,
-                   park, shard_queues })
+                   park, shard_queues, store })
     }
 
     /// Submit a work item. Blocks while the front queue is full
@@ -339,7 +407,8 @@ impl Serve {
         // Depth high-water comes from the queue's own max_depth (one
         // lock inside push), not a separate len() read per request.
         let req = ServeRequest { item, reply,
-                                 enqueued: Instant::now() };
+                                 enqueued: Instant::now(),
+                                 internal: false };
         if let Err(req) = self.front.push_or_return(req) {
             self.metrics.request_failed();
             (req.reply)(Err(ServeError::Closed));
@@ -406,17 +475,29 @@ impl Serve {
     }
 
     /// Live per-shard queue visibility: `(label, current depth,
-    /// high-water depth)` for every shard spawned so far.
+    /// high-water depth)` for every shard spawned so far, **sorted by
+    /// label** — spawn order depends on request arrival, which would
+    /// make reports built from this nondeterministic across runs.
     pub fn shard_depths(&self) -> Vec<(String, usize, usize)> {
-        self.shard_queues.lock().expect("shard registry poisoned")
+        let mut depths: Vec<_> = self.shard_queues.lock()
+            .expect("shard registry poisoned")
             .iter()
             .map(|(label, q)| (label.clone(), q.len(), q.max_depth()))
-            .collect()
+            .collect();
+        depths.sort_by(|a, b| a.0.cmp(&b.0));
+        depths
     }
 
     /// The shared machine-model registry (pre-warm, inspection).
     pub fn park(&self) -> &Arc<MachinePark> {
         &self.park
+    }
+
+    /// The tuning store this layer selects kernels from (present when
+    /// `tuning_store` or `online_tune` was configured). Shared with
+    /// the tuner shard — lock briefly.
+    pub fn tuning_store(&self) -> Option<SharedTuningStore> {
+        self.store.clone()
     }
 
     /// Graceful shutdown: close admission, drain, join all threads.
@@ -438,13 +519,98 @@ impl Drop for Serve {
     }
 }
 
+/// Outstanding-line bound of the background tuning shard: at most this
+/// many exploration jobs may be *queued* (one more may be executing).
+/// Deliberately tiny and non-configurable — the tuner is the lowest
+/// priority work in the system, and the dispatcher only ever feeds it
+/// with a non-blocking push: over this bound the job is dropped,
+/// counted in `ServeMetrics::tune_shed`, and retried by whichever
+/// later request finds the bucket still untuned.
+const TUNE_QUOTA: usize = 1;
+
+/// Dispatcher-side context for online tuning: the shared store plus
+/// the set of `(dtype, bucket)` explorations currently in flight
+/// (shared with the jobs' reply closures, which clear their entry so
+/// a failed or shed exploration can be retried later).
+struct TuneCtx {
+    store: SharedTuningStore,
+    inflight: Arc<Mutex<HashSet<(Precision, u64)>>>,
+    /// Dispatcher-local memo of buckets already found in the store:
+    /// once a bucket is tuned it can never become untuned in-process,
+    /// so warm traffic skips the store lock entirely (the only
+    /// remaining per-request cost on the trigger path is the id
+    /// parse, which takes no locks).
+    tuned: HashSet<(Precision, u64)>,
+}
+
+impl TuneCtx {
+    /// Should this request seed a background exploration? Yes iff it
+    /// is an artifact in the host range whose `(dtype, bucket)` has no
+    /// store entry and no exploration already in flight. On `Some`,
+    /// the bucket is marked in flight — release with [`TuneCtx::abort`]
+    /// if the job is never enqueued.
+    fn wants_explore(&mut self, item: &WorkItem)
+                     -> Option<(Precision, u64)> {
+        let WorkPayload::Artifact { id, .. } = &item.payload else {
+            return None;
+        };
+        let (n, dtype) = backend::parse_artifact_id(id)?;
+        if n > backend::HOST_GEMM_MAX_N {
+            return None;
+        }
+        let bucket = bucket_for(n);
+        if self.tuned.contains(&(dtype, bucket)) {
+            return None;
+        }
+        if self.store.lock().ok()?.lookup(dtype, bucket).is_some() {
+            self.tuned.insert((dtype, bucket));
+            return None;
+        }
+        if !self.inflight.lock().ok()?.insert((dtype, bucket)) {
+            return None;
+        }
+        Some((dtype, bucket))
+    }
+
+    /// Release an in-flight mark whose job was shed or never enqueued.
+    fn abort(&self, dtype: Precision, bucket: u64) {
+        if let Ok(mut g) = self.inflight.lock() {
+            g.remove(&(dtype, bucket));
+        }
+    }
+
+    /// Build the internal exploration request. Its reply closure
+    /// clears the in-flight mark and records the outcome in the tune
+    /// counters — never in the user-facing request metrics.
+    fn job(&self, dtype: Precision, bucket: u64,
+           metrics: &Arc<ServeMetrics>) -> ServeRequest {
+        let inflight = Arc::clone(&self.inflight);
+        let metrics = Arc::clone(metrics);
+        ServeRequest {
+            item: WorkItem::explore(dtype, bucket),
+            enqueued: Instant::now(),
+            internal: true,
+            reply: Box::new(move |r| {
+                if let Ok(mut g) = inflight.lock() {
+                    g.remove(&(dtype, bucket));
+                }
+                match r {
+                    Ok(_) => metrics.tune_job_completed(),
+                    Err(_) => metrics.tune_job_failed(),
+                }
+            }),
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
 fn dispatch_loop(front: Arc<BoundedQueue<ServeRequest>>, cfg: ServeConfig,
                  native_src: Option<Arc<NativeSource>>,
+                 store: Option<SharedTuningStore>,
                  park: Arc<MachinePark>, metrics: Arc<ServeMetrics>,
                  cancel: Arc<AtomicBool>,
                  registry: Arc<ShardRegistry>) {
     use std::collections::VecDeque;
-    use std::time::Duration;
 
     use crate::coordinator::queue::PushRefusal;
 
@@ -459,11 +625,34 @@ fn dispatch_loop(front: Arc<BoundedQueue<ServeRequest>>, cfg: ServeConfig,
         HashMap::new();
     let mut overflow_len = 0usize;
     let overflow_limit = cfg.front_cap.max(16) * 4;
-    // Effective per-shard admission quota, fixed for this dispatcher's
-    // lifetime (usize::MAX = no shedding).
-    let quota = match cfg.shard_quota {
-        Some(q) if cfg.shed.rejects_over_quota() => q,
-        _ => usize::MAX,
+    // Effective per-shard admission quota: explicit when configured;
+    // ADAPTIVE when the policy rejects but no quota was set — then
+    // each routing decision derives the shard's quota from its
+    // service-rate EWMA × the latency budget (usize::MAX until the
+    // shard has served anything: an unmeasured shard must not shed).
+    let fixed_quota =
+        cfg.shard_quota.filter(|_| cfg.shed.rejects_over_quota());
+    // Adaptive derivation is opt-in via the *pure* quota-rejection
+    // policy only. `ShedExpired` without a quota keeps its documented
+    // PR-2 meaning — deadline shedding with unlimited admission — and
+    // must not silently start rejecting over a derived quota the user
+    // never configured.
+    let adaptive = cfg.shard_quota.is_none()
+        && cfg.shed == ShedPolicy::RejectOverQuota;
+    let budget_s = cfg.latency_budget.as_secs_f64();
+    // Last derived quota surfaced per shard — the observability map in
+    // the metrics is only written when the value CHANGES, not on every
+    // routed request (the derivation itself is one EWMA read).
+    let mut last_derived: HashMap<ShardKey, usize> = HashMap::new();
+    // Online tuning: dispatcher-synthesized exploration jobs for
+    // untuned buckets, capped at TUNE_QUOTA outstanding.
+    let mut tune: Option<TuneCtx> = match (&store, cfg.online_tune) {
+        (Some(s), true) => Some(TuneCtx {
+            store: Arc::clone(s),
+            inflight: Arc::new(Mutex::new(HashSet::new())),
+            tuned: HashSet::new(),
+        }),
+        _ => None,
     };
     let mut front_open = true;
 
@@ -522,8 +711,54 @@ fn dispatch_loop(front: Arc<BoundedQueue<ServeRequest>>, cfg: ServeConfig,
         // 3. Route the burst.
         for req in burst {
             let key = req.item.shard_key();
+            // Online-tuning trigger: a request for an untuned
+            // (dtype, bucket) seeds ONE bounded exploration job on the
+            // tuner shard. Strictly non-blocking: over TUNE_QUOTA the
+            // job is dropped and counted — serving traffic NEVER
+            // waits on tuning.
+            if let Some(tctx) = tune.as_mut() {
+                if let Some((dtype, bucket)) =
+                    tctx.wants_explore(&req.item)
+                {
+                    let tk = ShardKey::Tuner;
+                    if !shards.contains_key(&tk) {
+                        match spawn_shard(tk, &cfg, &native_src, &store,
+                                          &park, &metrics, &cancel) {
+                            Ok(handle) => {
+                                registry.lock()
+                                    .expect("shard registry poisoned")
+                                    .push((tk.label(),
+                                           Arc::clone(&handle.queue)));
+                                shards.insert(tk, handle);
+                            }
+                            Err(e) => {
+                                eprintln!("[serve] cannot spawn tuning \
+                                           shard: {e}");
+                                tctx.abort(dtype, bucket);
+                            }
+                        }
+                    }
+                    if let Some(handle) = shards.get(&tk) {
+                        let job = tctx.job(dtype, bucket, &metrics);
+                        match handle.queue
+                            .try_push_quota(job, TUNE_QUOTA)
+                        {
+                            Ok(()) => metrics.tune_job_enqueued(),
+                            Err(PushRefusal::OverQuota(..))
+                            | Err(PushRefusal::Full(_))
+                            | Err(PushRefusal::Closed(_)) => {
+                                // dropped, not queued elsewhere: the
+                                // in-flight mark is released so a
+                                // later request retries the bucket
+                                metrics.tune_job_shed();
+                                tctx.abort(dtype, bucket);
+                            }
+                        }
+                    }
+                }
+            }
             if !shards.contains_key(&key) {
-                match spawn_shard(key, &cfg, &native_src, &park,
+                match spawn_shard(key, &cfg, &native_src, &store, &park,
                                   &metrics, &cancel) {
                     Ok(handle) => {
                         registry.lock().expect("shard registry poisoned")
@@ -532,7 +767,9 @@ fn dispatch_loop(front: Arc<BoundedQueue<ServeRequest>>, cfg: ServeConfig,
                         shards.insert(key, handle);
                     }
                     Err(e) => {
-                        metrics.request_failed();
+                        if !req.internal {
+                            metrics.request_failed();
+                        }
                         (req.reply)(Err(ServeError::Backend(
                             format!("{}: {e}", key.label()))));
                         continue;
@@ -540,6 +777,21 @@ fn dispatch_loop(front: Arc<BoundedQueue<ServeRequest>>, cfg: ServeConfig,
                 }
             }
             let handle = shards.get(&key).expect("just ensured");
+            // Per-request effective quota (explicit, adaptive, or
+            // unlimited — see above).
+            let quota = match fixed_quota {
+                Some(q) => q,
+                None if adaptive => {
+                    let q = metrics.derive_quota(&key.label(),
+                                                 budget_s);
+                    if last_derived.get(&key) != Some(&q) {
+                        metrics.record_derived_quota(&key.label(), q);
+                        last_derived.insert(key, q);
+                    }
+                    q
+                }
+                None => usize::MAX,
+            };
             let buf = overflow.entry(key).or_default();
             // Admission quota: the shard's outstanding line is its
             // queue PLUS its overflow buffer; with a rejecting policy
@@ -615,19 +867,28 @@ fn dispatch_loop(front: Arc<BoundedQueue<ServeRequest>>, cfg: ServeConfig,
 
 fn spawn_shard(key: ShardKey, cfg: &ServeConfig,
                native_src: &Option<Arc<NativeSource>>,
+               store: &Option<SharedTuningStore>,
                park: &Arc<MachinePark>, metrics: &Arc<ServeMetrics>,
                cancel: &Arc<AtomicBool>)
                -> Result<ShardHandle, String> {
     let queue: Arc<BoundedQueue<ServeRequest>> =
         Arc::new(BoundedQueue::new(cfg.shard_cap.max(1)));
+    // The tuner shard never caches: a repeated exploration for the
+    // same bucket must re-check the store, not replay a stale reply.
+    let cache_cap = match key {
+        ShardKey::Tuner => 0,
+        _ => cfg.cache_cap,
+    };
     let cache: Arc<Mutex<LruCache<Output>>> =
-        Arc::new(Mutex::new(LruCache::new(cfg.cache_cap)));
+        Arc::new(Mutex::new(LruCache::new(cache_cap)));
     let threads = match key {
         ShardKey::Sim(_) => cfg.sim_threads.max(1),
         // Single shard worker per native engine: the PJRT client is
         // Rc-based (single-owner), and the threadpool backend
-        // parallelizes inside itself.
-        ShardKey::Native(_) => 1,
+        // parallelizes inside itself. The tuner is single-worker by
+        // design — concurrent explorations would contend for the very
+        // cores they are timing.
+        ShardKey::Native(_) | ShardKey::Tuner => 1,
     };
     let mut factories: Vec<BackendFactory> = Vec::new();
     match key {
@@ -643,36 +904,52 @@ fn spawn_shard(key: ShardKey, cfg: &ServeConfig,
         ShardKey::Native(engine) => {
             // Both named native shards draw from the SAME shared
             // artifact source (Arc — `native:pjrt` and
-            // `native:threadpool` read one copy of the manifest).
+            // `native:threadpool` read one copy of the manifest) and
+            // the same tuning store (per-request kernel selection).
             let src = Arc::clone(native_src.as_ref().ok_or_else(|| {
                 "no native backend configured (start the serve layer \
                  with ServeConfig::native set)".to_string()
             })?);
             let native_threads = cfg.native_threads;
+            let store = store.clone();
             factories.push(Box::new(move || {
                 let b: Box<dyn Backend> = match (engine, &*src) {
                     (NativeEngineId::Pjrt,
                      NativeSource::Manifest(m)) => {
                         // the PJRT backend owns its manifest (it keeps
                         // loading kernels from it) — one clone here
-                        Box::new(NativeBackend::from_manifest(m.clone()))
+                        Box::new(NativeBackend::from_manifest(m.clone())
+                                 .with_store(store))
                     }
                     (NativeEngineId::Pjrt,
                      NativeSource::Synthetic(ids)) => {
-                        Box::new(NativeBackend::synthetic(ids)?)
+                        Box::new(NativeBackend::synthetic(ids)?
+                                 .with_store(store))
                     }
                     (NativeEngineId::Threadpool,
                      NativeSource::Manifest(m)) => {
                         Box::new(ThreadpoolGemm::from_manifest(
-                            m, native_threads))
+                            m, native_threads).with_store(store))
                     }
                     (NativeEngineId::Threadpool,
                      NativeSource::Synthetic(ids)) => {
                         Box::new(ThreadpoolGemm::synthetic(
-                            ids, native_threads)?)
+                            ids, native_threads)?.with_store(store))
                     }
                 };
                 Ok(b)
+            }));
+        }
+        ShardKey::Tuner => {
+            let store = store.clone().ok_or_else(|| {
+                "no tuning store configured (start the serve layer \
+                 with ServeConfig::tuning_store or online_tune)"
+                    .to_string()
+            })?;
+            let (budget, reps) = (cfg.tune_budget, cfg.tune_reps);
+            factories.push(Box::new(move || {
+                Ok(Box::new(TunerBackend::new(store, budget, reps))
+                   as Box<dyn Backend>)
             }));
         }
     }
@@ -687,7 +964,14 @@ fn spawn_shard(key: ShardKey, cfg: &ServeConfig,
             let metrics = Arc::clone(metrics);
             let cancel = Arc::clone(cancel);
             let label = key.label();
-            let max_batch = cfg.max_batch.max(1);
+            // The tuner serves strictly one exploration per dequeue:
+            // draining a batch would defeat the outstanding-line
+            // bound (TUNE_QUOTA counts QUEUED jobs — a batch pop
+            // would sneak several into flight at once).
+            let max_batch = match key {
+                ShardKey::Tuner => 1,
+                _ => cfg.max_batch.max(1),
+            };
             std::thread::Builder::new()
                 .name(format!("serve-{}-{widx}", label.replace(':', "-")))
                 .spawn(move || {
@@ -709,6 +993,20 @@ fn observe_native_compute(metrics: &ServeMetrics, shard: &str,
     }
 }
 
+/// Steady-state service time of one executed request, for the adaptive
+/// quota EWMA. Uses the output's own execution timing where one exists
+/// — the wall time around `backend.run` includes one-off first-touch
+/// work (input regeneration, the threadpool shard's sequential oracle
+/// build, PJRT kernel loads) that can be 10–30× the steady-state cost
+/// and would poison the EWMA into spurious shedding for many requests.
+fn service_seconds(output: &Output, wall: f64) -> f64 {
+    match output {
+        Output::Sim { wall: w, .. } => *w,
+        Output::Native { seconds, .. } => *seconds,
+        Output::Tuned { .. } => wall,
+    }
+}
+
 #[allow(clippy::too_many_arguments)]
 fn shard_loop(queue: Arc<BoundedQueue<ServeRequest>>,
               factory: BackendFactory,
@@ -727,7 +1025,9 @@ fn shard_loop(queue: Arc<BoundedQueue<ServeRequest>>,
                     return;
                 }
                 for req in batch {
-                    metrics.request_failed();
+                    if !req.internal {
+                        metrics.request_failed();
+                    }
                     (req.reply)(Err(ServeError::Backend(
                         format!("{label}: backend init failed: {e}"))));
                 }
@@ -783,7 +1083,9 @@ fn shard_loop(queue: Arc<BoundedQueue<ServeRequest>>,
 
             if cancel.load(Ordering::SeqCst) {
                 for req in group {
-                    metrics.request_cancelled();
+                    if !req.internal {
+                        metrics.request_cancelled();
+                    }
                     (req.reply)(Err(ServeError::Cancelled));
                 }
                 continue;
@@ -811,7 +1113,9 @@ fn shard_loop(queue: Arc<BoundedQueue<ServeRequest>>,
                 metrics.cache_hit(batch_size as u64);
                 for (req, wait) in group.into_iter().zip(waits) {
                     let latency = req.enqueued.elapsed().as_secs_f64();
-                    metrics.request_completed(latency);
+                    if !req.internal {
+                        metrics.request_completed(latency);
+                    }
                     (req.reply)(Ok(ServeReply {
                         shard: label.clone(),
                         output: output.clone(),
@@ -828,8 +1132,16 @@ fn shard_loop(queue: Arc<BoundedQueue<ServeRequest>>,
                 // — ONE execution answers the whole group and seeds the
                 // cache.
                 metrics.cache_miss(batch_size as u64);
+                let t_exec = Instant::now();
                 match backend.run(&group[0].item) {
                     Ok(output) => {
+                        if !group[0].internal {
+                            metrics.observe_service(
+                                &label,
+                                service_seconds(
+                                    &output,
+                                    t_exec.elapsed().as_secs_f64()));
+                        }
                         observe_native_compute(&metrics, &label,
                                                &output);
                         cache.lock().expect("cache poisoned")
@@ -837,7 +1149,9 @@ fn shard_loop(queue: Arc<BoundedQueue<ServeRequest>>,
                         for (req, wait) in group.into_iter().zip(waits) {
                             let latency =
                                 req.enqueued.elapsed().as_secs_f64();
-                            metrics.request_completed(latency);
+                            if !req.internal {
+                                metrics.request_completed(latency);
+                            }
                             (req.reply)(Ok(ServeReply {
                                 shard: label.clone(),
                                 output: output.clone(),
@@ -850,7 +1164,9 @@ fn shard_loop(queue: Arc<BoundedQueue<ServeRequest>>,
                     }
                     Err(msg) => {
                         for req in group {
-                            metrics.request_failed();
+                            if !req.internal {
+                                metrics.request_failed();
+                            }
                             (req.reply)(Err(ServeError::Backend(
                                 msg.clone())));
                         }
@@ -864,13 +1180,24 @@ fn shard_loop(queue: Arc<BoundedQueue<ServeRequest>>,
                 // churn and is reported via batch_size.
                 for req in group {
                     let wait = req.enqueued.elapsed().as_secs_f64();
+                    let t_exec = Instant::now();
                     match backend.run(&req.item) {
                         Ok(output) => {
+                            if !req.internal {
+                                metrics.observe_service(
+                                    &label,
+                                    service_seconds(
+                                        &output,
+                                        t_exec.elapsed()
+                                            .as_secs_f64()));
+                            }
                             observe_native_compute(&metrics, &label,
                                                    &output);
                             let latency =
                                 req.enqueued.elapsed().as_secs_f64();
-                            metrics.request_completed(latency);
+                            if !req.internal {
+                                metrics.request_completed(latency);
+                            }
                             (req.reply)(Ok(ServeReply {
                                 shard: label.clone(),
                                 output,
@@ -881,7 +1208,9 @@ fn shard_loop(queue: Arc<BoundedQueue<ServeRequest>>,
                             }));
                         }
                         Err(msg) => {
-                            metrics.request_failed();
+                            if !req.internal {
+                                metrics.request_failed();
+                            }
                             (req.reply)(Err(ServeError::Backend(msg)));
                         }
                     }
@@ -1165,6 +1494,111 @@ mod tests {
                     waits[0]);
         }
         let _ = slow.recv().unwrap().unwrap();
+        serve.shutdown();
+    }
+
+    #[test]
+    fn user_submitted_explore_runs_on_the_tuner_shard() {
+        // Explicit warm-up path: a submitted Explore item routes to
+        // tune:explore, commits to the layer's store, and counts as a
+        // normal (user-facing) completed request.
+        let serve = Serve::start(ServeConfig {
+            online_tune: true,
+            tune_budget: 2,
+            tune_reps: 1,
+            ..Default::default()
+        }).unwrap();
+        let r = serve.call(WorkItem::explore(Precision::F64, 32))
+            .unwrap();
+        assert_eq!(r.shard, "tune:explore");
+        match r.output {
+            Output::Tuned { committed, bucket, .. } => {
+                assert!(committed);
+                assert_eq!(bucket, 32);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        let store = serve.tuning_store().expect("online store");
+        assert!(store.lock().unwrap()
+                .lookup(Precision::F64, 32).is_some());
+        serve.shutdown();
+    }
+
+    #[test]
+    fn explore_without_store_is_an_explicit_error() {
+        let serve = Serve::start(ServeConfig::default()).unwrap();
+        let err = serve.call(WorkItem::explore(Precision::F32, 64))
+            .unwrap_err();
+        match err {
+            ServeError::Backend(m) => {
+                assert!(m.contains("no tuning store"), "{m}");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        serve.shutdown();
+    }
+
+    #[test]
+    fn adaptive_quota_derives_and_surfaces_after_service() {
+        // Rejecting policy + no explicit quota = adaptive. A generous
+        // budget means nothing sheds in a sequential closed loop, but
+        // after the first completion the derived quota must appear in
+        // the summary.
+        let serve = Serve::start(ServeConfig {
+            shed: ShedPolicy::RejectOverQuota,
+            shard_quota: None,
+            latency_budget: std::time::Duration::from_secs(30),
+            ..Default::default()
+        }).unwrap();
+        for t in [16u64, 32, 64, 16, 32] {
+            serve.call(knl_point(t)).unwrap();
+        }
+        assert_eq!(serve.metrics.shed(), 0,
+                   "sequential traffic under a huge budget never sheds");
+        assert!(serve.metrics.service_ewma("sim:knl").is_some());
+        let quotas = serve.metrics.derived_quotas();
+        assert!(quotas.iter().any(|(l, q)| l == "sim:knl" && *q >= 1),
+                "{quotas:?}");
+        assert!(serve.summary().contains("adaptive quota"), "{}",
+                serve.summary());
+        serve.shutdown();
+    }
+
+    #[test]
+    fn shed_expired_without_quota_never_derives_adaptive_quotas() {
+        // PR-2 semantics preserved: ShedExpired + no quota = deadline
+        // shedding with UNLIMITED admission. Even with a latency
+        // budget that would derive quota 1, nothing may shed and
+        // nothing may be derived.
+        let serve = Serve::start(ServeConfig {
+            shed: ShedPolicy::ShedExpired,
+            shard_quota: None,
+            latency_budget: std::time::Duration::from_nanos(1),
+            ..Default::default()
+        }).unwrap();
+        for t in [16u64, 32, 64, 16, 32, 64] {
+            serve.call(knl_point(t)).unwrap();
+        }
+        assert_eq!(serve.metrics.shed(), 0,
+                   "no deadlines set, so nothing may shed");
+        assert!(serve.metrics.derived_quotas().is_empty(),
+                "adaptive derivation is RejectOverQuota-only");
+        serve.shutdown();
+    }
+
+    #[test]
+    fn explicit_quota_still_wins_over_adaptive_path() {
+        // shard_quota Some(0) + rejecting policy: everything sheds,
+        // exactly as before the adaptive path existed.
+        let serve = Serve::start(ServeConfig {
+            shed: ShedPolicy::RejectOverQuota,
+            shard_quota: Some(0),
+            ..Default::default()
+        }).unwrap();
+        assert!(matches!(serve.call(knl_point(16)),
+                         Err(ServeError::Overloaded { .. })));
+        assert!(serve.metrics.derived_quotas().is_empty(),
+                "explicit quota must not derive anything");
         serve.shutdown();
     }
 

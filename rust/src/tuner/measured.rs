@@ -43,9 +43,20 @@ enum MeasuredInputs {
     F64 { a: Vec<f64>, b: Vec<f64>, c: Vec<f64> },
 }
 
-impl MeasuredInputs {
-    fn build(n: usize, precision: Precision) -> Self {
-        match precision {
+/// A reusable measurement harness: deterministic input matrices for one
+/// `(n, precision)` plus best-of-k timing of the tuned kernel under any
+/// [`KernelParams`]. The sweep below and the online tuner
+/// (`autotune::online`) share this, so their numbers are directly
+/// comparable — inputs are built once, not per timed point.
+pub struct MeasuredGemm {
+    n: usize,
+    precision: Precision,
+    inputs: MeasuredInputs,
+}
+
+impl MeasuredGemm {
+    pub fn new(n: usize, precision: Precision) -> Self {
+        let inputs = match precision {
             Precision::F32 => MeasuredInputs::F32 {
                 a: prng::matrix_f32(SEED_A, n, n),
                 b: prng::matrix_f32(SEED_B, n, n),
@@ -56,16 +67,26 @@ impl MeasuredInputs {
                 b: prng::matrix_f64(SEED_B, n, n),
                 c: prng::matrix_f64(SEED_C, n, n),
             },
-        }
+        };
+        Self { n, precision, inputs }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn precision(&self) -> Precision {
+        self.precision
     }
 
     /// Best-of-`reps` wall time of one full tuned GEMM (the paper's
     /// best-of-k measurement protocol, §2).
-    fn time(&self, n: usize, params: &KernelParams, reps: usize) -> f64 {
+    pub fn time(&self, params: &KernelParams, reps: usize) -> f64 {
+        let n = self.n;
         let mut best = f64::INFINITY;
         for _ in 0..reps.max(1) {
             let t0 = Instant::now();
-            match self {
+            match &self.inputs {
                 MeasuredInputs::F32 { a, b, c } => {
                     let out = kernel::gemm_f32_tuned(n, a, b, c, 1.5,
                                                      0.5, params);
@@ -80,6 +101,11 @@ impl MeasuredInputs {
             best = best.min(t0.elapsed().as_secs_f64());
         }
         best.max(1e-9)
+    }
+
+    /// Measured GFLOP/s of the kernel under `params` (best-of-`reps`).
+    pub fn gflops(&self, params: &KernelParams, reps: usize) -> f64 {
+        gemm_metrics::gflops(self.n as u64, self.time(params, reps))
     }
 }
 
@@ -102,10 +128,10 @@ pub fn try_measured_sweep(space: &TuningSpace, reps: usize,
     let n = space.n as usize;
     let reps = reps.max(1);
     let peak = space.arch.spec().peak_gflops(space.precision);
-    let inputs = Arc::new(MeasuredInputs::build(n, space.precision));
+    let inputs = Arc::new(MeasuredGemm::new(n, space.precision));
     super::sweep::try_sweep_with(space.points(), pool, move |p| {
         let params = params_for_point(p);
-        let seconds = inputs.time(n, &params, reps);
+        let seconds = inputs.time(&params, reps);
         let gflops = gemm_metrics::gflops(p.n, seconds);
         SweepRecord {
             point: *p,
@@ -180,5 +206,20 @@ mod tests {
     #[test]
     fn self_consistency_empty_is_none() {
         assert!(self_consistency(&SweepResults::default()).is_none());
+    }
+
+    #[test]
+    fn measured_gemm_harness_times_any_params() {
+        let m = MeasuredGemm::new(48, Precision::F64);
+        assert_eq!(m.n(), 48);
+        assert_eq!(m.precision(), Precision::F64);
+        let p = KernelParams::for_n(48);
+        let s = m.time(&p, 1);
+        assert!(s > 0.0 && s.is_finite());
+        assert!(m.gflops(&p, 1) > 0.0);
+        // a non-default blocking is timeable too (the online tuner's
+        // exploration path)
+        let q = KernelParams::new(16, 16, 16, 2, 2).unwrap();
+        assert!(m.time(&q, 1) > 0.0);
     }
 }

@@ -20,8 +20,8 @@ pub mod space;
 pub mod strategies;
 pub mod sweep;
 
-pub use measured::{measured_sweep, try_measured_sweep};
+pub use measured::{measured_sweep, try_measured_sweep, MeasuredGemm};
 pub use results::{SweepRecord, SweepResults};
 pub use space::TuningSpace;
-pub use strategies::{tune_with, Strategy, TuneOutcome};
+pub use strategies::{tune_with, tune_with_eval, Strategy, TuneOutcome};
 pub use sweep::{grid_sweep, try_grid_sweep, try_sweep_with};

@@ -62,22 +62,37 @@ pub struct TuneOutcome {
     pub history: SweepResults,
 }
 
-/// Run a strategy with an evaluation budget. Deterministic for a given
-/// seed.
+/// Run a strategy against the machine model with an evaluation budget.
+/// Deterministic for a given seed. Thin wrapper over
+/// [`tune_with_eval`] — the strategies themselves are generic over the
+/// evaluation backend, so the online tuner (`autotune::online`) can run
+/// the same budgeted searches against *measured* GFLOP/s.
 pub fn tune_with(strategy: Strategy, machine: &Machine,
                  space: &TuningSpace, budget: usize, seed: u64)
                  -> TuneOutcome {
-    match strategy {
-        Strategy::Grid => grid(machine, space),
-        Strategy::Random => random(machine, space, budget, seed),
-        Strategy::HillClimb => hill_climb(machine, space, budget, seed),
-        Strategy::Anneal => anneal(machine, space, budget, seed),
-    }
+    tune_with_eval(strategy, space, budget, seed, |p| {
+        let pred = machine.predict(p);
+        SweepRecord::new(*p, &pred)
+    })
 }
 
-fn eval(machine: &Machine, p: TuningPoint) -> SweepRecord {
-    let pred = machine.predict(&p);
-    SweepRecord::new(p, &pred)
+/// Run a strategy with an arbitrary evaluation backend (model
+/// prediction, measured kernel timing, …). Deterministic for a given
+/// seed *and* a deterministic `eval`.
+pub fn tune_with_eval<F>(strategy: Strategy, space: &TuningSpace,
+                         budget: usize, seed: u64, mut eval: F)
+                         -> TuneOutcome
+where
+    F: FnMut(&TuningPoint) -> SweepRecord,
+{
+    match strategy {
+        Strategy::Grid => grid(space, &mut eval),
+        Strategy::Random => random(space, budget, seed, &mut eval),
+        Strategy::HillClimb => {
+            hill_climb(space, budget, seed, &mut eval)
+        }
+        Strategy::Anneal => anneal(space, budget, seed, &mut eval),
+    }
 }
 
 fn finish(history: SweepResults, evals: usize) -> TuneOutcome {
@@ -85,17 +100,23 @@ fn finish(history: SweepResults, evals: usize) -> TuneOutcome {
     TuneOutcome { best, evals, history }
 }
 
-fn grid(machine: &Machine, space: &TuningSpace) -> TuneOutcome {
+fn grid<F>(space: &TuningSpace, eval: &mut F) -> TuneOutcome
+where
+    F: FnMut(&TuningPoint) -> SweepRecord,
+{
     let mut history = SweepResults::default();
     for p in space.points() {
-        history.push(eval(machine, p));
+        history.push(eval(&p));
     }
     let evals = history.len();
     finish(history, evals)
 }
 
-fn random(machine: &Machine, space: &TuningSpace, budget: usize,
-          seed: u64) -> TuneOutcome {
+fn random<F>(space: &TuningSpace, budget: usize, seed: u64,
+             eval: &mut F) -> TuneOutcome
+where
+    F: FnMut(&TuningPoint) -> SweepRecord,
+{
     let mut rng = SplitMix64::new(seed);
     let mut points = space.points();
     // Fisher–Yates shuffle, take the first `budget`
@@ -106,7 +127,7 @@ fn random(machine: &Machine, space: &TuningSpace, budget: usize,
     points.truncate(budget.max(1).min(points.len()));
     let mut history = SweepResults::default();
     for p in points {
-        history.push(eval(machine, p));
+        history.push(eval(&p));
     }
     let evals = history.len();
     finish(history, evals)
@@ -151,13 +172,16 @@ fn random_point(space: &TuningSpace, rng: &mut SplitMix64) -> TuningPoint {
     points[rng.next_below(points.len() as u64) as usize]
 }
 
-fn hill_climb(machine: &Machine, space: &TuningSpace, budget: usize,
-              seed: u64) -> TuneOutcome {
+fn hill_climb<F>(space: &TuningSpace, budget: usize, seed: u64,
+                 eval: &mut F) -> TuneOutcome
+where
+    F: FnMut(&TuningPoint) -> SweepRecord,
+{
     let mut rng = SplitMix64::new(seed);
     let mut history = SweepResults::default();
     let mut evals = 0usize;
     while evals < budget.max(1) {
-        let mut current = eval(machine, random_point(space, &mut rng));
+        let mut current = eval(&random_point(space, &mut rng));
         evals += 1;
         history.push(current.clone());
         loop {
@@ -166,7 +190,7 @@ fn hill_climb(machine: &Machine, space: &TuningSpace, budget: usize,
                 if evals >= budget {
                     break;
                 }
-                let r = eval(machine, nb);
+                let r = eval(&nb);
                 evals += 1;
                 history.push(r.clone());
                 if r.gflops > current.gflops {
@@ -185,11 +209,14 @@ fn hill_climb(machine: &Machine, space: &TuningSpace, budget: usize,
     finish(history, evals)
 }
 
-fn anneal(machine: &Machine, space: &TuningSpace, budget: usize,
-          seed: u64) -> TuneOutcome {
+fn anneal<F>(space: &TuningSpace, budget: usize, seed: u64,
+             eval: &mut F) -> TuneOutcome
+where
+    F: FnMut(&TuningPoint) -> SweepRecord,
+{
     let mut rng = SplitMix64::new(seed);
     let mut history = SweepResults::default();
-    let mut current = eval(machine, random_point(space, &mut rng));
+    let mut current = eval(&random_point(space, &mut rng));
     history.push(current.clone());
     let mut evals = 1usize;
     let budget = budget.max(2);
@@ -202,7 +229,7 @@ fn anneal(machine: &Machine, space: &TuningSpace, budget: usize,
         } else {
             nbs[rng.next_below(nbs.len() as u64) as usize]
         };
-        let cand = eval(machine, cand_point);
+        let cand = eval(&cand_point);
         evals += 1;
         history.push(cand.clone());
         let rel = (cand.gflops - current.gflops)
@@ -288,6 +315,33 @@ mod tests {
                 assert!(s.h_values.contains(&nb.hw_threads));
             }
         }
+    }
+
+    #[test]
+    fn tune_with_eval_supports_custom_backends() {
+        // A synthetic "measured" backend: throughput peaks at T=64.
+        // The strategies must drive it exactly like the model backend —
+        // same budget accounting, same determinism.
+        use crate::sim::PredictionBound;
+        let (_, s) = setup();
+        let mut calls = 0usize;
+        let mut run = |strategy, budget, seed| {
+            tune_with_eval(strategy, &s, budget, seed, |p| {
+                calls += 1;
+                SweepRecord {
+                    point: *p,
+                    gflops: 1000.0 - (p.t as f64 - 64.0).abs(),
+                    relative_peak: 0.0,
+                    bound: PredictionBound::Measured,
+                }
+            })
+        };
+        let grid = run(Strategy::Grid, 0, 1);
+        assert_eq!(grid.best.point.t, 64);
+        let hc = run(Strategy::HillClimb, s.len() * 2, 7);
+        assert_eq!(hc.best.point.t, 64, "smooth surface: optimum found");
+        assert_eq!(calls, grid.evals + hc.evals,
+                   "every eval goes through the custom backend");
     }
 
     #[test]

@@ -1,0 +1,170 @@
+//! Integration: the persistent tuning store on a real filesystem —
+//! round-trip, atomicity artifacts, corrupt-file recovery, schema
+//! versioning and fingerprint isolation (ISSUE 4 satellite: test
+//! coverage for every failure mode the store promises to absorb).
+
+use std::path::PathBuf;
+
+use alpaka_rs::autotune::{ArchFingerprint, TuneEntry, TuningStore,
+                          STORE_SCHEMA};
+use alpaka_rs::gemm::kernel::KernelParams;
+use alpaka_rs::gemm::Precision;
+
+/// Fresh per-test scratch file (the process-global temp dir is shared;
+/// the pid + name keep parallel test binaries apart).
+fn scratch(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("alpaka_store_test_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("scratch dir");
+    dir.join(name)
+}
+
+fn params() -> KernelParams {
+    KernelParams::new(96, 160, 128, 8, 4).unwrap()
+}
+
+#[test]
+fn roundtrip_write_reload_identical_params() {
+    let path = scratch("roundtrip.json");
+    let _ = std::fs::remove_file(&path);
+    {
+        let mut store = TuningStore::open(&path);
+        assert!(store.is_empty(), "fresh path opens empty");
+        store.commit(Precision::F64, 512, params(), 3.5, 2).unwrap();
+        store.commit(Precision::F32, 128,
+                     KernelParams::new(32, 64, 32, 4, 8).unwrap(),
+                     7.25, 1).unwrap();
+    } // dropped: reload must come from disk alone
+    let store = TuningStore::open(&path);
+    assert_eq!(store.len(), 2);
+    let e = store.lookup(Precision::F64, 512).expect("reloaded");
+    assert_eq!(e.params, params(), "params survive bit-exactly");
+    assert_eq!(e.samples, 2);
+    assert!((e.gflops - 3.5).abs() < 1e-6);
+    let e32 = store.lookup(Precision::F32, 128).expect("reloaded");
+    assert_eq!(e32.params, KernelParams::new(32, 64, 32, 4, 8).unwrap());
+    // no leftover temp file from the atomic write protocol
+    assert!(!path.with_extension("json.tmp").exists(),
+            "atomic write cleans up its temp file");
+}
+
+#[test]
+fn corrupt_file_recovers_to_empty_without_panicking() {
+    for (name, bytes) in [
+        ("corrupt_trunc.json",
+         &br#"{"schema": 1, "entries": [{"fing"#[..]),
+        ("corrupt_garbage.json", &b"\x00\xffnot json\x7f"[..]),
+        ("corrupt_wrong_shape.json", &br#"[1, 2, 3]"#[..]),
+        ("corrupt_empty.json", &b""[..]),
+    ] {
+        let path = scratch(name);
+        std::fs::write(&path, bytes).unwrap();
+        let mut store = TuningStore::open(&path);
+        assert!(store.is_empty(), "{name}: recovered to empty");
+        assert!(store.lookup(Precision::F64, 64).is_none());
+        // the recovered store is fully usable: commit overwrites the
+        // corrupt bytes atomically and the result reloads
+        store.commit(Precision::F64, 64, params(), 1.0, 1).unwrap();
+        let again = TuningStore::open(&path);
+        assert_eq!(again.len(), 1, "{name}: post-recovery commit sticks");
+    }
+}
+
+#[test]
+fn unreadable_path_detaches_persistence_instead_of_clobbering() {
+    // A path that exists but cannot be read as a file (here: a
+    // directory → EISDIR, a non-NotFound error even when running as
+    // root) must NOT open as an empty persistent store — a later save
+    // would clobber state the store never saw. It detaches instead.
+    let dir = scratch("i_am_a_directory");
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut store = TuningStore::open(&dir);
+    assert!(store.is_empty());
+    assert!(store.path().is_none(),
+            "detached: no persistence target kept");
+    // commits still work, in memory only, and never touch the target
+    store.commit(Precision::F64, 64, params(), 1.0, 1).unwrap();
+    assert!(store.lookup(Precision::F64, 64).is_some());
+    assert!(dir.is_dir(), "the unreadable target was left alone");
+}
+
+#[test]
+fn schema_version_mismatch_refuses_stale_data() {
+    let path = scratch("schema_mismatch.json");
+    let stale = format!(
+        r#"{{"schema": {}, "entries": [
+            {{"fingerprint": "{}", "dtype": "f64", "bucket": 512,
+              "mc": 8, "nc": 8, "kc": 8, "mr": 1, "nr": 1,
+              "gflops": 999.0, "samples": 50}}
+        ]}}"#,
+        STORE_SCHEMA + 1, ArchFingerprint::detect().label());
+    std::fs::write(&path, &stale).unwrap();
+    let mut store = TuningStore::open(&path);
+    // Even though the entry matches this machine's fingerprint, the
+    // schema mismatch refuses the WHOLE file — stale-format data must
+    // never influence kernel selection.
+    assert!(store.is_empty(), "future-schema file treated as empty");
+    assert!(store.lookup(Precision::F64, 512).is_none());
+    // AND persistence is detached: valid data from another binary
+    // version must never be clobbered by this one's saves.
+    assert!(store.path().is_none(),
+            "schema mismatch runs detached");
+    store.commit(Precision::F64, 64, params(), 1.0, 1).unwrap();
+    assert_eq!(std::fs::read_to_string(&path).unwrap(), stale,
+               "the incompatible file is byte-identical after commits");
+}
+
+#[test]
+fn foreign_fingerprint_falls_back_to_defaults_but_survives_saves() {
+    let path = scratch("fingerprint.json");
+    let _ = std::fs::remove_file(&path);
+    let foreign = TuneEntry {
+        fingerprint: "power8/c160/vsx".to_string(),
+        dtype: Precision::F64,
+        bucket: 512,
+        params: KernelParams::new(8, 8, 8, 1, 1).unwrap(),
+        gflops: 123.0,
+        samples: 9,
+    };
+    {
+        let mut store = TuningStore::open(&path);
+        store.commit_entry(foreign.clone()).unwrap();
+        // the lookup the serve layer does: must MISS (→ defaults),
+        // because these params were measured on different hardware
+        assert!(store.lookup(Precision::F64, 512).is_none(),
+                "foreign entry never served");
+        // a local commit for the same (dtype, bucket) coexists
+        store.commit(Precision::F64, 512, params(), 2.0, 1).unwrap();
+        assert_eq!(store.lookup(Precision::F64, 512).unwrap().params,
+                   params());
+    }
+    // both entries survive the reload — the file can serve a fleet
+    let store = TuningStore::open(&path);
+    assert_eq!(store.len(), 2);
+    assert!(store.entries()
+            .any(|e| e.fingerprint == foreign.fingerprint
+                 && e.samples == 9));
+    assert_eq!(store.lookup(Precision::F64, 512).unwrap().params,
+               params(), "local entry still the one served");
+}
+
+#[test]
+fn store_file_is_deterministic_for_equal_content() {
+    let path_a = scratch("deterministic_a.json");
+    let path_b = scratch("deterministic_b.json");
+    for p in [&path_a, &path_b] {
+        let _ = std::fs::remove_file(p);
+        let mut store = TuningStore::open(p);
+        // insert in different orders: the file must not care
+        if p == &path_a {
+            store.commit(Precision::F64, 512, params(), 1.0, 1).unwrap();
+            store.commit(Precision::F32, 64, params(), 2.0, 1).unwrap();
+        } else {
+            store.commit(Precision::F32, 64, params(), 2.0, 1).unwrap();
+            store.commit(Precision::F64, 512, params(), 1.0, 1).unwrap();
+        }
+    }
+    let a = std::fs::read_to_string(&path_a).unwrap();
+    let b = std::fs::read_to_string(&path_b).unwrap();
+    assert_eq!(a, b, "entry order on disk is canonical (diffable in CI)");
+}

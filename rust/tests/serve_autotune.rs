@@ -1,0 +1,238 @@
+//! Integration: the online-autotuning plane end to end (ISSUE 4
+//! acceptance criteria).
+//!
+//! * A **cold** serve layer with online tuning answers every request
+//!   correctly from the first one (threadpool replies are
+//!   digest-checked inside the backend — an `Ok` IS the check
+//!   passing), and after the background exploration commits, requests
+//!   for that bucket execute with the stored params (`…@store` kernel
+//!   label).
+//! * The store **survives a process restart**: a second serve layer
+//!   over the same path serves `…@store` from its very first request
+//!   and enqueues no new exploration.
+//! * **No serving request ever blocks on tuning**: exploration jobs
+//!   are hard-bounded and shed under pressure like any shard work.
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use alpaka_rs::gemm::kernel::KernelParams;
+use alpaka_rs::gemm::Precision;
+use alpaka_rs::serve::{loadgen, NativeConfig, NativeEngineId, Output,
+                       Serve, ServeConfig, ShedPolicy, WorkItem};
+
+fn scratch(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("alpaka_serve_autotune_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("scratch dir");
+    dir.join(name)
+}
+
+fn kernel_of(output: &Output) -> String {
+    match output {
+        Output::Native { kernel, .. } => kernel.clone(),
+        other => panic!("expected native output, got {other:?}"),
+    }
+}
+
+/// Wait until the store has an entry for `(dtype, bucket)` (the
+/// background exploration committed) or fail after `timeout`.
+fn await_commit(serve: &Serve, dtype: Precision, bucket: u64,
+                timeout: Duration) {
+    let store = serve.tuning_store().expect("store configured");
+    let t0 = Instant::now();
+    loop {
+        if store.lock().unwrap().lookup(dtype, bucket).is_some() {
+            return;
+        }
+        assert!(t0.elapsed() < timeout,
+                "exploration for {dtype:?} n<={bucket} did not commit \
+                 within {timeout:?}; summary: {}", serve.summary());
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+#[test]
+fn cold_start_explores_commits_and_serves_store_params() {
+    let path = scratch("online_e2e.json");
+    let _ = std::fs::remove_file(&path);
+    // n=256: its exploration (3 timed 256³ GEMMs) takes tens of ms —
+    // orders of magnitude longer than routing + shard spawn — so the
+    // FIRST request's kernel selection always precedes the commit
+    // (the cold-serves-defaults assertion below is race-free).
+    let id = "gemm_n256_t16_e1_f64".to_string();
+    let cfg = ServeConfig {
+        cache_cap: 0, // every request executes: labels are per-run truth
+        native: Some(NativeConfig::Synthetic(vec![id.clone()])),
+        native_threads: 2,
+        tuning_store: Some(path.clone()),
+        online_tune: true,
+        tune_budget: 2,
+        tune_reps: 1,
+        ..Default::default()
+    };
+
+    let serve = Serve::start(cfg.clone()).unwrap();
+    // Cold start: the FIRST request is served correctly (the
+    // threadpool backend digest-checks every run against its
+    // sequential oracle — Ok is the proof) with default params.
+    let first = serve
+        .call(WorkItem::artifact_on(id.clone(),
+                                    NativeEngineId::Threadpool))
+        .unwrap();
+    let k1 = kernel_of(&first.output);
+    assert!(k1.starts_with("tuned{"), "{k1}");
+    assert!(!k1.ends_with("@store"),
+            "cold bucket must serve defaults, got {k1}");
+
+    // The request seeded a background exploration; wait for its commit.
+    await_commit(&serve, Precision::F64, 256, Duration::from_secs(60));
+    assert!(serve.metrics.tune_enqueued() >= 1);
+
+    // Post-commit requests for the bucket run the STORED params — and
+    // still digest-match the oracle (rebuilt once for the new
+    // blocking if it differs).
+    let second = serve
+        .call(WorkItem::artifact_on(id.clone(),
+                                    NativeEngineId::Threadpool))
+        .unwrap();
+    let k2 = kernel_of(&second.output);
+    assert!(k2.ends_with("@store"),
+            "tuned bucket must serve store params, got {k2}");
+    // the PJRT shard's host fallback selects from the same store
+    let pjrt = serve.call(WorkItem::artifact(id.clone())).unwrap();
+    assert!(kernel_of(&pjrt.output).ends_with("@store"));
+    assert_eq!(serve.metrics.failed(), 0);
+    serve.shutdown();
+
+    // Process restart (a second layer over the same path): the store
+    // reloads and the VERY FIRST request serves @store with no new
+    // exploration enqueued.
+    let serve2 = Serve::start(cfg).unwrap();
+    let warm = serve2
+        .call(WorkItem::artifact_on(id.clone(),
+                                    NativeEngineId::Threadpool))
+        .unwrap();
+    assert!(kernel_of(&warm.output).ends_with("@store"),
+            "store must survive restart");
+    assert_eq!(serve2.metrics.tune_enqueued(), 0,
+               "tuned bucket must not re-explore after restart");
+    serve2.shutdown();
+}
+
+#[test]
+fn exploration_is_bounded_and_serving_never_blocks_on_tuning() {
+    // Four DISTINCT untuned buckets arrive while the tuner is busy on
+    // the first (large) one. With the tuner's outstanding line
+    // hard-bounded at 1, at least one exploration must be shed — and
+    // every serving request must still succeed, unblocked.
+    let ids: Vec<String> = ["gemm_n512_t16_e1_f64",
+                            "gemm_n64_t16_e1_f64",
+                            "gemm_n96_t16_e1_f64",
+                            "gemm_n256_t16_e1_f64"]
+        .iter().map(|s| s.to_string()).collect();
+    let serve = Serve::start(ServeConfig {
+        cache_cap: 0,
+        native: Some(NativeConfig::Synthetic(ids.clone())),
+        online_tune: true, // in-memory store
+        tune_budget: 2,
+        tune_reps: 1,
+        ..Default::default()
+    }).unwrap();
+
+    // Submit all four in one burst: the dispatcher routes them within
+    // microseconds, far faster than even the first 512³ exploration
+    // GEMM — so at most the 512 job plus one successor fit the
+    // tuner's line (one executing, one queued); the other buckets'
+    // jobs MUST be shed at enqueue.
+    let rxs: Vec<_> = ids.iter()
+        .map(|id| serve.submit(WorkItem::artifact(id.clone())))
+        .collect();
+    for rx in rxs {
+        let reply = rx.recv().unwrap().unwrap();
+        assert!(kernel_of(&reply.output).starts_with("tuned{"));
+    }
+    assert_eq!(serve.metrics.completed(), 4,
+               "every serving request answered");
+    assert_eq!(serve.metrics.failed(), 0);
+    let enq = serve.metrics.tune_enqueued();
+    let shed = serve.metrics.tune_shed();
+    assert!(shed >= 2,
+            "4 distinct buckets vs tuner line bound 1 must shed \
+             (enqueued {enq}, shed {shed}); summary: {}",
+            serve.summary());
+    assert_eq!(enq + shed, 4,
+               "every considered bucket is either enqueued or shed");
+    assert!(serve.summary().contains("tuning"), "{}", serve.summary());
+    serve.shutdown();
+}
+
+#[test]
+fn warmed_store_serves_without_online_tuning() {
+    // The read-only half of the lifecycle: a store pre-populated out
+    // of band (CLI `autotune --measured --store --warm`) drives
+    // selection with online tuning OFF — no tuner shard, no jobs.
+    use alpaka_rs::autotune::TuningStore;
+    let path = scratch("warmed.json");
+    let _ = std::fs::remove_file(&path);
+    {
+        let mut store = TuningStore::open(&path);
+        store.commit(Precision::F64, 64,
+                     KernelParams::new(32, 64, 32, 4, 4).unwrap(),
+                     5.0, 1).unwrap();
+    }
+    let id = "gemm_n64_t16_e1_f64".to_string();
+    let serve = Serve::start(ServeConfig {
+        cache_cap: 0,
+        native: Some(NativeConfig::Synthetic(vec![id.clone()])),
+        tuning_store: Some(path),
+        online_tune: false,
+        ..Default::default()
+    }).unwrap();
+    let reply = serve
+        .call(WorkItem::artifact_on(id.clone(),
+                                    NativeEngineId::Threadpool))
+        .unwrap();
+    let k = kernel_of(&reply.output);
+    assert!(k.contains("mc=32") && k.ends_with("@store"), "{k}");
+    assert_eq!(serve.metrics.tune_enqueued(), 0,
+               "no online tuning, no jobs");
+    serve.shutdown();
+}
+
+#[test]
+fn adaptive_quota_sheds_concurrent_overload_and_is_surfaced() {
+    // Satellite: adaptive quotas under real concurrency. A rejecting
+    // policy with NO explicit quota and a ~zero latency budget derives
+    // quota 1 as soon as the first request completes; 8 closed-loop
+    // clients hammering the single-worker pjrt shard must then shed.
+    const SLOW: &str = "gemm_n256_t16_e1_f32";
+    let serve = Serve::start(ServeConfig {
+        max_batch: 1,
+        cache_cap: 0,
+        native: Some(NativeConfig::Synthetic(vec![SLOW.to_string()])),
+        shed: ShedPolicy::RejectOverQuota,
+        shard_quota: None, // adaptive
+        latency_budget: Duration::from_micros(1),
+        ..Default::default()
+    }).unwrap();
+    let out = loadgen::run_closed_loop(&serve, &loadgen::LoadSpec {
+        clients: 8,
+        requests_per_client: 6,
+        items: vec![WorkItem::artifact(SLOW)],
+    });
+    assert_eq!(out.submitted, 48);
+    assert_eq!(out.ok + out.shed + out.failed, out.submitted,
+               "exactly one reply per request");
+    assert_eq!(out.failed, 0, "errors: {:?}", out.errors);
+    assert!(out.ok >= 1, "admitted requests still served");
+    assert!(out.shed >= 1,
+            "8 clients vs derived quota 1 must shed: {out:?}");
+    assert_eq!(serve.metrics.shed() as usize, out.shed);
+    let quotas = serve.metrics.derived_quotas();
+    assert!(quotas.iter().any(|(l, q)| l == "native:pjrt" && *q == 1),
+            "{quotas:?}");
+    assert!(serve.summary().contains("adaptive quota native:pjrt=1"),
+            "{}", serve.summary());
+    serve.shutdown();
+}

@@ -27,6 +27,7 @@ fn overloadable(shed: ShedPolicy, quota: Option<usize>) -> Serve {
         native_threads: 2,
         shed,
         shard_quota: quota,
+        ..ServeConfig::default()
     }).expect("serve start")
 }
 
