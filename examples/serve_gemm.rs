@@ -1,17 +1,27 @@
-//! Serving example, ported to the unified serve layer: concurrent
-//! clients drive simulated-architecture shards AND the native shard
-//! through ONE front queue, with continuous batching, an LRU result
-//! cache and unified metrics — the L3 coordinator in its router/batcher
-//! role.
+//! Serving example over the **client plane**: sessions, futures and a
+//! request pipeline driving the unified serve layer — the one
+//! client-side concurrency idiom in the repo (no hand-rolled
+//! threads-plus-channels here).
+//!
+//! Three acts:
+//! 1. a [`Pipeline`] of chained GEMMs (`D = (A·B)·C` shaped) whose
+//!    nodes auto-submit as their dependencies resolve;
+//! 2. a [`Session::submit_stream`] pipelining independent requests
+//!    through a bounded in-flight window, replies in completion order;
+//! 3. the standard mixed closed loop (windowed sessions under the
+//!    hood) with the per-session tallies in the summary.
 //!
 //! Run with: `cargo run --release --offline --example serve_gemm`
 //! (uses `artifacts/` when present, otherwise a synthetic native
-//! catalog served by the host reference GEMM).
+//! catalog served by the host GEMM).
 
 use std::path::Path;
 
 use alpaka_rs::arch::ArchId;
-use alpaka_rs::serve::{loadgen, Serve, ServeConfig};
+use alpaka_rs::client::{Pipeline, Session, SessionConfig,
+                        WindowPolicy};
+use alpaka_rs::serve::{loadgen, NativeEngineId, Serve, ServeConfig,
+                       WorkItem};
 
 fn main() -> alpaka_rs::Result<()> {
     let (native, artifact_ids) =
@@ -26,7 +36,48 @@ fn main() -> alpaka_rs::Result<()> {
         ..ServeConfig::default()
     })?;
 
-    println!("== unified serve layer: 6 clients x 12 requests over \
+    // -- 1. chained GEMMs as a dependency pipeline --------------------
+    let session = Session::open(&serve, SessionConfig {
+        window: 4,
+        on_full: WindowPolicy::Block,
+    });
+    let first = artifact_ids[0].clone();
+    let mut p = Pipeline::new();
+    let ab = p.node(WorkItem::artifact(first.clone()), &[]);
+    let abc = p.node(
+        WorkItem::artifact_on(first.clone(), NativeEngineId::Threadpool),
+        &[ab]);
+    let d = p.node(WorkItem::artifact(first.clone()), &[ab, abc]);
+    println!("== pipeline: D = (A·B)·C over session {} ==", session.id());
+    let out = p.run(&session);
+    for (i, r) in out.results.iter().enumerate() {
+        match r {
+            alpaka_rs::client::NodeResult::Ok(reply) => {
+                println!("  node {i}: served by {} ({})", reply.shard,
+                         reply.cache_src.label());
+            }
+            other => println!("  node {i}: {other:?}"),
+        }
+    }
+    assert!(out.all_ok(), "pipeline failed: {:?}", out.result(d));
+
+    // -- 2. a stream of independent requests, completion order --------
+    let items: Vec<WorkItem> = (0..8)
+        .map(|i| WorkItem::artifact(
+            artifact_ids[i % artifact_ids.len()].clone()))
+        .collect();
+    println!("\n== stream: 8 requests through a window of 4 ==");
+    for (idx, result) in session.submit_stream(items) {
+        let reply = result.expect("stream reply");
+        println!("  #{idx} <- {} ({}, batch {})", reply.shard,
+                 reply.cache_src.label(), reply.batch_size);
+    }
+    let stats = session.close();
+    assert!(stats.fully_accounted(), "{stats:?}");
+    println!("session accounting: {stats:?}");
+
+    // -- 3. the mixed closed loop (sessions under the hood) -----------
+    println!("\n== unified serve layer: 6 clients x 12 requests over \
               4 shards ==\n");
     let spec = loadgen::LoadSpec {
         clients: 6,

@@ -1,0 +1,170 @@
+//! Client-plane acceptance bench: **pipelined sessions vs equivalent
+//! one-shot callers** over the unified serve layer.
+//!
+//! Both phases use the SAME number of client threads (sessions) over
+//! the same warm serve layer and the same request mix; the only
+//! difference is the per-session in-flight window — 1 (the classic
+//! one-shot closed loop) vs `WINDOW` (pipelining via
+//! `Session::submit_stream`). The win comes from latency hiding:
+//! each one-shot client leaves the layer idle for a full client→serve
+//! round trip per request, a pipelined session keeps the window full.
+//!
+//! Gates:
+//! * pipelined throughput ≥ 1.2× one-shot at equal concurrency;
+//! * zero lost replies in both phases (exact session accounting —
+//!   `run_stream_loop` asserts `submitted == ok+shed+failed+cancelled`
+//!   per session, and the merged outcome must re-add);
+//! * a 3-node chained-GEMM [`Pipeline`] resolves all-ok.
+//!
+//! Emits `BENCH_client.json` for the CI perf-trajectory artifacts.
+//!
+//! Run with: `cargo bench --bench client_stream`.
+
+use std::process::ExitCode;
+
+use alpaka_rs::arch::ArchId;
+use alpaka_rs::client::{Pipeline, Session, SessionConfig,
+                        WindowPolicy};
+use alpaka_rs::serve::{loadgen, NativeConfig, NativeEngineId, Serve,
+                       ServeConfig, WorkItem};
+
+const SESSIONS: usize = 3;
+const REQUESTS_PER_SESSION: usize = 120;
+const WINDOW: usize = 6;
+const GATE_SPEEDUP: f64 = 1.2;
+const ARTIFACT: &str = "dot_n64_f32";
+
+fn main() -> ExitCode {
+    let serve = match Serve::start(ServeConfig {
+        front_cap: 64,
+        shard_cap: 64,
+        max_batch: 8,
+        cache_cap: 0, // real work every request: the win must come
+                      // from pipelining, not cache replays
+        sim_threads: 2,
+        native: Some(NativeConfig::Synthetic(vec![
+            ARTIFACT.to_string(),
+        ])),
+        native_threads: 2,
+        ..ServeConfig::default()
+    }) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("serve start failed: {e:#}");
+            return ExitCode::FAILURE;
+        }
+    };
+
+    // RTT-dominated mix: cheap sim points over two architectures plus
+    // a small artifact on both named native shards — per-request
+    // service time is tiny, so one-shot callers pay mostly round-trip
+    // latency, which is exactly what pipelining hides.
+    let spec = loadgen::LoadSpec {
+        clients: SESSIONS,
+        requests_per_client: REQUESTS_PER_SESSION,
+        items: loadgen::default_mix(&[ArchId::Knl, ArchId::P100Nvlink],
+                                    &[ARTIFACT.to_string()], 256),
+    };
+
+    // Warmup: spin every shard (thread spawn, input generation, the
+    // threadpool shard's oracle build) OUT of the timed phases.
+    let _ = loadgen::run_closed_loop(&serve, &loadgen::LoadSpec {
+        clients: SESSIONS,
+        requests_per_client: 8,
+        items: spec.items.clone(),
+    });
+
+    println!("client_stream: {SESSIONS} sessions x \
+              {REQUESTS_PER_SESSION} requests, mix of {} items",
+             spec.items.len());
+
+    // -- phase 1: one-shot (window 1) ---------------------------------
+    let oneshot = loadgen::run_stream_loop(&serve, &spec, 1);
+    let oneshot_rps =
+        oneshot.ok as f64 / oneshot.wall_seconds.max(1e-9);
+    println!("one-shot  (window 1): {} ok in {:.3}s = {:.1} req/s",
+             oneshot.ok, oneshot.wall_seconds, oneshot_rps);
+
+    // -- phase 2: pipelined (window WINDOW) ---------------------------
+    let piped = loadgen::run_stream_loop(&serve, &spec, WINDOW);
+    let piped_rps = piped.ok as f64 / piped.wall_seconds.max(1e-9);
+    println!("pipelined (window {WINDOW}): {} ok in {:.3}s = \
+              {:.1} req/s", piped.ok, piped.wall_seconds, piped_rps);
+    let speedup = piped_rps / oneshot_rps.max(1e-9);
+    println!("speedup: {speedup:.2}x at equal concurrency \
+              ({SESSIONS} client threads)");
+
+    // -- phase 3: chained-GEMM pipeline -------------------------------
+    let session = Session::open(&serve, SessionConfig {
+        window: 4,
+        on_full: WindowPolicy::Block,
+    });
+    let mut p = Pipeline::new();
+    let ab = p.node(WorkItem::artifact(ARTIFACT), &[]);
+    let abc = p.node(
+        WorkItem::artifact_on(ARTIFACT, NativeEngineId::Threadpool),
+        &[ab]);
+    let _d = p.node(WorkItem::artifact(ARTIFACT), &[ab, abc]);
+    let dag = p.run(&session);
+    let dag_ok = dag.all_ok();
+    let pstats = session.close();
+    println!("pipeline: {}/3 nodes ok; session {pstats:?}",
+             dag.ok_count());
+    println!("{}", serve.summary());
+    serve.shutdown();
+
+    // -- BENCH_client.json -------------------------------------------
+    let json = format!(
+        "{{\n  \"schema\": 1,\n  \"sessions\": {SESSIONS},\n  \
+         \"requests_per_session\": {REQUESTS_PER_SESSION},\n  \
+         \"window\": {WINDOW},\n  \"oneshot_rps\": {:.3},\n  \
+         \"pipelined_rps\": {:.3},\n  \"speedup\": {:.4},\n  \
+         \"pipeline_nodes_ok\": {}\n}}\n",
+        oneshot_rps, piped_rps, speedup, dag.ok_count());
+    match std::fs::write("BENCH_client.json", &json) {
+        Ok(()) => println!("wrote BENCH_client.json"),
+        Err(e) => {
+            eprintln!("FAIL: cannot write BENCH_client.json: {e}");
+            return ExitCode::FAILURE;
+        }
+    }
+
+    // -- gates --------------------------------------------------------
+    let mut ok = true;
+    for (name, out) in [("one-shot", &oneshot), ("pipelined", &piped)] {
+        if out.submitted != SESSIONS * REQUESTS_PER_SESSION {
+            eprintln!("FAIL: {name} submitted {} != {}", out.submitted,
+                      SESSIONS * REQUESTS_PER_SESSION);
+            ok = false;
+        }
+        if out.ok + out.shed + out.failed != out.submitted {
+            eprintln!("FAIL: {name} lost replies: {out:?}");
+            ok = false;
+        }
+        if out.failed != 0 || out.shed != 0 {
+            eprintln!("FAIL: {name} failed/shed under a no-shed \
+                       config: {out:?}");
+            ok = false;
+        }
+    }
+    if !dag_ok {
+        eprintln!("FAIL: pipeline nodes failed: {:?}", dag.results);
+        ok = false;
+    }
+    if !pstats.fully_accounted() {
+        eprintln!("FAIL: pipeline session accounting: {pstats:?}");
+        ok = false;
+    }
+    if speedup < GATE_SPEEDUP {
+        eprintln!("FAIL: pipelined throughput {piped_rps:.1} req/s < \
+                   {GATE_SPEEDUP}x one-shot {oneshot_rps:.1} req/s \
+                   (speedup {speedup:.2}x)");
+        ok = false;
+    }
+    if ok {
+        println!("client_stream: PASS");
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

@@ -43,7 +43,8 @@ pub mod store;
 use std::sync::{Arc, Mutex};
 
 pub use fingerprint::ArchFingerprint;
-pub use online::{explore_bucket, ExploreOutcome, TunerBackend};
+pub use online::{explore_bucket, explore_bucket_fanout,
+                 fanout_candidates, ExploreOutcome, TunerBackend};
 pub use store::{TuneEntry, TuningStore, STORE_SCHEMA};
 
 /// The store handle shared between the dispatcher (tune triggering),

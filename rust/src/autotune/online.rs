@@ -32,13 +32,37 @@ use super::SharedTuningStore;
 pub struct ExploreOutcome {
     /// The winning blocking for the bucket.
     pub params: KernelParams,
-    /// Its measured GFLOP/s at the bucket size.
+    /// Measured-best threadpool fan-out under the winning blocking
+    /// (`None` when the thread axis was not explored).
+    pub threads: Option<usize>,
+    /// Its measured GFLOP/s at the bucket size (fan-out included when
+    /// the thread axis was explored).
     pub gflops: f64,
-    /// Kernel timings spent (search points + the default baseline).
+    /// Kernel timings spent (search points + the default baseline +
+    /// thread-axis candidates).
     pub evals: usize,
     /// Whether the default `KernelParams::for_n` baseline beat every
     /// explored point (the winner is then the default itself).
     pub default_won: bool,
+}
+
+/// The threadpool fan-out widths one exploration times under the
+/// winning blocking: 1 (the sequential baseline — threading must earn
+/// its overhead), 2, half the pool and the full pool, deduplicated.
+/// `pool_threads == 0` means host-sized, mirroring
+/// `ServeConfig::native_threads`.
+pub fn fanout_candidates(pool_threads: usize) -> Vec<usize> {
+    let pool = if pool_threads == 0 {
+        std::thread::available_parallelism().map(|n| n.get())
+            .unwrap_or(4)
+    } else {
+        pool_threads
+    };
+    let mut c = vec![1, 2, pool / 2, pool];
+    c.retain(|t| *t >= 1 && *t <= pool);
+    c.sort_unstable();
+    c.dedup();
+    c
 }
 
 /// Explore the host-kernel tuning space for `(precision, bucket)` under
@@ -46,9 +70,24 @@ pub struct ExploreOutcome {
 /// (best-of-`reps`), and return the winner. The default
 /// [`KernelParams::for_n`] blocking is always measured as a baseline
 /// candidate — the returned winner is never slower than it (as
-/// measured here).
+/// measured here). Blocking axis only; see
+/// [`explore_bucket_fanout`] for the thread axis.
 pub fn explore_bucket(precision: Precision, bucket: u64, budget: usize,
                       reps: usize) -> ExploreOutcome {
+    explore_bucket_fanout(precision, bucket, budget, reps, &[])
+}
+
+/// [`explore_bucket`] extended with the **threadpool fan-out axis**:
+/// after the blocking search settles, the winner is re-timed fanned
+/// out over each width in `thread_candidates` (a 1-thread baseline is
+/// always included — a committed fan-out is never slower than
+/// sequential as measured here), and the best width rides into the
+/// store entry for `serve::ThreadpoolGemm` to apply per request.
+/// An empty candidate list skips the axis (`threads: None`).
+pub fn explore_bucket_fanout(precision: Precision, bucket: u64,
+                             budget: usize, reps: usize,
+                             thread_candidates: &[usize])
+                             -> ExploreOutcome {
     let n = bucket.max(1) as usize;
     let reps = reps.max(1);
     let gemm = MeasuredGemm::new(n, precision);
@@ -59,43 +98,71 @@ pub fn explore_bucket(precision: Precision, bucket: u64, budget: usize,
         ArchId::Host, compiler::vendor_compiler(ArchId::Host),
         precision, bucket.max(1));
     // The hardware-thread axis does not change the host kernel's
-    // blocking (that axis lives in the threadpool shard's fan-out):
-    // collapse it so the budget is spent entirely on distinct params.
+    // blocking (that axis is the fan-out measured below): collapse it
+    // so the budget is spent entirely on distinct params.
     space.h_values = vec![1];
-    if space.t_values.is_empty() {
+    let mut out = if space.t_values.is_empty() {
         // No legal tile sizes (bucket below the smallest T): the
-        // default baseline is the only candidate.
-        return ExploreOutcome { params: default,
-                                gflops: default_gflops, evals: 1,
-                                default_won: true };
-    }
-
-    let budget = budget.max(1).min(space.len());
-    let strategy = if budget >= space.len() {
-        Strategy::Grid
+        // default baseline is the only blocking candidate.
+        ExploreOutcome { params: default, threads: None,
+                         gflops: default_gflops, evals: 1,
+                         default_won: true }
     } else {
-        Strategy::HillClimb
-    };
-    let eval = |p: &TuningPoint| {
-        let params = tuner::measured::params_for_point(p);
-        let seconds = gemm.time(&params, reps);
-        SweepRecord {
-            point: *p,
-            gflops: gemm_metrics::gflops(p.n, seconds),
-            relative_peak: 0.0,
-            bound: PredictionBound::Measured,
+        let budget = budget.max(1).min(space.len());
+        let strategy = if budget >= space.len() {
+            Strategy::Grid
+        } else {
+            Strategy::HillClimb
+        };
+        let eval = |p: &TuningPoint| {
+            let params = tuner::measured::params_for_point(p);
+            let seconds = gemm.time(&params, reps);
+            SweepRecord {
+                point: *p,
+                gflops: gemm_metrics::gflops(p.n, seconds),
+                relative_peak: 0.0,
+                bound: PredictionBound::Measured,
+            }
+        };
+        let search = tuner::tune_with_eval(strategy, &space, budget,
+                                           0xA1FA ^ bucket, eval);
+        let explored =
+            tuner::measured::params_for_point(&search.best.point);
+        if default_gflops > search.best.gflops {
+            ExploreOutcome { params: default, threads: None,
+                             gflops: default_gflops,
+                             evals: search.evals + 1,
+                             default_won: true }
+        } else {
+            ExploreOutcome { params: explored, threads: None,
+                             gflops: search.best.gflops,
+                             evals: search.evals + 1,
+                             default_won: false }
         }
     };
-    let out = tuner::tune_with_eval(strategy, &space, budget,
-                                    0xA1FA ^ bucket, eval);
-    let explored = tuner::measured::params_for_point(&out.best.point);
-    if default_gflops > out.best.gflops {
-        ExploreOutcome { params: default, gflops: default_gflops,
-                         evals: out.evals + 1, default_won: true }
-    } else {
-        ExploreOutcome { params: explored, gflops: out.best.gflops,
-                         evals: out.evals + 1, default_won: false }
+
+    // Thread axis: re-time the winning blocking at each fan-out width
+    // (1 always included), best wall time wins.
+    let mut widths: Vec<usize> =
+        thread_candidates.iter().copied().filter(|t| *t >= 1).collect();
+    if !widths.is_empty() {
+        widths.push(1);
+        widths.sort_unstable();
+        widths.dedup();
+        let mut best_w = 1usize;
+        let mut best_secs = f64::INFINITY;
+        for &w in &widths {
+            let secs = gemm.time_threaded(&out.params, reps, w);
+            out.evals += 1;
+            if secs < best_secs {
+                best_secs = secs;
+                best_w = w;
+            }
+        }
+        out.threads = Some(best_w);
+        out.gflops = gemm_metrics::gflops(bucket.max(1), best_secs);
     }
+    out
 }
 
 /// The `tune:explore` shard's backend: serves
@@ -111,12 +178,24 @@ pub struct TunerBackend {
     store: SharedTuningStore,
     budget: usize,
     reps: usize,
+    /// Threadpool fan-out widths to explore per bucket (empty = the
+    /// blocking axis only).
+    fanout: Vec<usize>,
 }
 
 impl TunerBackend {
     pub fn new(store: SharedTuningStore, budget: usize, reps: usize)
                -> Self {
-        Self { store, budget: budget.max(1), reps: reps.max(1) }
+        Self { store, budget: budget.max(1), reps: reps.max(1),
+               fanout: Vec::new() }
+    }
+
+    /// Extend the exploration space with the threadpool fan-out axis
+    /// (see [`fanout_candidates`]); committed entries then carry a
+    /// measured thread count for `serve::ThreadpoolGemm`.
+    pub fn with_fanout(mut self, candidates: Vec<usize>) -> Self {
+        self.fanout = candidates;
+        self
     }
 }
 
@@ -153,15 +232,16 @@ impl Backend for TunerBackend {
             }
         }
         let t0 = Instant::now();
-        let out = explore_bucket(precision, bucket, self.budget,
-                                 self.reps);
+        let out = explore_bucket_fanout(precision, bucket, self.budget,
+                                        self.reps, &self.fanout);
         // Commit under the lock, persist OUTSIDE it: the same mutex
         // sits on both native shards' per-request kernel selection, so
         // serving must never wait behind this commit's file write.
         let snapshot = {
             let mut g = self.store.lock()
                 .map_err(|_| "tuning store lock poisoned".to_string())?;
-            g.commit_unsaved(precision, bucket, out.params, out.gflops,
+            g.commit_unsaved(precision, bucket, out.params,
+                             out.threads.map(|t| t as u64), out.gflops,
                              self.reps as u64);
             g.snapshot()
         };
@@ -216,6 +296,38 @@ mod tests {
         let out = explore_bucket(Precision::F32, 8, 4, 1);
         assert!(out.default_won);
         assert_eq!(out.params, KernelParams::for_n(8));
+        assert_eq!(out.threads, None, "blocking-only exploration");
+    }
+
+    #[test]
+    fn fanout_candidates_dedup_and_clamp() {
+        assert_eq!(fanout_candidates(4), vec![1, 2, 4]);
+        assert_eq!(fanout_candidates(1), vec![1]);
+        assert_eq!(fanout_candidates(2), vec![1, 2]);
+        let host = fanout_candidates(0);
+        assert!(host.contains(&1));
+        assert!(host.windows(2).all(|w| w[0] < w[1]), "{host:?}");
+    }
+
+    #[test]
+    fn thread_axis_explored_and_committed() {
+        // tiny bucket + tiny candidate list keeps this fast; the
+        // winner must be one of the measured widths and gflops > 0
+        let out = explore_bucket_fanout(Precision::F64, 32, 2, 1,
+                                        &[2]);
+        let w = out.threads.expect("thread axis explored");
+        assert!(w == 1 || w == 2, "winner among 1-baseline and 2: {w}");
+        assert!(out.gflops > 0.0);
+        assert!(out.evals >= 4,
+                "search + default + two fan-out timings: {}", out.evals);
+        // and the backend path commits it into the store entry
+        let store = Arc::new(Mutex::new(TuningStore::in_memory()));
+        let mut b = TunerBackend::new(Arc::clone(&store), 2, 1)
+            .with_fanout(vec![2]);
+        b.run(&WorkItem::explore(Precision::F64, 32)).unwrap();
+        let g = store.lock().unwrap();
+        let e = g.lookup(Precision::F64, 32).expect("committed");
+        assert!(e.threads.is_some(), "entry carries the measured width");
     }
 
     #[test]

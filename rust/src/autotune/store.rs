@@ -46,6 +46,11 @@ pub struct TuneEntry {
     pub bucket: u64,
     /// The winning kernel blocking for this bucket.
     pub params: KernelParams,
+    /// Measured-best threadpool fan-out for this bucket, when the
+    /// exploration covered the thread axis (`None` on entries from
+    /// blocking-only sweeps — the serve layer then uses its full
+    /// pool). Consulted by `serve::ThreadpoolGemm` alongside `params`.
+    pub threads: Option<u64>,
     /// Measured GFLOP/s of the winner at the bucket size.
     pub gflops: f64,
     /// How many measured samples back this entry (accumulated across
@@ -163,27 +168,42 @@ impl TuningStore {
 
     /// Commit a measured winner for `(dtype, bucket)` under the current
     /// host fingerprint and save. Sample counts accumulate across
-    /// commits for the same key.
+    /// commits for the same key. Blocking-only commit — the entry's
+    /// thread axis is untouched (a previously measured fan-out for the
+    /// key survives; see [`TuningStore::commit_tuned`]).
     pub fn commit(&mut self, dtype: Precision, bucket: u64,
                   params: KernelParams, gflops: f64, samples: u64)
                   -> crate::Result<()> {
-        self.commit_unsaved(dtype, bucket, params, gflops, samples);
+        self.commit_unsaved(dtype, bucket, params, None, gflops,
+                            samples);
         self.save()
     }
 
-    /// [`TuningStore::commit`] without the save — for callers holding
-    /// the store behind a lock: commit under the lock, then take a
+    /// [`TuningStore::commit`] carrying a measured threadpool fan-out
+    /// for the bucket (the explored thread axis).
+    pub fn commit_tuned(&mut self, dtype: Precision, bucket: u64,
+                        params: KernelParams, threads: Option<u64>,
+                        gflops: f64, samples: u64)
+                        -> crate::Result<()> {
+        self.commit_unsaved(dtype, bucket, params, threads, gflops,
+                            samples);
+        self.save()
+    }
+
+    /// Commit without the save — for callers holding the store behind
+    /// a lock: commit under the lock, then take a
     /// [`TuningStore::snapshot`] and write it with
     /// [`TuningStore::write_atomic`] *outside* the lock, so request
     /// serving never blocks on the commit's file I/O.
     pub fn commit_unsaved(&mut self, dtype: Precision, bucket: u64,
-                          params: KernelParams, gflops: f64,
-                          samples: u64) {
+                          params: KernelParams, threads: Option<u64>,
+                          gflops: f64, samples: u64) {
         self.insert_entry(TuneEntry {
             fingerprint: self.fingerprint.clone(),
             dtype,
             bucket,
             params,
+            threads,
             gflops,
             samples,
         });
@@ -205,6 +225,11 @@ impl TuningStore {
         let key = key_of(&entry.fingerprint, entry.dtype, entry.bucket);
         if let Some(prev) = self.entries.get(&key) {
             entry.samples = entry.samples.saturating_add(prev.samples);
+            // a blocking-only re-commit must not erase a fan-out the
+            // thread axis already measured for this key
+            if entry.threads.is_none() {
+                entry.threads = prev.threads;
+            }
         }
         self.entries.insert(key, entry);
     }
@@ -249,11 +274,16 @@ impl TuningStore {
         let total = self.entries.len();
         for (i, e) in self.entries.values().enumerate() {
             let comma = if i + 1 == total { "" } else { "," };
+            // the thread axis is emitted only when measured, so
+            // blocking-only stores keep their historical byte shape
+            let threads = e.threads
+                .map(|t| format!("\"threads\": {t}, "))
+                .unwrap_or_default();
             let _ = writeln!(
                 out,
                 "    {{\"fingerprint\": \"{}\", \"dtype\": \"{}\", \
                  \"bucket\": {}, \"mc\": {}, \"nc\": {}, \"kc\": {}, \
-                 \"mr\": {}, \"nr\": {}, \"gflops\": {:.6}, \
+                 \"mr\": {}, \"nr\": {}, {threads}\"gflops\": {:.6}, \
                  \"samples\": {}}}{comma}",
                 escape(&e.fingerprint), e.dtype.dtype(), e.bucket,
                 e.params.mc, e.params.nc, e.params.kc, e.params.mr,
@@ -277,9 +307,13 @@ impl TuningStore {
             } else {
                 "  [foreign fingerprint — not served here]"
             };
+            let threads = e.threads
+                .map(|t| format!(" x{t}thr"))
+                .unwrap_or_default();
             let _ = writeln!(
                 out,
-                "  {} n<={:<5} -> {{{}}} {:.2} GF/s ({} samples){local}",
+                "  {} n<={:<5} -> {{{}}}{threads} {:.2} GF/s \
+                 ({} samples){local}",
                 e.dtype.dtype(), e.bucket, e.params.label(), e.gflops,
                 e.samples);
         }
@@ -287,7 +321,11 @@ impl TuningStore {
     }
 }
 
-fn escape(s: &str) -> String {
+/// Minimal JSON string escaping for the hand-rolled serializers (this
+/// store and the serve layer's disk result cache share it — one
+/// implementation, so the two writers can never drift apart from the
+/// shared `util::json` parser).
+pub(crate) fn escape(s: &str) -> String {
     s.replace('\\', "\\\\").replace('"', "\\\"")
 }
 
@@ -346,10 +384,14 @@ fn parse_entry(v: &json::Value) -> Option<TuneEntry> {
                                    field("kc")?, field("mr")?,
                                    field("nr")?)
         .ok()?;
+    // optional thread axis: absent on blocking-only entries (and on
+    // every file written before the axis existed) — never fatal
+    let threads = v.get("threads").and_then(|t| t.as_u64())
+        .filter(|t| *t > 0);
     let gflops = v.get("gflops")?.as_f64()?;
     let samples = v.get("samples")?.as_u64()?;
-    Some(TuneEntry { fingerprint, dtype, bucket, params, gflops,
-                     samples })
+    Some(TuneEntry { fingerprint, dtype, bucket, params, threads,
+                     gflops, samples })
 }
 
 #[cfg(test)]
@@ -403,6 +445,7 @@ mod tests {
             dtype: Precision::F64,
             bucket: 512,
             params: params(),
+            threads: None,
             gflops: 99.0,
             samples: 10,
         }).unwrap();
@@ -449,6 +492,34 @@ mod tests {
     }
 
     #[test]
+    fn thread_axis_roundtrips_and_survives_blocking_recommit() {
+        let mut s = TuningStore::in_memory();
+        s.commit_tuned(Precision::F64, 256, params(), Some(3), 2.0, 1)
+            .unwrap();
+        let e = s.lookup(Precision::F64, 256).unwrap();
+        assert_eq!(e.threads, Some(3));
+        // serialized form carries the axis and parses back
+        let reparsed = parse_entries(&s.serialize()).unwrap();
+        assert_eq!(reparsed.values().next().unwrap().threads, Some(3));
+        // a blocking-only recommit keeps the measured fan-out
+        s.commit(Precision::F64, 256, params(), 2.5, 1).unwrap();
+        assert_eq!(s.lookup(Precision::F64, 256).unwrap().threads,
+                   Some(3));
+        // an explicit new fan-out replaces it
+        s.commit_tuned(Precision::F64, 256, params(), Some(2), 2.6, 1)
+            .unwrap();
+        assert_eq!(s.lookup(Precision::F64, 256).unwrap().threads,
+                   Some(2));
+        // entries without the axis read back as None (old files)
+        let mut old = TuningStore::in_memory();
+        old.commit(Precision::F32, 64, params(), 1.0, 1).unwrap();
+        assert!(!old.serialize().contains("threads"),
+                "blocking-only stores keep their historical shape");
+        let reparsed = parse_entries(&old.serialize()).unwrap();
+        assert_eq!(reparsed.values().next().unwrap().threads, None);
+    }
+
+    #[test]
     fn nonfinite_gflops_clamped() {
         let mut s = TuningStore::in_memory();
         s.commit(Precision::F64, 64, params(), f64::NAN, 1).unwrap();
@@ -464,6 +535,7 @@ mod tests {
             dtype: Precision::F32,
             bucket: 128,
             params: params(),
+            threads: None,
             gflops: 2.0,
             samples: 1,
         }).unwrap();

@@ -1,0 +1,388 @@
+//! A hand-rolled promise/future pair — the client plane's resolution
+//! primitive, zero external dependencies (no tokio in this image; built
+//! from scratch like the rest of `util`).
+//!
+//! [`pair`] returns a single-completion ([`Promise`], [`ReplyHandle`])
+//! couple. The completer side resolves exactly once; the handle side
+//! polls, waits (optionally with a timeout), or registers an
+//! [`on_ready`](ReplyHandle::on_ready) continuation /
+//! [`then`](ReplyHandle::then) chain. **Dropping a pending handle is a
+//! clean cancellation**: the eventual value is discarded at completion
+//! time and the completer learns about it ([`Delivery::Abandoned`]) so
+//! it can account the request as cancelled — nothing leaks, nothing
+//! blocks, and the completer never panics into a dead channel.
+//!
+//! The serve layer's callback API ([`crate::serve::Serve::submit_with`])
+//! is a thin adapter over this: `submit_handle` is the primitive, a
+//! callback is just `handle.on_ready(f)`.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// What happened to the value a [`Promise`] completed with.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Delivery {
+    /// The handle (or its registered continuation) received the value.
+    Delivered,
+    /// The handle was dropped while pending — the value was discarded.
+    /// Completers use this to count the request as *cancelled* instead
+    /// of ok/failed (see `client::session`).
+    Abandoned,
+}
+
+enum State<T> {
+    /// No value yet, no continuation registered.
+    Pending,
+    /// Completed; value waiting for `poll`/`wait`.
+    Ready(T),
+    /// A continuation is registered; it runs on the completer's thread
+    /// (or inline, when registered after completion).
+    Callback(Box<dyn FnOnce(T) + Send>),
+    /// The value was consumed (taken by `poll`/`wait`, or fed to a
+    /// continuation).
+    Taken,
+    /// The handle was dropped while pending.
+    Abandoned,
+    /// The promise was dropped without completing. Cannot happen for
+    /// serve-layer handles (every request gets exactly one reply) but
+    /// the primitive surfaces it instead of hanging waiters.
+    Broken,
+}
+
+struct Shared<T> {
+    state: Mutex<State<T>>,
+    cv: Condvar,
+}
+
+/// Completer side: resolves the paired [`ReplyHandle`] exactly once.
+pub struct Promise<T> {
+    shared: Option<Arc<Shared<T>>>,
+}
+
+/// Waiter side of a [`pair`]: a single-value future.
+pub struct ReplyHandle<T> {
+    shared: Option<Arc<Shared<T>>>,
+}
+
+/// Create a linked promise/handle pair.
+pub fn pair<T: Send + 'static>() -> (Promise<T>, ReplyHandle<T>) {
+    let shared = Arc::new(Shared {
+        state: Mutex::new(State::Pending),
+        cv: Condvar::new(),
+    });
+    (Promise { shared: Some(Arc::clone(&shared)) },
+     ReplyHandle { shared: Some(shared) })
+}
+
+impl<T: Send + 'static> Promise<T> {
+    /// Resolve the handle with `value`. Consumes the promise —
+    /// completion is exactly-once by construction. A registered
+    /// continuation runs on THIS thread before `complete` returns.
+    pub fn complete(mut self, value: T) -> Delivery {
+        let shared = self.shared.take().expect("promise completes once");
+        let mut g = shared.state.lock().expect("future poisoned");
+        match std::mem::replace(&mut *g, State::Taken) {
+            State::Pending => {
+                *g = State::Ready(value);
+                drop(g);
+                shared.cv.notify_all();
+                Delivery::Delivered
+            }
+            State::Callback(f) => {
+                // state stays Taken; run the continuation outside the
+                // lock so it can itself create/complete futures.
+                drop(g);
+                f(value);
+                Delivery::Delivered
+            }
+            State::Abandoned => {
+                *g = State::Abandoned;
+                Delivery::Abandoned
+            }
+            State::Ready(_) | State::Taken | State::Broken => {
+                unreachable!("double completion is impossible: \
+                              complete() consumes the promise")
+            }
+        }
+    }
+}
+
+impl<T> Drop for Promise<T> {
+    fn drop(&mut self) {
+        // Promise dropped without completing: break pending waiters
+        // instead of hanging them.
+        if let Some(shared) = self.shared.take() {
+            let mut g = shared.state.lock().expect("future poisoned");
+            if matches!(*g, State::Pending) {
+                *g = State::Broken;
+                drop(g);
+                shared.cv.notify_all();
+            } else if let State::Callback(_) =
+                std::mem::replace(&mut *g, State::Broken)
+            {
+                // registered continuation will never run; drop it
+            }
+        }
+    }
+}
+
+impl<T: Send + 'static> ReplyHandle<T> {
+    /// Whether a value is waiting (non-consuming peek).
+    pub fn is_ready(&self) -> bool {
+        match &self.shared {
+            Some(s) => matches!(*s.state.lock().expect("future poisoned"),
+                                State::Ready(_)),
+            None => false,
+        }
+    }
+
+    /// Non-blocking poll: takes the value if it has arrived. After
+    /// `Some`, the handle is spent (later polls return `None` and drop
+    /// is a no-op, not a cancellation).
+    pub fn poll(&mut self) -> Option<T> {
+        let shared = self.shared.as_ref()?;
+        let mut g = shared.state.lock().expect("future poisoned");
+        if matches!(*g, State::Ready(_)) {
+            let State::Ready(v) = std::mem::replace(&mut *g, State::Taken)
+            else { unreachable!() };
+            drop(g);
+            self.shared = None;
+            return Some(v);
+        }
+        None
+    }
+
+    /// Block until resolution. `None` only if the promise was dropped
+    /// unfulfilled — impossible for serve-layer handles (every request
+    /// gets exactly one explicit reply), surfaced rather than panicking.
+    pub fn wait(mut self) -> Option<T> {
+        let shared = self.shared.take().expect("handle not yet consumed");
+        let mut g = shared.state.lock().expect("future poisoned");
+        loop {
+            match &*g {
+                State::Ready(_) => {
+                    let State::Ready(v) =
+                        std::mem::replace(&mut *g, State::Taken)
+                    else { unreachable!() };
+                    return Some(v);
+                }
+                State::Broken => return None,
+                _ => g = shared.cv.wait(g).expect("future poisoned"),
+            }
+        }
+    }
+
+    /// [`ReplyHandle::wait`] with a timeout. `Err(self)` hands the
+    /// still-pending handle back so the caller can keep waiting (or
+    /// drop it to cancel).
+    pub fn wait_timeout(mut self, timeout: Duration)
+                        -> Result<Option<T>, ReplyHandle<T>> {
+        let shared = self.shared.take().expect("handle not yet consumed");
+        let deadline = Instant::now() + timeout;
+        let mut g = shared.state.lock().expect("future poisoned");
+        loop {
+            match &*g {
+                State::Ready(_) => {
+                    let State::Ready(v) =
+                        std::mem::replace(&mut *g, State::Taken)
+                    else { unreachable!() };
+                    return Ok(Some(v));
+                }
+                State::Broken => return Ok(None),
+                _ => {}
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                drop(g);
+                return Err(ReplyHandle { shared: Some(shared) });
+            }
+            let (guard, _timed_out) = shared.cv
+                .wait_timeout(g, deadline - now)
+                .expect("future poisoned");
+            g = guard;
+        }
+    }
+
+    /// Register a continuation and consume the handle: `f` runs exactly
+    /// once with the value — inline now if already resolved, otherwise
+    /// on the completer's thread. The terminal form of chaining; use
+    /// [`ReplyHandle::then`] to keep a handle on the mapped result.
+    pub fn on_ready<F>(mut self, f: F)
+    where
+        F: FnOnce(T) + Send + 'static,
+    {
+        let shared = self.shared.take().expect("handle not yet consumed");
+        let mut g = shared.state.lock().expect("future poisoned");
+        match std::mem::replace(&mut *g, State::Taken) {
+            State::Pending => *g = State::Callback(Box::new(f)),
+            State::Ready(v) => {
+                drop(g);
+                f(v);
+            }
+            State::Broken => { /* continuation will never run */ }
+            State::Callback(_) | State::Taken | State::Abandoned => {
+                unreachable!("handle consumed twice")
+            }
+        }
+    }
+
+    /// Chain: a new handle resolving with `f(value)` when this one
+    /// resolves (`f` runs on whichever thread completes the source).
+    /// Dropping the returned handle abandons the chained value like any
+    /// other pending handle.
+    pub fn then<U, F>(self, f: F) -> ReplyHandle<U>
+    where
+        U: Send + 'static,
+        F: FnOnce(T) -> U + Send + 'static,
+    {
+        let (promise, handle) = pair();
+        self.on_ready(move |v| {
+            let _ = promise.complete(f(v));
+        });
+        handle
+    }
+
+    /// Explicit cancellation — identical to dropping the handle,
+    /// spelled out for call sites where the intent matters.
+    pub fn cancel(self) {
+        drop(self);
+    }
+}
+
+impl<T> Drop for ReplyHandle<T> {
+    fn drop(&mut self) {
+        if let Some(shared) = self.shared.take() {
+            let mut g = shared.state.lock().expect("future poisoned");
+            match &*g {
+                // Pending drop = cancellation: the completer will see
+                // Abandoned and discard the value (counted, not leaked).
+                State::Pending => *g = State::Abandoned,
+                // Resolved-but-unread drop just discards the value —
+                // the request completed and was accounted by outcome.
+                State::Ready(_) => *g = State::Taken,
+                _ => {}
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn resolve_before_wait() {
+        let (p, h) = pair();
+        assert_eq!(p.complete(42), Delivery::Delivered);
+        assert!(h.is_ready());
+        assert_eq!(h.wait(), Some(42));
+    }
+
+    #[test]
+    fn resolve_after_wait_from_another_thread() {
+        let (p, h) = pair();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            p.complete("late")
+        });
+        assert_eq!(h.wait(), Some("late"));
+        assert_eq!(t.join().unwrap(), Delivery::Delivered);
+    }
+
+    #[test]
+    fn poll_is_nonblocking_and_spends_the_handle() {
+        let (p, mut h) = pair();
+        assert!(!h.is_ready());
+        assert_eq!(h.poll(), None);
+        let _ = p.complete(7);
+        assert_eq!(h.poll(), Some(7));
+        assert_eq!(h.poll(), None, "spent after the take");
+    }
+
+    #[test]
+    fn wait_timeout_returns_the_handle_then_succeeds() {
+        let (p, h) = pair();
+        let h = match h.wait_timeout(Duration::from_millis(10)) {
+            Err(h) => h,
+            Ok(v) => panic!("nothing resolved yet: {v:?}"),
+        };
+        let _ = p.complete(5u32);
+        match h.wait_timeout(Duration::from_secs(5)) {
+            Ok(v) => assert_eq!(v, Some(5)),
+            Err(_) => panic!("resolved handle must not time out"),
+        }
+    }
+
+    #[test]
+    fn dropped_pending_handle_reports_abandoned() {
+        let (p, h) = pair();
+        drop(h);
+        assert_eq!(p.complete(1), Delivery::Abandoned);
+    }
+
+    #[test]
+    fn dropped_resolved_handle_is_not_a_cancellation() {
+        let (p, h) = pair();
+        assert_eq!(p.complete(1), Delivery::Delivered);
+        drop(h); // value discarded, but it WAS delivered
+    }
+
+    #[test]
+    fn broken_promise_unblocks_waiters() {
+        let (p, h) = pair::<u32>();
+        drop(p);
+        assert_eq!(h.wait(), None);
+        let (p2, h2) = pair::<u32>();
+        drop(p2);
+        match h2.wait_timeout(Duration::from_secs(5)) {
+            Ok(v) => assert_eq!(v, None, "broken, not a value"),
+            Err(_) => panic!("broken promise must not time out"),
+        }
+    }
+
+    #[test]
+    fn on_ready_runs_inline_when_already_resolved() {
+        let (p, h) = pair();
+        let _ = p.complete(3);
+        let hits = Arc::new(AtomicUsize::new(0));
+        let hits2 = Arc::clone(&hits);
+        h.on_ready(move |v| {
+            assert_eq!(v, 3);
+            hits2.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn on_ready_runs_on_completer_thread_when_pending() {
+        let (p, h) = pair();
+        let hits = Arc::new(AtomicUsize::new(0));
+        let hits2 = Arc::clone(&hits);
+        h.on_ready(move |v: u32| {
+            hits2.fetch_add(v as usize, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 0, "not yet");
+        assert_eq!(p.complete(9), Delivery::Delivered);
+        assert_eq!(hits.load(Ordering::SeqCst), 9,
+                   "ran inside complete()");
+    }
+
+    #[test]
+    fn then_chains_and_dropping_the_chain_abandons_downstream() {
+        let (p, h) = pair();
+        let doubled = h.then(|v: u32| v * 2);
+        let _ = p.complete(21);
+        assert_eq!(doubled.wait(), Some(42));
+
+        // dropping the chained handle: upstream continuation still runs,
+        // downstream value is discarded as Abandoned (observable only
+        // through the downstream promise, which `then` owns — nothing
+        // leaks, nothing panics).
+        let (p2, h2) = pair();
+        let chained = h2.then(|v: u32| v + 1);
+        drop(chained);
+        assert_eq!(p2.complete(1), Delivery::Delivered,
+                   "upstream delivery is to the continuation");
+    }
+}

@@ -1,0 +1,57 @@
+//! The **streaming client plane** — sessions, futures and request
+//! pipelines over the serve layer.
+//!
+//! Before this module, the serve layer's only entry point was a
+//! blocking one-shot `submit + recv` callback, so every caller
+//! (loadgen, CLI, examples) re-invented threads-plus-channels to get
+//! concurrency. This module is the one client-side concurrency idiom
+//! in the repo, three layers deep:
+//!
+//! * [`future`] — a hand-rolled promise/future pair
+//!   ([`ReplyHandle`]): poll / wait / wait-with-timeout /
+//!   [`on_ready`](future::ReplyHandle::on_ready) continuations and
+//!   [`then`](future::ReplyHandle::then) chaining. Dropping a pending
+//!   handle cancels cleanly (the reply is discarded at completion and
+//!   counted as cancelled — never leaked, never a hang). The serve
+//!   layer's legacy callback API is a thin adapter over this:
+//!   [`Serve::submit_handle`](crate::serve::Serve::submit_handle) is
+//!   the primitive, `submit_with(item, f)` is just
+//!   `submit_handle(item).on_ready(f)`.
+//! * [`session`] — [`Session`]: tags every request with a session id
+//!   (fair admission + per-session tallies in the serve metrics),
+//!   enforces a per-session in-flight **window** (block or error on
+//!   full, the caller's choice), streams batches in completion order
+//!   ([`Session::submit_stream`]) and closes with exact accounting
+//!   (`submitted == ok + shed + failed + cancelled`).
+//! * [`pipeline`] — [`Pipeline`]: dependency-chained requests (e.g.
+//!   `D = (A·B)·C`); nodes auto-submit when their inputs resolve, a
+//!   failed/shed parent fails all descendants with the root cause,
+//!   and the DAG never hangs.
+
+pub mod future;
+pub mod pipeline;
+pub mod session;
+
+pub use future::{pair, Delivery, Promise, ReplyHandle};
+pub use pipeline::{NodeId, NodeResult, Pipeline, PipelineOutcome};
+pub use session::{CompletionStream, Session, SessionConfig,
+                  SessionError, SessionStats, WindowPolicy};
+
+use crate::serve::{ServeError, ServeResult};
+
+impl ReplyHandle<ServeResult> {
+    /// Serve-flavored [`ReplyHandle::wait`]: a broken promise (which
+    /// the serve layer's exactly-one-reply contract rules out) maps to
+    /// the explicit [`ServeError::Closed`] instead of an `Option`.
+    pub fn recv(self) -> ServeResult {
+        self.wait().unwrap_or(Err(ServeError::Closed))
+    }
+
+    /// [`ReplyHandle::wait_timeout`] with the same mapping; `Err(self)`
+    /// hands the still-pending handle back on timeout.
+    pub fn recv_timeout(self, timeout: std::time::Duration)
+                        -> Result<ServeResult, Self> {
+        self.wait_timeout(timeout)
+            .map(|v| v.unwrap_or(Err(ServeError::Closed)))
+    }
+}

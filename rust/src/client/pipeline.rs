@@ -1,0 +1,246 @@
+//! Request pipelines — dependency-chained work over a [`Session`].
+//!
+//! A [`Pipeline`] is a small DAG builder: each node is a
+//! [`WorkItem`] plus the nodes it depends on (added-before, so the
+//! graph is acyclic *by construction*). [`Pipeline::run`] drives it to
+//! completion over a session: a node auto-submits the moment its last
+//! dependency resolves successfully, and a failed (or shed, or
+//! cancelled) dependency **fails every transitive descendant with the
+//! root cause** — immediately, without submitting them, and without
+//! ever hanging: every node settles exactly once, into
+//! [`NodeResult::Ok`], [`NodeResult::Failed`] (its own submission or
+//! reply failed) or [`NodeResult::Skipped`] (an ancestor failed;
+//! carries the root ancestor and its error).
+//!
+//! The canonical example — chained GEMMs `D = (A·B)·C` as three
+//! artifact executions where the later ones only make sense if the
+//! earlier ones served:
+//!
+//! ```text
+//! let mut p = Pipeline::new();
+//! let ab  = p.node(WorkItem::artifact("gemm_n64_t16_e1_f32"), &[]);
+//! let abc = p.node(WorkItem::artifact("gemm_n64_t16_e1_f32"), &[ab]);
+//! let d   = p.node(WorkItem::artifact("dot_n64_f32"), &[abc]);
+//! let out = p.run(&session);
+//! assert!(out.all_ok());
+//! ```
+//!
+//! (The serve layer's work items are replayable executions keyed by
+//! artifact identity, so dependencies express *ordering and failure
+//! coupling*, not data flow — the matrices live behind the artifact
+//! ids.)
+
+use std::collections::VecDeque;
+use std::sync::mpsc::channel;
+
+use crate::serve::{ServeError, ServeReply, WorkItem};
+
+use super::session::Session;
+
+/// Handle to a node added to a [`Pipeline`] (index into the outcome).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NodeId(usize);
+
+impl NodeId {
+    pub fn index(&self) -> usize {
+        self.0
+    }
+}
+
+/// How one pipeline node settled.
+#[derive(Debug, Clone)]
+pub enum NodeResult {
+    /// Submitted and served.
+    Ok(ServeReply),
+    /// Submitted (or attempted) and failed with this error.
+    Failed(ServeError),
+    /// Never submitted: ancestor `root` failed with `cause`. `root` is
+    /// the *originally* failing ancestor, not an intermediate skip —
+    /// every descendant of one failure reports the same root cause.
+    Skipped { root: NodeId, cause: ServeError },
+}
+
+impl NodeResult {
+    pub fn is_ok(&self) -> bool {
+        matches!(self, NodeResult::Ok(_))
+    }
+}
+
+/// Aggregated pipeline outcome, indexed by [`NodeId`].
+#[derive(Debug)]
+pub struct PipelineOutcome {
+    pub results: Vec<NodeResult>,
+}
+
+impl PipelineOutcome {
+    pub fn result(&self, id: NodeId) -> &NodeResult {
+        &self.results[id.0]
+    }
+
+    pub fn all_ok(&self) -> bool {
+        self.results.iter().all(NodeResult::is_ok)
+    }
+
+    /// Nodes that settled [`NodeResult::Ok`].
+    pub fn ok_count(&self) -> usize {
+        self.results.iter().filter(|r| r.is_ok()).count()
+    }
+}
+
+struct Node {
+    item: Option<WorkItem>,
+    deps: Vec<usize>,
+}
+
+/// Dependency-chained request DAG. See the module docs.
+#[derive(Default)]
+pub struct Pipeline {
+    nodes: Vec<Node>,
+}
+
+impl Pipeline {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Add a node depending on `deps` (all previously added — forward
+    /// or unknown references panic, which is what makes every pipeline
+    /// a DAG by construction).
+    pub fn node(&mut self, item: WorkItem, deps: &[NodeId]) -> NodeId {
+        let id = self.nodes.len();
+        for d in deps {
+            assert!(d.0 < id,
+                    "pipeline deps must reference earlier nodes \
+                     ({} >= {id})", d.0);
+        }
+        self.nodes.push(Node {
+            item: Some(item),
+            deps: deps.iter().map(|d| d.0).collect(),
+        });
+        NodeId(id)
+    }
+
+    /// Drive the DAG to completion over `session`. Nodes submit as
+    /// their dependencies resolve (window-limited by the session,
+    /// blocking for slots); failure propagates to all descendants with
+    /// the root cause. Returns only when every node has settled —
+    /// never hangs, because every unsettled node is always either
+    /// ready, in flight, or downstream of one that is.
+    pub fn run(mut self, session: &Session<'_>) -> PipelineOutcome {
+        let n = self.nodes.len();
+        let mut results: Vec<Option<NodeResult>> =
+            (0..n).map(|_| None).collect();
+        let mut indeg: Vec<usize> =
+            self.nodes.iter().map(|x| x.deps.len()).collect();
+        let mut children: Vec<Vec<usize>> =
+            (0..n).map(|_| Vec::new()).collect();
+        for (id, node) in self.nodes.iter().enumerate() {
+            for &d in &node.deps {
+                children[d].push(id);
+            }
+        }
+
+        // Settle `root` as Failed(cause) and every transitive,
+        // still-unsettled descendant as Skipped with the SAME root.
+        fn fail_subtree(root: usize, cause: ServeError,
+                        results: &mut [Option<NodeResult>],
+                        children: &[Vec<usize>]) -> usize {
+            let mut settled = 0;
+            if results[root].is_none() {
+                results[root] = Some(NodeResult::Failed(cause.clone()));
+                settled += 1;
+            }
+            let mut stack: Vec<usize> = children[root].clone();
+            while let Some(c) = stack.pop() {
+                if results[c].is_some() {
+                    continue; // settled via another path
+                }
+                results[c] = Some(NodeResult::Skipped {
+                    root: NodeId(root),
+                    cause: cause.clone(),
+                });
+                settled += 1;
+                stack.extend_from_slice(&children[c]);
+            }
+            settled
+        }
+
+        let (tx, rx) = channel();
+        let mut ready: VecDeque<usize> =
+            (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut settled = 0usize;
+        let mut in_flight = 0usize;
+
+        while settled < n {
+            while let Some(id) = ready.pop_front() {
+                if results[id].is_some() {
+                    continue; // settled by propagation meanwhile
+                }
+                let item = self.nodes[id].item.take()
+                    .expect("each node submits at most once");
+                match session.submit_blocking(item) {
+                    Ok(h) => {
+                        let tx = tx.clone();
+                        h.on_ready(move |r| {
+                            let _ = tx.send((id, r));
+                        });
+                        in_flight += 1;
+                    }
+                    Err(_closed) => {
+                        settled += fail_subtree(id, ServeError::Closed,
+                                                &mut results, &children);
+                    }
+                }
+            }
+            if settled >= n {
+                break;
+            }
+            if in_flight == 0 {
+                // Unreachable by the progress invariant; never hang if
+                // it is ever violated — settle the remainder explicitly.
+                for id in 0..n {
+                    if results[id].is_none() {
+                        settled += fail_subtree(
+                            id,
+                            ServeError::Backend(
+                                "pipeline stalled: node never became \
+                                 ready".to_string()),
+                            &mut results, &children);
+                    }
+                }
+                break;
+            }
+            let (id, r) = rx.recv().expect("pipeline channel broken");
+            in_flight -= 1;
+            match r {
+                Ok(reply) => {
+                    results[id] = Some(NodeResult::Ok(reply));
+                    settled += 1;
+                    for &c in &children[id] {
+                        indeg[c] -= 1;
+                        if indeg[c] == 0 && results[c].is_none() {
+                            ready.push_back(c);
+                        }
+                    }
+                }
+                Err(e) => {
+                    settled +=
+                        fail_subtree(id, e, &mut results, &children);
+                }
+            }
+        }
+        PipelineOutcome {
+            results: results.into_iter()
+                .map(|r| r.expect("every node settles"))
+                .collect(),
+        }
+    }
+}

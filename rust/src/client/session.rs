@@ -1,0 +1,414 @@
+//! Sessions — the client plane's unit of identity, backpressure and
+//! accounting over the serve layer.
+//!
+//! A [`Session`] tags every request with its session id (the
+//! dispatcher's fair-admission round-robin and the per-session tallies
+//! in [`ServeMetrics`](crate::serve::ServeMetrics) key off it), enforces
+//! a per-session **in-flight window** (at most `window` requests
+//! outstanding; the caller chooses whether a full window blocks or
+//! errors — [`WindowPolicy`]), and accounts every submission exactly
+//! once: after [`Session::close`] drains,
+//! `submitted == ok + shed + failed + cancelled` holds to the request
+//! ([`SessionStats::fully_accounted`]).
+//!
+//! **Cancellation**: dropping a pending [`ReplyHandle`] abandons the
+//! reply — when the serve layer's reply arrives it is discarded and the
+//! request is counted as `cancelled` (never `ok`/`failed`, never
+//! leaked, never a stranded dispatcher buffer: the serve layer's
+//! exactly-one-reply contract still runs the session's accounting
+//! closure). The work itself may still execute; a drop abandons the
+//! *observation*, not the server-side execution.
+//!
+//! [`Session::submit_stream`] pipelines a batch through the window and
+//! yields replies in **completion order** (not submission order) — the
+//! streaming idiom `loadgen` and the `client_stream` bench are built
+//! on.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::serve::metrics::SessionOutcome;
+use crate::serve::{Serve, ServeError, ServeResult, WorkItem};
+
+use super::future::{pair, Delivery, ReplyHandle};
+
+/// Monotonic process-wide session ids (1-based so 0 can mean "no
+/// session" in logs).
+static NEXT_SESSION_ID: AtomicU64 = AtomicU64::new(1);
+
+/// What [`Session::submit`] does when the in-flight window is full.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WindowPolicy {
+    /// Block the submitting thread until a slot frees (backpressure).
+    Block,
+    /// Fail fast with [`SessionError::WindowFull`].
+    Error,
+}
+
+/// Session knobs.
+#[derive(Debug, Clone)]
+pub struct SessionConfig {
+    /// Maximum requests in flight at once; 0 = unbounded.
+    pub window: usize,
+    /// Full-window behavior for [`Session::submit`].
+    pub on_full: WindowPolicy,
+}
+
+impl Default for SessionConfig {
+    fn default() -> Self {
+        Self { window: 4, on_full: WindowPolicy::Block }
+    }
+}
+
+/// Why a session refused a submission (the serve layer's own errors
+/// arrive through the [`ReplyHandle`] instead).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SessionError {
+    /// [`Session::close`] was called; no further submissions.
+    Closed,
+    /// The in-flight window is full and the policy is
+    /// [`WindowPolicy::Error`].
+    WindowFull { in_flight: usize, window: usize },
+}
+
+impl std::fmt::Display for SessionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>)
+           -> std::fmt::Result {
+        match self {
+            SessionError::Closed => write!(f, "session closed"),
+            SessionError::WindowFull { in_flight, window } => {
+                write!(f, "session window full ({in_flight}/{window} \
+                           in flight)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SessionError {}
+
+/// Exact per-session accounting. After a drain,
+/// `submitted == ok + shed + failed + cancelled`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SessionStats {
+    pub submitted: u64,
+    /// Successful replies observed through a live handle.
+    pub ok: u64,
+    /// `ServeError::Overloaded` replies (overload control working).
+    pub shed: u64,
+    /// Every other error reply (backend, closed, layer-cancelled).
+    pub failed: u64,
+    /// Replies that arrived after their handle was dropped — the
+    /// caller abandoned the request mid-flight.
+    pub cancelled: u64,
+}
+
+impl SessionStats {
+    /// Every submitted request resolved into exactly one bucket.
+    pub fn fully_accounted(&self) -> bool {
+        self.ok + self.shed + self.failed + self.cancelled
+            == self.submitted
+    }
+}
+
+struct SessState {
+    in_flight: usize,
+    closed: bool,
+    stats: SessionStats,
+}
+
+struct SessionInner {
+    id: u64,
+    window: usize,
+    state: Mutex<SessState>,
+    cv: Condvar,
+}
+
+impl SessionInner {
+    /// Reply-side bookkeeping: one lock for the stats bump AND the
+    /// slot release, so a drain that wakes on the released slot can
+    /// never observe a half-updated stats block.
+    fn finish(&self, outcome: SessionOutcome) {
+        let mut g = self.state.lock().expect("session poisoned");
+        g.in_flight -= 1;
+        match outcome {
+            SessionOutcome::Ok => g.stats.ok += 1,
+            SessionOutcome::Shed => g.stats.shed += 1,
+            SessionOutcome::Failed => g.stats.failed += 1,
+            SessionOutcome::Cancelled => g.stats.cancelled += 1,
+        }
+        drop(g);
+        self.cv.notify_all();
+    }
+}
+
+fn outcome_of(r: &ServeResult) -> SessionOutcome {
+    match r {
+        Ok(_) => SessionOutcome::Ok,
+        Err(ServeError::Overloaded { .. }) => SessionOutcome::Shed,
+        Err(_) => SessionOutcome::Failed,
+    }
+}
+
+/// A client session over a running [`Serve`] layer. Cheap to create;
+/// open one per logical client. See the module docs for semantics.
+pub struct Session<'s> {
+    serve: &'s Serve,
+    inner: Arc<SessionInner>,
+    on_full: WindowPolicy,
+}
+
+impl<'s> Session<'s> {
+    pub fn open(serve: &'s Serve, cfg: SessionConfig) -> Self {
+        let id = NEXT_SESSION_ID.fetch_add(1, Ordering::Relaxed);
+        Self {
+            serve,
+            inner: Arc::new(SessionInner {
+                id,
+                window: cfg.window,
+                state: Mutex::new(SessState {
+                    in_flight: 0,
+                    closed: false,
+                    stats: SessionStats::default(),
+                }),
+                cv: Condvar::new(),
+            }),
+            on_full: cfg.on_full,
+        }
+    }
+
+    pub fn id(&self) -> u64 {
+        self.inner.id
+    }
+
+    /// Requests currently in flight (submitted, no reply yet).
+    pub fn in_flight(&self) -> usize {
+        self.inner.state.lock().expect("session poisoned").in_flight
+    }
+
+    /// Snapshot of the accounting so far. Only guaranteed to satisfy
+    /// [`SessionStats::fully_accounted`] once in-flight reaches zero
+    /// ([`Session::drain`] / [`Session::close`]).
+    pub fn stats(&self) -> SessionStats {
+        self.inner.state.lock().expect("session poisoned").stats
+    }
+
+    fn acquire_slot(&self, policy: WindowPolicy)
+                    -> Result<(), SessionError> {
+        let inner = &self.inner;
+        let mut g = inner.state.lock().expect("session poisoned");
+        loop {
+            if g.closed {
+                return Err(SessionError::Closed);
+            }
+            if inner.window == 0 || g.in_flight < inner.window {
+                g.in_flight += 1;
+                g.stats.submitted += 1;
+                return Ok(());
+            }
+            match policy {
+                WindowPolicy::Error => {
+                    return Err(SessionError::WindowFull {
+                        in_flight: g.in_flight,
+                        window: inner.window,
+                    });
+                }
+                WindowPolicy::Block => {
+                    g = inner.cv.wait(g).expect("session poisoned");
+                }
+            }
+        }
+    }
+
+    /// Submission proper, with the window slot already acquired.
+    fn submit_acquired(&self, item: WorkItem)
+                       -> ReplyHandle<ServeResult> {
+        let (promise, handle) = pair();
+        let inner = Arc::clone(&self.inner);
+        let metrics = Arc::clone(&self.serve.metrics);
+        metrics.session_submitted(inner.id);
+        self.serve.submit_raw(
+            item.with_session(inner.id),
+            Box::new(move |r| {
+                let kind = outcome_of(&r);
+                // complete() runs handle continuations inline (e.g. a
+                // completion stream's channel send) BEFORE the slot
+                // frees below — safe: stream consumers that wake early
+                // fall back to a blocking submit, which the notify in
+                // finish() releases.
+                let kind = match promise.complete(r) {
+                    Delivery::Delivered => kind,
+                    Delivery::Abandoned => SessionOutcome::Cancelled,
+                };
+                inner.finish(kind);
+                metrics.session_outcome(inner.id, kind);
+            }));
+        handle
+    }
+
+    /// Submit one request through the window (block or error on a full
+    /// window per [`SessionConfig::on_full`]). The handle resolves with
+    /// the serve layer's explicit reply; dropping it cancels (counted).
+    pub fn submit(&self, item: WorkItem)
+                  -> Result<ReplyHandle<ServeResult>, SessionError> {
+        self.acquire_slot(self.on_full)?;
+        Ok(self.submit_acquired(item))
+    }
+
+    /// [`Session::submit`] that always blocks on a full window,
+    /// regardless of the configured policy (streams and pipelines use
+    /// it to guarantee progress).
+    pub(crate) fn submit_blocking(&self, item: WorkItem)
+                       -> Result<ReplyHandle<ServeResult>,
+                                 SessionError> {
+        self.acquire_slot(WindowPolicy::Block)?;
+        Ok(self.submit_acquired(item))
+    }
+
+    /// Pipeline `items` through the window, yielding `(original index,
+    /// reply)` in **completion order**. Lazy: at most `window` of the
+    /// batch are in flight at once; each yielded reply tops the window
+    /// back up. Dropping the stream mid-iteration abandons only the
+    /// not-yet-submitted tail (never submitted, never counted); replies
+    /// already in flight resolve into the session's accounting as
+    /// delivered results.
+    pub fn submit_stream<I>(&self, items: I) -> CompletionStream<'_, 's>
+    where
+        I: IntoIterator<Item = WorkItem>,
+    {
+        let pending: VecDeque<(usize, WorkItem)> =
+            items.into_iter().enumerate().collect();
+        let (tx, rx) = channel();
+        CompletionStream {
+            session: self,
+            total: pending.len(),
+            pending,
+            tx,
+            rx,
+            outstanding: 0,
+            received: 0,
+        }
+    }
+
+    /// Block until nothing is in flight (replies for everything
+    /// submitted so far have been accounted).
+    pub fn drain(&self) {
+        let mut g = self.inner.state.lock().expect("session poisoned");
+        while g.in_flight > 0 {
+            g = self.inner.cv.wait(g).expect("session poisoned");
+        }
+    }
+
+    /// Close the session: refuse further submissions, drain what is in
+    /// flight, and return the exact final accounting
+    /// (`fully_accounted()` holds on the returned stats).
+    pub fn close(self) -> SessionStats {
+        let mut g = self.inner.state.lock().expect("session poisoned");
+        g.closed = true;
+        while g.in_flight > 0 {
+            g = self.inner.cv.wait(g).expect("session poisoned");
+        }
+        g.stats
+    }
+}
+
+// Dropping a Session mid-flight is safe without close(): the reply
+// closures own an Arc of the inner state, so accounting (including
+// cancelled counts for dropped handles) still completes; the serve
+// layer's exactly-one-reply contract guarantees nothing dangles.
+
+/// Iterator over a pipelined batch's replies in completion order.
+/// See [`Session::submit_stream`].
+pub struct CompletionStream<'a, 's> {
+    session: &'a Session<'s>,
+    pending: VecDeque<(usize, WorkItem)>,
+    tx: Sender<(usize, ServeResult)>,
+    rx: Receiver<(usize, ServeResult)>,
+    outstanding: usize,
+    received: usize,
+    total: usize,
+}
+
+impl CompletionStream<'_, '_> {
+    /// Items not yet yielded.
+    pub fn remaining(&self) -> usize {
+        self.total - self.received
+    }
+
+    fn attach(&mut self, index: usize,
+              handle: ReplyHandle<ServeResult>) {
+        let tx = self.tx.clone();
+        handle.on_ready(move |r| {
+            // receiver dropped = stream abandoned; the session
+            // accounting already ran in the reply closure
+            let _ = tx.send((index, r));
+        });
+        self.outstanding += 1;
+    }
+
+    /// Submit as many pending items as the window allows right now
+    /// (non-blocking). Returns an item to fail immediately when the
+    /// session closed underneath the stream.
+    fn top_up(&mut self) -> Option<(usize, ServeError)> {
+        while let Some((i, item)) = self.pending.pop_front() {
+            match self.session.acquire_slot(WindowPolicy::Error) {
+                Ok(()) => {
+                    let h = self.session.submit_acquired(item);
+                    self.attach(i, h);
+                }
+                Err(SessionError::WindowFull { .. }) => {
+                    // window full right now: re-queue and wait for a
+                    // completion to free a slot
+                    self.pending.push_front((i, item));
+                    return None;
+                }
+                Err(SessionError::Closed) => {
+                    return Some((i, ServeError::Closed));
+                }
+            }
+        }
+        None
+    }
+}
+
+impl Iterator for CompletionStream<'_, '_> {
+    type Item = (usize, ServeResult);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.received == self.total {
+            return None;
+        }
+        loop {
+            if let Some((i, err)) = self.top_up() {
+                self.received += 1;
+                return Some((i, Err(err)));
+            }
+            if self.outstanding == 0 && !self.pending.is_empty() {
+                // The window is held entirely by other traffic on this
+                // session: fall back to ONE blocking submit so the
+                // stream always makes progress (never a silent stall).
+                let (i, item) = self.pending.pop_front()
+                    .expect("checked non-empty");
+                match self.session.submit_blocking(item) {
+                    Ok(h) => {
+                        self.attach(i, h);
+                        continue;
+                    }
+                    Err(_closed) => {
+                        self.received += 1;
+                        return Some((i, Err(ServeError::Closed)));
+                    }
+                }
+            }
+            break;
+        }
+        // outstanding >= 1 here whenever items remain, so this recv
+        // always terminates (the serve layer replies exactly once per
+        // request; we hold our own tx, so disconnect cannot happen).
+        let (i, r) = self.rx.recv().expect("stream channel broken");
+        self.outstanding -= 1;
+        self.received += 1;
+        Some((i, r))
+    }
+}

@@ -45,12 +45,20 @@
 //!   architecture plus one per **named native engine** — `native:pjrt`
 //!   for the Rc-based PJRT client and `native:threadpool` for the
 //!   tuned packed host GEMM over the worker pool), cross-request
-//!   **continuous batching** per work key, an LRU **result cache**,
+//!   **continuous batching** per work key, a two-tier **result cache**
+//!   (per-shard LRU plus an optional persistent disk spill keyed by
+//!   artifact identity digest — hits labelled `cache:mem` /
+//!   `cache:disk`),
 //!   **overload control** (per-shard admission quotas + deadline-aware
 //!   load shedding, all explicit via `ServeError::Overloaded`), and
 //!   unified metrics (throughput over the active window, queue-depth
 //!   high-water, shed rate, p50/p95/p99 latency, cache hit rate). Both
 //!   entry points below are thin shims over it.
+//! * [`client`] — the **streaming client plane** over the serve layer:
+//!   a hand-rolled promise/future primitive, windowed [`client::Session`]s
+//!   with exact accounting, completion-order streams and
+//!   dependency-chained request pipelines (see "The client plane"
+//!   below). The one client-side concurrency idiom in the repo.
 //! * [`coordinator`] — the campaign-facing shim (`Scheduler`) plus the
 //!   bounded-queue substrate the serve layer is built on.
 //! * [`report`] — regenerates every table and figure of the paper.
@@ -125,6 +133,51 @@
 //! tunestore_gate` warms `BENCH_tunestore.json` and gates warmed
 //! serving ≥ default-params serving at N=512 f64.
 //!
+//! # The client plane
+//!
+//! The serve layer answers requests; the **client plane**
+//! ([`client`]) is how callers *hold* them. Three layers, zero
+//! external dependencies:
+//!
+//! 1. **Futures** — [`client::ReplyHandle`], a single-value
+//!    promise/future: `poll` / `wait` / `wait_timeout` /
+//!    `on_ready` continuations / `then` chaining. The serve layer's
+//!    primitive is now [`serve::Serve::submit_handle`]; the legacy
+//!    callback API is literally `submit_handle(item).on_ready(f)`, and
+//!    the channel API (`submit`) is a channel-shaped `on_ready`. So
+//!    the Scheduler/GemmService shims, loadgen, the CLI and the
+//!    examples all resolve through ONE primitive.
+//! 2. **Sessions** — [`client::Session`] is the unit of identity,
+//!    backpressure and accounting. Every request is tagged with the
+//!    session id; the dispatcher round-robins routing bursts across
+//!    sessions (fair admission — a greedy session cannot fill a whole
+//!    burst's worth of shard-queue slots) and
+//!    `ServeMetrics::session_tallies` / `Serve::summary()` surface
+//!    per-session counts. A session enforces an in-flight **window**
+//!    (block or error on full, the caller's choice), streams batches
+//!    in **completion order** (`submit_stream`), and `close()` drains
+//!    with exact accounting:
+//!    `submitted == ok + shed + failed + cancelled`.
+//! 3. **Pipelines** — [`client::Pipeline`] chains dependent requests
+//!    (`D = (A·B)·C`): nodes auto-submit the moment their inputs
+//!    resolve, and a failed/shed ancestor fails every transitive
+//!    descendant with the **root cause** — immediately, without
+//!    submitting them, never hanging.
+//!
+//! **Cancellation semantics** (the load-bearing part): dropping a
+//! pending `ReplyHandle` abandons the *observation*, not the request —
+//! the serve layer still runs the reply closure exactly once, the
+//! session releases the window slot and counts the request
+//! `cancelled`, and nothing is stranded in the dispatcher's overflow
+//! buffers. The legacy surfaces map exactly: a `submit_with` callback
+//! is a handle that can never be dropped pending; a dropped `submit`
+//! channel receiver is the handle-drop case.
+//!
+//! CLI: `serve --sessions N --window W` drives N windowed sessions
+//! (`--window 1` is the classic closed loop); `cargo bench --bench
+//! client_stream` gates pipelined-vs-one-shot throughput (≥ 1.2× at
+//! equal concurrency, zero lost replies) and emits `BENCH_client.json`.
+//!
 //! # The backend-shard contract (how to add a backend)
 //!
 //! A serve-layer backend is a [`serve::Backend`]: one method turning a
@@ -182,6 +235,7 @@
 pub mod arch;
 pub mod autotune;
 pub mod cli;
+pub mod client;
 pub mod coordinator;
 pub mod gemm;
 pub mod hierarchy;

@@ -125,6 +125,14 @@ fn cli() -> Cli {
                 opts: vec![
                     OptSpec::value("clients", Some("8"),
                                    "concurrent closed-loop clients"),
+                    OptSpec::value("sessions", Some("0"),
+                                   "client-plane sessions (0 = use \
+                                    --clients; each session is one \
+                                    client thread)"),
+                    OptSpec::value("window", Some("1"),
+                                   "per-session in-flight window \
+                                    (1 = classic closed loop; >1 \
+                                    pipelines via submit_stream)"),
                     OptSpec::value("requests", Some("64"),
                                    "requests per client"),
                     OptSpec::value("archs", Some("knl,p100-nvlink"),
@@ -165,6 +173,11 @@ fn cli() -> Cli {
                                    "persistent tuning store: native \
                                     shards serve each request with its \
                                     bucket's measured-best params"),
+                    OptSpec::value("result-cache", None,
+                                   "persistent result cache: executed \
+                                    native results spill to this JSON \
+                                    file (hits labelled cache:disk); \
+                                    needs --cache > 0"),
                     OptSpec::flag("online-tune",
                                   "background-tune untuned buckets \
                                    while serving (commits to \
@@ -490,7 +503,11 @@ fn cmd_serve(p: &Parsed) -> Result<()> {
     let (native, artifact_ids) =
         loadgen::native_config_or_synthetic(Path::new(&dir));
 
-    let clients = p.get_u64("clients")?.unwrap_or(8) as usize;
+    let clients = match p.get_u64("sessions")?.unwrap_or(0) as usize {
+        0 => p.get_u64("clients")?.unwrap_or(8) as usize,
+        s => s,
+    };
+    let window = p.get_u64("window")?.unwrap_or(1).max(1) as usize;
     let requests = p.get_u64("requests")?.unwrap_or(64) as usize;
     let n = p.get_u64("n")?.unwrap_or(1024);
     let queue = p.get_u64("queue")?.unwrap_or(64) as usize;
@@ -527,9 +544,15 @@ fn cmd_serve(p: &Parsed) -> Result<()> {
         shard_quota: if quota == 0 { None } else { Some(quota) },
         tuning_store: p.get("tuning-store")
             .map(|s| Path::new(s).to_path_buf()),
+        result_cache_path: p.get("result-cache")
+            .map(|s| Path::new(s).to_path_buf()),
         online_tune: p.has_flag("online-tune"),
         ..ServeConfig::default()
     };
+    anyhow::ensure!(
+        cfg.result_cache_path.is_none() || cfg.cache_cap > 0,
+        "--result-cache needs --cache > 0 (measurement semantics \
+         re-execute everything)");
     let serve = Serve::start(cfg.clone())?;
 
     let items = loadgen::default_mix(&archs, &artifact_ids, n);
@@ -542,9 +565,11 @@ fn cmd_serve(p: &Parsed) -> Result<()> {
             shed: ShedPolicy::None,
             shard_quota: None,
             // the probe must not race the real layer for the store
-            // file or double-explore buckets
+            // file or double-explore buckets — nor spill probe
+            // results into the real layer's persistent result cache
             tuning_store: None,
             online_tune: false,
+            result_cache_path: None,
             ..cfg.clone()
         })?;
         let sustainable = loadgen::measure_sustainable_rps(
@@ -593,10 +618,11 @@ fn cmd_serve(p: &Parsed) -> Result<()> {
         requests_per_client: requests,
         items,
     };
-    println!("serve load: {clients} clients x {requests} requests over \
-              {} sim shard(s) + 2 native shards, mix of {} items",
+    println!("serve load: {clients} session(s) x {requests} requests \
+              (window {window}) over {} sim shard(s) + 2 native \
+              shards, mix of {} items",
              archs.len(), spec.items.len());
-    let outcome = loadgen::run_closed_loop(&serve, &spec);
+    let outcome = loadgen::run_stream_loop(&serve, &spec, window);
     print!("{}", loadgen::outcome_report(&outcome, &serve));
     if let Some(store) = serve.tuning_store() {
         if let Ok(g) = store.lock() {

@@ -96,10 +96,14 @@ pub enum WorkPayload {
     Explore { dtype: Precision, bucket: u64 },
 }
 
-/// One unit of serveable work: a payload plus an optional **deadline**.
-/// A request whose deadline has passed before execution starts may be
-/// shed by the serve layer (explicitly — `ServeError::Overloaded`,
-/// never a silent drop) when the configured shed policy says so.
+/// One unit of serveable work: a payload plus an optional **deadline**
+/// and an optional **session tag**. A request whose deadline has passed
+/// before execution starts may be shed by the serve layer (explicitly —
+/// `ServeError::Overloaded`, never a silent drop) when the configured
+/// shed policy says so. The session tag identifies the submitting
+/// [`client::Session`](crate::client::Session): the dispatcher
+/// round-robins burst routing across sessions (fair admission) and the
+/// metrics keep per-session tallies.
 #[derive(Debug, Clone)]
 pub struct WorkItem {
     pub payload: WorkPayload,
@@ -107,12 +111,16 @@ pub struct WorkItem {
     /// `None` = no deadline. Ignored by `ShedPolicy::None` and
     /// `ShedPolicy::RejectOverQuota`.
     pub deadline: Option<Instant>,
+    /// Submitting session id (`None` for untagged callers — the
+    /// legacy shims and direct `Serve::submit` users).
+    pub session: Option<u64>,
 }
 
 impl WorkItem {
     /// A tuning-point evaluation (simulated shards).
     pub fn point(p: TuningPoint) -> Self {
-        Self { payload: WorkPayload::Point(p), deadline: None }
+        Self { payload: WorkPayload::Point(p), deadline: None,
+               session: None }
     }
 
     /// An artifact execution on the default native shard
@@ -127,6 +135,7 @@ impl WorkItem {
         Self {
             payload: WorkPayload::Artifact { id: id.into(), engine },
             deadline: None,
+            session: None,
         }
     }
 
@@ -136,7 +145,14 @@ impl WorkItem {
         Self {
             payload: WorkPayload::Explore { dtype, bucket },
             deadline: None,
+            session: None,
         }
+    }
+
+    /// Tag with the submitting session (builder style).
+    pub fn with_session(mut self, session: u64) -> Self {
+        self.session = Some(session);
+        self
     }
 
     /// Absolute deadline (builder style).
@@ -167,9 +183,10 @@ impl WorkItem {
     }
 
     /// Canonical key for batching and the result cache. Two items with
-    /// equal keys are interchangeable executions; the deadline is
-    /// deliberately excluded (it changes *whether* an item runs, never
-    /// *what* it computes).
+    /// equal keys are interchangeable executions; the deadline AND the
+    /// session tag are deliberately excluded (they change *whether* /
+    /// *for whom* an item runs, never *what* it computes — cross-session
+    /// cache sharing is intended).
     pub fn cache_key(&self) -> String {
         match &self.payload {
             WorkPayload::Point(p) => format!("point:{p:?}"),
@@ -212,6 +229,27 @@ pub enum NativeEngine {
     HostGemm,
     /// Row-blocked host GEMM over the worker pool (`native:threadpool`).
     ThreadpoolGemm,
+}
+
+impl NativeEngine {
+    /// Stable text form — load reports and the disk result cache key
+    /// off it, so it round-trips through [`NativeEngine::parse`].
+    pub fn slug(&self) -> &'static str {
+        match self {
+            NativeEngine::Pjrt => "pjrt",
+            NativeEngine::HostGemm => "host-gemm",
+            NativeEngine::ThreadpoolGemm => "threadpool-gemm",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "pjrt" => Some(NativeEngine::Pjrt),
+            "host-gemm" => Some(NativeEngine::HostGemm),
+            "threadpool-gemm" => Some(NativeEngine::ThreadpoolGemm),
+            _ => None,
+        }
+    }
 }
 
 /// A completed execution.
@@ -337,26 +375,42 @@ pub struct NativeSpec {
 /// cannot serve.
 pub(crate) const HOST_GEMM_MAX_N: u64 = 1024;
 
+/// One request's resolved kernel choice: blocking params, their
+/// provenance, and (threadpool shard only) the store's measured
+/// fan-out width.
+#[derive(Debug, Clone, Copy)]
+struct KernelSelection {
+    params: KernelParams,
+    from_store: bool,
+    /// Measured-best worker fan-out for this bucket, when the store's
+    /// exploration covered the thread axis. `None` = use the pool size.
+    threads: Option<usize>,
+}
+
 /// Resolve the kernel blocking for one artifact spec: the tuning
 /// store's measured winner for `(dtype, bucket)` when one exists for
 /// this machine's fingerprint (sanitized to the actual N), the
-/// built-in [`KernelParams::for_n`] default otherwise. Returns the
-/// params plus whether they came from the store — both native
+/// built-in [`KernelParams::for_n`] default otherwise. Both native
 /// backends share this so selection semantics (and the `@store` label
 /// suffix) cannot drift apart. A poisoned store lock degrades to
 /// defaults: selection must never take down the serving path.
 fn params_for_spec(store: &Option<SharedTuningStore>, spec: &NativeSpec)
-                   -> (KernelParams, bool) {
+                   -> KernelSelection {
     let n = spec.n as usize;
     if let Some(store) = store {
         if let Ok(g) = store.lock() {
             if let Some(e) = g.lookup(spec.precision,
                                       bucket_for(spec.n)) {
-                return (e.params.sanitized(n), true);
+                return KernelSelection {
+                    params: e.params.sanitized(n),
+                    from_store: true,
+                    threads: e.threads.map(|t| t.max(1) as usize),
+                };
             }
         }
     }
-    (KernelParams::for_n(n), false)
+    KernelSelection { params: KernelParams::for_n(n), from_store: false,
+                      threads: None }
 }
 
 /// The serve-layer kernel label for a blocking choice:
@@ -375,10 +429,20 @@ pub(crate) fn meta_host_capable(meta: &ArtifactMeta) -> bool {
     spec_from_meta(meta).host_capable
 }
 
+/// Identity digest of one artifact spec — everything that determines
+/// the bytes a native execution produces (id, shape, dtype, input
+/// seeds, coefficients). The persistent result cache keys on it, so a
+/// manifest change under the same artifact id reads as a miss instead
+/// of replaying a stale result.
+pub(crate) fn spec_digest(spec: &NativeSpec) -> String {
+    format!("{}|n{}|{}|seeds{:x?}|a{}|b{}", spec.id, spec.n,
+            spec.precision.dtype(), spec.seeds, spec.alpha, spec.beta)
+}
+
 /// Derive a [`NativeSpec`] from one manifest entry (shared by both
 /// native backends — the PJRT shard and the threadpool shard must agree
 /// on what "host capable" means).
-fn spec_from_meta(meta: &ArtifactMeta) -> NativeSpec {
+pub(crate) fn spec_from_meta(meta: &ArtifactMeta) -> NativeSpec {
     let n = meta.n.unwrap_or(0);
     let square_inputs = meta.inputs.len() >= 2
         && meta.inputs.iter().all(|i| {
@@ -404,7 +468,7 @@ fn spec_from_meta(meta: &ArtifactMeta) -> NativeSpec {
 
 /// Manifest-less catalog over synthetic artifact ids (load testing
 /// without `make artifacts`). Ids must parse — see [`parse_artifact_id`].
-fn synthetic_catalog(ids: &[String])
+pub(crate) fn synthetic_catalog(ids: &[String])
                      -> Result<HashMap<String, NativeSpec>, String> {
     let mut catalog = HashMap::new();
     for id in ids {
@@ -587,8 +651,11 @@ impl NativeBackend {
         }
         let n = spec.n as usize;
         // Per-request selection: the store's measured winner for this
-        // (dtype, bucket) when present, defaults otherwise.
-        let (params, from_store) = params_for_spec(&self.store, spec);
+        // (dtype, bucket) when present, defaults otherwise. The PJRT
+        // shard's host fallback is single-threaded, so the selection's
+        // fan-out axis is ignored here (threadpool shard only).
+        let KernelSelection { params, from_store, .. } =
+            params_for_spec(&self.store, spec);
         if !self.host_inputs.contains_key(&spec.id) {
             self.host_inputs.insert(spec.id.clone(),
                                     build_host_inputs(spec));
@@ -717,13 +784,15 @@ pub struct ThreadpoolGemm {
     // lives on its own thread; a cross-shard input store would couple
     // their lifetimes for ~MBs of regenerable data).
     inputs: HashMap<String, Arc<HostInputs>>,
-    /// Oracle digests keyed by `(artifact, mc)`: the digest's chunked
-    /// reduction order depends on the fan-out chunking, which follows
-    /// the kernel's `mc` — when the tuning store commits a different
-    /// blocking for a bucket, the artifact gets ONE more sequential
-    /// oracle build under the new chunking (bounded: params change at
-    /// most once per store commit, not per request).
-    oracles: HashMap<(String, usize), OracleDigest>,
+    /// Oracle digests keyed by `(artifact, mc, fanout)`: the digest's
+    /// chunked reduction order depends on the fan-out chunking, which
+    /// follows the kernel's `mc` AND the effective worker fan-out
+    /// (store-driven thread counts change the chunk boundaries) — when
+    /// the tuning store commits a different blocking or fan-out for a
+    /// bucket, the artifact gets ONE more sequential oracle build under
+    /// the new chunking (bounded: params change at most once per store
+    /// commit, not per request).
+    oracles: HashMap<(String, usize, usize), OracleDigest>,
     /// How many oracle digests were ever computed — exactly one per
     /// distinct `(artifact, blocking)` served, never one per request
     /// (the O(N³) sequential reference must not sit on the request
@@ -793,14 +862,26 @@ impl ThreadpoolGemm {
         self.oracle_builds
     }
 
-    /// Row partition for the tuned-kernel fan-out: every pool thread
-    /// gets ~2 chunks so a slow chunk cannot serialize the tail. When
-    /// the per-thread share covers at least one `mc` panel, chunks are
-    /// rounded DOWN to whole panels (boundaries on the kernel's natural
-    /// blocking); below that, small chunks win — shrinking `mb` inside
-    /// the kernel is cheap, collapsing the fan-out to one worker is not.
-    fn chunks(&self, n: usize, mc: usize) -> Vec<(usize, usize)> {
-        let jobs = (self.pool.size() * 2).clamp(1, n.max(1));
+    /// Effective worker fan-out for one request: the store's measured
+    /// thread count when the exploration covered the fan-out axis
+    /// (clamped to the pool — the pool never grows per request),
+    /// otherwise the full pool.
+    fn fanout(&self, threads: Option<usize>) -> usize {
+        threads.map(|t| t.clamp(1, self.pool.size()))
+            .unwrap_or_else(|| self.pool.size())
+    }
+
+    /// Row partition for the tuned-kernel fan-out: every participating
+    /// worker gets ~2 chunks so a slow chunk cannot serialize the tail.
+    /// When the per-worker share covers at least one `mc` panel, chunks
+    /// are rounded DOWN to whole panels (boundaries on the kernel's
+    /// natural blocking); below that, small chunks win — shrinking `mb`
+    /// inside the kernel is cheap, collapsing the fan-out to one worker
+    /// is not. `fanout` is the participating-worker count (the store's
+    /// measured thread axis, or the pool size).
+    fn chunks(&self, n: usize, mc: usize, fanout: usize)
+              -> Vec<(usize, usize)> {
+        let jobs = (fanout.max(1) * 2).clamp(1, n.max(1));
         let per = n.div_ceil(jobs).max(1);
         let per = if per >= mc { (per / mc) * mc } else { per };
         (0..n)
@@ -831,8 +912,9 @@ impl ThreadpoolGemm {
     /// be shed during this warmup; that is the configured overload
     /// behavior (the shard IS saturated), bounded per artifact
     /// lifetime.
-    fn ensure_oracle(&mut self, spec: &NativeSpec, mc: usize) {
-        let key = (spec.id.clone(), mc);
+    fn ensure_oracle(&mut self, spec: &NativeSpec, mc: usize,
+                     fanout: usize) {
+        let key = (spec.id.clone(), mc, fanout);
         if self.oracles.contains_key(&key) {
             return;
         }
@@ -843,7 +925,7 @@ impl ThreadpoolGemm {
         // tuned kernel must never verify itself against itself),
         // digested with the SAME row chunking the parallel path uses,
         // so the reductions associate identically.
-        let chunks = self.chunks(n, mc);
+        let chunks = self.chunks(n, mc, fanout);
         let (sum, abs_sum) = match &*inputs {
             HostInputs::F32 { a, b, c } => {
                 let full = verify::gemm_f32_rows(n, 0, n, a, b, c,
@@ -866,15 +948,15 @@ impl ThreadpoolGemm {
     }
 
     /// One parallel run of the tuned kernel under `params` over
-    /// `mc`-aligned row-panel blocks: returns (seconds, sum, abs_sum)
-    /// of the output.
-    fn par_run(&self, spec: &NativeSpec, params: &KernelParams)
-               -> Result<(f64, f64, f64), String> {
+    /// `mc`-aligned row-panel blocks, fanned across `fanout` workers:
+    /// returns (seconds, sum, abs_sum) of the output.
+    fn par_run(&self, spec: &NativeSpec, params: &KernelParams,
+               fanout: usize) -> Result<(f64, f64, f64), String> {
         let n = spec.n as usize;
         let params = *params;
         let inputs = Arc::clone(self.inputs.get(&spec.id)
                                     .expect("ensure_inputs first"));
-        let chunks = self.chunks(n, params.mc);
+        let chunks = self.chunks(n, params.mc, fanout);
         let t0 = Instant::now();
         let results: Vec<Result<(f64, f64), String>> =
             match &*inputs {
@@ -978,15 +1060,19 @@ impl Backend for ThreadpoolGemm {
                 spec.id));
         }
         // Per-request selection: store winner for this (dtype, bucket)
-        // when present, defaults otherwise. The oracle digest follows
-        // the selected blocking (chunking depends on mc).
-        let (params, from_store) = params_for_spec(&self.store, &spec);
+        // when present, defaults otherwise — blocking params AND the
+        // measured fan-out width. The oracle digest follows both
+        // (chunking depends on mc and the participating worker count).
+        let sel = params_for_spec(&self.store, &spec);
+        let (params, from_store) = (sel.params, sel.from_store);
+        let fanout = self.fanout(sel.threads);
         self.ensure_inputs(&spec);
-        self.ensure_oracle(&spec, params.mc);
-        let (seconds, sum, abs_sum) = self.par_run(&spec, &params)?;
+        self.ensure_oracle(&spec, params.mc, fanout);
+        let (seconds, sum, abs_sum) =
+            self.par_run(&spec, &params, fanout)?;
         // Runtime oracle check: every served result is digest-verified
         // against the sequential reference computed at setup.
-        let oracle = self.oracles.get(&(id.clone(), params.mc))
+        let oracle = self.oracles.get(&(id.clone(), params.mc, fanout))
             .expect("ensure_oracle first");
         let scale = oracle.abs_sum.max(abs_sum).max(1.0);
         let rtol = digest_rtol(spec.precision);
@@ -1201,8 +1287,9 @@ mod tests {
         let c = prng::matrix_f64(prng::seed_for(&id, 2), n, n);
         let full = verify::gemm_f64_rows(n, 0, n, &a, &bm, &c, 1.0, 1.0);
         let (seq_sum, seq_abs) = sum_abs_f64(&full);
-        // default blocking for n=64 has mc=64 (the oracle map's key)
-        let oracle = b.oracles.get(&(id.clone(), 64))
+        // default blocking for n=64 has mc=64; no store → fanout is
+        // the pool size (4) — the oracle map's key
+        let oracle = b.oracles.get(&(id.clone(), 64, 4))
             .expect("oracle recorded");
         assert!((oracle.sum - seq_sum).abs()
                     <= 1e-9 * seq_abs.max(1.0),
@@ -1239,7 +1326,7 @@ mod tests {
             &["dot_n64_f32".to_string()], 4).unwrap();
         // per-thread share (64/8 = 8 rows) is below one mc=64 panel:
         // chunks must stay small instead of collapsing to one block
-        let chunks = b.chunks(64, 64);
+        let chunks = b.chunks(64, 64, b.threads());
         assert!(chunks.len() >= 4, "{chunks:?}");
         assert_eq!(chunks.first().unwrap().0, 0);
         assert_eq!(chunks.last().unwrap().1, 64);
@@ -1247,12 +1334,51 @@ mod tests {
             assert_eq!(w[0].1, w[1].0, "contiguous cover");
         }
         // large N: chunk boundaries land on whole mc panels
-        let big = b.chunks(512, 64);
+        let big = b.chunks(512, 64, b.threads());
         assert!(big.len() >= 4, "{big:?}");
         for (r0, _) in &big {
             assert_eq!(r0 % 64, 0);
         }
         assert_eq!(big.last().unwrap().1, 512);
+    }
+
+    #[test]
+    fn store_thread_count_narrows_the_fanout() {
+        use crate::autotune::{TuneEntry, TuningStore};
+        let id = "gemm_n128_t16_e1_f64".to_string();
+        let store = Arc::new(Mutex::new(TuningStore::in_memory()));
+        let fp = store.lock().unwrap().fingerprint().to_string();
+        // a measured winner that says 1 worker beats the full pool
+        store.lock().unwrap().commit_entry(TuneEntry {
+            fingerprint: fp,
+            dtype: Precision::F64,
+            bucket: 128,
+            params: KernelParams::new(64, 64, 64, 4, 4).unwrap(),
+            threads: Some(1),
+            gflops: 1.0,
+            samples: 1,
+        }).unwrap();
+        let mut b = ThreadpoolGemm::synthetic(&[id.clone()], 4)
+            .unwrap()
+            .with_store(Some(Arc::clone(&store)));
+        // effective fan-out: stored 1, clamped to the pool
+        assert_eq!(b.fanout(Some(1)), 1);
+        assert_eq!(b.fanout(Some(99)), 4, "never exceeds the pool");
+        assert_eq!(b.fanout(None), 4);
+        // 1-worker chunking: ~2 chunks, not 8
+        assert!(b.chunks(128, 64, 1).len() <= 2);
+        // the run selects the stored fan-out, keys the oracle by it,
+        // and still digest-verifies (Ok IS the verification)
+        match b.run(&WorkItem::artifact_on(
+            id.clone(), NativeEngineId::Threadpool)).unwrap()
+        {
+            Output::Native { kernel, .. } => {
+                assert!(kernel.ends_with("@store"), "{kernel}");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert!(b.oracles.contains_key(&(id, 64, 1)),
+                "oracle keyed by the narrowed fan-out");
     }
 
     #[test]

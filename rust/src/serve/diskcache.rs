@@ -1,0 +1,356 @@
+//! Persistent result cache — the serve-layer LRU spilled to disk.
+//!
+//! A [`DiskResultCache`] is a JSON file of completed **native** outputs
+//! keyed by the work item's canonical cache key, each entry guarded by
+//! the artifact's identity **digest** (id, shape, dtype, input seeds,
+//! coefficients — see `backend::spec_digest`): a manifest change under
+//! the same artifact id reads as a miss, never a stale replay. Sim
+//! predictions are not spilled (the model is deterministic and cheap —
+//! the disk exists to save *native compute* across restarts) and the
+//! tuner shard has its own store.
+//!
+//! Reuses the tuning store's robustness machinery
+//! ([`TuningStore::write_atomic`]) and mirrors its contract:
+//!
+//! * **Atomic writes** — temp file + rename;
+//! * **Corrupt-file recovery** — unparseable bytes open as an empty
+//!   cache (stderr note), never a panic;
+//! * **Schema versioning** — a mismatched `schema` detaches persistence
+//!   (the file is served-around and never overwritten);
+//! * **Unreadable file** — detaches persistence so a later save cannot
+//!   clobber unread state.
+//!
+//! Wiring: `ServeConfig::result_cache_path` enables it; shard workers
+//! probe it after a memory-LRU miss (hits seed the LRU and are labelled
+//! `cache:disk` in replies/metrics, vs `cache:mem`) and write through
+//! on every executed native result.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+use crate::autotune::store::escape;
+use crate::autotune::TuningStore;
+use crate::util::json;
+
+use super::backend::{NativeEngine, Output};
+
+/// On-disk format version; bump on incompatible change.
+pub const RESULT_CACHE_SCHEMA: u64 = 1;
+
+/// One spilled native result.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DiskEntry {
+    /// Work-item cache key (e.g. `artifact:dot_n64_f32`).
+    pub key: String,
+    /// Identity digest of the artifact spec at write time.
+    pub digest: String,
+    pub artifact_id: String,
+    pub seconds: f64,
+    pub gflops: Option<f64>,
+    /// [`NativeEngine::slug`] of the engine that produced it.
+    pub engine: String,
+    pub kernel: String,
+}
+
+/// The JSON-on-disk result cache. See the module docs for the
+/// robustness contract.
+#[derive(Debug)]
+pub struct DiskResultCache {
+    path: Option<PathBuf>,
+    entries: BTreeMap<String, DiskEntry>,
+}
+
+impl DiskResultCache {
+    /// Open (or create) a cache at `path`. Never fails — see module
+    /// docs for the recovery/detach rules.
+    pub fn open(path: &Path) -> Self {
+        let mut cache = Self {
+            path: Some(path.to_path_buf()),
+            entries: BTreeMap::new(),
+        };
+        match std::fs::read_to_string(path) {
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+            Err(e) => {
+                eprintln!("[serve] result cache {}: read failed ({e}); \
+                           running detached (in-memory) so the unread \
+                           file is never overwritten", path.display());
+                cache.path = None;
+            }
+            Ok(text) => match parse_entries(&text) {
+                Ok(entries) => cache.entries = entries,
+                Err(Refusal::Corrupt(msg)) => {
+                    eprintln!("[serve] result cache {}: {msg}; \
+                               starting empty", path.display());
+                }
+                Err(Refusal::Schema(msg)) => {
+                    eprintln!("[serve] result cache {}: {msg}; running \
+                               detached (in-memory) so the \
+                               incompatible file is never overwritten",
+                              path.display());
+                    cache.path = None;
+                }
+            },
+        }
+        cache
+    }
+
+    /// A cache with no backing file (tests).
+    pub fn in_memory() -> Self {
+        Self { path: None, entries: BTreeMap::new() }
+    }
+
+    pub fn path(&self) -> Option<&Path> {
+        self.path.as_deref()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Look up `key`, requiring the stored identity digest to match —
+    /// an entry written for a different artifact identity (changed
+    /// manifest, different seeds) is a miss, and unparseable stored
+    /// engines are misses rather than fabricated outputs.
+    pub fn get(&self, key: &str, digest: &str) -> Option<Output> {
+        let e = self.entries.get(key)?;
+        if e.digest != digest {
+            return None;
+        }
+        let engine = NativeEngine::parse(&e.engine)?;
+        Some(Output::Native {
+            artifact_id: e.artifact_id.clone(),
+            seconds: e.seconds,
+            gflops: e.gflops,
+            engine,
+            kernel: e.kernel.clone(),
+        })
+    }
+
+    /// Record an executed output under `(key, digest)`. Only native
+    /// outputs spill; returns whether anything was stored. The caller
+    /// persists via [`DiskResultCache::snapshot`] +
+    /// [`TuningStore::write_atomic`] *outside* its lock.
+    pub fn put(&mut self, key: &str, digest: &str, output: &Output)
+               -> bool {
+        let Output::Native { artifact_id, seconds, gflops, engine,
+                             kernel } = output
+        else {
+            return false;
+        };
+        self.entries.insert(key.to_string(), DiskEntry {
+            key: key.to_string(),
+            digest: digest.to_string(),
+            artifact_id: artifact_id.clone(),
+            seconds: *seconds,
+            gflops: *gflops,
+            engine: engine.slug().to_string(),
+            kernel: kernel.clone(),
+        });
+        true
+    }
+
+    /// Persistence target plus serialized bytes (`None` when detached).
+    pub fn snapshot(&self) -> Option<(PathBuf, String)> {
+        self.path.clone().map(|p| (p, self.serialize()))
+    }
+
+    /// The on-disk JSON form (deterministic: entries in key order).
+    pub fn serialize(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out,
+                         "{{\n  \"schema\": {RESULT_CACHE_SCHEMA},");
+        let _ = writeln!(out, "  \"entries\": [");
+        let total = self.entries.len();
+        for (i, e) in self.entries.values().enumerate() {
+            let comma = if i + 1 == total { "" } else { "," };
+            let gflops = e.gflops
+                .map(|g| format!("{g:.6}"))
+                .unwrap_or_else(|| "null".into());
+            let _ = writeln!(
+                out,
+                "    {{\"key\": \"{}\", \"digest\": \"{}\", \
+                 \"artifact_id\": \"{}\", \"seconds\": {:.9}, \
+                 \"gflops\": {gflops}, \"engine\": \"{}\", \
+                 \"kernel\": \"{}\"}}{comma}",
+                escape(&e.key), escape(&e.digest),
+                escape(&e.artifact_id), e.seconds, escape(&e.engine),
+                escape(&e.kernel));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+}
+
+#[derive(Debug)]
+enum Refusal {
+    Corrupt(String),
+    Schema(String),
+}
+
+fn parse_entries(text: &str)
+                 -> Result<BTreeMap<String, DiskEntry>, Refusal> {
+    let doc = json::parse(text)
+        .map_err(|e| Refusal::Corrupt(format!("corrupt: {e}")))?;
+    let schema = doc.get("schema").and_then(|v| v.as_u64())
+        .ok_or_else(|| Refusal::Corrupt(
+            "corrupt: no schema field".to_string()))?;
+    if schema != RESULT_CACHE_SCHEMA {
+        return Err(Refusal::Schema(format!(
+            "schema {schema} != supported {RESULT_CACHE_SCHEMA}: \
+             refusing stale data")));
+    }
+    let list = doc.get("entries").and_then(|v| v.as_array())
+        .ok_or_else(|| Refusal::Corrupt(
+            "corrupt: no entries array".to_string()))?;
+    let mut entries = BTreeMap::new();
+    for (i, item) in list.iter().enumerate() {
+        match parse_entry(item) {
+            Some(e) => {
+                entries.insert(e.key.clone(), e);
+            }
+            None => {
+                eprintln!("[serve] result cache: skipping malformed \
+                           entry #{i}");
+            }
+        }
+    }
+    Ok(entries)
+}
+
+fn parse_entry(v: &json::Value) -> Option<DiskEntry> {
+    let seconds = v.get("seconds")?.as_f64()?;
+    if !(seconds > 0.0) || !seconds.is_finite() {
+        return None;
+    }
+    Some(DiskEntry {
+        key: v.get("key")?.as_str()?.to_string(),
+        digest: v.get("digest")?.as_str()?.to_string(),
+        artifact_id: v.get("artifact_id")?.as_str()?.to_string(),
+        seconds,
+        // absent or null gflops both read back as None
+        gflops: v.get("gflops").and_then(|g| g.as_f64()),
+        engine: v.get("engine")?.as_str()?.to_string(),
+        kernel: v.get("kernel")?.as_str()?.to_string(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn native(id: &str) -> Output {
+        Output::Native {
+            artifact_id: id.to_string(),
+            seconds: 0.0125,
+            gflops: Some(3.5),
+            engine: NativeEngine::ThreadpoolGemm,
+            kernel: "tuned{mc=64,nc=64,kc=64,mr=4,nr=4}".to_string(),
+        }
+    }
+
+    #[test]
+    fn roundtrip_through_serialize() {
+        let mut c = DiskResultCache::in_memory();
+        assert!(c.is_empty());
+        assert!(c.put("artifact:x", "digest-1", &native("x")));
+        let reparsed = parse_entries(&c.serialize()).unwrap();
+        assert_eq!(reparsed.len(), 1);
+        let e = reparsed.get("artifact:x").unwrap();
+        assert_eq!(e.digest, "digest-1");
+        assert_eq!(e.engine, "threadpool-gemm");
+        assert!((e.seconds - 0.0125).abs() < 1e-12);
+        assert!((e.gflops.unwrap() - 3.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn digest_mismatch_is_a_miss() {
+        let mut c = DiskResultCache::in_memory();
+        c.put("artifact:x", "digest-1", &native("x"));
+        assert!(c.get("artifact:x", "digest-1").is_some());
+        assert!(c.get("artifact:x", "digest-2").is_none(),
+                "changed identity must never replay a stale result");
+        assert!(c.get("artifact:y", "digest-1").is_none());
+    }
+
+    #[test]
+    fn only_native_outputs_spill() {
+        use crate::gemm::Precision;
+        let mut c = DiskResultCache::in_memory();
+        let tuned = Output::Tuned {
+            dtype: Precision::F64,
+            bucket: 64,
+            params: "mc=64".into(),
+            gflops: 1.0,
+            evals: 1,
+            seconds: 0.1,
+            committed: true,
+        };
+        assert!(!c.put("explore:f64:64", "d", &tuned));
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn corrupt_text_recovers_to_empty_schema_detaches() {
+        for bad in ["", "{", "not json", r#"{"entries": []}"#] {
+            assert!(matches!(parse_entries(bad),
+                             Err(Refusal::Corrupt(_))), "{bad:?}");
+        }
+        match parse_entries(r#"{"schema": 99, "entries": []}"#) {
+            Err(Refusal::Schema(m)) => {
+                assert!(m.contains("refusing stale data"), "{m}");
+            }
+            other => panic!("misclassified: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn null_gflops_roundtrips_as_none() {
+        let mut c = DiskResultCache::in_memory();
+        c.put("artifact:z", "d", &Output::Native {
+            artifact_id: "z".into(),
+            seconds: 0.5,
+            gflops: None,
+            engine: NativeEngine::Pjrt,
+            kernel: "pjrt".into(),
+        });
+        let entries = parse_entries(&c.serialize()).unwrap();
+        assert_eq!(entries.get("artifact:z").unwrap().gflops, None);
+    }
+
+    #[test]
+    fn on_disk_roundtrip_is_atomic_and_recovers() {
+        let dir = std::env::temp_dir().join("alpaka-diskcache-test");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("result_cache.json");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut c = DiskResultCache::open(&path);
+            assert!(c.is_empty());
+            c.put("artifact:x", "d1", &native("x"));
+            let (p, json) = c.snapshot().expect("persistent");
+            TuningStore::write_atomic(&p, &json).unwrap();
+        }
+        {
+            let c = DiskResultCache::open(&path);
+            assert_eq!(c.len(), 1);
+            assert!(c.get("artifact:x", "d1").is_some());
+        }
+        // corrupt file: recovered to empty, path kept for next save
+        std::fs::write(&path, "garbage{{{").unwrap();
+        let c = DiskResultCache::open(&path);
+        assert!(c.is_empty());
+        assert!(c.path().is_some());
+        // schema mismatch: detached
+        std::fs::write(&path,
+                       r#"{"schema": 999, "entries": []}"#).unwrap();
+        let c = DiskResultCache::open(&path);
+        assert!(c.is_empty());
+        assert!(c.path().is_none(), "incompatible file never clobbered");
+        let _ = std::fs::remove_file(&path);
+    }
+}

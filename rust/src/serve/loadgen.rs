@@ -1,9 +1,20 @@
-//! Closed-loop load generator for the serve layer: N concurrent
-//! clients, each issuing its next request only after the previous reply
-//! (the classic closed-loop model — offered load adapts to service
-//! capacity, so the measured latencies are queueing-honest).
+//! Load generators for the serve layer, built on the **client plane**
+//! (`crate::client`) — every driver here is a [`Session`] user, so the
+//! repo has exactly one client-side concurrency idiom:
 //!
-//! Used by the `serve` CLI subcommand and `rust/benches/serve_load.rs`.
+//! * [`run_closed_loop`] — N sessions, window 1: each client issues its
+//!   next request only after the previous reply (the classic
+//!   closed-loop model — offered load adapts to service capacity, so
+//!   the measured latencies are queueing-honest).
+//! * [`run_stream_loop`] — N sessions, window W: each client pipelines
+//!   its request list through [`Session::submit_stream`], consuming
+//!   replies in completion order (same client threads, W× the in-flight
+//!   work — the `client_stream` bench gates the speedup).
+//! * [`run_open_loop`] — one unbounded-window session submits at a
+//!   fixed rate regardless of completions (the overload driver).
+//!
+//! Used by the `serve` CLI subcommand, `rust/benches/serve_load.rs`
+//! and `rust/benches/client_stream.rs`.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -12,6 +23,7 @@ use std::sync::mpsc::channel;
 use std::time::{Duration, Instant};
 
 use crate::arch::{compiler, ArchId, CompilerId};
+use crate::client::{Session, SessionConfig, WindowPolicy};
 use crate::gemm::Precision;
 use crate::runtime::artifact::Manifest;
 use crate::sim::TuningPoint;
@@ -135,76 +147,42 @@ pub fn default_mix(archs: &[ArchId], artifact_ids: &[String], n: u64)
     items
 }
 
-fn engine_name(engine: &NativeEngine) -> &'static str {
-    match engine {
-        NativeEngine::Pjrt => "pjrt",
-        NativeEngine::HostGemm => "host-gemm",
-        NativeEngine::ThreadpoolGemm => "threadpool-gemm",
+/// Fold one reply (or error) into a client-local tally.
+fn tally(out: &mut LoadOutcome, result: Result<ServeReply, ServeError>) {
+    match result {
+        Ok(reply) => {
+            out.ok += 1;
+            *out.per_shard.entry(reply.shard.clone()).or_default() += 1;
+            if let Output::Native { engine, kernel, .. } = &reply.output
+            {
+                *out.per_engine.entry(engine.slug().to_string())
+                    .or_default() += 1;
+                *out.per_kernel.entry(kernel.clone()).or_default() += 1;
+            }
+            out.max_batch_seen = out.max_batch_seen
+                .max(reply.batch_size);
+        }
+        Err(ServeError::Overloaded { .. }) => {
+            out.shed += 1;
+        }
+        Err(e) => {
+            out.failed += 1;
+            let msg = match e {
+                ServeError::Backend(m) => m,
+                other => other.to_string(),
+            };
+            if !out.errors.contains(&msg) {
+                out.errors.push(msg);
+            }
+        }
     }
 }
 
-/// Run the closed loop. Blocks until every client finished. Every
-/// request is accounted for in `ok + shed + failed == submitted` — the
-/// serve layer's explicit-reply contract means nothing can vanish.
-pub fn run_closed_loop(serve: &Serve, spec: &LoadSpec) -> LoadOutcome {
-    assert!(!spec.items.is_empty(), "load mix must not be empty");
-    assert!(spec.clients > 0, "need at least one client");
-    let t0 = Instant::now();
-    let per_client: Vec<LoadOutcome> = std::thread::scope(|scope| {
-        let handles: Vec<_> = (0..spec.clients)
-            .map(|c| {
-                scope.spawn(move || {
-                    let mut out = LoadOutcome::default();
-                    for r in 0..spec.requests_per_client {
-                        let item = spec.items[(c + r) % spec.items.len()]
-                            .clone();
-                        out.submitted += 1;
-                        match serve.call(item) {
-                            Ok(reply) => {
-                                out.ok += 1;
-                                *out.per_shard
-                                    .entry(reply.shard.clone())
-                                    .or_default() += 1;
-                                if let Output::Native { engine, kernel,
-                                                        .. } =
-                                    &reply.output
-                                {
-                                    *out.per_engine
-                                        .entry(engine_name(engine)
-                                               .to_string())
-                                        .or_default() += 1;
-                                    *out.per_kernel
-                                        .entry(kernel.clone())
-                                        .or_default() += 1;
-                                }
-                                out.max_batch_seen = out
-                                    .max_batch_seen
-                                    .max(reply.batch_size);
-                            }
-                            Err(ServeError::Overloaded { .. }) => {
-                                out.shed += 1;
-                            }
-                            Err(e) => {
-                                out.failed += 1;
-                                let msg = match e {
-                                    ServeError::Backend(m) => m,
-                                    other => other.to_string(),
-                                };
-                                if !out.errors.contains(&msg) {
-                                    out.errors.push(msg);
-                                }
-                            }
-                        }
-                    }
-                    out
-                })
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().expect("client panicked"))
-            .collect()
-    });
-    let mut total = LoadOutcome { wall_seconds: t0.elapsed().as_secs_f64(),
-                                  ..Default::default() };
+/// Merge per-client tallies into one deterministic total.
+fn merge(per_client: Vec<LoadOutcome>, wall_seconds: f64)
+         -> LoadOutcome {
+    let mut total =
+        LoadOutcome { wall_seconds, ..Default::default() };
     for c in per_client {
         total.submitted += c.submitted;
         total.ok += c.ok;
@@ -231,6 +209,68 @@ pub fn run_closed_loop(serve: &Serve, spec: &LoadSpec) -> LoadOutcome {
     // renders it (diffable across runs, like the BTreeMap tallies).
     total.errors.sort();
     total
+}
+
+/// The item a closed/stream-loop client `c` issues as its request `r`:
+/// every client cycles the whole mix from a different phase.
+fn client_item(spec: &LoadSpec, c: usize, r: usize) -> WorkItem {
+    spec.items[(c + r) % spec.items.len()].clone()
+}
+
+/// Run the closed loop: one window-1 [`Session`] per client, each
+/// issuing its next request only after the previous reply. Blocks
+/// until every client finished. Every request is accounted for in
+/// `ok + shed + failed == submitted` — the session plane's exact
+/// accounting (and the serve layer's explicit-reply contract) means
+/// nothing can vanish; the per-session tallies land in
+/// `ServeMetrics::session_tallies`.
+pub fn run_closed_loop(serve: &Serve, spec: &LoadSpec) -> LoadOutcome {
+    run_stream_loop(serve, spec, 1)
+}
+
+/// Run the pipelined loop: one [`Session`] per client with an
+/// in-flight **window** of `window` requests, the whole per-client
+/// request list streamed through [`Session::submit_stream`] and
+/// consumed in completion order. `window == 1` IS the classic closed
+/// loop. Same client-thread count at any window — the window is the
+/// pipelining knob, which is exactly what the `client_stream` bench
+/// measures.
+pub fn run_stream_loop(serve: &Serve, spec: &LoadSpec, window: usize)
+                       -> LoadOutcome {
+    assert!(!spec.items.is_empty(), "load mix must not be empty");
+    assert!(spec.clients > 0, "need at least one client");
+    assert!(window > 0, "need a positive window");
+    let t0 = Instant::now();
+    let per_client: Vec<LoadOutcome> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..spec.clients)
+            .map(|c| {
+                scope.spawn(move || {
+                    let session = Session::open(serve, SessionConfig {
+                        window,
+                        on_full: WindowPolicy::Block,
+                    });
+                    let items: Vec<WorkItem> =
+                        (0..spec.requests_per_client)
+                            .map(|r| client_item(spec, c, r))
+                            .collect();
+                    let mut out = LoadOutcome::default();
+                    // one yield per item — submitted means attempted,
+                    // like the pre-session drivers counted it
+                    for (_idx, result) in session.submit_stream(items) {
+                        out.submitted += 1;
+                        tally(&mut out, result);
+                    }
+                    let stats = session.close();
+                    assert!(stats.fully_accounted(),
+                            "session accounting leak: {stats:?}");
+                    out
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client panicked"))
+            .collect()
+    });
+    merge(per_client, t0.elapsed().as_secs_f64())
 }
 
 /// Open-loop overload parameters: requests are issued at a fixed rate
@@ -311,8 +351,17 @@ pub fn run_open_loop(serve: &Serve, spec: &OverloadSpec)
     let interval = Duration::from_secs_f64(1.0 / spec.rate_rps);
     let (tx, rx) = channel::<Result<ServeReply, ServeError>>();
     let mut out = OverloadOutcome::default();
+    // One unbounded-window session: open-loop pacing must never block
+    // on a client-side window (the front queue's backpressure is the
+    // experiment) — but the traffic is still session-tagged, so the
+    // per-session tallies and fair admission see it.
+    let session = Session::open(serve, SessionConfig {
+        window: 0,
+        on_full: WindowPolicy::Block,
+    });
     std::thread::scope(|scope| {
         let tx = tx; // moved into the submitter; clones ride each reply
+        let session = &session;
         let submitter = scope.spawn(move || {
             let mut submitted = 0usize;
             for i in 0..spec.total {
@@ -327,9 +376,11 @@ pub fn run_open_loop(serve: &Serve, spec: &OverloadSpec)
                     item = item.with_deadline_in(d);
                 }
                 let tx = tx.clone();
-                serve.submit_with(item, Box::new(move |r| {
+                let handle = session.submit(item)
+                    .expect("open session with unbounded window");
+                handle.on_ready(move |r| {
                     let _ = tx.send(r);
-                }));
+                });
                 submitted += 1;
             }
             submitted
@@ -457,6 +508,39 @@ mod tests {
         }), "{rates:?}");
         let report = outcome_report(&out, &serve);
         assert!(report.contains("native kernel tuned{"), "{report}");
+        serve.shutdown();
+    }
+
+    #[test]
+    fn stream_loop_pipelines_with_exact_accounting() {
+        let cfg = ServeConfig {
+            cache_cap: 32,
+            max_batch: 4,
+            native: Some(NativeConfig::Synthetic(vec![
+                "dot_n32_f32".to_string(),
+            ])),
+            ..Default::default()
+        };
+        let serve = Serve::start(cfg).unwrap();
+        let spec = LoadSpec {
+            clients: 3,
+            requests_per_client: 10,
+            items: default_mix(&[ArchId::Knl],
+                               &["dot_n32_f32".to_string()], 512),
+        };
+        let out = run_stream_loop(&serve, &spec, 4);
+        assert_eq!(out.submitted, 30);
+        assert_eq!(out.ok + out.shed + out.failed, out.submitted);
+        assert_eq!(out.failed, 0, "errors: {:?}", out.errors);
+        // session-tagged traffic: per-session tallies surfaced
+        let tallies = serve.metrics.session_tallies();
+        assert_eq!(tallies.len(), 3, "one session per client");
+        for (_, t) in &tallies {
+            assert_eq!(t.submitted, 10);
+            assert_eq!(t.ok, 10);
+        }
+        assert!(serve.summary().contains("sessions"), "{}",
+                serve.summary());
         serve.shutdown();
     }
 

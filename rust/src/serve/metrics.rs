@@ -10,10 +10,13 @@
 //! per-request hot path is lock-free, with short-mutex exceptions:
 //! per *executed* run (cache hits skip both), the per-shard compute
 //! aggregation (native runs with a known flop count) and the
-//! service-time EWMA write; and, only when **adaptive quotas** are
+//! service-time EWMA write; only when **adaptive quotas** are
 //! active, one EWMA read per routed request in the dispatcher (the
 //! derived-quota observability map is written only when the value
-//! changes).
+//! changes); and, for **session-tagged** requests only, one lock of
+//! the per-session tally map at submit and one at reply
+//! (`session_submitted` / `session_outcome` — untagged shim traffic
+//! never touches it).
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -97,8 +100,33 @@ struct ComputeAgg {
     flops: f64,
 }
 
+/// How one session-tagged request resolved, as observed by the client
+/// plane (`client::Session` reports these — `Cancelled` means the
+/// caller dropped the pending handle, not that the serve layer's
+/// `cancel()` fired).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SessionOutcome {
+    Ok,
+    Shed,
+    Failed,
+    Cancelled,
+}
+
+/// Per-session request tally — the serve layer's fairness
+/// observability: one row per `client::Session`, surfaced in
+/// [`ServeMetrics::summary`] so a greedy session is visible next to
+/// the ones it competes with.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct SessionTally {
+    pub submitted: u64,
+    pub ok: u64,
+    pub shed: u64,
+    pub failed: u64,
+    pub cancelled: u64,
+}
+
 /// The serve layer's shared metrics. All per-request methods are
-/// lock-free; see the module docs for the one exception.
+/// lock-free; see the module docs for the short-mutex exceptions.
 #[derive(Debug)]
 pub struct ServeMetrics {
     submitted: AtomicU64,
@@ -109,7 +137,11 @@ pub struct ServeMetrics {
     /// expiry) — always via an explicit `Overloaded` reply, never a
     /// silent drop.
     shed: AtomicU64,
+    /// Memory-LRU hits.
     cache_hits: AtomicU64,
+    /// Persistent (disk) result-cache hits — counted separately so the
+    /// `cache:mem` / `cache:disk` split in replies has a metrics twin.
+    cache_hits_disk: AtomicU64,
     cache_misses: AtomicU64,
     /// High-water mark of the front (admission) queue.
     front_depth_hw: AtomicUsize,
@@ -138,6 +170,9 @@ pub struct ServeMetrics {
     /// Per-shard quota most recently derived by the dispatcher's
     /// adaptive-quota path (observability: surfaced in `summary()`).
     derived_quota: Mutex<BTreeMap<String, usize>>,
+    /// Per-session request tallies (fair-admission observability),
+    /// keyed by session id.
+    sessions: Mutex<BTreeMap<u64, SessionTally>>,
     started: Instant,
     /// Nanoseconds after `started` of the first submission
     /// (`u64::MAX` = none yet) and the latest completion (0 = none
@@ -163,6 +198,7 @@ impl ServeMetrics {
             cancelled: AtomicU64::new(0),
             shed: AtomicU64::new(0),
             cache_hits: AtomicU64::new(0),
+            cache_hits_disk: AtomicU64::new(0),
             cache_misses: AtomicU64::new(0),
             front_depth_hw: AtomicUsize::new(0),
             shard_depth_hw: AtomicUsize::new(0),
@@ -175,6 +211,7 @@ impl ServeMetrics {
             compute: Mutex::new(BTreeMap::new()),
             service_ewma: Mutex::new(BTreeMap::new()),
             derived_quota: Mutex::new(BTreeMap::new()),
+            sessions: Mutex::new(BTreeMap::new()),
             started: Instant::now(),
             first_submit_ns: AtomicU64::new(u64::MAX),
             last_completion_ns: AtomicU64::new(0),
@@ -220,8 +257,41 @@ impl ServeMetrics {
         self.cache_hits.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// `n` requests answered from the persistent (disk) result cache.
+    pub fn cache_hit_disk(&self, n: u64) {
+        self.cache_hits_disk.fetch_add(n, Ordering::Relaxed);
+    }
+
     pub fn cache_miss(&self, n: u64) {
         self.cache_misses.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// A session submitted one request (fair-admission tallies).
+    pub fn session_submitted(&self, session: u64) {
+        self.sessions.lock().expect("session tallies poisoned")
+            .entry(session).or_default().submitted += 1;
+    }
+
+    /// A session-tagged request resolved (as observed client-side —
+    /// `Cancelled` = the pending handle was dropped before the reply).
+    pub fn session_outcome(&self, session: u64,
+                           outcome: SessionOutcome) {
+        let mut g = self.sessions.lock()
+            .expect("session tallies poisoned");
+        let t = g.entry(session).or_default();
+        match outcome {
+            SessionOutcome::Ok => t.ok += 1,
+            SessionOutcome::Shed => t.shed += 1,
+            SessionOutcome::Failed => t.failed += 1,
+            SessionOutcome::Cancelled => t.cancelled += 1,
+        }
+    }
+
+    /// Per-session tallies, sorted by session id (BTreeMap-backed —
+    /// reports built from this are stable across runs).
+    pub fn session_tallies(&self) -> Vec<(u64, SessionTally)> {
+        self.sessions.lock().expect("session tallies poisoned")
+            .iter().map(|(id, t)| (*id, *t)).collect()
     }
 
     pub fn observe_front_depth(&self, depth: usize) {
@@ -414,17 +484,23 @@ impl ServeMetrics {
         if s == 0.0 { 0.0 } else { self.shed() as f64 / s }
     }
 
+    /// Memory-LRU hits (the disk tier is counted separately in
+    /// [`ServeMetrics::cache_hits_disk`]).
     pub fn cache_hits(&self) -> u64 {
         self.cache_hits.load(Ordering::Relaxed)
+    }
+
+    pub fn cache_hits_disk(&self) -> u64 {
+        self.cache_hits_disk.load(Ordering::Relaxed)
     }
 
     pub fn cache_misses(&self) -> u64 {
         self.cache_misses.load(Ordering::Relaxed)
     }
 
-    /// Hits / (hits + misses); 0.0 before any lookup.
+    /// Hits (both tiers) / (hits + misses); 0.0 before any lookup.
     pub fn cache_hit_rate(&self) -> f64 {
-        let h = self.cache_hits() as f64;
+        let h = (self.cache_hits() + self.cache_hits_disk()) as f64;
         let m = self.cache_misses() as f64;
         if h + m == 0.0 { 0.0 } else { h / (h + m) }
     }
@@ -477,16 +553,23 @@ impl ServeMetrics {
     /// native compute get an aggregate GFLOP/s tail so tuning wins are
     /// visible under load.
     pub fn summary(&self) -> String {
+        // two-tier cache tail: the disk split only appears once the
+        // persistent cache has served anything
+        let cache = if self.cache_hits_disk() > 0 {
+            format!("({}Hm/{}Hd/{}M)", self.cache_hits(),
+                    self.cache_hits_disk(), self.cache_misses())
+        } else {
+            format!("({}H/{}M)", self.cache_hits(), self.cache_misses())
+        };
         let mut s = format!(
             "serve: {} submitted, {} ok, {} failed, {} shed, \
              {} cancelled; \
-             cache {:.0}% ({}H/{}M); depth hw front={} shard={}; \
+             cache {:.0}% {cache}; depth hw front={} shard={}; \
              max batch {}; p50={:.3}ms p95={:.3}ms p99={:.3}ms; \
              {:.1} req/s",
             self.submitted(), self.completed(), self.failed(),
             self.shed(),
             self.cancelled(), 100.0 * self.cache_hit_rate(),
-            self.cache_hits(), self.cache_misses(),
             self.front_depth_high_water(),
             self.shard_depth_high_water(), self.max_batch_observed(),
             1e3 * self.p50(), 1e3 * self.p95(), 1e3 * self.p99(),
@@ -513,6 +596,15 @@ impl ServeMetrics {
             s.push_str(&format!(
                 "; tuning {enq} jobs ({done} done, {tshed} shed, \
                  {tfail} failed)"));
+        }
+        let sessions = self.session_tallies();
+        if !sessions.is_empty() {
+            s.push_str("; sessions");
+            for (id, t) in sessions {
+                s.push_str(&format!(
+                    " s{id}={}/{}ok/{}sh/{}fl/{}cx", t.submitted,
+                    t.ok, t.shed, t.failed, t.cancelled));
+            }
         }
         s
     }
@@ -677,6 +769,47 @@ mod tests {
         assert_eq!(m.shed(), 1);
         assert!((m.shed_rate() - 0.25).abs() < 1e-12);
         assert!(m.summary().contains("1 shed"), "{}", m.summary());
+    }
+
+    #[test]
+    fn session_tallies_sorted_and_in_summary() {
+        let m = ServeMetrics::new();
+        assert!(m.session_tallies().is_empty());
+        assert!(!m.summary().contains("sessions"),
+                "no session tail before any tagged request");
+        for _ in 0..3 {
+            m.session_submitted(2);
+        }
+        m.session_submitted(1);
+        m.session_outcome(2, SessionOutcome::Ok);
+        m.session_outcome(2, SessionOutcome::Shed);
+        m.session_outcome(2, SessionOutcome::Cancelled);
+        m.session_outcome(1, SessionOutcome::Failed);
+        let t = m.session_tallies();
+        assert_eq!(t.len(), 2);
+        assert_eq!(t[0].0, 1, "sorted by session id");
+        assert_eq!(t[0].1.failed, 1);
+        assert_eq!(t[1].1,
+                   SessionTally { submitted: 3, ok: 1, shed: 1,
+                                  failed: 0, cancelled: 1 });
+        let s = m.summary();
+        assert!(s.contains("sessions"), "{s}");
+        assert!(s.contains("s2=3/1ok/1sh/0fl/1cx"), "{s}");
+    }
+
+    #[test]
+    fn disk_cache_hits_counted_in_rate_and_summary() {
+        let m = ServeMetrics::new();
+        m.cache_hit(1);
+        m.cache_miss(1);
+        assert!(!m.summary().contains("Hd"),
+                "no disk split before a disk hit: {}", m.summary());
+        m.cache_hit_disk(2);
+        assert_eq!(m.cache_hits_disk(), 2);
+        // (1 mem + 2 disk) / 4 lookups
+        assert!((m.cache_hit_rate() - 0.75).abs() < 1e-12);
+        let s = m.summary();
+        assert!(s.contains("1Hm/2Hd/1M"), "{s}");
     }
 
     #[test]

@@ -58,13 +58,25 @@
 //!   `pop_batch`, group them by work key, and serve each group with one
 //!   backend execution.
 //! * **Caching**: per-shard LRU keyed by the canonical work-item key;
-//!   disabled (capacity 0) for measurement-oriented callers.
+//!   disabled (capacity 0) for measurement-oriented callers. With
+//!   [`ServeConfig::result_cache_path`] set, executed **native**
+//!   results additionally spill to a persistent on-disk cache
+//!   (atomic-write + corrupt-recovery, keyed by artifact identity
+//!   digest); replies label the tier ([`ServeReply::cache_src`]:
+//!   `cache:mem` / `cache:disk`).
+//! * **Client plane**: [`Serve::submit_handle`] is the submission
+//!   primitive (a [`ReplyHandle`] future); the callback and channel
+//!   APIs are thin adapters over it, and `crate::client` layers
+//!   sessions (windowed, exactly-accounted, session-tagged — the
+//!   dispatcher round-robins routing bursts across sessions and the
+//!   metrics keep per-session tallies) and request pipelines on top.
 //! * **Shutdown**: `close` stops admission; queued work is drained,
 //!   executed and replied to before workers exit. `cancel` short-cuts
 //!   execution but still replies ([`ServeError::Cancelled`]).
 
 pub mod backend;
 pub mod cache;
+pub mod diskcache;
 pub mod loadgen;
 pub mod metrics;
 
@@ -79,6 +91,7 @@ use std::time::{Duration, Instant};
 
 use crate::autotune::{bucket_for, SharedTuningStore, TunerBackend,
                       TuningStore};
+use crate::client::future::{pair, ReplyHandle};
 use crate::coordinator::queue::BoundedQueue;
 use crate::gemm::Precision;
 use crate::runtime::artifact::Manifest;
@@ -87,7 +100,8 @@ pub use backend::{Backend, BackendFactory, MachinePark, NativeBackend,
                   NativeEngine, NativeEngineId, Output, ShardKey,
                   SimBackend, ThreadpoolGemm, WorkItem, WorkPayload};
 pub use cache::LruCache;
-pub use metrics::ServeMetrics;
+pub use diskcache::DiskResultCache;
+pub use metrics::{ServeMetrics, SessionOutcome, SessionTally};
 
 /// Why a request did not produce an output.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -179,6 +193,34 @@ impl ShedPolicy {
     }
 }
 
+/// Where a reply's result came from — surfaced per reply
+/// ([`ServeReply::cache_src`], labels `cache:mem` / `cache:disk`) and
+/// in the metrics, so the two cache tiers are attributable separately.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheSource {
+    /// Executed by the backend (no cache involvement).
+    Miss,
+    /// Served from the shard's in-memory LRU.
+    Mem,
+    /// Served from the persistent on-disk result cache
+    /// (`ServeConfig::result_cache_path`).
+    Disk,
+}
+
+impl CacheSource {
+    pub fn is_hit(&self) -> bool {
+        !matches!(self, CacheSource::Miss)
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            CacheSource::Miss => "exec",
+            CacheSource::Mem => "cache:mem",
+            CacheSource::Disk => "cache:disk",
+        }
+    }
+}
+
 /// A served request's full story.
 #[derive(Debug, Clone)]
 pub struct ServeReply {
@@ -190,13 +232,19 @@ pub struct ServeReply {
     pub batch_size: usize,
     /// Wait from submission to the start of execution, seconds.
     pub queue_seconds: f64,
-    /// Whether the result came from the shard's LRU cache.
+    /// Whether the result came from a cache (either tier —
+    /// `cache_src` has the split).
     pub cache_hit: bool,
+    /// Which tier answered: executed, memory LRU, or disk.
+    pub cache_src: CacheSource,
     /// Worker index within the shard.
     pub worker: usize,
 }
 
-pub type ReplyRx = Receiver<Result<ServeReply, ServeError>>;
+/// The one reply type every client-plane surface resolves to.
+pub type ServeResult = Result<ServeReply, ServeError>;
+
+pub type ReplyRx = Receiver<ServeResult>;
 
 /// Reply continuation, invoked exactly once per request — by a shard
 /// worker, or by the admission path on rejection. Adapters (the
@@ -239,6 +287,14 @@ pub struct ServeConfig {
     /// LRU result-cache entries per shard; 0 disables caching
     /// (measurement-oriented callers must re-execute every request).
     pub cache_cap: usize,
+    /// Persistent result cache: when set (and `cache_cap > 0`),
+    /// executed **native** results spill to this JSON file (atomic
+    /// temp-file+rename writes, corrupt-file recovery — the tuning
+    /// store's machinery) keyed by work key + artifact identity
+    /// digest, and shard workers probe it after a memory-LRU miss.
+    /// Disk hits are labelled `cache:disk` in replies and counted
+    /// separately in the metrics.
+    pub result_cache_path: Option<PathBuf>,
     /// Worker threads per simulated shard (each native shard has
     /// exactly one shard worker — the PJRT client is single-owner, and
     /// the threadpool shard parallelizes *inside* its backend).
@@ -286,6 +342,7 @@ pub struct ServeConfig {
 impl Default for ServeConfig {
     fn default() -> Self {
         Self { front_cap: 64, shard_cap: 64, max_batch: 8, cache_cap: 0,
+               result_cache_path: None,
                sim_threads: 1, native: None, native_threads: 4,
                shed: ShedPolicy::None, shard_quota: None,
                latency_budget: Duration::from_millis(250),
@@ -300,6 +357,123 @@ impl Default for ServeConfig {
 enum NativeSource {
     Manifest(Manifest),
     Synthetic(Vec<String>),
+}
+
+/// The persistent result cache plus the artifact identity digests it
+/// validates entries against — shared by every native shard worker.
+/// Lookup/commit are short-mutex; file writes happen OUTSIDE the lock
+/// (snapshot + atomic rename) and are **debounced**: the in-memory
+/// insert is synchronous, but the full-file rewrite runs only every
+/// [`DISK_FLUSH_EVERY`] puts plus once at dispatcher shutdown — an
+/// executed request never pays an O(entries) serialize + rename per
+/// result (the same discipline as the tuning-store commit path).
+pub(crate) struct SharedDiskCache {
+    cache: Mutex<DiskResultCache>,
+    /// Work key → identity digest (id, shape, dtype, seeds, coeffs) of
+    /// the artifact the layer would execute for that key. Read-only
+    /// after start.
+    digests: HashMap<String, String>,
+    /// Puts since the last flush (crash-loss window bound).
+    unflushed: std::sync::atomic::AtomicUsize,
+}
+
+/// How many disk-cache puts may accumulate before the file is
+/// rewritten mid-run (shutdown always flushes the remainder).
+const DISK_FLUSH_EVERY: usize = 16;
+
+impl SharedDiskCache {
+    /// Disk entries are namespaced per shard (like the per-shard
+    /// memory LRUs): the work key alone is engine-agnostic
+    /// (`artifact:<id>` for BOTH named native shards), and a pjrt
+    /// result replayed to a threadpool request would skip that
+    /// shard's oracle check and misattribute engine/kernel.
+    fn qualified(shard: &str, key: &str) -> String {
+        format!("{shard}|{key}")
+    }
+
+    fn get(&self, shard: &str, key: &str) -> Option<Output> {
+        let digest = self.digests.get(key)?;
+        self.cache.lock().ok()?
+            .get(&Self::qualified(shard, key), digest)
+    }
+
+    fn put(&self, shard: &str, key: &str, output: &Output) {
+        use std::sync::atomic::Ordering;
+
+        let Some(digest) = self.digests.get(key) else { return };
+        let snapshot = {
+            let Ok(mut g) = self.cache.lock() else { return };
+            if !g.put(&Self::qualified(shard, key), digest, output) {
+                return;
+            }
+            if self.unflushed.fetch_add(1, Ordering::Relaxed) + 1
+                >= DISK_FLUSH_EVERY
+            {
+                self.unflushed.store(0, Ordering::Relaxed);
+                g.snapshot()
+            } else {
+                None
+            }
+        };
+        Self::write(snapshot);
+    }
+
+    /// Persist the current contents (shutdown path — drains the
+    /// debounce window so a clean exit loses nothing).
+    fn flush(&self) {
+        use std::sync::atomic::Ordering;
+
+        let snapshot = {
+            let Ok(g) = self.cache.lock() else { return };
+            if self.unflushed.swap(0, Ordering::Relaxed) == 0 {
+                return; // nothing new since the last write
+            }
+            g.snapshot()
+        };
+        Self::write(snapshot);
+    }
+
+    fn write(snapshot: Option<(PathBuf, String)>) {
+        if let Some((path, json)) = snapshot {
+            if let Err(e) = TuningStore::write_atomic(&path, &json) {
+                // in-memory entries took effect; only cross-restart
+                // persistence is lost — never fail the serving path
+                eprintln!("[serve] result cache could not be persisted \
+                           to {}: {e:#}", path.display());
+            }
+        }
+    }
+}
+
+/// Work key → identity digest for everything the native source can
+/// serve (the disk cache refuses entries whose recorded digest
+/// differs — a changed manifest under the same id is a miss).
+fn native_digests(src: &Option<Arc<NativeSource>>)
+                  -> HashMap<String, String> {
+    let mut digests = HashMap::new();
+    match src.as_deref() {
+        None => {}
+        Some(NativeSource::Manifest(m)) => {
+            for meta in &m.artifacts {
+                let spec = backend::spec_from_meta(meta);
+                digests.insert(
+                    WorkItem::artifact(spec.id.as_str()).cache_key(),
+                    backend::spec_digest(&spec));
+            }
+        }
+        Some(NativeSource::Synthetic(ids)) => {
+            // ids were validated at start; an error here cannot happen
+            if let Ok(catalog) = backend::synthetic_catalog(ids) {
+                for spec in catalog.values() {
+                    digests.insert(
+                        WorkItem::artifact(spec.id.as_str())
+                            .cache_key(),
+                        backend::spec_digest(spec));
+                }
+            }
+        }
+    }
+    digests
 }
 
 struct ShardHandle {
@@ -367,6 +541,28 @@ impl Serve {
             }
             (None, false) => None,
         };
+        // Persistent result cache: opened once, shared by every native
+        // shard worker. Only meaningful with the LRU enabled — the
+        // measurement-semantics path (cache_cap 0) must re-execute
+        // everything, disk included.
+        let disk: Option<Arc<SharedDiskCache>> =
+            match (&cfg.result_cache_path, cfg.cache_cap) {
+                (Some(path), cap) if cap > 0 => {
+                    Some(Arc::new(SharedDiskCache {
+                        cache: Mutex::new(DiskResultCache::open(path)),
+                        digests: native_digests(&native_src),
+                        unflushed: std::sync::atomic::AtomicUsize
+                            ::new(0),
+                    }))
+                }
+                (Some(path), _) => {
+                    eprintln!("[serve] result_cache_path {} ignored: \
+                               cache_cap is 0 (measurement semantics \
+                               re-execute everything)", path.display());
+                    None
+                }
+                (None, _) => None,
+            };
         let dispatcher = {
             let front = Arc::clone(&front);
             let metrics = Arc::clone(&metrics);
@@ -378,8 +574,8 @@ impl Serve {
             std::thread::Builder::new()
                 .name("serve-dispatch".into())
                 .spawn(move || {
-                    dispatch_loop(front, cfg, native_src, store, park,
-                                  metrics, cancel, registry)
+                    dispatch_loop(front, cfg, native_src, store, disk,
+                                  park, metrics, cancel, registry)
                 })
                 .expect("spawn serve dispatcher")
         };
@@ -387,22 +583,13 @@ impl Serve {
                    park, shard_queues, store })
     }
 
-    /// Submit a work item. Blocks while the front queue is full
-    /// (admission control). The returned channel ALWAYS yields exactly
-    /// one explicit result — after shutdown that result is
-    /// `Err(ServeError::Closed)`, never a dangling disconnect.
-    pub fn submit(&self, item: WorkItem) -> ReplyRx {
-        let (tx, rx) = channel();
-        self.submit_with(item, Box::new(move |r| {
-            let _ = tx.send(r);
-        }));
-        rx
-    }
-
-    /// Submit with a reply continuation instead of a channel. The
-    /// continuation runs exactly once — with `Err(ServeError::Closed)`
-    /// synchronously when admission is already shut down.
-    pub fn submit_with(&self, item: WorkItem, reply: ReplyFn) {
+    /// The submission primitive every public surface builds on: push
+    /// the request with its reply continuation. The continuation runs
+    /// exactly once — with `Err(ServeError::Closed)` synchronously when
+    /// admission is already shut down. `pub(crate)` so the client
+    /// plane (`client::Session`) can install its accounting closure
+    /// without an extra future hop.
+    pub(crate) fn submit_raw(&self, item: WorkItem, reply: ReplyFn) {
         self.metrics.request_submitted();
         // Depth high-water comes from the queue's own max_depth (one
         // lock inside push), not a separate len() read per request.
@@ -413,6 +600,42 @@ impl Serve {
             self.metrics.request_failed();
             (req.reply)(Err(ServeError::Closed));
         }
+    }
+
+    /// Submit a work item and get a [`ReplyHandle`] — the client
+    /// plane's future primitive (poll / wait / timeout / `on_ready`
+    /// chaining; dropping the pending handle abandons the reply
+    /// cleanly). Blocks while the front queue is full (admission
+    /// control). The handle ALWAYS resolves with exactly one explicit
+    /// result — after shutdown that is `Err(ServeError::Closed)`.
+    pub fn submit_handle(&self, item: WorkItem)
+                         -> ReplyHandle<ServeResult> {
+        let (promise, handle) = pair();
+        self.submit_raw(item, Box::new(move |r| {
+            // an abandoned (dropped) handle just discards the value —
+            // session-tagged callers layer cancellation accounting on
+            // top via their own closure (client::Session)
+            let _ = promise.complete(r);
+        }));
+        handle
+    }
+
+    /// Submit with a reply continuation — a thin adapter over the
+    /// future primitive: `submit_handle(item).on_ready(reply)`.
+    pub fn submit_with(&self, item: WorkItem, reply: ReplyFn) {
+        self.submit_handle(item).on_ready(move |r| reply(r));
+    }
+
+    /// Submit a work item over a channel (the legacy surface). The
+    /// returned channel ALWAYS yields exactly one explicit result —
+    /// after shutdown that result is `Err(ServeError::Closed)`, never
+    /// a dangling disconnect.
+    pub fn submit(&self, item: WorkItem) -> ReplyRx {
+        let (tx, rx) = channel();
+        self.submit_with(item, Box::new(move |r| {
+            let _ = tx.send(r);
+        }));
+        rx
     }
 
     /// Like [`Serve::submit`] but reports shutdown on the call itself.
@@ -426,11 +649,11 @@ impl Serve {
         Ok(self.submit(item))
     }
 
-    /// Submit and wait.
-    pub fn call(&self, item: WorkItem) -> Result<ServeReply, ServeError> {
-        // recv error cannot happen (every request gets an explicit
-        // reply); map it to Closed defensively rather than panicking.
-        self.submit(item).recv().unwrap_or(Err(ServeError::Closed))
+    /// Submit and wait (over the future primitive).
+    pub fn call(&self, item: WorkItem) -> ServeResult {
+        // a broken promise cannot happen (every request gets an
+        // explicit reply); recv() maps it to Closed defensively.
+        self.submit_handle(item).recv()
     }
 
     /// Request cancellation: queued work is drained and replied to with
@@ -603,10 +826,53 @@ impl TuneCtx {
     }
 }
 
+/// Fair admission: reorder one routed burst round-robin across the
+/// sessions present in it (first-appearance order; per-session FIFO
+/// preserved; untagged requests form one lane of their own). A burst
+/// from a single lane — the common case — is returned untouched, so
+/// legacy single-caller traffic keeps strict FIFO. This is what keeps
+/// a greedy session from monopolizing a routing burst: with two
+/// sessions in the queue, their requests hit the shard queues (and
+/// the per-shard quotas) alternately instead of in arrival runs.
+fn interleave_sessions(burst: Vec<ServeRequest>) -> Vec<ServeRequest> {
+    use std::collections::VecDeque;
+
+    let mut lanes: Vec<(Option<u64>, VecDeque<ServeRequest>)> =
+        Vec::new();
+    for req in burst {
+        let tag = req.item.session;
+        match lanes.iter_mut().find(|(t, _)| *t == tag) {
+            Some((_, lane)) => lane.push_back(req),
+            None => {
+                let mut lane = VecDeque::new();
+                lane.push_back(req);
+                lanes.push((tag, lane));
+            }
+        }
+    }
+    if lanes.len() <= 1 {
+        return lanes.pop()
+            .map(|(_, lane)| lane.into_iter().collect())
+            .unwrap_or_default();
+    }
+    let total = lanes.iter().map(|(_, lane)| lane.len()).sum();
+    let mut out = Vec::with_capacity(total);
+    while !lanes.is_empty() {
+        lanes.retain_mut(|(_, lane)| {
+            if let Some(req) = lane.pop_front() {
+                out.push(req);
+            }
+            !lane.is_empty()
+        });
+    }
+    out
+}
+
 #[allow(clippy::too_many_arguments)]
 fn dispatch_loop(front: Arc<BoundedQueue<ServeRequest>>, cfg: ServeConfig,
                  native_src: Option<Arc<NativeSource>>,
                  store: Option<SharedTuningStore>,
+                 disk: Option<Arc<SharedDiskCache>>,
                  park: Arc<MachinePark>, metrics: Arc<ServeMetrics>,
                  cancel: Arc<AtomicBool>,
                  registry: Arc<ShardRegistry>) {
@@ -708,8 +974,10 @@ fn dispatch_loop(front: Arc<BoundedQueue<ServeRequest>>, cfg: ServeConfig,
             }
         };
 
-        // 3. Route the burst.
-        for req in burst {
+        // 3. Route the burst, round-robining across sessions (fair
+        // admission — one greedy session cannot fill a whole burst's
+        // worth of shard-queue slots ahead of everyone else).
+        for req in interleave_sessions(burst) {
             let key = req.item.shard_key();
             // Online-tuning trigger: a request for an untuned
             // (dtype, bucket) seeds ONE bounded exploration job on the
@@ -723,7 +991,8 @@ fn dispatch_loop(front: Arc<BoundedQueue<ServeRequest>>, cfg: ServeConfig,
                     let tk = ShardKey::Tuner;
                     if !shards.contains_key(&tk) {
                         match spawn_shard(tk, &cfg, &native_src, &store,
-                                          &park, &metrics, &cancel) {
+                                          &disk, &park, &metrics,
+                                          &cancel) {
                             Ok(handle) => {
                                 registry.lock()
                                     .expect("shard registry poisoned")
@@ -758,8 +1027,8 @@ fn dispatch_loop(front: Arc<BoundedQueue<ServeRequest>>, cfg: ServeConfig,
                 }
             }
             if !shards.contains_key(&key) {
-                match spawn_shard(key, &cfg, &native_src, &store, &park,
-                                  &metrics, &cancel) {
+                match spawn_shard(key, &cfg, &native_src, &store, &disk,
+                                  &park, &metrics, &cancel) {
                     Ok(handle) => {
                         registry.lock().expect("shard registry poisoned")
                             .push((key.label(),
@@ -863,11 +1132,18 @@ fn dispatch_loop(front: Arc<BoundedQueue<ServeRequest>>, cfg: ServeConfig,
             let _ = w.join();
         }
     }
+    // Workers are gone, so no further puts can race: drain the disk
+    // cache's debounce window — a clean shutdown persists everything.
+    if let Some(d) = &disk {
+        d.flush();
+    }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn spawn_shard(key: ShardKey, cfg: &ServeConfig,
                native_src: &Option<Arc<NativeSource>>,
                store: &Option<SharedTuningStore>,
+               disk: &Option<Arc<SharedDiskCache>>,
                park: &Arc<MachinePark>, metrics: &Arc<ServeMetrics>,
                cancel: &Arc<AtomicBool>)
                -> Result<ShardHandle, String> {
@@ -947,20 +1223,33 @@ fn spawn_shard(key: ShardKey, cfg: &ServeConfig,
                     .to_string()
             })?;
             let (budget, reps) = (cfg.tune_budget, cfg.tune_reps);
+            // Exploration covers the threadpool fan-out axis sized to
+            // the pool the threadpool shard actually runs.
+            let fanout =
+                crate::autotune::fanout_candidates(cfg.native_threads);
             factories.push(Box::new(move || {
-                Ok(Box::new(TunerBackend::new(store, budget, reps))
+                Ok(Box::new(TunerBackend::new(store, budget, reps)
+                                .with_fanout(fanout.clone()))
                    as Box<dyn Backend>)
             }));
         }
     }
     let shed = cfg.shed;
     let quota = cfg.shard_quota.unwrap_or(0);
+    // Only native shards carry the persistent result cache: sim
+    // predictions are cheap to recompute and the tuner has its own
+    // store — the disk tier exists to save native compute.
+    let disk = match key {
+        ShardKey::Native(_) => disk.clone(),
+        ShardKey::Sim(_) | ShardKey::Tuner => None,
+    };
     let workers = factories
         .into_iter()
         .enumerate()
         .map(|(widx, factory)| {
             let queue = Arc::clone(&queue);
             let cache = Arc::clone(&cache);
+            let disk = disk.clone();
             let metrics = Arc::clone(metrics);
             let cancel = Arc::clone(cancel);
             let label = key.label();
@@ -975,8 +1264,9 @@ fn spawn_shard(key: ShardKey, cfg: &ServeConfig,
             std::thread::Builder::new()
                 .name(format!("serve-{}-{widx}", label.replace(':', "-")))
                 .spawn(move || {
-                    shard_loop(queue, factory, cache, metrics, cancel,
-                               max_batch, widx, label, shed, quota)
+                    shard_loop(queue, factory, cache, disk, metrics,
+                               cancel, max_batch, widx, label, shed,
+                               quota)
                 })
                 .expect("spawn shard worker")
         })
@@ -1011,6 +1301,7 @@ fn service_seconds(output: &Output, wall: f64) -> f64 {
 fn shard_loop(queue: Arc<BoundedQueue<ServeRequest>>,
               factory: BackendFactory,
               cache: Arc<Mutex<LruCache<Output>>>,
+              disk: Option<Arc<SharedDiskCache>>,
               metrics: Arc<ServeMetrics>, cancel: Arc<AtomicBool>,
               max_batch: usize, worker: usize, label: String,
               shed: ShedPolicy, quota: usize) {
@@ -1122,10 +1413,41 @@ fn shard_loop(queue: Arc<BoundedQueue<ServeRequest>>,
                         batch_size,
                         queue_seconds: wait,
                         cache_hit: true,
+                        cache_src: CacheSource::Mem,
                         worker,
                     }));
                 }
                 continue;
+            }
+            // Memory miss → probe the persistent tier (native shards
+            // with a result_cache_path only). A disk hit seeds the LRU
+            // so the next repeat is a memory hit, and replies carry
+            // `cache:disk` so the tier split is attributable.
+            if cache_enabled {
+                if let Some(output) =
+                    disk.as_ref().and_then(|d| d.get(&label, &key))
+                {
+                    metrics.cache_hit_disk(batch_size as u64);
+                    cache.lock().expect("cache poisoned")
+                        .put(key, output.clone());
+                    for (req, wait) in group.into_iter().zip(waits) {
+                        let latency =
+                            req.enqueued.elapsed().as_secs_f64();
+                        if !req.internal {
+                            metrics.request_completed(latency);
+                        }
+                        (req.reply)(Ok(ServeReply {
+                            shard: label.clone(),
+                            output: output.clone(),
+                            batch_size,
+                            queue_seconds: wait,
+                            cache_hit: true,
+                            cache_src: CacheSource::Disk,
+                            worker,
+                        }));
+                    }
+                    continue;
+                }
             }
             if cache_enabled {
                 // Serving semantics: equal work keys are interchangeable
@@ -1144,6 +1466,12 @@ fn shard_loop(queue: Arc<BoundedQueue<ServeRequest>>,
                         }
                         observe_native_compute(&metrics, &label,
                                                &output);
+                        // spill-through: the persistent tier records
+                        // every executed native result (debounced
+                        // atomic write outside the lookup lock)
+                        if let Some(d) = &disk {
+                            d.put(&label, &key, &output);
+                        }
                         cache.lock().expect("cache poisoned")
                             .put(key, output.clone());
                         for (req, wait) in group.into_iter().zip(waits) {
@@ -1158,6 +1486,7 @@ fn shard_loop(queue: Arc<BoundedQueue<ServeRequest>>,
                                 batch_size,
                                 queue_seconds: wait,
                                 cache_hit: false,
+                                cache_src: CacheSource::Miss,
                                 worker,
                             }));
                         }
@@ -1204,6 +1533,7 @@ fn shard_loop(queue: Arc<BoundedQueue<ServeRequest>>,
                                 batch_size,
                                 queue_seconds: wait,
                                 cache_hit: false,
+                                cache_src: CacheSource::Miss,
                                 worker,
                             }));
                         }
@@ -1599,6 +1929,156 @@ mod tests {
                          Err(ServeError::Overloaded { .. })));
         assert!(serve.metrics.derived_quotas().is_empty(),
                 "explicit quota must not derive anything");
+        serve.shutdown();
+    }
+
+    #[test]
+    fn interleave_round_robins_sessions_preserving_lane_fifo() {
+        let req = |session: Option<u64>, t: u64| ServeRequest {
+            item: match session {
+                Some(s) => knl_point(t).with_session(s),
+                None => knl_point(t),
+            },
+            reply: Box::new(|_| {}),
+            enqueued: Instant::now(),
+            internal: false,
+        };
+        // greedy session 1 (4 requests), session 2 (2), untagged (1)
+        let burst = vec![req(Some(1), 16), req(Some(1), 32),
+                         req(Some(1), 64), req(Some(2), 16),
+                         req(None, 32), req(Some(1), 16),
+                         req(Some(2), 32)];
+        let out = interleave_sessions(burst);
+        let tags: Vec<Option<u64>> =
+            out.iter().map(|r| r.item.session).collect();
+        assert_eq!(tags, vec![Some(1), Some(2), None, Some(1), Some(2),
+                              Some(1), Some(1)],
+                   "round-robin across lanes in first-appearance order");
+        // per-lane FIFO: session 2's t values arrive 16 then 32
+        let s2: Vec<u64> = out.iter()
+            .filter(|r| r.item.session == Some(2))
+            .map(|r| match &r.item.payload {
+                WorkPayload::Point(p) => p.t,
+                other => panic!("unexpected {other:?}"),
+            })
+            .collect();
+        assert_eq!(s2, vec![16, 32]);
+        // single-lane bursts come back untouched
+        let single = interleave_sessions(vec![req(None, 16),
+                                              req(None, 32)]);
+        assert_eq!(single.len(), 2);
+        assert!(interleave_sessions(Vec::new()).is_empty());
+    }
+
+    #[test]
+    fn disk_result_cache_survives_restart_and_labels_tiers() {
+        let dir = std::env::temp_dir().join("alpaka-serve-diskcache");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("serve_result_cache.json");
+        let _ = std::fs::remove_file(&path);
+        let cfg = || ServeConfig {
+            cache_cap: 16,
+            result_cache_path: Some(path.clone()),
+            native: Some(NativeConfig::Synthetic(vec![
+                "dot_n64_f32".to_string(),
+            ])),
+            ..Default::default()
+        };
+        {
+            let serve = Serve::start(cfg()).unwrap();
+            let first = serve.call(WorkItem::artifact("dot_n64_f32"))
+                .unwrap();
+            assert_eq!(first.cache_src, CacheSource::Miss);
+            assert!(!first.cache_hit);
+            // repeat in-process: memory tier answers
+            let again = serve.call(WorkItem::artifact("dot_n64_f32"))
+                .unwrap();
+            assert_eq!(again.cache_src, CacheSource::Mem);
+            assert_eq!(again.cache_src.label(), "cache:mem");
+            assert!(again.cache_hit);
+            assert_eq!(serve.metrics.cache_hits_disk(), 0);
+            serve.shutdown();
+        }
+        assert!(path.exists(), "executed result spilled to disk");
+        {
+            // RESTART: memory LRU is cold, the disk tier answers the
+            // first request without executing anything
+            let serve = Serve::start(cfg()).unwrap();
+            let r = serve.call(WorkItem::artifact("dot_n64_f32"))
+                .unwrap();
+            assert!(r.cache_hit);
+            assert_eq!(r.cache_src, CacheSource::Disk);
+            assert_eq!(r.cache_src.label(), "cache:disk");
+            assert_eq!(serve.metrics.cache_hits_disk(), 1);
+            // the disk hit seeded the LRU: next repeat is a memory hit
+            let again = serve.call(WorkItem::artifact("dot_n64_f32"))
+                .unwrap();
+            assert_eq!(again.cache_src, CacheSource::Mem);
+            assert!(serve.summary().contains("Hd"), "{}",
+                    serve.summary());
+            // the SAME artifact on the OTHER named engine must MISS:
+            // disk entries are namespaced per shard, so a pjrt result
+            // can never replay to a threadpool request (which must run
+            // its own oracle-checked execution)
+            let tp = serve.call(WorkItem::artifact_on(
+                "dot_n64_f32", NativeEngineId::Threadpool)).unwrap();
+            assert_eq!(tp.cache_src, CacheSource::Miss);
+            match tp.output {
+                Output::Native { engine, .. } => {
+                    assert_eq!(engine, NativeEngine::ThreadpoolGemm);
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+            serve.shutdown();
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn result_cache_path_inert_under_measurement_semantics() {
+        let dir = std::env::temp_dir().join("alpaka-serve-diskcache");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("measurement_no_spill.json");
+        let _ = std::fs::remove_file(&path);
+        let serve = Serve::start(ServeConfig {
+            cache_cap: 0, // measurement semantics: every request runs
+            result_cache_path: Some(path.clone()),
+            native: Some(NativeConfig::Synthetic(vec![
+                "dot_n32_f32".to_string(),
+            ])),
+            ..Default::default()
+        }).unwrap();
+        for _ in 0..2 {
+            let r = serve.call(WorkItem::artifact("dot_n32_f32"))
+                .unwrap();
+            assert!(!r.cache_hit);
+            assert_eq!(r.cache_src, CacheSource::Miss);
+        }
+        serve.shutdown();
+        assert!(!path.exists(),
+                "measurement-semantics layers must not spill");
+    }
+
+    #[test]
+    fn submit_handle_resolves_and_dropping_is_clean() {
+        let serve = Serve::start(ServeConfig::default()).unwrap();
+        // resolve after wait
+        let h = serve.submit_handle(knl_point(32));
+        let reply = h.recv().unwrap();
+        assert_eq!(reply.shard, "sim:knl");
+        // poll-style
+        let mut h = serve.submit_handle(knl_point(16));
+        let r = loop {
+            if let Some(r) = h.poll() {
+                break r;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        };
+        assert!(r.is_ok());
+        // dropping a pending handle neither hangs shutdown nor panics
+        // the replying worker
+        let pending = serve.submit_handle(knl_point(64));
+        drop(pending);
         serve.shutdown();
     }
 

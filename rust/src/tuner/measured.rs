@@ -107,6 +107,49 @@ impl MeasuredGemm {
     pub fn gflops(&self, params: &KernelParams, reps: usize) -> f64 {
         gemm_metrics::gflops(self.n as u64, self.time(params, reps))
     }
+
+    /// Best-of-`reps` wall time of one full tuned GEMM fanned out over
+    /// `threads` scoped workers in contiguous row blocks — the
+    /// **thread axis** of the exploration space (the same shape of
+    /// fan-out the serve layer's threadpool shard applies, so a
+    /// measured winner transfers). `threads == 1` degenerates to the
+    /// sequential [`MeasuredGemm::time`] path: same kernel, same
+    /// inputs, directly comparable numbers.
+    pub fn time_threaded(&self, params: &KernelParams, reps: usize,
+                         threads: usize) -> f64 {
+        let threads = threads.max(1);
+        if threads == 1 {
+            return self.time(params, reps);
+        }
+        let n = self.n;
+        let per = n.div_ceil(threads).max(1);
+        let ranges: Vec<(usize, usize)> = (0..n)
+            .step_by(per)
+            .map(|r0| (r0, (r0 + per).min(n)))
+            .collect();
+        let mut best = f64::INFINITY;
+        for _ in 0..reps.max(1) {
+            let t0 = Instant::now();
+            std::thread::scope(|scope| {
+                for &(r0, r1) in &ranges {
+                    scope.spawn(move || match &self.inputs {
+                        MeasuredInputs::F32 { a, b, c } => {
+                            let out = kernel::gemm_f32_tuned_rows(
+                                n, r0, r1, a, b, c, 1.5, 0.5, params);
+                            std::hint::black_box(&out);
+                        }
+                        MeasuredInputs::F64 { a, b, c } => {
+                            let out = kernel::gemm_f64_tuned_rows(
+                                n, r0, r1, a, b, c, 1.5, 0.5, params);
+                            std::hint::black_box(&out);
+                        }
+                    });
+                }
+            });
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        best.max(1e-9)
+    }
 }
 
 /// Time the real kernel at every point of the space (best-of-`reps`

@@ -123,6 +123,7 @@ fn foreign_fingerprint_falls_back_to_defaults_but_survives_saves() {
         dtype: Precision::F64,
         bucket: 512,
         params: KernelParams::new(8, 8, 8, 1, 1).unwrap(),
+        threads: None,
         gflops: 123.0,
         samples: 9,
     };

@@ -1,0 +1,478 @@
+//! Integration: the streaming client plane — futures, sessions,
+//! completion-order streams and request pipelines over the full serve
+//! layer.
+//!
+//! The invariant under test everywhere: every submission resolves
+//! exactly once, and a session's accounting is EXACT —
+//! `submitted == ok + shed + failed + cancelled` — no matter how
+//! replies, drops, sheds and shutdowns interleave.
+
+use std::time::Duration;
+
+use alpaka_rs::arch::{ArchId, CompilerId};
+use alpaka_rs::client::{NodeResult, Pipeline, Session, SessionConfig,
+                        SessionError, WindowPolicy};
+use alpaka_rs::gemm::Precision;
+use alpaka_rs::serve::{CacheSource, NativeConfig, NativeEngineId,
+                       Serve, ServeConfig, ServeError, ShedPolicy,
+                       WorkItem};
+use alpaka_rs::sim::TuningPoint;
+
+fn knl_point(t: u64) -> WorkItem {
+    WorkItem::point(TuningPoint::cpu(ArchId::Knl, CompilerId::Intel,
+                                     Precision::F64, 1024, t, 1))
+}
+
+/// A slow native artifact (n=256 host GEMM) to saturate a shard.
+const SLOW: &str = "gemm_n256_t16_e1_f32";
+/// A quick one for functional paths.
+const QUICK: &str = "dot_n64_f32";
+
+fn native_serve(cache: usize) -> Serve {
+    Serve::start(ServeConfig {
+        cache_cap: cache,
+        native: Some(NativeConfig::Synthetic(vec![
+            SLOW.to_string(), QUICK.to_string(),
+        ])),
+        native_threads: 2,
+        ..Default::default()
+    }).expect("serve start")
+}
+
+// ---------------------------------------------------------- futures --
+
+#[test]
+fn handle_resolves_before_and_after_wait() {
+    let serve = Serve::start(ServeConfig::default()).unwrap();
+    // resolve BEFORE the wait: submit, give the layer time to serve,
+    // then observe the already-resolved handle
+    let mut h = serve.submit_handle(knl_point(32));
+    std::thread::sleep(Duration::from_millis(50));
+    if h.is_ready() {
+        // non-blocking poll takes the value when it already landed
+        assert_eq!(h.poll().unwrap().unwrap().shard, "sim:knl");
+    } else {
+        assert_eq!(h.recv().unwrap().shard, "sim:knl");
+    }
+    // resolve AFTER the wait: recv blocks until the reply lands
+    let h = serve.submit_handle(knl_point(64));
+    assert_eq!(h.recv().unwrap().shard, "sim:knl");
+    serve.shutdown();
+}
+
+#[test]
+fn handle_wait_timeout_hands_the_handle_back() {
+    let serve = native_serve(0);
+    // occupy the single pjrt worker with slow work, then race a tiny
+    // timeout against a request queued behind it
+    let slow = serve.submit_handle(WorkItem::artifact(SLOW));
+    let queued = serve.submit_handle(WorkItem::artifact(SLOW));
+    match queued.recv_timeout(Duration::from_micros(1)) {
+        Err(handle) => {
+            // timed out pending; the SAME handle keeps working
+            assert!(handle.recv().is_ok());
+        }
+        Ok(r) => panic!("1us cannot serve an n=256 GEMM: {r:?}"),
+    }
+    assert!(slow.recv().is_ok());
+    serve.shutdown();
+}
+
+#[test]
+fn then_chains_across_the_serve_boundary() {
+    let serve = Serve::start(ServeConfig::default()).unwrap();
+    let shard = serve.submit_handle(knl_point(16))
+        .then(|r| r.map(|reply| reply.shard))
+        .wait()
+        .expect("promise never breaks")
+        .expect("sim point serves");
+    assert_eq!(shard, "sim:knl");
+    serve.shutdown();
+}
+
+// --------------------------------------------------------- sessions --
+
+#[test]
+fn session_window_blocks_until_slots_free() {
+    let serve = native_serve(0);
+    let session = Session::open(&serve, SessionConfig {
+        window: 2,
+        on_full: WindowPolicy::Block,
+    });
+    // two slow requests fill the window; the third submit must block
+    // until one completes — prove it by timing
+    let h1 = session.submit(WorkItem::artifact(SLOW)).unwrap();
+    let h2 = session.submit(WorkItem::artifact(SLOW)).unwrap();
+    assert_eq!(session.in_flight(), 2);
+    let t0 = std::time::Instant::now();
+    let h3 = session.submit(WorkItem::artifact(SLOW)).unwrap();
+    assert!(t0.elapsed() > Duration::from_millis(1),
+            "third submit must have waited for a slot");
+    for h in [h1, h2, h3] {
+        assert!(h.recv().is_ok());
+    }
+    let stats = session.close();
+    assert!(stats.fully_accounted());
+    assert_eq!(stats.ok, 3);
+    serve.shutdown();
+}
+
+#[test]
+fn session_window_errors_when_configured_to() {
+    let serve = native_serve(0);
+    let session = Session::open(&serve, SessionConfig {
+        window: 1,
+        on_full: WindowPolicy::Error,
+    });
+    let h1 = session.submit(WorkItem::artifact(SLOW)).unwrap();
+    match session.submit(WorkItem::artifact(QUICK)) {
+        Err(SessionError::WindowFull { in_flight, window }) => {
+            assert_eq!((in_flight, window), (1, 1));
+        }
+        other => panic!("window 1 must refuse: {other:?}"),
+    }
+    assert!(h1.recv().is_ok());
+    // slot free again: accepted now
+    let h2 = session.submit(WorkItem::artifact(QUICK)).unwrap();
+    assert!(h2.recv().is_ok());
+    let stats = session.close();
+    assert!(stats.fully_accounted());
+    assert_eq!(stats.submitted, 2, "refused submits are not counted");
+    serve.shutdown();
+}
+
+#[test]
+fn stream_yields_completion_order_not_submission_order() {
+    // Two named native shards: SLOW on the (serial) pjrt shard, QUICK
+    // on the threadpool shard. Submitted slow-first within one window,
+    // the quick one must COMPLETE first — the stream yields it first.
+    let serve = native_serve(0);
+    let session = Session::open(&serve, SessionConfig {
+        window: 4,
+        on_full: WindowPolicy::Block,
+    });
+    let items = vec![
+        WorkItem::artifact(SLOW), // index 0, slow shard
+        WorkItem::artifact_on(QUICK, NativeEngineId::Threadpool),
+    ];
+    let order: Vec<usize> = session.submit_stream(items)
+        .map(|(idx, r)| {
+            r.expect("both serve");
+            idx
+        })
+        .collect();
+    assert_eq!(order, vec![1, 0],
+               "quick request resolves before the slow one");
+    let stats = session.close();
+    assert_eq!(stats.ok, 2);
+    assert!(stats.fully_accounted());
+    serve.shutdown();
+}
+
+#[test]
+fn stream_respects_the_window_while_pipelining() {
+    let serve = native_serve(32);
+    let session = Session::open(&serve, SessionConfig {
+        window: 3,
+        on_full: WindowPolicy::Block,
+    });
+    let items: Vec<WorkItem> =
+        (0..12).map(|_| WorkItem::artifact(QUICK)).collect();
+    let mut seen = 0;
+    for (_, r) in session.submit_stream(items) {
+        assert!(r.is_ok());
+        assert!(session.in_flight() <= 3,
+                "window must bound in-flight work");
+        seen += 1;
+    }
+    assert_eq!(seen, 12);
+    let stats = session.close();
+    assert_eq!(stats.ok, 12);
+    assert!(stats.fully_accounted());
+    serve.shutdown();
+}
+
+#[test]
+fn drain_on_close_loses_nothing_across_sessions() {
+    // Zero-loss drain: several sessions submit concurrently, close()
+    // must account every single request.
+    let serve = native_serve(32);
+    std::thread::scope(|scope| {
+        for _ in 0..4 {
+            let serve = &serve;
+            scope.spawn(move || {
+                let session = Session::open(serve, SessionConfig {
+                    window: 2,
+                    on_full: WindowPolicy::Block,
+                });
+                let mut handles = Vec::new();
+                for i in 0..10 {
+                    let item = if i % 2 == 0 {
+                        WorkItem::artifact(QUICK)
+                    } else {
+                        knl_point(16 << (i % 3))
+                    };
+                    handles.push(session.submit(item).unwrap());
+                }
+                // deliberately do NOT recv: close() itself must drain
+                drop(handles); // half-read? no — all dropped pending
+                let stats = session.close();
+                assert!(stats.fully_accounted(), "{stats:?}");
+                assert_eq!(stats.submitted, 10);
+                assert_eq!(stats.ok + stats.cancelled, 10,
+                           "no shed policy, no failures: {stats:?}");
+            });
+        }
+    });
+    serve.shutdown();
+}
+
+#[test]
+fn two_session_fairness_under_a_saturated_shard() {
+    // A greedy session (large window, many requests) and a modest one
+    // (window 1) share one slow serial shard. Fairness here means: the
+    // modest session finishes its small batch LONG before the greedy
+    // session's tail, and both account exactly. Per-session tallies
+    // must surface in the unified summary.
+    let serve = native_serve(0);
+    let (modest_done, greedy_done) = std::thread::scope(|scope| {
+        let serve_ref = &serve;
+        let greedy = scope.spawn(move || {
+            let session = Session::open(serve_ref, SessionConfig {
+                window: 0, // unbounded: as greedy as it gets
+                on_full: WindowPolicy::Block,
+            });
+            let items: Vec<WorkItem> =
+                (0..16).map(|_| WorkItem::artifact(SLOW)).collect();
+            let t0 = std::time::Instant::now();
+            let mut handles = Vec::new();
+            for item in items {
+                handles.push(session.submit(item).unwrap());
+            }
+            for h in handles {
+                h.recv().expect("serves");
+            }
+            let stats = session.close();
+            assert!(stats.fully_accounted());
+            assert_eq!(stats.ok, 16);
+            t0.elapsed()
+        });
+        // let the greedy session pile its burst up first
+        std::thread::sleep(Duration::from_millis(20));
+        let modest = scope.spawn(move || {
+            let session = Session::open(serve_ref, SessionConfig {
+                window: 1,
+                on_full: WindowPolicy::Block,
+            });
+            let t0 = std::time::Instant::now();
+            for _ in 0..2 {
+                session.submit(WorkItem::artifact(SLOW)).unwrap()
+                    .recv().expect("serves");
+            }
+            let stats = session.close();
+            assert!(stats.fully_accounted());
+            assert_eq!(stats.ok, 2);
+            t0.elapsed()
+        });
+        (modest.join().unwrap(), greedy.join().unwrap())
+    });
+    // both finished; the modest session must not have waited for the
+    // greedy session's whole backlog (16 slow GEMMs) — generous 2x
+    // margin so scheduler noise cannot flake this
+    assert!(modest_done < greedy_done * 2,
+            "modest {modest_done:?} vs greedy {greedy_done:?}");
+    let tallies = serve.metrics.session_tallies();
+    assert_eq!(tallies.len(), 2, "{tallies:?}");
+    assert!(serve.summary().contains("sessions"), "{}",
+            serve.summary());
+    serve.shutdown();
+}
+
+// -------------------------------------------------------- pipelines --
+
+#[test]
+fn pipeline_chains_and_serves_in_dependency_order() {
+    let serve = native_serve(0);
+    let session = Session::open(&serve, SessionConfig::default());
+    let mut p = Pipeline::new();
+    let ab = p.node(WorkItem::artifact(QUICK), &[]);
+    let abc = p.node(
+        WorkItem::artifact_on(QUICK, NativeEngineId::Threadpool),
+        &[ab]);
+    let d = p.node(WorkItem::artifact(QUICK), &[abc]);
+    let out = p.run(&session);
+    assert!(out.all_ok(), "{:?}", out.results);
+    assert_eq!(out.ok_count(), 3);
+    match out.result(d) {
+        NodeResult::Ok(reply) => assert_eq!(reply.shard, "native:pjrt"),
+        other => panic!("unexpected {other:?}"),
+    }
+    let stats = session.close();
+    assert_eq!(stats.ok, 3);
+    assert!(stats.fully_accounted());
+    serve.shutdown();
+}
+
+#[test]
+fn pipeline_failure_propagates_root_cause_to_all_descendants() {
+    // Parent A is SHED (quota 0 rejects everything); B and C depend on
+    // it, D depends on C: all three must fail with A as the root cause
+    // — and none of them may ever submit (the session counts exactly
+    // one submission). Sibling E is independent and must still serve…
+    // except quota 0 sheds it too, so run two pipelines: one against a
+    // shedding layer for propagation, one healthy for the sibling.
+    let serve = Serve::start(ServeConfig {
+        shed: ShedPolicy::RejectOverQuota,
+        shard_quota: Some(0),
+        native: Some(NativeConfig::Synthetic(vec![QUICK.to_string()])),
+        ..Default::default()
+    }).unwrap();
+    let session = Session::open(&serve, SessionConfig::default());
+    let mut p = Pipeline::new();
+    let a = p.node(WorkItem::artifact(QUICK), &[]);
+    let b = p.node(WorkItem::artifact(QUICK), &[a]);
+    let c = p.node(WorkItem::artifact(QUICK), &[a]);
+    let d = p.node(WorkItem::artifact(QUICK), &[b, c]);
+    let out = p.run(&session);
+    match out.result(a) {
+        NodeResult::Failed(ServeError::Overloaded { .. }) => {}
+        other => panic!("parent must be shed: {other:?}"),
+    }
+    for id in [b, c, d] {
+        match out.result(id) {
+            NodeResult::Skipped { root, cause } => {
+                assert_eq!(*root, a, "root cause is the SHED ancestor");
+                assert!(matches!(cause,
+                                 ServeError::Overloaded { .. }),
+                        "{cause:?}");
+            }
+            other => panic!("descendant must be skipped: {other:?}"),
+        }
+    }
+    let stats = session.close();
+    assert_eq!(stats.submitted, 1,
+               "descendants of a failed parent never submit");
+    assert_eq!(stats.shed, 1);
+    assert!(stats.fully_accounted());
+    serve.shutdown();
+}
+
+#[test]
+fn pipeline_never_hangs_on_wide_failure() {
+    // A wider DAG where the failure hits mid-graph: diamond over two
+    // roots, one root fine, the other's whole subtree dead. run() must
+    // return (bounded time is enforced by the test harness timeout)
+    // with every node settled.
+    let serve = Serve::start(ServeConfig {
+        native: Some(NativeConfig::Synthetic(vec![QUICK.to_string()])),
+        ..Default::default()
+    }).unwrap();
+    let session = Session::open(&serve, SessionConfig::default());
+    let mut p = Pipeline::new();
+    let good = p.node(WorkItem::artifact(QUICK), &[]);
+    // unknown artifact: the backend fails it explicitly
+    let bad = p.node(WorkItem::artifact("dot_n32_f64"), &[]);
+    let child_good = p.node(WorkItem::artifact(QUICK), &[good]);
+    let child_bad = p.node(WorkItem::artifact(QUICK), &[bad]);
+    let join = p.node(WorkItem::artifact(QUICK),
+                      &[child_good, child_bad]);
+    let out = p.run(&session);
+    assert!(matches!(out.result(good), NodeResult::Ok(_)));
+    assert!(matches!(out.result(child_good), NodeResult::Ok(_)));
+    assert!(matches!(out.result(bad), NodeResult::Failed(_)));
+    for id in [child_bad, join] {
+        match out.result(id) {
+            NodeResult::Skipped { root, .. } => assert_eq!(*root, bad),
+            other => panic!("must be skipped: {other:?}"),
+        }
+    }
+    let stats = session.close();
+    assert!(stats.fully_accounted());
+    assert_eq!(stats.submitted, 3, "good, bad, child_good only");
+    serve.shutdown();
+}
+
+// ------------------------------------------------- end-to-end (E2E) --
+
+#[test]
+fn e2e_pipeline_and_stream_with_online_tuning_and_drop() {
+    // The acceptance scenario: a session runs a 3-node chained-GEMM
+    // pipeline plus a stream of independent requests over the full
+    // serve layer with ONLINE TUNING active; all replies resolve in
+    // completion order with digest-checked results (the threadpool
+    // shard oracle-verifies every run — Ok IS the digest check), the
+    // per-session fairness tallies appear in Serve::summary(), and a
+    // handle dropped mid-run leaves the accounting exact:
+    // submitted == ok + shed + failed + cancelled.
+    let serve = Serve::start(ServeConfig {
+        cache_cap: 16,
+        native: Some(NativeConfig::Synthetic(vec![
+            QUICK.to_string(), "gemm_n64_t16_e1_f64".to_string(),
+        ])),
+        native_threads: 2,
+        online_tune: true,
+        tune_budget: 2,
+        tune_reps: 1,
+        ..Default::default()
+    }).unwrap();
+    let session = Session::open(&serve, SessionConfig {
+        window: 4,
+        on_full: WindowPolicy::Block,
+    });
+
+    // 3-node chained GEMMs across both native shards
+    let mut p = Pipeline::new();
+    let ab = p.node(WorkItem::artifact("gemm_n64_t16_e1_f64"), &[]);
+    let abc = p.node(
+        WorkItem::artifact_on("gemm_n64_t16_e1_f64",
+                              NativeEngineId::Threadpool),
+        &[ab]);
+    let _d = p.node(
+        WorkItem::artifact_on(QUICK, NativeEngineId::Threadpool),
+        &[abc]);
+    let out = p.run(&session);
+    assert!(out.all_ok(), "{:?}", out.results);
+
+    // a stream of independent requests, replies in completion order
+    let items: Vec<WorkItem> = (0..8)
+        .map(|i| if i % 2 == 0 {
+            WorkItem::artifact(QUICK)
+        } else {
+            WorkItem::artifact_on(QUICK, NativeEngineId::Threadpool)
+        })
+        .collect();
+    let mut yielded = 0;
+    for (_, r) in session.submit_stream(items) {
+        let reply = r.expect("stream serves");
+        assert!(reply.cache_src == CacheSource::Miss
+                || reply.cache_src == CacheSource::Mem);
+        yielded += 1;
+    }
+    assert_eq!(yielded, 8);
+
+    // drop a pending handle mid-run (slow enough to still be pending)
+    let dropped = session.submit(
+        WorkItem::artifact("gemm_n64_t16_e1_f64")).unwrap();
+    drop(dropped);
+
+    session.drain();
+    let stats = session.stats();
+    assert!(stats.fully_accounted(),
+            "submitted == ok + shed + failed + cancelled: {stats:?}");
+    assert_eq!(stats.submitted, 3 + 8 + 1);
+    assert_eq!(stats.shed + stats.failed, 0, "{stats:?}");
+
+    // per-session fairness tallies in the unified summary
+    let summary = serve.summary();
+    assert!(summary.contains("sessions"), "{summary}");
+    assert!(summary.contains(&format!("s{}=", session.id())),
+            "{summary}");
+
+    // online tuning ran alongside (the layer holds a store; whether a
+    // commit landed already is timing-dependent, but the machinery
+    // must be live)
+    assert!(serve.tuning_store().is_some());
+    let stats = session.close();
+    assert!(stats.fully_accounted());
+    serve.shutdown();
+}

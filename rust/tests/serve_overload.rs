@@ -165,3 +165,67 @@ fn mixed_run_routes_to_both_named_native_shards_concurrently() {
             "{:?}", out.per_engine);
     serve.shutdown();
 }
+
+#[test]
+fn shutdown_with_pending_dropped_handles_accounts_exactly() {
+    // Cancellation/drop stress: a session floods the slow single-worker
+    // shard, DROPS half of its pending handles mid-flight, and the
+    // layer shuts down underneath the rest. Nothing may hang, nothing
+    // may leak: the session's final accounting must satisfy
+    // submitted == ok + shed + failed + cancelled exactly, with every
+    // dropped-pending handle in the cancelled bucket (the serve layer
+    // still runs each reply closure exactly once — a dropped handle
+    // must not strand the dispatcher's overflow buffers or the shard
+    // queue drain).
+    use alpaka_rs::client::{Session, SessionConfig, WindowPolicy};
+
+    let serve = overloadable(ShedPolicy::None, None);
+    let session = Session::open(&serve, SessionConfig {
+        window: 0, // unbounded: pile everything onto the slow shard
+        on_full: WindowPolicy::Block,
+    });
+    const TOTAL: usize = 24;
+    let mut kept = Vec::new();
+    for i in 0..TOTAL {
+        let handle = session.submit(WorkItem::artifact(SLOW))
+            .expect("open session");
+        if i % 2 == 0 {
+            drop(handle); // cancel: reply will arrive, nobody watches
+        } else {
+            kept.push(handle);
+        }
+    }
+    assert_eq!(session.stats().submitted as usize, TOTAL);
+    // stop admission while (almost) everything is still pending; the
+    // queued work must drain and reply — including to the closures
+    // whose handles are gone
+    serve.close();
+    // a post-close submission through the same session fails
+    // EXPLICITLY through its handle (and lands in the failed bucket)
+    let late = session.submit(WorkItem::artifact(SLOW))
+        .expect("session itself is still open");
+    assert!(matches!(late.recv(), Err(ServeError::Closed)));
+    // kept handles all resolve explicitly — never a hang, never a
+    // disconnect (they were admitted before the close, so they serve)
+    let mut ok = 0usize;
+    for h in kept {
+        match h.recv() {
+            Ok(_) => ok += 1,
+            Err(e) => panic!("admitted pre-close, must serve: {e}"),
+        }
+    }
+    assert_eq!(ok, TOTAL / 2);
+    // the session saw every reply: exact accounting, dropped handles
+    // counted as cancelled (they were pending when dropped)
+    let stats = session.close();
+    assert!(stats.fully_accounted(), "leak: {stats:?}");
+    assert_eq!(stats.submitted as usize, TOTAL + 1);
+    assert_eq!(stats.cancelled as usize, TOTAL / 2,
+               "every dropped-pending handle counts cancelled: \
+                {stats:?}");
+    assert_eq!(stats.ok as usize, TOTAL / 2, "{stats:?}");
+    assert_eq!(stats.failed, 1, "the post-close submission: {stats:?}");
+    assert_eq!(stats.shed, 0, "no shed policy configured: {stats:?}");
+    // full shutdown joins cleanly with nothing stranded
+    serve.shutdown();
+}
