@@ -1,0 +1,425 @@
+//! Minimal Rust lexer for `pallas-lint` — tokens with line spans,
+//! comments collected separately (for `// pallas-lint: allow(...)`
+//! directives), string/char/lifetime literals recognised so rule
+//! pattern matching never fires inside quoted text.
+//!
+//! Deliberately NOT a full lexer: no keyword table (keywords are just
+//! idents — the rules match them by name), numbers are approximate
+//! (`1e-3` lexes as three tokens), and `<`/`>` are plain puncts (angle
+//! brackets cannot be bracket-matched without parsing). What it does
+//! guarantee is what the rules need: comment and string interiors are
+//! stripped from the token stream (including nested block comments,
+//! raw strings `r#"…"#` and byte strings), every token knows its
+//! 1-based source line, and `(` `)` `[` `]` `{` `}` survive exactly as
+//! written so brace matching is sound.
+
+/// Token class. `Punct` is a single character; multi-char operators
+/// (`::`, `=>`, `..`) are matched by the rules as adjacent puncts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Num,
+    Str,
+    Char,
+    Lifetime,
+    Punct,
+}
+
+/// One token with its 1-based source line.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+/// One comment (line or block), interior text only, at its starting
+/// line — the allow-directive parser walks these.
+#[derive(Debug, Clone)]
+pub struct Comment {
+    pub line: u32,
+    pub text: String,
+}
+
+/// A lexed source file.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub comments: Vec<Comment>,
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_ascii_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Lex `src`. Never fails: unterminated strings/comments consume to
+/// EOF (the linter reports on what it could see — a file this broken
+/// will not compile anyway).
+pub fn lex(src: &str) -> Lexed {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut out = Lexed::default();
+    let mut line: u32 = 1;
+    let mut i = 0;
+
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // ---- comments -------------------------------------------------
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            let start = i + 2;
+            let mut j = start;
+            while j < n && b[j] != '\n' {
+                j += 1;
+            }
+            out.comments.push(Comment {
+                line,
+                text: b[start..j].iter().collect(),
+            });
+            i = j;
+            continue;
+        }
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let l0 = line;
+            let start = i + 2;
+            let mut depth = 1usize;
+            let mut j = start;
+            while j < n && depth > 0 {
+                if b[j] == '\n' {
+                    line += 1;
+                    j += 1;
+                } else if b[j] == '/' && j + 1 < n && b[j + 1] == '*' {
+                    depth += 1;
+                    j += 2;
+                } else if b[j] == '*' && j + 1 < n && b[j + 1] == '/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            let end = if depth == 0 { j - 2 } else { j }.max(start);
+            out.comments.push(Comment {
+                line: l0,
+                text: b[start..end].iter().collect(),
+            });
+            i = j;
+            continue;
+        }
+        // ---- raw / byte string prefixes -------------------------------
+        // r"…", r#"…"#, b"…", br#"…"#, b'…'. A plain `r`/`b` ident
+        // falls through to ident lexing below.
+        if c == 'r' || c == 'b' {
+            let mut j = i + 1;
+            let mut raw = c == 'r';
+            if c == 'b' && j < n && b[j] == 'r' {
+                raw = true;
+                j += 1;
+            }
+            if c == 'b' && j < n && b[j] == '\'' {
+                // byte char literal b'x' / b'\n'
+                let (tok, nl, ni) = lex_char_body(&b, j, line);
+                out.toks.push(tok);
+                line = nl;
+                i = ni;
+                continue;
+            }
+            let mut hashes = 0usize;
+            if raw {
+                while j < n && b[j] == '#' {
+                    hashes += 1;
+                    j += 1;
+                }
+            }
+            if j < n && b[j] == '"' && (raw || c == 'b') {
+                let l0 = line;
+                let (text, nl, ni) = if raw {
+                    lex_raw_string(&b, j + 1, hashes, line)
+                } else {
+                    lex_escaped_string(&b, j + 1, line)
+                };
+                out.toks.push(Tok { kind: TokKind::Str, text, line: l0 });
+                line = nl;
+                i = ni;
+                continue;
+            }
+            if c == 'r' && i + 1 < n && b[i + 1] == '#' && i + 2 < n
+                && is_ident_start(b[i + 2])
+            {
+                // raw identifier r#ident
+                let mut j = i + 2;
+                while j < n && is_ident_continue(b[j]) {
+                    j += 1;
+                }
+                out.toks.push(Tok {
+                    kind: TokKind::Ident,
+                    text: b[i + 2..j].iter().collect(),
+                    line,
+                });
+                i = j;
+                continue;
+            }
+            // fall through: plain ident starting with r/b
+        }
+        // ---- plain strings --------------------------------------------
+        if c == '"' {
+            let l0 = line;
+            let (text, nl, ni) = lex_escaped_string(&b, i + 1, line);
+            out.toks.push(Tok { kind: TokKind::Str, text, line: l0 });
+            line = nl;
+            i = ni;
+            continue;
+        }
+        // ---- char literal vs lifetime ---------------------------------
+        if c == '\'' {
+            let escaped = i + 1 < n && b[i + 1] == '\\';
+            let plain_char = i + 2 < n && b[i + 2] == '\''
+                && b[i + 1] != '\'' && b[i + 1] != '\\';
+            if escaped || plain_char {
+                let (tok, nl, ni) = lex_char_body(&b, i, line);
+                out.toks.push(tok);
+                line = nl;
+                i = ni;
+                continue;
+            }
+            // lifetime: 'ident (or the bare '_ placeholder)
+            let mut j = i + 1;
+            while j < n && is_ident_continue(b[j]) {
+                j += 1;
+            }
+            out.toks.push(Tok {
+                kind: TokKind::Lifetime,
+                text: b[i + 1..j].iter().collect(),
+                line,
+            });
+            i = j.max(i + 1);
+            continue;
+        }
+        // ---- idents ---------------------------------------------------
+        if is_ident_start(c) {
+            let mut j = i + 1;
+            while j < n && is_ident_continue(b[j]) {
+                j += 1;
+            }
+            out.toks.push(Tok {
+                kind: TokKind::Ident,
+                text: b[i..j].iter().collect(),
+                line,
+            });
+            i = j;
+            continue;
+        }
+        // ---- numbers --------------------------------------------------
+        if c.is_ascii_digit() {
+            let mut j = i + 1;
+            while j < n
+                && (is_ident_continue(b[j])
+                    || (b[j] == '.'
+                        && j + 1 < n
+                        && b[j + 1].is_ascii_digit()))
+            {
+                j += 1;
+            }
+            out.toks.push(Tok {
+                kind: TokKind::Num,
+                text: b[i..j].iter().collect(),
+                line,
+            });
+            i = j;
+            continue;
+        }
+        // ---- punctuation ----------------------------------------------
+        out.toks.push(Tok {
+            kind: TokKind::Punct,
+            text: c.to_string(),
+            line,
+        });
+        i += 1;
+    }
+    out
+}
+
+/// Body of a char literal starting at the opening `'` (index `q`).
+/// Returns the token, the updated line, and the index past the
+/// closing quote.
+fn lex_char_body(b: &[char], q: usize, mut line: u32)
+                 -> (Tok, u32, usize) {
+    let n = b.len();
+    let l0 = line;
+    let mut j = q + 1;
+    while j < n {
+        match b[j] {
+            '\\' => j += 2,
+            '\'' => {
+                j += 1;
+                break;
+            }
+            '\n' => {
+                line += 1;
+                j += 1;
+            }
+            _ => j += 1,
+        }
+    }
+    let text: String = b[q + 1..(j.saturating_sub(1)).max(q + 1)]
+        .iter().collect();
+    (Tok { kind: TokKind::Char, text, line: l0 }, line, j.min(n))
+}
+
+/// Interior of a `"…"` string starting just past the opening quote.
+/// Returns (interior text, updated line, index past the closing
+/// quote).
+fn lex_escaped_string(b: &[char], start: usize, mut line: u32)
+                      -> (String, u32, usize) {
+    let n = b.len();
+    let mut j = start;
+    while j < n {
+        match b[j] {
+            '\\' => j += 2,
+            '"' => break,
+            '\n' => {
+                line += 1;
+                j += 1;
+            }
+            _ => j += 1,
+        }
+    }
+    let text: String = b[start..j.min(n)].iter().collect();
+    (text, line, (j + 1).min(n))
+}
+
+/// Interior of a raw string `r#…"…"#…` starting just past the opening
+/// quote, closed by `"` followed by `hashes` `#`s.
+fn lex_raw_string(b: &[char], start: usize, hashes: usize, mut line: u32)
+                  -> (String, u32, usize) {
+    let n = b.len();
+    let mut j = start;
+    while j < n {
+        if b[j] == '\n' {
+            line += 1;
+            j += 1;
+            continue;
+        }
+        if b[j] == '"' {
+            let mut k = j + 1;
+            let mut seen = 0usize;
+            while k < n && seen < hashes && b[k] == '#' {
+                seen += 1;
+                k += 1;
+            }
+            if seen == hashes {
+                let text: String = b[start..j].iter().collect();
+                return (text, line, k);
+            }
+        }
+        j += 1;
+    }
+    (b[start..n].iter().collect(), line, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn texts(src: &str) -> Vec<String> {
+        lex(src).toks.into_iter().map(|t| t.text).collect()
+    }
+
+    #[test]
+    fn idents_puncts_and_lines() {
+        let l = lex("fn f() {\n  x.lock()\n}\n");
+        let kinds: Vec<_> = l.toks.iter()
+            .map(|t| (t.text.as_str().to_string(), t.line)).collect();
+        assert_eq!(kinds[0], ("fn".to_string(), 1));
+        let lock = l.toks.iter().find(|t| t.text == "lock").unwrap();
+        assert_eq!(lock.line, 2);
+        assert_eq!(lock.kind, TokKind::Ident);
+    }
+
+    #[test]
+    fn comments_are_collected_not_tokenised() {
+        let l = lex("a // pallas-lint: allow(R2, why)\nb /* x\n y */ c");
+        assert_eq!(l.toks.iter().map(|t| t.text.as_str())
+                   .collect::<Vec<_>>(), vec!["a", "b", "c"]);
+        assert_eq!(l.comments.len(), 2);
+        assert!(l.comments[0].text.contains("pallas-lint"));
+        assert_eq!(l.comments[0].line, 1);
+        assert_eq!(l.comments[1].line, 2);
+        // token after the multi-line block comment is on line 3
+        assert_eq!(l.toks[2].line, 3);
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let l = lex("a /* outer /* inner */ still */ b");
+        assert_eq!(l.toks.iter().map(|t| t.text.as_str())
+                   .collect::<Vec<_>>(), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn strings_hide_their_interior() {
+        // an unwrap inside a string literal must not become tokens
+        let l = lex(r#"let s = ".lock().unwrap()"; done"#);
+        assert!(!l.toks.iter().any(|t| t.text == "unwrap"));
+        assert!(l.toks.iter().any(|t| t.text == "done"));
+        let s = l.toks.iter().find(|t| t.kind == TokKind::Str).unwrap();
+        assert_eq!(s.text, ".lock().unwrap()");
+    }
+
+    #[test]
+    fn raw_and_byte_strings() {
+        let l = lex("r#\"has \"quotes\" inside\"# b\"bytes\" after");
+        let strs: Vec<_> = l.toks.iter()
+            .filter(|t| t.kind == TokKind::Str)
+            .map(|t| t.text.as_str()).collect();
+        assert_eq!(strs, vec!["has \"quotes\" inside", "bytes"]);
+        assert!(l.toks.iter().any(|t| t.text == "after"));
+    }
+
+    #[test]
+    fn char_vs_lifetime() {
+        let l = lex("let c = 'x'; let n = '\\n'; fn f<'a>(v: &'a u8) {}");
+        let chars: Vec<_> = l.toks.iter()
+            .filter(|t| t.kind == TokKind::Char)
+            .map(|t| t.text.as_str()).collect();
+        assert_eq!(chars, vec!["x", "\\n"]);
+        let lifetimes: Vec<_> = l.toks.iter()
+            .filter(|t| t.kind == TokKind::Lifetime)
+            .map(|t| t.text.as_str()).collect();
+        assert_eq!(lifetimes, vec!["a", "a"]);
+    }
+
+    #[test]
+    fn escaped_quote_in_string() {
+        let l = lex(r#"let s = "a \" b"; x"#);
+        let s = l.toks.iter().find(|t| t.kind == TokKind::Str).unwrap();
+        assert_eq!(s.text, r#"a \" b"#);
+        assert!(l.toks.iter().any(|t| t.text == "x"));
+    }
+
+    #[test]
+    fn numbers_do_not_eat_ranges() {
+        assert_eq!(texts("0..n"), vec!["0", ".", ".", "n"]);
+        assert!(texts("1.5e3").contains(&"1.5e3".to_string()));
+    }
+
+    #[test]
+    fn raw_identifier() {
+        let l = lex("r#fn x");
+        assert_eq!(l.toks[0].text, "fn");
+        assert_eq!(l.toks[0].kind, TokKind::Ident);
+        assert_eq!(l.toks[1].text, "x");
+    }
+}

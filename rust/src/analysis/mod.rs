@@ -1,0 +1,450 @@
+//! `pallas-lint`: a self-hosted static analyzer that machine-checks
+//! the serve layer's concurrency and accounting contracts.
+//!
+//! The crate's correctness conventions — counted sheds, poisoned-lock
+//! degradation, guard-free blocking, metrics completeness, detected
+//! target features — live at seams the compiler does not check. This
+//! subsystem walks the crate's own sources (zero dependencies, pure
+//! `std`: own lexer + lightweight scanner, no full parser) and
+//! enforces them as deny-by-default diagnostics with `file:line`
+//! spans and a machine-readable JSON report. See [`rules`] for the
+//! five invariants (R1–R5) and the crate docs for their rationale.
+//!
+//! Intentional exceptions are suppressed inline and audited:
+//!
+//! ```text
+//! // pallas-lint: allow(R1, workers contend for the shared Receiver)
+//! ```
+//!
+//! A directive covers its own line and the next; a directive without
+//! a reason (or naming an unknown rule) is itself a diagnostic
+//! (`LINT`) and suppresses nothing. Only plain `//` / `/* */`
+//! comments carry directives — doc comments merely *document* them
+//! (as the block above just did) and are never parsed. Entry points: [`lint_tree`] for
+//! the standard `rust/src` + `examples` walk, [`lint_files`] for an
+//! explicit file set (fixtures, tests).
+
+pub mod lexer;
+pub mod rules;
+pub mod scanner;
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use lexer::{lex, Comment};
+use rules::{FileCtx, TargetFeatureDecl};
+
+/// Rule identifiers (also the keys of the JSON `counts` object).
+pub const R1: &str = "R1";
+pub const R2: &str = "R2";
+pub const R3: &str = "R3";
+pub const R4: &str = "R4";
+pub const R5: &str = "R5";
+/// Meta-rule: a malformed `pallas-lint:` directive.
+pub const LINT: &str = "LINT";
+
+const KNOWN_RULES: &[&str] = &[R1, R2, R3, R4, R5];
+
+/// One finding, pinned to a source line.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    pub rule: &'static str,
+    /// Root-relative path with `/` separators.
+    pub file: String,
+    pub line: u32,
+    pub message: String,
+}
+
+/// One well-formed `// pallas-lint: allow(RULE, reason)` directive.
+#[derive(Debug, Clone)]
+pub struct AllowRecord {
+    pub rule: String,
+    pub file: String,
+    pub line: u32,
+    pub reason: String,
+    /// Whether the directive actually suppressed a diagnostic.
+    pub used: bool,
+}
+
+/// The result of linting a file set.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub files: usize,
+    pub diagnostics: Vec<Diagnostic>,
+    pub allows: Vec<AllowRecord>,
+}
+
+impl Report {
+    /// No diagnostics survived suppression.
+    pub fn is_clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    /// Per-rule diagnostic counts (all known rules present, plus
+    /// `LINT`, so the JSON shape is stable).
+    pub fn counts(&self) -> BTreeMap<&'static str, usize> {
+        let mut m: BTreeMap<&'static str, usize> = KNOWN_RULES
+            .iter()
+            .chain(std::iter::once(&LINT))
+            .map(|r| (*r, 0))
+            .collect();
+        for d in &self.diagnostics {
+            *m.entry(d.rule).or_insert(0) += 1;
+        }
+        m
+    }
+
+    /// Human-readable report: one `file:line RULE: message` per
+    /// diagnostic, then a one-line tally.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for d in &self.diagnostics {
+            out.push_str(&format!("{}:{} {}: {}\n",
+                                  d.file, d.line, d.rule, d.message));
+        }
+        let used = self.allows.iter().filter(|a| a.used).count();
+        out.push_str(&format!(
+            "pallas-lint: {} diagnostic(s), {} allow(s) ({} used) \
+             across {} file(s)\n",
+            self.diagnostics.len(), self.allows.len(), used,
+            self.files));
+        out
+    }
+
+    /// Machine-readable report (deterministic key order).
+    pub fn to_json(&self) -> String {
+        use crate::autotune::store::escape;
+        let counts = self
+            .counts()
+            .iter()
+            .map(|(r, n)| format!("{}:{}", escape(r), n))
+            .collect::<Vec<_>>()
+            .join(",");
+        let diags = self
+            .diagnostics
+            .iter()
+            .map(|d| {
+                format!(
+                    "{{\"rule\":{},\"file\":{},\"line\":{},\
+                     \"message\":{}}}",
+                    escape(d.rule), escape(&d.file), d.line,
+                    escape(&d.message))
+            })
+            .collect::<Vec<_>>()
+            .join(",");
+        let allows = self
+            .allows
+            .iter()
+            .map(|a| {
+                format!(
+                    "{{\"rule\":{},\"file\":{},\"line\":{},\
+                     \"reason\":{},\"used\":{}}}",
+                    escape(&a.rule), escape(&a.file), a.line,
+                    escape(&a.reason), a.used)
+            })
+            .collect::<Vec<_>>()
+            .join(",");
+        format!(
+            "{{\"schema\":1,\"clean\":{},\"files\":{},\
+             \"counts\":{{{}}},\"diagnostics\":[{}],\
+             \"allows\":[{}]}}\n",
+            self.is_clean(), self.files, counts, diags, allows)
+    }
+}
+
+/// Parse one comment as a `pallas-lint:` directive.
+/// `None` — not a directive; `Some(Err(msg))` — malformed (becomes a
+/// `LINT` diagnostic); `Some(Ok((rule, reason)))` — well-formed.
+fn parse_directive(text: &str)
+                   -> Option<Result<(String, String), String>> {
+    let rest = text.split_once("pallas-lint:")?.1.trim();
+    let Some(inner) = rest
+        .strip_prefix("allow(")
+        .and_then(|r| r.rfind(')').map(|e| &r[..e]))
+    else {
+        return Some(Err(format!(
+            "unrecognised pallas-lint directive `{}` — expected \
+             `allow(RULE, reason)`",
+            rest)));
+    };
+    let Some((rule, reason)) = inner.split_once(',') else {
+        return Some(Err(format!(
+            "allow({}) without a reason — every suppression must \
+             explain itself: `allow(RULE, reason)`",
+            inner.trim())));
+    };
+    let (rule, reason) = (rule.trim(), reason.trim());
+    if !KNOWN_RULES.contains(&rule) {
+        return Some(Err(format!(
+            "allow names unknown rule `{}` (known: {})",
+            rule,
+            KNOWN_RULES.join(", "))));
+    }
+    if reason.is_empty() {
+        return Some(Err(format!(
+            "allow({rule}) with an empty reason — every suppression \
+             must explain itself")));
+    }
+    Some(Ok((rule.to_string(), reason.to_string())))
+}
+
+/// Extract allow records + directive-error diagnostics from a file's
+/// comments. Doc comments (`///`, `//!`, `/** */`, `/*! */`) are
+/// documentation, not directives — they may legitimately *describe*
+/// the `pallas-lint:` syntax (this module does) and are skipped.
+fn scan_directives(path: &str, comments: &[Comment])
+                   -> (Vec<AllowRecord>, Vec<Diagnostic>) {
+    let mut allows = Vec::new();
+    let mut errs = Vec::new();
+    for c in comments {
+        if matches!(c.text.chars().next(), Some('/' | '!' | '*')) {
+            continue;
+        }
+        match parse_directive(&c.text) {
+            None => {}
+            Some(Ok((rule, reason))) => allows.push(AllowRecord {
+                rule,
+                file: path.to_string(),
+                line: c.line,
+                reason,
+                used: false,
+            }),
+            Some(Err(msg)) => errs.push(Diagnostic {
+                rule: LINT,
+                file: path.to_string(),
+                line: c.line,
+                message: msg,
+            }),
+        }
+    }
+    (allows, errs)
+}
+
+/// Lint an explicit set of files. `root` anchors the relative paths
+/// reported in diagnostics (and the R2 path scope); files outside
+/// `root` keep their full path.
+pub fn lint_files(root: &Path, files: &[PathBuf])
+                  -> Result<Report, String> {
+    struct Loaded {
+        rel: String,
+        lexed: lexer::Lexed,
+    }
+    let mut loaded = Vec::new();
+    for f in files {
+        let src = fs::read_to_string(f)
+            .map_err(|e| format!("{}: {}", f.display(), e))?;
+        let rel = f
+            .strip_prefix(root)
+            .unwrap_or(f)
+            .to_string_lossy()
+            .replace('\\', "/");
+        loaded.push(Loaded { rel, lexed: lex(&src) });
+    }
+    // pass A: cross-file #[target_feature] declarations for R5
+    let mut decls: Vec<TargetFeatureDecl> = Vec::new();
+    for l in &loaded {
+        decls.extend(rules::collect_target_feature_decls(
+            &l.rel, &l.lexed.toks));
+    }
+    // pass B: the rules, then inline suppression
+    let mut report = Report { files: loaded.len(), ..Report::default() };
+    for l in &loaded {
+        let (fns, tests) = FileCtx::derive(&l.lexed.toks);
+        let ctx = FileCtx {
+            path: &l.rel,
+            toks: &l.lexed.toks,
+            fns: &fns,
+            tests: &tests,
+        };
+        let mut raw = Vec::new();
+        rules::r1_lock_across_blocking(&ctx, &mut raw);
+        rules::r2_poisoned_lock_policy(&ctx, &mut raw);
+        rules::r3_counted_shed(&ctx, &mut raw);
+        rules::r4_metrics_summary_completeness(&ctx, &mut raw);
+        rules::r5_target_feature_guard(&ctx, &decls, &mut raw);
+        let (mut allows, errs) =
+            scan_directives(&l.rel, &l.lexed.comments);
+        raw.extend(errs);
+        raw.sort_by_key(|d| d.line);
+        // an allow on line L covers diagnostics on L and L + 1
+        for d in raw {
+            let suppressed = d.rule != LINT
+                && allows.iter_mut().any(|a| {
+                    let hit = a.rule == d.rule
+                        && (d.line == a.line || d.line == a.line + 1);
+                    if hit {
+                        a.used = true;
+                    }
+                    hit
+                });
+            if !suppressed {
+                report.diagnostics.push(d);
+            }
+        }
+        report.allows.append(&mut allows);
+    }
+    report.diagnostics.sort_by(|a, b| {
+        (&a.file, a.line).cmp(&(&b.file, b.line))
+    });
+    Ok(report)
+}
+
+/// Collect `.rs` files under `dir`, recursively, sorted.
+fn rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let rd = fs::read_dir(dir)
+        .map_err(|e| format!("{}: {}", dir.display(), e))?;
+    let mut entries: Vec<PathBuf> =
+        rd.filter_map(|e| e.ok().map(|e| e.path())).collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            rs_files(&p, out)?;
+        } else if p.extension().and_then(|e| e.to_str()) == Some("rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Lint the standard tree: `rust/src` and `examples` under `root`
+/// (the manifest directory).
+pub fn lint_tree(root: &Path) -> Result<Report, String> {
+    let mut files = Vec::new();
+    for sub in ["rust/src", "examples"] {
+        let dir = root.join(sub);
+        if dir.is_dir() {
+            rs_files(&dir, &mut files)?;
+        }
+    }
+    if files.is_empty() {
+        return Err(format!(
+            "no .rs files under {}/rust/src or {}/examples",
+            root.display(), root.display()));
+    }
+    lint_files(root, &files)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn directive_parsing() {
+        assert!(parse_directive("just a comment").is_none());
+        let ok = parse_directive(
+            " pallas-lint: allow(R1, guard hand-off is the point)");
+        assert_eq!(ok, Some(Ok(("R1".to_string(),
+                                "guard hand-off is the point"
+                                    .to_string()))));
+        // reasonless, unknown rule, unrecognised verb: all malformed
+        assert!(matches!(parse_directive(" pallas-lint: allow(R2)"),
+                         Some(Err(_))));
+        assert!(matches!(parse_directive(" pallas-lint: allow(R9, x)"),
+                         Some(Err(_))));
+        assert!(matches!(parse_directive(" pallas-lint: deny(R1)"),
+                         Some(Err(_))));
+        assert!(matches!(parse_directive(" pallas-lint: allow(R2, )"),
+                         Some(Err(_))));
+    }
+
+    #[test]
+    fn doc_comments_never_carry_directives() {
+        // `///`/`//!` text reaches the lexer with a leading `/`/`!`;
+        // describing the syntax in docs must not mint allows or LINT
+        // errors (this very module does so in its own docs).
+        let docs = [
+            Comment { line: 1,
+                      text: "/ use `// pallas-lint: allow(R2, why)`"
+                          .to_string() },
+            Comment { line: 2,
+                      text: "! pallas-lint: allow(RULE, reason)"
+                          .to_string() },
+            Comment { line: 3,
+                      text: "* a malformed `pallas-lint:` directive"
+                          .to_string() },
+        ];
+        let (allows, errs) = scan_directives("x.rs", &docs);
+        assert!(allows.is_empty(), "{allows:?}");
+        assert!(errs.is_empty(), "{errs:?}");
+        // the plain-comment form still parses
+        let plain = [Comment { line: 9,
+                               text: " pallas-lint: allow(R1, hand-off)"
+                                   .to_string() }];
+        let (allows, errs) = scan_directives("x.rs", &plain);
+        assert_eq!(allows.len(), 1);
+        assert!(errs.is_empty());
+    }
+
+    #[test]
+    fn counts_have_stable_keys() {
+        let r = Report::default();
+        let c = r.counts();
+        for rule in ["R1", "R2", "R3", "R4", "R5", "LINT"] {
+            assert_eq!(c.get(rule), Some(&0));
+        }
+    }
+
+    #[test]
+    fn json_shape_is_parseable() {
+        let r = Report {
+            files: 2,
+            diagnostics: vec![Diagnostic {
+                rule: R2,
+                file: "rust/src/serve/mod.rs".to_string(),
+                line: 7,
+                message: "say \"no\"".to_string(),
+            }],
+            allows: vec![AllowRecord {
+                rule: "R1".to_string(),
+                file: "rust/src/util/threadpool.rs".to_string(),
+                line: 3,
+                reason: "hand-off".to_string(),
+                used: true,
+            }],
+        };
+        let v = crate::util::json::parse(&r.to_json())
+            .expect("report JSON parses");
+        assert_eq!(v.get("schema").and_then(|s| s.as_u64()), Some(1));
+        assert_eq!(v.get("files").and_then(|s| s.as_u64()), Some(2));
+        let d = v.get("diagnostics").and_then(|d| d.idx(0)).unwrap();
+        assert_eq!(d.get("rule").and_then(|r| r.as_str()), Some("R2"));
+        assert_eq!(d.get("line").and_then(|l| l.as_u64()), Some(7));
+        assert_eq!(d.get("message").and_then(|m| m.as_str()),
+                   Some("say \"no\""));
+        let a = v.get("allows").and_then(|a| a.idx(0)).unwrap();
+        assert_eq!(a.get("reason").and_then(|r| r.as_str()),
+                   Some("hand-off"));
+        assert_eq!(v.get("counts").and_then(|c| c.get("R2"))
+                       .and_then(|n| n.as_u64()),
+                   Some(1));
+    }
+
+    #[test]
+    fn allow_suppresses_same_and_next_line_only() {
+        use std::io::Write as _;
+        let dir = std::env::temp_dir().join(format!(
+            "pallas_lint_allow_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let f = dir.join("serve").join("hot.rs");
+        std::fs::create_dir_all(f.parent().unwrap()).unwrap();
+        let mut fh = std::fs::File::create(&f).unwrap();
+        // line 2 allowed (directive line 1), line 5 not (directive
+        // line 3 too far)
+        write!(fh,
+               "// pallas-lint: allow(R2, exercised by a test)\n\
+                fn a(m: &Mutex<u64>) -> u64 {{ *m.lock().unwrap() }}\n\
+                // pallas-lint: allow(R2, stale directive)\n\
+                fn pad() {{}}\n\
+                fn b(m: &Mutex<u64>) -> u64 {{ *m.lock().unwrap() }}\n")
+            .unwrap();
+        drop(fh);
+        let rep = lint_files(&dir, &[f.clone()]).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+        assert_eq!(rep.diagnostics.len(), 1, "{:?}", rep.diagnostics);
+        assert_eq!(rep.diagnostics[0].line, 5);
+        assert_eq!(rep.allows.len(), 2);
+        assert!(rep.allows[0].used);
+        assert!(!rep.allows[1].used);
+    }
+}

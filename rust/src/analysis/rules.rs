@@ -1,0 +1,957 @@
+//! The five invariant rules `pallas-lint` enforces over the crate's
+//! own sources. Each rule is a token-stream heuristic — deliberately
+//! conservative, tuned so the shipped tree is clean without blanket
+//! suppressions — with file:line diagnostics. See the crate docs
+//! ("Machine-checked invariants") for the rationale each encodes.
+//!
+//! * **R1** lock-across-blocking: a `MutexGuard` binding live across a
+//!   blocking call (`wait`/`recv`/`sleep`/queue pops/file I/O) in the
+//!   same scope. `Condvar`-style calls that take the guard as an
+//!   argument are exempt (they release the lock atomically).
+//! * **R2** poisoned-lock policy: `.lock().unwrap()` / `.lock()
+//!   .expect(…)` forbidden in `serve/`, `client/`, `autotune/` hot
+//!   paths — degrade to defaults or recover the guard with
+//!   `unwrap_or_else(PoisonError::into_inner)` instead.
+//! * **R3** counted-shed: a `ServeError::Overloaded` *construction*
+//!   must share a function with a shed-counter increment
+//!   (`request_shed`/`tune_job_shed`) — no silent drops.
+//! * **R4** metrics-summary completeness: every `Atomic*` counter
+//!   field of `ServeMetrics` must be reachable from `summary()` (or
+//!   `merge`) through `self.…` field reads and method calls.
+//! * **R5** target-feature guard: a call to a `#[target_feature
+//!   (enable = "X")]` fn must follow a matching
+//!   `is_x86_feature_detected!("X")` in the same function.
+//!
+//! R1 and R2 skip `#[cfg(test)]` / `#[test]` item ranges (tests may
+//! hold locks and unwrap freely); R3–R5 scan everything handed to
+//! them.
+
+use super::lexer::{Tok, TokKind};
+use super::scanner::{
+    enclosing_fn, fn_spans, in_ranges, is_ident, is_punct, matching,
+    FnSpan,
+};
+use super::Diagnostic;
+
+/// Per-file context shared by the rules.
+pub struct FileCtx<'a> {
+    /// Root-relative path with `/` separators.
+    pub path: &'a str,
+    pub toks: &'a [Tok],
+    pub fns: &'a [FnSpan],
+    /// Token ranges of test items (skipped by R1/R2).
+    pub tests: &'a [(usize, usize)],
+}
+
+impl<'a> FileCtx<'a> {
+    /// Build the derived structure for one lexed file.
+    pub fn derive(toks: &'a [Tok]) -> (Vec<FnSpan>, Vec<(usize, usize)>) {
+        (fn_spans(toks), super::scanner::test_ranges(toks))
+    }
+
+    fn diag(&self, rule: &'static str, line: u32, message: String)
+            -> Diagnostic {
+        Diagnostic { rule, file: self.path.to_string(), line, message }
+    }
+}
+
+/// Blocking calls R1 recognises: the repo's known blocking surface.
+/// Deliberately omits names too generic to lint (`push`, `pop`) —
+/// the bounded queue's batch pops and the std blocking set cover the
+/// hazards the dispatcher/shard workers can actually hit.
+const BLOCKING: &[&str] = &[
+    "wait", "wait_timeout", "recv", "recv_timeout", "join", "sleep",
+    "push_blocking", "pop_batch", "pop_batch_timeout",
+    "read_to_string", "write_atomic",
+];
+
+/// Method tails after `.lock()` that still leave a *guard* in the
+/// binding (as opposed to consuming it within the statement).
+const GUARD_TAIL: &[&str] = &[
+    "unwrap", "expect", "unwrap_or_else", "unwrap_or",
+    "unwrap_or_default", "map_err", "ok", "into_inner",
+];
+
+/// Pattern idents that are wrappers, not binding names.
+const PATTERN_WRAPPERS: &[&str] =
+    &["mut", "ref", "box", "Ok", "Err", "Some", "None"];
+
+fn punct_eq(toks: &[Tok], i: usize, c: char) -> bool {
+    toks.get(i).map(|t| is_punct(t, c)) == Some(true)
+}
+
+fn ident_at(toks: &[Tok], i: usize) -> Option<&str> {
+    toks.get(i).and_then(|t| {
+        (t.kind == TokKind::Ident).then_some(t.text.as_str())
+    })
+}
+
+/// `toks[i]` is a standalone `=` (not `==`, `=>`, `<=`, `!=`, `+=`…).
+fn is_plain_assign(toks: &[Tok], i: usize) -> bool {
+    if !punct_eq(toks, i, '=') {
+        return false;
+    }
+    if punct_eq(toks, i + 1, '=') || punct_eq(toks, i + 1, '>') {
+        return false;
+    }
+    if i > 0 {
+        let p = &toks[i - 1];
+        if p.kind == TokKind::Punct
+            && matches!(p.text.as_str(),
+                        "=" | "!" | "<" | ">" | "+" | "-" | "*" | "/"
+                        | "%" | "&" | "|" | "^")
+        {
+            return false;
+        }
+    }
+    true
+}
+
+/// ---------------------------------------------------------------- R1
+
+/// One guard-producing `let` and the scope its binding lives in.
+struct GuardLet {
+    bindings: Vec<String>,
+    let_line: u32,
+    /// Token range (exclusive bounds) the binding is live in.
+    scope: (usize, usize),
+}
+
+/// `init` (a token subrange) ends in `.lock()` modulo guard-preserving
+/// tails — i.e. the binding holds a `MutexGuard`.
+fn init_is_guard(toks: &[Tok], init: (usize, usize)) -> bool {
+    let (from, to) = init;
+    // last `lock(` in the initializer
+    let mut lock_at = None;
+    let mut k = from;
+    while k + 1 < to {
+        if ident_at(toks, k) == Some("lock") && punct_eq(toks, k + 1, '(')
+        {
+            lock_at = Some(k);
+        }
+        k += 1;
+    }
+    let Some(l) = lock_at else { return false };
+    let Some(close) = matching(toks, l + 1) else { return false };
+    if close >= to {
+        return false;
+    }
+    // tail: only `?` and guard-preserving method calls may follow
+    let mut k = close + 1;
+    while k < to {
+        if punct_eq(toks, k, '?') {
+            k += 1;
+            continue;
+        }
+        if punct_eq(toks, k, '.')
+            && ident_at(toks, k + 1)
+                .map(|m| GUARD_TAIL.contains(&m))
+                == Some(true)
+            && punct_eq(toks, k + 2, '(')
+        {
+            match matching(toks, k + 2) {
+                Some(c) if c < to => {
+                    k = c + 1;
+                    continue;
+                }
+                _ => return false,
+            }
+        }
+        return false;
+    }
+    true
+}
+
+/// Parse the `let` at `i` (possibly `if let`/`while let`) into a
+/// [`GuardLet`] when its initializer leaves a guard in the binding.
+fn parse_guard_let(toks: &[Tok], i: usize) -> Option<GuardLet> {
+    let conditional = i > 0
+        && (is_ident(&toks[i - 1], "if")
+            || is_ident(&toks[i - 1], "while"));
+    // find the standalone `=` ending the pattern
+    let mut depth = 0i64;
+    let mut eq = None;
+    let mut j = i + 1;
+    while j < toks.len() {
+        let t = &toks[j];
+        if t.kind == TokKind::Punct {
+            match t.text.as_str() {
+                "(" | "[" | "{" => depth += 1,
+                ")" | "]" | "}" => depth -= 1,
+                ";" if depth == 0 => return None, // `let x;`
+                _ => {}
+            }
+        }
+        if depth == 0 && is_plain_assign(toks, j) {
+            eq = Some(j);
+            break;
+        }
+        j += 1;
+    }
+    let eq = eq?;
+    // binding names from the pattern (skip wrappers; stop at a type
+    // annotation's single `:`)
+    let mut bindings = Vec::new();
+    let mut k = i + 1;
+    while k < eq {
+        let t = &toks[k];
+        if is_punct(t, ':')
+            && !punct_eq(toks, k + 1, ':')
+            && !(k > 0 && punct_eq(toks, k - 1, ':'))
+        {
+            break; // `let g: Type = …`
+        }
+        if t.kind == TokKind::Ident
+            && !PATTERN_WRAPPERS.contains(&t.text.as_str())
+        {
+            bindings.push(t.text.clone());
+        }
+        k += 1;
+    }
+    if bindings.is_empty() {
+        return None;
+    }
+    // initializer end + binding scope
+    if conditional {
+        // `if let P = EXPR {` — the body brace ends the initializer
+        let mut depth = 0i64;
+        let mut k = eq + 1;
+        while k < toks.len() {
+            let t = &toks[k];
+            if t.kind == TokKind::Punct {
+                match t.text.as_str() {
+                    "(" | "[" => depth += 1,
+                    ")" | "]" => depth -= 1,
+                    "{" if depth == 0 => {
+                        let body_end = matching(toks, k)?;
+                        if !init_is_guard(toks, (eq + 1, k)) {
+                            return None;
+                        }
+                        return Some(GuardLet {
+                            bindings,
+                            let_line: toks[i].line,
+                            scope: (k + 1, body_end),
+                        });
+                    }
+                    _ => {}
+                }
+            }
+            k += 1;
+        }
+        return None;
+    }
+    // plain `let … = EXPR;` or `let … = EXPR else { … };`
+    let mut depth = 0i64;
+    let mut init_end = None;
+    let mut k = eq + 1;
+    while k < toks.len() {
+        let t = &toks[k];
+        if t.kind == TokKind::Punct {
+            match t.text.as_str() {
+                "(" | "[" | "{" => depth += 1,
+                ")" | "]" | "}" => depth -= 1,
+                ";" if depth == 0 => {
+                    init_end = Some((k, k + 1));
+                    break;
+                }
+                _ => {}
+            }
+        } else if depth == 0 && is_ident(t, "else") {
+            // let-else: the scope starts after the divergent block
+            let mut b = k + 1;
+            while b < toks.len() && !punct_eq(toks, b, '{') {
+                b += 1;
+            }
+            let close = matching(toks, b)?;
+            init_end = Some((k, close + 1));
+            break;
+        }
+        k += 1;
+    }
+    let (init_end, scope_start) = init_end?;
+    if !init_is_guard(toks, (eq + 1, init_end)) {
+        return None;
+    }
+    // the binding lives to the end of the enclosing block
+    let mut depth = 0i64;
+    let mut k = scope_start;
+    let mut scope_end = toks.len();
+    while k < toks.len() {
+        let t = &toks[k];
+        if is_punct(t, '{') {
+            depth += 1;
+        } else if is_punct(t, '}') {
+            if depth == 0 {
+                scope_end = k;
+                break;
+            }
+            depth -= 1;
+        }
+        k += 1;
+    }
+    Some(GuardLet {
+        bindings,
+        let_line: toks[i].line,
+        scope: (scope_start, scope_end),
+    })
+}
+
+/// R1: lock guard live across a blocking call.
+pub fn r1_lock_across_blocking(ctx: &FileCtx, out: &mut Vec<Diagnostic>) {
+    let toks = ctx.toks;
+    for i in 0..toks.len() {
+        if !is_ident(&toks[i], "let") || in_ranges(i, ctx.tests) {
+            continue;
+        }
+        let Some(guard) = parse_guard_let(toks, i) else { continue };
+        let (start, end) = guard.scope;
+        let mut depth = 0i64;
+        let mut k = start;
+        while k < end {
+            let t = &toks[k];
+            if is_punct(t, '{') {
+                depth += 1;
+            } else if is_punct(t, '}') {
+                depth -= 1;
+            } else if depth == 0
+                && is_ident(t, "drop")
+                && punct_eq(toks, k + 1, '(')
+            {
+                // explicit drop at the binding's own depth ends it
+                if let Some(c) = matching(toks, k + 1) {
+                    let dropped = toks[k + 2..c].iter().any(|a| {
+                        a.kind == TokKind::Ident
+                            && guard.bindings.contains(&a.text)
+                    });
+                    if dropped {
+                        break;
+                    }
+                }
+            } else if t.kind == TokKind::Ident
+                && BLOCKING.contains(&t.text.as_str())
+                && punct_eq(toks, k + 1, '(')
+                && k > 0
+                && (punct_eq(toks, k - 1, '.')
+                    || punct_eq(toks, k - 1, ':'))
+            {
+                // blocking call; exempt when the guard is handed to it
+                // (condvar wait/wait_timeout release the lock)
+                if let Some(c) = matching(toks, k + 1) {
+                    let takes_guard = toks[k + 2..c].iter().any(|a| {
+                        a.kind == TokKind::Ident
+                            && guard.bindings.contains(&a.text)
+                    });
+                    if !takes_guard {
+                        out.push(ctx.diag(
+                            super::R1,
+                            t.line,
+                            format!(
+                                "lock guard `{}` (bound at line {}) is \
+                                 live across blocking call `{}` — \
+                                 release the lock (inner scope or \
+                                 drop()) before blocking",
+                                guard.bindings[0], guard.let_line,
+                                t.text),
+                        ));
+                    }
+                    k = c;
+                }
+            }
+            k += 1;
+        }
+    }
+}
+
+/// ---------------------------------------------------------------- R2
+
+/// Directory components whose files are hot-path scope for R2.
+const R2_SCOPE: &[&str] = &["serve", "client", "autotune"];
+
+/// R2: `.lock().unwrap()` / `.lock().expect(` in hot-path dirs.
+pub fn r2_poisoned_lock_policy(ctx: &FileCtx,
+                               out: &mut Vec<Diagnostic>) {
+    let in_scope = ctx.path.split('/').any(|c| R2_SCOPE.contains(&c));
+    if !in_scope {
+        return;
+    }
+    let toks = ctx.toks;
+    for i in 0..toks.len() {
+        if !(punct_eq(toks, i, '.')
+            && ident_at(toks, i + 1) == Some("lock")
+            && punct_eq(toks, i + 2, '(')
+            && punct_eq(toks, i + 3, ')')
+            && punct_eq(toks, i + 4, '.'))
+        {
+            continue;
+        }
+        let sink = match ident_at(toks, i + 5) {
+            Some(m @ ("unwrap" | "expect")) => m,
+            _ => continue,
+        };
+        if !punct_eq(toks, i + 6, '(') || in_ranges(i, ctx.tests) {
+            continue;
+        }
+        out.push(ctx.diag(
+            super::R2,
+            toks[i + 5].line,
+            format!(
+                ".lock().{sink}(…) on a hot path: a poisoned lock \
+                 must degrade (let-else to defaults, or \
+                 unwrap_or_else(PoisonError::into_inner)), never \
+                 panic a serve/client/tuner thread"),
+        ));
+    }
+}
+
+/// ---------------------------------------------------------------- R3
+
+/// Shed-counter increments that satisfy R3.
+const SHED_COUNTERS: &[&str] = &["request_shed", "tune_job_shed"];
+
+/// R3: every `ServeError::Overloaded { … }` *construction* pairs with
+/// a shed-counter increment in the same function.
+pub fn r3_counted_shed(ctx: &FileCtx, out: &mut Vec<Diagnostic>) {
+    let toks = ctx.toks;
+    for i in 0..toks.len() {
+        if !(is_ident(&toks[i], "ServeError")
+            && punct_eq(toks, i + 1, ':')
+            && punct_eq(toks, i + 2, ':')
+            && ident_at(toks, i + 3) == Some("Overloaded"))
+        {
+            continue;
+        }
+        // bare path (doc link, use item) — not a construction
+        if !punct_eq(toks, i + 4, '{') {
+            continue;
+        }
+        let Some(close) = matching(toks, i + 4) else { continue };
+        // `{ .. }` rest-pattern ⇒ match/if-let pattern, not a value
+        let is_rest = (i + 5..close.saturating_sub(1)).any(|k| {
+            punct_eq(toks, k, '.') && punct_eq(toks, k + 1, '.')
+        });
+        if is_rest {
+            continue;
+        }
+        // pattern position: `… } ) => …` or `… } = expr`
+        let mut k = close + 1;
+        while punct_eq(toks, k, ')') {
+            k += 1;
+        }
+        if punct_eq(toks, k, '=') {
+            continue; // covers both `=>` (arm) and `=` (if-let)
+        }
+        let line = toks[i + 3].line;
+        match enclosing_fn(ctx.fns, i) {
+            None => out.push(ctx.diag(
+                super::R3,
+                line,
+                "ServeError::Overloaded constructed outside any \
+                 function — sheds must be counted where they happen"
+                    .to_string(),
+            )),
+            Some(f) => {
+                let counted = (f.body_start..f.body_end).any(|k| {
+                    ident_at(toks, k)
+                        .map(|m| SHED_COUNTERS.contains(&m))
+                        == Some(true)
+                        && punct_eq(toks, k + 1, '(')
+                });
+                if !counted {
+                    out.push(ctx.diag(
+                        super::R3,
+                        line,
+                        format!(
+                            "ServeError::Overloaded constructed in \
+                             `{}` without a ServeMetrics shed counter \
+                             ({}) in the same function — every shed \
+                             must be counted, never silent",
+                            f.name,
+                            SHED_COUNTERS.join("/")),
+                    ));
+                }
+            }
+        }
+    }
+}
+
+/// ---------------------------------------------------------------- R4
+
+/// Struct and root methods R4 audits.
+const R4_STRUCT: &str = "ServeMetrics";
+const R4_ROOTS: &[&str] = &["summary", "merge"];
+
+/// R4: every `Atomic*` counter field of `ServeMetrics` is reachable
+/// from `summary()`/`merge` via `self.field` reads and `self.method()`
+/// calls (struct and impl must share the file).
+pub fn r4_metrics_summary_completeness(ctx: &FileCtx,
+                                       out: &mut Vec<Diagnostic>) {
+    let toks = ctx.toks;
+    // --- counter fields of the struct ---
+    let mut fields: Vec<(String, u32)> = Vec::new();
+    let mut struct_at = None;
+    for i in 0..toks.len() {
+        if is_ident(&toks[i], "struct")
+            && ident_at(toks, i + 1) == Some(R4_STRUCT)
+        {
+            struct_at = Some(i);
+            break;
+        }
+    }
+    let Some(s) = struct_at else { return };
+    let mut b = s + 2;
+    while b < toks.len()
+        && !punct_eq(toks, b, '{')
+        && !punct_eq(toks, b, ';')
+    {
+        b += 1;
+    }
+    if !punct_eq(toks, b, '{') {
+        return;
+    }
+    let Some(body_end) = matching(toks, b) else { return };
+    // field starts: `ident :` (single colon) at struct-body depth 0;
+    // the "type segment" of a field runs to the next field start —
+    // commas inside generics make comma-splitting unsound.
+    let mut starts: Vec<usize> = Vec::new();
+    let mut depth = 0i64;
+    for k in b + 1..body_end {
+        let t = &toks[k];
+        if t.kind == TokKind::Punct {
+            match t.text.as_str() {
+                "(" | "[" | "{" => depth += 1,
+                ")" | "]" | "}" => depth -= 1,
+                _ => {}
+            }
+        }
+        if depth == 0
+            && t.kind == TokKind::Ident
+            && punct_eq(toks, k + 1, ':')
+            && !punct_eq(toks, k + 2, ':')
+            && !(k > 0 && punct_eq(toks, k - 1, ':'))
+        {
+            starts.push(k);
+        }
+    }
+    for (n, &k) in starts.iter().enumerate() {
+        let seg_end = starts.get(n + 1).copied().unwrap_or(body_end);
+        let is_counter = (k + 2..seg_end).any(|j| {
+            matches!(ident_at(toks, j),
+                     Some("AtomicU64" | "AtomicUsize"))
+        });
+        if is_counter {
+            fields.push((toks[k].text.clone(), toks[k].line));
+        }
+    }
+    if fields.is_empty() {
+        return;
+    }
+    // --- methods of `impl ServeMetrics { … }` ---
+    let mut impl_fns: Vec<&FnSpan> = Vec::new();
+    for i in 0..toks.len() {
+        if is_ident(&toks[i], "impl")
+            && ident_at(toks, i + 1) == Some(R4_STRUCT)
+            && punct_eq(toks, i + 2, '{')
+        {
+            if let Some(end) = matching(toks, i + 2) {
+                impl_fns.extend(ctx.fns.iter().filter(|f| {
+                    i + 2 < f.body_start && f.body_end < end
+                }));
+            }
+        }
+    }
+    // direct `self.X` field reads and `self.m()` call edges per method
+    use std::collections::{BTreeMap, BTreeSet};
+    let mut reads: BTreeMap<&str, BTreeSet<String>> = BTreeMap::new();
+    let mut calls: BTreeMap<&str, BTreeSet<String>> = BTreeMap::new();
+    let field_names: BTreeSet<&str> =
+        fields.iter().map(|(n, _)| n.as_str()).collect();
+    for f in &impl_fns {
+        let r = reads.entry(f.name.as_str()).or_default();
+        let c = calls.entry(f.name.as_str()).or_default();
+        for k in f.body_start..f.body_end {
+            if is_ident(&toks[k], "self") && punct_eq(toks, k + 1, '.')
+            {
+                if let Some(m) = ident_at(toks, k + 2) {
+                    if punct_eq(toks, k + 3, '(') {
+                        c.insert(m.to_string());
+                    } else if field_names.contains(m) {
+                        r.insert(m.to_string());
+                    }
+                }
+            }
+        }
+    }
+    // closure from the roots
+    let mut reached: BTreeSet<String> = BTreeSet::new();
+    let mut queue: Vec<String> = R4_ROOTS
+        .iter()
+        .filter(|r| reads.contains_key(**r))
+        .map(|r| r.to_string())
+        .collect();
+    let mut visited: BTreeSet<String> = queue.iter().cloned().collect();
+    let have_root = !queue.is_empty();
+    while let Some(m) = queue.pop() {
+        if let Some(r) = reads.get(m.as_str()) {
+            reached.extend(r.iter().cloned());
+        }
+        if let Some(cs) = calls.get(m.as_str()) {
+            for callee in cs {
+                if reads.contains_key(callee.as_str())
+                    && visited.insert(callee.clone())
+                {
+                    queue.push(callee.clone());
+                }
+            }
+        }
+    }
+    for (name, line) in &fields {
+        if !have_root {
+            out.push(ctx.diag(
+                super::R4,
+                *line,
+                format!(
+                    "counter field `{name}` of {R4_STRUCT} can never \
+                     be reported: no {} method exists",
+                    R4_ROOTS.join("/")),
+            ));
+        } else if !reached.contains(name) {
+            out.push(ctx.diag(
+                super::R4,
+                *line,
+                format!(
+                    "counter field `{name}` of {R4_STRUCT} is not \
+                     read (directly or transitively) by {} — new \
+                     counters must not silently vanish from reports",
+                    R4_ROOTS.join("/")),
+            ));
+        }
+    }
+}
+
+/// ---------------------------------------------------------------- R5
+
+/// A fn declared with `#[target_feature(enable = "…")]`.
+#[derive(Debug, Clone)]
+pub struct TargetFeatureDecl {
+    pub name: String,
+    pub features: Vec<String>,
+    pub file: String,
+    /// Token index of the fn's name in its file (to skip the
+    /// declaration itself at call-site matching).
+    pub name_tok: usize,
+}
+
+/// Pass A of R5: collect `#[target_feature]` fn declarations in one
+/// file (call sites are checked tree-wide against the union).
+pub fn collect_target_feature_decls(path: &str, toks: &[Tok])
+                                    -> Vec<TargetFeatureDecl> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i + 2 < toks.len() {
+        if !(punct_eq(toks, i, '#')
+            && punct_eq(toks, i + 1, '[')
+            && ident_at(toks, i + 2) == Some("target_feature"))
+        {
+            i += 1;
+            continue;
+        }
+        let Some(close) = matching(toks, i + 1) else { break };
+        let features: Vec<String> = toks[i + 3..close]
+            .iter()
+            .filter(|t| t.kind == TokKind::Str)
+            .map(|t| t.text.clone())
+            .collect();
+        // skip trailing attributes / qualifiers to the fn name
+        let mut j = close + 1;
+        while j < toks.len() {
+            if punct_eq(toks, j, '#') && punct_eq(toks, j + 1, '[') {
+                match matching(toks, j + 1) {
+                    Some(c) => j = c + 1,
+                    None => break,
+                }
+                continue;
+            }
+            if is_ident(&toks[j], "fn") {
+                if let Some(name) = ident_at(toks, j + 1) {
+                    out.push(TargetFeatureDecl {
+                        name: name.to_string(),
+                        features: features.clone(),
+                        file: path.to_string(),
+                        name_tok: j + 1,
+                    });
+                }
+                break;
+            }
+            if punct_eq(toks, j, '{') || punct_eq(toks, j, ';') {
+                break;
+            }
+            j += 1;
+        }
+        i = close + 1;
+    }
+    out
+}
+
+/// R5: every call to a `#[target_feature]` fn is preceded, in the
+/// same function, by `is_x86_feature_detected!("feature")` for each
+/// enabled feature.
+pub fn r5_target_feature_guard(ctx: &FileCtx,
+                               decls: &[TargetFeatureDecl],
+                               out: &mut Vec<Diagnostic>) {
+    if decls.is_empty() {
+        return;
+    }
+    let toks = ctx.toks;
+    for i in 0..toks.len() {
+        let Some(name) = ident_at(toks, i) else { continue };
+        let Some(decl) = decls.iter().find(|d| d.name == name) else {
+            continue;
+        };
+        if !punct_eq(toks, i + 1, '(') {
+            continue;
+        }
+        // skip the declaration itself and any other `fn name(`
+        if decl.file == ctx.path && decl.name_tok == i {
+            continue;
+        }
+        if i > 0 && is_ident(&toks[i - 1], "fn") {
+            continue;
+        }
+        let Some(f) = enclosing_fn(ctx.fns, i) else {
+            out.push(ctx.diag(
+                super::R5,
+                toks[i].line,
+                format!("call to #[target_feature] fn `{name}` \
+                         outside any function"),
+            ));
+            continue;
+        };
+        for feat in &decl.features {
+            let guarded = (f.body_start..i).any(|k| {
+                ident_at(toks, k) == Some("is_x86_feature_detected")
+                    && punct_eq(toks, k + 1, '!')
+                    && punct_eq(toks, k + 2, '(')
+                    && toks.get(k + 3).map(|t| {
+                        t.kind == TokKind::Str && t.text == *feat
+                    }) == Some(true)
+            });
+            if !guarded {
+                out.push(ctx.diag(
+                    super::R5,
+                    toks[i].line,
+                    format!(
+                        "call to `{name}` (#[target_feature(enable = \
+                         \"{feat}\")]) is not dominated by \
+                         is_x86_feature_detected!(\"{feat}\") in \
+                         `{}` — undefined behaviour on CPUs without \
+                         the feature",
+                        f.name),
+                ));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::lex;
+
+    fn run_rule<F>(path: &str, src: &str, f: F) -> Vec<Diagnostic>
+    where
+        F: Fn(&FileCtx, &mut Vec<Diagnostic>),
+    {
+        let l = lex(src);
+        let (fns, tests) = FileCtx::derive(&l.toks);
+        let ctx = FileCtx {
+            path,
+            toks: &l.toks,
+            fns: &fns,
+            tests: &tests,
+        };
+        let mut out = Vec::new();
+        f(&ctx, &mut out);
+        out
+    }
+
+    #[test]
+    fn r1_flags_sleep_under_guard_and_respects_inner_scope() {
+        let bad = "fn f(m: &Mutex<u64>) -> u64 {\n\
+                   let g = m.lock().unwrap();\n\
+                   std::thread::sleep(d);\n\
+                   *g\n}";
+        let d = run_rule("x.rs", bad, r1_lock_across_blocking);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].rule, "R1");
+        assert_eq!(d[0].line, 3);
+        let good = "fn f(m: &Mutex<u64>) -> u64 {\n\
+                    let v = { let g = m.lock().unwrap(); *g };\n\
+                    std::thread::sleep(d);\n\
+                    v\n}";
+        assert!(run_rule("x.rs", good, r1_lock_across_blocking)
+                .is_empty());
+    }
+
+    #[test]
+    fn r1_condvar_wait_taking_the_guard_is_exempt() {
+        let src = "fn f(&self) {\n\
+                   let mut g = self.m.lock().unwrap();\n\
+                   while g.busy { g = self.cv.wait(g).unwrap(); }\n}";
+        assert!(run_rule("x.rs", src, r1_lock_across_blocking)
+                .is_empty());
+    }
+
+    #[test]
+    fn r1_recv_on_the_guard_itself_is_flagged() {
+        let src = "fn w(rx: &Mutex<Receiver<J>>) {\n\
+                   let guard = rx.lock().expect(\"rx\");\n\
+                   let j = guard.recv();\n}";
+        let d = run_rule("x.rs", src, r1_lock_across_blocking);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].line, 3);
+    }
+
+    #[test]
+    fn r1_let_else_guard_and_drop_end_scope() {
+        let src = "fn f(&self) {\n\
+                   let Ok(mut g) = self.m.lock() else { return };\n\
+                   g.n += 1;\n\
+                   drop(g);\n\
+                   std::thread::sleep(d);\n}";
+        assert!(run_rule("x.rs", src, r1_lock_across_blocking)
+                .is_empty());
+    }
+
+    #[test]
+    fn r1_consumed_lock_is_not_a_guard_binding() {
+        let src = "fn f(&self) -> Vec<u8> {\n\
+                   let v: Vec<u8> = self.m.lock().unwrap().iter()\n\
+                       .cloned().collect();\n\
+                   std::thread::sleep(d);\n\
+                   v\n}";
+        assert!(run_rule("x.rs", src, r1_lock_across_blocking)
+                .is_empty());
+    }
+
+    #[test]
+    fn r1_skips_test_modules() {
+        let src = "#[cfg(test)]\nmod tests {\n fn t() {\n\
+                   let g = m.lock().unwrap();\n\
+                   std::thread::sleep(d);\n let _ = g; }\n}";
+        assert!(run_rule("x.rs", src, r1_lock_across_blocking)
+                .is_empty());
+    }
+
+    #[test]
+    fn r2_scoped_to_hot_path_dirs_and_skips_tests() {
+        let src = "fn f(m: &Mutex<u64>) -> u64 { *m.lock().unwrap() }";
+        let d = run_rule("rust/src/serve/mod.rs", src,
+                         r2_poisoned_lock_policy);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].rule, "R2");
+        assert!(run_rule("rust/src/sim/machine.rs", src,
+                         r2_poisoned_lock_policy).is_empty(),
+                "outside serve//client//autotune");
+        let test_src = "#[cfg(test)]\nmod tests {\n\
+                        fn t(m: &Mutex<u64>) { m.lock().unwrap(); }\n}";
+        assert!(run_rule("rust/src/serve/mod.rs", test_src,
+                         r2_poisoned_lock_policy).is_empty());
+    }
+
+    #[test]
+    fn r2_degrade_patterns_pass() {
+        let src = "fn f(m: &Mutex<u64>) -> u64 {\n\
+                   let Ok(g) = m.lock() else { return 0 };\n *g\n}\n\
+                   fn h(m: &Mutex<u64>) -> u64 {\n\
+                   *m.lock().unwrap_or_else(PoisonError::into_inner)\n}";
+        assert!(run_rule("rust/src/serve/mod.rs", src,
+                         r2_poisoned_lock_policy).is_empty());
+    }
+
+    #[test]
+    fn r3_construction_needs_counter_patterns_do_not() {
+        let bad = "fn reject(r: Req) {\n\
+                   (r.reply)(Err(ServeError::Overloaded {\n\
+                   shard: s, depth: 1, quota: 1 }));\n}";
+        let d = run_rule("x.rs", bad, r3_counted_shed);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].rule, "R3");
+        let good = "fn reject(m: &M, r: Req) {\n\
+                    m.request_shed();\n\
+                    (r.reply)(Err(ServeError::Overloaded {\n\
+                    shard: s, depth: 1, quota: 1 }));\n}";
+        assert!(run_rule("x.rs", good, r3_counted_shed).is_empty());
+        let patterns = "fn classify(e: &ServeError) -> bool {\n\
+                        matches!(e, ServeError::Overloaded { .. })\n}\n\
+                        fn render(e: ServeError) -> String {\n\
+                        match e {\n\
+                        ServeError::Overloaded { shard, depth, quota }\n\
+                        => format!(\"{shard}\"),\n _ => String::new(),\n\
+                        }\n}";
+        assert!(run_rule("x.rs", patterns, r3_counted_shed).is_empty(),
+                "patterns are not constructions");
+    }
+
+    #[test]
+    fn r4_unread_counter_flagged_transitive_read_ok() {
+        let bad = "struct ServeMetrics {\n\
+                   submitted: AtomicU64,\n\
+                   dropped: AtomicU64,\n\
+                   tag: String,\n}\n\
+                   impl ServeMetrics {\n\
+                   fn submitted(&self) -> u64 {\n\
+                   self.submitted.load(O) }\n\
+                   pub fn summary(&self) -> String {\n\
+                   format!(\"{}\", self.submitted()) }\n}";
+        let d = run_rule("x.rs", bad, r4_metrics_summary_completeness);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert!(d[0].message.contains("`dropped`"), "{}", d[0].message);
+        assert_eq!(d[0].line, 3);
+        let good = bad.replace(
+            "format!(\"{}\", self.submitted())",
+            "format!(\"{} {}\", self.submitted(), \
+             self.dropped.load(O))");
+        assert!(run_rule("x.rs", &good,
+                         r4_metrics_summary_completeness).is_empty());
+    }
+
+    #[test]
+    fn r4_generic_fields_do_not_confuse_the_field_scan() {
+        // commas inside generics must not split fields
+        let src = "struct ServeMetrics {\n\
+                   compute: Mutex<BTreeMap<String, Agg>>,\n\
+                   shed: AtomicU64,\n}\n\
+                   impl ServeMetrics {\n\
+                   pub fn summary(&self) -> u64 {\n\
+                   self.shed.load(O) }\n}";
+        assert!(run_rule("x.rs", src, r4_metrics_summary_completeness)
+                .is_empty());
+    }
+
+    #[test]
+    fn r5_guarded_call_passes_unguarded_fails() {
+        let src = "#[target_feature(enable = \"avx2\")]\n\
+                   unsafe fn micro_avx2(x: &mut [f32]) {}\n\
+                   fn ok(x: &mut [f32]) {\n\
+                   if std::arch::is_x86_feature_detected!(\"avx2\") {\n\
+                   return unsafe { micro_avx2(x) }; }\n}\n\
+                   fn bad(x: &mut [f32]) {\n\
+                   unsafe { micro_avx2(x) }\n}";
+        let l = lex(src);
+        let (fns, tests) = FileCtx::derive(&l.toks);
+        let ctx = FileCtx {
+            path: "x.rs",
+            toks: &l.toks,
+            fns: &fns,
+            tests: &tests,
+        };
+        let decls = collect_target_feature_decls("x.rs", &l.toks);
+        assert_eq!(decls.len(), 1);
+        assert_eq!(decls[0].features, vec!["avx2".to_string()]);
+        let mut out = Vec::new();
+        r5_target_feature_guard(&ctx, &decls, &mut out);
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert_eq!(out[0].rule, "R5");
+        assert!(out[0].message.contains("`bad`"), "{}", out[0].message);
+    }
+}

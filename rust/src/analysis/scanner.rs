@@ -1,0 +1,233 @@
+//! Lightweight structure scanner over the lexer's token stream — the
+//! "no full parser" layer the rules share: bracket matching, function
+//! spans (name + body token range, nested fns included), and
+//! `#[cfg(test)]` / `#[test]` item ranges so rules with a
+//! production-code scope can skip test modules.
+
+use super::lexer::{Tok, TokKind};
+
+/// `tok` is the identifier `s`.
+pub fn is_ident(t: &Tok, s: &str) -> bool {
+    t.kind == TokKind::Ident && t.text == s
+}
+
+/// `tok` is the single-character punct `c`.
+pub fn is_punct(t: &Tok, c: char) -> bool {
+    t.kind == TokKind::Punct && t.text.len() == 1
+        && t.text.as_bytes()[0] == c as u8
+}
+
+/// Index of the punct closing the `(`/`[`/`{` at `open`, or `None`
+/// when unbalanced (broken source — rules bail conservatively).
+pub fn matching(toks: &[Tok], open: usize) -> Option<usize> {
+    let (o, c) = match toks.get(open)?.text.as_str() {
+        "(" => ('(', ')'),
+        "[" => ('[', ']'),
+        "{" => ('{', '}'),
+        _ => return None,
+    };
+    let mut depth = 0i64;
+    for (j, t) in toks.iter().enumerate().skip(open) {
+        if is_punct(t, o) {
+            depth += 1;
+        } else if is_punct(t, c) {
+            depth -= 1;
+            if depth == 0 {
+                return Some(j);
+            }
+        }
+    }
+    None
+}
+
+/// One `fn` item (or nested fn): its name and the token range of its
+/// body, **inclusive** of both braces.
+#[derive(Debug, Clone)]
+pub struct FnSpan {
+    pub name: String,
+    pub line: u32,
+    pub body_start: usize,
+    pub body_end: usize,
+}
+
+/// All function bodies in the stream, nested fns included (closures
+/// are part of their enclosing fn's span — good enough for
+/// "same function" rule scopes).
+pub fn fn_spans(toks: &[Tok]) -> Vec<FnSpan> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < toks.len() {
+        if is_ident(&toks[i], "fn")
+            && toks.get(i + 1).map(|t| t.kind == TokKind::Ident)
+                == Some(true)
+        {
+            let name = toks[i + 1].text.clone();
+            let line = toks[i + 1].line;
+            // walk the signature: the body is the first `{` at
+            // paren/bracket depth 0; a `;` there means a bodiless
+            // trait/extern declaration.
+            let mut depth = 0i64;
+            let mut j = i + 2;
+            while j < toks.len() {
+                let t = &toks[j];
+                if is_punct(t, '(') || is_punct(t, '[') {
+                    depth += 1;
+                } else if is_punct(t, ')') || is_punct(t, ']') {
+                    depth -= 1;
+                } else if depth == 0 && is_punct(t, '{') {
+                    if let Some(end) = matching(toks, j) {
+                        out.push(FnSpan {
+                            name,
+                            line,
+                            body_start: j,
+                            body_end: end,
+                        });
+                    }
+                    break;
+                } else if depth == 0 && is_punct(t, ';') {
+                    break;
+                }
+                j += 1;
+            }
+            i += 2;
+            continue;
+        }
+        i += 1;
+    }
+    out
+}
+
+/// The innermost function span containing token `idx`.
+pub fn enclosing_fn<'a>(fns: &'a [FnSpan], idx: usize)
+                        -> Option<&'a FnSpan> {
+    fns.iter()
+        .filter(|f| f.body_start <= idx && idx <= f.body_end)
+        .min_by_key(|f| f.body_end - f.body_start)
+}
+
+/// Token ranges (inclusive) of items behind a `test` attribute —
+/// `#[cfg(test)] mod …`, `#[test] fn …` and friends. Any attribute
+/// whose bracket group contains the identifier `test` marks the item
+/// it decorates (attribute through closing brace / semicolon).
+pub fn test_ranges(toks: &[Tok]) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i + 1 < toks.len() {
+        if !(is_punct(&toks[i], '#') && is_punct(&toks[i + 1], '[')) {
+            i += 1;
+            continue;
+        }
+        let Some(close) = matching(toks, i + 1) else { break };
+        let has_test = toks[i + 2..close]
+            .iter()
+            .any(|t| is_ident(t, "test"));
+        if !has_test {
+            i = close + 1;
+            continue;
+        }
+        // skip any further attributes, then find the decorated item's
+        // end: first `{`'s matching brace, or a `;`, at depth 0.
+        let mut j = close + 1;
+        while j + 1 < toks.len()
+            && is_punct(&toks[j], '#')
+            && is_punct(&toks[j + 1], '[')
+        {
+            match matching(toks, j + 1) {
+                Some(c) => j = c + 1,
+                None => break,
+            }
+        }
+        let mut depth = 0i64;
+        let mut end = None;
+        while j < toks.len() {
+            let t = &toks[j];
+            if is_punct(t, '(') || is_punct(t, '[') {
+                depth += 1;
+            } else if is_punct(t, ')') || is_punct(t, ']') {
+                depth -= 1;
+            } else if depth == 0 && is_punct(t, '{') {
+                end = matching(toks, j);
+                break;
+            } else if depth == 0 && is_punct(t, ';') {
+                end = Some(j);
+                break;
+            }
+            j += 1;
+        }
+        match end {
+            Some(e) => {
+                out.push((i, e));
+                i = e + 1;
+            }
+            None => break,
+        }
+    }
+    out
+}
+
+/// `idx` falls inside any of `ranges` (inclusive bounds).
+pub fn in_ranges(idx: usize, ranges: &[(usize, usize)]) -> bool {
+    ranges.iter().any(|&(a, b)| a <= idx && idx <= b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::lex;
+
+    #[test]
+    fn fn_spans_find_nested_and_methods() {
+        let src = "impl X { fn a(&self) { fn b() { 1 } b() } }\n\
+                   fn c(x: (u8, u8)) -> u8 { x.0 }";
+        let l = lex(src);
+        let fns = fn_spans(&l.toks);
+        let names: Vec<_> = fns.iter().map(|f| f.name.as_str()).collect();
+        assert_eq!(names, vec!["a", "b", "c"]);
+        // b is nested inside a
+        let a = &fns[0];
+        let b = &fns[1];
+        assert!(a.body_start < b.body_start && b.body_end < a.body_end);
+        // innermost lookup resolves to b inside b's body
+        let inner = enclosing_fn(&fns, b.body_start + 1).unwrap();
+        assert_eq!(inner.name, "b");
+    }
+
+    #[test]
+    fn bodiless_trait_fn_is_skipped() {
+        let l = lex("trait T { fn f(&self) -> u8; } fn g() {}");
+        let fns = fn_spans(&l.toks);
+        assert_eq!(fns.len(), 1);
+        assert_eq!(fns[0].name, "g");
+    }
+
+    #[test]
+    fn cfg_test_mod_is_a_test_range() {
+        let src = "fn live() {}\n\
+                   #[cfg(test)]\nmod tests {\n fn t() { x.lock() }\n}\n\
+                   fn live2() {}";
+        let l = lex(src);
+        let ranges = test_ranges(&l.toks);
+        assert_eq!(ranges.len(), 1);
+        let lock = l.toks.iter().position(|t| t.text == "lock").unwrap();
+        assert!(in_ranges(lock, &ranges));
+        let live2 = l.toks.iter()
+            .position(|t| t.text == "live2").unwrap();
+        assert!(!in_ranges(live2, &ranges));
+    }
+
+    #[test]
+    fn non_test_attributes_do_not_mark() {
+        let l = lex("#[derive(Debug)] struct S { x: u8 }");
+        assert!(test_ranges(&l.toks).is_empty());
+    }
+
+    #[test]
+    fn stacked_attributes_cover_the_item() {
+        let src = "#[test]\n#[ignore]\nfn t() { body() }";
+        let l = lex(src);
+        let ranges = test_ranges(&l.toks);
+        assert_eq!(ranges.len(), 1);
+        let body = l.toks.iter().position(|t| t.text == "body").unwrap();
+        assert!(in_ranges(body, &ranges));
+    }
+}

@@ -16,7 +16,7 @@
 //! is a thin adapter over this: `submit_handle` is the primitive, a
 //! callback is just `handle.on_ready(f)`.
 
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
 
 /// What happened to the value a [`Promise`] completed with.
@@ -54,6 +54,18 @@ struct Shared<T> {
     cv: Condvar,
 }
 
+impl<T> Shared<T> {
+    /// Lock the state, recovering from poisoning. Every transition is
+    /// a single `mem::replace`, so a thread that panicked while
+    /// holding the lock cannot leave a torn state — recovering the
+    /// guard keeps session accounting exact (`submitted == ok + shed
+    /// + failed + cancelled`) instead of cascading the panic into a
+    /// serve worker (R2).
+    fn state(&self) -> MutexGuard<'_, State<T>> {
+        self.state.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+}
+
 /// Completer side: resolves the paired [`ReplyHandle`] exactly once.
 pub struct Promise<T> {
     shared: Option<Arc<Shared<T>>>,
@@ -80,7 +92,7 @@ impl<T: Send + 'static> Promise<T> {
     /// continuation runs on THIS thread before `complete` returns.
     pub fn complete(mut self, value: T) -> Delivery {
         let shared = self.shared.take().expect("promise completes once");
-        let mut g = shared.state.lock().expect("future poisoned");
+        let mut g = shared.state();
         match std::mem::replace(&mut *g, State::Taken) {
             State::Pending => {
                 *g = State::Ready(value);
@@ -112,7 +124,7 @@ impl<T> Drop for Promise<T> {
         // Promise dropped without completing: break pending waiters
         // instead of hanging them.
         if let Some(shared) = self.shared.take() {
-            let mut g = shared.state.lock().expect("future poisoned");
+            let mut g = shared.state();
             if matches!(*g, State::Pending) {
                 *g = State::Broken;
                 drop(g);
@@ -130,7 +142,7 @@ impl<T: Send + 'static> ReplyHandle<T> {
     /// Whether a value is waiting (non-consuming peek).
     pub fn is_ready(&self) -> bool {
         match &self.shared {
-            Some(s) => matches!(*s.state.lock().expect("future poisoned"),
+            Some(s) => matches!(*s.state(),
                                 State::Ready(_)),
             None => false,
         }
@@ -141,7 +153,7 @@ impl<T: Send + 'static> ReplyHandle<T> {
     /// is a no-op, not a cancellation).
     pub fn poll(&mut self) -> Option<T> {
         let shared = self.shared.as_ref()?;
-        let mut g = shared.state.lock().expect("future poisoned");
+        let mut g = shared.state();
         if matches!(*g, State::Ready(_)) {
             let State::Ready(v) = std::mem::replace(&mut *g, State::Taken)
             else { unreachable!() };
@@ -157,7 +169,7 @@ impl<T: Send + 'static> ReplyHandle<T> {
     /// gets exactly one explicit reply), surfaced rather than panicking.
     pub fn wait(mut self) -> Option<T> {
         let shared = self.shared.take().expect("handle not yet consumed");
-        let mut g = shared.state.lock().expect("future poisoned");
+        let mut g = shared.state();
         loop {
             match &*g {
                 State::Ready(_) => {
@@ -167,7 +179,8 @@ impl<T: Send + 'static> ReplyHandle<T> {
                     return Some(v);
                 }
                 State::Broken => return None,
-                _ => g = shared.cv.wait(g).expect("future poisoned"),
+                _ => g = shared.cv.wait(g)
+                    .unwrap_or_else(PoisonError::into_inner),
             }
         }
     }
@@ -179,7 +192,7 @@ impl<T: Send + 'static> ReplyHandle<T> {
                         -> Result<Option<T>, ReplyHandle<T>> {
         let shared = self.shared.take().expect("handle not yet consumed");
         let deadline = Instant::now() + timeout;
-        let mut g = shared.state.lock().expect("future poisoned");
+        let mut g = shared.state();
         loop {
             match &*g {
                 State::Ready(_) => {
@@ -198,7 +211,7 @@ impl<T: Send + 'static> ReplyHandle<T> {
             }
             let (guard, _timed_out) = shared.cv
                 .wait_timeout(g, deadline - now)
-                .expect("future poisoned");
+                .unwrap_or_else(PoisonError::into_inner);
             g = guard;
         }
     }
@@ -212,7 +225,7 @@ impl<T: Send + 'static> ReplyHandle<T> {
         F: FnOnce(T) + Send + 'static,
     {
         let shared = self.shared.take().expect("handle not yet consumed");
-        let mut g = shared.state.lock().expect("future poisoned");
+        let mut g = shared.state();
         match std::mem::replace(&mut *g, State::Taken) {
             State::Pending => *g = State::Callback(Box::new(f)),
             State::Ready(v) => {
@@ -252,7 +265,7 @@ impl<T: Send + 'static> ReplyHandle<T> {
 impl<T> Drop for ReplyHandle<T> {
     fn drop(&mut self) {
         if let Some(shared) = self.shared.take() {
-            let mut g = shared.state.lock().expect("future poisoned");
+            let mut g = shared.state();
             match &*g {
                 // Pending drop = cancellation: the completer will see
                 // Abandoned and discard the value (counted, not leaked).

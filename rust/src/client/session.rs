@@ -27,7 +27,7 @@
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 
 use crate::serve::metrics::SessionOutcome;
 use crate::serve::{Serve, ServeError, ServeResult, WorkItem};
@@ -126,11 +126,20 @@ struct SessionInner {
 }
 
 impl SessionInner {
+    /// Lock the session state, recovering from poisoning. The updates
+    /// under this lock are plain counter bumps that cannot be left
+    /// torn by a panicking holder; recovering the guard keeps
+    /// `submitted == ok + shed + failed + cancelled` exact instead of
+    /// panicking a reply closure on a serve worker thread (R2).
+    fn state(&self) -> MutexGuard<'_, SessState> {
+        self.state.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
     /// Reply-side bookkeeping: one lock for the stats bump AND the
     /// slot release, so a drain that wakes on the released slot can
     /// never observe a half-updated stats block.
     fn finish(&self, outcome: SessionOutcome) {
-        let mut g = self.state.lock().expect("session poisoned");
+        let mut g = self.state();
         g.in_flight -= 1;
         match outcome {
             SessionOutcome::Ok => g.stats.ok += 1,
@@ -184,20 +193,20 @@ impl<'s> Session<'s> {
 
     /// Requests currently in flight (submitted, no reply yet).
     pub fn in_flight(&self) -> usize {
-        self.inner.state.lock().expect("session poisoned").in_flight
+        self.inner.state().in_flight
     }
 
     /// Snapshot of the accounting so far. Only guaranteed to satisfy
     /// [`SessionStats::fully_accounted`] once in-flight reaches zero
     /// ([`Session::drain`] / [`Session::close`]).
     pub fn stats(&self) -> SessionStats {
-        self.inner.state.lock().expect("session poisoned").stats
+        self.inner.state().stats
     }
 
     fn acquire_slot(&self, policy: WindowPolicy)
                     -> Result<(), SessionError> {
         let inner = &self.inner;
-        let mut g = inner.state.lock().expect("session poisoned");
+        let mut g = inner.state();
         loop {
             if g.closed {
                 return Err(SessionError::Closed);
@@ -215,7 +224,8 @@ impl<'s> Session<'s> {
                     });
                 }
                 WindowPolicy::Block => {
-                    g = inner.cv.wait(g).expect("session poisoned");
+                    g = inner.cv.wait(g)
+                        .unwrap_or_else(PoisonError::into_inner);
                 }
             }
         }
@@ -294,9 +304,10 @@ impl<'s> Session<'s> {
     /// Block until nothing is in flight (replies for everything
     /// submitted so far have been accounted).
     pub fn drain(&self) {
-        let mut g = self.inner.state.lock().expect("session poisoned");
+        let mut g = self.inner.state();
         while g.in_flight > 0 {
-            g = self.inner.cv.wait(g).expect("session poisoned");
+            g = self.inner.cv.wait(g)
+                .unwrap_or_else(PoisonError::into_inner);
         }
     }
 
@@ -304,10 +315,11 @@ impl<'s> Session<'s> {
     /// flight, and return the exact final accounting
     /// (`fully_accounted()` holds on the returned stats).
     pub fn close(self) -> SessionStats {
-        let mut g = self.inner.state.lock().expect("session poisoned");
+        let mut g = self.inner.state();
         g.closed = true;
         while g.in_flight > 0 {
-            g = self.inner.cv.wait(g).expect("session poisoned");
+            g = self.inner.cv.wait(g)
+                .unwrap_or_else(PoisonError::into_inner);
         }
         g.stats
     }

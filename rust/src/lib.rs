@@ -231,7 +231,49 @@
 //! Every shed is an explicit reply and counted in
 //! `ServeMetrics::shed`; the zero-silent-drop contract holds under any
 //! overload.
+//!
+//! # Machine-checked invariants (`pallas-lint`)
+//!
+//! The contracts above live at seams the compiler does not check, so
+//! the crate lints **its own sources** ([`analysis`], CLI `alpaka-bench
+//! lint [--deny] [--json PATH]`, tier-1 gate `tests/lint_clean.rs`).
+//! Five rules, each encoding a convention an earlier layer
+//! established:
+//!
+//! * **R1 — lock-across-blocking.** No `MutexGuard` binding may stay
+//!   live across a blocking call (`wait`/`recv`/`sleep`/bounded-queue
+//!   pops/file I/O) in the same scope: the dispatcher and shard
+//!   workers (serve layer, PR 4) must never stall every peer on a
+//!   lock a blocked thread still holds. Condvar-style calls that take
+//!   the guard as an argument release the lock and are exempt.
+//! * **R2 — poisoned-lock policy.** `.lock().unwrap()`/`.expect(…)`
+//!   is forbidden on the `serve/`, `client/`, `autotune/` hot paths.
+//!   The serve layer's degrade convention (PR 4): observability state
+//!   degrades to defaults (`let Ok(g) … else { return default }`);
+//!   must-progress state (future/session accounting, PR 5) recovers
+//!   the guard with `unwrap_or_else(PoisonError::into_inner)` — a
+//!   worker thread never panics because another thread panicked
+//!   first. Intentional exceptions carry a reasoned inline
+//!   `// pallas-lint: allow(R2, reason)`, counted in the report.
+//! * **R3 — counted shed.** Every *construction* of
+//!   `ServeError::Overloaded` must share its function with a
+//!   `ServeMetrics` shed-counter increment: the zero-silent-drop
+//!   contract (overload control, PR 4) is only auditable if the
+//!   counters actually move everywhere a shed is minted.
+//! * **R4 — metrics-summary completeness.** Every `Atomic*` counter
+//!   field of `ServeMetrics` must be read, directly or transitively,
+//!   by `summary()`/merge — a counter a future PR adds but never
+//!   reports would silently vanish from load reports and bench JSON.
+//! * **R5 — target-feature guard.** Every call to a
+//!   `#[target_feature(enable = "…")]` fn must follow a matching
+//!   `is_x86_feature_detected!` in the same function (the AVX2
+//!   microkernel dispatch convention from the tuned-GEMM PR) —
+//!   anything less is undefined behaviour on older CPUs.
+//!
+//! R1/R2 skip `#[cfg(test)]`/`#[test]` items; R3–R5 scan everything
+//! under `rust/src` and `examples`.
 
+pub mod analysis;
 pub mod arch;
 pub mod autotune;
 pub mod cli;

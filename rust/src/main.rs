@@ -178,11 +178,33 @@ fn cli() -> Cli {
                                     native results spill to this JSON \
                                     file (hits labelled cache:disk); \
                                     needs --cache > 0"),
+                    OptSpec::value("result-cache-cap", Some("1024"),
+                                   "max entries the persistent result \
+                                    cache keeps (oldest evicted first; \
+                                    0 = unbounded)"),
                     OptSpec::flag("online-tune",
                                   "background-tune untuned buckets \
                                    while serving (commits to \
                                    --tuning-store, or an in-memory \
                                    store)"),
+                ],
+            },
+            CommandSpec {
+                name: "lint",
+                about: "pallas-lint: machine-check the crate's \
+                        concurrency/accounting invariants (R1-R5) \
+                        over its own sources",
+                opts: vec![
+                    OptSpec::flag("deny",
+                                  "exit non-zero when any diagnostic \
+                                   survives (CI gate)"),
+                    OptSpec::value("json", None,
+                                   "write the machine-readable report \
+                                    to this path"),
+                    OptSpec::value("root", None,
+                                   "tree to lint: directory holding \
+                                    rust/src and examples (default: \
+                                    this crate's manifest dir)"),
                 ],
             },
             CommandSpec {
@@ -240,6 +262,7 @@ fn run(cli: &Cli, p: &Parsed) -> Result<()> {
         "repro" => cmd_repro(p),
         "native" => cmd_native(p),
         "serve" => cmd_serve(p),
+        "lint" => cmd_lint(p),
         "inspect-hlo" => cmd_inspect(p),
         "mappings" => {
             println!("{}", report::figures::fig5_mappings());
@@ -546,6 +569,8 @@ fn cmd_serve(p: &Parsed) -> Result<()> {
             .map(|s| Path::new(s).to_path_buf()),
         result_cache_path: p.get("result-cache")
             .map(|s| Path::new(s).to_path_buf()),
+        result_cache_cap: p.get_u64("result-cache-cap")?
+            .unwrap_or(1024) as usize,
         online_tune: p.has_flag("online-tune"),
         ..ServeConfig::default()
     };
@@ -654,6 +679,30 @@ fn cmd_inspect(p: &Parsed) -> Result<()> {
               remains, cf. paper Listing 1.2)");
     for line in hlo.lines().filter(|l| l.contains("dot")).take(5) {
         println!("  | {}", line.trim());
+    }
+    Ok(())
+}
+
+fn cmd_lint(p: &Parsed) -> Result<()> {
+    use alpaka_rs::analysis;
+
+    // the manifest dir is the repo root (rust/src + examples live
+    // under it), so a plain `alpaka-bench lint` checks this crate
+    let root = p.get("root")
+        .map(|s| Path::new(s).to_path_buf())
+        .unwrap_or_else(|| {
+            Path::new(env!("CARGO_MANIFEST_DIR")).to_path_buf()
+        });
+    let report = analysis::lint_tree(&root)
+        .map_err(|e| anyhow::anyhow!("lint: {e}"))?;
+    print!("{}", report.render());
+    if let Some(path) = p.get("json") {
+        std::fs::write(path, report.to_json())?;
+        eprintln!("lint report written to {path}");
+    }
+    if p.has_flag("deny") && !report.is_clean() {
+        anyhow::bail!("pallas-lint: {} diagnostic(s) (deny mode)",
+                      report.diagnostics.len());
     }
     Ok(())
 }

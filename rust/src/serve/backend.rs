@@ -55,9 +55,15 @@ pub struct MachinePark {
 
 impl MachinePark {
     pub fn get(&self, arch: ArchId) -> Arc<Machine> {
-        let mut g = self.machines.lock().expect("park poisoned");
-        Arc::clone(g.entry(arch)
-                   .or_insert_with(|| Arc::new(Machine::for_arch(arch))))
+        // the park is a memoisation cache: a poisoned registry
+        // degrades to rebuilding the model per call, never a panic in
+        // a sim shard (R2)
+        match self.machines.lock() {
+            Ok(mut g) => Arc::clone(g.entry(arch).or_insert_with(|| {
+                Arc::new(Machine::for_arch(arch))
+            })),
+            Err(_) => Arc::new(Machine::for_arch(arch)),
+        }
     }
 }
 

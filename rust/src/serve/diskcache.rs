@@ -24,6 +24,13 @@
 //! probe it after a memory-LRU miss (hits seed the LRU and are labelled
 //! `cache:disk` in replies/metrics, vs `cache:mem`) and write through
 //! on every executed native result.
+//!
+//! **Bounded**: [`DiskResultCache::with_cap`] caps the entry count
+//! (`ServeConfig::result_cache_cap`, CLI `--result-cache-cap`);
+//! inserts evict oldest-first by a persisted per-entry insertion
+//! sequence, so the spill file cannot grow without bound and the
+//! eviction order survives restarts. Evictions are returned to the
+//! caller and counted in `ServeMetrics`.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -51,6 +58,11 @@ pub struct DiskEntry {
     /// [`NativeEngine::slug`] of the engine that produced it.
     pub engine: String,
     pub kernel: String,
+    /// Insertion sequence — monotonic per cache lifetime, persisted so
+    /// oldest-first eviction survives restarts. Additive to schema 1:
+    /// entries written before the bound existed read back as 0
+    /// (evicted first, which is exactly right — they are the oldest).
+    pub seq: u64,
 }
 
 /// The JSON-on-disk result cache. See the module docs for the
@@ -59,6 +71,10 @@ pub struct DiskEntry {
 pub struct DiskResultCache {
     path: Option<PathBuf>,
     entries: BTreeMap<String, DiskEntry>,
+    /// Maximum entries kept; 0 = unbounded.
+    max_entries: usize,
+    /// Next insertion sequence number.
+    next_seq: u64,
 }
 
 impl DiskResultCache {
@@ -68,6 +84,8 @@ impl DiskResultCache {
         let mut cache = Self {
             path: Some(path.to_path_buf()),
             entries: BTreeMap::new(),
+            max_entries: 0,
+            next_seq: 0,
         };
         match std::fs::read_to_string(path) {
             Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
@@ -78,7 +96,11 @@ impl DiskResultCache {
                 cache.path = None;
             }
             Ok(text) => match parse_entries(&text) {
-                Ok(entries) => cache.entries = entries,
+                Ok(entries) => {
+                    cache.next_seq = entries.values()
+                        .map(|e| e.seq + 1).max().unwrap_or(0);
+                    cache.entries = entries;
+                }
                 Err(Refusal::Corrupt(msg)) => {
                     eprintln!("[serve] result cache {}: {msg}; \
                                starting empty", path.display());
@@ -97,7 +119,44 @@ impl DiskResultCache {
 
     /// A cache with no backing file (tests).
     pub fn in_memory() -> Self {
-        Self { path: None, entries: BTreeMap::new() }
+        Self {
+            path: None,
+            entries: BTreeMap::new(),
+            max_entries: 0,
+            next_seq: 0,
+        }
+    }
+
+    /// Bound the cache to `max_entries` (0 = unbounded), evicting
+    /// oldest-first immediately if already over.
+    pub fn with_cap(mut self, max_entries: usize) -> Self {
+        self.max_entries = max_entries;
+        self.evict_to_cap();
+        self
+    }
+
+    pub fn cap(&self) -> usize {
+        self.max_entries
+    }
+
+    /// Evict oldest entries (minimum `seq`) until within the cap;
+    /// returns how many were dropped.
+    fn evict_to_cap(&mut self) -> u64 {
+        if self.max_entries == 0 {
+            return 0;
+        }
+        let mut evicted = 0;
+        while self.entries.len() > self.max_entries {
+            let Some(oldest) = self.entries.values()
+                .min_by_key(|e| e.seq)
+                .map(|e| e.key.clone())
+            else {
+                break;
+            };
+            self.entries.remove(&oldest);
+            evicted += 1;
+        }
+        evicted
     }
 
     pub fn path(&self) -> Option<&Path> {
@@ -132,16 +191,20 @@ impl DiskResultCache {
     }
 
     /// Record an executed output under `(key, digest)`. Only native
-    /// outputs spill; returns whether anything was stored. The caller
-    /// persists via [`DiskResultCache::snapshot`] +
+    /// outputs spill; `None` means nothing was stored,
+    /// `Some(evicted)` how many old entries the bound pushed out
+    /// (re-inserting a key refreshes its recency). The caller persists
+    /// via [`DiskResultCache::snapshot`] +
     /// [`TuningStore::write_atomic`] *outside* its lock.
     pub fn put(&mut self, key: &str, digest: &str, output: &Output)
-               -> bool {
+               -> Option<u64> {
         let Output::Native { artifact_id, seconds, gflops, engine,
                              kernel } = output
         else {
-            return false;
+            return None;
         };
+        let seq = self.next_seq;
+        self.next_seq += 1;
         self.entries.insert(key.to_string(), DiskEntry {
             key: key.to_string(),
             digest: digest.to_string(),
@@ -150,8 +213,9 @@ impl DiskResultCache {
             gflops: *gflops,
             engine: engine.slug().to_string(),
             kernel: kernel.clone(),
+            seq,
         });
-        true
+        Some(self.evict_to_cap())
     }
 
     /// Persistence target plus serialized bytes (`None` when detached).
@@ -176,10 +240,10 @@ impl DiskResultCache {
                 "    {{\"key\": \"{}\", \"digest\": \"{}\", \
                  \"artifact_id\": \"{}\", \"seconds\": {:.9}, \
                  \"gflops\": {gflops}, \"engine\": \"{}\", \
-                 \"kernel\": \"{}\"}}{comma}",
+                 \"kernel\": \"{}\", \"seq\": {}}}{comma}",
                 escape(&e.key), escape(&e.digest),
                 escape(&e.artifact_id), e.seconds, escape(&e.engine),
-                escape(&e.kernel));
+                escape(&e.kernel), e.seq);
         }
         out.push_str("  ]\n}\n");
         out
@@ -236,6 +300,9 @@ fn parse_entry(v: &json::Value) -> Option<DiskEntry> {
         gflops: v.get("gflops").and_then(|g| g.as_f64()),
         engine: v.get("engine")?.as_str()?.to_string(),
         kernel: v.get("kernel")?.as_str()?.to_string(),
+        // additive in schema 1: pre-bound files have no seq — read as
+        // 0 so legacy entries evict first
+        seq: v.get("seq").and_then(|n| n.as_u64()).unwrap_or(0),
     })
 }
 
@@ -257,7 +324,8 @@ mod tests {
     fn roundtrip_through_serialize() {
         let mut c = DiskResultCache::in_memory();
         assert!(c.is_empty());
-        assert!(c.put("artifact:x", "digest-1", &native("x")));
+        assert_eq!(c.put("artifact:x", "digest-1", &native("x")),
+                   Some(0));
         let reparsed = parse_entries(&c.serialize()).unwrap();
         assert_eq!(reparsed.len(), 1);
         let e = reparsed.get("artifact:x").unwrap();
@@ -290,7 +358,7 @@ mod tests {
             seconds: 0.1,
             committed: true,
         };
-        assert!(!c.put("explore:f64:64", "d", &tuned));
+        assert!(c.put("explore:f64:64", "d", &tuned).is_none());
         assert!(c.is_empty());
     }
 
@@ -352,5 +420,68 @@ mod tests {
         assert!(c.is_empty());
         assert!(c.path().is_none(), "incompatible file never clobbered");
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn cap_evicts_oldest_first_on_insert() {
+        let mut c = DiskResultCache::in_memory().with_cap(2);
+        assert_eq!(c.cap(), 2);
+        assert_eq!(c.put("k1", "d", &native("a")), Some(0));
+        assert_eq!(c.put("k2", "d", &native("b")), Some(0));
+        // third insert pushes out k1 (the oldest)
+        assert_eq!(c.put("k3", "d", &native("c")), Some(1));
+        assert_eq!(c.len(), 2);
+        assert!(c.get("k1", "d").is_none(), "oldest entry evicted");
+        assert!(c.get("k2", "d").is_some());
+        assert!(c.get("k3", "d").is_some());
+        // re-inserting k2 refreshes its recency: k3 is now oldest
+        assert_eq!(c.put("k2", "d", &native("b2")), Some(0));
+        assert_eq!(c.put("k4", "d", &native("d4")), Some(1));
+        assert!(c.get("k3", "d").is_none());
+        assert!(c.get("k2", "d").is_some());
+    }
+
+    #[test]
+    fn zero_cap_means_unbounded() {
+        let mut c = DiskResultCache::in_memory();
+        for i in 0..100 {
+            assert_eq!(c.put(&format!("k{i}"), "d", &native("x")),
+                       Some(0));
+        }
+        assert_eq!(c.len(), 100);
+    }
+
+    #[test]
+    fn seq_roundtrips_and_eviction_order_survives_reload() {
+        let dir = std::env::temp_dir().join("alpaka-diskcache-seq");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("result_cache.json");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut c = DiskResultCache::open(&path);
+            c.put("old", "d", &native("a"));
+            c.put("new", "d", &native("b"));
+            let (p, json) = c.snapshot().expect("persistent");
+            TuningStore::write_atomic(&p, &json).unwrap();
+        }
+        // reopen bounded: the persisted seq keeps "old" first in line
+        let mut c = DiskResultCache::open(&path).with_cap(2);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.put("k3", "d", &native("c")), Some(1));
+        assert!(c.get("old", "d").is_none(),
+                "persisted insertion order drives eviction");
+        assert!(c.get("new", "d").is_some());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn legacy_entries_without_seq_read_as_zero() {
+        let text = r#"{"schema": 1, "entries": [
+            {"key": "k", "digest": "d", "artifact_id": "a",
+             "seconds": 0.5, "gflops": null, "engine": "pjrt",
+             "kernel": "pjrt"}
+        ]}"#;
+        let entries = parse_entries(text).unwrap();
+        assert_eq!(entries.get("k").unwrap().seq, 0);
     }
 }

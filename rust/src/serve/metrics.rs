@@ -143,6 +143,9 @@ pub struct ServeMetrics {
     /// `cache:mem` / `cache:disk` split in replies has a metrics twin.
     cache_hits_disk: AtomicU64,
     cache_misses: AtomicU64,
+    /// Entries evicted from the bounded persistent (disk) result
+    /// cache (oldest-first on insert).
+    cache_evictions_disk: AtomicU64,
     /// High-water mark of the front (admission) queue.
     front_depth_hw: AtomicUsize,
     /// High-water mark across all shard queues.
@@ -200,6 +203,7 @@ impl ServeMetrics {
             cache_hits: AtomicU64::new(0),
             cache_hits_disk: AtomicU64::new(0),
             cache_misses: AtomicU64::new(0),
+            cache_evictions_disk: AtomicU64::new(0),
             front_depth_hw: AtomicUsize::new(0),
             shard_depth_hw: AtomicUsize::new(0),
             max_batch: AtomicUsize::new(0),
@@ -266,18 +270,25 @@ impl ServeMetrics {
         self.cache_misses.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// `n` entries evicted from the bounded disk result cache.
+    pub fn cache_evict_disk(&self, n: u64) {
+        self.cache_evictions_disk.fetch_add(n, Ordering::Relaxed);
+    }
+
     /// A session submitted one request (fair-admission tallies).
     pub fn session_submitted(&self, session: u64) {
-        self.sessions.lock().expect("session tallies poisoned")
-            .entry(session).or_default().submitted += 1;
+        // Poisoned tallies degrade to not-counted rather than panic a
+        // submit path (R2): the map is observability, not control.
+        if let Ok(mut g) = self.sessions.lock() {
+            g.entry(session).or_default().submitted += 1;
+        }
     }
 
     /// A session-tagged request resolved (as observed client-side —
     /// `Cancelled` = the pending handle was dropped before the reply).
     pub fn session_outcome(&self, session: u64,
                            outcome: SessionOutcome) {
-        let mut g = self.sessions.lock()
-            .expect("session tallies poisoned");
+        let Ok(mut g) = self.sessions.lock() else { return };
         let t = g.entry(session).or_default();
         match outcome {
             SessionOutcome::Ok => t.ok += 1,
@@ -290,8 +301,9 @@ impl ServeMetrics {
     /// Per-session tallies, sorted by session id (BTreeMap-backed —
     /// reports built from this are stable across runs).
     pub fn session_tallies(&self) -> Vec<(u64, SessionTally)> {
-        self.sessions.lock().expect("session tallies poisoned")
-            .iter().map(|(id, t)| (*id, *t)).collect()
+        self.sessions.lock()
+            .map(|g| g.iter().map(|(id, t)| (*id, *t)).collect())
+            .unwrap_or_default()
     }
 
     pub fn observe_front_depth(&self, depth: usize) {
@@ -314,7 +326,7 @@ impl ServeMetrics {
         if !(seconds > 0.0) || !(gflops >= 0.0) {
             return; // defensive: never poison the aggregate with NaN
         }
-        let mut g = self.compute.lock().expect("compute agg poisoned");
+        let Ok(mut g) = self.compute.lock() else { return };
         let e = g.entry(shard.to_string()).or_default();
         e.runs += 1;
         e.seconds += seconds;
@@ -334,8 +346,7 @@ impl ServeMetrics {
         if !(seconds > 0.0) || !seconds.is_finite() {
             return; // defensive: never poison the EWMA
         }
-        let mut g = self.service_ewma.lock()
-            .expect("service ewma poisoned");
+        let Ok(mut g) = self.service_ewma.lock() else { return };
         match g.get_mut(shard) {
             Some(e) => {
                 *e = Self::SERVICE_EWMA_ALPHA * seconds
@@ -350,8 +361,7 @@ impl ServeMetrics {
     /// The shard's current service-time EWMA in seconds, if any
     /// request has executed there.
     pub fn service_ewma(&self, shard: &str) -> Option<f64> {
-        self.service_ewma.lock().expect("service ewma poisoned")
-            .get(shard).copied()
+        self.service_ewma.lock().ok()?.get(shard).copied()
     }
 
     /// Derive an admission quota for `shard` from its service-rate
@@ -386,18 +396,18 @@ impl ServeMetrics {
         if quota == usize::MAX {
             return;
         }
-        self.derived_quota.lock().expect("derived quota poisoned")
-            .insert(shard.to_string(), quota);
+        if let Ok(mut g) = self.derived_quota.lock() {
+            g.insert(shard.to_string(), quota);
+        }
     }
 
     /// The live adaptive quotas most recently derived per shard,
     /// sorted by label. Empty unless the adaptive-quota path is active
     /// and has observed service times.
     pub fn derived_quotas(&self) -> Vec<(String, usize)> {
-        self.derived_quota.lock().expect("derived quota poisoned")
-            .iter()
-            .map(|(k, v)| (k.clone(), *v))
-            .collect()
+        self.derived_quota.lock()
+            .map(|g| g.iter().map(|(k, v)| (k.clone(), *v)).collect())
+            .unwrap_or_default()
     }
 
     /// A background tuning job was enqueued to the tuner shard.
@@ -445,8 +455,8 @@ impl ServeMetrics {
     /// are stable across runs and diffable in CI. Empty until a
     /// native run with a known flop count completes.
     pub fn compute_rates(&self) -> Vec<(String, u64, f64)> {
-        self.compute.lock().expect("compute agg poisoned")
-            .iter()
+        let Ok(g) = self.compute.lock() else { return Vec::new() };
+        g.iter()
             .map(|(label, agg)| {
                 let rate = if agg.seconds > 0.0 {
                     agg.flops / agg.seconds / 1e9
@@ -496,6 +506,10 @@ impl ServeMetrics {
 
     pub fn cache_misses(&self) -> u64 {
         self.cache_misses.load(Ordering::Relaxed)
+    }
+
+    pub fn cache_evictions_disk(&self) -> u64 {
+        self.cache_evictions_disk.load(Ordering::Relaxed)
     }
 
     /// Hits (both tiers) / (hits + misses); 0.0 before any lookup.
@@ -596,6 +610,10 @@ impl ServeMetrics {
             s.push_str(&format!(
                 "; tuning {enq} jobs ({done} done, {tshed} shed, \
                  {tfail} failed)"));
+        }
+        let evicted = self.cache_evictions_disk();
+        if evicted > 0 {
+            s.push_str(&format!("; disk cache evicted {evicted}"));
         }
         let sessions = self.session_tallies();
         if !sessions.is_empty() {

@@ -295,6 +295,11 @@ pub struct ServeConfig {
     /// Disk hits are labelled `cache:disk` in replies and counted
     /// separately in the metrics.
     pub result_cache_path: Option<PathBuf>,
+    /// Maximum entries the persistent result cache keeps (0 =
+    /// unbounded). Inserts evict oldest-first past the cap, so the
+    /// spill file cannot grow without bound; evictions are counted in
+    /// the metrics (`cache_evictions_disk`).
+    pub result_cache_cap: usize,
     /// Worker threads per simulated shard (each native shard has
     /// exactly one shard worker — the PJRT client is single-owner, and
     /// the threadpool shard parallelizes *inside* its backend).
@@ -342,7 +347,7 @@ pub struct ServeConfig {
 impl Default for ServeConfig {
     fn default() -> Self {
         Self { front_cap: 64, shard_cap: 64, max_batch: 8, cache_cap: 0,
-               result_cache_path: None,
+               result_cache_path: None, result_cache_cap: 1024,
                sim_threads: 1, native: None, native_threads: 4,
                shed: ShedPolicy::None, shard_quota: None,
                latency_budget: Duration::from_millis(250),
@@ -397,25 +402,32 @@ impl SharedDiskCache {
             .get(&Self::qualified(shard, key), digest)
     }
 
-    fn put(&self, shard: &str, key: &str, output: &Output) {
+    /// Returns how many entries the cache's bound evicted (0 when
+    /// nothing was stored or the cap was not hit).
+    fn put(&self, shard: &str, key: &str, output: &Output) -> u64 {
         use std::sync::atomic::Ordering;
 
-        let Some(digest) = self.digests.get(key) else { return };
-        let snapshot = {
-            let Ok(mut g) = self.cache.lock() else { return };
-            if !g.put(&Self::qualified(shard, key), digest, output) {
-                return;
-            }
-            if self.unflushed.fetch_add(1, Ordering::Relaxed) + 1
+        let Some(digest) = self.digests.get(key) else { return 0 };
+        let (evicted, snapshot) = {
+            let Ok(mut g) = self.cache.lock() else { return 0 };
+            let Some(evicted) =
+                g.put(&Self::qualified(shard, key), digest, output)
+            else {
+                return 0;
+            };
+            let snap = if self.unflushed
+                .fetch_add(1, Ordering::Relaxed) + 1
                 >= DISK_FLUSH_EVERY
             {
                 self.unflushed.store(0, Ordering::Relaxed);
                 g.snapshot()
             } else {
                 None
-            }
+            };
+            (evicted, snap)
         };
         Self::write(snapshot);
+        evicted
     }
 
     /// Persist the current contents (shutdown path — drains the
@@ -549,7 +561,8 @@ impl Serve {
             match (&cfg.result_cache_path, cfg.cache_cap) {
                 (Some(path), cap) if cap > 0 => {
                     Some(Arc::new(SharedDiskCache {
-                        cache: Mutex::new(DiskResultCache::open(path)),
+                        cache: Mutex::new(DiskResultCache::open(path)
+                            .with_cap(cfg.result_cache_cap)),
                         digests: native_digests(&native_src),
                         unflushed: std::sync::atomic::AtomicUsize
                             ::new(0),
@@ -689,10 +702,12 @@ impl Serve {
     /// zeros a shutdown-only fold would show.
     pub fn summary(&self) -> String {
         self.metrics.observe_front_depth(self.front.max_depth());
-        for (_, q) in self.shard_queues.lock()
-            .expect("shard registry poisoned").iter()
-        {
-            self.metrics.observe_shard_depth(q.max_depth());
+        // a poisoned registry degrades to "no shard depths folded"
+        // rather than panicking the observer thread (R2)
+        if let Ok(qs) = self.shard_queues.lock() {
+            for (_, q) in qs.iter() {
+                self.metrics.observe_shard_depth(q.max_depth());
+            }
         }
         self.metrics.summary()
     }
@@ -702,11 +717,14 @@ impl Serve {
     /// label** — spawn order depends on request arrival, which would
     /// make reports built from this nondeterministic across runs.
     pub fn shard_depths(&self) -> Vec<(String, usize, usize)> {
-        let mut depths: Vec<_> = self.shard_queues.lock()
-            .expect("shard registry poisoned")
+        let Ok(qs) = self.shard_queues.lock() else {
+            return Vec::new();
+        };
+        let mut depths: Vec<_> = qs
             .iter()
             .map(|(label, q)| (label.clone(), q.len(), q.max_depth()))
             .collect();
+        drop(qs);
         depths.sort_by(|a, b| a.0.cmp(&b.0));
         depths
     }
@@ -994,10 +1012,12 @@ fn dispatch_loop(front: Arc<BoundedQueue<ServeRequest>>, cfg: ServeConfig,
                                           &disk, &park, &metrics,
                                           &cancel) {
                             Ok(handle) => {
-                                registry.lock()
-                                    .expect("shard registry poisoned")
-                                    .push((tk.label(),
-                                           Arc::clone(&handle.queue)));
+                                // poisoned registry = shard invisible
+                                // to depth reports, still serving (R2)
+                                if let Ok(mut reg) = registry.lock() {
+                                    reg.push((tk.label(),
+                                              Arc::clone(&handle.queue)));
+                                }
                                 shards.insert(tk, handle);
                             }
                             Err(e) => {
@@ -1030,9 +1050,10 @@ fn dispatch_loop(front: Arc<BoundedQueue<ServeRequest>>, cfg: ServeConfig,
                 match spawn_shard(key, &cfg, &native_src, &store, &disk,
                                   &park, &metrics, &cancel) {
                     Ok(handle) => {
-                        registry.lock().expect("shard registry poisoned")
-                            .push((key.label(),
-                                   Arc::clone(&handle.queue)));
+                        if let Ok(mut reg) = registry.lock() {
+                            reg.push((key.label(),
+                                      Arc::clone(&handle.queue)));
+                        }
                         shards.insert(key, handle);
                     }
                     Err(e) => {
@@ -1382,9 +1403,11 @@ fn shard_loop(queue: Arc<BoundedQueue<ServeRequest>>,
                 continue;
             }
 
-            let (cached, cache_enabled) = {
-                let mut c = cache.lock().expect("cache poisoned");
-                (c.get(&key), c.enabled())
+            // a poisoned result cache degrades to miss-and-disabled:
+            // requests recompute instead of panicking the shard (R2)
+            let (cached, cache_enabled) = match cache.lock() {
+                Ok(mut c) => (c.get(&key), c.enabled()),
+                Err(_) => (None, false),
             };
             // Pre-serve wait snapshot: `queue_seconds` means "wait from
             // submission until this shard started serving the item" on
@@ -1428,8 +1451,9 @@ fn shard_loop(queue: Arc<BoundedQueue<ServeRequest>>,
                     disk.as_ref().and_then(|d| d.get(&label, &key))
                 {
                     metrics.cache_hit_disk(batch_size as u64);
-                    cache.lock().expect("cache poisoned")
-                        .put(key, output.clone());
+                    if let Ok(mut c) = cache.lock() {
+                        c.put(key, output.clone());
+                    }
                     for (req, wait) in group.into_iter().zip(waits) {
                         let latency =
                             req.enqueued.elapsed().as_secs_f64();
@@ -1470,10 +1494,14 @@ fn shard_loop(queue: Arc<BoundedQueue<ServeRequest>>,
                         // every executed native result (debounced
                         // atomic write outside the lookup lock)
                         if let Some(d) = &disk {
-                            d.put(&label, &key, &output);
+                            let evicted = d.put(&label, &key, &output);
+                            if evicted > 0 {
+                                metrics.cache_evict_disk(evicted);
+                            }
                         }
-                        cache.lock().expect("cache poisoned")
-                            .put(key, output.clone());
+                        if let Ok(mut c) = cache.lock() {
+                            c.put(key, output.clone());
+                        }
                         for (req, wait) in group.into_iter().zip(waits) {
                             let latency =
                                 req.enqueued.elapsed().as_secs_f64();

@@ -153,6 +153,7 @@ fn worker_loop(rx: Arc<Mutex<Receiver<Job>>>, panics: Arc<AtomicUsize>) {
     loop {
         let job = {
             let guard = rx.lock().expect("rx mutex poisoned");
+            // pallas-lint: allow(R1, workers contend for the shared Receiver; blocking in recv under the lock IS the hand-off protocol)
             guard.recv()
         };
         match job {

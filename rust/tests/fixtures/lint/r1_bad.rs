@@ -1,0 +1,8 @@
+// R1 bad twin: the guard stays live across thread::sleep.
+use std::sync::Mutex;
+
+fn hold_across_sleep(m: &Mutex<u64>) -> u64 {
+    let g = m.lock().unwrap();
+    std::thread::sleep(std::time::Duration::from_millis(5)); // MARK-R1
+    *g
+}

@@ -1,0 +1,19 @@
+// R1 good twin: the guard is confined to an inner scope (and the
+// condvar wait hands its guard to the call, which releases the lock).
+use std::sync::{Condvar, Mutex};
+
+fn scoped_then_sleep(m: &Mutex<u64>) -> u64 {
+    let v = {
+        let g = m.lock().unwrap();
+        *g
+    };
+    std::thread::sleep(std::time::Duration::from_millis(5));
+    v
+}
+
+fn condvar_wait(m: &Mutex<bool>, cv: &Condvar) {
+    let mut g = m.lock().unwrap();
+    while !*g {
+        g = cv.wait(g).unwrap();
+    }
+}

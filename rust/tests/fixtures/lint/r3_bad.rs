@@ -1,0 +1,9 @@
+// R3 bad twin: an Overloaded shed constructed without a counter
+// increment in the same function.
+fn reject(reply: impl FnOnce(Result<(), ServeError>)) {
+    reply(Err(ServeError::Overloaded { // MARK-R3
+        shard: "sim:knl".to_string(),
+        depth: 64,
+        quota: 64,
+    }));
+}

@@ -1,0 +1,24 @@
+// R3 good twin: the construction shares its function with a shed
+// counter, and pattern positions are not constructions.
+fn reject(metrics: &ServeMetrics,
+          reply: impl FnOnce(Result<(), ServeError>)) {
+    metrics.request_shed();
+    reply(Err(ServeError::Overloaded {
+        shard: "sim:knl".to_string(),
+        depth: 64,
+        quota: 64,
+    }));
+}
+
+fn classify(e: &ServeError) -> bool {
+    matches!(e, ServeError::Overloaded { .. })
+}
+
+fn render(e: ServeError) -> String {
+    match e {
+        ServeError::Overloaded { shard, depth, quota } => {
+            format!("{shard} {depth}/{quota}")
+        }
+        _ => String::new(),
+    }
+}

@@ -1,0 +1,17 @@
+// R4 bad twin: a counter field summary() never reads.
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub struct ServeMetrics {
+    submitted: AtomicU64,
+    dropped: AtomicU64, // MARK-R4
+}
+
+impl ServeMetrics {
+    fn submitted(&self) -> u64 {
+        self.submitted.load(Ordering::Relaxed)
+    }
+
+    pub fn summary(&self) -> String {
+        format!("{} submitted", self.submitted())
+    }
+}

@@ -1,0 +1,22 @@
+// R4 good twin: every counter reaches summary(), directly or through
+// an accessor; non-counter fields are exempt.
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+pub struct ServeMetrics {
+    submitted: AtomicU64,
+    dropped: AtomicU64,
+    compute: Mutex<BTreeMap<String, f64>>,
+}
+
+impl ServeMetrics {
+    fn submitted(&self) -> u64 {
+        self.submitted.load(Ordering::Relaxed)
+    }
+
+    pub fn summary(&self) -> String {
+        format!("{} submitted, {} dropped", self.submitted(),
+                self.dropped.load(Ordering::Relaxed))
+    }
+}

@@ -1,0 +1,10 @@
+// R5 bad twin: the target_feature fn is called without a preceding
+// feature check in the same function.
+#[target_feature(enable = "avx2")]
+unsafe fn micro_avx2(acc: &mut [f32]) {
+    acc[0] += 1.0;
+}
+
+pub fn kernel(acc: &mut [f32]) {
+    unsafe { micro_avx2(acc) } // MARK-R5
+}

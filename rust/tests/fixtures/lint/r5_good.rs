@@ -1,0 +1,14 @@
+// R5 good twin: every call is dominated by the matching runtime
+// feature check.
+#[target_feature(enable = "avx2")]
+unsafe fn micro_avx2(acc: &mut [f32]) {
+    acc[0] += 1.0;
+}
+
+pub fn kernel(acc: &mut [f32]) -> bool {
+    if std::arch::is_x86_feature_detected!("avx2") {
+        unsafe { micro_avx2(acc) }
+        return true;
+    }
+    false
+}

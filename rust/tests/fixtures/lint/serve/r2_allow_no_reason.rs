@@ -1,0 +1,7 @@
+// A reasonless allow is itself a diagnostic and suppresses nothing.
+use std::sync::Mutex;
+
+fn read_counter(m: &Mutex<u64>) -> u64 {
+    // pallas-lint: allow(R2)
+    *m.lock().unwrap()
+}

@@ -1,0 +1,8 @@
+// A reasoned allow-directive suppresses the diagnostic (and is
+// reported as used).
+use std::sync::Mutex;
+
+fn read_counter(m: &Mutex<u64>) -> u64 {
+    // pallas-lint: allow(R2, fixture exercising the suppression path)
+    *m.lock().unwrap()
+}

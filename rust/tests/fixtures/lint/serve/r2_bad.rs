@@ -1,0 +1,10 @@
+// R2 bad twin: hot-path lock().unwrap() and lock().expect().
+use std::sync::Mutex;
+
+fn read_counter(m: &Mutex<u64>) -> u64 {
+    *m.lock().unwrap() // MARK-R2
+}
+
+fn bump_counter(m: &Mutex<u64>) {
+    *m.lock().expect("poisoned") += 1;
+}

@@ -1,0 +1,13 @@
+// R2 good twin: both sanctioned degrade patterns.
+use std::sync::{Mutex, PoisonError};
+
+fn read_counter(m: &Mutex<u64>) -> u64 {
+    // observability state degrades to a default
+    let Ok(g) = m.lock() else { return 0 };
+    *g
+}
+
+fn bump_counter(m: &Mutex<u64>) {
+    // must-progress state recovers the guard
+    *m.lock().unwrap_or_else(PoisonError::into_inner) += 1;
+}

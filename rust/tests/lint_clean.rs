@@ -1,0 +1,207 @@
+//! Tier-1 gate for `pallas-lint`: the crate's own tree must be clean
+//! (zero unexplained diagnostics, every suppression reasoned), and
+//! each rule must be tripped by its bad fixture and passed by its
+//! good twin (`tests/fixtures/lint/`).
+
+use std::path::{Path, PathBuf};
+
+use alpaka_rs::analysis::{lint_files, lint_tree, Report};
+
+fn manifest_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).to_path_buf()
+}
+
+fn fixtures_root() -> PathBuf {
+    manifest_root().join("rust/tests/fixtures/lint")
+}
+
+/// Lint one fixture file (rooted at the fixture dir, so `serve/…`
+/// fixtures land in the R2 path scope).
+fn lint_fixture(rel: &str) -> Report {
+    let root = fixtures_root();
+    lint_files(&root, &[root.join(rel)]).expect("fixture lints")
+}
+
+/// The 1-indexed line containing `marker` in a fixture.
+fn marker_line(rel: &str, marker: &str) -> u32 {
+    let text = std::fs::read_to_string(fixtures_root().join(rel))
+        .expect("fixture readable");
+    for (i, l) in text.lines().enumerate() {
+        if l.contains(marker) {
+            return (i + 1) as u32;
+        }
+    }
+    panic!("{rel}: marker {marker} not found");
+}
+
+#[test]
+fn the_tree_is_clean_under_deny() {
+    let report = lint_tree(&manifest_root()).expect("tree lints");
+    assert!(
+        report.is_clean(),
+        "pallas-lint found diagnostics in the tree:\n{}",
+        report.render());
+    // every suppression must be reasoned AND load-bearing
+    for a in &report.allows {
+        assert!(!a.reason.is_empty(),
+                "{}:{} allow({}) without a reason", a.file, a.line,
+                a.rule);
+        assert!(a.used,
+                "{}:{} allow({}) suppresses nothing — remove it",
+                a.file, a.line, a.rule);
+    }
+    assert!(report.files > 30,
+            "walker saw only {} files — tree walk is broken",
+            report.files);
+}
+
+#[test]
+fn r1_bad_trips_good_passes() {
+    let bad = lint_fixture("r1_bad.rs");
+    assert_eq!(bad.diagnostics.len(), 1, "{}", bad.render());
+    assert_eq!(bad.diagnostics[0].rule, "R1");
+    assert_eq!(bad.diagnostics[0].line,
+               marker_line("r1_bad.rs", "MARK-R1"),
+               "span must pin the blocking call");
+    assert!(lint_fixture("r1_good.rs").is_clean());
+}
+
+#[test]
+fn r2_bad_trips_good_passes() {
+    let bad = lint_fixture("serve/r2_bad.rs");
+    assert_eq!(bad.diagnostics.len(), 2, "{}", bad.render());
+    assert!(bad.diagnostics.iter().all(|d| d.rule == "R2"));
+    assert_eq!(bad.diagnostics[0].line,
+               marker_line("serve/r2_bad.rs", "MARK-R2"));
+    assert!(lint_fixture("serve/r2_good.rs").is_clean(),
+            "let-else and PoisonError::into_inner are the sanctioned \
+             patterns");
+}
+
+#[test]
+fn r2_scope_is_path_based() {
+    // the same source outside serve//client//autotune is not R2's
+    // business: copy the bad fixture to the fixture root and lint it
+    let root = fixtures_root();
+    let src = std::fs::read_to_string(root.join("serve/r2_bad.rs"))
+        .unwrap();
+    let out = root.join("r2_out_of_scope_tmp.rs");
+    std::fs::write(&out, src).unwrap();
+    let rep = lint_files(&root, &[out.clone()]);
+    std::fs::remove_file(&out).unwrap();
+    assert!(rep.expect("lints").is_clean(),
+            "R2 applies only under serve//client//autotune");
+}
+
+#[test]
+fn r3_bad_trips_good_passes() {
+    let bad = lint_fixture("r3_bad.rs");
+    assert_eq!(bad.diagnostics.len(), 1, "{}", bad.render());
+    assert_eq!(bad.diagnostics[0].rule, "R3");
+    assert_eq!(bad.diagnostics[0].line,
+               marker_line("r3_bad.rs", "MARK-R3"));
+    assert!(lint_fixture("r3_good.rs").is_clean(),
+            "counted constructions and match patterns must pass");
+}
+
+#[test]
+fn r4_bad_trips_good_passes() {
+    let bad = lint_fixture("r4_bad.rs");
+    assert_eq!(bad.diagnostics.len(), 1, "{}", bad.render());
+    assert_eq!(bad.diagnostics[0].rule, "R4");
+    assert_eq!(bad.diagnostics[0].line,
+               marker_line("r4_bad.rs", "MARK-R4"),
+               "span must pin the unread field declaration");
+    assert!(bad.diagnostics[0].message.contains("`dropped`"));
+    assert!(lint_fixture("r4_good.rs").is_clean());
+}
+
+#[test]
+fn r5_bad_trips_good_passes() {
+    let bad = lint_fixture("r5_bad.rs");
+    assert_eq!(bad.diagnostics.len(), 1, "{}", bad.render());
+    assert_eq!(bad.diagnostics[0].rule, "R5");
+    assert_eq!(bad.diagnostics[0].line,
+               marker_line("r5_bad.rs", "MARK-R5"));
+    assert!(lint_fixture("r5_good.rs").is_clean());
+}
+
+#[test]
+fn reasoned_allow_suppresses_and_is_counted() {
+    let rep = lint_fixture("serve/r2_allowed.rs");
+    assert!(rep.is_clean(), "{}", rep.render());
+    assert_eq!(rep.allows.len(), 1);
+    assert!(rep.allows[0].used);
+    assert_eq!(rep.allows[0].rule, "R2");
+    assert!(rep.allows[0].reason.contains("suppression path"));
+}
+
+#[test]
+fn reasonless_allow_is_a_diagnostic_and_suppresses_nothing() {
+    let rep = lint_fixture("serve/r2_allow_no_reason.rs");
+    let rules: Vec<&str> =
+        rep.diagnostics.iter().map(|d| d.rule).collect();
+    assert!(rules.contains(&"LINT"),
+            "malformed directive must be reported: {}", rep.render());
+    assert!(rules.contains(&"R2"),
+            "malformed directive must not suppress: {}", rep.render());
+    assert!(rep.allows.is_empty());
+}
+
+#[test]
+fn json_report_shape() {
+    use alpaka_rs::util::json;
+
+    let rep = lint_fixture("serve/r2_bad.rs");
+    let v = json::parse(&rep.to_json()).expect("report JSON parses");
+    assert_eq!(v.get("schema").and_then(|s| s.as_u64()), Some(1));
+    assert_eq!(v.get("files").and_then(|s| s.as_u64()), Some(1));
+    assert_eq!(v.get("clean").and_then(|c| c.as_str()), None,
+               "clean is a bare bool, not a string");
+    assert_eq!(v.get("counts").and_then(|c| c.get("R2"))
+                   .and_then(|n| n.as_u64()),
+               Some(2));
+    assert_eq!(v.get("counts").and_then(|c| c.get("R1"))
+                   .and_then(|n| n.as_u64()),
+               Some(0), "counts carry every rule key");
+    let d = v.get("diagnostics").and_then(|d| d.idx(0))
+        .expect("diagnostic objects");
+    assert_eq!(d.get("rule").and_then(|r| r.as_str()), Some("R2"));
+    assert_eq!(d.get("file").and_then(|f| f.as_str()),
+               Some("serve/r2_bad.rs"));
+    assert!(d.get("line").and_then(|l| l.as_u64()).unwrap_or(0) > 0);
+    assert!(d.get("message").and_then(|m| m.as_str())
+                .unwrap_or("").contains("lock()"));
+}
+
+#[test]
+fn disk_cache_bound_evicts_and_is_counted() {
+    use alpaka_rs::serve::{NativeConfig, Serve, ServeConfig,
+                           WorkItem};
+
+    // cap 2, three distinct native keys -> one eviction, surfaced in
+    // the metrics summary
+    let dir = std::env::temp_dir().join(format!(
+        "alpaka-lint-evict-{}", std::process::id()));
+    let _ = std::fs::create_dir_all(&dir);
+    let path = dir.join("result_cache.json");
+    let _ = std::fs::remove_file(&path);
+    let ids = ["dot_n16_f32", "dot_n24_f32", "dot_n32_f32"];
+    let serve = Serve::start(ServeConfig {
+        cache_cap: 16,
+        result_cache_path: Some(path.clone()),
+        result_cache_cap: 2,
+        native: Some(NativeConfig::Synthetic(
+            ids.iter().map(|s| s.to_string()).collect())),
+        ..ServeConfig::default()
+    }).expect("serve starts");
+    for id in ids {
+        let r = serve.call(WorkItem::artifact(id));
+        assert!(r.is_ok(), "{r:?}");
+    }
+    let summary = serve.summary();
+    assert!(summary.contains("disk cache evicted 1"),
+            "expected eviction tail in: {summary}");
+    serve.shutdown();
+    let _ = std::fs::remove_file(&path);
+}
