@@ -1,0 +1,668 @@
+//! Tree-wide call graph for the interprocedural rules (R6–R8) — the
+//! same zero-dependency discipline as the lexer/scanner: `fn`
+//! definitions are resolved from the token stream (free fns, inherent
+//! methods keyed by their enclosing `impl` type), call edges from the
+//! three syntactic call shapes the scanner can see:
+//!
+//! * `name(` — a bare call, resolved to a free fn (same file first,
+//!   then a tree-wide unique free fn);
+//! * `self.name(` / `Self::name(` / `Type::name(` — resolved to the
+//!   inherent method `Type::name` (precise);
+//! * `recv.name(` — a method call on an arbitrary receiver, resolved
+//!   to **every** tree fn with that base name (a *fuzzy* edge). Names
+//!   on [`COMMON_METHODS`] (std-alike names like `len`/`push`/`next`)
+//!   are never fuzzy-resolved — a name match alone is meaningless for
+//!   them.
+//!
+//! Consumers pick their precision: the deadlock/blocking rules (R6,
+//! R7) follow precise edges plus fuzzy edges with a *unique* target
+//! (an over-report there would be a false alarm), while the
+//! accounting rule (R8) follows all edges (reachability is used to
+//! *discharge* obligations, so generosity errs safe). Trait-object
+//! and closure-value calls produce no edges at all — the known
+//! under-approximation documented in the crate docs.
+
+use std::collections::BTreeMap;
+
+use super::lexer::{Tok, TokKind};
+use super::scanner::{
+    fn_spans, in_ranges, is_ident, is_punct, matching, test_ranges,
+    FnSpan,
+};
+
+/// Method names too generic for fuzzy (receiver-blind) resolution.
+const COMMON_METHODS: &[&str] = &[
+    "new", "default", "clone", "drop", "fmt", "len", "is_empty",
+    "get", "insert", "remove", "contains", "contains_key", "push",
+    "pop", "next", "iter", "into_iter", "drain", "clear", "run",
+    "send", "recv", "recv_timeout", "write", "read", "flush", "start",
+    "close", "eq", "cmp",
+    "hash", "from", "into", "as_ref", "as_str", "to_string", "id",
+    "label", "name", "main", "call", "apply", "load", "store", "take",
+    "min", "max", "key",
+];
+
+/// Keywords that look like `ident (` but are never calls.
+const NOT_CALLS: &[&str] = &[
+    "if", "while", "for", "match", "loop", "return", "fn", "move",
+    "else", "in", "as", "unsafe", "let", "pub", "use", "where",
+    "impl", "box", "ref", "mut", "dyn",
+];
+
+/// One `fn` definition somewhere in the tree.
+#[derive(Debug, Clone)]
+pub struct FnDef {
+    /// Root-relative path with `/` separators.
+    pub file: String,
+    /// Base name (`submit`).
+    pub name: String,
+    /// Qualified name (`Session::submit` for inherent methods,
+    /// `dispatch_loop` for free fns) — display + root matching.
+    pub qual: String,
+    /// Enclosing `impl` self type, if any.
+    pub impl_type: Option<String>,
+    pub line: u32,
+    /// Index of this def's file in the build input.
+    pub file_idx: usize,
+    /// Body token range in its file (inclusive braces).
+    pub body_start: usize,
+    pub body_end: usize,
+    /// Inside a `#[test]`/`#[cfg(test)]` range.
+    pub in_test: bool,
+}
+
+/// One resolved call site.
+#[derive(Debug, Clone)]
+pub struct CallEdge {
+    pub caller: usize,
+    pub callee: usize,
+    /// Token index of the callee name at the call site (caller's
+    /// file), so rules can test guard scopes around it.
+    pub site: usize,
+    pub line: u32,
+    /// Method-name-only resolution (see module docs).
+    pub fuzzy: bool,
+}
+
+/// The tree-wide graph.
+#[derive(Debug, Default)]
+pub struct CallGraph {
+    pub defs: Vec<FnDef>,
+    pub edges: Vec<CallEdge>,
+    /// Outgoing edge indices per def.
+    out: Vec<Vec<usize>>,
+    /// Incoming edge indices per def.
+    inc: Vec<Vec<usize>>,
+}
+
+/// `impl` block: self type + body token range.
+struct ImplSpan {
+    ty: String,
+    body_start: usize,
+    body_end: usize,
+}
+
+/// Skip a `<…>` generic group starting at `i` (which must be `<`),
+/// returning the index just past the matching `>`. Angle brackets
+/// are not bracket-matched by the lexer, so this tracks nesting and
+/// bails (returns `i + 1`) on anything that cannot be generics.
+fn skip_generics(toks: &[Tok], i: usize) -> usize {
+    if !toks.get(i).map(|t| is_punct(t, '<')).unwrap_or(false) {
+        return i;
+    }
+    let mut depth = 0i64;
+    let mut j = i;
+    while j < toks.len() {
+        let t = &toks[j];
+        if is_punct(t, '<') {
+            depth += 1;
+        } else if is_punct(t, '>') {
+            depth -= 1;
+            if depth == 0 {
+                return j + 1;
+            }
+        } else if is_punct(t, '{') || is_punct(t, ';') {
+            return i + 1; // not generics after all
+        }
+        j += 1;
+    }
+    i + 1
+}
+
+/// The last segment of a type path starting at `i` (`a::b::Type` →
+/// `Type`), returning `(name, index past the path incl. trailing
+/// generics)`.
+fn type_path(toks: &[Tok], mut i: usize) -> Option<(String, usize)> {
+    let mut last = None;
+    loop {
+        let t = toks.get(i)?;
+        if t.kind != TokKind::Ident {
+            break;
+        }
+        last = Some(t.text.clone());
+        i += 1;
+        i = skip_generics(toks, i);
+        if is_punct(toks.get(i)?, ':')
+            && toks.get(i + 1).map(|t| is_punct(t, ':')) == Some(true)
+        {
+            i += 2;
+            continue;
+        }
+        break;
+    }
+    last.map(|n| (n, i))
+}
+
+/// All inherent/trait `impl` blocks in a file: `impl [<…>] Ty` or
+/// `impl [<…>] Tr for Ty` — the *self type* is what methods key on.
+fn impl_spans(toks: &[Tok]) -> Vec<ImplSpan> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < toks.len() {
+        if !is_ident(&toks[i], "impl") {
+            i += 1;
+            continue;
+        }
+        let mut j = skip_generics(toks, i + 1);
+        let Some((mut ty, after)) = type_path(toks, j) else {
+            i += 1;
+            continue;
+        };
+        j = after;
+        if toks.get(j).map(|t| is_ident(t, "for")) == Some(true) {
+            // `impl Trait for Ty` — Ty is the self type
+            match type_path(toks, j + 1) {
+                Some((t2, a2)) => {
+                    ty = t2;
+                    j = a2;
+                }
+                None => {
+                    i += 1;
+                    continue;
+                }
+            }
+        }
+        // skip a `where` clause to the body brace
+        while j < toks.len()
+            && !is_punct(&toks[j], '{')
+            && !is_punct(&toks[j], ';')
+        {
+            j += 1;
+        }
+        if j < toks.len() && is_punct(&toks[j], '{') {
+            if let Some(end) = matching(toks, j) {
+                out.push(ImplSpan { ty, body_start: j, body_end: end });
+                i = j + 1;
+                continue;
+            }
+        }
+        i = j + 1;
+    }
+    out
+}
+
+impl CallGraph {
+    /// Build the graph over `(path, toks)` pairs — one entry per file,
+    /// in a deterministic (sorted) order.
+    pub fn build(files: &[(String, &[Tok])]) -> CallGraph {
+        let mut g = CallGraph::default();
+        // pass 1: definitions
+        let mut per_file: Vec<(Vec<FnSpan>, Vec<(usize, usize)>)> =
+            Vec::new();
+        for (fi, (path, toks)) in files.iter().enumerate() {
+            let fns = fn_spans(toks);
+            let tests = test_ranges(toks);
+            let impls = impl_spans(toks);
+            for f in &fns {
+                let impl_type = impls
+                    .iter()
+                    .filter(|s| {
+                        s.body_start < f.body_start
+                            && f.body_end < s.body_end
+                    })
+                    .min_by_key(|s| s.body_end - s.body_start)
+                    .map(|s| s.ty.clone());
+                let qual = match &impl_type {
+                    Some(t) => format!("{t}::{}", f.name),
+                    None => f.name.clone(),
+                };
+                g.defs.push(FnDef {
+                    file: path.clone(),
+                    name: f.name.clone(),
+                    qual,
+                    impl_type,
+                    line: f.line,
+                    file_idx: fi,
+                    body_start: f.body_start,
+                    body_end: f.body_end,
+                    in_test: in_ranges(f.body_start, &tests),
+                });
+            }
+            per_file.push((fns, tests));
+        }
+        // resolution maps
+        let mut free: BTreeMap<&str, Vec<usize>> = BTreeMap::new();
+        let mut methods: BTreeMap<(&str, &str), usize> = BTreeMap::new();
+        let mut by_name: BTreeMap<&str, Vec<usize>> = BTreeMap::new();
+        for (d, def) in g.defs.iter().enumerate() {
+            by_name.entry(&def.name).or_default().push(d);
+            match &def.impl_type {
+                None => free.entry(&def.name).or_default().push(d),
+                Some(t) => {
+                    methods
+                        .entry((t.as_str(), def.name.as_str()))
+                        .or_insert(d);
+                }
+            }
+        }
+        // pass 2: call sites per def (innermost def owns the site)
+        let mut edges = Vec::new();
+        for (d, def) in g.defs.iter().enumerate() {
+            let toks: &[Tok] = files[def.file_idx].1;
+            // innermost-fn ownership: skip sites inside a nested fn
+            let nested: Vec<(usize, usize)> = per_file[def.file_idx]
+                .0
+                .iter()
+                .filter(|f| {
+                    def.body_start < f.body_start
+                        && f.body_end < def.body_end
+                })
+                .map(|f| (f.body_start, f.body_end))
+                .collect();
+            let mut k = def.body_start + 1;
+            while k < def.body_end {
+                if in_ranges(k, &nested) {
+                    k += 1;
+                    continue;
+                }
+                let Some(t) = toks.get(k) else { break };
+                if t.kind != TokKind::Ident
+                    || !toks
+                        .get(k + 1)
+                        .map(|p| is_punct(p, '('))
+                        .unwrap_or(false)
+                    || NOT_CALLS.contains(&t.text.as_str())
+                    || (k > 0 && is_ident(&toks[k - 1], "fn"))
+                {
+                    k += 1;
+                    continue;
+                }
+                let name = t.text.as_str();
+                let line = t.line;
+                let dot = k > 0 && is_punct(&toks[k - 1], '.');
+                let path = k > 1
+                    && is_punct(&toks[k - 1], ':')
+                    && is_punct(&toks[k - 2], ':');
+                let mut push = |callee: usize, fuzzy: bool| {
+                    edges.push(CallEdge {
+                        caller: d,
+                        callee,
+                        site: k,
+                        line,
+                        fuzzy,
+                    });
+                };
+                if path {
+                    // `Ty::name(` / `Self::name(`
+                    if let Some(seg) = toks
+                        .get(k.wrapping_sub(3))
+                        .filter(|t| t.kind == TokKind::Ident)
+                    {
+                        let ty = if seg.text == "Self" {
+                            def.impl_type.clone()
+                        } else {
+                            Some(seg.text.clone())
+                        };
+                        if let Some(ty) = ty {
+                            if let Some(&c) =
+                                methods.get(&(ty.as_str(), name))
+                            {
+                                push(c, false);
+                            }
+                        }
+                    }
+                } else if dot {
+                    let recv_self = k >= 2
+                        && is_ident(&toks[k - 2], "self")
+                        && !(k >= 3 && is_punct(&toks[k - 3], '.'));
+                    if recv_self {
+                        if let Some(ty) = &def.impl_type {
+                            if let Some(&c) =
+                                methods.get(&(ty.as_str(), name))
+                            {
+                                push(c, false);
+                            }
+                        }
+                    } else if !COMMON_METHODS.contains(&name) {
+                        if let Some(cands) = by_name.get(name) {
+                            for &c in cands {
+                                if c != d {
+                                    push(c, true);
+                                }
+                            }
+                        }
+                    }
+                } else {
+                    // bare call: free fn, same file first
+                    let c = free.get(name).and_then(|cands| {
+                        cands
+                            .iter()
+                            .find(|&&c| {
+                                g.defs[c].file_idx == def.file_idx
+                            })
+                            .or_else(|| {
+                                (cands.len() == 1)
+                                    .then_some(&cands[0])
+                            })
+                            .copied()
+                    });
+                    if let Some(c) = c {
+                        if c != d {
+                            push(c, false);
+                        }
+                    }
+                }
+                k += 1;
+            }
+        }
+        g.out = vec![Vec::new(); g.defs.len()];
+        g.inc = vec![Vec::new(); g.defs.len()];
+        for (e, edge) in edges.iter().enumerate() {
+            g.out[edge.caller].push(e);
+            g.inc[edge.callee].push(e);
+        }
+        g.edges = edges;
+        g
+    }
+
+    /// Outgoing edges of `def`, optionally restricted: precise edges
+    /// always; fuzzy edges only when `fuzzy_unique` is false or the
+    /// call site resolves to exactly one target.
+    pub fn callees(&self, def: usize, fuzzy_unique: bool)
+                   -> Vec<&CallEdge> {
+        self.out[def]
+            .iter()
+            .map(|&e| &self.edges[e])
+            .filter(|e| {
+                !e.fuzzy || !fuzzy_unique || {
+                    // unique = no sibling edge from the same site
+                    self.out[def]
+                        .iter()
+                        .filter(|&&o| {
+                            self.edges[o].site == e.site
+                                && self.edges[o].fuzzy
+                        })
+                        .count()
+                        == 1
+                }
+            })
+            .collect()
+    }
+
+    /// Forward BFS over all edges (fuzzy included) from `roots`,
+    /// returning every reachable def (roots included).
+    pub fn reach_forward(&self, roots: &[usize]) -> Vec<bool> {
+        let mut seen = vec![false; self.defs.len()];
+        let mut q: Vec<usize> = roots.to_vec();
+        for &r in roots {
+            seen[r] = true;
+        }
+        while let Some(d) = q.pop() {
+            for &e in &self.out[d] {
+                let c = self.edges[e].callee;
+                if !seen[c] {
+                    seen[c] = true;
+                    q.push(c);
+                }
+            }
+        }
+        seen
+    }
+
+    /// Reverse BFS (callers closure) from `roots` over all edges.
+    pub fn reach_reverse(&self, roots: &[usize]) -> Vec<bool> {
+        let mut seen = vec![false; self.defs.len()];
+        let mut q: Vec<usize> = roots.to_vec();
+        for &r in roots {
+            seen[r] = true;
+        }
+        while let Some(d) = q.pop() {
+            for &e in &self.inc[d] {
+                let c = self.edges[e].caller;
+                if !seen[c] {
+                    seen[c] = true;
+                    q.push(c);
+                }
+            }
+        }
+        seen
+    }
+
+    /// Def indices whose qualified name equals `qual`.
+    pub fn find_qual(&self, qual: &str) -> Vec<usize> {
+        self.defs
+            .iter()
+            .enumerate()
+            .filter(|(_, d)| d.qual == qual)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// GraphViz dump: one node per fn (test fns dotted), solid precise
+    /// edges, dashed fuzzy edges. Deterministic output.
+    pub fn to_dot(&self) -> String {
+        let mut s = String::from(
+            "digraph pallas_callgraph {\n  rankdir=LR;\n  \
+             node [shape=box, fontsize=9];\n");
+        for (i, d) in self.defs.iter().enumerate() {
+            s.push_str(&format!(
+                "  n{} [label=\"{}\\n{}:{}\"{}];\n",
+                i, d.qual, d.file, d.line,
+                if d.in_test { ", style=dotted" } else { "" }));
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        for e in &self.edges {
+            if seen.insert((e.caller, e.callee, e.fuzzy)) {
+                s.push_str(&format!(
+                    "  n{} -> n{}{};\n",
+                    e.caller, e.callee,
+                    if e.fuzzy { " [style=dashed]" } else { "" }));
+            }
+        }
+        s.push_str("}\n");
+        s
+    }
+}
+
+/// Strongly connected components of an arbitrary adjacency list
+/// (iterative Tarjan), in deterministic order. Shared by the
+/// call-graph API and the lock-order cycle check.
+pub fn sccs(n: usize, adj: &[Vec<usize>]) -> Vec<Vec<usize>> {
+    let mut index = vec![usize::MAX; n];
+    let mut low = vec![0usize; n];
+    let mut on_stack = vec![false; n];
+    let mut stack: Vec<usize> = Vec::new();
+    let mut next = 0usize;
+    let mut out: Vec<Vec<usize>> = Vec::new();
+    // explicit DFS: (node, child cursor)
+    for start in 0..n {
+        if index[start] != usize::MAX {
+            continue;
+        }
+        let mut work: Vec<(usize, usize)> = vec![(start, 0)];
+        while let Some(&mut (v, ref mut cursor)) = work.last_mut() {
+            if *cursor == 0 {
+                index[v] = next;
+                low[v] = next;
+                next += 1;
+                stack.push(v);
+                on_stack[v] = true;
+            }
+            if let Some(&w) = adj[v].get(*cursor) {
+                *cursor += 1;
+                if index[w] == usize::MAX {
+                    work.push((w, 0));
+                } else if on_stack[w] {
+                    low[v] = low[v].min(index[w]);
+                }
+                continue;
+            }
+            // done with v
+            work.pop();
+            if let Some(&(p, _)) = work.last() {
+                low[p] = low[p].min(low[v]);
+            }
+            if low[v] == index[v] {
+                let mut comp = Vec::new();
+                while let Some(w) = stack.pop() {
+                    on_stack[w] = false;
+                    comp.push(w);
+                    if w == v {
+                        break;
+                    }
+                }
+                comp.sort_unstable();
+                out.push(comp);
+            }
+        }
+    }
+    out.sort_by_key(|c| c[0]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::lex;
+
+    fn build(srcs: &[(&str, &str)]) -> CallGraph {
+        let lexed: Vec<(String, crate::analysis::lexer::Lexed)> = srcs
+            .iter()
+            .map(|(p, s)| (p.to_string(), lex(s)))
+            .collect();
+        let files: Vec<(String, &[Tok])> = lexed
+            .iter()
+            .map(|(p, l)| (p.clone(), l.toks.as_slice()))
+            .collect();
+        CallGraph::build(&files)
+    }
+
+    #[test]
+    fn defs_key_methods_by_impl_type() {
+        let g = build(&[(
+            "a.rs",
+            "struct S;\n\
+             impl S { fn m(&self) { self.h() } fn h(&self) {} }\n\
+             impl Display for S { fn fmt(&self) {} }\n\
+             fn free() {}",
+        )]);
+        let quals: Vec<&str> =
+            g.defs.iter().map(|d| d.qual.as_str()).collect();
+        assert_eq!(quals, vec!["S::m", "S::h", "S::fmt", "free"]);
+        // self.h() resolved precisely
+        assert_eq!(g.edges.len(), 1);
+        assert_eq!(g.defs[g.edges[0].callee].qual, "S::h");
+        assert!(!g.edges[0].fuzzy);
+    }
+
+    #[test]
+    fn bare_and_path_calls_resolve_across_files() {
+        let g = build(&[
+            ("a.rs", "fn top() { helper(); Widget::poke(); }"),
+            ("b.rs",
+             "struct Widget;\n\
+              impl Widget { fn poke() {} }\n\
+              fn helper() {}"),
+        ]);
+        let mut pairs: Vec<(String, String)> = g
+            .edges
+            .iter()
+            .map(|e| {
+                (g.defs[e.caller].qual.clone(),
+                 g.defs[e.callee].qual.clone())
+            })
+            .collect();
+        pairs.sort();
+        assert_eq!(pairs, vec![
+            ("top".to_string(), "Widget::poke".to_string()),
+            ("top".to_string(), "helper".to_string()),
+        ]);
+    }
+
+    #[test]
+    fn fuzzy_edges_skip_common_names_and_mark_fuzzy() {
+        let g = build(&[(
+            "a.rs",
+            "struct Q;\n\
+             impl Q { fn drain_all(&self) {} fn len(&self) {} }\n\
+             fn f(q: &Q) { q.drain_all(); q.len(); }",
+        )]);
+        assert_eq!(g.edges.len(), 1, "len is COMMON, drain_all is not");
+        assert!(g.edges[0].fuzzy);
+        assert_eq!(g.defs[g.edges[0].callee].qual, "Q::drain_all");
+    }
+
+    #[test]
+    fn reachability_and_sccs() {
+        let g = build(&[(
+            "a.rs",
+            "fn a() { b() }\nfn b() { c() }\nfn c() { a() }\n\
+             fn lone() {}",
+        )]);
+        let roots = g.find_qual("a");
+        let seen = g.reach_forward(&roots);
+        let reached: Vec<&str> = g
+            .defs
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| seen[*i])
+            .map(|(_, d)| d.qual.as_str())
+            .collect();
+        assert_eq!(reached, vec!["a", "b", "c"]);
+        // fn-level SCC: the a-b-c cycle is one component
+        let adj: Vec<Vec<usize>> = (0..g.defs.len())
+            .map(|d| {
+                g.callees(d, true)
+                    .into_iter()
+                    .map(|e| e.callee)
+                    .collect()
+            })
+            .collect();
+        let comps = sccs(g.defs.len(), &adj);
+        assert!(comps.iter().any(|c| c.len() == 3));
+    }
+
+    #[test]
+    fn test_fns_are_flagged_and_nested_sites_owned_innermost() {
+        let g = build(&[(
+            "a.rs",
+            "fn outer() { fn inner() { target() } inner() }\n\
+             fn target() {}\n\
+             #[cfg(test)]\nmod tests { fn t() { target() } }",
+        )]);
+        let t = g
+            .defs
+            .iter()
+            .position(|d| d.name == "t")
+            .expect("test fn present");
+        assert!(g.defs[t].in_test);
+        // target() inside `inner` belongs to inner, not outer
+        let caller_of_target: Vec<&str> = g
+            .edges
+            .iter()
+            .filter(|e| g.defs[e.callee].name == "target")
+            .map(|e| g.defs[e.caller].name.as_str())
+            .collect();
+        assert!(caller_of_target.contains(&"inner"));
+        assert!(!caller_of_target.contains(&"outer"));
+    }
+
+    #[test]
+    fn dot_dump_is_parseable_shape() {
+        let g = build(&[("a.rs", "fn a() { b() }\nfn b() {}")]);
+        let dot = g.to_dot();
+        assert!(dot.starts_with("digraph"));
+        assert!(dot.contains("n0 -> n1"));
+        assert!(dot.ends_with("}\n"));
+    }
+}

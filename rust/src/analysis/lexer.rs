@@ -261,7 +261,14 @@ fn lex_char_body(b: &[char], q: usize, mut line: u32)
     let mut j = q + 1;
     while j < n {
         match b[j] {
-            '\\' => j += 2,
+            '\\' => {
+                // the escaped char may be a line break
+                // (backslash-newline continuation)
+                if b.get(j + 1) == Some(&'\n') {
+                    line += 1;
+                }
+                j += 2;
+            }
             '\'' => {
                 j += 1;
                 break;
@@ -287,7 +294,15 @@ fn lex_escaped_string(b: &[char], start: usize, mut line: u32)
     let mut j = start;
     while j < n {
         match b[j] {
-            '\\' => j += 2,
+            '\\' => {
+                // `\` + newline is a string continuation: the skipped
+                // char is a line break, and losing it would desync
+                // every later token's (and directive's) line number
+                if b.get(j + 1) == Some(&'\n') {
+                    line += 1;
+                }
+                j += 2;
+            }
             '"' => break,
             '\n' => {
                 line += 1;
@@ -421,5 +436,51 @@ mod tests {
         assert_eq!(l.toks[0].text, "fn");
         assert_eq!(l.toks[0].kind, TokKind::Ident);
         assert_eq!(l.toks[1].text, "x");
+    }
+
+    #[test]
+    fn backslash_newline_continuation_keeps_line_numbers() {
+        // `\` + newline inside a string is a continuation; the
+        // skipped newline must still advance the line counter or
+        // every later token (and allow directive) is off by one.
+        let l = lex("let s = \"a \\\nb\";\n// pallas-lint: \
+                     allow(R2, why)\nafter");
+        let after =
+            l.toks.iter().find(|t| t.text == "after").unwrap();
+        assert_eq!(after.line, 4);
+        assert_eq!(l.comments.len(), 1);
+        assert_eq!(l.comments[0].line, 3);
+    }
+
+    #[test]
+    fn comment_marker_inside_multiline_raw_string_is_inert() {
+        // a `//` inside a raw string spanning a line boundary is
+        // string content — it must not start a comment and must not
+        // swallow a real directive on a later line
+        let l = lex("let s = r#\"line one // not a comment\n\
+                     line two\"#;\n\
+                     // pallas-lint: allow(R2, real directive)\n\
+                     tail");
+        assert_eq!(l.comments.len(), 1);
+        assert!(l.comments[0].text.contains("real directive"));
+        assert_eq!(l.comments[0].line, 3);
+        let tail = l.toks.iter().find(|t| t.text == "tail").unwrap();
+        assert_eq!(tail.line, 4);
+        let s =
+            l.toks.iter().find(|t| t.kind == TokKind::Str).unwrap();
+        assert!(s.text.contains("// not a comment"));
+    }
+
+    #[test]
+    fn directive_adjacent_to_nested_block_comment() {
+        // a nested block comment closing on the directive's line must
+        // not absorb the directive or shift its line
+        let l = lex("a /* outer /* inner */ done */\n\
+                     // pallas-lint: allow(R1, adjacency)\nb");
+        assert_eq!(l.comments.len(), 2);
+        assert_eq!(l.comments[1].line, 2);
+        assert!(l.comments[1].text.contains("adjacency"));
+        let b = l.toks.iter().find(|t| t.text == "b").unwrap();
+        assert_eq!(b.line, 3);
     }
 }

@@ -1,0 +1,700 @@
+//! Lock-state propagation over the call graph — the machinery behind
+//! R6 (lock-order cycles) and R7 (transitive lock-across-blocking).
+//!
+//! A `.lock()` site is *classified* when its receiver is a `self`
+//! field chain inside an inherent `impl`: `self.sessions.lock()` in
+//! `impl ServeMetrics` gets the identity `ServeMetrics.sessions`.
+//! That struct-field-path model is what makes lock *order* meaningful
+//! across functions and files — two different call stacks touching
+//! `ServeMetrics.sessions` are contending on the same mutex, whatever
+//! the local binding is called. Guards bound from locals, parameters,
+//! or helper returns stay unclassified: they still form scopes for R7
+//! (any held guard across a transitively-blocking call is a bug), but
+//! they never mint R6 edges — a same-named parameter in two functions
+//! is usually two different locks, and a false deadlock report would
+//! teach people to ignore the rule.
+//!
+//! Held-set propagation: while a classified guard `A` is live
+//! (its binding's scope, truncated at an explicit `drop(guard)`),
+//! every classified acquisition `B` in the same scope — directly, or
+//! anywhere in a callee resolved via precise/unique-fuzzy call edges
+//! — adds the edge `A → B` with both acquisition spans. A cycle in
+//! that graph is a potential deadlock.
+
+use std::collections::BTreeMap;
+
+use super::callgraph::{sccs, CallGraph};
+use super::lexer::{Tok, TokKind};
+use super::scanner::{is_ident, is_punct, matching};
+
+/// Blocking calls (shared with R1 — see `rules::BLOCKING`).
+use super::rules::BLOCKING;
+
+/// One guard-producing `let` inside a fn, with its live range.
+#[derive(Debug, Clone)]
+pub struct GuardSite {
+    /// Owning def (index into `CallGraph::defs`).
+    pub def: usize,
+    /// Lock identity `Type.field[.field…]`, when classifiable.
+    pub identity: Option<String>,
+    pub bindings: Vec<String>,
+    pub let_line: u32,
+    /// Line of the `.lock()` call itself.
+    pub lock_line: u32,
+    /// Binding live token range (exclusive bounds), already truncated
+    /// at an explicit `drop(binding)`.
+    pub scope: (usize, usize),
+}
+
+/// One `A → B` acquired-while-holding edge, with both spans.
+#[derive(Debug, Clone)]
+pub struct HeldEdge {
+    pub holding: String,
+    pub acquiring: String,
+    /// Where `holding` was acquired.
+    pub hold_file: String,
+    pub hold_line: u32,
+    /// Where `acquiring` was acquired (possibly in a callee).
+    pub acq_file: String,
+    pub acq_line: u32,
+    /// Call chain from the holder to the acquisition (qualified fn
+    /// names), length 1 when the acquisition is in the same fn.
+    pub chain: Vec<String>,
+}
+
+/// Lock analysis over one built call graph.
+pub struct LockInfo {
+    pub guards: Vec<GuardSite>,
+    /// Per-def directly-classified acquisitions: (identity, line).
+    direct: Vec<Vec<(String, u32)>>,
+    /// Per-def: does the body contain a direct blocking call
+    /// (`.recv(` etc.)? Line + name of the first one.
+    blocking: Vec<Option<(String, u32)>>,
+}
+
+/// Walk back from the `lock` ident at `l` (so tokens are
+/// `… . lock`) and classify a `self.f1[.f2…].lock()` receiver chain.
+fn classify_receiver(toks: &[Tok], l: usize, impl_type: Option<&str>)
+                     -> Option<String> {
+    let ty = impl_type?;
+    // expect `. lock` immediately before
+    if l == 0 || !is_punct(&toks[l - 1], '.') {
+        return None;
+    }
+    let mut fields: Vec<&str> = Vec::new();
+    let mut k = l - 1; // the `.` before `lock`
+    loop {
+        if k == 0 {
+            return None;
+        }
+        let t = &toks[k - 1];
+        if t.kind != TokKind::Ident {
+            return None;
+        }
+        if t.text == "self" {
+            // `self.` must not itself be a field access (`x.self` is
+            // not Rust anyway)
+            break;
+        }
+        fields.push(t.text.as_str());
+        if k < 2 || !is_punct(&toks[k - 2], '.') {
+            return None;
+        }
+        k -= 2;
+    }
+    if fields.is_empty() {
+        return None;
+    }
+    fields.reverse();
+    Some(format!("{ty}.{}", fields.join(".")))
+}
+
+impl LockInfo {
+    /// Build guard sites + per-def lock/blocking facts for every
+    /// non-test def. `toks_of` maps a def's `file_idx` to its tokens.
+    pub fn build(graph: &CallGraph, toks_of: &[&[Tok]]) -> LockInfo {
+        let mut guards = Vec::new();
+        let mut direct = vec![Vec::new(); graph.defs.len()];
+        let mut blocking = vec![None; graph.defs.len()];
+        for (d, def) in graph.defs.iter().enumerate() {
+            if def.in_test {
+                continue;
+            }
+            let toks = toks_of[def.file_idx];
+            for k in def.body_start + 1..def.body_end {
+                let t = &toks[k];
+                if is_ident(t, "let") {
+                    if let Some(g) = super::rules::parse_guard_let(
+                        toks, k)
+                    {
+                        let (lock_at, identity) = locate_lock(
+                            toks, k, g.scope.0,
+                            def.impl_type.as_deref());
+                        let scope =
+                            truncate_at_drop(toks, g.scope,
+                                             &g.bindings);
+                        if let Some(id) = &identity {
+                            direct[d].push((id.clone(), lock_at));
+                        }
+                        guards.push(GuardSite {
+                            def: d,
+                            identity,
+                            bindings: g.bindings,
+                            let_line: g.let_line,
+                            lock_line: lock_at,
+                            scope,
+                        });
+                    }
+                }
+                if blocking[d].is_none()
+                    && t.kind == TokKind::Ident
+                    && BLOCKING.contains(&t.text.as_str())
+                    && k > 0
+                    && (is_punct(&toks[k - 1], '.')
+                        || is_punct(&toks[k - 1], ':'))
+                    && toks.get(k + 1).map(|p| is_punct(p, '('))
+                        == Some(true)
+                {
+                    blocking[d] = Some((t.text.clone(), t.line));
+                }
+            }
+        }
+        LockInfo { guards, direct, blocking }
+    }
+
+    /// Identities acquired by `def` or (via precise/unique-fuzzy
+    /// edges) any of its callees, memoized: identity → (file, line,
+    /// chain of quals from `def`'s callee down to the acquiring fn).
+    fn acquires_closure<'a>(
+        &self,
+        graph: &'a CallGraph,
+        memo: &mut Vec<Option<AcqMap>>,
+        def: usize,
+        visiting: &mut Vec<bool>,
+    ) -> AcqMap {
+        if let Some(m) = &memo[def] {
+            return m.clone();
+        }
+        if visiting[def] {
+            return AcqMap::new(); // call-graph cycle: cut here
+        }
+        visiting[def] = true;
+        let mut out: AcqMap = AcqMap::new();
+        for (id, line) in &self.direct[def] {
+            out.entry(id.clone()).or_insert((
+                graph.defs[def].file.clone(),
+                *line,
+                Vec::new(),
+            ));
+        }
+        for e in graph.callees(def, true) {
+            if graph.defs[e.callee].in_test {
+                continue;
+            }
+            let sub = self.acquires_closure(graph, memo, e.callee,
+                                            visiting);
+            for (id, (file, line, chain)) in sub {
+                out.entry(id).or_insert_with(|| {
+                    let mut c =
+                        vec![graph.defs[e.callee].qual.clone()];
+                    c.extend(chain);
+                    (file, line, c)
+                });
+            }
+        }
+        visiting[def] = false;
+        memo[def] = Some(out.clone());
+        out
+    }
+
+    /// Whether `def` reaches a blocking call (directly or via
+    /// precise/unique-fuzzy edges); returns the chain of qualified fn
+    /// names from `def` inclusive down to the blocking fn, plus the
+    /// blocking call's name and span.
+    fn blocking_closure(
+        &self,
+        graph: &CallGraph,
+        memo: &mut Vec<Option<Option<BlockWitness>>>,
+        def: usize,
+        visiting: &mut Vec<bool>,
+    ) -> Option<BlockWitness> {
+        if let Some(m) = &memo[def] {
+            return m.clone();
+        }
+        if visiting[def] {
+            return None;
+        }
+        visiting[def] = true;
+        let mut found: Option<BlockWitness> = self.blocking[def]
+            .as_ref()
+            .map(|(name, line)| BlockWitness {
+                chain: vec![graph.defs[def].qual.clone()],
+                call: name.clone(),
+                file: graph.defs[def].file.clone(),
+                line: *line,
+            });
+        if found.is_none() {
+            for e in graph.callees(def, true) {
+                if graph.defs[e.callee].in_test {
+                    continue;
+                }
+                if let Some(w) = self.blocking_closure(
+                    graph, memo, e.callee, visiting)
+                {
+                    let mut chain =
+                        vec![graph.defs[def].qual.clone()];
+                    chain.extend(w.chain.clone());
+                    found = Some(BlockWitness { chain, ..w });
+                    break;
+                }
+            }
+        }
+        visiting[def] = false;
+        memo[def] = Some(found.clone());
+        found
+    }
+
+    /// All `A → B` held edges in the tree (deterministic order).
+    pub fn held_edges(&self, graph: &CallGraph,
+                      toks_of: &[&[Tok]]) -> Vec<HeldEdge> {
+        let mut memo = vec![None; graph.defs.len()];
+        let mut visiting = vec![false; graph.defs.len()];
+        // edge key → first witness (sites scan in sorted-file order,
+        // so "first" is deterministic)
+        let mut out: BTreeMap<(String, String), HeldEdge> =
+            BTreeMap::new();
+        for g in &self.guards {
+            let Some(hold) = &g.identity else { continue };
+            let def = &graph.defs[g.def];
+            let toks = toks_of[def.file_idx];
+            // direct: another classified acquisition in scope
+            for other in &self.guards {
+                if other.def == g.def
+                    && other.scope.0 > g.scope.0
+                    && other.scope.0 < g.scope.1
+                {
+                    if let Some(acq) = &other.identity {
+                        if acq != hold {
+                            add_edge(&mut out, HeldEdge {
+                                holding: hold.clone(),
+                                acquiring: acq.clone(),
+                                hold_file: def.file.clone(),
+                                hold_line: g.lock_line,
+                                acq_file: def.file.clone(),
+                                acq_line: other.lock_line,
+                                chain: vec![def.qual.clone()],
+                            });
+                        }
+                    }
+                }
+            }
+            // transitive: callee acquisitions while the guard is live
+            for e in graph.callees(g.def, true) {
+                if e.site <= g.scope.0 || e.site >= g.scope.1 {
+                    continue;
+                }
+                if graph.defs[e.callee].in_test
+                    || call_takes_binding(toks, e.site, &g.bindings)
+                {
+                    continue;
+                }
+                let sub = self.acquires_closure(
+                    graph, &mut memo, e.callee, &mut visiting);
+                for (acq, (file, line, chain)) in sub {
+                    if acq == *hold {
+                        continue;
+                    }
+                    let mut full = vec![def.qual.clone(),
+                                        graph.defs[e.callee]
+                                            .qual
+                                            .clone()];
+                    full.extend(chain);
+                    add_edge(&mut out, HeldEdge {
+                        holding: hold.clone(),
+                        acquiring: acq,
+                        hold_file: def.file.clone(),
+                        hold_line: g.lock_line,
+                        acq_file: file,
+                        acq_line: line,
+                        chain: full,
+                    });
+                }
+            }
+        }
+        out.into_values().collect()
+    }
+
+    /// R7 raw findings: a live guard across a call edge whose callee
+    /// transitively reaches a blocking call.
+    pub fn transitive_blocking(
+        &self,
+        graph: &CallGraph,
+        toks_of: &[&[Tok]],
+    ) -> Vec<TransBlock> {
+        let mut memo = vec![None; graph.defs.len()];
+        let mut visiting = vec![false; graph.defs.len()];
+        let mut out = Vec::new();
+        for g in &self.guards {
+            let def = &graph.defs[g.def];
+            let toks = toks_of[def.file_idx];
+            for e in graph.callees(g.def, true) {
+                if e.site <= g.scope.0 || e.site >= g.scope.1 {
+                    continue;
+                }
+                if graph.defs[e.callee].in_test
+                    || call_takes_binding(toks, e.site, &g.bindings)
+                {
+                    continue;
+                }
+                let Some(w) = self.blocking_closure(
+                    graph, &mut memo, e.callee, &mut visiting)
+                else {
+                    continue;
+                };
+                let mut chain = vec![def.qual.clone()];
+                chain.extend(w.chain.clone());
+                out.push(TransBlock {
+                    file: def.file.clone(),
+                    line: e.line,
+                    binding: g.bindings[0].clone(),
+                    let_line: g.let_line,
+                    chain,
+                    call: w.call.clone(),
+                    block_file: w.file.clone(),
+                    block_line: w.line,
+                });
+            }
+        }
+        out
+    }
+}
+
+/// Witness that a fn reaches a blocking call.
+#[derive(Debug, Clone)]
+struct BlockWitness {
+    chain: Vec<String>,
+    call: String,
+    file: String,
+    line: u32,
+}
+
+/// One R7 raw finding.
+#[derive(Debug, Clone)]
+pub struct TransBlock {
+    pub file: String,
+    pub line: u32,
+    pub binding: String,
+    pub let_line: u32,
+    /// Qualified-name chain, caller first, blocking fn last.
+    pub chain: Vec<String>,
+    pub call: String,
+    pub block_file: String,
+    pub block_line: u32,
+}
+
+type AcqMap = BTreeMap<String, (String, u32, Vec<String>)>;
+
+/// Keep the lexicographically-smallest witness per (hold, acquire)
+/// pair so the edge list is independent of file-scan order.
+fn add_edge(out: &mut BTreeMap<(String, String), HeldEdge>,
+            e: HeldEdge) {
+    let key = (e.holding.clone(), e.acquiring.clone());
+    let rank = |w: &HeldEdge| {
+        (w.hold_file.clone(), w.hold_line, w.acq_file.clone(),
+         w.acq_line, w.chain.clone())
+    };
+    match out.get_mut(&key) {
+        None => {
+            out.insert(key, e);
+        }
+        Some(cur) => {
+            if rank(&e) < rank(cur) {
+                *cur = e;
+            }
+        }
+    }
+}
+
+/// The guard binding appears in the call's argument list (condvar
+/// hand-off: `cv.wait(g)` releases the lock).
+fn call_takes_binding(toks: &[Tok], site: usize,
+                      bindings: &[String]) -> bool {
+    let open = site + 1;
+    let Some(close) = matching(toks, open) else { return false };
+    toks[open + 1..close].iter().any(|t| {
+        t.kind == TokKind::Ident && bindings.contains(&t.text)
+    })
+}
+
+/// Find the `lock` call inside the guard-let starting at `let_tok`
+/// (its initializer runs up to the scope start) and classify it.
+/// Returns (lock line, identity).
+fn locate_lock(toks: &[Tok], let_tok: usize, scope_start: usize,
+               impl_type: Option<&str>) -> (u32, Option<String>) {
+    let mut lock_at = None;
+    for k in let_tok..scope_start.min(toks.len()) {
+        if is_ident(&toks[k], "lock")
+            && toks.get(k + 1).map(|p| is_punct(p, '('))
+                == Some(true)
+        {
+            lock_at = Some(k);
+        }
+    }
+    match lock_at {
+        Some(l) => {
+            (toks[l].line, classify_receiver(toks, l, impl_type))
+        }
+        None => (toks[let_tok].line, None),
+    }
+}
+
+/// Truncate a guard scope at an explicit `drop(binding)` at the
+/// binding's own brace depth (mirrors R1's early-release handling).
+fn truncate_at_drop(toks: &[Tok], scope: (usize, usize),
+                    bindings: &[String]) -> (usize, usize) {
+    let (start, end) = scope;
+    let mut depth = 0i64;
+    let mut k = start;
+    while k < end.min(toks.len()) {
+        let t = &toks[k];
+        if is_punct(t, '{') {
+            depth += 1;
+        } else if is_punct(t, '}') {
+            depth -= 1;
+        } else if depth == 0
+            && is_ident(t, "drop")
+            && toks.get(k + 1).map(|p| is_punct(p, '('))
+                == Some(true)
+        {
+            if let Some(c) = matching(toks, k + 1) {
+                let dropped = toks[k + 2..c].iter().any(|a| {
+                    a.kind == TokKind::Ident
+                        && bindings.contains(&a.text)
+                });
+                if dropped {
+                    return (start, k);
+                }
+            }
+        }
+        k += 1;
+    }
+    (start, end)
+}
+
+/// Detect lock-order cycles over the held edges: SCCs of size ≥ 2 in
+/// the identity graph, each reported once with a concrete cycle path.
+pub fn lock_cycles(edges: &[HeldEdge]) -> Vec<Vec<&HeldEdge>> {
+    // identity index
+    let mut ids: Vec<&str> = Vec::new();
+    let mut idx: BTreeMap<&str, usize> = BTreeMap::new();
+    for e in edges {
+        for n in [e.holding.as_str(), e.acquiring.as_str()] {
+            idx.entry(n).or_insert_with(|| {
+                ids.push(n);
+                ids.len() - 1
+            });
+        }
+    }
+    let n = ids.len();
+    let mut adj: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mut by_pair: BTreeMap<(usize, usize), &HeldEdge> =
+        BTreeMap::new();
+    for e in edges {
+        let (a, b) = (idx[e.holding.as_str()],
+                      idx[e.acquiring.as_str()]);
+        adj[a].push(b);
+        by_pair.entry((a, b)).or_insert(e);
+    }
+    let mut out = Vec::new();
+    for comp in sccs(n, &adj) {
+        if comp.len() < 2 {
+            continue;
+        }
+        // walk one concrete cycle inside the component, starting at
+        // its smallest node: greedy step to the smallest intra-SCC
+        // successor until we close the loop
+        let inside: std::collections::BTreeSet<usize> =
+            comp.iter().copied().collect();
+        let start = comp[0];
+        let mut path: Vec<usize> = vec![start];
+        let mut cur = start;
+        loop {
+            let mut nexts: Vec<usize> = adj[cur]
+                .iter()
+                .copied()
+                .filter(|t| inside.contains(t))
+                .collect();
+            nexts.sort_unstable();
+            nexts.dedup();
+            // prefer closing the loop, else an unvisited node
+            let next = if nexts.contains(&start) && path.len() > 1 {
+                start
+            } else {
+                match nexts.iter().find(|t| !path.contains(t)) {
+                    Some(&t) => t,
+                    None => *nexts.first().unwrap_or(&start),
+                }
+            };
+            if next == start {
+                break;
+            }
+            if path.contains(&next) {
+                break; // defensive: malformed walk
+            }
+            path.push(next);
+            cur = next;
+        }
+        let cycle: Vec<&HeldEdge> = path
+            .iter()
+            .enumerate()
+            .filter_map(|(i, &a)| {
+                let b = path[(i + 1) % path.len()];
+                by_pair.get(&(a, b)).copied()
+            })
+            .collect();
+        if cycle.len() == path.len() && path.len() >= 2 {
+            out.push(cycle);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::lex;
+
+    fn setup(src: &str) -> (CallGraph, Vec<crate::analysis::lexer::Lexed>)
+    {
+        let lexed = vec![lex(src)];
+        let files: Vec<(String, &[Tok])> = vec![
+            ("a.rs".to_string(), lexed[0].toks.as_slice()),
+        ];
+        (CallGraph::build(&files), lexed)
+    }
+
+    const AB_BA: &str = "struct S { a: Mutex<u64>, b: Mutex<u64> }\n\
+        impl S {\n\
+        fn ab(&self) {\n\
+        let ga = self.a.lock().unwrap();\n\
+        let gb = self.b.lock().unwrap();\n\
+        drop(gb); drop(ga); }\n\
+        fn ba(&self) {\n\
+        let gb = self.b.lock().unwrap();\n\
+        let ga = self.a.lock().unwrap();\n\
+        drop(ga); drop(gb); }\n\
+        }\n";
+
+    #[test]
+    fn classified_identities_and_ab_ba_cycle() {
+        let (g, lexed) = setup(AB_BA);
+        let toks: Vec<&[Tok]> =
+            lexed.iter().map(|l| l.toks.as_slice()).collect();
+        let li = LockInfo::build(&g, &toks);
+        let ids: Vec<Option<&str>> = li
+            .guards
+            .iter()
+            .map(|s| s.identity.as_deref())
+            .collect();
+        assert_eq!(ids, vec![Some("S.a"), Some("S.b"),
+                             Some("S.b"), Some("S.a")]);
+        let edges = li.held_edges(&g, &toks);
+        let pairs: Vec<(&str, &str)> = edges
+            .iter()
+            .map(|e| (e.holding.as_str(), e.acquiring.as_str()))
+            .collect();
+        assert_eq!(pairs, vec![("S.a", "S.b"), ("S.b", "S.a")]);
+        let cycles = lock_cycles(&edges);
+        assert_eq!(cycles.len(), 1);
+        assert_eq!(cycles[0].len(), 2);
+        // both acquisition spans survive
+        assert!(cycles[0].iter().all(|e| e.acq_line > 0
+                                     && e.hold_line > 0));
+    }
+
+    #[test]
+    fn consistent_order_has_no_cycle() {
+        let src = AB_BA.replace(
+            "let gb = self.b.lock().unwrap();\n\
+             let ga = self.a.lock().unwrap();\n\
+             drop(ga); drop(gb); }",
+            "let ga = self.a.lock().unwrap();\n\
+             let gb = self.b.lock().unwrap();\n\
+             drop(gb); drop(ga); }");
+        let (g, lexed) = setup(&src);
+        let toks: Vec<&[Tok]> =
+            lexed.iter().map(|l| l.toks.as_slice()).collect();
+        let li = LockInfo::build(&g, &toks);
+        let edges = li.held_edges(&g, &toks);
+        assert!(lock_cycles(&edges).is_empty(), "{edges:?}");
+    }
+
+    #[test]
+    fn propagation_crosses_call_edges() {
+        let src = "struct S { a: Mutex<u64>, b: Mutex<u64> }\n\
+            impl S {\n\
+            fn outer(&self) {\n\
+            let g = self.a.lock().unwrap();\n\
+            self.inner();\n\
+            drop(g); }\n\
+            fn inner(&self) {\n\
+            let h = self.b.lock().unwrap();\n\
+            drop(h); }\n\
+            }\n";
+        let (g, lexed) = setup(src);
+        let toks: Vec<&[Tok]> =
+            lexed.iter().map(|l| l.toks.as_slice()).collect();
+        let li = LockInfo::build(&g, &toks);
+        let edges = li.held_edges(&g, &toks);
+        assert_eq!(edges.len(), 1);
+        assert_eq!(edges[0].holding, "S.a");
+        assert_eq!(edges[0].acquiring, "S.b");
+        assert_eq!(edges[0].chain,
+                   vec!["S::outer".to_string(),
+                        "S::inner".to_string()]);
+    }
+
+    #[test]
+    fn unclassified_guards_make_no_edges_but_block_transitively() {
+        let src = "struct S { m: Mutex<u64> }\n\
+            impl S {\n\
+            fn hold(&self, rx: &Mutex<Receiver<J>>) {\n\
+            let g = rx.lock().expect(\"rx\");\n\
+            self.helper();\n\
+            let _ = g; }\n\
+            fn helper(&self) { self.deep(); }\n\
+            fn deep(&self) { self.rx2.recv(); }\n\
+            }\n";
+        let (g, lexed) = setup(src);
+        let toks: Vec<&[Tok]> =
+            lexed.iter().map(|l| l.toks.as_slice()).collect();
+        let li = LockInfo::build(&g, &toks);
+        assert!(li.held_edges(&g, &toks).is_empty());
+        let tb = li.transitive_blocking(&g, &toks);
+        assert_eq!(tb.len(), 1, "{tb:?}");
+        assert_eq!(tb[0].chain,
+                   vec!["S::hold".to_string(),
+                        "S::helper".to_string(),
+                        "S::deep".to_string()]);
+        assert_eq!(tb[0].call, "recv");
+    }
+
+    #[test]
+    fn condvar_handoff_and_drop_exempt_transitive_blocking() {
+        let src = "struct S { m: Mutex<u64> }\n\
+            impl S {\n\
+            fn waiter(&self) {\n\
+            let mut g = self.m.lock().unwrap();\n\
+            g = self.cv.wait(g).unwrap();\n\
+            drop(g);\n\
+            self.helper(); }\n\
+            fn helper(&self) { self.rx.recv(); }\n\
+            }\n";
+        let (g, lexed) = setup(src);
+        let toks: Vec<&[Tok]> =
+            lexed.iter().map(|l| l.toks.as_slice()).collect();
+        let li = LockInfo::build(&g, &toks);
+        let tb = li.transitive_blocking(&g, &toks);
+        assert!(tb.is_empty(), "{tb:?}");
+    }
+}

@@ -8,7 +8,7 @@
 //! `std`: own lexer + lightweight scanner, no full parser) and
 //! enforces them as deny-by-default diagnostics with `file:line`
 //! spans and a machine-readable JSON report. See [`rules`] for the
-//! five invariants (R1–R5) and the crate docs for their rationale.
+//! eight invariants (R1–R8) and the crate docs for their rationale.
 //!
 //! Intentional exceptions are suppressed inline and audited:
 //!
@@ -23,14 +23,25 @@
 //! (as the block above just did) and are never parsed. Entry points: [`lint_tree`] for
 //! the standard `rust/src` + `examples` walk, [`lint_files`] for an
 //! explicit file set (fixtures, tests).
+//!
+//! Since PR 7 the analyzer is *interprocedural*: a whole-tree call
+//! graph ([`callgraph`]) feeds lock-state propagation
+//! ([`lockgraph`]) and accounting-flow checks (R6–R8 in [`rules`]).
+//! Per-file passes run in parallel on the crate's own
+//! [`crate::util::threadpool::ThreadPool`]; the graph passes run
+//! once over the combined tree.
 
+pub mod callgraph;
 pub mod lexer;
+pub mod lockgraph;
 pub mod rules;
 pub mod scanner;
 
 use std::collections::BTreeMap;
 use std::fs;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Instant;
 
 use lexer::{lex, Comment};
 use rules::{FileCtx, TargetFeatureDecl};
@@ -41,10 +52,13 @@ pub const R2: &str = "R2";
 pub const R3: &str = "R3";
 pub const R4: &str = "R4";
 pub const R5: &str = "R5";
+pub const R6: &str = "R6";
+pub const R7: &str = "R7";
+pub const R8: &str = "R8";
 /// Meta-rule: a malformed `pallas-lint:` directive.
 pub const LINT: &str = "LINT";
 
-const KNOWN_RULES: &[&str] = &[R1, R2, R3, R4, R5];
+const KNOWN_RULES: &[&str] = &[R1, R2, R3, R4, R5, R6, R7, R8];
 
 /// One finding, pinned to a source line.
 #[derive(Debug, Clone)]
@@ -67,12 +81,30 @@ pub struct AllowRecord {
     pub used: bool,
 }
 
+/// Wall time of one analysis pass, in milliseconds.
+#[derive(Debug, Clone)]
+pub struct PassTiming {
+    pub pass: &'static str,
+    pub ms: f64,
+}
+
 /// The result of linting a file set.
 #[derive(Debug, Default)]
 pub struct Report {
     pub files: usize,
     pub diagnostics: Vec<Diagnostic>,
     pub allows: Vec<AllowRecord>,
+    /// Lock-order edges (acquired-while-holding) found tree-wide —
+    /// the raw material of R6, exported for debugging even when no
+    /// cycle exists.
+    pub edges: Vec<lockgraph::HeldEdge>,
+    /// Call chains of surviving R7 findings.
+    pub chains: Vec<lockgraph::TransBlock>,
+    /// Per-pass wall time. Cleared-to-zero comparisons give
+    /// byte-stable reports; values themselves are nondeterministic.
+    pub timing: Vec<PassTiming>,
+    /// GraphViz dump of the call graph (`lint --graph`).
+    pub dot: String,
 }
 
 impl Report {
@@ -145,11 +177,55 @@ impl Report {
             })
             .collect::<Vec<_>>()
             .join(",");
+        let chain_arr = |c: &[String]| {
+            c.iter()
+                .map(|s| escape(s))
+                .collect::<Vec<_>>()
+                .join(",")
+        };
+        let edges = self
+            .edges
+            .iter()
+            .map(|e| {
+                format!(
+                    "{{\"holding\":{},\"acquiring\":{},\
+                     \"hold_file\":{},\"hold_line\":{},\
+                     \"acq_file\":{},\"acq_line\":{},\
+                     \"chain\":[{}]}}",
+                    escape(&e.holding), escape(&e.acquiring),
+                    escape(&e.hold_file), e.hold_line,
+                    escape(&e.acq_file), e.acq_line,
+                    chain_arr(&e.chain))
+            })
+            .collect::<Vec<_>>()
+            .join(",");
+        let chains = self
+            .chains
+            .iter()
+            .map(|c| {
+                format!(
+                    "{{\"file\":{},\"line\":{},\"binding\":{},\
+                     \"chain\":[{}],\"call\":{},\"block_file\":{},\
+                     \"block_line\":{}}}",
+                    escape(&c.file), c.line, escape(&c.binding),
+                    chain_arr(&c.chain), escape(&c.call),
+                    escape(&c.block_file), c.block_line)
+            })
+            .collect::<Vec<_>>()
+            .join(",");
+        let timing = self
+            .timing
+            .iter()
+            .map(|t| format!("{}:{:.3}", escape(t.pass), t.ms))
+            .collect::<Vec<_>>()
+            .join(",");
         format!(
             "{{\"schema\":1,\"clean\":{},\"files\":{},\
              \"counts\":{{{}}},\"diagnostics\":[{}],\
-             \"allows\":[{}]}}\n",
-            self.is_clean(), self.files, counts, diags, allows)
+             \"allows\":[{}],\"edges\":[{}],\"chains\":[{}],\
+             \"timing\":{{{}}}}}\n",
+            self.is_clean(), self.files, counts, diags, allows,
+            edges, chains, timing)
     }
 }
 
@@ -224,69 +300,160 @@ fn scan_directives(path: &str, comments: &[Comment])
 /// Lint an explicit set of files. `root` anchors the relative paths
 /// reported in diagnostics (and the R2 path scope); files outside
 /// `root` keep their full path.
+///
+/// Per-file work (lexing, R1–R5, directive scanning) fans out over
+/// the crate's own thread pool; the call-graph passes (R6–R8) run
+/// once over the combined tree. All output arrays are sorted by
+/// `(file, line, rule)` so the report is byte-stable regardless of
+/// input order.
 pub fn lint_files(root: &Path, files: &[PathBuf])
                   -> Result<Report, String> {
     struct Loaded {
         rel: String,
         lexed: lexer::Lexed,
+        fns: Vec<scanner::FnSpan>,
+        tests: Vec<(usize, usize)>,
     }
-    let mut loaded = Vec::new();
-    for f in files {
-        let src = fs::read_to_string(f)
-            .map_err(|e| format!("{}: {}", f.display(), e))?;
-        let rel = f
-            .strip_prefix(root)
-            .unwrap_or(f)
-            .to_string_lossy()
-            .replace('\\', "/");
-        loaded.push(Loaded { rel, lexed: lex(&src) });
+    let pool = crate::util::threadpool::ThreadPool::host_sized();
+    // --- pass 1 (parallel): read + lex + per-file derivation ---
+    let t = Instant::now();
+    let inputs: Vec<(PathBuf, String)> = files
+        .iter()
+        .map(|f| {
+            let rel = f
+                .strip_prefix(root)
+                .unwrap_or(f)
+                .to_string_lossy()
+                .replace('\\', "/");
+            (f.clone(), rel)
+        })
+        .collect();
+    let mut loaded: Vec<Loaded> = Vec::with_capacity(files.len());
+    for r in pool.try_map(inputs, |(path, rel)| {
+        fs::read_to_string(&path)
+            .map_err(|e| format!("{}: {}", path.display(), e))
+            .map(|src| {
+                let lexed = lex(&src);
+                let (fns, tests) = FileCtx::derive(&lexed.toks);
+                Loaded { rel, lexed, fns, tests }
+            })
+    }) {
+        loaded.push(
+            r.map_err(|p| format!("lint worker panicked: {p}"))??);
     }
-    // pass A: cross-file #[target_feature] declarations for R5
+    let t_lex = t.elapsed().as_secs_f64() * 1e3;
+    // --- pass A (sequential, cheap): #[target_feature] decls ---
     let mut decls: Vec<TargetFeatureDecl> = Vec::new();
     for l in &loaded {
         decls.extend(rules::collect_target_feature_decls(
             &l.rel, &l.lexed.toks));
     }
-    // pass B: the rules, then inline suppression
-    let mut report = Report { files: loaded.len(), ..Report::default() };
-    for l in &loaded {
-        let (fns, tests) = FileCtx::derive(&l.lexed.toks);
-        let ctx = FileCtx {
-            path: &l.rel,
-            toks: &l.lexed.toks,
-            fns: &fns,
-            tests: &tests,
-        };
-        let mut raw = Vec::new();
-        rules::r1_lock_across_blocking(&ctx, &mut raw);
-        rules::r2_poisoned_lock_policy(&ctx, &mut raw);
-        rules::r3_counted_shed(&ctx, &mut raw);
-        rules::r4_metrics_summary_completeness(&ctx, &mut raw);
-        rules::r5_target_feature_guard(&ctx, &decls, &mut raw);
-        let (mut allows, errs) =
-            scan_directives(&l.rel, &l.lexed.comments);
-        raw.extend(errs);
-        raw.sort_by_key(|d| d.line);
-        // an allow on line L covers diagnostics on L and L + 1
-        for d in raw {
-            let suppressed = d.rule != LINT
-                && allows.iter_mut().any(|a| {
-                    let hit = a.rule == d.rule
-                        && (d.line == a.line || d.line == a.line + 1);
-                    if hit {
-                        a.used = true;
-                    }
-                    hit
-                });
-            if !suppressed {
-                report.diagnostics.push(d);
-            }
-        }
-        report.allows.append(&mut allows);
-    }
-    report.diagnostics.sort_by(|a, b| {
-        (&a.file, a.line).cmp(&(&b.file, b.line))
+    // --- pass 2 (parallel): local rules + directives per file ---
+    let t = Instant::now();
+    let shared = Arc::new(loaded);
+    let decls = Arc::new(decls);
+    let (sh, dc) = (Arc::clone(&shared), Arc::clone(&decls));
+    let locals: Vec<(Vec<Diagnostic>, Vec<AllowRecord>)> = pool
+        .try_map((0..shared.len()).collect(), move |i: usize| {
+            let l = &sh[i];
+            let ctx = FileCtx {
+                path: &l.rel,
+                toks: &l.lexed.toks,
+                fns: &l.fns,
+                tests: &l.tests,
+            };
+            let mut raw = Vec::new();
+            rules::r1_lock_across_blocking(&ctx, &mut raw);
+            rules::r2_poisoned_lock_policy(&ctx, &mut raw);
+            rules::r3_counted_shed(&ctx, &mut raw);
+            rules::r4_metrics_summary_completeness(&ctx, &mut raw);
+            rules::r5_target_feature_guard(&ctx, &dc, &mut raw);
+            let (allows, errs) =
+                scan_directives(&l.rel, &l.lexed.comments);
+            raw.extend(errs);
+            (raw, allows)
+        })
+        .into_iter()
+        .map(|r| r.map_err(|p| format!("lint worker panicked: {p}")))
+        .collect::<Result<_, String>>()?;
+    let t_local = t.elapsed().as_secs_f64() * 1e3;
+    // --- pass 3: whole-tree call graph + lock analysis ---
+    let t = Instant::now();
+    let graph_files: Vec<(String, &[lexer::Tok])> = shared
+        .iter()
+        .map(|l| (l.rel.clone(), l.lexed.toks.as_slice()))
+        .collect();
+    let graph = callgraph::CallGraph::build(&graph_files);
+    let toks_of: Vec<&[lexer::Tok]> = shared
+        .iter()
+        .map(|l| l.lexed.toks.as_slice())
+        .collect();
+    let lockinfo = lockgraph::LockInfo::build(&graph, &toks_of);
+    let edges = lockinfo.held_edges(&graph, &toks_of);
+    let t_graph = t.elapsed().as_secs_f64() * 1e3;
+    // --- pass 4: interprocedural rules (R6–R8) ---
+    let t = Instant::now();
+    let mut interproc = Vec::new();
+    rules::r6_lock_order_cycles(&edges, &mut interproc);
+    let mut trans = lockinfo.transitive_blocking(&graph, &toks_of);
+    trans.sort_by(|a, b| {
+        (&a.file, a.line, &a.binding, &a.chain)
+            .cmp(&(&b.file, b.line, &b.binding, &b.chain))
     });
+    rules::r7_transitive_lock_blocking(&trans, &mut interproc);
+    rules::r8_error_accounting(&graph, &toks_of, &mut interproc);
+    let dot = graph.to_dot();
+    let t_interproc = t.elapsed().as_secs_f64() * 1e3;
+    // --- suppression + assembly ---
+    let mut report =
+        Report { files: shared.len(), ..Report::default() };
+    let mut allows: Vec<AllowRecord> = Vec::new();
+    let mut raw: Vec<Diagnostic> = Vec::new();
+    for (d, a) in locals {
+        raw.extend(d);
+        allows.extend(a);
+    }
+    raw.extend(interproc);
+    raw.sort_by(|a, b| {
+        (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule))
+    });
+    // an allow on line L covers diagnostics on L and L + 1
+    for d in raw {
+        let suppressed = d.rule != LINT
+            && allows.iter_mut().any(|a| {
+                let hit = a.file == d.file
+                    && a.rule == d.rule
+                    && (d.line == a.line || d.line == a.line + 1);
+                if hit {
+                    a.used = true;
+                }
+                hit
+            });
+        if !suppressed {
+            report.diagnostics.push(d);
+        }
+    }
+    allows.sort_by(|a, b| {
+        (&a.file, a.line, &a.rule).cmp(&(&b.file, b.line, &b.rule))
+    });
+    report.allows = allows;
+    // chains: call chains of R7 findings that survived suppression
+    report.chains = trans
+        .into_iter()
+        .filter(|c| {
+            report.diagnostics.iter().any(|d| {
+                d.rule == R7 && d.file == c.file && d.line == c.line
+            })
+        })
+        .collect();
+    report.edges = edges;
+    report.dot = dot;
+    report.timing = vec![
+        PassTiming { pass: "lex", ms: t_lex },
+        PassTiming { pass: "local_rules", ms: t_local },
+        PassTiming { pass: "graph", ms: t_graph },
+        PassTiming { pass: "interproc", ms: t_interproc },
+    ];
     Ok(report)
 }
 
@@ -380,7 +547,8 @@ mod tests {
     fn counts_have_stable_keys() {
         let r = Report::default();
         let c = r.counts();
-        for rule in ["R1", "R2", "R3", "R4", "R5", "LINT"] {
+        for rule in ["R1", "R2", "R3", "R4", "R5", "R6", "R7", "R8",
+                     "LINT"] {
             assert_eq!(c.get(rule), Some(&0));
         }
     }
@@ -402,6 +570,7 @@ mod tests {
                 reason: "hand-off".to_string(),
                 used: true,
             }],
+            ..Report::default()
         };
         let v = crate::util::json::parse(&r.to_json())
             .expect("report JSON parses");

@@ -26,7 +26,9 @@
 //! hold locks and unwrap freely); R3–R5 scan everything handed to
 //! them.
 
+use super::callgraph::CallGraph;
 use super::lexer::{Tok, TokKind};
+use super::lockgraph::{lock_cycles, HeldEdge, TransBlock};
 use super::scanner::{
     enclosing_fn, fn_spans, in_ranges, is_ident, is_punct, matching,
     FnSpan,
@@ -59,7 +61,7 @@ impl<'a> FileCtx<'a> {
 /// Deliberately omits names too generic to lint (`push`, `pop`) —
 /// the bounded queue's batch pops and the std blocking set cover the
 /// hazards the dispatcher/shard workers can actually hit.
-const BLOCKING: &[&str] = &[
+pub(super) const BLOCKING: &[&str] = &[
     "wait", "wait_timeout", "recv", "recv_timeout", "join", "sleep",
     "push_blocking", "pop_batch", "pop_batch_timeout",
     "read_to_string", "write_atomic",
@@ -110,11 +112,11 @@ fn is_plain_assign(toks: &[Tok], i: usize) -> bool {
 /// ---------------------------------------------------------------- R1
 
 /// One guard-producing `let` and the scope its binding lives in.
-struct GuardLet {
-    bindings: Vec<String>,
-    let_line: u32,
+pub(super) struct GuardLet {
+    pub(super) bindings: Vec<String>,
+    pub(super) let_line: u32,
     /// Token range (exclusive bounds) the binding is live in.
-    scope: (usize, usize),
+    pub(super) scope: (usize, usize),
 }
 
 /// `init` (a token subrange) ends in `.lock()` modulo guard-preserving
@@ -164,7 +166,8 @@ fn init_is_guard(toks: &[Tok], init: (usize, usize)) -> bool {
 
 /// Parse the `let` at `i` (possibly `if let`/`while let`) into a
 /// [`GuardLet`] when its initializer leaves a guard in the binding.
-fn parse_guard_let(toks: &[Tok], i: usize) -> Option<GuardLet> {
+pub(super) fn parse_guard_let(toks: &[Tok], i: usize)
+                              -> Option<GuardLet> {
     let conditional = i > 0
         && (is_ident(&toks[i - 1], "if")
             || is_ident(&toks[i - 1], "while"));
@@ -747,6 +750,356 @@ pub fn r5_target_feature_guard(ctx: &FileCtx,
                          the feature",
                         f.name),
                 ));
+            }
+        }
+    }
+}
+
+/// ----------------------------------------------------------- R6–R8
+///
+/// Interprocedural rules. Unlike R1–R5 these do not run per file:
+/// `lint_files` builds one [`CallGraph`] + lock analysis over the
+/// whole tree and hands the results here.
+
+/// R6: report each lock-order cycle once, anchored at the first
+/// edge's holding acquisition, naming *both* acquisition sites of
+/// every edge on the cycle.
+pub fn r6_lock_order_cycles(edges: &[HeldEdge],
+                            out: &mut Vec<Diagnostic>) {
+    for cycle in lock_cycles(edges) {
+        let mut order: Vec<&str> =
+            cycle.iter().map(|e| e.holding.as_str()).collect();
+        order.push(cycle[0].holding.as_str());
+        let sites: Vec<String> = cycle
+            .iter()
+            .map(|e| {
+                format!(
+                    "{} held ({}:{}) while acquiring {} ({}:{}){}",
+                    e.holding, e.hold_file, e.hold_line,
+                    e.acquiring, e.acq_file, e.acq_line,
+                    if e.chain.len() > 1 {
+                        format!(" via {}", e.chain.join(" -> "))
+                    } else {
+                        String::new()
+                    })
+            })
+            .collect();
+        let anchor = cycle[0];
+        out.push(Diagnostic {
+            rule: super::R6,
+            file: anchor.hold_file.clone(),
+            line: anchor.hold_line,
+            message: format!(
+                "lock-order cycle {} — potential deadlock: {}. \
+                 Impose one acquisition order (or narrow one guard's \
+                 scope so the second lock is taken after release)",
+                order.join(" -> "),
+                sites.join("; ")),
+        });
+    }
+}
+
+/// R7: a live guard across a call whose callee transitively reaches
+/// a blocking call. The direct (same-fn) case is R1's; this prints
+/// the full call chain down to the blocking site.
+pub fn r7_transitive_lock_blocking(finds: &[TransBlock],
+                                   out: &mut Vec<Diagnostic>) {
+    for f in finds {
+        out.push(Diagnostic {
+            rule: super::R7,
+            file: f.file.clone(),
+            line: f.line,
+            message: format!(
+                "lock guard `{}` (bound at line {}) is live across \
+                 this call, and the callee transitively blocks: {} \
+                 reaches `{}` at {}:{} — release the lock before the \
+                 call, or hoist the blocking out of the callee",
+                f.binding, f.let_line,
+                f.chain.join(" -> "),
+                f.call, f.block_file, f.block_line),
+        });
+    }
+}
+
+/// R8a variant → acceptable metrics counters. `Overloaded` keeps
+/// R3's stricter same-function contract and is deliberately absent.
+const R8_VARIANTS: &[(&str, &[&str])] = &[
+    ("Closed", &["request_failed"]),
+    ("Cancelled", &["request_cancelled"]),
+    ("Backend", &["request_failed", "tune_job_failed"]),
+];
+
+/// Entry points whose forward closure is "the serve plane" for R8a.
+fn r8_serve_roots(graph: &CallGraph) -> Vec<usize> {
+    graph
+        .defs
+        .iter()
+        .enumerate()
+        .filter(|(_, d)| {
+            !d.in_test
+                && (d.name == "dispatch_loop"
+                    || d.name == "shard_loop"
+                    || d.impl_type.as_deref() == Some("Serve"))
+        })
+        .map(|(i, _)| i)
+        .collect()
+}
+
+/// `toks[i]` starts `ServeError::<Variant>` in *value* (construction)
+/// position for an R8-tracked variant; returns the variant entry and
+/// the variant token index.
+fn r8_construction(toks: &[Tok], i: usize, stmt_floor: usize)
+                   -> Option<(&'static (&'static str,
+                               &'static [&'static str]), usize)> {
+    if !(is_ident(&toks[i], "ServeError")
+        && punct_eq(toks, i + 1, ':')
+        && punct_eq(toks, i + 2, ':'))
+    {
+        return None;
+    }
+    let variant = ident_at(toks, i + 3)?;
+    let entry = R8_VARIANTS.iter().find(|(v, _)| *v == variant)?;
+    // after the payload (tuple/struct) or the bare path
+    let mut k = i + 4;
+    if punct_eq(toks, k, '(') || punct_eq(toks, k, '{') {
+        let close = matching(toks, k)?;
+        if punct_eq(toks, k, '{') {
+            // `{ .. }` rest-pattern ⇒ match/if-let pattern
+            let rest = (k + 1..close.saturating_sub(1)).any(|j| {
+                punct_eq(toks, j, '.') && punct_eq(toks, j + 1, '.')
+            });
+            if rest {
+                return None;
+            }
+        }
+        k = close + 1;
+    }
+    while punct_eq(toks, k, ')') {
+        k += 1;
+    }
+    // pattern position: `=>` arm, `=` (if/while-let), or-pattern `|`
+    if punct_eq(toks, k, '=') || punct_eq(toks, k, '|') {
+        return None;
+    }
+    // `matches!(expr, ServeError::X)` — walk back through the
+    // statement for the macro head
+    let mut b = i;
+    while b > stmt_floor {
+        b -= 1;
+        let t = &toks[b];
+        if t.kind == TokKind::Punct
+            && matches!(t.text.as_str(), ";" | "{" | "}")
+        {
+            break;
+        }
+        if is_ident(t, "matches") && punct_eq(toks, b + 1, '!') {
+            return None;
+        }
+    }
+    Some((entry, i + 3))
+}
+
+/// R8: exhaustive error accounting.
+///
+/// * **R8a** — inside the serve plane (forward closure of
+///   `dispatch_loop` / `shard_loop` / `Serve` methods over *all*
+///   call edges), every tracked `ServeError` variant construction
+///   must see a matching metrics counter in the same fn or in some
+///   caller (reverse closure). Client-plane constructions — error
+///   *conversions*, not accounting events — are out of scope by
+///   reachability.
+/// * **R8b** — in the file defining `SessionStats`, every stats
+///   field mutation must be reachable from `Session::submit`,
+///   `drain`, or `close`; an orphan mutation path breaks
+///   `submitted == ok + shed + failed + cancelled`.
+pub fn r8_error_accounting(graph: &CallGraph, toks_of: &[&[Tok]],
+                           out: &mut Vec<Diagnostic>) {
+    use std::collections::BTreeSet;
+    // --- R8a ---
+    let scope = graph.reach_forward(&r8_serve_roots(graph));
+    let all_counters: BTreeSet<&str> = R8_VARIANTS
+        .iter()
+        .flat_map(|(_, cs)| cs.iter().copied())
+        .collect();
+    // counter calls (`.ctr(` / `::ctr(`) present in each def's body
+    let mut counters_in: Vec<Vec<&str>> =
+        vec![Vec::new(); graph.defs.len()];
+    for (d, def) in graph.defs.iter().enumerate() {
+        let toks = toks_of[def.file_idx];
+        for k in def.body_start..def.body_end {
+            if let Some(m) = ident_at(toks, k) {
+                if punct_eq(toks, k + 1, '(')
+                    && k > 0
+                    && (punct_eq(toks, k - 1, '.')
+                        || punct_eq(toks, k - 1, ':'))
+                {
+                    if let Some(&c) = all_counters.get(m) {
+                        counters_in[d].push(c);
+                    }
+                }
+            }
+        }
+    }
+    for (d, def) in graph.defs.iter().enumerate() {
+        if def.in_test || !scope[d] {
+            continue;
+        }
+        let toks = toks_of[def.file_idx];
+        for k in def.body_start..def.body_end {
+            let Some(((variant, ok_counters), vtok)) =
+                r8_construction(toks, k, def.body_start)
+            else {
+                continue;
+            };
+            let counted_here = counters_in[d]
+                .iter()
+                .any(|c| ok_counters.contains(c));
+            let counted = counted_here || {
+                let rev = graph.reach_reverse(&[d]);
+                counters_in.iter().enumerate().any(|(j, cs)| {
+                    j != d
+                        && rev[j]
+                        && !graph.defs[j].in_test
+                        && cs.iter().any(|c| ok_counters.contains(c))
+                })
+            };
+            if !counted {
+                out.push(Diagnostic {
+                    rule: super::R8,
+                    file: def.file.clone(),
+                    line: toks[vtok].line,
+                    message: format!(
+                        "ServeError::{variant} constructed in `{}` \
+                         on the serve plane without a matching \
+                         metrics counter ({}) in this function or \
+                         any caller — every error a shard or \
+                         dispatcher emits must be counted exactly \
+                         once",
+                        def.qual,
+                        ok_counters.join("/")),
+                });
+            }
+        }
+    }
+    // --- R8b ---
+    r8b_session_stats(graph, toks_of, out);
+}
+
+/// Roots for R8b reachability.
+const R8B_ROOTS: &[&str] = &["submit", "drain", "close"];
+
+fn r8b_session_stats(graph: &CallGraph, toks_of: &[&[Tok]],
+                     out: &mut Vec<Diagnostic>) {
+    // files defining `struct SessionStats`
+    let mut stats_files: Vec<usize> = Vec::new();
+    for def in &graph.defs {
+        if stats_files.contains(&def.file_idx) {
+            continue;
+        }
+        let toks = toks_of[def.file_idx];
+        if (0..toks.len()).any(|k| {
+            is_ident(&toks[k], "struct")
+                && ident_at(toks, k + 1) == Some("SessionStats")
+        }) {
+            stats_files.push(def.file_idx);
+        }
+    }
+    if stats_files.is_empty() {
+        return;
+    }
+    let roots: Vec<usize> = graph
+        .defs
+        .iter()
+        .enumerate()
+        .filter(|(_, d)| {
+            !d.in_test
+                && d.impl_type.as_deref() == Some("Session")
+                && R8B_ROOTS.contains(&d.name.as_str())
+        })
+        .map(|(i, _)| i)
+        .collect();
+    let reach = graph.reach_forward(&roots);
+    for &fi in &stats_files {
+        let toks = toks_of[fi];
+        // field names of the struct
+        let mut fields: Vec<String> = Vec::new();
+        for k in 0..toks.len() {
+            if !(is_ident(&toks[k], "struct")
+                && ident_at(toks, k + 1) == Some("SessionStats")
+                && punct_eq(toks, k + 2, '{'))
+            {
+                continue;
+            }
+            let Some(close) = matching(toks, k + 2) else { break };
+            let mut depth = 0i64;
+            for j in k + 3..close {
+                let t = &toks[j];
+                if t.kind == TokKind::Punct {
+                    match t.text.as_str() {
+                        "(" | "[" | "{" | "<" => depth += 1,
+                        ")" | "]" | "}" | ">" => depth -= 1,
+                        _ => {}
+                    }
+                }
+                if depth == 0
+                    && t.kind == TokKind::Ident
+                    && punct_eq(toks, j + 1, ':')
+                    && !punct_eq(toks, j + 2, ':')
+                    && !(j > 0 && punct_eq(toks, j - 1, ':'))
+                {
+                    fields.push(t.text.clone());
+                }
+            }
+            break;
+        }
+        if fields.is_empty() {
+            continue;
+        }
+        // mutation sites: `.field +=` / `.field = …`
+        for k in 1..toks.len() {
+            let t = &toks[k];
+            if t.kind != TokKind::Ident
+                || !fields.contains(&t.text)
+                || !punct_eq(toks, k - 1, '.')
+            {
+                continue;
+            }
+            let mutating = (punct_eq(toks, k + 1, '+')
+                && punct_eq(toks, k + 2, '='))
+                || is_plain_assign(toks, k + 1);
+            if !mutating {
+                continue;
+            }
+            let owner = graph
+                .defs
+                .iter()
+                .enumerate()
+                .filter(|(_, d)| {
+                    d.file_idx == fi
+                        && d.body_start < k
+                        && k < d.body_end
+                })
+                .min_by_key(|(_, d)| d.body_end - d.body_start);
+            match owner {
+                None => { /* initializer expressions etc. */ }
+                Some((d, def)) => {
+                    if def.in_test || reach[d] {
+                        continue;
+                    }
+                    out.push(Diagnostic {
+                        rule: super::R8,
+                        file: def.file.clone(),
+                        line: t.line,
+                        message: format!(
+                            "SessionStats.{} mutated in `{}`, which \
+                             is not reachable from Session::{} — \
+                             orphan mutation paths break the \
+                             `submitted == ok + shed + failed + \
+                             cancelled` identity",
+                            t.text, def.qual,
+                            R8B_ROOTS.join("/Session::")),
+                    });
+                }
             }
         }
     }

@@ -236,9 +236,9 @@
 //!
 //! The contracts above live at seams the compiler does not check, so
 //! the crate lints **its own sources** ([`analysis`], CLI `alpaka-bench
-//! lint [--deny] [--json PATH]`, tier-1 gate `tests/lint_clean.rs`).
-//! Five rules, each encoding a convention an earlier layer
-//! established:
+//! lint [--deny] [--json PATH] [--graph DOT]`, tier-1 gate
+//! `tests/lint_clean.rs`). Eight rules, each encoding a convention an
+//! earlier layer established:
 //!
 //! * **R1 — lock-across-blocking.** No `MutexGuard` binding may stay
 //!   live across a blocking call (`wait`/`recv`/`sleep`/bounded-queue
@@ -270,8 +270,61 @@
 //!   microkernel dispatch convention from the tuned-GEMM PR) —
 //!   anything less is undefined behaviour on older CPUs.
 //!
-//! R1/R2 skip `#[cfg(test)]`/`#[test]` items; R3–R5 scan everything
-//! under `rust/src` and `examples`.
+//! R6–R8 are **interprocedural**: PR 7 grows the analyzer a whole-tree
+//! call graph ([`analysis::callgraph`]) and a lock graph
+//! ([`analysis::lockgraph`]) on top of the same token scanner — still
+//! zero dependencies, no full parser.
+//!
+//! * **R6 — lock-order cycles.** A lock's *identity* is the struct
+//!   field path behind a `self.field[.field…].lock()` receiver inside
+//!   an `impl` block (e.g. `Pair.a`); guards bound from locals or
+//!   parameters participate in guard scopes but never in ordering
+//!   edges. Whenever one identity's guard is still live while another
+//!   identity is acquired — in the same function, or transitively
+//!   through calls made inside the guard's scope — the analyzer
+//!   records a held-while-acquiring edge. Cycles among these edges
+//!   (Tarjan SCCs on the identity graph) are deadlocks-in-waiting;
+//!   the diagnostic names **every** acquisition site on the cycle,
+//!   with the call chain for transitive edges.
+//! * **R7 — transitive lock-across-blocking.** R1's contract, pushed
+//!   through the call graph: a guard live across a call whose callee
+//!   *transitively* reaches a blocking call (`wait`/`recv`/`sleep`/
+//!   bounded-queue pops/file I/O) is flagged at the call site, with
+//!   the full chain down to the blocking line. Condvar-style callees
+//!   that take the guard as an argument are exempt, as in R1.
+//! * **R8 — exhaustive error accounting.** On the serve plane (every
+//!   fn reachable from a dispatch/shard loop or `impl Serve`), each
+//!   construction of `ServeError::Closed`/`Cancelled`/`Backend` must
+//!   be matched by the corresponding metrics counter in the same
+//!   function or in a (non-test) caller — `Overloaded` stays R3's
+//!   same-function contract. Additionally, every `SessionStats` field
+//!   mutation must be reachable from `Session::submit`/`drain`/
+//!   `close`: orphan mutation paths would break the
+//!   `submitted == ok + shed + failed + cancelled` identity (PR 5).
+//!
+//! **Resolution model and its limits.** Call edges come from three
+//! token shapes: bare `name(` (same-file free fn, else tree-unique),
+//! `Ty::name(`/`Self::name(` (precise method), and `recv.name(`
+//! (precise for `self.`, otherwise *fuzzy* — edges to every method of
+//! that name, except ubiquitous std-ish names like `send`/`recv`/
+//! `push`/`clone`). R6/R7 only follow a fuzzy edge when it is the
+//! call site's unique candidate (over-approximating would invent
+//! deadlocks); R8 follows **all** edges, because for an
+//! obligation-discharging analysis the safe error is a false alarm,
+//! not a silent pass. Known under-approximations: calls through
+//! closures, trait objects and function pointers produce no edges;
+//! helpers that *return* a guard are invisible to guard tracking; a
+//! guard dropped via `drop(g)` ends its scope only at statement
+//! depth 0. "Counted exactly once" is enforced as at-least-one
+//! counter on the caller path — double counting is not detected.
+//!
+//! R1/R2/R6/R7 skip `#[cfg(test)]`/`#[test]` items; R3–R5 and R8
+//! scan everything under `rust/src` and `examples` (R8 skips test
+//! fns). `--graph` dumps the call graph as GraphViz DOT (dashed =
+//! fuzzy edge, dotted = test fn); the JSON report carries the
+//! held-lock `edges`, R7 `chains`, and per-pass `timing` — lexing
+//! and per-file rules run on a host-sized thread pool, graph passes
+//! run once on the assembled tree.
 
 pub mod analysis;
 pub mod arch;

@@ -192,7 +192,7 @@ fn cli() -> Cli {
             CommandSpec {
                 name: "lint",
                 about: "pallas-lint: machine-check the crate's \
-                        concurrency/accounting invariants (R1-R5) \
+                        concurrency/accounting invariants (R1-R8) \
                         over its own sources",
                 opts: vec![
                     OptSpec::flag("deny",
@@ -201,6 +201,10 @@ fn cli() -> Cli {
                     OptSpec::value("json", None,
                                    "write the machine-readable report \
                                     to this path"),
+                    OptSpec::value("graph", None,
+                                   "dump the interprocedural call \
+                                    graph (GraphViz DOT) to this \
+                                    path"),
                     OptSpec::value("root", None,
                                    "tree to lint: directory holding \
                                     rust/src and examples (default: \
@@ -699,6 +703,10 @@ fn cmd_lint(p: &Parsed) -> Result<()> {
     if let Some(path) = p.get("json") {
         std::fs::write(path, report.to_json())?;
         eprintln!("lint report written to {path}");
+    }
+    if let Some(path) = p.get("graph") {
+        std::fs::write(path, &report.dot)?;
+        eprintln!("call graph (DOT) written to {path}");
     }
     if p.has_flag("deny") && !report.is_clean() {
         anyhow::bail!("pallas-lint: {} diagnostic(s) (deny mode)",

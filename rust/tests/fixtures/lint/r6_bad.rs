@@ -1,0 +1,23 @@
+// R6 bad twin: AB/BA lock-order cycle. `ab` takes Pair.a then
+// Pair.b; `ba` takes Pair.b then Pair.a. Two threads interleaving
+// the two methods deadlock.
+use std::sync::Mutex;
+
+struct Pair {
+    a: Mutex<u64>,
+    b: Mutex<u64>,
+}
+
+impl Pair {
+    fn ab(&self) -> u64 {
+        let ga = self.a.lock().unwrap(); // MARK-R6-AB
+        let gb = self.b.lock().unwrap();
+        *ga + *gb
+    }
+
+    fn ba(&self) -> u64 {
+        let gb = self.b.lock().unwrap(); // MARK-R6-BA
+        let ga = self.a.lock().unwrap();
+        *ga + *gb
+    }
+}

@@ -1,0 +1,22 @@
+// R6 good twin: both methods take the locks in the same order
+// (Pair.a before Pair.b) — a total acquisition order, no cycle.
+use std::sync::Mutex;
+
+struct Pair {
+    a: Mutex<u64>,
+    b: Mutex<u64>,
+}
+
+impl Pair {
+    fn sum(&self) -> u64 {
+        let ga = self.a.lock().unwrap();
+        let gb = self.b.lock().unwrap();
+        *ga + *gb
+    }
+
+    fn product(&self) -> u64 {
+        let ga = self.a.lock().unwrap();
+        let gb = self.b.lock().unwrap();
+        *ga * *gb
+    }
+}

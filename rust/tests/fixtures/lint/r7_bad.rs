@@ -1,0 +1,26 @@
+// R7 bad twin: a guard live across a call whose callee reaches a
+// blocking `recv` three frames down — invisible to the intra-scope
+// R1, caught by call-graph propagation.
+use std::sync::mpsc::Receiver;
+use std::sync::Mutex;
+
+struct Deep {
+    state: Mutex<u64>,
+    rx: Receiver<u64>,
+}
+
+impl Deep {
+    fn entry(&self) -> u64 {
+        let g = self.state.lock().unwrap();
+        let v = self.step_one(); // MARK-R7
+        *g + v
+    }
+
+    fn step_one(&self) -> u64 {
+        self.step_two()
+    }
+
+    fn step_two(&self) -> u64 {
+        self.rx.recv().unwrap_or(0)
+    }
+}

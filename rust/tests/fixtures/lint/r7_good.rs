@@ -1,0 +1,27 @@
+// R7 good twin: the guard is confined to an inner scope and released
+// before the call chain that blocks.
+use std::sync::mpsc::Receiver;
+use std::sync::Mutex;
+
+struct Deep {
+    state: Mutex<u64>,
+    rx: Receiver<u64>,
+}
+
+impl Deep {
+    fn entry(&self) -> u64 {
+        let v = {
+            let g = self.state.lock().unwrap();
+            *g
+        };
+        v + self.step_one()
+    }
+
+    fn step_one(&self) -> u64 {
+        self.step_two()
+    }
+
+    fn step_two(&self) -> u64 {
+        self.rx.recv().unwrap_or(0)
+    }
+}

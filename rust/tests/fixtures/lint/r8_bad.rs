@@ -1,0 +1,28 @@
+// R8 bad twin: an uncounted `ServeError::Closed` on the dispatcher
+// path (no metrics counter in the constructing fn or any caller),
+// and a SessionStats mutation unreachable from the session entry
+// points (submit/drain/close) — an orphan path that breaks
+// `submitted == ok + shed + failed + cancelled`.
+
+fn dispatch_loop(reply: impl FnOnce(Result<(), ServeError>)) {
+    reply(Err(ServeError::Closed)); // MARK-R8
+}
+
+struct SessionStats {
+    submitted: u64,
+    ok: u64,
+}
+
+struct Session {
+    stats: SessionStats,
+}
+
+impl Session {
+    fn submit(&mut self) {
+        self.stats.submitted += 1;
+    }
+}
+
+fn sneaky(stats: &mut SessionStats) {
+    stats.ok += 1; // MARK-R8B
+}

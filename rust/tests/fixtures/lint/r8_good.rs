@@ -1,0 +1,46 @@
+// R8 good twin: the dispatcher counts the `Closed` it constructs;
+// `Backend` constructed in a callee is counted by the dispatcher
+// (caller on the path); match arms and `matches!` probes are
+// patterns, not accounting events; every SessionStats mutation is
+// reachable from Session::submit.
+
+fn dispatch_loop(metrics: &ServeMetrics,
+                 reply: impl FnOnce(Result<(), ServeError>)) {
+    metrics.request_failed();
+    reply(Err(ServeError::Closed));
+    let e = last_error();
+    let _ = matches!(e, ServeError::Closed);
+    let _ = note(&e);
+}
+
+fn last_error() -> ServeError {
+    ServeError::Backend("probe".to_string())
+}
+
+fn note(e: &ServeError) -> &'static str {
+    match e {
+        ServeError::Closed => "closed",
+        ServeError::Backend(_) => "backend",
+        _ => "other",
+    }
+}
+
+struct SessionStats {
+    submitted: u64,
+    ok: u64,
+}
+
+struct Session {
+    stats: SessionStats,
+}
+
+impl Session {
+    fn submit(&mut self) {
+        self.stats.submitted += 1;
+        self.bump_ok();
+    }
+
+    fn bump_ok(&mut self) {
+        self.stats.ok += 1;
+    }
+}

@@ -1,0 +1,20 @@
+// Lexer adjacency regression. The raw string below spans a line
+// boundary and contains `//` that must stay inert; the escaped
+// string uses a backslash-newline continuation; the nested block
+// comment closes just above the directive. If the lexer drops a
+// line in any of them, the allow drifts off its violation and this
+// fixture stops being clean (the test also pins the allow's line).
+
+fn banner() -> &'static str {
+    r#"multi-line // not a comment
+end"#
+}
+
+fn cont() -> &'static str {
+    "continued \
+line"
+}
+
+/* outer /* inner */ adjacency */
+// pallas-lint: allow(R2, lexer line-sync regression fixture)
+fn probe(m: &std::sync::Mutex<u64>) -> u64 { *m.lock().unwrap() } // MARK-LEX

@@ -127,6 +127,111 @@ fn r5_bad_trips_good_passes() {
 }
 
 #[test]
+fn r6_bad_trips_good_passes() {
+    let bad = lint_fixture("r6_bad.rs");
+    assert_eq!(bad.diagnostics.len(), 1, "{}", bad.render());
+    let d = &bad.diagnostics[0];
+    assert_eq!(d.rule, "R6");
+    let ab = marker_line("r6_bad.rs", "MARK-R6-AB");
+    let ba = marker_line("r6_bad.rs", "MARK-R6-BA");
+    // anchored at one acquisition, naming BOTH acquisition sites
+    assert!(d.line == ab || d.line == ba, "{}", bad.render());
+    assert!(d.message.contains(&format!("r6_bad.rs:{ab}")),
+            "{}", d.message);
+    assert!(d.message.contains(&format!("r6_bad.rs:{ba}")),
+            "{}", d.message);
+    assert!(d.message.contains("Pair.a")
+                && d.message.contains("Pair.b"),
+            "cycle must name the lock identities: {}", d.message);
+    // both acquired-while-holding edges are exported
+    assert_eq!(bad.edges.len(), 2, "{:?}", bad.edges);
+    let good = lint_fixture("r6_good.rs");
+    assert!(good.is_clean(), "{}", good.render());
+    // consistent order still yields the (single) edge, no cycle
+    assert_eq!(good.edges.len(), 1, "{:?}", good.edges);
+}
+
+#[test]
+fn r7_bad_trips_good_passes() {
+    let bad = lint_fixture("r7_bad.rs");
+    assert_eq!(bad.diagnostics.len(), 1, "{}", bad.render());
+    let d = &bad.diagnostics[0];
+    assert_eq!(d.rule, "R7");
+    assert_eq!(d.line, marker_line("r7_bad.rs", "MARK-R7"),
+               "span must pin the call the guard is live across");
+    for frame in ["Deep::entry", "Deep::step_one", "Deep::step_two"]
+    {
+        assert!(d.message.contains(frame),
+                "full chain must be printed: {}", d.message);
+    }
+    assert!(d.message.contains("`recv`"), "{}", d.message);
+    assert_eq!(bad.chains.len(), 1, "{:?}", bad.chains);
+    assert_eq!(bad.chains[0].chain.len(), 3);
+    let good = lint_fixture("r7_good.rs");
+    assert!(good.is_clean(), "{}", good.render());
+    assert!(good.chains.is_empty());
+}
+
+#[test]
+fn r8_bad_trips_good_passes() {
+    let bad = lint_fixture("r8_bad.rs");
+    assert_eq!(bad.diagnostics.len(), 2, "{}", bad.render());
+    assert!(bad.diagnostics.iter().all(|d| d.rule == "R8"));
+    assert_eq!(bad.diagnostics[0].line,
+               marker_line("r8_bad.rs", "MARK-R8"),
+               "span must pin the uncounted construction");
+    assert!(bad.diagnostics[0].message.contains("ServeError::Closed"),
+            "{}", bad.diagnostics[0].message);
+    assert_eq!(bad.diagnostics[1].line,
+               marker_line("r8_bad.rs", "MARK-R8B"),
+               "span must pin the orphan stats mutation");
+    assert!(bad.diagnostics[1].message.contains("SessionStats.ok"),
+            "{}", bad.diagnostics[1].message);
+    let good = lint_fixture("r8_good.rs");
+    assert!(good.is_clean(),
+            "counted constructions, caller-side counters, and \
+             patterns must pass: {}",
+            good.render());
+}
+
+#[test]
+fn lexer_edges_stay_line_synced() {
+    // raw string spanning a line boundary with `//` inside, a
+    // backslash-newline continuation, and a nested block comment
+    // adjacent to the directive: the allow must still land exactly
+    // on its violation
+    let rep = lint_fixture("serve/lexer_edges.rs");
+    assert!(rep.is_clean(), "{}", rep.render());
+    assert_eq!(rep.allows.len(), 1);
+    assert!(rep.allows[0].used,
+            "the allow drifted off its violation — lexer line desync");
+    assert_eq!(rep.allows[0].line,
+               marker_line("serve/lexer_edges.rs", "MARK-LEX") - 1);
+}
+
+#[test]
+fn report_is_byte_stable_across_input_order() {
+    let root = fixtures_root();
+    let mut files = vec![
+        root.join("r6_bad.rs"),
+        root.join("r7_bad.rs"),
+        root.join("r8_bad.rs"),
+        root.join("serve/r2_bad.rs"),
+        root.join("r1_bad.rs"),
+    ];
+    let mut a = lint_files(&root, &files).expect("lints");
+    files.reverse();
+    let mut b = lint_files(&root, &files).expect("lints");
+    // timing is wall-clock — the only legitimately nondeterministic
+    // field; everything else must be byte-identical
+    for t in a.timing.iter_mut().chain(b.timing.iter_mut()) {
+        t.ms = 0.0;
+    }
+    assert_eq!(a.to_json(), b.to_json(),
+               "report must be byte-stable regardless of input order");
+}
+
+#[test]
 fn reasoned_allow_suppresses_and_is_counted() {
     let rep = lint_fixture("serve/r2_allowed.rs");
     assert!(rep.is_clean(), "{}", rep.render());
@@ -172,6 +277,14 @@ fn json_report_shape() {
     assert!(d.get("line").and_then(|l| l.as_u64()).unwrap_or(0) > 0);
     assert!(d.get("message").and_then(|m| m.as_str())
                 .unwrap_or("").contains("lock()"));
+    // PR 7 additive fields (schema stays 1)
+    assert!(v.get("edges").is_some(), "edges array present");
+    assert!(v.get("chains").is_some(), "chains array present");
+    let timing = v.get("timing").expect("timing object present");
+    for pass in ["lex", "local_rules", "graph", "interproc"] {
+        assert!(timing.get(pass).and_then(|t| t.as_f64()).is_some(),
+                "timing carries pass `{pass}`");
+    }
 }
 
 #[test]
