@@ -40,6 +40,7 @@ fn main() -> alpaka_rs::Result<()> {
     let session = Session::open(&serve, SessionConfig {
         window: 4,
         on_full: WindowPolicy::Block,
+        ..SessionConfig::default()
     });
     let first = artifact_ids[0].clone();
     let mut p = Pipeline::new();

@@ -1,0 +1,280 @@
+//! Chaos acceptance bench for the self-healing serve layer — the same
+//! closed-loop driver as `serve_load`, but with the deterministic
+//! fault-injection plane lit up:
+//!
+//! 1. **Baseline**: a fault-free closed loop (no result cache — every
+//!    request does real work) establishing the goodput yardstick.
+//! 2. **Chaos**: the identical load with ~10% injected faults
+//!    (backend errors at the rate, output corruption and worker panics
+//!    at half of it) and a budgeted retry of 4 attempts. Gates: zero
+//!    lost replies (exact `ok + shed + failed == submitted`
+//!    accounting), goodput >= 0.7x the fault-free baseline, retries
+//!    and worker restarts actually observed, and failures post-retry
+//!    staying rare.
+//! 3. **Replayability**: two sequential single-client runs from the
+//!    same chaos seed must produce byte-identical per-site
+//!    (drawn, fired) fingerprints — chaos runs replay from seed.
+//! 4. **Quarantine attribution**: a permanently failing artifact must
+//!    trip the circuit breaker after its threshold and fail fast with
+//!    `ServeError::Quarantined` naming THAT artifact.
+//!
+//! Emits `BENCH_chaos.json` for the CI perf-trajectory artifact.
+//!
+//! Run with: `cargo bench --bench chaos_serve`.
+
+use std::path::Path;
+use std::process::ExitCode;
+use std::sync::Arc;
+use std::time::Duration;
+
+use alpaka_rs::arch::ArchId;
+use alpaka_rs::serve::{loadgen, FaultPlan, FaultSite, NativeConfig,
+                       QuarantinePolicy, RetryPolicy, Serve,
+                       ServeConfig, ServeError, ShedPolicy, WorkItem};
+
+const CLIENTS: usize = 8;
+const REQUESTS_PER_CLIENT: usize = 30;
+const CHAOS_SEED: u64 = 2017;
+const FAULT_RATE: f64 = 0.10;
+const RETRIES: u32 = 4;
+const GOODPUT_FLOOR: f64 = 0.7;
+
+/// The shared load-shaped config: no result cache (goodput must
+/// measure real work, and retries must re-execute, not re-hit), both
+/// named native shards plus two simulated architectures.
+fn load_config(native: NativeConfig) -> ServeConfig {
+    ServeConfig {
+        front_cap: 64,
+        shard_cap: 64,
+        max_batch: 8,
+        cache_cap: 0,
+        sim_threads: 2,
+        native: Some(native),
+        native_threads: 2,
+        shed: ShedPolicy::None,
+        shard_quota: None,
+        ..ServeConfig::default()
+    }
+}
+
+/// One sequential (single-client, window-1) chaos run for the replay
+/// fingerprint: with exactly one request in flight at a time, the
+/// per-site draw order is the request order, so two runs from the same
+/// seed must consult and fire every site identically.
+fn replay_fingerprint(native: NativeConfig, items: &[WorkItem])
+                      -> Vec<(&'static str, u64, u64)> {
+    let (cfg, plan) = loadgen::chaos_config(
+        load_config(native), CHAOS_SEED, FAULT_RATE, RETRIES, 0);
+    let serve = Serve::start(cfg).expect("replay serve");
+    let out = loadgen::run_closed_loop(&serve, &loadgen::LoadSpec {
+        clients: 1,
+        requests_per_client: 48,
+        items: items.to_vec(),
+    });
+    assert_eq!(out.ok + out.shed + out.failed, out.submitted,
+               "replay run accounting leak");
+    serve.shutdown();
+    plan.site_counts()
+}
+
+fn main() -> ExitCode {
+    let (native, artifact_ids) =
+        loadgen::native_config_or_synthetic(Path::new("artifacts"));
+    let archs = [ArchId::Knl, ArchId::P100Nvlink];
+    let spec = loadgen::LoadSpec {
+        clients: CLIENTS,
+        requests_per_client: REQUESTS_PER_CLIENT,
+        items: loadgen::default_mix(&archs, &artifact_ids, 1024),
+    };
+
+    // ---- phase 1: fault-free baseline -------------------------------
+    println!("chaos_serve: {CLIENTS} clients x {REQUESTS_PER_CLIENT} \
+              requests, mix of {} items (fault-free baseline first)",
+             spec.items.len());
+    let base_serve = match Serve::start(load_config(native.clone())) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("serve start failed: {e:#}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let base_out = loadgen::run_closed_loop(&base_serve, &spec);
+    base_serve.shutdown();
+    let base_goodput =
+        base_out.ok as f64 / base_out.wall_seconds.max(1e-9);
+    println!("baseline: {} ok / {} submitted in {:.3}s \
+              ({base_goodput:.1} req/s goodput)",
+             base_out.ok, base_out.submitted, base_out.wall_seconds);
+
+    // ---- phase 2: the same load under ~10% injected faults ----------
+    // Quarantine stays off here: retried transient faults must not
+    // open breakers mid-load (attribution is phase 4's job).
+    let (chaos_cfg, plan) = loadgen::chaos_config(
+        load_config(native.clone()), CHAOS_SEED, FAULT_RATE, RETRIES, 0);
+    let chaos_serve = match Serve::start(chaos_cfg) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("chaos serve start failed: {e:#}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let chaos_out = loadgen::run_closed_loop(&chaos_serve, &spec);
+    print!("{}", loadgen::outcome_report(&chaos_out, &chaos_serve));
+    print!("{}", loadgen::fault_report(&plan));
+    // Metrics handle must outlive shutdown (which consumes the Serve).
+    let m = Arc::clone(&chaos_serve.metrics);
+    chaos_serve.shutdown();
+    let chaos_goodput =
+        chaos_out.ok as f64 / chaos_out.wall_seconds.max(1e-9);
+    let ratio = chaos_goodput / base_goodput.max(1e-9);
+    println!("chaos: {} ok / {} submitted in {:.3}s \
+              ({chaos_goodput:.1} req/s goodput, {ratio:.2}x baseline)",
+             chaos_out.ok, chaos_out.submitted, chaos_out.wall_seconds);
+    println!("recovery: {} retried ({} exhausted), {} worker restarts, \
+              {} corrupted", m.requests_retried(),
+             m.retries_exhausted(), m.worker_restarts(),
+             m.requests_corrupted());
+
+    // ---- phase 3: replayability -------------------------------------
+    let fp_a = replay_fingerprint(native.clone(), &spec.items);
+    let fp_b = replay_fingerprint(native.clone(), &spec.items);
+    let replay_match = fp_a == fp_b;
+    let total_fired: u64 = fp_a.iter().map(|(_, _, f)| f).sum();
+    println!("replay: fingerprints {} (total fired {total_fired})",
+             if replay_match { "match" } else { "DIVERGE" });
+
+    // ---- phase 4: quarantine attribution ----------------------------
+    // A permanently failing backend (rate 1.0, no retry headroom) and
+    // a threshold-2 breaker: two counted Backend failures, then the
+    // third request fails FAST with Quarantined naming the artifact.
+    let victim = artifact_ids[0].clone();
+    let q_plan = Arc::new(FaultPlan::new(CHAOS_SEED)
+        .with_rate(FaultSite::BackendError, 1.0));
+    let q_serve = Serve::start(ServeConfig {
+        fault_plan: Some(q_plan),
+        retry: RetryPolicy { max_attempts: 1,
+                             backoff: Duration::from_micros(200),
+                             jitter: 0.5 },
+        quarantine: QuarantinePolicy {
+            threshold: 2,
+            cooldown: Duration::from_secs(60),
+        },
+        ..load_config(native.clone())
+    }).expect("quarantine serve");
+    let mut backend_failures = 0usize;
+    for _ in 0..2 {
+        match q_serve.call(WorkItem::artifact(victim.clone())) {
+            Err(ServeError::Backend(_)) => backend_failures += 1,
+            other => eprintln!("unexpected pre-quarantine reply: \
+                                {other:?}"),
+        }
+    }
+    let attributed = matches!(
+        q_serve.call(WorkItem::artifact(victim.clone())),
+        Err(ServeError::Quarantined { artifact }) if artifact == victim);
+    let q_entered = q_serve.metrics.quarantine_entered();
+    let q_failed = q_serve.metrics.requests_quarantined();
+    println!("quarantine: {backend_failures} backend failures opened \
+              the breaker (entered {q_entered}), fast-fail attributed \
+              to '{victim}': {attributed}");
+    q_serve.shutdown();
+
+    // ---- BENCH_chaos.json (CI perf-trajectory artifact) -------------
+    let json = format!(
+        "{{\n  \"schema\": 1,\n  \"chaos_seed\": {CHAOS_SEED},\n  \
+         \"fault_rate\": {FAULT_RATE},\n  \"retries\": {RETRIES},\n  \
+         \"clients\": {CLIENTS},\n  \
+         \"requests_per_client\": {REQUESTS_PER_CLIENT},\n  \
+         \"baseline_goodput_rps\": {base_goodput:.3},\n  \
+         \"chaos_goodput_rps\": {chaos_goodput:.3},\n  \
+         \"goodput_ratio\": {ratio:.4},\n  \
+         \"submitted\": {},\n  \"ok\": {},\n  \"shed\": {},\n  \
+         \"failed\": {},\n  \"requests_retried\": {},\n  \
+         \"retries_exhausted\": {},\n  \"worker_restarts\": {},\n  \
+         \"requests_corrupted\": {},\n  \
+         \"replay_match\": {replay_match},\n  \
+         \"replay_total_fired\": {total_fired},\n  \
+         \"quarantine\": {{\n    \"entered\": {q_entered},\n    \
+         \"fast_failed\": {q_failed},\n    \
+         \"attributed\": {attributed}\n  }}\n}}\n",
+        chaos_out.submitted, chaos_out.ok, chaos_out.shed,
+        chaos_out.failed, m.requests_retried(), m.retries_exhausted(),
+        m.worker_restarts(), m.requests_corrupted());
+    match std::fs::write("BENCH_chaos.json", &json) {
+        Ok(()) => println!("wrote BENCH_chaos.json"),
+        Err(e) => {
+            eprintln!("FAIL: cannot write BENCH_chaos.json: {e}");
+            return ExitCode::FAILURE;
+        }
+    }
+
+    // ---- acceptance gates ------------------------------------------
+    let mut ok = true;
+    if base_out.failed != 0 || base_out.shed != 0 {
+        eprintln!("FAIL: fault-free baseline not clean: {:?}",
+                  base_out.errors);
+        ok = false;
+    }
+    // Zero lost replies: every chaos submission got exactly one reply
+    // (the per-session fully_accounted asserts inside the closed loop
+    // already enforce the session-level identity).
+    if chaos_out.ok + chaos_out.shed + chaos_out.failed
+        != chaos_out.submitted
+    {
+        eprintln!("FAIL: chaos accounting leak: {} + {} + {} != {}",
+                  chaos_out.ok, chaos_out.shed, chaos_out.failed,
+                  chaos_out.submitted);
+        ok = false;
+    }
+    // Self-healing must actually have been exercised at ~10% faults.
+    if m.requests_retried() == 0 {
+        eprintln!("FAIL: no request was ever retried under chaos");
+        ok = false;
+    }
+    if m.worker_restarts() == 0 {
+        eprintln!("FAIL: no worker panic was supervised under chaos");
+        ok = false;
+    }
+    // Post-retry failures must be rare: a 4-attempt budget against a
+    // ~10% per-attempt fault rate leaves ~0.2% of requests failing —
+    // allow 2% before calling the retry plane broken.
+    if chaos_out.failed * 50 > chaos_out.submitted {
+        eprintln!("FAIL: {} / {} requests failed post-retry: {:?}",
+                  chaos_out.failed, chaos_out.submitted,
+                  chaos_out.errors);
+        ok = false;
+    }
+    if ratio < GOODPUT_FLOOR {
+        eprintln!("FAIL: chaos goodput {chaos_goodput:.1} req/s is \
+                   {ratio:.2}x the fault-free baseline \
+                   {base_goodput:.1} req/s (floor {GOODPUT_FLOOR})");
+        ok = false;
+    }
+    if !replay_match {
+        eprintln!("FAIL: same-seed chaos runs diverged:\n  a: \
+                   {fp_a:?}\n  b: {fp_b:?}");
+        ok = false;
+    }
+    if total_fired == 0 {
+        eprintln!("FAIL: replay runs never fired a fault (rate \
+                   {FAULT_RATE})");
+        ok = false;
+    }
+    if backend_failures != 2 {
+        eprintln!("FAIL: expected 2 counted backend failures before \
+                   quarantine, saw {backend_failures}");
+        ok = false;
+    }
+    if !attributed || q_entered != 1 || q_failed == 0 {
+        eprintln!("FAIL: quarantine attribution: attributed \
+                   {attributed}, entered {q_entered}, fast-failed \
+                   {q_failed}");
+        ok = false;
+    }
+    if ok {
+        println!("chaos_serve: PASS");
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

@@ -98,6 +98,7 @@ fn main() -> ExitCode {
     let session = Session::open(&serve, SessionConfig {
         window: 4,
         on_full: WindowPolicy::Block,
+        ..SessionConfig::default()
     });
     let mut p = Pipeline::new();
     let ab = p.node(WorkItem::artifact(ARTIFACT), &[]);

@@ -827,6 +827,22 @@ const R8_VARIANTS: &[(&str, &[&str])] = &[
     ("Closed", &["request_failed"]),
     ("Cancelled", &["request_cancelled"]),
     ("Backend", &["request_failed", "tune_job_failed"]),
+    ("Corrupted", &["request_corrupted"]),
+    ("Quarantined", &["request_quarantined"]),
+];
+
+/// R8c: the self-healing layer's recovery counters. Each one that the
+/// metrics type defines must be *called* somewhere on the serve plane
+/// — a counter the recovery path never bumps is dead instrumentation,
+/// and the chaos gate (`BENCH_chaos.json`) would silently read zeros.
+const R8C_RECOVERY: &[&str] = &[
+    "worker_restarted",
+    "request_retried",
+    "retry_exhausted",
+    "request_corrupted",
+    "request_quarantined",
+    "quarantine_enter",
+    "quarantine_exit",
 ];
 
 /// Entry points whose forward closure is "the serve plane" for R8a.
@@ -912,11 +928,15 @@ fn r8_construction(toks: &[Tok], i: usize, stmt_floor: usize)
 ///   field mutation must be reachable from `Session::submit`,
 ///   `drain`, or `close`; an orphan mutation path breaks
 ///   `submitted == ok + shed + failed + cancelled`.
+/// * **R8c** — every recovery counter the metrics type defines
+///   ([`R8C_RECOVERY`]) must be called somewhere on the serve plane;
+///   uncalled ones are dead instrumentation.
 pub fn r8_error_accounting(graph: &CallGraph, toks_of: &[&[Tok]],
                            out: &mut Vec<Diagnostic>) {
     use std::collections::BTreeSet;
     // --- R8a ---
-    let scope = graph.reach_forward(&r8_serve_roots(graph));
+    let roots = r8_serve_roots(graph);
+    let scope = graph.reach_forward(&roots);
     let all_counters: BTreeSet<&str> = R8_VARIANTS
         .iter()
         .flat_map(|(_, cs)| cs.iter().copied())
@@ -979,6 +999,55 @@ pub fn r8_error_accounting(graph: &CallGraph, toks_of: &[&[Tok]],
                         ok_counters.join("/")),
                 });
             }
+        }
+    }
+    // --- R8c ---
+    // Only meaningful where a serve plane exists; a file set without
+    // roots (e.g. the client-plane fixtures) has no recovery path to
+    // instrument.
+    if !roots.is_empty() {
+        let mut called: BTreeSet<&str> = BTreeSet::new();
+        for (d, def) in graph.defs.iter().enumerate() {
+            if def.in_test || !scope[d] {
+                continue;
+            }
+            let toks = toks_of[def.file_idx];
+            for k in def.body_start..def.body_end {
+                let Some(m) = ident_at(toks, k) else { continue };
+                if punct_eq(toks, k + 1, '(')
+                    && k > 0
+                    && (punct_eq(toks, k - 1, '.')
+                        || punct_eq(toks, k - 1, ':'))
+                {
+                    if let Some(&c) =
+                        R8C_RECOVERY.iter().find(|&&c| c == m)
+                    {
+                        called.insert(c);
+                    }
+                }
+            }
+        }
+        for def in &graph.defs {
+            if def.in_test
+                || def.impl_type.as_deref() != Some("ServeMetrics")
+                || !R8C_RECOVERY.contains(&def.name.as_str())
+                || called.contains(def.name.as_str())
+            {
+                continue;
+            }
+            out.push(Diagnostic {
+                rule: super::R8,
+                file: def.file.clone(),
+                line: def.line,
+                message: format!(
+                    "recovery counter `ServeMetrics::{}` is never \
+                     called from the serve plane (forward closure \
+                     of dispatch_loop/shard_loop/Serve) — dead \
+                     instrumentation: the self-healing event it \
+                     should witness would read as zero in every \
+                     chaos report",
+                    def.name),
+            });
         }
     }
     // --- R8b ---

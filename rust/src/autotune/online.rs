@@ -20,7 +20,8 @@ use std::time::Instant;
 use crate::arch::{compiler, ArchId};
 use crate::gemm::kernel::KernelParams;
 use crate::gemm::{metrics as gemm_metrics, Precision};
-use crate::serve::{Backend, Output, WorkItem, WorkPayload};
+use crate::serve::{Backend, BackendFailure, Output, WorkItem,
+                   WorkPayload};
 use crate::sim::{PredictionBound, TuningPoint};
 use crate::tuner::{self, MeasuredGemm, Strategy, SweepRecord,
                    TuningSpace};
@@ -204,13 +205,13 @@ impl Backend for TunerBackend {
         crate::serve::ShardKey::Tuner.label()
     }
 
-    fn run(&mut self, item: &WorkItem) -> Result<Output, String> {
+    fn run(&mut self, item: &WorkItem) -> Result<Output, BackendFailure> {
         let (precision, bucket) = match &item.payload {
             WorkPayload::Explore { dtype, bucket } => (*dtype, *bucket),
             other => {
                 return Err(format!(
                     "tuning shard only serves exploration jobs, got \
-                     {other:?}"));
+                     {other:?}").into());
             }
         };
         // Re-check at execution time: the bucket may have been tuned
@@ -360,6 +361,6 @@ mod tests {
         let store = Arc::new(Mutex::new(TuningStore::in_memory()));
         let mut b = TunerBackend::new(store, 2, 1);
         let err = b.run(&WorkItem::artifact("dot_n64_f32")).unwrap_err();
-        assert!(err.contains("exploration"), "{err}");
+        assert!(err.to_string().contains("exploration"), "{err}");
     }
 }

@@ -57,6 +57,12 @@ pub enum NodeResult {
     /// Never submitted: ancestor `root` failed with `cause`. `root` is
     /// the *originally* failing ancestor, not an intermediate skip —
     /// every descendant of one failure reports the same root cause.
+    /// The cause is the serve layer's verbatim post-recovery verdict,
+    /// so a quarantined artifact surfaces here as
+    /// [`ServeError::Quarantined`] (fail-fast, never executed) and an
+    /// oracle digest mismatch as [`ServeError::Corrupted`] — the
+    /// descendants of a poisoned artifact name the poison, not a
+    /// generic failure.
     Skipped { root: NodeId, cause: ServeError },
 }
 

@@ -19,6 +19,12 @@
 //! closure). The work itself may still execute; a drop abandons the
 //! *observation*, not the server-side execution.
 //!
+//! **Bounded close**: [`SessionConfig::close_timeout`] caps how long
+//! `drain`/`close` wait on stragglers — at the deadline, still-stalled
+//! requests are force-accounted `cancelled` (late replies are
+//! swallowed), so a wedged shard delays a close by at most the
+//! timeout and the accounting identity above still holds exactly.
+//!
 //! [`Session::submit_stream`] pipelines a batch through the window and
 //! yields replies in **completion order** (not submission order) — the
 //! streaming idiom `loadgen` and the `client_stream` bench are built
@@ -28,6 +34,7 @@ use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::time::{Duration, Instant};
 
 use crate::serve::metrics::SessionOutcome;
 use crate::serve::{Serve, ServeError, ServeResult, WorkItem};
@@ -54,11 +61,24 @@ pub struct SessionConfig {
     pub window: usize,
     /// Full-window behavior for [`Session::submit`].
     pub on_full: WindowPolicy,
+    /// Upper bound on how long [`Session::drain`] / [`Session::close`]
+    /// wait for in-flight replies. `None` (the default) waits forever —
+    /// correct when the serve layer's exactly-one-reply contract is
+    /// trusted end-to-end. With a deadline, replies still outstanding
+    /// when it expires are force-accounted as `cancelled` and their
+    /// late replies (if any) are swallowed, so a stalled shard can
+    /// bound-delay a close but never wedge it, and
+    /// [`SessionStats::fully_accounted`] still holds exactly.
+    pub close_timeout: Option<Duration>,
 }
 
 impl Default for SessionConfig {
     fn default() -> Self {
-        Self { window: 4, on_full: WindowPolicy::Block }
+        Self {
+            window: 4,
+            on_full: WindowPolicy::Block,
+            close_timeout: None,
+        }
     }
 }
 
@@ -100,8 +120,15 @@ pub struct SessionStats {
     /// Every other error reply (backend, closed, layer-cancelled).
     pub failed: u64,
     /// Replies that arrived after their handle was dropped — the
-    /// caller abandoned the request mid-flight.
+    /// caller abandoned the request mid-flight — plus in-flight
+    /// requests force-accounted when a
+    /// [`SessionConfig::close_timeout`] deadline expired.
     pub cancelled: u64,
+    /// Total extra attempts the serve layer spent on this session's
+    /// successful replies (a reply with `attempts == 3` adds 2).
+    /// Informational: not a disposition bucket, so it does not enter
+    /// [`SessionStats::fully_accounted`].
+    pub retried: u64,
 }
 
 impl SessionStats {
@@ -114,6 +141,11 @@ impl SessionStats {
 
 struct SessState {
     in_flight: usize,
+    /// Requests force-accounted `cancelled` by a close-timeout
+    /// expiry whose serve-layer replies have not yet arrived. Each
+    /// late reply drains one abandonment instead of touching the
+    /// stats, keeping every submission accounted exactly once.
+    abandoned: usize,
     closed: bool,
     stats: SessionStats,
 }
@@ -121,6 +153,7 @@ struct SessState {
 struct SessionInner {
     id: u64,
     window: usize,
+    close_timeout: Option<Duration>,
     state: Mutex<SessState>,
     cv: Condvar,
 }
@@ -138,8 +171,26 @@ impl SessionInner {
     /// Reply-side bookkeeping: one lock for the stats bump AND the
     /// slot release, so a drain that wakes on the released slot can
     /// never observe a half-updated stats block.
-    fn finish(&self, outcome: SessionOutcome) {
+    ///
+    /// `retried` is the extra serve-layer attempts this reply carried
+    /// ([`ServeReply::attempts`](crate::serve::ServeReply) minus one).
+    ///
+    /// A reply arriving while `abandoned > 0` settles one of the
+    /// requests force-cancelled at a close-timeout deadline instead of
+    /// entering the stats (the deadline already accounted it). Which
+    /// physical request absorbs the abandonment can swap between a
+    /// stalled one and a fresh one racing in, but each reply drains
+    /// exactly one of `abandoned`/`in_flight`, so the aggregate
+    /// `submitted == ok + shed + failed + cancelled` stays exact.
+    fn finish(&self, outcome: SessionOutcome, retried: u64) {
         let mut g = self.state();
+        g.stats.retried += retried;
+        if g.abandoned > 0 {
+            g.abandoned -= 1;
+            drop(g);
+            self.cv.notify_all();
+            return;
+        }
         g.in_flight -= 1;
         match outcome {
             SessionOutcome::Ok => g.stats.ok += 1,
@@ -176,8 +227,10 @@ impl<'s> Session<'s> {
             inner: Arc::new(SessionInner {
                 id,
                 window: cfg.window,
+                close_timeout: cfg.close_timeout,
                 state: Mutex::new(SessState {
                     in_flight: 0,
+                    abandoned: 0,
                     closed: false,
                     stats: SessionStats::default(),
                 }),
@@ -242,6 +295,11 @@ impl<'s> Session<'s> {
             item.with_session(inner.id),
             Box::new(move |r| {
                 let kind = outcome_of(&r);
+                let retried = match &r {
+                    Ok(reply) =>
+                        u64::from(reply.attempts.saturating_sub(1)),
+                    Err(_) => 0,
+                };
                 // complete() runs handle continuations inline (e.g. a
                 // completion stream's channel send) BEFORE the slot
                 // frees below — safe: stream consumers that wake early
@@ -251,7 +309,7 @@ impl<'s> Session<'s> {
                     Delivery::Delivered => kind,
                     Delivery::Abandoned => SessionOutcome::Cancelled,
                 };
-                inner.finish(kind);
+                inner.finish(kind, retried);
                 metrics.session_outcome(inner.id, kind);
             }));
         handle
@@ -301,26 +359,59 @@ impl<'s> Session<'s> {
         }
     }
 
-    /// Block until nothing is in flight (replies for everything
-    /// submitted so far have been accounted).
-    pub fn drain(&self) {
-        let mut g = self.inner.state();
+    /// Wait for in-flight to reach zero under the configured
+    /// [`SessionConfig::close_timeout`]. `None`: unbounded wait.
+    /// `Some(limit)`: a deadline loop; on expiry every reply still
+    /// outstanding is force-accounted `cancelled` and recorded as an
+    /// abandonment (its late reply, if it ever arrives, drains the
+    /// abandonment in [`SessionInner::finish`] instead of the stats).
+    /// Either way the returned guard has `in_flight == 0` and
+    /// `fully_accounted()` holds.
+    fn drain_locked<'g>(&self, mut g: MutexGuard<'g, SessState>)
+                        -> MutexGuard<'g, SessState> {
+        let Some(limit) = self.inner.close_timeout else {
+            while g.in_flight > 0 {
+                g = self.inner.cv.wait(g)
+                    .unwrap_or_else(PoisonError::into_inner);
+            }
+            return g;
+        };
+        let deadline = Instant::now() + limit;
         while g.in_flight > 0 {
-            g = self.inner.cv.wait(g)
-                .unwrap_or_else(PoisonError::into_inner);
+            let Some(left) =
+                deadline.checked_duration_since(Instant::now())
+                    .filter(|d| !d.is_zero())
+            else {
+                // Deadline expired: a stalled shard must not wedge the
+                // close. Account the stragglers now, exactly once.
+                let stalled = g.in_flight;
+                g.stats.cancelled += stalled as u64;
+                g.abandoned += stalled;
+                g.in_flight = 0;
+                break;
+            };
+            g = self.inner.cv.wait_timeout(g, left)
+                .unwrap_or_else(PoisonError::into_inner)
+                .0;
         }
+        g
+    }
+
+    /// Block until nothing is in flight (replies for everything
+    /// submitted so far have been accounted), bounded by
+    /// [`SessionConfig::close_timeout`] when one is set.
+    pub fn drain(&self) {
+        drop(self.drain_locked(self.inner.state()));
     }
 
     /// Close the session: refuse further submissions, drain what is in
-    /// flight, and return the exact final accounting
+    /// flight — bounded by [`SessionConfig::close_timeout`] when one
+    /// is set — and return the exact final accounting
     /// (`fully_accounted()` holds on the returned stats).
     pub fn close(self) -> SessionStats {
         let mut g = self.inner.state();
         g.closed = true;
-        while g.in_flight > 0 {
-            g = self.inner.cv.wait(g)
-                .unwrap_or_else(PoisonError::into_inner);
-        }
+        let g = self.drain_locked(g);
         g.stats
     }
 }

@@ -232,6 +232,67 @@
 //! `ServeMetrics::shed`; the zero-silent-drop contract holds under any
 //! overload.
 //!
+//! # Failure semantics and recovery
+//!
+//! The serve layer's failure taxonomy, and what the layer does about
+//! each class (PR 8 — the fault-injection plane and the self-healing
+//! machinery it proves out):
+//!
+//! | [`serve::ServeError`] | meaning | retried? | self-healing |
+//! |---|---|---|---|
+//! | `Backend(msg)` | backend compute failed (incl. a caught worker panic) | yes | budgeted retry; panic → backend respawn |
+//! | `Corrupted { shard, artifact }` | output failed the artifact's oracle digest | yes | retry; feeds the quarantine breaker |
+//! | `Quarantined { artifact }` | artifact's circuit breaker is open | no | fail fast until a half-open probe passes |
+//! | `Overloaded { .. }` | admission control shed the request | no | that's the layer working as configured |
+//! | `Cancelled` / `Closed` | drained by cancel / shutdown | no | explicit reply, never a silent drop |
+//!
+//! **Retry is safe because execution is idempotent.** A request's
+//! work is a pure function of its payload (a GEMM / simulated point
+//! evaluation): re-executing after a `Backend`/`Corrupted` failure
+//! cannot double-apply anything — the only side effects (caches, the
+//! tuning store) are keyed writes of equivalent values. `Overloaded`
+//! and `Closed` are *admission* outcomes, not execution failures, and
+//! are never retried ([`serve::RetryPolicy`] — budgeted attempts with
+//! jittered linear backoff; per-request attempt counts ride the reply
+//! as `ServeReply::attempts`, and sessions aggregate the extra
+//! attempts in `SessionStats::retried`).
+//!
+//! **Worker supervision.** A shard worker that panics mid-request is
+//! caught (`catch_unwind` around the backend call), counted
+//! (`worker_restarts`), its backend is rebuilt from the shard's
+//! factory, and the in-flight request is retried under the same
+//! budget — the reply is never lost and peers never stall.
+//!
+//! **Artifact quarantine** is a per-artifact circuit breaker
+//! ([`serve::Quarantine`], keyed by artifact identity digest):
+//! `threshold` *consecutive post-retry* execution failures open it
+//! (closed → open, counted `quarantine_enter`); while open, requests
+//! for that artifact fail fast with `Quarantined` — no queue time, no
+//! backend time. After `cooldown` the next request is admitted as a
+//! **half-open probe**: success closes the breaker
+//! (`quarantine_exit`), failure re-opens it for another cooldown. One
+//! bad artifact cannot consume a shard's retry budget forever, and
+//! healthy traffic on the same shard is untouched.
+//!
+//! **Deterministic chaos.** All of the above is exercised by a seeded
+//! fault-injection plane ([`serve::FaultPlan`] via
+//! `ServeConfig::fault_plan`, default off = inert): named sites
+//! ([`serve::FaultSite`] — backend error, output corruption that must
+//! trip the *real* oracle check, worker panic, stalled reply,
+//! disk-cache read/write I/O, tuner commit) fire with independent
+//! per-site probabilities from per-site PRNG streams. Same seed →
+//! same per-site draw sequence, so chaos runs replay: the
+//! `(drawn, fired)` fingerprint (`FaultPlan::site_counts`) is
+//! identical across same-seed runs *when the draw order is
+//! deterministic* (sequential load; under concurrent clients the
+//! per-site streams still make fault *rates* exact but interleaving
+//! decides which request absorbs which draw). `cargo bench --bench
+//! chaos_serve` gates the whole story — zero lost replies and exact
+//! accounting under ~10% injected faults, goodput ≥ 0.7× the
+//! fault-free baseline, same-seed replay, quarantine attribution —
+//! and emits `BENCH_chaos.json`; CLI: `serve --chaos-seed N
+//! [--fault-rate P] [--retries K] [--quarantine-after T]`.
+//!
 //! # Machine-checked invariants (`pallas-lint`)
 //!
 //! The contracts above live at seams the compiler does not check, so
@@ -294,13 +355,18 @@
 //!   that take the guard as an argument are exempt, as in R1.
 //! * **R8 — exhaustive error accounting.** On the serve plane (every
 //!   fn reachable from a dispatch/shard loop or `impl Serve`), each
-//!   construction of `ServeError::Closed`/`Cancelled`/`Backend` must
-//!   be matched by the corresponding metrics counter in the same
-//!   function or in a (non-test) caller — `Overloaded` stays R3's
-//!   same-function contract. Additionally, every `SessionStats` field
-//!   mutation must be reachable from `Session::submit`/`drain`/
-//!   `close`: orphan mutation paths would break the
-//!   `submitted == ok + shed + failed + cancelled` identity (PR 5).
+//!   construction of `ServeError::Closed`/`Cancelled`/`Backend`/
+//!   `Corrupted`/`Quarantined` must be matched by the corresponding
+//!   metrics counter in the same function or in a (non-test) caller —
+//!   `Overloaded` stays R3's same-function contract. Every
+//!   `SessionStats` field mutation must be reachable from
+//!   `Session::submit`/`drain`/`close`: orphan mutation paths would
+//!   break the `submitted == ok + shed + failed + cancelled` identity
+//!   (PR 5). And every **recovery counter** `ServeMetrics` defines
+//!   (worker restarts, retries, retry exhaustion, corruption,
+//!   quarantine enter/exit/fail-fast) must actually be *called*
+//!   somewhere on the serve plane — dead instrumentation would read
+//!   as zero in every chaos report (PR 8).
 //!
 //! **Resolution model and its limits.** Call edges come from three
 //! token shapes: bare `name(` (same-file free fn, else tree-unique),

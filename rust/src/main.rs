@@ -187,6 +187,25 @@ fn cli() -> Cli {
                                    while serving (commits to \
                                    --tuning-store, or an in-memory \
                                    store)"),
+                    OptSpec::value("chaos-seed", Some("0"),
+                                   "deterministic fault injection \
+                                    seeded here (0 = off): backend \
+                                    errors at --fault-rate, corruption \
+                                    and worker panics at half of it; \
+                                    same seed replays the same chaos"),
+                    OptSpec::value("fault-rate", Some("0.1"),
+                                   "per-attempt injected fault \
+                                    probability for --chaos-seed"),
+                    OptSpec::value("retries", Some("1"),
+                                   "total execution attempts per \
+                                    request (1 = no retry; applies to \
+                                    Backend/Corrupted failures, never \
+                                    Overloaded/Closed)"),
+                    OptSpec::value("quarantine-after", Some("0"),
+                                   "consecutive post-retry failures \
+                                    before an artifact is quarantined \
+                                    (fail-fast circuit breaker; \
+                                    0 = off)"),
                 ],
             },
             CommandSpec {
@@ -510,7 +529,8 @@ fn cmd_native(p: &Parsed) -> Result<()> {
 fn cmd_serve(p: &Parsed) -> Result<()> {
     use std::time::Duration;
 
-    use alpaka_rs::serve::{loadgen, Serve, ServeConfig, ShedPolicy};
+    use alpaka_rs::serve::{loadgen, QuarantinePolicy, RetryPolicy,
+                           Serve, ServeConfig, ShedPolicy};
 
     let mut archs = Vec::new();
     for tok in p.get_or("archs", "knl,p100-nvlink").split(',') {
@@ -543,6 +563,14 @@ fn cmd_serve(p: &Parsed) -> Result<()> {
             "unknown shed policy (none|reject|expire)"))?;
     let quota = p.get_u64("quota")?.unwrap_or(0) as usize;
     let deadline_ms = p.get_u64("deadline-ms")?.unwrap_or(0);
+    let chaos_seed = p.get_u64("chaos-seed")?.unwrap_or(0);
+    let fault_rate: f64 = p.get_or("fault-rate", "0.1").parse()
+        .map_err(|_| anyhow::anyhow!("--fault-rate must be a number"))?;
+    anyhow::ensure!((0.0..=1.0).contains(&fault_rate),
+                    "--fault-rate must be in [0, 1]");
+    let retries = p.get_u64("retries")?.unwrap_or(1).max(1) as u32;
+    let quarantine_after =
+        p.get_u64("quarantine-after")?.unwrap_or(0) as u32;
     // A shed policy with nothing to shed on is a silent no-op — refuse
     // it instead of letting the user believe shedding is active.
     anyhow::ensure!(
@@ -558,7 +586,7 @@ fn cmd_serve(p: &Parsed) -> Result<()> {
         deadline_ms == 0 || p.has_flag("overload"),
         "--deadline-ms is only applied by --overload (the closed loop \
          attaches no per-request deadlines)");
-    let cfg = ServeConfig {
+    let mut cfg = ServeConfig {
         front_cap: queue,
         shard_cap: queue,
         max_batch: p.get_u64("max-batch")?.unwrap_or(8) as usize,
@@ -582,6 +610,24 @@ fn cmd_serve(p: &Parsed) -> Result<()> {
         cfg.result_cache_path.is_none() || cfg.cache_cap > 0,
         "--result-cache needs --cache > 0 (measurement semantics \
          re-execute everything)");
+    // Self-healing knobs apply with or without chaos; the fault plan
+    // itself only exists when a chaos seed was given (same recipe as
+    // the chaos_serve bench, via loadgen::chaos_config).
+    let chaos_plan = if chaos_seed != 0 {
+        let (with_chaos, plan) = loadgen::chaos_config(
+            cfg, chaos_seed, fault_rate, retries, quarantine_after);
+        cfg = with_chaos;
+        println!("chaos: seed {chaos_seed}, fault rate {fault_rate}, \
+                  {retries} attempt(s), quarantine after \
+                  {quarantine_after}");
+        Some(plan)
+    } else {
+        cfg.retry = RetryPolicy { max_attempts: retries,
+                                  ..RetryPolicy::default() };
+        cfg.quarantine = QuarantinePolicy { threshold: quarantine_after,
+                                            ..QuarantinePolicy::default() };
+        None
+    };
     let serve = Serve::start(cfg.clone())?;
 
     let items = loadgen::default_mix(&archs, &artifact_ids, n);
@@ -599,6 +645,9 @@ fn cmd_serve(p: &Parsed) -> Result<()> {
             tuning_store: None,
             online_tune: false,
             result_cache_path: None,
+            // the probe must not advance the chaos plan's seeded
+            // streams (it would desync replay) nor fail probe traffic
+            fault_plan: None,
             ..cfg.clone()
         })?;
         let sustainable = loadgen::measure_sustainable_rps(
@@ -635,9 +684,15 @@ fn cmd_serve(p: &Parsed) -> Result<()> {
                 print!("{}", g.render());
             }
         }
+        if let Some(plan) = &chaos_plan {
+            print!("{}", loadgen::fault_report(plan));
+        }
         serve.shutdown();
         anyhow::ensure!(out.fully_accounted(), "reply accounting leak");
-        anyhow::ensure!(out.failed == 0, "{} requests failed: {:?}",
+        // Under chaos, post-retry failures are expected (and visible
+        // above); the hard invariant stays exact accounting.
+        anyhow::ensure!(chaos_plan.is_some() || out.failed == 0,
+                        "{} requests failed: {:?}",
                         out.failed, out.errors);
         return Ok(());
     }
@@ -653,14 +708,19 @@ fn cmd_serve(p: &Parsed) -> Result<()> {
              archs.len(), spec.items.len());
     let outcome = loadgen::run_stream_loop(&serve, &spec, window);
     print!("{}", loadgen::outcome_report(&outcome, &serve));
+    if let Some(plan) = &chaos_plan {
+        print!("{}", loadgen::fault_report(plan));
+    }
     if let Some(store) = serve.tuning_store() {
         if let Ok(g) = store.lock() {
             print!("{}", g.render());
         }
     }
     serve.shutdown();
-    anyhow::ensure!(outcome.failed == 0, "{} requests failed",
-                    outcome.failed);
+    // Under chaos, post-retry failures are expected (and reported
+    // above); exact accounting is enforced per session by the driver.
+    anyhow::ensure!(chaos_plan.is_some() || outcome.failed == 0,
+                    "{} requests failed", outcome.failed);
     Ok(())
 }
 

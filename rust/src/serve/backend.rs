@@ -45,6 +45,8 @@ use crate::tuner::SweepRecord;
 use crate::util::prng;
 use crate::util::threadpool::ThreadPool;
 
+use super::fault::{FaultPlan, FaultSite};
+
 /// Shared machine-model registry: one memoised [`Machine`] per
 /// architecture. Lives here because every sim shard draws from it; the
 /// coordinator's `Scheduler` re-exports it for backwards compatibility.
@@ -299,17 +301,60 @@ pub enum Output {
     },
 }
 
+/// Why one backend execution failed — structured so the serve layer's
+/// recovery policies can discriminate. `Error` is an opaque (but
+/// retryable) execution failure; `Corrupted` is an oracle-digest
+/// mismatch attributable to ONE artifact, which the serve layer
+/// surfaces as `ServeError::Corrupted` and feeds into the artifact
+/// quarantine breaker. `From<String>` keeps `?` ergonomic for the many
+/// string-producing helpers underneath.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum BackendFailure {
+    /// Opaque execution failure (message preserved verbatim).
+    Error(String),
+    /// The output failed the runtime oracle digest check: the compute
+    /// ran, but produced bytes that disagree with the sequential
+    /// reference for this artifact.
+    Corrupted { artifact: String, detail: String },
+}
+
+impl std::fmt::Display for BackendFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>)
+           -> std::fmt::Result {
+        match self {
+            BackendFailure::Error(m) => write!(f, "{m}"),
+            BackendFailure::Corrupted { artifact, detail } => {
+                write!(f, "corrupted output for {artifact}: {detail}")
+            }
+        }
+    }
+}
+
+impl From<String> for BackendFailure {
+    fn from(m: String) -> Self {
+        BackendFailure::Error(m)
+    }
+}
+
+impl From<&str> for BackendFailure {
+    fn from(m: &str) -> Self {
+        BackendFailure::Error(m.to_string())
+    }
+}
+
 /// The execution abstraction every shard drives. Implementations are
 /// created *inside* the shard thread (the PJRT client is not `Send`),
 /// hence the `Send` factory type below rather than a `Send` bound here.
 pub trait Backend {
     fn label(&self) -> String;
-    fn run(&mut self, item: &WorkItem) -> Result<Output, String>;
+    fn run(&mut self, item: &WorkItem) -> Result<Output, BackendFailure>;
 }
 
-/// Constructor executed on the shard thread.
+/// Constructor executed on the shard thread. `FnMut` because the shard
+/// worker's supervisor re-invokes it to respawn the backend after a
+/// caught panic (see `serve::mod` worker supervision).
 pub type BackendFactory =
-    Box<dyn FnOnce() -> Result<Box<dyn Backend>, String> + Send>;
+    Box<dyn FnMut() -> Result<Box<dyn Backend>, String> + Send>;
 
 // ---------------------------------------------------------------- sim --
 
@@ -330,13 +375,13 @@ impl Backend for SimBackend {
         ShardKey::Sim(self.arch).label()
     }
 
-    fn run(&mut self, item: &WorkItem) -> Result<Output, String> {
+    fn run(&mut self, item: &WorkItem) -> Result<Output, BackendFailure> {
         match &item.payload {
             WorkPayload::Point(p) => {
                 if p.arch != self.arch {
                     return Err(format!(
                         "routing bug: {} point on {} shard",
-                        p.arch.label(), self.arch.label()));
+                        p.arch.label(), self.arch.label()).into());
                 }
                 let t0 = Instant::now();
                 let pred = self.machine.predict(p);
@@ -347,10 +392,10 @@ impl Backend for SimBackend {
             }
             WorkPayload::Artifact { id, .. } => Err(format!(
                 "sim shard {} cannot execute artifact {id}",
-                self.arch.label())),
+                self.arch.label()).into()),
             WorkPayload::Explore { .. } => Err(format!(
                 "sim shard {} cannot run tuning explorations",
-                self.arch.label())),
+                self.arch.label()).into()),
         }
     }
 }
@@ -695,12 +740,12 @@ impl Backend for NativeBackend {
         ShardKey::Native(NativeEngineId::Pjrt).label()
     }
 
-    fn run(&mut self, item: &WorkItem) -> Result<Output, String> {
+    fn run(&mut self, item: &WorkItem) -> Result<Output, BackendFailure> {
         let id = match &item.payload {
             WorkPayload::Artifact { id, .. } => id,
             other => {
                 return Err(format!(
-                    "native shard cannot serve {other:?}"));
+                    "native shard cannot serve {other:?}").into());
             }
         };
         let spec = self
@@ -724,7 +769,9 @@ impl Backend for NativeBackend {
                             kernel: "pjrt".to_string(),
                         });
                     }
-                    Err(PjrtFailure::Artifact(msg)) => return Err(msg),
+                    Err(PjrtFailure::Artifact(msg)) => {
+                        return Err(msg.into());
+                    }
                     Err(PjrtFailure::Engine(msg)) => {
                         eprintln!("[serve] PJRT execution failed ({msg}); \
                                    switching native shard to the host \
@@ -807,6 +854,11 @@ pub struct ThreadpoolGemm {
     /// Per-request kernel selection source (tuning store). `None` =
     /// always the built-in defaults.
     store: Option<SharedTuningStore>,
+    /// Fault-injection plan (chaos testing): when the `CorruptOutput`
+    /// site fires, the computed digest is perturbed *before* the
+    /// oracle comparison — corruption is **detected by the real
+    /// check**, never synthesized as a pre-made error.
+    plan: Option<Arc<FaultPlan>>,
 }
 
 impl ThreadpoolGemm {
@@ -838,7 +890,8 @@ impl ThreadpoolGemm {
             ThreadPool::new(threads)
         };
         Self { catalog, pool, inputs: HashMap::new(),
-               oracles: HashMap::new(), oracle_builds: 0, store: None }
+               oracles: HashMap::new(), oracle_builds: 0, store: None,
+               plan: None }
     }
 
     /// Attach a tuning store: each request then runs with the store's
@@ -848,6 +901,14 @@ impl ThreadpoolGemm {
     pub fn with_store(mut self, store: Option<SharedTuningStore>)
                       -> Self {
         self.store = store;
+        self
+    }
+
+    /// Attach a fault-injection plan (see the `plan` field): output
+    /// corruption then fires at the plan's `CorruptOutput` rate and is
+    /// caught by the genuine oracle digest check.
+    pub fn with_fault(mut self, plan: Option<Arc<FaultPlan>>) -> Self {
+        self.plan = plan;
         self
     }
 
@@ -1046,12 +1107,12 @@ impl Backend for ThreadpoolGemm {
         ShardKey::Native(NativeEngineId::Threadpool).label()
     }
 
-    fn run(&mut self, item: &WorkItem) -> Result<Output, String> {
+    fn run(&mut self, item: &WorkItem) -> Result<Output, BackendFailure> {
         let id = match &item.payload {
             WorkPayload::Artifact { id, .. } => id,
             other => {
                 return Err(format!(
-                    "threadpool shard cannot serve {other:?}"));
+                    "threadpool shard cannot serve {other:?}").into());
             }
         };
         let spec = self
@@ -1063,7 +1124,7 @@ impl Backend for ThreadpoolGemm {
             return Err(format!(
                 "artifact {} needs the PJRT runtime (threadpool shard \
                  only reproduces square gemm/dot with known seeds)",
-                spec.id));
+                spec.id).into());
         }
         // Per-request selection: store winner for this (dtype, bucket)
         // when present, defaults otherwise — blocking params AND the
@@ -1074,18 +1135,30 @@ impl Backend for ThreadpoolGemm {
         let fanout = self.fanout(sel.threads);
         self.ensure_inputs(&spec);
         self.ensure_oracle(&spec, params.mc, fanout);
-        let (seconds, sum, abs_sum) =
+        let (seconds, mut sum, abs_sum) =
             self.par_run(&spec, &params, fanout)?;
         // Runtime oracle check: every served result is digest-verified
         // against the sequential reference computed at setup.
         let oracle = self.oracles.get(&(id.clone(), params.mc, fanout))
             .expect("ensure_oracle first");
+        if self.plan.as_ref()
+            .is_some_and(|p| p.should_fire(FaultSite::CorruptOutput))
+        {
+            // Chaos injection: shift the digest by a full abs-sum so
+            // the comparison below MUST trip — the detection path is
+            // the production one, only the corruption is synthetic.
+            sum += oracle.abs_sum.max(abs_sum).max(1.0);
+        }
         let scale = oracle.abs_sum.max(abs_sum).max(1.0);
         let rtol = digest_rtol(spec.precision);
         if (sum - oracle.sum).abs() > rtol * scale {
-            return Err(format!(
-                "threadpool GEMM digest mismatch on {id}: sum {sum} vs \
-                 oracle {} (scale {scale}, rtol {rtol})", oracle.sum));
+            return Err(BackendFailure::Corrupted {
+                artifact: id.clone(),
+                detail: format!(
+                    "threadpool GEMM digest mismatch: sum {sum} vs \
+                     oracle {} (scale {scale}, rtol {rtol})",
+                    oracle.sum),
+            });
         }
         Ok(Output::Native {
             artifact_id: id.clone(),
@@ -1234,7 +1307,7 @@ mod tests {
             other => panic!("unexpected output {other:?}"),
         }
         assert!(b.run(&WorkItem::artifact("nope")).unwrap_err()
-                 .contains("unknown artifact"));
+                 .to_string().contains("unknown artifact"));
     }
 
     #[test]
@@ -1274,7 +1347,7 @@ mod tests {
         assert!(b.run(&WorkItem::point(p)).is_err());
         assert!(b.run(&WorkItem::artifact_on(
             "nope", NativeEngineId::Threadpool)).unwrap_err()
-             .contains("unknown artifact"));
+             .to_string().contains("unknown artifact"));
     }
 
     #[test]
@@ -1490,6 +1563,42 @@ mod tests {
         let mut nb = NativeBackend::synthetic(
             &["dot_n64_f32".to_string()]).unwrap();
         assert!(nb.run(&w).is_err());
+    }
+
+    #[test]
+    fn injected_corruption_trips_the_real_oracle() {
+        let id = "gemm_n48_t16_e1_f64".to_string();
+        let plan = Arc::new(FaultPlan::new(7)
+            .with_rate(FaultSite::CorruptOutput, 1.0));
+        let mut b = ThreadpoolGemm::synthetic(&[id.clone()], 2)
+            .unwrap()
+            .with_fault(Some(plan));
+        match b.run(&WorkItem::artifact_on(
+            id.clone(), NativeEngineId::Threadpool))
+        {
+            Err(BackendFailure::Corrupted { artifact, detail }) => {
+                assert_eq!(artifact, id);
+                assert!(detail.contains("digest mismatch"), "{detail}");
+            }
+            other => panic!("expected corruption, got {other:?}"),
+        }
+        // without the fault plan the same artifact serves cleanly —
+        // the corruption is injected, not organic
+        let mut clean =
+            ThreadpoolGemm::synthetic(&[id.clone()], 2).unwrap();
+        assert!(clean.run(&WorkItem::artifact_on(
+            id, NativeEngineId::Threadpool)).is_ok());
+    }
+
+    #[test]
+    fn backend_failure_display_and_from() {
+        let e: BackendFailure = "boom".into();
+        assert_eq!(e.to_string(), "boom");
+        let c = BackendFailure::Corrupted {
+            artifact: "a1".to_string(),
+            detail: "sum off".to_string(),
+        };
+        assert_eq!(c.to_string(), "corrupted output for a1: sum off");
     }
 
     #[test]

@@ -1,0 +1,599 @@
+//! Deterministic fault-injection plane + the recovery policies layered
+//! on top of it.
+//!
+//! The serve layer's overload semantics are exact and machine-checked;
+//! this module gives its *failure* semantics the same treatment. One
+//! mechanism — a seeded [`FaultPlan`] with named injection sites, each
+//! with an independent probability drawn from [`crate::util::prng`] —
+//! and separate policies: a budgeted [`RetryPolicy`] for idempotent
+//! work, and an artifact circuit breaker ([`Quarantine`], configured by
+//! [`QuarantinePolicy`]) that isolates poison artifacts after K
+//! consecutive post-retry failures.
+//!
+//! # Replayability
+//!
+//! Every injection site draws from its **own** serialized
+//! `SplitMix64` stream, seeded by mixing the plan seed with the site
+//! index. Two runs with the same seed therefore see the same per-site
+//! random sequence; when the request schedule is deterministic (a
+//! sequential closed loop), the fault assignment is bit-identical —
+//! the `chaos_serve` bench asserts exactly this. Under concurrent
+//! workers the per-site draw *sequence* is still fixed (the stream is
+//! shared and serialized); only which request lands on which draw can
+//! vary with thread interleaving.
+//!
+//! All work routed through the serve layer is idempotent — a request
+//! names a pure computation (a simulated prediction, a deterministic
+//! PRNG-seeded GEMM, a bounded exploration that re-checks the store
+//! before committing) — which is what makes blanket retry of
+//! `Backend`/`Corrupted` failures sound. `Overloaded` and `Closed` are
+//! *admission* outcomes, not execution failures, and are never retried:
+//! retrying them would amplify exactly the load that caused them.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, PoisonError};
+use std::time::{Duration, Instant};
+
+use crate::util::prng::SplitMix64;
+
+/// A named place in the serve layer where a [`FaultPlan`] can inject a
+/// failure. Each site has an independent probability and PRNG stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSite {
+    /// The backend returns a compute error instead of running.
+    BackendError,
+    /// The threadpool backend's output is perturbed *before* its
+    /// oracle digest check, which must then trip (exercising the real
+    /// corruption-detection machinery, not a shortcut).
+    CorruptOutput,
+    /// The shard worker panics mid-request (caught by supervision,
+    /// backend respawned, the in-flight reply preserved).
+    WorkerPanic,
+    /// The shard worker stalls for [`FaultPlan::stall`] before
+    /// replying (exercises deadline-aware session close).
+    StallReply,
+    /// A disk-cache probe fails as if the read I/O failed (must
+    /// degrade to a counted miss, never an error to the caller).
+    DiskCacheRead,
+    /// A disk-cache spill fails as if the write I/O failed (must
+    /// leave no partial file and keep the cache usable).
+    DiskCacheWrite,
+    /// The tuner shard fails to commit an exploration result.
+    TunerCommit,
+}
+
+impl FaultSite {
+    /// Every site, in stable order (the index order of the plan's
+    /// per-site streams and counters).
+    pub const ALL: [FaultSite; 7] = [
+        FaultSite::BackendError,
+        FaultSite::CorruptOutput,
+        FaultSite::WorkerPanic,
+        FaultSite::StallReply,
+        FaultSite::DiskCacheRead,
+        FaultSite::DiskCacheWrite,
+        FaultSite::TunerCommit,
+    ];
+
+    pub fn index(self) -> usize {
+        match self {
+            FaultSite::BackendError => 0,
+            FaultSite::CorruptOutput => 1,
+            FaultSite::WorkerPanic => 2,
+            FaultSite::StallReply => 3,
+            FaultSite::DiskCacheRead => 4,
+            FaultSite::DiskCacheWrite => 5,
+            FaultSite::TunerCommit => 6,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            FaultSite::BackendError => "backend-error",
+            FaultSite::CorruptOutput => "corrupt-output",
+            FaultSite::WorkerPanic => "worker-panic",
+            FaultSite::StallReply => "stall-reply",
+            FaultSite::DiskCacheRead => "disk-read",
+            FaultSite::DiskCacheWrite => "disk-write",
+            FaultSite::TunerCommit => "tuner-commit",
+        }
+    }
+}
+
+const SITES: usize = FaultSite::ALL.len();
+
+/// A seeded, replayable chaos schedule: per-site probabilities plus
+/// per-site PRNG streams and fired/drawn counters. Thread one through
+/// [`ServeConfig::fault_plan`](super::ServeConfig) to turn a serve
+/// layer into a chaos testbed; leave it `None` (the default) and every
+/// injection site compiles down to a cheap `None` check.
+#[derive(Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    rates: [f64; SITES],
+    stall: Duration,
+    streams: [Mutex<SplitMix64>; SITES],
+    drawn: [AtomicU64; SITES],
+    fired: [AtomicU64; SITES],
+}
+
+impl FaultPlan {
+    /// A plan with every site at probability 0 (inert until rates are
+    /// set with [`FaultPlan::with_rate`]).
+    pub fn new(seed: u64) -> Self {
+        // Site streams are decorrelated from each other and from the
+        // plan seed by a golden-ratio odd-multiplier mix (the same
+        // finalizer family SplitMix64 itself uses).
+        let streams = std::array::from_fn(|i| {
+            let mixed = seed
+                ^ 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(i as u64 + 1);
+            Mutex::new(SplitMix64::new(mixed))
+        });
+        Self {
+            seed,
+            rates: [0.0; SITES],
+            stall: Duration::from_millis(50),
+            streams,
+            drawn: std::array::from_fn(|_| AtomicU64::new(0)),
+            fired: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    /// The canonical chaos mix used by the bench and the CLI: backend
+    /// errors at `rate`, output corruption and worker panics at half
+    /// of it, everything else quiet.
+    pub fn chaos(seed: u64, rate: f64) -> Self {
+        Self::new(seed)
+            .with_rate(FaultSite::BackendError, rate)
+            .with_rate(FaultSite::CorruptOutput, rate / 2.0)
+            .with_rate(FaultSite::WorkerPanic, rate / 2.0)
+    }
+
+    /// Set one site's firing probability (clamped to `[0, 1]`).
+    pub fn with_rate(mut self, site: FaultSite, p: f64) -> Self {
+        self.rates[site.index()] = p.clamp(0.0, 1.0);
+        self
+    }
+
+    /// Set the stall duration used when [`FaultSite::StallReply`]
+    /// fires.
+    pub fn with_stall(mut self, stall: Duration) -> Self {
+        self.stall = stall;
+        self
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    pub fn rate(&self, site: FaultSite) -> f64 {
+        self.rates[site.index()]
+    }
+
+    pub fn stall(&self) -> Duration {
+        self.stall
+    }
+
+    /// Draw from `site`'s stream: `true` means the fault fires. Every
+    /// call with a nonzero rate advances the site's stream and bumps
+    /// its drawn counter, so `(drawn, fired)` pairs fully describe a
+    /// run for replay comparison.
+    pub fn should_fire(&self, site: FaultSite) -> bool {
+        let i = site.index();
+        let rate = self.rates[i];
+        if rate <= 0.0 {
+            return false;
+        }
+        self.drawn[i].fetch_add(1, Ordering::Relaxed);
+        let hit = {
+            let mut g = self.streams[i]
+                .lock()
+                .unwrap_or_else(PoisonError::into_inner);
+            g.next_unit() < rate
+        };
+        if hit {
+            self.fired[i].fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    /// How many times `site` was consulted.
+    pub fn drawn(&self, site: FaultSite) -> u64 {
+        self.drawn[site.index()].load(Ordering::Relaxed)
+    }
+
+    /// How many times `site` actually fired.
+    pub fn fired(&self, site: FaultSite) -> u64 {
+        self.fired[site.index()].load(Ordering::Relaxed)
+    }
+
+    /// `(label, drawn, fired)` for every site — the replayability
+    /// fingerprint of a run.
+    pub fn site_counts(&self) -> Vec<(&'static str, u64, u64)> {
+        FaultSite::ALL
+            .iter()
+            .map(|s| (s.label(), self.drawn(*s), self.fired(*s)))
+            .collect()
+    }
+}
+
+/// Budgeted retry for idempotent work, applied by shard workers to
+/// `Backend`/`Corrupted` execution failures (and caught worker
+/// panics) — never to `Overloaded`/`Closed`, which are admission
+/// outcomes (see the module docs for the idempotency argument).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    /// Total execution attempts per request, including the first
+    /// (clamped to at least 1; 1 = no retry, the default).
+    pub max_attempts: u32,
+    /// Base delay before attempt `k+1` (scaled linearly by the attempt
+    /// number).
+    pub backoff: Duration,
+    /// Fraction of the backoff randomized per retry, in `[0, 1]`
+    /// (drawn from a per-worker deterministic stream).
+    pub jitter: f64,
+}
+
+impl RetryPolicy {
+    /// `max_attempts` with the ≥ 1 clamp applied.
+    pub fn attempts(&self) -> u32 {
+        self.max_attempts.max(1)
+    }
+
+    /// The delay before attempt `next_attempt` (1-based), jittered by
+    /// `unit` (a `[0, 1)` draw).
+    pub fn delay(&self, next_attempt: u32, unit: f64) -> Duration {
+        let base = self.backoff.as_secs_f64()
+            * next_attempt.saturating_sub(1).max(1) as f64;
+        let jitter = self.jitter.clamp(0.0, 1.0);
+        let scale = 1.0 + jitter * (unit.clamp(0.0, 1.0) - 0.5);
+        Duration::from_secs_f64(base * scale.max(0.0))
+    }
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self {
+            max_attempts: 1,
+            backoff: Duration::from_millis(1),
+            jitter: 0.5,
+        }
+    }
+}
+
+/// Circuit-breaker policy for poison artifacts. `threshold` 0 (the
+/// default) disables quarantine entirely.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QuarantinePolicy {
+    /// Consecutive post-retry execution failures of one artifact that
+    /// trip its breaker open.
+    pub threshold: u32,
+    /// How long the breaker stays open before a half-open probe is
+    /// admitted to re-validate the artifact.
+    pub cooldown: Duration,
+}
+
+impl Default for QuarantinePolicy {
+    fn default() -> Self {
+        Self { threshold: 0, cooldown: Duration::from_millis(250) }
+    }
+}
+
+/// What the quarantine gate says about an artifact at admission.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    /// Not quarantined: route normally.
+    Allow,
+    /// The breaker's cooldown elapsed: this single request is the
+    /// half-open probe that re-validates the artifact.
+    Probe,
+    /// Quarantined (or a probe is already in flight): fail fast.
+    Deny,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum BreakerState {
+    Closed,
+    Open { until: Instant },
+    HalfOpen,
+}
+
+#[derive(Debug)]
+struct BreakerEntry {
+    consecutive: u32,
+    state: BreakerState,
+}
+
+/// The artifact circuit breaker, keyed by artifact identity digest
+/// (one entry per distinct artifact content, shared across shards).
+///
+/// State machine per key:
+///
+/// ```text
+/// Closed ──K consecutive post-retry failures──▶ Open(until)
+/// Open(until) ──request before `until`──▶ deny (fail fast)
+/// Open(until) ──first request after `until`──▶ HalfOpen (that
+///                request is the probe; others still denied)
+/// HalfOpen ──probe Ok──▶ entry removed (re-validated)
+/// HalfOpen ──probe Err──▶ Open(now + cooldown)
+/// ```
+#[derive(Debug)]
+pub struct Quarantine {
+    policy: QuarantinePolicy,
+    entries: Mutex<BTreeMap<String, BreakerEntry>>,
+}
+
+impl Quarantine {
+    pub fn new(policy: QuarantinePolicy) -> Self {
+        Self { policy, entries: Mutex::new(BTreeMap::new()) }
+    }
+
+    pub fn policy(&self) -> QuarantinePolicy {
+        self.policy
+    }
+
+    fn guard(&self)
+             -> std::sync::MutexGuard<'_, BTreeMap<String, BreakerEntry>>
+    {
+        self.entries.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Gate one request for `key` (called by the dispatcher before
+    /// routing).
+    pub fn admit(&self, key: &str) -> Admission {
+        let mut g = self.guard();
+        match g.get_mut(key) {
+            None => Admission::Allow,
+            Some(e) => match e.state {
+                BreakerState::Closed => Admission::Allow,
+                BreakerState::Open { until } => {
+                    if Instant::now() >= until {
+                        e.state = BreakerState::HalfOpen;
+                        Admission::Probe
+                    } else {
+                        Admission::Deny
+                    }
+                }
+                BreakerState::HalfOpen => Admission::Deny,
+            },
+        }
+    }
+
+    /// Record a post-retry execution failure for `key`. Returns `true`
+    /// when this failure tripped the breaker open (the caller counts a
+    /// quarantine entry).
+    pub fn record_failure(&self, key: &str) -> bool {
+        let mut g = self.guard();
+        let e = g.entry(key.to_string()).or_insert(BreakerEntry {
+            consecutive: 0,
+            state: BreakerState::Closed,
+        });
+        e.consecutive = e.consecutive.saturating_add(1);
+        match e.state {
+            BreakerState::HalfOpen => {
+                // the probe failed: straight back to open
+                e.state = BreakerState::Open {
+                    until: Instant::now() + self.policy.cooldown,
+                };
+                true
+            }
+            BreakerState::Closed => {
+                if e.consecutive >= self.policy.threshold.max(1) {
+                    e.state = BreakerState::Open {
+                        until: Instant::now() + self.policy.cooldown,
+                    };
+                    true
+                } else {
+                    false
+                }
+            }
+            // stragglers already past admission when the breaker
+            // tripped: the breaker is already open, nothing new
+            BreakerState::Open { .. } => false,
+        }
+    }
+
+    /// Record a successful execution for `key`. Returns `true` when
+    /// this success closed an open breaker (the probe re-validated the
+    /// artifact; the caller counts a quarantine exit).
+    pub fn record_success(&self, key: &str) -> bool {
+        let mut g = self.guard();
+        match g.get_mut(key) {
+            None => false,
+            Some(e) => match e.state {
+                BreakerState::HalfOpen => {
+                    g.remove(key);
+                    true
+                }
+                BreakerState::Closed => {
+                    e.consecutive = 0;
+                    false
+                }
+                // a pre-quarantine straggler succeeding does not
+                // re-validate: only the half-open probe may close
+                BreakerState::Open { .. } => false,
+            },
+        }
+    }
+
+    /// `(key, state label, consecutive failures)` for every tracked
+    /// artifact — the bench's attribution evidence.
+    pub fn snapshot(&self) -> Vec<(String, &'static str, u32)> {
+        self.guard()
+            .iter()
+            .map(|(k, e)| {
+                let s = match e.state {
+                    BreakerState::Closed => "closed",
+                    BreakerState::Open { .. } => "open",
+                    BreakerState::HalfOpen => "half-open",
+                };
+                (k.clone(), s, e.consecutive)
+            })
+            .collect()
+    }
+
+    /// Keys currently quarantined (open or half-open).
+    pub fn quarantined(&self) -> Vec<String> {
+        self.guard()
+            .iter()
+            .filter(|(_, e)| {
+                !matches!(e.state, BreakerState::Closed)
+            })
+            .map(|(k, _)| k.clone())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_rate_never_fires_and_never_draws() {
+        let plan = FaultPlan::new(7);
+        for _ in 0..100 {
+            assert!(!plan.should_fire(FaultSite::BackendError));
+        }
+        assert_eq!(plan.drawn(FaultSite::BackendError), 0);
+        assert_eq!(plan.fired(FaultSite::BackendError), 0);
+    }
+
+    #[test]
+    fn unit_rate_always_fires() {
+        let plan = FaultPlan::new(7)
+            .with_rate(FaultSite::WorkerPanic, 1.0);
+        for _ in 0..50 {
+            assert!(plan.should_fire(FaultSite::WorkerPanic));
+        }
+        assert_eq!(plan.drawn(FaultSite::WorkerPanic), 50);
+        assert_eq!(plan.fired(FaultSite::WorkerPanic), 50);
+    }
+
+    #[test]
+    fn same_seed_replays_the_same_fault_schedule() {
+        let mk = || FaultPlan::chaos(0xC0FFEE, 0.3);
+        let a = mk();
+        let b = mk();
+        let mut seq_a = Vec::new();
+        let mut seq_b = Vec::new();
+        for _ in 0..200 {
+            for site in FaultSite::ALL {
+                seq_a.push(a.should_fire(site));
+                seq_b.push(b.should_fire(site));
+            }
+        }
+        assert_eq!(seq_a, seq_b, "same seed, same schedule");
+        assert_eq!(a.site_counts(), b.site_counts());
+        // and a different seed produces a different schedule
+        let c = FaultPlan::chaos(0xC0FFEE + 1, 0.3);
+        let seq_c: Vec<bool> = (0..200)
+            .flat_map(|_| {
+                FaultSite::ALL
+                    .map(|s| c.should_fire(s))
+            })
+            .collect();
+        assert_ne!(seq_a, seq_c, "seed changes the schedule");
+    }
+
+    #[test]
+    fn sites_draw_from_independent_streams() {
+        // Consuming one site's stream must not shift another's.
+        let a = FaultPlan::chaos(42, 0.5);
+        let b = FaultPlan::chaos(42, 0.5);
+        for _ in 0..100 {
+            let _ = a.should_fire(FaultSite::BackendError);
+        }
+        let fire_a: Vec<bool> = (0..100)
+            .map(|_| a.should_fire(FaultSite::CorruptOutput))
+            .collect();
+        let fire_b: Vec<bool> = (0..100)
+            .map(|_| b.should_fire(FaultSite::CorruptOutput))
+            .collect();
+        assert_eq!(fire_a, fire_b,
+                   "corrupt stream unaffected by backend-error draws");
+    }
+
+    #[test]
+    fn fired_rate_tracks_probability() {
+        let plan = FaultPlan::new(1).with_rate(
+            FaultSite::BackendError, 0.1);
+        for _ in 0..2000 {
+            let _ = plan.should_fire(FaultSite::BackendError);
+        }
+        let fired = plan.fired(FaultSite::BackendError) as f64;
+        assert!(fired > 100.0 && fired < 320.0,
+                "~10% of 2000 draws, got {fired}");
+    }
+
+    #[test]
+    fn retry_policy_clamps_and_jitters() {
+        let p = RetryPolicy {
+            max_attempts: 0,
+            backoff: Duration::from_millis(10),
+            jitter: 0.5,
+        };
+        assert_eq!(p.attempts(), 1, "at least one attempt");
+        let lo = p.delay(2, 0.0);
+        let hi = p.delay(2, 0.999);
+        assert!(lo < hi, "jitter spreads the delay: {lo:?} vs {hi:?}");
+        assert!(lo >= Duration::from_millis(7));
+        assert!(hi <= Duration::from_millis(13));
+        let no_jitter = RetryPolicy {
+            max_attempts: 3,
+            backoff: Duration::from_millis(10),
+            jitter: 0.0,
+        };
+        assert_eq!(no_jitter.delay(2, 0.7),
+                   Duration::from_millis(10));
+        assert_eq!(no_jitter.delay(3, 0.7),
+                   Duration::from_millis(20), "linear backoff");
+    }
+
+    #[test]
+    fn quarantine_trips_denies_probes_and_revalidates() {
+        let q = Quarantine::new(QuarantinePolicy {
+            threshold: 2,
+            cooldown: Duration::from_millis(20),
+        });
+        assert_eq!(q.admit("d1"), Admission::Allow);
+        assert!(!q.record_failure("d1"), "below threshold");
+        assert_eq!(q.admit("d1"), Admission::Allow);
+        assert!(q.record_failure("d1"), "threshold trips the breaker");
+        assert_eq!(q.admit("d1"), Admission::Deny);
+        assert_eq!(q.quarantined(), vec!["d1".to_string()]);
+        std::thread::sleep(Duration::from_millis(25));
+        assert_eq!(q.admit("d1"), Admission::Probe,
+                   "cooldown elapsed: one probe admitted");
+        assert_eq!(q.admit("d1"), Admission::Deny,
+                   "only ONE probe while half-open");
+        assert!(q.record_success("d1"), "probe success re-validates");
+        assert_eq!(q.admit("d1"), Admission::Allow);
+        assert!(q.quarantined().is_empty());
+    }
+
+    #[test]
+    fn failed_probe_reopens_and_success_resets_consecutive() {
+        let q = Quarantine::new(QuarantinePolicy {
+            threshold: 1,
+            cooldown: Duration::from_millis(10),
+        });
+        assert!(q.record_failure("d"));
+        std::thread::sleep(Duration::from_millis(15));
+        assert_eq!(q.admit("d"), Admission::Probe);
+        assert!(q.record_failure("d"), "failed probe re-opens");
+        assert_eq!(q.admit("d"), Admission::Deny);
+        // a healthy artifact's success resets its failure streak
+        let q2 = Quarantine::new(QuarantinePolicy {
+            threshold: 2,
+            cooldown: Duration::from_millis(10),
+        });
+        assert!(!q2.record_failure("h"));
+        assert!(!q2.record_success("h"));
+        assert!(!q2.record_failure("h"),
+                "streak was reset by the success");
+        let snap = q2.snapshot();
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap[0].1, "closed");
+    }
+}

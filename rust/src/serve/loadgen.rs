@@ -20,6 +20,7 @@ use std::collections::BTreeMap;
 use std::fmt::Write as _;
 use std::path::Path;
 use std::sync::mpsc::channel;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::arch::{compiler, ArchId, CompilerId};
@@ -29,7 +30,8 @@ use crate::runtime::artifact::Manifest;
 use crate::sim::TuningPoint;
 use crate::util::table::Table;
 
-use super::{NativeConfig, NativeEngine, NativeEngineId, Output, Serve,
+use super::{FaultPlan, NativeConfig, NativeEngine, NativeEngineId,
+            Output, QuarantinePolicy, RetryPolicy, Serve, ServeConfig,
             ServeError, ServeReply, WorkItem};
 
 /// The canonical demo artifact set used when no manifest is available
@@ -72,6 +74,48 @@ pub fn native_config_or_synthetic(dir: &Path)
     let ids: Vec<String> =
         DEMO_ARTIFACT_IDS.iter().map(|s| s.to_string()).collect();
     (NativeConfig::Synthetic(ids.clone()), ids)
+}
+
+/// Apply the canonical chaos recipe to a serve config — shared by the
+/// CLI (`serve --chaos-seed`) and the `chaos_serve` bench so the two
+/// drivers can never drift apart: the [`FaultPlan::chaos`] mix at
+/// `rate` (backend errors at `rate`, corruption and worker panics at
+/// half of it), a budget of `retries` total execution attempts with a
+/// short jittered linear backoff, and — when `quarantine_after > 0` —
+/// an artifact circuit breaker opening after that many consecutive
+/// post-retry failures. Returns the plan `Arc` alongside the config so
+/// the driver can render [`fault_report`] after the run (the config
+/// keeps its own clone).
+pub fn chaos_config(mut cfg: ServeConfig, seed: u64, rate: f64,
+                    retries: u32, quarantine_after: u32)
+                    -> (ServeConfig, Arc<FaultPlan>) {
+    let plan = Arc::new(FaultPlan::chaos(seed, rate));
+    cfg.fault_plan = Some(Arc::clone(&plan));
+    cfg.retry = RetryPolicy {
+        max_attempts: retries,
+        backoff: Duration::from_micros(200),
+        jitter: 0.5,
+    };
+    cfg.quarantine = QuarantinePolicy {
+        threshold: quarantine_after,
+        cooldown: Duration::from_millis(250),
+    };
+    (cfg, plan)
+}
+
+/// Render a chaos run's injected fault activity: one row per
+/// [`FaultSite`](super::FaultSite) with its drawn/fired counters —
+/// the replay fingerprint ([`FaultPlan::site_counts`]) in table form.
+/// Deterministically ordered (site declaration order).
+pub fn fault_report(plan: &FaultPlan) -> String {
+    let mut t = Table::new(vec!["fault site", "drawn", "fired"])
+        .numeric();
+    for (label, drawn, fired) in plan.site_counts() {
+        t.row(vec![label.to_string(), drawn.to_string(),
+                   fired.to_string()]);
+    }
+    format!("chaos seed {} — injected fault activity:\n{}",
+            plan.seed(), t.render())
 }
 
 /// Load-generation parameters.
@@ -248,6 +292,7 @@ pub fn run_stream_loop(serve: &Serve, spec: &LoadSpec, window: usize)
                     let session = Session::open(serve, SessionConfig {
                         window,
                         on_full: WindowPolicy::Block,
+                        ..SessionConfig::default()
                     });
                     let items: Vec<WorkItem> =
                         (0..spec.requests_per_client)
@@ -358,6 +403,7 @@ pub fn run_open_loop(serve: &Serve, spec: &OverloadSpec)
     let session = Session::open(serve, SessionConfig {
         window: 0,
         on_full: WindowPolicy::Block,
+        ..SessionConfig::default()
     });
     std::thread::scope(|scope| {
         let tx = tx; // moved into the submitter; clones ride each reply
@@ -574,6 +620,30 @@ mod tests {
         let b = outcome_report(&out, &serve);
         assert_eq!(a, b, "same tallies render identically");
         serve.shutdown();
+    }
+
+    #[test]
+    fn chaos_config_is_replayable_and_reportable() {
+        let (cfg, plan) =
+            chaos_config(ServeConfig::default(), 42, 0.25, 3, 2);
+        assert!(cfg.fault_plan.is_some());
+        assert_eq!(cfg.retry.attempts(), 3);
+        assert_eq!(cfg.quarantine.threshold, 2);
+        // Same seed, same recipe: the twin plan draws the identical
+        // per-site sequence — the replayability contract the chaos
+        // bench gates end to end.
+        let (_, twin) =
+            chaos_config(ServeConfig::default(), 42, 0.25, 3, 2);
+        for _ in 0..64 {
+            assert_eq!(
+                plan.should_fire(crate::serve::FaultSite::BackendError),
+                twin.should_fire(crate::serve::FaultSite::BackendError));
+        }
+        assert_eq!(plan.site_counts(), twin.site_counts());
+        let report = fault_report(&plan);
+        assert!(report.contains("chaos seed 42"), "{report}");
+        assert!(report.contains("backend-error"), "{report}");
+        assert!(report.contains("tuner-commit"), "{report}");
     }
 
     #[test]

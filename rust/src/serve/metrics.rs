@@ -162,6 +162,27 @@ pub struct ServeMetrics {
     tune_shed: AtomicU64,
     /// Tuning jobs that failed or were cancelled.
     tune_failed: AtomicU64,
+    /// Shard workers whose backend panicked, was caught, and was
+    /// respawned from the factory (the in-flight reply is preserved —
+    /// supervision, not silent death).
+    worker_restarts: AtomicU64,
+    /// Execution attempts repeated under the retry policy (one per
+    /// re-run, so a request retried twice counts twice).
+    requests_retried: AtomicU64,
+    /// Requests whose retry budget ran out — the failure the caller
+    /// finally saw was preceded by `max_attempts - 1` retries.
+    retries_exhausted: AtomicU64,
+    /// Executions that failed the oracle digest check
+    /// (`ServeError::Corrupted`): the backend ran but produced bytes
+    /// disagreeing with the sequential reference.
+    requests_corrupted: AtomicU64,
+    /// Requests failed fast at routing because their artifact is
+    /// quarantined (`ServeError::Quarantined`) — no execution spent.
+    requests_quarantined: AtomicU64,
+    /// Artifacts that entered quarantine (breaker opened).
+    quarantine_entered: AtomicU64,
+    /// Artifacts that left quarantine (half-open probe re-validated).
+    quarantine_exited: AtomicU64,
     /// End-to-end latency: submit → reply.
     pub latency: LatencyHistogram,
     /// Per-shard compute aggregates (executed native runs only — cache
@@ -211,6 +232,13 @@ impl ServeMetrics {
             tune_completed: AtomicU64::new(0),
             tune_shed: AtomicU64::new(0),
             tune_failed: AtomicU64::new(0),
+            worker_restarts: AtomicU64::new(0),
+            requests_retried: AtomicU64::new(0),
+            retries_exhausted: AtomicU64::new(0),
+            requests_corrupted: AtomicU64::new(0),
+            requests_quarantined: AtomicU64::new(0),
+            quarantine_entered: AtomicU64::new(0),
+            quarantine_exited: AtomicU64::new(0),
             latency: LatencyHistogram::new(),
             compute: Mutex::new(BTreeMap::new()),
             service_ewma: Mutex::new(BTreeMap::new()),
@@ -433,6 +461,73 @@ impl ServeMetrics {
         self.tune_failed.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// A shard worker's backend panicked, was caught and respawned.
+    pub fn worker_restarted(&self) {
+        self.worker_restarts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One execution attempt was repeated under the retry policy.
+    pub fn request_retried(&self) {
+        self.requests_retried.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A request's retry budget ran out; the failure goes to the
+    /// caller.
+    pub fn retry_exhausted(&self) {
+        self.retries_exhausted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// An execution failed the oracle digest check
+    /// (`ServeError::Corrupted`).
+    pub fn request_corrupted(&self) {
+        self.requests_corrupted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A request failed fast because its artifact is quarantined
+    /// (`ServeError::Quarantined`).
+    pub fn request_quarantined(&self) {
+        self.requests_quarantined.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// An artifact's circuit breaker opened (entered quarantine).
+    pub fn quarantine_enter(&self) {
+        self.quarantine_entered.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// An artifact's half-open probe re-validated it (left
+    /// quarantine).
+    pub fn quarantine_exit(&self) {
+        self.quarantine_exited.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn worker_restarts(&self) -> u64 {
+        self.worker_restarts.load(Ordering::Relaxed)
+    }
+
+    pub fn requests_retried(&self) -> u64 {
+        self.requests_retried.load(Ordering::Relaxed)
+    }
+
+    pub fn retries_exhausted(&self) -> u64 {
+        self.retries_exhausted.load(Ordering::Relaxed)
+    }
+
+    pub fn requests_corrupted(&self) -> u64 {
+        self.requests_corrupted.load(Ordering::Relaxed)
+    }
+
+    pub fn requests_quarantined(&self) -> u64 {
+        self.requests_quarantined.load(Ordering::Relaxed)
+    }
+
+    pub fn quarantine_entered(&self) -> u64 {
+        self.quarantine_entered.load(Ordering::Relaxed)
+    }
+
+    pub fn quarantine_exited(&self) -> u64 {
+        self.quarantine_exited.load(Ordering::Relaxed)
+    }
+
     pub fn tune_enqueued(&self) -> u64 {
         self.tune_enqueued.load(Ordering::Relaxed)
     }
@@ -611,6 +706,22 @@ impl ServeMetrics {
                 "; tuning {enq} jobs ({done} done, {tshed} shed, \
                  {tfail} failed)"));
         }
+        let (restarts, retried, exhausted) =
+            (self.worker_restarts(), self.requests_retried(),
+             self.retries_exhausted());
+        if restarts + retried + exhausted > 0 {
+            s.push_str(&format!(
+                "; recovery {restarts} restarts, {retried} retried, \
+                 {exhausted} exhausted"));
+        }
+        let (corrupt, quar, qin, qout) =
+            (self.requests_corrupted(), self.requests_quarantined(),
+             self.quarantine_entered(), self.quarantine_exited());
+        if corrupt + quar + qin + qout > 0 {
+            s.push_str(&format!(
+                "; quarantine {corrupt} corrupted, {quar} failed-fast \
+                 ({qin} entered, {qout} exited)"));
+        }
         let evicted = self.cache_evictions_disk();
         if evicted > 0 {
             s.push_str(&format!("; disk cache evicted {evicted}"));
@@ -773,6 +884,34 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("tuning 2 jobs"), "{s}");
         assert!(s.contains("1 shed,"), "{s}");
+    }
+
+    #[test]
+    fn recovery_and_quarantine_counters_in_summary() {
+        let m = ServeMetrics::new();
+        let s = m.summary();
+        assert!(!s.contains("recovery") && !s.contains("quarantine"),
+                "no recovery tails before any fault: {s}");
+        m.worker_restarted();
+        m.request_retried();
+        m.request_retried();
+        m.retry_exhausted();
+        m.request_corrupted();
+        m.request_quarantined();
+        m.quarantine_enter();
+        m.quarantine_exit();
+        assert_eq!(m.worker_restarts(), 1);
+        assert_eq!(m.requests_retried(), 2);
+        assert_eq!(m.retries_exhausted(), 1);
+        assert_eq!(m.requests_corrupted(), 1);
+        assert_eq!(m.requests_quarantined(), 1);
+        assert_eq!(m.quarantine_entered(), 1);
+        assert_eq!(m.quarantine_exited(), 1);
+        let s = m.summary();
+        assert!(s.contains("recovery 1 restarts, 2 retried, \
+                            1 exhausted"), "{s}");
+        assert!(s.contains("quarantine 1 corrupted, 1 failed-fast \
+                            (1 entered, 1 exited)"), "{s}");
     }
 
     #[test]

@@ -77,6 +77,7 @@
 pub mod backend;
 pub mod cache;
 pub mod diskcache;
+pub mod fault;
 pub mod loadgen;
 pub mod metrics;
 
@@ -95,12 +96,17 @@ use crate::client::future::{pair, ReplyHandle};
 use crate::coordinator::queue::BoundedQueue;
 use crate::gemm::Precision;
 use crate::runtime::artifact::Manifest;
+use crate::util::prng::{seed_for, SplitMix64};
+use crate::util::threadpool::panic_message;
 
-pub use backend::{Backend, BackendFactory, MachinePark, NativeBackend,
-                  NativeEngine, NativeEngineId, Output, ShardKey,
-                  SimBackend, ThreadpoolGemm, WorkItem, WorkPayload};
+pub use backend::{Backend, BackendFactory, BackendFailure, MachinePark,
+                  NativeBackend, NativeEngine, NativeEngineId, Output,
+                  ShardKey, SimBackend, ThreadpoolGemm, WorkItem,
+                  WorkPayload};
 pub use cache::LruCache;
 pub use diskcache::DiskResultCache;
+pub use fault::{Admission, FaultPlan, FaultSite, Quarantine,
+                QuarantinePolicy, RetryPolicy};
 pub use metrics::{ServeMetrics, SessionOutcome, SessionTally};
 
 /// Why a request did not produce an output.
@@ -127,6 +133,25 @@ pub enum ServeError {
     },
     /// The backend refused or failed the request.
     Backend(String),
+    /// The backend's output failed its oracle digest check — the
+    /// result is wrong, not merely absent. Discriminated from
+    /// [`ServeError::Backend`] so retry and quarantine can treat
+    /// corruption as evidence against the *artifact*, not the shard.
+    Corrupted {
+        /// Label of the shard whose execution produced the corrupt
+        /// output.
+        shard: String,
+        /// Identity of the artifact whose result failed validation.
+        artifact: String,
+    },
+    /// The artifact's circuit breaker is open (K consecutive
+    /// post-retry failures): the request failed fast without touching
+    /// a shard. A half-open probe after the cooldown re-validates (see
+    /// [`fault::Quarantine`]).
+    Quarantined {
+        /// Identity of the quarantined artifact.
+        artifact: String,
+    },
 }
 
 impl fmt::Display for ServeError {
@@ -141,6 +166,14 @@ impl fmt::Display for ServeError {
                            quota {quota}): request shed")
             }
             ServeError::Backend(m) => write!(f, "{m}"),
+            ServeError::Corrupted { shard, artifact } => {
+                write!(f, "corrupted result from {shard} for artifact \
+                           {artifact}: oracle digest mismatch")
+            }
+            ServeError::Quarantined { artifact } => {
+                write!(f, "artifact {artifact} is quarantined: failed \
+                           fast without execution")
+            }
         }
     }
 }
@@ -239,6 +272,10 @@ pub struct ServeReply {
     pub cache_src: CacheSource,
     /// Worker index within the shard.
     pub worker: usize,
+    /// Execution attempts this reply took (1 = first try; > 1 means
+    /// the retry policy recovered it). Cache hits execute nothing and
+    /// report 1.
+    pub attempts: u32,
 }
 
 /// The one reply type every client-plane surface resolves to.
@@ -342,6 +379,21 @@ pub struct ServeConfig {
     pub tune_budget: usize,
     /// Best-of-k timing repetitions per explored candidate.
     pub tune_reps: usize,
+    /// Deterministic fault injection (chaos testing): when set, the
+    /// named [`FaultSite`]s fire with the plan's seeded probabilities.
+    /// `None` (the default) leaves every site inert.
+    pub fault_plan: Option<Arc<FaultPlan>>,
+    /// Budgeted retry of `Backend`/`Corrupted` execution failures
+    /// (including caught worker panics) by the shard workers. The
+    /// default (`max_attempts` 1) disables retry. `Overloaded` and
+    /// `Closed` are never retried.
+    pub retry: RetryPolicy,
+    /// Artifact circuit breaker: after `threshold` consecutive
+    /// post-retry execution failures an artifact is quarantined
+    /// (requests fail fast with [`ServeError::Quarantined`]) until a
+    /// half-open probe re-validates it. `threshold` 0 (the default)
+    /// disables quarantine.
+    pub quarantine: QuarantinePolicy,
 }
 
 impl Default for ServeConfig {
@@ -352,7 +404,9 @@ impl Default for ServeConfig {
                shed: ShedPolicy::None, shard_quota: None,
                latency_budget: Duration::from_millis(250),
                tuning_store: None, online_tune: false, tune_budget: 6,
-               tune_reps: 2 }
+               tune_reps: 2, fault_plan: None,
+               retry: RetryPolicy::default(),
+               quarantine: QuarantinePolicy::default() }
     }
 }
 
@@ -380,6 +434,9 @@ pub(crate) struct SharedDiskCache {
     digests: HashMap<String, String>,
     /// Puts since the last flush (crash-loss window bound).
     unflushed: std::sync::atomic::AtomicUsize,
+    /// Fault injection for the disk tier's I/O (reads degrade to
+    /// misses, writes skip the spill — never a caller-visible error).
+    plan: Option<Arc<FaultPlan>>,
 }
 
 /// How many disk-cache puts may accumulate before the file is
@@ -397,6 +454,15 @@ impl SharedDiskCache {
     }
 
     fn get(&self, shard: &str, key: &str) -> Option<Output> {
+        // An injected read failure behaves exactly like a real one:
+        // the probe misses (counted by the caller as an ordinary
+        // cache miss) and the request re-executes — disk-tier I/O
+        // trouble is NEVER an error to the caller.
+        if self.plan.as_ref()
+            .is_some_and(|p| p.should_fire(FaultSite::DiskCacheRead))
+        {
+            return None;
+        }
         let digest = self.digests.get(key)?;
         self.cache.lock().ok()?
             .get(&Self::qualified(shard, key), digest)
@@ -426,7 +492,7 @@ impl SharedDiskCache {
             };
             (evicted, snap)
         };
-        Self::write(snapshot);
+        self.write(snapshot);
         evicted
     }
 
@@ -442,17 +508,29 @@ impl SharedDiskCache {
             }
             g.snapshot()
         };
-        Self::write(snapshot);
+        self.write(snapshot);
     }
 
-    fn write(snapshot: Option<(PathBuf, String)>) {
-        if let Some((path, json)) = snapshot {
-            if let Err(e) = TuningStore::write_atomic(&path, &json) {
-                // in-memory entries took effect; only cross-restart
-                // persistence is lost — never fail the serving path
-                eprintln!("[serve] result cache could not be persisted \
-                           to {}: {e:#}", path.display());
-            }
+    fn write(&self, snapshot: Option<(PathBuf, String)>) {
+        let Some((path, json)) = snapshot else { return };
+        // An injected write failure fails like a real one: the spill
+        // is skipped wholesale (write_atomic's temp-file + rename
+        // discipline means a mid-write failure leaves no partial
+        // file either way) and the in-memory entries stay live — the
+        // cache remains fully usable, only cross-restart persistence
+        // of this window is lost.
+        if self.plan.as_ref()
+            .is_some_and(|p| p.should_fire(FaultSite::DiskCacheWrite))
+        {
+            eprintln!("[serve] injected disk-cache write failure: \
+                       spill to {} skipped", path.display());
+            return;
+        }
+        if let Err(e) = TuningStore::write_atomic(&path, &json) {
+            // in-memory entries took effect; only cross-restart
+            // persistence is lost — never fail the serving path
+            eprintln!("[serve] result cache could not be persisted \
+                       to {}: {e:#}", path.display());
         }
     }
 }
@@ -509,6 +587,7 @@ pub struct Serve {
     park: Arc<MachinePark>,
     shard_queues: Arc<ShardRegistry>,
     store: Option<SharedTuningStore>,
+    quarantine: Option<Arc<Quarantine>>,
 }
 
 impl Serve {
@@ -557,15 +636,21 @@ impl Serve {
         // shard worker. Only meaningful with the LRU enabled — the
         // measurement-semantics path (cache_cap 0) must re-execute
         // everything, disk included.
+        // One digest map for everything that keys by artifact
+        // identity: the disk cache's entry validation and the
+        // quarantine breaker (one breaker per artifact *content*, not
+        // per id string).
+        let digests = Arc::new(native_digests(&native_src));
         let disk: Option<Arc<SharedDiskCache>> =
             match (&cfg.result_cache_path, cfg.cache_cap) {
                 (Some(path), cap) if cap > 0 => {
                     Some(Arc::new(SharedDiskCache {
                         cache: Mutex::new(DiskResultCache::open(path)
                             .with_cap(cfg.result_cache_cap)),
-                        digests: native_digests(&native_src),
+                        digests: (*digests).clone(),
                         unflushed: std::sync::atomic::AtomicUsize
                             ::new(0),
+                        plan: cfg.fault_plan.clone(),
                     }))
                 }
                 (Some(path), _) => {
@@ -576,6 +661,15 @@ impl Serve {
                 }
                 (None, _) => None,
             };
+        // The artifact circuit breaker is shared between the
+        // dispatcher (admission gate) and the shard workers (outcome
+        // recording) — and surfaced on the handle for attribution.
+        let quarantine: Option<Arc<Quarantine>> =
+            if cfg.quarantine.threshold > 0 {
+                Some(Arc::new(Quarantine::new(cfg.quarantine)))
+            } else {
+                None
+            };
         let dispatcher = {
             let front = Arc::clone(&front);
             let metrics = Arc::clone(&metrics);
@@ -584,16 +678,18 @@ impl Serve {
             let registry = Arc::clone(&shard_queues);
             let store = store.clone();
             let cfg = cfg.clone();
+            let quarantine = quarantine.clone();
             std::thread::Builder::new()
                 .name("serve-dispatch".into())
                 .spawn(move || {
                     dispatch_loop(front, cfg, native_src, store, disk,
-                                  park, metrics, cancel, registry)
+                                  park, metrics, cancel, registry,
+                                  quarantine, digests)
                 })
                 .expect("spawn serve dispatcher")
         };
         Ok(Serve { front, dispatcher: Some(dispatcher), metrics, cancel,
-                   park, shard_queues, store })
+                   park, shard_queues, store, quarantine })
     }
 
     /// The submission primitive every public surface builds on: push
@@ -741,6 +837,23 @@ impl Serve {
         self.store.clone()
     }
 
+    /// The artifact circuit breaker (present when
+    /// `ServeConfig::quarantine.threshold > 0`) — for attribution:
+    /// [`Quarantine::snapshot`] says exactly which artifacts are
+    /// isolated and how many consecutive failures got them there.
+    pub fn quarantine(&self) -> Option<Arc<Quarantine>> {
+        self.quarantine.clone()
+    }
+
+    /// Digest keys of the artifacts currently quarantined (empty when
+    /// quarantine is disabled or nothing is isolated).
+    pub fn quarantined(&self) -> Vec<String> {
+        self.quarantine
+            .as_ref()
+            .map(|q| q.quarantined())
+            .unwrap_or_default()
+    }
+
     /// Graceful shutdown: close admission, drain, join all threads.
     pub fn shutdown(mut self) {
         self.shutdown_inner();
@@ -886,6 +999,18 @@ fn interleave_sessions(burst: Vec<ServeRequest>) -> Vec<ServeRequest> {
     out
 }
 
+/// The quarantine key of an artifact work item: its identity digest
+/// when the native source knows it, the raw work key otherwise (an
+/// unknown id still gets a stable breaker of its own).
+fn quarantine_key(digests: &HashMap<String, String>, item: &WorkItem)
+                  -> Option<String> {
+    if !matches!(item.payload, WorkPayload::Artifact { .. }) {
+        return None;
+    }
+    let key = item.cache_key();
+    Some(digests.get(&key).cloned().unwrap_or(key))
+}
+
 #[allow(clippy::too_many_arguments)]
 fn dispatch_loop(front: Arc<BoundedQueue<ServeRequest>>, cfg: ServeConfig,
                  native_src: Option<Arc<NativeSource>>,
@@ -893,7 +1018,9 @@ fn dispatch_loop(front: Arc<BoundedQueue<ServeRequest>>, cfg: ServeConfig,
                  disk: Option<Arc<SharedDiskCache>>,
                  park: Arc<MachinePark>, metrics: Arc<ServeMetrics>,
                  cancel: Arc<AtomicBool>,
-                 registry: Arc<ShardRegistry>) {
+                 registry: Arc<ShardRegistry>,
+                 quarantine: Option<Arc<Quarantine>>,
+                 digests: Arc<HashMap<String, String>>) {
     use std::collections::VecDeque;
 
     use crate::coordinator::queue::PushRefusal;
@@ -997,6 +1124,32 @@ fn dispatch_loop(front: Arc<BoundedQueue<ServeRequest>>, cfg: ServeConfig,
         // worth of shard-queue slots ahead of everyone else).
         for req in interleave_sessions(burst) {
             let key = req.item.shard_key();
+            // Circuit breaker: a quarantined artifact fails FAST at
+            // routing time — no shard queue slot, no backend time —
+            // with an explicit `Quarantined` reply. After the
+            // cooldown, exactly one request per breaker passes as the
+            // half-open probe; its execution outcome (recorded by the
+            // shard worker) re-validates or re-opens.
+            if let Some(q) = &quarantine {
+                if let Some(qkey) = quarantine_key(&digests, &req.item) {
+                    if q.admit(&qkey) == Admission::Deny {
+                        let artifact = match &req.item.payload {
+                            WorkPayload::Artifact { id, .. } => {
+                                id.clone()
+                            }
+                            _ => qkey,
+                        };
+                        metrics.request_quarantined();
+                        if !req.internal {
+                            metrics.request_failed();
+                        }
+                        (req.reply)(Err(ServeError::Quarantined {
+                            artifact,
+                        }));
+                        continue;
+                    }
+                }
+            }
             // Online-tuning trigger: a request for an untuned
             // (dtype, bucket) seeds ONE bounded exploration job on the
             // tuner shard. Strictly non-blocking: over TUNE_QUOTA the
@@ -1010,7 +1163,8 @@ fn dispatch_loop(front: Arc<BoundedQueue<ServeRequest>>, cfg: ServeConfig,
                     if !shards.contains_key(&tk) {
                         match spawn_shard(tk, &cfg, &native_src, &store,
                                           &disk, &park, &metrics,
-                                          &cancel) {
+                                          &cancel, &quarantine,
+                                          &digests) {
                             Ok(handle) => {
                                 // poisoned registry = shard invisible
                                 // to depth reports, still serving (R2)
@@ -1048,7 +1202,8 @@ fn dispatch_loop(front: Arc<BoundedQueue<ServeRequest>>, cfg: ServeConfig,
             }
             if !shards.contains_key(&key) {
                 match spawn_shard(key, &cfg, &native_src, &store, &disk,
-                                  &park, &metrics, &cancel) {
+                                  &park, &metrics, &cancel, &quarantine,
+                                  &digests) {
                     Ok(handle) => {
                         if let Ok(mut reg) = registry.lock() {
                             reg.push((key.label(),
@@ -1166,7 +1321,9 @@ fn spawn_shard(key: ShardKey, cfg: &ServeConfig,
                store: &Option<SharedTuningStore>,
                disk: &Option<Arc<SharedDiskCache>>,
                park: &Arc<MachinePark>, metrics: &Arc<ServeMetrics>,
-               cancel: &Arc<AtomicBool>)
+               cancel: &Arc<AtomicBool>,
+               quarantine: &Option<Arc<Quarantine>>,
+               digests: &Arc<HashMap<String, String>>)
                -> Result<ShardHandle, String> {
     let queue: Arc<BoundedQueue<ServeRequest>> =
         Arc::new(BoundedQueue::new(cfg.shard_cap.max(1)));
@@ -1209,6 +1366,10 @@ fn spawn_shard(key: ShardKey, cfg: &ServeConfig,
             })?);
             let native_threads = cfg.native_threads;
             let store = store.clone();
+            let plan = cfg.fault_plan.clone();
+            // The factory is reusable (FnMut): worker supervision
+            // respawns a panicked worker's backend from it, so the
+            // captures are cloned per construction instead of moved.
             factories.push(Box::new(move || {
                 let b: Box<dyn Backend> = match (engine, &*src) {
                     (NativeEngineId::Pjrt,
@@ -1216,22 +1377,26 @@ fn spawn_shard(key: ShardKey, cfg: &ServeConfig,
                         // the PJRT backend owns its manifest (it keeps
                         // loading kernels from it) — one clone here
                         Box::new(NativeBackend::from_manifest(m.clone())
-                                 .with_store(store))
+                                 .with_store(store.clone()))
                     }
                     (NativeEngineId::Pjrt,
                      NativeSource::Synthetic(ids)) => {
                         Box::new(NativeBackend::synthetic(ids)?
-                                 .with_store(store))
+                                 .with_store(store.clone()))
                     }
                     (NativeEngineId::Threadpool,
                      NativeSource::Manifest(m)) => {
                         Box::new(ThreadpoolGemm::from_manifest(
-                            m, native_threads).with_store(store))
+                            m, native_threads)
+                            .with_store(store.clone())
+                            .with_fault(plan.clone()))
                     }
                     (NativeEngineId::Threadpool,
                      NativeSource::Synthetic(ids)) => {
                         Box::new(ThreadpoolGemm::synthetic(
-                            ids, native_threads)?.with_store(store))
+                            ids, native_threads)?
+                            .with_store(store.clone())
+                            .with_fault(plan.clone()))
                     }
                 };
                 Ok(b)
@@ -1249,7 +1414,8 @@ fn spawn_shard(key: ShardKey, cfg: &ServeConfig,
             let fanout =
                 crate::autotune::fanout_candidates(cfg.native_threads);
             factories.push(Box::new(move || {
-                Ok(Box::new(TunerBackend::new(store, budget, reps)
+                Ok(Box::new(TunerBackend::new(store.clone(), budget,
+                                              reps)
                                 .with_fanout(fanout.clone()))
                    as Box<dyn Backend>)
             }));
@@ -1282,12 +1448,18 @@ fn spawn_shard(key: ShardKey, cfg: &ServeConfig,
                 ShardKey::Tuner => 1,
                 _ => cfg.max_batch.max(1),
             };
+            let fault = ShardFaultCtx {
+                plan: cfg.fault_plan.clone(),
+                retry: cfg.retry,
+                quarantine: quarantine.clone(),
+                digests: Arc::clone(digests),
+            };
             std::thread::Builder::new()
                 .name(format!("serve-{}-{widx}", label.replace(':', "-")))
                 .spawn(move || {
                     shard_loop(queue, factory, cache, disk, metrics,
                                cancel, max_batch, widx, label, shed,
-                               quota)
+                               quota, fault)
                 })
                 .expect("spawn shard worker")
         })
@@ -1318,15 +1490,186 @@ fn service_seconds(output: &Output, wall: f64) -> f64 {
     }
 }
 
+/// Per-worker fault context: the injection plan plus the recovery
+/// policies (retry budget, quarantine breaker) and the digest map that
+/// keys the breaker by artifact *content* rather than artifact id.
+struct ShardFaultCtx {
+    plan: Option<Arc<FaultPlan>>,
+    retry: RetryPolicy,
+    quarantine: Option<Arc<Quarantine>>,
+    digests: Arc<HashMap<String, String>>,
+}
+
+/// Injected reply stall: fires after execution, before the replies go
+/// out, so a stalled shard looks exactly like a slow backend to every
+/// client-plane deadline. No lock is held across the sleep.
+fn inject_stall(fault: &ShardFaultCtx) {
+    if let Some(p) = &fault.plan {
+        if p.should_fire(FaultSite::StallReply) {
+            std::thread::sleep(p.stall());
+        }
+    }
+}
+
+/// Fold one *post-retry* execution outcome into the artifact circuit
+/// breaker, surfacing the state transitions in metrics. Cache hits
+/// count as successes too: a half-open probe answered from cache still
+/// proves the artifact serveable and closes the breaker.
+fn record_quarantine(fault: &ShardFaultCtx, metrics: &ServeMetrics,
+                     item: &WorkItem, ok: bool) {
+    let Some(q) = &fault.quarantine else { return };
+    let Some(key) = quarantine_key(&fault.digests, item) else {
+        return;
+    };
+    if ok {
+        if q.record_success(&key) {
+            metrics.quarantine_exit();
+        }
+    } else if q.record_failure(&key) {
+        metrics.quarantine_enter();
+    }
+}
+
+/// One shard worker's backend plus everything needed to heal it: the
+/// reusable factory that respawns the backend after a panic, and a
+/// private RNG for retry-backoff jitter (seeded from the fault-plan
+/// seed so chaos runs replay their backoff schedule too).
+struct WorkerState {
+    backend: Option<Box<dyn Backend>>,
+    factory: BackendFactory,
+    label: String,
+    rng: SplitMix64,
+}
+
+impl WorkerState {
+    /// Run one item under supervision: injected faults, panic catch +
+    /// respawn, and the budgeted retry policy. Returns the final
+    /// outcome plus the number of attempts consumed (1 = first try).
+    ///
+    /// Retry applies ONLY to execution failures (`Backend` /
+    /// `Corrupted`) — `Overloaded` and `Closed` are routing-time
+    /// replies that never reach this function, so the policy cannot
+    /// amplify overload.
+    fn run_supervised(&mut self, item: &WorkItem,
+                      fault: &ShardFaultCtx, metrics: &ServeMetrics)
+                      -> (Result<Output, ServeError>, u32) {
+        let budget = fault.retry.attempts();
+        let mut attempt = 0u32;
+        loop {
+            attempt += 1;
+            // Injection happens *before* the backend runs so an
+            // injected fault costs no compute. The tuner shard draws
+            // from its own site, keeping tuner-commit failures tunable
+            // independently of serving-path error rates.
+            let injected = fault.plan.as_ref().and_then(|p| {
+                if self.label.starts_with("tune:") {
+                    p.should_fire(FaultSite::TunerCommit).then(|| {
+                        BackendFailure::Error(format!(
+                            "{}: injected tuner commit failure",
+                            self.label))
+                    })
+                } else {
+                    p.should_fire(FaultSite::BackendError).then(|| {
+                        BackendFailure::Error(format!(
+                            "{}: injected backend error", self.label))
+                    })
+                }
+            });
+            let result = match injected {
+                Some(fail) => Err(fail),
+                None => self.run_caught(item, fault, metrics),
+            };
+            match result {
+                Ok(out) => return (Ok(out), attempt),
+                Err(fail) => {
+                    if attempt < budget {
+                        metrics.request_retried();
+                        let unit = self.rng.next_unit();
+                        std::thread::sleep(
+                            fault.retry.delay(attempt + 1, unit));
+                        continue;
+                    }
+                    if budget > 1 {
+                        metrics.retry_exhausted();
+                    }
+                    let err = match fail {
+                        BackendFailure::Error(m) => {
+                            ServeError::Backend(m)
+                        }
+                        BackendFailure::Corrupted { artifact, .. } => {
+                            metrics.request_corrupted();
+                            ServeError::Corrupted {
+                                shard: self.label.clone(),
+                                artifact,
+                            }
+                        }
+                    };
+                    return (Err(err), attempt);
+                }
+            }
+        }
+    }
+
+    /// One attempt: catch a panicking backend (injected or organic),
+    /// count the restart and rebuild from the factory so the *next*
+    /// attempt — and every later request — still has a live backend.
+    /// The in-flight item's reply is preserved: a panic surfaces as an
+    /// ordinary `BackendFailure`, never a dropped reply channel.
+    fn run_caught(&mut self, item: &WorkItem, fault: &ShardFaultCtx,
+                  metrics: &ServeMetrics)
+                  -> Result<Output, BackendFailure> {
+        let panic_fuse = fault.plan.as_ref()
+            .is_some_and(|p| p.should_fire(FaultSite::WorkerPanic));
+        if self.backend.is_none() {
+            match (self.factory)() {
+                Ok(b) => self.backend = Some(b),
+                Err(e) => {
+                    return Err(BackendFailure::Error(format!(
+                        "{}: backend respawn failed: {e}",
+                        self.label)));
+                }
+            }
+        }
+        let backend = self.backend.as_mut().expect("installed above");
+        let run = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                if panic_fuse {
+                    panic!("{}: injected worker panic", self.label);
+                }
+                backend.run(item)
+            }));
+        match run {
+            Ok(result) => result,
+            Err(payload) => {
+                let msg = panic_message(payload.as_ref());
+                metrics.worker_restarted();
+                // Respawn eagerly so the shard keeps serving even when
+                // the caller is out of retry budget.
+                self.backend = match (self.factory)() {
+                    Ok(b) => Some(b),
+                    Err(e) => {
+                        eprintln!("[serve] {}: backend respawn failed \
+                                   after panic: {e}", self.label);
+                        None
+                    }
+                };
+                Err(BackendFailure::Error(format!(
+                    "{}: worker panicked: {msg} (backend respawned)",
+                    self.label)))
+            }
+        }
+    }
+}
+
 #[allow(clippy::too_many_arguments)]
 fn shard_loop(queue: Arc<BoundedQueue<ServeRequest>>,
-              factory: BackendFactory,
+              mut factory: BackendFactory,
               cache: Arc<Mutex<LruCache<Output>>>,
               disk: Option<Arc<SharedDiskCache>>,
               metrics: Arc<ServeMetrics>, cancel: Arc<AtomicBool>,
               max_batch: usize, worker: usize, label: String,
-              shed: ShedPolicy, quota: usize) {
-    let mut backend = match factory() {
+              shed: ShedPolicy, quota: usize, fault: ShardFaultCtx) {
+    let backend = match factory() {
         Ok(b) => b,
         Err(e) => {
             // Init failed: every request — queued now or later — gets an
@@ -1345,6 +1688,16 @@ fn shard_loop(queue: Arc<BoundedQueue<ServeRequest>>,
                 }
             }
         }
+    };
+    // Jitter stream: deterministic per (plan seed, shard, worker) so a
+    // chaos run's backoff schedule replays from the same seed.
+    let rng_seed = fault.plan.as_ref().map_or(0, |p| p.seed())
+        ^ seed_for(&label, worker as u64);
+    let mut state = WorkerState {
+        backend: Some(backend),
+        factory,
+        label: label.clone(),
+        rng: SplitMix64::new(rng_seed),
     };
     loop {
         let mut batch = queue.pop_batch(max_batch);
@@ -1425,6 +1778,8 @@ fn shard_loop(queue: Arc<BoundedQueue<ServeRequest>>,
             };
             if let Some(output) = cached {
                 metrics.cache_hit(batch_size as u64);
+                record_quarantine(&fault, &metrics, &group[0].item,
+                                  true);
                 for (req, wait) in group.into_iter().zip(waits) {
                     let latency = req.enqueued.elapsed().as_secs_f64();
                     if !req.internal {
@@ -1438,6 +1793,7 @@ fn shard_loop(queue: Arc<BoundedQueue<ServeRequest>>,
                         cache_hit: true,
                         cache_src: CacheSource::Mem,
                         worker,
+                        attempts: 1,
                     }));
                 }
                 continue;
@@ -1451,6 +1807,8 @@ fn shard_loop(queue: Arc<BoundedQueue<ServeRequest>>,
                     disk.as_ref().and_then(|d| d.get(&label, &key))
                 {
                     metrics.cache_hit_disk(batch_size as u64);
+                    record_quarantine(&fault, &metrics, &group[0].item,
+                                      true);
                     if let Ok(mut c) = cache.lock() {
                         c.put(key, output.clone());
                     }
@@ -1468,6 +1826,7 @@ fn shard_loop(queue: Arc<BoundedQueue<ServeRequest>>,
                             cache_hit: true,
                             cache_src: CacheSource::Disk,
                             worker,
+                            attempts: 1,
                         }));
                     }
                     continue;
@@ -1479,8 +1838,12 @@ fn shard_loop(queue: Arc<BoundedQueue<ServeRequest>>,
                 // cache.
                 metrics.cache_miss(batch_size as u64);
                 let t_exec = Instant::now();
-                match backend.run(&group[0].item) {
+                let (result, attempts) = state.run_supervised(
+                    &group[0].item, &fault, &metrics);
+                match result {
                     Ok(output) => {
+                        record_quarantine(&fault, &metrics,
+                                          &group[0].item, true);
                         if !group[0].internal {
                             metrics.observe_service(
                                 &label,
@@ -1502,6 +1865,7 @@ fn shard_loop(queue: Arc<BoundedQueue<ServeRequest>>,
                         if let Ok(mut c) = cache.lock() {
                             c.put(key, output.clone());
                         }
+                        inject_stall(&fault);
                         for (req, wait) in group.into_iter().zip(waits) {
                             let latency =
                                 req.enqueued.elapsed().as_secs_f64();
@@ -1516,16 +1880,19 @@ fn shard_loop(queue: Arc<BoundedQueue<ServeRequest>>,
                                 cache_hit: false,
                                 cache_src: CacheSource::Miss,
                                 worker,
+                                attempts,
                             }));
                         }
                     }
-                    Err(msg) => {
+                    Err(err) => {
+                        record_quarantine(&fault, &metrics,
+                                          &group[0].item, false);
+                        inject_stall(&fault);
                         for req in group {
                             if !req.internal {
                                 metrics.request_failed();
                             }
-                            (req.reply)(Err(ServeError::Backend(
-                                msg.clone())));
+                            (req.reply)(Err(err.clone()));
                         }
                     }
                 }
@@ -1538,8 +1905,12 @@ fn shard_loop(queue: Arc<BoundedQueue<ServeRequest>>,
                 for req in group {
                     let wait = req.enqueued.elapsed().as_secs_f64();
                     let t_exec = Instant::now();
-                    match backend.run(&req.item) {
+                    let (result, attempts) = state.run_supervised(
+                        &req.item, &fault, &metrics);
+                    match result {
                         Ok(output) => {
+                            record_quarantine(&fault, &metrics,
+                                              &req.item, true);
                             if !req.internal {
                                 metrics.observe_service(
                                     &label,
@@ -1555,6 +1926,7 @@ fn shard_loop(queue: Arc<BoundedQueue<ServeRequest>>,
                             if !req.internal {
                                 metrics.request_completed(latency);
                             }
+                            inject_stall(&fault);
                             (req.reply)(Ok(ServeReply {
                                 shard: label.clone(),
                                 output,
@@ -1563,13 +1935,17 @@ fn shard_loop(queue: Arc<BoundedQueue<ServeRequest>>,
                                 cache_hit: false,
                                 cache_src: CacheSource::Miss,
                                 worker,
+                                attempts,
                             }));
                         }
-                        Err(msg) => {
+                        Err(err) => {
+                            record_quarantine(&fault, &metrics,
+                                              &req.item, false);
+                            inject_stall(&fault);
                             if !req.internal {
                                 metrics.request_failed();
                             }
-                            (req.reply)(Err(ServeError::Backend(msg)));
+                            (req.reply)(Err(err));
                         }
                     }
                 }

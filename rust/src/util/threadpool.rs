@@ -138,8 +138,10 @@ impl ThreadPool {
 }
 
 /// Best-effort text of a panic payload (`&str` and `String` payloads —
-/// i.e. everything `panic!` produces — are recovered verbatim).
-fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+/// i.e. everything `panic!` produces — are recovered verbatim). Shared
+/// with the serve layer's shard-worker supervision.
+pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send))
+                            -> String {
     if let Some(s) = payload.downcast_ref::<&str>() {
         (*s).to_string()
     } else if let Some(s) = payload.downcast_ref::<String>() {

@@ -98,6 +98,7 @@ fn session_window_blocks_until_slots_free() {
     let session = Session::open(&serve, SessionConfig {
         window: 2,
         on_full: WindowPolicy::Block,
+        ..SessionConfig::default()
     });
     // two slow requests fill the window; the third submit must block
     // until one completes — prove it by timing
@@ -123,6 +124,7 @@ fn session_window_errors_when_configured_to() {
     let session = Session::open(&serve, SessionConfig {
         window: 1,
         on_full: WindowPolicy::Error,
+        ..SessionConfig::default()
     });
     let h1 = session.submit(WorkItem::artifact(SLOW)).unwrap();
     match session.submit(WorkItem::artifact(QUICK)) {
@@ -150,6 +152,7 @@ fn stream_yields_completion_order_not_submission_order() {
     let session = Session::open(&serve, SessionConfig {
         window: 4,
         on_full: WindowPolicy::Block,
+        ..SessionConfig::default()
     });
     let items = vec![
         WorkItem::artifact(SLOW), // index 0, slow shard
@@ -175,6 +178,7 @@ fn stream_respects_the_window_while_pipelining() {
     let session = Session::open(&serve, SessionConfig {
         window: 3,
         on_full: WindowPolicy::Block,
+        ..SessionConfig::default()
     });
     let items: Vec<WorkItem> =
         (0..12).map(|_| WorkItem::artifact(QUICK)).collect();
@@ -204,6 +208,7 @@ fn drain_on_close_loses_nothing_across_sessions() {
                 let session = Session::open(serve, SessionConfig {
                     window: 2,
                     on_full: WindowPolicy::Block,
+                    ..SessionConfig::default()
                 });
                 let mut handles = Vec::new();
                 for i in 0..10 {
@@ -241,6 +246,7 @@ fn two_session_fairness_under_a_saturated_shard() {
             let session = Session::open(serve_ref, SessionConfig {
                 window: 0, // unbounded: as greedy as it gets
                 on_full: WindowPolicy::Block,
+                ..SessionConfig::default()
             });
             let items: Vec<WorkItem> =
                 (0..16).map(|_| WorkItem::artifact(SLOW)).collect();
@@ -263,6 +269,7 @@ fn two_session_fairness_under_a_saturated_shard() {
             let session = Session::open(serve_ref, SessionConfig {
                 window: 1,
                 on_full: WindowPolicy::Block,
+                ..SessionConfig::default()
             });
             let t0 = std::time::Instant::now();
             for _ in 0..2 {
@@ -418,6 +425,7 @@ fn e2e_pipeline_and_stream_with_online_tuning_and_drop() {
     let session = Session::open(&serve, SessionConfig {
         window: 4,
         on_full: WindowPolicy::Block,
+        ..SessionConfig::default()
     });
 
     // 3-node chained GEMMs across both native shards

@@ -1,11 +1,34 @@
 // R8 bad twin: an uncounted `ServeError::Closed` on the dispatcher
 // path (no metrics counter in the constructing fn or any caller),
-// and a SessionStats mutation unreachable from the session entry
-// points (submit/drain/close) — an orphan path that breaks
-// `submitted == ok + shed + failed + cancelled`.
+// uncounted recovery-era constructions (`Quarantined` from the
+// dispatcher's admission gate, `Corrupted` from a shard), a recovery
+// counter the metrics type defines but nothing on the serve plane
+// ever calls, and a SessionStats mutation unreachable from the
+// session entry points (submit/drain/close) — an orphan path that
+// breaks `submitted == ok + shed + failed + cancelled`.
 
-fn dispatch_loop(reply: impl FnOnce(Result<(), ServeError>)) {
+fn dispatch_loop(reply: impl Fn(Result<(), ServeError>)) {
     reply(Err(ServeError::Closed)); // MARK-R8
+    reply(Err(ServeError::Quarantined { // MARK-R8-QUARANTINED
+        artifact: "gemm_n64_t16_e1_f32".to_string(),
+    }));
+}
+
+fn shard_loop(reply: impl FnOnce(Result<(), ServeError>)) {
+    reply(Err(ServeError::Corrupted { // MARK-R8-CORRUPTED
+        shard: "sim".to_string(),
+        artifact: "gemm_n64_t16_e1_f32".to_string(),
+    }));
+}
+
+struct ServeMetrics {
+    worker_restarts: u64,
+}
+
+impl ServeMetrics {
+    fn worker_restarted(&mut self) { // MARK-R8C
+        self.worker_restarts += 1;
+    }
 }
 
 struct SessionStats {

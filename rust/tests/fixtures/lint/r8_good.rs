@@ -1,16 +1,32 @@
-// R8 good twin: the dispatcher counts the `Closed` it constructs;
-// `Backend` constructed in a callee is counted by the dispatcher
-// (caller on the path); match arms and `matches!` probes are
-// patterns, not accounting events; every SessionStats mutation is
-// reachable from Session::submit.
+// R8 good twin: the dispatcher counts the `Closed` and `Quarantined`
+// it constructs; `Backend` constructed in a callee is counted by the
+// dispatcher (caller on the path); the shard counts its `Corrupted`;
+// the one recovery counter the metrics type defines is called on the
+// serve plane (R8c); match arms and `matches!` probes are patterns,
+// not accounting events; every SessionStats mutation is reachable
+// from Session::submit.
 
 fn dispatch_loop(metrics: &ServeMetrics,
-                 reply: impl FnOnce(Result<(), ServeError>)) {
+                 reply: impl Fn(Result<(), ServeError>)) {
     metrics.request_failed();
     reply(Err(ServeError::Closed));
+    metrics.request_quarantined();
+    reply(Err(ServeError::Quarantined {
+        artifact: "gemm_n64_t16_e1_f32".to_string(),
+    }));
+    metrics.worker_restarted();
     let e = last_error();
     let _ = matches!(e, ServeError::Closed);
     let _ = note(&e);
+}
+
+fn shard_loop(metrics: &ServeMetrics,
+              reply: impl FnOnce(Result<(), ServeError>)) {
+    metrics.request_corrupted();
+    reply(Err(ServeError::Corrupted {
+        shard: "sim".to_string(),
+        artifact: "gemm_n64_t16_e1_f32".to_string(),
+    }));
 }
 
 fn last_error() -> ServeError {
@@ -21,7 +37,19 @@ fn note(e: &ServeError) -> &'static str {
     match e {
         ServeError::Closed => "closed",
         ServeError::Backend(_) => "backend",
+        ServeError::Corrupted { shard: _, artifact: _ } => "corrupt",
+        ServeError::Quarantined { .. } => "quarantined",
         _ => "other",
+    }
+}
+
+struct ServeMetrics {
+    worker_restarts: u64,
+}
+
+impl ServeMetrics {
+    fn worker_restarted(&mut self) {
+        self.worker_restarts += 1;
     }
 }
 

@@ -175,22 +175,39 @@ fn r7_bad_trips_good_passes() {
 #[test]
 fn r8_bad_trips_good_passes() {
     let bad = lint_fixture("r8_bad.rs");
-    assert_eq!(bad.diagnostics.len(), 2, "{}", bad.render());
+    assert_eq!(bad.diagnostics.len(), 5, "{}", bad.render());
     assert!(bad.diagnostics.iter().all(|d| d.rule == "R8"));
+    // diagnostics are (file, line)-sorted: Closed, Quarantined,
+    // Corrupted, dead recovery counter, orphan stats mutation
     assert_eq!(bad.diagnostics[0].line,
                marker_line("r8_bad.rs", "MARK-R8"),
                "span must pin the uncounted construction");
     assert!(bad.diagnostics[0].message.contains("ServeError::Closed"),
             "{}", bad.diagnostics[0].message);
     assert_eq!(bad.diagnostics[1].line,
+               marker_line("r8_bad.rs", "MARK-R8-QUARANTINED"));
+    assert!(bad.diagnostics[1].message
+                .contains("ServeError::Quarantined"),
+            "{}", bad.diagnostics[1].message);
+    assert_eq!(bad.diagnostics[2].line,
+               marker_line("r8_bad.rs", "MARK-R8-CORRUPTED"));
+    assert!(bad.diagnostics[2].message
+                .contains("ServeError::Corrupted"),
+            "{}", bad.diagnostics[2].message);
+    assert_eq!(bad.diagnostics[3].line,
+               marker_line("r8_bad.rs", "MARK-R8C"),
+               "span must pin the uncalled recovery counter's def");
+    assert!(bad.diagnostics[3].message.contains("worker_restarted"),
+            "{}", bad.diagnostics[3].message);
+    assert_eq!(bad.diagnostics[4].line,
                marker_line("r8_bad.rs", "MARK-R8B"),
                "span must pin the orphan stats mutation");
-    assert!(bad.diagnostics[1].message.contains("SessionStats.ok"),
-            "{}", bad.diagnostics[1].message);
+    assert!(bad.diagnostics[4].message.contains("SessionStats.ok"),
+            "{}", bad.diagnostics[4].message);
     let good = lint_fixture("r8_good.rs");
     assert!(good.is_clean(),
-            "counted constructions, caller-side counters, and \
-             patterns must pass: {}",
+            "counted constructions, caller-side counters, called \
+             recovery counters, and patterns must pass: {}",
             good.render());
 }
 

@@ -1,0 +1,300 @@
+//! Fault-injection integration gates: the serve layer under a seeded
+//! [`FaultPlan`] must degrade, retry, supervise, and quarantine —
+//! never lose a reply, never wedge a close, never leak a partial
+//! spill file. Each test drives one injection site end-to-end through
+//! the public surface (`Serve::call`, sessions, pipelines).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use alpaka_rs::client::{NodeResult, Pipeline, Session, SessionConfig,
+                        WindowPolicy};
+use alpaka_rs::serve::{FaultPlan, FaultSite, NativeConfig,
+                       NativeEngineId, QuarantinePolicy, RetryPolicy,
+                       Serve, ServeConfig, ServeError, WorkItem};
+
+fn synthetic_cfg(ids: &[&str]) -> ServeConfig {
+    ServeConfig {
+        cache_cap: 16,
+        native: Some(NativeConfig::Synthetic(
+            ids.iter().map(|s| s.to_string()).collect())),
+        ..ServeConfig::default()
+    }
+}
+
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("alpaka-faults-{tag}-{}", std::process::id()));
+    let _ = std::fs::create_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn injected_write_failure_leaves_no_partial_file_and_cache_serves() {
+    let dir = scratch("wf");
+    let path = dir.join("result_cache.json");
+    let tmp = path.with_extension("json.tmp");
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(&tmp);
+    let mut cfg = synthetic_cfg(&["dot_n16_f32", "dot_n24_f32"]);
+    cfg.result_cache_path = Some(path.clone());
+    cfg.fault_plan = Some(Arc::new(
+        FaultPlan::new(11).with_rate(FaultSite::DiskCacheWrite, 1.0)));
+    let serve = Serve::start(cfg).expect("serve starts");
+    for id in ["dot_n16_f32", "dot_n24_f32"] {
+        let r = serve.call(WorkItem::artifact(id));
+        assert!(r.is_ok(), "spill trouble must not fail serving: {r:?}");
+    }
+    // the in-memory tier is untouched by the failing spill
+    let again = serve.call(WorkItem::artifact("dot_n16_f32")).unwrap();
+    assert!(again.cache_hit, "memory LRU must keep serving");
+    serve.shutdown();
+    assert!(!path.exists(),
+            "a wholly skipped spill must not create the cache file");
+    assert!(!tmp.exists(), "no partial temp file may survive");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn injected_read_failure_degrades_to_miss_never_an_error() {
+    let dir = scratch("rf");
+    let path = dir.join("result_cache.json");
+    let _ = std::fs::remove_file(&path);
+    // seed the persistent tier fault-free
+    let mut cfg = synthetic_cfg(&["dot_n16_f32"]);
+    cfg.result_cache_path = Some(path.clone());
+    let serve = Serve::start(cfg).expect("serve starts");
+    serve.call(WorkItem::artifact("dot_n16_f32")).unwrap();
+    serve.shutdown();
+    assert!(path.exists(), "clean shutdown persists the window");
+    // reopen with every disk read failing: probes miss, callers never
+    // see an error
+    let mut cfg = synthetic_cfg(&["dot_n16_f32"]);
+    cfg.result_cache_path = Some(path.clone());
+    cfg.fault_plan = Some(Arc::new(
+        FaultPlan::new(3).with_rate(FaultSite::DiskCacheRead, 1.0)));
+    let serve = Serve::start(cfg).expect("serve starts");
+    let r = serve.call(WorkItem::artifact("dot_n16_f32"))
+        .expect("a read fault degrades to a miss, not an error");
+    assert!(!r.cache_hit,
+            "the injected read failure must register as a miss");
+    assert!(serve.metrics.cache_misses() >= 1);
+    serve.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn stale_truncated_temp_file_is_recovered_by_the_next_spill() {
+    let ids = ["dot_n16_f32", "dot_n24_f32"];
+    let dir = scratch("tt");
+    let path = dir.join("result_cache.json");
+    let tmp = path.with_extension("json.tmp");
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(&tmp);
+    let mut cfg = synthetic_cfg(&ids);
+    cfg.result_cache_path = Some(path.clone());
+    let serve = Serve::start(cfg).expect("serve starts");
+    serve.call(WorkItem::artifact("dot_n16_f32")).unwrap();
+    serve.shutdown();
+    assert!(path.exists());
+    // a crash mid-write leaves a truncated temp next to the intact
+    // file; the next atomic spill must clobber it, not trip over it
+    std::fs::write(&tmp, "{\"schema\":1,\"entries\":[tr")
+        .expect("plant truncated temp");
+    let mut cfg = synthetic_cfg(&ids);
+    cfg.result_cache_path = Some(path.clone());
+    let serve = Serve::start(cfg).expect("truncated temp must not \
+                                          break open");
+    serve.call(WorkItem::artifact("dot_n24_f32")).unwrap();
+    serve.shutdown();
+    assert!(!tmp.exists(),
+            "the next temp-file+rename spill clears the leftover");
+    assert!(path.exists());
+    // the rewritten file carries both windows: a fresh instance disk-
+    // hits the first run's entry
+    let mut cfg = synthetic_cfg(&ids);
+    cfg.result_cache_path = Some(path.clone());
+    let serve = Serve::start(cfg).expect("serve starts");
+    let r = serve.call(WorkItem::artifact("dot_n16_f32")).unwrap();
+    assert!(r.cache_hit, "recovered file must still serve disk hits");
+    assert!(serve.metrics.cache_hits_disk() >= 1);
+    serve.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn budgeted_retry_recovers_transient_backend_faults() {
+    let mut cfg = synthetic_cfg(&["dot_n16_f32"]);
+    cfg.cache_cap = 0; // measurement semantics: every call executes
+    cfg.fault_plan = Some(Arc::new(
+        FaultPlan::new(7).with_rate(FaultSite::BackendError, 0.5)));
+    cfg.retry = RetryPolicy {
+        max_attempts: 20,
+        backoff: Duration::from_micros(20),
+        jitter: 0.5,
+    };
+    let serve = Serve::start(cfg).expect("serve starts");
+    let session = Session::open(&serve, SessionConfig::default());
+    let mut deepest = 0;
+    for _ in 0..20 {
+        let reply = session
+            .submit(WorkItem::artifact("dot_n16_f32"))
+            .expect("window open")
+            .wait()
+            .expect("serve replies exactly once")
+            .expect("a 20-attempt budget outlasts a 50% fault rate");
+        deepest = deepest.max(reply.attempts);
+    }
+    let stats = session.close();
+    assert!(stats.fully_accounted(), "{stats:?}");
+    assert_eq!(stats.ok, 20, "{stats:?}");
+    assert!(deepest > 1, "the seeded plan must fire at least once");
+    assert!(stats.retried > 0,
+            "extra attempts surface in the session accounting");
+    assert!(serve.metrics.requests_retried() > 0);
+    assert_eq!(serve.metrics.retries_exhausted(), 0);
+    serve.shutdown();
+}
+
+#[test]
+fn worker_panic_is_caught_counted_and_the_worker_respawns() {
+    let mut cfg = synthetic_cfg(&["dot_n16_f32"]);
+    cfg.fault_plan = Some(Arc::new(
+        FaultPlan::new(5).with_rate(FaultSite::WorkerPanic, 1.0)));
+    let serve = Serve::start(cfg).expect("serve starts");
+    let e1 = serve.call(WorkItem::artifact("dot_n16_f32"))
+        .expect_err("the injected panic fails the request");
+    match &e1 {
+        ServeError::Backend(msg) => {
+            assert!(msg.contains("panicked"), "{msg}");
+            assert!(msg.contains("respawned"), "{msg}");
+        }
+        other => panic!("expected Backend(worker panicked), \
+                         got {other}"),
+    }
+    // the shard answered — it did not die with the panic; a second
+    // request is served (and injected) by the respawned worker
+    let e2 = serve.call(WorkItem::artifact("dot_n16_f32"))
+        .expect_err("rate-1.0 fuse panics every attempt");
+    assert!(matches!(e2, ServeError::Backend(_)), "{e2}");
+    assert!(serve.metrics.worker_restarts() >= 2,
+            "every caught panic is counted: {}",
+            serve.metrics.worker_restarts());
+    serve.shutdown();
+}
+
+#[test]
+fn corruption_trips_the_oracle_and_quarantines_the_artifact() {
+    let id = "gemm_n48_t16_e1_f64";
+    let mut cfg = synthetic_cfg(&[id]);
+    cfg.native_threads = 2;
+    cfg.fault_plan = Some(Arc::new(
+        FaultPlan::new(9).with_rate(FaultSite::CorruptOutput, 1.0)));
+    cfg.quarantine = QuarantinePolicy {
+        threshold: 2,
+        cooldown: Duration::from_secs(60),
+    };
+    let serve = Serve::start(cfg).expect("serve starts");
+    let item =
+        || WorkItem::artifact_on(id, NativeEngineId::Threadpool);
+    for _ in 0..2 {
+        match serve.call(item()).expect_err("oracle must trip") {
+            ServeError::Corrupted { shard, artifact } => {
+                assert_eq!(shard, "native:threadpool");
+                assert_eq!(artifact, id);
+            }
+            other => panic!("expected Corrupted, got {other}"),
+        }
+    }
+    // threshold reached: the breaker fails the third request fast,
+    // without backend time
+    match serve.call(item()).expect_err("breaker is open") {
+        ServeError::Quarantined { artifact } => {
+            assert_eq!(artifact, id);
+        }
+        other => panic!("expected Quarantined, got {other}"),
+    }
+    assert!(serve.metrics.requests_corrupted() >= 2);
+    assert!(serve.metrics.requests_quarantined() >= 1);
+    assert_eq!(serve.metrics.quarantine_entered(), 1);
+    assert!(!serve.quarantined().is_empty(),
+            "the breaker key is surfaced for attribution");
+    serve.shutdown();
+}
+
+#[test]
+fn stalled_shard_cannot_wedge_session_close_past_its_deadline() {
+    let mut cfg = synthetic_cfg(&["dot_n16_f32"]);
+    cfg.fault_plan = Some(Arc::new(
+        FaultPlan::new(13)
+            .with_rate(FaultSite::StallReply, 1.0)
+            .with_stall(Duration::from_millis(1500))));
+    let serve = Serve::start(cfg).expect("serve starts");
+    let session = Session::open(&serve, SessionConfig {
+        window: 4,
+        on_full: WindowPolicy::Block,
+        close_timeout: Some(Duration::from_millis(200)),
+    });
+    let handle = session
+        .submit(WorkItem::artifact("dot_n16_f32"))
+        .expect("window open");
+    let t = Instant::now();
+    let stats = session.close();
+    let waited = t.elapsed();
+    assert!(waited < Duration::from_millis(1200),
+            "close must respect its deadline under a stalled shard, \
+             waited {waited:?}");
+    assert_eq!(stats.submitted, 1, "{stats:?}");
+    assert_eq!(stats.cancelled, 1,
+               "the stalled request is force-accounted cancelled: \
+                {stats:?}");
+    assert!(stats.fully_accounted(), "{stats:?}");
+    drop(handle);
+    serve.shutdown();
+}
+
+#[test]
+fn pipeline_skips_descendants_with_quarantined_root_cause() {
+    let id = "dot_n16_f32";
+    let mut cfg = synthetic_cfg(&[id]);
+    cfg.fault_plan = Some(Arc::new(
+        FaultPlan::new(21).with_rate(FaultSite::BackendError, 1.0)));
+    cfg.quarantine = QuarantinePolicy {
+        threshold: 1,
+        cooldown: Duration::from_secs(60),
+    };
+    let serve = Serve::start(cfg).expect("serve starts");
+    // one injected failure reaches the threshold and opens the breaker
+    let e = serve.call(WorkItem::artifact(id))
+        .expect_err("rate-1.0 backend fault");
+    assert!(matches!(e, ServeError::Backend(_)), "{e}");
+    let session = Session::open(&serve, SessionConfig::default());
+    let mut p = Pipeline::new();
+    let a = p.node(WorkItem::artifact(id), &[]);
+    let b = p.node(WorkItem::artifact(id), &[a]);
+    let c = p.node(WorkItem::artifact(id), &[b]);
+    let out = p.run(&session);
+    match out.result(a) {
+        NodeResult::Failed(ServeError::Quarantined { artifact }) => {
+            assert_eq!(artifact, id);
+        }
+        other => panic!("root must fail fast as Quarantined: \
+                         {other:?}"),
+    }
+    for node in [b, c] {
+        match out.result(node) {
+            NodeResult::Skipped { root, cause } => {
+                assert_eq!(*root, a);
+                assert!(matches!(cause,
+                                 ServeError::Quarantined { .. }),
+                        "descendants carry the quarantine as root \
+                         cause: {cause}");
+            }
+            other => panic!("descendants must be skipped: {other:?}"),
+        }
+    }
+    let stats = session.close();
+    assert!(stats.fully_accounted(), "{stats:?}");
+    serve.shutdown();
+}

@@ -183,6 +183,7 @@ fn shutdown_with_pending_dropped_handles_accounts_exactly() {
     let session = Session::open(&serve, SessionConfig {
         window: 0, // unbounded: pile everything onto the slow shard
         on_full: WindowPolicy::Block,
+        ..SessionConfig::default()
     });
     const TOTAL: usize = 24;
     let mut kept = Vec::new();
