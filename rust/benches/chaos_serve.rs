@@ -18,7 +18,10 @@
 //!    trip the circuit breaker after its threshold and fail fast with
 //!    `ServeError::Quarantined` naming THAT artifact.
 //!
-//! Emits `BENCH_chaos.json` for the CI perf-trajectory artifact.
+//! Emits `BENCH_chaos.json` (goodput, recovery counters, raw latency
+//! buckets) plus `TRACE_exemplars.json` — the chaos run keeps its
+//! flight recorder on, so the exported exemplars are the slow/failed
+//! traces with retry and fault spans in them.
 //!
 //! Run with: `cargo bench --bench chaos_serve`.
 
@@ -109,8 +112,11 @@ fn main() -> ExitCode {
     // ---- phase 2: the same load under ~10% injected faults ----------
     // Quarantine stays off here: retried transient faults must not
     // open breakers mid-load (attribution is phase 4's job).
-    let (chaos_cfg, plan) = loadgen::chaos_config(
+    let (mut chaos_cfg, plan) = loadgen::chaos_config(
         load_config(native.clone()), CHAOS_SEED, FAULT_RATE, RETRIES, 0);
+    // Flight recorder on for the chaos phase: its slow/failed
+    // exemplars (retry + fault spans) are THE traces worth keeping.
+    chaos_cfg.trace_cap = 256;
     let chaos_serve = match Serve::start(chaos_cfg) {
         Ok(s) => s,
         Err(e) => {
@@ -121,9 +127,25 @@ fn main() -> ExitCode {
     let chaos_out = loadgen::run_closed_loop(&chaos_serve, &spec);
     print!("{}", loadgen::outcome_report(&chaos_out, &chaos_serve));
     print!("{}", loadgen::fault_report(&plan));
-    // Metrics handle must outlive shutdown (which consumes the Serve).
+    // Metrics and recorder handles must outlive shutdown (which
+    // consumes the Serve).
     let m = Arc::clone(&chaos_serve.metrics);
+    let recorder = chaos_serve.trace_recorder()
+        .expect("trace_cap > 0 turns the recorder on");
     chaos_serve.shutdown();
+    let exemplars = match loadgen::write_trace_exemplars(
+        &recorder, Path::new("TRACE_exemplars.json")) {
+        Ok(n) => {
+            println!("wrote TRACE_exemplars.json ({n} traces)");
+            n
+        }
+        Err(e) => {
+            eprintln!("FAIL: cannot write TRACE_exemplars.json: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let exemplar_retry = recorder.all_records().iter().any(
+        |r| r.spans.iter().any(|s| s.kind.phase() == "retry"));
     let chaos_goodput =
         chaos_out.ok as f64 / chaos_out.wall_seconds.max(1e-9);
     let ratio = chaos_goodput / base_goodput.max(1e-9);
@@ -180,6 +202,11 @@ fn main() -> ExitCode {
     q_serve.shutdown();
 
     // ---- BENCH_chaos.json (CI perf-trajectory artifact) -------------
+    let buckets = m.latency.buckets()
+        .iter()
+        .map(|(edge, n)| format!("[{edge:.6},{n}]"))
+        .collect::<Vec<_>>()
+        .join(",");
     let json = format!(
         "{{\n  \"schema\": 1,\n  \"chaos_seed\": {CHAOS_SEED},\n  \
          \"fault_rate\": {FAULT_RATE},\n  \"retries\": {RETRIES},\n  \
@@ -192,6 +219,9 @@ fn main() -> ExitCode {
          \"failed\": {},\n  \"requests_retried\": {},\n  \
          \"retries_exhausted\": {},\n  \"worker_restarts\": {},\n  \
          \"requests_corrupted\": {},\n  \
+         \"latency_buckets_s\": [{buckets}],\n  \
+         \"tracing\": {{\n    \"exemplars\": {exemplars},\n    \
+         \"retry_span_observed\": {exemplar_retry}\n  }},\n  \
          \"replay_match\": {replay_match},\n  \
          \"replay_total_fired\": {total_fired},\n  \
          \"quarantine\": {{\n    \"entered\": {q_entered},\n    \
@@ -242,6 +272,18 @@ fn main() -> ExitCode {
         eprintln!("FAIL: {} / {} requests failed post-retry: {:?}",
                   chaos_out.failed, chaos_out.submitted,
                   chaos_out.errors);
+        ok = false;
+    }
+    // The chaos traces must have caught the interesting behavior: the
+    // exemplar export is non-empty and at least one retained trace
+    // shows a retry span (retries were gated nonzero above, and the
+    // 256-slot ring holds every trace this load commits).
+    if exemplars == 0 {
+        eprintln!("FAIL: chaos run exported no trace exemplars");
+        ok = false;
+    }
+    if !exemplar_retry {
+        eprintln!("FAIL: no retained chaos trace shows a retry span");
         ok = false;
     }
     if ratio < GOODPUT_FLOOR {

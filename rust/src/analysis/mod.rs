@@ -8,7 +8,7 @@
 //! `std`: own lexer + lightweight scanner, no full parser) and
 //! enforces them as deny-by-default diagnostics with `file:line`
 //! spans and a machine-readable JSON report. See [`rules`] for the
-//! eight invariants (R1–R8) and the crate docs for their rationale.
+//! nine invariants (R1–R9) and the crate docs for their rationale.
 //!
 //! Intentional exceptions are suppressed inline and audited:
 //!
@@ -55,10 +55,11 @@ pub const R5: &str = "R5";
 pub const R6: &str = "R6";
 pub const R7: &str = "R7";
 pub const R8: &str = "R8";
+pub const R9: &str = "R9";
 /// Meta-rule: a malformed `pallas-lint:` directive.
 pub const LINT: &str = "LINT";
 
-const KNOWN_RULES: &[&str] = &[R1, R2, R3, R4, R5, R6, R7, R8];
+const KNOWN_RULES: &[&str] = &[R1, R2, R3, R4, R5, R6, R7, R8, R9];
 
 /// One finding, pinned to a source line.
 #[derive(Debug, Clone)]
@@ -368,6 +369,7 @@ pub fn lint_files(root: &Path, files: &[PathBuf])
             rules::r3_counted_shed(&ctx, &mut raw);
             rules::r4_metrics_summary_completeness(&ctx, &mut raw);
             rules::r5_target_feature_guard(&ctx, &dc, &mut raw);
+            rules::r9_span_discipline(&ctx, &mut raw);
             let (allows, errs) =
                 scan_directives(&l.rel, &l.lexed.comments);
             raw.extend(errs);
@@ -507,7 +509,7 @@ mod tests {
         // reasonless, unknown rule, unrecognised verb: all malformed
         assert!(matches!(parse_directive(" pallas-lint: allow(R2)"),
                          Some(Err(_))));
-        assert!(matches!(parse_directive(" pallas-lint: allow(R9, x)"),
+        assert!(matches!(parse_directive(" pallas-lint: allow(R99, x)"),
                          Some(Err(_))));
         assert!(matches!(parse_directive(" pallas-lint: deny(R1)"),
                          Some(Err(_))));
@@ -548,7 +550,7 @@ mod tests {
         let r = Report::default();
         let c = r.counts();
         for rule in ["R1", "R2", "R3", "R4", "R5", "R6", "R7", "R8",
-                     "LINT"] {
+                     "R9", "LINT"] {
             assert_eq!(c.get(rule), Some(&0));
         }
     }

@@ -1,5 +1,5 @@
-//! The five invariant rules `pallas-lint` enforces over the crate's
-//! own sources. Each rule is a token-stream heuristic — deliberately
+//! The invariant rules `pallas-lint` enforces over the crate's own
+//! sources. Each rule is a token-stream heuristic — deliberately
 //! conservative, tuned so the shipped tree is clean without blanket
 //! suppressions — with file:line diagnostics. See the crate docs
 //! ("Machine-checked invariants") for the rationale each encodes.
@@ -21,10 +21,14 @@
 //! * **R5** target-feature guard: a call to a `#[target_feature
 //!   (enable = "X")]` fn must follow a matching
 //!   `is_x86_feature_detected!("X")` in the same function.
+//! * **R9** span discipline (same path scope as R2): a `.span(…)`
+//!   guard must be `let`-bound to a named variable (it records on
+//!   Drop — unbound it times nothing), and a span-opening function
+//!   that names `ServeError::` must attach failures to the trace.
 //!
-//! R1 and R2 skip `#[cfg(test)]` / `#[test]` item ranges (tests may
-//! hold locks and unwrap freely); R3–R5 scan everything handed to
-//! them.
+//! R1, R2 and R9 skip `#[cfg(test)]` / `#[test]` item ranges (tests
+//! may hold locks, unwrap and probe spans freely); R3–R5 scan
+//! everything handed to them.
 
 use super::callgraph::CallGraph;
 use super::lexer::{Tok, TokKind};
@@ -755,6 +759,140 @@ pub fn r5_target_feature_guard(ctx: &FileCtx,
     }
 }
 
+/// ---------------------------------------------------------------- R9
+
+/// R9: span discipline on the observability plane (same path scope
+/// as R2: `serve/`, `client/`, `autotune/`).
+///
+/// * **R9a** — a statement containing `.span(` must `let`-bind the
+///   guard to a *named* variable. The guard records its phase on
+///   Drop, so a bare `t.span(…);` (or a `let _ =` binding) closes
+///   immediately and the trace shows a zero-length phase where the
+///   real work went untimed.
+/// * **R9b** — a function that opens spans AND names `ServeError::`
+///   must attach failures to the trace (`.fail(…)`, `.attach(…)` or
+///   `attach_err(…)`) — an error path that records phases but never
+///   the error produces flight-recorder exemplars whose failure is
+///   invisible.
+pub fn r9_span_discipline(ctx: &FileCtx, out: &mut Vec<Diagnostic>) {
+    let in_scope = ctx.path.split('/').any(|c| R2_SCOPE.contains(&c));
+    if !in_scope {
+        return;
+    }
+    let toks = ctx.toks;
+    // --- R9a ---
+    for i in 0..toks.len() {
+        if !(punct_eq(toks, i, '.')
+            && ident_at(toks, i + 1) == Some("span")
+            && punct_eq(toks, i + 2, '('))
+            || in_ranges(i, ctx.tests)
+        {
+            continue;
+        }
+        // Walk back to the statement start, skipping balanced groups
+        // (the call may sit inside a closure argument of `.map(…)`).
+        let floor = enclosing_fn(ctx.fns, i)
+            .map(|f| f.body_start)
+            .unwrap_or(0);
+        let mut depth = 0i64; // unmatched closers seen walking back
+        let mut start = floor + 1;
+        let mut b = i;
+        while b > floor {
+            let t = &toks[b - 1];
+            if t.kind == TokKind::Punct {
+                match t.text.as_str() {
+                    ")" | "]" | "}" => depth += 1,
+                    "(" | "[" if depth > 0 => depth -= 1,
+                    // an enclosing expression group: the statement
+                    // extends further left
+                    "(" | "[" => {}
+                    "{" if depth > 0 => depth -= 1,
+                    "{" => {
+                        start = b;
+                        break;
+                    }
+                    ";" if depth == 0 => {
+                        start = b;
+                        break;
+                    }
+                    _ => {}
+                }
+            }
+            b -= 1;
+        }
+        // the statement may open with a let-chain prefix
+        let mut s = start;
+        while matches!(ident_at(toks, s), Some("if" | "while" | "else"))
+        {
+            s += 1;
+        }
+        let named = s < i
+            && is_ident(&toks[s], "let")
+            && (s + 1..i).take_while(|&k| !is_plain_assign(toks, k))
+                .any(|k| {
+                    ident_at(toks, k).is_some_and(|id| {
+                        id != "_" && !PATTERN_WRAPPERS.contains(&id)
+                    })
+                });
+        if !named {
+            out.push(ctx.diag(
+                super::R9,
+                toks[i + 1].line,
+                "span guard not let-bound to a named variable — the \
+                 guard records its phase on Drop, so an unbound (or \
+                 `let _`) `.span(…)` closes immediately and the trace \
+                 shows a zero-length phase"
+                    .to_string(),
+            ));
+        }
+    }
+    // --- R9b ---
+    for f in ctx.fns {
+        if in_ranges(f.body_start, ctx.tests) {
+            continue;
+        }
+        let mut has_span = false;
+        let mut has_err = false;
+        let mut has_attach = false;
+        for k in f.body_start..f.body_end {
+            if punct_eq(toks, k, '.')
+                && ident_at(toks, k + 1) == Some("span")
+                && punct_eq(toks, k + 2, '(')
+            {
+                has_span = true;
+            }
+            if is_ident(&toks[k], "ServeError")
+                && punct_eq(toks, k + 1, ':')
+                && punct_eq(toks, k + 2, ':')
+            {
+                has_err = true;
+            }
+            if let Some(m) = ident_at(toks, k) {
+                let attaches = punct_eq(toks, k + 1, '(')
+                    && (m == "attach_err"
+                        || (k > 0
+                            && punct_eq(toks, k - 1, '.')
+                            && matches!(m, "fail" | "attach")));
+                if attaches {
+                    has_attach = true;
+                }
+            }
+        }
+        if has_span && has_err && !has_attach {
+            out.push(ctx.diag(
+                super::R9,
+                f.line,
+                format!(
+                    "`{}` opens trace spans and names ServeError:: \
+                     but never attaches a failure (.fail/.attach/\
+                     attach_err) — its error path would be invisible \
+                     in the flight recorder's exemplars",
+                    f.name),
+            ));
+        }
+    }
+}
+
 /// ----------------------------------------------------------- R6–R8
 ///
 /// Interprocedural rules. Unlike R1–R5 these do not run per file:
@@ -1348,6 +1486,41 @@ mod tests {
                    self.shed.load(O) }\n}";
         assert!(run_rule("x.rs", src, r4_metrics_summary_completeness)
                 .is_empty());
+    }
+
+    #[test]
+    fn r9_unbound_span_and_silent_error_flagged() {
+        let bad = "fn f(t: &Trace) {\n\
+                   t.span(1);\n}\n\
+                   fn g(t: &Trace) -> Result<(), ServeError> {\n\
+                   let s = t.span(2);\n\
+                   let _keep = s;\n\
+                   Err(ServeError::Backend(m))\n}";
+        let d = run_rule("rust/src/serve/mod.rs", bad,
+                         r9_span_discipline);
+        assert_eq!(d.len(), 2, "{d:?}");
+        assert!(d.iter().all(|x| x.rule == "R9"));
+        assert_eq!(d[0].line, 2, "unbound guard pins the span call");
+        assert_eq!(d[1].line, 4, "silent error pins the fn");
+        assert!(d[1].message.contains("`g`"), "{}", d[1].message);
+        let good = "fn f(t: Option<&Trace>) {\n\
+                    let mut g = t.map(|t| t.span(1));\n\
+                    if let Some(g) = g.as_mut() { g.attr(\"s\", v); }\n\
+                    work();\n}\n\
+                    fn h(t: &Trace) -> Result<(), ServeError> {\n\
+                    let mut s = t.span(2);\n\
+                    s.fail(&e);\n\
+                    Err(ServeError::Backend(m))\n}";
+        assert!(run_rule("rust/src/serve/mod.rs", good,
+                         r9_span_discipline).is_empty());
+        assert!(run_rule("rust/src/sim/machine.rs", bad,
+                         r9_span_discipline).is_empty(),
+                "R9 applies only under serve//client//autotune");
+        let wild = "fn f(t: &Trace) {\n\
+                    let _ = t.span(1);\n}";
+        let d = run_rule("rust/src/client/session.rs", wild,
+                         r9_span_discipline);
+        assert_eq!(d.len(), 1, "{d:?}");
     }
 
     #[test]

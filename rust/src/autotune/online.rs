@@ -15,13 +15,14 @@
 //! would have run anyway — that invariant backs the
 //! `tunestore_gate` bench.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::arch::{compiler, ArchId};
 use crate::gemm::kernel::KernelParams;
 use crate::gemm::{metrics as gemm_metrics, Precision};
-use crate::serve::{Backend, BackendFailure, Output, WorkItem,
-                   WorkPayload};
+use crate::serve::{ActiveTrace, Backend, BackendFailure, Output,
+                   SpanKind, WorkItem, WorkPayload};
 use crate::sim::{PredictionBound, TuningPoint};
 use crate::tuner::{self, MeasuredGemm, Strategy, SweepRecord,
                    TuningSpace};
@@ -272,6 +273,34 @@ impl Backend for TunerBackend {
             seconds: t0.elapsed().as_secs_f64(),
             committed: true,
         })
+    }
+
+    /// The `tune:explore` span wraps the whole job — warm-store
+    /// short-circuit included — and carries the exploration's outcome
+    /// as attributes, so a traced chaos run shows what the background
+    /// tuner spent its shard time on.
+    fn run_traced(&mut self, item: &WorkItem,
+                  trace: Option<&Arc<ActiveTrace>>)
+                  -> Result<Output, BackendFailure> {
+        let mut g = trace.map(|t| t.span(SpanKind::TuneExplore));
+        let result = self.run(item);
+        if let Some(g) = g.as_mut() {
+            match &result {
+                Ok(Output::Tuned { dtype, bucket, params, evals,
+                                   committed, .. }) => {
+                    g.attr("dtype", dtype.dtype());
+                    g.attr("bucket", bucket.to_string());
+                    g.attr("params", params.as_str());
+                    g.attr("evals", evals.to_string());
+                    g.attr("committed", committed.to_string());
+                }
+                Ok(_) => {}
+                Err(fail) => {
+                    g.attr("error", fail.to_string());
+                }
+            }
+        }
+        result
     }
 }
 

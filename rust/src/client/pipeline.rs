@@ -142,6 +142,11 @@ impl Pipeline {
     /// ready, in flight, or downstream of one that is.
     pub fn run(mut self, session: &Session<'_>) -> PipelineOutcome {
         let n = self.nodes.len();
+        // One trace id for the whole DAG (when the flight recorder is
+        // on): every node's record lands on the same Chrome-trace
+        // lane, so the pipeline reads as one request tree instead of
+        // n unrelated traces.
+        let trace_id = session.mint_trace_id();
         let mut results: Vec<Option<NodeResult>> =
             (0..n).map(|_| None).collect();
         let mut indeg: Vec<usize> =
@@ -190,8 +195,11 @@ impl Pipeline {
                 if results[id].is_some() {
                     continue; // settled by propagation meanwhile
                 }
-                let item = self.nodes[id].item.take()
+                let mut item = self.nodes[id].item.take()
                     .expect("each node submits at most once");
+                if let Some(tid) = trace_id {
+                    item = item.with_trace(tid);
+                }
                 match session.submit_blocking(item) {
                     Ok(h) => {
                         let tx = tx.clone();

@@ -244,6 +244,17 @@ impl<'s> Session<'s> {
         self.inner.id
     }
 
+    /// Mint a flight-recorder trace id from the underlying serve
+    /// layer (`None` while tracing is off). Pre-assigning one id to
+    /// several submissions (via
+    /// [`WorkItem::with_trace`](crate::serve::WorkItem::with_trace))
+    /// groups them into one lane of the Chrome-trace export —
+    /// [`Pipeline::run`](super::Pipeline) does exactly this so a DAG
+    /// reads as one request tree.
+    pub fn mint_trace_id(&self) -> Option<u64> {
+        self.serve.mint_trace_id()
+    }
+
     /// Requests currently in flight (submitted, no reply yet).
     pub fn in_flight(&self) -> usize {
         self.inner.state().in_flight

@@ -293,12 +293,59 @@
 //! and emits `BENCH_chaos.json`; CLI: `serve --chaos-seed N
 //! [--fault-rate P] [--retries K] [--quarantine-after T]`.
 //!
+//! # Observability: spans, flight recorder, Chrome-trace export
+//!
+//! Every request the serve layer admits carries a per-request trace
+//! (PR 9, [`serve::trace`]): a tree of timed spans, one per lifecycle
+//! stage, committed exactly once — when the reply fires — to a
+//! bounded, lock-light **flight recorder**. The span taxonomy
+//! ([`serve::SpanKind`]) is closed:
+//!
+//! | span | opened where | attributes |
+//! |---|---|---|
+//! | `queue` | synthesized at commit: submission → first stage | |
+//! | `route` | dispatcher: shard choice + quarantine admission | `shard`, `quarantine` |
+//! | `batch` | shard worker: coalesced wait behind a batch leader | |
+//! | `pack` | native backend: panel packing + oracle prep | |
+//! | `execute` | backend compute, one span per attempt | `shard`, `attempt` |
+//! | `verify` | oracle digest check of the produced output | `ok`, `fault` |
+//! | `retry#k` | retry supervisor, k-th inter-attempt gap (1-based) | `error`, `delay_us` |
+//! | `backoff` | jittered backoff sleep inside a retry gap | |
+//! | `cache:mem` / `cache:disk` | result-cache probe, per tier | `hit` |
+//! | `tune:explore` | background exploration on the tuner shard | |
+//!
+//! **Bounded by design.** The recorder holds a ring of the last
+//! `ServeConfig::trace_cap` traces plus a small exemplar reservoir
+//! (the slowest traces and retained failures). Overflow drops the
+//! oldest and is *counted* (`committed` / `dropped`), never silent —
+//! the same accounting discipline as shedding. `trace_cap: 0`
+//! (default) disables the recorder entirely; `cargo bench --bench
+//! serve_load` gates the overhead when it is on: a recorder-on closed
+//! loop must keep ≥ 95% of recorder-off throughput.
+//!
+//! **Trace identity follows the request, not the call.** Session
+//! submissions mint one id per request; a [`client::Pipeline`]
+//! pre-mints ONE id for the whole DAG, so dependent nodes share an
+//! export lane and the waterfall shows the chain end to end. Aborted
+//! observation (a dropped `ReplyHandle`) still commits the trace —
+//! commit rides the reply closure, which runs exactly once.
+//!
+//! **Export.** `Serve::summary()` appends a per-shard phase breakdown
+//! (e.g. `execute 78% queue 15% verify 4%`) and the commit/drop
+//! counts. `serve --trace PATH [--trace-cap N]` writes the recorder
+//! as Chrome trace-event JSON (load it in `chrome://tracing` /
+//! Perfetto); `alpaka-bench trace PATH` renders the same file as a
+//! text waterfall, slowest trace first, and round-trips through
+//! [`serve::trace::parse_chrome_trace`]. The serve and chaos benches
+//! export their slow/failed exemplars as `TRACE_exemplars.json` next
+//! to their `BENCH_*.json` CI artifacts.
+//!
 //! # Machine-checked invariants (`pallas-lint`)
 //!
 //! The contracts above live at seams the compiler does not check, so
 //! the crate lints **its own sources** ([`analysis`], CLI `alpaka-bench
 //! lint [--deny] [--json PATH] [--graph DOT]`, tier-1 gate
-//! `tests/lint_clean.rs`). Eight rules, each encoding a convention an
+//! `tests/lint_clean.rs`). Nine rules, each encoding a convention an
 //! earlier layer established:
 //!
 //! * **R1 — lock-across-blocking.** No `MutexGuard` binding may stay
@@ -330,6 +377,15 @@
 //!   `is_x86_feature_detected!` in the same function (the AVX2
 //!   microkernel dispatch convention from the tuned-GEMM PR) —
 //!   anything less is undefined behaviour on older CPUs.
+//! * **R9 — span discipline** (R2's path scope: `serve/`, `client/`,
+//!   `autotune/`). A `.span(…)` guard must be `let`-bound to a named
+//!   variable — it records its phase on Drop, so an unbound or
+//!   `let _` guard closes immediately and the trace shows a
+//!   zero-length phase. And a span-opening function that names
+//!   `ServeError::` must attach failures to the trace
+//!   (`.fail`/`.attach`/`attach_err`), or its error path is invisible
+//!   in the flight recorder's exemplars (the tracing-plane
+//!   convention, PR 9).
 //!
 //! R6–R8 are **interprocedural**: PR 7 grows the analyzer a whole-tree
 //! call graph ([`analysis::callgraph`]) and a lock graph
@@ -384,7 +440,7 @@
 //! depth 0. "Counted exactly once" is enforced as at-least-one
 //! counter on the caller path — double counting is not detected.
 //!
-//! R1/R2/R6/R7 skip `#[cfg(test)]`/`#[test]` items; R3–R5 and R8
+//! R1/R2/R6/R7/R9 skip `#[cfg(test)]`/`#[test]` items; R3–R5 and R8
 //! scan everything under `rust/src` and `examples` (R8 skips test
 //! fns). `--graph` dumps the call graph as GraphViz DOT (dashed =
 //! fuzzy edge, dotted = test fn); the JSON report carries the

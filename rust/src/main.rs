@@ -206,12 +206,33 @@ fn cli() -> Cli {
                                     before an artifact is quarantined \
                                     (fail-fast circuit breaker; \
                                     0 = off)"),
+                    OptSpec::value("trace", None,
+                                   "turn the per-request flight \
+                                    recorder on and write its \
+                                    Chrome-trace JSON here on exit \
+                                    (load in chrome://tracing or \
+                                    render with `trace`)"),
+                    OptSpec::value("trace-cap", Some("256"),
+                                   "flight-recorder ring capacity \
+                                    for --trace"),
+                ],
+            },
+            CommandSpec {
+                name: "trace",
+                about: "render a Chrome-trace export (from `serve \
+                        --trace`) as a text waterfall, slowest first",
+                opts: vec![
+                    OptSpec::value("input", None,
+                                   "trace JSON path (or pass it \
+                                    positionally)"),
+                    OptSpec::value("top", Some("5"),
+                                   "how many slowest traces to render"),
                 ],
             },
             CommandSpec {
                 name: "lint",
                 about: "pallas-lint: machine-check the crate's \
-                        concurrency/accounting invariants (R1-R8) \
+                        concurrency/accounting invariants (R1-R9) \
                         over its own sources",
                 opts: vec![
                     OptSpec::flag("deny",
@@ -285,6 +306,7 @@ fn run(cli: &Cli, p: &Parsed) -> Result<()> {
         "repro" => cmd_repro(p),
         "native" => cmd_native(p),
         "serve" => cmd_serve(p),
+        "trace" => cmd_trace(p),
         "lint" => cmd_lint(p),
         "inspect-hlo" => cmd_inspect(p),
         "mappings" => {
@@ -571,6 +593,10 @@ fn cmd_serve(p: &Parsed) -> Result<()> {
     let retries = p.get_u64("retries")?.unwrap_or(1).max(1) as u32;
     let quarantine_after =
         p.get_u64("quarantine-after")?.unwrap_or(0) as u32;
+    let trace_path = p.get("trace").map(str::to_string);
+    let trace_cap = p.get_u64("trace-cap")?.unwrap_or(256) as usize;
+    anyhow::ensure!(trace_path.is_none() || trace_cap > 0,
+                    "--trace needs --trace-cap > 0");
     // A shed policy with nothing to shed on is a silent no-op — refuse
     // it instead of letting the user believe shedding is active.
     anyhow::ensure!(
@@ -604,6 +630,7 @@ fn cmd_serve(p: &Parsed) -> Result<()> {
         result_cache_cap: p.get_u64("result-cache-cap")?
             .unwrap_or(1024) as usize,
         online_tune: p.has_flag("online-tune"),
+        trace_cap: if trace_path.is_some() { trace_cap } else { 0 },
         ..ServeConfig::default()
     };
     anyhow::ensure!(
@@ -648,6 +675,8 @@ fn cmd_serve(p: &Parsed) -> Result<()> {
             // the probe must not advance the chaos plan's seeded
             // streams (it would desync replay) nor fail probe traffic
             fault_plan: None,
+            // probe traffic must not pollute the exported traces
+            trace_cap: 0,
             ..cfg.clone()
         })?;
         let sustainable = loadgen::measure_sustainable_rps(
@@ -687,7 +716,14 @@ fn cmd_serve(p: &Parsed) -> Result<()> {
         if let Some(plan) = &chaos_plan {
             print!("{}", loadgen::fault_report(plan));
         }
+        // keep the recorder past shutdown so traces committed by the
+        // drain (cancelled in-flight requests) make the export
+        let recorder = serve.trace_recorder();
         serve.shutdown();
+        if let (Some(path), Some(rec)) = (&trace_path, &recorder) {
+            let n = loadgen::write_chrome_trace(rec, Path::new(path))?;
+            println!("trace: wrote {n} trace(s) to {path}");
+        }
         anyhow::ensure!(out.fully_accounted(), "reply accounting leak");
         // Under chaos, post-retry failures are expected (and visible
         // above); the hard invariant stays exact accounting.
@@ -716,11 +752,38 @@ fn cmd_serve(p: &Parsed) -> Result<()> {
             print!("{}", g.render());
         }
     }
+    let recorder = serve.trace_recorder();
     serve.shutdown();
+    if let (Some(path), Some(rec)) = (&trace_path, &recorder) {
+        let n = loadgen::write_chrome_trace(rec, Path::new(path))?;
+        println!("trace: wrote {n} trace(s) to {path}");
+    }
     // Under chaos, post-retry failures are expected (and reported
     // above); exact accounting is enforced per session by the driver.
     anyhow::ensure!(chaos_plan.is_some() || outcome.failed == 0,
                     "{} requests failed", outcome.failed);
+    Ok(())
+}
+
+fn cmd_trace(p: &Parsed) -> Result<()> {
+    use alpaka_rs::serve::trace;
+
+    let path = p.get("input")
+        .or_else(|| p.positional.first().map(String::as_str))
+        .ok_or_else(|| anyhow::anyhow!(
+            "need a trace JSON path (positional or --input) — \
+             `serve --trace PATH` writes one"))?;
+    let top = p.get_u64("top")?.unwrap_or(5).max(1) as usize;
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    let records = trace::parse_chrome_trace(&text)
+        .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    anyhow::ensure!(!records.is_empty(),
+                    "{path} holds no serve traces");
+    let failed = records.iter().filter(|r| r.failed()).count();
+    println!("{}: {} trace(s), {failed} failed; slowest {}:", path,
+             records.len(), top.min(records.len()));
+    print!("{}", trace::waterfall(&records, top));
     Ok(())
 }
 

@@ -46,6 +46,7 @@ use crate::util::prng;
 use crate::util::threadpool::ThreadPool;
 
 use super::fault::{FaultPlan, FaultSite};
+use super::trace::{ActiveTrace, SpanKind};
 
 /// Shared machine-model registry: one memoised [`Machine`] per
 /// architecture. Lives here because every sim shard draws from it; the
@@ -122,13 +123,18 @@ pub struct WorkItem {
     /// Submitting session id (`None` for untagged callers — the
     /// legacy shims and direct `Serve::submit` users).
     pub session: Option<u64>,
+    /// Flight-recorder trace id. Normally `None` at submission —
+    /// minted at admission when tracing is on. Pipelines pre-assign
+    /// one id (via [`WorkItem::with_trace`]) to every node so the
+    /// whole DAG shares a trace lane in the export.
+    pub trace_id: Option<u64>,
 }
 
 impl WorkItem {
     /// A tuning-point evaluation (simulated shards).
     pub fn point(p: TuningPoint) -> Self {
         Self { payload: WorkPayload::Point(p), deadline: None,
-               session: None }
+               session: None, trace_id: None }
     }
 
     /// An artifact execution on the default native shard
@@ -144,6 +150,7 @@ impl WorkItem {
             payload: WorkPayload::Artifact { id: id.into(), engine },
             deadline: None,
             session: None,
+            trace_id: None,
         }
     }
 
@@ -154,12 +161,22 @@ impl WorkItem {
             payload: WorkPayload::Explore { dtype, bucket },
             deadline: None,
             session: None,
+            trace_id: None,
         }
     }
 
     /// Tag with the submitting session (builder style).
     pub fn with_session(mut self, session: u64) -> Self {
         self.session = Some(session);
+        self
+    }
+
+    /// Pre-assign a flight-recorder trace id (builder style). Like
+    /// the session tag, the trace id is excluded from
+    /// [`cache_key`](WorkItem::cache_key): it changes how an
+    /// execution is *observed*, never what it computes.
+    pub fn with_trace(mut self, id: u64) -> Self {
+        self.trace_id = Some(id);
         self
     }
 
@@ -348,6 +365,17 @@ impl From<&str> for BackendFailure {
 pub trait Backend {
     fn label(&self) -> String;
     fn run(&mut self, item: &WorkItem) -> Result<Output, BackendFailure>;
+
+    /// [`run`](Backend::run) with the request's active trace in
+    /// scope, so backends with internal stages (packing, oracle
+    /// verification, tuning sweeps) can record sub-spans. The default
+    /// ignores the trace — simple backends implement `run` only and
+    /// still show up as the worker-recorded `execute` span.
+    fn run_traced(&mut self, item: &WorkItem,
+                  _trace: Option<&Arc<ActiveTrace>>)
+                  -> Result<Output, BackendFailure> {
+        self.run(item)
+    }
 }
 
 /// Constructor executed on the shard thread. `FnMut` because the shard
@@ -1108,6 +1136,12 @@ impl Backend for ThreadpoolGemm {
     }
 
     fn run(&mut self, item: &WorkItem) -> Result<Output, BackendFailure> {
+        self.run_traced(item, None)
+    }
+
+    fn run_traced(&mut self, item: &WorkItem,
+                  trace: Option<&Arc<ActiveTrace>>)
+                  -> Result<Output, BackendFailure> {
         let id = match &item.payload {
             WorkPayload::Artifact { id, .. } => id,
             other => {
@@ -1133,12 +1167,18 @@ impl Backend for ThreadpoolGemm {
         let sel = params_for_spec(&self.store, &spec);
         let (params, from_store) = (sel.params, sel.from_store);
         let fanout = self.fanout(sel.threads);
+        // Pack span: input materialization + the sequential oracle
+        // build — near-zero when warm, the dominant first-touch cost
+        // when cold (exactly what a slow-exemplar trace should show).
+        let pack = trace.map(|t| t.span(SpanKind::Pack));
         self.ensure_inputs(&spec);
         self.ensure_oracle(&spec, params.mc, fanout);
+        drop(pack);
         let (seconds, mut sum, abs_sum) =
             self.par_run(&spec, &params, fanout)?;
         // Runtime oracle check: every served result is digest-verified
         // against the sequential reference computed at setup.
+        let mut ver = trace.map(|t| t.span(SpanKind::Verify));
         let oracle = self.oracles.get(&(id.clone(), params.mc, fanout))
             .expect("ensure_oracle first");
         if self.plan.as_ref()
@@ -1148,10 +1188,18 @@ impl Backend for ThreadpoolGemm {
             // the comparison below MUST trip — the detection path is
             // the production one, only the corruption is synthetic.
             sum += oracle.abs_sum.max(abs_sum).max(1.0);
+            if let Some(g) = ver.as_mut() {
+                g.fault(FaultSite::CorruptOutput);
+            }
         }
         let scale = oracle.abs_sum.max(abs_sum).max(1.0);
         let rtol = digest_rtol(spec.precision);
-        if (sum - oracle.sum).abs() > rtol * scale {
+        let ok = (sum - oracle.sum).abs() <= rtol * scale;
+        if let Some(g) = ver.as_mut() {
+            g.attr("ok", ok.to_string());
+        }
+        drop(ver);
+        if !ok {
             return Err(BackendFailure::Corrupted {
                 artifact: id.clone(),
                 detail: format!(

@@ -32,9 +32,10 @@
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Mutex, PoisonError};
+use std::sync::{Arc, Mutex, PoisonError};
 use std::time::{Duration, Instant};
 
+use super::trace::ActiveTrace;
 use crate::util::prng::SplitMix64;
 
 /// A named place in the serve layer where a [`FaultPlan`] can inject a
@@ -194,6 +195,21 @@ impl FaultPlan {
         };
         if hit {
             self.fired[i].fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    /// [`should_fire`](Self::should_fire), annotating the active
+    /// trace with `fault=<site>` when the draw hits. Used by sites
+    /// that have no span of their own open at the draw point (disk
+    /// cache I/O, stalled replies): the fault still shows up on the
+    /// request's trace even though it fired between spans.
+    pub fn should_fire_traced(&self, site: FaultSite,
+                              trace: Option<&Arc<ActiveTrace>>) -> bool {
+        let hit = self.should_fire(site);
+        match trace {
+            Some(t) if hit => t.attach("fault", site.label()),
+            _ => {}
         }
         hit
     }

@@ -30,6 +30,7 @@ use crate::runtime::artifact::Manifest;
 use crate::sim::TuningPoint;
 use crate::util::table::Table;
 
+use super::trace::{self, TraceRecorder};
 use super::{FaultPlan, NativeConfig, NativeEngine, NativeEngineId,
             Output, QuarantinePolicy, RetryPolicy, Serve, ServeConfig,
             ServeError, ServeReply, WorkItem};
@@ -116,6 +117,27 @@ pub fn fault_report(plan: &FaultPlan) -> String {
     }
     format!("chaos seed {} — injected fault activity:\n{}",
             plan.seed(), t.render())
+}
+
+/// Write everything the flight recorder still holds (recent ring +
+/// exemplars) as Chrome-trace JSON — the `serve --trace PATH` export.
+/// Returns how many traces were written.
+pub fn write_chrome_trace(rec: &TraceRecorder, path: &Path)
+                          -> std::io::Result<usize> {
+    let records = rec.all_records();
+    std::fs::write(path, trace::chrome_trace(&records))?;
+    Ok(records.len())
+}
+
+/// Write only the exemplar set (slowest traces plus retained failed
+/// ones) as Chrome-trace JSON — the bounded `TRACE_exemplars.json`
+/// artifact the serve and chaos benches upload next to their
+/// `BENCH_*.json`. Returns how many traces were written.
+pub fn write_trace_exemplars(rec: &TraceRecorder, path: &Path)
+                             -> std::io::Result<usize> {
+    let records = rec.exemplars();
+    std::fs::write(path, trace::chrome_trace(&records))?;
+    Ok(records.len())
 }
 
 /// Load-generation parameters.

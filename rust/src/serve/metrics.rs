@@ -70,6 +70,23 @@ impl LatencyHistogram {
         self.counts.iter().map(|c| c.load(Ordering::Relaxed)).sum()
     }
 
+    /// Raw histogram dump for bench JSON: `(upper bucket edge in
+    /// seconds, count)` for every **non-empty** bucket, ascending by
+    /// edge. Percentiles computed offline from this are exactly the
+    /// ones [`quantile`](Self::quantile) reports — same buckets, same
+    /// upper-edge bias — so a regression dashboard can recompute any
+    /// quantile without a new serve run.
+    pub fn buckets(&self) -> Vec<(f64, u64)> {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter_map(|(i, c)| {
+                let n = c.load(Ordering::Relaxed);
+                (n > 0).then(|| (Self::upper_edge(i), n))
+            })
+            .collect()
+    }
+
     /// Quantile in seconds (`q` in [0, 1]); 0.0 when empty.
     pub fn quantile(&self, q: f64) -> f64 {
         let total = self.count();
@@ -762,6 +779,24 @@ mod tests {
     fn histogram_empty_is_zero() {
         let h = LatencyHistogram::new();
         assert_eq!(h.quantile(0.5), 0.0);
+        assert!(h.buckets().is_empty());
+    }
+
+    #[test]
+    fn histogram_bucket_dump_matches_quantiles() {
+        let h = LatencyHistogram::new();
+        for us in [3.0, 3.0, 100.0, 5000.0] {
+            h.record(us / 1e6);
+        }
+        let b = h.buckets();
+        // three distinct buckets, ascending edges, counts sum to 4
+        assert_eq!(b.len(), 3);
+        assert!(b.windows(2).all(|w| w[0].0 < w[1].0));
+        assert_eq!(b.iter().map(|&(_, n)| n).sum::<u64>(), 4);
+        assert_eq!(b[0].1, 2, "both 3us samples share a bucket");
+        // the dump's last edge is exactly the p100 the histogram
+        // itself reports — offline recomputation stays faithful
+        assert_eq!(b.last().unwrap().0, h.quantile(1.0));
     }
 
     #[test]

@@ -80,6 +80,7 @@ pub mod diskcache;
 pub mod fault;
 pub mod loadgen;
 pub mod metrics;
+pub mod trace;
 
 use std::collections::{HashMap, HashSet};
 use std::fmt;
@@ -108,6 +109,9 @@ pub use diskcache::DiskResultCache;
 pub use fault::{Admission, FaultPlan, FaultSite, Quarantine,
                 QuarantinePolicy, RetryPolicy};
 pub use metrics::{ServeMetrics, SessionOutcome, SessionTally};
+pub use trace::{ActiveTrace, SpanKind, TraceRecord, TraceRecorder};
+
+use trace::attach_err;
 
 /// Why a request did not produce an output.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -299,6 +303,13 @@ struct ServeRequest {
     /// never submitted, so counting it would break the
     /// `submitted == ok + shed + failed` accounting.
     internal: bool,
+    /// Per-request span tree, opened at admission when the recorder is
+    /// enabled (`trace_cap > 0`). `None` on the zero-cost default path
+    /// and for dispatcher-synthesized tuning work. The trace commits
+    /// exactly once, from the wrapped reply closure — every terminal
+    /// path (admission reject, quarantine deny, shed, drain, normal
+    /// reply) funnels through it.
+    trace: Option<Arc<ActiveTrace>>,
 }
 
 /// Where the native shard gets its artifacts.
@@ -394,6 +405,14 @@ pub struct ServeConfig {
     /// half-open probe re-validates it. `threshold` 0 (the default)
     /// disables quarantine.
     pub quarantine: QuarantinePolicy,
+    /// Flight-recorder ring capacity (committed traces retained). 0
+    /// (the default) disables tracing entirely: no trace ids are
+    /// minted, no spans recorded — requests pay one `Option` check.
+    pub trace_cap: usize,
+    /// Slowest-trace exemplars the recorder retains past ring
+    /// overflow (failed/quarantined traces are always retained, up to
+    /// the ring capacity).
+    pub trace_exemplars: usize,
 }
 
 impl Default for ServeConfig {
@@ -406,7 +425,8 @@ impl Default for ServeConfig {
                tuning_store: None, online_tune: false, tune_budget: 6,
                tune_reps: 2, fault_plan: None,
                retry: RetryPolicy::default(),
-               quarantine: QuarantinePolicy::default() }
+               quarantine: QuarantinePolicy::default(),
+               trace_cap: 0, trace_exemplars: 8 }
     }
 }
 
@@ -453,13 +473,18 @@ impl SharedDiskCache {
         format!("{shard}|{key}")
     }
 
-    fn get(&self, shard: &str, key: &str) -> Option<Output> {
+    fn get(&self, shard: &str, key: &str,
+           trace: Option<&Arc<ActiveTrace>>) -> Option<Output> {
         // An injected read failure behaves exactly like a real one:
         // the probe misses (counted by the caller as an ordinary
         // cache miss) and the request re-executes — disk-tier I/O
-        // trouble is NEVER an error to the caller.
+        // trouble is NEVER an error to the caller. The trace still
+        // learns `fault=disk-read`, so a chaos run's "why did this
+        // miss" is answerable from the exemplar alone.
         if self.plan.as_ref()
-            .is_some_and(|p| p.should_fire(FaultSite::DiskCacheRead))
+            .is_some_and(|p| {
+                p.should_fire_traced(FaultSite::DiskCacheRead, trace)
+            })
         {
             return None;
         }
@@ -470,7 +495,8 @@ impl SharedDiskCache {
 
     /// Returns how many entries the cache's bound evicted (0 when
     /// nothing was stored or the cap was not hit).
-    fn put(&self, shard: &str, key: &str, output: &Output) -> u64 {
+    fn put(&self, shard: &str, key: &str, output: &Output,
+           trace: Option<&Arc<ActiveTrace>>) -> u64 {
         use std::sync::atomic::Ordering;
 
         let Some(digest) = self.digests.get(key) else { return 0 };
@@ -492,7 +518,7 @@ impl SharedDiskCache {
             };
             (evicted, snap)
         };
-        self.write(snapshot);
+        self.write(snapshot, trace);
         evicted
     }
 
@@ -508,10 +534,11 @@ impl SharedDiskCache {
             }
             g.snapshot()
         };
-        self.write(snapshot);
+        self.write(snapshot, None);
     }
 
-    fn write(&self, snapshot: Option<(PathBuf, String)>) {
+    fn write(&self, snapshot: Option<(PathBuf, String)>,
+             trace: Option<&Arc<ActiveTrace>>) {
         let Some((path, json)) = snapshot else { return };
         // An injected write failure fails like a real one: the spill
         // is skipped wholesale (write_atomic's temp-file + rename
@@ -520,7 +547,9 @@ impl SharedDiskCache {
         // cache remains fully usable, only cross-restart persistence
         // of this window is lost.
         if self.plan.as_ref()
-            .is_some_and(|p| p.should_fire(FaultSite::DiskCacheWrite))
+            .is_some_and(|p| {
+                p.should_fire_traced(FaultSite::DiskCacheWrite, trace)
+            })
         {
             eprintln!("[serve] injected disk-cache write failure: \
                        spill to {} skipped", path.display());
@@ -588,6 +617,7 @@ pub struct Serve {
     shard_queues: Arc<ShardRegistry>,
     store: Option<SharedTuningStore>,
     quarantine: Option<Arc<Quarantine>>,
+    recorder: Option<Arc<TraceRecorder>>,
 }
 
 impl Serve {
@@ -670,6 +700,15 @@ impl Serve {
             } else {
                 None
             };
+        // Flight recorder: traces are opened at admission and handed
+        // through the pipeline inside the request itself, so the
+        // dispatcher/shard paths never consult the recorder — only
+        // commit (via the wrapped reply) and the summary do.
+        let recorder: Option<Arc<TraceRecorder>> =
+            (cfg.trace_cap > 0).then(|| {
+                Arc::new(TraceRecorder::new(cfg.trace_cap,
+                                            cfg.trace_exemplars))
+            });
         let dispatcher = {
             let front = Arc::clone(&front);
             let metrics = Arc::clone(&metrics);
@@ -689,7 +728,7 @@ impl Serve {
                 .expect("spawn serve dispatcher")
         };
         Ok(Serve { front, dispatcher: Some(dispatcher), metrics, cancel,
-                   park, shard_queues, store, quarantine })
+                   park, shard_queues, store, quarantine, recorder })
     }
 
     /// The submission primitive every public surface builds on: push
@@ -700,13 +739,39 @@ impl Serve {
     /// without an extra future hop.
     pub(crate) fn submit_raw(&self, item: WorkItem, reply: ReplyFn) {
         self.metrics.request_submitted();
+        let (item, trace, reply) = match &self.recorder {
+            None => (item, None, reply),
+            Some(rec) => {
+                // Pre-assigned ids (pipelines) are honored so a DAG's
+                // requests share one trace lane; otherwise mint here.
+                let mut item = item;
+                let id = item.trace_id
+                    .unwrap_or_else(|| rec.mint_id());
+                item.trace_id = Some(id);
+                let trace = rec.begin(id, item.cache_key(),
+                                      item.session);
+                let commit = Arc::clone(&trace);
+                // Commit-on-reply: the exactly-one-reply contract
+                // makes the wrapped closure the single terminal point
+                // of every trace — admission rejects, quarantine
+                // denies, sheds, drains, and normal replies all funnel
+                // through it, so no per-site bookkeeping can leak a
+                // span or double-close one.
+                let reply: ReplyFn = Box::new(move |r| {
+                    commit.finish(&r);
+                    reply(r)
+                });
+                (item, Some(trace), reply)
+            }
+        };
         // Depth high-water comes from the queue's own max_depth (one
         // lock inside push), not a separate len() read per request.
         let req = ServeRequest { item, reply,
                                  enqueued: Instant::now(),
-                                 internal: false };
+                                 internal: false, trace };
         if let Err(req) = self.front.push_or_return(req) {
             self.metrics.request_failed();
+            attach_err(&req.trace, &ServeError::Closed);
             (req.reply)(Err(ServeError::Closed));
         }
     }
@@ -805,7 +870,18 @@ impl Serve {
                 self.metrics.observe_shard_depth(q.max_depth());
             }
         }
-        self.metrics.summary()
+        let mut s = self.metrics.summary();
+        if let Some(rec) = &self.recorder {
+            let phases = rec.phase_summary();
+            if !phases.is_empty() {
+                s.push_str("\n  trace phases: ");
+                s.push_str(&phases);
+            }
+            s.push_str(&format!(
+                "\n  traces: {} committed, {} dropped (ring cap {})",
+                rec.committed(), rec.dropped(), rec.cap()));
+        }
+        s
     }
 
     /// Live per-shard queue visibility: `(label, current depth,
@@ -843,6 +919,20 @@ impl Serve {
     /// isolated and how many consecutive failures got them there.
     pub fn quarantine(&self) -> Option<Arc<Quarantine>> {
         self.quarantine.clone()
+    }
+
+    /// The flight recorder (present when `ServeConfig::trace_cap > 0`)
+    /// — export surface: ring snapshot, exemplars, phase shares.
+    pub fn trace_recorder(&self) -> Option<Arc<TraceRecorder>> {
+        self.recorder.clone()
+    }
+
+    /// Mint a trace id for pre-assignment: a pipeline tags every
+    /// node's `WorkItem` with one id so the whole DAG commits under a
+    /// single trace lane. `None` when tracing is off — callers submit
+    /// untagged and ids are minted (or not) at admission.
+    pub fn mint_trace_id(&self) -> Option<u64> {
+        self.recorder.as_ref().map(|r| r.mint_id())
     }
 
     /// Digest keys of the artifacts currently quarantined (empty when
@@ -944,6 +1034,7 @@ impl TuneCtx {
             item: WorkItem::explore(dtype, bucket),
             enqueued: Instant::now(),
             internal: true,
+            trace: None,
             reply: Box::new(move |r| {
                 if let Ok(mut g) = inflight.lock() {
                     g.remove(&(dtype, bucket));
@@ -1092,6 +1183,7 @@ fn dispatch_loop(front: Arc<BoundedQueue<ServeRequest>>, cfg: ServeConfig,
                     overflow_len -= 1;
                     if let Err(req) = handle.queue.push_or_return(req) {
                         metrics.request_failed();
+                        attach_err(&req.trace, &ServeError::Closed);
                         (req.reply)(Err(ServeError::Closed));
                     }
                 }
@@ -1124,6 +1216,16 @@ fn dispatch_loop(front: Arc<BoundedQueue<ServeRequest>>, cfg: ServeConfig,
         // worth of shard-queue slots ahead of everyone else).
         for req in interleave_sessions(burst) {
             let key = req.item.shard_key();
+            // Routing span: covers the admission decision — breaker
+            // check, shard spawn, quota derivation — and ends at the
+            // hand-off to the shard's line (or at the reject). Time
+            // spent in the front queue before this point becomes the
+            // synthesized `queue` span at commit.
+            let mut route = req.trace.as_ref()
+                .map(|t| t.span(SpanKind::Route));
+            if let Some(g) = route.as_mut() {
+                g.attr("shard", key.label());
+            }
             // Circuit breaker: a quarantined artifact fails FAST at
             // routing time — no shard queue slot, no backend time —
             // with an explicit `Quarantined` reply. After the
@@ -1132,21 +1234,37 @@ fn dispatch_loop(front: Arc<BoundedQueue<ServeRequest>>, cfg: ServeConfig,
             // shard worker) re-validates or re-opens.
             if let Some(q) = &quarantine {
                 if let Some(qkey) = quarantine_key(&digests, &req.item) {
-                    if q.admit(&qkey) == Admission::Deny {
-                        let artifact = match &req.item.payload {
-                            WorkPayload::Artifact { id, .. } => {
-                                id.clone()
+                    match q.admit(&qkey) {
+                        Admission::Allow => {}
+                        Admission::Probe => {
+                            // half-open probe: mark the trace so an
+                            // exemplar explains its own risk/latency
+                            if let Some(g) = route.as_mut() {
+                                g.attr("quarantine", "probe");
                             }
-                            _ => qkey,
-                        };
-                        metrics.request_quarantined();
-                        if !req.internal {
-                            metrics.request_failed();
                         }
-                        (req.reply)(Err(ServeError::Quarantined {
-                            artifact,
-                        }));
-                        continue;
+                        Admission::Deny => {
+                            let artifact = match &req.item.payload {
+                                WorkPayload::Artifact { id, .. } => {
+                                    id.clone()
+                                }
+                                _ => qkey,
+                            };
+                            metrics.request_quarantined();
+                            if !req.internal {
+                                metrics.request_failed();
+                            }
+                            let err = ServeError::Quarantined {
+                                artifact,
+                            };
+                            if let Some(g) = route.as_mut() {
+                                g.attr("quarantine", "deny");
+                                g.fail(&err);
+                            }
+                            drop(route);
+                            (req.reply)(Err(err));
+                            continue;
+                        }
                     }
                 }
             }
@@ -1215,8 +1333,13 @@ fn dispatch_loop(front: Arc<BoundedQueue<ServeRequest>>, cfg: ServeConfig,
                         if !req.internal {
                             metrics.request_failed();
                         }
-                        (req.reply)(Err(ServeError::Backend(
-                            format!("{}: {e}", key.label()))));
+                        let err = ServeError::Backend(
+                            format!("{}: {e}", key.label()));
+                        if let Some(g) = route.as_mut() {
+                            g.fail(&err);
+                        }
+                        drop(route);
+                        (req.reply)(Err(err));
                         continue;
                     }
                 }
@@ -1237,6 +1360,10 @@ fn dispatch_loop(front: Arc<BoundedQueue<ServeRequest>>, cfg: ServeConfig,
                 }
                 None => usize::MAX,
             };
+            // Route decided: the span ends here, at the hand-off
+            // attempt — shard-queue wait shows up as trace dead time
+            // between `route` and the worker's first span.
+            drop(route);
             let buf = overflow.entry(key).or_default();
             // Admission quota: the shard's outstanding line is its
             // queue PLUS its overflow buffer; with a rejecting policy
@@ -1250,17 +1377,20 @@ fn dispatch_loop(front: Arc<BoundedQueue<ServeRequest>>, cfg: ServeConfig,
                     Ok(()) => continue,
                     Err(PushRefusal::OverQuota(req, depth)) => {
                         metrics.request_shed();
-                        (req.reply)(Err(ServeError::Overloaded {
+                        let err = ServeError::Overloaded {
                             shard: key.label(),
                             depth,
                             quota,
-                        }));
+                        };
+                        attach_err(&req.trace, &err);
+                        (req.reply)(Err(err));
                         continue;
                     }
                     Err(PushRefusal::Closed(req)) => {
                         // shard queues only close during shutdown,
                         // after this loop — defensive, never silent
                         metrics.request_failed();
+                        attach_err(&req.trace, &ServeError::Closed);
                         (req.reply)(Err(ServeError::Closed));
                         continue;
                     }
@@ -1273,11 +1403,13 @@ fn dispatch_loop(front: Arc<BoundedQueue<ServeRequest>>, cfg: ServeConfig,
                 let outstanding = handle.queue.len() + buf.len();
                 if outstanding >= quota {
                     metrics.request_shed();
-                    (req.reply)(Err(ServeError::Overloaded {
+                    let err = ServeError::Overloaded {
                         shard: key.label(),
                         depth: outstanding,
                         quota,
-                    }));
+                    };
+                    attach_err(&req.trace, &err);
+                    (req.reply)(Err(err));
                     continue;
                 }
                 // keep FIFO: never jump the shard's waiting line
@@ -1290,6 +1422,7 @@ fn dispatch_loop(front: Arc<BoundedQueue<ServeRequest>>, cfg: ServeConfig,
                 overflow_len -= 1;
                 if let Err(req) = handle.queue.push_or_return(req) {
                     metrics.request_failed();
+                    attach_err(&req.trace, &ServeError::Closed);
                     (req.reply)(Err(ServeError::Closed));
                 }
             }
@@ -1503,11 +1636,36 @@ struct ShardFaultCtx {
 /// Injected reply stall: fires after execution, before the replies go
 /// out, so a stalled shard looks exactly like a slow backend to every
 /// client-plane deadline. No lock is held across the sleep.
-fn inject_stall(fault: &ShardFaultCtx) {
+fn inject_stall(fault: &ShardFaultCtx,
+                trace: Option<&Arc<ActiveTrace>>) {
     if let Some(p) = &fault.plan {
-        if p.should_fire(FaultSite::StallReply) {
+        if p.should_fire_traced(FaultSite::StallReply, trace) {
             std::thread::sleep(p.stall());
         }
+    }
+}
+
+/// Span-attribute label of a pre-retry execution failure (the
+/// post-retry [`ServeError`] mapping happens in `run_supervised`).
+fn failure_variant(fail: &BackendFailure) -> &'static str {
+    match fail {
+        BackendFailure::Error(_) => "backend",
+        BackendFailure::Corrupted { .. } => "corrupted",
+    }
+}
+
+/// Retroactive `batch` span for one coalesced-group member: the wait
+/// from group formation (dequeue) to the member's reply. Recorded at
+/// reply time because detail members have no execution of their own —
+/// the leader's single run answered them. Singleton groups skip it
+/// (no coalescing happened, the span would be noise).
+fn record_batch_span(req: &ServeRequest, t0: Option<u64>, size: usize) {
+    if size <= 1 {
+        return;
+    }
+    if let (Some(t), Some(start)) = (&req.trace, t0) {
+        t.record(SpanKind::Batch, start,
+                 vec![("size", size.to_string())]);
     }
 }
 
@@ -1551,7 +1709,8 @@ impl WorkerState {
     /// replies that never reach this function, so the policy cannot
     /// amplify overload.
     fn run_supervised(&mut self, item: &WorkItem,
-                      fault: &ShardFaultCtx, metrics: &ServeMetrics)
+                      fault: &ShardFaultCtx, metrics: &ServeMetrics,
+                      trace: Option<&Arc<ActiveTrace>>)
                       -> (Result<Output, ServeError>, u32) {
         let budget = fault.retry.attempts();
         let mut attempt = 0u32;
@@ -1561,23 +1720,35 @@ impl WorkerState {
             // injected fault costs no compute. The tuner shard draws
             // from its own site, keeping tuner-commit failures tunable
             // independently of serving-path error rates.
+            let site = if self.label.starts_with("tune:") {
+                FaultSite::TunerCommit
+            } else {
+                FaultSite::BackendError
+            };
             let injected = fault.plan.as_ref().and_then(|p| {
-                if self.label.starts_with("tune:") {
-                    p.should_fire(FaultSite::TunerCommit).then(|| {
-                        BackendFailure::Error(format!(
-                            "{}: injected tuner commit failure",
-                            self.label))
-                    })
-                } else {
-                    p.should_fire(FaultSite::BackendError).then(|| {
-                        BackendFailure::Error(format!(
-                            "{}: injected backend error", self.label))
-                    })
-                }
+                p.should_fire(site).then(|| {
+                    BackendFailure::Error(format!(
+                        "{}: injected {}", self.label, site.label()))
+                })
             });
             let result = match injected {
-                Some(fail) => Err(fail),
-                None => self.run_caught(item, fault, metrics),
+                Some(fail) => {
+                    // The attempt never reached the backend: record a
+                    // zero-compute execute span carrying the injected
+                    // fault so the trace shows WHICH attempt died.
+                    if let Some(t) = trace {
+                        let mut g = t.span(SpanKind::Execute);
+                        g.attr("shard", self.label.as_str());
+                        g.attr("attempt", attempt.to_string());
+                        g.fault(site);
+                        g.end();
+                    }
+                    Err(fail)
+                }
+                None => {
+                    self.run_caught(item, fault, metrics, trace,
+                                    attempt)
+                }
             };
             match result {
                 Ok(out) => return (Ok(out), attempt),
@@ -1585,8 +1756,26 @@ impl WorkerState {
                     if attempt < budget {
                         metrics.request_retried();
                         let unit = self.rng.next_unit();
-                        std::thread::sleep(
-                            fault.retry.delay(attempt + 1, unit));
+                        let delay = fault.retry.delay(attempt + 1,
+                                                      unit);
+                        match trace {
+                            Some(t) => {
+                                // `retry#k` wraps the backoff sleep;
+                                // attempt k+1's execute span follows,
+                                // giving the … → retry#k → execute …
+                                // shape the chaos exemplars show.
+                                let mut g =
+                                    t.span(SpanKind::Retry(attempt));
+                                g.attr("error", failure_variant(&fail));
+                                g.attr("delay_us",
+                                       delay.as_micros().to_string());
+                                let b = t.span(SpanKind::Backoff);
+                                std::thread::sleep(delay);
+                                b.end();
+                                g.end();
+                            }
+                            None => std::thread::sleep(delay),
+                        }
                         continue;
                     }
                     if budget > 1 {
@@ -1604,6 +1793,9 @@ impl WorkerState {
                             }
                         }
                     };
+                    if let Some(t) = trace {
+                        t.attach("error", trace::error_variant(&err));
+                    }
                     return (Err(err), attempt);
                 }
             }
@@ -1616,7 +1808,8 @@ impl WorkerState {
     /// The in-flight item's reply is preserved: a panic surfaces as an
     /// ordinary `BackendFailure`, never a dropped reply channel.
     fn run_caught(&mut self, item: &WorkItem, fault: &ShardFaultCtx,
-                  metrics: &ServeMetrics)
+                  metrics: &ServeMetrics,
+                  trace: Option<&Arc<ActiveTrace>>, attempt: u32)
                   -> Result<Output, BackendFailure> {
         let panic_fuse = fault.plan.as_ref()
             .is_some_and(|p| p.should_fire(FaultSite::WorkerPanic));
@@ -1631,18 +1824,38 @@ impl WorkerState {
             }
         }
         let backend = self.backend.as_mut().expect("installed above");
+        // The execute span brackets the whole attempt — including a
+        // panicking one (the guard records on drop, catch_unwind or
+        // not) and post-panic respawn time, which IS part of what the
+        // attempt cost this request.
+        let mut exec = trace.map(|t| t.span(SpanKind::Execute));
+        if let Some(g) = exec.as_mut() {
+            g.attr("shard", self.label.as_str());
+            g.attr("attempt", attempt.to_string());
+        }
         let run = std::panic::catch_unwind(
             std::panic::AssertUnwindSafe(|| {
                 if panic_fuse {
                     panic!("{}: injected worker panic", self.label);
                 }
-                backend.run(item)
+                backend.run_traced(item, trace)
             }));
         match run {
-            Ok(result) => result,
+            Ok(result) => {
+                if let (Some(g), Err(fail)) = (exec.as_mut(), &result) {
+                    g.attr("error", failure_variant(fail));
+                }
+                result
+            }
             Err(payload) => {
                 let msg = panic_message(payload.as_ref());
                 metrics.worker_restarted();
+                if let Some(g) = exec.as_mut() {
+                    if panic_fuse {
+                        g.fault(FaultSite::WorkerPanic);
+                    }
+                    g.attr("error", "panic");
+                }
                 // Respawn eagerly so the shard keeps serving even when
                 // the caller is out of retry budget.
                 self.backend = match (self.factory)() {
@@ -1683,8 +1896,10 @@ fn shard_loop(queue: Arc<BoundedQueue<ServeRequest>>,
                     if !req.internal {
                         metrics.request_failed();
                     }
-                    (req.reply)(Err(ServeError::Backend(
-                        format!("{label}: backend init failed: {e}"))));
+                    let err = ServeError::Backend(
+                        format!("{label}: backend init failed: {e}"));
+                    attach_err(&req.trace, &err);
+                    (req.reply)(Err(err));
                 }
             }
         }
@@ -1714,11 +1929,13 @@ fn shard_loop(queue: Arc<BoundedQueue<ServeRequest>>,
             for req in batch {
                 if req.item.expired(now) {
                     metrics.request_shed();
-                    (req.reply)(Err(ServeError::Overloaded {
+                    let err = ServeError::Overloaded {
                         shard: label.clone(),
                         depth,
                         quota,
-                    }));
+                    };
+                    attach_err(&req.trace, &err);
+                    (req.reply)(Err(err));
                 } else {
                     live.push(req);
                 }
@@ -1745,12 +1962,22 @@ fn shard_loop(queue: Arc<BoundedQueue<ServeRequest>>,
             let group = groups.remove(&key).expect("grouped above");
             let batch_size = group.len();
             metrics.observe_batch(batch_size);
+            // Coalesced-wait starts: each member's `batch` span is
+            // recorded retroactively at its reply (only groups > 1).
+            let batch_t0: Vec<Option<u64>> = if batch_size > 1 {
+                group.iter()
+                    .map(|r| r.trace.as_ref().map(|t| t.now_us()))
+                    .collect()
+            } else {
+                Vec::new()
+            };
 
             if cancel.load(Ordering::SeqCst) {
                 for req in group {
                     if !req.internal {
                         metrics.request_cancelled();
                     }
+                    attach_err(&req.trace, &ServeError::Cancelled);
                     (req.reply)(Err(ServeError::Cancelled));
                 }
                 continue;
@@ -1758,10 +1985,21 @@ fn shard_loop(queue: Arc<BoundedQueue<ServeRequest>>,
 
             // a poisoned result cache degrades to miss-and-disabled:
             // requests recompute instead of panicking the shard (R2)
+            let probe_t0 =
+                group[0].trace.as_ref().map(|t| t.now_us());
             let (cached, cache_enabled) = match cache.lock() {
                 Ok(mut c) => (c.get(&key), c.enabled()),
                 Err(_) => (None, false),
             };
+            // Leader-recorded probe span (detail members share the
+            // outcome; their own traces show it via `cache` on the
+            // committed record).
+            if let (Some(t), Some(start), true) =
+                (&group[0].trace, probe_t0, cache_enabled)
+            {
+                t.record(SpanKind::CacheMem, start,
+                         vec![("hit", cached.is_some().to_string())]);
+            }
             // Pre-serve wait snapshot: `queue_seconds` means "wait from
             // submission until this shard started serving the item" on
             // EVERY path — the cache-hit path must not report reply-loop
@@ -1780,7 +2018,13 @@ fn shard_loop(queue: Arc<BoundedQueue<ServeRequest>>,
                 metrics.cache_hit(batch_size as u64);
                 record_quarantine(&fault, &metrics, &group[0].item,
                                   true);
-                for (req, wait) in group.into_iter().zip(waits) {
+                for (i, (req, wait)) in
+                    group.into_iter().zip(waits).enumerate()
+                {
+                    record_batch_span(&req,
+                                      batch_t0.get(i).copied()
+                                          .flatten(),
+                                      batch_size);
                     let latency = req.enqueued.elapsed().as_secs_f64();
                     if !req.internal {
                         metrics.request_completed(latency);
@@ -1802,17 +2046,33 @@ fn shard_loop(queue: Arc<BoundedQueue<ServeRequest>>,
             // with a result_cache_path only). A disk hit seeds the LRU
             // so the next repeat is a memory hit, and replies carry
             // `cache:disk` so the tier split is attributable.
-            if cache_enabled {
-                if let Some(output) =
-                    disk.as_ref().and_then(|d| d.get(&label, &key))
+            if cache_enabled && disk.is_some() {
+                let probe_t0 =
+                    group[0].trace.as_ref().map(|t| t.now_us());
+                let probed = disk.as_ref().and_then(|d| {
+                    d.get(&label, &key, group[0].trace.as_ref())
+                });
+                if let (Some(t), Some(start)) =
+                    (&group[0].trace, probe_t0)
                 {
+                    t.record(SpanKind::CacheDisk, start,
+                             vec![("hit",
+                                   probed.is_some().to_string())]);
+                }
+                if let Some(output) = probed {
                     metrics.cache_hit_disk(batch_size as u64);
                     record_quarantine(&fault, &metrics, &group[0].item,
                                       true);
                     if let Ok(mut c) = cache.lock() {
                         c.put(key, output.clone());
                     }
-                    for (req, wait) in group.into_iter().zip(waits) {
+                    for (i, (req, wait)) in
+                        group.into_iter().zip(waits).enumerate()
+                    {
+                        record_batch_span(&req,
+                                          batch_t0.get(i).copied()
+                                              .flatten(),
+                                          batch_size);
                         let latency =
                             req.enqueued.elapsed().as_secs_f64();
                         if !req.internal {
@@ -1839,7 +2099,8 @@ fn shard_loop(queue: Arc<BoundedQueue<ServeRequest>>,
                 metrics.cache_miss(batch_size as u64);
                 let t_exec = Instant::now();
                 let (result, attempts) = state.run_supervised(
-                    &group[0].item, &fault, &metrics);
+                    &group[0].item, &fault, &metrics,
+                    group[0].trace.as_ref());
                 match result {
                     Ok(output) => {
                         record_quarantine(&fault, &metrics,
@@ -1857,7 +2118,9 @@ fn shard_loop(queue: Arc<BoundedQueue<ServeRequest>>,
                         // every executed native result (debounced
                         // atomic write outside the lookup lock)
                         if let Some(d) = &disk {
-                            let evicted = d.put(&label, &key, &output);
+                            let evicted =
+                                d.put(&label, &key, &output,
+                                      group[0].trace.as_ref());
                             if evicted > 0 {
                                 metrics.cache_evict_disk(evicted);
                             }
@@ -1865,8 +2128,14 @@ fn shard_loop(queue: Arc<BoundedQueue<ServeRequest>>,
                         if let Ok(mut c) = cache.lock() {
                             c.put(key, output.clone());
                         }
-                        inject_stall(&fault);
-                        for (req, wait) in group.into_iter().zip(waits) {
+                        inject_stall(&fault, group[0].trace.as_ref());
+                        for (i, (req, wait)) in
+                            group.into_iter().zip(waits).enumerate()
+                        {
+                            record_batch_span(&req,
+                                              batch_t0.get(i).copied()
+                                                  .flatten(),
+                                              batch_size);
                             let latency =
                                 req.enqueued.elapsed().as_secs_f64();
                             if !req.internal {
@@ -1887,10 +2156,19 @@ fn shard_loop(queue: Arc<BoundedQueue<ServeRequest>>,
                     Err(err) => {
                         record_quarantine(&fault, &metrics,
                                           &group[0].item, false);
-                        inject_stall(&fault);
-                        for req in group {
+                        inject_stall(&fault, group[0].trace.as_ref());
+                        for (i, req) in group.into_iter().enumerate() {
+                            record_batch_span(&req,
+                                              batch_t0.get(i).copied()
+                                                  .flatten(),
+                                              batch_size);
                             if !req.internal {
                                 metrics.request_failed();
+                            }
+                            if i > 0 {
+                                // the leader's trace already carries
+                                // the error from run_supervised
+                                attach_err(&req.trace, &err);
                             }
                             (req.reply)(Err(err.clone()));
                         }
@@ -1906,7 +2184,8 @@ fn shard_loop(queue: Arc<BoundedQueue<ServeRequest>>,
                     let wait = req.enqueued.elapsed().as_secs_f64();
                     let t_exec = Instant::now();
                     let (result, attempts) = state.run_supervised(
-                        &req.item, &fault, &metrics);
+                        &req.item, &fault, &metrics,
+                        req.trace.as_ref());
                     match result {
                         Ok(output) => {
                             record_quarantine(&fault, &metrics,
@@ -1926,7 +2205,7 @@ fn shard_loop(queue: Arc<BoundedQueue<ServeRequest>>,
                             if !req.internal {
                                 metrics.request_completed(latency);
                             }
-                            inject_stall(&fault);
+                            inject_stall(&fault, req.trace.as_ref());
                             (req.reply)(Ok(ServeReply {
                                 shard: label.clone(),
                                 output,
@@ -1941,7 +2220,7 @@ fn shard_loop(queue: Arc<BoundedQueue<ServeRequest>>,
                         Err(err) => {
                             record_quarantine(&fault, &metrics,
                                               &req.item, false);
-                            inject_stall(&fault);
+                            inject_stall(&fault, req.trace.as_ref());
                             if !req.internal {
                                 metrics.request_failed();
                             }
@@ -2346,6 +2625,7 @@ mod tests {
             reply: Box::new(|_| {}),
             enqueued: Instant::now(),
             internal: false,
+            trace: None,
         };
         // greedy session 1 (4 requests), session 2 (2), untagged (1)
         let burst = vec![req(Some(1), 16), req(Some(1), 32),

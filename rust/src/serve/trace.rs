@@ -1,0 +1,1082 @@
+//! Per-request tracing plane: span trees + a bounded flight recorder.
+//!
+//! Every request admitted while tracing is on (`ServeConfig::trace_cap
+//! > 0`) carries an [`ActiveTrace`]: a lock-light span sink shared by
+//! the dispatcher, the shard worker, the retry loop and the backend
+//! via `Arc`. Stages open named spans ([`SpanKind`]) through RAII
+//! [`SpanGuard`]s — a guard records its span on *every* exit path
+//! (drop, early return, panic unwind), which is the invariant the
+//! `pallas-lint` R9 span-discipline rule checks statically.
+//!
+//! The trace commits exactly once, when the reply fires: `submit_raw`
+//! wraps the reply closure, so every terminal site (admission reject,
+//! quarantine deny, shed, shutdown drain, normal completion) funnels
+//! through one [`ActiveTrace::finish`]. A synthetic `queue` span is
+//! added at commit covering submission → first recorded span, so even
+//! a request shed before reaching a shard renders a complete tree.
+//!
+//! The [`TraceRecorder`] is bounded by construction: a fixed-capacity
+//! ring of the most recent traces (overflow evicts oldest and counts
+//! `dropped`), an exemplar list of the N slowest, and a ring of
+//! failed/quarantined traces. Per-(shard, phase) duration aggregates
+//! are folded on commit and feed `Serve::summary()`'s phase
+//! breakdown. With `trace_cap == 0` (the default) no recorder exists
+//! and every hook is a `None` check — the zero-cost off path.
+//!
+//! Export is Chrome trace-event JSON ([`chrome_trace`]) loadable in
+//! `chrome://tracing` / Perfetto (one lane per trace id, so a
+//! pipeline whose nodes share an id renders as one tree), plus a
+//! text waterfall ([`waterfall`]) for terminals and CI logs.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
+use std::time::Instant;
+
+use super::fault::FaultSite;
+use super::{ServeError, ServeReply};
+
+/// Attribute list carried by spans and traces. Keys are static — the
+/// instrumentation vocabulary is closed — values are formatted once
+/// at record time.
+pub type Attrs = Vec<(&'static str, String)>;
+
+/// The span taxonomy. One lifecycle stage per variant; `Retry(k)`
+/// carries the 1-based retry index so the waterfall reads `retry#1`,
+/// `retry#2`, … while aggregation folds them into one `retry` phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Submission → first recorded stage (synthesized at commit).
+    Queue,
+    /// Dispatcher routing: shard choice + quarantine admission.
+    Route,
+    /// Group membership: coalesced wait while the leader executes.
+    Batch,
+    /// Operand staging: panel packing + oracle preparation.
+    Pack,
+    /// Backend execution (one per attempt).
+    Execute,
+    /// Oracle digest verification of the produced output.
+    Verify,
+    /// The k-th retry decision (spans the inter-attempt gap).
+    Retry(u32),
+    /// Backoff sleep inside a retry gap.
+    Backoff,
+    /// Memory-LRU result-cache probe.
+    CacheMem,
+    /// Disk result-cache probe.
+    CacheDisk,
+    /// Online-tuner exploration inside the `tune:` shard.
+    TuneExplore,
+}
+
+impl SpanKind {
+    /// Stable aggregation key: every `retry#k` folds into `retry`.
+    pub fn phase(self) -> &'static str {
+        match self {
+            SpanKind::Queue => "queue",
+            SpanKind::Route => "route",
+            SpanKind::Batch => "batch",
+            SpanKind::Pack => "pack",
+            SpanKind::Execute => "execute",
+            SpanKind::Verify => "verify",
+            SpanKind::Retry(_) => "retry",
+            SpanKind::Backoff => "backoff",
+            SpanKind::CacheMem => "cache:mem",
+            SpanKind::CacheDisk => "cache:disk",
+            SpanKind::TuneExplore => "tune:explore",
+        }
+    }
+
+    /// Display label (`retry#k` keeps its index).
+    pub fn label(self) -> String {
+        match self {
+            SpanKind::Retry(k) => format!("retry#{k}"),
+            other => other.phase().to_string(),
+        }
+    }
+
+    /// Inverse of [`SpanKind::label`] — used by the `trace`
+    /// subcommand to reload exported Chrome JSON.
+    pub fn parse(label: &str) -> Option<SpanKind> {
+        match label {
+            "queue" => Some(SpanKind::Queue),
+            "route" => Some(SpanKind::Route),
+            "batch" => Some(SpanKind::Batch),
+            "pack" => Some(SpanKind::Pack),
+            "execute" => Some(SpanKind::Execute),
+            "verify" => Some(SpanKind::Verify),
+            "backoff" => Some(SpanKind::Backoff),
+            "cache:mem" => Some(SpanKind::CacheMem),
+            "cache:disk" => Some(SpanKind::CacheDisk),
+            "tune:explore" => Some(SpanKind::TuneExplore),
+            other => other
+                .strip_prefix("retry#")
+                .and_then(|k| k.parse().ok())
+                .map(SpanKind::Retry),
+        }
+    }
+}
+
+/// The stable name of a [`ServeError`] variant, used for span/trace
+/// `error=` attributes and the committed trace outcome.
+pub fn error_variant(err: &ServeError) -> &'static str {
+    match err {
+        ServeError::Closed => "closed",
+        ServeError::Cancelled => "cancelled",
+        ServeError::Overloaded { .. } => "overloaded",
+        ServeError::Backend(_) => "backend",
+        ServeError::Corrupted { .. } => "corrupted",
+        ServeError::Quarantined { .. } => "quarantined",
+    }
+}
+
+/// Attach an error variant to the active trace if one is present —
+/// the attachment hook for reply sites that hold no live span guard
+/// (the R9 span-discipline rule requires every `ServeError`
+/// constructed in a traced region to be attached one way or the
+/// other).
+pub fn attach_err(trace: &Option<Arc<ActiveTrace>>, err: &ServeError) {
+    if let Some(t) = trace {
+        t.attach("error", error_variant(err));
+    }
+}
+
+/// One closed span: a named stage with monotonic microsecond bounds
+/// (relative to the recorder epoch) and structured attributes.
+#[derive(Debug, Clone)]
+pub struct Span {
+    pub kind: SpanKind,
+    pub start_us: u64,
+    pub end_us: u64,
+    pub attrs: Attrs,
+}
+
+impl Span {
+    pub fn micros(&self) -> u64 {
+        self.end_us.saturating_sub(self.start_us)
+    }
+
+    /// First value recorded for `key`, if any.
+    pub fn attr(&self, key: &str) -> Option<&str> {
+        self.attrs
+            .iter()
+            .find(|(k, _)| *k == key)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// A committed trace: the span tree plus request-level metadata, as
+/// stored in the recorder and exported to Chrome JSON.
+#[derive(Debug, Clone)]
+pub struct TraceRecord {
+    /// Trace id — shared across a pipeline's nodes so the DAG
+    /// renders as one lane.
+    pub id: u64,
+    /// Commit sequence number, unique per committed trace (a record
+    /// can sit in the ring *and* an exemplar list; exports dedup on
+    /// this).
+    pub seq: u64,
+    /// Work identity (the item's cache key).
+    pub kernel: String,
+    /// Session id the request was tagged with, if any.
+    pub session: Option<u64>,
+    /// `"ok"` or the [`error_variant`] of the terminal error.
+    pub outcome: &'static str,
+    /// Shard that answered (empty when the request never reached
+    /// one, e.g. rejected at admission).
+    pub shard: String,
+    pub start_us: u64,
+    pub end_us: u64,
+    pub spans: Vec<Span>,
+    /// Trace-level attributes (cache tier, attempts, batch size,
+    /// attached errors/faults).
+    pub attrs: Attrs,
+}
+
+impl TraceRecord {
+    pub fn total_us(&self) -> u64 {
+        self.end_us.saturating_sub(self.start_us)
+    }
+
+    pub fn failed(&self) -> bool {
+        self.outcome != "ok"
+    }
+}
+
+#[derive(Default)]
+struct TraceState {
+    spans: Vec<Span>,
+    attrs: Attrs,
+    committed: bool,
+}
+
+/// The per-request span sink. Shared by `Arc` between the request
+/// (`ServeRequest::trace`) and the wrapped reply closure; the
+/// interior mutex is effectively uncontended — exactly one thread
+/// works on a request at any moment — which is what keeps the
+/// recording path lock-light.
+pub struct ActiveTrace {
+    id: u64,
+    start_us: u64,
+    kernel: String,
+    session: Option<u64>,
+    recorder: Arc<TraceRecorder>,
+    state: Mutex<TraceState>,
+}
+
+impl ActiveTrace {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Microseconds since the recorder epoch — the clock every span
+    /// in this trace uses.
+    pub fn now_us(&self) -> u64 {
+        self.recorder.now_us()
+    }
+
+    /// Open a span. The returned guard records on every exit path;
+    /// bind it (`let g = …`) for the scope the stage covers — the
+    /// R9 lint rule rejects guards that are dropped on the spot.
+    pub fn span(self: &Arc<Self>, kind: SpanKind) -> SpanGuard {
+        SpanGuard {
+            trace: Arc::clone(self),
+            kind,
+            start_us: self.recorder.now_us(),
+            attrs: Vec::new(),
+        }
+    }
+
+    /// Record a span retroactively from an earlier `now_us()`
+    /// timestamp to now — for stages whose start is observed in one
+    /// place and whose end in another (e.g. coalesced batch waits).
+    pub fn record(&self, kind: SpanKind, start_us: u64, attrs: Attrs) {
+        let span = Span {
+            kind,
+            start_us,
+            end_us: self.recorder.now_us(),
+            attrs,
+        };
+        self.push_span(span);
+    }
+
+    /// Attach a trace-level attribute (kept once per occurrence, in
+    /// record order).
+    pub fn attach(&self, key: &'static str, value: impl Into<String>) {
+        let mut st = self.state.lock().unwrap_or_else(PoisonError::into_inner);
+        st.attrs.push((key, value.into()));
+    }
+
+    fn push_span(&self, span: Span) {
+        let mut st = self.state.lock().unwrap_or_else(PoisonError::into_inner);
+        if !st.committed {
+            st.spans.push(span);
+        }
+    }
+
+    /// Commit the trace to the recorder. Called from the wrapped
+    /// reply closure, so it runs exactly when the request's single
+    /// reply fires; a second call is a no-op by construction, which
+    /// is what the no-double-close accounting test pins.
+    pub fn finish(&self, result: &Result<ServeReply, ServeError>) {
+        let end_us = self.recorder.now_us();
+        let (mut spans, mut attrs) = {
+            let mut st = self.state.lock().unwrap_or_else(PoisonError::into_inner);
+            if st.committed {
+                return;
+            }
+            st.committed = true;
+            (std::mem::take(&mut st.spans), std::mem::take(&mut st.attrs))
+        };
+        // chronological, parents (longer spans) before their children
+        spans.sort_by(|a, b| {
+            a.start_us
+                .cmp(&b.start_us)
+                .then(b.end_us.cmp(&a.end_us))
+        });
+        // synthesize the queue span: submission -> first real stage
+        // (or the reply itself if the request never reached one)
+        let first = spans.first().map(|s| s.start_us).unwrap_or(end_us);
+        spans.insert(
+            0,
+            Span {
+                kind: SpanKind::Queue,
+                start_us: self.start_us,
+                end_us: first.max(self.start_us),
+                attrs: Vec::new(),
+            },
+        );
+        let (outcome, shard) = match result {
+            Ok(reply) => ("ok", reply.shard.clone()),
+            Err(err) => {
+                let shard = match err {
+                    ServeError::Overloaded { shard, .. } => shard.clone(),
+                    ServeError::Corrupted { shard, .. } => shard.clone(),
+                    _ => String::new(),
+                };
+                (error_variant(err), shard)
+            }
+        };
+        if let Ok(reply) = result {
+            attrs.push(("cache", reply.cache_src.label().to_string()));
+            attrs.push(("attempts", reply.attempts.to_string()));
+            attrs.push(("batch", reply.batch_size.to_string()));
+        }
+        self.recorder.commit(TraceRecord {
+            id: self.id,
+            seq: 0, // assigned by the recorder
+            kernel: self.kernel.clone(),
+            session: self.session,
+            outcome,
+            shard,
+            start_us: self.start_us,
+            end_us,
+            spans,
+            attrs,
+        });
+    }
+}
+
+/// RAII span handle: created by [`ActiveTrace::span`], records its
+/// span when dropped — on normal scope exit, early return, or panic
+/// unwind alike. Owns its `Arc`, so it can outlive moves of the
+/// request that spawned it (it records no locks, so holding one
+/// across a sleep or a blocking call is safe).
+pub struct SpanGuard {
+    trace: Arc<ActiveTrace>,
+    kind: SpanKind,
+    start_us: u64,
+    attrs: Attrs,
+}
+
+impl SpanGuard {
+    /// Add a structured attribute to this span.
+    pub fn attr(&mut self, key: &'static str, value: impl Into<String>) {
+        self.attrs.push((key, value.into()));
+    }
+
+    /// Mark that a fault-plane site fired inside this span
+    /// (`fault=<site label>`), making chaos traces self-explaining.
+    pub fn fault(&mut self, site: FaultSite) {
+        self.attrs.push(("fault", site.label().to_string()));
+    }
+
+    /// Attach the error produced inside this span (`error=<variant>`).
+    pub fn fail(&mut self, err: &ServeError) {
+        self.attrs.push(("error", error_variant(err).to_string()));
+    }
+
+    /// Close the span now (dropping the guard does the same; this
+    /// exists to make scope ends explicit at hand-off points).
+    pub fn end(self) {}
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let span = Span {
+            kind: self.kind,
+            start_us: self.start_us,
+            end_us: self.trace.recorder.now_us(),
+            attrs: std::mem::take(&mut self.attrs),
+        };
+        self.trace.push_span(span);
+    }
+}
+
+struct RecorderState {
+    ring: VecDeque<TraceRecord>,
+    slow: Vec<TraceRecord>,
+    failed: VecDeque<TraceRecord>,
+    phases: BTreeMap<(String, &'static str), u64>,
+}
+
+/// The bounded flight recorder. All storage is fixed-capacity:
+///
+/// * `ring` — the most recent `cap` committed traces; overflow
+///   evicts oldest-first and is counted in [`TraceRecorder::dropped`].
+/// * `slow` — the `exemplar_cap` slowest traces seen (pruning the
+///   list is by design, not a drop).
+/// * `failed` — the most recent `cap` failed/quarantined traces, so
+///   errors survive ring churn under load.
+///
+/// Commit folds per-(shard, phase) duration sums for the summary
+/// breakdown. The recorder clock is a single epoch `Instant`, so
+/// every span in every trace shares one monotonic microsecond axis.
+pub struct TraceRecorder {
+    epoch: Instant,
+    cap: usize,
+    exemplar_cap: usize,
+    next_id: AtomicU64,
+    committed: AtomicU64,
+    dropped: AtomicU64,
+    inner: Mutex<RecorderState>,
+}
+
+impl TraceRecorder {
+    /// `cap` bounds the ring and the failed list (clamped to >= 1);
+    /// `exemplar_cap` bounds the slowest-trace list.
+    pub fn new(cap: usize, exemplar_cap: usize) -> Self {
+        TraceRecorder {
+            epoch: Instant::now(),
+            cap: cap.max(1),
+            exemplar_cap,
+            next_id: AtomicU64::new(0),
+            committed: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            inner: Mutex::new(RecorderState {
+                ring: VecDeque::new(),
+                slow: Vec::new(),
+                failed: VecDeque::new(),
+                phases: BTreeMap::new(),
+            }),
+        }
+    }
+
+    /// Microseconds since the recorder epoch.
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Ring capacity (after the >= 1 clamp).
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Mint a fresh trace id. Pipelines mint one id up front and tag
+    /// every node's `WorkItem` with it so the DAG shares a lane.
+    pub fn mint_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Open a trace for an admitted request.
+    pub fn begin(
+        self: &Arc<Self>,
+        id: u64,
+        kernel: String,
+        session: Option<u64>,
+    ) -> Arc<ActiveTrace> {
+        Arc::new(ActiveTrace {
+            id,
+            start_us: self.now_us(),
+            kernel,
+            session,
+            recorder: Arc::clone(self),
+            state: Mutex::new(TraceState::default()),
+        })
+    }
+
+    /// Traces committed so far (exactly one per replied request).
+    pub fn committed(&self) -> u64 {
+        self.committed.load(Ordering::Relaxed)
+    }
+
+    /// Traces evicted from the bounded rings (ring overflow). The
+    /// recorder never blocks or grows to avoid this — dropping
+    /// oldest is the overhead contract.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    fn commit(&self, mut record: TraceRecord) {
+        record.seq = self.committed.fetch_add(1, Ordering::Relaxed) + 1;
+        let mut evicted = 0u64;
+        {
+            let mut st = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+            for span in &record.spans {
+                let key = (record.shard.clone(), span.kind.phase());
+                *st.phases.entry(key).or_insert(0) += span.micros();
+            }
+            if self.exemplar_cap > 0 {
+                let at = st
+                    .slow
+                    .partition_point(|r| r.total_us() >= record.total_us());
+                if at < self.exemplar_cap {
+                    st.slow.insert(at, record.clone());
+                    st.slow.truncate(self.exemplar_cap);
+                }
+            }
+            if record.failed() {
+                st.failed.push_back(record.clone());
+                if st.failed.len() > self.cap {
+                    st.failed.pop_front();
+                }
+            }
+            st.ring.push_back(record);
+            if st.ring.len() > self.cap {
+                st.ring.pop_front();
+                evicted += 1;
+            }
+        }
+        if evicted > 0 {
+            self.dropped.fetch_add(evicted, Ordering::Relaxed);
+        }
+    }
+
+    /// Snapshot of the recent-trace ring, oldest first.
+    pub fn records(&self) -> Vec<TraceRecord> {
+        let st = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+        st.ring.iter().cloned().collect()
+    }
+
+    /// The exemplar set: slowest traces first, then any retained
+    /// failed traces not already among them.
+    pub fn exemplars(&self) -> Vec<TraceRecord> {
+        let st = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+        let mut out: Vec<TraceRecord> = st.slow.clone();
+        let mut seen: Vec<u64> = out.iter().map(|r| r.seq).collect();
+        for r in &st.failed {
+            if !seen.contains(&r.seq) {
+                seen.push(r.seq);
+                out.push(r.clone());
+            }
+        }
+        out
+    }
+
+    /// Everything the recorder still holds (ring + exemplars,
+    /// deduplicated), by commit order — the `serve --trace PATH`
+    /// export set.
+    pub fn all_records(&self) -> Vec<TraceRecord> {
+        let mut out = self.records();
+        let mut seen: Vec<u64> = out.iter().map(|r| r.seq).collect();
+        for r in self.exemplars() {
+            if !seen.contains(&r.seq) {
+                seen.push(r.seq);
+                out.push(r);
+            }
+        }
+        out.sort_by_key(|r| r.seq);
+        out
+    }
+
+    /// Per-shard share of recorded span time by phase:
+    /// `(shard, [(phase, micros, share)])`, phases largest first.
+    /// Nested spans (pack/verify inside execute, backoff inside
+    /// retry) each count their own wall time, so shares describe
+    /// where time is attributable, not a partition of it.
+    pub fn phase_shares(&self) -> Vec<(String, Vec<(&'static str, u64, f64)>)> {
+        let st = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+        let mut by_shard: BTreeMap<&String, Vec<(&'static str, u64)>> = BTreeMap::new();
+        for ((shard, phase), micros) in st.phases.iter() {
+            by_shard.entry(shard).or_default().push((phase, *micros));
+        }
+        let mut out = Vec::new();
+        for (shard, mut phases) in by_shard {
+            phases.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(b.0)));
+            let total: u64 = phases.iter().map(|p| p.1).sum();
+            let total = total.max(1) as f64;
+            let shares = phases
+                .into_iter()
+                .map(|(phase, us)| (phase, us, us as f64 / total))
+                .collect();
+            out.push((shard.clone(), shares));
+        }
+        out
+    }
+
+    /// One-line phase breakdown for `Serve::summary()`, e.g.
+    /// `native:threadpool execute 78% queue 15% verify 4%`.
+    pub fn phase_summary(&self) -> String {
+        let mut lines = Vec::new();
+        for (shard, phases) in self.phase_shares() {
+            let label = if shard.is_empty() { "(unrouted)" } else { &shard };
+            let mut line = label.to_string();
+            for (phase, _us, share) in phases {
+                line.push_str(&format!(" {phase} {:.0}%", 100.0 * share));
+            }
+            lines.push(line);
+        }
+        lines.join("; ")
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn chrome_event(name: &str, ts: u64, dur: u64, tid: u64, args: &Attrs) -> String {
+    // Attributes may be attached more than once (a retried request
+    // can hit several fault sites); a JSON object must not repeat a
+    // key, so the LAST attachment wins — matching "most recent state"
+    // semantics everywhere the export is read.
+    let mut fields: Vec<(&str, String)> = Vec::with_capacity(args.len());
+    for (k, v) in args {
+        let rendered =
+            format!("\"{}\":\"{}\"", json_escape(k), json_escape(v));
+        match fields.iter_mut().find(|(fk, _)| fk == k) {
+            Some((_, slot)) => *slot = rendered,
+            None => fields.push((k, rendered)),
+        }
+    }
+    let fields: Vec<String> =
+        fields.into_iter().map(|(_, f)| f).collect();
+    format!(
+        "{{\"name\":\"{}\",\"cat\":\"serve\",\"ph\":\"X\",\
+         \"ts\":{ts},\"dur\":{dur},\"pid\":1,\"tid\":{tid},\
+         \"args\":{{{}}}}}",
+        json_escape(name),
+        fields.join(","))
+}
+
+/// Render records as Chrome trace-event JSON (`ph: "X"` complete
+/// events, microsecond timestamps) loadable in `chrome://tracing` or
+/// Perfetto. Each trace id gets its own `tid` lane; every record
+/// emits a `request` envelope event carrying trace-level attributes
+/// plus one event per span.
+pub fn chrome_trace(records: &[TraceRecord]) -> String {
+    let mut events = Vec::new();
+    for r in records {
+        let mut args: Attrs = vec![
+            ("outcome", r.outcome.to_string()),
+            ("kernel", r.kernel.clone()),
+        ];
+        if !r.shard.is_empty() {
+            args.push(("shard", r.shard.clone()));
+        }
+        if let Some(sid) = r.session {
+            args.push(("session", sid.to_string()));
+        }
+        args.extend(r.attrs.iter().cloned());
+        events.push(chrome_event("request", r.start_us, r.total_us(), r.id, &args));
+        for s in &r.spans {
+            events.push(chrome_event(
+                &s.kind.label(),
+                s.start_us,
+                s.micros(),
+                r.id,
+                &s.attrs,
+            ));
+        }
+    }
+    format!("{{\"traceEvents\":[{}]}}", events.join(",\n"))
+}
+
+/// Intern an attribute key parsed back from JSON. [`Attrs`] keys are
+/// `&'static str` because live instrumentation uses a closed, static
+/// vocabulary; reloaded keys come from the same vocabulary, so the
+/// leak is bounded by it (and deduplicated per parse call).
+fn intern_key(seen: &mut BTreeMap<String, &'static str>, key: &str)
+              -> &'static str {
+    if let Some(k) = seen.get(key) {
+        return k;
+    }
+    let leaked: &'static str =
+        Box::leak(key.to_string().into_boxed_str());
+    seen.insert(key.to_string(), leaked);
+    leaked
+}
+
+/// Reload records from [`chrome_trace`] output — the `alpaka-bench
+/// trace` subcommand's input path. Tolerant of foreign trace-event
+/// JSON: events that are not this module's `request` envelopes or
+/// span names are skipped, and a span with no preceding envelope on
+/// its lane is dropped rather than erroring.
+pub fn parse_chrome_trace(text: &str) -> Result<Vec<TraceRecord>, String> {
+    use crate::util::json::{self, Value};
+
+    let doc = json::parse(text).map_err(|e| e.to_string())?;
+    let events = doc
+        .get("traceEvents")
+        .and_then(Value::as_array)
+        .ok_or_else(|| "missing traceEvents array".to_string())?;
+    let mut keys: BTreeMap<String, &'static str> = BTreeMap::new();
+    let mut records: Vec<TraceRecord> = Vec::new();
+    // The export writes each envelope immediately before its spans,
+    // so a span belongs to the latest envelope seen on its tid lane.
+    let mut lane: BTreeMap<u64, usize> = BTreeMap::new();
+    for ev in events {
+        let Some(name) = ev.get("name").and_then(Value::as_str) else {
+            continue;
+        };
+        let Some(ts) = ev.get("ts").and_then(Value::as_u64) else {
+            continue;
+        };
+        let Some(tid) = ev.get("tid").and_then(Value::as_u64) else {
+            continue;
+        };
+        let dur = ev.get("dur").and_then(Value::as_u64).unwrap_or(0);
+        let args = match ev.get("args") {
+            Some(Value::Object(m)) => m
+                .iter()
+                .filter_map(|(k, v)| {
+                    v.as_str().map(|s| (k.as_str(), s.to_string()))
+                })
+                .collect::<Vec<_>>(),
+            _ => Vec::new(),
+        };
+        if name == "request" {
+            let mut rec = TraceRecord {
+                id: tid,
+                seq: records.len() as u64 + 1,
+                kernel: String::new(),
+                session: None,
+                outcome: "ok",
+                shard: String::new(),
+                start_us: ts,
+                end_us: ts + dur,
+                spans: Vec::new(),
+                attrs: Vec::new(),
+            };
+            for (k, v) in args {
+                match k {
+                    "kernel" => rec.kernel = v,
+                    "shard" => rec.shard = v,
+                    "session" => rec.session = v.parse().ok(),
+                    "outcome" => {
+                        rec.outcome = intern_key(&mut keys, &v);
+                    }
+                    other => {
+                        rec.attrs
+                            .push((intern_key(&mut keys, other), v));
+                    }
+                }
+            }
+            lane.insert(tid, records.len());
+            records.push(rec);
+        } else if let Some(kind) = SpanKind::parse(name) {
+            let Some(&at) = lane.get(&tid) else {
+                continue; // span with no envelope: foreign JSON
+            };
+            records[at].spans.push(Span {
+                kind,
+                start_us: ts,
+                end_us: ts + dur,
+                attrs: args
+                    .into_iter()
+                    .map(|(k, v)| (intern_key(&mut keys, k), v))
+                    .collect(),
+            });
+        }
+    }
+    for rec in &mut records {
+        rec.spans.sort_by(|a, b| {
+            a.start_us
+                .cmp(&b.start_us)
+                .then(b.end_us.cmp(&a.end_us))
+        });
+    }
+    Ok(records)
+}
+
+fn fmt_ms(us: u64) -> String {
+    format!("{:.2}ms", us as f64 / 1000.0)
+}
+
+/// Render a text waterfall of the `top` slowest records: one header
+/// line per trace, one bar-chart line per span with offset, duration
+/// and attributes — the terminal-friendly view of the same data the
+/// Chrome export carries.
+pub fn waterfall(records: &[TraceRecord], top: usize) -> String {
+    const WIDTH: u64 = 32;
+    let mut sorted: Vec<&TraceRecord> = records.iter().collect();
+    sorted.sort_by(|a, b| b.total_us().cmp(&a.total_us()).then(a.seq.cmp(&b.seq)));
+    let mut out = String::new();
+    for r in sorted.iter().take(top) {
+        let shard = if r.shard.is_empty() { "-" } else { &r.shard };
+        let attrs: Vec<String> = r
+            .attrs
+            .iter()
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect();
+        out.push_str(&format!(
+            "trace {} {} [{}] {} {} {}\n",
+            r.id,
+            r.kernel,
+            shard,
+            r.outcome,
+            fmt_ms(r.total_us()),
+            attrs.join(" ")));
+        let total = r.total_us().max(1);
+        for s in &r.spans {
+            let off = s.start_us.saturating_sub(r.start_us).min(total);
+            let cells = (off * WIDTH / total).min(WIDTH - 1);
+            let len = (s.micros() * WIDTH).div_ceil(total).max(1);
+            let len = len.min(WIDTH - cells);
+            let mut bar = " ".repeat(cells as usize);
+            bar.push_str(&"#".repeat(len as usize));
+            bar.push_str(&" ".repeat((WIDTH - cells - len) as usize));
+            let attrs: Vec<String> = s
+                .attrs
+                .iter()
+                .map(|(k, v)| format!("{k}={v}"))
+                .collect();
+            out.push_str(&format!(
+                "  {:<12} |{bar}| +{:<9} {:<9} {}\n",
+                s.kind.label(),
+                fmt_ms(off),
+                fmt_ms(s.micros()),
+                attrs.join(" ")));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(seq_hint: u64, total_us: u64, outcome: &'static str) -> TraceRecord {
+        TraceRecord {
+            id: seq_hint,
+            seq: 0,
+            kernel: format!("k{seq_hint}"),
+            session: None,
+            outcome,
+            shard: "sim:knl".to_string(),
+            start_us: 0,
+            end_us: total_us,
+            spans: vec![Span {
+                kind: SpanKind::Execute,
+                start_us: 0,
+                end_us: total_us,
+                attrs: Vec::new(),
+            }],
+            attrs: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn guard_records_span_with_attrs_on_drop() {
+        let recorder = Arc::new(TraceRecorder::new(8, 2));
+        let trace = recorder.begin(1, "k".to_string(), Some(7));
+        {
+            let mut g = trace.span(SpanKind::Execute);
+            g.attr("shard", "sim:knl");
+            g.fault(FaultSite::CorruptOutput);
+            g.fail(&ServeError::Backend("boom".to_string()));
+        }
+        trace.finish(&Err(ServeError::Backend("boom".to_string())));
+        let records = recorder.records();
+        assert_eq!(records.len(), 1);
+        let r = &records[0];
+        assert_eq!(r.outcome, "backend");
+        assert_eq!(r.session, Some(7));
+        // synthesized queue span first, then the execute span
+        assert_eq!(r.spans[0].kind, SpanKind::Queue);
+        let exec = &r.spans[1];
+        assert_eq!(exec.kind, SpanKind::Execute);
+        assert!(exec.end_us >= exec.start_us);
+        assert_eq!(exec.attr("shard"), Some("sim:knl"));
+        assert_eq!(exec.attr("fault"), Some("corrupt-output"));
+        assert_eq!(exec.attr("error"), Some("backend"));
+    }
+
+    #[test]
+    fn finish_commits_exactly_once() {
+        let recorder = Arc::new(TraceRecorder::new(8, 0));
+        let trace = recorder.begin(1, "k".to_string(), None);
+        let err = Err(ServeError::Closed);
+        trace.finish(&err);
+        trace.finish(&err);
+        assert_eq!(recorder.committed(), 1);
+        assert_eq!(recorder.records().len(), 1);
+    }
+
+    #[test]
+    fn spans_after_commit_are_ignored() {
+        let recorder = Arc::new(TraceRecorder::new(8, 0));
+        let trace = recorder.begin(1, "k".to_string(), None);
+        trace.finish(&Err(ServeError::Closed));
+        let g = trace.span(SpanKind::Execute);
+        g.end();
+        trace.record(SpanKind::Batch, 0, Vec::new());
+        // queue synthesized at commit is the only span
+        assert_eq!(recorder.records()[0].spans.len(), 1);
+    }
+
+    #[test]
+    fn ring_overflow_drops_oldest_and_counts() {
+        let recorder = TraceRecorder::new(2, 0);
+        for i in 1..=5 {
+            recorder.commit(rec(i, 10 * i, "ok"));
+        }
+        assert_eq!(recorder.committed(), 5);
+        assert_eq!(recorder.dropped(), 3);
+        let ids: Vec<u64> = recorder.records().iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![4, 5]);
+    }
+
+    #[test]
+    fn exemplars_keep_slowest_and_failed_past_overflow() {
+        let recorder = TraceRecorder::new(2, 2);
+        recorder.commit(rec(1, 900, "ok"));
+        recorder.commit(rec(2, 50, "corrupted"));
+        recorder.commit(rec(3, 500, "ok"));
+        recorder.commit(rec(4, 10, "ok"));
+        recorder.commit(rec(5, 20, "ok"));
+        // ring holds only 4 and 5, but the slow exemplars kept the
+        // two slowest and the failed list kept the corrupted trace
+        let ex = recorder.exemplars();
+        let ids: Vec<u64> = ex.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![1, 3, 2]);
+        let all = recorder.all_records();
+        assert_eq!(all.len(), 5);
+        assert!(all.windows(2).all(|w| w[0].seq < w[1].seq));
+    }
+
+    #[test]
+    fn queue_span_covers_submission_to_first_stage() {
+        let recorder = Arc::new(TraceRecorder::new(4, 0));
+        let trace = recorder.begin(9, "k".to_string(), None);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let g = trace.span(SpanKind::Execute);
+        g.end();
+        trace.finish(&Err(ServeError::Cancelled));
+        let r = &recorder.records()[0];
+        let queue = &r.spans[0];
+        assert_eq!(queue.kind, SpanKind::Queue);
+        assert_eq!(queue.start_us, r.start_us);
+        assert_eq!(queue.end_us, r.spans[1].start_us);
+        assert!(queue.micros() >= 1000);
+    }
+
+    #[test]
+    fn phase_shares_fold_per_shard() {
+        let recorder = TraceRecorder::new(8, 0);
+        let mut r = rec(1, 100, "ok");
+        r.spans.push(Span {
+            kind: SpanKind::Retry(1),
+            start_us: 0,
+            end_us: 25,
+            attrs: Vec::new(),
+        });
+        r.spans.push(Span {
+            kind: SpanKind::Retry(2),
+            start_us: 25,
+            end_us: 50,
+            attrs: Vec::new(),
+        });
+        recorder.commit(r);
+        let shares = recorder.phase_shares();
+        assert_eq!(shares.len(), 1);
+        let (shard, phases) = &shares[0];
+        assert_eq!(shard, "sim:knl");
+        // execute 100us, retry#1 + retry#2 folded into retry 50us
+        assert_eq!(phases[0], ("execute", 100, 100.0 / 150.0));
+        assert_eq!(phases[1], ("retry", 50, 50.0 / 150.0));
+        let line = recorder.phase_summary();
+        assert!(line.contains("sim:knl"), "{line}");
+        assert!(line.contains("execute 67%"), "{line}");
+    }
+
+    #[test]
+    fn chrome_export_shape_and_escaping() {
+        let mut r = rec(3, 40, "ok");
+        r.kernel = "k\"quote\\".to_string();
+        r.session = Some(2);
+        r.spans[0].attrs.push(("note", "tab\there".to_string()));
+        let json = chrome_trace(&[r]);
+        assert!(json.starts_with("{\"traceEvents\":["));
+        assert!(json.ends_with("]}"));
+        assert!(json.contains("\"name\":\"request\""));
+        assert!(json.contains("\"name\":\"execute\""));
+        assert!(json.contains("\"tid\":3"));
+        assert!(json.contains("\"session\":\"2\""));
+        assert!(json.contains("k\\\"quote\\\\"));
+        assert!(json.contains("tab\\there"));
+    }
+
+    #[test]
+    fn waterfall_renders_slowest_first() {
+        let records = vec![rec(1, 100, "ok"), rec(2, 900, "corrupted")];
+        let text = waterfall(&records, 1);
+        assert!(text.contains("trace 2"), "{text}");
+        assert!(!text.contains("trace 1"), "{text}");
+        assert!(text.contains("execute"), "{text}");
+        assert!(text.contains("corrupted"), "{text}");
+    }
+
+    #[test]
+    fn chrome_export_round_trips_through_parse() {
+        let mut r1 = rec(7, 120, "corrupted");
+        r1.session = Some(3);
+        r1.attrs.push(("error", "corrupted".to_string()));
+        r1.spans[0].attrs.push(("attempt", "1".to_string()));
+        r1.spans.push(Span {
+            kind: SpanKind::Retry(1),
+            start_us: 40,
+            end_us: 120,
+            attrs: vec![("delay_us", "10".to_string())],
+        });
+        let r2 = rec(8, 60, "ok");
+        let json = chrome_trace(&[r1, r2]);
+        let back = parse_chrome_trace(&json).unwrap();
+        assert_eq!(back.len(), 2);
+        let b1 = &back[0];
+        assert_eq!((b1.id, b1.seq), (7, 1));
+        assert_eq!(b1.kernel, "k7");
+        assert_eq!(b1.session, Some(3));
+        assert_eq!(b1.outcome, "corrupted");
+        assert_eq!(b1.shard, "sim:knl");
+        assert_eq!(b1.total_us(), 120);
+        assert_eq!(b1.attrs, vec![("error", "corrupted".to_string())]);
+        assert_eq!(b1.spans.len(), 2);
+        assert_eq!(b1.spans[0].kind, SpanKind::Execute);
+        assert_eq!(b1.spans[0].attr("attempt"), Some("1"));
+        assert_eq!(b1.spans[1].kind, SpanKind::Retry(1));
+        assert_eq!(b1.spans[1].attr("delay_us"), Some("10"));
+        assert_eq!(back[1].outcome, "ok");
+        // the reloaded records render in the same waterfall
+        let text = waterfall(&back, 2);
+        assert!(text.contains("trace 7") && text.contains("retry#1"),
+                "{text}");
+    }
+
+    #[test]
+    fn parse_chrome_trace_rejects_garbage() {
+        assert!(parse_chrome_trace("not json").is_err());
+        assert!(parse_chrome_trace("{\"other\":1}").is_err());
+        // valid but foreign trace JSON: tolerated, yields no records
+        let foreign = "{\"traceEvents\":[{\"name\":\"gpu\",\
+                       \"ph\":\"X\",\"ts\":1,\"dur\":2,\"pid\":1,\
+                       \"tid\":9}]}";
+        assert_eq!(parse_chrome_trace(foreign).unwrap().len(), 0);
+    }
+
+    #[test]
+    fn span_kind_labels_round_trip() {
+        let kinds = [
+            SpanKind::Queue,
+            SpanKind::Route,
+            SpanKind::Batch,
+            SpanKind::Pack,
+            SpanKind::Execute,
+            SpanKind::Verify,
+            SpanKind::Retry(3),
+            SpanKind::Backoff,
+            SpanKind::CacheMem,
+            SpanKind::CacheDisk,
+            SpanKind::TuneExplore,
+        ];
+        for kind in kinds {
+            assert_eq!(SpanKind::parse(&kind.label()), Some(kind));
+        }
+        assert_eq!(SpanKind::parse("retry#7").unwrap(), SpanKind::Retry(7));
+        assert_eq!(SpanKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn error_variants_are_stable() {
+        assert_eq!(error_variant(&ServeError::Closed), "closed");
+        assert_eq!(error_variant(&ServeError::Cancelled), "cancelled");
+        assert_eq!(
+            error_variant(&ServeError::Backend(String::new())),
+            "backend"
+        );
+    }
+}

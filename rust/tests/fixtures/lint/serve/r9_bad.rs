@@ -1,0 +1,39 @@
+//! R9 span-discipline violations: span guards that drop immediately
+//! (a bare statement, a `let _` binding) and a span-opening error
+//! path that never attaches its failure to the trace.
+
+pub struct Trace;
+pub struct Guard;
+
+pub enum ServeError {
+    Backend(String),
+}
+
+impl Trace {
+    pub fn span(&self, _kind: u32) -> Guard {
+        Guard
+    }
+}
+
+impl Guard {
+    pub fn attr(&mut self, _k: &str, _v: &str) {}
+}
+
+pub fn unbound_guard(t: &Trace) {
+    t.span(1); // MARK-R9A-BARE: guard drops before the work it times
+    busy();
+}
+
+pub fn wildcard_guard(t: &Trace) {
+    let _ = t.span(2); // MARK-R9A-WILD: `_` drops immediately too
+    busy();
+}
+
+pub fn silent_error(t: &Trace) -> Result<(), ServeError> { // MARK-R9B
+    let mut g = t.span(3);
+    g.attr("shard", "s0");
+    busy();
+    Err(ServeError::Backend("boom".to_string()))
+}
+
+fn busy() {}

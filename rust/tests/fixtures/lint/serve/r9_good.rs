@@ -1,0 +1,44 @@
+//! R9-clean twins: every span guard is let-bound to a named variable
+//! (closure-wrapped openings included) and the span-opening error
+//! path attaches its failure to the trace before returning it.
+
+pub struct Trace;
+pub struct Guard;
+
+pub enum ServeError {
+    Backend(String),
+}
+
+impl Trace {
+    pub fn span(&self, _kind: u32) -> Guard {
+        Guard
+    }
+}
+
+impl Guard {
+    pub fn attr(&mut self, _k: &str, _v: &str) {}
+    pub fn fail(&mut self, _e: &ServeError) {}
+}
+
+pub fn named_guard(t: &Trace) {
+    let g = t.span(1);
+    busy();
+    drop(g);
+}
+
+pub fn closure_wrapped(t: Option<&Trace>) {
+    let mut g = t.map(|t| t.span(2));
+    if let Some(g) = g.as_mut() {
+        g.attr("shard", "s0");
+    }
+    busy();
+}
+
+pub fn attached_error(t: &Trace) -> Result<(), ServeError> {
+    let mut g = t.span(3);
+    let err = ServeError::Backend("boom".to_string());
+    g.fail(&err);
+    Err(err)
+}
+
+fn busy() {}

@@ -212,6 +212,43 @@ fn r8_bad_trips_good_passes() {
 }
 
 #[test]
+fn r9_bad_trips_good_passes() {
+    let bad = lint_fixture("serve/r9_bad.rs");
+    assert_eq!(bad.diagnostics.len(), 3, "{}", bad.render());
+    assert!(bad.diagnostics.iter().all(|d| d.rule == "R9"));
+    assert_eq!(bad.diagnostics[0].line,
+               marker_line("serve/r9_bad.rs", "MARK-R9A-BARE"),
+               "span must pin the unbound span call");
+    assert_eq!(bad.diagnostics[1].line,
+               marker_line("serve/r9_bad.rs", "MARK-R9A-WILD"),
+               "`let _` drops the guard just as fast");
+    assert_eq!(bad.diagnostics[2].line,
+               marker_line("serve/r9_bad.rs", "MARK-R9B"),
+               "span must pin the span-opening fn whose error path \
+                never reaches the trace");
+    assert!(bad.diagnostics[2].message.contains("silent_error"),
+            "{}", bad.diagnostics[2].message);
+    assert!(lint_fixture("serve/r9_good.rs").is_clean(),
+            "named guards (closure-wrapped included) and attached \
+             failures must pass");
+}
+
+#[test]
+fn r9_scope_is_path_based() {
+    // the same source outside serve//client//autotune is not R9's
+    // business — spans are a serve-plane contract
+    let root = fixtures_root();
+    let src = std::fs::read_to_string(root.join("serve/r9_bad.rs"))
+        .unwrap();
+    let out = root.join("r9_out_of_scope_tmp.rs");
+    std::fs::write(&out, src).unwrap();
+    let rep = lint_files(&root, &[out.clone()]);
+    std::fs::remove_file(&out).unwrap();
+    assert!(rep.expect("lints").is_clean(),
+            "R9 applies only under serve//client//autotune");
+}
+
+#[test]
 fn lexer_edges_stay_line_synced() {
     // raw string spanning a line boundary with `//` inside, a
     // backslash-newline continuation, and a nested block comment

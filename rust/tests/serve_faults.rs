@@ -12,7 +12,8 @@ use alpaka_rs::client::{NodeResult, Pipeline, Session, SessionConfig,
                         WindowPolicy};
 use alpaka_rs::serve::{FaultPlan, FaultSite, NativeConfig,
                        NativeEngineId, QuarantinePolicy, RetryPolicy,
-                       Serve, ServeConfig, ServeError, WorkItem};
+                       Serve, ServeConfig, ServeError, SpanKind,
+                       WorkItem};
 
 fn synthetic_cfg(ids: &[&str]) -> ServeConfig {
     ServeConfig {
@@ -221,6 +222,61 @@ fn corruption_trips_the_oracle_and_quarantines_the_artifact() {
     assert!(!serve.quarantined().is_empty(),
             "the breaker key is surfaced for attribution");
     serve.shutdown();
+}
+
+#[test]
+fn corrupted_request_trace_shows_verify_retry_execute_verify() {
+    let id = "gemm_n48_t16_e1_f64";
+    let mut cfg = synthetic_cfg(&[id]);
+    cfg.native_threads = 2;
+    cfg.cache_cap = 0; // every call executes and verifies
+    cfg.trace_cap = 8; // flight recorder on
+    cfg.fault_plan = Some(Arc::new(
+        FaultPlan::new(9).with_rate(FaultSite::CorruptOutput, 1.0)));
+    cfg.retry = RetryPolicy {
+        max_attempts: 2,
+        backoff: Duration::from_micros(50),
+        jitter: 0.0,
+    };
+    let serve = Serve::start(cfg).expect("serve starts");
+    let err = serve
+        .call(WorkItem::artifact_on(id, NativeEngineId::Threadpool))
+        .expect_err("rate-1.0 corruption outlasts the retry budget");
+    assert!(matches!(err, ServeError::Corrupted { .. }), "{err}");
+    let recorder = serve.trace_recorder().expect("recorder is on");
+    serve.shutdown();
+    let records = recorder.records();
+    assert_eq!(records.len(), 1, "one submitted request, one trace");
+    let r = &records[0];
+    assert_eq!(r.outcome, "corrupted");
+    assert!(r.failed());
+    // start-ordered span labels must contain the recovery shape:
+    // first attempt's verify trips, the retry gap follows, then the
+    // second attempt executes and verifies (and trips again)
+    let labels: Vec<String> =
+        r.spans.iter().map(|s| s.kind.label()).collect();
+    let want = ["verify", "retry#1", "execute", "verify"];
+    let mut at = 0;
+    for l in &labels {
+        if at < want.len() && l == want[at] {
+            at += 1;
+        }
+    }
+    assert_eq!(at, want.len(),
+               "expected the {want:?} subsequence in {labels:?}");
+    // the injected fault is pinned on the FIRST verify span
+    let first_verify = r.spans.iter()
+        .find(|s| s.kind == SpanKind::Verify)
+        .expect("verify span present");
+    assert_eq!(first_verify.attr("fault"), Some("corrupt-output"),
+               "injected-fault attribution: {labels:?}");
+    assert_eq!(first_verify.attr("ok"), Some("false"));
+    // both attempts carry attempt-numbered execute spans
+    let attempts: Vec<&str> = r.spans.iter()
+        .filter(|s| s.kind == SpanKind::Execute)
+        .filter_map(|s| s.attr("attempt"))
+        .collect();
+    assert_eq!(attempts, vec!["1", "2"], "{labels:?}");
 }
 
 #[test]

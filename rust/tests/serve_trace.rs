@@ -1,0 +1,156 @@
+//! Trace accounting gates: with the flight recorder on, every
+//! submitted request commits exactly one trace — across successes,
+//! abandoned reply handles, force-cancelled stragglers and the
+//! shutdown drain — ring overflow is counted (never silent), the
+//! summary carries the per-phase breakdown, and the Chrome-trace
+//! export round-trips through the `trace` subcommand's parser.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use alpaka_rs::client::{Pipeline, Session, SessionConfig,
+                        WindowPolicy};
+use alpaka_rs::serve::trace::parse_chrome_trace;
+use alpaka_rs::serve::{loadgen, FaultPlan, FaultSite, NativeConfig,
+                       Serve, ServeConfig, WorkItem};
+
+fn traced_cfg(ids: &[&str], cap: usize) -> ServeConfig {
+    ServeConfig {
+        cache_cap: 0, // every call executes: one trace per submission
+        trace_cap: cap,
+        native: Some(NativeConfig::Synthetic(
+            ids.iter().map(|s| s.to_string()).collect())),
+        ..ServeConfig::default()
+    }
+}
+
+#[test]
+fn every_submission_commits_exactly_one_trace_and_drops_are_counted() {
+    let n = 8usize;
+    let mut cfg = traced_cfg(&["dot_n16_f32"], 2);
+    cfg.fault_plan = Some(Arc::new(
+        FaultPlan::new(13)
+            .with_rate(FaultSite::StallReply, 0.25)
+            .with_stall(Duration::from_millis(150))));
+    let serve = Serve::start(cfg).expect("serve starts");
+    let session = Session::open(&serve, SessionConfig {
+        window: 4,
+        on_full: WindowPolicy::Block,
+        close_timeout: Some(Duration::from_millis(30)),
+    });
+    let mut keep = Vec::new();
+    for i in 0..n {
+        let h = session.submit(WorkItem::artifact("dot_n16_f32"))
+            .expect("window open");
+        if i % 2 == 0 {
+            // an abandoned reply still terminates its trace
+            drop(h);
+        } else {
+            keep.push(h);
+        }
+    }
+    // the close deadline force-accounts stalled stragglers cancelled;
+    // their traces commit when the shard's (stalled) reply lands in
+    // the shutdown drain below
+    let stats = session.close();
+    assert!(stats.fully_accounted(), "{stats:?}");
+    assert_eq!(stats.submitted as usize, n, "{stats:?}");
+    let recorder = serve.trace_recorder().expect("recorder is on");
+    serve.shutdown();
+    assert_eq!(recorder.committed() as usize, n,
+               "exactly one terminal commit per submission — no leak, \
+                no double-close");
+    assert_eq!(recorder.dropped() as usize, n - 2,
+               "ring overflow is counted, never silent");
+    let ring = recorder.records();
+    assert_eq!(ring.len(), 2, "ring keeps exactly trace_cap traces");
+    let all = recorder.all_records();
+    assert!(all.windows(2).all(|w| w[0].seq < w[1].seq),
+            "commit sequence is strictly monotone");
+    for r in &all {
+        assert!(!r.spans.is_empty(),
+                "every trace carries at least its queue span");
+        assert!(!r.outcome.is_empty());
+        assert!(r.end_us >= r.start_us);
+    }
+}
+
+#[test]
+fn summary_carries_phase_shares_and_trace_counts() {
+    let serve = Serve::start(traced_cfg(&["dot_n16_f32"], 8))
+        .expect("serve starts");
+    for _ in 0..3 {
+        serve.call(WorkItem::artifact("dot_n16_f32"))
+            .expect("synthetic call serves");
+    }
+    let summary = serve.summary();
+    assert!(summary.contains("trace phases:"),
+            "per-phase breakdown missing:\n{summary}");
+    assert!(summary.contains("execute"),
+            "execute share missing:\n{summary}");
+    assert!(summary.contains("traces: 3 committed, 0 dropped"),
+            "{summary}");
+    serve.shutdown();
+}
+
+#[test]
+fn chrome_export_file_round_trips_through_the_reload_parser() {
+    let dir = std::env::temp_dir().join(format!(
+        "alpaka-trace-export-{}", std::process::id()));
+    let _ = std::fs::create_dir_all(&dir);
+    let path = dir.join("trace.json");
+    let serve = Serve::start(traced_cfg(&["dot_n16_f32"], 8))
+        .expect("serve starts");
+    for _ in 0..2 {
+        serve.call(WorkItem::artifact("dot_n16_f32"))
+            .expect("synthetic call serves");
+    }
+    let recorder = serve.trace_recorder().expect("recorder is on");
+    serve.shutdown();
+    let n = loadgen::write_chrome_trace(&recorder, &path)
+        .expect("export writes");
+    assert_eq!(n, 2);
+    let text = std::fs::read_to_string(&path).expect("export exists");
+    let reloaded = parse_chrome_trace(&text).expect("export parses");
+    assert_eq!(reloaded.len(), 2);
+    for (a, b) in recorder.all_records().iter().zip(&reloaded) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.kernel, b.kernel);
+        assert_eq!(a.outcome, b.outcome);
+        assert_eq!(a.spans.len(), b.spans.len());
+    }
+    // the exemplar export is the bounded artifact the serve and
+    // chaos benches upload next to their BENCH_*.json
+    let ex_path = dir.join("TRACE_exemplars.json");
+    let m = loadgen::write_trace_exemplars(&recorder, &ex_path)
+        .expect("exemplar export writes");
+    assert!(m >= 1, "slow exemplars are retained");
+    let ex_text = std::fs::read_to_string(&ex_path).unwrap();
+    assert_eq!(parse_chrome_trace(&ex_text).expect("parses").len(), m);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn pipeline_nodes_share_one_trace_lane() {
+    let serve = Serve::start(traced_cfg(&["dot_n16_f32"], 8))
+        .expect("serve starts");
+    let session = Session::open(&serve, SessionConfig::default());
+    let mut p = Pipeline::new();
+    let a = p.node(WorkItem::artifact("dot_n16_f32"), &[]);
+    let b = p.node(WorkItem::artifact("dot_n16_f32"), &[a]);
+    let _c = p.node(WorkItem::artifact("dot_n16_f32"), &[b]);
+    let out = p.run(&session);
+    assert!(out.all_ok(), "{:?}", out.results);
+    let stats = session.close();
+    assert!(stats.fully_accounted(), "{stats:?}");
+    let recorder = serve.trace_recorder().expect("recorder is on");
+    serve.shutdown();
+    let records = recorder.records();
+    assert_eq!(records.len(), 3, "every node commits its own trace");
+    let lane = records[0].id;
+    assert!(records.iter().all(|r| r.id == lane),
+            "a DAG shares one pre-minted trace id — one export lane");
+    let mut seqs: Vec<u64> = records.iter().map(|r| r.seq).collect();
+    seqs.dedup();
+    assert_eq!(seqs.len(), 3, "three distinct commits, none doubled");
+}
