@@ -1,0 +1,126 @@
+"""Numpy-only deterministic model reference — the bit-exact twin of the
+rust strict tier (``rust/src/model``, ``rust/src/util/numerics.rs``).
+
+Platform ``tanh``/``exp`` are *not* correctly rounded — glibc, musl and
+numpy's SIMD loops disagree in the last ulp — so cross-language bit
+parity of the MLP's activation is impossible through libm. The
+activation here is therefore built from correctly-rounded IEEE-754
+basic operations only (``+ - * /``, ``floor``, ``copysign``, exact
+power-of-two scaling), in **exactly** the operation order of the rust
+implementation. Two programs performing the same sequence of correctly
+rounded f64 ops produce the same bits on every conforming platform;
+that is the entire parity argument, and ``mlp_parity.json`` is its
+executable proof (written by ``tests/test_model_parity.py``, asserted
+bit-for-bit by ``rust/tests/model_serve.rs``).
+
+Keep the constants and evaluation order in sync with
+``rust/src/util/numerics.rs`` / ``rust/src/gemm/verify.rs`` — any
+reordering on either side breaks the KAT (which is the point).
+
+No jax anywhere in this file: the reference must not depend on the
+lowering stack it verifies.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from . import prng
+
+# fdlibm's split of ln 2: n * LN2_HI is exact over the range-reduction
+# domain, LN2_HI + LN2_LO carries ~107 bits. Decimal literals parse to
+# the identical f64 bits as the rust constants (both sides round the
+# decimal correctly).
+LN2_HI = 6.93147180369123816490e-01
+LN2_LO = 1.90821492927058770002e-10
+INV_LN2 = 1.44269504088896338700e+00
+
+# 1/k! for k = 0..13 — factorials up to 13! are exact in f64, so each
+# quotient is correctly rounded, bit-identical to the rust array.
+INV_FACT = [1.0, 1.0, 1.0 / 2.0, 1.0 / 6.0, 1.0 / 24.0, 1.0 / 120.0,
+            1.0 / 720.0, 1.0 / 5040.0, 1.0 / 40320.0, 1.0 / 362880.0,
+            1.0 / 3628800.0, 1.0 / 39916800.0, 1.0 / 479001600.0,
+            1.0 / 6227020800.0]
+
+
+def det_exp_neg(y):
+    """Deterministic e^y for y in [-64, 0], elementwise over f64.
+
+    Range reduction y = n*ln2 + r then a degree-13 Taylor polynomial in
+    Horner form, scaled by an exact 2^n (ldexp) — op for op the rust
+    ``det_exp_neg``.
+    """
+    y = np.asarray(y, dtype=np.float64)
+    n = np.floor(y * INV_LN2 + 0.5)
+    r = (y - n * LN2_HI) - n * LN2_LO
+    p = np.full_like(y, INV_FACT[13])
+    for k in range(12, -1, -1):
+        p = p * r + INV_FACT[k]
+    return np.ldexp(p, n.astype(np.int32))
+
+
+def det_tanh(x):
+    """Deterministic tanh via (1 - e^(-2|x|)) / (1 + e^(-2|x|)),
+    sign restored by copysign, saturating to ±1 for |x| > 20 — the
+    rust ``det_tanh``, elementwise over f64."""
+    x = np.asarray(x, dtype=np.float64)
+    ax = np.abs(x)
+    # Saturated lanes are overridden below; clamp so det_exp_neg's
+    # argument stays in its reduced range on those lanes.
+    t = det_exp_neg(-2.0 * np.minimum(ax, 20.0))
+    core = (1.0 - t) / (1.0 + t)
+    out = np.where(ax > 20.0, 1.0, core)
+    out = np.copysign(out, x)
+    return np.where(np.isnan(x), x, out)
+
+
+def det_tanh_f32(x):
+    """f32 activation: evaluate in f64, round once — the rust
+    ``det_tanh_f32`` (and numpy's one-``astype`` is the same single
+    round-to-nearest-even)."""
+    x32 = np.asarray(x, dtype=np.float32)
+    return det_tanh(x32.astype(np.float64)).astype(np.float32)
+
+
+def gemm_strict_f32(a, b, bias, alpha, beta, activate):
+    """Strict-tier layer: out = act(alpha*(a@b) + beta*bias) with f32
+    accumulation in ascending-k order.
+
+    The k-loop performs, per element, one rounded f32 multiply then one
+    rounded f32 add per k step — identical to the rust reference's
+    ``orow[j] += aik * brow[j]`` — so the accumulated product is
+    bit-identical, not merely close. The epilogue is the tuned store
+    loop's expression order: ``alpha*acc + beta*bias`` (two rounded
+    multiplies, one rounded add), then the deterministic tanh on
+    activating layers.
+    """
+    a = np.asarray(a, dtype=np.float32)
+    b = np.asarray(b, dtype=np.float32)
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    acc = np.zeros((m, n), dtype=np.float32)
+    for kk in range(k):
+        acc += a[:, kk:kk + 1] * b[kk:kk + 1, :]
+    bias_row = np.asarray(bias, dtype=np.float32).reshape(1, n)
+    pre = np.float32(alpha) * acc + np.float32(beta) * bias_row
+    if activate:
+        return det_tanh_f32(pre)
+    return pre
+
+
+def mlp_forward_strict(model_id, batch, d_in, d_hidden, d_out,
+                       alpha=1.0, beta=1.0):
+    """Run the 2-layer MLP strictly from its seeded inputs (the aot.py
+    argument order x, w1, b1, w2, b2 → seed positions 0..4). Returns
+    every post-activation layer output, f32 — the values the rust
+    strict tier serves for the same manifest entry."""
+    seeds = [prng.seed_for(model_id, k) for k in range(5)]
+    x = prng.matrix(seeds[0], batch, d_in, "f32")
+    w1 = prng.matrix(seeds[1], d_in, d_hidden, "f32")
+    b1 = prng.matrix(seeds[2], d_hidden, 1, "f32").ravel()
+    w2 = prng.matrix(seeds[3], d_hidden, d_out, "f32")
+    b2 = prng.matrix(seeds[4], d_out, 1, "f32").ravel()
+    h = gemm_strict_f32(x, w1, b1, alpha, beta, activate=True)
+    out = gemm_strict_f32(h, w2, b2, alpha, beta, activate=False)
+    return [h, out]

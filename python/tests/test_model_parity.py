@@ -1,0 +1,144 @@
+"""Cross-language model KAT: the strict MLP tier, bit for bit.
+
+``compile/modelref.py`` is the numpy twin of the rust strict tier; this
+test pins its activation bit patterns and asserts the shared fixture
+``rust/tests/fixtures/mlp_parity.json`` (asserted from the other side
+by ``rust/tests/model_serve.rs``). The fixture stores IEEE-754 **bit
+patterns** (u32), never decimal floats, so the comparison is exact:
+
+* per layer, the u32-xor of every output element (order-independent,
+  catches any single-bit drift anywhere in the tensor), plus 64 evenly
+  spaced sampled elements compared individually (localizes a drift);
+* the det_tanh / det_exp_neg known-answer bits (mirrored in
+  ``rust/src/util/numerics.rs``).
+
+Regenerate after an *intentional* numeric change with::
+
+    python -m tests.test_model_parity
+
+If this test fails, the *python* side drifted; if the rust twin fails,
+the rust one did.
+"""
+
+import json
+import os
+
+import numpy as np
+
+from compile import modelref, prng
+
+_FIXTURE = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "..", "..",
+    "rust", "tests", "fixtures", "mlp_parity.json")
+
+# The demo model served by rust without a manifest
+# (rust/src/model demo_manifest_text) — also aot.py's MlpSpec default.
+_MODEL_ID = "mlp_b64_f32"
+_DIMS = dict(batch=64, d_in=256, d_hidden=128, d_out=64)
+_SAMPLES = 64
+
+# Bit pins mirrored by rust's known_answer_pins_cross_language_contract.
+_TANH_1_BITS = 0x3FE85EFAB514F394
+_TANH_HALF_BITS = 0x3FDD9353D7568AF3
+_EXP_NEG1_BITS = 0x3FD78B56362CEF38
+
+
+def _bits64(x):
+    return int(np.asarray(x, dtype=np.float64).view(np.uint64))
+
+
+def _layer_entry(out):
+    bits = out.ravel().view(np.uint32)
+    xor = 0
+    for b in bits.tolist():
+        xor ^= b
+    idx = np.linspace(0, bits.size - 1, _SAMPLES).astype(int)
+    return {
+        "shape": list(out.shape),
+        "xor_bits": xor,
+        "sample_idx": idx.tolist(),
+        "sample_bits": bits[idx].tolist(),
+    }
+
+
+def _payload():
+    outs = modelref.mlp_forward_strict(_MODEL_ID, **_DIMS)
+    return {
+        "comment": "Cross-language strict-MLP parity fixture. Generated "
+                   "by python/tests/test_model_parity.py from "
+                   "compile/modelref.py; asserted bit-exactly by "
+                   "rust/tests/model_serve.rs. Values are IEEE-754 bit "
+                   "patterns (u32 per f32 element, u64 for the "
+                   "activation pins).",
+        "model": _MODEL_ID,
+        "dims": _DIMS,
+        "seeds": [prng.seed_for(_MODEL_ID, k) for k in range(5)],
+        "tanh_pins": {
+            "tanh_1": _TANH_1_BITS,
+            "tanh_half": _TANH_HALF_BITS,
+            "exp_neg1": _EXP_NEG1_BITS,
+        },
+        "layers": [_layer_entry(o) for o in outs],
+    }
+
+
+def test_activation_bit_pins():
+    assert _bits64(modelref.det_tanh(1.0)) == _TANH_1_BITS
+    assert _bits64(modelref.det_tanh(0.5)) == _TANH_HALF_BITS
+    assert _bits64(modelref.det_exp_neg(-1.0)) == _EXP_NEG1_BITS
+    # round-once f32 path
+    t32 = modelref.det_tanh_f32(np.float32(1.0))
+    want = np.asarray(modelref.det_tanh(1.0)).astype(np.float32)
+    assert t32.view(np.uint32) == want.view(np.uint32)
+
+
+def test_unfused_activation_equals_fused_bitwise():
+    """act(preact) must equal the fused layer bitwise — the invariant
+    that lets the rust unfused tier split GEMM and activation into
+    separate plan nodes without changing a single output bit."""
+    seeds = [prng.seed_for(_MODEL_ID, k) for k in range(5)]
+    x = prng.matrix(seeds[0], _DIMS["batch"], _DIMS["d_in"], "f32")
+    w1 = prng.matrix(seeds[1], _DIMS["d_in"], _DIMS["d_hidden"], "f32")
+    b1 = prng.matrix(seeds[2], _DIMS["d_hidden"], 1, "f32").ravel()
+    fused = modelref.gemm_strict_f32(x, w1, b1, 1.0, 1.0, activate=True)
+    pre = modelref.gemm_strict_f32(x, w1, b1, 1.0, 1.0, activate=False)
+    np.testing.assert_array_equal(
+        modelref.det_tanh_f32(pre).view(np.uint32), fused.view(np.uint32))
+
+
+def test_parity_fixture_matches_bit_for_bit():
+    with open(_FIXTURE) as f:
+        fixture = json.load(f)
+    want = _payload()
+    assert fixture["model"] == want["model"]
+    assert fixture["seeds"] == want["seeds"]
+    assert fixture["tanh_pins"] == want["tanh_pins"]
+    assert len(fixture["layers"]) == len(want["layers"]) == 2
+    for got, exp in zip(fixture["layers"], want["layers"]):
+        assert got["shape"] == exp["shape"]
+        assert got["sample_idx"] == exp["sample_idx"]
+        assert got["sample_bits"] == exp["sample_bits"], \
+            "sampled strict-layer elements drifted"
+        assert got["xor_bits"] == exp["xor_bits"], \
+            "full-tensor xor drifted (some element outside the samples)"
+
+
+def test_tanh_is_odd_and_saturates():
+    x = np.linspace(-25.0, 25.0, 301)
+    y = modelref.det_tanh(x)
+    np.testing.assert_array_equal(
+        np.asarray(y).view(np.uint64),
+        np.asarray(-modelref.det_tanh(-x)).view(np.uint64))
+    assert float(modelref.det_tanh(21.0)) == 1.0
+    assert float(modelref.det_tanh(-21.0)) == -1.0
+    # close to libm (sanity anchor only — determinism is the contract)
+    np.testing.assert_allclose(y, np.tanh(x), rtol=1e-14, atol=1e-300)
+
+
+if __name__ == "__main__":
+    payload = _payload()
+    os.makedirs(os.path.dirname(_FIXTURE), exist_ok=True)
+    with open(_FIXTURE, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+    print(f"wrote {os.path.abspath(_FIXTURE)}")

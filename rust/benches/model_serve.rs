@@ -1,0 +1,215 @@
+//! Model-plane acceptance bench: whole-plan serving, fused vs unfused,
+//! healthy and under chaos.
+//!
+//! 1. **Fusion win**: the fused tier (epilogue folded into each GEMM
+//!    node's store loop) must sustain >= 1.1x the unfused tier's
+//!    *model throughput* (fully-served plans per second) — the unfused
+//!    lowering serves more nodes per plan (a separate activation node
+//!    per activating layer) and pays an extra client round trip plus
+//!    digest verification for each, which is exactly the overhead
+//!    fusion deletes.
+//! 2. **Chaos goodput**: the fused tier under ~5% injected faults
+//!    (backend errors at the rate, corruption and worker panics at
+//!    half of it, 4-attempt retry budget) must keep >= 0.7x its
+//!    fault-free goodput.
+//! 3. **Zero lost replies**: every node of every plan settles exactly
+//!    once, in every phase — `ok + failed + skipped == plans x nodes`.
+//! 4. **Exact per-node accounting**: the serve layer's own per-model
+//!    tallies (`ServeMetrics::model_tallies`) must agree with the
+//!    driver's counts — the two books are kept independently.
+//!
+//! Emits `BENCH_model.json`. Run with: `cargo bench --bench
+//! model_serve`.
+
+use std::process::ExitCode;
+use std::sync::Arc;
+
+use alpaka_rs::model::{self, ModelPlan, ModelSpec, Tier};
+use alpaka_rs::runtime::artifact::Manifest;
+use alpaka_rs::serve::{loadgen, NativeConfig, Serve, ServeConfig};
+
+const PLANS: usize = 60;
+const CHAOS_SEED: u64 = 4099;
+const FAULT_RATE: f64 = 0.05;
+const RETRIES: u32 = 4;
+const FUSION_FLOOR: f64 = 1.1;
+const GOODPUT_FLOOR: f64 = 0.7;
+
+/// Demo manifest in a scratch dir — a real `NativeConfig::Artifacts`
+/// source, so the bench exercises the same loading path as `serve
+/// --model`.
+fn demo_source() -> (NativeConfig, Arc<ModelSpec>) {
+    let dir = std::env::temp_dir()
+        .join(format!("alpaka-bench-model-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("scratch dir");
+    let text = model::demo_manifest_text();
+    std::fs::write(dir.join("manifest.json"), &text)
+        .expect("write demo manifest");
+    let m = Manifest::parse(&text, &dir).expect("demo manifest parses");
+    let spec = ModelSpec::from_meta(&m.artifacts[0])
+        .expect("demo model entry");
+    (NativeConfig::Artifacts(dir), Arc::new(spec))
+}
+
+/// No result cache: model throughput must measure real GEMM work (and
+/// chaos retries must re-execute, not re-hit).
+fn model_config(native: NativeConfig) -> ServeConfig {
+    ServeConfig {
+        front_cap: 64,
+        shard_cap: 64,
+        cache_cap: 0,
+        native: Some(native),
+        native_threads: 4,
+        ..ServeConfig::default()
+    }
+}
+
+/// Cross-check the driver's per-node books against the serve layer's
+/// own `ModelTally` for this model — gate 4.
+fn accounting_exact(serve: &Serve, model_id: &str,
+                    r: &loadgen::ModelLoadReport) -> bool {
+    let Some((_, t)) = serve.metrics.model_tallies().into_iter()
+        .find(|(id, _)| id == model_id)
+    else {
+        eprintln!("FAIL: no model tally for {model_id}");
+        return false;
+    };
+    let exact = t.submitted == r.plans as u64
+        && t.completed == r.plans_ok as u64
+        && t.failed == (r.plans - r.plans_ok) as u64
+        && t.nodes_ok == r.nodes_ok as u64
+        && t.nodes_failed == r.nodes_failed as u64
+        && t.nodes_skipped == r.nodes_skipped as u64;
+    if !exact {
+        eprintln!("FAIL: serve-side tally {t:?} disagrees with the \
+                   driver's books {r:?}");
+    }
+    exact
+}
+
+fn main() -> ExitCode {
+    let (native, spec) = demo_source();
+    let fused = ModelPlan::compile(&spec, Tier::Fused);
+    let unfused = ModelPlan::compile(&spec, Tier::Unfused);
+    println!("model_serve: {} ({} layers), {PLANS} plans/tier, fused \
+              {} nodes vs unfused {} nodes",
+             spec.id, spec.layers.len(), fused.len(), unfused.len());
+
+    let mut ok = true;
+
+    // ---- phase 1: fused vs unfused, fault-free ----------------------
+    // Fresh serve per tier so per-model tallies stay per-phase books.
+    let mut tier_reports = Vec::new();
+    for plan in [&fused, &unfused] {
+        let serve = match Serve::start(model_config(native.clone())) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("serve start failed: {e:#}");
+                return ExitCode::FAILURE;
+            }
+        };
+        let r = loadgen::run_model_loop(&serve, plan, PLANS, 0.0);
+        print!("{}", loadgen::model_report(&r, plan));
+        ok &= accounting_exact(&serve, &spec.id, &r);
+        serve.shutdown();
+        if !r.fully_accounted(plan.len()) {
+            eprintln!("FAIL: {} tier lost replies", plan.tier.label());
+            ok = false;
+        }
+        if r.plans_ok != PLANS {
+            eprintln!("FAIL: {} tier degraded fault-free: {:?}",
+                      plan.tier.label(), r.first_failure);
+            ok = false;
+        }
+        tier_reports.push(r);
+    }
+    let fused_pps = tier_reports[0].goodput_pps;
+    let unfused_pps = tier_reports[1].goodput_pps;
+    let fusion_ratio = fused_pps / unfused_pps.max(1e-9);
+    println!("fusion: {fused_pps:.1} plans/s fused vs \
+              {unfused_pps:.1} plans/s unfused ({fusion_ratio:.2}x)");
+
+    // ---- phase 2: the fused tier under ~5% injected faults ----------
+    let (chaos_cfg, plan) = loadgen::chaos_config(
+        model_config(native.clone()), CHAOS_SEED, FAULT_RATE, RETRIES,
+        0);
+    let chaos_serve = match Serve::start(chaos_cfg) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("chaos serve start failed: {e:#}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let chaos = loadgen::run_model_loop(&chaos_serve, &fused, PLANS,
+                                        0.0);
+    print!("{}", loadgen::model_report(&chaos, &fused));
+    print!("{}", loadgen::fault_report(&plan));
+    ok &= accounting_exact(&chaos_serve, &spec.id, &chaos);
+    let m = Arc::clone(&chaos_serve.metrics);
+    chaos_serve.shutdown();
+    let chaos_ratio = chaos.goodput_pps / fused_pps.max(1e-9);
+    println!("chaos: {:.1} plans/s under {FAULT_RATE} faults \
+              ({chaos_ratio:.2}x fault-free), {} retried, {} worker \
+              restarts", chaos.goodput_pps, m.requests_retried(),
+             m.worker_restarts());
+
+    // ---- BENCH_model.json (CI perf-trajectory artifact) -------------
+    let node_rows = |r: &loadgen::ModelLoadReport| -> String {
+        r.node_seconds.iter()
+            .map(|(id, (runs, secs))| format!(
+                "{{\"node\": \"{id}\", \"runs\": {runs}, \
+                 \"mean_ms\": {:.6}}}",
+                1e3 * secs / (*runs).max(1) as f64))
+            .collect::<Vec<_>>()
+            .join(", ")
+    };
+    let json = format!(
+        "{{\n  \"schema\": 1,\n  \"model\": \"{}\",\n  \
+         \"plans_per_tier\": {PLANS},\n  \
+         \"fused_nodes\": {},\n  \"unfused_nodes\": {},\n  \
+         \"fused_pps\": {fused_pps:.3},\n  \
+         \"unfused_pps\": {unfused_pps:.3},\n  \
+         \"fusion_ratio\": {fusion_ratio:.4},\n  \
+         \"chaos_seed\": {CHAOS_SEED},\n  \
+         \"fault_rate\": {FAULT_RATE},\n  \"retries\": {RETRIES},\n  \
+         \"chaos_pps\": {:.3},\n  \"chaos_ratio\": {chaos_ratio:.4},\n  \
+         \"chaos_nodes\": {{\"ok\": {}, \"failed\": {}, \
+         \"skipped\": {}}},\n  \
+         \"fused_node_ms\": [{}],\n  \"chaos_node_ms\": [{}]\n}}\n",
+        spec.id, fused.len(), unfused.len(), chaos.goodput_pps,
+        chaos.nodes_ok, chaos.nodes_failed, chaos.nodes_skipped,
+        node_rows(&tier_reports[0]), node_rows(&chaos));
+    match std::fs::write("BENCH_model.json", &json) {
+        Ok(()) => println!("wrote BENCH_model.json"),
+        Err(e) => {
+            eprintln!("FAIL: cannot write BENCH_model.json: {e}");
+            return ExitCode::FAILURE;
+        }
+    }
+
+    // ---- acceptance gates ------------------------------------------
+    if fusion_ratio < FUSION_FLOOR {
+        eprintln!("FAIL: fused tier serves {fused_pps:.1} plans/s, \
+                   only {fusion_ratio:.2}x the unfused \
+                   {unfused_pps:.1} plans/s (floor {FUSION_FLOOR})");
+        ok = false;
+    }
+    if !chaos.fully_accounted(fused.len()) {
+        eprintln!("FAIL: chaos run lost replies: {} + {} + {} != \
+                   {} x {}", chaos.nodes_ok, chaos.nodes_failed,
+                  chaos.nodes_skipped, chaos.plans, fused.len());
+        ok = false;
+    }
+    if chaos_ratio < GOODPUT_FLOOR {
+        eprintln!("FAIL: chaos goodput {:.1} plans/s is \
+                   {chaos_ratio:.2}x fault-free {fused_pps:.1} \
+                   (floor {GOODPUT_FLOOR})", chaos.goodput_pps);
+        ok = false;
+    }
+    if ok {
+        println!("model_serve: PASS");
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

@@ -51,13 +51,18 @@ pub use store::{TuneEntry, TuningStore, STORE_SCHEMA};
 /// the tuner shard (commits) and the native backends (selection).
 pub type SharedTuningStore = Arc<Mutex<TuningStore>>;
 
-/// Map a square-GEMM size onto its tuning bucket: the next power of
-/// two, clamped to `[16, 1024]` (the host fallback's size range). One
+/// Map a GEMM output width onto its tuning bucket: the next power of
+/// two, clamped to `[8, 1024]` (the host fallback's size range). One
 /// bucket's measured winner serves every nearby shape, so the store
 /// stays small and a cold start tunes O(log N) buckets, not one per
-/// distinct N.
+/// distinct N. The floor is 8 (was 16) so the model plane's batched
+/// small-GEMM layers (n ≤ 64, down to narrow heads) select from
+/// buckets of their own instead of inheriting the 16-bucket winner —
+/// purely additive: every previously warmed store entry keys on the
+/// same bucket it always did (no schema bump), the 8-bucket simply
+/// starts cold.
 pub fn bucket_for(n: u64) -> u64 {
-    n.max(1).next_power_of_two().clamp(16, 1024)
+    n.max(1).next_power_of_two().clamp(8, 1024)
 }
 
 #[cfg(test)]
@@ -66,9 +71,13 @@ mod tests {
 
     #[test]
     fn buckets_are_pow2_and_clamped() {
-        assert_eq!(bucket_for(1), 16);
+        assert_eq!(bucket_for(1), 8);
+        assert_eq!(bucket_for(8), 8);
+        assert_eq!(bucket_for(9), 16, "boundary: above the floor");
         assert_eq!(bucket_for(16), 16);
         assert_eq!(bucket_for(17), 32);
+        assert_eq!(bucket_for(64), 64, "model-layer widths get their \
+                                        own bucket");
         assert_eq!(bucket_for(100), 128);
         assert_eq!(bucket_for(512), 512);
         assert_eq!(bucket_for(513), 1024);
@@ -78,7 +87,7 @@ mod tests {
     #[test]
     fn bucket_always_covers_n_within_range() {
         for n in 1..=1024u64 {
-            assert!(bucket_for(n) >= n.max(16).min(1024));
+            assert!(bucket_for(n) >= n.max(8).min(1024));
         }
     }
 }

@@ -102,11 +102,22 @@ struct Node {
 #[derive(Default)]
 pub struct Pipeline {
     nodes: Vec<Node>,
+    trace_id: Option<u64>,
 }
 
 impl Pipeline {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Pre-assign the DAG's shared trace id (builder style). Callers
+    /// that open their own enclosing trace — the model plane's
+    /// `model:<id>` root — pass its id here so every node commits
+    /// under the *same* lane; [`Pipeline::run`] mints a fresh id from
+    /// the session only when none was assigned.
+    pub fn with_trace(mut self, id: u64) -> Self {
+        self.trace_id = Some(id);
+        self
     }
 
     pub fn len(&self) -> usize {
@@ -145,8 +156,8 @@ impl Pipeline {
         // One trace id for the whole DAG (when the flight recorder is
         // on): every node's record lands on the same Chrome-trace
         // lane, so the pipeline reads as one request tree instead of
-        // n unrelated traces.
-        let trace_id = session.mint_trace_id();
+        // n unrelated traces. A pre-assigned id (model plane) wins.
+        let trace_id = self.trace_id.or_else(|| session.mint_trace_id());
         let mut results: Vec<Option<NodeResult>> =
             (0..n).map(|_| None).collect();
         let mut indeg: Vec<usize> =

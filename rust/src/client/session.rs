@@ -36,10 +36,14 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
 
+use crate::model::{ModelOutcome, ModelPlan};
 use crate::serve::metrics::SessionOutcome;
-use crate::serve::{Serve, ServeError, ServeResult, WorkItem};
+use crate::serve::{CacheSource, NativeEngine, NativeEngineId, Output,
+                   Serve, ServeError, ServeReply, ServeResult,
+                   SpanKind, WorkItem};
 
 use super::future::{pair, Delivery, ReplyHandle};
+use super::pipeline::{NodeId, NodeResult, Pipeline};
 
 /// Monotonic process-wide session ids (1-based so 0 can mean "no
 /// session" in logs).
@@ -333,6 +337,96 @@ impl<'s> Session<'s> {
                   -> Result<ReplyHandle<ServeResult>, SessionError> {
         self.acquire_slot(self.on_full)?;
         Ok(self.submit_acquired(item))
+    }
+
+    /// Serve a compiled [`ModelPlan`] end to end: every layer node
+    /// becomes a [`Pipeline`] node (dependency-chained, so retry and
+    /// quarantine apply per node and a failed layer skips its
+    /// descendants with the root cause), all under **one** trace id
+    /// with a `model:<model id>` root envelope. The per-model tallies
+    /// (`ServeMetrics::model_tallies`) account the plan and its nodes
+    /// exactly: ok + failed + skipped = plan length.
+    pub fn submit_model(&self, plan: &ModelPlan) -> ModelOutcome {
+        let started = Instant::now();
+        let model = plan.spec.id.clone();
+        let metrics = &self.serve.metrics;
+        metrics.model_submitted(&model);
+        // One id for the whole plan: the root envelope and every
+        // layer node commit under the same trace lane.
+        let trace_id = self.serve.mint_trace_id();
+        let root = match (self.serve.trace_recorder(), trace_id) {
+            (Some(rec), Some(id)) => Some(rec.begin(
+                id, format!("model:{model}"), Some(self.id()))),
+            _ => None,
+        };
+        if let Some(t) = &root {
+            t.attach("tier", plan.tier.label());
+            t.attach("nodes", plan.len().to_string());
+        }
+        let mut p = Pipeline::new();
+        if let Some(id) = trace_id {
+            p = p.with_trace(id);
+        }
+        let mut handles: Vec<NodeId> = Vec::with_capacity(plan.len());
+        for node in &plan.nodes {
+            let deps: Vec<NodeId> =
+                node.deps.iter().map(|&d| handles[d]).collect();
+            let item = WorkItem::artifact_on(
+                node.artifact_id.clone(), NativeEngineId::Threadpool);
+            handles.push(p.node(item, &deps));
+        }
+        let run = root.as_ref().map(|t| t.span(SpanKind::Model));
+        let out = p.run(self);
+        drop(run);
+        let wall = started.elapsed().as_secs_f64();
+        let results: Vec<(String, NodeResult)> = plan.nodes.iter()
+            .map(|n| n.artifact_id.clone())
+            .zip(out.results)
+            .collect();
+        let (mut ok, mut failed, mut skipped) = (0u64, 0u64, 0u64);
+        let mut first_err: Option<ServeError> = None;
+        for (_, r) in &results {
+            match r {
+                NodeResult::Ok(_) => ok += 1,
+                NodeResult::Failed(e) => {
+                    failed += 1;
+                    if first_err.is_none() {
+                        first_err = Some(e.clone());
+                    }
+                }
+                NodeResult::Skipped { .. } => skipped += 1,
+            }
+        }
+        metrics.model_completed(&model, failed + skipped == 0, ok,
+                                failed, skipped);
+        if let Some(t) = &root {
+            // The envelope commits with the plan's aggregate verdict:
+            // the root cause when any node failed (cloned from that
+            // node's own settlement, so the envelope names the same
+            // error its descendants saw), a synthesized model-level
+            // reply otherwise.
+            match &first_err {
+                Some(e) => t.finish(&Err(e.clone())),
+                None => t.finish(&Ok(ServeReply {
+                    shard: "model".to_string(),
+                    output: Output::Native {
+                        artifact_id: model.clone(),
+                        seconds: wall,
+                        gflops: None,
+                        engine: NativeEngine::ThreadpoolGemm,
+                        kernel: format!("plan+{}", plan.tier.label()),
+                    },
+                    batch_size: plan.len(),
+                    queue_seconds: 0.0,
+                    cache_hit: false,
+                    cache_src: CacheSource::Miss,
+                    worker: 0,
+                    attempts: 1,
+                })),
+            }
+        }
+        ModelOutcome { model, tier: plan.tier, trace_id, results,
+                       wall_seconds: wall }
     }
 
     /// [`Session::submit`] that always blocks on a full window,

@@ -37,6 +37,7 @@
 
 use super::tiling::TilingPlan;
 use super::workload::Precision;
+use crate::util::numerics;
 
 /// Hard cap on the register-tile height ([`KernelParams::mr`]).
 pub const MAX_MR: usize = 8;
@@ -168,6 +169,12 @@ pub trait Element:
     fn micro(kb: usize, mr: usize, nr: usize, mr_eff: usize,
              nr_eff: usize, apanel: &[Self], bpanel: &[Self],
              out: &mut [Self], off: usize, stride: usize);
+
+    /// The model plane's deterministic activation
+    /// ([`crate::util::numerics::det_tanh`]): f32 evaluates in f64 and
+    /// rounds once, so both precisions share the python reference
+    /// bit-for-bit.
+    fn det_tanh(self) -> Self;
 }
 
 impl Element for f32 {
@@ -187,6 +194,10 @@ impl Element for f32 {
         micro_generic::<f32>(kb, mr, nr, mr_eff, nr_eff, apanel, bpanel,
                              out, off, stride);
     }
+
+    fn det_tanh(self) -> Self {
+        numerics::det_tanh_f32(self)
+    }
 }
 
 impl Element for f64 {
@@ -205,6 +216,10 @@ impl Element for f64 {
         }
         micro_generic::<f64>(kb, mr, nr, mr_eff, nr_eff, apanel, bpanel,
                              out, off, stride);
+    }
+
+    fn det_tanh(self) -> Self {
+        numerics::det_tanh(self)
     }
 }
 
@@ -245,8 +260,10 @@ mod x86 {
 /// Pack the `mb`×`kb` block of A at (`row_base`, `k0`) into `mr`-tall
 /// k-major panels: panel `p` holds rows `[p·mr, (p+1)·mr)` of the
 /// block, laid out as `kb` groups of `mr` consecutive values (one group
-/// per k step). Short panels are zero-padded to `mr`.
-fn pack_a<T: Element>(a: &[T], n: usize, row_base: usize, mb: usize,
+/// per k step). Short panels are zero-padded to `mr`. `lda` is A's row
+/// stride (= its column count; `n` for the square path, `k` for the
+/// rectangular model-layer path).
+fn pack_a<T: Element>(a: &[T], lda: usize, row_base: usize, mb: usize,
                       k0: usize, kb: usize, mr: usize, buf: &mut Vec<T>) {
     let panels = mb.div_ceil(mr);
     buf.clear();
@@ -255,8 +272,8 @@ fn pack_a<T: Element>(a: &[T], n: usize, row_base: usize, mb: usize,
         let dst = &mut buf[pi * kb * mr..(pi + 1) * kb * mr];
         let rows = (mb - ir).min(mr);
         for r in 0..rows {
-            let src = &a[(row_base + ir + r) * n + k0
-                         ..(row_base + ir + r) * n + k0 + kb];
+            let src = &a[(row_base + ir + r) * lda + k0
+                         ..(row_base + ir + r) * lda + k0 + kb];
             for k in 0..kb {
                 dst[k * mr + r] = src[k];
             }
@@ -267,8 +284,9 @@ fn pack_a<T: Element>(a: &[T], n: usize, row_base: usize, mb: usize,
 /// Pack the `kb`×`nb` block of B at (`k0`, `j0`) into `nr`-wide k-major
 /// panels: panel `p` holds columns `[p·nr, (p+1)·nr)`, laid out as `kb`
 /// groups of `nr` consecutive values. Short panels are zero-padded.
-fn pack_b<T: Element>(b: &[T], n: usize, k0: usize, kb: usize, j0: usize,
-                      nb: usize, nr: usize, buf: &mut Vec<T>) {
+/// `ldb` is B's row stride (its column count, `n` in both paths).
+fn pack_b<T: Element>(b: &[T], ldb: usize, k0: usize, kb: usize,
+                      j0: usize, nb: usize, nr: usize, buf: &mut Vec<T>) {
     let panels = nb.div_ceil(nr);
     buf.clear();
     buf.resize(panels * kb * nr, T::ZERO);
@@ -276,8 +294,8 @@ fn pack_b<T: Element>(b: &[T], n: usize, k0: usize, kb: usize, j0: usize,
         let dst = &mut buf[pi * kb * nr..(pi + 1) * kb * nr];
         let cols = (nb - jr).min(nr);
         for k in 0..kb {
-            let src = &b[(k0 + k) * n + j0 + jr
-                         ..(k0 + k) * n + j0 + jr + cols];
+            let src = &b[(k0 + k) * ldb + j0 + jr
+                         ..(k0 + k) * ldb + j0 + jr + cols];
             for c2 in 0..cols {
                 dst[k * nr + c2] = src[c2];
             }
@@ -386,20 +404,54 @@ fn micro_generic<T: Element>(kb: usize, mr: usize, nr: usize,
                stride);
 }
 
-/// Generic packed/blocked GEMM core over rows `[row0, row1)`:
-/// `alpha * a @ b + beta * c`, row-major square `n`×`n` inputs, same
-/// signature contract as [`super::verify::gemm_f64_rows`].
-fn gemm_tuned_rows_impl<T: Element>(n: usize, row0: usize, row1: usize,
-                                    a: &[T], b: &[T], c: &[T], alpha: T,
-                                    beta: T, params: &KernelParams)
-                                    -> Vec<T> {
-    assert_eq!(a.len(), n * n);
-    assert_eq!(b.len(), n * n);
-    assert_eq!(c.len(), n * n);
-    assert!(row0 <= row1 && row1 <= n, "row range [{row0},{row1}) of {n}");
+/// Fused per-element epilogue for the rectangular model-layer entry
+/// points ([`gemm_f32_tuned_rect_rows`] / [`gemm_f64_tuned_rect_rows`]):
+/// applied in the store loop right after the k-accumulation, so a fused
+/// MLP layer is one kernel invocation instead of GEMM + two elementwise
+/// passes. The bias vector has length `n` and broadcasts over rows —
+/// the python MLP's `broadcast_to(b, (batch, n))` C operand. The
+/// activation is the deterministic [`crate::util::numerics::det_tanh`],
+/// so fused results stay bit-identical to the strict (unfused) tier and
+/// to the python reference.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Epilogue<T> {
+    /// `out = alpha * acc` — plain scaled product, no bias term.
+    None,
+    /// `out = alpha * acc + beta * bias[col]`.
+    Bias(Vec<T>),
+    /// `out = det_tanh(alpha * acc + beta * bias[col])` — the MLP
+    /// hidden-layer shape.
+    BiasTanh(Vec<T>),
+}
+
+impl<T> Epilogue<T> {
+    /// Compact label for kernel tags and bench reports.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Epilogue::None => "none",
+            Epilogue::Bias(_) => "bias",
+            Epilogue::BiasTanh(_) => "bias+tanh",
+        }
+    }
+}
+
+/// Rectangular packed/blocked accumulation core over rows
+/// `[row0, row1)` of the `m`×`n` product of `a` (`m`×`k`, row-major)
+/// and `b` (`k`×`n`, row-major): returns the raw `rows`×`n` running
+/// sums with **no** epilogue applied. Products accumulate in ascending
+/// `k` order per element — the bit-exactness contract in the module
+/// docs — so every caller-applied epilogue sees exactly the reference
+/// accumulation.
+fn gemm_acc_rows_impl<T: Element>(m: usize, n: usize, k: usize,
+                                  row0: usize, row1: usize, a: &[T],
+                                  b: &[T], params: &KernelParams)
+                                  -> Vec<T> {
+    assert_eq!(a.len(), m * k, "a is {m}x{k}");
+    assert_eq!(b.len(), k * n, "b is {k}x{n}");
+    assert!(row0 <= row1 && row1 <= m, "row range [{row0},{row1}) of {m}");
     let rows = row1 - row0;
     let mut out = vec![T::ZERO; rows * n];
-    let p = params.sanitized(n);
+    let p = params.sanitized(n.max(m).max(k));
     let mut apack: Vec<T> = Vec::new();
     let mut bpack: Vec<T> = Vec::new();
     for j0 in (0..n).step_by(p.nc) {
@@ -407,12 +459,12 @@ fn gemm_tuned_rows_impl<T: Element>(n: usize, row0: usize, row1: usize,
         // k-blocks ascend inside the column panel, so every output
         // element accumulates its products in ascending k order — the
         // bit-exactness contract in the module docs.
-        for k0 in (0..n).step_by(p.kc) {
-            let kb = (n - k0).min(p.kc);
+        for k0 in (0..k).step_by(p.kc) {
+            let kb = (k - k0).min(p.kc);
             pack_b(b, n, k0, kb, j0, nb, p.nr, &mut bpack);
             for i0 in (0..rows).step_by(p.mc) {
                 let mb = (rows - i0).min(p.mc);
-                pack_a(a, n, row0 + i0, mb, k0, kb, p.mr, &mut apack);
+                pack_a(a, k, row0 + i0, mb, k0, kb, p.mr, &mut apack);
                 for (pj, jr) in (0..nb).step_by(p.nr).enumerate() {
                     let nr_eff = (nb - jr).min(p.nr);
                     let bpanel = &bpack[pj * kb * p.nr
@@ -429,11 +481,85 @@ fn gemm_tuned_rows_impl<T: Element>(n: usize, row0: usize, row1: usize,
             }
         }
     }
+    out
+}
+
+/// Generic packed/blocked GEMM core over rows `[row0, row1)`:
+/// `alpha * a @ b + beta * c`, row-major square `n`×`n` inputs, same
+/// signature contract as [`super::verify::gemm_f64_rows`].
+fn gemm_tuned_rows_impl<T: Element>(n: usize, row0: usize, row1: usize,
+                                    a: &[T], b: &[T], c: &[T], alpha: T,
+                                    beta: T, params: &KernelParams)
+                                    -> Vec<T> {
+    assert_eq!(c.len(), n * n);
+    let rows = row1 - row0;
+    let mut out = gemm_acc_rows_impl(n, n, n, row0, row1, a, b, params);
     // identical epilogue expression to the reference
     for i in 0..rows * n {
         out[i] = alpha * out[i] + beta * c[row0 * n + i];
     }
     out
+}
+
+/// Rectangular tuned GEMM with a fused epilogue over rows
+/// `[row0, row1)` — the model plane's layer primitive. Same IEEE op
+/// sequence per element as the strict reference
+/// ([`super::verify::gemm_f32_rect_rows`] twins): ascending-k
+/// accumulation, then `alpha * acc (+ beta * bias[col])`, then the
+/// deterministic activation — so fused and strict tiers are
+/// bit-identical.
+#[allow(clippy::too_many_arguments)]
+fn gemm_tuned_rect_impl<T: Element>(m: usize, n: usize, k: usize,
+                                    row0: usize, row1: usize, a: &[T],
+                                    b: &[T], alpha: T, beta: T,
+                                    epilogue: &Epilogue<T>,
+                                    params: &KernelParams) -> Vec<T> {
+    let rows = row1 - row0;
+    let mut out = gemm_acc_rows_impl(m, n, k, row0, row1, a, b, params);
+    match epilogue {
+        Epilogue::None => {
+            for v in out.iter_mut() {
+                *v = alpha * *v;
+            }
+        }
+        Epilogue::Bias(bias) => {
+            assert_eq!(bias.len(), n, "bias length is the column count");
+            for i in 0..rows * n {
+                out[i] = alpha * out[i] + beta * bias[i % n];
+            }
+        }
+        Epilogue::BiasTanh(bias) => {
+            assert_eq!(bias.len(), n, "bias length is the column count");
+            for i in 0..rows * n {
+                out[i] = (alpha * out[i] + beta * bias[i % n]).det_tanh();
+            }
+        }
+    }
+    out
+}
+
+/// Rows `[row0, row1)` of the rectangular tuned f32 GEMM with fused
+/// epilogue: `a` is `m`×`k`, `b` is `k`×`n`, output rows are `n` wide.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_f32_tuned_rect_rows(m: usize, n: usize, k: usize,
+                                row0: usize, row1: usize, a: &[f32],
+                                b: &[f32], alpha: f32, beta: f32,
+                                epilogue: &Epilogue<f32>,
+                                params: &KernelParams) -> Vec<f32> {
+    gemm_tuned_rect_impl(m, n, k, row0, row1, a, b, alpha, beta,
+                         epilogue, params)
+}
+
+/// Rows `[row0, row1)` of the rectangular tuned f64 GEMM with fused
+/// epilogue.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_f64_tuned_rect_rows(m: usize, n: usize, k: usize,
+                                row0: usize, row1: usize, a: &[f64],
+                                b: &[f64], alpha: f64, beta: f64,
+                                epilogue: &Epilogue<f64>,
+                                params: &KernelParams) -> Vec<f64> {
+    gemm_tuned_rect_impl(m, n, k, row0, row1, a, b, alpha, beta,
+                         epilogue, params)
 }
 
 /// Rows `[row0, row1)` of the tuned f64 GEMM — the panel-block primitive
@@ -619,6 +745,72 @@ mod tests {
             assert_prop(dg.matches(&dw, 1e-4).is_ok(),
                         "tuned digest within f32 rtol");
         });
+    }
+
+    #[test]
+    fn rect_matches_naive_reference_bitwise() {
+        // Rectangular shapes (the MLP layer shapes among them) against
+        // the strict naive twin: same op sequence ⇒ same bits, every
+        // epilogue variant, f32 and f64.
+        for (m, n, k) in [(64, 128, 256), (64, 64, 128), (5, 3, 7),
+                          (1, 1, 1), (17, 9, 33)] {
+            let a = prng::matrix_f64(11, m, k);
+            let b = prng::matrix_f64(12, k, n);
+            let bias = prng::matrix_f64(13, n, 1);
+            let p = KernelParams::for_n(n.max(m).max(k));
+            for epi in [Epilogue::None, Epilogue::Bias(bias.clone()),
+                        Epilogue::BiasTanh(bias.clone())] {
+                let want = verify::gemm_f64_rect_rows(m, n, k, 0, m, &a,
+                                                      &b, 1.25, -0.5,
+                                                      &epi);
+                let got = gemm_f64_tuned_rect_rows(m, n, k, 0, m, &a,
+                                                   &b, 1.25, -0.5, &epi,
+                                                   &p);
+                assert_eq!(got, want, "f64 {m}x{n}x{k} {}", epi.label());
+            }
+            let a32 = prng::matrix_f32(11, m, k);
+            let b32 = prng::matrix_f32(12, k, n);
+            let bias32 = prng::matrix_f32(13, n, 1);
+            for epi in [Epilogue::None, Epilogue::Bias(bias32.clone()),
+                        Epilogue::BiasTanh(bias32.clone())] {
+                let want = verify::gemm_f32_rect_rows(m, n, k, 0, m,
+                                                      &a32, &b32, 1.0,
+                                                      1.0, &epi);
+                let got = gemm_f32_tuned_rect_rows(m, n, k, 0, m, &a32,
+                                                   &b32, 1.0, 1.0, &epi,
+                                                   &p);
+                assert_eq!(got, want, "f32 {m}x{n}x{k} {}", epi.label());
+            }
+        }
+    }
+
+    #[test]
+    fn rect_row_partition_assembles_to_full() {
+        // The threadpool shard fans model layers out in row chunks:
+        // any partition must reassemble bitwise, epilogue included.
+        let (m, n, k) = (64, 128, 256);
+        let a = prng::matrix_f32(21, m, k);
+        let b = prng::matrix_f32(22, k, n);
+        let bias = prng::matrix_f32(23, n, 1);
+        let epi = Epilogue::BiasTanh(bias);
+        let p = KernelParams { mc: 16, nc: 32, kc: 48, mr: 4, nr: 8 };
+        let full = gemm_f32_tuned_rect_rows(m, n, k, 0, m, &a, &b, 1.0,
+                                            1.0, &epi, &p);
+        let mut tiled = Vec::new();
+        for (r0, r1) in [(0, 16), (16, 17), (17, 48), (48, 64)] {
+            tiled.extend(gemm_f32_tuned_rect_rows(m, n, k, r0, r1, &a,
+                                                  &b, 1.0, 1.0, &epi,
+                                                  &p));
+        }
+        assert_eq!(tiled, full);
+    }
+
+    #[test]
+    fn epilogue_labels_are_stable() {
+        assert_eq!(Epilogue::<f32>::None.label(), "none");
+        assert_eq!(Epilogue::Bias(vec![0.0f32]).label(), "bias");
+        assert_eq!(Epilogue::BiasTanh(vec![0.0f64]).label(),
+                   "bias+tanh");
     }
 
     #[test]

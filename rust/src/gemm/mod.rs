@@ -7,7 +7,7 @@ pub mod tiling;
 pub mod verify;
 pub mod workload;
 
-pub use kernel::KernelParams;
+pub use kernel::{Epilogue, KernelParams};
 pub use metrics::{cache_req_bytes, compute_mem_ratio, flops, gflops,
                   mem_ops};
 pub use tiling::TilingPlan;

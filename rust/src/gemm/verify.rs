@@ -12,7 +12,7 @@
 //! `Digest` mirrors the statistics `python/compile/aot.py` records in
 //! the manifest.
 
-use super::kernel::{self, KernelParams};
+use super::kernel::{self, Epilogue, KernelParams};
 use crate::util::stats::relative_close;
 
 /// Rows `[row0, row1)` of `alpha * a @ b + beta * c` over row-major f64
@@ -87,6 +87,110 @@ pub fn gemm_f32(n: usize, a: &[f32], b: &[f32], c: &[f32], alpha: f32,
                 beta: f32) -> Vec<f32> {
     kernel::gemm_f32_tuned(n, a, b, c, alpha, beta,
                            &KernelParams::for_n(n))
+}
+
+/// Naive rectangular reference with fused-epilogue semantics — the
+/// model plane's *strict tier* and the oracle the fused tuned path is
+/// digest-verified against. Rows `[row0, row1)` of the `m`×`n` product
+/// of `a` (`m`×`k`) and `b` (`k`×`n`), ascending-k accumulation, then
+/// the [`Epilogue`] applied per element in the same expression order as
+/// the tuned kernel's store loop — bit-identical by construction.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_f64_rect_rows(m: usize, n: usize, k: usize, row0: usize,
+                          row1: usize, a: &[f64], b: &[f64], alpha: f64,
+                          beta: f64, epilogue: &Epilogue<f64>)
+                          -> Vec<f64> {
+    assert_eq!(a.len(), m * k, "a is {m}x{k}");
+    assert_eq!(b.len(), k * n, "b is {k}x{n}");
+    assert!(row0 <= row1 && row1 <= m, "row range [{row0},{row1}) of {m}");
+    let rows = row1 - row0;
+    let mut out = vec![0.0f64; rows * n];
+    for i in 0..rows {
+        for kk in 0..k {
+            let aik = a[(row0 + i) * k + kk];
+            let (orow, brow) = (&mut out[i * n..(i + 1) * n],
+                                &b[kk * n..(kk + 1) * n]);
+            for j in 0..n {
+                orow[j] += aik * brow[j];
+            }
+        }
+    }
+    apply_epilogue_f64(&mut out, n, alpha, beta, epilogue);
+    out
+}
+
+/// f32 twin of [`gemm_f64_rect_rows`] (f32 accumulation, activation
+/// evaluated in f64 and rounded once — same as the tuned path).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_f32_rect_rows(m: usize, n: usize, k: usize, row0: usize,
+                          row1: usize, a: &[f32], b: &[f32], alpha: f32,
+                          beta: f32, epilogue: &Epilogue<f32>)
+                          -> Vec<f32> {
+    assert_eq!(a.len(), m * k, "a is {m}x{k}");
+    assert_eq!(b.len(), k * n, "b is {k}x{n}");
+    assert!(row0 <= row1 && row1 <= m, "row range [{row0},{row1}) of {m}");
+    let rows = row1 - row0;
+    let mut out = vec![0.0f32; rows * n];
+    for i in 0..rows {
+        for kk in 0..k {
+            let aik = a[(row0 + i) * k + kk];
+            let (orow, brow) = (&mut out[i * n..(i + 1) * n],
+                                &b[kk * n..(kk + 1) * n]);
+            for j in 0..n {
+                orow[j] += aik * brow[j];
+            }
+        }
+    }
+    apply_epilogue_f32(&mut out, n, alpha, beta, epilogue);
+    out
+}
+
+fn apply_epilogue_f64(out: &mut [f64], n: usize, alpha: f64, beta: f64,
+                      epilogue: &Epilogue<f64>) {
+    match epilogue {
+        Epilogue::None => {
+            for v in out.iter_mut() {
+                *v = alpha * *v;
+            }
+        }
+        Epilogue::Bias(bias) => {
+            assert_eq!(bias.len(), n, "bias length is the column count");
+            for (i, v) in out.iter_mut().enumerate() {
+                *v = alpha * *v + beta * bias[i % n];
+            }
+        }
+        Epilogue::BiasTanh(bias) => {
+            assert_eq!(bias.len(), n, "bias length is the column count");
+            for (i, v) in out.iter_mut().enumerate() {
+                *v = crate::util::numerics::det_tanh(
+                    alpha * *v + beta * bias[i % n]);
+            }
+        }
+    }
+}
+
+fn apply_epilogue_f32(out: &mut [f32], n: usize, alpha: f32, beta: f32,
+                      epilogue: &Epilogue<f32>) {
+    match epilogue {
+        Epilogue::None => {
+            for v in out.iter_mut() {
+                *v = alpha * *v;
+            }
+        }
+        Epilogue::Bias(bias) => {
+            assert_eq!(bias.len(), n, "bias length is the column count");
+            for (i, v) in out.iter_mut().enumerate() {
+                *v = alpha * *v + beta * bias[i % n];
+            }
+        }
+        Epilogue::BiasTanh(bias) => {
+            assert_eq!(bias.len(), n, "bias length is the column count");
+            for (i, v) in out.iter_mut().enumerate() {
+                *v = crate::util::numerics::det_tanh_f32(
+                    alpha * *v + beta * bias[i % n]);
+            }
+        }
+    }
 }
 
 /// Output digest, mirroring `aot.digest` on the python side.

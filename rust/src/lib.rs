@@ -59,6 +59,11 @@
 //!   with exact accounting, completion-order streams and
 //!   dependency-chained request pipelines (see "The client plane"
 //!   below). The one client-side concurrency idiom in the repo.
+//! * [`model`] — the **model plane**: compiles the manifest's AOT MLP
+//!   entry into a [`model::ModelPlan`] — a dependency DAG of per-layer
+//!   work items with fused bias/tanh epilogues — served end to end
+//!   through the client pipeline as one traced, fault-tolerant unit
+//!   (see "The model plane" below).
 //! * [`coordinator`] — the campaign-facing shim (`Scheduler`) plus the
 //!   bounded-queue substrate the serve layer is built on.
 //! * [`report`] — regenerates every table and figure of the paper.
@@ -177,6 +182,53 @@
 //! (`--window 1` is the classic closed loop); `cargo bench --bench
 //! client_stream` gates pipelined-vs-one-shot throughput (≥ 1.2× at
 //! equal concurrency, zero lost replies) and emits `BENCH_client.json`.
+//!
+//! # The model plane
+//!
+//! Everything below the serve layer executes *single artifacts*; the
+//! python side lowers a whole application (the 2-layer tanh MLP of
+//! `compile/model.py`) as ONE manifest entry. The model plane
+//! ([`model`]) closes that gap by **compiling, not special-casing**:
+//!
+//! 1. **Spec** — [`model::ModelSpec::from_meta`] recovers the servable
+//!    description from the manifest's validated `mlp` entry
+//!    (`runtime::artifact::MlpDims` pins geometry and input shapes at
+//!    parse time): layer GEMM shapes, per-tensor seeds (tensors are
+//!    regenerated locally from the shared splitmix64 streams, never
+//!    shipped), and the python-side output digest.
+//! 2. **Plan** — [`model::ModelPlan::compile`] lowers the spec at a
+//!    [`model::Tier`] into a DAG of synthetic per-layer artifact ids
+//!    (`mlp_b64_f32#L0`, `…#L1+strict`, `…#L0!gemm`/`!act`) that the
+//!    threadpool backend serves from a model catalog exactly like GEMM
+//!    artifacts — so coalescing, both cache tiers, digest verification,
+//!    retry/quarantine and tracing apply per layer with zero new
+//!    worker-loop code (the backend-shard contract again).
+//! 3. **Serve** — [`serve::Serve::submit_model`] /
+//!    `client::Session::submit_model` push the plan through a
+//!    [`client::Pipeline`] under ONE pre-minted trace id with a
+//!    `model:<id>` root span, *per-model* metrics
+//!    (`ServeMetrics` model tallies in `summary()`), and the pipeline's
+//!    root-cause failure propagation across layers.
+//!
+//! **Tiers, one numeric contract.** `Tier::Strict` runs sequential
+//! naive layers with the deterministic activation ([`util::numerics`]
+//! — built from correctly-rounded basic ops only, so rust and python
+//! produce identical bits; the `mlp_parity.json` KAT pins it).
+//! `Tier::Fused` runs each layer as ONE node: the tuned packed kernel
+//! with the bias(+tanh) epilogue fused into the store loop
+//! ([`gemm::Epilogue`]), row-parallel, digest-verified per node against
+//! the strict oracle. `Tier::Unfused` is the fusion-off baseline (bias
+//! GEMM node + separate activation node) that `cargo bench --bench
+//! model_serve` gates fusion against (fused ≥ 1.1× unfused model
+//! throughput, goodput under chaos ≥ 0.7× fault-free, zero lost
+//! replies, exact per-node accounting → `BENCH_model.json`). Tuned
+//! kernel selection per layer reuses the autotune store through the
+//! same `bucket_for` buckets (floor lowered to 8 so small output
+//! layers get their own bucket).
+//!
+//! CLI: `serve --model DIR [--model-rate R]` serves the manifest's MLP
+//! in a closed loop; `alpaka-bench model DIR` runs one strict + fused
+//! pass and prints per-layer timings.
 //!
 //! # The backend-shard contract (how to add a backend)
 //!
@@ -313,6 +365,7 @@
 //! | `backoff` | jittered backoff sleep inside a retry gap | |
 //! | `cache:mem` / `cache:disk` | result-cache probe, per tier | `hit` |
 //! | `tune:explore` | background exploration on the tuner shard | |
+//! | `model` | model-plane root: one per `submit_model`, spanning every layer node | `tier`, `nodes` |
 //!
 //! **Bounded by design.** The recorder holds a ring of the last
 //! `ServeConfig::trace_cap` traces plus a small exemplar reservoir
@@ -456,6 +509,7 @@ pub mod client;
 pub mod coordinator;
 pub mod gemm;
 pub mod hierarchy;
+pub mod model;
 pub mod report;
 pub mod runtime;
 pub mod serve;

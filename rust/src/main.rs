@@ -215,6 +215,36 @@ fn cli() -> Cli {
                     OptSpec::value("trace-cap", Some("256"),
                                    "flight-recorder ring capacity \
                                     for --trace"),
+                    OptSpec::value("model", None,
+                                   "serve a compiled model plan \
+                                    instead of the mixed load: load \
+                                    the MLP manifest entry under this \
+                                    directory (built-in demo MLP when \
+                                    absent) and drive --requests \
+                                    fused-tier plans through one \
+                                    session"),
+                    OptSpec::value("model-rate", Some("0"),
+                                   "open-loop pacing for --model, \
+                                    plans per second (0 = closed \
+                                    loop)"),
+                ],
+            },
+            CommandSpec {
+                name: "model",
+                about: "compile an MLP manifest entry into per-tier \
+                        plans (fused / unfused / strict) and serve \
+                        each end-to-end, printing per-layer timings",
+                opts: vec![
+                    OptSpec::value("dir", None,
+                                   "artifact directory holding the \
+                                    model manifest (or pass it \
+                                    positionally; built-in demo MLP \
+                                    when absent)"),
+                    OptSpec::value("repeat", Some("3"),
+                                   "plans served per tier (per-layer \
+                                    times average over these)"),
+                    OptSpec::value("native-threads", Some("4"),
+                                   "threadpool shard worker count"),
                 ],
             },
             CommandSpec {
@@ -306,6 +336,7 @@ fn run(cli: &Cli, p: &Parsed) -> Result<()> {
         "repro" => cmd_repro(p),
         "native" => cmd_native(p),
         "serve" => cmd_serve(p),
+        "model" => cmd_model(p),
         "trace" => cmd_trace(p),
         "lint" => cmd_lint(p),
         "inspect-hlo" => cmd_inspect(p),
@@ -567,10 +598,20 @@ fn cmd_serve(p: &Parsed) -> Result<()> {
 
     // Native shards: real artifacts when present, synthetic catalog
     // (host reference GEMM) otherwise — the load test always exercises
-    // every shard family, including both named native shards.
+    // every shard family, including both named native shards. In model
+    // mode the manifest must carry the model entry, so the source is
+    // resolved by the model plane instead.
     let dir = p.get_or("artifacts-dir", "artifacts").to_string();
-    let (native, artifact_ids) =
-        loadgen::native_config_or_synthetic(Path::new(&dir));
+    let model_src = match p.get("model") {
+        Some(d) => Some(loadgen::model_source(Path::new(d))?),
+        None => None,
+    };
+    anyhow::ensure!(model_src.is_none() || !p.has_flag("overload"),
+                    "--model runs its own plan loop (drop --overload)");
+    let (native, artifact_ids) = match &model_src {
+        Some((native, _)) => (native.clone(), Vec::new()),
+        None => loadgen::native_config_or_synthetic(Path::new(&dir)),
+    };
 
     let clients = match p.get_u64("sessions")?.unwrap_or(0) as usize {
         0 => p.get_u64("clients")?.unwrap_or(8) as usize,
@@ -656,6 +697,49 @@ fn cmd_serve(p: &Parsed) -> Result<()> {
         None
     };
     let serve = Serve::start(cfg.clone())?;
+
+    // Model mode: drive whole plans (the fused serving tier) through
+    // one session instead of the mixed item load. Self-healing, trace
+    // and tuning knobs all apply unchanged — a plan node is an
+    // ordinary request.
+    if let Some((_, spec)) = &model_src {
+        use alpaka_rs::model::{ModelPlan, Tier};
+
+        let rate = p.get_f64("model-rate")?.unwrap_or(0.0);
+        anyhow::ensure!(rate >= 0.0, "--model-rate must be >= 0");
+        let plan = ModelPlan::compile(spec, Tier::Fused);
+        println!("model serve: {} plan(s) of {} ({} tier, {} \
+                  nodes/plan){}",
+                 requests, spec.id, plan.tier.label(), plan.len(),
+                 if rate > 0.0 {
+                     format!(", open-loop at {rate:.1} plans/s")
+                 } else {
+                     ", closed-loop".to_string()
+                 });
+        let out = loadgen::run_model_loop(&serve, &plan, requests, rate);
+        print!("{}", loadgen::model_report(&out, &plan));
+        println!("{}", serve.summary());
+        if let Some(cp) = &chaos_plan {
+            print!("{}", loadgen::fault_report(cp));
+        }
+        if let Some(store) = serve.tuning_store() {
+            if let Ok(g) = store.lock() {
+                print!("{}", g.render());
+            }
+        }
+        let recorder = serve.trace_recorder();
+        serve.shutdown();
+        if let (Some(path), Some(rec)) = (&trace_path, &recorder) {
+            let n = loadgen::write_chrome_trace(rec, Path::new(path))?;
+            println!("trace: wrote {n} trace(s) to {path}");
+        }
+        anyhow::ensure!(out.fully_accounted(plan.len()),
+                        "model node accounting leak");
+        anyhow::ensure!(chaos_plan.is_some() || out.nodes_failed == 0,
+                        "{} model nodes failed: {:?}",
+                        out.nodes_failed, out.first_failure);
+        return Ok(());
+    }
 
     let items = loadgen::default_mix(&archs, &artifact_ids, n);
     if p.has_flag("overload") {
@@ -762,6 +846,42 @@ fn cmd_serve(p: &Parsed) -> Result<()> {
     // above); exact accounting is enforced per session by the driver.
     anyhow::ensure!(chaos_plan.is_some() || outcome.failed == 0,
                     "{} requests failed", outcome.failed);
+    Ok(())
+}
+
+fn cmd_model(p: &Parsed) -> Result<()> {
+    use alpaka_rs::model::{ModelPlan, Tier};
+    use alpaka_rs::serve::{loadgen, Serve, ServeConfig};
+
+    let dir = p.get("dir")
+        .or_else(|| p.positional.first().map(String::as_str))
+        .unwrap_or("artifacts");
+    let (native, spec) = loadgen::model_source(Path::new(dir))?;
+    let repeat = p.get_u64("repeat")?.unwrap_or(3).max(1) as usize;
+    let serve = Serve::start(ServeConfig {
+        native: Some(native),
+        native_threads: p.get_u64("native-threads")?.unwrap_or(4)
+            as usize,
+        // measurement semantics: re-execute every plan so the
+        // per-layer means are honest, never cache replays
+        cache_cap: 0,
+        ..ServeConfig::default()
+    })?;
+    println!("model {}: batch {}, {} -> {} -> {}, {} layer(s)",
+             spec.id, spec.dims.batch, spec.dims.d_in,
+             spec.dims.d_hidden, spec.dims.d_out, spec.layers.len());
+    // Fused is the serving tier; unfused shows what the epilogue
+    // fusion buys; strict is the sequential bit-parity reference.
+    for tier in [Tier::Fused, Tier::Unfused, Tier::Strict] {
+        let plan = ModelPlan::compile(&spec, tier);
+        let out = loadgen::run_model_loop(&serve, &plan, repeat, 0.0);
+        print!("{}", loadgen::model_report(&out, &plan));
+        anyhow::ensure!(
+            out.nodes_failed == 0 && out.nodes_skipped == 0,
+            "{} tier failed: {:?}", tier.label(), out.first_failure);
+    }
+    println!("{}", serve.summary());
+    serve.shutdown();
     Ok(())
 }
 

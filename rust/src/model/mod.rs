@@ -1,0 +1,629 @@
+//! The model plane — compiling an AOT model artifact into a servable
+//! plan of per-layer work items.
+//!
+//! The python side lowers a whole application (the 2-layer tanh MLP of
+//! `compile/model.py`) as ONE manifest entry; nothing in the serve
+//! layer can execute "an MLP" directly. This module closes that gap
+//! without teaching the serve layer anything about models: a
+//! [`ModelSpec`] is the validated, seed-complete description recovered
+//! from the manifest ([`ModelSpec::from_meta`]), and
+//! [`ModelPlan::compile`] lowers it to a dependency DAG of synthetic
+//! per-layer artifact ids that the threadpool backend knows how to run
+//! (`serve::backend` keeps a catalog of them, exactly as it does for
+//! GEMM artifacts). The serve layer then gives every layer node the
+//! full treatment for free: coalescing, result caches, digest
+//! verification, retry/quarantine, tracing.
+//!
+//! Three tiers, one numeric contract:
+//!
+//! * [`Tier::Strict`] — each layer runs the sequential naive kernel
+//!   with the deterministic activation (`util::numerics`). Bit-identical
+//!   to the python reference (`python/compile/modelref.py`), pinned by
+//!   the `mlp_parity.json` KAT.
+//! * [`Tier::Fused`] — each layer is ONE node: the tuned packed kernel
+//!   with the bias(+tanh) epilogue fused into the store loop
+//!   ([`crate::gemm::Epilogue`]), row-parallel over the worker pool,
+//!   digest-verified against the strict oracle per node.
+//! * [`Tier::Unfused`] — the pre-fusion serving shape: a bias-only GEMM
+//!   node plus a separate activation node per hidden layer. Strictly
+//!   more nodes, more verification passes and more scheduling round
+//!   trips than [`Tier::Fused`] — it exists as the honest baseline the
+//!   `model_serve` bench gates fusion against, and it must agree
+//!   bitwise with the strict tier (`det_tanh` of the same f32 is the
+//!   same f32 whether fused into the store loop or applied after).
+//!
+//! Layer inputs chain through the *strict* previous-layer output on
+//! every tier, so each node is independently verifiable and cacheable —
+//! dependencies between nodes express ordering and failure coupling
+//! (exactly the [`crate::client::Pipeline`] contract), not data flow.
+
+use std::sync::Arc;
+
+use crate::client::NodeResult;
+use crate::gemm::kernel::Element;
+use crate::gemm::verify::{self, Digest};
+use crate::gemm::{Epilogue, Precision};
+use crate::runtime::artifact::{ArtifactMeta, MlpDims};
+use crate::serve::{Output, ServeError};
+use crate::util::prng;
+
+/// Which lowering [`ModelPlan::compile`] produces.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tier {
+    /// Sequential naive layers — the cross-language bit-parity tier.
+    Strict,
+    /// Tuned kernel with the epilogue fused into the store loop.
+    Fused,
+    /// Tuned GEMM + separate activation nodes (fusion-off baseline).
+    Unfused,
+}
+
+impl Tier {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Tier::Strict => "strict",
+            Tier::Fused => "fused",
+            Tier::Unfused => "unfused",
+        }
+    }
+}
+
+/// What one plan node computes. The backend keys its model catalog on
+/// the node id, which encodes this kind (see [`ModelSpec::node_id`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeKind {
+    /// Sequential naive GEMM + epilogue (the reference itself).
+    Strict,
+    /// Parallel tuned GEMM with the full epilogue fused.
+    Fused,
+    /// Parallel tuned GEMM with bias only (unfused tier, stage 1).
+    GemmOnly,
+    /// Elementwise deterministic tanh pass (unfused tier, stage 2).
+    Activation,
+}
+
+impl NodeKind {
+    /// Id suffix after `#L<layer>`; stable — node ids reach the disk
+    /// result cache and quarantine keys.
+    fn suffix(&self) -> &'static str {
+        match self {
+            NodeKind::Fused => "",
+            NodeKind::Strict => "+strict",
+            NodeKind::GemmOnly => "!gemm",
+            NodeKind::Activation => "!act",
+        }
+    }
+}
+
+/// One GEMM layer of the model: `out = act(alpha·input·W + beta·b)`.
+#[derive(Debug, Clone)]
+pub struct LayerSpec {
+    pub index: usize,
+    /// Rows (the batch).
+    pub m: usize,
+    /// Output width.
+    pub n: usize,
+    /// Input width (contraction).
+    pub k: usize,
+    pub weight_seed: u64,
+    pub bias_seed: u64,
+    /// Whether the deterministic tanh follows the affine part.
+    pub activation: bool,
+}
+
+impl LayerSpec {
+    /// GEMM flops of this layer (the activation pass is not counted —
+    /// it is memory-bound and would only flatter the rate).
+    pub fn flops(&self) -> u128 {
+        2 * self.m as u128 * self.n as u128 * self.k as u128
+    }
+}
+
+/// A servable model recovered from one manifest `mlp` entry: layer
+/// geometry from the validated [`MlpDims`], input seeds from the
+/// manifest's input list (tensors are regenerated locally, never
+/// shipped), and the python-side output digest for the end-to-end
+/// cross-language check.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub id: String,
+    pub dims: MlpDims,
+    pub x_seed: u64,
+    pub layers: Vec<LayerSpec>,
+    pub alpha: f32,
+    pub beta: f32,
+    /// Python-recorded digest of the final layer output.
+    pub final_digest: Digest,
+}
+
+/// The model plane is f32-only: the manifest only lowers `mlp_*_f32`
+/// variants, and the parity fixture pins f32 bit patterns. A future f64
+/// model means widening [`ModelSpec`] generically, not silently running
+/// the wrong precision — hence a hard error here.
+fn require_f32(meta: &ArtifactMeta) -> Result<(), String> {
+    if meta.precision != Precision::F32 {
+        return Err(format!(
+            "model {}: the model plane serves f32 only (manifest says \
+             {:?}); lower an f32 variant or extend crate::model",
+            meta.id, meta.precision));
+    }
+    Ok(())
+}
+
+impl ModelSpec {
+    /// Build the servable spec from a validated manifest entry.
+    /// `meta.model` must be present (kind "mlp" — the manifest parser
+    /// guarantees geometry), and the precision must be f32.
+    pub fn from_meta(meta: &ArtifactMeta) -> Result<ModelSpec, String> {
+        let dims = meta.model.ok_or_else(|| format!(
+            "artifact {} is kind {:?}, not a servable model",
+            meta.id, meta.kind))?;
+        require_f32(meta)?;
+        // Input order is x, w1, b1, w2, b2 — pinned by the manifest
+        // validator, so indexing is safe.
+        let seeds: Vec<u64> = meta.inputs.iter().map(|i| i.seed).collect();
+        let layers = vec![
+            LayerSpec { index: 0, m: dims.batch, n: dims.d_hidden,
+                        k: dims.d_in, weight_seed: seeds[1],
+                        bias_seed: seeds[2], activation: true },
+            LayerSpec { index: 1, m: dims.batch, n: dims.d_out,
+                        k: dims.d_hidden, weight_seed: seeds[3],
+                        bias_seed: seeds[4], activation: false },
+        ];
+        Ok(ModelSpec {
+            id: meta.id.clone(),
+            dims,
+            x_seed: seeds[0],
+            layers,
+            alpha: meta.alpha as f32,
+            beta: meta.beta as f32,
+            final_digest: meta.digest.clone(),
+        })
+    }
+
+    /// Synthetic artifact id of one plan node, e.g. `mlp_b64_f32#L0`
+    /// (fused), `mlp_b64_f32#L1+strict`, `mlp_b64_f32#L0!act`.
+    pub fn node_id(&self, layer: usize, kind: NodeKind) -> String {
+        format!("{}#L{layer}{}", self.id, kind.suffix())
+    }
+
+    /// Regenerate the batch input from its seed (row-major batch×d_in).
+    pub fn input_x(&self) -> Vec<f32> {
+        prng::matrix_f32(self.x_seed, self.dims.batch, self.dims.d_in)
+    }
+
+    /// Regenerate layer `l`'s weight matrix (k×n row-major).
+    pub fn weight(&self, l: usize) -> Vec<f32> {
+        let s = &self.layers[l];
+        prng::matrix_f32(s.weight_seed, s.k, s.n)
+    }
+
+    /// Regenerate layer `l`'s bias vector (length n). The python side
+    /// draws biases as (n, 1) matrices and reshapes — same stream, so
+    /// a plain n×1 draw reproduces it.
+    pub fn bias(&self, l: usize) -> Vec<f32> {
+        let s = &self.layers[l];
+        prng::matrix_f32(s.bias_seed, s.n, 1)
+    }
+
+    /// The epilogue layer `l` fuses: bias always (the python model
+    /// routes biases through the GEMM's beta·C term), tanh when the
+    /// layer activates and `with_activation` asks for it (the unfused
+    /// GEMM stage passes `false`).
+    pub fn epilogue(&self, l: usize, with_activation: bool)
+                    -> Epilogue<f32> {
+        let s = &self.layers[l];
+        if with_activation && s.activation {
+            Epilogue::BiasTanh(self.bias(l))
+        } else {
+            Epilogue::Bias(self.bias(l))
+        }
+    }
+
+    /// Sequential naive layer `l` over `input` (m×k), full epilogue —
+    /// the reference the fused tier is verified against, and the value
+    /// the strict tier serves. Bit-identical to the python twin.
+    pub fn layer_strict(&self, input: &[f32], l: usize) -> Vec<f32> {
+        let s = &self.layers[l];
+        verify::gemm_f32_rect_rows(s.m, s.n, s.k, 0, s.m, input,
+                                   &self.weight(l), self.alpha,
+                                   self.beta, &self.epilogue(l, true))
+    }
+
+    /// Sequential naive layer `l`, bias only (pre-activation) — the
+    /// unfused tier's GEMM-stage reference.
+    pub fn layer_preact(&self, input: &[f32], l: usize) -> Vec<f32> {
+        let s = &self.layers[l];
+        verify::gemm_f32_rect_rows(s.m, s.n, s.k, 0, s.m, input,
+                                   &self.weight(l), self.alpha,
+                                   self.beta, &self.epilogue(l, false))
+    }
+
+    /// The unfused activation pass: deterministic tanh, elementwise.
+    /// `det_tanh` of the same f32 is the same f32 wherever it runs, so
+    /// `activate(layer_preact(..))` equals `layer_strict(..)` bitwise
+    /// on activating layers (pinned by a test below).
+    pub fn activate(out: &mut [f32]) {
+        for v in out.iter_mut() {
+            *v = v.det_tanh();
+        }
+    }
+
+    /// Run every layer sequentially from the seeded input; returns all
+    /// post-activation layer outputs (the last is the model output).
+    pub fn forward_strict(&self) -> Vec<Vec<f32>> {
+        let mut outs: Vec<Vec<f32>> = Vec::with_capacity(self.layers.len());
+        let x = self.input_x();
+        for l in 0..self.layers.len() {
+            let out = if l == 0 {
+                self.layer_strict(&x, l)
+            } else {
+                self.layer_strict(&outs[l - 1], l)
+            };
+            outs.push(out);
+        }
+        outs
+    }
+
+    /// Cross-language check of the final output against the manifest's
+    /// python-side digest. The tolerance is loose (1e-3) by design: the
+    /// python numbers come out of the tiled pallas kernel, whose f32
+    /// accumulation order differs from the strict sequential kernel —
+    /// agreement here is a sanity anchor, the *bitwise* contract lives
+    /// in the `mlp_parity.json` KAT against `modelref.py`.
+    pub fn check_final_digest(&self, last: &[f32]) -> Result<(), String> {
+        let wide: Vec<f64> = last.iter().map(|&v| v as f64).collect();
+        let s = self.layers.last().expect("models have layers");
+        Digest::of(&wide, &[s.m, s.n], self.final_digest.samples.len())
+            .matches(&self.final_digest, MODEL_DIGEST_RTOL)
+            .map_err(|e| format!("model {} final output disagrees with \
+                                  the python manifest digest: {e}",
+                                 self.id))
+    }
+
+    /// Identity descriptor of one node for the disk result cache — the
+    /// cache refuses entries whose recorded digest differs, so a
+    /// changed manifest (new seeds, new geometry) under the same id is
+    /// a miss, never a stale hit.
+    pub fn node_descriptor(&self, layer: usize, kind: NodeKind)
+                           -> String {
+        let s = &self.layers[layer];
+        format!("model|{}|L{layer}{}|m{}n{}k{}|w{}|b{}|x{}|a{}|b{}",
+                self.id, kind.suffix(), s.m, s.n, s.k, s.weight_seed,
+                s.bias_seed, self.x_seed, self.alpha, self.beta)
+    }
+}
+
+/// One node of a compiled plan: a synthetic artifact id plus the plan
+/// indices it depends on.
+#[derive(Debug, Clone)]
+pub struct ModelNode {
+    pub artifact_id: String,
+    pub layer: usize,
+    pub kind: NodeKind,
+    /// Indices into [`ModelPlan::nodes`] (always earlier — the plan is
+    /// a DAG by construction, matching the pipeline contract).
+    pub deps: Vec<usize>,
+}
+
+/// A compiled, servable lowering of one model at one tier.
+#[derive(Debug, Clone)]
+pub struct ModelPlan {
+    pub spec: Arc<ModelSpec>,
+    pub tier: Tier,
+    pub nodes: Vec<ModelNode>,
+}
+
+impl ModelPlan {
+    /// Lower `spec` at `tier`. Strict/fused: one node per layer,
+    /// chained. Unfused: a GEMM node per layer plus an activation node
+    /// after each activating layer, chained through both.
+    pub fn compile(spec: &Arc<ModelSpec>, tier: Tier) -> ModelPlan {
+        let mut nodes: Vec<ModelNode> = Vec::new();
+        let mut prev: Option<usize> = None;
+        let chain = |prev: &Option<usize>| -> Vec<usize> {
+            prev.iter().copied().collect()
+        };
+        for (l, layer) in spec.layers.iter().enumerate() {
+            match tier {
+                Tier::Strict | Tier::Fused => {
+                    let kind = if tier == Tier::Strict {
+                        NodeKind::Strict
+                    } else {
+                        NodeKind::Fused
+                    };
+                    nodes.push(ModelNode {
+                        artifact_id: spec.node_id(l, kind),
+                        layer: l,
+                        kind,
+                        deps: chain(&prev),
+                    });
+                    prev = Some(nodes.len() - 1);
+                }
+                Tier::Unfused => {
+                    nodes.push(ModelNode {
+                        artifact_id: spec.node_id(l, NodeKind::GemmOnly),
+                        layer: l,
+                        kind: NodeKind::GemmOnly,
+                        deps: chain(&prev),
+                    });
+                    prev = Some(nodes.len() - 1);
+                    if layer.activation {
+                        nodes.push(ModelNode {
+                            artifact_id:
+                                spec.node_id(l, NodeKind::Activation),
+                            layer: l,
+                            kind: NodeKind::Activation,
+                            deps: chain(&prev),
+                        });
+                        prev = Some(nodes.len() - 1);
+                    }
+                }
+            }
+        }
+        ModelPlan { spec: Arc::clone(spec), tier, nodes }
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+}
+
+/// How one served [`ModelPlan`] resolved: every node's settlement in
+/// plan order, under one trace id. Produced by
+/// `Serve::submit_model` / `Session::submit_model`.
+#[derive(Debug)]
+pub struct ModelOutcome {
+    pub model: String,
+    pub tier: Tier,
+    /// The shared flight-recorder trace id every layer node committed
+    /// under (`None` when tracing is off).
+    pub trace_id: Option<u64>,
+    /// `(node artifact id, settlement)`, index-aligned with
+    /// [`ModelPlan::nodes`].
+    pub results: Vec<(String, NodeResult)>,
+    /// Submit → last settlement, seconds.
+    pub wall_seconds: f64,
+}
+
+impl ModelOutcome {
+    pub fn all_ok(&self) -> bool {
+        self.results.iter().all(|(_, r)| r.is_ok())
+    }
+
+    pub fn ok_count(&self) -> usize {
+        self.results.iter().filter(|(_, r)| r.is_ok()).count()
+    }
+
+    /// The first failed node's id and error — the root cause every
+    /// skipped descendant inherited (None when nothing failed).
+    pub fn root_cause(&self) -> Option<(&str, &ServeError)> {
+        self.results.iter().find_map(|(id, r)| match r {
+            NodeResult::Failed(e) => Some((id.as_str(), e)),
+            _ => None,
+        })
+    }
+
+    /// Per-node execution seconds for the nodes that served natively,
+    /// in plan order — the `alpaka-bench model` per-layer report.
+    pub fn node_seconds(&self) -> Vec<(String, f64)> {
+        self.results.iter().filter_map(|(id, r)| match r {
+            NodeResult::Ok(reply) => match &reply.output {
+                Output::Native { seconds, .. } => {
+                    Some((id.clone(), *seconds))
+                }
+                _ => None,
+            },
+            _ => None,
+        }).collect()
+    }
+}
+
+/// Digest tolerance for the python-manifest cross-check (see
+/// [`ModelSpec::check_final_digest`]). Looser than the backend's
+/// per-node f32 oracle rtol (1e-4) because it compares *different
+/// accumulation orders*, not different schedules of the same order.
+pub const MODEL_DIGEST_RTOL: f64 = 1e-3;
+
+/// Self-consistent manifest text for the demo MLP (the aot.py shapes:
+/// batch 64, 256→128→64, t=32, f32), with seeds following the python
+/// AOT convention (`prng::seed_for(id, position)`) and the digest
+/// computed by the strict reference itself. Tests, benches and
+/// manifest-less CLI runs get a servable model without `make
+/// artifacts` — and because the digest is genuine, the serve-time
+/// manifest cross-check runs for real, not vacuously.
+pub fn demo_manifest_text() -> String {
+    let id = "mlp_b64_f32";
+    let seeds: Vec<u64> = (0..5).map(|k| prng::seed_for(id, k)).collect();
+    let spec = ModelSpec {
+        id: id.to_string(),
+        dims: MlpDims { batch: 64, d_in: 256, d_hidden: 128,
+                        d_out: 64, t: 32 },
+        x_seed: seeds[0],
+        layers: vec![
+            LayerSpec { index: 0, m: 64, n: 128, k: 256,
+                        weight_seed: seeds[1], bias_seed: seeds[2],
+                        activation: true },
+            LayerSpec { index: 1, m: 64, n: 64, k: 128,
+                        weight_seed: seeds[3], bias_seed: seeds[4],
+                        activation: false },
+        ],
+        alpha: 1.0,
+        beta: 1.0,
+        final_digest: Digest { shape: vec![64, 64], sum: 0.0,
+                               abs_sum: 0.0, samples: Vec::new() },
+    };
+    let out = spec.forward_strict().pop().expect("two layers");
+    let wide: Vec<f64> = out.iter().map(|&v| v as f64).collect();
+    let d = Digest::of(&wide, &[64, 64], 8);
+    let samples: Vec<String> = d.samples.iter()
+        .map(|(i, v)| format!("[{i},{v:.17e}]"))
+        .collect();
+    format!(
+        r#"{{
+  "version": 2, "interchange": "hlo-text",
+  "artifacts": [{{
+    "id": "{id}", "kind": "mlp", "role": "application",
+    "file": "{id}.hlo.txt",
+    "spec": {{"batch":64,"d_in":256,"d_hidden":128,"d_out":64,
+             "t":32,"dtype":"f32"}},
+    "inputs": [
+      {{"seed": {s0}, "shape": [64,256], "dtype":"f32"}},
+      {{"seed": {s1}, "shape": [256,128], "dtype":"f32"}},
+      {{"seed": {s2}, "shape": [128], "dtype":"f32"}},
+      {{"seed": {s3}, "shape": [128,64], "dtype":"f32"}},
+      {{"seed": {s4}, "shape": [64], "dtype":"f32"}}],
+    "digest": {{"shape":[64,64], "sum": {sum:.17e},
+               "abs_sum": {abs:.17e}, "samples": [{samples}]}}
+  }}]
+}}"#,
+        s0 = seeds[0], s1 = seeds[1], s2 = seeds[2], s3 = seeds[3],
+        s4 = seeds[4], sum = d.sum, abs = d.abs_sum,
+        samples = samples.join(","))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    use crate::runtime::artifact::Manifest;
+
+    const MLP: &str = r#"{
+      "version": 2, "interchange": "hlo-text",
+      "artifacts": [{
+        "id": "mlp_b64_f32", "kind": "mlp", "role": "application",
+        "file": "mlp_b64_f32.hlo.txt",
+        "spec": {"batch":64,"d_in":256,"d_hidden":128,"d_out":64,
+                 "t":32,"dtype":"f32"},
+        "inputs": [
+          {"seed": 101, "shape": [64,256],  "dtype":"f32"},
+          {"seed": 102, "shape": [256,128], "dtype":"f32"},
+          {"seed": 103, "shape": [128],     "dtype":"f32"},
+          {"seed": 104, "shape": [128,64],  "dtype":"f32"},
+          {"seed": 105, "shape": [64],      "dtype":"f32"}],
+        "digest": {"shape":[64,64], "sum": 0.0, "abs_sum": 0.0,
+                   "samples": []}
+      }]
+    }"#;
+
+    fn spec() -> Arc<ModelSpec> {
+        let m = Manifest::parse(MLP, Path::new(".")).unwrap();
+        Arc::new(ModelSpec::from_meta(m.by_id("mlp_b64_f32").unwrap())
+                 .unwrap())
+    }
+
+    #[test]
+    fn spec_recovers_layers_and_seeds() {
+        let s = spec();
+        assert_eq!(s.layers.len(), 2);
+        let (l0, l1) = (&s.layers[0], &s.layers[1]);
+        assert_eq!((l0.m, l0.n, l0.k), (64, 128, 256));
+        assert_eq!((l1.m, l1.n, l1.k), (64, 64, 128));
+        assert!(l0.activation && !l1.activation);
+        assert_eq!((l0.weight_seed, l0.bias_seed), (102, 103));
+        assert_eq!((l1.weight_seed, l1.bias_seed), (104, 105));
+        assert_eq!(s.x_seed, 101);
+        assert_eq!(l0.flops(), 2 * 64 * 128 * 256);
+        // Tensor regeneration honours shapes.
+        assert_eq!(s.input_x().len(), 64 * 256);
+        assert_eq!(s.weight(1).len(), 128 * 64);
+        assert_eq!(s.bias(0).len(), 128);
+    }
+
+    #[test]
+    fn f64_models_are_rejected_not_misserved() {
+        let m = Manifest::parse(&MLP.replace("f32", "f64"),
+                                Path::new(".")).unwrap();
+        let err = ModelSpec::from_meta(m.by_id("mlp_b64_f64").unwrap())
+            .unwrap_err();
+        assert!(err.contains("f32 only"), "{err}");
+    }
+
+    #[test]
+    fn plans_compile_to_chained_dags() {
+        let s = spec();
+        let fused = ModelPlan::compile(&s, Tier::Fused);
+        assert_eq!(fused.len(), 2);
+        assert_eq!(fused.nodes[0].artifact_id, "mlp_b64_f32#L0");
+        assert_eq!(fused.nodes[1].artifact_id, "mlp_b64_f32#L1");
+        assert_eq!(fused.nodes[1].deps, vec![0]);
+
+        let strict = ModelPlan::compile(&s, Tier::Strict);
+        assert_eq!(strict.nodes[0].artifact_id, "mlp_b64_f32#L0+strict");
+
+        // Unfused: L0 gemm → L0 act → L1 gemm (L1 has no activation).
+        let unfused = ModelPlan::compile(&s, Tier::Unfused);
+        let ids: Vec<&str> = unfused.nodes.iter()
+            .map(|n| n.artifact_id.as_str()).collect();
+        assert_eq!(ids, ["mlp_b64_f32#L0!gemm", "mlp_b64_f32#L0!act",
+                         "mlp_b64_f32#L1!gemm"]);
+        assert_eq!(unfused.nodes[1].deps, vec![0]);
+        assert_eq!(unfused.nodes[2].deps, vec![1]);
+        // Every dep points backwards — pipeline-compatible.
+        for (i, n) in unfused.nodes.iter().enumerate() {
+            assert!(n.deps.iter().all(|&d| d < i));
+        }
+    }
+
+    #[test]
+    fn unfused_two_pass_equals_fused_strict_bitwise() {
+        // The whole unfused tier rests on this: tanh applied after the
+        // bias GEMM produces the same bits as tanh fused into it.
+        let s = spec();
+        let x = s.input_x();
+        let fused = s.layer_strict(&x, 0);
+        let mut two_pass = s.layer_preact(&x, 0);
+        ModelSpec::activate(&mut two_pass);
+        let fb: Vec<u32> = fused.iter().map(|v| v.to_bits()).collect();
+        let tb: Vec<u32> = two_pass.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(fb, tb);
+    }
+
+    #[test]
+    fn forward_chains_layer_outputs() {
+        let s = spec();
+        let outs = s.forward_strict();
+        assert_eq!(outs.len(), 2);
+        assert_eq!(outs[0].len(), 64 * 128);
+        assert_eq!(outs[1].len(), 64 * 64);
+        // Layer 0 activates: outputs live in (-1, 1).
+        assert!(outs[0].iter().all(|v| v.abs() <= 1.0));
+        // And equals recomputing layer 1 over layer 0's output.
+        let again = s.layer_strict(&outs[0], 1);
+        assert_eq!(outs[1], again);
+    }
+
+    #[test]
+    fn demo_manifest_round_trips_and_digest_checks() {
+        let text = demo_manifest_text();
+        let m = Manifest::parse(&text, Path::new(".")).unwrap();
+        let meta = m.by_id("mlp_b64_f32").unwrap();
+        assert!(meta.model.is_some(), "validated mlp dims present");
+        let spec = ModelSpec::from_meta(meta).unwrap();
+        // The embedded digest came from the strict reference, so the
+        // serve-time cross-check must accept the strict output.
+        let last = spec.forward_strict().pop().unwrap();
+        spec.check_final_digest(&last).unwrap();
+        // And a perturbed output must be rejected.
+        let mut bad = last;
+        for v in bad.iter_mut() {
+            *v += 1.0;
+        }
+        assert!(spec.check_final_digest(&bad).is_err());
+    }
+
+    #[test]
+    fn node_descriptors_separate_kinds_and_seeds() {
+        let s = spec();
+        let a = s.node_descriptor(0, NodeKind::Fused);
+        let b = s.node_descriptor(0, NodeKind::GemmOnly);
+        let c = s.node_descriptor(1, NodeKind::Fused);
+        assert!(a != b && a != c && b != c);
+        assert!(a.contains("w102") && a.contains("x101"));
+    }
+}

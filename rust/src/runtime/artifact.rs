@@ -24,6 +24,33 @@ impl InputSpec {
     }
 }
 
+/// Validated geometry of an `mlp` artifact (kind `"mlp"`). Present iff
+/// the manifest entry carried a well-formed MLP spec: layer dimensions
+/// positive and tile-divisible, and the five input tensors shaped
+/// exactly `x(batch,d_in)`, `w1(d_in,d_hidden)`, `b1(d_hidden)`,
+/// `w2(d_hidden,d_out)`, `b2(d_out)`. Malformed variants are rejected
+/// at parse time with the offending field named — the model plane
+/// (`crate::model`) trusts these dims without re-checking.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MlpDims {
+    pub batch: usize,
+    pub d_in: usize,
+    pub d_hidden: usize,
+    pub d_out: usize,
+    /// Tile size the python lowering used; every dim divides by it.
+    pub t: usize,
+}
+
+impl MlpDims {
+    /// `(m, n, k)` of layer `l` (0 = hidden GEMM, 1 = output GEMM).
+    pub fn layer_shape(&self, l: usize) -> (usize, usize, usize) {
+        match l {
+            0 => (self.batch, self.d_hidden, self.d_in),
+            _ => (self.batch, self.d_out, self.d_hidden),
+        }
+    }
+}
+
 /// Metadata of one lowered artifact.
 #[derive(Debug, Clone)]
 pub struct ArtifactMeta {
@@ -48,6 +75,8 @@ pub struct ArtifactMeta {
     /// GEMM coefficients (1.0 when the manifest omits them).
     pub alpha: f64,
     pub beta: f64,
+    /// Validated MLP geometry (kind "mlp" only, `None` otherwise).
+    pub model: Option<MlpDims>,
 }
 
 /// The parsed manifest.
@@ -174,8 +203,56 @@ fn parse_artifact(a: &Value) -> Result<ArtifactMeta> {
             .collect(),
     };
 
+    let model = if kind == "mlp" {
+        Some(parse_mlp_dims(&id, spec, &inputs)?)
+    } else {
+        None
+    };
+
     Ok(ArtifactMeta { id, kind, role, file, inputs, digest, flops, t,
-                      n: square, n_e, precision, alpha, beta })
+                      n: square, n_e, precision, alpha, beta, model })
+}
+
+/// Validate an `mlp` artifact's geometry. Every failure names the
+/// artifact and the offending field, so a truncated or hand-edited
+/// manifest fails at load time with a pointed message instead of
+/// panicking (or silently mis-serving) inside the model plane.
+fn parse_mlp_dims(id: &str, spec: &Value, inputs: &[InputSpec])
+                  -> Result<MlpDims> {
+    let dim = |f: &str| -> Result<usize> {
+        let v = spec.get(f).and_then(Value::as_u64)
+            .with_context(|| format!("artifact {id}: spec.{f}"))?;
+        if v == 0 {
+            bail!("artifact {id}: spec.{f} must be positive");
+        }
+        Ok(v as usize)
+    };
+    let (batch, d_in) = (dim("batch")?, dim("d_in")?);
+    let (d_hidden, d_out) = (dim("d_hidden")?, dim("d_out")?);
+    let t = dim("t")?;
+    for (f, v) in [("batch", batch), ("d_in", d_in),
+                   ("d_hidden", d_hidden), ("d_out", d_out)] {
+        if v % t != 0 {
+            bail!("artifact {id}: spec.{f} = {v} not divisible by \
+                   tile t = {t}");
+        }
+    }
+    // x, w1, b1, w2, b2 — seeds are per-position, so count and shape
+    // both matter: a missing input would regenerate the wrong tensors.
+    let want: [&[usize]; 5] = [&[batch, d_in], &[d_in, d_hidden],
+                               &[d_hidden], &[d_hidden, d_out], &[d_out]];
+    if inputs.len() != want.len() {
+        bail!("artifact {id}: mlp expects {} inputs (x, w1, b1, w2, \
+               b2), manifest lists {}", want.len(), inputs.len());
+    }
+    const NAMES: [&str; 5] = ["x", "w1", "b1", "w2", "b2"];
+    for (i, (inp, shape)) in inputs.iter().zip(want).enumerate() {
+        if inp.shape != shape {
+            bail!("artifact {id}: input {} ({}) has shape {:?}, \
+                   expected {:?}", i, NAMES[i], inp.shape, shape);
+        }
+    }
+    Ok(MlpDims { batch, d_in, d_hidden, d_out, t })
 }
 
 #[cfg(test)]
@@ -239,6 +316,68 @@ mod tests {
         assert!(Manifest::parse("{}", Path::new(".")).is_err());
         assert!(Manifest::parse(r#"{"version":2,"artifacts":[{}]}"#,
                                 Path::new(".")).is_err());
+    }
+
+    // Well-formed 2-layer MLP entry (shapes mirror aot.py's
+    // mlp_b64_f32: batch=64, d_in=256, d_hidden=128, d_out=64, t=32).
+    const MLP: &str = r#"{
+      "version": 2, "interchange": "hlo-text",
+      "artifacts": [{
+        "id": "mlp_b64_f32", "kind": "mlp", "role": "application",
+        "file": "mlp_b64_f32.hlo.txt",
+        "spec": {"batch":64,"d_in":256,"d_hidden":128,"d_out":64,
+                 "t":32,"dtype":"f32"},
+        "inputs": [
+          {"seed": 11, "shape": [64,256],  "dtype":"f32"},
+          {"seed": 12, "shape": [256,128], "dtype":"f32"},
+          {"seed": 13, "shape": [128],     "dtype":"f32"},
+          {"seed": 14, "shape": [128,64],  "dtype":"f32"},
+          {"seed": 15, "shape": [64],      "dtype":"f32"}],
+        "digest": {"shape":[64,64], "sum": 1.0, "abs_sum": 2.0,
+                   "samples": [[0, 0.5]]}
+      }]
+    }"#;
+
+    #[test]
+    fn parse_mlp_validates_geometry() {
+        let m = Manifest::parse(MLP, Path::new(".")).unwrap();
+        let a = m.by_id("mlp_b64_f32").unwrap();
+        let dims = a.model.expect("mlp meta carries validated dims");
+        assert_eq!(dims, MlpDims { batch: 64, d_in: 256, d_hidden: 128,
+                                   d_out: 64, t: 32 });
+        assert_eq!(dims.layer_shape(0), (64, 128, 256));
+        assert_eq!(dims.layer_shape(1), (64, 64, 128));
+        // Non-mlp kinds never carry dims.
+        let g = Manifest::parse(SAMPLE, Path::new(".")).unwrap();
+        assert!(g.by_id("gemm_n128_t16_e1_f32").unwrap().model.is_none());
+    }
+
+    #[test]
+    fn malformed_mlp_variants_are_rejected_with_context() {
+        // (mutation, substring the error must carry)
+        let cases = [
+            // missing dim field
+            (MLP.replace("\"d_hidden\":128,", ""), "spec.d_hidden"),
+            // zero dim
+            (MLP.replace("\"batch\":64", "\"batch\":0"), "positive"),
+            // tile-indivisible layer geometry
+            (MLP.replace("\"d_out\":64", "\"d_out\":72"),
+             "not divisible by tile"),
+            // wrong input-seed count (w2 dropped)
+            (MLP.replace(
+                "{\"seed\": 14, \"shape\": [128,64],  \"dtype\":\"f32\"},",
+                ""),
+             "expects 5 inputs"),
+            // wrong tensor shape (w1 transposed)
+            (MLP.replace("[256,128]", "[128,256]"), "input 1 (w1)"),
+        ];
+        for (text, needle) in cases {
+            let err = Manifest::parse(&text, Path::new("."))
+                .expect_err(needle);
+            let msg = format!("{err:#}");
+            assert!(msg.contains(needle) && msg.contains("mlp_b64_f32"),
+                    "error {msg:?} should mention {needle:?}");
+        }
     }
 
     #[test]

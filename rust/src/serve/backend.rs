@@ -37,7 +37,8 @@ use std::sync::Mutex;
 use crate::arch::ArchId;
 use crate::autotune::{bucket_for, SharedTuningStore};
 use crate::gemm::kernel::{self, KernelParams};
-use crate::gemm::{metrics as gemm_metrics, verify, Precision};
+use crate::gemm::{metrics as gemm_metrics, verify, Epilogue, Precision};
+use crate::model::{ModelSpec, NodeKind};
 use crate::runtime::artifact::{ArtifactMeta, Manifest};
 use crate::runtime::client::{LoadedKernel, Runtime};
 use crate::sim::{Machine, TuningPoint};
@@ -475,11 +476,17 @@ struct KernelSelection {
 /// defaults: selection must never take down the serving path.
 fn params_for_spec(store: &Option<SharedTuningStore>, spec: &NativeSpec)
                    -> KernelSelection {
-    let n = spec.n as usize;
+    params_for_bucket(store, spec.precision, spec.n as usize)
+}
+
+/// Bucket-level selection core shared by artifact specs and model
+/// layer nodes (a layer selects by its GEMM output width `n` — the
+/// same axis the buckets quantize).
+fn params_for_bucket(store: &Option<SharedTuningStore>,
+                     precision: Precision, n: usize) -> KernelSelection {
     if let Some(store) = store {
         if let Ok(g) = store.lock() {
-            if let Some(e) = g.lookup(spec.precision,
-                                      bucket_for(spec.n)) {
+            if let Some(e) = g.lookup(precision, bucket_for(n as u64)) {
                 return KernelSelection {
                     params: e.params.sanitized(n),
                     from_store: true,
@@ -850,6 +857,61 @@ struct OracleDigest {
     abs_sum: f64,
 }
 
+/// One model-plane catalog entry: which layer of which model a
+/// synthetic node id (`mlp_b64_f32#L0`, `…+strict`, `…!gemm`, `…!act`)
+/// executes, and how (see [`crate::model::NodeKind`]).
+#[derive(Clone)]
+struct ModelJob {
+    spec: Arc<ModelSpec>,
+    layer: usize,
+    kind: NodeKind,
+}
+
+/// Memoized strict forward state of one model layer: `pre` is the
+/// bias-only affine output (the unfused GEMM stage's reference), `post`
+/// the post-activation output (the layer's actual value — equal to
+/// `pre` on non-activating layers). Both come from the sequential naive
+/// kernel, so they are the per-node oracle AND the next layer's input:
+/// every tier chains through the *strict* previous layer, which keeps
+/// each node independently verifiable and cacheable.
+#[derive(Clone)]
+struct ModelLayer {
+    pre: Arc<Vec<f32>>,
+    post: Arc<Vec<f32>>,
+}
+
+/// Build the model-node catalog from a manifest's validated `mlp`
+/// entries: one [`ModelJob`] per (layer × node kind). Models the plane
+/// cannot serve (non-f32) are skipped with a printed reason — GEMM
+/// serving must not fail because an exotic model rode in the manifest.
+fn model_catalog(manifest: &Manifest) -> HashMap<String, ModelJob> {
+    let mut jobs = HashMap::new();
+    for meta in &manifest.artifacts {
+        if meta.model.is_none() {
+            continue;
+        }
+        let spec = match ModelSpec::from_meta(meta) {
+            Ok(spec) => Arc::new(spec),
+            Err(e) => {
+                eprintln!("[serve] model plane skips {}: {e}", meta.id);
+                continue;
+            }
+        };
+        for (l, layer) in spec.layers.iter().enumerate() {
+            for kind in [NodeKind::Fused, NodeKind::Strict,
+                         NodeKind::GemmOnly, NodeKind::Activation] {
+                if kind == NodeKind::Activation && !layer.activation {
+                    continue;
+                }
+                jobs.insert(spec.node_id(l, kind),
+                            ModelJob { spec: Arc::clone(&spec),
+                                       layer: l, kind });
+            }
+        }
+    }
+    jobs
+}
+
 /// The `native:threadpool` shard's backend: the **tuned packed GEMM
 /// kernel** (`gemm::kernel`) fanned out over an owned [`ThreadPool`] in
 /// `mc`-aligned row-panel blocks, with every run's output digest
@@ -887,6 +949,17 @@ pub struct ThreadpoolGemm {
     /// oracle comparison — corruption is **detected by the real
     /// check**, never synthesized as a pre-made error.
     plan: Option<Arc<FaultPlan>>,
+    /// Model-plane node catalog (synthetic `<model>#L<k>…` ids), built
+    /// from the manifest's `mlp` entries; empty for synthetic backends.
+    models: HashMap<String, ModelJob>,
+    /// Memoized strict layer state per `(model, layer)` — the model
+    /// analogue of `oracles`, built sequentially at most once per
+    /// layer (counted in `oracle_builds`).
+    model_layers: HashMap<(String, usize), ModelLayer>,
+    /// Memoized batch inputs per model id (regenerated from seeds).
+    model_inputs: HashMap<String, Arc<Vec<f32>>>,
+    /// Memoized `(weight, bias)` tensors per `(model, layer)`.
+    model_weights: HashMap<(String, usize), Arc<(Vec<f32>, Vec<f32>)>>,
 }
 
 impl ThreadpoolGemm {
@@ -901,7 +974,11 @@ impl ThreadpoolGemm {
             .iter()
             .map(|meta| (meta.id.clone(), spec_from_meta(meta)))
             .collect();
-        Self::with_catalog(catalog, threads)
+        let mut backend = Self::with_catalog(catalog, threads);
+        // Model plane: every mlp entry contributes per-layer synthetic
+        // nodes — served, verified and cached like any artifact.
+        backend.models = model_catalog(manifest);
+        backend
     }
 
     /// Manifest-less backend over synthetic artifact ids.
@@ -919,7 +996,10 @@ impl ThreadpoolGemm {
         };
         Self { catalog, pool, inputs: HashMap::new(),
                oracles: HashMap::new(), oracle_builds: 0, store: None,
-               plan: None }
+               plan: None, models: HashMap::new(),
+               model_layers: HashMap::new(),
+               model_inputs: HashMap::new(),
+               model_weights: HashMap::new() }
     }
 
     /// Attach a tuning store: each request then runs with the store's
@@ -1091,6 +1171,259 @@ impl ThreadpoolGemm {
         }
         Ok((seconds, sum, abs_sum))
     }
+
+    // ---------------------------------------------------- model plane --
+
+    /// Memoized batch input tensor of one model.
+    fn ensure_model_input(&mut self, spec: &Arc<ModelSpec>)
+                          -> Arc<Vec<f32>> {
+        if let Some(x) = self.model_inputs.get(&spec.id) {
+            return Arc::clone(x);
+        }
+        let x = Arc::new(spec.input_x());
+        self.model_inputs.insert(spec.id.clone(), Arc::clone(&x));
+        x
+    }
+
+    /// Memoized `(weight, bias)` tensors of one layer.
+    fn ensure_model_weights(&mut self, spec: &Arc<ModelSpec>,
+                            layer: usize) -> Arc<(Vec<f32>, Vec<f32>)> {
+        let key = (spec.id.clone(), layer);
+        if let Some(w) = self.model_weights.get(&key) {
+            return Arc::clone(w);
+        }
+        let w = Arc::new((spec.weight(layer), spec.bias(layer)));
+        self.model_weights.insert(key, Arc::clone(&w));
+        w
+    }
+
+    /// Memoized strict forward of `spec` through `layer`: sequential
+    /// naive kernel, deterministic activation — the model analogue of
+    /// [`ThreadpoolGemm::ensure_oracle`], built at most once per layer
+    /// (counted in `oracle_builds`; the O(m·n·k) sequential reference
+    /// must never sit on the warm request path). Building the FINAL
+    /// layer also cross-checks the python manifest digest once, so a
+    /// drifted manifest is caught at first serve, not never.
+    fn ensure_model_layer(&mut self, spec: &Arc<ModelSpec>,
+                          layer: usize) -> Result<ModelLayer, String> {
+        let key = (spec.id.clone(), layer);
+        if let Some(l) = self.model_layers.get(&key) {
+            return Ok(l.clone());
+        }
+        let input = if layer == 0 {
+            self.ensure_model_input(spec)
+        } else {
+            self.ensure_model_layer(spec, layer - 1)?.post
+        };
+        let pre = Arc::new(spec.layer_preact(&input, layer));
+        let post = if spec.layers[layer].activation {
+            let mut act = (*pre).clone();
+            ModelSpec::activate(&mut act);
+            Arc::new(act)
+        } else {
+            Arc::clone(&pre)
+        };
+        if layer + 1 == spec.layers.len() {
+            spec.check_final_digest(&post)?;
+        }
+        self.oracle_builds += 1;
+        let entry = ModelLayer { pre, post };
+        self.model_layers.insert(key, entry.clone());
+        Ok(entry)
+    }
+
+    /// Record one model node's oracle digest under the given chunking
+    /// (key `(node, mc, fanout)`; sequential kinds use `(0, 0)` with a
+    /// single whole-output chunk). Cheap re-summation of the memoized
+    /// strict state — not counted as an oracle *build*.
+    fn ensure_model_oracle(&mut self, node_id: &str, reference: &[f32],
+                           cols: usize, chunks: &[(usize, usize)],
+                           mc: usize, fanout: usize) {
+        let key = (node_id.to_string(), mc, fanout);
+        if self.oracles.contains_key(&key) {
+            return;
+        }
+        let (sum, abs_sum) = digest_chunked(chunks, cols, |lo, hi| {
+            sum_abs_f32(&reference[lo..hi])
+        });
+        self.oracles.insert(key, OracleDigest { sum, abs_sum });
+    }
+
+    /// Verify one model node's chunk-ordered output digest against its
+    /// recorded oracle: Verify span, chaos `CorruptOutput` injection
+    /// through the REAL check, `Corrupted` on mismatch — byte-for-byte
+    /// the GEMM artifact discipline, applied per layer node.
+    fn verify_model(&mut self, id: &str, key: (usize, usize),
+                    mut sum: f64, abs_sum: f64,
+                    trace: Option<&Arc<ActiveTrace>>)
+                    -> Result<(), BackendFailure> {
+        let mut ver = trace.map(|t| t.span(SpanKind::Verify));
+        let oracle = self.oracles
+            .get(&(id.to_string(), key.0, key.1))
+            .expect("ensure_model_oracle first");
+        if self.plan.as_ref()
+            .is_some_and(|p| p.should_fire(FaultSite::CorruptOutput))
+        {
+            // Chaos injection: shift the digest by a full abs-sum so
+            // the comparison below MUST trip.
+            sum += oracle.abs_sum.max(abs_sum).max(1.0);
+            if let Some(g) = ver.as_mut() {
+                g.fault(FaultSite::CorruptOutput);
+            }
+        }
+        let scale = oracle.abs_sum.max(abs_sum).max(1.0);
+        let rtol = digest_rtol(Precision::F32);
+        let ok = (sum - oracle.sum).abs() <= rtol * scale;
+        if let Some(g) = ver.as_mut() {
+            g.attr("ok", ok.to_string());
+        }
+        drop(ver);
+        if !ok {
+            return Err(BackendFailure::Corrupted {
+                artifact: id.to_string(),
+                detail: format!(
+                    "model node digest mismatch: sum {sum} vs oracle \
+                     {} (scale {scale}, rtol {rtol})", oracle.sum),
+            });
+        }
+        Ok(())
+    }
+
+    /// Execute one model-plane node. Parallel kinds (fused layer,
+    /// unfused GEMM stage) run the tuned rectangular kernel with the
+    /// epilogue fused into the store loop, row-chunked over the pool
+    /// under store-selected params; sequential kinds (strict layer,
+    /// unfused activation pass) run inline on the shard worker. Every
+    /// kind chains through the memoized strict previous layer and is
+    /// digest-verified against the memoized strict state of its own
+    /// layer.
+    fn run_model(&mut self, id: &str, job: &ModelJob,
+                 trace: Option<&Arc<ActiveTrace>>)
+                 -> Result<Output, BackendFailure> {
+        let spec = Arc::clone(&job.spec);
+        let l = job.layer;
+        let (m, n, k) = (spec.layers[l].m, spec.layers[l].n,
+                         spec.layers[l].k);
+        // A failed strict build (manifest digest drift) is attributed
+        // to the REQUESTED node, so quarantine keys correctly.
+        let corrupted = |detail: String| BackendFailure::Corrupted {
+            artifact: id.to_string(),
+            detail,
+        };
+        let flops = spec.layers[l].flops();
+        let epi_label =
+            if spec.layers[l].activation { "bias+tanh" } else { "bias" };
+        match job.kind {
+            NodeKind::Fused | NodeKind::GemmOnly => {
+                let fused = job.kind == NodeKind::Fused;
+                let sel = params_for_bucket(&self.store,
+                                            Precision::F32, n);
+                let (params, from_store) = (sel.params, sel.from_store);
+                let fanout = self.fanout(sel.threads);
+                // Pack span: tensor materialization + the strict
+                // oracle build — the model's first-touch cost.
+                let pack = trace.map(|t| t.span(SpanKind::Pack));
+                let input = if l == 0 {
+                    self.ensure_model_input(&spec)
+                } else {
+                    self.ensure_model_layer(&spec, l - 1)
+                        .map_err(&corrupted)?
+                        .post
+                };
+                let wb = self.ensure_model_weights(&spec, l);
+                let state = self.ensure_model_layer(&spec, l)
+                    .map_err(&corrupted)?;
+                let reference: &[f32] =
+                    if fused { &state.post } else { &state.pre };
+                let chunks = self.chunks(m, params.mc, fanout);
+                self.ensure_model_oracle(id, reference, n, &chunks,
+                                         params.mc, fanout);
+                drop(pack);
+                let epi = spec.epilogue(l, fused);
+                let label = format!("{}+{}",
+                                    kernel_label(&params, from_store),
+                                    epi.label());
+                let epi = Arc::new(epi);
+                let (alpha, beta) = (spec.alpha, spec.beta);
+                let t0 = Instant::now();
+                let results = self.pool.try_map(chunks,
+                                                move |(r0, r1)| {
+                    let out = kernel::gemm_f32_tuned_rect_rows(
+                        m, n, k, r0, r1, &input, &wb.0, alpha, beta,
+                        &epi, &params);
+                    sum_abs_f32(&out)
+                });
+                let seconds = t0.elapsed().as_secs_f64();
+                let (mut sum, mut abs_sum) = (0.0f64, 0.0f64);
+                for r in results {
+                    let (s, a) = r.map_err(|msg| format!(
+                        "model node {id} panicked: {msg}"))?;
+                    sum += s;
+                    abs_sum += a;
+                }
+                self.verify_model(id, (params.mc, fanout), sum,
+                                  abs_sum, trace)?;
+                Ok(Output::Native {
+                    artifact_id: id.to_string(),
+                    seconds,
+                    gflops: Some(flops as f64 / seconds / 1e9),
+                    engine: NativeEngine::ThreadpoolGemm,
+                    kernel: label,
+                })
+            }
+            NodeKind::Strict => {
+                let pack = trace.map(|t| t.span(SpanKind::Pack));
+                let input = if l == 0 {
+                    self.ensure_model_input(&spec)
+                } else {
+                    self.ensure_model_layer(&spec, l - 1)
+                        .map_err(&corrupted)?
+                        .post
+                };
+                let state = self.ensure_model_layer(&spec, l)
+                    .map_err(&corrupted)?;
+                self.ensure_model_oracle(id, &state.post, n,
+                                         &[(0, m)], 0, 0);
+                drop(pack);
+                // Recompute the layer per request (honest timing); the
+                // memoized copy above is the verification oracle.
+                let t0 = Instant::now();
+                let out = spec.layer_strict(&input, l);
+                let seconds = t0.elapsed().as_secs_f64();
+                let (sum, abs_sum) = sum_abs_f32(&out);
+                self.verify_model(id, (0, 0), sum, abs_sum, trace)?;
+                Ok(Output::Native {
+                    artifact_id: id.to_string(),
+                    seconds,
+                    gflops: Some(flops as f64 / seconds / 1e9),
+                    engine: NativeEngine::ThreadpoolGemm,
+                    kernel: format!("strict+{epi_label}"),
+                })
+            }
+            NodeKind::Activation => {
+                let pack = trace.map(|t| t.span(SpanKind::Pack));
+                let state = self.ensure_model_layer(&spec, l)
+                    .map_err(&corrupted)?;
+                self.ensure_model_oracle(id, &state.post, n,
+                                         &[(0, m)], 0, 0);
+                drop(pack);
+                let t0 = Instant::now();
+                let mut out = (*state.pre).clone();
+                ModelSpec::activate(&mut out);
+                let seconds = t0.elapsed().as_secs_f64();
+                let (sum, abs_sum) = sum_abs_f32(&out);
+                self.verify_model(id, (0, 0), sum, abs_sum, trace)?;
+                Ok(Output::Native {
+                    artifact_id: id.to_string(),
+                    seconds,
+                    // an elementwise pass has no meaningful GEMM rate
+                    gflops: None,
+                    engine: NativeEngine::ThreadpoolGemm,
+                    kernel: "det-tanh".to_string(),
+                })
+            }
+        }
+    }
 }
 
 fn sum_abs_f32(v: &[f32]) -> (f64, f64) {
@@ -1149,6 +1482,11 @@ impl Backend for ThreadpoolGemm {
                     "threadpool shard cannot serve {other:?}").into());
             }
         };
+        // Model-plane nodes first: synthetic `<model>#L<k>…` ids never
+        // collide with manifest artifact ids (`#` cannot appear there).
+        if let Some(job) = self.models.get(id.as_str()).cloned() {
+            return self.run_model(id, &job, trace);
+        }
         let spec = self
             .catalog
             .get(id)
@@ -1445,6 +1783,109 @@ mod tests {
         }
         assert_eq!(b.oracle_builds(), 2,
                    "second artifact adds exactly one more build");
+    }
+
+    fn model_backend(threads: usize) -> ThreadpoolGemm {
+        let text = crate::model::demo_manifest_text();
+        let m = Manifest::parse(&text, std::path::Path::new(".")).unwrap();
+        ThreadpoolGemm::from_manifest(&m, threads)
+    }
+
+    fn run_node(b: &mut ThreadpoolGemm, id: &str)
+                -> Result<Output, BackendFailure> {
+        b.run(&WorkItem::artifact_on(id, NativeEngineId::Threadpool))
+    }
+
+    #[test]
+    fn model_fused_nodes_serve_with_epilogue_labels() {
+        let mut b = model_backend(3);
+        match run_node(&mut b, "mlp_b64_f32#L0").unwrap() {
+            Output::Native { artifact_id, seconds, gflops, engine,
+                             kernel } => {
+                assert_eq!(artifact_id, "mlp_b64_f32#L0");
+                assert!(seconds > 0.0);
+                assert!(gflops.unwrap() > 0.0);
+                assert_eq!(engine, NativeEngine::ThreadpoolGemm);
+                // fused tier: tuned kernel + the fused epilogue, both
+                // visible in the label
+                assert!(kernel.starts_with("tuned{"), "{kernel}");
+                assert!(kernel.ends_with("+bias+tanh"), "{kernel}");
+            }
+            other => panic!("unexpected output {other:?}"),
+        }
+        match run_node(&mut b, "mlp_b64_f32#L1").unwrap() {
+            Output::Native { kernel, .. } => {
+                assert!(kernel.ends_with("+bias"), "{kernel}");
+            }
+            other => panic!("unexpected output {other:?}"),
+        }
+        // One strict build per layer, never one per request.
+        assert_eq!(b.oracle_builds(), 2);
+        for _ in 0..3 {
+            run_node(&mut b, "mlp_b64_f32#L0").unwrap();
+            run_node(&mut b, "mlp_b64_f32#L1").unwrap();
+        }
+        assert_eq!(b.oracle_builds(), 2,
+                   "warm model requests never rebuild the oracle");
+    }
+
+    #[test]
+    fn model_strict_and_unfused_nodes_serve() {
+        let mut b = model_backend(2);
+        // Strict tier: sequential reference, bit-identity with the
+        // oracle (Ok IS the verification).
+        match run_node(&mut b, "mlp_b64_f32#L0+strict").unwrap() {
+            Output::Native { kernel, .. } => {
+                assert_eq!(kernel, "strict+bias+tanh");
+            }
+            other => panic!("unexpected output {other:?}"),
+        }
+        match run_node(&mut b, "mlp_b64_f32#L1+strict").unwrap() {
+            Output::Native { kernel, .. } => {
+                assert_eq!(kernel, "strict+bias");
+            }
+            other => panic!("unexpected output {other:?}"),
+        }
+        // Unfused tier: bias-only GEMM stage + activation pass.
+        match run_node(&mut b, "mlp_b64_f32#L0!gemm").unwrap() {
+            Output::Native { kernel, .. } => {
+                assert!(kernel.ends_with("+bias"), "{kernel}");
+            }
+            other => panic!("unexpected output {other:?}"),
+        }
+        match run_node(&mut b, "mlp_b64_f32#L0!act").unwrap() {
+            Output::Native { kernel, gflops, .. } => {
+                assert_eq!(kernel, "det-tanh");
+                assert!(gflops.is_none());
+            }
+            other => panic!("unexpected output {other:?}"),
+        }
+        // L1 never activates: no `!act` node exists for it.
+        assert!(run_node(&mut b, "mlp_b64_f32#L1!act").unwrap_err()
+                .to_string().contains("unknown artifact"));
+    }
+
+    #[test]
+    fn model_nodes_absent_from_synthetic_backends() {
+        let mut b = ThreadpoolGemm::synthetic(
+            &["gemm_n64_t16_e1_f32".to_string()], 2).unwrap();
+        assert!(run_node(&mut b, "mlp_b64_f32#L0").unwrap_err()
+                .to_string().contains("unknown artifact"),
+                "model nodes need a manifest, not synthetic ids");
+    }
+
+    #[test]
+    fn model_chaos_corruption_trips_the_real_digest_check() {
+        let plan = Arc::new(
+            FaultPlan::new(7).with_rate(FaultSite::CorruptOutput, 1.0));
+        let mut b = model_backend(2).with_fault(Some(plan));
+        match run_node(&mut b, "mlp_b64_f32#L0").unwrap_err() {
+            BackendFailure::Corrupted { artifact, detail } => {
+                assert_eq!(artifact, "mlp_b64_f32#L0");
+                assert!(detail.contains("digest mismatch"), "{detail}");
+            }
+            other => panic!("expected Corrupted, got {other:?}"),
+        }
     }
 
     #[test]

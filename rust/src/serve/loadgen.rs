@@ -24,7 +24,8 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::arch::{compiler, ArchId, CompilerId};
-use crate::client::{Session, SessionConfig, WindowPolicy};
+use crate::client::{NodeResult, Session, SessionConfig, WindowPolicy};
+use crate::model::{ModelPlan, ModelSpec};
 use crate::gemm::Precision;
 use crate::runtime::artifact::Manifest;
 use crate::sim::TuningPoint;
@@ -523,6 +524,161 @@ pub fn outcome_report(outcome: &LoadOutcome, serve: &Serve) -> String {
     out
 }
 
+/// Resolve the model-serving source for a directory: the manifest
+/// under `dir` when it parses and contains a servable `model` entry,
+/// otherwise the built-in demo MLP manifest written to a scratch
+/// directory — with a stderr note, so the fallback is never silent
+/// (same contract as [`native_config_or_synthetic`]). Returns the
+/// native config to start [`Serve`] with plus the parsed spec.
+pub fn model_source(dir: &Path)
+                    -> crate::Result<(NativeConfig, Arc<ModelSpec>)> {
+    if let Ok(m) = Manifest::load(dir) {
+        if let Some(spec) = m.artifacts.iter()
+            .find_map(|meta| ModelSpec::from_meta(meta).ok())
+        {
+            return Ok((NativeConfig::Artifacts(dir.to_path_buf()),
+                       Arc::new(spec)));
+        }
+    }
+    let scratch = std::env::temp_dir()
+        .join(format!("alpaka-model-demo-{}", std::process::id()));
+    std::fs::create_dir_all(&scratch)?;
+    let text = crate::model::demo_manifest_text();
+    std::fs::write(scratch.join("manifest.json"), &text)?;
+    let m = Manifest::parse(&text, &scratch)?;
+    let spec = m.artifacts.iter()
+        .find_map(|meta| ModelSpec::from_meta(meta).ok())
+        .ok_or_else(|| anyhow::anyhow!(
+            "demo manifest lost its model entry"))?;
+    eprintln!("note: no servable model manifest in {} — serving the \
+               built-in demo MLP ({})", dir.display(), spec.id);
+    Ok((NativeConfig::Artifacts(scratch), Arc::new(spec)))
+}
+
+/// Aggregated outcome of one model load run — the model plane's
+/// accounting unit is the *plan*, not the request: a plan counts as
+/// good only when **every** node settled Ok.
+#[derive(Debug, Clone, Default)]
+pub struct ModelLoadReport {
+    /// Plans submitted (each expands to `nodes_per_plan` requests).
+    pub plans: usize,
+    /// Plans where every node served.
+    pub plans_ok: usize,
+    pub nodes_ok: usize,
+    pub nodes_failed: usize,
+    pub nodes_skipped: usize,
+    pub wall_seconds: f64,
+    /// Fully-Ok plans per wall second — the `model_serve` bench's
+    /// goodput gate.
+    pub goodput_pps: f64,
+    /// Node id → (serves, summed native execute seconds). BTreeMap:
+    /// the per-layer report renders in plan-id order, stable across
+    /// runs.
+    pub node_seconds: BTreeMap<String, (u64, f64)>,
+    /// First root cause observed, `(node id, error)` — every skipped
+    /// descendant of it reports the same cause.
+    pub first_failure: Option<(String, String)>,
+}
+
+impl ModelLoadReport {
+    /// Zero lost replies: every node of every plan settled exactly
+    /// once (Ok, Failed or Skipped).
+    pub fn fully_accounted(&self, nodes_per_plan: usize) -> bool {
+        self.nodes_ok + self.nodes_failed + self.nodes_skipped
+            == self.plans * nodes_per_plan
+    }
+}
+
+/// Serve `total` instances of `plan` through one [`Session`] (window
+/// sized to the plan, so one plan's nodes pipeline but plans queue
+/// honestly). `rate_pps > 0` paces submissions open-loop at that many
+/// plans per second against the submit clock (absolute schedule — a
+/// slow plan doesn't push every later deadline back); `0` runs closed
+/// loop. Shared by `serve --model`, the `model` subcommand and the
+/// `model_serve` bench so the drivers can never drift apart.
+pub fn run_model_loop(serve: &Serve, plan: &ModelPlan, total: usize,
+                      rate_pps: f64) -> ModelLoadReport {
+    let session = Session::open(serve, SessionConfig {
+        window: plan.len().max(1),
+        on_full: WindowPolicy::Block,
+        close_timeout: None,
+    });
+    let t0 = Instant::now();
+    let mut r = ModelLoadReport::default();
+    for i in 0..total {
+        if rate_pps > 0.0 {
+            let target =
+                t0 + Duration::from_secs_f64(i as f64 / rate_pps);
+            let now = Instant::now();
+            if target > now {
+                std::thread::sleep(target - now);
+            }
+        }
+        let out = session.submit_model(plan);
+        r.plans += 1;
+        if out.all_ok() {
+            r.plans_ok += 1;
+        }
+        for (id, res) in &out.results {
+            match res {
+                NodeResult::Ok(reply) => {
+                    r.nodes_ok += 1;
+                    if let Output::Native { seconds, .. } =
+                        &reply.output
+                    {
+                        let e = r.node_seconds
+                            .entry(id.clone())
+                            .or_insert((0, 0.0));
+                        e.0 += 1;
+                        e.1 += seconds;
+                    }
+                }
+                NodeResult::Failed(e) => {
+                    r.nodes_failed += 1;
+                    if r.first_failure.is_none() {
+                        r.first_failure =
+                            Some((id.clone(), e.to_string()));
+                    }
+                }
+                NodeResult::Skipped { .. } => r.nodes_skipped += 1,
+            }
+        }
+    }
+    session.close();
+    r.wall_seconds = t0.elapsed().as_secs_f64();
+    r.goodput_pps = if r.wall_seconds > 0.0 {
+        r.plans_ok as f64 / r.wall_seconds
+    } else {
+        0.0
+    };
+    r
+}
+
+/// Render a model load run: per-node serve counts with mean native
+/// execute time, then the plan-level accounting line. Deterministic
+/// (BTreeMap iteration) like every other report here.
+pub fn model_report(r: &ModelLoadReport, plan: &ModelPlan) -> String {
+    let mut t = Table::new(vec!["node", "served", "mean exec ms"])
+        .numeric();
+    for (id, (runs, secs)) in &r.node_seconds {
+        t.row(vec![id.clone(), runs.to_string(),
+                   format!("{:.3}", 1e3 * secs / (*runs).max(1) as f64)]);
+    }
+    let mut out = format!(
+        "model {} ({} tier, {} nodes/plan):\n{}",
+        plan.spec.id, plan.tier.label(), plan.len(), t.render());
+    let _ = writeln!(
+        out,
+        "{} plans = {} ok + {} degraded; nodes {} ok + {} failed + {} \
+         skipped in {:.3}s ({:.1} plans/s goodput)",
+        r.plans, r.plans_ok, r.plans - r.plans_ok, r.nodes_ok,
+        r.nodes_failed, r.nodes_skipped, r.wall_seconds, r.goodput_pps);
+    if let Some((id, cause)) = &r.first_failure {
+        let _ = writeln!(out, "first failure: {id}: {cause}");
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -666,6 +822,34 @@ mod tests {
         assert!(report.contains("chaos seed 42"), "{report}");
         assert!(report.contains("backend-error"), "{report}");
         assert!(report.contains("tuner-commit"), "{report}");
+    }
+
+    #[test]
+    fn model_loop_accounts_per_plan_and_per_node() {
+        // A directory without a manifest resolves to the demo MLP
+        // (never silently — stderr note), and the loop's accounting
+        // holds plan-wise and node-wise.
+        let dir = std::env::temp_dir()
+            .join("alpaka-loadgen-model-test-absent");
+        let (native, spec) = model_source(&dir).unwrap();
+        let serve = Serve::start(ServeConfig {
+            native: Some(native),
+            ..Default::default()
+        }).unwrap();
+        let plan =
+            ModelPlan::compile(&spec, crate::model::Tier::Fused);
+        let out = run_model_loop(&serve, &plan, 3, 0.0);
+        assert_eq!(out.plans, 3);
+        assert_eq!(out.plans_ok, 3, "{:?}", out.first_failure);
+        assert!(out.fully_accounted(plan.len()));
+        assert_eq!(out.nodes_ok, 3 * plan.len());
+        assert_eq!(out.node_seconds.len(), plan.len(),
+                   "every layer node served natively");
+        let report = model_report(&out, &plan);
+        assert!(report.contains("3 plans = 3 ok + 0 degraded"),
+                "{report}");
+        assert!(report.contains("#L0"), "{report}");
+        serve.shutdown();
     }
 
     #[test]

@@ -142,6 +142,22 @@ pub struct SessionTally {
     pub cancelled: u64,
 }
 
+/// Per-model serve tally — the model plane's observability row: one
+/// per model id, surfaced in [`ServeMetrics::summary`]. `submitted` /
+/// `completed` / `failed` count whole plans (one `submit_model` each);
+/// the `nodes_*` fields count the layer nodes inside them, so partial
+/// failures are attributable (a failed plan with one failed node and
+/// one skipped dependent is exactly that, not a mystery).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct ModelTally {
+    pub submitted: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub nodes_ok: u64,
+    pub nodes_failed: u64,
+    pub nodes_skipped: u64,
+}
+
 /// The serve layer's shared metrics. All per-request methods are
 /// lock-free; see the module docs for the short-mutex exceptions.
 #[derive(Debug)]
@@ -214,6 +230,9 @@ pub struct ServeMetrics {
     /// Per-session request tallies (fair-admission observability),
     /// keyed by session id.
     sessions: Mutex<BTreeMap<u64, SessionTally>>,
+    /// Per-model plan tallies (model-plane observability), keyed by
+    /// model id.
+    models: Mutex<BTreeMap<String, ModelTally>>,
     started: Instant,
     /// Nanoseconds after `started` of the first submission
     /// (`u64::MAX` = none yet) and the latest completion (0 = none
@@ -261,6 +280,7 @@ impl ServeMetrics {
             service_ewma: Mutex::new(BTreeMap::new()),
             derived_quota: Mutex::new(BTreeMap::new()),
             sessions: Mutex::new(BTreeMap::new()),
+            models: Mutex::new(BTreeMap::new()),
             started: Instant::now(),
             first_submit_ns: AtomicU64::new(u64::MAX),
             last_completion_ns: AtomicU64::new(0),
@@ -348,6 +368,41 @@ impl ServeMetrics {
     pub fn session_tallies(&self) -> Vec<(u64, SessionTally)> {
         self.sessions.lock()
             .map(|g| g.iter().map(|(id, t)| (*id, *t)).collect())
+            .unwrap_or_default()
+    }
+
+    /// One model plan was submitted (`Serve::submit_model`). Same R2
+    /// degrade rule as the session tallies: a poisoned map loses the
+    /// count, never panics a submit path.
+    pub fn model_submitted(&self, model: &str) {
+        if let Ok(mut g) = self.models.lock() {
+            g.entry(model.to_string()).or_default().submitted += 1;
+        }
+    }
+
+    /// One model plan resolved: `ok` when every node succeeded, with
+    /// the per-node breakdown (ok / failed / skipped must sum to the
+    /// plan's node count — the accounting the bench gate asserts).
+    pub fn model_completed(&self, model: &str, ok: bool,
+                           nodes_ok: u64, nodes_failed: u64,
+                           nodes_skipped: u64) {
+        let Ok(mut g) = self.models.lock() else { return };
+        let t = g.entry(model.to_string()).or_default();
+        if ok {
+            t.completed += 1;
+        } else {
+            t.failed += 1;
+        }
+        t.nodes_ok += nodes_ok;
+        t.nodes_failed += nodes_failed;
+        t.nodes_skipped += nodes_skipped;
+    }
+
+    /// Per-model tallies, sorted by model id (BTreeMap-backed —
+    /// stable across runs).
+    pub fn model_tallies(&self) -> Vec<(String, ModelTally)> {
+        self.models.lock()
+            .map(|g| g.iter().map(|(id, t)| (id.clone(), *t)).collect())
             .unwrap_or_default()
     }
 
@@ -752,6 +807,16 @@ impl ServeMetrics {
                     t.ok, t.shed, t.failed, t.cancelled));
             }
         }
+        let models = self.model_tallies();
+        if !models.is_empty() {
+            s.push_str("; models");
+            for (id, t) in models {
+                s.push_str(&format!(
+                    " {id}={}/{}ok/{}fl nodes={}ok/{}fl/{}sk",
+                    t.submitted, t.completed, t.failed, t.nodes_ok,
+                    t.nodes_failed, t.nodes_skipped));
+            }
+        }
         s
     }
 }
@@ -987,6 +1052,32 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("sessions"), "{s}");
         assert!(s.contains("s2=3/1ok/1sh/0fl/1cx"), "{s}");
+    }
+
+    #[test]
+    fn model_tallies_sorted_and_in_summary() {
+        let m = ServeMetrics::new();
+        assert!(m.model_tallies().is_empty());
+        assert!(!m.summary().contains("models"),
+                "no model tail before any plan: {}", m.summary());
+        m.model_submitted("mlp_b64_f32");
+        m.model_submitted("mlp_b64_f32");
+        m.model_submitted("ae_b32_f32");
+        // one clean plan (2 nodes), one with a failure cascade
+        m.model_completed("mlp_b64_f32", true, 2, 0, 0);
+        m.model_completed("mlp_b64_f32", false, 0, 1, 1);
+        m.model_completed("ae_b32_f32", true, 3, 0, 0);
+        let t = m.model_tallies();
+        assert_eq!(t.len(), 2);
+        assert_eq!(t[0].0, "ae_b32_f32", "sorted by model id");
+        assert_eq!(t[1].1,
+                   ModelTally { submitted: 2, completed: 1, failed: 1,
+                                nodes_ok: 2, nodes_failed: 1,
+                                nodes_skipped: 1 });
+        let s = m.summary();
+        assert!(s.contains("models"), "{s}");
+        assert!(s.contains("mlp_b64_f32=2/1ok/1fl nodes=2ok/1fl/1sk"),
+                "{s}");
     }
 
     #[test]

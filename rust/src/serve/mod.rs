@@ -578,6 +578,29 @@ fn native_digests(src: &Option<Arc<NativeSource>>)
                 digests.insert(
                     WorkItem::artifact(spec.id.as_str()).cache_key(),
                     backend::spec_digest(&spec));
+                // Model-plane node ids get identity digests too, from
+                // the same content the backend serves — a changed
+                // model under the same id invalidates its disk-cache
+                // entries and gets a fresh quarantine breaker per
+                // node. Unservable mlp entries are skipped here
+                // exactly like the backend skips them.
+                let Ok(ms) = crate::model::ModelSpec::from_meta(meta)
+                else { continue };
+                use crate::model::NodeKind;
+                for (l, layer) in ms.layers.iter().enumerate() {
+                    let mut kinds = vec![NodeKind::Fused,
+                                         NodeKind::Strict,
+                                         NodeKind::GemmOnly];
+                    if layer.activation {
+                        kinds.push(NodeKind::Activation);
+                    }
+                    for kind in kinds {
+                        digests.insert(
+                            WorkItem::artifact(ms.node_id(l, kind))
+                                .cache_key(),
+                            ms.node_descriptor(l, kind));
+                    }
+                }
             }
         }
         Some(NativeSource::Synthetic(ids)) => {
@@ -933,6 +956,21 @@ impl Serve {
     /// untagged and ids are minted (or not) at admission.
     pub fn mint_trace_id(&self) -> Option<u64> {
         self.recorder.as_ref().map(|r| r.mint_id())
+    }
+
+    /// Serve a compiled model plan end to end on a one-shot internal
+    /// session — the CLI's `serve --model` unit of work. Callers
+    /// serving many plans should hold their own
+    /// [`Session`](crate::client::Session) and use
+    /// `Session::submit_model`, which keeps the per-session
+    /// accounting to one row instead of one per plan.
+    pub fn submit_model(&self, plan: &crate::model::ModelPlan)
+                        -> crate::model::ModelOutcome {
+        let session = crate::client::Session::open(
+            self, crate::client::SessionConfig::default());
+        let out = session.submit_model(plan);
+        session.close();
+        out
     }
 
     /// Digest keys of the artifacts currently quarantined (empty when

@@ -68,6 +68,9 @@ pub enum SpanKind {
     CacheDisk,
     /// Online-tuner exploration inside the `tune:` shard.
     TuneExplore,
+    /// Model-plane root: one per `Serve::submit_model`, covering
+    /// every layer node of the plan under one trace id.
+    Model,
 }
 
 impl SpanKind {
@@ -85,6 +88,7 @@ impl SpanKind {
             SpanKind::CacheMem => "cache:mem",
             SpanKind::CacheDisk => "cache:disk",
             SpanKind::TuneExplore => "tune:explore",
+            SpanKind::Model => "model",
         }
     }
 
@@ -110,6 +114,7 @@ impl SpanKind {
             "cache:mem" => Some(SpanKind::CacheMem),
             "cache:disk" => Some(SpanKind::CacheDisk),
             "tune:explore" => Some(SpanKind::TuneExplore),
+            "model" => Some(SpanKind::Model),
             other => other
                 .strip_prefix("retry#")
                 .and_then(|k| k.parse().ok())
@@ -1062,6 +1067,7 @@ mod tests {
             SpanKind::CacheMem,
             SpanKind::CacheDisk,
             SpanKind::TuneExplore,
+            SpanKind::Model,
         ];
         for kind in kinds {
             assert_eq!(SpanKind::parse(&kind.label()), Some(kind));

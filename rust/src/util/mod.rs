@@ -8,6 +8,7 @@
 
 pub mod csvio;
 pub mod json;
+pub mod numerics;
 pub mod prng;
 pub mod propcheck;
 pub mod stats;

@@ -1,0 +1,158 @@
+//! Deterministic elementary functions, bit-compatible with the python
+//! reference (`python/compile/modelref.py`).
+//!
+//! Platform `tanh`/`exp` come from libm and are *not* correctly rounded
+//! — different libms (glibc vs musl vs numpy's SIMD loops) disagree in
+//! the last ulp, which would make cross-language bit-parity of the
+//! model plane's activation impossible. So the activation is built here
+//! from correctly-rounded IEEE-754 basic operations only (`+ - * /`,
+//! `floor`, `copysign`, exact power-of-two scaling): two implementations
+//! that perform the same operation sequence produce the same bits on
+//! every conforming platform. The python twin mirrors this file
+//! operation for operation; keep the constants and the evaluation order
+//! in sync or the `mlp_parity.json` KAT breaks.
+
+/// High part of ln 2 (fdlibm's split): `n * LN2_HI` is exact for the
+/// |n| ≤ 2^20 range reduction uses, so no bits are lost subtracting it.
+const LN2_HI: f64 = 6.93147180369123816490e-01;
+/// Low part of ln 2: `LN2_HI + LN2_LO` ≈ ln 2 to ~107 bits.
+const LN2_LO: f64 = 1.90821492927058770002e-10;
+/// 1 / ln 2, correctly rounded.
+const INV_LN2: f64 = 1.44269504088896338700e+00;
+
+/// 1/k! for k = 0..=13. Factorials up to 13! are exactly representable,
+/// so each entry is the correctly-rounded reciprocal — identical to the
+/// python twin's literals by IEEE division semantics.
+const INV_FACT: [f64; 14] = [
+    1.0,
+    1.0,
+    1.0 / 2.0,
+    1.0 / 6.0,
+    1.0 / 24.0,
+    1.0 / 120.0,
+    1.0 / 720.0,
+    1.0 / 5040.0,
+    1.0 / 40320.0,
+    1.0 / 362880.0,
+    1.0 / 3628800.0,
+    1.0 / 39916800.0,
+    1.0 / 479001600.0,
+    1.0 / 6227020800.0,
+];
+
+/// Exact 2^n for normal-range exponents (bit construction, no libm).
+fn exp2i(n: i64) -> f64 {
+    debug_assert!((-1022..=1023).contains(&n), "exp2i({n}) out of range");
+    f64::from_bits(((1023 + n) as u64) << 52)
+}
+
+/// Deterministic `e^y` for `y ∈ [-64, 0]` (the range [`det_tanh`]
+/// needs). Classic range reduction `y = n·ln2 + r`, |r| ≤ ln2/2, then a
+/// degree-13 Taylor polynomial in Horner form (truncation error well
+/// under one ulp on the reduced range) scaled by an exact 2^n. Every
+/// step is a correctly-rounded basic op in fixed order — the whole
+/// function is a pure function of the input bits, identical across
+/// platforms and languages.
+pub fn det_exp_neg(y: f64) -> f64 {
+    debug_assert!((-64.0..=0.0).contains(&y), "det_exp_neg({y})");
+    let n = (y * INV_LN2 + 0.5).floor();
+    let r = (y - n * LN2_HI) - n * LN2_LO;
+    let mut p = INV_FACT[13];
+    for k in (0..13).rev() {
+        p = p * r + INV_FACT[k];
+    }
+    p * exp2i(n as i64)
+}
+
+/// Deterministic `tanh(x)` via `(1 - e^{-2|x|}) / (1 + e^{-2|x|})` with
+/// the sign restored by `copysign` — odd symmetry is exact by
+/// construction. Saturates to ±1 for |x| > 20 (where `tanh` is 1 to
+/// within a quarter ulp anyway), keeping [`det_exp_neg`]'s argument in
+/// range.
+pub fn det_tanh(x: f64) -> f64 {
+    if x.is_nan() {
+        return x;
+    }
+    let ax = x.abs();
+    if ax > 20.0 {
+        return 1.0f64.copysign(x);
+    }
+    let t = det_exp_neg(-2.0 * ax);
+    ((1.0 - t) / (1.0 + t)).copysign(x)
+}
+
+/// f32 activation: evaluate in f64, round once. The python twin does
+/// the same (`float64` math, one `astype(float32)`), so the f32 model
+/// path stays bit-identical too.
+pub fn det_tanh_f32(x: f32) -> f32 {
+    det_tanh(x as f64) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exp_matches_libm_closely() {
+        // ~1 ulp of libm exp across the reduced range; determinism is
+        // the contract, libm is just the sanity anchor.
+        let mut y = -64.0;
+        while y <= 0.0 {
+            let got = det_exp_neg(y);
+            let want = y.exp();
+            assert!((got - want).abs() <= 4.0 * f64::EPSILON * want,
+                    "exp({y}): {got} vs {want}");
+            y += 0.137;
+        }
+        assert_eq!(det_exp_neg(0.0), 1.0);
+    }
+
+    #[test]
+    fn tanh_matches_libm_closely() {
+        let mut x = -25.0;
+        while x <= 25.0 {
+            let got = det_tanh(x);
+            let want = x.tanh();
+            assert!((got - want).abs()
+                        <= 4.0 * f64::EPSILON * want.abs().max(1e-300),
+                    "tanh({x}): {got} vs {want}");
+            x += 0.173;
+        }
+    }
+
+    #[test]
+    fn tanh_is_exactly_odd_and_bounded() {
+        let mut x = 0.0;
+        while x <= 30.0 {
+            let p = det_tanh(x);
+            let n = det_tanh(-x);
+            assert_eq!(p.to_bits(), (-n).to_bits(), "odd symmetry at {x}");
+            assert!(p.abs() <= 1.0, "bounded at {x}");
+            x += 0.31;
+        }
+        assert_eq!(det_tanh(0.0).to_bits(), 0.0f64.to_bits());
+        assert_eq!(det_tanh(-0.0).to_bits(), (-0.0f64).to_bits());
+        assert_eq!(det_tanh(21.0), 1.0);
+        assert_eq!(det_tanh(-21.0), -1.0);
+        assert!(det_tanh(f64::NAN).is_nan());
+    }
+
+    #[test]
+    fn f32_path_is_round_once() {
+        for x in [-3.5f32, -0.25, 0.0, 0.6, 1.0, 19.0] {
+            assert_eq!(det_tanh_f32(x).to_bits(),
+                       (det_tanh(x as f64) as f32).to_bits());
+        }
+    }
+
+    #[test]
+    fn known_answer_pins_cross_language_contract() {
+        // Bit-pattern pins mirrored in python/tests/test_model_parity.py
+        // — if either side drifts, this catches it before the fixture
+        // does. (Values recorded from this implementation; the python
+        // twin asserts the same bits.)
+        assert_eq!(det_tanh(1.0).to_bits(), 0x3FE85EFAB514F394u64);
+        assert_eq!(det_tanh(0.5).to_bits(), 0x3FDD9353D7568AF3u64);
+        assert_eq!(det_exp_neg(-1.0).to_bits(), 0x3FD78B56362CEF38u64);
+    }
+}

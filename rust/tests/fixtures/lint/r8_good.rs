@@ -53,6 +53,52 @@ impl ServeMetrics {
     }
 }
 
+// Model plane (additive twin of Session::submit_model): tracked
+// variants are never constructed on this path — a failed node's error
+// is *cloned* out of its settlement — and the per-model books are
+// bumped on both edges (submit + completion), so plan-level accounting
+// can never leak.
+
+fn model_plane_submit(book: &mut ModelTallyBook) -> Option<ServeError> {
+    book.model_submitted();
+    let settled = settle_node();
+    let first = match &settled {
+        NodeOutcome::Failed(e) => Some(e.clone()),
+        NodeOutcome::Ok => None,
+    };
+    book.model_completed(first.is_none());
+    first
+}
+
+enum NodeOutcome {
+    Ok,
+    Failed(ServeError),
+}
+
+fn settle_node() -> NodeOutcome {
+    NodeOutcome::Failed(last_error())
+}
+
+struct ModelTallyBook {
+    submitted: u64,
+    completed: u64,
+    failed: u64,
+}
+
+impl ModelTallyBook {
+    fn model_submitted(&mut self) {
+        self.submitted += 1;
+    }
+
+    fn model_completed(&mut self, ok: bool) {
+        if ok {
+            self.completed += 1;
+        } else {
+            self.failed += 1;
+        }
+    }
+}
+
 struct SessionStats {
     submitted: u64,
     ok: u64,

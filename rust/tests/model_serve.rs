@@ -1,0 +1,180 @@
+//! Model-serving plane, end to end: the strict tier must match the
+//! python reference (`python/compile/modelref.py`) **bit for bit** via
+//! the shared `fixtures/mlp_parity.json` KAT; the fused tier must serve
+//! digest-verified against the strict oracle; and one submitted plan
+//! must commit every layer node under ONE flight-recorder trace id,
+//! rooted by a `model:<id>` envelope.
+//!
+//! The fixture stores IEEE-754 bit patterns (u32 per f32 element), so
+//! the strict comparison can never be blurred by JSON float formatting.
+//! `python/tests/test_model_parity.py` asserts the same file from the
+//! other side — a drift in either implementation breaks exactly one of
+//! the two suites, naming the culprit.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use alpaka_rs::model::{self, ModelPlan, ModelSpec, Tier};
+use alpaka_rs::runtime::artifact::Manifest;
+use alpaka_rs::serve::{NativeConfig, Serve, ServeConfig, SpanKind};
+use alpaka_rs::util::json::{self, Value};
+use alpaka_rs::util::prng;
+
+fn fixture() -> Value {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/fixtures/mlp_parity.json");
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("reading {path:?}: {e}"));
+    json::parse(&text).expect("fixture parses")
+}
+
+fn demo_spec() -> Arc<ModelSpec> {
+    let text = model::demo_manifest_text();
+    let m = Manifest::parse(&text, Path::new(".")).unwrap();
+    let meta = &m.artifacts[0];
+    Arc::new(ModelSpec::from_meta(meta).unwrap())
+}
+
+/// Write the demo manifest into a scratch dir so `Serve::start` can
+/// load it as a real `NativeConfig::Artifacts` source.
+fn demo_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("alpaka-model-serve-{tag}-{}",
+                      std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"),
+                   model::demo_manifest_text()).unwrap();
+    dir
+}
+
+fn start_serve(tag: &str, trace_cap: usize) -> Serve {
+    Serve::start(ServeConfig {
+        native: Some(NativeConfig::Artifacts(demo_dir(tag))),
+        native_threads: 2,
+        trace_cap,
+        ..ServeConfig::default()
+    }).unwrap()
+}
+
+#[test]
+fn strict_forward_matches_python_fixture_bit_for_bit() {
+    let v = fixture();
+    let spec = demo_spec();
+    assert_eq!(v.get("model").and_then(Value::as_str).unwrap(),
+               spec.id);
+    let seeds: Vec<u64> = v.get("seeds").and_then(Value::as_array)
+        .unwrap().iter().map(|s| s.as_u64().unwrap()).collect();
+    for (k, want) in seeds.iter().enumerate() {
+        assert_eq!(prng::seed_for(&spec.id, k as u64), *want,
+                   "seed_for({}, {k})", spec.id);
+    }
+    let outs = spec.forward_strict();
+    let layers = v.get("layers").and_then(Value::as_array).unwrap();
+    assert_eq!(outs.len(), layers.len());
+    for (l, (out, want)) in outs.iter().zip(layers).enumerate() {
+        let bits: Vec<u32> =
+            out.iter().map(|x| x.to_bits()).collect();
+        let xor = bits.iter().fold(0u32, |a, b| a ^ b);
+        assert_eq!(u64::from(xor),
+                   want.get("xor_bits").and_then(Value::as_u64)
+                       .unwrap(),
+                   "layer {l}: full-tensor xor drifted from python");
+        let idx = want.get("sample_idx").and_then(Value::as_array)
+            .unwrap();
+        let sample = want.get("sample_bits").and_then(Value::as_array)
+            .unwrap();
+        for (i, b) in idx.iter().zip(sample) {
+            let i = i.as_u64().unwrap() as usize;
+            assert_eq!(u64::from(bits[i]), b.as_u64().unwrap(),
+                       "layer {l} element {i} drifted from python");
+        }
+    }
+}
+
+#[test]
+fn activation_pins_match_the_fixture() {
+    // The same bits rust pins in util::numerics and python pins in
+    // test_model_parity — asserted here against the *file*, so a stale
+    // fixture regeneration cannot slip by either suite.
+    use alpaka_rs::util::numerics::{det_exp_neg, det_tanh};
+    let pins = fixture();
+    let pins = pins.get("tanh_pins").unwrap();
+    assert_eq!(det_tanh(1.0).to_bits(),
+               pins.get("tanh_1").and_then(Value::as_u64).unwrap());
+    assert_eq!(det_tanh(0.5).to_bits(),
+               pins.get("tanh_half").and_then(Value::as_u64).unwrap());
+    assert_eq!(det_exp_neg(-1.0).to_bits(),
+               pins.get("exp_neg1").and_then(Value::as_u64).unwrap());
+}
+
+#[test]
+fn every_tier_serves_end_to_end() {
+    let spec = demo_spec();
+    let serve = start_serve("tiers", 0);
+    for (tier, nodes) in [(Tier::Fused, 2), (Tier::Strict, 2),
+                          (Tier::Unfused, 3)] {
+        let plan = ModelPlan::compile(&spec, tier);
+        assert_eq!(plan.len(), nodes, "{} plan size", tier.label());
+        let out = serve.submit_model(&plan);
+        assert!(out.all_ok(), "{} tier: {:?}", tier.label(),
+                out.root_cause());
+        assert_eq!(out.node_seconds().len(), nodes,
+                   "every {} node served natively", tier.label());
+    }
+    // Fused epilogues are attributable in the replies.
+    let plan = ModelPlan::compile(&spec, Tier::Fused);
+    let out = serve.submit_model(&plan);
+    let kernels: Vec<String> = out.results.iter()
+        .filter_map(|(_, r)| match r {
+            alpaka_rs::client::NodeResult::Ok(reply) => {
+                match &reply.output {
+                    alpaka_rs::serve::Output::Native { kernel, .. } => {
+                        Some(kernel.clone())
+                    }
+                    _ => None,
+                }
+            }
+            _ => None,
+        }).collect();
+    assert!(kernels[0].ends_with("+bias+tanh"), "{kernels:?}");
+    assert!(kernels[1].ends_with("+bias"), "{kernels:?}");
+    // Per-model accounting reaches the unified summary.
+    let summary = serve.summary();
+    assert!(summary.contains("models mlp_b64_f32="), "{summary}");
+    serve.shutdown();
+}
+
+#[test]
+fn one_trace_id_spans_every_layer_node() {
+    let spec = demo_spec();
+    let serve = start_serve("trace", 64);
+    let plan = ModelPlan::compile(&spec, Tier::Fused);
+    let out = serve.submit_model(&plan);
+    assert!(out.all_ok(), "{:?}", out.root_cause());
+    let tid = out.trace_id.expect("recorder on -> model trace id");
+    let rec = serve.trace_recorder().expect("recorder configured");
+    let records: Vec<_> = rec.all_records().into_iter()
+        .filter(|r| r.id == tid)
+        .collect();
+    // One lane: the model root envelope plus every layer node.
+    assert_eq!(records.len(), 1 + plan.len(),
+               "root + {} nodes share the lane: {:?}", plan.len(),
+               records.iter().map(|r| r.kernel.clone())
+                   .collect::<Vec<_>>());
+    let root = records.iter()
+        .find(|r| r.kernel == format!("model:{}", spec.id))
+        .expect("model root envelope committed");
+    assert_eq!(root.outcome, "ok");
+    assert!(root.spans.iter().any(|s| s.kind == SpanKind::Model),
+            "root carries the Model span: {:?}", root.spans);
+    assert!(root.attrs.iter().any(|(k, v)| *k == "tier"
+                                      && v == "fused"),
+            "tier attr on the root: {:?}", root.attrs);
+    for node in &plan.nodes {
+        assert!(records.iter().any(
+                    |r| r.kernel.contains(&node.artifact_id)),
+                "node {} committed on the shared lane",
+                node.artifact_id);
+    }
+    serve.shutdown();
+}
